@@ -1,0 +1,79 @@
+//! Neural Network Console, headless (paper §5.1): automatic structure
+//! search optimizing accuracy *and* multiply-adds, trial records with
+//! a comparison table, and a confusion matrix for the winner.
+
+use nnl::console::{structure_search, ConfusionMatrix, SearchSpace, TrialStore};
+use nnl::data::{DataSource, SyntheticImages};
+use nnl::functions as F;
+use nnl::models::Gb;
+use nnl::parametric as PF;
+use nnl::trainer::{train_dynamic, TrainConfig};
+
+fn main() {
+    let data = SyntheticImages::new(4, 1, 8, 16, 21);
+
+    // --- automatic structure search (bi-objective Pareto front)
+    println!("structure search over MLP plans (error vs MACs)...");
+    let space = SearchSpace { steps: 40, widths: vec![16, 32, 64], max_layers: 3, lr: 0.1 };
+    let front = structure_search(&data, &space, 2, 4, 7);
+    println!("Pareto front ({} candidates):", front.len());
+    for c in &front {
+        println!(
+            "  plan {:?}: val_error {:.3}  MACs {:>8}  params {:>7}",
+            c.plan, c.val_error, c.macs, c.n_params
+        );
+    }
+
+    // --- trial records: train two baselines, compare
+    let dir = std::env::temp_dir().join("nnl_console_demo");
+    std::fs::remove_dir_all(&dir).ok();
+    let store = TrialStore::open(&dir).unwrap();
+    for model in ["resnet18", "mobilenet_v3_small"] {
+        let imgs = SyntheticImages::imagenet_mini(8);
+        let cfg = TrainConfig { steps: 25, ..Default::default() };
+        let report = train_dynamic(model, &imgs, &cfg);
+        store.record(&report).unwrap();
+    }
+    println!("\ntrial comparison:");
+    print!("{}", store.comparison_table().unwrap());
+    let best = store.best().unwrap().unwrap();
+    println!("best so far: {} (val error {:.3})", best.model, best.val_error);
+
+    // --- confusion matrix of the best searched structure
+    println!("\nconfusion matrix for the best searched plan:");
+    PF::clear_parameters();
+    PF::seed_parameter_rng(3);
+    let plan = &front[0].plan;
+    let mut g = Gb::new("winner", true);
+    let x = g.input("x", &[16, 64]);
+    let mut h = x.clone();
+    for (i, &w) in plan.iter().enumerate() {
+        h = g.affine(&h, w, &format!("fc{i}"));
+        h = g.relu(&h);
+    }
+    let logits = g.affine(&h, 4, "out");
+    let y = nnl::Variable::new(&[16, 1], false);
+    let loss = F::mean_all(&F::softmax_cross_entropy(&logits.var, &y));
+    let mut solver = nnl::solvers::Solver::momentum(0.1, 0.9);
+    solver.set_parameters(&PF::get_parameters());
+    for step in 0..60 {
+        let (bx, by) = data.batch(step, 0, 1);
+        x.var.set_data(bx.reshape(&[16, 64]));
+        y.set_data(by.reshape(&[16, 1]));
+        loss.forward();
+        solver.zero_grad();
+        loss.backward();
+        solver.update();
+    }
+    let mut cm = ConfusionMatrix::new(4);
+    for i in 0..4 {
+        let (bx, by) = data.val_batch(i);
+        x.var.set_data(bx.reshape(&[16, 64]));
+        logits.var.forward();
+        cm.record_batch(&logits.var.data(), &by);
+    }
+    print!("{}", cm.render());
+    assert!(cm.accuracy() > 0.3, "winner accuracy {:.3}", cm.accuracy());
+    std::fs::remove_dir_all(&dir).ok();
+    println!("console_search OK");
+}

@@ -1,0 +1,44 @@
+//! Quickstart — the paper's Listing 1, line for line, in Rust:
+//!
+//! ```python
+//! x = nn.Variable((16, 10), need_grad=True)
+//! y = PF.affine(x, 5)
+//! x.d = np.random.random(x.shape)
+//! y.forward()
+//! y.backward()
+//! nn.get_parameters()
+//! ```
+
+use nnl::parametric as PF;
+use nnl::tensor::Rng;
+use nnl::Variable;
+
+fn main() {
+    PF::seed_parameter_rng(0);
+    let mut rng = Rng::new(0);
+
+    // Define input variable and computational graph
+    let x = Variable::new(&[16, 10], true);
+    let y = PF::affine(&x, 5, "affine1");
+
+    // Compute output for some random input
+    x.set_data(rng.rand(&[16, 10], 0.0, 1.0));
+    y.forward();
+
+    // Compute gradient with respect to input and parameters
+    y.backward();
+
+    // Show all the trainable parameters assigned to the existing layers
+    println!("parameters:");
+    for (name, p) in PF::get_parameters() {
+        println!(
+            "  {name:<22} shape {:?}  need_grad={}  |grad|={:.4}",
+            p.dims(),
+            p.need_grad(),
+            p.grad().norm2()
+        );
+    }
+    println!("\noutput shape: {:?}", y.dims());
+    println!("input grad norm: {:.4}", x.grad().norm2());
+    println!("quickstart OK");
+}

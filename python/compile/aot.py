@@ -1,0 +1,178 @@
+"""AOT driver: lower every (model x precision x batch) variant to HLO
+*text* + a manifest, consumed by the Rust runtime (`rust/src/runtime`).
+
+HLO text — NOT `lowered.compiler_ir("hlo").as_serialized_hlo_module_proto()`
+— because the image's xla_extension 0.5.1 rejects jax>=0.5 protos
+(64-bit instruction ids); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Run via `make artifacts`. Python never runs after this step.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import matmul as mmk
+
+SEED = 20260710
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec_entry(name, dims, dtype="float32"):
+    return {"name": name, "dims": list(dims), "dtype": dtype}
+
+
+def lower_train(model, cfg, batch, *, half, use_pallas, tag):
+    """Lower a train-step variant; return (name, hlo_text, manifest)."""
+    specs = M.MODELS[model]["param_specs"](cfg)
+    data_inputs = M.MODELS[model]["input"](cfg, batch)
+    step = M.make_train_step(model, cfg, half=half, use_pallas=use_pallas)
+    names = [s[0] for s in specs]
+
+    def flat_step(*args):
+        params = dict(zip(names, args[: len(names)]))
+        x, y, loss_scale = args[len(names) :]
+        grads, loss = step(params, x, y, loss_scale)
+        return tuple(grads[n] for n in names) + (loss,)
+
+    arg_specs = [jax.ShapeDtypeStruct(s[1], jnp.float32) for s in specs]
+    arg_specs += [jax.ShapeDtypeStruct(d[1], jnp.float32) for d in data_inputs]
+    arg_specs += [jax.ShapeDtypeStruct((), jnp.float32)]  # loss_scale
+    lowered = jax.jit(flat_step).lower(*arg_specs)
+
+    name = f"{model}_train_{tag}_b{batch}"
+    manifest = {
+        "name": name,
+        "hlo_file": f"{name}.hlo.txt",
+        "seed": SEED,
+        "param_names": names,
+        "param_init": [{"kind": s[2], "scale": s[3]} for s in specs],
+        "inputs": [spec_entry(s[0], s[1]) for s in specs]
+        + [spec_entry(d[0], d[1]) for d in data_inputs]
+        + [spec_entry("loss_scale", ())],
+        "outputs": [spec_entry(f"g:{n}", s[1]) for n, s in zip(names, specs)]
+        + [spec_entry("loss", ())],
+    }
+    return name, to_hlo_text(lowered), manifest
+
+
+def lower_infer(model, cfg, batch, *, half, use_pallas, tag):
+    specs = M.MODELS[model]["param_specs"](cfg)
+    data_inputs = M.MODELS[model]["input"](cfg, batch)[:1]  # x only
+    infer = M.make_infer(model, cfg, half=half, use_pallas=use_pallas)
+    names = [s[0] for s in specs]
+
+    def flat_infer(*args):
+        params = dict(zip(names, args[: len(names)]))
+        (x,) = args[len(names) :]
+        return (infer(params, x),)
+
+    arg_specs = [jax.ShapeDtypeStruct(s[1], jnp.float32) for s in specs]
+    arg_specs += [jax.ShapeDtypeStruct(d[1], jnp.float32) for d in data_inputs]
+    lowered = jax.jit(flat_infer).lower(*arg_specs)
+    out_shape = jax.eval_shape(flat_infer, *arg_specs)[0]
+
+    name = f"{model}_infer_{tag}_b{batch}"
+    manifest = {
+        "name": name,
+        "hlo_file": f"{name}.hlo.txt",
+        "seed": SEED,
+        "param_names": names,
+        "param_init": [{"kind": s[2], "scale": s[3]} for s in specs],
+        "inputs": [spec_entry(s[0], s[1]) for s in specs]
+        + [spec_entry(d[0], d[1]) for d in data_inputs],
+        "outputs": [spec_entry("logits", out_shape.shape)],
+    }
+    return name, to_hlo_text(lowered), manifest
+
+
+def lower_matmul(size, *, half, tag):
+    """Micro-artifact: the raw L1 kernel (kernel benches + tests)."""
+    def f(a, b):
+        return (mmk.matmul(a, b, half=half),)
+
+    spec = jax.ShapeDtypeStruct((size, size), jnp.float32)
+    lowered = jax.jit(f).lower(spec, spec)
+    name = f"matmul_{tag}_{size}"
+    manifest = {
+        "name": name,
+        "hlo_file": f"{name}.hlo.txt",
+        "seed": SEED,
+        "param_names": [],
+        "param_init": [],
+        "inputs": [spec_entry("a", (size, size)), spec_entry("b", (size, size))],
+        "outputs": [spec_entry("c", (size, size))],
+    }
+    return name, to_hlo_text(lowered), manifest
+
+
+def variants():
+    mlp_cfg = M.MODELS["mlp"]["default_cfg"]
+    lenet_cfg = M.MODELS["lenet"]["default_cfg"]
+    rn_cfg = M.MODELS["resnet_mini"]["default_cfg"]
+    lm_cfg = M.MODELS["tfmr_lm"]["default_cfg"]
+    out = []
+    # MLP: all four precision/backend combos (Table 1 micro-scale)
+    out.append(lambda: lower_train("mlp", mlp_cfg, 32, half=False, use_pallas=True, tag="f32"))
+    out.append(lambda: lower_train("mlp", mlp_cfg, 32, half=True, use_pallas=True, tag="bf16"))
+    out.append(
+        lambda: lower_train("mlp", mlp_cfg, 32, half=False, use_pallas=False, tag="jnpref")
+    )
+    out.append(lambda: lower_infer("mlp", mlp_cfg, 32, half=False, use_pallas=True, tag="f32"))
+    # LeNet (Listing 4/5)
+    out.append(lambda: lower_train("lenet", lenet_cfg, 16, half=False, use_pallas=True, tag="f32"))
+    # ResNet-mini (Tables 1/2, Figure 3)
+    out.append(
+        lambda: lower_train("resnet_mini", rn_cfg, 16, half=False, use_pallas=True, tag="f32")
+    )
+    out.append(
+        lambda: lower_train("resnet_mini", rn_cfg, 16, half=True, use_pallas=True, tag="bf16")
+    )
+    out.append(
+        lambda: lower_train("resnet_mini", rn_cfg, 16, half=False, use_pallas=False, tag="jnpref")
+    )
+    out.append(
+        lambda: lower_infer("resnet_mini", rn_cfg, 16, half=False, use_pallas=True, tag="f32")
+    )
+    # TransformerLM (end-to-end driver)
+    out.append(lambda: lower_train("tfmr_lm", lm_cfg, 8, half=False, use_pallas=True, tag="f32"))
+    out.append(lambda: lower_train("tfmr_lm", lm_cfg, 8, half=True, use_pallas=True, tag="bf16"))
+    # raw kernel micro-artifacts
+    out.append(lambda: lower_matmul(256, half=False, tag="f32"))
+    out.append(lambda: lower_matmul(256, half=True, tag="bf16"))
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    manifest = []
+    for build in variants():
+        name, hlo, entry = build()
+        path = os.path.join(args.out, entry["hlo_file"])
+        with open(path, "w") as f:
+            f.write(hlo)
+        manifest.append(entry)
+        print(f"  wrote {name}: {len(hlo) / 1024:.0f} KiB")
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump({"artifacts": manifest}, f, indent=1)
+    print(f"manifest: {len(manifest)} artifacts -> {args.out}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

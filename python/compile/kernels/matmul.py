@@ -1,0 +1,154 @@
+"""L1 — the Pallas matmul kernel.
+
+This is the compute hot-spot of the whole stack: affine layers call it
+directly and convolutions reach it through im2col, so one kernel serves
+the paper's entire model zoo (the same lowering the Rust dynamic engine
+uses, keeping the two backends structurally identical).
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): 128x128x128 blocks sized
+for VMEM (<=192 KiB resident per grid step vs ~16 MiB VMEM), bf16
+inputs with f32 accumulation (`preferred_element_type`) to hit the
+MXU's native mode — the TensorCore analogue the paper's mixed precision
+(§3.3) relies on. Run under `interpret=True` here because the CPU PJRT
+plugin cannot execute Mosaic custom-calls; the lowered HLO is what the
+Rust runtime compiles and runs.
+"""
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Block sizes are a compile-target knob (§Perf in EXPERIMENTS.md):
+# - `tpu`: 128x128x128, MXU-systolic-array-shaped, ~192 KiB VMEM/step —
+#   the paper-faithful structure this kernel is designed for;
+# - `cpu` (default here): large blocks. Interpret-mode lowering turns
+#   each grid step into a while-loop iteration of dynamic-slice +
+#   dynamic-update-slice HLO; on the CPU PJRT backend that overhead
+#   (~0.15 ms/step) dwarfs the matmul, so fewer/larger blocks win
+#   (measured 54x on conv-shaped matmuls — see EXPERIMENTS.md §Perf).
+KERNEL_TARGET = os.environ.get("NNL_KERNEL_TARGET", "cpu")
+if KERNEL_TARGET == "tpu":
+    BLOCK_M, BLOCK_N, BLOCK_K = 128, 128, 128
+else:
+    BLOCK_M, BLOCK_N, BLOCK_K = 4096, 512, 512
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, n_k: int):
+    """One (i, j, k) grid step: o[i,j] += a[i,k] @ b[k,j].
+
+    The f32 accumulator lives in scratch (`acc_ref`) so bf16 inputs
+    accumulate at full precision across the K loop — the mixed
+    precision contract of paper §3.3.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == n_k - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def _matmul_padded(a, b, bm: int, bn: int, bk: int):
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2
+    grid = (m // bm, n // bn, k // bk)
+    # f32 accumulator tile in scratch memory (VMEM on a real TPU)
+    acc = pl.MemoryRef(jax.core.ShapedArray((bm, bn), jnp.float32), pl.ANY)
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, n_k=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        scratch_shapes=[acc],
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(a, b)
+
+
+def _matmul_core(a, b, half: bool):
+    """Cast to the storage dtype, pad to block multiples, run the
+    kernel, slice the result back."""
+    m, k = a.shape
+    _, n = b.shape
+    bm, bn, bk = (min(BLOCK_M, _ceil_to(m, 8)),
+                  min(BLOCK_N, _ceil_to(n, 8)),
+                  min(BLOCK_K, _ceil_to(k, 8)))
+    a = a.astype(jnp.bfloat16) if half else a.astype(jnp.float32)
+    b = b.astype(jnp.bfloat16) if half else b.astype(jnp.float32)
+    mp, np_, kp = _ceil_to(m, bm), _ceil_to(n, bn), _ceil_to(k, bk)
+    if (mp, kp) != (m, k):
+        a = jnp.pad(a, ((0, mp - m), (0, kp - k)))
+    if (kp, np_) != (k, n):
+        b = jnp.pad(b, ((0, kp - k), (0, np_ - n)))
+    out = _matmul_padded(a, b, bm, bn, bk)
+    if (mp, np_) != (m, n):
+        out = out[:m, :n]
+    return out
+
+
+# Pallas calls with scratch refs are not AD-traceable; give the matmul
+# an explicit VJP whose backward *also* runs on the Pallas kernel —
+# so fwd and bwd of every dense layer hit the same MXU path (exactly
+# how the paper's TensorCore mixed precision works, Fig. 3-left).
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _matmul_vjp(a, b, half):
+    return _matmul_core(a, b, half)
+
+
+def _matmul_fwd(a, b, half):
+    return _matmul_core(a, b, half), (a, b)
+
+
+def _matmul_bwd(half, res, g):
+    a, b = res
+    ga = _matmul_core(g, b.T, half).astype(a.dtype)
+    gb = _matmul_core(a.T, g, half).astype(b.dtype)
+    return ga, gb
+
+
+_matmul_vjp.defvjp(_matmul_fwd, _matmul_bwd)
+
+
+def matmul(a, b, *, half: bool = False):
+    """`a [m,k] @ b [k,n] -> f32 [m,n]` through the Pallas kernel.
+
+    With `half=True`, inputs are stored/fed to the MXU as bf16 while
+    accumulation stays f32 (mixed precision, §3.3). Operands are padded
+    to block multiples and the result sliced back, so any shape works.
+    Differentiable: backward runs the same kernel on (g·bᵀ, aᵀ·g).
+    """
+    return _matmul_vjp(a, b, half)
+
+
+def estimate_vmem_bytes(bm: int = BLOCK_M, bn: int = BLOCK_N, bk: int = BLOCK_K,
+                        half: bool = False) -> int:
+    """Per-grid-step VMEM residency estimate (DESIGN.md §9)."""
+    in_bytes = 2 if half else 4
+    return bm * bk * in_bytes + bk * bn * in_bytes + bm * bn * 4  # + f32 acc
+
+
+def estimate_mxu_utilization(m: int, n: int, k: int,
+                             bm: int = BLOCK_M, bn: int = BLOCK_N,
+                             bk: int = BLOCK_K) -> float:
+    """Useful MACs / issued MACs given tile padding (DESIGN.md §9)."""
+    issued = (-(-m // bm) * bm) * (-(-n // bn) * bn) * (-(-k // bk) * bk)
+    return (m * n * k) / issued

@@ -1,0 +1,34 @@
+"""Pure-jnp oracles for the Pallas kernels — the build-time correctness
+signal (pytest compares kernel vs ref across shapes/dtypes)."""
+
+import jax.numpy as jnp
+
+
+def matmul_ref(a, b, *, half: bool = False):
+    """Reference matmul with the same precision contract as the kernel:
+    optional bf16 storage of the operands, f32 accumulation."""
+    if half:
+        a = a.astype(jnp.bfloat16)
+        b = b.astype(jnp.bfloat16)
+    else:
+        a = a.astype(jnp.float32)
+        b = b.astype(jnp.float32)
+    return jnp.matmul(a, b, preferred_element_type=jnp.float32)
+
+
+def im2col_ref(x, kh, kw, stride, pad):
+    """NCHW im2col -> [n*oh*ow, c*kh*kw]; mirrors the Rust lowering so
+    conv-through-matmul agrees across all three layers."""
+    n, c, h, w = x.shape
+    x = jnp.pad(x, ((0, 0), (0, 0), (pad, pad), (pad, pad)))
+    oh = (h + 2 * pad - kh) // stride + 1
+    ow = (w + 2 * pad - kw) // stride + 1
+    cols = []
+    for ky in range(kh):
+        for kx in range(kw):
+            patch = x[:, :, ky : ky + oh * stride : stride, kx : kx + ow * stride : stride]
+            cols.append(patch)  # [n, c, oh, ow]
+    # -> [n, c, kh*kw, oh, ow] -> [n, oh, ow, c, kh*kw]
+    stacked = jnp.stack(cols, axis=2)
+    out = stacked.transpose(0, 3, 4, 1, 2).reshape(n * oh * ow, c * kh * kw)
+    return out, (oh, ow)

@@ -1,0 +1,351 @@
+"""L2 — JAX model/train-step definitions, AOT-lowered by `aot.py`.
+
+Every dense contraction (affine layers, im2col'd convolutions,
+attention) routes through the L1 Pallas kernel (`kernels.matmul`), so
+the lowered HLO exercises the paper's compute hot-spot end to end.
+
+Each model is described by:
+- ``param_specs(cfg)`` — ordered ``(name, shape, init_kind, scale)``
+  (the manifest contract: Rust materializes identical initial params);
+- ``apply(params, x, half)`` — forward pass to logits;
+- a generic ``make_train_step`` building
+  ``(params..., x, y, loss_scale) -> (scaled grads..., loss)``,
+  which is exactly Listing 6's ``loss.backward(loss_scale)`` contract:
+  the solver-side unscale/update stays in Rust (L3).
+"""
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import matmul as mmk
+from .kernels.ref import im2col_ref, matmul_ref
+
+
+# --------------------------------------------------------------------- ops
+
+
+def dense(x, w, b=None, *, half=False, use_pallas=True):
+    """x [B, in] @ w [in, out] + b through the L1 kernel."""
+    mm = mmk.matmul if use_pallas else matmul_ref
+    y = mm(x, w, half=half)
+    if b is not None:
+        y = y + b
+    return y
+
+
+def conv2d(x, w, b=None, *, stride=1, pad=0, half=False, use_pallas=True):
+    """NCHW conv through im2col + the L1 matmul kernel."""
+    oc, c, kh, kw = w.shape
+    n = x.shape[0]
+    cols, (oh, ow) = im2col_ref(x, kh, kw, stride, pad)  # [n*oh*ow, c*kh*kw]
+    wr = w.reshape(oc, c * kh * kw).T
+    mm = mmk.matmul if use_pallas else matmul_ref
+    y = mm(cols, wr, half=half)  # [n*oh*ow, oc]
+    if b is not None:
+        y = y + b
+    return y.reshape(n, oh, ow, oc).transpose(0, 3, 1, 2)
+
+
+def max_pool(x, k=2, stride=2):
+    n, c, h, w = x.shape
+    x = x.reshape(n, c, h // stride, stride, w // stride, stride)
+    return x.max(axis=(3, 5)) if k == stride else x.max(axis=(3, 5))
+
+
+def global_avg_pool(x):
+    return x.mean(axis=(2, 3))
+
+
+def batch_norm_stats(x, gamma, beta, eps=1e-5):
+    """Batch-stat normalization (training graph; running stats live on
+    the dynamic path — documented substitution in DESIGN.md). Always
+    f32, per the paper's §3.3 rule."""
+    x32 = x.astype(jnp.float32)
+    axes = (0, 2, 3) if x.ndim == 4 else (0,)
+    mu = x32.mean(axis=axes, keepdims=True)
+    var = x32.var(axis=axes, keepdims=True)
+    shape = (1, -1, 1, 1) if x.ndim == 4 else (1, -1)
+    return gamma.reshape(shape) * (x32 - mu) / jnp.sqrt(var + eps) + beta.reshape(shape)
+
+
+def layer_norm(x, gamma, beta, eps=1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = x32.mean(axis=-1, keepdims=True)
+    var = x32.var(axis=-1, keepdims=True)
+    return gamma * (x32 - mu) / jnp.sqrt(var + eps) + beta
+
+
+def softmax_cross_entropy(logits, labels):
+    """Mean CE over the batch; labels are int32 indices."""
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None].astype(jnp.int32), axis=-1)
+    return nll.mean()
+
+
+def _glorot(shape):
+    fan_in, fan_out = shape[0], shape[-1]
+    if len(shape) == 4:  # conv [oc, c, kh, kw]
+        rcf = shape[1] * shape[2] * shape[3]
+        fan_in, fan_out = rcf, shape[0] * shape[2] * shape[3]
+    return ("uniform", math.sqrt(6.0 / (fan_in + fan_out)))
+
+
+# --------------------------------------------------------------------- MLP
+
+
+def mlp_param_specs(cfg):
+    d_in, hidden, classes = cfg["d_in"], cfg["hidden"], cfg["classes"]
+    specs = []
+    last = d_in
+    for i, h in enumerate(hidden):
+        kind, scale = _glorot((last, h))
+        specs.append((f"fc{i}/W", (last, h), kind, scale))
+        specs.append((f"fc{i}/b", (h,), "zeros", 0.0))
+        last = h
+    kind, scale = _glorot((last, classes))
+    specs.append(("out/W", (last, classes), kind, scale))
+    specs.append(("out/b", (classes,), "zeros", 0.0))
+    return specs
+
+
+def mlp_apply(params, x, cfg, *, half=False, use_pallas=True):
+    h = x
+    for i in range(len(cfg["hidden"])):
+        h = dense(h, params[f"fc{i}/W"], params[f"fc{i}/b"], half=half, use_pallas=use_pallas)
+        h = jax.nn.relu(h)
+    return dense(h, params["out/W"], params["out/b"], half=half, use_pallas=use_pallas)
+
+
+# -------------------------------------------------------------------- LeNet
+# Listing 4 verbatim: conv16-5x5 / pool / relu / conv16-5x5 / pool /
+# relu / affine50 / relu / affine10.
+
+
+def lenet_param_specs(cfg):
+    c_in, img, classes = cfg["c_in"], cfg["img"], cfg["classes"]
+    specs = []
+    for i, (ic, oc) in enumerate([(c_in, 16), (16, 16)]):
+        kind, scale = _glorot((oc, ic, 5, 5))
+        specs.append((f"conv{i + 1}/W", (oc, ic, 5, 5), kind, scale))
+        specs.append((f"conv{i + 1}/b", (oc,), "zeros", 0.0))
+    # spatial size after two (conv5x5 valid + pool2) stages
+    s = img
+    for _ in range(2):
+        s = (s - 4) // 2
+    flat = 16 * s * s
+    for name, (i_, o_) in [("affine3", (flat, 50)), ("affine4", (50, classes))]:
+        kind, scale = _glorot((i_, o_))
+        specs.append((f"{name}/W", (i_, o_), kind, scale))
+        specs.append((f"{name}/b", (o_,), "zeros", 0.0))
+    return specs
+
+
+def lenet_apply(params, x, cfg, *, half=False, use_pallas=True):
+    h = conv2d(x, params["conv1/W"], params["conv1/b"], half=half, use_pallas=use_pallas)
+    h = jax.nn.relu(max_pool(h))
+    h = conv2d(h, params["conv2/W"], params["conv2/b"], half=half, use_pallas=use_pallas)
+    h = jax.nn.relu(max_pool(h))
+    h = h.reshape(h.shape[0], -1)
+    h = jax.nn.relu(dense(h, params["affine3/W"], params["affine3/b"], half=half,
+                          use_pallas=use_pallas))
+    return dense(h, params["affine4/W"], params["affine4/b"], half=half,
+                 use_pallas=use_pallas)
+
+
+# -------------------------------------------------------------- ResNet-mini
+
+
+def resnet_param_specs(cfg):
+    """Scaled-down ResNet: stem conv + `blocks` residual blocks per
+    stage over `widths`, GAP, classifier."""
+    widths, blocks, c_in, classes = cfg["widths"], cfg["blocks"], cfg["c_in"], cfg["classes"]
+    specs = []
+
+    def conv(name, oc, ic, k):
+        kind, scale = _glorot((oc, ic, k, k))
+        specs.append((f"{name}/W", (oc, ic, k, k), kind, scale))
+        specs.append((f"{name}/gamma", (oc,), "ones", 0.0))
+        specs.append((f"{name}/beta", (oc,), "zeros", 0.0))
+
+    conv("stem", widths[0], c_in, 3)
+    ic = widths[0]
+    for s, w in enumerate(widths):
+        for b in range(blocks):
+            conv(f"s{s}b{b}/c1", w, ic, 3)
+            conv(f"s{s}b{b}/c2", w, w, 3)
+            if ic != w:
+                conv(f"s{s}b{b}/proj", w, ic, 1)
+            ic = w
+    kind, scale = _glorot((ic, classes))
+    specs.append(("head/W", (ic, classes), kind, scale))
+    specs.append(("head/b", (classes,), "zeros", 0.0))
+    return specs
+
+
+def resnet_apply(params, x, cfg, *, half=False, use_pallas=True):
+    widths, blocks = cfg["widths"], cfg["blocks"]
+
+    def cbr(name, h, stride=1, relu=True):
+        k = params[f"{name}/W"].shape[2]
+        h = conv2d(h, params[f"{name}/W"], stride=stride, pad=k // 2, half=half,
+                   use_pallas=use_pallas)
+        h = batch_norm_stats(h, params[f"{name}/gamma"], params[f"{name}/beta"])
+        return jax.nn.relu(h) if relu else h
+
+    h = cbr("stem", x)
+    ic = widths[0]
+    for s, w in enumerate(widths):
+        for b in range(blocks):
+            stride = 2 if (s > 0 and b == 0) else 1
+            r = cbr(f"s{s}b{b}/c1", h, stride=stride)
+            r = cbr(f"s{s}b{b}/c2", r, relu=False)
+            sc = h
+            if ic != w or stride != 1:
+                if f"s{s}b{b}/proj/W" in params:
+                    sc = cbr(f"s{s}b{b}/proj", h, stride=stride, relu=False)
+                else:
+                    sc = h[:, :, ::stride, ::stride]
+            h = jax.nn.relu(r + sc)
+            ic = w
+    h = global_avg_pool(h)
+    return dense(h, params["head/W"], params["head/b"], half=half, use_pallas=use_pallas)
+
+
+# ---------------------------------------------------------- TransformerLM
+
+
+def tfmr_param_specs(cfg):
+    v, d, l, ff = cfg["vocab"], cfg["d"], cfg["layers"], cfg["ff"]
+    specs = [("embed/W", (v, d), "normal", 0.02), ("pos/W", (cfg["seq"], d), "normal", 0.02)]
+    for i in range(l):
+        for nm, shape in [
+            (f"l{i}/qkv/W", (d, 3 * d)),
+            (f"l{i}/proj/W", (d, d)),
+            (f"l{i}/ff1/W", (d, ff)),
+            (f"l{i}/ff2/W", (ff, d)),
+        ]:
+            kind, scale = _glorot(shape)
+            specs.append((nm, shape, kind, scale))
+        specs += [
+            (f"l{i}/ln1/gamma", (d,), "ones", 0.0),
+            (f"l{i}/ln1/beta", (d,), "zeros", 0.0),
+            (f"l{i}/ln2/gamma", (d,), "ones", 0.0),
+            (f"l{i}/ln2/beta", (d,), "zeros", 0.0),
+        ]
+    specs += [("lnf/gamma", (d,), "ones", 0.0), ("lnf/beta", (d,), "zeros", 0.0)]
+    kind, scale = _glorot((d, v))
+    specs.append(("head/W", (d, v), kind, scale))
+    return specs
+
+
+def tfmr_apply(params, ids, cfg, *, half=False, use_pallas=True):
+    """ids [B, T] int32 -> logits [B, T, V]; causal self-attention."""
+    b, t = ids.shape
+    d, heads = cfg["d"], cfg["heads"]
+    hd = d // heads
+    h = params["embed/W"][ids.astype(jnp.int32)] + params["pos/W"][None, :t, :]
+    mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+    mm = mmk.matmul if use_pallas else matmul_ref
+    for i in range(cfg["layers"]):
+        x = layer_norm(h, params[f"l{i}/ln1/gamma"], params[f"l{i}/ln1/beta"])
+        qkv = mm(x.reshape(b * t, d), params[f"l{i}/qkv/W"], half=half).reshape(b, t, 3 * d)
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        q = q.reshape(b, t, heads, hd).transpose(0, 2, 1, 3)
+        k = k.reshape(b, t, heads, hd).transpose(0, 2, 1, 3)
+        v = v.reshape(b, t, heads, hd).transpose(0, 2, 1, 3)
+        att = jnp.einsum("bhqd,bhkd->bhqk", q, k) / math.sqrt(hd)
+        att = jnp.where(mask[None, None], att, -1e30)
+        att = jax.nn.softmax(att.astype(jnp.float32), axis=-1)
+        o = jnp.einsum("bhqk,bhkd->bhqd", att, v).transpose(0, 2, 1, 3).reshape(b * t, d)
+        h = h + mm(o, params[f"l{i}/proj/W"], half=half).reshape(b, t, d)
+        x = layer_norm(h, params[f"l{i}/ln2/gamma"], params[f"l{i}/ln2/beta"])
+        f = mm(x.reshape(b * t, d), params[f"l{i}/ff1/W"], half=half)
+        f = jax.nn.gelu(f)
+        h = h + mm(f, params[f"l{i}/ff2/W"], half=half).reshape(b, t, d)
+    h = layer_norm(h, params["lnf/gamma"], params["lnf/beta"])
+    return mm(h.reshape(b * t, d), params["head/W"], half=half).reshape(b, t, cfg["vocab"])
+
+
+def tfmr_loss(params, ids, targets, cfg, *, half=False, use_pallas=True):
+    logits = tfmr_apply(params, ids, cfg, half=half, use_pallas=use_pallas)
+    b, t, v = logits.shape
+    return softmax_cross_entropy(logits.reshape(b * t, v), targets.reshape(b * t))
+
+
+# ---------------------------------------------------------------- registry
+
+MODELS = {
+    "mlp": {
+        "param_specs": mlp_param_specs,
+        "apply": mlp_apply,
+        "default_cfg": {"d_in": 64, "hidden": [128, 64], "classes": 10},
+        "input": lambda cfg, b: [("x", (b, cfg["d_in"]), "float32"), ("y", (b,), "float32")],
+    },
+    "lenet": {
+        "param_specs": lenet_param_specs,
+        "apply": lenet_apply,
+        "default_cfg": {"c_in": 1, "img": 28, "classes": 10},
+        "input": lambda cfg, b: [
+            ("x", (b, cfg["c_in"], cfg["img"], cfg["img"]), "float32"),
+            ("y", (b,), "float32"),
+        ],
+    },
+    "resnet_mini": {
+        "param_specs": resnet_param_specs,
+        "apply": resnet_apply,
+        "default_cfg": {"widths": [8, 16, 32], "blocks": 1, "c_in": 3, "classes": 10, "img": 16},
+        "input": lambda cfg, b: [
+            ("x", (b, cfg["c_in"], cfg["img"], cfg["img"]), "float32"),
+            ("y", (b,), "float32"),
+        ],
+    },
+    "tfmr_lm": {
+        "param_specs": tfmr_param_specs,
+        "apply": None,  # language model: uses tfmr_loss directly
+        "default_cfg": {"vocab": 96, "d": 128, "layers": 2, "heads": 4, "ff": 512, "seq": 64},
+        "input": lambda cfg, b: [
+            ("x", (b, cfg["seq"]), "float32"),
+            ("y", (b, cfg["seq"]), "float32"),
+        ],
+    },
+}
+
+
+def classifier_loss(model, params, x, y, cfg, *, half=False, use_pallas=True):
+    logits = MODELS[model]["apply"](params, x, cfg, half=half, use_pallas=use_pallas)
+    return softmax_cross_entropy(logits, y)
+
+
+def make_train_step(model, cfg, *, half=False, use_pallas=True):
+    """Build `(params_dict, x, y, loss_scale) -> (grads_dict, loss)`.
+
+    The returned grads are *scaled* by `loss_scale` (Listing 6:
+    `loss.backward(loss_scale)`); loss is returned unscaled. The
+    unscale + update happens in the Rust solver.
+    """
+    if model == "tfmr_lm":
+        def loss_fn(params, x, y):
+            return tfmr_loss(params, x, y, cfg, half=half, use_pallas=use_pallas)
+    else:
+        def loss_fn(params, x, y):
+            return classifier_loss(model, params, x, y, cfg, half=half, use_pallas=use_pallas)
+
+    def step(params, x, y, loss_scale):
+        def scaled(params):
+            return loss_fn(params, x, y) * loss_scale
+
+        sloss, grads = jax.value_and_grad(scaled)(params)
+        return grads, sloss / loss_scale
+
+    return step
+
+
+def make_infer(model, cfg, *, half=False, use_pallas=True):
+    """Build `(params_dict, x) -> logits` for Executor artifacts."""
+    def infer(params, x):
+        return MODELS[model]["apply"](params, x, cfg, half=half, use_pallas=use_pallas)
+
+    return infer

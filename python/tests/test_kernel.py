@@ -1,0 +1,127 @@
+"""L1 correctness: the Pallas matmul kernel vs the pure-jnp oracle,
+swept across shapes and dtypes with hypothesis."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matmul as mmk
+from compile.kernels.ref import im2col_ref, matmul_ref
+
+
+def rand(shape, seed):
+    return np.random.RandomState(seed).randn(*shape).astype(np.float32)
+
+
+# ------------------------------------------------------------- hypothesis
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 150),
+    k=st.integers(1, 150),
+    n=st.integers(1, 150),
+    seed=st.integers(0, 2**16),
+)
+def test_matmul_f32_matches_ref(m, k, n, seed):
+    a, b = rand((m, k), seed), rand((k, n), seed + 1)
+    got = np.asarray(mmk.matmul(a, b))
+    want = np.asarray(matmul_ref(a, b))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m=st.integers(1, 100),
+    k=st.integers(1, 100),
+    n=st.integers(1, 100),
+    seed=st.integers(0, 2**16),
+)
+def test_matmul_bf16_matches_ref(m, k, n, seed):
+    a, b = rand((m, k), seed), rand((k, n), seed + 1)
+    got = np.asarray(mmk.matmul(a, b, half=True))
+    want = np.asarray(matmul_ref(a, b, half=True))
+    # same storage-cast + f32-accumulate contract: near-exact agreement
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**16))
+def test_matmul_grad_matches_ref_grad(seed):
+    a, b = rand((17, 23), seed), rand((23, 9), seed + 1)
+
+    def f_kernel(a, b):
+        return mmk.matmul(a, b).sum()
+
+    def f_ref(a, b):
+        return matmul_ref(a, b).sum()
+
+    ga_k, gb_k = jax.grad(f_kernel, argnums=(0, 1))(a, b)
+    ga_r, gb_r = jax.grad(f_ref, argnums=(0, 1))(a, b)
+    np.testing.assert_allclose(np.asarray(ga_k), np.asarray(ga_r), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(gb_k), np.asarray(gb_r), rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------------------- point tests
+
+
+def test_block_tiled_path_exact_sizes():
+    # shapes exactly on the 128-block grid exercise the multi-block path
+    a, b = rand((256, 384), 0), rand((384, 128), 1)
+    got = np.asarray(mmk.matmul(a, b))
+    np.testing.assert_allclose(got, a @ b, rtol=1e-4, atol=1e-3)
+
+
+def test_bf16_actually_quantizes():
+    a = np.full((8, 8), 1.0 + 2.0**-9, np.float32)  # not bf16-representable
+    b = np.eye(8, dtype=np.float32)
+    exact = np.asarray(mmk.matmul(a, b))
+    half = np.asarray(mmk.matmul(a, b, half=True))
+    assert not np.allclose(exact, half), "half path did not quantize"
+
+
+def test_identity_and_zeros():
+    a = rand((33, 33), 2)
+    eye = np.eye(33, dtype=np.float32)
+    np.testing.assert_allclose(np.asarray(mmk.matmul(a, eye)), a, rtol=1e-5, atol=1e-5)
+    z = np.zeros((33, 7), np.float32)
+    assert np.abs(np.asarray(mmk.matmul(a, z))).max() == 0.0
+
+
+def test_vmem_estimate_within_budget():
+    # DESIGN.md §9: the TPU-target 128^3 tiles stay far under 16 MiB VMEM
+    assert mmk.estimate_vmem_bytes(128, 128, 128) <= 256 * 1024
+    assert mmk.estimate_vmem_bytes(128, 128, 128, half=True) < mmk.estimate_vmem_bytes(
+        128, 128, 128
+    )
+
+
+def test_mxu_utilization_model():
+    kw = dict(bm=128, bn=128, bk=128)
+    assert mmk.estimate_mxu_utilization(128, 128, 128, **kw) == 1.0
+    assert 0.4 < mmk.estimate_mxu_utilization(300, 300, 300, **kw) < 0.5
+    assert mmk.estimate_mxu_utilization(1, 1, 1, **kw) < 0.01
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    n=st.integers(1, 3),
+    c=st.integers(1, 4),
+    hw=st.integers(4, 10),
+    k=st.sampled_from([1, 3]),
+    seed=st.integers(0, 2**16),
+)
+def test_im2col_matches_lax_conv(n, c, hw, k, seed):
+    """conv-via-im2col+kernel == jax.lax conv (the L2 lowering is right)."""
+    x = rand((n, c, hw, hw), seed)
+    w = rand((5, c, k, k), seed + 1)
+    pad = k // 2
+    cols, (oh, ow) = im2col_ref(x, k, k, 1, pad)
+    got = np.asarray(mmk.matmul(cols, w.reshape(5, -1).T)).reshape(n, oh, ow, 5)
+    got = got.transpose(0, 3, 1, 2)
+    want = jax.lax.conv_general_dilated(
+        x, w, (1, 1), [(pad, pad), (pad, pad)], dimension_numbers=("NCHW", "OIHW", "NCHW")
+    )
+    np.testing.assert_allclose(got, np.asarray(want), rtol=1e-3, atol=1e-3)

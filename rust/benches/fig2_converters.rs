@@ -1,0 +1,73 @@
+//! Bench: Figure 2 — converter fabric cost: conversion time per format
+//! and inference parity/latency of each deployed form.
+
+use std::collections::HashMap;
+
+use nnl::converters::{frozen, nnb, onnx_lite};
+use nnl::models::{build_model, Gb};
+use nnl::nnp::{interpreter, Nnp};
+use nnl::parametric as PF;
+use nnl::tensor::{NdArray, Rng};
+use nnl::utils::bench::{bench, table};
+
+fn main() {
+    // model under conversion: lenet (conv net exercises every format)
+    PF::clear_parameters();
+    PF::seed_parameter_rng(4);
+    let mut g = Gb::new("lenet", false);
+    let x = g.input("x", &[4, 1, 28, 28]);
+    let logits = build_model(&mut g, "lenet", &x, 10);
+    let def = g.finish(&[&logits]);
+    let params: Vec<(String, NdArray)> =
+        PF::get_parameters().into_iter().map(|(n, v)| (n, v.data())).collect();
+    let nnp = Nnp::from_network(def.clone(), params.clone());
+    let pm = nnp.param_map();
+    let mut rng = Rng::new(0);
+    let input = rng.randn(&[4, 1, 28, 28], 1.0);
+    let mut inputs = HashMap::new();
+    inputs.insert("x".to_string(), input);
+
+    // conversion cost
+    let conv_rows = vec![
+        bench("convert: NNP -> ONNX-lite", 1, 10, || {
+            let m = onnx_lite::to_onnx(&def, &pm).unwrap();
+            std::hint::black_box(onnx_lite::save_bytes(&m));
+        }),
+        bench("convert: NNP -> NNB", 1, 10, || {
+            std::hint::black_box(nnb::to_nnb(&def, &params));
+        }),
+        bench("convert: NNP -> frozen", 1, 10, || {
+            let fg = frozen::freeze(&def, &pm).unwrap();
+            std::hint::black_box(frozen::save_bytes(&fg));
+        }),
+    ];
+    print!("{}", table("Figure 2a: conversion cost (lenet)", &conv_rows));
+
+    // deployed inference latency, all formats (must agree numerically)
+    let reference = interpreter::run(&def, &inputs, &pm).unwrap().remove(0);
+    let onnx = onnx_lite::to_onnx(&def, &pm).unwrap();
+    let (onet, oparams) = onnx_lite::from_onnx(&onnx).unwrap();
+    let opm: HashMap<String, NdArray> = oparams.into_iter().collect();
+    let nnb_bytes = nnb::to_nnb(&def, &params);
+    let fg = frozen::freeze(&def, &pm).unwrap();
+
+    let infer_rows = vec![
+        bench("infer: NNP interpreter", 1, 10, || {
+            let out = interpreter::run(&def, &inputs, &pm).unwrap();
+            assert!(out[0].allclose(&reference, 1e-5, 1e-5));
+        }),
+        bench("infer: via ONNX roundtrip", 1, 10, || {
+            let out = interpreter::run(&onet, &inputs, &opm).unwrap();
+            assert!(out[0].allclose(&reference, 1e-5, 1e-5));
+        }),
+        bench("infer: NNB runtime (decode + run)", 1, 10, || {
+            let out = nnb::run_nnb(&nnb_bytes, &inputs).unwrap();
+            assert!(out[0].allclose(&reference, 1e-5, 1e-5));
+        }),
+        bench("infer: frozen graph", 1, 10, || {
+            let out = frozen::run(&fg, &inputs).unwrap();
+            assert!(out[0].allclose(&reference, 1e-5, 1e-5));
+        }),
+    ];
+    print!("{}", table("Figure 2b: deployed inference (batch 4), numerics checked", &infer_rows));
+}

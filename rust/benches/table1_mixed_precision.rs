@@ -1,0 +1,69 @@
+//! Bench: Table 1 — per-step training time, FP-32 vs mixed precision,
+//! across backends. `cargo bench --bench table1_mixed_precision`
+
+use nnl::data::{DataSource, SyntheticImages};
+use nnl::runtime::{Manifest, StaticExecutable};
+use nnl::solvers::Solver;
+use nnl::tensor::NdArray;
+use nnl::trainer::{train_dynamic, TrainConfig};
+use nnl::utils::bench::{bench, table};
+use nnl::Variable;
+
+fn static_step_bench(
+    manifest: &Manifest,
+    artifact: &str,
+    data: &SyntheticImages,
+    scale: f32,
+) -> nnl::utils::bench::Measurement {
+    let exe = StaticExecutable::load(manifest, artifact).expect("load artifact");
+    let params: Vec<(String, Variable)> = exe
+        .spec()
+        .init_params()
+        .into_iter()
+        .map(|(n, a)| (n, Variable::from_array(a, true)))
+        .collect();
+    let mut solver = Solver::momentum(0.05, 0.9);
+    solver.set_parameters(&params);
+    let (bx, by) = data.batch(0, 0, 1);
+    let by = by.reshape(&exe.spec().data_inputs()[1].dims);
+    let mut step = 0usize;
+    bench(artifact, 3, 15, || {
+        let mut inputs: Vec<NdArray> = params.iter().map(|(_, v)| v.data()).collect();
+        inputs.push(bx.clone());
+        inputs.push(by.clone());
+        inputs.push(NdArray::scalar(scale));
+        let out = exe.execute(&inputs).expect("execute");
+        for ((_, v), g) in params.iter().zip(&out[..params.len()]) {
+            v.set_grad(g.clone());
+        }
+        solver.scale_grad(1.0 / scale);
+        solver.update();
+        step += 1;
+    })
+}
+
+fn main() {
+    let manifest = Manifest::load(&Manifest::default_dir()).expect("run `make artifacts`");
+    let data = SyntheticImages::imagenet_mini(16);
+
+    // dynamic baseline measured through the trainer
+    let cfg = TrainConfig { steps: 10, val_batches: 0, ..Default::default() };
+    let dyn_report = train_dynamic("resnet18", &data, &cfg);
+    let dyn_m = nnl::utils::bench::Measurement {
+        name: "nnl-dynamic f32 (define-by-run)".into(),
+        iters: cfg.steps,
+        mean_secs: dyn_report.wall_secs / cfg.steps as f64,
+        min_secs: dyn_report.wall_secs / cfg.steps as f64,
+    };
+
+    let rows = vec![
+        dyn_m,
+        static_step_bench(&manifest, "resnet_mini_train_jnpref_b16", &data, 1.0),
+        static_step_bench(&manifest, "resnet_mini_train_f32_b16", &data, 1.0),
+        static_step_bench(&manifest, "resnet_mini_train_bf16_b16", &data, 8.0),
+    ];
+    print!("{}", table("Table 1: ResNet-mini train step (batch 16)", &rows));
+    let f32_t = rows[2].mean_secs;
+    let bf16_t = rows[3].mean_secs;
+    println!("mixed-precision speedup: x{:.2} (paper: x2.3–3.1 on Volta)", f32_t / bf16_t);
+}

@@ -1,0 +1,26 @@
+//! Bench: Table 2 — per-step training time of the ResNet-variant zoo.
+
+use nnl::data::SyntheticImages;
+use nnl::trainer::{train_dynamic, TrainConfig};
+use nnl::utils::bench::{table, Measurement};
+
+fn main() {
+    let data = SyntheticImages::imagenet_mini(8);
+    let cfg = TrainConfig { steps: 8, val_batches: 0, ..Default::default() };
+    let rows: Vec<Measurement> =
+        ["resnet18", "resnet50", "resnext50", "se_resnet50", "se_resnext50"]
+            .iter()
+            .map(|m| {
+                let r = train_dynamic(m, &data, &cfg);
+                Measurement {
+                    name: m.to_string(),
+                    iters: cfg.steps,
+                    mean_secs: r.wall_secs / cfg.steps as f64,
+                    min_secs: r.wall_secs / cfg.steps as f64,
+                }
+            })
+            .collect();
+    print!("{}", table("Table 2: ResNet variants, train step (batch 8)", &rows));
+    let inc = rows.windows(2).filter(|w| w[1].mean_secs > w[0].mean_secs).count();
+    println!("monotone-time pairs: {inc}/4 (paper shape: 4/4)");
+}

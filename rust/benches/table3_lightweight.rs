@@ -1,0 +1,34 @@
+//! Bench: Table 3 — per-step training time of the lightweight zoo
+//! (MobileNetV3, EfficientNet-B0..B3).
+
+use nnl::data::SyntheticImages;
+use nnl::trainer::{train_dynamic, TrainConfig};
+use nnl::utils::bench::{table, Measurement};
+
+fn main() {
+    let data = SyntheticImages::imagenet_mini(8);
+    let cfg = TrainConfig { steps: 8, val_batches: 0, ..Default::default() };
+    let rows: Vec<Measurement> = [
+        "mobilenet_v3_small",
+        "mobilenet_v3_large",
+        "efficientnet_b0",
+        "efficientnet_b1",
+        "efficientnet_b2",
+        "efficientnet_b3",
+    ]
+    .iter()
+    .map(|m| {
+        let r = train_dynamic(m, &data, &cfg);
+        Measurement {
+            name: m.to_string(),
+            iters: cfg.steps,
+            mean_secs: r.wall_secs / cfg.steps as f64,
+            min_secs: r.wall_secs / cfg.steps as f64,
+        }
+    })
+    .collect();
+    print!("{}", table("Table 3: lightweight models, train step (batch 8)", &rows));
+    let eff: Vec<f64> = rows[2..].iter().map(|r| r.mean_secs).collect();
+    let inc = eff.windows(2).filter(|w| w[1] > w[0]).count();
+    println!("EfficientNet compound-scaling time pairs increasing: {inc}/3 (paper: 3/3)");
+}

@@ -1,0 +1,311 @@
+//! Collectives over a shared rendezvous: each worker deposits its
+//! contribution in a rank-indexed slot, then every worker reduces the
+//! slots **in rank order** — giving bit-deterministic results (unlike
+//! real NCCL, where ring order depends on topology; determinism here
+//! is a feature for reproducible trials, and the semantics match).
+
+use std::sync::{Arc, Barrier, Mutex};
+
+use crate::tensor::NdArray;
+
+struct Slots {
+    bufs: Mutex<Vec<Option<Vec<f32>>>>,
+}
+
+/// Shared hub: create once, then [`CommHub::communicator`] per worker.
+pub struct CommHub {
+    n: usize,
+    barrier: Arc<Barrier>,
+    slots: Arc<Slots>,
+    taken: Vec<bool>,
+}
+
+impl CommHub {
+    /// Hub for `n` simulated devices.
+    pub fn new(n: usize) -> Self {
+        assert!(n >= 1);
+        CommHub {
+            n,
+            barrier: Arc::new(Barrier::new(n)),
+            slots: Arc::new(Slots { bufs: Mutex::new(vec![None; n]) }),
+            taken: vec![false; n],
+        }
+    }
+
+    /// Take the communicator endpoint for `rank` (once per rank).
+    pub fn communicator(&mut self, rank: usize) -> Communicator {
+        assert!(rank < self.n);
+        assert!(!self.taken[rank], "communicator already taken for rank {rank}");
+        self.taken[rank] = true;
+        Communicator { rank, n: self.n, barrier: self.barrier.clone(), slots: self.slots.clone() }
+    }
+}
+
+/// Per-worker endpoint — `C.MultiProcessDataParalellCommunicator`.
+pub struct Communicator {
+    rank: usize,
+    n: usize,
+    barrier: Arc<Barrier>,
+    slots: Arc<Slots>,
+}
+
+impl Communicator {
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    pub fn size(&self) -> usize {
+        self.n
+    }
+
+    /// Synchronization barrier across all workers.
+    pub fn barrier(&self) {
+        self.barrier.wait();
+    }
+
+    /// Deposit `mine`, wait, then fold all contributions in rank order.
+    fn exchange<R>(&self, mine: Vec<f32>, fold: impl FnOnce(&[Option<Vec<f32>>]) -> R) -> R {
+        {
+            let mut bufs = self.slots.bufs.lock().unwrap();
+            bufs[self.rank] = Some(mine);
+        }
+        self.barrier.wait(); // all deposited
+        let out = {
+            let bufs = self.slots.bufs.lock().unwrap();
+            fold(&bufs)
+        };
+        self.barrier.wait(); // all have read
+        if self.rank == 0 {
+            let mut bufs = self.slots.bufs.lock().unwrap();
+            for b in bufs.iter_mut() {
+                *b = None;
+            }
+        }
+        self.barrier.wait(); // slots cleared for the next collective
+        out
+    }
+
+    /// `comm.all_reduce(grads)` — sums each array elementwise across
+    /// workers (rank-order reduction: bit-deterministic); every worker
+    /// ends with identical values. `division=true` averages (NNabla's
+    /// `division` flag).
+    pub fn all_reduce(&self, arrays: &mut [NdArray], division: bool) {
+        if self.n == 1 {
+            return;
+        }
+        // pack all arrays into one flat buffer: one rendezvous per call
+        let total: usize = arrays.iter().map(|a| a.size()).sum();
+        let mut flat = Vec::with_capacity(total);
+        for a in arrays.iter() {
+            flat.extend_from_slice(a.data());
+        }
+        let reduced = self.exchange(flat, |bufs| {
+            let mut acc = vec![0.0f32; total];
+            for b in bufs.iter() {
+                let b = b.as_ref().expect("missing contribution");
+                for (a, v) in acc.iter_mut().zip(b) {
+                    *a += v;
+                }
+            }
+            acc
+        });
+        let scale = if division { 1.0 / self.n as f32 } else { 1.0 };
+        let mut off = 0;
+        for a in arrays.iter_mut() {
+            let n = a.size();
+            for (dst, src) in a.data_mut().iter_mut().zip(&reduced[off..off + n]) {
+                *dst = *src * scale;
+            }
+            a.requantize();
+            off += n;
+        }
+    }
+
+    /// Broadcast rank 0's arrays to everyone (initial weight sync).
+    pub fn bcast(&self, arrays: &mut [NdArray]) {
+        if self.n == 1 {
+            return;
+        }
+        let mine = if self.rank == 0 {
+            let mut flat = Vec::new();
+            for a in arrays.iter() {
+                flat.extend_from_slice(a.data());
+            }
+            flat
+        } else {
+            Vec::new()
+        };
+        let root = self.exchange(mine, |bufs| bufs[0].clone().expect("root contribution"));
+        let mut off = 0;
+        for a in arrays.iter_mut() {
+            let n = a.size();
+            a.data_mut().copy_from_slice(&root[off..off + n]);
+            a.requantize();
+            off += n;
+        }
+    }
+
+    /// All-gather scalars (e.g. per-worker losses) indexed by rank.
+    pub fn all_gather_scalar(&self, v: f32) -> Vec<f32> {
+        if self.n == 1 {
+            return vec![v];
+        }
+        self.exchange(vec![v], |bufs| {
+            bufs.iter().map(|b| b.as_ref().expect("contribution")[0]).collect()
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+    use crate::utils::prop;
+
+    fn run_workers<T: Send + 'static>(
+        n: usize,
+        f: impl Fn(Communicator) -> T + Send + Sync + Clone + 'static,
+    ) -> Vec<T> {
+        let mut hub = CommHub::new(n);
+        let mut handles = Vec::new();
+        for r in 0..n {
+            let comm = hub.communicator(r);
+            let f = f.clone();
+            handles.push(std::thread::spawn(move || f(comm)));
+        }
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    }
+
+    #[test]
+    fn all_reduce_equals_sequential_sum() {
+        for n in [1, 2, 3, 4, 7] {
+            let results = run_workers(n, move |comm| {
+                let r = comm.rank();
+                let mut a = NdArray::from_vec(&[3], vec![r as f32, 1.0, (r * r) as f32]);
+                comm.all_reduce(std::slice::from_mut(&mut a), false);
+                a
+            });
+            let expect_0: f32 = (0..n).map(|r| r as f32).sum();
+            let expect_2: f32 = (0..n).map(|r| (r * r) as f32).sum();
+            for a in &results {
+                assert_eq!(a.data(), &[expect_0, n as f32, expect_2], "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn all_reduce_division_averages() {
+        let results = run_workers(4, |comm| {
+            let mut a = NdArray::full(&[2], comm.rank() as f32);
+            comm.all_reduce(std::slice::from_mut(&mut a), true);
+            a
+        });
+        for a in &results {
+            assert_eq!(a.data(), &[1.5, 1.5]); // (0+1+2+3)/4
+        }
+    }
+
+    #[test]
+    fn all_reduce_multiple_arrays_packed() {
+        let results = run_workers(3, |comm| {
+            let mut arrays =
+                vec![NdArray::full(&[2], 1.0), NdArray::full(&[3], comm.rank() as f32)];
+            comm.all_reduce(&mut arrays, false);
+            arrays
+        });
+        for arrays in &results {
+            assert_eq!(arrays[0].data(), &[3.0, 3.0]);
+            assert_eq!(arrays[1].data(), &[3.0, 3.0, 3.0]);
+        }
+    }
+
+    #[test]
+    fn repeated_collectives_do_not_cross_talk() {
+        let results = run_workers(3, |comm| {
+            let mut out = Vec::new();
+            for round in 0..5 {
+                let mut a = NdArray::full(&[1], (comm.rank() + round) as f32);
+                comm.all_reduce(std::slice::from_mut(&mut a), false);
+                out.push(a.item());
+            }
+            out
+        });
+        for r in &results {
+            assert_eq!(r, &[3., 6., 9., 12., 15.]);
+        }
+    }
+
+    #[test]
+    fn bcast_syncs_initial_weights() {
+        let results = run_workers(4, |comm| {
+            let mut a = if comm.rank() == 0 {
+                NdArray::from_slice(&[3], &[7., 8., 9.])
+            } else {
+                NdArray::zeros(&[3])
+            };
+            comm.bcast(std::slice::from_mut(&mut a));
+            a
+        });
+        for a in &results {
+            assert_eq!(a.data(), &[7., 8., 9.]);
+        }
+    }
+
+    #[test]
+    fn all_gather_scalar_collects_by_rank() {
+        let results = run_workers(5, |comm| comm.all_gather_scalar((comm.rank() * 10) as f32));
+        for g in &results {
+            assert_eq!(g, &[0., 10., 20., 30., 40.]);
+        }
+    }
+
+    #[test]
+    fn all_reduce_is_deterministic_property() {
+        prop::check(
+            77,
+            8,
+            |rng: &mut Rng| {
+                let n = 2 + rng.below(4);
+                let len = 1 + rng.below(16);
+                let data: Vec<Vec<f32>> =
+                    (0..n).map(|_| (0..len).map(|_| rng.normal()).collect()).collect();
+                (n, len, data)
+            },
+            |(n, len, data)| {
+                let (n, len) = (*n, *len);
+                let run = {
+                    let data = data.clone();
+                    move || {
+                        let data = data.clone();
+                        run_workers(n, move |comm| {
+                            let mut a = NdArray::from_vec(&[len], data[comm.rank()].clone());
+                            comm.all_reduce(std::slice::from_mut(&mut a), true);
+                            a
+                        })
+                    }
+                };
+                let r1 = run();
+                let r2 = run();
+                for (a, b) in r1.iter().zip(&r2) {
+                    if a.data() != b.data() {
+                        return Err("nondeterministic all_reduce".into());
+                    }
+                }
+                for a in &r1[1..] {
+                    if a.data() != r1[0].data() {
+                        return Err("ranks disagree".into());
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "already taken")]
+    fn communicator_single_use_per_rank() {
+        let mut hub = CommHub::new(2);
+        let _a = hub.communicator(0);
+        let _b = hub.communicator(0);
+    }
+}

@@ -1,0 +1,21 @@
+//! Data-parallel distributed training (paper §2.3, Listing 3).
+//!
+//! The paper uses NCCL/MPI across GPUs; here each *simulated device*
+//! is an OS thread with its own graph/parameters/executable, and the
+//! communicator provides the same collective surface:
+//!
+//! ```text
+//! comm = C.MultiProcessDataParalellCommunicator(ctx); comm.init()
+//! ...
+//! loss.backward(clear_buffer=True)
+//! comm.all_reduce(params)
+//! ```
+//!
+//! Collectives are implemented ring-style over channels with a
+//! deterministic reduction order, so `all_reduce` is exactly
+//! reproducible and provably equal to the sequential sum (see the
+//! property tests).
+
+pub mod collective;
+
+pub use collective::{CommHub, Communicator};

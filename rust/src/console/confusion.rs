@@ -1,0 +1,126 @@
+//! Confusion matrix — "for a classification task, it displays a
+//! confusion matrix" (§5.1).
+
+use crate::tensor::NdArray;
+
+/// Row = true class, column = predicted class.
+#[derive(Debug, Clone)]
+pub struct ConfusionMatrix {
+    pub n: usize,
+    counts: Vec<usize>,
+}
+
+impl ConfusionMatrix {
+    pub fn new(n_classes: usize) -> Self {
+        ConfusionMatrix { n: n_classes, counts: vec![0; n_classes * n_classes] }
+    }
+
+    pub fn record(&mut self, truth: usize, pred: usize) {
+        assert!(truth < self.n && pred < self.n);
+        self.counts[truth * self.n + pred] += 1;
+    }
+
+    /// Record a batch from logits `[B, C]` and labels `[B]`.
+    pub fn record_batch(&mut self, logits: &NdArray, labels: &NdArray) {
+        let b = logits.dims()[0];
+        let c = logits.dims()[1];
+        assert_eq!(c, self.n);
+        for i in 0..b {
+            let row = &logits.data()[i * c..(i + 1) * c];
+            let pred = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(j, _)| j)
+                .unwrap();
+            self.record(labels.data()[i] as usize, pred);
+        }
+    }
+
+    pub fn count(&self, truth: usize, pred: usize) -> usize {
+        self.counts[truth * self.n + pred]
+    }
+
+    pub fn total(&self) -> usize {
+        self.counts.iter().sum()
+    }
+
+    pub fn accuracy(&self) -> f32 {
+        let correct: usize = (0..self.n).map(|i| self.count(i, i)).sum();
+        correct as f32 / self.total().max(1) as f32
+    }
+
+    /// Per-class recall (diagonal / row sum).
+    pub fn recall(&self, class: usize) -> f32 {
+        let row: usize = (0..self.n).map(|j| self.count(class, j)).sum();
+        self.count(class, class) as f32 / row.max(1) as f32
+    }
+
+    /// Per-class precision (diagonal / column sum).
+    pub fn precision(&self, class: usize) -> f32 {
+        let col: usize = (0..self.n).map(|i| self.count(i, class)).sum();
+        self.count(class, class) as f32 / col.max(1) as f32
+    }
+
+    /// ASCII rendering (the Console's matrix view).
+    pub fn render(&self) -> String {
+        let mut s = String::from("true\\pred");
+        for j in 0..self.n {
+            s.push_str(&format!("{j:>6}"));
+        }
+        s.push_str("  recall\n");
+        for i in 0..self.n {
+            s.push_str(&format!("{i:>9}"));
+            for j in 0..self.n {
+                s.push_str(&format!("{:>6}", self.count(i, j)));
+            }
+            s.push_str(&format!("  {:.2}\n", self.recall(i)));
+        }
+        s.push_str(&format!("accuracy: {:.3} ({} samples)\n", self.accuracy(), self.total()));
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_and_metrics() {
+        let mut m = ConfusionMatrix::new(3);
+        // class 0: 2 right, 1 confused as 1
+        m.record(0, 0);
+        m.record(0, 0);
+        m.record(0, 1);
+        // class 1: 1 right
+        m.record(1, 1);
+        // class 2: all wrong
+        m.record(2, 0);
+        assert_eq!(m.total(), 5);
+        assert!((m.accuracy() - 0.6).abs() < 1e-6);
+        assert!((m.recall(0) - 2.0 / 3.0).abs() < 1e-6);
+        assert!((m.precision(1) - 0.5).abs() < 1e-6);
+        assert_eq!(m.recall(2), 0.0);
+    }
+
+    #[test]
+    fn record_batch_from_logits() {
+        let mut m = ConfusionMatrix::new(2);
+        let logits = NdArray::from_slice(&[3, 2], &[2.0, 1.0, 0.0, 5.0, 3.0, -1.0]);
+        let labels = NdArray::from_slice(&[3], &[0.0, 1.0, 1.0]);
+        m.record_batch(&logits, &labels);
+        assert_eq!(m.count(0, 0), 1); // correct
+        assert_eq!(m.count(1, 1), 1); // correct
+        assert_eq!(m.count(1, 0), 1); // third sample: pred 0, true 1
+    }
+
+    #[test]
+    fn render_contains_accuracy() {
+        let mut m = ConfusionMatrix::new(2);
+        m.record(0, 0);
+        m.record(1, 0);
+        let r = m.render();
+        assert!(r.contains("accuracy: 0.500"));
+        assert!(r.contains("recall"));
+    }
+}

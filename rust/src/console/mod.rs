@@ -1,0 +1,52 @@
+//! Headless Neural Network Console (paper §5.1): trial records with
+//! automatic bookkeeping and comparison, confusion matrices, parameter
+//! / multiply-add footprinting, and automatic structure search — every
+//! Console capability that isn't pixels.
+
+pub mod confusion;
+pub mod search;
+pub mod trials;
+pub mod xai;
+
+pub use confusion::ConfusionMatrix;
+pub use search::{structure_search, Candidate, SearchSpace};
+pub use trials::{TrialRecord, TrialStore};
+pub use xai::{grad_cam, occlusion_saliency, render_heatmap};
+
+use crate::models::{build_model, Gb};
+use crate::parametric as PF;
+
+/// Parameter + multiply-add footprint of a zoo model — the Console's
+/// real-time "number of parameters and multiply-adds" readout.
+pub fn footprint(model: &str, input_dims: &[usize], classes: usize) -> (usize, u64) {
+    PF::clear_parameters();
+    PF::seed_parameter_rng(0);
+    let mut g = Gb::new(model, false);
+    let dims: Vec<usize> = std::iter::once(1).chain(input_dims.iter().copied()).collect();
+    let x = g.input("x", &dims);
+    let _ = build_model(&mut g, model, &x, classes);
+    let params: usize = PF::get_parameters().iter().map(|(_, v)| v.size()).sum();
+    let macs = g.macs();
+    PF::clear_parameters();
+    (params, macs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn footprint_returns_nonzero() {
+        let (params, macs) = footprint("lenet", &[1, 28, 28], 10);
+        assert!(params > 10_000);
+        assert!(macs > 100_000);
+    }
+
+    #[test]
+    fn footprint_scales_with_model() {
+        let (p18, m18) = footprint("resnet18", &[3, 16, 16], 10);
+        let (p50, m50) = footprint("resnet50", &[3, 16, 16], 10);
+        assert!(p50 > p18);
+        assert!(m50 > m18);
+    }
+}

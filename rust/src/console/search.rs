@@ -1,0 +1,235 @@
+//! Automatic structure search (§5.1): "searches for optimal neural
+//! network structure automatically by repeating experiments with
+//! varying network structures. Multiple network structures are
+//! evaluated, simultaneously optimizing for accuracy and computational
+//! complexity. Users can select from multiple optimization results."
+//!
+//! Implemented as an evolutionary search over MLP/CNN layer plans with
+//! a (val-error, MACs) bi-objective; the result is the Pareto front.
+
+use crate::context::{Backend, Context, TypeConfig};
+use crate::data::DataSource;
+use crate::functions as F;
+use crate::graph::Variable;
+use crate::models::Gb;
+use crate::parametric as PF;
+use crate::solvers::Solver;
+use crate::tensor::Rng;
+
+/// Search space: bounds on the layer plan.
+#[derive(Debug, Clone)]
+pub struct SearchSpace {
+    pub max_layers: usize,
+    pub widths: Vec<usize>,
+    /// Budget per candidate (training steps).
+    pub steps: usize,
+    pub lr: f32,
+}
+
+impl Default for SearchSpace {
+    fn default() -> Self {
+        SearchSpace { max_layers: 3, widths: vec![16, 32, 64, 128], steps: 40, lr: 0.1 }
+    }
+}
+
+/// One evaluated structure.
+#[derive(Debug, Clone)]
+pub struct Candidate {
+    /// Hidden-layer widths (the genome).
+    pub plan: Vec<usize>,
+    pub val_error: f32,
+    pub macs: u64,
+    pub n_params: usize,
+}
+
+impl Candidate {
+    /// True if `other` is at least as good on both objectives and
+    /// strictly better on one.
+    fn dominated_by(&self, other: &Candidate) -> bool {
+        (other.val_error <= self.val_error && other.macs <= self.macs)
+            && (other.val_error < self.val_error || other.macs < self.macs)
+    }
+}
+
+fn build_and_train(plan: &[usize], data: &dyn DataSource, space: &SearchSpace, seed: u64) -> Candidate {
+    Context::set_default(Context::new(Backend::Cpu, TypeConfig::Float));
+    PF::clear_parameters();
+    PF::seed_parameter_rng(seed);
+    let batch0 = data.batch(0, 0, 1);
+    let bs = batch0.0.dims()[0];
+    let feat: usize = data.input_dims().iter().product();
+
+    let mut g = Gb::new("search_mlp", true);
+    let x = g.input("x", &[bs, feat]);
+    let mut h = x.clone();
+    for (i, &w) in plan.iter().enumerate() {
+        h = g.affine(&h, w, &format!("fc{i}"));
+        h = g.relu(&h);
+    }
+    let logits = g.affine(&h, data.classes(), "out");
+    let macs = g.macs();
+    let y = Variable::new(&[bs, 1], false);
+    let loss = F::mean_all(&F::softmax_cross_entropy(&logits.var, &y));
+
+    let params = PF::get_parameters();
+    let n_params = params.iter().map(|(_, v)| v.size()).sum();
+    let mut solver = Solver::momentum(space.lr, 0.9);
+    solver.set_parameters(&params);
+    for step in 0..space.steps {
+        let (bx, by) = data.batch(step, 0, 1);
+        x.var.set_data(bx.reshape(&[bs, feat]));
+        y.set_data(by.reshape(&[bs, 1]));
+        loss.forward();
+        solver.zero_grad();
+        loss.backward();
+        solver.update();
+    }
+    // validation error
+    let classes = data.classes();
+    let mut wrong = 0;
+    let mut total = 0;
+    for i in 0..3 {
+        let (bx, by) = data.val_batch(i);
+        x.var.set_data(bx.reshape(&[bs, feat]));
+        logits.var.forward();
+        let out = logits.var.data();
+        for b in 0..bs {
+            let row = &out.data()[b * classes..(b + 1) * classes];
+            let pred = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(j, _)| j)
+                .unwrap();
+            if pred != by.data()[b] as usize {
+                wrong += 1;
+            }
+            total += 1;
+        }
+    }
+    Candidate { plan: plan.to_vec(), val_error: wrong as f32 / total as f32, macs, n_params }
+}
+
+fn random_plan(rng: &mut Rng, space: &SearchSpace) -> Vec<usize> {
+    let n = 1 + rng.below(space.max_layers);
+    (0..n).map(|_| space.widths[rng.below(space.widths.len())]).collect()
+}
+
+fn mutate(rng: &mut Rng, plan: &[usize], space: &SearchSpace) -> Vec<usize> {
+    let mut p = plan.to_vec();
+    match rng.below(3) {
+        0 if p.len() < space.max_layers => {
+            p.insert(rng.below(p.len() + 1), space.widths[rng.below(space.widths.len())]);
+        }
+        1 if p.len() > 1 => {
+            p.remove(rng.below(p.len()));
+        }
+        _ => {
+            let i = rng.below(p.len());
+            p[i] = space.widths[rng.below(space.widths.len())];
+        }
+    }
+    p
+}
+
+/// Evolutionary bi-objective structure search. Returns the Pareto
+/// front sorted by val_error (the "multiple optimization results" the
+/// user selects from).
+pub fn structure_search(
+    data: &dyn DataSource,
+    space: &SearchSpace,
+    generations: usize,
+    population: usize,
+    seed: u64,
+) -> Vec<Candidate> {
+    let mut rng = Rng::new(seed);
+    let mut evaluated: Vec<Candidate> = (0..population)
+        .map(|i| build_and_train(&random_plan(&mut rng, space), data, space, seed + i as u64))
+        .collect();
+    for gen in 0..generations {
+        // parents: current Pareto front (elitist)
+        let front = pareto_front(&evaluated);
+        let mut children = Vec::new();
+        for i in 0..population {
+            let parent = &front[rng.below(front.len())];
+            let plan = mutate(&mut rng, &parent.plan, space);
+            // skip exact duplicates
+            if evaluated.iter().any(|c| c.plan == plan) {
+                continue;
+            }
+            children.push(build_and_train(&plan, data, space, seed + (gen * 100 + i) as u64));
+        }
+        evaluated.extend(children);
+    }
+    let mut front = pareto_front(&evaluated);
+    front.sort_by(|a, b| a.val_error.partial_cmp(&b.val_error).unwrap());
+    front
+}
+
+fn pareto_front(cands: &[Candidate]) -> Vec<Candidate> {
+    let mut front: Vec<Candidate> = Vec::new();
+    for c in cands {
+        if cands.iter().any(|o| c.dominated_by(o)) {
+            continue;
+        }
+        // dedupe identical plans (the same genome can be sampled twice)
+        if !front.iter().any(|f| f.plan == c.plan) {
+            front.push(c.clone());
+        }
+    }
+    front
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SyntheticImages;
+
+    #[test]
+    fn pareto_front_filters_dominated() {
+        let mk = |p: usize, e: f32, m: u64| Candidate {
+            plan: vec![p],
+            val_error: e,
+            macs: m,
+            n_params: 0,
+        };
+        let cands =
+            vec![mk(1, 0.1, 100), mk(2, 0.2, 50), mk(3, 0.3, 200), mk(4, 0.15, 150)];
+        let front = pareto_front(&cands);
+        assert_eq!(front.len(), 2); // (0.1,100) and (0.2,50); others dominated
+    }
+
+    #[test]
+    fn pareto_front_dedupes_identical_plans() {
+        let mk = |e: f32, m: u64| Candidate { plan: vec![16], val_error: e, macs: m, n_params: 0 };
+        let front = pareto_front(&[mk(0.1, 100), mk(0.1, 100)]);
+        assert_eq!(front.len(), 1);
+    }
+
+    #[test]
+    fn mutation_respects_bounds() {
+        let space = SearchSpace::default();
+        let mut rng = Rng::new(1);
+        let mut plan = vec![32];
+        for _ in 0..100 {
+            plan = mutate(&mut rng, &plan, &space);
+            assert!(!plan.is_empty() && plan.len() <= space.max_layers);
+            assert!(plan.iter().all(|w| space.widths.contains(w)));
+        }
+    }
+
+    #[test]
+    fn search_finds_working_structures() {
+        let data = SyntheticImages::new(4, 1, 8, 16, 21);
+        let space = SearchSpace { steps: 30, widths: vec![16, 32], max_layers: 2, lr: 0.1 };
+        let front = structure_search(&data, &space, 1, 3, 9);
+        assert!(!front.is_empty());
+        // best candidate beats chance (0.75 error) on separable data
+        assert!(front[0].val_error < 0.6, "search best err {}", front[0].val_error);
+        // front is sorted by error and anti-sorted by macs (Pareto)
+        for w in front.windows(2) {
+            assert!(w[0].val_error <= w[1].val_error);
+            assert!(w[0].macs >= w[1].macs, "not a Pareto front");
+        }
+    }
+}

@@ -1,0 +1,241 @@
+//! Trial records — "all trials are recorded automatically, it is easy
+//! to analyze the performance and revert to old records ... results of
+//! experiments are listed and can be compared to past trials" (§5.1).
+
+use std::path::{Path, PathBuf};
+
+use crate::trainer::TrainReport;
+use crate::utils::json::Json;
+
+/// One recorded experiment.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrialRecord {
+    pub id: usize,
+    pub model: String,
+    pub backend: String,
+    pub steps: usize,
+    pub final_loss: f32,
+    pub val_error: f32,
+    pub wall_secs: f64,
+    pub n_params: usize,
+    pub macs: u64,
+    /// Full loss curve (step, value).
+    pub curve: Vec<(usize, f32)>,
+}
+
+impl TrialRecord {
+    pub fn from_report(id: usize, r: &TrainReport) -> Self {
+        TrialRecord {
+            id,
+            model: r.model.clone(),
+            backend: r.backend.to_string(),
+            steps: r.steps,
+            final_loss: r.final_loss(),
+            val_error: r.val_error,
+            wall_secs: r.wall_secs,
+            n_params: r.n_params,
+            macs: r.macs,
+            curve: r.losses.points().to_vec(),
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", Json::num(self.id as f64)),
+            ("model", Json::str(self.model.clone())),
+            ("backend", Json::str(self.backend.clone())),
+            ("steps", Json::num(self.steps as f64)),
+            ("final_loss", Json::num(self.final_loss as f64)),
+            ("val_error", Json::num(self.val_error as f64)),
+            ("wall_secs", Json::num(self.wall_secs)),
+            ("n_params", Json::num(self.n_params as f64)),
+            ("macs", Json::num(self.macs as f64)),
+            (
+                "curve",
+                Json::Arr(
+                    self.curve
+                        .iter()
+                        .map(|&(s, v)| {
+                            Json::Arr(vec![Json::num(s as f64), Json::num(v as f64)])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Option<Self> {
+        Some(TrialRecord {
+            id: j.get("id").as_usize()?,
+            model: j.get("model").as_str()?.to_string(),
+            backend: j.get("backend").as_str().unwrap_or("").to_string(),
+            steps: j.get("steps").as_usize()?,
+            final_loss: j.get("final_loss").as_f64()? as f32,
+            val_error: j.get("val_error").as_f64()? as f32,
+            wall_secs: j.get("wall_secs").as_f64()?,
+            n_params: j.get("n_params").as_usize()?,
+            macs: j.get("macs").as_f64()? as u64,
+            curve: j
+                .get("curve")
+                .as_arr()?
+                .iter()
+                .filter_map(|p| {
+                    let a = p.as_arr()?;
+                    Some((a[0].as_usize()?, a[1].as_f64()? as f32))
+                })
+                .collect(),
+        })
+    }
+}
+
+/// Directory-backed trial store (one JSON file per trial).
+pub struct TrialStore {
+    dir: PathBuf,
+}
+
+impl TrialStore {
+    pub fn open(dir: &Path) -> std::io::Result<Self> {
+        std::fs::create_dir_all(dir)?;
+        Ok(TrialStore { dir: dir.to_path_buf() })
+    }
+
+    fn next_id(&self) -> usize {
+        self.list().map(|t| t.last().map(|r| r.id + 1).unwrap_or(0)).unwrap_or(0)
+    }
+
+    /// Record a training report; returns the assigned trial id.
+    pub fn record(&self, report: &TrainReport) -> std::io::Result<usize> {
+        let id = self.next_id();
+        let rec = TrialRecord::from_report(id, report);
+        std::fs::write(
+            self.dir.join(format!("trial_{id:04}.json")),
+            rec.to_json().to_string_pretty(),
+        )?;
+        Ok(id)
+    }
+
+    /// All trials sorted by id.
+    pub fn list(&self) -> std::io::Result<Vec<TrialRecord>> {
+        let mut out = Vec::new();
+        for entry in std::fs::read_dir(&self.dir)? {
+            let path = entry?.path();
+            if path.extension().map(|e| e == "json").unwrap_or(false) {
+                if let Ok(text) = std::fs::read_to_string(&path) {
+                    if let Ok(j) = Json::parse(&text) {
+                        if let Some(rec) = TrialRecord::from_json(&j) {
+                            out.push(rec);
+                        }
+                    }
+                }
+            }
+        }
+        out.sort_by_key(|r| r.id);
+        Ok(out)
+    }
+
+    pub fn get(&self, id: usize) -> std::io::Result<Option<TrialRecord>> {
+        Ok(self.list()?.into_iter().find(|r| r.id == id))
+    }
+
+    /// Comparison table across all trials (the Console list view).
+    pub fn comparison_table(&self) -> std::io::Result<String> {
+        let trials = self.list()?;
+        let mut s = format!(
+            "{:>4} {:<22} {:<16} {:>7} {:>10} {:>9} {:>9} {:>12} {:>12}\n",
+            "id", "model", "backend", "steps", "loss", "val_err", "time_s", "params", "MACs"
+        );
+        for t in &trials {
+            s.push_str(&format!(
+                "{:>4} {:<22} {:<16} {:>7} {:>10.4} {:>9.3} {:>9.2} {:>12} {:>12}\n",
+                t.id, t.model, t.backend, t.steps, t.final_loss, t.val_error, t.wall_secs,
+                t.n_params, t.macs
+            ));
+        }
+        Ok(s)
+    }
+
+    /// Best trial by validation error (revert-to-best workflow).
+    pub fn best(&self) -> std::io::Result<Option<TrialRecord>> {
+        Ok(self
+            .list()?
+            .into_iter()
+            .filter(|t| t.val_error.is_finite())
+            .min_by(|a, b| a.val_error.partial_cmp(&b.val_error).unwrap()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::monitor::MonitorSeries;
+
+    fn fake_report(model: &str, val: f32) -> TrainReport {
+        let mut losses = MonitorSeries::new("loss");
+        for i in 0..5 {
+            losses.add(i, 2.0 - i as f32 * 0.1);
+        }
+        TrainReport {
+            model: model.into(),
+            losses,
+            val_error: val,
+            wall_secs: 1.5,
+            steps: 5,
+            n_params: 1000,
+            macs: 50_000,
+            backend: "cpu:float",
+            overflow_skips: 0,
+        }
+    }
+
+    fn store() -> (TrialStore, PathBuf) {
+        let dir = std::env::temp_dir().join(format!(
+            "nnl_trials_{}_{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        std::fs::remove_dir_all(&dir).ok();
+        (TrialStore::open(&dir).unwrap(), dir)
+    }
+
+    #[test]
+    fn record_list_roundtrip() {
+        let (s, dir) = store();
+        let id0 = s.record(&fake_report("mlp", 0.3)).unwrap();
+        let id1 = s.record(&fake_report("lenet", 0.2)).unwrap();
+        assert_eq!((id0, id1), (0, 1));
+        let trials = s.list().unwrap();
+        assert_eq!(trials.len(), 2);
+        assert_eq!(trials[0].model, "mlp");
+        assert_eq!(trials[1].curve.len(), 5);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn best_picks_lowest_val_error() {
+        let (s, dir) = store();
+        s.record(&fake_report("a", 0.5)).unwrap();
+        s.record(&fake_report("b", 0.1)).unwrap();
+        s.record(&fake_report("c", 0.3)).unwrap();
+        assert_eq!(s.best().unwrap().unwrap().model, "b");
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn comparison_table_lists_all() {
+        let (s, dir) = store();
+        s.record(&fake_report("resnet18", 0.25)).unwrap();
+        let table = s.comparison_table().unwrap();
+        assert!(table.contains("resnet18"));
+        assert!(table.contains("val_err"));
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn get_by_id() {
+        let (s, dir) = store();
+        s.record(&fake_report("x", 0.5)).unwrap();
+        assert!(s.get(0).unwrap().is_some());
+        assert!(s.get(99).unwrap().is_none());
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

@@ -1,0 +1,197 @@
+//! Explainable-AI plugins (paper §5.1: "we provide a variety of
+//! XAI-related plugins, including Grad-CAM, LIME, and SGD influence").
+//!
+//! - [`grad_cam`] — Grad-CAM (Selvaraju et al.): class-gradient-
+//!   weighted activation maps, computed directly on the tape engine;
+//! - [`occlusion_saliency`] — LIME-style local perturbation
+//!   attribution: class-score drop per occluded patch.
+
+use crate::functions as F;
+use crate::graph::Variable;
+use crate::tensor::NdArray;
+
+/// Grad-CAM over a chosen feature map.
+///
+/// `logits` must be reachable from `feature` (both from the same
+/// built graph); the heatmap is `relu(sum_c alpha_c * A_c)` with
+/// `alpha_c` the spatially-pooled gradient of the class logit wrt
+/// channel `c`. Returns one `[H, W]` map per batch element, each
+/// normalized to [0, 1].
+pub fn grad_cam(feature: &Variable, logits: &Variable, class: usize) -> Vec<NdArray> {
+    let dims = feature.dims();
+    assert_eq!(dims.len(), 4, "grad_cam expects a NCHW feature map");
+    let (n, c, h, w) = (dims[0], dims[1], dims[2], dims[3]);
+    // gradient of the summed class logit wrt the feature map
+    let class_score = F::mean_all(&F::slice_axis(logits, 1, class, class + 1));
+    feature.zero_grad();
+    class_score.backward();
+    let grads = feature.grad();
+    let acts = feature.data();
+    let mut out = Vec::with_capacity(n);
+    for b in 0..n {
+        // alpha_c = spatial mean of dScore/dA_c
+        let mut alpha = vec![0.0f32; c];
+        for ci in 0..c {
+            let base = (b * c + ci) * h * w;
+            alpha[ci] =
+                grads.data()[base..base + h * w].iter().sum::<f32>() / (h * w) as f32;
+        }
+        // cam = relu(sum_c alpha_c A_c)
+        let mut cam = vec![0.0f32; h * w];
+        for ci in 0..c {
+            let base = (b * c + ci) * h * w;
+            for i in 0..h * w {
+                cam[i] += alpha[ci] * acts.data()[base + i];
+            }
+        }
+        let mut max = 0.0f32;
+        for v in &mut cam {
+            *v = v.max(0.0);
+            max = max.max(*v);
+        }
+        if max > 0.0 {
+            for v in &mut cam {
+                *v /= max;
+            }
+        }
+        out.push(NdArray::from_vec(&[h, w], cam));
+    }
+    out
+}
+
+/// Occlusion saliency: slide a `patch`-sized zero window over the
+/// input and record the class-probability drop — a model-agnostic
+/// local explanation in the LIME family. `forward` maps a batch-1
+/// NCHW input to logits `[1, classes]`. Returns an `[H, W]` map
+/// (larger = more influential).
+pub fn occlusion_saliency(
+    input: &NdArray,
+    class: usize,
+    patch: usize,
+    stride: usize,
+    forward: impl Fn(&NdArray) -> NdArray,
+) -> NdArray {
+    assert_eq!(input.dims()[0], 1, "occlusion_saliency expects batch 1");
+    let (c, h, w) = (input.dims()[1], input.dims()[2], input.dims()[3]);
+    let base_probs = softmax_row(&forward(input), class);
+    let mut heat = NdArray::zeros(&[h, w]);
+    let mut counts = vec![0.0f32; h * w];
+    let mut y0 = 0;
+    while y0 < h {
+        let mut x0 = 0;
+        while x0 < w {
+            let mut occluded = input.clone();
+            for ci in 0..c {
+                for y in y0..(y0 + patch).min(h) {
+                    for x in x0..(x0 + patch).min(w) {
+                        occluded.data_mut()[(ci * h + y) * w + x] = 0.0;
+                    }
+                }
+            }
+            let drop = (base_probs - softmax_row(&forward(&occluded), class)).max(0.0);
+            for y in y0..(y0 + patch).min(h) {
+                for x in x0..(x0 + patch).min(w) {
+                    heat.data_mut()[y * w + x] += drop;
+                    counts[y * w + x] += 1.0;
+                }
+            }
+            x0 += stride;
+        }
+        y0 += stride;
+    }
+    for (v, cnt) in heat.data_mut().iter_mut().zip(&counts) {
+        if *cnt > 0.0 {
+            *v /= cnt;
+        }
+    }
+    heat
+}
+
+fn softmax_row(logits: &NdArray, class: usize) -> f32 {
+    let row = logits.data();
+    let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let exps: Vec<f32> = row.iter().map(|v| (v - max).exp()).collect();
+    exps[class] / exps.iter().sum::<f32>()
+}
+
+/// Render a heatmap as ASCII (the Console's visual, headless).
+pub fn render_heatmap(map: &NdArray) -> String {
+    const RAMP: &[u8] = b" .:-=+*#%@";
+    let (h, w) = (map.dims()[0], map.dims()[1]);
+    let mut s = String::new();
+    for y in 0..h {
+        for x in 0..w {
+            let v = map.at(&[y, x]).clamp(0.0, 1.0);
+            let idx = ((v * (RAMP.len() - 1) as f32).round()) as usize;
+            s.push(RAMP[idx] as char);
+        }
+        s.push('\n');
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::Gb;
+    use crate::parametric as PF;
+    use crate::tensor::Rng;
+
+    /// Tiny conv net whose class-0 logit is literally the sum of the
+    /// top-left quadrant: attribution maps must light up there.
+    fn quadrant_model() -> (Variable, Variable, Variable) {
+        PF::clear_parameters();
+        PF::seed_parameter_rng(1);
+        let mut g = Gb::new("quad", false);
+        let x = g.input("x", &[1, 1, 8, 8]);
+        let feat = g.conv(&x, 4, (3, 3), (1, 1), (1, 1), "c1");
+        let feat = g.relu(&feat);
+        let logits = g.affine(&feat, 2, "head");
+        (x.var.clone(), feat.var.clone(), logits.var.clone())
+    }
+
+    #[test]
+    fn grad_cam_shape_and_range() {
+        let (x, feat, logits) = quadrant_model();
+        let mut rng = Rng::new(2);
+        x.set_data(rng.randn(&[1, 1, 8, 8], 1.0));
+        logits.forward();
+        let maps = grad_cam(&feat, &logits, 0);
+        assert_eq!(maps.len(), 1);
+        assert_eq!(maps[0].dims(), &[8, 8]);
+        assert!(maps[0].data().iter().all(|&v| (0.0..=1.0).contains(&v)));
+    }
+
+    #[test]
+    fn occlusion_finds_the_signal_region() {
+        // model: class prob = f(top-left 4x4 sum); occluding there
+        // must dominate the heatmap
+        let forward = |x: &NdArray| {
+            let mut s = 0.0;
+            for y in 0..4 {
+                for x2 in 0..4 {
+                    s += x.at(&[0, 0, y, x2]);
+                }
+            }
+            NdArray::from_slice(&[1, 2], &[s, 0.0])
+        };
+        let input = NdArray::ones(&[1, 1, 8, 8]);
+        let heat = occlusion_saliency(&input, 0, 2, 2, forward);
+        let tl: f32 = (0..4).flat_map(|y| (0..4).map(move |x| (y, x)))
+            .map(|(y, x)| heat.at(&[y, x]))
+            .sum();
+        let br: f32 = (4..8).flat_map(|y| (4..8).map(move |x| (y, x)))
+            .map(|(y, x)| heat.at(&[y, x]))
+            .sum();
+        assert!(tl > br * 5.0, "top-left {tl} vs bottom-right {br}");
+    }
+
+    #[test]
+    fn heatmap_renders_ascii() {
+        let mut m = NdArray::zeros(&[2, 3]);
+        m.set(&[0, 0], 1.0);
+        let r = render_heatmap(&m);
+        assert_eq!(r.lines().count(), 2);
+        assert!(r.starts_with('@'));
+    }
+}

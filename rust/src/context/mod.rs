@@ -1,0 +1,163 @@
+//! Extension context — the paper's one-line backend switch (§2.3,
+//! Listing 2):
+//!
+//! ```text
+//! nn.set_default_context(get_extension_context('cudnn'))
+//! ```
+//!
+//! becomes
+//!
+//! ```no_run
+//! # // no_run: doctest binaries bypass the workspace rpath to
+//! # // libxla_extension's bundled libstdc++ in this offline image
+//! use nnl::context::{Context, Backend, TypeConfig};
+//! Context::set_default(Context::new(Backend::Xla, TypeConfig::Half));
+//! ```
+//!
+//! Everything downstream (trainer, parametric initializers, runtime)
+//! reads the ambient context; no per-tensor device placement is ever
+//! written by the user — matching the paper's claim that "all
+//! Variables are automatically assigned to the chosen device".
+
+use std::cell::RefCell;
+
+/// Compute backend, the analogue of `'cpu' | 'cudnn'`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// Native Rust tape engine (dynamic graphs, flexible).
+    Cpu,
+    /// AOT-compiled XLA executables via PJRT (static graphs, fast).
+    Xla,
+}
+
+impl Backend {
+    pub fn name(self) -> &'static str {
+        match self {
+            Backend::Cpu => "cpu",
+            Backend::Xla => "xla",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Self> {
+        match s {
+            "cpu" | "cpu:float" => Some(Backend::Cpu),
+            "xla" | "cudnn" => Some(Backend::Xla), // accept the paper's name
+            _ => None,
+        }
+    }
+}
+
+/// Storage precision config, the analogue of `type_config='float'|'half'`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TypeConfig {
+    /// FP-32 everywhere.
+    Float,
+    /// Mixed precision: half storage/compute, f32 master weights +
+    /// updates (paper §3.3 / Fig. 3-left).
+    Half,
+}
+
+impl TypeConfig {
+    pub fn name(self) -> &'static str {
+        match self {
+            TypeConfig::Float => "float",
+            TypeConfig::Half => "half",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Self> {
+        match s {
+            "float" | "f32" => Some(TypeConfig::Float),
+            "half" | "bf16" | "f16" => Some(TypeConfig::Half),
+            _ => None,
+        }
+    }
+}
+
+/// The extension context.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Context {
+    pub backend: Backend,
+    pub type_config: TypeConfig,
+    /// Device ordinal (worker rank in data-parallel runs).
+    pub device_id: usize,
+}
+
+impl Context {
+    pub fn new(backend: Backend, type_config: TypeConfig) -> Self {
+        Context { backend, type_config, device_id: 0 }
+    }
+
+    pub fn with_device(mut self, device_id: usize) -> Self {
+        self.device_id = device_id;
+        self
+    }
+
+    /// `get_extension_context(name)` — parse "backend[:type_config]".
+    pub fn get_extension_context(spec: &str) -> Option<Self> {
+        let mut parts = spec.splitn(2, ':');
+        let backend = Backend::from_name(parts.next()?)?;
+        let type_config = match parts.next() {
+            Some(t) => TypeConfig::from_name(t)?,
+            None => TypeConfig::Float,
+        };
+        Some(Context::new(backend, type_config))
+    }
+
+    /// Set the thread-ambient default context (Listing 2).
+    pub fn set_default(ctx: Context) {
+        DEFAULT.with(|d| *d.borrow_mut() = ctx);
+    }
+
+    /// Read the thread-ambient default context.
+    pub fn default() -> Context {
+        DEFAULT.with(|d| *d.borrow())
+    }
+}
+
+thread_local! {
+    static DEFAULT: RefCell<Context> =
+        const { RefCell::new(Context { backend: Backend::Cpu, type_config: TypeConfig::Float, device_id: 0 }) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_cpu_float() {
+        let c = Context::default();
+        assert_eq!(c.backend, Backend::Cpu);
+        assert_eq!(c.type_config, TypeConfig::Float);
+    }
+
+    #[test]
+    fn one_line_switch() {
+        Context::set_default(Context::get_extension_context("xla:half").unwrap());
+        let c = Context::default();
+        assert_eq!(c.backend, Backend::Xla);
+        assert_eq!(c.type_config, TypeConfig::Half);
+        Context::set_default(Context::new(Backend::Cpu, TypeConfig::Float));
+    }
+
+    #[test]
+    fn accepts_paper_spelling() {
+        // the paper's Listing 2 uses 'cudnn'; we map it to the fast backend
+        let c = Context::get_extension_context("cudnn").unwrap();
+        assert_eq!(c.backend, Backend::Xla);
+    }
+
+    #[test]
+    fn rejects_unknown() {
+        assert!(Context::get_extension_context("tpu").is_none());
+        assert!(Context::get_extension_context("cpu:int8").is_none());
+    }
+
+    #[test]
+    fn thread_local_isolation() {
+        Context::set_default(Context::new(Backend::Xla, TypeConfig::Half));
+        let handle = std::thread::spawn(|| Context::default().backend);
+        assert_eq!(handle.join().unwrap(), Backend::Cpu); // fresh thread = default
+        Context::set_default(Context::new(Backend::Cpu, TypeConfig::Float));
+    }
+}

@@ -1,0 +1,188 @@
+//! NNP ⇄ frozen graph: a single self-contained inference file with all
+//! parameters inlined as graph constants — the TensorFlow frozen-graph
+//! analogue of §3 ("NNP to Tensorflow frozen graph", and the reverse
+//! "checkpoint or frozen graph to NNP").
+//!
+//! Freezing also performs the classic deployment simplifications:
+//! dropout layers are removed and identities folded, so the frozen
+//! artifact is inference-only by construction.
+
+use std::collections::HashMap;
+
+use crate::nnp::ir::{NetworkDef, Op};
+use crate::nnp::params;
+use crate::tensor::NdArray;
+use crate::utils::json::Json;
+
+const MAGIC: &[u8; 4] = b"FRZ1";
+
+/// A frozen graph: simplified network + inlined constants.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FrozenGraph {
+    pub net: NetworkDef,
+    pub constants: Vec<(String, NdArray)>,
+}
+
+/// Freeze: inline the needed parameters and strip train-only layers.
+pub fn freeze(net: &NetworkDef, param_map: &HashMap<String, NdArray>) -> Result<FrozenGraph, String> {
+    let mut simplified = net.clone();
+    // remove dropout/identity by rewiring their outputs to their inputs
+    let mut rename: HashMap<String, String> = HashMap::new();
+    simplified.layers.retain(|l| match l.op {
+        Op::Dropout { .. } | Op::Identity => {
+            rename.insert(l.outputs[0].clone(), l.inputs[0].clone());
+            false
+        }
+        _ => true,
+    });
+    let resolve = |mut name: String, rename: &HashMap<String, String>| -> String {
+        while let Some(r) = rename.get(&name) {
+            name = r.clone();
+        }
+        name
+    };
+    for l in &mut simplified.layers {
+        for i in &mut l.inputs {
+            *i = resolve(i.clone(), &rename);
+        }
+    }
+    for o in &mut simplified.outputs {
+        *o = resolve(o.clone(), &rename);
+    }
+    // inline constants
+    let mut constants = Vec::new();
+    for p in simplified.param_names() {
+        let a = param_map.get(&p).ok_or(format!("freeze: missing parameter '{p}'"))?;
+        constants.push((p, a.clone()));
+    }
+    simplified.validate()?;
+    Ok(FrozenGraph { net: simplified, constants })
+}
+
+/// Un-freeze back to NNP pieces (network + parameter list).
+pub fn unfreeze(fg: &FrozenGraph) -> (NetworkDef, Vec<(String, NdArray)>) {
+    (fg.net.clone(), fg.constants.clone())
+}
+
+/// Run a frozen graph.
+pub fn run(
+    fg: &FrozenGraph,
+    inputs: &HashMap<String, NdArray>,
+) -> Result<Vec<NdArray>, String> {
+    let pm: HashMap<String, NdArray> = fg.constants.iter().cloned().collect();
+    crate::nnp::interpreter::run(&fg.net, inputs, &pm)
+}
+
+/// Serialize (`FRZ1 | u64 header_len | network JSON | param blob`).
+pub fn save_bytes(fg: &FrozenGraph) -> Vec<u8> {
+    let header = fg.net.to_json().to_string().into_bytes();
+    let mut out = Vec::new();
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&(header.len() as u64).to_le_bytes());
+    out.extend_from_slice(&header);
+    out.extend_from_slice(&params::save_params(&fg.constants));
+    out
+}
+
+/// Deserialize.
+pub fn load_bytes(bytes: &[u8]) -> Result<FrozenGraph, String> {
+    if bytes.len() < 12 || &bytes[0..4] != MAGIC {
+        return Err("not a frozen graph".into());
+    }
+    let hlen = u64::from_le_bytes(bytes[4..12].try_into().unwrap()) as usize;
+    if 12 + hlen > bytes.len() {
+        return Err("truncated frozen graph".into());
+    }
+    let net = NetworkDef::from_json(&Json::parse(
+        std::str::from_utf8(&bytes[12..12 + hlen]).map_err(|_| "bad header")?,
+    )?)?;
+    let constants = params::load_params(&bytes[12 + hlen..])?;
+    Ok(FrozenGraph { net, constants })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nnp::ir::{Layer, TensorDef};
+    use crate::nnp::tests::sample_nnp;
+
+    fn net_with_dropout() -> (NetworkDef, HashMap<String, NdArray>) {
+        let net = NetworkDef {
+            name: "d".into(),
+            inputs: vec![TensorDef { name: "x".into(), dims: vec![1, 3] }],
+            outputs: vec!["out".into()],
+            layers: vec![
+                Layer {
+                    name: "fc".into(),
+                    op: Op::Affine,
+                    inputs: vec!["x".into()],
+                    params: vec!["W".into()],
+                    outputs: vec!["h".into()],
+                },
+                Layer {
+                    name: "drop".into(),
+                    op: Op::Dropout { p: 0.5 },
+                    inputs: vec!["h".into()],
+                    params: vec![],
+                    outputs: vec!["hd".into()],
+                },
+                Layer {
+                    name: "act".into(),
+                    op: Op::ReLU,
+                    inputs: vec!["hd".into()],
+                    params: vec![],
+                    outputs: vec!["out".into()],
+                },
+            ],
+        };
+        let mut pm = HashMap::new();
+        pm.insert("W".to_string(), NdArray::arange(&[3, 2]));
+        (net, pm)
+    }
+
+    #[test]
+    fn freeze_strips_dropout() {
+        let (net, pm) = net_with_dropout();
+        let fg = freeze(&net, &pm).unwrap();
+        assert_eq!(fg.net.layers.len(), 2);
+        assert!(fg.net.layers.iter().all(|l| !matches!(l.op, Op::Dropout { .. })));
+        // the relu now reads the affine output directly
+        assert_eq!(fg.net.layers[1].inputs[0], "h");
+    }
+
+    #[test]
+    fn frozen_inference_matches_source() {
+        let (net, pm) = net_with_dropout();
+        let fg = freeze(&net, &pm).unwrap();
+        let mut inputs = HashMap::new();
+        inputs.insert("x".to_string(), NdArray::from_slice(&[1, 3], &[1., -1., 2.]));
+        let a = crate::nnp::interpreter::run(&net, &inputs, &pm).unwrap();
+        let b = run(&fg, &inputs).unwrap();
+        assert_eq!(a[0].data(), b[0].data());
+    }
+
+    #[test]
+    fn bytes_roundtrip() {
+        let nnp = sample_nnp();
+        let fg = freeze(&nnp.networks[0], &nnp.param_map()).unwrap();
+        let back = load_bytes(&save_bytes(&fg)).unwrap();
+        assert_eq!(back.net, fg.net);
+        assert_eq!(back.constants.len(), fg.constants.len());
+    }
+
+    #[test]
+    fn unfreeze_restores_nnp_pieces() {
+        let nnp = sample_nnp();
+        let fg = freeze(&nnp.networks[0], &nnp.param_map()).unwrap();
+        let (net, params) = unfreeze(&fg);
+        assert_eq!(net.outputs, nnp.networks[0].outputs);
+        assert_eq!(params.len(), 2);
+    }
+
+    #[test]
+    fn missing_param_fails_freeze() {
+        let (net, _) = net_with_dropout();
+        let err = freeze(&net, &HashMap::new()).unwrap_err();
+        assert!(err.contains("missing parameter 'W'"));
+    }
+}

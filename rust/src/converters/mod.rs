@@ -1,0 +1,19 @@
+//! File-format converters (paper §3, Figure 2): NNP is the hub format,
+//! and each converter maps it to/from a deployment format:
+//!
+//! - [`onnx_lite`] — ONNX subset, bidirectional (`NNP ⇄ ONNX`);
+//! - [`nnb`] — NNB flat binary for the C-runtime analogue (`NNP → NNB`),
+//!   with an embedded-style interpreter proving the format executes;
+//! - [`frozen`] — frozen-graph single file, params inlined as constants
+//!   (`NNP → TF-frozen-graph` analogue), bidirectional;
+//! - [`rs_source`] — standalone Rust source generation
+//!   (`NNP → C source code` analogue);
+//! - [`query`] — the unsupported-function querying commands the paper
+//!   describes ("users may use querying commands ... to check whether
+//!   it contains unsupported function").
+
+pub mod frozen;
+pub mod nnb;
+pub mod onnx_lite;
+pub mod query;
+pub mod rs_source;

@@ -1,0 +1,227 @@
+//! NNP → NNB: the flat binary format for the C-runtime analogue
+//! ("NNP to NNB (Binary format for NNabla C Runtime)", §3).
+//!
+//! Layout (all little-endian):
+//! ```text
+//! magic "NNB1" | u32 n_strings | strings (u32 len + bytes)*
+//! | u32 n_inputs  | (u32 name_idx, u32 rank, u64 dims*)*
+//! | u32 n_outputs | u32 name_idx*
+//! | u32 n_layers  | layer records
+//! | param blob (params.rs format)
+//! ```
+//! Every tensor reference is an index into the string table — the
+//! fixed-width, pointer-free encoding an embedded C runtime wants.
+//! [`run_nnb`] executes the format directly, standing in for the C
+//! runtime itself.
+
+use std::collections::HashMap;
+
+use crate::nnp::ir::{Layer, NetworkDef, Op, TensorDef};
+use crate::nnp::{interpreter, params};
+use crate::tensor::NdArray;
+use crate::utils::json::Json;
+
+struct StringTable {
+    strings: Vec<String>,
+    index: HashMap<String, u32>,
+}
+
+impl StringTable {
+    fn new() -> Self {
+        StringTable { strings: Vec::new(), index: HashMap::new() }
+    }
+
+    fn intern(&mut self, s: &str) -> u32 {
+        if let Some(&i) = self.index.get(s) {
+            return i;
+        }
+        let i = self.strings.len() as u32;
+        self.strings.push(s.to_string());
+        self.index.insert(s.to_string(), i);
+        i
+    }
+}
+
+/// Encode a network + parameters into NNB bytes.
+pub fn to_nnb(net: &NetworkDef, param_list: &[(String, NdArray)]) -> Vec<u8> {
+    let mut st = StringTable::new();
+    // intern everything first for a stable table
+    let mut layer_recs: Vec<(u32, u32, String, Vec<u32>, Vec<u32>, Vec<u32>)> = Vec::new();
+    for l in &net.layers {
+        let name = st.intern(&l.name);
+        let op = st.intern(l.op.name());
+        let attrs = l.op.attrs_json().to_string();
+        let ins: Vec<u32> = l.inputs.iter().map(|s| st.intern(s)).collect();
+        let ps: Vec<u32> = l.params.iter().map(|s| st.intern(s)).collect();
+        let outs: Vec<u32> = l.outputs.iter().map(|s| st.intern(s)).collect();
+        layer_recs.push((name, op, attrs, ins, ps, outs));
+    }
+    let input_recs: Vec<(u32, Vec<usize>)> =
+        net.inputs.iter().map(|t| (st.intern(&t.name), t.dims.clone())).collect();
+    let output_recs: Vec<u32> = net.outputs.iter().map(|o| st.intern(o)).collect();
+    let net_name = st.intern(&net.name);
+
+    let mut out = Vec::new();
+    out.extend_from_slice(b"NNB1");
+    out.extend_from_slice(&(st.strings.len() as u32).to_le_bytes());
+    for s in &st.strings {
+        out.extend_from_slice(&(s.len() as u32).to_le_bytes());
+        out.extend_from_slice(s.as_bytes());
+    }
+    out.extend_from_slice(&net_name.to_le_bytes());
+    out.extend_from_slice(&(input_recs.len() as u32).to_le_bytes());
+    for (n, dims) in &input_recs {
+        out.extend_from_slice(&n.to_le_bytes());
+        out.extend_from_slice(&(dims.len() as u32).to_le_bytes());
+        for &d in dims {
+            out.extend_from_slice(&(d as u64).to_le_bytes());
+        }
+    }
+    out.extend_from_slice(&(output_recs.len() as u32).to_le_bytes());
+    for o in &output_recs {
+        out.extend_from_slice(&o.to_le_bytes());
+    }
+    out.extend_from_slice(&(layer_recs.len() as u32).to_le_bytes());
+    for (name, op, attrs, ins, ps, outs) in &layer_recs {
+        out.extend_from_slice(&name.to_le_bytes());
+        out.extend_from_slice(&op.to_le_bytes());
+        out.extend_from_slice(&(attrs.len() as u32).to_le_bytes());
+        out.extend_from_slice(attrs.as_bytes());
+        for list in [ins, ps, outs] {
+            out.extend_from_slice(&(list.len() as u32).to_le_bytes());
+            for i in list {
+                out.extend_from_slice(&i.to_le_bytes());
+            }
+        }
+    }
+    out.extend_from_slice(&params::save_params(param_list));
+    out
+}
+
+/// Decode NNB bytes back into a network + parameters.
+pub fn from_nnb(bytes: &[u8]) -> Result<(NetworkDef, Vec<(String, NdArray)>), String> {
+    if bytes.len() < 8 || &bytes[0..4] != b"NNB1" {
+        return Err("not an NNB file".into());
+    }
+    let mut pos = 4usize;
+    let take = |pos: &mut usize, n: usize| -> Result<&[u8], String> {
+        if *pos + n > bytes.len() {
+            return Err("truncated NNB".into());
+        }
+        let s = &bytes[*pos..*pos + n];
+        *pos += n;
+        Ok(s)
+    };
+    let u32_at = |pos: &mut usize| -> Result<u32, String> {
+        Ok(u32::from_le_bytes(take(pos, 4)?.try_into().unwrap()))
+    };
+    let n_strings = u32_at(&mut pos)? as usize;
+    let mut strings = Vec::with_capacity(n_strings);
+    for _ in 0..n_strings {
+        let len = u32_at(&mut pos)? as usize;
+        strings.push(
+            String::from_utf8(take(&mut pos, len)?.to_vec()).map_err(|_| "bad string")?,
+        );
+    }
+    let s = |i: u32| -> Result<String, String> {
+        strings.get(i as usize).cloned().ok_or("string index out of range".into())
+    };
+    let net_name = s(u32_at(&mut pos)?)?;
+    let n_inputs = u32_at(&mut pos)? as usize;
+    let mut inputs = Vec::with_capacity(n_inputs);
+    for _ in 0..n_inputs {
+        let name = s(u32_at(&mut pos)?)?;
+        let rank = u32_at(&mut pos)? as usize;
+        let mut dims = Vec::with_capacity(rank);
+        for _ in 0..rank {
+            dims.push(u64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap()) as usize);
+        }
+        inputs.push(TensorDef { name, dims });
+    }
+    let n_outputs = u32_at(&mut pos)? as usize;
+    let mut outputs = Vec::with_capacity(n_outputs);
+    for _ in 0..n_outputs {
+        outputs.push(s(u32_at(&mut pos)?)?);
+    }
+    let n_layers = u32_at(&mut pos)? as usize;
+    let mut layers = Vec::with_capacity(n_layers);
+    for _ in 0..n_layers {
+        let name = s(u32_at(&mut pos)?)?;
+        let opname = s(u32_at(&mut pos)?)?;
+        let alen = u32_at(&mut pos)? as usize;
+        let attrs_str =
+            String::from_utf8(take(&mut pos, alen)?.to_vec()).map_err(|_| "bad attrs")?;
+        let attrs = Json::parse(&attrs_str)?;
+        let op = Op::from_name_attrs(&opname, &attrs)
+            .ok_or(format!("unsupported function '{opname}' in NNB"))?;
+        let mut lists: [Vec<String>; 3] = [Vec::new(), Vec::new(), Vec::new()];
+        for list in &mut lists {
+            let n = u32_at(&mut pos)? as usize;
+            for _ in 0..n {
+                list.push(s(u32_at(&mut pos)?)?);
+            }
+        }
+        let [ins, ps, outs] = lists;
+        layers.push(Layer { name, op, inputs: ins, params: ps, outputs: outs });
+    }
+    let param_list = params::load_params(&bytes[pos..])?;
+    Ok((NetworkDef { name: net_name, inputs, outputs, layers }, param_list))
+}
+
+/// Execute an NNB image directly — the embedded C-runtime analogue.
+pub fn run_nnb(
+    bytes: &[u8],
+    inputs: &HashMap<String, NdArray>,
+) -> Result<Vec<NdArray>, String> {
+    let (net, param_list) = from_nnb(bytes)?;
+    let pm: HashMap<String, NdArray> = param_list.into_iter().collect();
+    interpreter::run(&net, inputs, &pm)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nnp::tests::sample_nnp;
+
+    #[test]
+    fn nnb_roundtrip_structure_and_params() {
+        let nnp = sample_nnp();
+        let bytes = to_nnb(&nnp.networks[0], &nnp.parameters);
+        let (net, params) = from_nnb(&bytes).unwrap();
+        assert_eq!(net, nnp.networks[0]);
+        assert_eq!(params.len(), nnp.parameters.len());
+        for ((n1, a1), (n2, a2)) in params.iter().zip(&nnp.parameters) {
+            assert_eq!(n1, n2);
+            assert_eq!(a1.data(), a2.data());
+        }
+    }
+
+    #[test]
+    fn nnb_executes_like_source_network() {
+        let nnp = sample_nnp();
+        let bytes = to_nnb(&nnp.networks[0], &nnp.parameters);
+        let mut inputs = HashMap::new();
+        inputs.insert("x".to_string(), NdArray::from_slice(&[1, 3], &[0., 1., 0.]));
+        let nnb_out = run_nnb(&bytes, &inputs).unwrap();
+        let src_out = nnp.execute("main_executor", &inputs).unwrap();
+        assert_eq!(nnb_out[0].data(), src_out[0].data());
+    }
+
+    #[test]
+    fn string_table_dedupes() {
+        let nnp = sample_nnp();
+        let bytes = to_nnb(&nnp.networks[0], &nnp.parameters);
+        // interning means the tensor name "y" appears once in the table;
+        // a crude check: the serialized image stays compact
+        let n_y = bytes.windows(1 + 4).filter(|w| w == b"\x01\x00\x00\x00y").count();
+        assert!(n_y <= 1, "string 'y' interned more than once");
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(from_nnb(b"NOPE").is_err());
+        let nnp = sample_nnp();
+        let bytes = to_nnb(&nnp.networks[0], &nnp.parameters);
+        assert!(from_nnb(&bytes[..bytes.len() / 2]).is_err());
+    }
+}

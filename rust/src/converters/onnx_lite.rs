@@ -1,0 +1,512 @@
+//! NNP ⇄ ONNX-subset converter. The in-memory [`OnnxModel`] follows
+//! ONNX's structure (graph / nodes / initializers / value_info) with
+//! standard ONNX op names and attributes, so the mapping layer is a
+//! faithful miniature of the real NNabla↔ONNX converter, including its
+//! failure mode on unsupported functions.
+
+use std::collections::HashMap;
+
+use crate::nnp::ir::{Layer, NetworkDef, Op, TensorDef};
+use crate::nnp::params;
+use crate::tensor::NdArray;
+use crate::utils::json::Json;
+
+/// An ONNX attribute value (subset).
+#[derive(Debug, Clone, PartialEq)]
+pub enum OnnxAttr {
+    Int(i64),
+    Float(f32),
+    Ints(Vec<i64>),
+}
+
+/// An ONNX node.
+#[derive(Debug, Clone, PartialEq)]
+pub struct OnnxNode {
+    pub op_type: String,
+    pub name: String,
+    pub inputs: Vec<String>,
+    pub outputs: Vec<String>,
+    pub attrs: Vec<(String, OnnxAttr)>,
+}
+
+impl OnnxNode {
+    fn attr(&self, name: &str) -> Option<&OnnxAttr> {
+        self.attrs.iter().find(|(n, _)| n == name).map(|(_, v)| v)
+    }
+
+    fn attr_ints(&self, name: &str) -> Option<Vec<i64>> {
+        match self.attr(name)? {
+            OnnxAttr::Ints(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+
+    fn attr_f(&self, name: &str) -> Option<f32> {
+        match self.attr(name)? {
+            OnnxAttr::Float(f) => Some(*f),
+            _ => None,
+        }
+    }
+}
+
+/// An ONNX model (graph-level subset).
+#[derive(Debug, Clone, PartialEq)]
+pub struct OnnxModel {
+    pub opset: i64,
+    pub graph_name: String,
+    pub inputs: Vec<TensorDef>,
+    pub outputs: Vec<String>,
+    pub initializers: Vec<(String, NdArray)>,
+    pub nodes: Vec<OnnxNode>,
+}
+
+/// Error for functions with no ONNX mapping (`query` predicts these).
+#[derive(Debug)]
+pub struct UnsupportedFunction(pub String);
+
+impl std::fmt::Display for UnsupportedFunction {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "function '{}' has no ONNX mapping", self.0)
+    }
+}
+
+fn pair_ints(p: (usize, usize)) -> OnnxAttr {
+    OnnxAttr::Ints(vec![p.0 as i64, p.1 as i64])
+}
+
+fn pads_attr(p: (usize, usize)) -> OnnxAttr {
+    // ONNX pads = [begin_h, begin_w, end_h, end_w]
+    OnnxAttr::Ints(vec![p.0 as i64, p.1 as i64, p.0 as i64, p.1 as i64])
+}
+
+/// NNP network + params → ONNX model.
+pub fn to_onnx(
+    net: &NetworkDef,
+    param_map: &HashMap<String, NdArray>,
+) -> Result<OnnxModel, UnsupportedFunction> {
+    let mut nodes = Vec::new();
+    let mut initializers = Vec::new();
+    let mut init_param = |name: &str| -> String {
+        if let Some(a) = param_map.get(name) {
+            if !initializers.iter().any(|(n, _): &(String, NdArray)| n == name) {
+                initializers.push((name.to_string(), a.clone()));
+            }
+        }
+        name.to_string()
+    };
+    for l in &net.layers {
+        let mut inputs = l.inputs.clone();
+        for p in &l.params {
+            inputs.push(init_param(p));
+        }
+        let (op_type, attrs): (&str, Vec<(String, OnnxAttr)>) = match &l.op {
+            Op::Affine => {
+                // Gemm(x, W, b): alpha=beta=1, no transpose
+                ("Gemm", vec![])
+            }
+            Op::Convolution { stride, pad, dilation } => (
+                "Conv",
+                vec![
+                    ("strides".into(), pair_ints(*stride)),
+                    ("pads".into(), pads_attr(*pad)),
+                    ("dilations".into(), pair_ints(*dilation)),
+                ],
+            ),
+            Op::MaxPool { kernel, stride, pad } => (
+                "MaxPool",
+                vec![
+                    ("kernel_shape".into(), pair_ints(*kernel)),
+                    ("strides".into(), pair_ints(*stride)),
+                    ("pads".into(), pads_attr(*pad)),
+                ],
+            ),
+            Op::AvgPool { kernel, stride, pad, including_pad } => (
+                "AveragePool",
+                vec![
+                    ("kernel_shape".into(), pair_ints(*kernel)),
+                    ("strides".into(), pair_ints(*stride)),
+                    ("pads".into(), pads_attr(*pad)),
+                    ("count_include_pad".into(), OnnxAttr::Int(*including_pad as i64)),
+                ],
+            ),
+            Op::GlobalAvgPool => ("GlobalAveragePool", vec![]),
+            Op::ReLU => ("Relu", vec![]),
+            Op::LeakyReLU { alpha } => ("LeakyRelu", vec![("alpha".into(), OnnxAttr::Float(*alpha))]),
+            Op::Sigmoid => ("Sigmoid", vec![]),
+            Op::Tanh => ("Tanh", vec![]),
+            Op::Elu { alpha } => ("Elu", vec![("alpha".into(), OnnxAttr::Float(*alpha))]),
+            Op::Swish => return Err(UnsupportedFunction("Swish".into())),
+            Op::Gelu => ("Gelu", vec![]),
+            Op::Softplus => ("Softplus", vec![]),
+            Op::Softmax => ("Softmax", vec![("axis".into(), OnnxAttr::Int(-1))]),
+            Op::LogSoftmax => ("LogSoftmax", vec![("axis".into(), OnnxAttr::Int(-1))]),
+            Op::BatchNorm { eps } => {
+                ("BatchNormalization", vec![("epsilon".into(), OnnxAttr::Float(*eps))])
+            }
+            Op::LayerNorm { eps } => {
+                ("LayerNormalization", vec![("epsilon".into(), OnnxAttr::Float(*eps))])
+            }
+            Op::Add2 => ("Add", vec![]),
+            Op::Mul2 => ("Mul", vec![]),
+            Op::Concat { axis } => ("Concat", vec![("axis".into(), OnnxAttr::Int(*axis as i64))]),
+            Op::Reshape { dims } => {
+                ("Reshape", vec![("shape".into(), OnnxAttr::Ints(dims.clone()))])
+            }
+            Op::Dropout { p } => ("Dropout", vec![("ratio".into(), OnnxAttr::Float(*p))]),
+            Op::Embed => ("Gather", vec![("axis".into(), OnnxAttr::Int(0))]),
+            Op::Identity => ("Identity", vec![]),
+        };
+        nodes.push(OnnxNode {
+            op_type: op_type.to_string(),
+            name: l.name.clone(),
+            inputs,
+            outputs: l.outputs.clone(),
+            attrs,
+        });
+    }
+    Ok(OnnxModel {
+        opset: 20,
+        graph_name: net.name.clone(),
+        inputs: net.inputs.clone(),
+        outputs: net.outputs.clone(),
+        initializers,
+        nodes,
+    })
+}
+
+/// ONNX model → NNP network + params.
+pub fn from_onnx(
+    model: &OnnxModel,
+) -> Result<(NetworkDef, Vec<(String, NdArray)>), UnsupportedFunction> {
+    let init_names: std::collections::HashSet<&str> =
+        model.initializers.iter().map(|(n, _)| n.as_str()).collect();
+    let mut layers = Vec::new();
+    for n in &model.nodes {
+        let pair = |a: Option<Vec<i64>>, def: (usize, usize)| -> (usize, usize) {
+            a.map(|v| (v[0] as usize, v[1] as usize)).unwrap_or(def)
+        };
+        let pads = |a: Option<Vec<i64>>| -> (usize, usize) {
+            a.map(|v| (v[0] as usize, v[1] as usize)).unwrap_or((0, 0))
+        };
+        let op = match n.op_type.as_str() {
+            "Gemm" => Op::Affine,
+            "Conv" => Op::Convolution {
+                stride: pair(n.attr_ints("strides"), (1, 1)),
+                pad: pads(n.attr_ints("pads")),
+                dilation: pair(n.attr_ints("dilations"), (1, 1)),
+            },
+            "MaxPool" => Op::MaxPool {
+                kernel: pair(n.attr_ints("kernel_shape"), (1, 1)),
+                stride: pair(n.attr_ints("strides"), (1, 1)),
+                pad: pads(n.attr_ints("pads")),
+            },
+            "AveragePool" => Op::AvgPool {
+                kernel: pair(n.attr_ints("kernel_shape"), (1, 1)),
+                stride: pair(n.attr_ints("strides"), (1, 1)),
+                pad: pads(n.attr_ints("pads")),
+                including_pad: matches!(n.attr("count_include_pad"), Some(OnnxAttr::Int(1))),
+            },
+            "GlobalAveragePool" => Op::GlobalAvgPool,
+            "Relu" => Op::ReLU,
+            "LeakyRelu" => Op::LeakyReLU { alpha: n.attr_f("alpha").unwrap_or(0.01) },
+            "Sigmoid" => Op::Sigmoid,
+            "Tanh" => Op::Tanh,
+            "Elu" => Op::Elu { alpha: n.attr_f("alpha").unwrap_or(1.0) },
+            "Gelu" => Op::Gelu,
+            "Softplus" => Op::Softplus,
+            "Softmax" => Op::Softmax,
+            "LogSoftmax" => Op::LogSoftmax,
+            "BatchNormalization" => Op::BatchNorm { eps: n.attr_f("epsilon").unwrap_or(1e-5) },
+            "LayerNormalization" => Op::LayerNorm { eps: n.attr_f("epsilon").unwrap_or(1e-5) },
+            "Add" => Op::Add2,
+            "Mul" => Op::Mul2,
+            "Concat" => Op::Concat {
+                axis: match n.attr("axis") {
+                    Some(OnnxAttr::Int(a)) => *a as usize,
+                    _ => 1,
+                },
+            },
+            "Reshape" => Op::Reshape { dims: n.attr_ints("shape").unwrap_or_default() },
+            "Dropout" => Op::Dropout { p: n.attr_f("ratio").unwrap_or(0.5) },
+            "Gather" => Op::Embed,
+            "Identity" => Op::Identity,
+            other => return Err(UnsupportedFunction(other.to_string())),
+        };
+        // split node inputs into activations vs initializer params
+        let (acts, params): (Vec<String>, Vec<String>) =
+            n.inputs.iter().cloned().partition(|i| !init_names.contains(i.as_str()));
+        layers.push(Layer { name: n.name.clone(), op, inputs: acts, params, outputs: n.outputs.clone() });
+    }
+    Ok((
+        NetworkDef {
+            name: model.graph_name.clone(),
+            inputs: model.inputs.clone(),
+            outputs: model.outputs.clone(),
+            layers,
+        },
+        model.initializers.clone(),
+    ))
+}
+
+// ---------------------------------------------------------------- file I/O
+
+const MAGIC: &[u8; 5] = b"ONNXL";
+
+fn attrs_to_json(attrs: &[(String, OnnxAttr)]) -> Json {
+    Json::Arr(
+        attrs
+            .iter()
+            .map(|(k, v)| {
+                let (t, val) = match v {
+                    OnnxAttr::Int(i) => ("int", Json::num(*i as f64)),
+                    OnnxAttr::Float(f) => ("float", Json::num(*f as f64)),
+                    OnnxAttr::Ints(is) => {
+                        ("ints", Json::Arr(is.iter().map(|&i| Json::num(i as f64)).collect()))
+                    }
+                };
+                Json::obj(vec![("name", Json::str(k.clone())), ("t", Json::str(t)), ("v", val)])
+            })
+            .collect(),
+    )
+}
+
+fn attrs_from_json(j: &Json) -> Vec<(String, OnnxAttr)> {
+    j.as_arr()
+        .map(|a| {
+            a.iter()
+                .filter_map(|e| {
+                    let name = e.get("name").as_str()?.to_string();
+                    let v = match e.get("t").as_str()? {
+                        "int" => OnnxAttr::Int(e.get("v").as_f64()? as i64),
+                        "float" => OnnxAttr::Float(e.get("v").as_f64()? as f32),
+                        "ints" => OnnxAttr::Ints(
+                            e.get("v")
+                                .as_arr()?
+                                .iter()
+                                .filter_map(|x| x.as_f64().map(|f| f as i64))
+                                .collect(),
+                        ),
+                        _ => return None,
+                    };
+                    Some((name, v))
+                })
+                .collect()
+        })
+        .unwrap_or_default()
+}
+
+/// Serialize to `.onnxl` bytes.
+pub fn save_bytes(model: &OnnxModel) -> Vec<u8> {
+    let header = Json::obj(vec![
+        ("opset", Json::num(model.opset as f64)),
+        ("graph_name", Json::str(model.graph_name.clone())),
+        (
+            "inputs",
+            Json::Arr(
+                model
+                    .inputs
+                    .iter()
+                    .map(|t| {
+                        Json::obj(vec![
+                            ("name", Json::str(t.name.clone())),
+                            ("dims", Json::arr_of_usize(&t.dims)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("outputs", Json::Arr(model.outputs.iter().map(|o| Json::str(o.clone())).collect())),
+        (
+            "nodes",
+            Json::Arr(
+                model
+                    .nodes
+                    .iter()
+                    .map(|n| {
+                        Json::obj(vec![
+                            ("op_type", Json::str(n.op_type.clone())),
+                            ("name", Json::str(n.name.clone())),
+                            (
+                                "inputs",
+                                Json::Arr(n.inputs.iter().map(|s| Json::str(s.clone())).collect()),
+                            ),
+                            (
+                                "outputs",
+                                Json::Arr(n.outputs.iter().map(|s| Json::str(s.clone())).collect()),
+                            ),
+                            ("attrs", attrs_to_json(&n.attrs)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+    let header_bytes = header.to_string().into_bytes();
+    let blob = params::save_params(&model.initializers);
+    let mut out = Vec::new();
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&(header_bytes.len() as u64).to_le_bytes());
+    out.extend_from_slice(&header_bytes);
+    out.extend_from_slice(&blob);
+    out
+}
+
+/// Deserialize `.onnxl` bytes.
+pub fn load_bytes(bytes: &[u8]) -> Result<OnnxModel, String> {
+    if bytes.len() < 13 || &bytes[0..5] != MAGIC {
+        return Err("not an ONNX-lite file".into());
+    }
+    let hlen = u64::from_le_bytes(bytes[5..13].try_into().unwrap()) as usize;
+    if 13 + hlen > bytes.len() {
+        return Err("truncated ONNX-lite header".into());
+    }
+    let header = Json::parse(
+        std::str::from_utf8(&bytes[13..13 + hlen]).map_err(|_| "bad header utf8")?,
+    )?;
+    let initializers = params::load_params(&bytes[13 + hlen..])?;
+    let inputs = header
+        .get("inputs")
+        .as_arr()
+        .unwrap_or(&[])
+        .iter()
+        .filter_map(|t| {
+            Some(TensorDef {
+                name: t.get("name").as_str()?.to_string(),
+                dims: t.get("dims").usize_arr()?,
+            })
+        })
+        .collect();
+    let outputs = header
+        .get("outputs")
+        .as_arr()
+        .unwrap_or(&[])
+        .iter()
+        .filter_map(|o| o.as_str().map(String::from))
+        .collect();
+    let nodes = header
+        .get("nodes")
+        .as_arr()
+        .unwrap_or(&[])
+        .iter()
+        .filter_map(|n| {
+            let strs = |j: &Json| -> Vec<String> {
+                j.as_arr()
+                    .map(|a| a.iter().filter_map(|v| v.as_str().map(String::from)).collect())
+                    .unwrap_or_default()
+            };
+            Some(OnnxNode {
+                op_type: n.get("op_type").as_str()?.to_string(),
+                name: n.get("name").as_str()?.to_string(),
+                inputs: strs(n.get("inputs")),
+                outputs: strs(n.get("outputs")),
+                attrs: attrs_from_json(n.get("attrs")),
+            })
+        })
+        .collect();
+    Ok(OnnxModel {
+        opset: header.get("opset").as_f64().unwrap_or(20.0) as i64,
+        graph_name: header.get("graph_name").as_str().unwrap_or("graph").to_string(),
+        inputs,
+        outputs,
+        initializers,
+        nodes,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nnp::interpreter;
+    use crate::nnp::tests::sample_nnp;
+
+    #[test]
+    fn nnp_to_onnx_to_nnp_preserves_inference() {
+        let nnp = sample_nnp();
+        let net = &nnp.networks[0];
+        let onnx = to_onnx(net, &nnp.param_map()).unwrap();
+        assert_eq!(onnx.nodes[0].op_type, "Gemm");
+        assert_eq!(onnx.initializers.len(), 2);
+
+        let (net2, params2) = from_onnx(&onnx).unwrap();
+        let pm: HashMap<String, NdArray> = params2.into_iter().collect();
+        let mut inputs = HashMap::new();
+        inputs.insert("x".to_string(), NdArray::from_slice(&[2, 3], &[1., 0., 0., 0., 2., 0.]));
+        let a = interpreter::run(net, &inputs, &nnp.param_map()).unwrap();
+        let b = interpreter::run(&net2, &inputs, &pm).unwrap();
+        assert_eq!(a[0].data(), b[0].data());
+    }
+
+    #[test]
+    fn swish_refused_with_clear_error() {
+        use crate::nnp::ir::{Layer, Op};
+        let mut nnp = sample_nnp();
+        nnp.networks[0].layers.push(Layer {
+            name: "sw".into(),
+            op: Op::Swish,
+            inputs: vec!["y".into()],
+            params: vec![],
+            outputs: vec!["z".into()],
+        });
+        let err = to_onnx(&nnp.networks[0], &nnp.param_map()).unwrap_err();
+        assert!(err.to_string().contains("Swish"));
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let nnp = sample_nnp();
+        let onnx = to_onnx(&nnp.networks[0], &nnp.param_map()).unwrap();
+        let bytes = save_bytes(&onnx);
+        let back = load_bytes(&bytes).unwrap();
+        assert_eq!(back.nodes, onnx.nodes);
+        assert_eq!(back.inputs, onnx.inputs);
+        assert_eq!(back.outputs, onnx.outputs);
+        assert_eq!(back.opset, onnx.opset);
+        assert_eq!(back.initializers.len(), onnx.initializers.len());
+        for ((n1, a1), (n2, a2)) in back.initializers.iter().zip(&onnx.initializers) {
+            assert_eq!(n1, n2);
+            assert_eq!(a1.data(), a2.data());
+        }
+    }
+
+    #[test]
+    fn unknown_onnx_op_rejected_on_import() {
+        let model = OnnxModel {
+            opset: 20,
+            graph_name: "g".into(),
+            inputs: vec![],
+            outputs: vec![],
+            initializers: vec![],
+            nodes: vec![OnnxNode {
+                op_type: "LSTM".into(),
+                name: "l".into(),
+                inputs: vec![],
+                outputs: vec![],
+                attrs: vec![],
+            }],
+        };
+        let err = from_onnx(&model).unwrap_err();
+        assert!(err.to_string().contains("LSTM"));
+    }
+
+    #[test]
+    fn conv_attrs_roundtrip_through_onnx() {
+        use crate::nnp::ir::{Layer, Op};
+        let net = NetworkDef {
+            name: "c".into(),
+            inputs: vec![TensorDef { name: "x".into(), dims: vec![1, 3, 8, 8] }],
+            outputs: vec!["y".into()],
+            layers: vec![Layer {
+                name: "conv".into(),
+                op: Op::Convolution { stride: (2, 1), pad: (1, 2), dilation: (1, 1) },
+                inputs: vec!["x".into()],
+                params: vec!["W".into()],
+                outputs: vec!["y".into()],
+            }],
+        };
+        let mut pm = HashMap::new();
+        pm.insert("W".to_string(), NdArray::zeros(&[4, 3, 3, 3]));
+        let onnx = to_onnx(&net, &pm).unwrap();
+        let (net2, _) = from_onnx(&onnx).unwrap();
+        assert_eq!(net2.layers[0].op, net.layers[0].op);
+    }
+}

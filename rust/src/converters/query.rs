@@ -1,0 +1,138 @@
+//! Function-support querying — the paper's §3: "If ONNX file contains
+//! a function unsupported by Neural Network Libraries, it may cause
+//! error in conversion, so users may use querying commands provided by
+//! Neural Network Libraries to check whether it contains unsupported
+//! function." Mirrors the published support-status matrix.
+
+use crate::nnp::NetworkDef;
+
+/// Conversion targets.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Target {
+    /// ONNX-subset export.
+    OnnxLite,
+    /// NNB flat binary (C-runtime analogue).
+    Nnb,
+    /// Frozen-graph single file.
+    Frozen,
+    /// Generated Rust source.
+    RsSource,
+    /// The native NNP interpreter.
+    Nnp,
+}
+
+impl Target {
+    pub fn name(self) -> &'static str {
+        match self {
+            Target::OnnxLite => "onnx",
+            Target::Nnb => "nnb",
+            Target::Frozen => "frozen",
+            Target::RsSource => "rs_source",
+            Target::Nnp => "nnp",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Self> {
+        Some(match s {
+            "onnx" => Target::OnnxLite,
+            "nnb" => Target::Nnb,
+            "frozen" => Target::Frozen,
+            "rs_source" | "rs" => Target::RsSource,
+            "nnp" => Target::Nnp,
+            _ => return None,
+        })
+    }
+}
+
+/// Is `function` (canonical op name) supported by `target`?
+pub fn supports(target: Target, function: &str) -> bool {
+    match target {
+        // everything the IR can express runs in NNP / NNB / frozen /
+        // generated source (they share the interpreter semantics)
+        Target::Nnp | Target::Nnb | Target::Frozen | Target::RsSource => true,
+        // ONNX has no standard Swish op (NNabla's real converter hits
+        // the same class of gaps — that is what the query tool is for)
+        Target::OnnxLite => !matches!(function, "Swish"),
+    }
+}
+
+/// All functions in `net` unsupported by `target` — empty means the
+/// conversion will succeed.
+pub fn query_unsupported(net: &NetworkDef, target: Target) -> Vec<&'static str> {
+    net.function_names().into_iter().filter(|f| !supports(target, f)).collect()
+}
+
+/// Human-readable support matrix for a network across all targets
+/// (the CLI `nnl query` output).
+pub fn support_report(net: &NetworkDef) -> String {
+    let targets =
+        [Target::Nnp, Target::OnnxLite, Target::Nnb, Target::Frozen, Target::RsSource];
+    let mut s = format!("support matrix for network '{}':\n", net.name);
+    s.push_str(&format!("{:<24}", "function"));
+    for t in targets {
+        s.push_str(&format!("{:>10}", t.name()));
+    }
+    s.push('\n');
+    for f in net.function_names() {
+        s.push_str(&format!("{f:<24}"));
+        for t in targets {
+            s.push_str(&format!("{:>10}", if supports(t, f) { "ok" } else { "NO" }));
+        }
+        s.push('\n');
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nnp::ir::{Layer, Op, TensorDef};
+
+    fn swish_net() -> NetworkDef {
+        NetworkDef {
+            name: "m".into(),
+            inputs: vec![TensorDef { name: "x".into(), dims: vec![1, 4] }],
+            outputs: vec!["y".into()],
+            layers: vec![
+                Layer {
+                    name: "s".into(),
+                    op: Op::Swish,
+                    inputs: vec!["x".into()],
+                    params: vec![],
+                    outputs: vec!["h".into()],
+                },
+                Layer {
+                    name: "r".into(),
+                    op: Op::ReLU,
+                    inputs: vec!["h".into()],
+                    params: vec![],
+                    outputs: vec!["y".into()],
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn query_finds_onnx_gap() {
+        let net = swish_net();
+        assert_eq!(query_unsupported(&net, Target::OnnxLite), vec!["Swish"]);
+        assert!(query_unsupported(&net, Target::Nnb).is_empty());
+        assert!(query_unsupported(&net, Target::RsSource).is_empty());
+    }
+
+    #[test]
+    fn report_marks_gaps() {
+        let r = support_report(&swish_net());
+        assert!(r.contains("Swish"));
+        assert!(r.contains("NO"));
+        assert!(r.contains("ReLU"));
+    }
+
+    #[test]
+    fn target_names_roundtrip() {
+        for t in [Target::OnnxLite, Target::Nnb, Target::Frozen, Target::RsSource, Target::Nnp] {
+            assert_eq!(Target::from_name(t.name()), Some(t));
+        }
+        assert_eq!(Target::from_name("coreml"), None);
+    }
+}

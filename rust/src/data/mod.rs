@@ -1,0 +1,33 @@
+//! Datasets and iterators.
+//!
+//! The paper's evaluation uses ImageNet; this testbed has no such
+//! corpus (substitution documented in DESIGN.md), so [`SyntheticImages`]
+//! generates a deterministic class-structured image distribution whose
+//! learnability plays ImageNet's role in every table, plus
+//! [`TinyCorpus`], a byte-level text source for the TransformerLM
+//! end-to-end driver. Both shard deterministically per worker for
+//! data-parallel runs (Listing 3 / Figure 3).
+
+pub mod images;
+pub mod text;
+
+pub use images::SyntheticImages;
+pub use text::TinyCorpus;
+
+use crate::tensor::NdArray;
+
+/// A batch: inputs + labels (labels stored as f32 indices).
+pub type Batch = (NdArray, NdArray);
+
+/// Batched data source.
+pub trait DataSource {
+    /// Deterministic batch `i` for worker `rank` of `world` (each rank
+    /// sees a disjoint stream, as a distributed sampler would give).
+    fn batch(&self, i: usize, rank: usize, world: usize) -> Batch;
+    /// A held-out validation batch.
+    fn val_batch(&self, i: usize) -> Batch;
+    /// Input feature dims (without batch axis).
+    fn input_dims(&self) -> Vec<usize>;
+    /// Number of classes.
+    fn classes(&self) -> usize;
+}

@@ -1,0 +1,181 @@
+//! Activation functions (each `F.<name>` in the paper's listings).
+
+use crate::graph::Variable;
+use crate::tensor::ops;
+
+/// Rectified linear unit.
+pub fn relu(x: &Variable) -> Variable {
+    Variable::from_function(
+        "relu",
+        &[x],
+        Box::new(|xs| ops::map(&xs[0], |v| v.max(0.0))),
+        Box::new(|xs, _y, g| {
+            vec![Some(ops::zip_broadcast(g, &xs[0], |gv, xv| if xv > 0.0 { gv } else { 0.0 }))]
+        }),
+    )
+}
+
+/// Leaky ReLU with slope `alpha` for x < 0.
+pub fn leaky_relu(x: &Variable, alpha: f32) -> Variable {
+    Variable::from_function(
+        "leaky_relu",
+        &[x],
+        Box::new(move |xs| ops::map(&xs[0], |v| if v > 0.0 { v } else { alpha * v })),
+        Box::new(move |xs, _y, g| {
+            vec![Some(ops::zip_broadcast(g, &xs[0], move |gv, xv| {
+                if xv > 0.0 {
+                    gv
+                } else {
+                    alpha * gv
+                }
+            }))]
+        }),
+    )
+}
+
+/// Logistic sigmoid.
+pub fn sigmoid(x: &Variable) -> Variable {
+    Variable::from_function(
+        "sigmoid",
+        &[x],
+        Box::new(|xs| ops::map(&xs[0], |v| 1.0 / (1.0 + (-v).exp()))),
+        Box::new(|_xs, y, g| {
+            vec![Some(ops::zip_broadcast(g, y, |gv, yv| gv * yv * (1.0 - yv)))]
+        }),
+    )
+}
+
+/// Hyperbolic tangent.
+pub fn tanh(x: &Variable) -> Variable {
+    Variable::from_function(
+        "tanh",
+        &[x],
+        Box::new(|xs| ops::map(&xs[0], f32::tanh)),
+        Box::new(|_xs, y, g| vec![Some(ops::zip_broadcast(g, y, |gv, yv| gv * (1.0 - yv * yv)))]),
+    )
+}
+
+/// Exponential linear unit.
+pub fn elu(x: &Variable, alpha: f32) -> Variable {
+    Variable::from_function(
+        "elu",
+        &[x],
+        Box::new(move |xs| ops::map(&xs[0], |v| if v > 0.0 { v } else { alpha * (v.exp() - 1.0) })),
+        Box::new(move |xs, _y, g| {
+            vec![Some(ops::zip_broadcast(g, &xs[0], move |gv, xv| {
+                if xv > 0.0 {
+                    gv
+                } else {
+                    gv * alpha * xv.exp()
+                }
+            }))]
+        }),
+    )
+}
+
+/// Swish / SiLU: `x * sigmoid(x)` (used by MobileNetV3 / EfficientNet).
+pub fn swish(x: &Variable) -> Variable {
+    Variable::from_function(
+        "swish",
+        &[x],
+        Box::new(|xs| ops::map(&xs[0], |v| v / (1.0 + (-v).exp()))),
+        Box::new(|xs, _y, g| {
+            vec![Some(ops::zip_broadcast(g, &xs[0], |gv, xv| {
+                let s = 1.0 / (1.0 + (-xv).exp());
+                gv * (s + xv * s * (1.0 - s))
+            }))]
+        }),
+    )
+}
+
+/// Gaussian error linear unit (tanh approximation).
+pub fn gelu(x: &Variable) -> Variable {
+    const C: f32 = 0.797_884_6; // sqrt(2/pi)
+    Variable::from_function(
+        "gelu",
+        &[x],
+        Box::new(|xs| {
+            ops::map(&xs[0], |v| 0.5 * v * (1.0 + (C * (v + 0.044715 * v * v * v)).tanh()))
+        }),
+        Box::new(|xs, _y, g| {
+            vec![Some(ops::zip_broadcast(g, &xs[0], |gv, v| {
+                let u = C * (v + 0.044715 * v * v * v);
+                let t = u.tanh();
+                let du = C * (1.0 + 3.0 * 0.044715 * v * v);
+                gv * (0.5 * (1.0 + t) + 0.5 * v * (1.0 - t * t) * du)
+            }))]
+        }),
+    )
+}
+
+/// Softplus: `ln(1 + e^x)`.
+pub fn softplus(x: &Variable) -> Variable {
+    Variable::from_function(
+        "softplus",
+        &[x],
+        Box::new(|xs| ops::map(&xs[0], |v| if v > 20.0 { v } else { (1.0 + v.exp()).ln() })),
+        Box::new(|xs, _y, g| {
+            vec![Some(ops::zip_broadcast(g, &xs[0], |gv, xv| gv / (1.0 + (-xv).exp())))]
+        }),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::functions::gradcheck::{check_grads, rand_leaf};
+    use crate::functions::mean_all;
+    use crate::tensor::{NdArray, Rng};
+
+    #[test]
+    fn relu_values() {
+        let x = Variable::from_array(NdArray::from_slice(&[4], &[-2., -0.5, 0.5, 2.]), true);
+        assert_eq!(relu(&x).data().data(), &[0., 0., 0.5, 2.]);
+        assert_eq!(leaky_relu(&x, 0.1).data().data(), &[-0.2, -0.05, 0.5, 2.]);
+    }
+
+    #[test]
+    fn sigmoid_tanh_known_points() {
+        let x = Variable::from_array(NdArray::from_slice(&[1], &[0.0]), true);
+        assert!((sigmoid(&x).item() - 0.5).abs() < 1e-6);
+        assert!(tanh(&x).item().abs() < 1e-6);
+    }
+
+    #[test]
+    fn all_activations_gradcheck() {
+        let mut rng = Rng::new(20);
+        let x = rand_leaf(&mut rng, &[7]);
+        // keep away from relu kink
+        x.set_data(crate::tensor::ops::map(&x.data(), |v| {
+            if v.abs() < 0.1 {
+                v + 0.2
+            } else {
+                v
+            }
+        }));
+        let fns: Vec<(&str, Box<dyn Fn(&Variable) -> Variable>)> = vec![
+            ("relu", Box::new(|v: &Variable| relu(v))),
+            ("leaky", Box::new(|v: &Variable| leaky_relu(v, 0.2))),
+            ("sigmoid", Box::new(|v: &Variable| sigmoid(v))),
+            ("tanh", Box::new(|v: &Variable| tanh(v))),
+            ("elu", Box::new(|v: &Variable| elu(v, 1.0))),
+            ("swish", Box::new(|v: &Variable| swish(v))),
+            ("gelu", Box::new(|v: &Variable| gelu(v))),
+            ("softplus", Box::new(|v: &Variable| softplus(v))),
+        ];
+        for (name, f) in &fns {
+            let build = || mean_all(&f(&x));
+            check_grads(&[&x], &build, 1e-3, 2e-2);
+            let _ = name;
+        }
+    }
+
+    #[test]
+    fn swish_matches_x_times_sigmoid() {
+        let mut rng = Rng::new(21);
+        let x = rand_leaf(&mut rng, &[10]);
+        let a = swish(&x).data();
+        let b = crate::tensor::ops::mul(&x.data(), &sigmoid(&x).data());
+        assert!(a.allclose(&b, 1e-6, 1e-6));
+    }
+}

@@ -1,0 +1,108 @@
+//! Affine (fully-connected) layer: `y = flatten(x) · W + b`.
+//!
+//! This is the op of the paper's Listing 1 — and its inner matmul is
+//! exactly what the L1 Pallas kernel implements on the static path.
+
+use crate::graph::Variable;
+use crate::tensor::{ops, NdArray};
+
+/// `x: [B, ...] -> [B, out]` with `w: [in, out]`, optional `b: [out]`.
+/// Leading axis is the batch axis (NNabla `base_axis=1`); trailing axes
+/// are flattened into the input feature dimension.
+pub fn affine(x: &Variable, w: &Variable, b: Option<&Variable>) -> Variable {
+    let fwd_flat = |x: &NdArray| -> NdArray {
+        let batch = x.dims()[0];
+        let feat: usize = x.dims()[1..].iter().product();
+        x.reshape(&[batch, feat])
+    };
+    match b {
+        Some(b) => Variable::from_function(
+            "affine",
+            &[x, w, b],
+            Box::new(move |xs| {
+                let x2 = fwd_flat(&xs[0]);
+                ops::add(&ops::matmul(&x2, &xs[1]), &xs[2])
+            }),
+            Box::new(move |xs, _y, g| {
+                let x2 = fwd_flat(&xs[0]);
+                let gx = ops::matmul(g, &xs[1].t()).reshape(xs[0].dims());
+                let gw = ops::matmul(&x2.t(), g);
+                let gb = ops::sum_axis(g, 0, false);
+                vec![Some(gx), Some(gw), Some(gb)]
+            }),
+        ),
+        None => Variable::from_function(
+            "affine",
+            &[x, w],
+            Box::new(move |xs| ops::matmul(&fwd_flat(&xs[0]), &xs[1])),
+            Box::new(move |xs, _y, g| {
+                let x2 = fwd_flat(&xs[0]);
+                let gx = ops::matmul(g, &xs[1].t()).reshape(xs[0].dims());
+                let gw = ops::matmul(&x2.t(), g);
+                vec![Some(gx), Some(gw)]
+            }),
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::functions::gradcheck::{check_grads, rand_leaf};
+    use crate::functions::mean_all;
+    use crate::tensor::Rng;
+
+    #[test]
+    fn affine_known_values() {
+        let x = Variable::from_array(NdArray::from_slice(&[1, 2], &[1., 2.]), true);
+        let w = Variable::from_array(NdArray::from_slice(&[2, 3], &[1., 0., 2., 0., 1., 3.]), true);
+        let b = Variable::from_array(NdArray::from_slice(&[3], &[10., 20., 30.]), true);
+        let y = affine(&x, &w, Some(&b));
+        assert_eq!(y.dims(), vec![1, 3]);
+        assert_eq!(y.data().data(), &[11., 22., 38.]);
+    }
+
+    #[test]
+    fn affine_flattens_trailing_axes() {
+        let mut rng = Rng::new(30);
+        let x = rand_leaf(&mut rng, &[2, 3, 4]); // flattened to [2, 12]
+        let w = rand_leaf(&mut rng, &[12, 5]);
+        let y = affine(&x, &w, None);
+        assert_eq!(y.dims(), vec![2, 5]);
+    }
+
+    #[test]
+    fn affine_gradcheck_with_bias() {
+        let mut rng = Rng::new(31);
+        let x = rand_leaf(&mut rng, &[3, 4]);
+        let w = rand_leaf(&mut rng, &[4, 2]);
+        let b = rand_leaf(&mut rng, &[2]);
+        let build = || mean_all(&affine(&x, &w, Some(&b)));
+        check_grads(&[&x, &w, &b], &build, 1e-3, 1e-2);
+    }
+
+    #[test]
+    fn affine_gradcheck_no_bias_4d_input() {
+        let mut rng = Rng::new(32);
+        let x = rand_leaf(&mut rng, &[2, 2, 2, 2]);
+        let w = rand_leaf(&mut rng, &[8, 3]);
+        let build = || mean_all(&affine(&x, &w, None));
+        check_grads(&[&x, &w], &build, 1e-3, 1e-2);
+    }
+
+    #[test]
+    fn listing1_forward_backward() {
+        // Listing 1: x = nn.Variable((16, 10)); y = PF.affine(x, 5)
+        let mut rng = Rng::new(33);
+        let x = Variable::from_array(rng.rand(&[16, 10], 0.0, 1.0), true);
+        let w = rand_leaf(&mut rng, &[10, 5]);
+        let b = Variable::from_array(NdArray::zeros(&[5]), true);
+        let y = affine(&x, &w, Some(&b));
+        y.forward();
+        y.backward();
+        assert_eq!(y.dims(), vec![16, 5]);
+        assert!(x.grad().norm2() > 0.0);
+        assert!(w.grad().norm2() > 0.0);
+        assert_eq!(b.grad().data(), &[16.0f32; 5]); // seed ones summed over batch
+    }
+}

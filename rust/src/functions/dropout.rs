@@ -1,0 +1,114 @@
+//! Dropout — the paper's flagship *dynamic graph* example ("networks
+//! containing randomly dropping layers for each minibatch", §2.2).
+//!
+//! The mask is resampled on every forward execution (including graph
+//! re-execution via `Variable::forward`), and shared with the backward
+//! closure through interior mutability.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use crate::graph::Variable;
+use crate::tensor::{ops, NdArray, Rng};
+
+thread_local! {
+    static DROPOUT_RNG: RefCell<Rng> = RefCell::new(Rng::new(0x5EED));
+}
+
+/// Reseed this thread's dropout RNG (reproducible runs / tests).
+pub fn seed_dropout(seed: u64) {
+    DROPOUT_RNG.with(|r| *r.borrow_mut() = Rng::new(seed));
+}
+
+/// Inverted dropout with drop probability `p`. Scaling by `1/(1-p)` at
+/// train time keeps inference a no-op (just don't apply the function).
+pub fn dropout(x: &Variable, p: f32) -> Variable {
+    assert!((0.0..1.0).contains(&p), "dropout p must be in [0,1), got {p}");
+    let mask: Rc<RefCell<Option<NdArray>>> = Rc::new(RefCell::new(None));
+    let mask_fwd = mask.clone();
+    let keep = 1.0 - p;
+    Variable::from_function(
+        "dropout",
+        &[x],
+        Box::new(move |xs| {
+            let m = DROPOUT_RNG.with(|r| {
+                let mut rng = r.borrow_mut();
+                let n = xs[0].size();
+                let data: Vec<f32> = (0..n)
+                    .map(|_| if rng.uniform() < p { 0.0 } else { 1.0 / keep })
+                    .collect();
+                NdArray::from_vec(xs[0].dims(), data)
+            });
+            let y = ops::mul(&xs[0], &m);
+            *mask_fwd.borrow_mut() = Some(m);
+            y
+        }),
+        Box::new(move |xs, _y, g| {
+            let m = mask.borrow();
+            let m = m.as_ref().unwrap_or_else(|| panic!("dropout backward before forward"));
+            assert_eq!(m.dims(), xs[0].dims());
+            vec![Some(ops::mul(g, m))]
+        }),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dropout_zero_p_is_identity() {
+        seed_dropout(1);
+        let x = Variable::from_array(NdArray::arange(&[10]), true);
+        let y = dropout(&x, 0.0);
+        assert_eq!(y.data().data(), x.data().data());
+    }
+
+    #[test]
+    fn dropout_preserves_expectation() {
+        seed_dropout(2);
+        let x = Variable::from_array(NdArray::ones(&[10_000]), true);
+        let y = dropout(&x, 0.5);
+        let mean = y.data().mean_all();
+        assert!((mean - 1.0).abs() < 0.05, "inverted dropout mean {mean}");
+        // zeros make up ~p of the entries
+        let zeros = y.data().data().iter().filter(|&&v| v == 0.0).count();
+        assert!((zeros as f32 / 10_000.0 - 0.5).abs() < 0.05);
+    }
+
+    #[test]
+    fn dropout_resamples_each_forward() {
+        // the dynamic-graph behaviour of §2.2
+        seed_dropout(3);
+        let x = Variable::from_array(NdArray::ones(&[1000]), true);
+        let y = dropout(&x, 0.5);
+        let first = y.data();
+        y.forward();
+        let second = y.data();
+        assert_ne!(first.data(), second.data());
+    }
+
+    #[test]
+    fn dropout_backward_uses_same_mask() {
+        seed_dropout(4);
+        let x = Variable::from_array(NdArray::ones(&[1000]), true);
+        let y = dropout(&x, 0.5);
+        let out = y.data();
+        crate::functions::sum_all(&y).backward();
+        let g = x.grad();
+        // gradient equals the mask: nonzero exactly where output nonzero
+        for i in 0..1000 {
+            assert_eq!(g.data()[i] == 0.0, out.data()[i] == 0.0, "elem {i}");
+        }
+    }
+
+    #[test]
+    fn dropout_deterministic_under_seed() {
+        seed_dropout(42);
+        let x = Variable::from_array(NdArray::ones(&[100]), false);
+        let a = dropout(&x, 0.3).data();
+        seed_dropout(42);
+        let b = dropout(&x, 0.3).data();
+        assert_eq!(a.data(), b.data());
+    }
+}

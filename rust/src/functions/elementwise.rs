@@ -1,0 +1,210 @@
+//! Broadcasted elementwise arithmetic on Variables.
+
+use crate::graph::Variable;
+use crate::tensor::{ops, NdArray};
+
+/// `a + b` with NumPy broadcasting.
+pub fn add(a: &Variable, b: &Variable) -> Variable {
+    Variable::from_function(
+        "add",
+        &[a, b],
+        Box::new(|xs| ops::add(&xs[0], &xs[1])),
+        Box::new(|xs, _y, g| {
+            vec![
+                Some(ops::reduce_to_shape(g, xs[0].shape())),
+                Some(ops::reduce_to_shape(g, xs[1].shape())),
+            ]
+        }),
+    )
+}
+
+/// `a - b`.
+pub fn sub(a: &Variable, b: &Variable) -> Variable {
+    Variable::from_function(
+        "sub",
+        &[a, b],
+        Box::new(|xs| ops::sub(&xs[0], &xs[1])),
+        Box::new(|xs, _y, g| {
+            vec![
+                Some(ops::reduce_to_shape(g, xs[0].shape())),
+                Some(ops::reduce_to_shape(&ops::scale(g, -1.0), xs[1].shape())),
+            ]
+        }),
+    )
+}
+
+/// `a * b`.
+pub fn mul(a: &Variable, b: &Variable) -> Variable {
+    Variable::from_function(
+        "mul",
+        &[a, b],
+        Box::new(|xs| ops::mul(&xs[0], &xs[1])),
+        Box::new(|xs, _y, g| {
+            vec![
+                Some(ops::reduce_to_shape(&ops::mul(g, &xs[1]), xs[0].shape())),
+                Some(ops::reduce_to_shape(&ops::mul(g, &xs[0]), xs[1].shape())),
+            ]
+        }),
+    )
+}
+
+/// `a / b`.
+pub fn div(a: &Variable, b: &Variable) -> Variable {
+    Variable::from_function(
+        "div",
+        &[a, b],
+        Box::new(|xs| ops::div(&xs[0], &xs[1])),
+        Box::new(|xs, _y, g| {
+            let ga = ops::div(g, &xs[1]);
+            // d/db (a/b) = -a/b^2
+            let gb = ops::mul(g, &ops::div(&ops::scale(&xs[0], -1.0), &ops::mul(&xs[1], &xs[1])));
+            vec![
+                Some(ops::reduce_to_shape(&ga, xs[0].shape())),
+                Some(ops::reduce_to_shape(&gb, xs[1].shape())),
+            ]
+        }),
+    )
+}
+
+/// `-a`.
+pub fn neg(a: &Variable) -> Variable {
+    Variable::from_function(
+        "neg",
+        &[a],
+        Box::new(|xs| ops::scale(&xs[0], -1.0)),
+        Box::new(|_xs, _y, g| vec![Some(ops::scale(g, -1.0))]),
+    )
+}
+
+/// `a + s` (scalar).
+pub fn add_scalar(a: &Variable, s: f32) -> Variable {
+    Variable::from_function(
+        "add_scalar",
+        &[a],
+        Box::new(move |xs| ops::map(&xs[0], |v| v + s)),
+        Box::new(|_xs, _y, g| vec![Some(g.clone())]),
+    )
+}
+
+/// `a * s` (scalar).
+pub fn mul_scalar(a: &Variable, s: f32) -> Variable {
+    Variable::from_function(
+        "mul_scalar",
+        &[a],
+        Box::new(move |xs| ops::scale(&xs[0], s)),
+        Box::new(move |_xs, _y, g| vec![Some(ops::scale(g, s))]),
+    )
+}
+
+/// `a ^ p` (elementwise, scalar exponent).
+pub fn pow_scalar(a: &Variable, p: f32) -> Variable {
+    Variable::from_function(
+        "pow_scalar",
+        &[a],
+        Box::new(move |xs| ops::map(&xs[0], |v| v.powf(p))),
+        Box::new(move |xs, _y, g| {
+            vec![Some(ops::mul(g, &ops::map(&xs[0], |v| p * v.powf(p - 1.0))))]
+        }),
+    )
+}
+
+/// `exp(a)`.
+pub fn exp(a: &Variable) -> Variable {
+    Variable::from_function(
+        "exp",
+        &[a],
+        Box::new(|xs| ops::map(&xs[0], f32::exp)),
+        Box::new(|_xs, y, g| vec![Some(ops::mul(g, y))]),
+    )
+}
+
+/// `ln(a)`.
+pub fn log(a: &Variable) -> Variable {
+    Variable::from_function(
+        "log",
+        &[a],
+        Box::new(|xs| ops::map(&xs[0], f32::ln)),
+        Box::new(|xs, _y, g| vec![Some(ops::div(g, &xs[0]))]),
+    )
+}
+
+/// Stop-gradient identity (useful for baselines / frozen branches).
+pub fn stop_gradient(a: &Variable) -> Variable {
+    Variable::from_function(
+        "stop_gradient",
+        &[a],
+        Box::new(|xs| xs[0].clone()),
+        Box::new(|xs, _y, _g| vec![None::<NdArray>; xs.len()]),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::functions::gradcheck::{check_grads, rand_leaf};
+    use crate::functions::{mean_all};
+    use crate::tensor::Rng;
+
+    #[test]
+    fn arithmetic_values() {
+        let a = Variable::from_array(NdArray::from_slice(&[2], &[1., 2.]), true);
+        let b = Variable::from_array(NdArray::from_slice(&[2], &[3., 4.]), true);
+        assert_eq!(add(&a, &b).data().data(), &[4., 6.]);
+        assert_eq!(sub(&a, &b).data().data(), &[-2., -2.]);
+        assert_eq!(mul(&a, &b).data().data(), &[3., 8.]);
+        assert_eq!(div(&a, &b).data().data(), &[1. / 3., 0.5]);
+        assert_eq!(neg(&a).data().data(), &[-1., -2.]);
+        assert_eq!(add_scalar(&a, 10.).data().data(), &[11., 12.]);
+        assert_eq!(mul_scalar(&a, 3.).data().data(), &[3., 6.]);
+        assert_eq!(pow_scalar(&a, 2.).data().data(), &[1., 4.]);
+    }
+
+    #[test]
+    fn grads_binary_ops() {
+        let mut rng = Rng::new(10);
+        let a = rand_leaf(&mut rng, &[2, 3]);
+        let b = rand_leaf(&mut rng, &[2, 3]);
+        // keep b away from 0 for div
+        b.set_data(crate::tensor::ops::map(&b.data(), |v| v + 3.0 * v.signum() + 0.5));
+        for (name, f) in [
+            ("add", add as fn(&Variable, &Variable) -> Variable),
+            ("sub", sub),
+            ("mul", mul),
+            ("div", div),
+        ] {
+            let build = || mean_all(&f(&a, &b));
+            check_grads(&[&a, &b], &build, 1e-3, 2e-2);
+            let _ = name;
+        }
+    }
+
+    #[test]
+    fn grads_broadcast_bias() {
+        let mut rng = Rng::new(11);
+        let x = rand_leaf(&mut rng, &[4, 3]);
+        let bias = rand_leaf(&mut rng, &[3]);
+        let build = || mean_all(&add(&x, &bias));
+        check_grads(&[&x, &bias], &build, 1e-3, 1e-2);
+    }
+
+    #[test]
+    fn grads_unary_ops() {
+        let mut rng = Rng::new(12);
+        let x = rand_leaf(&mut rng, &[5]);
+        x.set_data(crate::tensor::ops::map(&x.data(), |v| v.abs() + 0.5)); // positive for log
+        for f in [exp as fn(&Variable) -> Variable, log, neg] {
+            let build = || mean_all(&f(&x));
+            check_grads(&[&x], &build, 1e-3, 2e-2);
+        }
+        let build = || mean_all(&pow_scalar(&x, 3.0));
+        check_grads(&[&x], &build, 1e-3, 2e-2);
+    }
+
+    #[test]
+    fn stop_gradient_blocks_backward() {
+        let x = Variable::from_array(NdArray::full(&[2], 2.0), true);
+        let y = mean_all(&stop_gradient(&mul(&x, &x)));
+        y.backward();
+        assert_eq!(x.grad().data(), &[0., 0.]);
+    }
+}

@@ -1,0 +1,96 @@
+//! Numerical gradient checking via central finite differences — the
+//! correctness oracle for every function's backward pass.
+
+use crate::graph::Variable;
+use crate::tensor::NdArray;
+
+/// Check analytic gradients of `build` (a scalar-valued graph over the
+/// given leaves) against central differences. Panics with the offending
+/// element on mismatch.
+///
+/// `build` is called repeatedly with the same leaf variables, whose data
+/// is perturbed between calls; it must rebuild the graph each time
+/// (define-by-run, so simply calling the builder again is correct).
+pub fn check_grads(
+    leaves: &[&Variable],
+    build: &dyn Fn() -> Variable,
+    eps: f32,
+    tol: f32,
+) {
+    // analytic
+    for l in leaves {
+        l.zero_grad();
+    }
+    let out = build();
+    assert_eq!(out.size(), 1, "gradcheck requires a scalar output");
+    out.backward();
+    let analytic: Vec<NdArray> = leaves.iter().map(|l| l.grad()).collect();
+
+    // numeric
+    for (li, leaf) in leaves.iter().enumerate() {
+        let base = leaf.data();
+        for i in 0..base.size() {
+            let mut plus = base.clone();
+            plus.data_mut()[i] += eps;
+            leaf.set_data(plus);
+            let f_plus = build().item();
+
+            let mut minus = base.clone();
+            minus.data_mut()[i] -= eps;
+            leaf.set_data(minus);
+            let f_minus = build().item();
+
+            leaf.set_data(base.clone());
+            let numeric = (f_plus - f_minus) / (2.0 * eps);
+            let a = analytic[li].data()[i];
+            let denom = a.abs().max(numeric.abs()).max(1.0);
+            assert!(
+                (a - numeric).abs() / denom <= tol,
+                "grad mismatch leaf {li} elem {i}: analytic {a} vs numeric {numeric}"
+            );
+        }
+    }
+}
+
+/// Convenience: random leaf of the given shape for gradcheck tests.
+pub fn rand_leaf(rng: &mut crate::tensor::Rng, dims: &[usize]) -> Variable {
+    Variable::from_array(rng.randn(dims, 1.0), true)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{ops, Rng};
+
+    #[test]
+    fn catches_correct_gradient() {
+        let mut rng = Rng::new(0);
+        let x = rand_leaf(&mut rng, &[3]);
+        // f = sum(x*x); df/dx = 2x
+        let build = || {
+            Variable::from_function(
+                "sumsq",
+                &[&x],
+                Box::new(|xs| NdArray::scalar(xs[0].data().iter().map(|v| v * v).sum())),
+                Box::new(|xs, _y, g| vec![Some(ops::scale(&xs[0], 2.0 * g.item()))]),
+            )
+        };
+        check_grads(&[&x], &build, 1e-3, 1e-3);
+    }
+
+    #[test]
+    #[should_panic(expected = "grad mismatch")]
+    fn catches_wrong_gradient() {
+        let mut rng = Rng::new(1);
+        let x = rand_leaf(&mut rng, &[3]);
+        let build = || {
+            Variable::from_function(
+                "bad",
+                &[&x],
+                Box::new(|xs| NdArray::scalar(xs[0].data().iter().map(|v| v * v).sum())),
+                Box::new(|xs, _y, g| vec![Some(ops::scale(&xs[0], 3.0 * g.item()))]), // wrong: 3x
+            )
+        };
+        check_grads(&[&x], &build, 1e-3, 1e-3);
+    }
+}

@@ -1,0 +1,180 @@
+//! Loss functions. Per NNabla convention these return *per-example*
+//! losses of shape `[B, 1]`; reduce with `F::mean_all` to get the
+//! scalar training loss.
+
+use crate::graph::Variable;
+use crate::tensor::{ops, NdArray};
+
+use super::softmax::softmax_fwd;
+
+/// Softmax cross-entropy with integer labels. `x: [B, C]`,
+/// `t: [B, 1]` (label indices stored as f32). Output `[B, 1]`.
+pub fn softmax_cross_entropy(x: &Variable, t: &Variable) -> Variable {
+    Variable::from_function(
+        "softmax_cross_entropy",
+        &[x, t],
+        Box::new(|xs| {
+            let (x, t) = (&xs[0], &xs[1]);
+            let b = x.dims()[0];
+            let c = x.dims()[1];
+            let p = softmax_fwd(x);
+            let mut out = vec![0.0f32; b];
+            for i in 0..b {
+                let label = t.data()[i] as usize;
+                assert!(label < c, "label {label} out of range {c}");
+                out[i] = -p.data()[i * c + label].max(1e-30).ln();
+            }
+            NdArray::from_vec(&[b, 1], out)
+        }),
+        Box::new(|xs, _y, gy| {
+            let (x, t) = (&xs[0], &xs[1]);
+            let b = x.dims()[0];
+            let c = x.dims()[1];
+            let p = softmax_fwd(x);
+            let mut gx = p.into_vec();
+            for i in 0..b {
+                let label = t.data()[i] as usize;
+                gx[i * c + label] -= 1.0;
+                let gv = gy.data()[i];
+                for j in 0..c {
+                    gx[i * c + j] *= gv;
+                }
+            }
+            vec![Some(NdArray::from_vec(x.dims(), gx)), None]
+        }),
+    )
+}
+
+/// Elementwise squared error `(x - t)^2` (no reduction).
+pub fn squared_error(x: &Variable, t: &Variable) -> Variable {
+    Variable::from_function(
+        "squared_error",
+        &[x, t],
+        Box::new(|xs| ops::zip_broadcast(&xs[0], &xs[1], |a, b| (a - b) * (a - b))),
+        Box::new(|xs, _y, g| {
+            let d = ops::sub(&xs[0], &xs[1]);
+            let gx = ops::mul(g, &ops::scale(&d, 2.0));
+            vec![
+                Some(ops::reduce_to_shape(&gx, xs[0].shape())),
+                Some(ops::reduce_to_shape(&ops::scale(&gx, -1.0), xs[1].shape())),
+            ]
+        }),
+    )
+}
+
+/// Sigmoid cross-entropy with binary targets (elementwise, stable form
+/// `max(x,0) - x*t + log(1+exp(-|x|))`).
+pub fn sigmoid_cross_entropy(x: &Variable, t: &Variable) -> Variable {
+    Variable::from_function(
+        "sigmoid_cross_entropy",
+        &[x, t],
+        Box::new(|xs| {
+            ops::zip_broadcast(&xs[0], &xs[1], |x, t| {
+                x.max(0.0) - x * t + (1.0 + (-x.abs()).exp()).ln()
+            })
+        }),
+        Box::new(|xs, _y, g| {
+            let gx = ops::zip_broadcast(&xs[0], &xs[1], |x, t| {
+                let s = 1.0 / (1.0 + (-x).exp());
+                s - t
+            });
+            vec![Some(ops::mul(g, &gx)), None]
+        }),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::functions::gradcheck::{check_grads, rand_leaf};
+    use crate::functions::mean_all;
+    use crate::tensor::Rng;
+
+    #[test]
+    fn sce_uniform_logits_is_log_c() {
+        let x = Variable::from_array(NdArray::zeros(&[2, 4]), true);
+        let t = Variable::from_array(NdArray::from_slice(&[2, 1], &[0., 3.]), false);
+        let l = softmax_cross_entropy(&x, &t);
+        assert_eq!(l.dims(), vec![2, 1]);
+        for &v in l.data().data() {
+            assert!((v - 4f32.ln()).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn sce_perfect_prediction_near_zero() {
+        let mut x = NdArray::zeros(&[1, 3]);
+        x.set(&[0, 1], 100.0);
+        let xv = Variable::from_array(x, true);
+        let t = Variable::from_array(NdArray::from_slice(&[1, 1], &[1.]), false);
+        assert!(softmax_cross_entropy(&xv, &t).item() < 1e-5);
+    }
+
+    #[test]
+    fn sce_gradcheck() {
+        let mut rng = Rng::new(70);
+        let x = rand_leaf(&mut rng, &[3, 5]);
+        let t = Variable::from_array(NdArray::from_slice(&[3, 1], &[0., 2., 4.]), false);
+        let build = || mean_all(&softmax_cross_entropy(&x, &t));
+        check_grads(&[&x], &build, 1e-3, 2e-2);
+    }
+
+    #[test]
+    fn sce_grad_is_p_minus_onehot() {
+        let mut rng = Rng::new(71);
+        let x = rand_leaf(&mut rng, &[2, 3]);
+        let t = Variable::from_array(NdArray::from_slice(&[2, 1], &[1., 0.]), false);
+        let l = mean_all(&softmax_cross_entropy(&x, &t));
+        l.backward();
+        let p = softmax_fwd(&x.data());
+        let g = x.grad();
+        // g = (p - onehot)/2 (mean over 2 examples)
+        assert!((g.at(&[0, 1]) - (p.at(&[0, 1]) - 1.0) / 2.0).abs() < 1e-5);
+        assert!((g.at(&[0, 0]) - p.at(&[0, 0]) / 2.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn squared_error_values_and_grads() {
+        let x = Variable::from_array(NdArray::from_slice(&[2], &[3., 5.]), true);
+        let t = Variable::from_array(NdArray::from_slice(&[2], &[1., 1.]), false);
+        let l = squared_error(&x, &t);
+        assert_eq!(l.data().data(), &[4., 16.]);
+        let m = mean_all(&l);
+        m.backward();
+        assert_eq!(x.grad().data(), &[2., 4.]); // 2(x-t)/2
+    }
+
+    #[test]
+    fn squared_error_gradcheck_both_sides() {
+        let mut rng = Rng::new(72);
+        let x = rand_leaf(&mut rng, &[4]);
+        let t = rand_leaf(&mut rng, &[4]);
+        let build = || mean_all(&squared_error(&x, &t));
+        check_grads(&[&x, &t], &build, 1e-3, 1e-2);
+    }
+
+    #[test]
+    fn bce_matches_naive_formula() {
+        let mut rng = Rng::new(73);
+        let x = rand_leaf(&mut rng, &[6]);
+        let t = Variable::from_array(
+            NdArray::from_slice(&[6], &[1., 0., 1., 1., 0., 0.]),
+            false,
+        );
+        let stable = sigmoid_cross_entropy(&x, &t).data();
+        let naive = ops::zip_broadcast(&x.data(), &t.data(), |x, t| {
+            let s = 1.0 / (1.0 + (-x).exp());
+            -(t * s.ln() + (1.0 - t) * (1.0 - s).ln())
+        });
+        assert!(stable.allclose(&naive, 1e-5, 1e-4));
+    }
+
+    #[test]
+    fn bce_gradcheck() {
+        let mut rng = Rng::new(74);
+        let x = rand_leaf(&mut rng, &[5]);
+        let t = Variable::from_array(NdArray::from_slice(&[5], &[1., 0., 1., 0., 1.]), false);
+        let build = || mean_all(&sigmoid_cross_entropy(&x, &t));
+        check_grads(&[&x], &build, 1e-3, 2e-2);
+    }
+}

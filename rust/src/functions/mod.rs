@@ -1,0 +1,36 @@
+//! `F::*` — the paper's second building block: "mathematical operations
+//! that can be applied to variables" (§2.1). Every function records a
+//! node on the tape (forward + backward closures), so graphs built from
+//! these run in both dynamic (define-by-run) and static-reuse modes.
+//!
+//! Conventions (matching NNabla):
+//! - image tensors are NCHW;
+//! - `affine`/losses treat axis 0 as the batch axis (`base_axis=1`);
+//! - losses return per-example values; use [`mean_all`] to reduce.
+
+pub mod activation;
+pub mod affine;
+pub mod convolution;
+pub mod dropout;
+pub mod elementwise;
+pub mod gradcheck;
+pub mod loss;
+pub mod normalization;
+pub mod pooling;
+pub mod reduction;
+pub mod softmax;
+pub mod tensor_ops;
+
+pub use activation::{elu, gelu, leaky_relu, relu, sigmoid, softplus, swish, tanh};
+pub use affine::affine;
+pub use convolution::{convolution, deconvolution};
+pub use dropout::dropout;
+pub use elementwise::{
+    add, add_scalar, div, exp, log, mul, mul_scalar, neg, pow_scalar, sub,
+};
+pub use loss::{sigmoid_cross_entropy, softmax_cross_entropy, squared_error};
+pub use normalization::{batch_normalization, layer_normalization};
+pub use pooling::{average_pooling, global_average_pooling, max_pooling};
+pub use reduction::{mean_all, mean_axis, sum_all, sum_axis};
+pub use softmax::{log_softmax, softmax};
+pub use tensor_ops::{broadcast_to, concat, embed, reshape, slice_axis, transpose};

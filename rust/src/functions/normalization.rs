@@ -1,0 +1,350 @@
+//! Batch / layer normalization.
+//!
+//! Batch normalization follows the paper's mixed-precision rule: it is
+//! always computed in f32 even under `type_config='half'` ("batch
+//! normalization is in FP-32", §3.3) — in this engine all compute is
+//! f32, so the rule holds by construction; the *storage* of its
+//! parameters is what the half config quantizes.
+
+use crate::graph::Variable;
+use crate::tensor::{ops, NdArray};
+
+/// View `[N, C, ...]` as (n, c, s) with s = product of trailing dims.
+fn ncs(x: &NdArray) -> (usize, usize, usize) {
+    let d = x.dims();
+    assert!(d.len() >= 2, "batch_normalization needs rank >= 2, got {:?}", d);
+    (d[0], d[1], d[2..].iter().product::<usize>().max(1))
+}
+
+/// Per-channel batch statistics over (N, spatial).
+fn channel_stats(x: &NdArray) -> (Vec<f32>, Vec<f32>) {
+    let (n, c, s) = ncs(x);
+    let cnt = (n * s) as f32;
+    let mut mean = vec![0.0f32; c];
+    let mut var = vec![0.0f32; c];
+    for ni in 0..n {
+        for ci in 0..c {
+            let base = (ni * c + ci) * s;
+            for si in 0..s {
+                mean[ci] += x.data()[base + si];
+            }
+        }
+    }
+    for m in &mut mean {
+        *m /= cnt;
+    }
+    for ni in 0..n {
+        for ci in 0..c {
+            let base = (ni * c + ci) * s;
+            for si in 0..s {
+                let d = x.data()[base + si] - mean[ci];
+                var[ci] += d * d;
+            }
+        }
+    }
+    for v in &mut var {
+        *v /= cnt;
+    }
+    (mean, var)
+}
+
+fn bn_apply(x: &NdArray, mean: &[f32], var: &[f32], gamma: &NdArray, beta: &NdArray, eps: f32) -> NdArray {
+    let (n, c, s) = ncs(x);
+    let mut out = vec![0.0f32; x.size()];
+    for ni in 0..n {
+        for ci in 0..c {
+            let inv = 1.0 / (var[ci] + eps).sqrt();
+            let (g, b) = (gamma.data()[ci], beta.data()[ci]);
+            let base = (ni * c + ci) * s;
+            for si in 0..s {
+                out[base + si] = g * (x.data()[base + si] - mean[ci]) * inv + b;
+            }
+        }
+    }
+    NdArray::from_vec(x.dims(), out)
+}
+
+/// Batch normalization over the channel axis (axis 1).
+///
+/// Inputs: `x [N,C,...]`, `beta [C]`, `gamma [C]`, and the running
+/// `mean`/`var` leaves (updated in place when `batch_stat` is true,
+/// with `rm = decay·rm + (1-decay)·batch_mean`).
+#[allow(clippy::too_many_arguments)]
+pub fn batch_normalization(
+    x: &Variable,
+    beta: &Variable,
+    gamma: &Variable,
+    mean: &Variable,
+    var: &Variable,
+    decay: f32,
+    eps: f32,
+    batch_stat: bool,
+) -> Variable {
+    if batch_stat {
+        // capture running-stat variables for the in-place update
+        let rm = mean.clone();
+        let rv = var.clone();
+        Variable::from_function(
+            "batch_normalization",
+            &[x, beta, gamma, mean, var],
+            Box::new(move |xs| {
+                let (bm, bv) = channel_stats(&xs[0]);
+                // update running stats (training-time side effect)
+                let old_m = rm.data();
+                let old_v = rv.data();
+                let new_m: Vec<f32> = old_m
+                    .data()
+                    .iter()
+                    .zip(&bm)
+                    .map(|(&o, &b)| decay * o + (1.0 - decay) * b)
+                    .collect();
+                let new_v: Vec<f32> = old_v
+                    .data()
+                    .iter()
+                    .zip(&bv)
+                    .map(|(&o, &b)| decay * o + (1.0 - decay) * b)
+                    .collect();
+                rm.set_data(NdArray::from_vec(old_m.dims(), new_m));
+                rv.set_data(NdArray::from_vec(old_v.dims(), new_v));
+                bn_apply(&xs[0], &bm, &bv, &xs[2], &xs[1], eps)
+            }),
+            Box::new(move |xs, _y, gy| {
+                let x = &xs[0];
+                let gamma = &xs[2];
+                let (n, c, s) = ncs(x);
+                let cnt = (n * s) as f32;
+                let (bm, bv) = channel_stats(x);
+                // per-channel sums: sum(gy), sum(gy * xhat)
+                let mut sum_g = vec![0.0f32; c];
+                let mut sum_gx = vec![0.0f32; c];
+                for ni in 0..n {
+                    for ci in 0..c {
+                        let inv = 1.0 / (bv[ci] + eps).sqrt();
+                        let base = (ni * c + ci) * s;
+                        for si in 0..s {
+                            let xhat = (x.data()[base + si] - bm[ci]) * inv;
+                            sum_g[ci] += gy.data()[base + si];
+                            sum_gx[ci] += gy.data()[base + si] * xhat;
+                        }
+                    }
+                }
+                let mut gx = vec![0.0f32; x.size()];
+                for ni in 0..n {
+                    for ci in 0..c {
+                        let inv = 1.0 / (bv[ci] + eps).sqrt();
+                        let base = (ni * c + ci) * s;
+                        for si in 0..s {
+                            let xhat = (x.data()[base + si] - bm[ci]) * inv;
+                            gx[base + si] = gamma.data()[ci] * inv / cnt
+                                * (cnt * gy.data()[base + si] - sum_g[ci] - xhat * sum_gx[ci]);
+                        }
+                    }
+                }
+                vec![
+                    Some(NdArray::from_vec(x.dims(), gx)),
+                    Some(NdArray::from_vec(&[c], sum_g)),  // dbeta
+                    Some(NdArray::from_vec(&[c], sum_gx)), // dgamma
+                    None,
+                    None,
+                ]
+            }),
+        )
+    } else {
+        // inference: use running stats, no side effects
+        Variable::from_function(
+            "batch_normalization",
+            &[x, beta, gamma, mean, var],
+            Box::new(move |xs| {
+                bn_apply(&xs[0], xs[3].data(), xs[4].data(), &xs[2], &xs[1], eps)
+            }),
+            Box::new(move |xs, _y, gy| {
+                let x = &xs[0];
+                let gamma = &xs[2];
+                let (n, c, s) = ncs(x);
+                let rm = xs[3].data();
+                let rv = xs[4].data();
+                let mut gx = vec![0.0f32; x.size()];
+                let mut sum_g = vec![0.0f32; c];
+                let mut sum_gx = vec![0.0f32; c];
+                for ni in 0..n {
+                    for ci in 0..c {
+                        let inv = 1.0 / (rv[ci] + eps).sqrt();
+                        let base = (ni * c + ci) * s;
+                        for si in 0..s {
+                            let xhat = (x.data()[base + si] - rm[ci]) * inv;
+                            gx[base + si] = gamma.data()[ci] * inv * gy.data()[base + si];
+                            sum_g[ci] += gy.data()[base + si];
+                            sum_gx[ci] += gy.data()[base + si] * xhat;
+                        }
+                    }
+                }
+                vec![
+                    Some(NdArray::from_vec(x.dims(), gx)),
+                    Some(NdArray::from_vec(&[c], sum_g)),
+                    Some(NdArray::from_vec(&[c], sum_gx)),
+                    None,
+                    None,
+                ]
+            }),
+        )
+    }
+}
+
+/// Layer normalization over the last axis with learnable `gamma`/`beta`
+/// of shape `[D]` (used by the TransformerLM).
+pub fn layer_normalization(x: &Variable, beta: &Variable, gamma: &Variable, eps: f32) -> Variable {
+    Variable::from_function(
+        "layer_normalization",
+        &[x, beta, gamma],
+        Box::new(move |xs| {
+            let x = &xs[0];
+            let last = x.rank() - 1;
+            let mu = ops::mean_axis(x, last, true);
+            let xc = ops::sub(x, &mu);
+            let var = ops::mean_axis(&ops::mul(&xc, &xc), last, true);
+            let inv = ops::map(&var, |v| 1.0 / (v + eps).sqrt());
+            ops::add(&ops::mul(&ops::mul(&xc, &inv), &xs[2]), &xs[1])
+        }),
+        Box::new(move |xs, _y, gy| {
+            let x = &xs[0];
+            let gamma = &xs[2];
+            let last = x.rank() - 1;
+            let d = x.dims()[last] as f32;
+            let mu = ops::mean_axis(x, last, true);
+            let xc = ops::sub(x, &mu);
+            let var = ops::mean_axis(&ops::mul(&xc, &xc), last, true);
+            let inv = ops::map(&var, |v| 1.0 / (v + eps).sqrt());
+            let xhat = ops::mul(&xc, &inv);
+            let gg = ops::mul(gy, gamma); // dL/dxhat
+            let m1 = ops::mean_axis(&gg, last, true);
+            let m2 = ops::mean_axis(&ops::mul(&gg, &xhat), last, true);
+            let gx = ops::mul(&inv, &ops::sub(&ops::sub(&gg, &m1), &ops::mul(&xhat, &m2)));
+            // dbeta/dgamma: reduce over all axes but the last
+            let gbeta = ops::reduce_to_shape(gy, xs[1].shape());
+            let ggamma = ops::reduce_to_shape(&ops::mul(gy, &xhat), xs[2].shape());
+            let _ = d;
+            vec![Some(gx), Some(gbeta), Some(ggamma)]
+        }),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::functions::gradcheck::{check_grads, rand_leaf};
+    use crate::functions::mean_all;
+    use crate::tensor::Rng;
+
+    fn bn_params(c: usize) -> (Variable, Variable, Variable, Variable) {
+        let beta = Variable::from_array(NdArray::zeros(&[c]), true);
+        let gamma = Variable::from_array(NdArray::ones(&[c]), true);
+        let mean = Variable::from_array(NdArray::zeros(&[c]), false);
+        let var = Variable::from_array(NdArray::ones(&[c]), false);
+        (beta, gamma, mean, var)
+    }
+
+    #[test]
+    fn bn_normalizes_batch() {
+        let mut rng = Rng::new(100);
+        let x = Variable::from_array(rng.randn(&[8, 3, 4, 4], 5.0), true);
+        let (beta, gamma, mean, var) = bn_params(3);
+        let y = batch_normalization(&x, &beta, &gamma, &mean, &var, 0.9, 1e-5, true);
+        let (m, v) = channel_stats(&y.data());
+        for c in 0..3 {
+            assert!(m[c].abs() < 1e-4, "mean {}", m[c]);
+            assert!((v[c] - 1.0).abs() < 1e-2, "var {}", v[c]);
+        }
+    }
+
+    #[test]
+    fn bn_updates_running_stats() {
+        let mut rng = Rng::new(101);
+        let x = Variable::from_array(
+            ops::add(&rng.randn(&[16, 2, 2, 2], 1.0), &NdArray::full(&[16, 2, 2, 2], 10.0)),
+            false,
+        );
+        let (beta, gamma, mean, var) = bn_params(2);
+        let _ = batch_normalization(&x, &beta, &gamma, &mean, &var, 0.5, 1e-5, true);
+        // rm = 0.5*0 + 0.5*~10
+        for c in 0..2 {
+            assert!((mean.data().data()[c] - 5.0).abs() < 0.5);
+        }
+    }
+
+    #[test]
+    fn bn_inference_uses_running_stats() {
+        let x = Variable::from_array(NdArray::full(&[2, 1, 1, 1], 4.0), false);
+        let (beta, gamma, mean, var) = bn_params(1);
+        mean.set_data(NdArray::from_slice(&[1], &[2.0]));
+        var.set_data(NdArray::from_slice(&[1], &[4.0]));
+        let y = batch_normalization(&x, &beta, &gamma, &mean, &var, 0.9, 0.0, false);
+        // (4-2)/2 = 1
+        assert!((y.data().data()[0] - 1.0).abs() < 1e-5);
+        // running stats untouched in inference
+        assert_eq!(mean.data().data(), &[2.0]);
+    }
+
+    #[test]
+    fn bn_gradcheck_training() {
+        let mut rng = Rng::new(102);
+        let x = rand_leaf(&mut rng, &[4, 2, 2, 2]);
+        let (beta, gamma, mean, var) = bn_params(2);
+        let beta2 = rand_leaf(&mut rng, &[2]);
+        let gamma2 = rand_leaf(&mut rng, &[2]);
+        let _ = (beta, gamma);
+        let build =
+            || mean_all(&crate::functions::pow_scalar(
+                &batch_normalization(&x, &beta2, &gamma2, &mean, &var, 1.0, 1e-5, true),
+                2.0,
+            ));
+        check_grads(&[&x, &beta2, &gamma2], &build, 1e-2, 3e-2);
+    }
+
+    #[test]
+    fn bn_gradcheck_inference() {
+        let mut rng = Rng::new(103);
+        let x = rand_leaf(&mut rng, &[3, 2]);
+        let beta = rand_leaf(&mut rng, &[2]);
+        let gamma = rand_leaf(&mut rng, &[2]);
+        let mean = Variable::from_array(rng.randn(&[2], 1.0), false);
+        let var = Variable::from_array(NdArray::from_slice(&[2], &[1.5, 0.7]), false);
+        let build = || {
+            mean_all(&crate::functions::pow_scalar(
+                &batch_normalization(&x, &beta, &gamma, &mean, &var, 0.9, 1e-5, false),
+                2.0,
+            ))
+        };
+        check_grads(&[&x, &beta, &gamma], &build, 1e-3, 2e-2);
+    }
+
+    #[test]
+    fn layer_norm_normalizes_rows() {
+        let mut rng = Rng::new(104);
+        let x = Variable::from_array(rng.randn(&[4, 8], 3.0), true);
+        let beta = Variable::from_array(NdArray::zeros(&[8]), true);
+        let gamma = Variable::from_array(NdArray::ones(&[8]), true);
+        let y = layer_normalization(&x, &beta, &gamma, 1e-5).data();
+        for i in 0..4 {
+            let row = &y.data()[i * 8..(i + 1) * 8];
+            let m: f32 = row.iter().sum::<f32>() / 8.0;
+            let v: f32 = row.iter().map(|r| (r - m) * (r - m)).sum::<f32>() / 8.0;
+            assert!(m.abs() < 1e-4);
+            assert!((v - 1.0).abs() < 1e-2);
+        }
+    }
+
+    #[test]
+    fn layer_norm_gradcheck() {
+        let mut rng = Rng::new(105);
+        let x = rand_leaf(&mut rng, &[3, 5]);
+        let beta = rand_leaf(&mut rng, &[5]);
+        let gamma = rand_leaf(&mut rng, &[5]);
+        let build = || {
+            mean_all(&crate::functions::pow_scalar(
+                &layer_normalization(&x, &beta, &gamma, 1e-5),
+                2.0,
+            ))
+        };
+        check_grads(&[&x, &beta, &gamma], &build, 1e-2, 3e-2);
+    }
+}

@@ -1,0 +1,257 @@
+//! Spatial pooling: max / average / global-average (NCHW).
+
+use crate::graph::Variable;
+use crate::tensor::NdArray;
+
+fn pool_out_hw(h: usize, w: usize, k: (usize, usize), s: (usize, usize), p: (usize, usize)) -> (usize, usize) {
+    ((h + 2 * p.0 - k.0) / s.0 + 1, (w + 2 * p.1 - k.1) / s.1 + 1)
+}
+
+fn max_pool_fwd(
+    x: &NdArray,
+    k: (usize, usize),
+    s: (usize, usize),
+    p: (usize, usize),
+) -> (NdArray, Vec<usize>) {
+    let (n, c, h, w) = (x.dims()[0], x.dims()[1], x.dims()[2], x.dims()[3]);
+    let (oh, ow) = pool_out_hw(h, w, k, s, p);
+    let mut out = vec![f32::NEG_INFINITY; n * c * oh * ow];
+    let mut arg = vec![usize::MAX; n * c * oh * ow];
+    let xd = x.data();
+    for ni in 0..n {
+        for ci in 0..c {
+            let plane = (ni * c + ci) * h * w;
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let oi = ((ni * c + ci) * oh + oy) * ow + ox;
+                    for ky in 0..k.0 {
+                        let iy = (oy * s.0 + ky) as isize - p.0 as isize;
+                        if iy < 0 || iy as usize >= h {
+                            continue;
+                        }
+                        for kx in 0..k.1 {
+                            let ix = (ox * s.1 + kx) as isize - p.1 as isize;
+                            if ix < 0 || ix as usize >= w {
+                                continue;
+                            }
+                            let src = plane + iy as usize * w + ix as usize;
+                            if xd[src] > out[oi] {
+                                out[oi] = xd[src];
+                                arg[oi] = src;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    (NdArray::from_vec(&[n, c, oh, ow], out), arg)
+}
+
+/// Max pooling (`F.max_pooling` in Listings 4/5).
+pub fn max_pooling(
+    x: &Variable,
+    kernel: (usize, usize),
+    stride: (usize, usize),
+    pad: (usize, usize),
+) -> Variable {
+    Variable::from_function(
+        "max_pooling",
+        &[x],
+        Box::new(move |xs| max_pool_fwd(&xs[0], kernel, stride, pad).0),
+        Box::new(move |xs, _y, gy| {
+            // recompute argmax (cheap relative to storing state)
+            let (_, arg) = max_pool_fwd(&xs[0], kernel, stride, pad);
+            let mut gx = vec![0.0f32; xs[0].size()];
+            for (oi, &src) in arg.iter().enumerate() {
+                if src != usize::MAX {
+                    gx[src] += gy.data()[oi];
+                }
+            }
+            vec![Some(NdArray::from_vec(xs[0].dims(), gx))]
+        }),
+    )
+}
+
+/// Average pooling. `including_pad=false` divides by the count of valid
+/// (non-padding) cells, matching NNabla's default.
+pub fn average_pooling(
+    x: &Variable,
+    kernel: (usize, usize),
+    stride: (usize, usize),
+    pad: (usize, usize),
+    including_pad: bool,
+) -> Variable {
+    let fwd = move |x: &NdArray| -> NdArray {
+        let (n, c, h, w) = (x.dims()[0], x.dims()[1], x.dims()[2], x.dims()[3]);
+        let (oh, ow) = pool_out_hw(h, w, kernel, stride, pad);
+        let mut out = vec![0.0f32; n * c * oh * ow];
+        let xd = x.data();
+        for ni in 0..n {
+            for ci in 0..c {
+                let plane = (ni * c + ci) * h * w;
+                for oy in 0..oh {
+                    for ox in 0..ow {
+                        let mut acc = 0.0f32;
+                        let mut cnt = 0usize;
+                        for ky in 0..kernel.0 {
+                            let iy = (oy * stride.0 + ky) as isize - pad.0 as isize;
+                            for kx in 0..kernel.1 {
+                                let ix = (ox * stride.1 + kx) as isize - pad.1 as isize;
+                                if iy >= 0 && (iy as usize) < h && ix >= 0 && (ix as usize) < w {
+                                    acc += xd[plane + iy as usize * w + ix as usize];
+                                    cnt += 1;
+                                }
+                            }
+                        }
+                        let denom = if including_pad { kernel.0 * kernel.1 } else { cnt.max(1) };
+                        out[((ni * c + ci) * oh + oy) * ow + ox] = acc / denom as f32;
+                    }
+                }
+            }
+        }
+        NdArray::from_vec(&[n, c, oh, ow], out)
+    };
+    Variable::from_function(
+        "average_pooling",
+        &[x],
+        Box::new(move |xs| fwd(&xs[0])),
+        Box::new(move |xs, _y, gy| {
+            let (n, c, h, w) =
+                (xs[0].dims()[0], xs[0].dims()[1], xs[0].dims()[2], xs[0].dims()[3]);
+            let (oh, ow) = pool_out_hw(h, w, kernel, stride, pad);
+            let mut gx = vec![0.0f32; xs[0].size()];
+            for ni in 0..n {
+                for ci in 0..c {
+                    let plane = (ni * c + ci) * h * w;
+                    for oy in 0..oh {
+                        for ox in 0..ow {
+                            // count valid cells for the divisor
+                            let mut cnt = 0usize;
+                            for ky in 0..kernel.0 {
+                                let iy = (oy * stride.0 + ky) as isize - pad.0 as isize;
+                                for kx in 0..kernel.1 {
+                                    let ix = (ox * stride.1 + kx) as isize - pad.1 as isize;
+                                    if iy >= 0 && (iy as usize) < h && ix >= 0 && (ix as usize) < w {
+                                        cnt += 1;
+                                    }
+                                }
+                            }
+                            let denom =
+                                if including_pad { kernel.0 * kernel.1 } else { cnt.max(1) };
+                            let gv = gy.data()[((ni * c + ci) * oh + oy) * ow + ox]
+                                / denom as f32;
+                            for ky in 0..kernel.0 {
+                                let iy = (oy * stride.0 + ky) as isize - pad.0 as isize;
+                                for kx in 0..kernel.1 {
+                                    let ix = (ox * stride.1 + kx) as isize - pad.1 as isize;
+                                    if iy >= 0 && (iy as usize) < h && ix >= 0 && (ix as usize) < w {
+                                        gx[plane + iy as usize * w + ix as usize] += gv;
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            vec![Some(NdArray::from_vec(xs[0].dims(), gx))]
+        }),
+    )
+}
+
+/// Global average pooling: `[N, C, H, W] -> [N, C]`.
+pub fn global_average_pooling(x: &Variable) -> Variable {
+    Variable::from_function(
+        "global_average_pooling",
+        &[x],
+        Box::new(|xs| {
+            let (n, c, h, w) =
+                (xs[0].dims()[0], xs[0].dims()[1], xs[0].dims()[2], xs[0].dims()[3]);
+            let mut out = vec![0.0f32; n * c];
+            for i in 0..n * c {
+                let s: f32 = xs[0].data()[i * h * w..(i + 1) * h * w].iter().sum();
+                out[i] = s / (h * w) as f32;
+            }
+            NdArray::from_vec(&[n, c], out)
+        }),
+        Box::new(|xs, _y, gy| {
+            let (n, c, h, w) =
+                (xs[0].dims()[0], xs[0].dims()[1], xs[0].dims()[2], xs[0].dims()[3]);
+            let mut gx = vec![0.0f32; xs[0].size()];
+            for i in 0..n * c {
+                let gv = gy.data()[i] / (h * w) as f32;
+                for j in 0..h * w {
+                    gx[i * h * w + j] = gv;
+                }
+            }
+            vec![Some(NdArray::from_vec(xs[0].dims(), gx))]
+        }),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::functions::gradcheck::{check_grads, rand_leaf};
+    use crate::functions::mean_all;
+    use crate::tensor::Rng;
+
+    #[test]
+    fn max_pool_known_values() {
+        let x = Variable::from_array(NdArray::arange(&[1, 1, 4, 4]), true);
+        let y = max_pooling(&x, (2, 2), (2, 2), (0, 0));
+        assert_eq!(y.dims(), vec![1, 1, 2, 2]);
+        assert_eq!(y.data().data(), &[5., 7., 13., 15.]);
+    }
+
+    #[test]
+    fn avg_pool_known_values() {
+        let x = Variable::from_array(NdArray::arange(&[1, 1, 4, 4]), true);
+        let y = average_pooling(&x, (2, 2), (2, 2), (0, 0), false);
+        assert_eq!(y.data().data(), &[2.5, 4.5, 10.5, 12.5]);
+    }
+
+    #[test]
+    fn avg_pool_pad_divisor_modes() {
+        let x = Variable::from_array(NdArray::ones(&[1, 1, 2, 2]), true);
+        // 3x3 kernel pad 1: corner windows see 4 valid ones
+        let excl = average_pooling(&x, (3, 3), (2, 2), (1, 1), false);
+        assert_eq!(excl.data().data()[0], 1.0); // 4/4
+        let incl = average_pooling(&x, (3, 3), (2, 2), (1, 1), true);
+        assert_eq!(incl.data().data()[0], 4.0 / 9.0);
+    }
+
+    #[test]
+    fn global_avg_pool_values() {
+        let x = Variable::from_array(NdArray::arange(&[1, 2, 2, 2]), true);
+        let y = global_average_pooling(&x);
+        assert_eq!(y.dims(), vec![1, 2]);
+        assert_eq!(y.data().data(), &[1.5, 5.5]);
+    }
+
+    #[test]
+    fn max_pool_gradcheck() {
+        let mut rng = Rng::new(50);
+        let x = rand_leaf(&mut rng, &[1, 2, 4, 4]);
+        // spread values to avoid argmax ties under perturbation
+        x.set_data(crate::tensor::ops::map(&NdArray::arange(&[1, 2, 4, 4]), |v| v * 0.37));
+        let build = || mean_all(&max_pooling(&x, (2, 2), (2, 2), (0, 0)));
+        check_grads(&[&x], &build, 1e-3, 1e-2);
+    }
+
+    #[test]
+    fn avg_pool_gradcheck_with_pad() {
+        let mut rng = Rng::new(51);
+        let x = rand_leaf(&mut rng, &[1, 2, 4, 4]);
+        let build = || mean_all(&average_pooling(&x, (3, 3), (2, 2), (1, 1), false));
+        check_grads(&[&x], &build, 1e-3, 1e-2);
+    }
+
+    #[test]
+    fn global_avg_pool_gradcheck() {
+        let mut rng = Rng::new(52);
+        let x = rand_leaf(&mut rng, &[2, 3, 3, 3]);
+        let build = || mean_all(&global_average_pooling(&x));
+        check_grads(&[&x], &build, 1e-3, 1e-2);
+    }
+}

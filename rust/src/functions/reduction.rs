@@ -1,0 +1,86 @@
+//! Reductions over Variables.
+
+use crate::graph::Variable;
+use crate::tensor::{ops, NdArray};
+
+/// Sum of all elements -> scalar.
+pub fn sum_all(x: &Variable) -> Variable {
+    Variable::from_function(
+        "sum_all",
+        &[x],
+        Box::new(|xs| NdArray::scalar(xs[0].sum_all())),
+        Box::new(|xs, _y, g| vec![Some(NdArray::full(xs[0].dims(), g.item()))]),
+    )
+}
+
+/// Mean of all elements -> scalar.
+pub fn mean_all(x: &Variable) -> Variable {
+    Variable::from_function(
+        "mean_all",
+        &[x],
+        Box::new(|xs| NdArray::scalar(xs[0].mean_all())),
+        Box::new(|xs, _y, g| {
+            let n = xs[0].size() as f32;
+            vec![Some(NdArray::full(xs[0].dims(), g.item() / n))]
+        }),
+    )
+}
+
+/// Sum along one axis.
+pub fn sum_axis(x: &Variable, axis: usize, keepdims: bool) -> Variable {
+    Variable::from_function(
+        "sum_axis",
+        &[x],
+        Box::new(move |xs| ops::sum_axis(&xs[0], axis, keepdims)),
+        Box::new(move |xs, _y, g| {
+            // broadcast grad back across the reduced axis
+            let mut gdims = xs[0].dims().to_vec();
+            gdims[axis] = 1;
+            let g2 = g.reshape(&gdims);
+            vec![Some(g2.broadcast_to(xs[0].dims()))]
+        }),
+    )
+}
+
+/// Mean along one axis.
+pub fn mean_axis(x: &Variable, axis: usize, keepdims: bool) -> Variable {
+    Variable::from_function(
+        "mean_axis",
+        &[x],
+        Box::new(move |xs| ops::mean_axis(&xs[0], axis, keepdims)),
+        Box::new(move |xs, _y, g| {
+            let n = xs[0].dims()[axis] as f32;
+            let mut gdims = xs[0].dims().to_vec();
+            gdims[axis] = 1;
+            let g2 = ops::scale(&g.reshape(&gdims), 1.0 / n);
+            vec![Some(g2.broadcast_to(xs[0].dims()))]
+        }),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::functions::gradcheck::{check_grads, rand_leaf};
+    use crate::tensor::Rng;
+
+    #[test]
+    fn values() {
+        let x = Variable::from_array(NdArray::from_slice(&[2, 2], &[1., 2., 3., 4.]), true);
+        assert_eq!(sum_all(&x).item(), 10.0);
+        assert_eq!(mean_all(&x).item(), 2.5);
+        assert_eq!(sum_axis(&x, 0, false).data().data(), &[4., 6.]);
+        assert_eq!(mean_axis(&x, 1, false).data().data(), &[1.5, 3.5]);
+        assert_eq!(sum_axis(&x, 1, true).dims(), vec![2, 1]);
+    }
+
+    #[test]
+    fn gradchecks() {
+        let mut rng = Rng::new(80);
+        let x = rand_leaf(&mut rng, &[3, 4]);
+        check_grads(&[&x], &|| sum_all(&x), 1e-3, 1e-2);
+        check_grads(&[&x], &|| mean_all(&x), 1e-3, 1e-2);
+        check_grads(&[&x], &|| mean_all(&sum_axis(&x, 0, false)), 1e-3, 1e-2);
+        check_grads(&[&x], &|| mean_all(&mean_axis(&x, 1, true)), 1e-3, 1e-2);
+    }
+}

@@ -1,0 +1,110 @@
+//! Softmax / log-softmax over the last axis (numerically stabilized).
+
+use crate::graph::Variable;
+use crate::tensor::{ops, NdArray};
+
+pub(crate) fn softmax_fwd(x: &NdArray) -> NdArray {
+    let last = x.rank() - 1;
+    let (mx, _) = ops::max_axis(x, last, true);
+    let shifted = ops::sub(x, &mx);
+    let e = ops::map(&shifted, f32::exp);
+    let s = ops::sum_axis(&e, last, true);
+    ops::div(&e, &s)
+}
+
+/// Softmax over the last axis.
+pub fn softmax(x: &Variable) -> Variable {
+    Variable::from_function(
+        "softmax",
+        &[x],
+        Box::new(|xs| softmax_fwd(&xs[0])),
+        Box::new(|_xs, y, g| {
+            // dx = y * (g - sum(g*y, last, keep))
+            let last = y.rank() - 1;
+            let gy = ops::mul(g, y);
+            let s = ops::sum_axis(&gy, last, true);
+            vec![Some(ops::mul(y, &ops::sub(g, &s)))]
+        }),
+    )
+}
+
+/// Log-softmax over the last axis.
+pub fn log_softmax(x: &Variable) -> Variable {
+    Variable::from_function(
+        "log_softmax",
+        &[x],
+        Box::new(|xs| {
+            let last = xs[0].rank() - 1;
+            let (mx, _) = ops::max_axis(&xs[0], last, true);
+            let shifted = ops::sub(&xs[0], &mx);
+            let lse = ops::map(
+                &ops::sum_axis(&ops::map(&shifted, f32::exp), last, true),
+                f32::ln,
+            );
+            ops::sub(&shifted, &lse)
+        }),
+        Box::new(|_xs, y, g| {
+            // dx = g - softmax(x) * sum(g, last, keep); softmax = exp(y)
+            let last = y.rank() - 1;
+            let sm = ops::map(y, f32::exp);
+            let s = ops::sum_axis(g, last, true);
+            vec![Some(ops::sub(g, &ops::mul(&sm, &s)))]
+        }),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::functions::gradcheck::{check_grads, rand_leaf};
+    use crate::functions::{mean_all, mul};
+    use crate::tensor::Rng;
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let mut rng = Rng::new(60);
+        let x = rand_leaf(&mut rng, &[3, 5]);
+        let y = softmax(&x).data();
+        for i in 0..3 {
+            let s: f32 = y.data()[i * 5..(i + 1) * 5].iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+        }
+        assert!(y.data().iter().all(|&v| v > 0.0));
+    }
+
+    #[test]
+    fn softmax_is_shift_invariant_and_stable() {
+        let x = Variable::from_array(NdArray::from_slice(&[1, 3], &[1000., 1001., 1002.]), true);
+        let y = softmax(&x).data();
+        assert!(!y.has_inf_or_nan());
+        let x2 = Variable::from_array(NdArray::from_slice(&[1, 3], &[0., 1., 2.]), true);
+        assert!(y.allclose(&softmax(&x2).data(), 1e-6, 1e-5));
+    }
+
+    #[test]
+    fn log_softmax_is_log_of_softmax() {
+        let mut rng = Rng::new(61);
+        let x = rand_leaf(&mut rng, &[2, 4]);
+        let a = log_softmax(&x).data();
+        let b = ops::map(&softmax(&x).data(), f32::ln);
+        assert!(a.allclose(&b, 1e-5, 1e-5));
+    }
+
+    #[test]
+    fn softmax_gradcheck() {
+        let mut rng = Rng::new(62);
+        let x = rand_leaf(&mut rng, &[2, 4]);
+        let w = Variable::from_array(rng.randn(&[2, 4], 1.0), false); // project to non-symmetric scalar
+        let build = || mean_all(&mul(&softmax(&x), &w));
+        check_grads(&[&x], &build, 1e-3, 2e-2);
+    }
+
+    #[test]
+    fn log_softmax_gradcheck() {
+        let mut rng = Rng::new(63);
+        let x = rand_leaf(&mut rng, &[2, 4]);
+        let w = Variable::from_array(rng.randn(&[2, 4], 1.0), false);
+        let build = || mean_all(&mul(&log_softmax(&x), &w));
+        check_grads(&[&x], &build, 1e-3, 2e-2);
+    }
+}

@@ -1,0 +1,218 @@
+//! Shape-manipulation functions + embedding lookup.
+
+use crate::graph::Variable;
+use crate::tensor::{ops, NdArray, Shape};
+
+/// Reshape (`usize::MAX` dim = infer).
+pub fn reshape(x: &Variable, dims: &[usize]) -> Variable {
+    let dims = dims.to_vec();
+    Variable::from_function(
+        "reshape",
+        &[x],
+        Box::new(move |xs| xs[0].reshape(&dims)),
+        Box::new(|xs, _y, g| vec![Some(g.reshape(xs[0].dims()))]),
+    )
+}
+
+/// Transpose by axis permutation.
+pub fn transpose(x: &Variable, axes: &[usize]) -> Variable {
+    let axes = axes.to_vec();
+    // inverse permutation for backward
+    let mut inv = vec![0usize; axes.len()];
+    for (i, &a) in axes.iter().enumerate() {
+        inv[a] = i;
+    }
+    Variable::from_function(
+        "transpose",
+        &[x],
+        Box::new(move |xs| xs[0].transpose(&axes)),
+        Box::new(move |_xs, _y, g| vec![Some(g.transpose(&inv))]),
+    )
+}
+
+/// Broadcast to a target shape.
+pub fn broadcast_to(x: &Variable, dims: &[usize]) -> Variable {
+    let dims = dims.to_vec();
+    Variable::from_function(
+        "broadcast_to",
+        &[x],
+        Box::new(move |xs| xs[0].broadcast_to(&dims)),
+        Box::new(|xs, _y, g| vec![Some(ops::reduce_to_shape(g, xs[0].shape()))]),
+    )
+}
+
+/// Concatenate along `axis`.
+pub fn concat(parts: &[&Variable], axis: usize) -> Variable {
+    assert!(!parts.is_empty());
+    let sizes: Vec<usize> = parts.iter().map(|p| p.dims()[axis]).collect();
+    Variable::from_function(
+        "concat",
+        parts,
+        Box::new(move |xs| {
+            let refs: Vec<&NdArray> = xs.iter().collect();
+            NdArray::concat(&refs, axis)
+        }),
+        Box::new(move |_xs, _y, g| {
+            let mut out = Vec::with_capacity(sizes.len());
+            let mut start = 0;
+            for &s in &sizes {
+                out.push(Some(g.slice_axis(axis, start, start + s)));
+                start += s;
+            }
+            out
+        }),
+    )
+}
+
+/// Slice `[start, stop)` along `axis`.
+pub fn slice_axis(x: &Variable, axis: usize, start: usize, stop: usize) -> Variable {
+    Variable::from_function(
+        "slice_axis",
+        &[x],
+        Box::new(move |xs| xs[0].slice_axis(axis, start, stop)),
+        Box::new(move |xs, _y, g| {
+            let mut gx = NdArray::zeros(xs[0].dims());
+            // scatter g back into the slice window
+            let dims = xs[0].dims();
+            let outer: usize = dims[..axis].iter().product();
+            let inner: usize = dims[axis + 1..].iter().product();
+            let a = dims[axis];
+            let width = stop - start;
+            for o in 0..outer {
+                for k in 0..width {
+                    let dst = (o * a + start + k) * inner;
+                    let src = (o * width + k) * inner;
+                    gx.data_mut()[dst..dst + inner]
+                        .copy_from_slice(&g.data()[src..src + inner]);
+                }
+            }
+            vec![Some(gx)]
+        }),
+    )
+}
+
+/// Embedding lookup: `ids: [B]` (f32-stored indices) into
+/// `table: [V, D]` -> `[B, D]`.
+pub fn embed(ids: &Variable, table: &Variable) -> Variable {
+    Variable::from_function(
+        "embed",
+        &[ids, table],
+        Box::new(|xs| {
+            let (ids, table) = (&xs[0], &xs[1]);
+            let b = ids.size();
+            let d = table.dims()[1];
+            let v = table.dims()[0];
+            let mut out = Vec::with_capacity(b * d);
+            for i in 0..b {
+                let id = ids.data()[i] as usize;
+                assert!(id < v, "embed id {id} out of range {v}");
+                out.extend_from_slice(&table.data()[id * d..(id + 1) * d]);
+            }
+            NdArray::from_vec(&[b, d], out)
+        }),
+        Box::new(|xs, _y, g| {
+            let (ids, table) = (&xs[0], &xs[1]);
+            let b = ids.size();
+            let d = table.dims()[1];
+            let mut gt = NdArray::zeros(table.dims());
+            for i in 0..b {
+                let id = ids.data()[i] as usize;
+                for j in 0..d {
+                    gt.data_mut()[id * d + j] += g.data()[i * d + j];
+                }
+            }
+            vec![None, Some(gt)]
+        }),
+    )
+}
+
+/// Identity with a shape assertion — used by converters to pin I/O
+/// signatures.
+pub fn identity(x: &Variable) -> Variable {
+    Variable::from_function(
+        "identity",
+        &[x],
+        Box::new(|xs| xs[0].clone()),
+        Box::new(|_xs, _y, g| vec![Some(g.clone())]),
+    )
+}
+
+/// Adjoint-checked helper reused by tests.
+pub(crate) fn _shape_of(v: &Variable) -> Shape {
+    Shape::new(&v.dims())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::functions::gradcheck::{check_grads, rand_leaf};
+    use crate::functions::mean_all;
+    use crate::tensor::Rng;
+
+    #[test]
+    fn reshape_transpose_roundtrip() {
+        let mut rng = Rng::new(90);
+        let x = rand_leaf(&mut rng, &[2, 3, 4]);
+        let y = transpose(&reshape(&x, &[6, 4]), &[1, 0]);
+        assert_eq!(y.dims(), vec![4, 6]);
+        // build must reconstruct the whole chain (define-by-run)
+        let build = || {
+            mean_all(&crate::functions::mul_scalar(
+                &transpose(&reshape(&x, &[6, 4]), &[1, 0]),
+                1.7,
+            ))
+        };
+        check_grads(&[&x], &build, 1e-3, 1e-2);
+    }
+
+    #[test]
+    fn concat_slice_grads() {
+        let mut rng = Rng::new(91);
+        let a = rand_leaf(&mut rng, &[2, 2]);
+        let b = rand_leaf(&mut rng, &[2, 3]);
+        let build = || mean_all(&slice_axis(&concat(&[&a, &b], 1), 1, 1, 4));
+        check_grads(&[&a, &b], &build, 1e-3, 1e-2);
+    }
+
+    #[test]
+    fn broadcast_grad_sums() {
+        let mut rng = Rng::new(92);
+        let x = rand_leaf(&mut rng, &[1, 3]);
+        let build = || mean_all(&broadcast_to(&x, &[4, 3]));
+        check_grads(&[&x], &build, 1e-3, 1e-2);
+    }
+
+    #[test]
+    fn embed_lookup_and_grad() {
+        let ids = Variable::from_array(NdArray::from_slice(&[3], &[2., 0., 2.]), false);
+        let table = Variable::from_array(NdArray::arange(&[4, 2]), true);
+        let y = embed(&ids, &table);
+        assert_eq!(y.data().data(), &[4., 5., 0., 1., 4., 5.]);
+        mean_all(&y).backward();
+        let g = table.grad();
+        // row 2 used twice, row 0 once, rows 1/3 never
+        assert!((g.at(&[2, 0]) - 2.0 / 6.0).abs() < 1e-6);
+        assert!((g.at(&[0, 0]) - 1.0 / 6.0).abs() < 1e-6);
+        assert_eq!(g.at(&[1, 0]), 0.0);
+        assert_eq!(g.at(&[3, 1]), 0.0);
+    }
+
+    #[test]
+    fn embed_gradcheck_on_table() {
+        let mut rng = Rng::new(93);
+        let ids = Variable::from_array(NdArray::from_slice(&[4], &[1., 3., 0., 1.]), false);
+        let table = rand_leaf(&mut rng, &[5, 3]);
+        let build = || mean_all(&embed(&ids, &table));
+        check_grads(&[&table], &build, 1e-3, 1e-2);
+    }
+
+    #[test]
+    fn slice_scatter_grad_zero_outside() {
+        let x = Variable::from_array(NdArray::arange(&[2, 4]), true);
+        mean_all(&slice_axis(&x, 1, 1, 3)).backward();
+        let g = x.grad();
+        assert_eq!(g.at(&[0, 0]), 0.0);
+        assert_eq!(g.at(&[1, 3]), 0.0);
+        assert!(g.at(&[0, 1]) > 0.0);
+    }
+}

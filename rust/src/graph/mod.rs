@@ -1,0 +1,14 @@
+//! Computation-graph engine: `Variable`s connected by function nodes.
+//!
+//! This is the paper's §2.2 "flexible computation methods" layer. A
+//! graph is built *define-by-run* (dynamic mode): every `F::*` call
+//! executes immediately and records a node. The same recorded graph can
+//! then be *re-executed* on new leaf data with [`Variable::forward`] —
+//! the static-graph usage of Figure 1 ("define the entire graph and
+//! then use that graph for computation for each input data"). The
+//! speed-optimized static path additionally exists as AOT HLO via
+//! [`crate::runtime`]; this module is the flexible native engine.
+
+pub mod variable;
+
+pub use variable::Variable;

@@ -1,0 +1,464 @@
+//! `Variable`: the paper's first building block — "data and their
+//! gradients with multi-dimensional arrays" (§2.1) — plus the tape
+//! machinery that makes `forward()` / `backward()` work.
+
+use std::cell::RefCell;
+use std::collections::HashSet;
+use std::rc::Rc;
+
+use crate::tensor::{ops, NdArray};
+
+/// Forward closure of a function node: recompute output data from
+/// current input data (enables static-graph reuse on new leaf data).
+pub type FwdFn = Box<dyn Fn(&[NdArray]) -> NdArray>;
+
+/// Backward closure: given (input data, output data, output grad),
+/// return one optional gradient per input (None = not differentiable /
+/// not needed).
+pub type BwdFn = Box<dyn Fn(&[NdArray], &NdArray, &NdArray) -> Vec<Option<NdArray>>>;
+
+struct FunctionNode {
+    name: &'static str,
+    inputs: Vec<Variable>,
+    fwd: FwdFn,
+    bwd: BwdFn,
+}
+
+struct VarInner {
+    data: NdArray,
+    grad: Option<NdArray>,
+    need_grad: bool,
+    name: String,
+    creator: Option<Rc<FunctionNode>>,
+}
+
+/// A node in the computation graph. Cheap to clone (shared interior).
+///
+/// Mirrors `nn.Variable`: `.d` ↔ [`Variable::data`]/[`set_data`],
+/// `.g` ↔ [`Variable::grad`], `.forward()` / `.backward()` as in
+/// Listing 1.
+#[derive(Clone)]
+pub struct Variable(Rc<RefCell<VarInner>>);
+
+impl Variable {
+    // ------------------------------------------------------------- leaves
+
+    /// New leaf variable holding `data`.
+    pub fn from_array(data: NdArray, need_grad: bool) -> Self {
+        Variable(Rc::new(RefCell::new(VarInner {
+            data,
+            grad: None,
+            need_grad,
+            name: String::new(),
+            creator: None,
+        })))
+    }
+
+    /// `nn.Variable(shape, need_grad=...)` — zero-initialized leaf.
+    pub fn new(dims: &[usize], need_grad: bool) -> Self {
+        Self::from_array(NdArray::zeros(dims), need_grad)
+    }
+
+    /// Result of a function application (framework-internal).
+    pub fn from_function(
+        name: &'static str,
+        inputs: &[&Variable],
+        fwd: FwdFn,
+        bwd: BwdFn,
+    ) -> Self {
+        let in_data: Vec<NdArray> = inputs.iter().map(|v| v.data()).collect();
+        let out = fwd(&in_data);
+        let need_grad = inputs.iter().any(|v| v.need_grad());
+        let node = FunctionNode {
+            name,
+            inputs: inputs.iter().map(|&v| v.clone()).collect(),
+            fwd,
+            bwd,
+        };
+        Variable(Rc::new(RefCell::new(VarInner {
+            data: out,
+            grad: None,
+            need_grad,
+            name: String::new(),
+            creator: Some(Rc::new(node)),
+        })))
+    }
+
+    // ----------------------------------------------------------- accessors
+
+    /// Copy of the data array (`x.d` read).
+    pub fn data(&self) -> NdArray {
+        self.0.borrow().data.clone()
+    }
+
+    /// Borrow the data without cloning; `f` must not re-enter the graph.
+    pub fn with_data<R>(&self, f: impl FnOnce(&NdArray) -> R) -> R {
+        f(&self.0.borrow().data)
+    }
+
+    /// Set leaf data (`x.d = ...` write).
+    pub fn set_data(&self, data: NdArray) {
+        let mut inner = self.0.borrow_mut();
+        assert_eq!(
+            inner.data.dims(),
+            data.dims(),
+            "set_data shape mismatch on '{}'",
+            inner.name
+        );
+        inner.data = data;
+    }
+
+    /// Copy of the gradient (`x.g`), zeros if never written.
+    pub fn grad(&self) -> NdArray {
+        let inner = self.0.borrow();
+        inner.grad.clone().unwrap_or_else(|| NdArray::zeros(inner.data.dims()))
+    }
+
+    /// Overwrite the gradient array.
+    pub fn set_grad(&self, g: NdArray) {
+        self.0.borrow_mut().grad = Some(g);
+    }
+
+    /// Zero / clear the gradient.
+    pub fn zero_grad(&self) {
+        self.0.borrow_mut().grad = None;
+    }
+
+    pub fn need_grad(&self) -> bool {
+        self.0.borrow().need_grad
+    }
+
+    pub fn set_need_grad(&self, ng: bool) {
+        self.0.borrow_mut().need_grad = ng;
+    }
+
+    pub fn name(&self) -> String {
+        self.0.borrow().name.clone()
+    }
+
+    pub fn set_name(&self, name: &str) {
+        self.0.borrow_mut().name = name.to_string();
+    }
+
+    pub fn dims(&self) -> Vec<usize> {
+        self.0.borrow().data.dims().to_vec()
+    }
+
+    pub fn size(&self) -> usize {
+        self.0.borrow().data.size()
+    }
+
+    /// Scalar value of a size-1 variable.
+    pub fn item(&self) -> f32 {
+        self.0.borrow().data.item()
+    }
+
+    /// True if this is a leaf (no creator function).
+    pub fn is_leaf(&self) -> bool {
+        self.0.borrow().creator.is_none()
+    }
+
+    fn key(&self) -> usize {
+        Rc::as_ptr(&self.0) as usize
+    }
+
+    // ---------------------------------------------------------- execution
+
+    /// Topological order of function-producing variables ending at self
+    /// (leaves excluded), dependencies first.
+    fn topo_order(&self) -> Vec<Variable> {
+        let mut order = Vec::new();
+        let mut seen = HashSet::new();
+        // iterative DFS with explicit stack (graphs can be deep)
+        enum Step {
+            Visit(Variable),
+            Emit(Variable),
+        }
+        let mut stack = vec![Step::Visit(self.clone())];
+        while let Some(step) = stack.pop() {
+            match step {
+                Step::Visit(v) => {
+                    if !seen.insert(v.key()) {
+                        continue;
+                    }
+                    let creator = v.0.borrow().creator.clone();
+                    if let Some(node) = creator {
+                        stack.push(Step::Emit(v));
+                        for inp in node.inputs.iter().rev() {
+                            stack.push(Step::Visit(inp.clone()));
+                        }
+                    }
+                }
+                Step::Emit(v) => order.push(v),
+            }
+        }
+        order
+    }
+
+    /// Re-execute the recorded graph bottom-up using the *current* leaf
+    /// data — the static-graph usage of Figure 1: build once, then
+    /// `x.d = batch; y.forward()` per batch.
+    pub fn forward(&self) {
+        for v in self.topo_order() {
+            let node = v.0.borrow().creator.clone().expect("topo_order yields non-leaves");
+            let in_data: Vec<NdArray> = node.inputs.iter().map(|i| i.data()).collect();
+            let out = (node.fwd)(&in_data);
+            v.0.borrow_mut().data = out;
+        }
+    }
+
+    /// Backpropagate from this variable. `grad_seed` scales the seed
+    /// gradient — this is exactly `loss.backward(loss_scale)` from the
+    /// paper's mixed-precision Listing 6 (seed = loss_scale instead of
+    /// 1). Gradients accumulate into `.g`; call [`Variable::zero_grad`]
+    /// (or solver `zero_grad`) between iterations.
+    pub fn backward_with_scale(&self, grad_seed: f32) {
+        let order = self.topo_order();
+        // Intermediate (non-leaf) grads are transient: clear them so
+        // repeated backward calls accumulate only into leaves (PyTorch
+        // / NNabla semantics).
+        for v in &order {
+            v.0.borrow_mut().grad = None;
+        }
+        // seed
+        {
+            let mut inner = self.0.borrow_mut();
+            let dims: Vec<usize> = inner.data.dims().to_vec();
+            inner.grad = Some(NdArray::full(&dims, grad_seed));
+        }
+        for v in order.iter().rev() {
+            if !v.need_grad() {
+                continue;
+            }
+            let (node, out_data, out_grad) = {
+                let inner = v.0.borrow();
+                let g = match &inner.grad {
+                    Some(g) => g.clone(),
+                    None => continue, // no gradient flowed here
+                };
+                (inner.creator.clone().unwrap(), inner.data.clone(), g)
+            };
+            let in_data: Vec<NdArray> = node.inputs.iter().map(|i| i.data()).collect();
+            let grads = (node.bwd)(&in_data, &out_data, &out_grad);
+            assert_eq!(
+                grads.len(),
+                node.inputs.len(),
+                "function '{}' returned {} grads for {} inputs",
+                node.name,
+                grads.len(),
+                node.inputs.len()
+            );
+            for (inp, g) in node.inputs.iter().zip(grads) {
+                if !inp.need_grad() {
+                    continue;
+                }
+                if let Some(g) = g {
+                    assert_eq!(
+                        g.dims(),
+                        inp.dims(),
+                        "function '{}' produced grad shape {:?} for input shape {:?}",
+                        node.name,
+                        g.dims(),
+                        inp.dims()
+                    );
+                    let mut inner = inp.0.borrow_mut();
+                    inner.grad = Some(match inner.grad.take() {
+                        Some(acc) => ops::add(&acc, &g),
+                        None => g,
+                    });
+                }
+            }
+        }
+    }
+
+    /// `y.backward()` — seed gradient of ones.
+    pub fn backward(&self) {
+        self.backward_with_scale(1.0);
+    }
+
+    /// Number of function nodes in the recorded graph (used by the
+    /// Console's workload footprinting and by tests).
+    pub fn node_count(&self) -> usize {
+        self.topo_order().len()
+    }
+
+    /// Names of function nodes in topological order (graph inspection /
+    /// NNP export).
+    pub fn function_names(&self) -> Vec<&'static str> {
+        self.topo_order()
+            .iter()
+            .map(|v| v.0.borrow().creator.as_ref().unwrap().name)
+            .collect()
+    }
+}
+
+impl Drop for VarInner {
+    /// Iterative teardown: naive recursive `Drop` of a deep tape (tens
+    /// of thousands of chained nodes) overflows the stack, so detach
+    /// creators onto an explicit worklist instead.
+    fn drop(&mut self) {
+        let mut stack: Vec<Rc<FunctionNode>> = Vec::new();
+        if let Some(n) = self.creator.take() {
+            stack.push(n);
+        }
+        while let Some(node) = stack.pop() {
+            if let Ok(mut node) = Rc::try_unwrap(node) {
+                for inp in node.inputs.drain(..) {
+                    if let Ok(cell) = Rc::try_unwrap(inp.0) {
+                        let mut inner = cell.into_inner();
+                        if let Some(c) = inner.creator.take() {
+                            stack.push(c);
+                        }
+                        // inner now drops with creator == None: no recursion
+                    }
+                }
+            }
+        }
+    }
+}
+
+impl std::fmt::Debug for Variable {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let inner = self.0.borrow();
+        write!(
+            f,
+            "Variable(name={:?}, shape={:?}, need_grad={}, leaf={})",
+            inner.name,
+            inner.data.dims(),
+            inner.need_grad,
+            inner.creator.is_none()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::ops;
+
+    fn add_var(a: &Variable, b: &Variable) -> Variable {
+        Variable::from_function(
+            "add",
+            &[a, b],
+            Box::new(|xs| ops::add(&xs[0], &xs[1])),
+            Box::new(|_xs, _y, g| vec![Some(g.clone()), Some(g.clone())]),
+        )
+    }
+
+    fn mul_var(a: &Variable, b: &Variable) -> Variable {
+        Variable::from_function(
+            "mul",
+            &[a, b],
+            Box::new(|xs| ops::mul(&xs[0], &xs[1])),
+            Box::new(|xs, _y, g| {
+                vec![Some(ops::mul(g, &xs[1])), Some(ops::mul(g, &xs[0]))]
+            }),
+        )
+    }
+
+    #[test]
+    fn forward_happens_at_definition() {
+        let x = Variable::from_array(NdArray::full(&[2], 3.0), true);
+        let y = Variable::from_array(NdArray::full(&[2], 4.0), true);
+        let z = add_var(&x, &y);
+        assert_eq!(z.data().data(), &[7.0, 7.0]); // define-by-run
+    }
+
+    #[test]
+    fn static_reuse_via_forward() {
+        // Figure 1 static usage: define once, swap leaf data, forward()
+        let x = Variable::new(&[2], true);
+        let y = Variable::new(&[2], true);
+        let z = add_var(&x, &y);
+        x.set_data(NdArray::full(&[2], 1.0));
+        y.set_data(NdArray::full(&[2], 2.0));
+        z.forward();
+        assert_eq!(z.data().data(), &[3.0, 3.0]);
+        x.set_data(NdArray::full(&[2], 10.0));
+        z.forward();
+        assert_eq!(z.data().data(), &[12.0, 12.0]);
+    }
+
+    #[test]
+    fn backward_product_rule() {
+        let x = Variable::from_array(NdArray::full(&[1], 3.0), true);
+        let y = Variable::from_array(NdArray::full(&[1], 4.0), true);
+        let z = mul_var(&x, &y); // z = x*y
+        z.backward();
+        assert_eq!(x.grad().item(), 4.0);
+        assert_eq!(y.grad().item(), 3.0);
+    }
+
+    #[test]
+    fn backward_accumulates_through_shared_input() {
+        // z = x*x -> dz/dx = 2x (grad accumulates from both uses)
+        let x = Variable::from_array(NdArray::full(&[1], 5.0), true);
+        let z = mul_var(&x, &x);
+        z.backward();
+        assert_eq!(x.grad().item(), 10.0);
+    }
+
+    #[test]
+    fn backward_scale_is_loss_scaling_seed() {
+        let x = Variable::from_array(NdArray::full(&[1], 3.0), true);
+        let y = Variable::from_array(NdArray::full(&[1], 4.0), true);
+        let z = mul_var(&x, &y);
+        z.backward_with_scale(8.0); // Listing 6: loss.backward(loss_scale)
+        assert_eq!(x.grad().item(), 32.0);
+    }
+
+    #[test]
+    fn need_grad_false_blocks_gradient() {
+        let x = Variable::from_array(NdArray::full(&[1], 3.0), false);
+        let y = Variable::from_array(NdArray::full(&[1], 4.0), true);
+        let z = mul_var(&x, &y);
+        z.backward();
+        assert_eq!(x.grad().item(), 0.0); // not computed
+        assert_eq!(y.grad().item(), 3.0);
+    }
+
+    #[test]
+    fn zero_grad_resets_accumulation() {
+        let x = Variable::from_array(NdArray::full(&[1], 2.0), true);
+        let z = mul_var(&x, &x);
+        z.backward();
+        z.backward(); // accumulate twice
+        assert_eq!(x.grad().item(), 8.0);
+        x.zero_grad();
+        z.zero_grad();
+        z.backward();
+        assert_eq!(x.grad().item(), 4.0);
+    }
+
+    #[test]
+    fn deep_chain_does_not_overflow_stack() {
+        let mut v = Variable::from_array(NdArray::full(&[1], 1.0), true);
+        let one = Variable::from_array(NdArray::full(&[1], 1.0), false);
+        for _ in 0..20_000 {
+            v = add_var(&v, &one);
+        }
+        assert_eq!(v.item(), 20_001.0);
+        v.backward(); // iterative DFS: no stack overflow
+    }
+
+    #[test]
+    fn node_count_and_names() {
+        let x = Variable::from_array(NdArray::full(&[1], 1.0), true);
+        let y = add_var(&x, &x);
+        let z = mul_var(&y, &y);
+        assert_eq!(z.node_count(), 2);
+        assert_eq!(z.function_names(), vec!["add", "mul"]);
+    }
+
+    #[test]
+    fn diamond_graph_grads_correct() {
+        // a = x+x; b = x*x; c = a*b = 2x^3, dc/dx = 6x^2 at x=2 -> 24
+        let x = Variable::from_array(NdArray::full(&[1], 2.0), true);
+        let a = add_var(&x, &x);
+        let b = mul_var(&x, &x);
+        let c = mul_var(&a, &b);
+        assert_eq!(c.item(), 16.0);
+        c.backward();
+        assert_eq!(x.grad().item(), 24.0);
+    }
+}

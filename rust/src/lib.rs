@@ -1,0 +1,42 @@
+//! # nnl — Neural Network Libraries, reproduced as a Rust + JAX + Pallas stack
+//!
+//! A full reproduction of *"Neural Network Libraries: A Deep Learning
+//! Framework Designed from Engineers' Perspectives"* (Sony, 2021) as a
+//! three-layer system:
+//!
+//! - **L3 (this crate)** — the framework: Variables / Functions /
+//!   Parametric Functions, static & dynamic computation graphs, solvers,
+//!   mixed-precision training with loss scaling, a data-parallel
+//!   communicator, the NNP interchange format + converters, monitors,
+//!   and a headless Neural Network Console.
+//! - **L2 (`python/compile/model.py`)** — JAX train-step graphs, AOT
+//!   lowered to HLO text at build time (`make artifacts`).
+//! - **L1 (`python/compile/kernels/`)** — Pallas matmul kernels inside
+//!   those graphs, validated against a pure-jnp oracle.
+//!
+//! Python never runs at inference/training time: the static-graph path
+//! loads `artifacts/*.hlo.txt` through PJRT (`runtime`), and the
+//! dynamic-graph path runs the native tape engine (`graph` +
+//! `functions`).
+
+pub mod comm;
+pub mod console;
+pub mod context;
+pub mod converters;
+pub mod data;
+pub mod functions;
+pub mod graph;
+pub mod mixed_precision;
+pub mod models;
+pub mod monitor;
+pub mod nnp;
+pub mod parametric;
+pub mod runtime;
+pub mod solvers;
+pub mod tensor;
+pub mod trainer;
+pub mod utils;
+
+pub use context::{Backend, Context, TypeConfig};
+pub use graph::Variable;
+pub use tensor::{DType, NdArray, Rng, Shape};

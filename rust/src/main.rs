@@ -1,0 +1,245 @@
+//! `nnl` — the framework CLI (the paper's launcher surface): train,
+//! evaluate, convert, query, search, and footprint from one binary.
+//!
+//! Hand-rolled arg parsing (clap is unavailable offline).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use nnl::console::{footprint, structure_search, SearchSpace, TrialStore};
+use nnl::context::Context;
+use nnl::converters::{frozen, nnb, onnx_lite, query, rs_source};
+use nnl::data::SyntheticImages;
+use nnl::models::zoo;
+use nnl::nnp::Nnp;
+use nnl::runtime::Manifest;
+use nnl::trainer::{self, LossScalerKind, TrainConfig};
+
+const USAGE: &str = "\
+nnl — Neural Network Libraries (Rust + JAX + Pallas reproduction)
+
+USAGE:
+  nnl train --model <name> [--steps N] [--lr F] [--solver sgd|momentum|adam]
+            [--half] [--workers N] [--trials DIR]
+  nnl train-static --artifact <name> [--steps N] [--lr F] [--half]
+  nnl eval --model <name> [--steps N]
+  nnl convert --in model.nnp --to onnx|nnb|frozen|rs --out FILE
+  nnl query --in model.nnp [--target onnx|nnb|frozen|rs_source]
+  nnl footprint [--model <name>]
+  nnl search [--generations N] [--population N]
+  nnl trials --dir DIR
+  nnl models
+  nnl context <spec>            # e.g. 'xla:half' — prints the parsed context
+";
+
+fn parse_flags(args: &[String]) -> HashMap<String, String> {
+    let mut out = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                out.insert(key.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                out.insert(key.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
+
+fn get<T: std::str::FromStr>(flags: &HashMap<String, String>, key: &str, default: T) -> T {
+    flags.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn train_config(flags: &HashMap<String, String>) -> TrainConfig {
+    let mut cfg = TrainConfig {
+        steps: get(flags, "steps", 100),
+        lr: get(flags, "lr", 0.05),
+        weight_decay: get(flags, "weight-decay", 0.0),
+        solver: flags.get("solver").cloned().unwrap_or_else(|| "momentum".into()),
+        ..Default::default()
+    };
+    if flags.contains_key("half") {
+        // Listing 2: one-line backend/precision switch
+        Context::set_default(Context::get_extension_context("cpu:half").unwrap());
+        cfg.loss_scale =
+            Some(LossScalerKind::Dynamic { initial: 8.0, factor: 2.0, interval: 2000 });
+    }
+    cfg
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else {
+        print!("{USAGE}");
+        return;
+    };
+    let flags = parse_flags(&args[1..]);
+    match cmd.as_str() {
+        "models" => {
+            println!("available models:");
+            for m in zoo::model_names() {
+                let dims = zoo::input_dims(m);
+                let (params, macs) = footprint(m, &dims, 10);
+                println!("  {m:<22} input {dims:?}  params {params:>8}  MACs {macs:>10}");
+            }
+        }
+        "context" => {
+            let spec = args.get(1).map(String::as_str).unwrap_or("cpu:float");
+            match Context::get_extension_context(spec) {
+                Some(c) => println!("{c:?}"),
+                None => eprintln!("unknown context '{spec}'"),
+            }
+        }
+        "footprint" => {
+            let model = flags.get("model").map(String::as_str).unwrap_or("resnet18");
+            let dims = zoo::input_dims(model);
+            let (params, macs) = footprint(model, &dims, 10);
+            println!("{model}: {params} parameters, {macs} multiply-adds per sample");
+        }
+        "train" => {
+            let model = flags.get("model").cloned().unwrap_or_else(|| "resnet18".into());
+            let model: &'static str = Box::leak(model.into_boxed_str());
+            let cfg = train_config(&flags);
+            let workers: usize = get(&flags, "workers", 1);
+            let data = if model == "lenet" {
+                SyntheticImages::new(10, 1, 28, 16, 1)
+            } else if model == "mlp" {
+                SyntheticImages::new(10, 1, 8, 16, 1)
+            } else {
+                SyntheticImages::imagenet_mini(16)
+            };
+            let report = if workers > 1 {
+                trainer::train_distributed(model, data, &cfg, workers)
+            } else {
+                trainer::train_dynamic(model, &data, &cfg)
+            };
+            println!(
+                "{model}: {} steps in {:.2}s ({:.1} steps/s), final loss {:.4}, val error {:.3}",
+                report.steps,
+                report.wall_secs,
+                report.steps as f64 / report.wall_secs,
+                report.final_loss(),
+                report.val_error
+            );
+            if let Some(dir) = flags.get("trials") {
+                let store = TrialStore::open(Path::new(dir)).expect("trial dir");
+                let id = store.record(&report).expect("record trial");
+                println!("recorded trial {id} in {dir}");
+            }
+        }
+        "train-static" => {
+            let artifact = flags
+                .get("artifact")
+                .cloned()
+                .unwrap_or_else(|| "resnet_mini_train_f32_b16".into());
+            let cfg = train_config(&flags);
+            let manifest = Manifest::load(&Manifest::default_dir())
+                .expect("artifacts missing — run `make artifacts`");
+            let data = SyntheticImages::imagenet_mini(16);
+            let report =
+                trainer::train_static(&manifest, &artifact, &data, &cfg).expect("static training");
+            println!(
+                "{artifact}: {} steps in {:.2}s ({:.1} steps/s), final loss {:.4}",
+                report.steps,
+                report.wall_secs,
+                report.steps as f64 / report.wall_secs,
+                report.final_loss()
+            );
+        }
+        "eval" => {
+            let model = flags.get("model").cloned().unwrap_or_else(|| "resnet18".into());
+            let data = SyntheticImages::imagenet_mini(16);
+            let cfg = TrainConfig { steps: get(&flags, "steps", 50), ..Default::default() };
+            let report = trainer::train_dynamic(&model, &data, &cfg);
+            println!("{model}: val error {:.3}", report.val_error);
+        }
+        "convert" => {
+            let input = PathBuf::from(flags.get("in").expect("--in model.nnp required"));
+            let to = flags.get("to").expect("--to target required").clone();
+            let out = PathBuf::from(flags.get("out").expect("--out FILE required"));
+            let nnp = Nnp::load(&input).expect("loading NNP");
+            let net = &nnp.networks[0];
+            let pm = nnp.param_map();
+            match to.as_str() {
+                "onnx" => {
+                    let m = onnx_lite::to_onnx(net, &pm).expect("onnx conversion");
+                    std::fs::write(&out, onnx_lite::save_bytes(&m)).expect("write");
+                }
+                "nnb" => {
+                    std::fs::write(&out, nnb::to_nnb(net, &nnp.parameters)).expect("write");
+                }
+                "frozen" => {
+                    let fg = frozen::freeze(net, &pm).expect("freeze");
+                    std::fs::write(&out, frozen::save_bytes(&fg)).expect("write");
+                }
+                "rs" | "rs_source" => {
+                    let src = rs_source::generate(net, &pm).expect("source generation");
+                    std::fs::write(&out, src).expect("write");
+                }
+                other => {
+                    eprintln!("unknown target '{other}'");
+                    std::process::exit(1);
+                }
+            }
+            println!("converted {} -> {} ({to})", input.display(), out.display());
+        }
+        "query" => {
+            let input = PathBuf::from(flags.get("in").expect("--in model.nnp required"));
+            let nnp = Nnp::load(&input).expect("loading NNP");
+            let net = &nnp.networks[0];
+            match flags.get("target") {
+                Some(t) => {
+                    let target = query::Target::from_name(t).expect("unknown target");
+                    let gaps = query::query_unsupported(net, target);
+                    if gaps.is_empty() {
+                        println!("all functions supported by {t}");
+                    } else {
+                        println!("unsupported by {t}: {gaps:?}");
+                        std::process::exit(2);
+                    }
+                }
+                None => print!("{}", query::support_report(net)),
+            }
+        }
+        "search" => {
+            let data = SyntheticImages::new(10, 1, 8, 16, 1);
+            let space = SearchSpace::default();
+            let front = structure_search(
+                &data,
+                &space,
+                get(&flags, "generations", 2),
+                get(&flags, "population", 4),
+                get(&flags, "seed", 7),
+            );
+            println!("Pareto front (val_error vs MACs):");
+            for c in &front {
+                println!(
+                    "  plan {:?}: val_error {:.3}, MACs {}, params {}",
+                    c.plan, c.val_error, c.macs, c.n_params
+                );
+            }
+        }
+        "trials" => {
+            let dir = flags.get("dir").cloned().unwrap_or_else(|| "trials".into());
+            let store = TrialStore::open(Path::new(&dir)).expect("trial dir");
+            print!("{}", store.comparison_table().expect("listing"));
+            if let Some(best) = store.best().expect("best") {
+                println!(
+                    "best: trial {} ({}, val error {:.3})",
+                    best.id, best.model, best.val_error
+                );
+            }
+        }
+        "help" | "--help" | "-h" => print!("{USAGE}"),
+        other => {
+            eprintln!("unknown command '{other}'\n");
+            print!("{USAGE}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -1,0 +1,260 @@
+//! Mixed-precision training (paper §3.3, Fig. 3-left, Listing 6).
+//!
+//! The pieces, mapped to the paper:
+//! - half *storage* of weights/activations/gradients → `DType::BF16`
+//!   arrays (quantized writes) on the dynamic path, bf16 HLO graphs on
+//!   the static path;
+//! - FP-32 master weights → [`MasterWeights`];
+//! - loss scaling, static and dynamic → [`LossScaler`], implementing
+//!   Listing 6 verbatim (halve on inf/nan, double after `interval`
+//!   clean steps);
+//! - FP-32 update → the solver always updates in f32 and re-quantizes.
+
+use crate::graph::Variable;
+use crate::solvers::Solver;
+use crate::tensor::DType;
+#[cfg(test)]
+use crate::tensor::NdArray;
+
+/// Dynamic (or static) loss scaler. With `dynamic = false` the scale
+/// stays fixed (the first half of Listing 6); with `dynamic = true`
+/// it follows the second half: on overflow divide by `factor` and skip
+/// the update, after `interval` clean updates multiply by `factor`.
+#[derive(Debug, Clone)]
+pub struct LossScaler {
+    scale: f32,
+    factor: f32,
+    interval: usize,
+    counter: usize,
+    dynamic: bool,
+    /// Statistics for monitoring (Console / EXPERIMENTS.md).
+    pub n_overflows: usize,
+    pub n_updates: usize,
+}
+
+impl LossScaler {
+    /// Fixed scale (`loss_scale = 8` in Listing 6).
+    pub fn fixed(scale: f32) -> Self {
+        LossScaler {
+            scale,
+            factor: 1.0,
+            interval: usize::MAX,
+            counter: 0,
+            dynamic: false,
+            n_overflows: 0,
+            n_updates: 0,
+        }
+    }
+
+    /// Dynamic scaling (`scaling_factor = 2`, `interval = 2000` in
+    /// Listing 6).
+    pub fn dynamic(initial: f32, factor: f32, interval: usize) -> Self {
+        LossScaler {
+            scale: initial,
+            factor,
+            interval,
+            counter: 0,
+            dynamic: true,
+            n_overflows: 0,
+            n_updates: 0,
+        }
+    }
+
+    /// Current scale — pass to `loss.backward_with_scale(scale)`.
+    pub fn scale(&self) -> f32 {
+        self.scale
+    }
+
+    /// Complete one step given the solver whose gradients were produced
+    /// with the current scale. Returns `true` if the update was applied,
+    /// `false` if it was skipped due to overflow. This is Listing 6:
+    ///
+    /// ```text
+    /// if solver.check_inf_or_nan_grad():
+    ///     loss_scale /= scaling_factor; counter = 0   (skip update)
+    /// else:
+    ///     solver.scale_grad(1/loss_scale); solver.update()
+    ///     if counter > interval: loss_scale *= scaling_factor; counter = 0
+    ///     counter += 1
+    /// ```
+    pub fn step(&mut self, solver: &mut Solver) -> bool {
+        if self.dynamic && solver.check_inf_or_nan_grad() {
+            self.scale = (self.scale / self.factor).max(1.0);
+            self.counter = 0;
+            self.n_overflows += 1;
+            return false;
+        }
+        solver.scale_grad(1.0 / self.scale);
+        solver.update();
+        self.n_updates += 1;
+        if self.dynamic {
+            if self.counter > self.interval {
+                self.scale *= self.factor;
+                self.counter = 0;
+            }
+            self.counter += 1;
+        }
+        true
+    }
+}
+
+/// FP-32 master copy of a half-storage parameter set ("a master copy
+/// of weights in FP-32", §3.3). The working (half) parameters are what
+/// the graph reads; updates land on the master copy and are quantized
+/// back into the working copy.
+pub struct MasterWeights {
+    masters: Vec<(String, Variable)>,
+    working: Vec<(String, Variable)>,
+}
+
+impl MasterWeights {
+    /// Snapshot `params` (assumed half-storage) into f32 masters.
+    pub fn new(params: &[(String, Variable)]) -> Self {
+        let masters: Vec<(String, Variable)> = params
+            .iter()
+            .map(|(n, v)| {
+                let m = Variable::from_array(v.data().cast(DType::F32), v.need_grad());
+                m.set_name(&format!("{n}/master"));
+                (n.clone(), m)
+            })
+            .collect();
+        MasterWeights { masters, working: params.to_vec() }
+    }
+
+    /// The f32 master variables (bind these to the solver).
+    pub fn masters(&self) -> &[(String, Variable)] {
+        &self.masters
+    }
+
+    /// Copy gradients from the working (half) params onto the masters.
+    pub fn pull_grads(&self) {
+        for ((_, m), (_, w)) in self.masters.iter().zip(&self.working) {
+            m.set_grad(w.grad());
+        }
+    }
+
+    /// Quantize updated masters back into the working params.
+    pub fn push_weights(&self) {
+        for ((_, m), (_, w)) in self.masters.iter().zip(&self.working) {
+            let dtype = w.data().dtype();
+            w.set_data(m.data().cast(dtype));
+        }
+    }
+}
+
+/// Quantize every parameter of a registry snapshot to `dtype` in place
+/// (entering half mode on an existing model).
+pub fn quantize_params(params: &[(String, Variable)], dtype: DType) {
+    for (_, v) in params {
+        let mut d = v.data();
+        d.set_dtype(dtype);
+        v.set_data(d);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn solver_with_param(grad: f32) -> (Solver, Variable) {
+        let mut s = Solver::sgd(0.5);
+        let w = Variable::from_array(NdArray::full(&[1], 1.0), true);
+        s.set_parameters(&[("w".into(), w.clone())]);
+        w.set_grad(NdArray::full(&[1], grad));
+        (s, w)
+    }
+
+    #[test]
+    fn fixed_scaler_unscales_before_update() {
+        // grad was computed with scale 8: solver sees grad/8
+        let (mut s, w) = solver_with_param(8.0);
+        let mut sc = LossScaler::fixed(8.0);
+        assert!(sc.step(&mut s));
+        assert_eq!(w.data().item(), 1.0 - 0.5 * 1.0);
+        assert_eq!(sc.scale(), 8.0); // fixed never changes
+    }
+
+    #[test]
+    fn dynamic_halves_on_overflow_and_skips() {
+        let (mut s, w) = solver_with_param(f32::INFINITY);
+        let mut sc = LossScaler::dynamic(1024.0, 2.0, 10);
+        assert!(!sc.step(&mut s));
+        assert_eq!(sc.scale(), 512.0);
+        assert_eq!(w.data().item(), 1.0); // update skipped
+        assert_eq!(sc.n_overflows, 1);
+    }
+
+    #[test]
+    fn dynamic_doubles_after_interval_clean_steps() {
+        let mut sc = LossScaler::dynamic(8.0, 2.0, 3);
+        for _ in 0..20 {
+            let (mut s, _) = solver_with_param(1.0);
+            sc.step(&mut s);
+        }
+        assert!(sc.scale() > 8.0, "scale grew to {}", sc.scale());
+    }
+
+    #[test]
+    fn dynamic_never_drops_below_one() {
+        let mut sc = LossScaler::dynamic(2.0, 2.0, 10);
+        for _ in 0..5 {
+            let (mut s, _) = solver_with_param(f32::NAN);
+            sc.step(&mut s);
+        }
+        assert!(sc.scale() >= 1.0);
+    }
+
+    #[test]
+    fn overflow_resets_growth_counter() {
+        let mut sc = LossScaler::dynamic(8.0, 2.0, 5);
+        for _ in 0..4 {
+            let (mut s, _) = solver_with_param(1.0);
+            sc.step(&mut s);
+        }
+        let (mut s, _) = solver_with_param(f32::INFINITY);
+        sc.step(&mut s); // overflow at counter=4: scale 4, counter 0
+        assert_eq!(sc.scale(), 4.0);
+        for _ in 0..4 {
+            let (mut s, _) = solver_with_param(1.0);
+            sc.step(&mut s);
+        }
+        assert_eq!(sc.scale(), 4.0); // not yet past interval again
+    }
+
+    #[test]
+    fn master_weights_roundtrip() {
+        let mut half = NdArray::full(&[2], 1.0);
+        half.set_dtype(DType::BF16);
+        let w = Variable::from_array(half, true);
+        let params = vec![("w".to_string(), w.clone())];
+        let mw = MasterWeights::new(&params);
+        assert_eq!(mw.masters()[0].1.data().dtype(), DType::F32);
+
+        // tiny update below bf16 resolution: master keeps it, working rounds
+        let mut s = Solver::sgd(1.0);
+        s.set_parameters(mw.masters());
+        w.set_grad(NdArray::full(&[2], 2f32.powi(-12)));
+        mw.pull_grads();
+        s.update();
+        mw.push_weights();
+        assert_eq!(w.data().data()[0], 1.0); // rounded in working copy
+        assert!(mw.masters()[0].1.data().data()[0] < 1.0); // preserved in master
+
+        // after enough accumulation the working copy moves too
+        for _ in 0..2000 {
+            mw.masters()[0].1.set_grad(NdArray::full(&[2], 2f32.powi(-12)));
+            s.update();
+        }
+        mw.push_weights();
+        assert!(w.data().data()[0] < 1.0);
+    }
+
+    #[test]
+    fn quantize_params_tags_dtype() {
+        let w = Variable::from_array(NdArray::full(&[1], 1.0 + 2f32.powi(-10)), true);
+        let params = vec![("w".to_string(), w.clone())];
+        quantize_params(&params, DType::BF16);
+        assert_eq!(w.data().dtype(), DType::BF16);
+        assert_eq!(w.data().item(), 1.0); // value snapped to bf16 grid
+    }
+}

@@ -1,0 +1,344 @@
+//! The architectures of Tables 2 and 3 (mini widths; DESIGN.md
+//! documents the scaling substitution). All operate on
+//! `[B, 3, 16, 16]` synthetic-ImageNet input and 10 classes, except
+//! LeNet (`[B, 1, 28, 28]`, Listings 4/5) and the MLP.
+
+use super::builder::{Gb, T};
+
+/// Basic 3x3-3x3 residual block (ResNet-18 style).
+fn basic_block(g: &mut Gb, x: &T, w: usize, stride: usize, name: &str) -> T {
+    let r = g.conv(x, w, (3, 3), (stride, stride), (1, 1), &format!("{name}/c1"));
+    let r = g.bn(&r, &format!("{name}/b1"));
+    let r = g.relu(&r);
+    let r = g.conv(&r, w, (3, 3), (1, 1), (1, 1), &format!("{name}/c2"));
+    let r = g.bn(&r, &format!("{name}/b2"));
+    let sc = if x.var.dims()[1] != w || stride != 1 {
+        let s = g.conv(x, w, (1, 1), (stride, stride), (0, 0), &format!("{name}/proj"));
+        g.bn(&s, &format!("{name}/projbn"))
+    } else {
+        x.clone()
+    };
+    let y = g.add(&r, &sc, &format!("{name}/add"));
+    g.relu(&y)
+}
+
+/// Squeeze-and-excitation gate (Hu et al., Table 2's SE- variants).
+fn se_gate(g: &mut Gb, x: &T, reduction: usize, name: &str) -> T {
+    let c = x.var.dims()[1];
+    let s = g.global_avg_pool(x); // [B, C]
+    let s = g.affine(&s, (c / reduction).max(1), &format!("{name}/fc1"));
+    let s = g.relu(&s);
+    let s = g.affine(&s, c, &format!("{name}/fc2"));
+    let s = g.sigmoid(&s);
+    let s = g.reshape(&s, &[0, c as i64, 1, 1], &format!("{name}/rs"));
+    g.mul(x, &s, &format!("{name}/scale"))
+}
+
+/// Bottleneck 1x1-3x3-1x1 block (ResNet-50 style), optional grouped
+/// 3x3 (ResNeXt) and optional SE.
+#[allow(clippy::too_many_arguments)]
+fn bottleneck(
+    g: &mut Gb,
+    x: &T,
+    w: usize,
+    stride: usize,
+    groups: usize,
+    se: bool,
+    name: &str,
+) -> T {
+    // ResNeXt convention: the grouped 3x3 is *wider* than the plain
+    // bottleneck's (32x4d in the paper) — cardinality buys width
+    let mid = if groups > 1 { w } else { w / 2 };
+    let r = g.conv(x, mid, (1, 1), (1, 1), (0, 0), &format!("{name}/c1"));
+    let r = g.bn(&r, &format!("{name}/b1"));
+    let r = g.relu(&r);
+    let r = g.group_conv(&r, mid, (3, 3), (stride, stride), (1, 1), groups, &format!("{name}/c2"));
+    let r = g.bn(&r, &format!("{name}/b2"));
+    let r = g.relu(&r);
+    let r = g.conv(&r, w, (1, 1), (1, 1), (0, 0), &format!("{name}/c3"));
+    let mut r = g.bn(&r, &format!("{name}/b3"));
+    if se {
+        r = se_gate(g, &r, 4, &format!("{name}/se"));
+    }
+    let sc = if x.var.dims()[1] != w || stride != 1 {
+        let s = g.conv(x, w, (1, 1), (stride, stride), (0, 0), &format!("{name}/proj"));
+        g.bn(&s, &format!("{name}/projbn"))
+    } else {
+        x.clone()
+    };
+    let y = g.add(&r, &sc, &format!("{name}/add"));
+    g.relu(&y)
+}
+
+fn resnet_backbone(
+    g: &mut Gb,
+    x: &T,
+    widths: &[usize],
+    blocks: &[usize],
+    bottleneck_blocks: bool,
+    groups: usize,
+    se: bool,
+) -> T {
+    let mut h = g.conv(x, widths[0], (3, 3), (1, 1), (1, 1), "stem");
+    h = g.bn(&h, "stembn");
+    h = g.relu(&h);
+    for (s, (&w, &n)) in widths.iter().zip(blocks).enumerate() {
+        for b in 0..n {
+            let stride = if s > 0 && b == 0 { 2 } else { 1 };
+            let name = format!("s{s}b{b}");
+            h = if bottleneck_blocks {
+                bottleneck(g, &h, w, stride, groups, se, &name)
+            } else {
+                basic_block(g, &h, w, stride, &name)
+            };
+        }
+    }
+    h
+}
+
+fn classifier_head(g: &mut Gb, h: &T, classes: usize) -> T {
+    let p = g.global_avg_pool(h);
+    g.affine(&p, classes, "head")
+}
+
+/// Inverted-residual MBConv block (MobileNetV3 / EfficientNet).
+fn mbconv(g: &mut Gb, x: &T, out: usize, expand: usize, stride: usize, se: bool, name: &str) -> T {
+    let c = x.var.dims()[1];
+    let mid = c * expand;
+    let mut r = x.clone();
+    if expand != 1 {
+        r = g.conv(&r, mid, (1, 1), (1, 1), (0, 0), &format!("{name}/exp"));
+        r = g.bn(&r, &format!("{name}/expbn"));
+        r = g.swish(&r);
+    }
+    // depthwise = group conv with groups == channels
+    r = g.group_conv(&r, mid, (3, 3), (stride, stride), (1, 1), mid, &format!("{name}/dw"));
+    r = g.bn(&r, &format!("{name}/dwbn"));
+    r = g.swish(&r);
+    if se {
+        r = se_gate(g, &r, 4, &format!("{name}/se"));
+    }
+    r = g.conv(&r, out, (1, 1), (1, 1), (0, 0), &format!("{name}/prj"));
+    r = g.bn(&r, &format!("{name}/prjbn"));
+    if c == out && stride == 1 {
+        r = g.add(&r, x, &format!("{name}/add"));
+    }
+    r
+}
+
+fn mobilenet_v3(g: &mut Gb, x: &T, large: bool, classes: usize) -> T {
+    let mut h = g.conv(x, 8, (3, 3), (1, 1), (1, 1), "stem");
+    h = g.bn(&h, "stembn");
+    h = g.swish(&h);
+    let plan: &[(usize, usize, usize, bool)] = if large {
+        // (out, expand, stride, se)
+        &[(8, 1, 1, false), (12, 4, 2, false), (12, 3, 1, false), (16, 3, 2, true), (16, 3, 1, true), (24, 6, 1, true)]
+    } else {
+        &[(8, 1, 2, true), (12, 4, 2, false), (16, 4, 1, true)]
+    };
+    for (i, &(out, exp, st, se)) in plan.iter().enumerate() {
+        h = mbconv(g, &h, out, exp, st, se, &format!("mb{i}"));
+    }
+    classifier_head(g, &h, classes)
+}
+
+fn efficientnet(g: &mut Gb, x: &T, width_mult: f32, depth_mult: f32, classes: usize) -> T {
+    let w = |base: usize| -> usize { ((base as f32 * width_mult).round() as usize).max(4) & !1 };
+    let d = |base: usize| -> usize { (base as f32 * depth_mult).ceil() as usize };
+    let mut h = g.conv(x, w(8), (3, 3), (1, 1), (1, 1), "stem");
+    h = g.bn(&h, "stembn");
+    h = g.swish(&h);
+    // (base_out, expand, stride, repeats)
+    let plan: &[(usize, usize, usize, usize)] =
+        &[(8, 1, 1, 1), (12, 4, 2, 2), (16, 4, 2, 2), (24, 4, 1, 1)];
+    let mut bi = 0;
+    for &(out, exp, st, reps) in plan {
+        for r in 0..d(reps) {
+            let stride = if r == 0 { st } else { 1 };
+            h = mbconv(g, &h, w(out), exp, stride, true, &format!("mb{bi}"));
+            bi += 1;
+        }
+    }
+    classifier_head(g, &h, classes)
+}
+
+/// LeNet exactly as Listing 4 (28x28 grayscale).
+fn lenet(g: &mut Gb, x: &T, classes: usize) -> T {
+    let h = g.conv(x, 16, (5, 5), (1, 1), (0, 0), "conv1");
+    let h = g.max_pool(&h, (2, 2), (2, 2));
+    let h = g.relu(&h);
+    let h = g.conv(&h, 16, (5, 5), (1, 1), (0, 0), "conv2");
+    let h = g.max_pool(&h, (2, 2), (2, 2));
+    let h = g.relu(&h);
+    let h = g.affine(&h, 50, "affine3");
+    let h = g.relu(&h);
+    g.affine(&h, classes, "affine4")
+}
+
+fn mlp(g: &mut Gb, x: &T, classes: usize) -> T {
+    let h = g.affine(x, 128, "fc1");
+    let h = g.relu(&h);
+    let h = g.dropout(&h, 0.1, "drop1");
+    let h = g.affine(&h, 64, "fc2");
+    let h = g.relu(&h);
+    g.affine(&h, classes, "out")
+}
+
+/// All zoo model names, grouped by the table they reproduce.
+pub fn model_names() -> Vec<&'static str> {
+    vec![
+        // Listings / quickstart
+        "mlp",
+        "lenet",
+        // Table 2
+        "resnet18",
+        "resnet50",
+        "resnext50",
+        "se_resnet50",
+        "se_resnext50",
+        // Table 3
+        "mobilenet_v3_small",
+        "mobilenet_v3_large",
+        "efficientnet_b0",
+        "efficientnet_b1",
+        "efficientnet_b2",
+        "efficientnet_b3",
+    ]
+}
+
+/// Build `name` on `g` from input `x`; returns logits.
+pub fn build_model(g: &mut Gb, name: &str, x: &T, classes: usize) -> T {
+    match name {
+        "mlp" => mlp(g, x, classes),
+        "lenet" => lenet(g, x, classes),
+        "resnet18" => {
+            let h = resnet_backbone(g, x, &[8, 16, 32], &[2, 2, 2], false, 1, false);
+            classifier_head(g, &h, classes)
+        }
+        "resnet50" => {
+            let h = resnet_backbone(g, x, &[24, 48, 96], &[2, 3, 2], true, 1, false);
+            classifier_head(g, &h, classes)
+        }
+        "resnext50" => {
+            let h = resnet_backbone(g, x, &[24, 48, 96], &[2, 3, 2], true, 4, false);
+            classifier_head(g, &h, classes)
+        }
+        "se_resnet50" => {
+            let h = resnet_backbone(g, x, &[24, 48, 96], &[2, 3, 2], true, 1, true);
+            classifier_head(g, &h, classes)
+        }
+        "se_resnext50" => {
+            let h = resnet_backbone(g, x, &[24, 48, 96], &[2, 3, 2], true, 4, true);
+            classifier_head(g, &h, classes)
+        }
+        "mobilenet_v3_small" => mobilenet_v3(g, x, false, classes),
+        "mobilenet_v3_large" => mobilenet_v3(g, x, true, classes),
+        "efficientnet_b0" => efficientnet(g, x, 1.0, 1.0, classes),
+        "efficientnet_b1" => efficientnet(g, x, 1.0, 1.3, classes),
+        "efficientnet_b2" => efficientnet(g, x, 1.15, 1.6, classes),
+        "efficientnet_b3" => efficientnet(g, x, 1.3, 2.0, classes),
+        other => panic!("unknown model '{other}' (available: {:?})", model_names()),
+    }
+}
+
+/// Input dims (without batch) for a zoo model.
+pub fn input_dims(name: &str) -> Vec<usize> {
+    match name {
+        "mlp" => vec![64],
+        "lenet" => vec![1, 28, 28],
+        _ => vec![3, 16, 16],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::parametric::{clear_parameters, get_parameters, seed_parameter_rng};
+    use crate::tensor::Rng;
+
+    fn reset() {
+        clear_parameters();
+        seed_parameter_rng(5);
+    }
+
+    #[test]
+    fn every_model_builds_and_forwards() {
+        for name in model_names() {
+            reset();
+            let mut g = Gb::new(name, true);
+            let dims: Vec<usize> = std::iter::once(2).chain(input_dims(name)).collect();
+            let x = g.input("x", &dims);
+            let y = build_model(&mut g, name, &x, 10);
+            assert_eq!(y.var.dims(), vec![2, 10], "{name} logits shape");
+            let def = g.finish(&[&y]);
+            assert!(def.validate().is_ok(), "{name} IR invalid");
+            // forward with real data works
+            let mut rng = Rng::new(1);
+            x.var.set_data(rng.randn(&dims, 1.0));
+            y.var.forward();
+            assert!(!y.var.data().has_inf_or_nan(), "{name} produced inf/nan");
+        }
+    }
+
+    #[test]
+    fn table2_models_ordered_by_cost() {
+        // the Table 2 "shape": rn18 < rn50 < rnext50 <= se variants
+        let macs: Vec<u64> = ["resnet18", "resnet50", "se_resnet50", "se_resnext50"]
+            .iter()
+            .map(|name| {
+                reset();
+                let mut g = Gb::new(name, true);
+                let x = g.input("x", &[1, 3, 16, 16]);
+                let _ = build_model(&mut g, name, &x, 10);
+                g.macs()
+            })
+            .collect();
+        assert!(macs[0] < macs[1], "rn18 {} !< rn50 {}", macs[0], macs[1]);
+        assert!(macs[1] <= macs[2], "rn50 {} !<= se_rn50 {}", macs[1], macs[2]);
+    }
+
+    #[test]
+    fn efficientnet_compound_scaling_grows() {
+        let params: Vec<usize> = ["efficientnet_b0", "efficientnet_b1", "efficientnet_b2", "efficientnet_b3"]
+            .iter()
+            .map(|name| {
+                reset();
+                let mut g = Gb::new(name, true);
+                let x = g.input("x", &[1, 3, 16, 16]);
+                let _ = build_model(&mut g, name, &x, 10);
+                get_parameters().iter().map(|(_, v)| v.size()).sum()
+            })
+            .collect();
+        assert!(params.windows(2).all(|w| w[0] < w[1]), "{params:?}");
+    }
+
+    #[test]
+    fn gradients_flow_through_se_resnext() {
+        reset();
+        let mut g = Gb::new("se_resnext50", true);
+        let x = g.input("x", &[2, 3, 16, 16]);
+        let y = build_model(&mut g, "se_resnext50", &x, 10);
+        let mut rng = Rng::new(2);
+        x.var.set_data(rng.randn(&[2, 3, 16, 16], 1.0));
+        y.var.forward();
+        crate::functions::mean_all(&y.var).backward();
+        let trainable_with_grad = get_parameters()
+            .iter()
+            .filter(|(_, v)| v.need_grad() && v.grad().norm2() > 0.0)
+            .count();
+        let trainable: usize =
+            get_parameters().iter().filter(|(_, v)| v.need_grad()).count();
+        assert!(
+            trainable_with_grad * 10 >= trainable * 9,
+            "{trainable_with_grad}/{trainable} params got grads"
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown model")]
+    fn unknown_model_panics_with_listing() {
+        let mut g = Gb::new("x", true);
+        let x = g.input("x", &[1, 3, 16, 16]);
+        let _ = build_model(&mut g, "vgg999", &x, 10);
+    }
+}

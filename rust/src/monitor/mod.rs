@@ -1,0 +1,145 @@
+//! Monitors — the paper's Monitor message (§3.1) and the training-
+//! status tracking Neural Network Console renders (§5.1). Series are
+//! kept in memory and can be flushed to CSV for plotting (Figure 3's
+//! loss curve comes out of these).
+
+use std::fmt::Write as _;
+use std::path::Path;
+use std::time::Instant;
+
+/// A named scalar time-series (loss, error, lr, ...).
+#[derive(Debug, Clone, Default)]
+pub struct MonitorSeries {
+    pub name: String,
+    points: Vec<(usize, f32)>,
+}
+
+impl MonitorSeries {
+    pub fn new(name: &str) -> Self {
+        MonitorSeries { name: name.to_string(), points: Vec::new() }
+    }
+
+    pub fn add(&mut self, step: usize, value: f32) {
+        self.points.push((step, value));
+    }
+
+    pub fn points(&self) -> &[(usize, f32)] {
+        &self.points
+    }
+
+    pub fn last(&self) -> Option<f32> {
+        self.points.last().map(|&(_, v)| v)
+    }
+
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    /// Mean of the last `n` values (smoothed readout).
+    pub fn tail_mean(&self, n: usize) -> f32 {
+        if self.points.is_empty() {
+            return f32::NAN;
+        }
+        let tail = &self.points[self.points.len().saturating_sub(n)..];
+        tail.iter().map(|&(_, v)| v).sum::<f32>() / tail.len() as f32
+    }
+
+    /// CSV rendering (`step,value` rows with a header).
+    pub fn to_csv(&self) -> String {
+        let mut s = format!("step,{}\n", self.name);
+        for (step, v) in &self.points {
+            let _ = writeln!(s, "{step},{v}");
+        }
+        s
+    }
+
+    pub fn save_csv(&self, path: &Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_csv())
+    }
+}
+
+/// Wall-clock tracker (`MonitorTimeElapsed`).
+#[derive(Debug)]
+pub struct MonitorTimeElapsed {
+    start: Instant,
+    laps: Vec<(usize, f64)>,
+}
+
+impl Default for MonitorTimeElapsed {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl MonitorTimeElapsed {
+    pub fn new() -> Self {
+        MonitorTimeElapsed { start: Instant::now(), laps: Vec::new() }
+    }
+
+    pub fn lap(&mut self, step: usize) -> f64 {
+        let t = self.start.elapsed().as_secs_f64();
+        self.laps.push((step, t));
+        t
+    }
+
+    pub fn total_secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Seconds per step over the last recorded span.
+    pub fn secs_per_step(&self) -> f64 {
+        match (self.laps.first(), self.laps.last()) {
+            (Some(&(s0, t0)), Some(&(s1, t1))) if s1 > s0 => (t1 - t0) / (s1 - s0) as f64,
+            _ => self.total_secs(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn series_records_and_summarizes() {
+        let mut m = MonitorSeries::new("loss");
+        for i in 0..10 {
+            m.add(i, 10.0 - i as f32);
+        }
+        assert_eq!(m.len(), 10);
+        assert_eq!(m.last(), Some(1.0));
+        assert!((m.tail_mean(2) - 1.5).abs() < 1e-6);
+        assert!((m.tail_mean(100) - 5.5).abs() < 1e-6); // clamps to available
+    }
+
+    #[test]
+    fn csv_format() {
+        let mut m = MonitorSeries::new("err");
+        m.add(0, 0.5);
+        m.add(10, 0.25);
+        let csv = m.to_csv();
+        assert!(csv.starts_with("step,err\n"));
+        assert!(csv.contains("10,0.25"));
+    }
+
+    #[test]
+    fn time_monitor_laps() {
+        let mut t = MonitorTimeElapsed::new();
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        t.lap(0);
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        let total = t.lap(10);
+        assert!(total >= 0.01);
+        assert!(t.secs_per_step() > 0.0);
+    }
+
+    #[test]
+    fn empty_series_tail_is_nan() {
+        let m = MonitorSeries::new("x");
+        assert!(m.tail_mean(5).is_nan());
+        assert!(m.is_empty());
+    }
+}

@@ -1,0 +1,124 @@
+//! The `.nnp` container: a minimal named-entry archive
+//! (`magic | count | {name_len, name, data_len, data}*` with a CRC).
+//! Stands in for the zip container real NNabla uses; the contract —
+//! one file carrying structure text + parameter blob — is identical.
+
+use std::fs;
+use std::io::{self, Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"NNPA";
+
+fn crc32(data: &[u8]) -> u32 {
+    // standard CRC-32 (IEEE), bitwise implementation
+    let mut crc = 0xFFFF_FFFFu32;
+    for &b in data {
+        crc ^= b as u32;
+        for _ in 0..8 {
+            let mask = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (0xEDB8_8320 & mask);
+        }
+    }
+    !crc
+}
+
+/// Write entries `(name, bytes)` to `path`.
+pub fn write_archive(path: &Path, entries: &[(String, Vec<u8>)]) -> io::Result<()> {
+    let mut body = Vec::new();
+    body.extend_from_slice(&(entries.len() as u32).to_le_bytes());
+    for (name, data) in entries {
+        let nb = name.as_bytes();
+        body.extend_from_slice(&(nb.len() as u32).to_le_bytes());
+        body.extend_from_slice(nb);
+        body.extend_from_slice(&(data.len() as u64).to_le_bytes());
+        body.extend_from_slice(data);
+    }
+    let mut f = fs::File::create(path)?;
+    f.write_all(MAGIC)?;
+    f.write_all(&crc32(&body).to_le_bytes())?;
+    f.write_all(&body)?;
+    Ok(())
+}
+
+/// Read all entries from `path`.
+pub fn read_archive(path: &Path) -> io::Result<Vec<(String, Vec<u8>)>> {
+    let mut f = fs::File::open(path)?;
+    let mut all = Vec::new();
+    f.read_to_end(&mut all)?;
+    if all.len() < 8 || &all[0..4] != MAGIC {
+        return Err(io::Error::new(io::ErrorKind::InvalidData, "not an NNP archive"));
+    }
+    let stored_crc = u32::from_le_bytes(all[4..8].try_into().unwrap());
+    let body = &all[8..];
+    if crc32(body) != stored_crc {
+        return Err(io::Error::new(io::ErrorKind::InvalidData, "NNP archive CRC mismatch"));
+    }
+    let mut pos = 0usize;
+    let take = |pos: &mut usize, n: usize| -> io::Result<&[u8]> {
+        if *pos + n > body.len() {
+            return Err(io::Error::new(io::ErrorKind::UnexpectedEof, "truncated archive"));
+        }
+        let s = &body[*pos..*pos + n];
+        *pos += n;
+        Ok(s)
+    };
+    let count = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        let name_len = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
+        let name = String::from_utf8(take(&mut pos, name_len)?.to_vec())
+            .map_err(|_| io::Error::new(io::ErrorKind::InvalidData, "bad entry name"))?;
+        let data_len = u64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap()) as usize;
+        let data = take(&mut pos, data_len)?.to_vec();
+        out.push((name, data));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("nnl_arch_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn roundtrip() {
+        let p = tmp("a.nnp");
+        let entries = vec![
+            ("net.nntxt".to_string(), b"hello".to_vec()),
+            ("params".to_string(), vec![0u8, 1, 2, 255]),
+            ("empty".to_string(), vec![]),
+        ];
+        write_archive(&p, &entries).unwrap();
+        assert_eq!(read_archive(&p).unwrap(), entries);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let p = tmp("b.nnp");
+        std::fs::write(&p, b"ZIPPfakedata").unwrap();
+        assert!(read_archive(&p).is_err());
+    }
+
+    #[test]
+    fn detects_corruption() {
+        let p = tmp("c.nnp");
+        write_archive(&p, &[("x".into(), vec![1, 2, 3, 4])]).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0xFF;
+        std::fs::write(&p, &bytes).unwrap();
+        let err = read_archive(&p).unwrap_err();
+        assert!(err.to_string().contains("CRC"));
+    }
+
+    #[test]
+    fn crc32_known_vector() {
+        // CRC-32("123456789") = 0xCBF43926
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+    }
+}

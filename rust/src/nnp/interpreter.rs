@@ -1,0 +1,234 @@
+//! Execute a [`NetworkDef`] for inference — the deployment runtime the
+//! paper's NNB / C-runtime targets exist for. Built on the same tested
+//! `F::*` kernels as the training engine, so converted models are
+//! bit-identical to the source graph.
+
+use std::collections::HashMap;
+
+use crate::functions as F;
+use crate::graph::Variable;
+use crate::tensor::NdArray;
+
+use super::ir::{NetworkDef, Op};
+
+/// Run `net` on named inputs with a parameter map. Returns the
+/// network's declared outputs in order.
+pub fn run(
+    net: &NetworkDef,
+    inputs: &HashMap<String, NdArray>,
+    params: &HashMap<String, NdArray>,
+) -> Result<Vec<NdArray>, String> {
+    net.validate()?;
+    let mut env: HashMap<String, Variable> = HashMap::new();
+    for t in &net.inputs {
+        let a = inputs
+            .get(&t.name)
+            .ok_or_else(|| format!("missing input '{}'", t.name))?;
+        if a.dims()[1..] != t.dims[1..] {
+            return Err(format!(
+                "input '{}' feature dims {:?} != declared {:?}",
+                t.name,
+                a.dims(),
+                t.dims
+            ));
+        }
+        env.insert(t.name.clone(), Variable::from_array(a.clone(), false));
+    }
+    let p = |name: &str| -> Result<Variable, String> {
+        params
+            .get(name)
+            .map(|a| Variable::from_array(a.clone(), false))
+            .ok_or_else(|| format!("missing parameter '{name}'"))
+    };
+    for l in &net.layers {
+        let ins: Vec<Variable> = l
+            .inputs
+            .iter()
+            .map(|n| env.get(n).cloned().ok_or_else(|| format!("missing tensor '{n}'")))
+            .collect::<Result<_, _>>()?;
+        let y = match &l.op {
+            Op::Affine => {
+                let w = p(&l.params[0])?;
+                let b = if l.params.len() > 1 { Some(p(&l.params[1])?) } else { None };
+                F::affine(&ins[0], &w, b.as_ref())
+            }
+            Op::Convolution { stride, pad, dilation } => {
+                let w = p(&l.params[0])?;
+                let b = if l.params.len() > 1 { Some(p(&l.params[1])?) } else { None };
+                F::convolution(&ins[0], &w, b.as_ref(), *stride, *pad, *dilation)
+            }
+            Op::MaxPool { kernel, stride, pad } => F::max_pooling(&ins[0], *kernel, *stride, *pad),
+            Op::AvgPool { kernel, stride, pad, including_pad } => {
+                F::average_pooling(&ins[0], *kernel, *stride, *pad, *including_pad)
+            }
+            Op::GlobalAvgPool => F::global_average_pooling(&ins[0]),
+            Op::ReLU => F::relu(&ins[0]),
+            Op::LeakyReLU { alpha } => F::leaky_relu(&ins[0], *alpha),
+            Op::Sigmoid => F::sigmoid(&ins[0]),
+            Op::Tanh => F::tanh(&ins[0]),
+            Op::Elu { alpha } => F::elu(&ins[0], *alpha),
+            Op::Swish => F::swish(&ins[0]),
+            Op::Gelu => F::gelu(&ins[0]),
+            Op::Softplus => F::softplus(&ins[0]),
+            Op::Softmax => F::softmax(&ins[0]),
+            Op::LogSoftmax => F::log_softmax(&ins[0]),
+            Op::BatchNorm { eps } => {
+                let beta = p(&l.params[0])?;
+                let gamma = p(&l.params[1])?;
+                let mean = p(&l.params[2])?;
+                let var = p(&l.params[3])?;
+                F::batch_normalization(&ins[0], &beta, &gamma, &mean, &var, 0.9, *eps, false)
+            }
+            Op::LayerNorm { eps } => {
+                let beta = p(&l.params[0])?;
+                let gamma = p(&l.params[1])?;
+                F::layer_normalization(&ins[0], &beta, &gamma, *eps)
+            }
+            Op::Add2 => F::add(&ins[0], &ins[1]),
+            Op::Mul2 => F::mul(&ins[0], &ins[1]),
+            Op::Concat { axis } => {
+                let refs: Vec<&Variable> = ins.iter().collect();
+                F::concat(&refs, *axis)
+            }
+            Op::Reshape { dims } => {
+                let batch = ins[0].dims()[0];
+                let resolved: Vec<usize> = dims
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &d)| {
+                        if d == -1 {
+                            usize::MAX
+                        } else if d == 0 && i == 0 {
+                            batch // 0 in dim 0 = "keep batch"
+                        } else {
+                            d as usize
+                        }
+                    })
+                    .collect();
+                F::reshape(&ins[0], &resolved)
+            }
+            Op::Dropout { .. } => ins[0].clone(), // inference no-op
+            Op::Embed => {
+                let w = p(&l.params[0])?;
+                F::embed(&ins[0], &w)
+            }
+            Op::Identity => ins[0].clone(),
+        };
+        // register outputs (ops here are all single-output)
+        env.insert(l.outputs[0].clone(), y);
+    }
+    net.outputs
+        .iter()
+        .map(|o| env.get(o).map(|v| v.data()).ok_or_else(|| format!("missing output '{o}'")))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nnp::ir::{Layer, TensorDef};
+
+    fn affine_relu_net() -> (NetworkDef, HashMap<String, NdArray>) {
+        let net = NetworkDef {
+            name: "n".into(),
+            inputs: vec![TensorDef { name: "x".into(), dims: vec![1, 2] }],
+            outputs: vec!["y".into()],
+            layers: vec![
+                Layer {
+                    name: "fc".into(),
+                    op: Op::Affine,
+                    inputs: vec!["x".into()],
+                    params: vec!["W".into(), "b".into()],
+                    outputs: vec!["h".into()],
+                },
+                Layer {
+                    name: "r".into(),
+                    op: Op::ReLU,
+                    inputs: vec!["h".into()],
+                    params: vec![],
+                    outputs: vec!["y".into()],
+                },
+            ],
+        };
+        let mut params = HashMap::new();
+        params.insert("W".into(), NdArray::from_slice(&[2, 2], &[1., -1., 1., 1.]));
+        params.insert("b".into(), NdArray::from_slice(&[2], &[0., -10.]));
+        (net, params)
+    }
+
+    #[test]
+    fn runs_affine_relu() {
+        let (net, params) = affine_relu_net();
+        let mut inputs = HashMap::new();
+        inputs.insert("x".into(), NdArray::from_slice(&[1, 2], &[3., 4.]));
+        let out = run(&net, &inputs, &params).unwrap();
+        // h = [3+4, -3+4-10] = [7, -9]; relu -> [7, 0]
+        assert_eq!(out[0].data(), &[7., 0.]);
+    }
+
+    #[test]
+    fn batch_size_flexible() {
+        let (net, params) = affine_relu_net();
+        let mut inputs = HashMap::new();
+        inputs.insert("x".into(), NdArray::zeros(&[5, 2]));
+        let out = run(&net, &inputs, &params).unwrap();
+        assert_eq!(out[0].dims(), &[5, 2]);
+    }
+
+    #[test]
+    fn missing_param_reported() {
+        let (net, mut params) = affine_relu_net();
+        params.remove("b");
+        let mut inputs = HashMap::new();
+        inputs.insert("x".into(), NdArray::zeros(&[1, 2]));
+        let err = run(&net, &inputs, &params).unwrap_err();
+        assert!(err.contains("missing parameter 'b'"), "{err}");
+    }
+
+    #[test]
+    fn missing_input_reported() {
+        let (net, params) = affine_relu_net();
+        let err = run(&net, &HashMap::new(), &params).unwrap_err();
+        assert!(err.contains("missing input 'x'"), "{err}");
+    }
+
+    #[test]
+    fn dropout_is_identity_at_inference() {
+        let net = NetworkDef {
+            name: "d".into(),
+            inputs: vec![TensorDef { name: "x".into(), dims: vec![1, 3] }],
+            outputs: vec!["y".into()],
+            layers: vec![Layer {
+                name: "drop".into(),
+                op: Op::Dropout { p: 0.9 },
+                inputs: vec!["x".into()],
+                params: vec![],
+                outputs: vec!["y".into()],
+            }],
+        };
+        let mut inputs = HashMap::new();
+        inputs.insert("x".into(), NdArray::from_slice(&[1, 3], &[1., 2., 3.]));
+        let out = run(&net, &inputs, &HashMap::new()).unwrap();
+        assert_eq!(out[0].data(), &[1., 2., 3.]);
+    }
+
+    #[test]
+    fn reshape_keep_batch_and_infer() {
+        let net = NetworkDef {
+            name: "r".into(),
+            inputs: vec![TensorDef { name: "x".into(), dims: vec![2, 3, 4] }],
+            outputs: vec!["y".into()],
+            layers: vec![Layer {
+                name: "reshape".into(),
+                op: Op::Reshape { dims: vec![0, -1] },
+                inputs: vec!["x".into()],
+                params: vec![],
+                outputs: vec!["y".into()],
+            }],
+        };
+        let mut inputs = HashMap::new();
+        inputs.insert("x".into(), NdArray::zeros(&[2, 3, 4]));
+        let out = run(&net, &inputs, &HashMap::new()).unwrap();
+        assert_eq!(out[0].dims(), &[2, 12]);
+    }
+}

@@ -1,0 +1,465 @@
+//! The network intermediate representation — the role the paper's
+//! "protobuf defined in Neural Network Libraries" plays as the
+//! converter hub (§3: "this file format converter uses protobuf ...
+//! as intermediate format").
+//!
+//! A [`NetworkDef`] is a flat, topologically-ordered list of layers
+//! over named tensors. It is what NNP stores, what every converter
+//! consumes/produces, and what the [`crate::nnp::interpreter`]
+//! executes for deployment-style inference.
+
+use crate::utils::json::Json;
+
+/// Operator type + attributes.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Op {
+    /// `y = x·W + b`; params: `W`, optional `b`.
+    Affine,
+    /// 2-D convolution; params: `W [oc,c,kh,kw]`, optional `b`.
+    Convolution { stride: (usize, usize), pad: (usize, usize), dilation: (usize, usize) },
+    MaxPool { kernel: (usize, usize), stride: (usize, usize), pad: (usize, usize) },
+    AvgPool { kernel: (usize, usize), stride: (usize, usize), pad: (usize, usize), including_pad: bool },
+    GlobalAvgPool,
+    ReLU,
+    LeakyReLU { alpha: f32 },
+    Sigmoid,
+    Tanh,
+    Elu { alpha: f32 },
+    Swish,
+    Gelu,
+    Softplus,
+    Softmax,
+    LogSoftmax,
+    /// Inference-mode batch norm; params: `beta`, `gamma`, `mean`, `var`.
+    BatchNorm { eps: f32 },
+    /// Layer norm over the last axis; params: `beta`, `gamma`.
+    LayerNorm { eps: f32 },
+    /// Elementwise add of two inputs (residual connections).
+    Add2,
+    /// Elementwise multiply of two inputs (SE scaling).
+    Mul2,
+    /// Concat of N inputs along an axis.
+    Concat { axis: usize },
+    Reshape { dims: Vec<i64> },
+    /// Dropout: a no-op at inference; `p` recorded for re-training.
+    Dropout { p: f32 },
+    /// Embedding lookup; params: `W [V, D]`.
+    Embed,
+    /// Identity (signature pinning).
+    Identity,
+}
+
+impl Op {
+    /// Canonical function name (matches NNabla function names where
+    /// they exist — used by nntxt, the support-query tool and NNB).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Op::Affine => "Affine",
+            Op::Convolution { .. } => "Convolution",
+            Op::MaxPool { .. } => "MaxPooling",
+            Op::AvgPool { .. } => "AveragePooling",
+            Op::GlobalAvgPool => "GlobalAveragePooling",
+            Op::ReLU => "ReLU",
+            Op::LeakyReLU { .. } => "LeakyReLU",
+            Op::Sigmoid => "Sigmoid",
+            Op::Tanh => "Tanh",
+            Op::Elu { .. } => "ELU",
+            Op::Swish => "Swish",
+            Op::Gelu => "GELU",
+            Op::Softplus => "SoftPlus",
+            Op::Softmax => "Softmax",
+            Op::LogSoftmax => "LogSoftmax",
+            Op::BatchNorm { .. } => "BatchNormalization",
+            Op::LayerNorm { .. } => "LayerNormalization",
+            Op::Add2 => "Add2",
+            Op::Mul2 => "Mul2",
+            Op::Concat { .. } => "Concatenate",
+            Op::Reshape { .. } => "Reshape",
+            Op::Dropout { .. } => "Dropout",
+            Op::Embed => "Embed",
+            Op::Identity => "Identity",
+        }
+    }
+
+    /// Attributes as JSON (for NNP binary / nntxt round-trips).
+    pub fn attrs_json(&self) -> Json {
+        fn pair(p: (usize, usize)) -> Json {
+            Json::arr_of_usize(&[p.0, p.1])
+        }
+        match self {
+            Op::Convolution { stride, pad, dilation } => Json::obj(vec![
+                ("stride", pair(*stride)),
+                ("pad", pair(*pad)),
+                ("dilation", pair(*dilation)),
+            ]),
+            Op::MaxPool { kernel, stride, pad } => Json::obj(vec![
+                ("kernel", pair(*kernel)),
+                ("stride", pair(*stride)),
+                ("pad", pair(*pad)),
+            ]),
+            Op::AvgPool { kernel, stride, pad, including_pad } => Json::obj(vec![
+                ("kernel", pair(*kernel)),
+                ("stride", pair(*stride)),
+                ("pad", pair(*pad)),
+                ("including_pad", Json::Bool(*including_pad)),
+            ]),
+            Op::LeakyReLU { alpha } => Json::obj(vec![("alpha", Json::num(*alpha as f64))]),
+            Op::Elu { alpha } => Json::obj(vec![("alpha", Json::num(*alpha as f64))]),
+            Op::BatchNorm { eps } => Json::obj(vec![("eps", Json::num(*eps as f64))]),
+            Op::LayerNorm { eps } => Json::obj(vec![("eps", Json::num(*eps as f64))]),
+            Op::Concat { axis } => Json::obj(vec![("axis", Json::num(*axis as f64))]),
+            Op::Reshape { dims } => Json::obj(vec![(
+                "dims",
+                Json::Arr(dims.iter().map(|&d| Json::num(d as f64)).collect()),
+            )]),
+            Op::Dropout { p } => Json::obj(vec![("p", Json::num(*p as f64))]),
+            _ => Json::obj(vec![]),
+        }
+    }
+
+    /// Rebuild from name + attrs (NNP binary / nntxt load).
+    pub fn from_name_attrs(name: &str, attrs: &Json) -> Option<Op> {
+        fn pair(j: &Json) -> Option<(usize, usize)> {
+            let v = j.usize_arr()?;
+            if v.len() == 2 {
+                Some((v[0], v[1]))
+            } else {
+                None
+            }
+        }
+        Some(match name {
+            "Affine" => Op::Affine,
+            "Convolution" => Op::Convolution {
+                stride: pair(attrs.get("stride"))?,
+                pad: pair(attrs.get("pad"))?,
+                dilation: pair(attrs.get("dilation"))?,
+            },
+            "MaxPooling" => Op::MaxPool {
+                kernel: pair(attrs.get("kernel"))?,
+                stride: pair(attrs.get("stride"))?,
+                pad: pair(attrs.get("pad"))?,
+            },
+            "AveragePooling" => Op::AvgPool {
+                kernel: pair(attrs.get("kernel"))?,
+                stride: pair(attrs.get("stride"))?,
+                pad: pair(attrs.get("pad"))?,
+                including_pad: attrs.get("including_pad").as_bool().unwrap_or(false),
+            },
+            "GlobalAveragePooling" => Op::GlobalAvgPool,
+            "ReLU" => Op::ReLU,
+            "LeakyReLU" => Op::LeakyReLU { alpha: attrs.get("alpha").as_f64()? as f32 },
+            "Sigmoid" => Op::Sigmoid,
+            "Tanh" => Op::Tanh,
+            "ELU" => Op::Elu { alpha: attrs.get("alpha").as_f64()? as f32 },
+            "Swish" => Op::Swish,
+            "GELU" => Op::Gelu,
+            "SoftPlus" => Op::Softplus,
+            "Softmax" => Op::Softmax,
+            "LogSoftmax" => Op::LogSoftmax,
+            "BatchNormalization" => Op::BatchNorm { eps: attrs.get("eps").as_f64()? as f32 },
+            "LayerNormalization" => Op::LayerNorm { eps: attrs.get("eps").as_f64()? as f32 },
+            "Add2" => Op::Add2,
+            "Mul2" => Op::Mul2,
+            "Concatenate" => Op::Concat { axis: attrs.get("axis").as_usize()? },
+            "Reshape" => Op::Reshape {
+                dims: attrs
+                    .get("dims")
+                    .as_arr()?
+                    .iter()
+                    .filter_map(|v| v.as_f64().map(|f| f as i64))
+                    .collect(),
+            },
+            "Dropout" => Op::Dropout { p: attrs.get("p").as_f64()? as f32 },
+            "Embed" => Op::Embed,
+            "Identity" => Op::Identity,
+            _ => return None,
+        })
+    }
+}
+
+/// One layer: op + tensor names. Parameter tensor names refer to the
+/// NNP parameter set; activation names are network-internal.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Layer {
+    /// Unique layer name (e.g. `conv1`).
+    pub name: String,
+    pub op: Op,
+    /// Activation inputs (tensor names).
+    pub inputs: Vec<String>,
+    /// Parameter inputs (registry names, in op-defined order).
+    pub params: Vec<String>,
+    /// Activation outputs (tensor names).
+    pub outputs: Vec<String>,
+}
+
+/// A named tensor signature.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorDef {
+    pub name: String,
+    pub dims: Vec<usize>,
+}
+
+/// The network graph: the `Network` message of the NNP format.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct NetworkDef {
+    pub name: String,
+    pub inputs: Vec<TensorDef>,
+    pub outputs: Vec<String>,
+    pub layers: Vec<Layer>,
+}
+
+impl NetworkDef {
+    /// All parameter names referenced, in first-use order.
+    pub fn param_names(&self) -> Vec<String> {
+        let mut seen = std::collections::HashSet::new();
+        let mut out = Vec::new();
+        for l in &self.layers {
+            for p in &l.params {
+                if seen.insert(p.clone()) {
+                    out.push(p.clone());
+                }
+            }
+        }
+        out
+    }
+
+    /// Distinct function (op) names used — the converter support query
+    /// runs over this.
+    pub fn function_names(&self) -> Vec<&'static str> {
+        let mut seen = std::collections::HashSet::new();
+        let mut out = Vec::new();
+        for l in &self.layers {
+            if seen.insert(l.op.name()) {
+                out.push(l.op.name());
+            }
+        }
+        out
+    }
+
+    /// Structural validation: every layer input must be produced by an
+    /// earlier layer or be a network input; outputs must exist.
+    pub fn validate(&self) -> Result<(), String> {
+        let mut known: std::collections::HashSet<&str> =
+            self.inputs.iter().map(|t| t.name.as_str()).collect();
+        for l in &self.layers {
+            for i in &l.inputs {
+                if !known.contains(i.as_str()) {
+                    return Err(format!("layer '{}' reads undefined tensor '{}'", l.name, i));
+                }
+            }
+            for o in &l.outputs {
+                known.insert(o);
+            }
+        }
+        for o in &self.outputs {
+            if !known.contains(o.as_str()) {
+                return Err(format!("network output '{o}' never produced"));
+            }
+        }
+        Ok(())
+    }
+
+    // -------------------------------------------------------------- json
+
+    /// Structural JSON (used by the NNP binary container and the
+    /// frozen-graph format).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            (
+                "inputs",
+                Json::Arr(
+                    self.inputs
+                        .iter()
+                        .map(|t| {
+                            Json::obj(vec![
+                                ("name", Json::str(t.name.clone())),
+                                ("dims", Json::arr_of_usize(&t.dims)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "outputs",
+                Json::Arr(self.outputs.iter().map(|o| Json::str(o.clone())).collect()),
+            ),
+            (
+                "layers",
+                Json::Arr(
+                    self.layers
+                        .iter()
+                        .map(|l| {
+                            Json::obj(vec![
+                                ("name", Json::str(l.name.clone())),
+                                ("op", Json::str(l.op.name())),
+                                ("attrs", l.op.attrs_json()),
+                                (
+                                    "inputs",
+                                    Json::Arr(
+                                        l.inputs.iter().map(|s| Json::str(s.clone())).collect(),
+                                    ),
+                                ),
+                                (
+                                    "params",
+                                    Json::Arr(
+                                        l.params.iter().map(|s| Json::str(s.clone())).collect(),
+                                    ),
+                                ),
+                                (
+                                    "outputs",
+                                    Json::Arr(
+                                        l.outputs.iter().map(|s| Json::str(s.clone())).collect(),
+                                    ),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<NetworkDef, String> {
+        let strs = |j: &Json| -> Vec<String> {
+            j.as_arr()
+                .map(|a| a.iter().filter_map(|v| v.as_str().map(String::from)).collect())
+                .unwrap_or_default()
+        };
+        let inputs = j
+            .get("inputs")
+            .as_arr()
+            .ok_or("missing inputs")?
+            .iter()
+            .map(|t| {
+                Ok(TensorDef {
+                    name: t.get("name").as_str().ok_or("input name")?.to_string(),
+                    dims: t.get("dims").usize_arr().ok_or("input dims")?,
+                })
+            })
+            .collect::<Result<Vec<_>, String>>()?;
+        let layers = j
+            .get("layers")
+            .as_arr()
+            .ok_or("missing layers")?
+            .iter()
+            .map(|l| {
+                let opname = l.get("op").as_str().ok_or("layer op")?;
+                let op = Op::from_name_attrs(opname, l.get("attrs"))
+                    .ok_or_else(|| format!("unknown op '{opname}'"))?;
+                Ok(Layer {
+                    name: l.get("name").as_str().ok_or("layer name")?.to_string(),
+                    op,
+                    inputs: strs(l.get("inputs")),
+                    params: strs(l.get("params")),
+                    outputs: strs(l.get("outputs")),
+                })
+            })
+            .collect::<Result<Vec<_>, String>>()?;
+        Ok(NetworkDef {
+            name: j.get("name").as_str().unwrap_or("network").to_string(),
+            inputs,
+            outputs: strs(j.get("outputs")),
+            layers,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub(crate) fn tiny_net() -> NetworkDef {
+        NetworkDef {
+            name: "tiny".into(),
+            inputs: vec![TensorDef { name: "x".into(), dims: vec![1, 4] }],
+            outputs: vec!["y".into()],
+            layers: vec![
+                Layer {
+                    name: "fc".into(),
+                    op: Op::Affine,
+                    inputs: vec!["x".into()],
+                    params: vec!["fc/W".into(), "fc/b".into()],
+                    outputs: vec!["h".into()],
+                },
+                Layer {
+                    name: "act".into(),
+                    op: Op::ReLU,
+                    inputs: vec!["h".into()],
+                    params: vec![],
+                    outputs: vec!["y".into()],
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn validate_accepts_wellformed() {
+        assert!(tiny_net().validate().is_ok());
+    }
+
+    #[test]
+    fn validate_rejects_undefined_tensor() {
+        let mut n = tiny_net();
+        n.layers[1].inputs[0] = "nope".into();
+        assert!(n.validate().is_err());
+        let mut m = tiny_net();
+        m.outputs[0] = "ghost".into();
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn param_and_function_names() {
+        let n = tiny_net();
+        assert_eq!(n.param_names(), vec!["fc/W", "fc/b"]);
+        assert_eq!(n.function_names(), vec!["Affine", "ReLU"]);
+    }
+
+    #[test]
+    fn json_roundtrip_all_ops() {
+        let ops = vec![
+            Op::Affine,
+            Op::Convolution { stride: (2, 1), pad: (1, 1), dilation: (1, 2) },
+            Op::MaxPool { kernel: (2, 2), stride: (2, 2), pad: (0, 0) },
+            Op::AvgPool { kernel: (3, 3), stride: (1, 1), pad: (1, 1), including_pad: true },
+            Op::GlobalAvgPool,
+            Op::ReLU,
+            Op::LeakyReLU { alpha: 0.25 },
+            Op::Sigmoid,
+            Op::Tanh,
+            Op::Elu { alpha: 1.5 },
+            Op::Swish,
+            Op::Gelu,
+            Op::Softplus,
+            Op::Softmax,
+            Op::LogSoftmax,
+            Op::BatchNorm { eps: 1e-5 },
+            Op::LayerNorm { eps: 1e-6 },
+            Op::Add2,
+            Op::Mul2,
+            Op::Concat { axis: 1 },
+            Op::Reshape { dims: vec![-1, 8] },
+            Op::Dropout { p: 0.5 },
+            Op::Embed,
+            Op::Identity,
+        ];
+        for op in ops {
+            let rt = Op::from_name_attrs(op.name(), &op.attrs_json())
+                .unwrap_or_else(|| panic!("roundtrip failed for {}", op.name()));
+            assert_eq!(rt, op);
+        }
+    }
+
+    #[test]
+    fn network_json_roundtrip() {
+        let n = tiny_net();
+        let j = n.to_json();
+        let n2 = NetworkDef::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(n, n2);
+    }
+
+    #[test]
+    fn unknown_op_rejected() {
+        assert!(Op::from_name_attrs("FancyOp", &Json::Null).is_none());
+    }
+}

@@ -1,0 +1,249 @@
+//! The NNP model-interchange format (paper §3.1).
+//!
+//! An `.nnp` file is a small archive holding:
+//! - `network.nntxt` — protobuf-text structure: GlobalConfig,
+//!   TrainingConfig, Network(s), Dataset(s), Optimizer(s), Monitor(s),
+//!   Executor(s);
+//! - `parameter.h5b` — the parameter blob ("from the performance point
+//!   of view, parameters can be saved in HDF5 format"): binary, with
+//!   native dtype widths (bf16 params take 2 bytes/elem on disk).
+//!
+//! [`Nnp`] is the in-memory `NNablaProtoBuf` root message.
+
+pub mod archive;
+pub mod interpreter;
+pub mod ir;
+pub mod nntxt;
+pub mod params;
+
+pub use ir::{Layer, NetworkDef, Op, TensorDef};
+
+use crate::tensor::NdArray;
+use std::collections::HashMap;
+use std::path::Path;
+
+/// GlobalConfig message: environment for training/inference.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GlobalConfig {
+    /// Extension-context spec, e.g. `"xla:half"` (Listing 2 analogue).
+    pub default_context: String,
+}
+
+impl Default for GlobalConfig {
+    fn default() -> Self {
+        GlobalConfig { default_context: "cpu:float".into() }
+    }
+}
+
+/// TrainingConfig message.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct TrainingConfig {
+    pub max_epoch: usize,
+    pub iter_per_epoch: usize,
+    pub batch_size: usize,
+}
+
+/// Dataset message: where training data comes from.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct DatasetConfig {
+    pub name: String,
+    pub uri: String,
+    pub batch_size: usize,
+    pub shuffle: bool,
+}
+
+/// Optimizer message: network + dataset + solver binding.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct OptimizerConfig {
+    pub name: String,
+    pub network: String,
+    pub dataset: String,
+    pub solver: String,
+    pub learning_rate: f32,
+    pub weight_decay: f32,
+    pub loss_variable: String,
+}
+
+/// Monitor message: validation-time evaluation binding.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct MonitorConfig {
+    pub name: String,
+    pub network: String,
+    pub dataset: String,
+    pub monitor_variable: String,
+}
+
+/// Executor message: inference I/O binding.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct ExecutorConfig {
+    pub name: String,
+    pub network: String,
+    pub inputs: Vec<String>,
+    pub outputs: Vec<String>,
+}
+
+/// The NNablaProtoBuf root message.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Nnp {
+    pub global_config: GlobalConfig,
+    pub training_config: TrainingConfig,
+    pub networks: Vec<NetworkDef>,
+    pub parameters: Vec<(String, NdArray)>,
+    pub datasets: Vec<DatasetConfig>,
+    pub optimizers: Vec<OptimizerConfig>,
+    pub monitors: Vec<MonitorConfig>,
+    pub executors: Vec<ExecutorConfig>,
+}
+
+impl Nnp {
+    /// Minimal NNP: one network + its parameters + a default executor.
+    pub fn from_network(net: NetworkDef, params: Vec<(String, NdArray)>) -> Self {
+        let executor = ExecutorConfig {
+            name: format!("{}_executor", net.name),
+            network: net.name.clone(),
+            inputs: net.inputs.iter().map(|t| t.name.clone()).collect(),
+            outputs: net.outputs.clone(),
+        };
+        Nnp {
+            networks: vec![net],
+            parameters: params,
+            executors: vec![executor],
+            ..Default::default()
+        }
+    }
+
+    pub fn network(&self, name: &str) -> Option<&NetworkDef> {
+        self.networks.iter().find(|n| n.name == name)
+    }
+
+    pub fn param_map(&self) -> HashMap<String, NdArray> {
+        self.parameters.iter().cloned().collect()
+    }
+
+    /// Serialize to an `.nnp` archive on disk.
+    pub fn save(&self, path: &Path) -> Result<(), String> {
+        let entries = vec![
+            ("network.nntxt".to_string(), nntxt::to_nntxt(self).into_bytes()),
+            ("parameter.h5b".to_string(), params::save_params(&self.parameters)),
+        ];
+        archive::write_archive(path, &entries).map_err(|e| e.to_string())
+    }
+
+    /// Load from an `.nnp` archive.
+    pub fn load(path: &Path) -> Result<Nnp, String> {
+        let entries = archive::read_archive(path).map_err(|e| e.to_string())?;
+        let text = entries
+            .iter()
+            .find(|(n, _)| n == "network.nntxt")
+            .ok_or("archive missing network.nntxt")?;
+        let text = String::from_utf8(text.1.clone()).map_err(|_| "nntxt not utf8")?;
+        let mut nnp = nntxt::from_nntxt(&text)?;
+        if let Some((_, blob)) = entries.iter().find(|(n, _)| n == "parameter.h5b") {
+            nnp.parameters = params::load_params(blob)?;
+        }
+        Ok(nnp)
+    }
+
+    /// Run a named executor on inputs (deployment inference).
+    pub fn execute(
+        &self,
+        executor: &str,
+        inputs: &HashMap<String, NdArray>,
+    ) -> Result<Vec<NdArray>, String> {
+        let ex = self
+            .executors
+            .iter()
+            .find(|e| e.name == executor)
+            .ok_or_else(|| format!("no executor '{executor}'"))?;
+        let net = self
+            .network(&ex.network)
+            .ok_or_else(|| format!("executor references missing network '{}'", ex.network))?;
+        interpreter::run(net, inputs, &self.param_map())
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+    use crate::nnp::ir::{Layer, TensorDef};
+
+    pub(crate) fn sample_nnp() -> Nnp {
+        let net = NetworkDef {
+            name: "main".into(),
+            inputs: vec![TensorDef { name: "x".into(), dims: vec![1, 3] }],
+            outputs: vec!["y".into()],
+            layers: vec![Layer {
+                name: "fc".into(),
+                op: Op::Affine,
+                inputs: vec!["x".into()],
+                params: vec!["fc/W".into(), "fc/b".into()],
+                outputs: vec!["y".into()],
+            }],
+        };
+        let params = vec![
+            ("fc/W".to_string(), NdArray::arange(&[3, 2])),
+            ("fc/b".to_string(), NdArray::from_slice(&[2], &[0.5, -0.5])),
+        ];
+        let mut nnp = Nnp::from_network(net, params);
+        nnp.global_config.default_context = "xla:half".into();
+        nnp.training_config = TrainingConfig { max_epoch: 3, iter_per_epoch: 10, batch_size: 4 };
+        nnp.optimizers.push(OptimizerConfig {
+            name: "opt".into(),
+            network: "main".into(),
+            dataset: "train".into(),
+            solver: "Adam".into(),
+            learning_rate: 1e-3,
+            weight_decay: 1e-4,
+            loss_variable: "y".into(),
+        });
+        nnp.datasets.push(DatasetConfig {
+            name: "train".into(),
+            uri: "synthetic://imagenet-mini".into(),
+            batch_size: 4,
+            shuffle: true,
+        });
+        nnp.monitors.push(MonitorConfig {
+            name: "valid".into(),
+            network: "main".into(),
+            dataset: "train".into(),
+            monitor_variable: "y".into(),
+        });
+        nnp
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("nnl_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("model.nnp");
+        let nnp = sample_nnp();
+        nnp.save(&path).unwrap();
+        let back = Nnp::load(&path).unwrap();
+        assert_eq!(back.networks, nnp.networks);
+        assert_eq!(back.global_config, nnp.global_config);
+        assert_eq!(back.training_config, nnp.training_config);
+        assert_eq!(back.optimizers, nnp.optimizers);
+        assert_eq!(back.datasets, nnp.datasets);
+        assert_eq!(back.monitors, nnp.monitors);
+        assert_eq!(back.executors, nnp.executors);
+        assert_eq!(back.parameters.len(), 2);
+        assert_eq!(back.parameters[0].1.data(), nnp.parameters[0].1.data());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn execute_runs_default_executor() {
+        let nnp = sample_nnp();
+        let mut inputs = HashMap::new();
+        inputs.insert("x".to_string(), NdArray::from_slice(&[1, 3], &[1., 0., 0.]));
+        let out = nnp.execute("main_executor", &inputs).unwrap();
+        // row 0 of W = [0,1], + b = [0.5, 0.5]
+        assert_eq!(out[0].data(), &[0.5, 0.5]);
+    }
+
+    #[test]
+    fn execute_unknown_executor_errs() {
+        let nnp = sample_nnp();
+        assert!(nnp.execute("nope", &HashMap::new()).is_err());
+    }
+}

@@ -1,0 +1,285 @@
+//! `.nntxt` — the protobuf-text rendering of the NNP structure (what
+//! Neural Network Console imports/exports; paper §5.1 "they can simply
+//! import the exported file from NNL (.nntxt format)").
+
+use crate::utils::prototext::{PText, PVal};
+
+use super::{
+    DatasetConfig, ExecutorConfig, GlobalConfig, MonitorConfig, NetworkDef, Nnp, OptimizerConfig,
+    TrainingConfig,
+};
+use super::ir::{Layer, Op, TensorDef};
+
+/// Render the structural part of an [`Nnp`] (no parameter data).
+pub fn to_nntxt(nnp: &Nnp) -> String {
+    let mut root = PText::new();
+
+    let mut gc = PText::new();
+    gc.push_str("default_context", nnp.global_config.default_context.clone());
+    root.push("global_config", PVal::Msg(gc));
+
+    let mut tc = PText::new();
+    tc.push_num("max_epoch", nnp.training_config.max_epoch as f64);
+    tc.push_num("iter_per_epoch", nnp.training_config.iter_per_epoch as f64);
+    tc.push_num("batch_size", nnp.training_config.batch_size as f64);
+    root.push("training_config", PVal::Msg(tc));
+
+    for net in &nnp.networks {
+        root.push("network", PVal::Msg(network_to_ptext(net)));
+    }
+    for d in &nnp.datasets {
+        let mut m = PText::new();
+        m.push_str("name", d.name.clone());
+        m.push_str("uri", d.uri.clone());
+        m.push_num("batch_size", d.batch_size as f64);
+        m.push("shuffle", PVal::Bool(d.shuffle));
+        root.push("dataset", PVal::Msg(m));
+    }
+    for o in &nnp.optimizers {
+        let mut m = PText::new();
+        m.push_str("name", o.name.clone());
+        m.push_str("network_name", o.network.clone());
+        m.push_str("dataset_name", o.dataset.clone());
+        let mut solver = PText::new();
+        solver.push_str("type", o.solver.clone());
+        solver.push_num("learning_rate", o.learning_rate as f64);
+        solver.push_num("weight_decay", o.weight_decay as f64);
+        m.push("solver", PVal::Msg(solver));
+        m.push_str("loss_variable", o.loss_variable.clone());
+        root.push("optimizer", PVal::Msg(m));
+    }
+    for mo in &nnp.monitors {
+        let mut m = PText::new();
+        m.push_str("name", mo.name.clone());
+        m.push_str("network_name", mo.network.clone());
+        m.push_str("dataset_name", mo.dataset.clone());
+        m.push_str("monitor_variable", mo.monitor_variable.clone());
+        root.push("monitor", PVal::Msg(m));
+    }
+    for e in &nnp.executors {
+        let mut m = PText::new();
+        m.push_str("name", e.name.clone());
+        m.push_str("network_name", e.network.clone());
+        for i in &e.inputs {
+            m.push_str("data_variable", i.clone());
+        }
+        for o in &e.outputs {
+            m.push_str("output_variable", o.clone());
+        }
+        root.push("executor", PVal::Msg(m));
+    }
+    root.to_string()
+}
+
+fn network_to_ptext(net: &NetworkDef) -> PText {
+    let mut m = PText::new();
+    m.push_str("name", net.name.clone());
+    for t in &net.inputs {
+        let mut v = PText::new();
+        v.push_str("name", t.name.clone());
+        v.push_str("type", "Buffer");
+        for &d in &t.dims {
+            v.push_num("dim", d as f64);
+        }
+        m.push("variable", PVal::Msg(v));
+    }
+    for o in &net.outputs {
+        m.push_str("output_variable", o.clone());
+    }
+    for l in &net.layers {
+        let mut f = PText::new();
+        f.push_str("name", l.name.clone());
+        f.push_str("type", l.op.name());
+        // attributes as a JSON string field (compact, lossless)
+        let attrs = l.op.attrs_json().to_string();
+        if attrs != "{}" {
+            f.push_str("attrs", attrs);
+        }
+        for i in &l.inputs {
+            f.push_str("input", i.clone());
+        }
+        for p in &l.params {
+            f.push_str("param", p.clone());
+        }
+        for o in &l.outputs {
+            f.push_str("output", o.clone());
+        }
+        m.push("function", PVal::Msg(f));
+    }
+    m
+}
+
+fn network_from_ptext(m: &PText) -> Result<NetworkDef, String> {
+    let name = m.get_str("name").unwrap_or("network").to_string();
+    let mut inputs = Vec::new();
+    for v in m.get_all("variable") {
+        if let PVal::Msg(v) = v {
+            inputs.push(TensorDef {
+                name: v.get_str("name").ok_or("variable missing name")?.to_string(),
+                dims: v.get_usizes("dim"),
+            });
+        }
+    }
+    let outputs = m
+        .get_all("output_variable")
+        .into_iter()
+        .filter_map(|v| match v {
+            PVal::Str(s) => Some(s.clone()),
+            _ => None,
+        })
+        .collect();
+    let mut layers = Vec::new();
+    for f in m.get_all("function") {
+        if let PVal::Msg(f) = f {
+            let opname = f.get_str("type").ok_or("function missing type")?;
+            let attrs = match f.get_str("attrs") {
+                Some(s) => crate::utils::json::Json::parse(s)?,
+                None => crate::utils::json::Json::Obj(Default::default()),
+            };
+            let op = Op::from_name_attrs(opname, &attrs)
+                .ok_or(format!("unsupported function '{opname}'"))?;
+            let strs = |key: &str| -> Vec<String> {
+                f.get_all(key)
+                    .into_iter()
+                    .filter_map(|v| match v {
+                        PVal::Str(s) => Some(s.clone()),
+                        _ => None,
+                    })
+                    .collect()
+            };
+            layers.push(Layer {
+                name: f.get_str("name").unwrap_or("fn").to_string(),
+                op,
+                inputs: strs("input"),
+                params: strs("param"),
+                outputs: strs("output"),
+            });
+        }
+    }
+    Ok(NetworkDef { name, inputs, outputs, layers })
+}
+
+/// Parse an `.nntxt` back into the structural NNP (parameters empty).
+pub fn from_nntxt(text: &str) -> Result<Nnp, String> {
+    let root = PText::parse(text)?;
+    let mut nnp = Nnp::default();
+    if let Some(gc) = root.get_msg("global_config") {
+        nnp.global_config =
+            GlobalConfig { default_context: gc.get_str("default_context").unwrap_or("cpu:float").to_string() };
+    }
+    if let Some(tc) = root.get_msg("training_config") {
+        nnp.training_config = TrainingConfig {
+            max_epoch: tc.get_num("max_epoch").unwrap_or(0.0) as usize,
+            iter_per_epoch: tc.get_num("iter_per_epoch").unwrap_or(0.0) as usize,
+            batch_size: tc.get_num("batch_size").unwrap_or(0.0) as usize,
+        };
+    }
+    for n in root.get_all("network") {
+        if let PVal::Msg(m) = n {
+            nnp.networks.push(network_from_ptext(m)?);
+        }
+    }
+    for d in root.get_all("dataset") {
+        if let PVal::Msg(m) = d {
+            nnp.datasets.push(DatasetConfig {
+                name: m.get_str("name").unwrap_or("").to_string(),
+                uri: m.get_str("uri").unwrap_or("").to_string(),
+                batch_size: m.get_num("batch_size").unwrap_or(0.0) as usize,
+                shuffle: matches!(m.get("shuffle"), Some(PVal::Bool(true))),
+            });
+        }
+    }
+    for o in root.get_all("optimizer") {
+        if let PVal::Msg(m) = o {
+            let solver = m.get_msg("solver");
+            nnp.optimizers.push(OptimizerConfig {
+                name: m.get_str("name").unwrap_or("").to_string(),
+                network: m.get_str("network_name").unwrap_or("").to_string(),
+                dataset: m.get_str("dataset_name").unwrap_or("").to_string(),
+                solver: solver.and_then(|s| s.get_str("type")).unwrap_or("Sgd").to_string(),
+                learning_rate: solver.and_then(|s| s.get_num("learning_rate")).unwrap_or(0.01)
+                    as f32,
+                weight_decay: solver.and_then(|s| s.get_num("weight_decay")).unwrap_or(0.0) as f32,
+                loss_variable: m.get_str("loss_variable").unwrap_or("").to_string(),
+            });
+        }
+    }
+    for mo in root.get_all("monitor") {
+        if let PVal::Msg(m) = mo {
+            nnp.monitors.push(MonitorConfig {
+                name: m.get_str("name").unwrap_or("").to_string(),
+                network: m.get_str("network_name").unwrap_or("").to_string(),
+                dataset: m.get_str("dataset_name").unwrap_or("").to_string(),
+                monitor_variable: m.get_str("monitor_variable").unwrap_or("").to_string(),
+            });
+        }
+    }
+    for e in root.get_all("executor") {
+        if let PVal::Msg(m) = e {
+            let strs = |key: &str| -> Vec<String> {
+                m.get_all(key)
+                    .into_iter()
+                    .filter_map(|v| match v {
+                        PVal::Str(s) => Some(s.clone()),
+                        _ => None,
+                    })
+                    .collect()
+            };
+            nnp.executors.push(ExecutorConfig {
+                name: m.get_str("name").unwrap_or("").to_string(),
+                network: m.get_str("network_name").unwrap_or("").to_string(),
+                inputs: strs("data_variable"),
+                outputs: strs("output_variable"),
+            });
+        }
+    }
+    Ok(nnp)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nnp::tests::sample_nnp;
+
+    #[test]
+    fn nntxt_roundtrip_structure() {
+        let nnp = sample_nnp();
+        let text = to_nntxt(&nnp);
+        let back = from_nntxt(&text).unwrap();
+        assert_eq!(back.networks, nnp.networks);
+        assert_eq!(back.global_config, nnp.global_config);
+        assert_eq!(back.training_config, nnp.training_config);
+        assert_eq!(back.optimizers, nnp.optimizers);
+        assert_eq!(back.datasets, nnp.datasets);
+        assert_eq!(back.monitors, nnp.monitors);
+        assert_eq!(back.executors, nnp.executors);
+    }
+
+    #[test]
+    fn nntxt_is_human_readable_prototext() {
+        let text = to_nntxt(&sample_nnp());
+        assert!(text.contains("network {"));
+        assert!(text.contains("type: \"Affine\""));
+        assert!(text.contains("default_context: \"xla:half\""));
+    }
+
+    #[test]
+    fn unsupported_function_is_an_error() {
+        // the paper's converter behaviour: unsupported functions error
+        let text = r#"
+network {
+  name: "n"
+  function { name: "f" type: "QuantumConv" output: "y" }
+}
+"#;
+        let err = from_nntxt(text).unwrap_err();
+        assert!(err.contains("unsupported function 'QuantumConv'"), "{err}");
+    }
+
+    #[test]
+    fn empty_nntxt_gives_default() {
+        let nnp = from_nntxt("").unwrap();
+        assert!(nnp.networks.is_empty());
+        assert_eq!(nnp.global_config.default_context, "cpu:float");
+    }
+}

@@ -1,0 +1,151 @@
+//! Parameter blob — the HDF5-analogue (`parameter.h5b`). Values are
+//! stored at their native dtype width: f32 params at 4 B/elem,
+//! bf16/f16 at 2 B/elem, so a half-precision checkpoint really is half
+//! the size (paper §3.3 "nearly halves the memory usage").
+
+use crate::tensor::{DType, NdArray};
+use crate::utils::half;
+
+const MAGIC: &[u8; 4] = b"H5B1";
+
+/// Serialize named parameters.
+pub fn save_params(params: &[(String, NdArray)]) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&(params.len() as u32).to_le_bytes());
+    for (name, arr) in params {
+        let nb = name.as_bytes();
+        out.extend_from_slice(&(nb.len() as u32).to_le_bytes());
+        out.extend_from_slice(nb);
+        let dt = arr.dtype().name().as_bytes();
+        out.extend_from_slice(&(dt.len() as u32).to_le_bytes());
+        out.extend_from_slice(dt);
+        out.extend_from_slice(&(arr.rank() as u32).to_le_bytes());
+        for &d in arr.dims() {
+            out.extend_from_slice(&(d as u64).to_le_bytes());
+        }
+        match arr.dtype() {
+            DType::F32 => {
+                for &v in arr.data() {
+                    out.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+            DType::BF16 => {
+                for &v in arr.data() {
+                    out.extend_from_slice(&half::f32_to_bf16_bits(v).to_le_bytes());
+                }
+            }
+            DType::F16 => {
+                for &v in arr.data() {
+                    out.extend_from_slice(&half::f32_to_f16_bits(v).to_le_bytes());
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Deserialize named parameters.
+pub fn load_params(blob: &[u8]) -> Result<Vec<(String, NdArray)>, String> {
+    if blob.len() < 8 || &blob[0..4] != MAGIC {
+        return Err("bad parameter blob magic".into());
+    }
+    let mut pos = 4usize;
+    let take = |pos: &mut usize, n: usize| -> Result<&[u8], String> {
+        if *pos + n > blob.len() {
+            return Err("truncated parameter blob".into());
+        }
+        let s = &blob[*pos..*pos + n];
+        *pos += n;
+        Ok(s)
+    };
+    let count = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        let nlen = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
+        let name = String::from_utf8(take(&mut pos, nlen)?.to_vec())
+            .map_err(|_| "bad param name".to_string())?;
+        let dlen = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
+        let dt_name = String::from_utf8(take(&mut pos, dlen)?.to_vec())
+            .map_err(|_| "bad dtype".to_string())?;
+        let dtype = DType::from_name(&dt_name).ok_or(format!("unknown dtype '{dt_name}'"))?;
+        let rank = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
+        let mut dims = Vec::with_capacity(rank);
+        for _ in 0..rank {
+            dims.push(u64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap()) as usize);
+        }
+        let n: usize = dims.iter().product();
+        let mut data = Vec::with_capacity(n);
+        match dtype {
+            DType::F32 => {
+                let raw = take(&mut pos, n * 4)?;
+                for c in raw.chunks_exact(4) {
+                    data.push(f32::from_le_bytes(c.try_into().unwrap()));
+                }
+            }
+            DType::BF16 => {
+                let raw = take(&mut pos, n * 2)?;
+                for c in raw.chunks_exact(2) {
+                    data.push(half::bf16_bits_to_f32(u16::from_le_bytes(c.try_into().unwrap())));
+                }
+            }
+            DType::F16 => {
+                let raw = take(&mut pos, n * 2)?;
+                for c in raw.chunks_exact(2) {
+                    data.push(half::f16_bits_to_f32(u16::from_le_bytes(c.try_into().unwrap())));
+                }
+            }
+        }
+        let mut arr = NdArray::from_vec(&dims, data);
+        arr.set_dtype(dtype);
+        out.push((name, arr));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip_exact() {
+        let params = vec![
+            ("a/W".to_string(), NdArray::arange(&[2, 3])),
+            ("a/b".to_string(), NdArray::from_slice(&[1], &[-1.5e-30])),
+            ("scalar".to_string(), NdArray::scalar(7.0)),
+        ];
+        let blob = save_params(&params);
+        let back = load_params(&blob).unwrap();
+        assert_eq!(back.len(), 3);
+        for ((n1, a1), (n2, a2)) in params.iter().zip(&back) {
+            assert_eq!(n1, n2);
+            assert_eq!(a1.dims(), a2.dims());
+            assert_eq!(a1.data(), a2.data());
+        }
+    }
+
+    #[test]
+    fn bf16_stored_at_2_bytes() {
+        let w = NdArray::arange(&[100]).cast(DType::BF16);
+        let f32_blob = save_params(&[("w".into(), NdArray::arange(&[100]))]);
+        let bf_blob = save_params(&[("w".into(), w.clone())]);
+        assert!(bf_blob.len() < f32_blob.len() - 150); // ~200 bytes saved
+        let back = load_params(&bf_blob).unwrap();
+        assert_eq!(back[0].1.dtype(), DType::BF16);
+        assert_eq!(back[0].1.data(), w.data()); // lossless for bf16-grid values
+    }
+
+    #[test]
+    fn f16_roundtrip_preserves_grid_values() {
+        let w = NdArray::from_slice(&[4], &[1.0, -2.5, 65504.0, 0.0]).cast(DType::F16);
+        let back = load_params(&save_params(&[("w".into(), w.clone())])).unwrap();
+        assert_eq!(back[0].1.data(), w.data());
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let blob = save_params(&[("w".into(), NdArray::arange(&[10]))]);
+        assert!(load_params(&blob[..blob.len() - 3]).is_err());
+        assert!(load_params(b"XXXX").is_err());
+    }
+}

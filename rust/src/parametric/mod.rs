@@ -1,0 +1,19 @@
+//! `PF::*` — parametric functions, the paper's third building block:
+//! "functions accompanied with additional trainable parameters" (§2.1).
+//!
+//! The defining usability feature reproduced here is the **global
+//! parameter registry**: `PF::affine(&x, 5, "fc")` creates (or reuses)
+//! `fc/affine/W` and `fc/affine/b` in a globally accessible dictionary —
+//! no manual parameter plumbing, and `get_parameters()` returns
+//! everything, exactly as the last line of Listing 1.
+
+pub mod pf;
+pub mod registry;
+
+pub use pf::{
+    affine, batch_normalization, convolution, deconvolution, embed, layer_normalization,
+};
+pub use registry::{
+    clear_parameters, get_or_create_parameter, get_parameter, get_parameters, parameter_count,
+    seed_parameter_rng, set_parameter, with_parameter_scope,
+};

@@ -1,0 +1,227 @@
+//! The parametric functions themselves. Each takes a layer `name`
+//! (the scope under which its parameters live) and applies Glorot/He
+//! initialization on first use — NNabla's defaults.
+
+use crate::context::{Context, TypeConfig};
+use crate::functions as F;
+use crate::graph::Variable;
+use crate::tensor::{DType, NdArray, Rng};
+
+use super::registry::{get_or_create_parameter, with_parameter_scope};
+
+/// Glorot-uniform limit for a (fan_in, fan_out) pair.
+fn glorot_limit(fan_in: usize, fan_out: usize) -> f32 {
+    (6.0 / (fan_in + fan_out) as f32).sqrt()
+}
+
+/// Under `type_config = half`, parameters are *stored* in bf16
+/// (quantized on init and on every solver write via dtype tag); under
+/// `float` they stay f32. Paper §3.3 storage rule.
+fn storage_dtype() -> DType {
+    match Context::default().type_config {
+        TypeConfig::Float => DType::F32,
+        TypeConfig::Half => DType::BF16,
+    }
+}
+
+fn uniform_init(rng: &mut Rng, dims: &[usize], limit: f32) -> NdArray {
+    let mut a = rng.rand(dims, -limit, limit);
+    a.set_dtype(storage_dtype());
+    a
+}
+
+/// `PF.affine(x, n_out, name)` — fully connected layer with bias.
+pub fn affine(x: &Variable, n_out: usize, name: &str) -> Variable {
+    let fan_in: usize = x.dims()[1..].iter().product();
+    with_parameter_scope(name, || {
+        with_parameter_scope("affine", || {
+            let lim = glorot_limit(fan_in, n_out);
+            let w = get_or_create_parameter(
+                "W",
+                &[fan_in, n_out],
+                |rng| uniform_init(rng, &[fan_in, n_out], lim),
+                true,
+            );
+            let b = get_or_create_parameter("b", &[n_out], |_| NdArray::zeros(&[n_out]), true);
+            F::affine(x, &w, Some(&b))
+        })
+    })
+}
+
+/// `PF.convolution(x, outmaps, kernel, name, ...)` — 2-D convolution
+/// with bias.
+pub fn convolution(
+    x: &Variable,
+    outmaps: usize,
+    kernel: (usize, usize),
+    stride: (usize, usize),
+    pad: (usize, usize),
+    name: &str,
+) -> Variable {
+    let inmaps = x.dims()[1];
+    with_parameter_scope(name, || {
+        with_parameter_scope("conv", || {
+            let fan_in = inmaps * kernel.0 * kernel.1;
+            let fan_out = outmaps * kernel.0 * kernel.1;
+            let dims = [outmaps, inmaps, kernel.0, kernel.1];
+            let lim = glorot_limit(fan_in, fan_out);
+            let w = get_or_create_parameter("W", &dims, |rng| uniform_init(rng, &dims, lim), true);
+            let b = get_or_create_parameter("b", &[outmaps], |_| NdArray::zeros(&[outmaps]), true);
+            F::convolution(x, &w, Some(&b), stride, pad, (1, 1))
+        })
+    })
+}
+
+/// Transposed convolution; weight layout `[inmaps, outmaps, kh, kw]`.
+pub fn deconvolution(
+    x: &Variable,
+    outmaps: usize,
+    kernel: (usize, usize),
+    stride: (usize, usize),
+    pad: (usize, usize),
+    name: &str,
+) -> Variable {
+    let inmaps = x.dims()[1];
+    with_parameter_scope(name, || {
+        with_parameter_scope("deconv", || {
+            let fan_in = inmaps * kernel.0 * kernel.1;
+            let fan_out = outmaps * kernel.0 * kernel.1;
+            let dims = [inmaps, outmaps, kernel.0, kernel.1];
+            let lim = glorot_limit(fan_in, fan_out);
+            let w = get_or_create_parameter("W", &dims, |rng| uniform_init(rng, &dims, lim), true);
+            let b = get_or_create_parameter("b", &[outmaps], |_| NdArray::zeros(&[outmaps]), true);
+            F::deconvolution(x, &w, Some(&b), stride, pad)
+        })
+    })
+}
+
+/// `PF.batch_normalization(x, batch_stat, name)`. Creates
+/// `beta/gamma/mean/var` of size `[C]`; per the paper's §3.3 rule BN
+/// statistics stay FP-32 even under the half config.
+pub fn batch_normalization(x: &Variable, batch_stat: bool, name: &str) -> Variable {
+    let c = x.dims()[1];
+    with_parameter_scope(name, || {
+        with_parameter_scope("bn", || {
+            let beta = get_or_create_parameter("beta", &[c], |_| NdArray::zeros(&[c]), true);
+            let gamma = get_or_create_parameter("gamma", &[c], |_| NdArray::ones(&[c]), true);
+            let mean = get_or_create_parameter("mean", &[c], |_| NdArray::zeros(&[c]), false);
+            let var = get_or_create_parameter("var", &[c], |_| NdArray::ones(&[c]), false);
+            F::batch_normalization(x, &beta, &gamma, &mean, &var, 0.9, 1e-5, batch_stat)
+        })
+    })
+}
+
+/// Layer normalization over the last axis with learnable scale/shift.
+pub fn layer_normalization(x: &Variable, name: &str) -> Variable {
+    let d = *x.dims().last().unwrap();
+    with_parameter_scope(name, || {
+        with_parameter_scope("ln", || {
+            let beta = get_or_create_parameter("beta", &[d], |_| NdArray::zeros(&[d]), true);
+            let gamma = get_or_create_parameter("gamma", &[d], |_| NdArray::ones(&[d]), true);
+            F::layer_normalization(x, &beta, &gamma, 1e-5)
+        })
+    })
+}
+
+/// `PF.embed(ids, vocab, dim, name)` — embedding table lookup.
+pub fn embed(ids: &Variable, vocab: usize, dim: usize, name: &str) -> Variable {
+    with_parameter_scope(name, || {
+        with_parameter_scope("embed", || {
+            let w = get_or_create_parameter(
+                "W",
+                &[vocab, dim],
+                |rng| {
+                    let mut a = rng.randn(&[vocab, dim], 0.02);
+                    a.set_dtype(storage_dtype());
+                    a
+                },
+                true,
+            );
+            F::embed(ids, &w)
+        })
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::parametric::registry::{clear_parameters, get_parameters, seed_parameter_rng};
+    use crate::context::Backend;
+
+    fn reset() {
+        clear_parameters();
+        seed_parameter_rng(7);
+        Context::set_default(Context::new(Backend::Cpu, TypeConfig::Float));
+    }
+
+    #[test]
+    fn affine_registers_w_and_b() {
+        reset();
+        let x = Variable::from_array(NdArray::zeros(&[4, 10]), false);
+        let y = affine(&x, 5, "fc1");
+        assert_eq!(y.dims(), vec![4, 5]);
+        let names: Vec<String> = get_parameters().into_iter().map(|(n, _)| n).collect();
+        assert_eq!(names, vec!["fc1/affine/W", "fc1/affine/b"]);
+    }
+
+    #[test]
+    fn second_call_reuses_parameters() {
+        reset();
+        let x = Variable::from_array(NdArray::zeros(&[4, 10]), false);
+        let _ = affine(&x, 5, "fc1");
+        let n = get_parameters().len();
+        let _ = affine(&x, 5, "fc1"); // weight sharing
+        assert_eq!(get_parameters().len(), n);
+    }
+
+    #[test]
+    fn conv_shapes_and_registry() {
+        reset();
+        let x = Variable::from_array(NdArray::zeros(&[2, 3, 8, 8]), false);
+        let y = convolution(&x, 16, (5, 5), (1, 1), (0, 0), "conv1");
+        assert_eq!(y.dims(), vec![2, 16, 4, 4]);
+        let names: Vec<String> = get_parameters().into_iter().map(|(n, _)| n).collect();
+        assert_eq!(names, vec!["conv1/conv/W", "conv1/conv/b"]);
+    }
+
+    #[test]
+    fn bn_registers_four_params_two_trainable() {
+        reset();
+        let x = Variable::from_array(NdArray::zeros(&[2, 3, 4, 4]), false);
+        let _ = batch_normalization(&x, true, "bn1");
+        let ps = get_parameters();
+        assert_eq!(ps.len(), 4);
+        let trainable = ps.iter().filter(|(_, v)| v.need_grad()).count();
+        assert_eq!(trainable, 2); // beta, gamma
+    }
+
+    #[test]
+    fn half_config_stores_bf16() {
+        reset();
+        Context::set_default(Context::new(Backend::Cpu, TypeConfig::Half));
+        let x = Variable::from_array(NdArray::zeros(&[1, 4]), false);
+        let _ = affine(&x, 3, "h");
+        let (_, w) = &get_parameters()[0];
+        assert_eq!(w.data().dtype(), DType::BF16);
+        reset();
+    }
+
+    #[test]
+    fn embed_param_shape() {
+        reset();
+        let ids = Variable::from_array(NdArray::from_slice(&[2], &[0., 1.]), false);
+        let y = embed(&ids, 10, 4, "tok");
+        assert_eq!(y.dims(), vec![2, 4]);
+        assert_eq!(get_parameters()[0].0, "tok/embed/W");
+    }
+
+    #[test]
+    fn deterministic_across_resets() {
+        reset();
+        let x = Variable::from_array(NdArray::ones(&[1, 6]), false);
+        let a = affine(&x, 2, "f").data();
+        reset();
+        let b = affine(&x, 2, "f").data();
+        assert_eq!(a.data(), b.data());
+    }
+}

@@ -1,0 +1,167 @@
+//! The global (thread-ambient) parameter registry with name scopes —
+//! `nn.get_parameters()` / `nn.parameter_scope()` semantics.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+
+use crate::graph::Variable;
+use crate::tensor::{NdArray, Rng};
+
+struct Registry {
+    params: BTreeMap<String, Variable>,
+    scope: Vec<String>,
+    rng: Rng,
+}
+
+thread_local! {
+    static REGISTRY: RefCell<Registry> = RefCell::new(Registry {
+        params: BTreeMap::new(),
+        scope: Vec::new(),
+        rng: Rng::new(313),
+    });
+}
+
+fn scoped_name(scope: &[String], name: &str) -> String {
+    if scope.is_empty() {
+        name.to_string()
+    } else {
+        format!("{}/{}", scope.join("/"), name)
+    }
+}
+
+/// Get-or-create a parameter under the current scope. `init` runs only
+/// on creation and receives the registry RNG (deterministic under
+/// [`seed_parameter_rng`]).
+pub fn get_or_create_parameter(
+    name: &str,
+    dims: &[usize],
+    init: impl FnOnce(&mut Rng) -> NdArray,
+    need_grad: bool,
+) -> Variable {
+    REGISTRY.with(|r| {
+        let mut reg = r.borrow_mut();
+        let full = scoped_name(&reg.scope, name);
+        if let Some(v) = reg.params.get(&full) {
+            assert_eq!(
+                v.dims(),
+                dims,
+                "parameter '{full}' exists with different shape"
+            );
+            return v.clone();
+        }
+        let data = init(&mut reg.rng);
+        assert_eq!(data.dims(), dims);
+        let v = Variable::from_array(data, need_grad);
+        v.set_name(&full);
+        reg.params.insert(full, v.clone());
+        v
+    })
+}
+
+/// Look up an existing parameter by fully-qualified name.
+pub fn get_parameter(full_name: &str) -> Option<Variable> {
+    REGISTRY.with(|r| r.borrow().params.get(full_name).cloned())
+}
+
+/// Insert/overwrite a parameter by fully-qualified name (NNP load path).
+pub fn set_parameter(full_name: &str, v: Variable) {
+    v.set_name(full_name);
+    REGISTRY.with(|r| {
+        r.borrow_mut().params.insert(full_name.to_string(), v);
+    });
+}
+
+/// All registered parameters, sorted by name —
+/// `nn.get_parameters()` (Listing 1, last line).
+pub fn get_parameters() -> Vec<(String, Variable)> {
+    REGISTRY.with(|r| r.borrow().params.iter().map(|(k, v)| (k.clone(), v.clone())).collect())
+}
+
+/// Number of registered parameter *tensors*.
+pub fn parameter_count() -> usize {
+    REGISTRY.with(|r| r.borrow().params.len())
+}
+
+/// Clear the registry (between experiments / Console trials).
+pub fn clear_parameters() {
+    REGISTRY.with(|r| {
+        let mut reg = r.borrow_mut();
+        reg.params.clear();
+        reg.scope.clear();
+    });
+}
+
+/// Reseed the parameter-initializer RNG.
+pub fn seed_parameter_rng(seed: u64) {
+    REGISTRY.with(|r| r.borrow_mut().rng = Rng::new(seed));
+}
+
+/// Run `f` inside a named parameter scope
+/// (`with nn.parameter_scope("block1"): ...`). Scopes nest.
+pub fn with_parameter_scope<R>(name: &str, f: impl FnOnce() -> R) -> R {
+    REGISTRY.with(|r| r.borrow_mut().scope.push(name.to_string()));
+    let out = f();
+    REGISTRY.with(|r| {
+        r.borrow_mut().scope.pop();
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn reset() {
+        clear_parameters();
+        seed_parameter_rng(0);
+    }
+
+    #[test]
+    fn create_then_reuse() {
+        reset();
+        let a = get_or_create_parameter("w", &[2, 3], |rng| rng.randn(&[2, 3], 1.0), true);
+        let b = get_or_create_parameter("w", &[2, 3], |rng| rng.randn(&[2, 3], 1.0), true);
+        assert_eq!(a.data().data(), b.data().data()); // same variable
+        assert_eq!(parameter_count(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "different shape")]
+    fn shape_conflict_panics() {
+        reset();
+        let _ = get_or_create_parameter("w", &[2], |rng| rng.randn(&[2], 1.0), true);
+        let _ = get_or_create_parameter("w", &[3], |rng| rng.randn(&[3], 1.0), true);
+    }
+
+    #[test]
+    fn scopes_nest_and_pop() {
+        reset();
+        with_parameter_scope("outer", || {
+            let _ = get_or_create_parameter("a", &[1], |_| NdArray::zeros(&[1]), true);
+            with_parameter_scope("inner", || {
+                let _ = get_or_create_parameter("b", &[1], |_| NdArray::zeros(&[1]), true);
+            });
+        });
+        let _ = get_or_create_parameter("c", &[1], |_| NdArray::zeros(&[1]), true);
+        let names: Vec<String> = get_parameters().into_iter().map(|(n, _)| n).collect();
+        assert_eq!(names, vec!["c", "outer/a", "outer/inner/b"]);
+    }
+
+    #[test]
+    fn deterministic_init_under_seed() {
+        reset();
+        let a = get_or_create_parameter("w", &[4], |rng| rng.randn(&[4], 1.0), true).data();
+        reset();
+        let b = get_or_create_parameter("w", &[4], |rng| rng.randn(&[4], 1.0), true).data();
+        assert_eq!(a.data(), b.data());
+    }
+
+    #[test]
+    fn set_parameter_overwrites() {
+        reset();
+        let v = Variable::from_array(NdArray::full(&[2], 7.0), true);
+        set_parameter("loaded/w", v);
+        assert_eq!(get_parameter("loaded/w").unwrap().data().data(), &[7., 7.]);
+        assert!(get_parameter("missing").is_none());
+    }
+}

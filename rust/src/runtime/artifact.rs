@@ -1,0 +1,249 @@
+//! Artifact manifest: `artifacts/manifest.json` describes every AOT
+//! variant — its HLO file, ordered input/output tensor specs, and the
+//! parameter layout (names + init spec) so Rust can materialize the
+//! exact initial parameters the JAX side would.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::tensor::{NdArray, Rng};
+use crate::utils::json::Json;
+
+/// One tensor signature in an artifact's calling convention.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub dims: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    fn from_json(j: &Json) -> Option<TensorSpec> {
+        Some(TensorSpec {
+            name: j.get("name").as_str()?.to_string(),
+            dims: j.get("dims").usize_arr()?,
+            dtype: j.get("dtype").as_str().unwrap_or("float32").to_string(),
+        })
+    }
+
+    pub fn size(&self) -> usize {
+        self.dims.iter().product()
+    }
+}
+
+/// One AOT-compiled variant (model × precision × batch).
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    /// Variant name, e.g. `resnet_mini_train_f32_b32`.
+    pub name: String,
+    /// HLO text file (relative to the manifest).
+    pub hlo_file: String,
+    /// Inputs in calling order: params first, then data tensors.
+    pub inputs: Vec<TensorSpec>,
+    /// Outputs in order: grads first (matching param order), then loss.
+    pub outputs: Vec<TensorSpec>,
+    /// Names of the leading `inputs` that are parameters.
+    pub param_names: Vec<String>,
+    /// Initializer spec per parameter: `(kind, scale)` where kind is
+    /// `zeros | ones | normal | uniform` (seeded by the manifest seed).
+    pub param_init: Vec<(String, f32)>,
+    /// RNG seed used for parameter init.
+    pub seed: u64,
+}
+
+impl ArtifactSpec {
+    /// Materialize the initial parameters exactly as aot.py declared.
+    pub fn init_params(&self) -> Vec<(String, NdArray)> {
+        let mut rng = Rng::new(self.seed);
+        self.param_names
+            .iter()
+            .zip(&self.param_init)
+            .map(|(name, (kind, scale))| {
+                let spec = self
+                    .inputs
+                    .iter()
+                    .find(|t| &t.name == name)
+                    .unwrap_or_else(|| panic!("param '{name}' missing from inputs"));
+                let a = match kind.as_str() {
+                    "zeros" => NdArray::zeros(&spec.dims),
+                    "ones" => NdArray::ones(&spec.dims),
+                    "normal" => rng.randn(&spec.dims, *scale),
+                    "uniform" => rng.rand(&spec.dims, -*scale, *scale),
+                    other => panic!("unknown init kind '{other}'"),
+                };
+                (name.clone(), a)
+            })
+            .collect()
+    }
+
+    /// Data (non-parameter) inputs, in calling order.
+    pub fn data_inputs(&self) -> &[TensorSpec] {
+        &self.inputs[self.param_names.len()..]
+    }
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: HashMap<String, ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Load `dir/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest, String> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .map_err(|e| format!("cannot read manifest: {e}"))?;
+        Self::parse(dir, &text)
+    }
+
+    /// Default artifact location (`$NNL_ARTIFACTS` or `artifacts/`).
+    pub fn default_dir() -> PathBuf {
+        std::env::var("NNL_ARTIFACTS").map(PathBuf::from).unwrap_or_else(|_| {
+            // walk up from cwd to find an artifacts/ dir (tests run in
+            // target subdirs)
+            let mut d = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+            loop {
+                let cand = d.join("artifacts");
+                if cand.join("manifest.json").exists() {
+                    return cand;
+                }
+                if !d.pop() {
+                    return PathBuf::from("artifacts");
+                }
+            }
+        })
+    }
+
+    pub fn parse(dir: &Path, text: &str) -> Result<Manifest, String> {
+        let j = Json::parse(text)?;
+        let mut artifacts = HashMap::new();
+        for a in j.get("artifacts").as_arr().ok_or("manifest missing artifacts")? {
+            let specs = |key: &str| -> Vec<TensorSpec> {
+                a.get(key)
+                    .as_arr()
+                    .map(|v| v.iter().filter_map(TensorSpec::from_json).collect())
+                    .unwrap_or_default()
+            };
+            let name = a.get("name").as_str().ok_or("artifact missing name")?.to_string();
+            let param_names: Vec<String> = a
+                .get("param_names")
+                .as_arr()
+                .map(|v| v.iter().filter_map(|s| s.as_str().map(String::from)).collect())
+                .unwrap_or_default();
+            let param_init: Vec<(String, f32)> = a
+                .get("param_init")
+                .as_arr()
+                .map(|v| {
+                    v.iter()
+                        .filter_map(|e| {
+                            Some((
+                                e.get("kind").as_str()?.to_string(),
+                                e.get("scale").as_f64().unwrap_or(0.0) as f32,
+                            ))
+                        })
+                        .collect()
+                })
+                .unwrap_or_default();
+            if param_init.len() != param_names.len() {
+                return Err(format!("artifact '{name}': param_init/param_names mismatch"));
+            }
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec {
+                    name,
+                    hlo_file: a.get("hlo_file").as_str().ok_or("missing hlo_file")?.to_string(),
+                    inputs: specs("inputs"),
+                    outputs: specs("outputs"),
+                    param_names,
+                    param_init,
+                    seed: a.get("seed").as_f64().unwrap_or(0.0) as u64,
+                },
+            );
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), artifacts })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactSpec, String> {
+        self.artifacts.get(name).ok_or_else(|| {
+            let mut names: Vec<&String> = self.artifacts.keys().collect();
+            names.sort();
+            format!("no artifact '{name}'; available: {names:?}")
+        })
+    }
+
+    pub fn hlo_path(&self, spec: &ArtifactSpec) -> PathBuf {
+        self.dir.join(&spec.hlo_file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "artifacts": [
+        {
+          "name": "mlp_train_f32_b8",
+          "hlo_file": "mlp_train_f32_b8.hlo.txt",
+          "seed": 42,
+          "param_names": ["w1", "b1"],
+          "param_init": [
+            {"kind": "normal", "scale": 0.05},
+            {"kind": "zeros", "scale": 0}
+          ],
+          "inputs": [
+            {"name": "w1", "dims": [4, 8], "dtype": "float32"},
+            {"name": "b1", "dims": [8], "dtype": "float32"},
+            {"name": "x", "dims": [8, 4], "dtype": "float32"},
+            {"name": "y", "dims": [8], "dtype": "float32"}
+          ],
+          "outputs": [
+            {"name": "g_w1", "dims": [4, 8], "dtype": "float32"},
+            {"name": "g_b1", "dims": [8], "dtype": "float32"},
+            {"name": "loss", "dims": [], "dtype": "float32"}
+          ]
+        }
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample_manifest() {
+        let m = Manifest::parse(Path::new("/tmp"), SAMPLE).unwrap();
+        let a = m.get("mlp_train_f32_b8").unwrap();
+        assert_eq!(a.inputs.len(), 4);
+        assert_eq!(a.outputs.len(), 3);
+        assert_eq!(a.param_names, vec!["w1", "b1"]);
+        assert_eq!(a.data_inputs().len(), 2);
+        assert_eq!(a.data_inputs()[0].name, "x");
+    }
+
+    #[test]
+    fn init_params_deterministic_and_shaped() {
+        let m = Manifest::parse(Path::new("/tmp"), SAMPLE).unwrap();
+        let a = m.get("mlp_train_f32_b8").unwrap();
+        let p1 = a.init_params();
+        let p2 = a.init_params();
+        assert_eq!(p1.len(), 2);
+        assert_eq!(p1[0].1.dims(), &[4, 8]);
+        assert_eq!(p1[0].1.data(), p2[0].1.data()); // deterministic
+        assert_eq!(p1[1].1.sum_all(), 0.0); // zeros init
+    }
+
+    #[test]
+    fn missing_artifact_lists_available() {
+        let m = Manifest::parse(Path::new("/tmp"), SAMPLE).unwrap();
+        let err = m.get("nope").unwrap_err();
+        assert!(err.contains("mlp_train_f32_b8"));
+    }
+
+    #[test]
+    fn rejects_mismatched_init() {
+        let bad = SAMPLE.replace(
+            r#"{"kind": "normal", "scale": 0.05},
+            {"kind": "zeros", "scale": 0}"#,
+            r#"{"kind": "normal", "scale": 0.05}"#,
+        );
+        assert!(Manifest::parse(Path::new("/tmp"), &bad).is_err());
+    }
+}

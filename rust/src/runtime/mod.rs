@@ -1,0 +1,11 @@
+//! The static-graph runtime: loads AOT-compiled HLO artifacts (emitted
+//! once by `python/compile/aot.py`) and executes them through the PJRT
+//! C API via the `xla` crate. This is the paper's "speed-optimized
+//! backend" — the `cudnn` extension context of Listing 2 mapped to
+//! XLA-CPU. Python never runs here.
+
+pub mod artifact;
+pub mod executable;
+
+pub use artifact::{ArtifactSpec, Manifest, TensorSpec};
+pub use executable::StaticExecutable;

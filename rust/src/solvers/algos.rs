@@ -1,0 +1,361 @@
+//! The optimization algorithms behind [`crate::solvers::Solver`].
+
+use super::Algorithm;
+use crate::tensor::NdArray;
+
+/// Vanilla stochastic gradient descent.
+pub struct Sgd {
+    pub lr: f32,
+}
+
+impl Algorithm for Sgd {
+    fn name(&self) -> &'static str {
+        "Sgd"
+    }
+    fn n_states(&self) -> usize {
+        0
+    }
+    fn learning_rate(&self) -> f32 {
+        self.lr
+    }
+    fn set_learning_rate(&mut self, lr: f32) {
+        self.lr = lr;
+    }
+    fn update_one(&self, _t: usize, data: &mut [f32], grad: &[f32], _s: &mut [NdArray]) {
+        for (d, &g) in data.iter_mut().zip(grad) {
+            *d -= self.lr * g;
+        }
+    }
+}
+
+/// Classical momentum (heavy ball).
+pub struct Momentum {
+    pub lr: f32,
+    pub momentum: f32,
+}
+
+impl Algorithm for Momentum {
+    fn name(&self) -> &'static str {
+        "Momentum"
+    }
+    fn n_states(&self) -> usize {
+        1
+    }
+    fn learning_rate(&self) -> f32 {
+        self.lr
+    }
+    fn set_learning_rate(&mut self, lr: f32) {
+        self.lr = lr;
+    }
+    fn update_one(&self, _t: usize, data: &mut [f32], grad: &[f32], s: &mut [NdArray]) {
+        let v = s[0].data_mut();
+        for i in 0..data.len() {
+            v[i] = self.momentum * v[i] - self.lr * grad[i];
+            data[i] += v[i];
+        }
+    }
+}
+
+/// Nesterov accelerated gradient.
+pub struct Nesterov {
+    pub lr: f32,
+    pub momentum: f32,
+}
+
+impl Algorithm for Nesterov {
+    fn name(&self) -> &'static str {
+        "Nesterov"
+    }
+    fn n_states(&self) -> usize {
+        1
+    }
+    fn learning_rate(&self) -> f32 {
+        self.lr
+    }
+    fn set_learning_rate(&mut self, lr: f32) {
+        self.lr = lr;
+    }
+    fn update_one(&self, _t: usize, data: &mut [f32], grad: &[f32], s: &mut [NdArray]) {
+        let v = s[0].data_mut();
+        for i in 0..data.len() {
+            let v_prev = v[i];
+            v[i] = self.momentum * v[i] - self.lr * grad[i];
+            data[i] += -self.momentum * v_prev + (1.0 + self.momentum) * v[i];
+        }
+    }
+}
+
+/// Adam (Kingma & Ba) with bias correction.
+pub struct Adam {
+    pub alpha: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+}
+
+impl Algorithm for Adam {
+    fn name(&self) -> &'static str {
+        "Adam"
+    }
+    fn n_states(&self) -> usize {
+        2
+    }
+    fn learning_rate(&self) -> f32 {
+        self.alpha
+    }
+    fn set_learning_rate(&mut self, lr: f32) {
+        self.alpha = lr;
+    }
+    fn update_one(&self, t: usize, data: &mut [f32], grad: &[f32], s: &mut [NdArray]) {
+        let (m_arr, v_arr) = s.split_at_mut(1);
+        let m = m_arr[0].data_mut();
+        let v = v_arr[0].data_mut();
+        let bc1 = 1.0 - self.beta1.powi(t as i32);
+        let bc2 = 1.0 - self.beta2.powi(t as i32);
+        let alpha_t = self.alpha * bc2.sqrt() / bc1;
+        for i in 0..data.len() {
+            m[i] = self.beta1 * m[i] + (1.0 - self.beta1) * grad[i];
+            v[i] = self.beta2 * v[i] + (1.0 - self.beta2) * grad[i] * grad[i];
+            data[i] -= alpha_t * m[i] / (v[i].sqrt() + self.eps);
+        }
+    }
+}
+
+/// AdamW: Adam with decoupled weight decay.
+pub struct AdamW {
+    pub alpha: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub wd: f32,
+}
+
+impl Algorithm for AdamW {
+    fn name(&self) -> &'static str {
+        "AdamW"
+    }
+    fn n_states(&self) -> usize {
+        2
+    }
+    fn learning_rate(&self) -> f32 {
+        self.alpha
+    }
+    fn set_learning_rate(&mut self, lr: f32) {
+        self.alpha = lr;
+    }
+    fn update_one(&self, t: usize, data: &mut [f32], grad: &[f32], s: &mut [NdArray]) {
+        let (m_arr, v_arr) = s.split_at_mut(1);
+        let m = m_arr[0].data_mut();
+        let v = v_arr[0].data_mut();
+        let bc1 = 1.0 - self.beta1.powi(t as i32);
+        let bc2 = 1.0 - self.beta2.powi(t as i32);
+        let alpha_t = self.alpha * bc2.sqrt() / bc1;
+        for i in 0..data.len() {
+            m[i] = self.beta1 * m[i] + (1.0 - self.beta1) * grad[i];
+            v[i] = self.beta2 * v[i] + (1.0 - self.beta2) * grad[i] * grad[i];
+            data[i] -= alpha_t * m[i] / (v[i].sqrt() + self.eps) + self.alpha * self.wd * data[i];
+        }
+    }
+}
+
+/// AdaGrad.
+pub struct AdaGrad {
+    pub lr: f32,
+    pub eps: f32,
+}
+
+impl Algorithm for AdaGrad {
+    fn name(&self) -> &'static str {
+        "AdaGrad"
+    }
+    fn n_states(&self) -> usize {
+        1
+    }
+    fn learning_rate(&self) -> f32 {
+        self.lr
+    }
+    fn set_learning_rate(&mut self, lr: f32) {
+        self.lr = lr;
+    }
+    fn update_one(&self, _t: usize, data: &mut [f32], grad: &[f32], s: &mut [NdArray]) {
+        let h = s[0].data_mut();
+        for i in 0..data.len() {
+            h[i] += grad[i] * grad[i];
+            data[i] -= self.lr * grad[i] / (h[i].sqrt() + self.eps);
+        }
+    }
+}
+
+/// AdaDelta (Zeiler).
+pub struct AdaDelta {
+    pub lr: f32,
+    pub decay: f32,
+    pub eps: f32,
+}
+
+impl Algorithm for AdaDelta {
+    fn name(&self) -> &'static str {
+        "AdaDelta"
+    }
+    fn n_states(&self) -> usize {
+        2
+    }
+    fn learning_rate(&self) -> f32 {
+        self.lr
+    }
+    fn set_learning_rate(&mut self, lr: f32) {
+        self.lr = lr;
+    }
+    fn update_one(&self, _t: usize, data: &mut [f32], grad: &[f32], s: &mut [NdArray]) {
+        let (e_g, e_dx) = s.split_at_mut(1);
+        let eg = e_g[0].data_mut();
+        let edx = e_dx[0].data_mut();
+        for i in 0..data.len() {
+            eg[i] = self.decay * eg[i] + (1.0 - self.decay) * grad[i] * grad[i];
+            let dx = -((edx[i] + self.eps).sqrt() / (eg[i] + self.eps).sqrt()) * grad[i];
+            edx[i] = self.decay * edx[i] + (1.0 - self.decay) * dx * dx;
+            data[i] += self.lr * dx;
+        }
+    }
+}
+
+/// RMSprop.
+pub struct RmsProp {
+    pub lr: f32,
+    pub decay: f32,
+    pub eps: f32,
+}
+
+impl Algorithm for RmsProp {
+    fn name(&self) -> &'static str {
+        "RmsProp"
+    }
+    fn n_states(&self) -> usize {
+        1
+    }
+    fn learning_rate(&self) -> f32 {
+        self.lr
+    }
+    fn set_learning_rate(&mut self, lr: f32) {
+        self.lr = lr;
+    }
+    fn update_one(&self, _t: usize, data: &mut [f32], grad: &[f32], s: &mut [NdArray]) {
+        let h = s[0].data_mut();
+        for i in 0..data.len() {
+            h[i] = self.decay * h[i] + (1.0 - self.decay) * grad[i] * grad[i];
+            data[i] -= self.lr * grad[i] / (h[i].sqrt() + self.eps);
+        }
+    }
+}
+
+/// LARS — layer-wise adaptive rate scaling (large-batch distributed
+/// training, the regime of the paper's §4 experiments).
+pub struct Lars {
+    pub lr: f32,
+    pub momentum: f32,
+    pub coeff: f32,
+    pub eps: f32,
+}
+
+impl Algorithm for Lars {
+    fn name(&self) -> &'static str {
+        "Lars"
+    }
+    fn n_states(&self) -> usize {
+        1
+    }
+    fn learning_rate(&self) -> f32 {
+        self.lr
+    }
+    fn set_learning_rate(&mut self, lr: f32) {
+        self.lr = lr;
+    }
+    fn update_one(&self, _t: usize, data: &mut [f32], grad: &[f32], s: &mut [NdArray]) {
+        let w_norm = data.iter().map(|v| v * v).sum::<f32>().sqrt();
+        let g_norm = grad.iter().map(|v| v * v).sum::<f32>().sqrt();
+        let local_lr = if w_norm > 0.0 && g_norm > 0.0 {
+            self.coeff * w_norm / (g_norm + self.eps)
+        } else {
+            1.0
+        };
+        let v = s[0].data_mut();
+        for i in 0..data.len() {
+            v[i] = self.momentum * v[i] - self.lr * local_lr * grad[i];
+            data[i] += v[i];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run_steps(algo: &dyn Algorithm, w0: f32, grads: &[f32]) -> f32 {
+        let mut data = vec![w0];
+        let mut states: Vec<NdArray> =
+            (0..algo.n_states()).map(|_| NdArray::zeros(&[1])).collect();
+        for (t, &g) in grads.iter().enumerate() {
+            algo.update_one(t + 1, &mut data, &[g], &mut states);
+        }
+        data[0]
+    }
+
+    #[test]
+    fn sgd_formula() {
+        assert!((run_steps(&Sgd { lr: 0.1 }, 1.0, &[1.0, 1.0]) - 0.8).abs() < 1e-6);
+    }
+
+    #[test]
+    fn momentum_accelerates_constant_grad() {
+        // with constant gradient, momentum's total step exceeds sgd's
+        let sgd_w = run_steps(&Sgd { lr: 0.1 }, 0.0, &[1.0; 10]);
+        let mom_w = run_steps(&Momentum { lr: 0.1, momentum: 0.9 }, 0.0, &[1.0; 10]);
+        assert!(mom_w < sgd_w);
+    }
+
+    #[test]
+    fn adam_first_step_is_lr_sized() {
+        // with bias correction, |first step| == alpha regardless of grad scale
+        for g in [1e-4f32, 1.0, 1e4] {
+            let w = run_steps(&Adam { alpha: 0.1, beta1: 0.9, beta2: 0.999, eps: 1e-12 }, 0.0, &[g]);
+            assert!((w.abs() - 0.1).abs() < 1e-4, "g={g} -> w={w}");
+        }
+    }
+
+    #[test]
+    fn adamw_decays_weight_without_gradient() {
+        let w = run_steps(
+            &AdamW { alpha: 0.1, beta1: 0.9, beta2: 0.999, eps: 1e-8, wd: 0.5 },
+            1.0,
+            &[0.0],
+        );
+        assert!((w - 0.95).abs() < 1e-5); // only decoupled decay acts
+    }
+
+    #[test]
+    fn adagrad_steps_shrink() {
+        let a = AdaGrad { lr: 0.1, eps: 1e-12 };
+        let w1 = run_steps(&a, 0.0, &[1.0]);
+        let w2 = run_steps(&a, 0.0, &[1.0, 1.0]);
+        let step1 = -w1;
+        let step2 = -(w2 - w1);
+        assert!(step2 < step1);
+    }
+
+    #[test]
+    fn rmsprop_normalizes_gradient_scale() {
+        let a = RmsProp { lr: 0.01, decay: 0.9, eps: 1e-12 };
+        let small = run_steps(&a, 0.0, &[1e-3]).abs();
+        let large = run_steps(&a, 0.0, &[1e3]).abs();
+        assert!((small - large).abs() / large < 1e-3);
+    }
+
+    #[test]
+    fn lars_scales_with_weight_norm() {
+        let a = Lars { lr: 0.1, momentum: 0.0, coeff: 0.01, eps: 1e-9 };
+        // same gradient, bigger weight -> bigger step
+        let s_small = (run_steps(&a, 0.1, &[1.0]) - 0.1).abs();
+        let s_large = (run_steps(&a, 10.0, &[1.0]) - 10.0).abs();
+        assert!(s_large > s_small * 50.0);
+    }
+}

@@ -1,0 +1,128 @@
+//! Learning-rate schedulers — the training recipes behind the paper's
+//! §4 runs (warmup + cosine/step decay are what the referenced
+//! imagenet-classification examples use).
+
+/// A learning-rate schedule: step -> lr.
+pub trait LrScheduler {
+    fn lr_at(&self, step: usize) -> f32;
+
+    /// Apply to a solver (call once per iteration).
+    fn apply(&self, solver: &mut crate::solvers::Solver, step: usize) {
+        solver.set_learning_rate(self.lr_at(step));
+    }
+}
+
+/// Constant learning rate.
+pub struct Constant(pub f32);
+
+impl LrScheduler for Constant {
+    fn lr_at(&self, _step: usize) -> f32 {
+        self.0
+    }
+}
+
+/// Linear warmup into a base schedule (large-batch distributed recipe).
+pub struct Warmup<S: LrScheduler> {
+    pub warmup_steps: usize,
+    pub inner: S,
+}
+
+impl<S: LrScheduler> LrScheduler for Warmup<S> {
+    fn lr_at(&self, step: usize) -> f32 {
+        let base = self.inner.lr_at(step.max(self.warmup_steps));
+        if step < self.warmup_steps {
+            base * (step + 1) as f32 / self.warmup_steps as f32
+        } else {
+            self.inner.lr_at(step)
+        }
+    }
+}
+
+/// Step decay: lr * gamma^(step / period).
+pub struct StepDecay {
+    pub base: f32,
+    pub gamma: f32,
+    pub period: usize,
+}
+
+impl LrScheduler for StepDecay {
+    fn lr_at(&self, step: usize) -> f32 {
+        self.base * self.gamma.powi((step / self.period) as i32)
+    }
+}
+
+/// Cosine annealing from `base` to `floor` over `total` steps.
+pub struct Cosine {
+    pub base: f32,
+    pub floor: f32,
+    pub total: usize,
+}
+
+impl LrScheduler for Cosine {
+    fn lr_at(&self, step: usize) -> f32 {
+        let t = (step.min(self.total)) as f32 / self.total.max(1) as f32;
+        self.floor
+            + 0.5 * (self.base - self.floor) * (1.0 + (std::f32::consts::PI * t).cos())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_is_constant() {
+        let s = Constant(0.1);
+        assert_eq!(s.lr_at(0), 0.1);
+        assert_eq!(s.lr_at(1_000_000), 0.1);
+    }
+
+    #[test]
+    fn warmup_ramps_linearly_then_hands_off() {
+        let s = Warmup { warmup_steps: 10, inner: Constant(1.0) };
+        assert!((s.lr_at(0) - 0.1).abs() < 1e-6);
+        assert!((s.lr_at(4) - 0.5).abs() < 1e-6);
+        assert_eq!(s.lr_at(10), 1.0);
+        assert_eq!(s.lr_at(100), 1.0);
+    }
+
+    #[test]
+    fn step_decay_halves_per_period() {
+        let s = StepDecay { base: 0.8, gamma: 0.5, period: 100 };
+        assert_eq!(s.lr_at(0), 0.8);
+        assert_eq!(s.lr_at(99), 0.8);
+        assert_eq!(s.lr_at(100), 0.4);
+        assert_eq!(s.lr_at(250), 0.2);
+    }
+
+    #[test]
+    fn cosine_endpoints_and_monotonicity() {
+        let s = Cosine { base: 1.0, floor: 0.1, total: 100 };
+        assert!((s.lr_at(0) - 1.0).abs() < 1e-6);
+        assert!((s.lr_at(100) - 0.1).abs() < 1e-6);
+        assert!((s.lr_at(50) - 0.55).abs() < 1e-6);
+        // monotone decreasing
+        for w in (0..=100).collect::<Vec<_>>().windows(2) {
+            assert!(s.lr_at(w[1]) <= s.lr_at(w[0]) + 1e-6);
+        }
+        // clamped past the horizon
+        assert_eq!(s.lr_at(500), s.lr_at(100));
+    }
+
+    #[test]
+    fn applies_to_solver() {
+        let mut solver = crate::solvers::Solver::sgd(1.0);
+        let s = StepDecay { base: 0.5, gamma: 0.1, period: 10 };
+        s.apply(&mut solver, 0);
+        assert_eq!(solver.learning_rate(), 0.5);
+        s.apply(&mut solver, 25);
+        assert!((solver.learning_rate() - 0.005).abs() < 1e-7);
+    }
+
+    #[test]
+    fn warmup_cosine_composition() {
+        let s = Warmup { warmup_steps: 5, inner: Cosine { base: 1.0, floor: 0.0, total: 100 } };
+        assert!(s.lr_at(0) < s.lr_at(4));
+        assert!(s.lr_at(99) < s.lr_at(10));
+    }
+}

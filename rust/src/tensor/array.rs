@@ -1,0 +1,411 @@
+//! `NdArray`: contiguous row-major f32 buffer + shape + storage dtype.
+
+use super::{DType, Shape};
+
+/// The core dense tensor. Data is always `Vec<f32>`; the `dtype` tag
+/// controls *storage* precision: writes through the quantizing
+/// constructors/setters round values to the dtype's grid, simulating
+/// half-precision storage (paper §3.3) with f32 compute.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NdArray {
+    shape: Shape,
+    dtype: DType,
+    data: Vec<f32>,
+}
+
+impl NdArray {
+    // ---------------------------------------------------------------- ctors
+
+    /// Zeros of the given shape (f32).
+    pub fn zeros(dims: &[usize]) -> Self {
+        let shape = Shape::new(dims);
+        let n = shape.size();
+        NdArray { shape, dtype: DType::F32, data: vec![0.0; n] }
+    }
+
+    /// All elements set to `v` (f32).
+    pub fn full(dims: &[usize], v: f32) -> Self {
+        let shape = Shape::new(dims);
+        let n = shape.size();
+        NdArray { shape, dtype: DType::F32, data: vec![v; n] }
+    }
+
+    /// Ones of the given shape (f32).
+    pub fn ones(dims: &[usize]) -> Self {
+        Self::full(dims, 1.0)
+    }
+
+    /// Scalar (rank-0) array.
+    pub fn scalar(v: f32) -> Self {
+        NdArray { shape: Shape::scalar(), dtype: DType::F32, data: vec![v] }
+    }
+
+    /// From a flat vec; panics if `data.len() != product(dims)`.
+    pub fn from_vec(dims: &[usize], data: Vec<f32>) -> Self {
+        let shape = Shape::new(dims);
+        assert_eq!(shape.size(), data.len(), "shape {shape} does not match data len {}", data.len());
+        NdArray { shape, dtype: DType::F32, data }
+    }
+
+    /// From a flat slice.
+    pub fn from_slice(dims: &[usize], data: &[f32]) -> Self {
+        Self::from_vec(dims, data.to_vec())
+    }
+
+    /// `0, 1, ..., n-1` reshaped to `dims` (test helper).
+    pub fn arange(dims: &[usize]) -> Self {
+        let n: usize = dims.iter().product();
+        Self::from_vec(dims, (0..n).map(|i| i as f32).collect())
+    }
+
+    // ------------------------------------------------------------ accessors
+
+    pub fn shape(&self) -> &Shape {
+        &self.shape
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        self.shape.dims()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.rank()
+    }
+
+    pub fn size(&self) -> usize {
+        self.shape.size()
+    }
+
+    pub fn dtype(&self) -> DType {
+        self.dtype
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Mutable raw access. NOTE: bypasses dtype quantization; callers
+    /// that write through this on a half-storage array should finish
+    /// with [`NdArray::requantize`].
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Element access by multi-index.
+    pub fn at(&self, idx: &[usize]) -> f32 {
+        self.data[self.shape.flat_index(idx)]
+    }
+
+    /// Element write by multi-index (quantized to the storage dtype).
+    pub fn set(&mut self, idx: &[usize], v: f32) {
+        let i = self.shape.flat_index(idx);
+        self.data[i] = self.dtype.quantize(v);
+    }
+
+    /// Scalar value of a size-1 array.
+    pub fn item(&self) -> f32 {
+        assert_eq!(self.size(), 1, "item() on array of size {}", self.size());
+        self.data[0]
+    }
+
+    // -------------------------------------------------------------- dtype
+
+    /// Cast to a storage dtype (quantizes every element).
+    pub fn cast(&self, dtype: DType) -> NdArray {
+        let data = self.data.iter().map(|&v| dtype.quantize(v)).collect();
+        NdArray { shape: self.shape.clone(), dtype, data }
+    }
+
+    /// Re-apply this array's dtype quantization in place (after raw
+    /// writes through `data_mut`).
+    pub fn requantize(&mut self) {
+        if self.dtype != DType::F32 {
+            for v in &mut self.data {
+                *v = self.dtype.quantize(*v);
+            }
+        }
+    }
+
+    /// Set dtype tag *and* quantize in place.
+    pub fn set_dtype(&mut self, dtype: DType) {
+        self.dtype = dtype;
+        self.requantize();
+    }
+
+    // -------------------------------------------------------------- shape ops
+
+    /// Reshape (same number of elements). A `usize::MAX` dim means "infer".
+    pub fn reshape(&self, dims: &[usize]) -> NdArray {
+        let mut dims = dims.to_vec();
+        if let Some(pos) = dims.iter().position(|&d| d == usize::MAX) {
+            let known: usize = dims.iter().filter(|&&d| d != usize::MAX).product();
+            assert!(known > 0 && self.size() % known == 0, "cannot infer reshape dim");
+            dims[pos] = self.size() / known;
+        }
+        let shape = Shape::new(&dims);
+        assert_eq!(shape.size(), self.size(), "reshape {} -> {} size mismatch", self.shape, shape);
+        NdArray { shape, dtype: self.dtype, data: self.data.clone() }
+    }
+
+    /// Permute axes, materializing a new contiguous array.
+    pub fn transpose(&self, axes: &[usize]) -> NdArray {
+        assert_eq!(axes.len(), self.rank());
+        let out_dims: Vec<usize> = axes.iter().map(|&a| self.dims()[a]).collect();
+        let out_shape = Shape::new(&out_dims);
+        let in_strides = self.shape.strides();
+        let mut data = vec![0.0f32; self.size()];
+        let mut idx = vec![0usize; self.rank()];
+        for (flat, slot) in data.iter_mut().enumerate() {
+            // multi-index in the output
+            let mut f = flat;
+            for i in (0..out_dims.len()).rev() {
+                idx[i] = f % out_dims[i];
+                f /= out_dims[i];
+            }
+            let mut src = 0usize;
+            for (i, &a) in axes.iter().enumerate() {
+                src += idx[i] * in_strides[a];
+            }
+            *slot = self.data[src];
+        }
+        NdArray { shape: out_shape, dtype: self.dtype, data }
+    }
+
+    /// 2-D transpose shorthand.
+    pub fn t(&self) -> NdArray {
+        assert_eq!(self.rank(), 2, "t() requires rank 2");
+        self.transpose(&[1, 0])
+    }
+
+    /// Broadcast to a target shape (materialized).
+    pub fn broadcast_to(&self, dims: &[usize]) -> NdArray {
+        let target = Shape::new(dims);
+        assert!(
+            self.shape.broadcast(&target).as_ref() == Some(&target),
+            "cannot broadcast {} to {}",
+            self.shape,
+            target
+        );
+        let mut data = vec![0.0f32; target.size()];
+        for (i, slot) in data.iter_mut().enumerate() {
+            *slot = self.data[self.shape.broadcast_source_index(&target, i)];
+        }
+        NdArray { shape: target, dtype: self.dtype, data }
+    }
+
+    /// Concatenate along `axis`.
+    pub fn concat(parts: &[&NdArray], axis: usize) -> NdArray {
+        assert!(!parts.is_empty());
+        let rank = parts[0].rank();
+        assert!(axis < rank);
+        let mut out_dims = parts[0].dims().to_vec();
+        out_dims[axis] = parts.iter().map(|p| p.dims()[axis]).sum();
+        for p in parts {
+            assert_eq!(p.rank(), rank);
+            for d in 0..rank {
+                if d != axis {
+                    assert_eq!(p.dims()[d], parts[0].dims()[d], "concat dim mismatch");
+                }
+            }
+        }
+        let outer: usize = out_dims[..axis].iter().product();
+        let inner: usize = out_dims[axis + 1..].iter().product();
+        let mut data = Vec::with_capacity(out_dims.iter().product());
+        for o in 0..outer {
+            for p in parts {
+                let pa = p.dims()[axis];
+                let start = o * pa * inner;
+                data.extend_from_slice(&p.data[start..start + pa * inner]);
+            }
+        }
+        NdArray { shape: Shape::new(&out_dims), dtype: parts[0].dtype, data }
+    }
+
+    /// Slice `[start, stop)` along `axis`.
+    pub fn slice_axis(&self, axis: usize, start: usize, stop: usize) -> NdArray {
+        assert!(axis < self.rank() && start <= stop && stop <= self.dims()[axis]);
+        let mut out_dims = self.dims().to_vec();
+        out_dims[axis] = stop - start;
+        let outer: usize = self.dims()[..axis].iter().product();
+        let inner: usize = self.dims()[axis + 1..].iter().product();
+        let a = self.dims()[axis];
+        let mut data = Vec::with_capacity(outer * (stop - start) * inner);
+        for o in 0..outer {
+            let base = o * a * inner;
+            data.extend_from_slice(&self.data[base + start * inner..base + stop * inner]);
+        }
+        NdArray { shape: Shape::new(&out_dims), dtype: self.dtype, data }
+    }
+
+    // -------------------------------------------------------------- stats
+
+    /// True if any element is NaN or ±Inf (the paper's
+    /// `check_inf_or_nan_grad`, Listing 6).
+    pub fn has_inf_or_nan(&self) -> bool {
+        self.data.iter().any(|v| !v.is_finite())
+    }
+
+    /// Sum of all elements.
+    pub fn sum_all(&self) -> f32 {
+        self.data.iter().sum()
+    }
+
+    /// Mean of all elements.
+    pub fn mean_all(&self) -> f32 {
+        self.sum_all() / self.size() as f32
+    }
+
+    /// L2 norm of all elements.
+    pub fn norm2(&self) -> f32 {
+        self.data.iter().map(|v| v * v).sum::<f32>().sqrt()
+    }
+
+    /// Index of max element (flat).
+    pub fn argmax_flat(&self) -> usize {
+        self.data
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    }
+
+    /// Max |a - b| against another array of the same shape.
+    pub fn max_abs_diff(&self, other: &NdArray) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// Allclose with absolute + relative tolerance.
+    pub fn allclose(&self, other: &NdArray, atol: f32, rtol: f32) -> bool {
+        if self.shape != other.shape {
+            return false;
+        }
+        self.data
+            .iter()
+            .zip(&other.data)
+            .all(|(a, b)| (a - b).abs() <= atol + rtol * b.abs())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ctor_shapes() {
+        let z = NdArray::zeros(&[2, 3]);
+        assert_eq!(z.size(), 6);
+        assert_eq!(z.sum_all(), 0.0);
+        let o = NdArray::ones(&[4]);
+        assert_eq!(o.sum_all(), 4.0);
+        let s = NdArray::scalar(2.5);
+        assert_eq!(s.item(), 2.5);
+        assert_eq!(s.rank(), 0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_vec_size_mismatch_panics() {
+        NdArray::from_vec(&[2, 2], vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn reshape_with_inference() {
+        let a = NdArray::arange(&[2, 6]);
+        let b = a.reshape(&[3, usize::MAX]);
+        assert_eq!(b.dims(), &[3, 4]);
+        assert_eq!(b.data(), a.data());
+    }
+
+    #[test]
+    fn transpose_2d() {
+        let a = NdArray::from_slice(&[2, 3], &[1., 2., 3., 4., 5., 6.]);
+        let t = a.t();
+        assert_eq!(t.dims(), &[3, 2]);
+        assert_eq!(t.data(), &[1., 4., 2., 5., 3., 6.]);
+        // double transpose = identity
+        assert_eq!(t.t(), a);
+    }
+
+    #[test]
+    fn transpose_3d_axes() {
+        let a = NdArray::arange(&[2, 3, 4]);
+        let t = a.transpose(&[2, 0, 1]);
+        assert_eq!(t.dims(), &[4, 2, 3]);
+        assert_eq!(t.at(&[1, 0, 2]), a.at(&[0, 2, 1]));
+    }
+
+    #[test]
+    fn broadcast_to_materializes() {
+        let a = NdArray::from_slice(&[3, 1], &[1., 2., 3.]);
+        let b = a.broadcast_to(&[3, 4]);
+        assert_eq!(b.at(&[2, 3]), 3.0);
+        assert_eq!(b.at(&[0, 1]), 1.0);
+    }
+
+    #[test]
+    fn concat_and_slice_inverse() {
+        let a = NdArray::arange(&[2, 3]);
+        let b = NdArray::full(&[2, 2], 7.0);
+        let c = NdArray::concat(&[&a, &b], 1);
+        assert_eq!(c.dims(), &[2, 5]);
+        assert_eq!(c.slice_axis(1, 0, 3), a);
+        assert_eq!(c.slice_axis(1, 3, 5), b);
+    }
+
+    #[test]
+    fn concat_axis0() {
+        let a = NdArray::arange(&[1, 3]);
+        let b = NdArray::arange(&[2, 3]);
+        let c = NdArray::concat(&[&a, &b], 0);
+        assert_eq!(c.dims(), &[3, 3]);
+        assert_eq!(c.slice_axis(0, 1, 3), b);
+    }
+
+    #[test]
+    fn bf16_storage_quantizes_on_set() {
+        let mut a = NdArray::zeros(&[2]).cast(DType::BF16);
+        a.set(&[0], 1.0 + 2f32.powi(-9));
+        assert_ne!(a.at(&[0]), 1.0 + 2f32.powi(-9));
+        // f32 path keeps it
+        let mut b = NdArray::zeros(&[2]);
+        b.set(&[0], 1.0 + 2f32.powi(-9));
+        assert_eq!(b.at(&[0]), 1.0 + 2f32.powi(-9));
+    }
+
+    #[test]
+    fn inf_nan_detection() {
+        let mut a = NdArray::zeros(&[3]);
+        assert!(!a.has_inf_or_nan());
+        a.data_mut()[1] = f32::NAN;
+        assert!(a.has_inf_or_nan());
+        let mut b = NdArray::zeros(&[3]);
+        b.data_mut()[2] = f32::INFINITY;
+        assert!(b.has_inf_or_nan());
+    }
+
+    #[test]
+    fn allclose_tolerances() {
+        let a = NdArray::from_slice(&[2], &[1.0, 100.0]);
+        let b = NdArray::from_slice(&[2], &[1.0 + 1e-6, 100.0 + 1e-3]);
+        assert!(a.allclose(&b, 1e-5, 1e-4));
+        assert!(!a.allclose(&b, 1e-7, 1e-7));
+        let c = NdArray::from_slice(&[1], &[1.0]);
+        assert!(!a.allclose(&c, 1.0, 1.0)); // shape mismatch
+    }
+
+    #[test]
+    fn argmax_flat_finds_max() {
+        let a = NdArray::from_slice(&[4], &[0.1, 3.0, -1.0, 2.0]);
+        assert_eq!(a.argmax_flat(), 1);
+    }
+}

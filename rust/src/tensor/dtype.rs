@@ -1,0 +1,115 @@
+//! Storage dtypes. Compute is always f32; `BF16`/`F16` tag arrays whose
+//! values are quantized to half precision on write (paper §3.3:
+//! "storage (weights, activations, gradients) is performed in FP-16").
+
+use crate::utils::half;
+
+/// Storage precision of an [`crate::tensor::NdArray`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    /// IEEE-754 single precision (the default `float` type_config).
+    F32,
+    /// bfloat16 storage (the `half` type_config on TPU-like hardware).
+    BF16,
+    /// IEEE-754 half storage (the `half` type_config on Volta-like hardware).
+    F16,
+}
+
+impl DType {
+    /// Round `v` to the nearest value representable in this dtype.
+    #[inline]
+    pub fn quantize(self, v: f32) -> f32 {
+        match self {
+            DType::F32 => v,
+            DType::BF16 => half::bf16_round(v),
+            DType::F16 => half::f16_round(v),
+        }
+    }
+
+    /// Bytes per element when serialized.
+    pub fn size_of(self) -> usize {
+        match self {
+            DType::F32 => 4,
+            DType::BF16 | DType::F16 => 2,
+        }
+    }
+
+    /// Name used by the NNP text format and the artifact manifest.
+    pub fn name(self) -> &'static str {
+        match self {
+            DType::F32 => "float32",
+            DType::BF16 => "bfloat16",
+            DType::F16 => "float16",
+        }
+    }
+
+    /// Parse a dtype name (manifest / nntxt).
+    pub fn from_name(s: &str) -> Option<Self> {
+        match s {
+            "float32" | "f32" => Some(DType::F32),
+            "bfloat16" | "bf16" => Some(DType::BF16),
+            "float16" | "f16" => Some(DType::F16),
+            _ => None,
+        }
+    }
+
+    /// Largest finite value representable (used by the loss-scaler and
+    /// overflow detection in half simulation).
+    pub fn max_finite(self) -> f32 {
+        match self {
+            DType::F32 => f32::MAX,
+            DType::BF16 => half::BF16_MAX,
+            DType::F16 => half::F16_MAX,
+        }
+    }
+}
+
+impl std::fmt::Display for DType {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_quantize_is_identity() {
+        for v in [0.0f32, 1.5, -3.25e7, f32::MIN_POSITIVE] {
+            assert_eq!(DType::F32.quantize(v), v);
+        }
+    }
+
+    #[test]
+    fn bf16_quantize_truncates_mantissa() {
+        // bf16 has 8 mantissa bits; 1 + 2^-9 is not representable.
+        let v = 1.0 + 2f32.powi(-9);
+        let q = DType::BF16.quantize(v);
+        assert_ne!(q, v);
+        assert!((q - v).abs() < 2f32.powi(-8));
+    }
+
+    #[test]
+    fn f16_overflows_to_inf() {
+        // 70000 > f16::MAX (65504) — overflow behaviour the dynamic
+        // loss scaler must detect.
+        assert!(DType::F16.quantize(70_000.0).is_infinite());
+        assert!(DType::BF16.quantize(70_000.0).is_finite());
+    }
+
+    #[test]
+    fn names_round_trip() {
+        for d in [DType::F32, DType::BF16, DType::F16] {
+            assert_eq!(DType::from_name(d.name()), Some(d));
+        }
+        assert_eq!(DType::from_name("int8"), None);
+    }
+
+    #[test]
+    fn size_of_matches_spec() {
+        assert_eq!(DType::F32.size_of(), 4);
+        assert_eq!(DType::BF16.size_of(), 2);
+        assert_eq!(DType::F16.size_of(), 2);
+    }
+}

@@ -1,0 +1,20 @@
+//! Tensor substrate: a self-contained n-dimensional array library.
+//!
+//! This is the storage/compute layer underneath the dynamic-graph engine
+//! (the paper's "define-by-run" mode). Arrays are contiguous, row-major
+//! `f32` buffers with a *storage dtype* tag: `BF16`/`F16` arrays keep
+//! their values rounded to the nearest representable half-precision
+//! value on every write, faithfully simulating half-precision storage
+//! (the paper §3.3) while computing in f32 — the same "compute in f32,
+//! store in half" contract the MXU/TensorCore path uses.
+
+pub mod array;
+pub mod dtype;
+pub mod ops;
+pub mod random;
+pub mod shape;
+
+pub use array::NdArray;
+pub use dtype::DType;
+pub use random::Rng;
+pub use shape::Shape;

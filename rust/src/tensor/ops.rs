@@ -1,0 +1,412 @@
+//! Dense compute kernels on [`NdArray`]: broadcasted elementwise ops,
+//! axis reductions, matmul (the dynamic-mode hot path), and
+//! im2col/col2im (convolution lowering — the same lowering the L1
+//! Pallas kernel path uses, so dynamic and static modes agree).
+
+use super::{NdArray, Shape};
+
+// ------------------------------------------------------------------ zip/map
+
+/// Elementwise binary op with NumPy broadcasting.
+pub fn zip_broadcast(a: &NdArray, b: &NdArray, f: impl Fn(f32, f32) -> f32) -> NdArray {
+    if a.shape() == b.shape() {
+        // fast path: same shape, no index math
+        let data: Vec<f32> =
+            a.data().iter().zip(b.data()).map(|(&x, &y)| f(x, y)).collect();
+        return NdArray::from_vec(a.dims(), data);
+    }
+    let target = a
+        .shape()
+        .broadcast(b.shape())
+        .unwrap_or_else(|| panic!("cannot broadcast {} with {}", a.shape(), b.shape()));
+    let n = target.size();
+    let mut data = vec![0.0f32; n];
+    for (i, slot) in data.iter_mut().enumerate() {
+        let x = a.data()[a.shape().broadcast_source_index(&target, i)];
+        let y = b.data()[b.shape().broadcast_source_index(&target, i)];
+        *slot = f(x, y);
+    }
+    NdArray::from_vec(target.dims(), data)
+}
+
+/// Elementwise unary map.
+pub fn map(a: &NdArray, f: impl Fn(f32) -> f32) -> NdArray {
+    NdArray::from_vec(a.dims(), a.data().iter().map(|&x| f(x)).collect())
+}
+
+pub fn add(a: &NdArray, b: &NdArray) -> NdArray {
+    zip_broadcast(a, b, |x, y| x + y)
+}
+pub fn sub(a: &NdArray, b: &NdArray) -> NdArray {
+    zip_broadcast(a, b, |x, y| x - y)
+}
+pub fn mul(a: &NdArray, b: &NdArray) -> NdArray {
+    zip_broadcast(a, b, |x, y| x * y)
+}
+pub fn div(a: &NdArray, b: &NdArray) -> NdArray {
+    zip_broadcast(a, b, |x, y| x / y)
+}
+pub fn scale(a: &NdArray, s: f32) -> NdArray {
+    map(a, |x| x * s)
+}
+
+/// Reduce a gradient of `target` shape back to `src` shape by summing
+/// the broadcast dimensions (the adjoint of `broadcast_to`).
+pub fn reduce_to_shape(grad: &NdArray, src: &Shape) -> NdArray {
+    if grad.shape() == src {
+        return grad.clone();
+    }
+    let mut out = vec![0.0f32; src.size()];
+    for i in 0..grad.size() {
+        out[src.broadcast_source_index(grad.shape(), i)] += grad.data()[i];
+    }
+    NdArray::from_vec(src.dims(), out)
+}
+
+// --------------------------------------------------------------- reductions
+
+/// Sum along `axis`, optionally keeping the reduced dim as size 1.
+pub fn sum_axis(a: &NdArray, axis: usize, keepdims: bool) -> NdArray {
+    assert!(axis < a.rank());
+    let dims = a.dims();
+    let outer: usize = dims[..axis].iter().product();
+    let ax = dims[axis];
+    let inner: usize = dims[axis + 1..].iter().product();
+    let mut out = vec![0.0f32; outer * inner];
+    for o in 0..outer {
+        for k in 0..ax {
+            let base = (o * ax + k) * inner;
+            for i in 0..inner {
+                out[o * inner + i] += a.data()[base + i];
+            }
+        }
+    }
+    let mut out_dims: Vec<usize> = dims.to_vec();
+    if keepdims {
+        out_dims[axis] = 1;
+    } else {
+        out_dims.remove(axis);
+    }
+    NdArray::from_vec(&out_dims, out)
+}
+
+/// Mean along `axis`.
+pub fn mean_axis(a: &NdArray, axis: usize, keepdims: bool) -> NdArray {
+    let n = a.dims()[axis] as f32;
+    scale(&sum_axis(a, axis, keepdims), 1.0 / n)
+}
+
+/// Max along `axis`; also returns flat argmax offsets (for backward).
+pub fn max_axis(a: &NdArray, axis: usize, keepdims: bool) -> (NdArray, Vec<usize>) {
+    assert!(axis < a.rank());
+    let dims = a.dims();
+    let outer: usize = dims[..axis].iter().product();
+    let ax = dims[axis];
+    let inner: usize = dims[axis + 1..].iter().product();
+    let mut out = vec![f32::NEG_INFINITY; outer * inner];
+    let mut arg = vec![0usize; outer * inner];
+    for o in 0..outer {
+        for k in 0..ax {
+            let base = (o * ax + k) * inner;
+            for i in 0..inner {
+                let v = a.data()[base + i];
+                if v > out[o * inner + i] {
+                    out[o * inner + i] = v;
+                    arg[o * inner + i] = base + i;
+                }
+            }
+        }
+    }
+    let mut out_dims: Vec<usize> = dims.to_vec();
+    if keepdims {
+        out_dims[axis] = 1;
+    } else {
+        out_dims.remove(axis);
+    }
+    (NdArray::from_vec(&out_dims, out), arg)
+}
+
+// ------------------------------------------------------------------ matmul
+
+/// 2-D matrix multiply `[m,k]·[k,n] -> [m,n]`.
+///
+/// Blocked i-k-j loop with a transposed-B-free inner loop: the k-major
+/// ordering keeps both `b` row and `out` row streaming, which is the
+/// standard cache-friendly form (this is the dynamic-mode hot path; the
+/// static mode runs the Pallas/XLA kernel instead).
+pub fn matmul(a: &NdArray, b: &NdArray) -> NdArray {
+    assert_eq!(a.rank(), 2, "matmul lhs must be rank 2");
+    assert_eq!(b.rank(), 2, "matmul rhs must be rank 2");
+    let (m, k) = (a.dims()[0], a.dims()[1]);
+    let (k2, n) = (b.dims()[0], b.dims()[1]);
+    assert_eq!(k, k2, "matmul inner dims {k} vs {k2}");
+    let mut out = vec![0.0f32; m * n];
+    let ad = a.data();
+    let bd = b.data();
+    // i-k-j with 64-wide k blocking (KB sweep 64→512 measured neutral;
+    // 64 keeps the working set bounded for large k)
+    const KB: usize = 64;
+    for i in 0..m {
+        let arow = &ad[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        let mut k0 = 0;
+        while k0 < k {
+            let k1 = (k0 + KB).min(k);
+            for kk in k0..k1 {
+                let av = arow[kk];
+                let brow = &bd[kk * n..(kk + 1) * n];
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += av * bv;
+                }
+            }
+            k0 = k1;
+        }
+    }
+    NdArray::from_vec(&[m, n], out)
+}
+
+/// Batched matmul: `[b,m,k]·[b,k,n] -> [b,m,n]`.
+pub fn batch_matmul(a: &NdArray, b: &NdArray) -> NdArray {
+    assert_eq!(a.rank(), 3);
+    assert_eq!(b.rank(), 3);
+    let (bs, m, k) = (a.dims()[0], a.dims()[1], a.dims()[2]);
+    let (bs2, k2, n) = (b.dims()[0], b.dims()[1], b.dims()[2]);
+    assert_eq!(bs, bs2);
+    assert_eq!(k, k2);
+    let mut out = Vec::with_capacity(bs * m * n);
+    for i in 0..bs {
+        let ai = NdArray::from_slice(&[m, k], &a.data()[i * m * k..(i + 1) * m * k]);
+        let bi = NdArray::from_slice(&[k, n], &b.data()[i * k * n..(i + 1) * k * n]);
+        out.extend_from_slice(matmul(&ai, &bi).data());
+    }
+    NdArray::from_vec(&[bs, m, n], out)
+}
+
+// ---------------------------------------------------------------- im2col
+
+/// Convolution geometry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Conv2dGeom {
+    pub kernel: (usize, usize),
+    pub stride: (usize, usize),
+    pub pad: (usize, usize),
+    pub dilation: (usize, usize),
+}
+
+impl Conv2dGeom {
+    pub fn simple(kh: usize, kw: usize) -> Self {
+        Conv2dGeom { kernel: (kh, kw), stride: (1, 1), pad: (0, 0), dilation: (1, 1) }
+    }
+
+    /// Output spatial size for an input of `(h, w)`.
+    pub fn out_hw(&self, h: usize, w: usize) -> (usize, usize) {
+        let eff_kh = self.dilation.0 * (self.kernel.0 - 1) + 1;
+        let eff_kw = self.dilation.1 * (self.kernel.1 - 1) + 1;
+        let oh = (h + 2 * self.pad.0 - eff_kh) / self.stride.0 + 1;
+        let ow = (w + 2 * self.pad.1 - eff_kw) / self.stride.1 + 1;
+        (oh, ow)
+    }
+}
+
+/// im2col: `[n,c,h,w] -> [n*oh*ow, c*kh*kw]`. Convolution then reduces
+/// to a matmul against reshaped weights `[c*kh*kw, oc]` — the same
+/// lowering `python/compile/kernels/matmul.py` feeds.
+pub fn im2col(x: &NdArray, g: &Conv2dGeom) -> NdArray {
+    assert_eq!(x.rank(), 4, "im2col expects NCHW");
+    let (n, c, h, w) = (x.dims()[0], x.dims()[1], x.dims()[2], x.dims()[3]);
+    let (kh, kw) = g.kernel;
+    let (oh, ow) = g.out_hw(h, w);
+    let cols = c * kh * kw;
+    let mut out = vec![0.0f32; n * oh * ow * cols];
+    let xd = x.data();
+    for ni in 0..n {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let row = ((ni * oh + oy) * ow + ox) * cols;
+                for ci in 0..c {
+                    for ky in 0..kh {
+                        let iy = (oy * g.stride.0 + ky * g.dilation.0) as isize - g.pad.0 as isize;
+                        for kx in 0..kw {
+                            let ix =
+                                (ox * g.stride.1 + kx * g.dilation.1) as isize - g.pad.1 as isize;
+                            let col = (ci * kh + ky) * kw + kx;
+                            if iy >= 0 && (iy as usize) < h && ix >= 0 && (ix as usize) < w {
+                                out[row + col] = xd
+                                    [((ni * c + ci) * h + iy as usize) * w + ix as usize];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    NdArray::from_vec(&[n * oh * ow, cols], out)
+}
+
+/// col2im: adjoint of [`im2col`] — scatters column gradients back to
+/// the input layout (accumulating where patches overlap).
+pub fn col2im(cols: &NdArray, x_dims: &[usize], g: &Conv2dGeom) -> NdArray {
+    let (n, c, h, w) = (x_dims[0], x_dims[1], x_dims[2], x_dims[3]);
+    let (kh, kw) = g.kernel;
+    let (oh, ow) = g.out_hw(h, w);
+    let ncols = c * kh * kw;
+    assert_eq!(cols.dims(), &[n * oh * ow, ncols]);
+    let mut out = vec![0.0f32; n * c * h * w];
+    let cd = cols.data();
+    for ni in 0..n {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let row = ((ni * oh + oy) * ow + ox) * ncols;
+                for ci in 0..c {
+                    for ky in 0..kh {
+                        let iy = (oy * g.stride.0 + ky * g.dilation.0) as isize - g.pad.0 as isize;
+                        for kx in 0..kw {
+                            let ix =
+                                (ox * g.stride.1 + kx * g.dilation.1) as isize - g.pad.1 as isize;
+                            if iy >= 0 && (iy as usize) < h && ix >= 0 && (ix as usize) < w {
+                                let col = (ci * kh + ky) * kw + kx;
+                                out[((ni * c + ci) * h + iy as usize) * w + ix as usize] +=
+                                    cd[row + col];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    NdArray::from_vec(x_dims, out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_broadcast_bias() {
+        let x = NdArray::arange(&[2, 3]);
+        let b = NdArray::from_slice(&[3], &[10., 20., 30.]);
+        let y = add(&x, &b);
+        assert_eq!(y.data(), &[10., 21., 32., 13., 24., 35.]);
+    }
+
+    #[test]
+    fn reduce_to_shape_is_broadcast_adjoint() {
+        let g = NdArray::ones(&[2, 3]);
+        let r = reduce_to_shape(&g, &Shape::new(&[3]));
+        assert_eq!(r.data(), &[2., 2., 2.]);
+        let r2 = reduce_to_shape(&g, &Shape::new(&[2, 1]));
+        assert_eq!(r2.data(), &[3., 3.]);
+        let r3 = reduce_to_shape(&g, &Shape::scalar());
+        assert_eq!(r3.item(), 6.0);
+    }
+
+    #[test]
+    fn sum_mean_max_axis() {
+        let a = NdArray::from_slice(&[2, 3], &[1., 5., 3., 4., 2., 6.]);
+        assert_eq!(sum_axis(&a, 0, false).data(), &[5., 7., 9.]);
+        assert_eq!(sum_axis(&a, 1, false).data(), &[9., 12.]);
+        assert_eq!(sum_axis(&a, 1, true).dims(), &[2, 1]);
+        assert_eq!(mean_axis(&a, 1, false).data(), &[3., 4.]);
+        let (m, arg) = max_axis(&a, 1, false);
+        assert_eq!(m.data(), &[5., 6.]);
+        assert_eq!(arg, vec![1, 5]);
+    }
+
+    #[test]
+    fn matmul_small() {
+        let a = NdArray::from_slice(&[2, 2], &[1., 2., 3., 4.]);
+        let b = NdArray::ones(&[2, 2]);
+        let c = matmul(&a, &b);
+        assert_eq!(c.data(), &[3., 3., 7., 7.]);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let a = NdArray::arange(&[3, 3]);
+        let mut i = NdArray::zeros(&[3, 3]);
+        for d in 0..3 {
+            i.set(&[d, d], 1.0);
+        }
+        assert_eq!(matmul(&a, &i), a);
+        assert_eq!(matmul(&i, &a), a);
+    }
+
+    #[test]
+    fn matmul_rect() {
+        // [1,3]x[3,2]
+        let a = NdArray::from_slice(&[1, 3], &[1., 2., 3.]);
+        let b = NdArray::from_slice(&[3, 2], &[1., 4., 2., 5., 3., 6.]);
+        let c = matmul(&a, &b);
+        assert_eq!(c.dims(), &[1, 2]);
+        assert_eq!(c.data(), &[14., 32.]);
+    }
+
+    #[test]
+    fn batch_matmul_matches_loop() {
+        let a = NdArray::arange(&[2, 2, 3]);
+        let b = NdArray::arange(&[2, 3, 2]);
+        let c = batch_matmul(&a, &b);
+        for i in 0..2 {
+            let ai = a.slice_axis(0, i, i + 1).reshape(&[2, 3]);
+            let bi = b.slice_axis(0, i, i + 1).reshape(&[3, 2]);
+            let ci = c.slice_axis(0, i, i + 1).reshape(&[2, 2]);
+            assert_eq!(matmul(&ai, &bi), ci);
+        }
+    }
+
+    #[test]
+    fn conv_geom_output_size() {
+        let g = Conv2dGeom { kernel: (3, 3), stride: (1, 1), pad: (1, 1), dilation: (1, 1) };
+        assert_eq!(g.out_hw(8, 8), (8, 8)); // same padding
+        let g2 = Conv2dGeom { kernel: (2, 2), stride: (2, 2), pad: (0, 0), dilation: (1, 1) };
+        assert_eq!(g2.out_hw(8, 8), (4, 4));
+        let g3 = Conv2dGeom { kernel: (3, 3), stride: (1, 1), pad: (0, 0), dilation: (2, 2) };
+        assert_eq!(g3.out_hw(8, 8), (4, 4));
+    }
+
+    #[test]
+    fn im2col_1x1_is_reshape_transpose() {
+        let x = NdArray::arange(&[1, 2, 2, 2]);
+        let g = Conv2dGeom::simple(1, 1);
+        let c = im2col(&x, &g);
+        assert_eq!(c.dims(), &[4, 2]);
+        // row (y,x), col c -> x[0, c, y, x]
+        assert_eq!(c.at(&[0, 0]), x.at(&[0, 0, 0, 0]));
+        assert_eq!(c.at(&[3, 1]), x.at(&[0, 1, 1, 1]));
+    }
+
+    #[test]
+    fn im2col_known_values() {
+        // 1x1x3x3 input, 2x2 kernel, no pad, stride 1 -> 4 patches
+        let x = NdArray::arange(&[1, 1, 3, 3]);
+        let g = Conv2dGeom::simple(2, 2);
+        let c = im2col(&x, &g);
+        assert_eq!(c.dims(), &[4, 4]);
+        assert_eq!(&c.data()[0..4], &[0., 1., 3., 4.]); // top-left patch
+        assert_eq!(&c.data()[12..16], &[4., 5., 7., 8.]); // bottom-right patch
+    }
+
+    #[test]
+    fn im2col_padding_zero_fills() {
+        let x = NdArray::ones(&[1, 1, 2, 2]);
+        let g = Conv2dGeom { kernel: (3, 3), stride: (1, 1), pad: (1, 1), dilation: (1, 1) };
+        let c = im2col(&x, &g);
+        assert_eq!(c.dims(), &[4, 9]);
+        // top-left patch has 5 zeros (border) + 4 ones
+        let row0: f32 = c.data()[0..9].iter().sum();
+        assert_eq!(row0, 4.0);
+    }
+
+    #[test]
+    fn col2im_is_im2col_adjoint() {
+        // <im2col(x), y> == <x, col2im(y)> for random-ish x, y
+        let x = NdArray::arange(&[2, 2, 4, 4]);
+        let g = Conv2dGeom { kernel: (3, 3), stride: (1, 1), pad: (1, 1), dilation: (1, 1) };
+        let cx = im2col(&x, &g);
+        let y = NdArray::arange(cx.dims());
+        let lhs: f32 = cx.data().iter().zip(y.data()).map(|(a, b)| a * b).sum();
+        let cty = col2im(&y, x.dims(), &g);
+        let rhs: f32 = x.data().iter().zip(cty.data()).map(|(a, b)| a * b).sum();
+        assert!((lhs - rhs).abs() / lhs.abs().max(1.0) < 1e-5);
+    }
+}

@@ -1,0 +1,169 @@
+//! Shape and stride arithmetic: row-major strides, broadcasting rules
+//! (NumPy semantics), and flat-index helpers.
+
+/// A tensor shape (row-major). Rank-0 (scalar) is the empty vec.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Shape(pub Vec<usize>);
+
+impl Shape {
+    pub fn new(dims: &[usize]) -> Self {
+        Shape(dims.to_vec())
+    }
+
+    pub fn scalar() -> Self {
+        Shape(vec![])
+    }
+
+    pub fn rank(&self) -> usize {
+        self.0.len()
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        &self.0
+    }
+
+    /// Total number of elements.
+    pub fn size(&self) -> usize {
+        self.0.iter().product()
+    }
+
+    /// Row-major strides (in elements).
+    pub fn strides(&self) -> Vec<usize> {
+        let mut s = vec![1usize; self.rank()];
+        for i in (0..self.rank().saturating_sub(1)).rev() {
+            s[i] = s[i + 1] * self.0[i + 1];
+        }
+        s
+    }
+
+    /// Convert a multi-index to a flat offset.
+    pub fn flat_index(&self, idx: &[usize]) -> usize {
+        debug_assert_eq!(idx.len(), self.rank());
+        let strides = self.strides();
+        idx.iter().zip(&strides).map(|(i, s)| i * s).sum()
+    }
+
+    /// Convert a flat offset to a multi-index.
+    pub fn multi_index(&self, mut flat: usize) -> Vec<usize> {
+        let mut idx = vec![0usize; self.rank()];
+        for i in (0..self.rank()).rev() {
+            idx[i] = flat % self.0[i];
+            flat /= self.0[i];
+        }
+        idx
+    }
+
+    /// NumPy broadcast of two shapes. `None` if incompatible.
+    pub fn broadcast(&self, other: &Shape) -> Option<Shape> {
+        let r = self.rank().max(other.rank());
+        let mut out = vec![0usize; r];
+        for i in 0..r {
+            let a = if i < r - self.rank() { 1 } else { self.0[i - (r - self.rank())] };
+            let b = if i < r - other.rank() { 1 } else { other.0[i - (r - other.rank())] };
+            out[i] = if a == b {
+                a
+            } else if a == 1 {
+                b
+            } else if b == 1 {
+                a
+            } else {
+                return None;
+            };
+        }
+        Some(Shape(out))
+    }
+
+    /// Given a broadcast target shape, map a flat index in the target to
+    /// the flat index in `self` (dimensions of size 1 repeat).
+    pub fn broadcast_source_index(&self, target: &Shape, target_flat: usize) -> usize {
+        let tidx = target.multi_index(target_flat);
+        let off = target.rank() - self.rank();
+        let strides = self.strides();
+        let mut flat = 0usize;
+        for i in 0..self.rank() {
+            let t = tidx[i + off];
+            let s = if self.0[i] == 1 { 0 } else { t };
+            flat += s * strides[i];
+        }
+        flat
+    }
+}
+
+impl std::fmt::Display for Shape {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "(")?;
+        for (i, d) in self.0.iter().enumerate() {
+            if i > 0 {
+                write!(f, ", ")?;
+            }
+            write!(f, "{d}")?;
+        }
+        write!(f, ")")
+    }
+}
+
+impl From<Vec<usize>> for Shape {
+    fn from(v: Vec<usize>) -> Self {
+        Shape(v)
+    }
+}
+
+impl From<&[usize]> for Shape {
+    fn from(v: &[usize]) -> Self {
+        Shape(v.to_vec())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strides_row_major() {
+        assert_eq!(Shape::new(&[2, 3, 4]).strides(), vec![12, 4, 1]);
+        assert_eq!(Shape::new(&[5]).strides(), vec![1]);
+        assert_eq!(Shape::scalar().strides(), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn flat_and_multi_index_inverse() {
+        let s = Shape::new(&[3, 4, 5]);
+        for flat in 0..s.size() {
+            assert_eq!(s.flat_index(&s.multi_index(flat)), flat);
+        }
+    }
+
+    #[test]
+    fn broadcast_rules() {
+        let a = Shape::new(&[3, 1]);
+        let b = Shape::new(&[1, 4]);
+        assert_eq!(a.broadcast(&b), Some(Shape::new(&[3, 4])));
+        let c = Shape::new(&[2, 3, 4]);
+        let d = Shape::new(&[4]);
+        assert_eq!(c.broadcast(&d), Some(Shape::new(&[2, 3, 4])));
+        let e = Shape::new(&[3]);
+        let f = Shape::new(&[4]);
+        assert_eq!(e.broadcast(&f), None);
+        assert_eq!(Shape::scalar().broadcast(&c), Some(c.clone()));
+    }
+
+    #[test]
+    fn broadcast_source_index_repeats_size1_dims() {
+        let src = Shape::new(&[3, 1]);
+        let tgt = Shape::new(&[3, 4]);
+        // target (i, j) -> source (i, 0)
+        for i in 0..3 {
+            for j in 0..4 {
+                let tf = tgt.flat_index(&[i, j]);
+                assert_eq!(src.broadcast_source_index(&tgt, tf), i);
+            }
+        }
+    }
+
+    #[test]
+    fn size_and_rank() {
+        assert_eq!(Shape::new(&[2, 3]).size(), 6);
+        assert_eq!(Shape::scalar().size(), 1);
+        assert_eq!(Shape::scalar().rank(), 0);
+    }
+}

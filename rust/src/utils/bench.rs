@@ -1,0 +1,82 @@
+//! Minimal benchmark harness (criterion is unavailable offline): warms
+//! up, runs timed iterations, reports mean/min secs per iteration.
+
+use std::time::Instant;
+
+/// Result of one measurement.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: usize,
+    pub mean_secs: f64,
+    pub min_secs: f64,
+}
+
+impl Measurement {
+    pub fn per_sec(&self) -> f64 {
+        1.0 / self.mean_secs
+    }
+}
+
+/// Time `f` over `iters` iterations after `warmup` unmeasured calls.
+pub fn bench(name: &str, warmup: usize, iters: usize, mut f: impl FnMut()) -> Measurement {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        times.push(t.elapsed().as_secs_f64());
+    }
+    let mean = times.iter().sum::<f64>() / iters as f64;
+    let min = times.iter().cloned().fold(f64::INFINITY, f64::min);
+    Measurement { name: name.to_string(), iters, mean_secs: mean, min_secs: min }
+}
+
+/// Render measurements as an aligned table with a ratio column
+/// relative to the first row (the paper tables' "speedup" column).
+pub fn table(title: &str, rows: &[Measurement]) -> String {
+    let mut s = format!("\n=== {title} ===\n");
+    s.push_str(&format!(
+        "{:<38} {:>7} {:>12} {:>12} {:>9}\n",
+        "case", "iters", "mean_ms", "min_ms", "vs_first"
+    ));
+    let base = rows.first().map(|r| r.mean_secs).unwrap_or(1.0);
+    for r in rows {
+        s.push_str(&format!(
+            "{:<38} {:>7} {:>12.3} {:>12.3} {:>8.2}x\n",
+            r.name,
+            r.iters,
+            r.mean_secs * 1e3,
+            r.min_secs * 1e3,
+            base / r.mean_secs
+        ));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_work() {
+        let m = bench("spin", 1, 3, || {
+            std::hint::black_box((0..10_000).sum::<u64>());
+        });
+        assert!(m.mean_secs > 0.0);
+        assert!(m.min_secs <= m.mean_secs);
+        assert_eq!(m.iters, 3);
+    }
+
+    #[test]
+    fn table_has_ratio_column() {
+        let rows = vec![
+            Measurement { name: "a".into(), iters: 1, mean_secs: 0.2, min_secs: 0.2 },
+            Measurement { name: "b".into(), iters: 1, mean_secs: 0.1, min_secs: 0.1 },
+        ];
+        let t = table("t", &rows);
+        assert!(t.contains("2.00x"));
+    }
+}

@@ -1,0 +1,205 @@
+//! bfloat16 / float16 conversion (round-to-nearest-even), used to
+//! simulate half-precision *storage* for mixed-precision training
+//! (paper §3.3) without a half crate.
+
+/// f32 -> bf16 bits (round-to-nearest-even) -> f32.
+#[inline]
+pub fn bf16_round(v: f32) -> f32 {
+    let bits = v.to_bits();
+    if v.is_nan() {
+        return f32::from_bits(bits | 0x0040_0000); // quiet NaN, keep payload bit
+    }
+    // round to nearest even on the truncated 16 bits
+    let rounding_bias = 0x7FFF + ((bits >> 16) & 1);
+    let r = bits.wrapping_add(rounding_bias) & 0xFFFF_0000;
+    f32::from_bits(r)
+}
+
+/// f32 -> IEEE-754 binary16 bits (round-to-nearest-even).
+pub fn f32_to_f16_bits(v: f32) -> u16 {
+    let bits = v.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let mant = bits & 0x007F_FFFF;
+
+    if exp == 0xFF {
+        // Inf / NaN
+        return sign | 0x7C00 | if mant != 0 { 0x0200 } else { 0 };
+    }
+    // unbiased exponent
+    let e = exp - 127;
+    if e > 15 {
+        // overflow -> Inf
+        return sign | 0x7C00;
+    }
+    if e >= -14 {
+        // normal f16
+        let mut m = mant >> 13; // keep 10 bits
+        let rem = mant & 0x1FFF;
+        // round to nearest even
+        if rem > 0x1000 || (rem == 0x1000 && (m & 1) == 1) {
+            m += 1;
+        }
+        let mut he = (e + 15) as u32;
+        if m == 0x400 {
+            // mantissa overflow carries into exponent
+            m = 0;
+            he += 1;
+            if he >= 31 {
+                return sign | 0x7C00;
+            }
+        }
+        return sign | ((he as u16) << 10) | (m as u16);
+    }
+    if e >= -25 {
+        // subnormal f16 (e == -25 can still round up to the smallest
+        // subnormal 2^-24)
+        let full = mant | 0x0080_0000; // implicit leading 1
+        let shift = (-14 - e) as u32 + 13;
+        let m = full >> shift;
+        let rem = full & ((1u32 << shift) - 1);
+        let half = 1u32 << (shift - 1);
+        let mut m16 = m as u16;
+        if rem > half || (rem == half && (m16 & 1) == 1) {
+            m16 += 1;
+        }
+        return sign | m16;
+    }
+    // underflow to signed zero
+    sign
+}
+
+/// IEEE-754 binary16 bits -> f32.
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1F) as u32;
+    let mant = (h & 0x03FF) as u32;
+    let bits = if exp == 0 {
+        if mant == 0 {
+            sign
+        } else {
+            // subnormal: normalize. value = mant * 2^-24; with k shifts
+            // to set bit 10, f32 exponent field = 113 - k.
+            let mut e = 0i32;
+            let mut m = mant;
+            while m & 0x0400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            m &= 0x03FF;
+            sign | (((113 + e) as u32) << 23) | (m << 13)
+        }
+    } else if exp == 31 {
+        sign | 0x7F80_0000 | (mant << 13)
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (mant << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// f32 -> f16 grid -> f32 (round-trip through binary16).
+#[inline]
+pub fn f16_round(v: f32) -> f32 {
+    f16_bits_to_f32(f32_to_f16_bits(v))
+}
+
+/// Largest finite binary16 value.
+pub const F16_MAX: f32 = 65504.0;
+/// Largest finite bfloat16 value.
+pub const BF16_MAX: f32 = 3.3895314e38;
+
+/// Serialize an f32 slice to little-endian bytes on a dtype grid
+/// (bf16/f16 are stored in 2 bytes — real size on disk matters for the
+/// NNP parameter blob).
+pub fn f32_to_bf16_bits(v: f32) -> u16 {
+    (bf16_round(v).to_bits() >> 16) as u16
+}
+
+/// bf16 bits -> f32.
+pub fn bf16_bits_to_f32(b: u16) -> f32 {
+    f32::from_bits((b as u32) << 16)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bf16_exact_values_unchanged() {
+        for v in [0.0f32, 1.0, -2.0, 0.5, 256.0, -0.125] {
+            assert_eq!(bf16_round(v), v);
+        }
+    }
+
+    #[test]
+    fn bf16_rounds_to_nearest_even() {
+        // bf16 has 7 mantissa bits: 1 + 2^-7 is exactly representable;
+        // 1 + 2^-8 is a tie and rounds to 1.0 (even)
+        assert_eq!(bf16_round(1.0 + 2f32.powi(-7)), 1.0 + 2f32.powi(-7));
+        assert_eq!(bf16_round(1.0 + 2f32.powi(-8)), 1.0);
+        // 1 + 3*2^-8 is a tie between 1+2^-7 (odd lsb) and 1+2^-6
+        // (even lsb): ties-to-even picks 1+2^-6
+        assert_eq!(bf16_round(1.0 + 3.0 * 2f32.powi(-8)), 1.0 + 2f32.powi(-6));
+        // a non-tie just above 1+2^-7 rounds down to it
+        assert_eq!(bf16_round(1.0 + 5.0 * 2f32.powi(-9)), 1.0 + 2f32.powi(-7));
+    }
+
+    #[test]
+    fn bf16_keeps_inf_nan() {
+        assert!(bf16_round(f32::INFINITY).is_infinite());
+        assert!(bf16_round(f32::NAN).is_nan());
+    }
+
+    #[test]
+    fn f16_exact_small_ints() {
+        for v in [0.0f32, 1.0, -1.0, 2.0, 1024.0, 2048.0, -0.5] {
+            assert_eq!(f16_round(v), v, "{v}");
+        }
+    }
+
+    #[test]
+    fn f16_max_and_overflow() {
+        assert_eq!(f16_round(65504.0), 65504.0);
+        assert!(f16_round(65520.0).is_infinite()); // rounds past max
+        assert!(f16_round(70000.0).is_infinite());
+        assert_eq!(f16_round(-65504.0), -65504.0);
+    }
+
+    #[test]
+    fn f16_subnormals() {
+        let min_sub = 2f32.powi(-24);
+        assert_eq!(f16_round(min_sub), min_sub);
+        assert_eq!(f16_round(min_sub * 0.49), 0.0); // underflow
+        let v = 3.0 * 2f32.powi(-24);
+        assert_eq!(f16_round(v), v);
+    }
+
+    #[test]
+    fn f16_mantissa_precision() {
+        // f16 has 10 mantissa bits: 1 + 2^-10 representable, 1 + 2^-11 not
+        assert_eq!(f16_round(1.0 + 2f32.powi(-10)), 1.0 + 2f32.powi(-10));
+        assert_eq!(f16_round(1.0 + 2f32.powi(-11)), 1.0);
+    }
+
+    #[test]
+    fn f16_bits_roundtrip_all() {
+        // every finite f16 bit pattern round-trips exactly
+        for h in 0..=0xFFFFu32 {
+            let h = h as u16;
+            let exp = (h >> 10) & 0x1F;
+            if exp == 31 {
+                continue; // inf/nan
+            }
+            let f = f16_bits_to_f32(h);
+            assert_eq!(f32_to_f16_bits(f), h, "bits {h:#06x} -> {f} -> mismatch");
+        }
+    }
+
+    #[test]
+    fn bf16_bits_roundtrip() {
+        for v in [1.0f32, -3.5, 0.0, 1e30, -2e-30] {
+            let b = f32_to_bf16_bits(v);
+            assert_eq!(bf16_bits_to_f32(b), bf16_round(v));
+        }
+    }
+}

@@ -1,0 +1,9 @@
+//! Self-contained utilities replacing crates unavailable in the
+//! offline build: half-precision conversion, a JSON parser/emitter,
+//! and a tiny property-testing helper.
+
+pub mod bench;
+pub mod half;
+pub mod json;
+pub mod prop;
+pub mod prototext;

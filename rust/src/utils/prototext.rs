@@ -1,0 +1,327 @@
+//! Protobuf-text-style generic tree (emitter + parser) — the syntax of
+//! the paper's `.nntxt` files:
+//!
+//! ```text
+//! network {
+//!   name: "net"
+//!   layer {
+//!     op: "Affine"
+//!     input: "x"
+//!   }
+//! }
+//! ```
+//!
+//! Repeated keys express lists; nested messages use braces.
+
+/// A field value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum PVal {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+    Msg(PText),
+}
+
+/// An ordered multimap of fields (repeated keys allowed).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct PText {
+    pub fields: Vec<(String, PVal)>,
+}
+
+impl PText {
+    pub fn new() -> Self {
+        PText::default()
+    }
+
+    pub fn push(&mut self, key: &str, val: PVal) {
+        self.fields.push((key.to_string(), val));
+    }
+
+    pub fn push_str(&mut self, key: &str, s: impl Into<String>) {
+        self.push(key, PVal::Str(s.into()));
+    }
+
+    pub fn push_num(&mut self, key: &str, n: f64) {
+        self.push(key, PVal::Num(n));
+    }
+
+    /// First value for a key.
+    pub fn get(&self, key: &str) -> Option<&PVal> {
+        self.fields.iter().find(|(k, _)| k == key).map(|(_, v)| v)
+    }
+
+    /// All values for a (repeated) key.
+    pub fn get_all(&self, key: &str) -> Vec<&PVal> {
+        self.fields.iter().filter(|(k, _)| k == key).map(|(_, v)| v).collect()
+    }
+
+    pub fn get_str(&self, key: &str) -> Option<&str> {
+        match self.get(key)? {
+            PVal::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn get_num(&self, key: &str) -> Option<f64> {
+        match self.get(key)? {
+            PVal::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn get_msg(&self, key: &str) -> Option<&PText> {
+        match self.get(key)? {
+            PVal::Msg(m) => Some(m),
+            _ => None,
+        }
+    }
+
+    /// Repeated numeric key as usize list (`dim: 1 dim: 4`).
+    pub fn get_usizes(&self, key: &str) -> Vec<usize> {
+        self.get_all(key)
+            .into_iter()
+            .filter_map(|v| match v {
+                PVal::Num(n) => Some(*n as usize),
+                _ => None,
+            })
+            .collect()
+    }
+
+    // -------------------------------------------------------------- emit
+
+    pub fn to_string(&self) -> String {
+        let mut s = String::new();
+        self.write(&mut s, 0);
+        s
+    }
+
+    fn write(&self, out: &mut String, indent: usize) {
+        for (k, v) in &self.fields {
+            for _ in 0..indent {
+                out.push(' ');
+            }
+            match v {
+                PVal::Str(s) => {
+                    out.push_str(k);
+                    out.push_str(": \"");
+                    for c in s.chars() {
+                        match c {
+                            '"' => out.push_str("\\\""),
+                            '\\' => out.push_str("\\\\"),
+                            '\n' => out.push_str("\\n"),
+                            c => out.push(c),
+                        }
+                    }
+                    out.push_str("\"\n");
+                }
+                PVal::Num(n) => {
+                    if *n == n.trunc() && n.abs() < 1e15 {
+                        out.push_str(&format!("{k}: {}\n", *n as i64));
+                    } else {
+                        out.push_str(&format!("{k}: {n}\n"));
+                    }
+                }
+                PVal::Bool(b) => {
+                    out.push_str(&format!("{k}: {b}\n"));
+                }
+                PVal::Msg(m) => {
+                    out.push_str(k);
+                    out.push_str(" {\n");
+                    m.write(out, indent + 2);
+                    for _ in 0..indent {
+                        out.push(' ');
+                    }
+                    out.push_str("}\n");
+                }
+            }
+        }
+    }
+
+    // -------------------------------------------------------------- parse
+
+    pub fn parse(src: &str) -> Result<PText, String> {
+        let mut toks = tokenize(src)?;
+        toks.reverse(); // pop from the back
+        let msg = parse_fields(&mut toks, true)?;
+        Ok(msg)
+    }
+}
+
+#[derive(Debug, PartialEq)]
+enum Tok {
+    Ident(String),
+    Str(String),
+    Num(f64),
+    Bool(bool),
+    Colon,
+    LBrace,
+    RBrace,
+}
+
+fn tokenize(src: &str) -> Result<Vec<Tok>, String> {
+    let b: Vec<char> = src.chars().collect();
+    let mut i = 0;
+    let mut out = Vec::new();
+    while i < b.len() {
+        let c = b[i];
+        match c {
+            ' ' | '\t' | '\n' | '\r' | ',' => i += 1,
+            '#' => {
+                while i < b.len() && b[i] != '\n' {
+                    i += 1;
+                }
+            }
+            ':' => {
+                out.push(Tok::Colon);
+                i += 1;
+            }
+            '{' => {
+                out.push(Tok::LBrace);
+                i += 1;
+            }
+            '}' => {
+                out.push(Tok::RBrace);
+                i += 1;
+            }
+            '"' => {
+                i += 1;
+                let mut s = String::new();
+                while i < b.len() && b[i] != '"' {
+                    if b[i] == '\\' && i + 1 < b.len() {
+                        i += 1;
+                        s.push(match b[i] {
+                            'n' => '\n',
+                            't' => '\t',
+                            c => c,
+                        });
+                    } else {
+                        s.push(b[i]);
+                    }
+                    i += 1;
+                }
+                if i >= b.len() {
+                    return Err("unterminated string".into());
+                }
+                i += 1;
+                out.push(Tok::Str(s));
+            }
+            c if c == '-' || c.is_ascii_digit() => {
+                let start = i;
+                while i < b.len()
+                    && (b[i].is_ascii_digit() || matches!(b[i], '.' | 'e' | 'E' | '+' | '-'))
+                {
+                    i += 1;
+                }
+                let s: String = b[start..i].iter().collect();
+                out.push(Tok::Num(s.parse().map_err(|_| format!("bad number '{s}'"))?));
+            }
+            c if c.is_alphabetic() || c == '_' => {
+                let start = i;
+                while i < b.len() && (b[i].is_alphanumeric() || b[i] == '_') {
+                    i += 1;
+                }
+                let s: String = b[start..i].iter().collect();
+                match s.as_str() {
+                    "true" => out.push(Tok::Bool(true)),
+                    "false" => out.push(Tok::Bool(false)),
+                    _ => out.push(Tok::Ident(s)),
+                }
+            }
+            c => return Err(format!("unexpected char '{c}'")),
+        }
+    }
+    Ok(out)
+}
+
+fn parse_fields(toks: &mut Vec<Tok>, top: bool) -> Result<PText, String> {
+    let mut msg = PText::new();
+    loop {
+        match toks.pop() {
+            None => {
+                if top {
+                    return Ok(msg);
+                }
+                return Err("unexpected end of input".into());
+            }
+            Some(Tok::RBrace) => {
+                if top {
+                    return Err("unbalanced '}'".into());
+                }
+                return Ok(msg);
+            }
+            Some(Tok::Ident(key)) => match toks.pop() {
+                Some(Tok::Colon) => {
+                    let v = match toks.pop() {
+                        Some(Tok::Str(s)) => PVal::Str(s),
+                        Some(Tok::Num(n)) => PVal::Num(n),
+                        Some(Tok::Bool(b)) => PVal::Bool(b),
+                        _ => return Err(format!("expected value after '{key}:'")),
+                    };
+                    msg.push(&key, v);
+                }
+                Some(Tok::LBrace) => {
+                    let inner = parse_fields(toks, false)?;
+                    msg.push(&key, PVal::Msg(inner));
+                }
+                _ => return Err(format!("expected ':' or '{{' after '{key}'")),
+            },
+            Some(t) => return Err(format!("unexpected token {t:?}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn emit_and_parse_roundtrip() {
+        let mut inner = PText::new();
+        inner.push_str("name", "fc1");
+        inner.push_num("units", 128.0);
+        inner.push("train", PVal::Bool(true));
+        let mut root = PText::new();
+        root.push_str("version", "1.0");
+        root.push("layer", PVal::Msg(inner.clone()));
+        root.push("layer", PVal::Msg(inner));
+        let text = root.to_string();
+        let back = PText::parse(&text).unwrap();
+        assert_eq!(back, root);
+        assert_eq!(back.get_all("layer").len(), 2);
+    }
+
+    #[test]
+    fn repeated_scalars_as_list() {
+        let p = PText::parse("dim: 1 dim: 4 dim: 28").unwrap();
+        assert_eq!(p.get_usizes("dim"), vec![1, 4, 28]);
+    }
+
+    #[test]
+    fn comments_and_commas_skipped() {
+        let p = PText::parse("# a comment\nname: \"x\", value: 3\n").unwrap();
+        assert_eq!(p.get_str("name"), Some("x"));
+        assert_eq!(p.get_num("value"), Some(3.0));
+    }
+
+    #[test]
+    fn string_escapes() {
+        let mut root = PText::new();
+        root.push_str("s", "a\"b\\c\nd");
+        let back = PText::parse(&root.to_string()).unwrap();
+        assert_eq!(back.get_str("s"), Some("a\"b\\c\nd"));
+    }
+
+    #[test]
+    fn nested_messages() {
+        let p = PText::parse("a { b { c: 1 } }").unwrap();
+        assert_eq!(p.get_msg("a").unwrap().get_msg("b").unwrap().get_num("c"), Some(1.0));
+    }
+
+    #[test]
+    fn errors_on_malformed() {
+        assert!(PText::parse("a {").is_err());
+        assert!(PText::parse("}").is_err());
+        assert!(PText::parse("a: ").is_err());
+        assert!(PText::parse("\"floating\"").is_err());
+    }
+}

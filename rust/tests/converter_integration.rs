@@ -1,0 +1,146 @@
+//! Integration: the full Figure 2 fabric on a *deep* zoo model
+//! (SE-ResNeXt exercises grouped conv, SE gates, residuals) — every
+//! format must reproduce the source network's inference bit-for-bit
+//! (within f32 tolerance).
+
+use std::collections::HashMap;
+
+use nnl::converters::{frozen, nnb, onnx_lite, query};
+use nnl::models::{build_model, Gb};
+use nnl::nnp::{interpreter, Nnp};
+use nnl::parametric as PF;
+use nnl::tensor::{NdArray, Rng};
+
+fn export_model(name: &str, dims: &[usize]) -> (nnl::nnp::NetworkDef, Vec<(String, NdArray)>) {
+    PF::clear_parameters();
+    PF::seed_parameter_rng(17);
+    let mut g = Gb::new(name, false);
+    let x = g.input("x", dims);
+    let logits = build_model(&mut g, name, &x, 10);
+    let def = g.finish(&[&logits]);
+    let params: Vec<(String, NdArray)> =
+        PF::get_parameters().into_iter().map(|(n, v)| (n, v.data())).collect();
+    (def, params)
+}
+
+fn reference_output(
+    def: &nnl::nnp::NetworkDef,
+    params: &[(String, NdArray)],
+    input: &NdArray,
+) -> NdArray {
+    let pm: HashMap<String, NdArray> = params.iter().cloned().collect();
+    let mut inputs = HashMap::new();
+    inputs.insert("x".to_string(), input.clone());
+    interpreter::run(def, &inputs, &pm).unwrap().remove(0)
+}
+
+#[test]
+fn se_resnext_roundtrips_through_every_format() {
+    let dims = [2usize, 3, 16, 16];
+    let (def, params) = export_model("se_resnext50", &dims);
+    let mut rng = Rng::new(3);
+    let input = rng.randn(&dims, 1.0);
+    let reference = reference_output(&def, &params, &input);
+    let pm: HashMap<String, NdArray> = params.iter().cloned().collect();
+    let mut inputs = HashMap::new();
+    inputs.insert("x".to_string(), input.clone());
+
+    // NNP save/load
+    let dir = std::env::temp_dir().join(format!("nnl_convint_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let nnp = Nnp::from_network(def.clone(), params.clone());
+    let path = dir.join("m.nnp");
+    nnp.save(&path).unwrap();
+    let loaded = Nnp::load(&path).unwrap();
+    let via_nnp = loaded.execute("se_resnext50_executor", &inputs).unwrap().remove(0);
+    assert!(reference.allclose(&via_nnp, 1e-4, 1e-4), "NNP roundtrip diverged");
+
+    // ONNX roundtrip
+    let onnx = onnx_lite::to_onnx(&def, &pm).unwrap();
+    let bytes = onnx_lite::save_bytes(&onnx);
+    let onnx2 = onnx_lite::load_bytes(&bytes).unwrap();
+    let (net2, params2) = onnx_lite::from_onnx(&onnx2).unwrap();
+    let pm2: HashMap<String, NdArray> = params2.into_iter().collect();
+    let via_onnx = interpreter::run(&net2, &inputs, &pm2).unwrap().remove(0);
+    assert!(reference.allclose(&via_onnx, 1e-4, 1e-4), "ONNX roundtrip diverged");
+
+    // NNB execution
+    let nnb_bytes = nnb::to_nnb(&def, &params);
+    let via_nnb = nnb::run_nnb(&nnb_bytes, &inputs).unwrap().remove(0);
+    assert!(reference.allclose(&via_nnb, 1e-4, 1e-4), "NNB diverged");
+
+    // frozen graph
+    let fg = frozen::freeze(&def, &pm).unwrap();
+    let fg2 = frozen::load_bytes(&frozen::save_bytes(&fg)).unwrap();
+    let via_frozen = frozen::run(&fg2, &inputs).unwrap().remove(0);
+    assert!(reference.allclose(&via_frozen, 1e-4, 1e-4), "frozen diverged");
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn query_predicts_onnx_conversion_outcome() {
+    // mobilenet uses Swish -> query must flag it and conversion must
+    // fail with the same function name; resnet18 (ReLU only) passes
+    let (mb_def, mb_params) = export_model("mobilenet_v3_small", &[1, 3, 16, 16]);
+    let gaps = query::query_unsupported(&mb_def, query::Target::OnnxLite);
+    assert_eq!(gaps, vec!["Swish"]);
+    let pm: HashMap<String, NdArray> = mb_params.iter().cloned().collect();
+    let err = onnx_lite::to_onnx(&mb_def, &pm).unwrap_err();
+    assert!(err.to_string().contains("Swish"));
+
+    let (rn_def, rn_params) = export_model("resnet18", &[1, 3, 16, 16]);
+    assert!(query::query_unsupported(&rn_def, query::Target::OnnxLite).is_empty());
+    let pm: HashMap<String, NdArray> = rn_params.iter().cloned().collect();
+    assert!(onnx_lite::to_onnx(&rn_def, &pm).is_ok());
+}
+
+#[test]
+fn nnp_halves_on_disk_with_bf16_params() {
+    let (def, params) = export_model("resnet18", &[1, 3, 16, 16]);
+    let dir = std::env::temp_dir().join(format!("nnl_half_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+
+    let f32_path = dir.join("f32.nnp");
+    Nnp::from_network(def.clone(), params.clone()).save(&f32_path).unwrap();
+
+    let half_params: Vec<(String, NdArray)> = params
+        .iter()
+        .map(|(n, a)| (n.clone(), a.cast(nnl::tensor::DType::BF16)))
+        .collect();
+    let half_path = dir.join("half.nnp");
+    Nnp::from_network(def, half_params).save(&half_path).unwrap();
+
+    let f32_size = std::fs::metadata(&f32_path).unwrap().len();
+    let half_size = std::fs::metadata(&half_path).unwrap().len();
+    // paper §3.3: "nearly halves the memory usage"
+    assert!(
+        (half_size as f64) < f32_size as f64 * 0.62,
+        "half checkpoint not ~half size: {half_size} vs {f32_size}"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn all_zoo_models_convert_to_nnb_and_execute() {
+    for name in ["mlp", "lenet", "resnet18", "mobilenet_v3_small", "efficientnet_b0"] {
+        let dims: Vec<usize> = match name {
+            "mlp" => vec![2, 64],
+            "lenet" => vec![2, 1, 28, 28],
+            _ => vec![2, 3, 16, 16],
+        };
+        let (def, params) = export_model(name, &dims);
+        let mut rng = Rng::new(1);
+        let input = rng.randn(&dims, 1.0);
+        let reference = reference_output(&def, &params, &input);
+        let nnb_bytes = nnb::to_nnb(&def, &params);
+        let mut inputs = HashMap::new();
+        inputs.insert("x".to_string(), input);
+        let out = nnb::run_nnb(&nnb_bytes, &inputs).unwrap().remove(0);
+        assert!(
+            reference.allclose(&out, 1e-4, 1e-4),
+            "{name}: NNB disagrees (max diff {})",
+            reference.max_abs_diff(&out)
+        );
+    }
+}
