@@ -147,14 +147,45 @@ pub fn to_onnx(
                 ("LayerNormalization", vec![("epsilon".into(), OnnxAttr::Float(*eps))])
             }
             Op::Add2 => ("Add", vec![]),
+            Op::Sub2 => ("Sub", vec![]),
             Op::Mul2 => ("Mul", vec![]),
+            Op::Div2 => ("Div", vec![]),
+            Op::Neg => ("Neg", vec![]),
+            Op::Exp => ("Exp", vec![]),
+            Op::Log => ("Log", vec![]),
             Op::Concat { axis } => ("Concat", vec![("axis".into(), OnnxAttr::Int(*axis as i64))]),
             Op::Reshape { dims } => {
                 ("Reshape", vec![("shape".into(), OnnxAttr::Ints(dims.clone()))])
             }
+            Op::Transpose { axes } => (
+                "Transpose",
+                vec![(
+                    "perm".into(),
+                    OnnxAttr::Ints(axes.iter().map(|&a| a as i64).collect()),
+                )],
+            ),
+            Op::Slice { axis, start, stop } => (
+                "Slice",
+                vec![
+                    ("starts".into(), OnnxAttr::Ints(vec![*start as i64])),
+                    ("ends".into(), OnnxAttr::Ints(vec![*stop as i64])),
+                    ("axes".into(), OnnxAttr::Ints(vec![*axis as i64])),
+                ],
+            ),
+            Op::Deconvolution { stride, pad } => (
+                "ConvTranspose",
+                vec![
+                    ("strides".into(), pair_ints(*stride)),
+                    ("pads".into(), pads_attr(*pad)),
+                ],
+            ),
             Op::Dropout { p } => ("Dropout", vec![("ratio".into(), OnnxAttr::Float(*p))]),
             Op::Embed => ("Gather", vec![("axis".into(), OnnxAttr::Int(0))]),
             Op::Identity => ("Identity", vec![]),
+            // live-graph-only ops (losses, reductions, scalar arithmetic,
+            // stop-gradient, broadcast) have no standard ONNX mapping —
+            // exactly the gap class `converters::query` predicts
+            other => return Err(UnsupportedFunction(other.name().to_string())),
         };
         nodes.push(OnnxNode {
             op_type: op_type.to_string(),
@@ -219,7 +250,44 @@ pub fn from_onnx(
             "BatchNormalization" => Op::BatchNorm { eps: n.attr_f("epsilon").unwrap_or(1e-5) },
             "LayerNormalization" => Op::LayerNorm { eps: n.attr_f("epsilon").unwrap_or(1e-5) },
             "Add" => Op::Add2,
+            "Sub" => Op::Sub2,
             "Mul" => Op::Mul2,
+            "Div" => Op::Div2,
+            "Neg" => Op::Neg,
+            "Exp" => Op::Exp,
+            "Log" => Op::Log,
+            "Transpose" => {
+                // ONNX's missing-perm default (reverse all dims) needs
+                // the input rank, which the node alone doesn't carry —
+                // reject rather than guess (our exporter always writes
+                // `perm`).
+                let perm = n
+                    .attr_ints("perm")
+                    .ok_or_else(|| UnsupportedFunction("Transpose without perm".into()))?;
+                Op::Transpose { axes: perm.iter().map(|&a| a as usize).collect() }
+            }
+            "Slice" => {
+                let starts = n.attr_ints("starts").unwrap_or_default();
+                let ends = n.attr_ints("ends").unwrap_or_default();
+                let axes = n.attr_ints("axes").unwrap_or_default();
+                if starts.len() != 1 || ends.len() != 1 || axes.len() != 1 {
+                    return Err(UnsupportedFunction("Slice (multi-axis)".into()));
+                }
+                // ONNX's negative ("from the end") indices would wrap
+                // on an `as usize` cast — reject rather than corrupt
+                if starts[0] < 0 || ends[0] < 0 || axes[0] < 0 {
+                    return Err(UnsupportedFunction("Slice (negative indices)".into()));
+                }
+                Op::Slice {
+                    axis: axes[0] as usize,
+                    start: starts[0] as usize,
+                    stop: ends[0] as usize,
+                }
+            }
+            "ConvTranspose" => Op::Deconvolution {
+                stride: pair(n.attr_ints("strides"), (1, 1)),
+                pad: pads(n.attr_ints("pads")),
+            },
             "Concat" => Op::Concat {
                 axis: match n.attr("axis") {
                     Some(OnnxAttr::Int(a)) => *a as usize,

@@ -47,12 +47,37 @@ impl Target {
 /// Is `function` (canonical op name) supported by `target`?
 pub fn supports(target: Target, function: &str) -> bool {
     match target {
-        // everything the IR can express runs in NNP / NNB / frozen /
-        // generated source (they share the interpreter semantics)
-        Target::Nnp | Target::Nnb | Target::Frozen | Target::RsSource => true,
+        // everything the IR can express runs in NNP / NNB / frozen
+        // (they share the interpreter semantics)
+        Target::Nnp | Target::Nnb | Target::Frozen => true,
+        // the source generator is dense-path only; keep in sync with
+        // `rs_source::supported` (pinned by a test below)
+        Target::RsSource => matches!(
+            function,
+            "Affine" | "ReLU" | "LeakyReLU" | "Sigmoid" | "Tanh" | "Softmax" | "Identity"
+                | "Dropout"
+        ),
         // ONNX has no standard Swish op (NNabla's real converter hits
-        // the same class of gaps — that is what the query tool is for)
-        Target::OnnxLite => !matches!(function, "Swish"),
+        // the same class of gaps — that is what the query tool is for);
+        // the live-graph-only registry ops (losses, reductions, scalar
+        // arithmetic, stop-gradient, broadcast) are likewise unmapped.
+        // Keep this list in sync with `onnx_lite::to_onnx`.
+        Target::OnnxLite => !matches!(
+            function,
+            "Swish"
+                | "StopGradient"
+                | "AddScalar"
+                | "MulScalar"
+                | "PowScalar"
+                | "SquaredError"
+                | "SigmoidCrossEntropy"
+                | "SoftmaxCrossEntropy"
+                | "SumAll"
+                | "MeanAll"
+                | "Sum"
+                | "Mean"
+                | "BroadcastTo"
+        ),
     }
 }
 
@@ -117,7 +142,8 @@ mod tests {
         let net = swish_net();
         assert_eq!(query_unsupported(&net, Target::OnnxLite), vec!["Swish"]);
         assert!(query_unsupported(&net, Target::Nnb).is_empty());
-        assert!(query_unsupported(&net, Target::RsSource).is_empty());
+        // the dense-only source generator has no Swish either
+        assert_eq!(query_unsupported(&net, Target::RsSource), vec!["Swish"]);
     }
 
     #[test]
@@ -126,6 +152,42 @@ mod tests {
         assert!(r.contains("Swish"));
         assert!(r.contains("NO"));
         assert!(r.contains("ReLU"));
+    }
+
+    #[test]
+    fn onnx_support_list_matches_converter() {
+        // `supports(OnnxLite, ..)` is a hand-maintained mirror of
+        // `onnx_lite::to_onnx`'s match arms — pin them together over
+        // every registry op so they cannot drift silently.
+        use std::collections::HashMap;
+        for op in crate::nnp::ir::tests::all_ops() {
+            let net = NetworkDef {
+                name: "probe".into(),
+                inputs: vec![TensorDef { name: "x".into(), dims: vec![1, 4] }],
+                outputs: vec!["y".into()],
+                layers: vec![Layer {
+                    name: "l".into(),
+                    op: op.clone(),
+                    inputs: vec!["x".into()],
+                    params: vec![],
+                    outputs: vec!["y".into()],
+                }],
+            };
+            let convertible =
+                crate::converters::onnx_lite::to_onnx(&net, &HashMap::new()).is_ok();
+            assert_eq!(
+                supports(Target::OnnxLite, op.name()),
+                convertible,
+                "query/supports and onnx_lite::to_onnx disagree on '{}'",
+                op.name()
+            );
+            assert_eq!(
+                supports(Target::RsSource, op.name()),
+                crate::converters::rs_source::supported(&op),
+                "query/supports and rs_source::supported disagree on '{}'",
+                op.name()
+            );
+        }
     }
 
     #[test]

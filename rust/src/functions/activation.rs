@@ -1,12 +1,13 @@
 //! Activation functions (each `F.<name>` in the paper's listings).
 
 use crate::graph::Variable;
+use crate::nnp::ir::Op;
 use crate::tensor::ops;
 
 /// Rectified linear unit.
 pub fn relu(x: &Variable) -> Variable {
     Variable::from_function(
-        "relu",
+        Op::ReLU,
         &[x],
         Box::new(|xs| ops::map(&xs[0], |v| v.max(0.0))),
         Box::new(|xs, _y, g| {
@@ -18,7 +19,7 @@ pub fn relu(x: &Variable) -> Variable {
 /// Leaky ReLU with slope `alpha` for x < 0.
 pub fn leaky_relu(x: &Variable, alpha: f32) -> Variable {
     Variable::from_function(
-        "leaky_relu",
+        Op::LeakyReLU { alpha },
         &[x],
         Box::new(move |xs| ops::map(&xs[0], |v| if v > 0.0 { v } else { alpha * v })),
         Box::new(move |xs, _y, g| {
@@ -36,7 +37,7 @@ pub fn leaky_relu(x: &Variable, alpha: f32) -> Variable {
 /// Logistic sigmoid.
 pub fn sigmoid(x: &Variable) -> Variable {
     Variable::from_function(
-        "sigmoid",
+        Op::Sigmoid,
         &[x],
         Box::new(|xs| ops::map(&xs[0], |v| 1.0 / (1.0 + (-v).exp()))),
         Box::new(|_xs, y, g| {
@@ -48,7 +49,7 @@ pub fn sigmoid(x: &Variable) -> Variable {
 /// Hyperbolic tangent.
 pub fn tanh(x: &Variable) -> Variable {
     Variable::from_function(
-        "tanh",
+        Op::Tanh,
         &[x],
         Box::new(|xs| ops::map(&xs[0], f32::tanh)),
         Box::new(|_xs, y, g| vec![Some(ops::zip_broadcast(g, y, |gv, yv| gv * (1.0 - yv * yv)))]),
@@ -58,7 +59,7 @@ pub fn tanh(x: &Variable) -> Variable {
 /// Exponential linear unit.
 pub fn elu(x: &Variable, alpha: f32) -> Variable {
     Variable::from_function(
-        "elu",
+        Op::Elu { alpha },
         &[x],
         Box::new(move |xs| ops::map(&xs[0], |v| if v > 0.0 { v } else { alpha * (v.exp() - 1.0) })),
         Box::new(move |xs, _y, g| {
@@ -76,7 +77,7 @@ pub fn elu(x: &Variable, alpha: f32) -> Variable {
 /// Swish / SiLU: `x * sigmoid(x)` (used by MobileNetV3 / EfficientNet).
 pub fn swish(x: &Variable) -> Variable {
     Variable::from_function(
-        "swish",
+        Op::Swish,
         &[x],
         Box::new(|xs| ops::map(&xs[0], |v| v / (1.0 + (-v).exp()))),
         Box::new(|xs, _y, g| {
@@ -92,7 +93,7 @@ pub fn swish(x: &Variable) -> Variable {
 pub fn gelu(x: &Variable) -> Variable {
     const C: f32 = 0.797_884_6; // sqrt(2/pi)
     Variable::from_function(
-        "gelu",
+        Op::Gelu,
         &[x],
         Box::new(|xs| {
             ops::map(&xs[0], |v| 0.5 * v * (1.0 + (C * (v + 0.044715 * v * v * v)).tanh()))
@@ -111,7 +112,7 @@ pub fn gelu(x: &Variable) -> Variable {
 /// Softplus: `ln(1 + e^x)`.
 pub fn softplus(x: &Variable) -> Variable {
     Variable::from_function(
-        "softplus",
+        Op::Softplus,
         &[x],
         Box::new(|xs| ops::map(&xs[0], |v| if v > 20.0 { v } else { (1.0 + v.exp()).ln() })),
         Box::new(|xs, _y, g| {

@@ -4,6 +4,7 @@
 //! exactly what the L1 Pallas kernel implements on the static path.
 
 use crate::graph::Variable;
+use crate::nnp::ir::Op;
 use crate::tensor::{ops, NdArray};
 
 /// `x: [B, ...] -> [B, out]` with `w: [in, out]`, optional `b: [out]`.
@@ -17,7 +18,7 @@ pub fn affine(x: &Variable, w: &Variable, b: Option<&Variable>) -> Variable {
     };
     match b {
         Some(b) => Variable::from_function(
-            "affine",
+            Op::Affine,
             &[x, w, b],
             Box::new(move |xs| {
                 let x2 = fwd_flat(&xs[0]);
@@ -32,7 +33,7 @@ pub fn affine(x: &Variable, w: &Variable, b: Option<&Variable>) -> Variable {
             }),
         ),
         None => Variable::from_function(
-            "affine",
+            Op::Affine,
             &[x, w],
             Box::new(move |xs| ops::matmul(&fwd_flat(&xs[0]), &xs[1])),
             Box::new(move |xs, _y, g| {

@@ -4,6 +4,7 @@
 //! tests).
 
 use crate::graph::Variable;
+use crate::nnp::ir::Op;
 use crate::tensor::ops::{self, Conv2dGeom};
 use crate::tensor::NdArray;
 
@@ -83,7 +84,7 @@ pub fn convolution(
     let cache_b = cache.clone();
     match b {
         Some(b) => Variable::from_function(
-            "convolution",
+            Op::Convolution { stride, pad, dilation },
             &[x, w, b],
             Box::new(move |xs| {
                 conv_forward(&xs[0], &xs[1], Some(&xs[2]), &mk_geom(&xs[1]), &cache)
@@ -95,7 +96,7 @@ pub fn convolution(
             }),
         ),
         None => Variable::from_function(
-            "convolution",
+            Op::Convolution { stride, pad, dilation },
             &[x, w],
             Box::new(move |xs| conv_forward(&xs[0], &xs[1], None, &mk_geom(&xs[1]), &cache)),
             Box::new(move |xs, _y, gy| {
@@ -159,7 +160,7 @@ pub fn deconvolution(
     };
     match b {
         Some(b) => Variable::from_function(
-            "deconvolution",
+            Op::Deconvolution { stride, pad },
             &[x, w, b],
             Box::new(move |xs| fwd(&xs[0], &xs[1], Some(&xs[2]))),
             Box::new(move |xs, _y, gy| {
@@ -168,7 +169,7 @@ pub fn deconvolution(
             }),
         ),
         None => Variable::from_function(
-            "deconvolution",
+            Op::Deconvolution { stride, pad },
             &[x, w],
             Box::new(move |xs| fwd(&xs[0], &xs[1], None)),
             Box::new(move |xs, _y, gy| {

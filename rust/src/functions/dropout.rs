@@ -9,6 +9,7 @@ use std::cell::RefCell;
 use std::rc::Rc;
 
 use crate::graph::Variable;
+use crate::nnp::ir::Op;
 use crate::tensor::{ops, NdArray, Rng};
 
 thread_local! {
@@ -28,7 +29,7 @@ pub fn dropout(x: &Variable, p: f32) -> Variable {
     let mask_fwd = mask.clone();
     let keep = 1.0 - p;
     Variable::from_function(
-        "dropout",
+        Op::Dropout { p },
         &[x],
         Box::new(move |xs| {
             let m = DROPOUT_RNG.with(|r| {
@@ -52,9 +53,40 @@ pub fn dropout(x: &Variable, p: f32) -> Variable {
     )
 }
 
+/// Inference-mode dropout: identity on the data path, but still
+/// recorded on the tape as [`Op::Dropout`] — so a traced graph keeps
+/// the layer (NNP re-training, frozen-graph folding) while eval-mode
+/// execution is exactly a no-op. This is what [`Op::apply`] dispatches
+/// to: deployment semantics, bit-identical between the live graph and
+/// the interpreter.
+///
+/// Unlike [`dropout`], `p` is *not* validated here: this constructor
+/// sits on the interpreter's deserialization path (`Op::apply` on a
+/// loaded NNP/ONNX/NNB layer), which must report malformed attributes
+/// as `Err`, never panic — and since the op is an identity at
+/// inference, any recorded `p` executes safely.
+pub fn dropout_inference(x: &Variable, p: f32) -> Variable {
+    Variable::from_function(
+        Op::Dropout { p },
+        &[x],
+        Box::new(|xs| xs[0].clone()),
+        Box::new(|_xs, _y, g| vec![Some(g.clone())]),
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn dropout_inference_is_identity_but_recorded() {
+        let x = Variable::from_array(NdArray::arange(&[6]), true);
+        let y = dropout_inference(&x, 0.7);
+        assert_eq!(y.data().data(), x.data().data());
+        assert_eq!(y.creator_op(), Some(Op::Dropout { p: 0.7 }));
+        crate::functions::sum_all(&y).backward();
+        assert_eq!(x.grad().data(), &[1.0f32; 6]);
+    }
 
     #[test]
     fn dropout_zero_p_is_identity() {

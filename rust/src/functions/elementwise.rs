@@ -1,12 +1,13 @@
 //! Broadcasted elementwise arithmetic on Variables.
 
 use crate::graph::Variable;
+use crate::nnp::ir::Op;
 use crate::tensor::{ops, NdArray};
 
 /// `a + b` with NumPy broadcasting.
 pub fn add(a: &Variable, b: &Variable) -> Variable {
     Variable::from_function(
-        "add",
+        Op::Add2,
         &[a, b],
         Box::new(|xs| ops::add(&xs[0], &xs[1])),
         Box::new(|xs, _y, g| {
@@ -21,7 +22,7 @@ pub fn add(a: &Variable, b: &Variable) -> Variable {
 /// `a - b`.
 pub fn sub(a: &Variable, b: &Variable) -> Variable {
     Variable::from_function(
-        "sub",
+        Op::Sub2,
         &[a, b],
         Box::new(|xs| ops::sub(&xs[0], &xs[1])),
         Box::new(|xs, _y, g| {
@@ -36,7 +37,7 @@ pub fn sub(a: &Variable, b: &Variable) -> Variable {
 /// `a * b`.
 pub fn mul(a: &Variable, b: &Variable) -> Variable {
     Variable::from_function(
-        "mul",
+        Op::Mul2,
         &[a, b],
         Box::new(|xs| ops::mul(&xs[0], &xs[1])),
         Box::new(|xs, _y, g| {
@@ -51,7 +52,7 @@ pub fn mul(a: &Variable, b: &Variable) -> Variable {
 /// `a / b`.
 pub fn div(a: &Variable, b: &Variable) -> Variable {
     Variable::from_function(
-        "div",
+        Op::Div2,
         &[a, b],
         Box::new(|xs| ops::div(&xs[0], &xs[1])),
         Box::new(|xs, _y, g| {
@@ -69,7 +70,7 @@ pub fn div(a: &Variable, b: &Variable) -> Variable {
 /// `-a`.
 pub fn neg(a: &Variable) -> Variable {
     Variable::from_function(
-        "neg",
+        Op::Neg,
         &[a],
         Box::new(|xs| ops::scale(&xs[0], -1.0)),
         Box::new(|_xs, _y, g| vec![Some(ops::scale(g, -1.0))]),
@@ -79,7 +80,7 @@ pub fn neg(a: &Variable) -> Variable {
 /// `a + s` (scalar).
 pub fn add_scalar(a: &Variable, s: f32) -> Variable {
     Variable::from_function(
-        "add_scalar",
+        Op::AddScalar { val: s },
         &[a],
         Box::new(move |xs| ops::map(&xs[0], |v| v + s)),
         Box::new(|_xs, _y, g| vec![Some(g.clone())]),
@@ -89,7 +90,7 @@ pub fn add_scalar(a: &Variable, s: f32) -> Variable {
 /// `a * s` (scalar).
 pub fn mul_scalar(a: &Variable, s: f32) -> Variable {
     Variable::from_function(
-        "mul_scalar",
+        Op::MulScalar { val: s },
         &[a],
         Box::new(move |xs| ops::scale(&xs[0], s)),
         Box::new(move |_xs, _y, g| vec![Some(ops::scale(g, s))]),
@@ -99,7 +100,7 @@ pub fn mul_scalar(a: &Variable, s: f32) -> Variable {
 /// `a ^ p` (elementwise, scalar exponent).
 pub fn pow_scalar(a: &Variable, p: f32) -> Variable {
     Variable::from_function(
-        "pow_scalar",
+        Op::PowScalar { val: p },
         &[a],
         Box::new(move |xs| ops::map(&xs[0], |v| v.powf(p))),
         Box::new(move |xs, _y, g| {
@@ -111,7 +112,7 @@ pub fn pow_scalar(a: &Variable, p: f32) -> Variable {
 /// `exp(a)`.
 pub fn exp(a: &Variable) -> Variable {
     Variable::from_function(
-        "exp",
+        Op::Exp,
         &[a],
         Box::new(|xs| ops::map(&xs[0], f32::exp)),
         Box::new(|_xs, y, g| vec![Some(ops::mul(g, y))]),
@@ -121,7 +122,7 @@ pub fn exp(a: &Variable) -> Variable {
 /// `ln(a)`.
 pub fn log(a: &Variable) -> Variable {
     Variable::from_function(
-        "log",
+        Op::Log,
         &[a],
         Box::new(|xs| ops::map(&xs[0], f32::ln)),
         Box::new(|xs, _y, g| vec![Some(ops::div(g, &xs[0]))]),
@@ -131,7 +132,7 @@ pub fn log(a: &Variable) -> Variable {
 /// Stop-gradient identity (useful for baselines / frozen branches).
 pub fn stop_gradient(a: &Variable) -> Variable {
     Variable::from_function(
-        "stop_gradient",
+        Op::StopGradient,
         &[a],
         Box::new(|xs| xs[0].clone()),
         Box::new(|xs, _y, _g| vec![None::<NdArray>; xs.len()]),

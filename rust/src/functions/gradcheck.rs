@@ -69,7 +69,7 @@ mod tests {
         // f = sum(x*x); df/dx = 2x
         let build = || {
             Variable::from_function(
-                "sumsq",
+                crate::nnp::ir::Op::Identity,
                 &[&x],
                 Box::new(|xs| NdArray::scalar(xs[0].data().iter().map(|v| v * v).sum())),
                 Box::new(|xs, _y, g| vec![Some(ops::scale(&xs[0], 2.0 * g.item()))]),
@@ -85,7 +85,7 @@ mod tests {
         let x = rand_leaf(&mut rng, &[3]);
         let build = || {
             Variable::from_function(
-                "bad",
+                crate::nnp::ir::Op::Identity,
                 &[&x],
                 Box::new(|xs| NdArray::scalar(xs[0].data().iter().map(|v| v * v).sum())),
                 Box::new(|xs, _y, g| vec![Some(ops::scale(&xs[0], 3.0 * g.item()))]), // wrong: 3x

@@ -3,6 +3,7 @@
 //! scalar training loss.
 
 use crate::graph::Variable;
+use crate::nnp::ir::Op;
 use crate::tensor::{ops, NdArray};
 
 use super::softmax::softmax_fwd;
@@ -11,7 +12,7 @@ use super::softmax::softmax_fwd;
 /// `t: [B, 1]` (label indices stored as f32). Output `[B, 1]`.
 pub fn softmax_cross_entropy(x: &Variable, t: &Variable) -> Variable {
     Variable::from_function(
-        "softmax_cross_entropy",
+        Op::SoftmaxCrossEntropy,
         &[x, t],
         Box::new(|xs| {
             let (x, t) = (&xs[0], &xs[1]);
@@ -48,7 +49,7 @@ pub fn softmax_cross_entropy(x: &Variable, t: &Variable) -> Variable {
 /// Elementwise squared error `(x - t)^2` (no reduction).
 pub fn squared_error(x: &Variable, t: &Variable) -> Variable {
     Variable::from_function(
-        "squared_error",
+        Op::SquaredError,
         &[x, t],
         Box::new(|xs| ops::zip_broadcast(&xs[0], &xs[1], |a, b| (a - b) * (a - b))),
         Box::new(|xs, _y, g| {
@@ -66,7 +67,7 @@ pub fn squared_error(x: &Variable, t: &Variable) -> Variable {
 /// `max(x,0) - x*t + log(1+exp(-|x|))`).
 pub fn sigmoid_cross_entropy(x: &Variable, t: &Variable) -> Variable {
     Variable::from_function(
-        "sigmoid_cross_entropy",
+        Op::SigmoidCrossEntropy,
         &[x, t],
         Box::new(|xs| {
             ops::zip_broadcast(&xs[0], &xs[1], |x, t| {

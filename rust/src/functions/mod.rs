@@ -1,7 +1,9 @@
 //! `F::*` — the paper's second building block: "mathematical operations
 //! that can be applied to variables" (§2.1). Every function records a
-//! node on the tape (forward + backward closures), so graphs built from
-//! these run in both dynamic (define-by-run) and static-reuse modes.
+//! node on the tape (forward + backward closures) *tagged with its
+//! [`crate::nnp::Op`] descriptor*, so graphs built from these run in
+//! both dynamic (define-by-run) and static-reuse modes — and can be
+//! exported directly with `nnp::trace` (no builder required).
 //!
 //! Conventions (matching NNabla):
 //! - image tensors are NCHW;
@@ -24,13 +26,15 @@ pub mod tensor_ops;
 pub use activation::{elu, gelu, leaky_relu, relu, sigmoid, softplus, swish, tanh};
 pub use affine::affine;
 pub use convolution::{convolution, deconvolution};
-pub use dropout::dropout;
+pub use dropout::{dropout, dropout_inference};
 pub use elementwise::{
-    add, add_scalar, div, exp, log, mul, mul_scalar, neg, pow_scalar, sub,
+    add, add_scalar, div, exp, log, mul, mul_scalar, neg, pow_scalar, stop_gradient, sub,
 };
 pub use loss::{sigmoid_cross_entropy, softmax_cross_entropy, squared_error};
 pub use normalization::{batch_normalization, layer_normalization};
 pub use pooling::{average_pooling, global_average_pooling, max_pooling};
 pub use reduction::{mean_all, mean_axis, sum_all, sum_axis};
 pub use softmax::{log_softmax, softmax};
-pub use tensor_ops::{broadcast_to, concat, embed, reshape, slice_axis, transpose};
+pub use tensor_ops::{
+    broadcast_to, concat, embed, identity, reshape, reshape_spec, slice_axis, transpose,
+};

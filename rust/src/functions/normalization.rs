@@ -7,6 +7,7 @@
 //! parameters is what the half config quantizes.
 
 use crate::graph::Variable;
+use crate::nnp::ir::Op;
 use crate::tensor::{ops, NdArray};
 
 /// View `[N, C, ...]` as (n, c, s) with s = product of trailing dims.
@@ -85,7 +86,7 @@ pub fn batch_normalization(
         let rm = mean.clone();
         let rv = var.clone();
         Variable::from_function(
-            "batch_normalization",
+            Op::BatchNorm { eps },
             &[x, beta, gamma, mean, var],
             Box::new(move |xs| {
                 let (bm, bv) = channel_stats(&xs[0]);
@@ -152,7 +153,7 @@ pub fn batch_normalization(
     } else {
         // inference: use running stats, no side effects
         Variable::from_function(
-            "batch_normalization",
+            Op::BatchNorm { eps },
             &[x, beta, gamma, mean, var],
             Box::new(move |xs| {
                 bn_apply(&xs[0], xs[3].data(), xs[4].data(), &xs[2], &xs[1], eps)
@@ -194,7 +195,7 @@ pub fn batch_normalization(
 /// of shape `[D]` (used by the TransformerLM).
 pub fn layer_normalization(x: &Variable, beta: &Variable, gamma: &Variable, eps: f32) -> Variable {
     Variable::from_function(
-        "layer_normalization",
+        Op::LayerNorm { eps },
         &[x, beta, gamma],
         Box::new(move |xs| {
             let x = &xs[0];

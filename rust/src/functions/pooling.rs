@@ -1,6 +1,7 @@
 //! Spatial pooling: max / average / global-average (NCHW).
 
 use crate::graph::Variable;
+use crate::nnp::ir::Op;
 use crate::tensor::NdArray;
 
 fn pool_out_hw(h: usize, w: usize, k: (usize, usize), s: (usize, usize), p: (usize, usize)) -> (usize, usize) {
@@ -56,7 +57,7 @@ pub fn max_pooling(
     pad: (usize, usize),
 ) -> Variable {
     Variable::from_function(
-        "max_pooling",
+        Op::MaxPool { kernel, stride, pad },
         &[x],
         Box::new(move |xs| max_pool_fwd(&xs[0], kernel, stride, pad).0),
         Box::new(move |xs, _y, gy| {
@@ -113,7 +114,7 @@ pub fn average_pooling(
         NdArray::from_vec(&[n, c, oh, ow], out)
     };
     Variable::from_function(
-        "average_pooling",
+        Op::AvgPool { kernel, stride, pad, including_pad },
         &[x],
         Box::new(move |xs| fwd(&xs[0])),
         Box::new(move |xs, _y, gy| {
@@ -162,7 +163,7 @@ pub fn average_pooling(
 /// Global average pooling: `[N, C, H, W] -> [N, C]`.
 pub fn global_average_pooling(x: &Variable) -> Variable {
     Variable::from_function(
-        "global_average_pooling",
+        Op::GlobalAvgPool,
         &[x],
         Box::new(|xs| {
             let (n, c, h, w) =

@@ -1,12 +1,13 @@
 //! Reductions over Variables.
 
 use crate::graph::Variable;
+use crate::nnp::ir::Op;
 use crate::tensor::{ops, NdArray};
 
 /// Sum of all elements -> scalar.
 pub fn sum_all(x: &Variable) -> Variable {
     Variable::from_function(
-        "sum_all",
+        Op::SumAll,
         &[x],
         Box::new(|xs| NdArray::scalar(xs[0].sum_all())),
         Box::new(|xs, _y, g| vec![Some(NdArray::full(xs[0].dims(), g.item()))]),
@@ -16,7 +17,7 @@ pub fn sum_all(x: &Variable) -> Variable {
 /// Mean of all elements -> scalar.
 pub fn mean_all(x: &Variable) -> Variable {
     Variable::from_function(
-        "mean_all",
+        Op::MeanAll,
         &[x],
         Box::new(|xs| NdArray::scalar(xs[0].mean_all())),
         Box::new(|xs, _y, g| {
@@ -29,7 +30,7 @@ pub fn mean_all(x: &Variable) -> Variable {
 /// Sum along one axis.
 pub fn sum_axis(x: &Variable, axis: usize, keepdims: bool) -> Variable {
     Variable::from_function(
-        "sum_axis",
+        Op::Sum { axis, keepdims },
         &[x],
         Box::new(move |xs| ops::sum_axis(&xs[0], axis, keepdims)),
         Box::new(move |xs, _y, g| {
@@ -45,7 +46,7 @@ pub fn sum_axis(x: &Variable, axis: usize, keepdims: bool) -> Variable {
 /// Mean along one axis.
 pub fn mean_axis(x: &Variable, axis: usize, keepdims: bool) -> Variable {
     Variable::from_function(
-        "mean_axis",
+        Op::Mean { axis, keepdims },
         &[x],
         Box::new(move |xs| ops::mean_axis(&xs[0], axis, keepdims)),
         Box::new(move |xs, _y, g| {

@@ -1,6 +1,7 @@
 //! Softmax / log-softmax over the last axis (numerically stabilized).
 
 use crate::graph::Variable;
+use crate::nnp::ir::Op;
 use crate::tensor::{ops, NdArray};
 
 pub(crate) fn softmax_fwd(x: &NdArray) -> NdArray {
@@ -15,7 +16,7 @@ pub(crate) fn softmax_fwd(x: &NdArray) -> NdArray {
 /// Softmax over the last axis.
 pub fn softmax(x: &Variable) -> Variable {
     Variable::from_function(
-        "softmax",
+        Op::Softmax,
         &[x],
         Box::new(|xs| softmax_fwd(&xs[0])),
         Box::new(|_xs, y, g| {
@@ -31,7 +32,7 @@ pub fn softmax(x: &Variable) -> Variable {
 /// Log-softmax over the last axis.
 pub fn log_softmax(x: &Variable) -> Variable {
     Variable::from_function(
-        "log_softmax",
+        Op::LogSoftmax,
         &[x],
         Box::new(|xs| {
             let last = xs[0].rank() - 1;

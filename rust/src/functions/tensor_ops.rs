@@ -1,21 +1,51 @@
 //! Shape-manipulation functions + embedding lookup.
 
 use crate::graph::Variable;
+use crate::nnp::ir::Op;
 use crate::tensor::{ops, NdArray, Shape};
 
-/// Reshape (`usize::MAX` dim = infer).
+/// Reshape to fixed dims (`usize::MAX` dim = infer). Recorded on the
+/// tape as a [`Op::Reshape`] spec (`usize::MAX` → `-1`) so traced
+/// graphs keep the inference dimension symbolic.
 pub fn reshape(x: &Variable, dims: &[usize]) -> Variable {
-    let dims = dims.to_vec();
+    let spec: Vec<i64> =
+        dims.iter().map(|&d| if d == usize::MAX { -1 } else { d as i64 }).collect();
+    reshape_spec(x, &spec)
+}
+
+/// Reshape by symbolic spec: `-1` infers one dimension, `0` in the
+/// leading position keeps the input's batch axis. The spec is resolved
+/// against the input shape on *every* forward execution, so a traced
+/// graph stays batch-size flexible.
+pub fn reshape_spec(x: &Variable, spec: &[i64]) -> Variable {
+    let op = Op::Reshape { dims: spec.to_vec() };
+    let spec = spec.to_vec();
     Variable::from_function(
-        "reshape",
+        op,
         &[x],
-        Box::new(move |xs| xs[0].reshape(&dims)),
+        Box::new(move |xs| {
+            let dims: Vec<usize> = spec
+                .iter()
+                .enumerate()
+                .map(|(i, &d)| {
+                    if d == -1 {
+                        usize::MAX // NdArray::reshape infers this dim
+                    } else if d == 0 && i == 0 {
+                        xs[0].dims()[0] // keep batch
+                    } else {
+                        d as usize
+                    }
+                })
+                .collect();
+            xs[0].reshape(&dims)
+        }),
         Box::new(|xs, _y, g| vec![Some(g.reshape(xs[0].dims()))]),
     )
 }
 
 /// Transpose by axis permutation.
 pub fn transpose(x: &Variable, axes: &[usize]) -> Variable {
+    let op = Op::Transpose { axes: axes.to_vec() };
     let axes = axes.to_vec();
     // inverse permutation for backward
     let mut inv = vec![0usize; axes.len()];
@@ -23,7 +53,7 @@ pub fn transpose(x: &Variable, axes: &[usize]) -> Variable {
         inv[a] = i;
     }
     Variable::from_function(
-        "transpose",
+        op,
         &[x],
         Box::new(move |xs| xs[0].transpose(&axes)),
         Box::new(move |_xs, _y, g| vec![Some(g.transpose(&inv))]),
@@ -32,9 +62,10 @@ pub fn transpose(x: &Variable, axes: &[usize]) -> Variable {
 
 /// Broadcast to a target shape.
 pub fn broadcast_to(x: &Variable, dims: &[usize]) -> Variable {
+    let op = Op::BroadcastTo { dims: dims.to_vec() };
     let dims = dims.to_vec();
     Variable::from_function(
-        "broadcast_to",
+        op,
         &[x],
         Box::new(move |xs| xs[0].broadcast_to(&dims)),
         Box::new(|xs, _y, g| vec![Some(ops::reduce_to_shape(g, xs[0].shape()))]),
@@ -46,7 +77,7 @@ pub fn concat(parts: &[&Variable], axis: usize) -> Variable {
     assert!(!parts.is_empty());
     let sizes: Vec<usize> = parts.iter().map(|p| p.dims()[axis]).collect();
     Variable::from_function(
-        "concat",
+        Op::Concat { axis },
         parts,
         Box::new(move |xs| {
             let refs: Vec<&NdArray> = xs.iter().collect();
@@ -67,23 +98,24 @@ pub fn concat(parts: &[&Variable], axis: usize) -> Variable {
 /// Slice `[start, stop)` along `axis`.
 pub fn slice_axis(x: &Variable, axis: usize, start: usize, stop: usize) -> Variable {
     Variable::from_function(
-        "slice_axis",
+        Op::Slice { axis, start, stop },
         &[x],
         Box::new(move |xs| xs[0].slice_axis(axis, start, stop)),
         Box::new(move |xs, _y, g| {
             let mut gx = NdArray::zeros(xs[0].dims());
             // scatter g back into the slice window
-            let dims = xs[0].dims();
+            let dims = xs[0].dims().to_vec();
             let outer: usize = dims[..axis].iter().product();
             let inner: usize = dims[axis + 1..].iter().product();
             let a = dims[axis];
             let width = stop - start;
+            let gd = g.data();
+            let gxd = gx.data_mut();
             for o in 0..outer {
                 for k in 0..width {
                     let dst = (o * a + start + k) * inner;
                     let src = (o * width + k) * inner;
-                    gx.data_mut()[dst..dst + inner]
-                        .copy_from_slice(&g.data()[src..src + inner]);
+                    gxd[dst..dst + inner].copy_from_slice(&gd[src..src + inner]);
                 }
             }
             vec![Some(gx)]
@@ -95,7 +127,7 @@ pub fn slice_axis(x: &Variable, axis: usize, start: usize, stop: usize) -> Varia
 /// `table: [V, D]` -> `[B, D]`.
 pub fn embed(ids: &Variable, table: &Variable) -> Variable {
     Variable::from_function(
-        "embed",
+        Op::Embed,
         &[ids, table],
         Box::new(|xs| {
             let (ids, table) = (&xs[0], &xs[1]);
@@ -115,10 +147,12 @@ pub fn embed(ids: &Variable, table: &Variable) -> Variable {
             let b = ids.size();
             let d = table.dims()[1];
             let mut gt = NdArray::zeros(table.dims());
+            let gd = g.data();
+            let gtd = gt.data_mut();
             for i in 0..b {
                 let id = ids.data()[i] as usize;
                 for j in 0..d {
-                    gt.data_mut()[id * d + j] += g.data()[i * d + j];
+                    gtd[id * d + j] += gd[i * d + j];
                 }
             }
             vec![None, Some(gt)]
@@ -130,7 +164,7 @@ pub fn embed(ids: &Variable, table: &Variable) -> Variable {
 /// signatures.
 pub fn identity(x: &Variable) -> Variable {
     Variable::from_function(
-        "identity",
+        Op::Identity,
         &[x],
         Box::new(|xs| xs[0].clone()),
         Box::new(|_xs, _y, g| vec![Some(g.clone())]),
@@ -163,6 +197,17 @@ mod tests {
             ))
         };
         check_grads(&[&x], &build, 1e-3, 1e-2);
+    }
+
+    #[test]
+    fn reshape_records_symbolic_spec() {
+        let x = rand_leaf(&mut Rng::new(94), &[2, 3, 4]);
+        let y = reshape(&x, &[6, usize::MAX]);
+        assert_eq!(y.dims(), vec![6, 4]);
+        assert_eq!(y.creator_op(), Some(Op::Reshape { dims: vec![6, -1] }));
+        // batch-keeping spec re-resolves on forward
+        let z = reshape_spec(&x, &[0, -1]);
+        assert_eq!(z.dims(), vec![2, 12]);
     }
 
     #[test]

@@ -1,11 +1,18 @@
 //! `Variable`: the paper's first building block — "data and their
 //! gradients with multi-dimensional arrays" (§2.1) — plus the tape
 //! machinery that makes `forward()` / `backward()` work.
+//!
+//! Every function node on the tape carries a first-class
+//! [`Op`] descriptor (the same registry the NNP IR, the converters and
+//! the deployment interpreter use), so a define-by-run graph is
+//! *self-describing*: `nnp::trace` can walk the tape and emit a
+//! [`crate::nnp::NetworkDef`] with zero dual bookkeeping.
 
 use std::cell::RefCell;
 use std::collections::HashSet;
 use std::rc::Rc;
 
+use crate::nnp::ir::Op;
 use crate::tensor::{ops, NdArray};
 
 /// Forward closure of a function node: recompute output data from
@@ -18,7 +25,8 @@ pub type FwdFn = Box<dyn Fn(&[NdArray]) -> NdArray>;
 pub type BwdFn = Box<dyn Fn(&[NdArray], &NdArray, &NdArray) -> Vec<Option<NdArray>>>;
 
 struct FunctionNode {
-    name: &'static str,
+    /// The operator descriptor: typed attributes + registry identity.
+    op: Op,
     inputs: Vec<Variable>,
     fwd: FwdFn,
     bwd: BwdFn,
@@ -59,18 +67,16 @@ impl Variable {
         Self::from_array(NdArray::zeros(dims), need_grad)
     }
 
-    /// Result of a function application (framework-internal).
-    pub fn from_function(
-        name: &'static str,
-        inputs: &[&Variable],
-        fwd: FwdFn,
-        bwd: BwdFn,
-    ) -> Self {
+    /// Result of a function application (framework-internal): records a
+    /// tape node carrying the [`Op`] descriptor plus its forward /
+    /// backward closures, and runs the forward immediately
+    /// (define-by-run).
+    pub fn from_function(op: Op, inputs: &[&Variable], fwd: FwdFn, bwd: BwdFn) -> Self {
         let in_data: Vec<NdArray> = inputs.iter().map(|v| v.data()).collect();
         let out = fwd(&in_data);
         let need_grad = inputs.iter().any(|v| v.need_grad());
         let node = FunctionNode {
-            name,
+            op,
             inputs: inputs.iter().map(|&v| v.clone()).collect(),
             fwd,
             bwd,
@@ -86,7 +92,8 @@ impl Variable {
 
     // ----------------------------------------------------------- accessors
 
-    /// Copy of the data array (`x.d` read).
+    /// Copy of the data array (`x.d` read). O(1): `NdArray` storage is
+    /// copy-on-write, so this only bumps a reference count.
     pub fn data(&self) -> NdArray {
         self.0.borrow().data.clone()
     }
@@ -158,8 +165,29 @@ impl Variable {
         self.0.borrow().creator.is_none()
     }
 
-    fn key(&self) -> usize {
+    /// Stable identity of this variable's shared interior — two clones
+    /// of the same variable have the same `uid`. Used by `nnp::trace`
+    /// to match tape inputs against the parameter registry.
+    pub fn uid(&self) -> usize {
         Rc::as_ptr(&self.0) as usize
+    }
+
+    /// The [`Op`] descriptor of the function that produced this
+    /// variable (`None` for leaves).
+    pub fn creator_op(&self) -> Option<Op> {
+        self.0.borrow().creator.as_ref().map(|n| n.op.clone())
+    }
+
+    /// Inputs of the function that produced this variable (empty for
+    /// leaves), in op-defined order (activations first, then
+    /// parameters).
+    pub fn creator_inputs(&self) -> Vec<Variable> {
+        self.0
+            .borrow()
+            .creator
+            .as_ref()
+            .map(|n| n.inputs.clone())
+            .unwrap_or_default()
     }
 
     // ---------------------------------------------------------- execution
@@ -178,7 +206,7 @@ impl Variable {
         while let Some(step) = stack.pop() {
             match step {
                 Step::Visit(v) => {
-                    if !seen.insert(v.key()) {
+                    if !seen.insert(v.uid()) {
                         continue;
                     }
                     let creator = v.0.borrow().creator.clone();
@@ -198,10 +226,15 @@ impl Variable {
     /// Re-execute the recorded graph bottom-up using the *current* leaf
     /// data — the static-graph usage of Figure 1: build once, then
     /// `x.d = batch; y.forward()` per batch.
+    ///
+    /// Hot path: the per-node input gather hands the closures O(1)
+    /// copy-on-write handles (`NdArray` storage is `Arc`-backed), not
+    /// buffer copies — the clones here cost a refcount bump.
     pub fn forward(&self) {
         for v in self.topo_order() {
             let node = v.0.borrow().creator.clone().expect("topo_order yields non-leaves");
-            let in_data: Vec<NdArray> = node.inputs.iter().map(|i| i.data()).collect();
+            let in_data: Vec<NdArray> =
+                node.inputs.iter().map(|i| i.with_data(|d| d.clone())).collect();
             let out = (node.fwd)(&in_data);
             v.0.borrow_mut().data = out;
         }
@@ -238,13 +271,16 @@ impl Variable {
                 };
                 (inner.creator.clone().unwrap(), inner.data.clone(), g)
             };
-            let in_data: Vec<NdArray> = node.inputs.iter().map(|i| i.data()).collect();
+            // O(1) copy-on-write clones — the backward closures see
+            // the same buffers, never copies.
+            let in_data: Vec<NdArray> =
+                node.inputs.iter().map(|i| i.with_data(|d| d.clone())).collect();
             let grads = (node.bwd)(&in_data, &out_data, &out_grad);
             assert_eq!(
                 grads.len(),
                 node.inputs.len(),
                 "function '{}' returned {} grads for {} inputs",
-                node.name,
+                node.op.name(),
                 grads.len(),
                 node.inputs.len()
             );
@@ -257,7 +293,7 @@ impl Variable {
                         g.dims(),
                         inp.dims(),
                         "function '{}' produced grad shape {:?} for input shape {:?}",
-                        node.name,
+                        node.op.name(),
                         g.dims(),
                         inp.dims()
                     );
@@ -282,12 +318,13 @@ impl Variable {
         self.topo_order().len()
     }
 
-    /// Names of function nodes in topological order (graph inspection /
-    /// NNP export).
+    /// Canonical names of function nodes in topological order (graph
+    /// inspection / NNP export) — these are the registry names of each
+    /// node's [`Op`] descriptor.
     pub fn function_names(&self) -> Vec<&'static str> {
         self.topo_order()
             .iter()
-            .map(|v| v.0.borrow().creator.as_ref().unwrap().name)
+            .map(|v| v.0.borrow().creator.as_ref().unwrap().op.name())
             .collect()
     }
 }
@@ -338,7 +375,7 @@ mod tests {
 
     fn add_var(a: &Variable, b: &Variable) -> Variable {
         Variable::from_function(
-            "add",
+            Op::Add2,
             &[a, b],
             Box::new(|xs| ops::add(&xs[0], &xs[1])),
             Box::new(|_xs, _y, g| vec![Some(g.clone()), Some(g.clone())]),
@@ -347,7 +384,7 @@ mod tests {
 
     fn mul_var(a: &Variable, b: &Variable) -> Variable {
         Variable::from_function(
-            "mul",
+            Op::Mul2,
             &[a, b],
             Box::new(|xs| ops::mul(&xs[0], &xs[1])),
             Box::new(|xs, _y, g| {
@@ -447,7 +484,29 @@ mod tests {
         let y = add_var(&x, &x);
         let z = mul_var(&y, &y);
         assert_eq!(z.node_count(), 2);
-        assert_eq!(z.function_names(), vec!["add", "mul"]);
+        assert_eq!(z.function_names(), vec!["Add2", "Mul2"]);
+    }
+
+    #[test]
+    fn creator_op_and_inputs_expose_the_tape() {
+        let x = Variable::from_array(NdArray::full(&[1], 1.0), true);
+        assert!(x.creator_op().is_none());
+        assert!(x.creator_inputs().is_empty());
+        let y = add_var(&x, &x);
+        assert_eq!(y.creator_op(), Some(Op::Add2));
+        let ins = y.creator_inputs();
+        assert_eq!(ins.len(), 2);
+        assert_eq!(ins[0].uid(), x.uid());
+        assert_eq!(ins[1].uid(), x.uid());
+    }
+
+    #[test]
+    fn uid_is_stable_across_clones() {
+        let x = Variable::new(&[1], false);
+        let y = x.clone();
+        assert_eq!(x.uid(), y.uid());
+        let z = Variable::new(&[1], false);
+        assert_ne!(x.uid(), z.uid());
     }
 
     #[test]

@@ -15,9 +15,52 @@
 //!   those graphs, validated against a pure-jnp oracle.
 //!
 //! Python never runs at inference/training time: the static-graph path
-//! loads `artifacts/*.hlo.txt` through PJRT (`runtime`), and the
-//! dynamic-graph path runs the native tape engine (`graph` +
-//! `functions`).
+//! loads `artifacts/*.hlo.txt` through PJRT (`runtime`, `pjrt` cargo
+//! feature), and the dynamic-graph path runs the native tape engine
+//! (`graph` + `functions`).
+//!
+//! ## The Function-descriptor API: one definition, every backend
+//!
+//! The paper's compatibility thesis (§2.1, §3.4) is that *one* network
+//! definition trains, exports, converts, and deploys everywhere. The
+//! architecture that delivers it here:
+//!
+//! - **[`nnp::Op`] is the single operator registry.** Every operator
+//!   the framework knows is one enum variant with typed attributes,
+//!   a canonical NNabla-style name, a wire encoding, and executable
+//!   semantics ([`nnp::Op::apply`] on variables / `execute` on arrays).
+//! - **The tape is self-describing.** Every `F::*` / `PF::*` call
+//!   records its `Op` descriptor on the graph node it creates
+//!   (`Variable::from_function`), with parameters identified by their
+//!   registry names.
+//! - **[`nnp::trace`] exports any graph.** Walk the tape from the
+//!   outputs and the NNP [`nnp::NetworkDef`] falls out — no builder,
+//!   no dual bookkeeping. From there: NNP archives, ONNX, NNB, frozen
+//!   graphs, generated Rust source.
+//! - **The interpreter is the registry.** Deployment inference
+//!   re-applies each layer's descriptor through the same dispatch the
+//!   tape recorded it with, so converted models are bit-identical to
+//!   the source graph.
+//!
+//! Listing 1, end to end:
+//!
+//! ```
+//! use nnl::{functions as F, nnp, parametric as PF, Variable};
+//!
+//! PF::clear_parameters();
+//! let x = Variable::new(&[16, 10], true);
+//! x.set_name("x");
+//! let y = F::relu(&PF::affine(&x, 5, "fc"));
+//! y.forward();
+//! y.backward();
+//! // the same graph, exported with zero extra bookkeeping:
+//! let net = nnp::trace("listing1", &[&y]).unwrap();
+//! assert_eq!(net.function_names(), vec!["Affine", "ReLU"]);
+//! ```
+//!
+//! [`models::Gb`] remains as a thin convenience wrapper over tracing
+//! (naming, train/eval mode, MAC accounting) — see its module docs for
+//! the migration note.
 
 pub mod comm;
 pub mod console;

@@ -1,69 +1,80 @@
-//! `Gb` — the graph builder. Each method applies the corresponding
-//! `PF::*`/`F::*` to the live tape (so the result trains immediately)
-//! *and* appends the layer to a [`NetworkDef`] (so the same definition
-//! exports, converts, deploys, and is footprint-countable). One model
-//! definition, every backend — the usability thesis of §2.1.
+//! `Gb` — the graph builder, now a *thin convenience wrapper* over the
+//! self-describing tape.
+//!
+//! ## Migration note (dual-recording → trace)
+//!
+//! `Gb` used to dual-record: every method applied `PF::*`/`F::*` to the
+//! live tape *and* appended a shadow layer to a [`NetworkDef`] by hand.
+//! Since the tape now carries a first-class [`crate::nnp::Op`]
+//! descriptor on every node, the shadow bookkeeping is gone:
+//! [`Gb::finish`] simply calls [`crate::nnp::trace`] on the outputs and
+//! the IR falls out of the graph itself. Two practical consequences:
+//!
+//! - **`Gb` is optional.** A graph built from raw `F::*`/`PF::*` calls
+//!   (Listing 1 style) exports identically — name your input variables
+//!   with `set_name` and call `nnp::trace(name, &[&y])`.
+//! - **The IR is the tape.** What executes live is exactly what
+//!   exports; there is no way for the two to drift (the old
+//!   `slice_channels` selector-convolution hack is gone — grouped
+//!   convolutions trace to first-class `Slice` layers).
+//!
+//! What `Gb` still adds on top of tracing: naming ergonomics (inputs
+//! and intermediate tensors get stable `t<N>` names), the train/eval
+//! switch (batch-stat BN, sampled vs inert dropout), and the Console's
+//! multiply-accumulate footprint accounting ([`Gb::macs`], §5.1).
 
 use crate::functions as F;
 use crate::graph::Variable;
-use crate::nnp::ir::{Layer, NetworkDef, Op, TensorDef};
+use crate::nnp::{trace, NetworkDef};
 use crate::parametric as PF;
-use crate::tensor::NdArray;
 
-/// A tracked tensor: live variable + IR name.
+/// A tracked tensor: live variable + its tape name (used as the IR
+/// tensor name when the graph is traced).
 #[derive(Clone)]
 pub struct T {
     pub var: Variable,
     pub name: String,
 }
 
-/// Graph + IR builder.
+/// Graph builder: applies parametric/functional ops to the live tape,
+/// names the tensors, and counts MACs. The IR comes from tracing.
 pub struct Gb {
     /// Training mode: batch-stat BN, active dropout.
     pub train: bool,
-    def: NetworkDef,
+    model_name: String,
     next: usize,
     macs: u64,
 }
 
 impl Gb {
     pub fn new(model_name: &str, train: bool) -> Self {
-        Gb {
-            train,
-            def: NetworkDef { name: model_name.to_string(), ..Default::default() },
-            next: 0,
-            macs: 0,
-        }
+        Gb { train, model_name: model_name.to_string(), next: 0, macs: 0 }
     }
 
-    fn fresh(&mut self) -> String {
+    /// Track a produced variable: name it `name` (user-chosen, kept in
+    /// the traced IR) or auto-assign `t<N>`.
+    fn track(&mut self, var: Variable, name: Option<&str>) -> T {
         self.next += 1;
-        format!("t{}", self.next)
+        let name = match name {
+            Some(n) => n.to_string(),
+            None => format!("t{}", self.next),
+        };
+        var.set_name(&name);
+        T { var, name }
     }
 
-    fn push(&mut self, lname: &str, op: Op, inputs: &[&T], params: Vec<String>, var: Variable) -> T {
-        let out = self.fresh();
-        self.def.layers.push(Layer {
-            name: lname.to_string(),
-            op,
-            inputs: inputs.iter().map(|t| t.name.clone()).collect(),
-            params,
-            outputs: vec![out.clone()],
-        });
-        T { var, name: out }
-    }
-
-    /// Declare a network input.
+    /// Declare a (named) network input.
     pub fn input(&mut self, name: &str, dims: &[usize]) -> T {
-        self.def.inputs.push(TensorDef { name: name.to_string(), dims: dims.to_vec() });
-        T { var: Variable::new(dims, false), name: name.to_string() }
+        let var = Variable::new(dims, false);
+        var.set_name(name);
+        T { var, name: name.to_string() }
     }
 
-    /// Finish: mark outputs, return (validated) definition.
-    pub fn finish(mut self, outputs: &[&T]) -> NetworkDef {
-        self.def.outputs = outputs.iter().map(|t| t.name.clone()).collect();
-        self.def.validate().expect("builder produced invalid network");
-        self.def
+    /// Finish: trace the tape from `outputs` into a validated
+    /// [`NetworkDef`] — no dual bookkeeping, the graph describes itself.
+    pub fn finish(self, outputs: &[&T]) -> NetworkDef {
+        let vars: Vec<&Variable> = outputs.iter().map(|t| &t.var).collect();
+        trace(&self.model_name, &vars).expect("builder produced untraceable network")
     }
 
     /// Multiply-accumulate footprint so far (Console §5.1 readout).
@@ -78,13 +89,7 @@ impl Gb {
         let batch = x.var.dims()[0];
         let y = PF::affine(&x.var, n_out, name);
         self.macs += (batch * fan_in * n_out) as u64;
-        self.push(
-            name,
-            Op::Affine,
-            &[x],
-            vec![format!("{name}/affine/W"), format!("{name}/affine/b")],
-            y,
-        )
+        self.track(y, None)
     }
 
     pub fn conv(
@@ -100,18 +105,13 @@ impl Gb {
         let y = PF::convolution(&x.var, outmaps, kernel, stride, pad, name);
         let out_elems: usize = y.dims().iter().product();
         self.macs += (out_elems * inmaps * kernel.0 * kernel.1) as u64;
-        self.push(
-            name,
-            Op::Convolution { stride, pad, dilation: (1, 1) },
-            &[x],
-            vec![format!("{name}/conv/W"), format!("{name}/conv/b")],
-            y,
-        )
+        self.track(y, None)
     }
 
     /// Grouped convolution (ResNeXt cardinality / depthwise when
-    /// `groups == channels`), lowered to split + conv-per-group +
-    /// concat — expressible in every converter target.
+    /// `groups == channels`), lowered to slice + conv-per-group +
+    /// concat. `Slice` is a first-class registry op, so the lowering
+    /// traces and converts faithfully — no selector-kernel tricks.
     pub fn group_conv(
         &mut self,
         x: &T,
@@ -140,148 +140,91 @@ impl Gb {
 
     pub fn bn(&mut self, x: &T, name: &str) -> T {
         let y = PF::batch_normalization(&x.var, self.train, name);
-        self.push(
-            name,
-            Op::BatchNorm { eps: 1e-5 },
-            &[x],
-            vec![
-                format!("{name}/bn/beta"),
-                format!("{name}/bn/gamma"),
-                format!("{name}/bn/mean"),
-                format!("{name}/bn/var"),
-            ],
-            y,
-        )
+        self.track(y, None)
     }
 
     pub fn layer_norm(&mut self, x: &T, name: &str) -> T {
         let y = PF::layer_normalization(&x.var, name);
-        self.push(
-            name,
-            Op::LayerNorm { eps: 1e-5 },
-            &[x],
-            vec![format!("{name}/ln/beta"), format!("{name}/ln/gamma")],
-            y,
-        )
+        self.track(y, None)
     }
 
     pub fn embed(&mut self, ids: &T, vocab: usize, dim: usize, name: &str) -> T {
         let y = PF::embed(&ids.var, vocab, dim, name);
-        self.push(name, Op::Embed, &[ids], vec![format!("{name}/embed/W")], y)
+        self.track(y, None)
     }
 
     // ------------------------------------------------------ activations
 
-    fn unary(&mut self, x: &T, op: Op, var: Variable, name: &str) -> T {
-        self.push(name, op, &[x], vec![], var)
-    }
-
     pub fn relu(&mut self, x: &T) -> T {
         let y = F::relu(&x.var);
-        self.unary(x, Op::ReLU, y, "relu")
+        self.track(y, None)
     }
 
     pub fn swish(&mut self, x: &T) -> T {
         let y = F::swish(&x.var);
-        self.unary(x, Op::Swish, y, "swish")
+        self.track(y, None)
     }
 
     pub fn sigmoid(&mut self, x: &T) -> T {
         let y = F::sigmoid(&x.var);
-        self.unary(x, Op::Sigmoid, y, "sigmoid")
+        self.track(y, None)
     }
 
     pub fn gelu(&mut self, x: &T) -> T {
         let y = F::gelu(&x.var);
-        self.unary(x, Op::Gelu, y, "gelu")
+        self.track(y, None)
     }
 
     pub fn softmax(&mut self, x: &T) -> T {
         let y = F::softmax(&x.var);
-        self.unary(x, Op::Softmax, y, "softmax")
+        self.track(y, None)
     }
 
     pub fn dropout(&mut self, x: &T, p: f32, name: &str) -> T {
-        // active only in training; always recorded (inference no-op)
-        let y = if self.train { F::dropout(&x.var, p) } else { x.var.clone() };
-        self.push(name, Op::Dropout { p }, &[x], vec![], y)
+        // active only in training; recorded either way (the inference
+        // variant is an identity node that still carries Op::Dropout,
+        // so the traced IR keeps the layer for re-training)
+        let y = if self.train { F::dropout(&x.var, p) } else { F::dropout_inference(&x.var, p) };
+        self.track(y, Some(name))
     }
 
     // ----------------------------------------------------------- shapes
 
     pub fn max_pool(&mut self, x: &T, kernel: (usize, usize), stride: (usize, usize)) -> T {
         let y = F::max_pooling(&x.var, kernel, stride, (0, 0));
-        self.push("max_pool", Op::MaxPool { kernel, stride, pad: (0, 0) }, &[x], vec![], y)
+        self.track(y, None)
     }
 
     pub fn global_avg_pool(&mut self, x: &T) -> T {
         let y = F::global_average_pooling(&x.var);
-        self.push("gap", Op::GlobalAvgPool, &[x], vec![], y)
+        self.track(y, None)
     }
 
     pub fn add(&mut self, a: &T, b: &T, name: &str) -> T {
         let y = F::add(&a.var, &b.var);
-        self.push(name, Op::Add2, &[a, b], vec![], y)
+        self.track(y, Some(name))
     }
 
     pub fn mul(&mut self, a: &T, b: &T, name: &str) -> T {
         let y = F::mul(&a.var, &b.var);
-        self.push(name, Op::Mul2, &[a, b], vec![], y)
+        self.track(y, Some(name))
     }
 
     pub fn concat(&mut self, parts: &[&T], axis: usize, name: &str) -> T {
         let vars: Vec<&Variable> = parts.iter().map(|t| &t.var).collect();
         let y = F::concat(&vars, axis);
-        self.push(name, Op::Concat { axis }, parts, vec![], y)
+        self.track(y, Some(name))
     }
 
     pub fn reshape(&mut self, x: &T, dims: &[i64], name: &str) -> T {
-        let batch = x.var.dims()[0];
-        let resolved: Vec<usize> = dims
-            .iter()
-            .enumerate()
-            .map(|(i, &d)| {
-                if d == -1 {
-                    usize::MAX
-                } else if d == 0 && i == 0 {
-                    batch
-                } else {
-                    d as usize
-                }
-            })
-            .collect();
-        let y = F::reshape(&x.var, &resolved);
-        self.push(name, Op::Reshape { dims: dims.to_vec() }, &[x], vec![], y)
+        let y = F::reshape_spec(&x.var, dims);
+        self.track(y, Some(name))
     }
 
+    /// Channel-window slice, recorded as a first-class `Slice` layer.
     pub fn slice_channels(&mut self, x: &T, start: usize, stop: usize, name: &str) -> T {
-        // IR has no Slice op: express as a fixed 1x1 "selector" conv?
-        // No — keep the IR honest: record as Identity on a sliced
-        // tensor is not convertible. Instead we model group-conv slices
-        // with a Concat-compatible trick: slice on the live graph and
-        // register a Reshape-free pseudo-layer. For convertibility,
-        // the slice is recorded as a 1x1 Convolution with a constant
-        // selector kernel parameter.
-        let c = x.var.dims()[1];
-        let width = stop - start;
         let y = F::slice_axis(&x.var, 1, start, stop);
-        // constant selector kernel [width, c, 1, 1]: one-hot rows
-        let pname = format!("{name}/selector/W");
-        let existing = PF::get_parameter(&pname);
-        if existing.is_none() {
-            let mut w = NdArray::zeros(&[width, c, 1, 1]);
-            for i in 0..width {
-                w.set(&[i, start + i, 0, 0], 1.0);
-            }
-            PF::set_parameter(&pname, Variable::from_array(w, false));
-        }
-        self.push(
-            name,
-            Op::Convolution { stride: (1, 1), pad: (0, 0), dilation: (1, 1) },
-            &[x],
-            vec![pname],
-            y,
-        )
+        self.track(y, Some(name))
     }
 }
 
@@ -289,8 +232,9 @@ impl Gb {
 mod tests {
     use super::*;
     use crate::nnp::interpreter;
+    use crate::nnp::Op;
     use crate::parametric::{clear_parameters, get_parameters, seed_parameter_rng};
-    use crate::tensor::Rng;
+    use crate::tensor::{NdArray, Rng};
     use std::collections::HashMap;
 
     fn reset() {
@@ -311,12 +255,17 @@ mod tests {
     }
 
     #[test]
-    fn builds_live_graph_and_ir_together() {
+    fn builds_live_graph_and_traced_ir_together() {
         reset();
         let (def, x, y) = mini_cnn(true);
         assert_eq!(y.var.dims(), vec![2, 10]);
         assert_eq!(def.layers.len(), 5);
         assert!(def.validate().is_ok());
+        // layer names derive from parameter scopes
+        assert_eq!(def.layers[0].name, "c1");
+        assert_eq!(def.layers[0].params, vec!["c1/conv/W", "c1/conv/b"]);
+        assert_eq!(def.layers[1].name, "bn1");
+        assert_eq!(def.layers[4].name, "head");
         // live graph trains
         let mut rng = Rng::new(2);
         x.var.set_data(rng.randn(&[2, 3, 8, 8], 1.0));
@@ -341,20 +290,18 @@ mod tests {
         let mut inputs = HashMap::new();
         inputs.insert("x".to_string(), input);
         let interp = interpreter::run(&def, &inputs, &params).unwrap();
-        assert!(
-            live.allclose(&interp[0], 1e-4, 1e-4),
-            "max diff {}",
-            live.max_abs_diff(&interp[0])
-        );
+        // same kernels through the same Op dispatch: exactly equal
+        assert_eq!(live.data(), interp[0].data(), "trace→interpreter must be bit-identical");
     }
 
     #[test]
-    fn group_conv_slices_convert_faithfully() {
+    fn group_conv_traces_to_slice_layers_and_matches() {
         reset();
         let mut g = Gb::new("grp", false);
         let x = g.input("x", &[1, 4, 4, 4]);
         let y = g.group_conv(&x, 8, (3, 3), (1, 1), (1, 1), 2, "gc");
         let def = g.finish(&[&y]);
+        assert!(def.layers.iter().any(|l| matches!(l.op, Op::Slice { .. })));
         let mut rng = Rng::new(4);
         let input = rng.randn(&[1, 4, 4, 4], 1.0);
         x.var.set_data(input.clone());
@@ -365,14 +312,11 @@ mod tests {
         let mut inputs = HashMap::new();
         inputs.insert("x".to_string(), input);
         let interp = interpreter::run(&def, &inputs, &params).unwrap();
-        assert!(live.allclose(&interp[0], 1e-4, 1e-4));
+        assert_eq!(live.data(), interp[0].data());
     }
 
     #[test]
     fn macs_counted() {
-        reset();
-        let (_, _, _) = mini_cnn(true);
-        // rebuild with a fresh Gb to read macs
         reset();
         let mut g = Gb::new("m", true);
         let x = g.input("x", &[1, 1, 4, 4]);
@@ -392,5 +336,17 @@ mod tests {
         x.var.set_data(NdArray::ones(&[1, 4]));
         y.var.forward();
         assert_eq!(y.var.data().data(), &[1., 1., 1., 1.]);
+    }
+
+    #[test]
+    fn unused_input_simply_absent_from_trace() {
+        reset();
+        let mut g = Gb::new("u", false);
+        let _unused = g.input("ghost", &[1, 2]);
+        let x = g.input("x", &[1, 2]);
+        let y = g.relu(&x);
+        let def = g.finish(&[&y]);
+        assert_eq!(def.inputs.len(), 1);
+        assert_eq!(def.inputs[0].name, "x");
     }
 }

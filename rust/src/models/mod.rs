@@ -3,11 +3,13 @@
 //! SE-ResNet-50, SE-ResNeXt-50 (Table 2), MobileNetV3-S/L and
 //! EfficientNet-B0..B3 (Table 3), plus LeNet (Listings 4/5) and an MLP.
 //!
-//! Models are built through [`builder::Gb`], which records a
-//! [`crate::nnp::NetworkDef`] *while* building the live training graph —
-//! so every zoo model trains on the dynamic engine, exports to NNP/ONNX,
-//! runs in the deployment interpreter, and reports parameter/MAC
-//! footprints (the Console feature of §5.1) from one definition.
+//! Models are built through [`builder::Gb`] on the self-describing
+//! tape: the live training graph *is* the network definition
+//! ([`Gb::finish`](builder::Gb::finish) traces it into a
+//! [`crate::nnp::NetworkDef`]) — so every zoo model trains on the
+//! dynamic engine, exports to NNP/ONNX, runs in the deployment
+//! interpreter, and reports parameter/MAC footprints (the Console
+//! feature of §5.1) from one definition.
 
 pub mod builder;
 pub mod zoo;

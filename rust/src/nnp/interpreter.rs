@@ -1,18 +1,21 @@
 //! Execute a [`NetworkDef`] for inference — the deployment runtime the
-//! paper's NNB / C-runtime targets exist for. Built on the same tested
-//! `F::*` kernels as the training engine, so converted models are
-//! bit-identical to the source graph.
+//! paper's NNB / C-runtime targets exist for.
+//!
+//! There is **no per-op re-implementation here**: every layer is
+//! executed through [`Op::apply`], the same registry dispatch the
+//! training tape records its nodes with — so converted models are
+//! bit-identical to the source graph by construction.
 
 use std::collections::HashMap;
 
-use crate::functions as F;
 use crate::graph::Variable;
 use crate::tensor::NdArray;
 
-use super::ir::{NetworkDef, Op};
+use super::ir::NetworkDef;
 
 /// Run `net` on named inputs with a parameter map. Returns the
-/// network's declared outputs in order.
+/// network's declared outputs in order. The batch axis (axis 0) of each
+/// input is free; feature dims must match the declaration.
 pub fn run(
     net: &NetworkDef,
     inputs: &HashMap<String, NdArray>,
@@ -24,9 +27,11 @@ pub fn run(
         let a = inputs
             .get(&t.name)
             .ok_or_else(|| format!("missing input '{}'", t.name))?;
-        if a.dims()[1..] != t.dims[1..] {
+        // rank must match exactly; dims past the batch axis must agree
+        // (rank-0 / rank-mismatched arrays are a clean error, not a panic)
+        if a.dims().len() != t.dims.len() || a.dims().get(1..) != t.dims.get(1..) {
             return Err(format!(
-                "input '{}' feature dims {:?} != declared {:?}",
+                "input '{}' shape {:?} incompatible with declared {:?} (batch axis free)",
                 t.name,
                 a.dims(),
                 t.dims
@@ -41,79 +46,17 @@ pub fn run(
             .ok_or_else(|| format!("missing parameter '{name}'"))
     };
     for l in &net.layers {
-        let ins: Vec<Variable> = l
-            .inputs
-            .iter()
-            .map(|n| env.get(n).cloned().ok_or_else(|| format!("missing tensor '{n}'")))
-            .collect::<Result<_, _>>()?;
-        let y = match &l.op {
-            Op::Affine => {
-                let w = p(&l.params[0])?;
-                let b = if l.params.len() > 1 { Some(p(&l.params[1])?) } else { None };
-                F::affine(&ins[0], &w, b.as_ref())
-            }
-            Op::Convolution { stride, pad, dilation } => {
-                let w = p(&l.params[0])?;
-                let b = if l.params.len() > 1 { Some(p(&l.params[1])?) } else { None };
-                F::convolution(&ins[0], &w, b.as_ref(), *stride, *pad, *dilation)
-            }
-            Op::MaxPool { kernel, stride, pad } => F::max_pooling(&ins[0], *kernel, *stride, *pad),
-            Op::AvgPool { kernel, stride, pad, including_pad } => {
-                F::average_pooling(&ins[0], *kernel, *stride, *pad, *including_pad)
-            }
-            Op::GlobalAvgPool => F::global_average_pooling(&ins[0]),
-            Op::ReLU => F::relu(&ins[0]),
-            Op::LeakyReLU { alpha } => F::leaky_relu(&ins[0], *alpha),
-            Op::Sigmoid => F::sigmoid(&ins[0]),
-            Op::Tanh => F::tanh(&ins[0]),
-            Op::Elu { alpha } => F::elu(&ins[0], *alpha),
-            Op::Swish => F::swish(&ins[0]),
-            Op::Gelu => F::gelu(&ins[0]),
-            Op::Softplus => F::softplus(&ins[0]),
-            Op::Softmax => F::softmax(&ins[0]),
-            Op::LogSoftmax => F::log_softmax(&ins[0]),
-            Op::BatchNorm { eps } => {
-                let beta = p(&l.params[0])?;
-                let gamma = p(&l.params[1])?;
-                let mean = p(&l.params[2])?;
-                let var = p(&l.params[3])?;
-                F::batch_normalization(&ins[0], &beta, &gamma, &mean, &var, 0.9, *eps, false)
-            }
-            Op::LayerNorm { eps } => {
-                let beta = p(&l.params[0])?;
-                let gamma = p(&l.params[1])?;
-                F::layer_normalization(&ins[0], &beta, &gamma, *eps)
-            }
-            Op::Add2 => F::add(&ins[0], &ins[1]),
-            Op::Mul2 => F::mul(&ins[0], &ins[1]),
-            Op::Concat { axis } => {
-                let refs: Vec<&Variable> = ins.iter().collect();
-                F::concat(&refs, *axis)
-            }
-            Op::Reshape { dims } => {
-                let batch = ins[0].dims()[0];
-                let resolved: Vec<usize> = dims
-                    .iter()
-                    .enumerate()
-                    .map(|(i, &d)| {
-                        if d == -1 {
-                            usize::MAX
-                        } else if d == 0 && i == 0 {
-                            batch // 0 in dim 0 = "keep batch"
-                        } else {
-                            d as usize
-                        }
-                    })
-                    .collect();
-                F::reshape(&ins[0], &resolved)
-            }
-            Op::Dropout { .. } => ins[0].clone(), // inference no-op
-            Op::Embed => {
-                let w = p(&l.params[0])?;
-                F::embed(&ins[0], &w)
-            }
-            Op::Identity => ins[0].clone(),
-        };
+        // gather activations then parameters — exactly the input order
+        // Op::apply defines (and nnp::trace records)
+        let mut vars: Vec<Variable> = Vec::with_capacity(l.inputs.len() + l.params.len());
+        for n in &l.inputs {
+            vars.push(env.get(n).cloned().ok_or_else(|| format!("missing tensor '{n}'"))?);
+        }
+        for pn in &l.params {
+            vars.push(p(pn)?);
+        }
+        let refs: Vec<&Variable> = vars.iter().collect();
+        let y = l.op.apply(&refs).map_err(|e| format!("layer '{}': {e}", l.name))?;
         // register outputs (ops here are all single-output)
         env.insert(l.outputs[0].clone(), y);
     }
@@ -126,7 +69,7 @@ pub fn run(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::nnp::ir::{Layer, TensorDef};
+    use crate::nnp::ir::{Layer, Op, TensorDef};
 
     fn affine_relu_net() -> (NetworkDef, HashMap<String, NdArray>) {
         let net = NetworkDef {
@@ -176,6 +119,25 @@ mod tests {
     }
 
     #[test]
+    fn rank0_input_is_error_not_panic() {
+        // regression: this used to panic slicing `dims()[1..]`
+        let (net, params) = affine_relu_net();
+        let mut inputs = HashMap::new();
+        inputs.insert("x".into(), NdArray::scalar(1.0));
+        let err = run(&net, &inputs, &params).unwrap_err();
+        assert!(err.contains("incompatible"), "{err}");
+    }
+
+    #[test]
+    fn rank_mismatch_is_error_not_panic() {
+        let (net, params) = affine_relu_net();
+        let mut inputs = HashMap::new();
+        inputs.insert("x".into(), NdArray::zeros(&[2])); // rank 1, declared rank 2
+        let err = run(&net, &inputs, &params).unwrap_err();
+        assert!(err.contains("incompatible"), "{err}");
+    }
+
+    #[test]
     fn missing_param_reported() {
         let (net, mut params) = affine_relu_net();
         params.remove("b");
@@ -190,6 +152,16 @@ mod tests {
         let (net, params) = affine_relu_net();
         let err = run(&net, &HashMap::new(), &params).unwrap_err();
         assert!(err.contains("missing input 'x'"), "{err}");
+    }
+
+    #[test]
+    fn bad_arity_is_layer_error() {
+        let (mut net, params) = affine_relu_net();
+        net.layers[0].params.clear(); // Affine with no W
+        let mut inputs = HashMap::new();
+        inputs.insert("x".into(), NdArray::zeros(&[1, 2]));
+        let err = run(&net, &inputs, &params).unwrap_err();
+        assert!(err.contains("layer 'fc'"), "{err}");
     }
 
     #[test]
@@ -230,5 +202,25 @@ mod tests {
         inputs.insert("x".into(), NdArray::zeros(&[2, 3, 4]));
         let out = run(&net, &inputs, &HashMap::new()).unwrap();
         assert_eq!(out[0].dims(), &[2, 12]);
+    }
+
+    #[test]
+    fn slice_layer_executes() {
+        let net = NetworkDef {
+            name: "s".into(),
+            inputs: vec![TensorDef { name: "x".into(), dims: vec![1, 4] }],
+            outputs: vec!["y".into()],
+            layers: vec![Layer {
+                name: "sl".into(),
+                op: Op::Slice { axis: 1, start: 1, stop: 3 },
+                inputs: vec!["x".into()],
+                params: vec![],
+                outputs: vec!["y".into()],
+            }],
+        };
+        let mut inputs = HashMap::new();
+        inputs.insert("x".into(), NdArray::from_slice(&[1, 4], &[0., 1., 2., 3.]));
+        let out = run(&net, &inputs, &HashMap::new()).unwrap();
+        assert_eq!(out[0].data(), &[1., 2.]);
     }
 }

@@ -1,22 +1,38 @@
-//! The network intermediate representation — the role the paper's
-//! "protobuf defined in Neural Network Libraries" plays as the
-//! converter hub (§3: "this file format converter uses protobuf ...
-//! as intermediate format").
+//! The network intermediate representation *and* the single operator
+//! registry — the role the paper's "protobuf defined in Neural Network
+//! Libraries" plays as the converter hub (§3: "this file format
+//! converter uses protobuf ... as intermediate format").
+//!
+//! [`Op`] is the one description of every operator the framework knows:
+//! its typed attributes, its canonical (NNabla-style) name, its wire
+//! encoding ([`Op::attrs_json`] / [`Op::from_name_attrs`]), and its
+//! executable semantics ([`Op::apply`] / [`Op::execute`]). The live
+//! tape ([`crate::graph::Variable`]) records an `Op` on every function
+//! node, `nnp::trace` reads those descriptors back out into a
+//! [`NetworkDef`], and the [`crate::nnp::interpreter`] re-applies them
+//! through the same dispatch — so training, export, conversion, and
+//! deployment all share one operator definition.
 //!
 //! A [`NetworkDef`] is a flat, topologically-ordered list of layers
 //! over named tensors. It is what NNP stores, what every converter
-//! consumes/produces, and what the [`crate::nnp::interpreter`]
-//! executes for deployment-style inference.
+//! consumes/produces, and what the interpreter executes for
+//! deployment-style inference.
 
+use crate::functions as F;
+use crate::graph::Variable;
+use crate::tensor::NdArray;
 use crate::utils::json::Json;
 
-/// Operator type + attributes.
+/// Operator type + typed attributes — one variant per framework
+/// function. This is the registry every layer of the stack shares.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Op {
     /// `y = x·W + b`; params: `W`, optional `b`.
     Affine,
     /// 2-D convolution; params: `W [oc,c,kh,kw]`, optional `b`.
     Convolution { stride: (usize, usize), pad: (usize, usize), dilation: (usize, usize) },
+    /// Transposed convolution; params: `W [c,oc,kh,kw]`, optional `b`.
+    Deconvolution { stride: (usize, usize), pad: (usize, usize) },
     MaxPool { kernel: (usize, usize), stride: (usize, usize), pad: (usize, usize) },
     AvgPool { kernel: (usize, usize), stride: (usize, usize), pad: (usize, usize), including_pad: bool },
     GlobalAvgPool,
@@ -36,17 +52,51 @@ pub enum Op {
     LayerNorm { eps: f32 },
     /// Elementwise add of two inputs (residual connections).
     Add2,
+    /// Elementwise subtract of two inputs.
+    Sub2,
     /// Elementwise multiply of two inputs (SE scaling).
     Mul2,
+    /// Elementwise divide of two inputs.
+    Div2,
+    /// Elementwise negation.
+    Neg,
+    AddScalar { val: f32 },
+    MulScalar { val: f32 },
+    PowScalar { val: f32 },
+    Exp,
+    Log,
+    /// Identity forward, zero gradient (frozen branches / baselines).
+    StopGradient,
     /// Concat of N inputs along an axis.
     Concat { axis: usize },
+    /// Reshape spec: `-1` infers, `0` in dim 0 keeps the batch axis.
     Reshape { dims: Vec<i64> },
+    /// Broadcast to a fixed target shape.
+    BroadcastTo { dims: Vec<usize> },
+    /// `[start, stop)` window along one axis.
+    Slice { axis: usize, start: usize, stop: usize },
+    /// Axis permutation.
+    Transpose { axes: Vec<usize> },
     /// Dropout: a no-op at inference; `p` recorded for re-training.
     Dropout { p: f32 },
     /// Embedding lookup; params: `W [V, D]`.
     Embed,
     /// Identity (signature pinning).
     Identity,
+    /// Per-example `(x - t)^2`.
+    SquaredError,
+    /// Stable elementwise binary cross-entropy on logits.
+    SigmoidCrossEntropy,
+    /// Per-example softmax cross-entropy with integer labels.
+    SoftmaxCrossEntropy,
+    /// Sum of all elements -> scalar.
+    SumAll,
+    /// Mean of all elements -> scalar.
+    MeanAll,
+    /// Sum along one axis.
+    Sum { axis: usize, keepdims: bool },
+    /// Mean along one axis.
+    Mean { axis: usize, keepdims: bool },
 }
 
 impl Op {
@@ -56,6 +106,7 @@ impl Op {
         match self {
             Op::Affine => "Affine",
             Op::Convolution { .. } => "Convolution",
+            Op::Deconvolution { .. } => "Deconvolution",
             Op::MaxPool { .. } => "MaxPooling",
             Op::AvgPool { .. } => "AveragePooling",
             Op::GlobalAvgPool => "GlobalAveragePooling",
@@ -72,12 +123,31 @@ impl Op {
             Op::BatchNorm { .. } => "BatchNormalization",
             Op::LayerNorm { .. } => "LayerNormalization",
             Op::Add2 => "Add2",
+            Op::Sub2 => "Sub2",
             Op::Mul2 => "Mul2",
+            Op::Div2 => "Div2",
+            Op::Neg => "Neg",
+            Op::AddScalar { .. } => "AddScalar",
+            Op::MulScalar { .. } => "MulScalar",
+            Op::PowScalar { .. } => "PowScalar",
+            Op::Exp => "Exp",
+            Op::Log => "Log",
+            Op::StopGradient => "StopGradient",
             Op::Concat { .. } => "Concatenate",
             Op::Reshape { .. } => "Reshape",
+            Op::BroadcastTo { .. } => "BroadcastTo",
+            Op::Slice { .. } => "Slice",
+            Op::Transpose { .. } => "Transpose",
             Op::Dropout { .. } => "Dropout",
             Op::Embed => "Embed",
             Op::Identity => "Identity",
+            Op::SquaredError => "SquaredError",
+            Op::SigmoidCrossEntropy => "SigmoidCrossEntropy",
+            Op::SoftmaxCrossEntropy => "SoftmaxCrossEntropy",
+            Op::SumAll => "SumAll",
+            Op::MeanAll => "MeanAll",
+            Op::Sum { .. } => "Sum",
+            Op::Mean { .. } => "Mean",
         }
     }
 
@@ -92,6 +162,9 @@ impl Op {
                 ("pad", pair(*pad)),
                 ("dilation", pair(*dilation)),
             ]),
+            Op::Deconvolution { stride, pad } => {
+                Json::obj(vec![("stride", pair(*stride)), ("pad", pair(*pad))])
+            }
             Op::MaxPool { kernel, stride, pad } => Json::obj(vec![
                 ("kernel", pair(*kernel)),
                 ("stride", pair(*stride)),
@@ -107,12 +180,26 @@ impl Op {
             Op::Elu { alpha } => Json::obj(vec![("alpha", Json::num(*alpha as f64))]),
             Op::BatchNorm { eps } => Json::obj(vec![("eps", Json::num(*eps as f64))]),
             Op::LayerNorm { eps } => Json::obj(vec![("eps", Json::num(*eps as f64))]),
+            Op::AddScalar { val } | Op::MulScalar { val } | Op::PowScalar { val } => {
+                Json::obj(vec![("val", Json::num(*val as f64))])
+            }
             Op::Concat { axis } => Json::obj(vec![("axis", Json::num(*axis as f64))]),
             Op::Reshape { dims } => Json::obj(vec![(
                 "dims",
                 Json::Arr(dims.iter().map(|&d| Json::num(d as f64)).collect()),
             )]),
+            Op::BroadcastTo { dims } => Json::obj(vec![("dims", Json::arr_of_usize(dims))]),
+            Op::Slice { axis, start, stop } => Json::obj(vec![
+                ("axis", Json::num(*axis as f64)),
+                ("start", Json::num(*start as f64)),
+                ("stop", Json::num(*stop as f64)),
+            ]),
+            Op::Transpose { axes } => Json::obj(vec![("axes", Json::arr_of_usize(axes))]),
             Op::Dropout { p } => Json::obj(vec![("p", Json::num(*p as f64))]),
+            Op::Sum { axis, keepdims } | Op::Mean { axis, keepdims } => Json::obj(vec![
+                ("axis", Json::num(*axis as f64)),
+                ("keepdims", Json::Bool(*keepdims)),
+            ]),
             _ => Json::obj(vec![]),
         }
     }
@@ -133,6 +220,10 @@ impl Op {
                 stride: pair(attrs.get("stride"))?,
                 pad: pair(attrs.get("pad"))?,
                 dilation: pair(attrs.get("dilation"))?,
+            },
+            "Deconvolution" => Op::Deconvolution {
+                stride: pair(attrs.get("stride"))?,
+                pad: pair(attrs.get("pad"))?,
             },
             "MaxPooling" => Op::MaxPool {
                 kernel: pair(attrs.get("kernel"))?,
@@ -159,7 +250,16 @@ impl Op {
             "BatchNormalization" => Op::BatchNorm { eps: attrs.get("eps").as_f64()? as f32 },
             "LayerNormalization" => Op::LayerNorm { eps: attrs.get("eps").as_f64()? as f32 },
             "Add2" => Op::Add2,
+            "Sub2" => Op::Sub2,
             "Mul2" => Op::Mul2,
+            "Div2" => Op::Div2,
+            "Neg" => Op::Neg,
+            "AddScalar" => Op::AddScalar { val: attrs.get("val").as_f64()? as f32 },
+            "MulScalar" => Op::MulScalar { val: attrs.get("val").as_f64()? as f32 },
+            "PowScalar" => Op::PowScalar { val: attrs.get("val").as_f64()? as f32 },
+            "Exp" => Op::Exp,
+            "Log" => Op::Log,
+            "StopGradient" => Op::StopGradient,
             "Concatenate" => Op::Concat { axis: attrs.get("axis").as_usize()? },
             "Reshape" => Op::Reshape {
                 dims: attrs
@@ -169,11 +269,271 @@ impl Op {
                     .filter_map(|v| v.as_f64().map(|f| f as i64))
                     .collect(),
             },
+            "BroadcastTo" => Op::BroadcastTo { dims: attrs.get("dims").usize_arr()? },
+            "Slice" => Op::Slice {
+                axis: attrs.get("axis").as_usize()?,
+                start: attrs.get("start").as_usize()?,
+                stop: attrs.get("stop").as_usize()?,
+            },
+            "Transpose" => Op::Transpose { axes: attrs.get("axes").usize_arr()? },
             "Dropout" => Op::Dropout { p: attrs.get("p").as_f64()? as f32 },
             "Embed" => Op::Embed,
             "Identity" => Op::Identity,
+            "SquaredError" => Op::SquaredError,
+            "SigmoidCrossEntropy" => Op::SigmoidCrossEntropy,
+            "SoftmaxCrossEntropy" => Op::SoftmaxCrossEntropy,
+            "SumAll" => Op::SumAll,
+            "MeanAll" => Op::MeanAll,
+            "Sum" => Op::Sum {
+                axis: attrs.get("axis").as_usize()?,
+                keepdims: attrs.get("keepdims").as_bool().unwrap_or(false),
+            },
+            "Mean" => Op::Mean {
+                axis: attrs.get("axis").as_usize()?,
+                keepdims: attrs.get("keepdims").as_bool().unwrap_or(false),
+            },
             _ => return None,
         })
+    }
+
+    // --------------------------------------------------------- dispatch
+
+    /// Apply this operator to live variables, recording a fully
+    /// differentiable node on the tape (forward runs immediately;
+    /// backward is available through `Variable::backward`).
+    ///
+    /// The input slice carries activations first, then parameters in
+    /// the op-defined order (`W[, b]` / `beta, gamma, mean, var` / …) —
+    /// exactly the concatenation of a [`Layer`]'s `inputs` and
+    /// `params`. This is the *deployment* semantics of each operator:
+    /// [`Op::Dropout`] is an inference no-op and [`Op::BatchNorm`] uses
+    /// the running statistics. Training-time variants (sampled dropout,
+    /// batch-stat BN) are built directly through `F::*` / `PF::*`.
+    ///
+    /// This single dispatch is what the NNP interpreter, the builder,
+    /// and graph reconstruction from converters all run on.
+    pub fn apply(&self, xs: &[&Variable]) -> Result<Variable, String> {
+        let n = xs.len();
+        let ck = |lo: usize, hi: usize| -> Result<(), String> {
+            if n < lo || n > hi {
+                if lo == hi {
+                    Err(format!("{}: expected {lo} inputs, got {n}", self.name()))
+                } else {
+                    Err(format!("{}: expected {lo}..={hi} inputs, got {n}", self.name()))
+                }
+            } else {
+                Ok(())
+            }
+        };
+        Ok(match self {
+            Op::Affine => {
+                ck(2, 3)?;
+                F::affine(xs[0], xs[1], xs.get(2).copied())
+            }
+            Op::Convolution { stride, pad, dilation } => {
+                ck(2, 3)?;
+                F::convolution(xs[0], xs[1], xs.get(2).copied(), *stride, *pad, *dilation)
+            }
+            Op::Deconvolution { stride, pad } => {
+                ck(2, 3)?;
+                F::deconvolution(xs[0], xs[1], xs.get(2).copied(), *stride, *pad)
+            }
+            Op::MaxPool { kernel, stride, pad } => {
+                ck(1, 1)?;
+                F::max_pooling(xs[0], *kernel, *stride, *pad)
+            }
+            Op::AvgPool { kernel, stride, pad, including_pad } => {
+                ck(1, 1)?;
+                F::average_pooling(xs[0], *kernel, *stride, *pad, *including_pad)
+            }
+            Op::GlobalAvgPool => {
+                ck(1, 1)?;
+                F::global_average_pooling(xs[0])
+            }
+            Op::ReLU => {
+                ck(1, 1)?;
+                F::relu(xs[0])
+            }
+            Op::LeakyReLU { alpha } => {
+                ck(1, 1)?;
+                F::leaky_relu(xs[0], *alpha)
+            }
+            Op::Sigmoid => {
+                ck(1, 1)?;
+                F::sigmoid(xs[0])
+            }
+            Op::Tanh => {
+                ck(1, 1)?;
+                F::tanh(xs[0])
+            }
+            Op::Elu { alpha } => {
+                ck(1, 1)?;
+                F::elu(xs[0], *alpha)
+            }
+            Op::Swish => {
+                ck(1, 1)?;
+                F::swish(xs[0])
+            }
+            Op::Gelu => {
+                ck(1, 1)?;
+                F::gelu(xs[0])
+            }
+            Op::Softplus => {
+                ck(1, 1)?;
+                F::softplus(xs[0])
+            }
+            Op::Softmax => {
+                ck(1, 1)?;
+                F::softmax(xs[0])
+            }
+            Op::LogSoftmax => {
+                ck(1, 1)?;
+                F::log_softmax(xs[0])
+            }
+            Op::BatchNorm { eps } => {
+                ck(5, 5)?;
+                F::batch_normalization(xs[0], xs[1], xs[2], xs[3], xs[4], 0.9, *eps, false)
+            }
+            Op::LayerNorm { eps } => {
+                ck(3, 3)?;
+                F::layer_normalization(xs[0], xs[1], xs[2], *eps)
+            }
+            Op::Add2 => {
+                ck(2, 2)?;
+                F::add(xs[0], xs[1])
+            }
+            Op::Sub2 => {
+                ck(2, 2)?;
+                F::sub(xs[0], xs[1])
+            }
+            Op::Mul2 => {
+                ck(2, 2)?;
+                F::mul(xs[0], xs[1])
+            }
+            Op::Div2 => {
+                ck(2, 2)?;
+                F::div(xs[0], xs[1])
+            }
+            Op::Neg => {
+                ck(1, 1)?;
+                F::neg(xs[0])
+            }
+            Op::AddScalar { val } => {
+                ck(1, 1)?;
+                F::add_scalar(xs[0], *val)
+            }
+            Op::MulScalar { val } => {
+                ck(1, 1)?;
+                F::mul_scalar(xs[0], *val)
+            }
+            Op::PowScalar { val } => {
+                ck(1, 1)?;
+                F::pow_scalar(xs[0], *val)
+            }
+            Op::Exp => {
+                ck(1, 1)?;
+                F::exp(xs[0])
+            }
+            Op::Log => {
+                ck(1, 1)?;
+                F::log(xs[0])
+            }
+            Op::StopGradient => {
+                ck(1, 1)?;
+                F::stop_gradient(xs[0])
+            }
+            Op::Concat { axis } => {
+                ck(1, usize::MAX)?;
+                if xs.iter().any(|x| *axis >= x.dims().len()) {
+                    return Err(format!("Concatenate: axis {axis} out of range for inputs"));
+                }
+                F::concat(xs, *axis)
+            }
+            Op::Reshape { dims } => {
+                ck(1, 1)?;
+                F::reshape_spec(xs[0], dims)
+            }
+            Op::BroadcastTo { dims } => {
+                ck(1, 1)?;
+                F::broadcast_to(xs[0], dims)
+            }
+            Op::Slice { axis, start, stop } => {
+                ck(1, 1)?;
+                // loaded attrs are untrusted: bound-check before the
+                // kernel's assert can abort the interpreter
+                let dims = xs[0].dims();
+                if *axis >= dims.len() || start > stop || *stop > dims[*axis] {
+                    return Err(format!(
+                        "Slice: window [{start}, {stop}) on axis {axis} invalid for shape {dims:?}"
+                    ));
+                }
+                F::slice_axis(xs[0], *axis, *start, *stop)
+            }
+            Op::Transpose { axes } => {
+                ck(1, 1)?;
+                let rank = xs[0].dims().len();
+                let mut seen = vec![false; rank];
+                let valid = axes.len() == rank
+                    && axes.iter().all(|&a| a < rank && !std::mem::replace(&mut seen[a], true));
+                if !valid {
+                    return Err(format!(
+                        "Transpose: axes {axes:?} is not a permutation of 0..{rank}"
+                    ));
+                }
+                F::transpose(xs[0], axes)
+            }
+            Op::Dropout { p } => {
+                ck(1, 1)?;
+                F::dropout_inference(xs[0], *p)
+            }
+            Op::Embed => {
+                ck(2, 2)?;
+                F::embed(xs[0], xs[1])
+            }
+            Op::Identity => {
+                ck(1, 1)?;
+                F::identity(xs[0])
+            }
+            Op::SquaredError => {
+                ck(2, 2)?;
+                F::squared_error(xs[0], xs[1])
+            }
+            Op::SigmoidCrossEntropy => {
+                ck(2, 2)?;
+                F::sigmoid_cross_entropy(xs[0], xs[1])
+            }
+            Op::SoftmaxCrossEntropy => {
+                ck(2, 2)?;
+                F::softmax_cross_entropy(xs[0], xs[1])
+            }
+            Op::SumAll => {
+                ck(1, 1)?;
+                F::sum_all(xs[0])
+            }
+            Op::MeanAll => {
+                ck(1, 1)?;
+                F::mean_all(xs[0])
+            }
+            Op::Sum { axis, keepdims } => {
+                ck(1, 1)?;
+                F::sum_axis(xs[0], *axis, *keepdims)
+            }
+            Op::Mean { axis, keepdims } => {
+                ck(1, 1)?;
+                F::mean_axis(xs[0], *axis, *keepdims)
+            }
+        })
+    }
+
+    /// Execute this operator on raw arrays (deployment inference).
+    /// Shares [`Op::apply`]'s dispatch — and therefore the exact
+    /// kernels the training tape runs — so interpreted outputs are
+    /// bit-identical to the live graph.
+    pub fn execute(&self, xs: &[&NdArray]) -> Result<NdArray, String> {
+        let vars: Vec<Variable> =
+            xs.iter().map(|a| Variable::from_array((*a).clone(), false)).collect();
+        let refs: Vec<&Variable> = vars.iter().collect();
+        Ok(self.apply(&refs)?.data())
     }
 }
 
@@ -366,7 +726,7 @@ impl NetworkDef {
 }
 
 #[cfg(test)]
-mod tests {
+pub(crate) mod tests {
     use super::*;
 
     pub(crate) fn tiny_net() -> NetworkDef {
@@ -415,11 +775,13 @@ mod tests {
         assert_eq!(n.function_names(), vec!["Affine", "ReLU"]);
     }
 
-    #[test]
-    fn json_roundtrip_all_ops() {
-        let ops = vec![
+    /// Every registry variant with representative attrs — shared with
+    /// converter tests to pin support matrices against the dispatch.
+    pub(crate) fn all_ops() -> Vec<Op> {
+        vec![
             Op::Affine,
             Op::Convolution { stride: (2, 1), pad: (1, 1), dilation: (1, 2) },
+            Op::Deconvolution { stride: (2, 2), pad: (1, 0) },
             Op::MaxPool { kernel: (2, 2), stride: (2, 2), pad: (0, 0) },
             Op::AvgPool { kernel: (3, 3), stride: (1, 1), pad: (1, 1), including_pad: true },
             Op::GlobalAvgPool,
@@ -436,14 +798,37 @@ mod tests {
             Op::BatchNorm { eps: 1e-5 },
             Op::LayerNorm { eps: 1e-6 },
             Op::Add2,
+            Op::Sub2,
             Op::Mul2,
+            Op::Div2,
+            Op::Neg,
+            Op::AddScalar { val: 2.5 },
+            Op::MulScalar { val: -3.0 },
+            Op::PowScalar { val: 2.0 },
+            Op::Exp,
+            Op::Log,
+            Op::StopGradient,
             Op::Concat { axis: 1 },
             Op::Reshape { dims: vec![-1, 8] },
+            Op::BroadcastTo { dims: vec![4, 3] },
+            Op::Slice { axis: 1, start: 2, stop: 5 },
+            Op::Transpose { axes: vec![1, 0] },
             Op::Dropout { p: 0.5 },
             Op::Embed,
             Op::Identity,
-        ];
-        for op in ops {
+            Op::SquaredError,
+            Op::SigmoidCrossEntropy,
+            Op::SoftmaxCrossEntropy,
+            Op::SumAll,
+            Op::MeanAll,
+            Op::Sum { axis: 0, keepdims: true },
+            Op::Mean { axis: 1, keepdims: false },
+        ]
+    }
+
+    #[test]
+    fn json_roundtrip_all_ops() {
+        for op in all_ops() {
             let rt = Op::from_name_attrs(op.name(), &op.attrs_json())
                 .unwrap_or_else(|| panic!("roundtrip failed for {}", op.name()));
             assert_eq!(rt, op);
@@ -461,5 +846,47 @@ mod tests {
     #[test]
     fn unknown_op_rejected() {
         assert!(Op::from_name_attrs("FancyOp", &Json::Null).is_none());
+    }
+
+    // ------------------------------------------------- dispatch tests
+
+    #[test]
+    fn apply_records_differentiable_node() {
+        let x = Variable::from_array(NdArray::from_slice(&[1, 2], &[1., 2.]), true);
+        let w = Variable::from_array(NdArray::from_slice(&[2, 2], &[1., 0., 0., 1.]), true);
+        let y = Op::Affine.apply(&[&x, &w]).unwrap();
+        assert_eq!(y.data().data(), &[1., 2.]);
+        crate::functions::mean_all(&y).backward();
+        assert!(w.grad().norm2() > 0.0);
+        assert_eq!(y.function_names(), vec!["Affine"]);
+    }
+
+    #[test]
+    fn apply_rejects_wrong_arity() {
+        let x = Variable::from_array(NdArray::zeros(&[1, 2]), false);
+        let err = Op::Affine.apply(&[&x]).unwrap_err();
+        assert!(err.contains("Affine"), "{err}");
+        assert!(Op::ReLU.apply(&[&x, &x]).is_err());
+    }
+
+    #[test]
+    fn execute_matches_apply() {
+        let a = NdArray::from_slice(&[3], &[1., -2., 3.]);
+        let out = Op::ReLU.execute(&[&a]).unwrap();
+        assert_eq!(out.data(), &[1., 0., 3.]);
+    }
+
+    #[test]
+    fn execute_dropout_is_inference_noop() {
+        let a = NdArray::from_slice(&[4], &[1., 2., 3., 4.]);
+        let out = Op::Dropout { p: 0.9 }.execute(&[&a]).unwrap();
+        assert_eq!(out.data(), a.data());
+    }
+
+    #[test]
+    fn execute_reshape_resolves_spec() {
+        let a = NdArray::zeros(&[2, 3, 4]);
+        let out = Op::Reshape { dims: vec![0, -1] }.execute(&[&a]).unwrap();
+        assert_eq!(out.dims(), &[2, 12]);
     }
 }

@@ -15,8 +15,10 @@ pub mod interpreter;
 pub mod ir;
 pub mod nntxt;
 pub mod params;
+pub mod trace;
 
 pub use ir::{Layer, NetworkDef, Op, TensorDef};
+pub use trace::trace;
 
 use crate::tensor::NdArray;
 use std::collections::HashMap;

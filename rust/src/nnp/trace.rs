@@ -1,0 +1,321 @@
+//! `nnp::trace` — export any define-by-run graph directly to the NNP
+//! IR, with **zero dual bookkeeping**.
+//!
+//! Because every tape node carries its [`Op`] descriptor (see
+//! [`crate::graph::Variable::from_function`]) and every `PF::*`
+//! parameter is registered under a canonical name, the tape is
+//! self-describing: walking it from the outputs yields the complete
+//! [`NetworkDef`] — layers with typed attributes, activation tensors,
+//! parameter references, and network inputs. A graph built purely from
+//! `F::*` / `PF::*` calls (Listing 1 style, no builder) therefore
+//! exports to NNP / ONNX / NNB exactly like one built through
+//! [`crate::models::Gb`] — which is itself now a thin convenience
+//! wrapper over this function.
+
+use std::collections::{HashMap, HashSet};
+
+use crate::graph::Variable;
+use crate::parametric;
+
+use super::ir::{Layer, NetworkDef, TensorDef};
+
+/// Walk the tape backwards from `outputs` and emit the network IR.
+///
+/// - **Parameters** are recognized by identity against the global
+///   parameter registry and recorded by their registry names (in the
+///   op-defined input order: `W[, b]`, `beta, gamma, mean, var`, …).
+/// - **Network inputs** are the remaining leaf variables, named by
+///   their [`Variable::name`] (set one with `set_name`) or `in<N>`.
+/// - **Activations** are named by their variable name or `t<N>`.
+/// - **Layer names** derive from the parameter scope (`c1/conv/W` →
+///   layer `c1`) or `<op>_<index>` for parameter-free functions.
+///
+/// Dropout recorded via `F::dropout_inference` (eval graphs) traces to
+/// an [`super::ir::Op::Dropout`] layer that the interpreter treats as a
+/// no-op; train-mode graphs (sampled dropout, batch-stat BN) trace to
+/// the same descriptors with deployment semantics, so trace eval-mode
+/// graphs when you need bit-identical round-trips.
+pub fn trace(name: &str, outputs: &[&Variable]) -> Result<NetworkDef, String> {
+    // parameter identity -> registry name
+    let mut param_names: HashMap<usize, String> = HashMap::new();
+    for (pname, v) in parametric::get_parameters() {
+        param_names.insert(v.uid(), pname);
+    }
+
+    // topological order over every function node reachable from the
+    // outputs (iterative DFS — tapes can be very deep)
+    enum Step {
+        Visit(Variable),
+        Emit(Variable),
+    }
+    let mut order: Vec<Variable> = Vec::new();
+    let mut seen: HashSet<usize> = HashSet::new();
+    let mut stack: Vec<Step> =
+        outputs.iter().rev().map(|v| Step::Visit((*v).clone())).collect();
+    while let Some(step) = stack.pop() {
+        match step {
+            Step::Visit(v) => {
+                if !seen.insert(v.uid()) {
+                    continue;
+                }
+                if !v.is_leaf() {
+                    stack.push(Step::Emit(v.clone()));
+                    for inp in v.creator_inputs().into_iter().rev() {
+                        stack.push(Step::Visit(inp));
+                    }
+                }
+            }
+            Step::Emit(v) => order.push(v),
+        }
+    }
+
+    let mut def = NetworkDef { name: name.to_string(), ..Default::default() };
+    let mut tensor_names: HashMap<usize, String> = HashMap::new();
+    let mut used: HashSet<String> = HashSet::new();
+    fn unique(used: &mut HashSet<String>, base: String) -> String {
+        if used.insert(base.clone()) {
+            return base;
+        }
+        let mut i = 2;
+        loop {
+            let cand = format!("{base}_{i}");
+            if used.insert(cand.clone()) {
+                return cand;
+            }
+            i += 1;
+        }
+    }
+
+    // Gb's auto-assigned tensor names (`t<N>`) are not meaningful as
+    // layer names; anything else the user chose is.
+    fn is_auto_name(n: &str) -> bool {
+        n.len() > 1 && n.starts_with('t') && n[1..].chars().all(|c| c.is_ascii_digit())
+    }
+
+    let mut input_count = 0usize;
+    let mut act_count = 0usize;
+    for (idx, v) in order.iter().enumerate() {
+        let op = v.creator_op().expect("topo order yields non-leaves");
+        let mut layer_inputs: Vec<String> = Vec::new();
+        let mut layer_params: Vec<String> = Vec::new();
+        for inp in v.creator_inputs() {
+            if let Some(pname) = param_names.get(&inp.uid()) {
+                layer_params.push(pname.clone());
+                continue;
+            }
+            // The IR stores a layer's operands as activations followed
+            // by parameters (the order Op::apply re-applies them in).
+            // A parameter *preceding* an activation (e.g. Sub2(param, x))
+            // cannot be represented without silently reordering the
+            // operands — reject it instead of exporting a different
+            // function.
+            if !layer_params.is_empty() {
+                return Err(format!(
+                    "trace: '{}' has an activation input after a parameter input; \
+                     parameter-leading operand orders are not representable in the IR \
+                     (wrap the parameter in F::identity to lift it to an activation)",
+                    op.name()
+                ));
+            }
+            let tname = match tensor_names.get(&inp.uid()) {
+                Some(t) => t.clone(),
+                None => {
+                    if !inp.is_leaf() {
+                        return Err(format!(
+                            "trace: tape ordering error at '{}' (non-leaf input unseen)",
+                            op.name()
+                        ));
+                    }
+                    // a fresh leaf: this is a network input
+                    let base = if inp.name().is_empty() {
+                        input_count += 1;
+                        format!("in{}", input_count - 1)
+                    } else {
+                        inp.name()
+                    };
+                    let t = unique(&mut used, base);
+                    tensor_names.insert(inp.uid(), t.clone());
+                    def.inputs.push(TensorDef { name: t.clone(), dims: inp.dims() });
+                    t
+                }
+            };
+            layer_inputs.push(tname);
+        }
+        // output tensor name
+        let base = if v.name().is_empty() {
+            act_count += 1;
+            format!("t{act_count}")
+        } else {
+            v.name()
+        };
+        let out_name = unique(&mut used, base);
+        tensor_names.insert(v.uid(), out_name.clone());
+        // layer name: parameter scope, else the user-chosen output
+        // tensor name (Gb's named ops / set_name), else op + topo index
+        let layer_name = match layer_params.first() {
+            Some(first) => {
+                let parts: Vec<&str> = first.split('/').collect();
+                if parts.len() >= 3 {
+                    parts[..parts.len() - 2].join("/")
+                } else if parts.len() == 2 {
+                    parts[0].to_string()
+                } else {
+                    format!("{}_{idx}", op.name().to_lowercase())
+                }
+            }
+            None => {
+                let n = v.name();
+                if !n.is_empty() && !is_auto_name(&n) {
+                    n
+                } else {
+                    format!("{}_{idx}", op.name().to_lowercase())
+                }
+            }
+        };
+        def.layers.push(Layer {
+            name: layer_name,
+            op,
+            inputs: layer_inputs,
+            params: layer_params,
+            outputs: vec![out_name],
+        });
+    }
+
+    for o in outputs {
+        let t = tensor_names.get(&o.uid()).ok_or_else(|| {
+            "trace: output variable is a leaf (no function ever produced it)".to_string()
+        })?;
+        def.outputs.push(t.clone());
+    }
+    def.validate()?;
+    Ok(def)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::functions as F;
+    use crate::nnp::interpreter;
+    use crate::nnp::ir::Op;
+    use crate::parametric as PF;
+    use crate::tensor::{NdArray, Rng};
+    use std::collections::HashMap;
+
+    fn reset() {
+        PF::clear_parameters();
+        PF::seed_parameter_rng(11);
+    }
+
+    #[test]
+    fn traces_pure_functional_graph() {
+        reset();
+        let x = Variable::new(&[2, 6], false);
+        x.set_name("x");
+        let h = PF::affine(&x, 4, "fc1");
+        let h = F::relu(&h);
+        let y = PF::affine(&h, 3, "fc2");
+        let def = trace("mlp", &[&y]).unwrap();
+        assert_eq!(def.inputs.len(), 1);
+        assert_eq!(def.inputs[0].name, "x");
+        assert_eq!(def.inputs[0].dims, vec![2, 6]);
+        assert_eq!(def.layers.len(), 3);
+        assert_eq!(def.layers[0].name, "fc1");
+        assert_eq!(def.layers[0].op, Op::Affine);
+        assert_eq!(def.layers[0].params, vec!["fc1/affine/W", "fc1/affine/b"]);
+        assert_eq!(def.layers[1].op, Op::ReLU);
+        assert_eq!(def.layers[2].name, "fc2");
+        assert_eq!(def.outputs.len(), 1);
+        assert!(def.validate().is_ok());
+    }
+
+    #[test]
+    fn traced_graph_runs_bit_identical_in_interpreter() {
+        reset();
+        let mut rng = Rng::new(21);
+        let x = Variable::from_array(rng.randn(&[3, 8], 1.0), false);
+        x.set_name("x");
+        let h = PF::affine(&x, 5, "l1");
+        let h = F::tanh(&h);
+        let y = PF::affine(&h, 2, "l2");
+        let def = trace("net", &[&y]).unwrap();
+
+        let params: HashMap<String, NdArray> =
+            PF::get_parameters().into_iter().map(|(n, v)| (n, v.data())).collect();
+        let mut inputs = HashMap::new();
+        inputs.insert("x".to_string(), x.data());
+        let out = interpreter::run(&def, &inputs, &params).unwrap();
+        assert_eq!(out[0].data(), y.data().data(), "interpreter must be bit-identical");
+    }
+
+    #[test]
+    fn shared_input_traces_once() {
+        reset();
+        let x = Variable::from_array(NdArray::full(&[1, 2], 2.0), false);
+        x.set_name("x");
+        let a = F::mul(&x, &x);
+        let y = F::add(&a, &x);
+        let def = trace("shared", &[&y]).unwrap();
+        assert_eq!(def.inputs.len(), 1); // x appears once
+        assert_eq!(def.layers.len(), 2);
+        assert_eq!(def.layers[0].inputs, vec!["x", "x"]);
+    }
+
+    #[test]
+    fn unnamed_inputs_get_generated_names() {
+        reset();
+        let x = Variable::new(&[1, 3], false);
+        let y = F::relu(&x);
+        let def = trace("anon", &[&y]).unwrap();
+        assert_eq!(def.inputs[0].name, "in0");
+    }
+
+    #[test]
+    fn leaf_output_is_an_error() {
+        reset();
+        let x = Variable::new(&[1], false);
+        assert!(trace("bad", &[&x]).is_err());
+    }
+
+    #[test]
+    fn multi_output_graphs_trace() {
+        reset();
+        let x = Variable::new(&[2, 4], false);
+        x.set_name("x");
+        let h = PF::affine(&x, 4, "body");
+        let y1 = F::relu(&h);
+        let y2 = F::sigmoid(&h);
+        let def = trace("two_heads", &[&y1, &y2]).unwrap();
+        assert_eq!(def.outputs.len(), 2);
+        assert_eq!(def.layers.len(), 3);
+    }
+
+    #[test]
+    fn param_before_activation_is_rejected_not_reordered() {
+        // Sub2(param, x) cannot be stored as activations-first without
+        // changing the computed function — trace must refuse.
+        reset();
+        let s = PF::get_or_create_parameter("s", &[1, 2], |_| NdArray::ones(&[1, 2]), true);
+        let x = Variable::new(&[1, 2], false);
+        x.set_name("x");
+        let y = F::sub(&s, &x);
+        let err = trace("bad_order", &[&y]).unwrap_err();
+        assert!(err.contains("parameter-leading"), "{err}");
+        // the representable order traces fine
+        let y2 = F::sub(&x, &s);
+        assert!(trace("good_order", &[&y2]).is_ok());
+    }
+
+    #[test]
+    fn batch_norm_params_in_op_order() {
+        reset();
+        let x = Variable::new(&[2, 3, 4, 4], false);
+        x.set_name("x");
+        let y = PF::batch_normalization(&x, false, "bn1");
+        let def = trace("bn", &[&y]).unwrap();
+        assert_eq!(def.layers[0].name, "bn1");
+        assert_eq!(
+            def.layers[0].params,
+            vec!["bn1/bn/beta", "bn1/bn/gamma", "bn1/bn/mean", "bn1/bn/var"]
+        );
+    }
+}

@@ -1,113 +1,163 @@
 //! `StaticExecutable`: one AOT-compiled HLO program, compiled once at
 //! load time and executed many times from the training/serving hot
 //! path. Wraps the PJRT CPU client of the `xla` crate.
-
-use anyhow::{anyhow, Context, Result};
-
-use crate::tensor::NdArray;
+//!
+//! The `xla` crate links native XLA libraries and is not available in
+//! offline builds, so the real implementation is gated behind the
+//! `pjrt` cargo feature. Without it, [`StaticExecutable::load`] returns
+//! a clean error and every caller falls back to (or skips to) the
+//! dynamic tape engine — the framework's other backend.
 
 use super::artifact::{ArtifactSpec, Manifest};
 
-/// A compiled artifact bound to a PJRT client.
-pub struct StaticExecutable {
-    spec: ArtifactSpec,
-    client: xla::PjRtClient,
-    exe: xla::PjRtLoadedExecutable,
+#[cfg(feature = "pjrt")]
+mod imp {
+    use anyhow::{anyhow, Context, Result};
+
+    use super::{ArtifactSpec, Manifest};
+    use crate::tensor::NdArray;
+
+    /// A compiled artifact bound to a PJRT client.
+    pub struct StaticExecutable {
+        spec: ArtifactSpec,
+        client: xla::PjRtClient,
+        exe: xla::PjRtLoadedExecutable,
+    }
+
+    impl StaticExecutable {
+        /// Load + compile `name` from the manifest. Compilation happens
+        /// once here; `execute` afterwards is pure run.
+        pub fn load(manifest: &Manifest, name: &str) -> Result<Self> {
+            let spec = manifest.get(name).map_err(|e| anyhow!(e))?.clone();
+            let hlo_path = manifest.hlo_path(&spec);
+            let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+            let proto = xla::HloModuleProto::from_text_file(&hlo_path)
+                .with_context(|| format!("loading HLO text {}", hlo_path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp).context("compiling HLO")?;
+            Ok(StaticExecutable { spec, client, exe })
+        }
+
+        pub fn spec(&self) -> &ArtifactSpec {
+            &self.spec
+        }
+
+        /// Host → device: literal for one input tensor.
+        fn literal_for(&self, spec_idx: usize, a: &NdArray) -> Result<xla::Literal> {
+            let spec = &self.spec.inputs[spec_idx];
+            anyhow::ensure!(
+                a.dims() == spec.dims.as_slice(),
+                "input '{}' shape {:?} != expected {:?}",
+                spec.name,
+                a.dims(),
+                spec.dims
+            );
+            let lit = xla::Literal::vec1(a.data());
+            let dims: Vec<i64> = a.dims().iter().map(|&d| d as i64).collect();
+            Ok(lit.reshape(&dims)?)
+        }
+
+        /// Execute with inputs in manifest order (params..., data...).
+        /// Returns outputs in manifest order.
+        pub fn execute(&self, inputs: &[NdArray]) -> Result<Vec<NdArray>> {
+            anyhow::ensure!(
+                inputs.len() == self.spec.inputs.len(),
+                "artifact '{}' takes {} inputs, got {}",
+                self.spec.name,
+                self.spec.inputs.len(),
+                inputs.len()
+            );
+            let literals: Vec<xla::Literal> = inputs
+                .iter()
+                .enumerate()
+                .map(|(i, a)| self.literal_for(i, a))
+                .collect::<Result<_>>()?;
+            let result = self.exe.execute::<xla::Literal>(&literals)?;
+            let tuple = result[0][0].to_literal_sync()?;
+            self.unpack_outputs(tuple)
+        }
+
+        fn unpack_outputs(&self, tuple: xla::Literal) -> Result<Vec<NdArray>> {
+            // jax lowers with return_tuple=True: always a tuple literal
+            let parts = tuple.to_tuple()?;
+            anyhow::ensure!(
+                parts.len() == self.spec.outputs.len(),
+                "artifact '{}' returned {} outputs, manifest declares {}",
+                self.spec.name,
+                parts.len(),
+                self.spec.outputs.len()
+            );
+            parts
+                .into_iter()
+                .zip(&self.spec.outputs)
+                .map(|(lit, ospec)| {
+                    // convert (e.g. bf16 outputs) to f32 before reading back
+                    let lit = lit.convert(xla::PrimitiveType::F32)?;
+                    let v = lit.to_vec::<f32>()?;
+                    anyhow::ensure!(
+                        v.len() == ospec.size(),
+                        "output '{}' has {} elems, expected {:?}",
+                        ospec.name,
+                        v.len(),
+                        ospec.dims
+                    );
+                    Ok(NdArray::from_vec(&ospec.dims, v))
+                })
+                .collect()
+        }
+
+        /// Device info string (for logs / Console records).
+        pub fn platform(&self) -> String {
+            format!("{} ({} devices)", self.client.platform_name(), self.client.device_count())
+        }
+    }
+
+    // PJRT CPU client handles are safe to move across threads (the C API
+    // is thread-safe for execution); the wrapper types just lack the
+    // auto-trait because of raw pointers. Workers each own their own
+    // executable anyway.
+    unsafe impl Send for StaticExecutable {}
 }
 
-impl StaticExecutable {
-    /// Load + compile `name` from the manifest. Compilation happens
-    /// once here; `execute` afterwards is pure run.
-    pub fn load(manifest: &Manifest, name: &str) -> Result<Self> {
-        let spec = manifest.get(name).map_err(|e| anyhow!(e))?.clone();
-        let hlo_path = manifest.hlo_path(&spec);
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        let proto = xla::HloModuleProto::from_text_file(&hlo_path)
-            .with_context(|| format!("loading HLO text {}", hlo_path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = client.compile(&comp).context("compiling HLO")?;
-        Ok(StaticExecutable { spec, client, exe })
+#[cfg(not(feature = "pjrt"))]
+mod imp {
+    use anyhow::{anyhow, bail, Result};
+
+    use super::{ArtifactSpec, Manifest};
+    use crate::tensor::NdArray;
+
+    /// Stub: the `pjrt` feature is off, so the static backend reports
+    /// itself unavailable instead of linking the `xla` crate.
+    pub struct StaticExecutable {
+        spec: ArtifactSpec,
     }
 
-    pub fn spec(&self) -> &ArtifactSpec {
-        &self.spec
-    }
+    impl StaticExecutable {
+        pub fn load(manifest: &Manifest, name: &str) -> Result<Self> {
+            // still validate the artifact reference so callers get the
+            // most specific error first
+            let _spec = manifest.get(name).map_err(|e| anyhow!(e))?;
+            bail!(
+                "static PJRT runtime unavailable for artifact '{name}': \
+                 built without the `pjrt` cargo feature (use the dynamic engine instead)"
+            )
+        }
 
-    /// Host → device: literal for one input tensor.
-    fn literal_for(&self, spec_idx: usize, a: &NdArray) -> Result<xla::Literal> {
-        let spec = &self.spec.inputs[spec_idx];
-        anyhow::ensure!(
-            a.dims() == spec.dims.as_slice(),
-            "input '{}' shape {:?} != expected {:?}",
-            spec.name,
-            a.dims(),
-            spec.dims
-        );
-        let lit = xla::Literal::vec1(a.data());
-        let dims: Vec<i64> = a.dims().iter().map(|&d| d as i64).collect();
-        Ok(lit.reshape(&dims)?)
-    }
+        pub fn spec(&self) -> &ArtifactSpec {
+            &self.spec
+        }
 
-    /// Execute with inputs in manifest order (params..., data...).
-    /// Returns outputs in manifest order.
-    pub fn execute(&self, inputs: &[NdArray]) -> Result<Vec<NdArray>> {
-        anyhow::ensure!(
-            inputs.len() == self.spec.inputs.len(),
-            "artifact '{}' takes {} inputs, got {}",
-            self.spec.name,
-            self.spec.inputs.len(),
-            inputs.len()
-        );
-        let literals: Vec<xla::Literal> = inputs
-            .iter()
-            .enumerate()
-            .map(|(i, a)| self.literal_for(i, a))
-            .collect::<Result<_>>()?;
-        let result = self.exe.execute::<xla::Literal>(&literals)?;
-        let tuple = result[0][0].to_literal_sync()?;
-        self.unpack_outputs(tuple)
-    }
+        pub fn execute(&self, _inputs: &[NdArray]) -> Result<Vec<NdArray>> {
+            bail!("static PJRT runtime unavailable: built without the `pjrt` cargo feature")
+        }
 
-    fn unpack_outputs(&self, tuple: xla::Literal) -> Result<Vec<NdArray>> {
-        // jax lowers with return_tuple=True: always a tuple literal
-        let parts = tuple.to_tuple()?;
-        anyhow::ensure!(
-            parts.len() == self.spec.outputs.len(),
-            "artifact '{}' returned {} outputs, manifest declares {}",
-            self.spec.name,
-            parts.len(),
-            self.spec.outputs.len()
-        );
-        parts
-            .into_iter()
-            .zip(&self.spec.outputs)
-            .map(|(lit, ospec)| {
-                // convert (e.g. bf16 outputs) to f32 before reading back
-                let lit = lit.convert(xla::PrimitiveType::F32)?;
-                let v = lit.to_vec::<f32>()?;
-                anyhow::ensure!(
-                    v.len() == ospec.size(),
-                    "output '{}' has {} elems, expected {:?}",
-                    ospec.name,
-                    v.len(),
-                    ospec.dims
-                );
-                Ok(NdArray::from_vec(&ospec.dims, v))
-            })
-            .collect()
-    }
-
-    /// Device info string (for logs / Console records).
-    pub fn platform(&self) -> String {
-        format!("{} ({} devices)", self.client.platform_name(), self.client.device_count())
+        pub fn platform(&self) -> String {
+            "pjrt (disabled at build time)".to_string()
+        }
     }
 }
 
-// PJRT CPU client handles are safe to move across threads (the C API
-// is thread-safe for execution); the wrapper types just lack the
-// auto-trait because of raw pointers. Workers each own their own
-// executable anyway.
-unsafe impl Send for StaticExecutable {}
+pub use imp::StaticExecutable;
 
 #[cfg(test)]
 mod tests {

@@ -3,6 +3,10 @@
 //! C API via the `xla` crate. This is the paper's "speed-optimized
 //! backend" — the `cudnn` extension context of Listing 2 mapped to
 //! XLA-CPU. Python never runs here.
+//!
+//! Requires the `pjrt` cargo feature (the `xla` crate links native XLA
+//! libraries); without it [`StaticExecutable`] is a stub that reports
+//! the backend unavailable and callers use the dynamic engine.
 
 pub mod artifact;
 pub mod executable;

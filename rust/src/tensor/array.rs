@@ -1,16 +1,24 @@
 //! `NdArray`: contiguous row-major f32 buffer + shape + storage dtype.
 
+use std::sync::Arc;
+
 use super::{DType, Shape};
 
 /// The core dense tensor. Data is always `Vec<f32>`; the `dtype` tag
 /// controls *storage* precision: writes through the quantizing
 /// constructors/setters round values to the dtype's grid, simulating
 /// half-precision storage (paper §3.3) with f32 compute.
+///
+/// Storage is **copy-on-write**: `clone()` (and therefore
+/// `Variable::data()` and the tape's per-node input gathering) is an
+/// O(1) `Arc` bump; the buffer is only copied when a mutation hits a
+/// shared array. Value semantics are unchanged — `Arc<Vec<f32>>` keeps
+/// arrays `Send + Sync` for the data-parallel communicator.
 #[derive(Debug, Clone, PartialEq)]
 pub struct NdArray {
     shape: Shape,
     dtype: DType,
-    data: Vec<f32>,
+    data: Arc<Vec<f32>>,
 }
 
 impl NdArray {
@@ -20,14 +28,14 @@ impl NdArray {
     pub fn zeros(dims: &[usize]) -> Self {
         let shape = Shape::new(dims);
         let n = shape.size();
-        NdArray { shape, dtype: DType::F32, data: vec![0.0; n] }
+        NdArray { shape, dtype: DType::F32, data: Arc::new(vec![0.0; n]) }
     }
 
     /// All elements set to `v` (f32).
     pub fn full(dims: &[usize], v: f32) -> Self {
         let shape = Shape::new(dims);
         let n = shape.size();
-        NdArray { shape, dtype: DType::F32, data: vec![v; n] }
+        NdArray { shape, dtype: DType::F32, data: Arc::new(vec![v; n]) }
     }
 
     /// Ones of the given shape (f32).
@@ -37,14 +45,14 @@ impl NdArray {
 
     /// Scalar (rank-0) array.
     pub fn scalar(v: f32) -> Self {
-        NdArray { shape: Shape::scalar(), dtype: DType::F32, data: vec![v] }
+        NdArray { shape: Shape::scalar(), dtype: DType::F32, data: Arc::new(vec![v]) }
     }
 
     /// From a flat vec; panics if `data.len() != product(dims)`.
     pub fn from_vec(dims: &[usize], data: Vec<f32>) -> Self {
         let shape = Shape::new(dims);
         assert_eq!(shape.size(), data.len(), "shape {shape} does not match data len {}", data.len());
-        NdArray { shape, dtype: DType::F32, data }
+        NdArray { shape, dtype: DType::F32, data: Arc::new(data) }
     }
 
     /// From a flat slice.
@@ -84,15 +92,17 @@ impl NdArray {
         &self.data
     }
 
-    /// Mutable raw access. NOTE: bypasses dtype quantization; callers
-    /// that write through this on a half-storage array should finish
-    /// with [`NdArray::requantize`].
+    /// Mutable raw access (copy-on-write: a shared buffer is copied
+    /// here first). NOTE: bypasses dtype quantization; callers that
+    /// write through this on a half-storage array should finish with
+    /// [`NdArray::requantize`]. Hoist the returned slice out of inner
+    /// loops — each call re-checks buffer uniqueness.
     pub fn data_mut(&mut self) -> &mut [f32] {
-        &mut self.data
+        Arc::make_mut(&mut self.data)
     }
 
     pub fn into_vec(self) -> Vec<f32> {
-        self.data
+        Arc::try_unwrap(self.data).unwrap_or_else(|shared| (*shared).clone())
     }
 
     /// Element access by multi-index.
@@ -103,7 +113,7 @@ impl NdArray {
     /// Element write by multi-index (quantized to the storage dtype).
     pub fn set(&mut self, idx: &[usize], v: f32) {
         let i = self.shape.flat_index(idx);
-        self.data[i] = self.dtype.quantize(v);
+        Arc::make_mut(&mut self.data)[i] = self.dtype.quantize(v);
     }
 
     /// Scalar value of a size-1 array.
@@ -116,16 +126,17 @@ impl NdArray {
 
     /// Cast to a storage dtype (quantizes every element).
     pub fn cast(&self, dtype: DType) -> NdArray {
-        let data = self.data.iter().map(|&v| dtype.quantize(v)).collect();
-        NdArray { shape: self.shape.clone(), dtype, data }
+        let data: Vec<f32> = self.data.iter().map(|&v| dtype.quantize(v)).collect();
+        NdArray { shape: self.shape.clone(), dtype, data: Arc::new(data) }
     }
 
     /// Re-apply this array's dtype quantization in place (after raw
     /// writes through `data_mut`).
     pub fn requantize(&mut self) {
         if self.dtype != DType::F32 {
-            for v in &mut self.data {
-                *v = self.dtype.quantize(*v);
+            let dtype = self.dtype;
+            for v in Arc::make_mut(&mut self.data) {
+                *v = dtype.quantize(*v);
             }
         }
     }
@@ -172,7 +183,7 @@ impl NdArray {
             }
             *slot = self.data[src];
         }
-        NdArray { shape: out_shape, dtype: self.dtype, data }
+        NdArray { shape: out_shape, dtype: self.dtype, data: Arc::new(data) }
     }
 
     /// 2-D transpose shorthand.
@@ -194,7 +205,7 @@ impl NdArray {
         for (i, slot) in data.iter_mut().enumerate() {
             *slot = self.data[self.shape.broadcast_source_index(&target, i)];
         }
-        NdArray { shape: target, dtype: self.dtype, data }
+        NdArray { shape: target, dtype: self.dtype, data: Arc::new(data) }
     }
 
     /// Concatenate along `axis`.
@@ -222,7 +233,7 @@ impl NdArray {
                 data.extend_from_slice(&p.data[start..start + pa * inner]);
             }
         }
-        NdArray { shape: Shape::new(&out_dims), dtype: parts[0].dtype, data }
+        NdArray { shape: Shape::new(&out_dims), dtype: parts[0].dtype, data: Arc::new(data) }
     }
 
     /// Slice `[start, stop)` along `axis`.
@@ -238,7 +249,7 @@ impl NdArray {
             let base = o * a * inner;
             data.extend_from_slice(&self.data[base + start * inner..base + stop * inner]);
         }
-        NdArray { shape: Shape::new(&out_dims), dtype: self.dtype, data }
+        NdArray { shape: Shape::new(&out_dims), dtype: self.dtype, data: Arc::new(data) }
     }
 
     // -------------------------------------------------------------- stats

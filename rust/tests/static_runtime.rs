@@ -4,20 +4,37 @@
 use nnl::runtime::{Manifest, StaticExecutable};
 use nnl::tensor::{ops, NdArray, Rng};
 
-fn manifest() -> Manifest {
+/// Loads the manifest and compiles `name`. With the `pjrt` feature on
+/// (the configuration these tests exist for) a missing manifest or a
+/// failed load is a hard failure — no silent green. Without it the
+/// tests are `#[ignore]`d anyway; the `None` path only soft-skips when
+/// someone forces ignored tests in a stub build.
+fn load_exe(name: &str) -> Option<StaticExecutable> {
     let dir = Manifest::default_dir();
-    assert!(
-        dir.join("manifest.json").exists(),
-        "artifacts missing — run `make artifacts` first (looked in {})",
-        dir.display()
-    );
-    Manifest::load(&dir).unwrap()
+    if !dir.join("manifest.json").exists() {
+        assert!(
+            !cfg!(feature = "pjrt"),
+            "artifacts missing — run `make artifacts` first (looked in {})",
+            dir.display()
+        );
+        eprintln!("skipping: artifacts missing — run `make artifacts` (looked in {})", dir.display());
+        return None;
+    }
+    let m = Manifest::load(&dir).unwrap();
+    match StaticExecutable::load(&m, name) {
+        Ok(exe) => Some(exe),
+        Err(e) => {
+            assert!(!cfg!(feature = "pjrt"), "static runtime failed to load '{name}': {e}");
+            eprintln!("skipping: static runtime unavailable: {e}");
+            None
+        }
+    }
 }
 
 #[test]
+#[cfg_attr(not(feature = "pjrt"), ignore = "static PJRT runtime not built (enable the `pjrt` feature)")]
 fn matmul_artifact_matches_rust_matmul() {
-    let m = manifest();
-    let exe = StaticExecutable::load(&m, "matmul_f32_256").unwrap();
+    let Some(exe) = load_exe("matmul_f32_256") else { return };
     let mut rng = Rng::new(1);
     let a = rng.randn(&[256, 256], 1.0);
     let b = rng.randn(&[256, 256], 1.0);
@@ -31,9 +48,9 @@ fn matmul_artifact_matches_rust_matmul() {
 }
 
 #[test]
+#[cfg_attr(not(feature = "pjrt"), ignore = "static PJRT runtime not built (enable the `pjrt` feature)")]
 fn matmul_bf16_artifact_quantizes_inputs() {
-    let m = manifest();
-    let exe = StaticExecutable::load(&m, "matmul_bf16_256").unwrap();
+    let Some(exe) = load_exe("matmul_bf16_256") else { return };
     let mut rng = Rng::new(2);
     let a = rng.randn(&[256, 256], 1.0);
     let b = rng.randn(&[256, 256], 1.0);
@@ -54,9 +71,9 @@ fn matmul_bf16_artifact_quantizes_inputs() {
 }
 
 #[test]
+#[cfg_attr(not(feature = "pjrt"), ignore = "static PJRT runtime not built (enable the `pjrt` feature)")]
 fn mlp_train_step_returns_grads_and_loss() {
-    let m = manifest();
-    let exe = StaticExecutable::load(&m, "mlp_train_f32_b32").unwrap();
+    let Some(exe) = load_exe("mlp_train_f32_b32") else { return };
     let spec = exe.spec().clone();
     let params = spec.init_params();
     let mut rng = Rng::new(3);
@@ -82,9 +99,9 @@ fn mlp_train_step_returns_grads_and_loss() {
 }
 
 #[test]
+#[cfg_attr(not(feature = "pjrt"), ignore = "static PJRT runtime not built (enable the `pjrt` feature)")]
 fn mlp_loss_scaling_scales_grads_linearly() {
-    let m = manifest();
-    let exe = StaticExecutable::load(&m, "mlp_train_f32_b32").unwrap();
+    let Some(exe) = load_exe("mlp_train_f32_b32") else { return };
     let params = exe.spec().init_params();
     let mut rng = Rng::new(4);
     let x = rng.randn(&[32, 64], 1.0);
@@ -106,10 +123,10 @@ fn mlp_loss_scaling_scales_grads_linearly() {
 }
 
 #[test]
+#[cfg_attr(not(feature = "pjrt"), ignore = "static PJRT runtime not built (enable the `pjrt` feature)")]
 fn static_mlp_training_reduces_loss() {
     // mini end-to-end: 30 SGD steps on a separable synthetic problem
-    let m = manifest();
-    let exe = StaticExecutable::load(&m, "mlp_train_f32_b32").unwrap();
+    let Some(exe) = load_exe("mlp_train_f32_b32") else { return };
     let mut params: Vec<NdArray> =
         exe.spec().init_params().into_iter().map(|(_, a)| a).collect();
     let mut rng = Rng::new(5);
@@ -147,9 +164,9 @@ fn static_mlp_training_reduces_loss() {
 }
 
 #[test]
+#[cfg_attr(not(feature = "pjrt"), ignore = "static PJRT runtime not built (enable the `pjrt` feature)")]
 fn infer_artifact_shapes() {
-    let m = manifest();
-    let exe = StaticExecutable::load(&m, "mlp_infer_f32_b32").unwrap();
+    let Some(exe) = load_exe("mlp_infer_f32_b32") else { return };
     let params = exe.spec().init_params();
     let mut rng = Rng::new(6);
     let mut inputs: Vec<NdArray> = params.into_iter().map(|(_, a)| a).collect();
@@ -159,9 +176,9 @@ fn infer_artifact_shapes() {
 }
 
 #[test]
+#[cfg_attr(not(feature = "pjrt"), ignore = "static PJRT runtime not built (enable the `pjrt` feature)")]
 fn wrong_input_shape_rejected() {
-    let m = manifest();
-    let exe = StaticExecutable::load(&m, "matmul_f32_256").unwrap();
+    let Some(exe) = load_exe("matmul_f32_256") else { return };
     let a = NdArray::zeros(&[128, 256]);
     let b = NdArray::zeros(&[256, 256]);
     let err = exe.execute(&[a, b]).unwrap_err();

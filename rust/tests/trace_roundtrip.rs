@@ -1,0 +1,157 @@
+//! Integration: the self-describing tape. Graphs built *only* from
+//! `F::*` / `PF::*` calls (no builder) round-trip
+//! `trace` → `NetworkDef` → interpreter with outputs **bit-identical**
+//! to the live graph, and traced attributes survive the ONNX round
+//! trip — the acceptance criteria of the Function-descriptor redesign.
+
+use std::collections::HashMap;
+
+use nnl::converters::onnx_lite;
+use nnl::functions as F;
+use nnl::nnp::{interpreter, trace, Op};
+use nnl::parametric as PF;
+use nnl::tensor::{NdArray, Rng};
+use nnl::Variable;
+
+fn reset(seed: u64) {
+    PF::clear_parameters();
+    PF::seed_parameter_rng(seed);
+}
+
+fn registry_params() -> HashMap<String, NdArray> {
+    PF::get_parameters().into_iter().map(|(n, v)| (n, v.data())).collect()
+}
+
+/// LeNet exactly as Listing 4, but with raw `F::*`/`PF::*` calls — no
+/// `Gb` anywhere.
+fn lenet_functional(x: &Variable) -> Variable {
+    let h = PF::convolution(x, 16, (5, 5), (1, 1), (0, 0), "conv1");
+    let h = F::max_pooling(&h, (2, 2), (2, 2), (0, 0));
+    let h = F::relu(&h);
+    let h = PF::convolution(&h, 16, (5, 5), (1, 1), (0, 0), "conv2");
+    let h = F::max_pooling(&h, (2, 2), (2, 2), (0, 0));
+    let h = F::relu(&h);
+    let h = PF::affine(&h, 50, "affine3");
+    let h = F::relu(&h);
+    PF::affine(&h, 10, "affine4")
+}
+
+#[test]
+fn lenet_built_without_gb_roundtrips_bit_identical() {
+    reset(101);
+    let mut rng = Rng::new(7);
+    let input = rng.randn(&[2, 1, 28, 28], 1.0);
+    let x = Variable::from_array(input.clone(), false);
+    x.set_name("x");
+    let y = lenet_functional(&x);
+
+    let def = trace("lenet_fn", &[&y]).unwrap();
+    assert!(def.validate().is_ok());
+    assert_eq!(def.inputs[0].name, "x");
+    // all four parametric layers present with scope-derived names
+    for lname in ["conv1", "conv2", "affine3", "affine4"] {
+        assert!(def.layers.iter().any(|l| l.name == lname), "missing layer {lname}");
+    }
+
+    let mut inputs = HashMap::new();
+    inputs.insert("x".to_string(), input);
+    let out = interpreter::run(&def, &inputs, &registry_params()).unwrap();
+    assert_eq!(
+        out[0].data(),
+        y.data().data(),
+        "trace→NetworkDef→interpreter must be bit-identical to the live tape"
+    );
+}
+
+#[test]
+fn mlp_built_without_gb_roundtrips_bit_identical() {
+    reset(102);
+    let mut rng = Rng::new(8);
+    let input = rng.randn(&[4, 32], 1.0);
+    let x = Variable::from_array(input.clone(), false);
+    x.set_name("x");
+    let h = PF::affine(&x, 64, "fc1");
+    let h = F::relu(&h);
+    let h = F::dropout_inference(&h, 0.1); // eval-mode dropout, recorded
+    let h = PF::affine(&h, 16, "fc2");
+    let h = F::relu(&h);
+    let y = PF::affine(&h, 10, "out");
+
+    let def = trace("mlp_fn", &[&y]).unwrap();
+    assert!(def.layers.iter().any(|l| matches!(l.op, Op::Dropout { .. })));
+
+    let mut inputs = HashMap::new();
+    inputs.insert("x".to_string(), input);
+    let out = interpreter::run(&def, &inputs, &registry_params()).unwrap();
+    assert_eq!(out[0].data(), y.data().data());
+}
+
+#[test]
+fn traced_graph_is_batch_size_flexible() {
+    reset(103);
+    let x = Variable::new(&[4, 32], false);
+    x.set_name("x");
+    let h = PF::affine(&x, 8, "fc");
+    let y = F::relu(&h);
+    let def = trace("flex", &[&y]).unwrap();
+    // run the traced net at a different batch size
+    let mut inputs = HashMap::new();
+    inputs.insert("x".to_string(), NdArray::zeros(&[9, 32]));
+    let out = interpreter::run(&def, &inputs, &registry_params()).unwrap();
+    assert_eq!(out[0].dims(), &[9, 8]);
+}
+
+#[test]
+fn trace_to_onnx_preserves_conv_pool_norm_attributes() {
+    reset(104);
+    let x = Variable::new(&[1, 3, 16, 16], false);
+    x.set_name("x");
+    let h = PF::convolution(&x, 4, (3, 3), (2, 1), (1, 2), "c1");
+    let h = PF::batch_normalization(&h, false, "bn1");
+    let h = F::relu(&h);
+    let h = F::max_pooling(&h, (2, 2), (2, 2), (0, 0));
+    let h = F::average_pooling(&h, (3, 3), (1, 1), (1, 1), true);
+    let y = F::global_average_pooling(&h);
+
+    let def = trace("attrs", &[&y]).unwrap();
+    let onnx = onnx_lite::to_onnx(&def, &registry_params()).unwrap();
+    let (def2, _) = onnx_lite::from_onnx(&onnx).unwrap();
+
+    // conv / pool / norm attributes survive trace → ONNX → trace
+    let find = |d: &nnl::nnp::NetworkDef, pred: fn(&Op) -> bool| -> Op {
+        d.layers.iter().find(|l| pred(&l.op)).expect("op missing").op.clone()
+    };
+    let conv = |o: &Op| matches!(o, Op::Convolution { .. });
+    let maxp = |o: &Op| matches!(o, Op::MaxPool { .. });
+    let avgp = |o: &Op| matches!(o, Op::AvgPool { .. });
+    let bn = |o: &Op| matches!(o, Op::BatchNorm { .. });
+    assert_eq!(find(&def, conv), find(&def2, conv));
+    assert_eq!(
+        find(&def, conv),
+        Op::Convolution { stride: (2, 1), pad: (1, 2), dilation: (1, 1) }
+    );
+    assert_eq!(find(&def, maxp), find(&def2, maxp));
+    assert_eq!(find(&def, avgp), find(&def2, avgp));
+    assert_eq!(find(&def, bn), find(&def2, bn));
+    assert_eq!(find(&def, bn), Op::BatchNorm { eps: 1e-5 });
+}
+
+#[test]
+fn traced_residual_block_roundtrips() {
+    // diamond topology: shared input, add-join — the shape trace has to
+    // get right for ResNets
+    reset(105);
+    let mut rng = Rng::new(9);
+    let input = rng.randn(&[2, 4, 8, 8], 1.0);
+    let x = Variable::from_array(input.clone(), false);
+    x.set_name("x");
+    let r = PF::convolution(&x, 4, (3, 3), (1, 1), (1, 1), "c1");
+    let r = F::relu(&r);
+    let y = F::relu(&F::add(&r, &x));
+
+    let def = trace("res", &[&y]).unwrap();
+    let mut inputs = HashMap::new();
+    inputs.insert("x".to_string(), input);
+    let out = interpreter::run(&def, &inputs, &registry_params()).unwrap();
+    assert_eq!(out[0].data(), y.data().data());
+}

@@ -26,19 +26,36 @@ fn lenet_dynamic_learns_and_beats_chance() {
 }
 
 #[test]
+#[cfg_attr(not(feature = "pjrt"), ignore = "static PJRT runtime not built (enable the `pjrt` feature)")]
 fn static_resnet_learns() {
-    let manifest = Manifest::load(&Manifest::default_dir()).expect("run `make artifacts`");
+    let Ok(manifest) = Manifest::load(&Manifest::default_dir()) else {
+        assert!(!cfg!(feature = "pjrt"), "artifacts missing — run `make artifacts` first");
+        eprintln!("skipping: artifacts missing — run `make artifacts`");
+        return;
+    };
     let data = SyntheticImages::imagenet_mini(16);
     let cfg = TrainConfig { steps: 60, lr: 0.05, ..Default::default() };
     let report =
-        trainer::train_static(&manifest, "resnet_mini_train_f32_b16", &data, &cfg).unwrap();
+        match trainer::train_static(&manifest, "resnet_mini_train_f32_b16", &data, &cfg) {
+            Ok(r) => r,
+            Err(e) => {
+                assert!(!cfg!(feature = "pjrt"), "static runtime unavailable: {e}");
+                eprintln!("skipping: static runtime unavailable: {e}");
+                return;
+            }
+        };
     let first = report.losses.points()[0].1;
     assert!(report.final_loss() < first * 0.8, "{first} -> {}", report.final_loss());
 }
 
 #[test]
+#[cfg_attr(not(feature = "pjrt"), ignore = "static PJRT runtime not built (enable the `pjrt` feature)")]
 fn static_mixed_precision_with_dynamic_scaler() {
-    let manifest = Manifest::load(&Manifest::default_dir()).expect("run `make artifacts`");
+    let Ok(manifest) = Manifest::load(&Manifest::default_dir()) else {
+        assert!(!cfg!(feature = "pjrt"), "artifacts missing — run `make artifacts` first");
+        eprintln!("skipping: artifacts missing — run `make artifacts`");
+        return;
+    };
     let data = SyntheticImages::imagenet_mini(16);
     let cfg = TrainConfig {
         steps: 40,
@@ -47,7 +64,14 @@ fn static_mixed_precision_with_dynamic_scaler() {
         ..Default::default()
     };
     let report =
-        trainer::train_static(&manifest, "resnet_mini_train_bf16_b16", &data, &cfg).unwrap();
+        match trainer::train_static(&manifest, "resnet_mini_train_bf16_b16", &data, &cfg) {
+            Ok(r) => r,
+            Err(e) => {
+                assert!(!cfg!(feature = "pjrt"), "static runtime unavailable: {e}");
+                eprintln!("skipping: static runtime unavailable: {e}");
+                return;
+            }
+        };
     let first = report.losses.points()[0].1;
     assert!(
         report.final_loss() < first,
@@ -150,22 +174,41 @@ fn distributed_training_is_finite_and_learns() {
 }
 
 #[test]
+#[cfg_attr(not(feature = "pjrt"), ignore = "static PJRT runtime not built (enable the `pjrt` feature)")]
 fn static_train_then_static_eval_improves_accuracy() {
     // full loop: train artifact + matching infer artifact
-    let manifest = Manifest::load(&Manifest::default_dir()).expect("run `make artifacts`");
+    let Ok(manifest) = Manifest::load(&Manifest::default_dir()) else {
+        assert!(!cfg!(feature = "pjrt"), "artifacts missing — run `make artifacts` first");
+        eprintln!("skipping: artifacts missing — run `make artifacts`");
+        return;
+    };
     let data = SyntheticImages::imagenet_mini(16);
     // fresh-init accuracy
     let spec = manifest.get("resnet_mini_train_f32_b16").unwrap().clone();
     let init: Vec<NdArray> = spec.init_params().into_iter().map(|(_, a)| a).collect();
     let before =
-        trainer::evaluate_static(&manifest, "resnet_mini_infer_f32_b16", &init, &data, 4)
-            .unwrap();
+        match trainer::evaluate_static(&manifest, "resnet_mini_infer_f32_b16", &init, &data, 4) {
+            Ok(v) => v,
+            Err(e) => {
+                assert!(!cfg!(feature = "pjrt"), "static runtime unavailable: {e}");
+                eprintln!("skipping: static runtime unavailable: {e}");
+                return;
+            }
+        };
     // train
     let cfg = TrainConfig { steps: 80, lr: 0.05, ..Default::default() };
     let _report =
         trainer::train_static(&manifest, "resnet_mini_train_f32_b16", &data, &cfg).unwrap();
     // NOTE: train_static owns its params; retrain here inline to get them
-    let exe = nnl::runtime::StaticExecutable::load(&manifest, "resnet_mini_train_f32_b16").unwrap();
+    let exe =
+        match nnl::runtime::StaticExecutable::load(&manifest, "resnet_mini_train_f32_b16") {
+            Ok(exe) => exe,
+            Err(e) => {
+                assert!(!cfg!(feature = "pjrt"), "static runtime unavailable: {e}");
+                eprintln!("skipping: static runtime unavailable: {e}");
+                return;
+            }
+        };
     let mut params: Vec<NdArray> =
         exe.spec().init_params().into_iter().map(|(_, a)| a).collect();
     let mut solver = Solver::momentum(0.05, 0.9);
