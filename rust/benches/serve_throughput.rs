@@ -1,0 +1,27 @@
+//! Bench: the deployment hot path — compiled plans vs per-call
+//! interpretation, and micro-batched serving vs request-at-a-time.
+//!
+//! `interpreter::run` pays a per-request tax (graph re-validation,
+//! name hashing, parameter re-binding) that `nnp::CompiledNet` moves
+//! to load time; `serve::Server` then amortises per-layer dispatch
+//! across micro-batches. The measurement harness itself lives in
+//! `serve::bench_throughput` (shared with `nnl bench-serve`), mirroring
+//! DLL's point that planned CPU inference leaves substantial headroom
+//! over naive per-call execution.
+
+use std::time::Duration;
+
+use nnl::models::zoo;
+use nnl::serve::{bench_throughput, ServeConfig};
+
+fn main() {
+    for (model, requests) in [("mlp", 256usize), ("lenet", 64usize)] {
+        let (net, params) = zoo::export_eval(model, 3);
+        let cfg =
+            ServeConfig { workers: 4, max_batch: 16, max_wait: Duration::from_millis(2) };
+        let report = bench_throughput(&net, &params, requests, &cfg)
+            .unwrap_or_else(|e| panic!("{model}: {e}"));
+        print!("{report}");
+        println!();
+    }
+}

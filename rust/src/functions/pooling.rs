@@ -4,8 +4,19 @@ use crate::graph::Variable;
 use crate::nnp::ir::Op;
 use crate::tensor::NdArray;
 
+/// Output H/W of a pooling window. Geometry must satisfy
+/// `kernel <= input + 2·pad` and a non-zero stride; `Op::apply`
+/// validates untrusted (NNP-loaded) attributes before reaching this,
+/// so the `checked_sub` here only guards direct misuse of the Rust API
+/// (a clear panic instead of a usize underflow / absurd allocation).
 fn pool_out_hw(h: usize, w: usize, k: (usize, usize), s: (usize, usize), p: (usize, usize)) -> (usize, usize) {
-    ((h + 2 * p.0 - k.0) / s.0 + 1, (w + 2 * p.1 - k.1) / s.1 + 1)
+    let eh = (h + 2 * p.0)
+        .checked_sub(k.0)
+        .unwrap_or_else(|| panic!("pooling kernel {k:?} larger than padded input {h}x{w} (pad {p:?})"));
+    let ew = (w + 2 * p.1)
+        .checked_sub(k.1)
+        .unwrap_or_else(|| panic!("pooling kernel {k:?} larger than padded input {h}x{w} (pad {p:?})"));
+    (eh / s.0 + 1, ew / s.1 + 1)
 }
 
 fn max_pool_fwd(

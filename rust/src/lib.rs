@@ -42,6 +42,54 @@
 //!   tape recorded it with, so converted models are bit-identical to
 //!   the source graph.
 //!
+//! ## The deployment path: compile once, execute many
+//!
+//! An `.nnp` file is the deployment contract (§3.4): one trained
+//! artifact, many runtimes. Serving it at traffic, though, cannot
+//! afford the interpreter's per-call tax (graph re-validation, name
+//! hashing, parameter re-binding). The serving stack therefore splits
+//! load time from request time:
+//!
+//! - **[`nnp::CompiledNet`]** compiles a network + parameter map once
+//!   into a topologically-ordered, slot-indexed plan: params bound up
+//!   front, arity/attribute validation done at load (malformed files
+//!   fail before the first request), intermediate buffers freed by
+//!   precomputed liveness. `execute` is `&self` and the plan is
+//!   `Send + Sync` — one plan, many threads.
+//! - **[`serve::Server`]** runs a worker pool over one shared plan and
+//!   micro-batches single-example requests along axis 0 (when the plan
+//!   is provably row-independent), splitting outputs back per request
+//!   and reporting throughput/latency counters.
+//! - `interpreter::run` remains the one-shot path — now a thin
+//!   compile-then-execute wrapper, so both paths share every kernel
+//!   and every validation rule.
+//!
+//! CLI: `nnl serve --in model.nnp` / `nnl bench-serve`; numbers in
+//! `benches/serve_throughput.rs`.
+//!
+//! ## Module map
+//!
+//! | module | role |
+//! |---|---|
+//! | [`tensor`] | `NdArray` storage (COW), dtypes, kernels, RNG |
+//! | [`graph`] | define-by-run tape: `Variable`, forward/backward |
+//! | [`functions`] | operator kernels recorded on the tape (`F::*`) |
+//! | [`parametric`] | parameter registry + parametric layers (`PF::*`) |
+//! | [`models`] | zoo architectures + `Gb` builder |
+//! | [`solvers`] | SGD/momentum/Adam/… + schedulers |
+//! | [`mixed_precision`] | loss scaling, master weights (§3.3) |
+//! | [`comm`] | simulated data-parallel communicator (§3.2) |
+//! | [`trainer`] | dynamic / static / distributed training loops |
+//! | [`nnp`] | NNP format: IR, trace, archive, interpreter, **plan** |
+//! | [`serve`] | batched multi-threaded inference server |
+//! | [`converters`] | ONNX-lite, NNB, frozen graph, Rust source |
+//! | [`runtime`] | AOT HLO artifacts through PJRT (`pjrt` feature) |
+//! | [`console`] | headless Neural Network Console: trials, search |
+//! | [`data`] | synthetic datasets + loaders |
+//! | [`monitor`] | series/time monitors |
+//! | [`context`] | backend/precision context (Listing 2) |
+//! | [`utils`] | JSON, prototext, bench harness, property testing |
+//!
 //! Listing 1, end to end:
 //!
 //! ```
@@ -75,6 +123,7 @@ pub mod monitor;
 pub mod nnp;
 pub mod parametric;
 pub mod runtime;
+pub mod serve;
 pub mod solvers;
 pub mod tensor;
 pub mod trainer;

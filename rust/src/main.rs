@@ -3,8 +3,11 @@
 //!
 //! Hand-rolled arg parsing (clap is unavailable offline).
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::path::{Path, PathBuf};
+use std::sync::mpsc::Receiver;
+use std::sync::Arc;
+use std::time::Duration;
 
 use nnl::console::{footprint, structure_search, SearchSpace, TrialStore};
 use nnl::context::Context;
@@ -13,6 +16,8 @@ use nnl::data::SyntheticImages;
 use nnl::models::zoo;
 use nnl::nnp::Nnp;
 use nnl::runtime::Manifest;
+use nnl::serve::{ServeConfig, Server};
+use nnl::tensor::NdArray;
 use nnl::trainer::{self, LossScalerKind, TrainConfig};
 
 const USAGE: &str = "\
@@ -25,6 +30,12 @@ USAGE:
   nnl eval --model <name> [--steps N]
   nnl convert --in model.nnp --to onnx|nnb|frozen|rs --out FILE
   nnl query --in model.nnp [--target onnx|nnb|frozen|rs_source]
+  nnl serve --in model.nnp [--workers N] [--max-batch B] [--max-wait-ms MS]
+            # compile once, then serve stdin requests (one line of
+            # whitespace-separated floats per single-example request)
+  nnl bench-serve [--in model.nnp | --model NAME] [--requests N]
+            [--workers N] [--max-batch B] [--max-wait-ms MS]
+            # compiled-vs-interpreted and batched-vs-unbatched throughput
   nnl footprint [--model <name>]
   nnl search [--generations N] [--population N]
   nnl trials --dir DIR
@@ -206,6 +217,100 @@ fn main() {
                 None => print!("{}", query::support_report(net)),
             }
         }
+        "serve" => {
+            let input = PathBuf::from(flags.get("in").expect("--in model.nnp required"));
+            let nnp = Nnp::load(&input).expect("loading NNP");
+            let plan = Arc::new(
+                nnp.compile(flags.get("network").map(String::as_str)).expect("compiling plan"),
+            );
+            if plan.inputs().len() != 1 {
+                eprintln!(
+                    "stdin serving supports single-input networks (this one declares {}); \
+                     use the serve::Server API for multi-input models",
+                    plan.inputs().len()
+                );
+                std::process::exit(1);
+            }
+            let cfg = serve_config(&flags);
+            let mut dims = plan.inputs()[0].dims.clone();
+            if !dims.is_empty() {
+                dims[0] = 1;
+            }
+            let feat: usize = dims.iter().product();
+            eprintln!(
+                "serving '{}' ({} layers, input '{}' {:?}): {} workers, max batch {}, \
+                 micro-batching {}",
+                plan.name(),
+                plan.n_steps(),
+                plan.inputs()[0].name,
+                dims,
+                cfg.workers.max(1),
+                cfg.max_batch,
+                if plan.batch_invariant() { "on" } else { "off" },
+            );
+            eprintln!("enter {feat} whitespace-separated floats per request (EOF to stop):");
+            let server = Server::start(Arc::clone(&plan), cfg);
+            let stdin = std::io::stdin();
+            let mut line = String::new();
+            // submit ahead and print replies in input order: a window of
+            // in-flight requests is what lets the worker pool and the
+            // micro-batcher actually engage
+            let mut pending: VecDeque<Receiver<Result<Vec<NdArray>, String>>> = VecDeque::new();
+            const WINDOW: usize = 64;
+            loop {
+                line.clear();
+                match stdin.read_line(&mut line) {
+                    Ok(0) | Err(_) => break,
+                    Ok(_) => {}
+                }
+                if line.trim().is_empty() {
+                    continue;
+                }
+                let vals: Result<Vec<f32>, _> =
+                    line.split_whitespace().map(str::parse::<f32>).collect();
+                let vals = match vals {
+                    Ok(v) if v.len() == feat => v,
+                    Ok(v) => {
+                        eprintln!("expected {feat} values, got {}", v.len());
+                        continue;
+                    }
+                    Err(e) => {
+                        eprintln!("bad number: {e}");
+                        continue;
+                    }
+                };
+                match server.submit(vec![NdArray::from_vec(&dims, vals)]) {
+                    Ok(rx) => pending.push_back(rx),
+                    Err(e) => eprintln!("request rejected: {e}"),
+                }
+                while pending.len() >= WINDOW {
+                    print_serve_reply(pending.pop_front().expect("non-empty window"));
+                }
+            }
+            for rx in pending {
+                print_serve_reply(rx);
+            }
+            eprintln!("{}", server.shutdown());
+        }
+        "bench-serve" => {
+            let (net, params) = match flags.get("in") {
+                Some(p) => {
+                    let nnp = Nnp::load(Path::new(p)).expect("loading NNP");
+                    let net = nnp.networks.first().expect("NNP holds no networks").clone();
+                    let params = nnp.param_map();
+                    (net, params)
+                }
+                None => {
+                    let model = flags.get("model").cloned().unwrap_or_else(|| "mlp".into());
+                    zoo::export_eval(&model, 11)
+                }
+            };
+            let requests: usize = get(&flags, "requests", 256);
+            let cfg = serve_config(&flags);
+            let report =
+                nnl::serve::bench_throughput(&net, &params, requests, &cfg).expect("bench-serve");
+            print!("{report}");
+        }
         "search" => {
             let data = SyntheticImages::new(10, 1, 8, 16, 1);
             let space = SearchSpace::default();
@@ -241,5 +346,30 @@ fn main() {
             print!("{USAGE}");
             std::process::exit(1);
         }
+    }
+}
+
+fn serve_config(flags: &HashMap<String, String>) -> ServeConfig {
+    ServeConfig {
+        workers: get(flags, "workers", 2),
+        max_batch: get(flags, "max-batch", 8),
+        max_wait: Duration::from_millis(get(flags, "max-wait-ms", 2)),
+    }
+}
+
+/// Print one serving reply (outputs joined with " | ") in input order.
+fn print_serve_reply(rx: Receiver<Result<Vec<NdArray>, String>>) {
+    match rx.recv() {
+        Ok(Ok(outs)) => {
+            let rendered: Vec<String> = outs
+                .iter()
+                .map(|o| {
+                    o.data().iter().map(|v| format!("{v:.6}")).collect::<Vec<_>>().join(" ")
+                })
+                .collect();
+            println!("{}", rendered.join(" | "));
+        }
+        Ok(Err(e)) => eprintln!("request failed: {e}"),
+        Err(_) => eprintln!("server shut down before replying"),
     }
 }

@@ -78,9 +78,14 @@ impl LossScaler {
     ///     counter += 1
     /// ```
     pub fn step(&mut self, solver: &mut Solver) -> bool {
-        if self.dynamic && solver.check_inf_or_nan_grad() {
-            self.scale = (self.scale / self.factor).max(1.0);
-            self.counter = 0;
+        if solver.check_inf_or_nan_grad() {
+            // skip the update in BOTH modes: applying Inf/NaN gradients
+            // would permanently poison the weights. Only the dynamic
+            // mode also adapts the scale.
+            if self.dynamic {
+                self.scale = (self.scale / self.factor).max(1.0);
+                self.counter = 0;
+            }
             self.n_overflows += 1;
             return false;
         }
@@ -172,6 +177,23 @@ mod tests {
         assert!(sc.step(&mut s));
         assert_eq!(w.data().item(), 1.0 - 0.5 * 1.0);
         assert_eq!(sc.scale(), 8.0); // fixed never changes
+    }
+
+    #[test]
+    fn fixed_scaler_skips_overflow_update() {
+        // regression: fixed mode used to apply Inf gradients, leaving
+        // the weights NaN forever after a single overflow step
+        let (mut s, w) = solver_with_param(f32::INFINITY);
+        let mut sc = LossScaler::fixed(8.0);
+        assert!(!sc.step(&mut s));
+        assert_eq!(w.data().item(), 1.0); // update skipped, weight intact
+        assert!(!w.data().has_inf_or_nan());
+        assert_eq!(sc.scale(), 8.0); // fixed scale never moves
+        assert_eq!(sc.n_overflows, 1);
+        // a clean step afterwards still applies normally
+        let (mut s2, w2) = solver_with_param(8.0);
+        assert!(sc.step(&mut s2));
+        assert_eq!(w2.data().item(), 1.0 - 0.5 * 1.0);
     }
 
     #[test]

@@ -250,6 +250,28 @@ pub fn input_dims(name: &str) -> Vec<usize> {
     }
 }
 
+/// Build `name` in eval mode with freshly-seeded parameters and export
+/// it as (definition, parameter snapshot) — the one entry point the
+/// serving CLI, benches, and tests share for "give me a runnable model
+/// without an `.nnp` on disk". Resets the parameter registry.
+pub fn export_eval(
+    name: &str,
+    seed: u64,
+) -> (crate::nnp::NetworkDef, std::collections::HashMap<String, crate::tensor::NdArray>) {
+    crate::parametric::clear_parameters();
+    crate::parametric::seed_parameter_rng(seed);
+    let dims: Vec<usize> = std::iter::once(1).chain(input_dims(name)).collect();
+    let mut g = Gb::new(name, false);
+    let x = g.input("x", &dims);
+    let logits = build_model(&mut g, name, &x, 10);
+    let def = g.finish(&[&logits]);
+    let params = crate::parametric::get_parameters()
+        .into_iter()
+        .map(|(n, v)| (n, v.data()))
+        .collect();
+    (def, params)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -2,68 +2,37 @@
 //! paper's NNB / C-runtime targets exist for.
 //!
 //! There is **no per-op re-implementation here**: every layer is
-//! executed through [`Op::apply`], the same registry dispatch the
-//! training tape records its nodes with — so converted models are
-//! bit-identical to the source graph by construction.
+//! executed through [`Op::execute`](super::ir::Op::execute), the same
+//! registry dispatch the training tape records its nodes with — so
+//! converted models are bit-identical to the source graph by
+//! construction.
+//!
+//! [`run`] is the convenience one-shot entry point: it compiles a
+//! [`CompiledNet`] and executes it once, so it shares every validation
+//! and dispatch path with the planned runtime. Services that run the
+//! same network repeatedly should call [`CompiledNet::compile`] once
+//! and `execute` per request instead — that is the whole point of the
+//! compiled plan (see `nnp::plan`).
 
 use std::collections::HashMap;
 
-use crate::graph::Variable;
 use crate::tensor::NdArray;
 
 use super::ir::NetworkDef;
+use super::plan::CompiledNet;
 
 /// Run `net` on named inputs with a parameter map. Returns the
 /// network's declared outputs in order. The batch axis (axis 0) of each
 /// input is free; feature dims must match the declaration.
+///
+/// This is compile-then-execute: all structural/arity/parameter errors
+/// surface exactly as they would from [`CompiledNet::compile`].
 pub fn run(
     net: &NetworkDef,
     inputs: &HashMap<String, NdArray>,
     params: &HashMap<String, NdArray>,
 ) -> Result<Vec<NdArray>, String> {
-    net.validate()?;
-    let mut env: HashMap<String, Variable> = HashMap::new();
-    for t in &net.inputs {
-        let a = inputs
-            .get(&t.name)
-            .ok_or_else(|| format!("missing input '{}'", t.name))?;
-        // rank must match exactly; dims past the batch axis must agree
-        // (rank-0 / rank-mismatched arrays are a clean error, not a panic)
-        if a.dims().len() != t.dims.len() || a.dims().get(1..) != t.dims.get(1..) {
-            return Err(format!(
-                "input '{}' shape {:?} incompatible with declared {:?} (batch axis free)",
-                t.name,
-                a.dims(),
-                t.dims
-            ));
-        }
-        env.insert(t.name.clone(), Variable::from_array(a.clone(), false));
-    }
-    let p = |name: &str| -> Result<Variable, String> {
-        params
-            .get(name)
-            .map(|a| Variable::from_array(a.clone(), false))
-            .ok_or_else(|| format!("missing parameter '{name}'"))
-    };
-    for l in &net.layers {
-        // gather activations then parameters — exactly the input order
-        // Op::apply defines (and nnp::trace records)
-        let mut vars: Vec<Variable> = Vec::with_capacity(l.inputs.len() + l.params.len());
-        for n in &l.inputs {
-            vars.push(env.get(n).cloned().ok_or_else(|| format!("missing tensor '{n}'"))?);
-        }
-        for pn in &l.params {
-            vars.push(p(pn)?);
-        }
-        let refs: Vec<&Variable> = vars.iter().collect();
-        let y = l.op.apply(&refs).map_err(|e| format!("layer '{}': {e}", l.name))?;
-        // register outputs (ops here are all single-output)
-        env.insert(l.outputs[0].clone(), y);
-    }
-    net.outputs
-        .iter()
-        .map(|o| env.get(o).map(|v| v.data()).ok_or_else(|| format!("missing output '{o}'")))
-        .collect()
+    CompiledNet::compile(net, params)?.execute(inputs)
 }
 
 #[cfg(test)]

@@ -296,6 +296,29 @@ impl Op {
         })
     }
 
+    /// Combined input arity `(min, max)` — activations plus parameters,
+    /// in the concatenated order [`Op::apply`] consumes. This is the
+    /// compile-time contract [`NetworkDef::validate`] and
+    /// [`crate::nnp::plan::CompiledNet`] enforce so malformed files
+    /// fail at load, not mid-request.
+    pub fn arity(&self) -> (usize, usize) {
+        match self {
+            Op::Affine | Op::Convolution { .. } | Op::Deconvolution { .. } => (2, 3),
+            Op::BatchNorm { .. } => (5, 5),
+            Op::LayerNorm { .. } => (3, 3),
+            Op::Concat { .. } => (1, usize::MAX),
+            Op::Add2
+            | Op::Sub2
+            | Op::Mul2
+            | Op::Div2
+            | Op::Embed
+            | Op::SquaredError
+            | Op::SigmoidCrossEntropy
+            | Op::SoftmaxCrossEntropy => (2, 2),
+            _ => (1, 1),
+        }
+    }
+
     // --------------------------------------------------------- dispatch
 
     /// Apply this operator to live variables, recording a fully
@@ -315,6 +338,7 @@ impl Op {
     pub fn apply(&self, xs: &[&Variable]) -> Result<Variable, String> {
         let n = xs.len();
         let ck = |lo: usize, hi: usize| -> Result<(), String> {
+            debug_assert_eq!((lo, hi), self.arity(), "arity drift for {}", self.name());
             if n < lo || n > hi {
                 if lo == hi {
                     Err(format!("{}: expected {lo} inputs, got {n}", self.name()))
@@ -340,14 +364,22 @@ impl Op {
             }
             Op::MaxPool { kernel, stride, pad } => {
                 ck(1, 1)?;
+                check_pool_geometry("MaxPooling", &xs[0].dims(), *kernel, *stride, *pad)?;
                 F::max_pooling(xs[0], *kernel, *stride, *pad)
             }
             Op::AvgPool { kernel, stride, pad, including_pad } => {
                 ck(1, 1)?;
+                check_pool_geometry("AveragePooling", &xs[0].dims(), *kernel, *stride, *pad)?;
                 F::average_pooling(xs[0], *kernel, *stride, *pad, *including_pad)
             }
             Op::GlobalAvgPool => {
                 ck(1, 1)?;
+                if xs[0].dims().len() != 4 {
+                    return Err(format!(
+                        "GlobalAveragePooling: expected NCHW input, got shape {:?}",
+                        xs[0].dims()
+                    ));
+                }
                 F::global_average_pooling(xs[0])
             }
             Op::ReLU => {
@@ -537,6 +569,34 @@ impl Op {
     }
 }
 
+/// Validate pooling geometry before the kernels' index arithmetic can
+/// underflow `usize` (`kernel > input + 2·pad` used to panic or attempt
+/// an absurd allocation — reachable from untrusted NNP files).
+fn check_pool_geometry(
+    name: &str,
+    dims: &[usize],
+    kernel: (usize, usize),
+    stride: (usize, usize),
+    pad: (usize, usize),
+) -> Result<(), String> {
+    if dims.len() != 4 {
+        return Err(format!("{name}: expected NCHW input, got shape {dims:?}"));
+    }
+    if kernel.0 == 0 || kernel.1 == 0 {
+        return Err(format!("{name}: kernel {kernel:?} must be non-zero"));
+    }
+    if stride.0 == 0 || stride.1 == 0 {
+        return Err(format!("{name}: stride {stride:?} must be non-zero"));
+    }
+    let (h, w) = (dims[2], dims[3]);
+    if kernel.0 > h + 2 * pad.0 || kernel.1 > w + 2 * pad.1 {
+        return Err(format!(
+            "{name}: kernel {kernel:?} larger than padded input {h}x{w} (pad {pad:?})"
+        ));
+    }
+    Ok(())
+}
+
 /// One layer: op + tensor names. Parameter tensor names refer to the
 /// NNP parameter set; activation names are network-internal.
 #[derive(Debug, Clone, PartialEq)]
@@ -597,7 +657,10 @@ impl NetworkDef {
     }
 
     /// Structural validation: every layer input must be produced by an
-    /// earlier layer or be a network input; outputs must exist.
+    /// earlier layer or be a network input; outputs must exist; every
+    /// layer must carry exactly one output and an input+param count
+    /// within its op's declared arity ([`Op::arity`]) — so malformed
+    /// files fail at load, not mid-request.
     pub fn validate(&self) -> Result<(), String> {
         let mut known: std::collections::HashSet<&str> =
             self.inputs.iter().map(|t| t.name.as_str()).collect();
@@ -606,6 +669,32 @@ impl NetworkDef {
                 if !known.contains(i.as_str()) {
                     return Err(format!("layer '{}' reads undefined tensor '{}'", l.name, i));
                 }
+            }
+            if l.outputs.len() != 1 {
+                return Err(format!(
+                    "layer '{}': expected exactly 1 output tensor, got {}",
+                    l.name,
+                    l.outputs.len()
+                ));
+            }
+            let (lo, hi) = l.op.arity();
+            let n = l.inputs.len() + l.params.len();
+            if n < lo || n > hi {
+                return Err(if lo == hi {
+                    format!("layer '{}': {} expects {lo} inputs, got {n}", l.name, l.op.name())
+                } else if hi == usize::MAX {
+                    format!(
+                        "layer '{}': {} expects at least {lo} inputs, got {n}",
+                        l.name,
+                        l.op.name()
+                    )
+                } else {
+                    format!(
+                        "layer '{}': {} expects {lo}..={hi} inputs, got {n}",
+                        l.name,
+                        l.op.name()
+                    )
+                });
             }
             for o in &l.outputs {
                 known.insert(o);
@@ -766,6 +855,60 @@ pub(crate) mod tests {
         let mut m = tiny_net();
         m.outputs[0] = "ghost".into();
         assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_bad_arity() {
+        let mut n = tiny_net();
+        n.layers[0].params.clear(); // Affine with no weights
+        let err = n.validate().unwrap_err();
+        assert!(err.contains("layer 'fc'"), "{err}");
+        assert!(err.contains("Affine"), "{err}");
+    }
+
+    #[test]
+    fn validate_rejects_multi_output_layer() {
+        let mut n = tiny_net();
+        n.layers[1].outputs.push("y2".into());
+        let err = n.validate().unwrap_err();
+        assert!(err.contains("exactly 1 output"), "{err}");
+    }
+
+    #[test]
+    fn arity_lower_bound_enforced_for_all_ops() {
+        // every registry op must reject one-fewer-than-minimum inputs
+        // with a clean error (never a panic)
+        let x = Variable::from_array(NdArray::zeros(&[2, 3, 4, 4]), false);
+        for op in all_ops() {
+            let (lo, _) = op.arity();
+            let vars: Vec<&Variable> = std::iter::repeat(&x).take(lo - 1).collect();
+            assert!(op.apply(&vars).is_err(), "{} accepted {} inputs", op.name(), lo - 1);
+        }
+    }
+
+    #[test]
+    fn pool_geometry_is_error_not_panic() {
+        // kernel > input + 2*pad used to underflow usize in pool_out_hw
+        let x = Variable::from_array(NdArray::zeros(&[1, 1, 2, 2]), false);
+        let err = Op::MaxPool { kernel: (5, 5), stride: (1, 1), pad: (0, 0) }
+            .apply(&[&x])
+            .unwrap_err();
+        assert!(err.contains("kernel"), "{err}");
+        let err = Op::AvgPool { kernel: (3, 3), stride: (1, 1), pad: (0, 0), including_pad: true }
+            .apply(&[&x])
+            .unwrap_err();
+        assert!(err.contains("kernel"), "{err}");
+        // zero stride would divide by zero downstream
+        let err = Op::MaxPool { kernel: (2, 2), stride: (0, 1), pad: (0, 0) }
+            .apply(&[&x])
+            .unwrap_err();
+        assert!(err.contains("stride"), "{err}");
+        // pooling a non-NCHW tensor is a clean error too
+        let flat = Variable::from_array(NdArray::zeros(&[4]), false);
+        assert!(Op::GlobalAvgPool.apply(&[&flat]).is_err());
+        assert!(Op::MaxPool { kernel: (2, 2), stride: (1, 1), pad: (0, 0) }
+            .apply(&[&flat])
+            .is_err());
     }
 
     #[test]

@@ -15,9 +15,11 @@ pub mod interpreter;
 pub mod ir;
 pub mod nntxt;
 pub mod params;
+pub mod plan;
 pub mod trace;
 
 pub use ir::{Layer, NetworkDef, Op, TensorDef};
+pub use plan::CompiledNet;
 pub use trace::trace;
 
 use crate::tensor::NdArray;
@@ -144,6 +146,20 @@ impl Nnp {
             nnp.parameters = params::load_params(blob)?;
         }
         Ok(nnp)
+    }
+
+    /// Compile a named network (or the first one) against this NNP's
+    /// parameters for repeated inference — the load-time half of the
+    /// deployment path (see [`plan::CompiledNet`]).
+    pub fn compile(&self, network: Option<&str>) -> Result<CompiledNet, String> {
+        let net = match network {
+            Some(n) => self.network(n).ok_or_else(|| format!("no network '{n}'"))?,
+            None => self
+                .networks
+                .first()
+                .ok_or_else(|| "NNP holds no networks".to_string())?,
+        };
+        CompiledNet::compile(net, &self.param_map())
     }
 
     /// Run a named executor on inputs (deployment inference).

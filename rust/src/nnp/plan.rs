@@ -1,0 +1,539 @@
+//! Compiled execution plans — the deployment hot path (ROADMAP: serve
+//! heavy traffic as fast as the hardware allows).
+//!
+//! [`crate::nnp::interpreter::run`] is correct but pays a per-call tax
+//! no server can afford: it re-validates the graph, re-resolves every
+//! tensor name through a `HashMap`, and re-binds every parameter on
+//! every single request. [`CompiledNet`] moves all of that to load
+//! time: compile a [`NetworkDef`] + parameter map **once** into a
+//! topologically-ordered, slot-indexed plan —
+//!
+//! - parameters bound up front (missing ones fail at load);
+//! - tensor names resolved to integer slot ids (no hashing per call);
+//! - per-layer arity and pooling/slice/transpose attributes validated
+//!   at compile time (malformed files fail at load, not mid-request);
+//! - last-use liveness precomputed, so intermediate buffers are
+//!   dropped eagerly and peak memory tracks liveness, not depth.
+//!
+//! [`CompiledNet::execute`] is `&self` and `CompiledNet` is
+//! `Send + Sync`: one plan serves any number of threads concurrently
+//! (see `serve::Server`). Execution still flows through [`Op::execute`]
+//! — the same registry dispatch the training tape records — so compiled
+//! outputs are bit-identical to the interpreter and to the live graph.
+
+use std::collections::{HashMap, HashSet};
+
+use crate::tensor::NdArray;
+
+use super::ir::{NetworkDef, Op, TensorDef};
+
+/// Where one operand of a step comes from.
+#[derive(Debug, Clone, Copy)]
+enum Src {
+    /// Activation slot in the per-call environment.
+    Act(usize),
+    /// Parameter index, bound once at compile time.
+    Param(usize),
+}
+
+/// One executable step of the plan.
+#[derive(Debug, Clone)]
+struct Step {
+    /// Layer name, kept for error reporting only.
+    name: String,
+    op: Op,
+    /// Activations first, then parameters — the order [`Op::apply`]
+    /// defines.
+    args: Vec<Src>,
+    /// Output activation slot (fresh per layer).
+    out: usize,
+    /// Activation slots whose last read is this step; dropped eagerly
+    /// after it runs.
+    free_after: Vec<usize>,
+}
+
+/// A network compiled against a fixed parameter set, ready for
+/// repeated, concurrent inference. Build with [`CompiledNet::compile`];
+/// run with [`CompiledNet::execute`] (named inputs) or
+/// [`CompiledNet::execute_positional`] (declared input order, the
+/// serving hot path).
+pub struct CompiledNet {
+    name: String,
+    /// Declared inputs; input `i` lives in slot `i`.
+    inputs: Vec<TensorDef>,
+    output_names: Vec<String>,
+    output_slots: Vec<usize>,
+    steps: Vec<Step>,
+    n_slots: usize,
+    /// Parameters bound at compile time (COW handles — O(1) to hold,
+    /// never copied per request).
+    params: Vec<NdArray>,
+}
+
+impl CompiledNet {
+    /// Compile `net` against `params`. Validates structure, arity and
+    /// parameter availability so that a successfully compiled plan can
+    /// only fail at run time on input-shape mismatches or kernel-level
+    /// shape errors.
+    pub fn compile(
+        net: &NetworkDef,
+        params: &HashMap<String, NdArray>,
+    ) -> Result<CompiledNet, String> {
+        net.validate()?;
+        let n_inputs = net.inputs.len();
+        let mut slot_of: HashMap<String, usize> = HashMap::new();
+        let mut n_slots = 0usize;
+        for t in &net.inputs {
+            slot_of.insert(t.name.clone(), n_slots);
+            n_slots += 1;
+        }
+
+        let mut bound: Vec<NdArray> = Vec::new();
+        let mut param_idx: HashMap<String, usize> = HashMap::new();
+        let mut steps: Vec<Step> = Vec::with_capacity(net.layers.len());
+        for l in &net.layers {
+            let mut args = Vec::with_capacity(l.inputs.len() + l.params.len());
+            for tname in &l.inputs {
+                let s = *slot_of
+                    .get(tname.as_str())
+                    .ok_or_else(|| format!("layer '{}' reads undefined tensor '{tname}'", l.name))?;
+                args.push(Src::Act(s));
+            }
+            for pname in &l.params {
+                let idx = match param_idx.get(pname.as_str()) {
+                    Some(&i) => i,
+                    None => {
+                        let a = params
+                            .get(pname.as_str())
+                            .ok_or_else(|| format!("missing parameter '{pname}'"))?;
+                        bound.push(a.clone());
+                        param_idx.insert(pname.clone(), bound.len() - 1);
+                        bound.len() - 1
+                    }
+                };
+                args.push(Src::Param(idx));
+            }
+            // a layer output always gets a fresh slot; re-defining an
+            // existing name shadows it for later readers, exactly like
+            // the interpreter's env overwrite
+            let out = n_slots;
+            n_slots += 1;
+            slot_of.insert(l.outputs[0].clone(), out);
+            steps.push(Step {
+                name: l.name.clone(),
+                op: l.op.clone(),
+                args,
+                out,
+                free_after: Vec::new(),
+            });
+        }
+
+        let output_slots = net
+            .outputs
+            .iter()
+            .map(|o| {
+                slot_of
+                    .get(o.as_str())
+                    .copied()
+                    .ok_or_else(|| format!("network output '{o}' never produced"))
+            })
+            .collect::<Result<Vec<usize>, String>>()?;
+
+        // liveness: find each slot's last reader; a slot that is not a
+        // network output dies right after that step. Slots written but
+        // never read die at their producing step (slot s >= n_inputs is
+        // produced by step s - n_inputs, since each layer allocates
+        // exactly one fresh slot in order).
+        let mut last_read: Vec<Option<usize>> = vec![None; n_slots];
+        for (i, st) in steps.iter().enumerate() {
+            for a in &st.args {
+                if let Src::Act(s) = a {
+                    last_read[*s] = Some(i);
+                }
+            }
+        }
+        let keep: HashSet<usize> = output_slots.iter().copied().collect();
+        for s in 0..n_slots {
+            if keep.contains(&s) {
+                continue;
+            }
+            match last_read[s] {
+                Some(i) => steps[i].free_after.push(s),
+                None if s >= n_inputs => steps[s - n_inputs].free_after.push(s),
+                None => {} // unread network input: held by the caller anyway
+            }
+        }
+
+        Ok(CompiledNet {
+            name: net.name.clone(),
+            inputs: net.inputs.clone(),
+            output_names: net.outputs.clone(),
+            output_slots,
+            steps,
+            n_slots,
+            params: bound,
+        })
+    }
+
+    /// Network name.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Declared inputs, in positional order.
+    pub fn inputs(&self) -> &[TensorDef] {
+        &self.inputs
+    }
+
+    /// Declared output names, in order.
+    pub fn outputs(&self) -> &[String] {
+        &self.output_names
+    }
+
+    /// Number of executable steps (layers) in the plan.
+    pub fn n_steps(&self) -> usize {
+        self.steps.len()
+    }
+
+    /// Validate a positional input set against the declared signature
+    /// (rank must match; dims past the batch axis must agree; axis 0 is
+    /// free). Returns the batch-row count of the first input (1 for
+    /// rank-0 / input-less nets).
+    pub fn check_inputs(&self, inputs: &[NdArray]) -> Result<usize, String> {
+        if inputs.len() != self.inputs.len() {
+            return Err(format!(
+                "network '{}' expects {} inputs, got {}",
+                self.name,
+                self.inputs.len(),
+                inputs.len()
+            ));
+        }
+        for (t, a) in self.inputs.iter().zip(inputs) {
+            if a.dims().len() != t.dims.len() || a.dims().get(1..) != t.dims.get(1..) {
+                return Err(format!(
+                    "input '{}' shape {:?} incompatible with declared {:?} (batch axis free)",
+                    t.name,
+                    a.dims(),
+                    t.dims
+                ));
+            }
+        }
+        Ok(inputs.first().and_then(|a| a.dims().first().copied()).unwrap_or(1))
+    }
+
+    /// Run the plan on named inputs. Thin wrapper over
+    /// [`CompiledNet::execute_positional`].
+    pub fn execute(&self, inputs: &HashMap<String, NdArray>) -> Result<Vec<NdArray>, String> {
+        let mut positional = Vec::with_capacity(self.inputs.len());
+        for t in &self.inputs {
+            positional.push(
+                inputs
+                    .get(&t.name)
+                    .ok_or_else(|| format!("missing input '{}'", t.name))?
+                    .clone(),
+            );
+        }
+        self.execute_positional(&positional)
+    }
+
+    /// Run the plan on inputs given in declared order. `&self`: any
+    /// number of threads may execute one plan concurrently; each call
+    /// owns its buffer environment.
+    pub fn execute_positional(&self, inputs: &[NdArray]) -> Result<Vec<NdArray>, String> {
+        self.check_inputs(inputs)?;
+        let mut env: Vec<Option<NdArray>> = vec![None; self.n_slots];
+        for (i, a) in inputs.iter().enumerate() {
+            env[i] = Some(a.clone());
+        }
+        for st in &self.steps {
+            let mut xs: Vec<&NdArray> = Vec::with_capacity(st.args.len());
+            for a in &st.args {
+                match a {
+                    Src::Act(s) => {
+                        xs.push(env[*s].as_ref().expect("plan liveness invariant broken"))
+                    }
+                    Src::Param(i) => xs.push(&self.params[*i]),
+                }
+            }
+            let y = st.op.execute(&xs).map_err(|e| format!("layer '{}': {e}", st.name))?;
+            drop(xs);
+            env[st.out] = Some(y);
+            for &s in &st.free_after {
+                env[s] = None;
+            }
+        }
+        self.output_slots
+            .iter()
+            .map(|&s| {
+                env[s]
+                    .as_ref()
+                    .cloned()
+                    .ok_or_else(|| "plan output slot empty (liveness invariant broken)".into())
+            })
+            .collect()
+    }
+
+    /// Conservative static check that rows are independent under this
+    /// plan: concatenating several requests along axis 0, executing
+    /// once, and splitting the outputs back is equivalent to executing
+    /// each request alone. The batching server falls back to
+    /// per-request execution when this is `false`.
+    ///
+    /// Soundness without shape inference: last-axis ops (Softmax,
+    /// LayerNorm, …) are row-independent only while every activation
+    /// keeps rank ≥ 2 (axis 0 stays a pure batch axis). So all inputs
+    /// must declare rank ≥ 2 and every rank-reducing op is excluded:
+    /// global reductions and `BroadcastTo` outright, axis reductions
+    /// unless `keepdims` on a non-batch axis, `Reshape` unless it keeps
+    /// the batch axis and rank ≥ 2. Everything else in the registry
+    /// preserves "rank ≥ 2 with batch axis 0" — so the last axis a
+    /// normalisation sees is never the batch axis.
+    pub fn batch_invariant(&self) -> bool {
+        if self.inputs.is_empty() || self.inputs.iter().any(|t| t.dims.len() < 2) {
+            return false;
+        }
+        self.steps.iter().all(|st| match &st.op {
+            Op::SumAll | Op::MeanAll | Op::BroadcastTo { .. } => false,
+            Op::Sum { axis, keepdims } | Op::Mean { axis, keepdims } => *axis != 0 && *keepdims,
+            Op::Concat { axis } | Op::Slice { axis, .. } => *axis != 0,
+            Op::Transpose { axes } => axes.first() == Some(&0),
+            Op::Reshape { dims } => dims.len() >= 2 && dims[0] == 0,
+            _ => true,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nnp::interpreter;
+    use crate::nnp::ir::Layer;
+
+    fn affine_relu_net() -> (NetworkDef, HashMap<String, NdArray>) {
+        let net = NetworkDef {
+            name: "n".into(),
+            inputs: vec![TensorDef { name: "x".into(), dims: vec![1, 2] }],
+            outputs: vec!["y".into()],
+            layers: vec![
+                Layer {
+                    name: "fc".into(),
+                    op: Op::Affine,
+                    inputs: vec!["x".into()],
+                    params: vec!["W".into(), "b".into()],
+                    outputs: vec!["h".into()],
+                },
+                Layer {
+                    name: "r".into(),
+                    op: Op::ReLU,
+                    inputs: vec!["h".into()],
+                    params: vec![],
+                    outputs: vec!["y".into()],
+                },
+            ],
+        };
+        let mut params = HashMap::new();
+        params.insert("W".into(), NdArray::from_slice(&[2, 2], &[1., -1., 1., 1.]));
+        params.insert("b".into(), NdArray::from_slice(&[2], &[0., -10.]));
+        (net, params)
+    }
+
+    #[test]
+    fn compile_once_execute_many() {
+        let (net, params) = affine_relu_net();
+        let plan = CompiledNet::compile(&net, &params).unwrap();
+        assert_eq!(plan.n_steps(), 2);
+        // repeated calls, varying batch size, all matching the interpreter
+        for bs in [1usize, 3, 8] {
+            let x = NdArray::arange(&[bs, 2]);
+            let mut inputs = HashMap::new();
+            inputs.insert("x".to_string(), x);
+            let got = plan.execute(&inputs).unwrap();
+            let want = interpreter::run(&net, &inputs, &params).unwrap();
+            assert_eq!(got[0].dims(), want[0].dims());
+            assert_eq!(got[0].data(), want[0].data());
+        }
+    }
+
+    #[test]
+    fn positional_matches_named() {
+        let (net, params) = affine_relu_net();
+        let plan = CompiledNet::compile(&net, &params).unwrap();
+        let x = NdArray::from_slice(&[1, 2], &[3., 4.]);
+        let mut named = HashMap::new();
+        named.insert("x".to_string(), x.clone());
+        assert_eq!(
+            plan.execute(&named).unwrap()[0].data(),
+            plan.execute_positional(&[x]).unwrap()[0].data()
+        );
+    }
+
+    #[test]
+    fn missing_param_fails_at_compile() {
+        let (net, mut params) = affine_relu_net();
+        params.remove("b");
+        let err = CompiledNet::compile(&net, &params).unwrap_err();
+        assert!(err.contains("missing parameter 'b'"), "{err}");
+    }
+
+    #[test]
+    fn bad_arity_fails_at_compile() {
+        let (mut net, params) = affine_relu_net();
+        net.layers[0].params.clear();
+        let err = CompiledNet::compile(&net, &params).unwrap_err();
+        assert!(err.contains("layer 'fc'"), "{err}");
+    }
+
+    #[test]
+    fn bad_pool_geometry_fails_at_run_with_clean_error() {
+        let net = NetworkDef {
+            name: "p".into(),
+            inputs: vec![TensorDef { name: "x".into(), dims: vec![1, 1, 2, 2] }],
+            outputs: vec!["y".into()],
+            layers: vec![Layer {
+                name: "pool".into(),
+                op: Op::MaxPool { kernel: (7, 7), stride: (1, 1), pad: (0, 0) },
+                inputs: vec!["x".into()],
+                params: vec![],
+                outputs: vec!["y".into()],
+            }],
+        };
+        let plan = CompiledNet::compile(&net, &HashMap::new()).unwrap();
+        let mut inputs = HashMap::new();
+        inputs.insert("x".to_string(), NdArray::zeros(&[1, 1, 2, 2]));
+        let err = plan.execute(&inputs).unwrap_err();
+        assert!(err.contains("layer 'pool'"), "{err}");
+        assert!(err.contains("kernel"), "{err}");
+    }
+
+    #[test]
+    fn intermediates_freed_at_last_use() {
+        let (net, params) = affine_relu_net();
+        let plan = CompiledNet::compile(&net, &params).unwrap();
+        // slot 0 = x (dies after fc), slot 1 = h (dies after relu),
+        // slot 2 = y (network output, kept)
+        assert_eq!(plan.steps[0].free_after, vec![0]);
+        assert_eq!(plan.steps[1].free_after, vec![1]);
+        assert_eq!(plan.output_slots, vec![2]);
+    }
+
+    #[test]
+    fn shadowed_tensor_names_match_interpreter() {
+        // h is defined twice; later readers must see the newest value
+        let net = NetworkDef {
+            name: "s".into(),
+            inputs: vec![TensorDef { name: "x".into(), dims: vec![1, 3] }],
+            outputs: vec!["y".into()],
+            layers: vec![
+                Layer {
+                    name: "a".into(),
+                    op: Op::MulScalar { val: 2.0 },
+                    inputs: vec!["x".into()],
+                    params: vec![],
+                    outputs: vec!["h".into()],
+                },
+                Layer {
+                    name: "b".into(),
+                    op: Op::AddScalar { val: 1.0 },
+                    inputs: vec!["h".into()],
+                    params: vec![],
+                    outputs: vec!["h".into()],
+                },
+                Layer {
+                    name: "c".into(),
+                    op: Op::Identity,
+                    inputs: vec!["h".into()],
+                    params: vec![],
+                    outputs: vec!["y".into()],
+                },
+            ],
+        };
+        let params = HashMap::new();
+        let plan = CompiledNet::compile(&net, &params).unwrap();
+        let mut inputs = HashMap::new();
+        inputs.insert("x".to_string(), NdArray::from_slice(&[1, 3], &[1., 2., 3.]));
+        let got = plan.execute(&inputs).unwrap();
+        assert_eq!(got[0].data(), &[3., 5., 7.]);
+        let want = interpreter::run(&net, &inputs, &params).unwrap();
+        assert_eq!(got[0].data(), want[0].data());
+    }
+
+    #[test]
+    fn output_that_is_also_input_survives() {
+        // passthrough output: the input slot must never be freed
+        let net = NetworkDef {
+            name: "pass".into(),
+            inputs: vec![TensorDef { name: "x".into(), dims: vec![1, 2] }],
+            outputs: vec!["x".into(), "y".into()],
+            layers: vec![Layer {
+                name: "neg".into(),
+                op: Op::Neg,
+                inputs: vec!["x".into()],
+                params: vec![],
+                outputs: vec!["y".into()],
+            }],
+        };
+        let plan = CompiledNet::compile(&net, &HashMap::new()).unwrap();
+        let mut inputs = HashMap::new();
+        inputs.insert("x".to_string(), NdArray::from_slice(&[1, 2], &[1., -2.]));
+        let out = plan.execute(&inputs).unwrap();
+        assert_eq!(out[0].data(), &[1., -2.]);
+        assert_eq!(out[1].data(), &[-1., 2.]);
+    }
+
+    #[test]
+    fn batch_invariance_classification() {
+        let (net, params) = affine_relu_net();
+        assert!(CompiledNet::compile(&net, &params).unwrap().batch_invariant());
+        let mut reducing = net.clone();
+        reducing.layers.push(Layer {
+            name: "s".into(),
+            op: Op::SumAll,
+            inputs: vec!["y".into()],
+            params: vec![],
+            outputs: vec!["z".into()],
+        });
+        reducing.outputs = vec!["z".into()];
+        assert!(!CompiledNet::compile(&reducing, &params).unwrap().batch_invariant());
+    }
+
+    #[test]
+    fn rank1_last_axis_net_is_not_batch_invariant() {
+        // on a rank-1 activation the "last axis" IS the batch axis:
+        // micro-batching a softmax over it would mix requests
+        let net = NetworkDef {
+            name: "sm1".into(),
+            inputs: vec![TensorDef { name: "x".into(), dims: vec![1] }],
+            outputs: vec!["y".into()],
+            layers: vec![Layer {
+                name: "sm".into(),
+                op: Op::Softmax,
+                inputs: vec!["x".into()],
+                params: vec![],
+                outputs: vec!["y".into()],
+            }],
+        };
+        let plan = CompiledNet::compile(&net, &HashMap::new()).unwrap();
+        assert!(!plan.batch_invariant());
+        // rank-reducing reductions are excluded too
+        let mut reduced = affine_relu_net().0;
+        reduced.layers.push(Layer {
+            name: "m".into(),
+            op: Op::Mean { axis: 1, keepdims: false },
+            inputs: vec!["y".into()],
+            params: vec![],
+            outputs: vec!["z".into()],
+        });
+        reduced.outputs = vec!["z".into()];
+        let params = affine_relu_net().1;
+        assert!(!CompiledNet::compile(&reduced, &params).unwrap().batch_invariant());
+        // but keepdims on a non-batch axis stays batchable
+        reduced.layers.last_mut().unwrap().op = Op::Mean { axis: 1, keepdims: true };
+        assert!(CompiledNet::compile(&reduced, &params).unwrap().batch_invariant());
+    }
+
+    #[test]
+    fn compiled_net_is_send_and_sync() {
+        fn assert_ss<T: Send + Sync>() {}
+        assert_ss::<CompiledNet>();
+    }
+}

@@ -1,0 +1,645 @@
+//! Batched multi-threaded inference serving on top of compiled plans
+//! (ROADMAP north-star: serve heavy traffic as fast as the hardware
+//! allows; paper §3.4: one trained NNP file, many runtimes).
+//!
+//! [`Server`] owns a worker pool sharing one [`CompiledNet`] — the plan
+//! is compiled once at load time and executed `&self` from every
+//! worker. Single-example requests are **micro-batched**: a worker
+//! takes the first queued request, then keeps draining the queue until
+//! `max_batch` rows are gathered or `max_wait` elapses, concatenates
+//! the inputs along axis 0, executes the plan once, and splits the
+//! outputs back per request. Batching is only enabled when the plan is
+//! provably row-independent ([`CompiledNet::batch_invariant`]);
+//! otherwise every request runs alone — correctness never depends on
+//! the batching heuristic, because batched outputs are sliced from the
+//! same kernels a solo run would use.
+//!
+//! The CLI front ends are `nnl serve` (stdin request loop) and
+//! `nnl bench-serve` (self-driving throughput benchmark); the
+//! compiled-vs-interpreted and batched-vs-unbatched numbers live in
+//! `benches/serve_throughput.rs`.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::nnp::ir::NetworkDef;
+use crate::nnp::plan::CompiledNet;
+use crate::tensor::{NdArray, Rng};
+
+/// Worker-pool and micro-batching knobs.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Worker threads sharing the plan.
+    pub workers: usize,
+    /// Maximum rows per executed batch (1 disables micro-batching).
+    /// A hard cap for coalescing — though a single request carrying
+    /// more rows than this still executes, alone.
+    pub max_batch: usize,
+    /// How long a worker waits for more requests to fill a batch.
+    pub max_wait: Duration,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig { workers: 2, max_batch: 8, max_wait: Duration::from_millis(2) }
+    }
+}
+
+/// One queued inference request: positional inputs + reply channel.
+struct Request {
+    inputs: Vec<NdArray>,
+    rows: usize,
+    enqueued: Instant,
+    reply: Sender<Result<Vec<NdArray>, String>>,
+}
+
+/// The shared request queue: a Condvar-guarded deque (not `mpsc`) so a
+/// worker parked waiting for work releases the lock while it sleeps —
+/// a draining worker can always make progress, and `close()` lets
+/// workers finish the backlog and exit even while `Client` handles are
+/// still alive.
+struct Queue {
+    state: Mutex<QueueState>,
+    cv: Condvar,
+}
+
+struct QueueState {
+    items: VecDeque<Request>,
+    closed: bool,
+}
+
+impl Queue {
+    fn new() -> Queue {
+        Queue {
+            state: Mutex::new(QueueState { items: VecDeque::new(), closed: false }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Enqueue, failing cleanly once the server shut down.
+    fn push(&self, req: Request) -> Result<(), String> {
+        let mut st = self.state.lock().expect("queue lock");
+        if st.closed {
+            return Err("server shut down".to_string());
+        }
+        st.items.push_back(req);
+        drop(st);
+        self.cv.notify_one();
+        Ok(())
+    }
+
+    /// Blocking pop; `None` once the queue is closed *and* drained.
+    fn pop(&self) -> Option<Request> {
+        let mut st = self.state.lock().expect("queue lock");
+        loop {
+            if let Some(r) = st.items.pop_front() {
+                return Some(r);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.cv.wait(st).expect("queue lock");
+        }
+    }
+
+    /// Pop with a deadline, taking the head request only if it fits in
+    /// `row_budget` (keeps `max_batch` a hard cap while preserving FIFO
+    /// order); `None` on timeout, closed-and-drained, or a head too
+    /// large for this batch.
+    fn pop_until(&self, deadline: Instant, row_budget: usize) -> Option<Request> {
+        let mut st = self.state.lock().expect("queue lock");
+        loop {
+            if let Some(front) = st.items.front() {
+                if front.rows > row_budget {
+                    return None; // leave it to start its own batch
+                }
+                return st.items.pop_front();
+            }
+            if st.closed {
+                return None;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            st = self.cv.wait_timeout(st, deadline - now).expect("queue lock").0;
+        }
+    }
+
+    /// Stop accepting work and wake every parked worker.
+    fn close(&self) {
+        self.state.lock().expect("queue lock").closed = true;
+        self.cv.notify_all();
+    }
+}
+
+/// Lock-free counters shared by all workers.
+#[derive(Default)]
+struct StatsInner {
+    requests: AtomicU64,
+    rows: AtomicU64,
+    batches: AtomicU64,
+    errors: AtomicU64,
+    exec_ns: AtomicU64,
+    latency_ns: AtomicU64,
+}
+
+/// Snapshot of server throughput/latency counters.
+#[derive(Debug, Clone)]
+pub struct ServeStats {
+    pub requests: u64,
+    pub rows: u64,
+    /// Plan executions (each may cover several requests).
+    pub batches: u64,
+    pub errors: u64,
+    pub mean_batch_rows: f64,
+    /// Mean wall time inside `CompiledNet::execute` per batch.
+    pub mean_exec_ms: f64,
+    /// Mean enqueue-to-reply latency per request.
+    pub mean_latency_ms: f64,
+}
+
+impl std::fmt::Display for ServeStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} requests ({} rows) in {} batches (mean {:.2} rows/batch), \
+             mean exec {:.3} ms/batch, mean latency {:.3} ms/request, {} errors",
+            self.requests,
+            self.rows,
+            self.batches,
+            self.mean_batch_rows,
+            self.mean_exec_ms,
+            self.mean_latency_ms,
+            self.errors
+        )
+    }
+}
+
+/// A running inference server: worker pool + shared compiled plan.
+/// Dropping (or [`Server::shutdown`]) closes the queue, drains pending
+/// requests, and joins the workers.
+pub struct Server {
+    plan: Arc<CompiledNet>,
+    queue: Arc<Queue>,
+    workers: Vec<JoinHandle<()>>,
+    stats: Arc<StatsInner>,
+    batched: bool,
+}
+
+impl Server {
+    /// Start `cfg.workers` threads serving `plan`.
+    pub fn start(plan: Arc<CompiledNet>, cfg: ServeConfig) -> Server {
+        let queue = Arc::new(Queue::new());
+        let stats = Arc::new(StatsInner::default());
+        // batching needs provably row-independent semantics
+        let batched =
+            cfg.max_batch > 1 && !plan.inputs().is_empty() && plan.batch_invariant();
+        let n = cfg.workers.max(1);
+        let mut workers = Vec::with_capacity(n);
+        for _ in 0..n {
+            let queue = Arc::clone(&queue);
+            let plan = Arc::clone(&plan);
+            let stats = Arc::clone(&stats);
+            let cfg = cfg.clone();
+            workers.push(std::thread::spawn(move || {
+                worker_loop(&plan, &queue, &stats, &cfg, batched)
+            }));
+        }
+        Server { plan, queue, workers, stats, batched }
+    }
+
+    /// The shared plan.
+    pub fn plan(&self) -> &CompiledNet {
+        &self.plan
+    }
+
+    /// Whether micro-batching is active for this plan/config.
+    pub fn batched(&self) -> bool {
+        self.batched
+    }
+
+    /// A cheap cloneable handle for submitting from other threads. A
+    /// `Client` does not keep the server alive: after shutdown its
+    /// submissions fail cleanly (and workers exit regardless of how
+    /// many handles remain).
+    pub fn client(&self) -> Client {
+        Client {
+            plan: Arc::clone(&self.plan),
+            queue: Arc::clone(&self.queue),
+            batched: self.batched,
+        }
+    }
+
+    /// Enqueue a request (inputs in declared order; axis 0 free).
+    /// Returns the reply channel immediately — shape errors are
+    /// rejected here, before they can poison a batch.
+    pub fn submit(
+        &self,
+        inputs: Vec<NdArray>,
+    ) -> Result<Receiver<Result<Vec<NdArray>, String>>, String> {
+        submit_on(&self.plan, self.batched, &self.queue, inputs)
+    }
+
+    /// Blocking convenience: submit and wait for the outputs.
+    pub fn infer(&self, inputs: Vec<NdArray>) -> Result<Vec<NdArray>, String> {
+        let rx = self.submit(inputs)?;
+        rx.recv().map_err(|_| "server shut down before replying".to_string())?
+    }
+
+    /// Blocking classification: argmax of each row of the first output.
+    /// Uses the NaN-safe total ordering shared with trainer validation
+    /// ([`crate::tensor::ops::argmax`]) — NaN logits cost accuracy, not
+    /// a worker thread.
+    pub fn infer_class(&self, inputs: Vec<NdArray>) -> Result<Vec<usize>, String> {
+        let out = self.infer(inputs)?;
+        let first = out.first().ok_or_else(|| "network has no outputs".to_string())?;
+        let rows = first.dims().first().copied().unwrap_or(1).max(1);
+        let stride = first.size() / rows;
+        if stride == 0 {
+            return Err("output rows are empty".to_string());
+        }
+        Ok((0..rows)
+            .map(|r| crate::tensor::ops::argmax(&first.data()[r * stride..(r + 1) * stride]))
+            .collect())
+    }
+
+    /// Current counters.
+    pub fn stats(&self) -> ServeStats {
+        let requests = self.stats.requests.load(Ordering::Relaxed);
+        let rows = self.stats.rows.load(Ordering::Relaxed);
+        let batches = self.stats.batches.load(Ordering::Relaxed);
+        let errors = self.stats.errors.load(Ordering::Relaxed);
+        let exec_ns = self.stats.exec_ns.load(Ordering::Relaxed);
+        let latency_ns = self.stats.latency_ns.load(Ordering::Relaxed);
+        ServeStats {
+            requests,
+            rows,
+            batches,
+            errors,
+            mean_batch_rows: rows as f64 / batches.max(1) as f64,
+            mean_exec_ms: exec_ns as f64 / 1e6 / batches.max(1) as f64,
+            mean_latency_ms: latency_ns as f64 / 1e6 / requests.max(1) as f64,
+        }
+    }
+
+    /// Close the queue, finish queued work, join the workers, and
+    /// return the final counters.
+    pub fn shutdown(mut self) -> ServeStats {
+        self.queue.close();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+        self.stats()
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.queue.close();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// A submit-side handle to a running [`Server`]. Clone one per client
+/// thread. A `Client` never blocks server shutdown; once the server is
+/// gone its submissions fail cleanly.
+#[derive(Clone)]
+pub struct Client {
+    plan: Arc<CompiledNet>,
+    queue: Arc<Queue>,
+    batched: bool,
+}
+
+impl Client {
+    /// Same contract as [`Server::submit`].
+    pub fn submit(
+        &self,
+        inputs: Vec<NdArray>,
+    ) -> Result<Receiver<Result<Vec<NdArray>, String>>, String> {
+        submit_on(&self.plan, self.batched, &self.queue, inputs)
+    }
+
+    /// Same contract as [`Server::infer`].
+    pub fn infer(&self, inputs: Vec<NdArray>) -> Result<Vec<NdArray>, String> {
+        let rx = self.submit(inputs)?;
+        rx.recv().map_err(|_| "server shut down before replying".to_string())?
+    }
+}
+
+/// Shared submit path: validate shapes, wrap with a reply channel,
+/// enqueue.
+fn submit_on(
+    plan: &CompiledNet,
+    batched: bool,
+    queue: &Queue,
+    inputs: Vec<NdArray>,
+) -> Result<Receiver<Result<Vec<NdArray>, String>>, String> {
+    let rows = plan.check_inputs(&inputs)?;
+    if batched && !inputs.iter().all(|a| a.dims().first().copied() == Some(rows)) {
+        return Err("all inputs of one request must share the batch dimension".to_string());
+    }
+    let (reply, rx) = channel();
+    queue.push(Request { inputs, rows, enqueued: Instant::now(), reply })?;
+    Ok(rx)
+}
+
+fn worker_loop(
+    plan: &CompiledNet,
+    queue: &Queue,
+    stats: &StatsInner,
+    cfg: &ServeConfig,
+    batched: bool,
+) {
+    // pop() parks on the condvar with the lock released, so workers
+    // never block each other while idle
+    while let Some(first) = queue.pop() {
+        let mut batch = vec![first];
+        if batched {
+            let mut rows = batch[0].rows;
+            let deadline = Instant::now() + cfg.max_wait;
+            while rows < cfg.max_batch {
+                match queue.pop_until(deadline, cfg.max_batch - rows) {
+                    Some(r) => {
+                        rows += r.rows;
+                        batch.push(r);
+                    }
+                    None => break, // deadline, closed, or next one too big
+                }
+            }
+        }
+        run_batch(plan, stats, batch);
+    }
+}
+
+fn run_batch(plan: &CompiledNet, stats: &StatsInner, mut batch: Vec<Request>) {
+    if batch.len() == 1 {
+        let req = batch.pop().expect("non-empty batch");
+        run_single(plan, stats, req);
+        return;
+    }
+    // concatenate each declared input across requests along axis 0
+    let n_inputs = plan.inputs().len();
+    let mut cat: Vec<NdArray> = Vec::with_capacity(n_inputs);
+    for i in 0..n_inputs {
+        let parts: Vec<&NdArray> = batch.iter().map(|r| &r.inputs[i]).collect();
+        cat.push(NdArray::concat(&parts, 0));
+    }
+    let t0 = Instant::now();
+    let out = plan.execute_positional(&cat);
+    let exec_ns = t0.elapsed().as_nanos() as u64;
+    match out {
+        Err(e) => {
+            stats.exec_ns.fetch_add(exec_ns, Ordering::Relaxed);
+            stats.batches.fetch_add(1, Ordering::Relaxed);
+            for req in batch {
+                finish(stats, req, Err(e.clone()));
+            }
+        }
+        Ok(outs) => {
+            let total: usize = batch.iter().map(|r| r.rows).sum();
+            if outs.iter().any(|o| o.dims().first().copied() != Some(total)) {
+                // batch-invariance heuristic miss: discard the batched
+                // run (it is not counted) and answer each request from
+                // its own solo execution instead
+                for req in batch {
+                    run_single(plan, stats, req);
+                }
+                return;
+            }
+            stats.exec_ns.fetch_add(exec_ns, Ordering::Relaxed);
+            stats.batches.fetch_add(1, Ordering::Relaxed);
+            let mut off = 0usize;
+            for req in batch {
+                let rows = req.rows;
+                let slices: Vec<NdArray> =
+                    outs.iter().map(|o| o.slice_axis(0, off, off + rows)).collect();
+                off += rows;
+                finish(stats, req, Ok(slices));
+            }
+        }
+    }
+}
+
+fn run_single(plan: &CompiledNet, stats: &StatsInner, req: Request) {
+    let t0 = Instant::now();
+    let out = plan.execute_positional(&req.inputs);
+    stats.exec_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+    stats.batches.fetch_add(1, Ordering::Relaxed);
+    finish(stats, req, out);
+}
+
+/// The serving-throughput harness shared by `nnl bench-serve` and
+/// `benches/serve_throughput.rs`: over `requests` random
+/// single-example requests, measure per-request interpretation,
+/// compiled-sequential execution, and worker-pool serving without and
+/// with micro-batching. Returns the rendered report.
+pub fn bench_throughput(
+    net: &NetworkDef,
+    params: &HashMap<String, NdArray>,
+    requests: usize,
+    cfg: &ServeConfig,
+) -> Result<String, String> {
+    use crate::utils::bench::{bench, table};
+    let plan = Arc::new(CompiledNet::compile(net, params)?);
+    let mut rng = Rng::new(7);
+    let reqs: Vec<Vec<NdArray>> = (0..requests)
+        .map(|_| {
+            net.inputs
+                .iter()
+                .map(|t| {
+                    let mut d = t.dims.clone();
+                    if !d.is_empty() {
+                        d[0] = 1;
+                    }
+                    rng.rand(&d, -1.0, 1.0)
+                })
+                .collect()
+        })
+        .collect();
+    let named: Vec<HashMap<String, NdArray>> = reqs
+        .iter()
+        .map(|r| net.inputs.iter().map(|t| t.name.clone()).zip(r.iter().cloned()).collect())
+        .collect();
+
+    // 1. the old deployment path: full interpret (compile) per request
+    let interp = bench("interpreter::run per request", 1, 3, || {
+        for m in &named {
+            crate::nnp::interpreter::run(net, m, params).expect("interpreted run");
+        }
+    });
+    // 2. compile once, execute per request (params bound up front)
+    let compiled = bench("compiled plan, sequential", 1, 3, || {
+        for r in &reqs {
+            plan.execute_positional(r).expect("compiled run");
+        }
+    });
+    // 3./4. worker pool, request-at-a-time vs micro-batched: a load
+    // generator submits everything, then awaits every reply
+    let drive = |server: &Server| {
+        let rxs: Vec<_> =
+            reqs.iter().map(|r| server.submit(r.clone()).expect("submit")).collect();
+        for rx in rxs {
+            rx.recv().expect("server reply").expect("inference ok");
+        }
+    };
+    let workers = cfg.workers.max(1);
+    let unbatched =
+        Server::start(Arc::clone(&plan), ServeConfig { max_batch: 1, ..cfg.clone() });
+    let un_m = bench(&format!("server x{workers}, unbatched"), 1, 3, || drive(&unbatched));
+    let batched = Server::start(Arc::clone(&plan), cfg.clone());
+    let b_m =
+        bench(&format!("server x{workers}, max batch {}", cfg.max_batch), 1, 3, || {
+            drive(&batched)
+        });
+
+    let rows = vec![interp, compiled, un_m, b_m];
+    let mut out =
+        table(&format!("Serving throughput: '{}' x {requests} requests", net.name), &rows);
+    for r in &rows {
+        out.push_str(&format!(
+            "  {:<38} {:>10.0} requests/s\n",
+            r.name,
+            requests as f64 / r.mean_secs
+        ));
+    }
+    out.push_str(&format!("batched server: {}\n", batched.shutdown()));
+    out.push_str(&format!("unbatched server: {}\n", unbatched.shutdown()));
+    Ok(out)
+}
+
+fn finish(stats: &StatsInner, req: Request, out: Result<Vec<NdArray>, String>) {
+    if out.is_err() {
+        stats.errors.fetch_add(1, Ordering::Relaxed);
+    }
+    stats.requests.fetch_add(1, Ordering::Relaxed);
+    stats.rows.fetch_add(req.rows as u64, Ordering::Relaxed);
+    stats.latency_ns.fetch_add(req.enqueued.elapsed().as_nanos() as u64, Ordering::Relaxed);
+    // the client may have hung up; that is its problem, not ours
+    let _ = req.reply.send(out);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nnp::ir::{Layer, NetworkDef, Op, TensorDef};
+    use std::collections::HashMap;
+
+    fn affine_plan(w: &[f32]) -> Arc<CompiledNet> {
+        let net = NetworkDef {
+            name: "n".into(),
+            inputs: vec![TensorDef { name: "x".into(), dims: vec![1, 2] }],
+            outputs: vec!["y".into()],
+            layers: vec![Layer {
+                name: "fc".into(),
+                op: Op::Affine,
+                inputs: vec!["x".into()],
+                params: vec!["W".into()],
+                outputs: vec!["y".into()],
+            }],
+        };
+        let mut params = HashMap::new();
+        params.insert("W".to_string(), NdArray::from_slice(&[2, 3], w));
+        Arc::new(CompiledNet::compile(&net, &params).unwrap())
+    }
+
+    #[test]
+    fn serves_requests_and_matches_direct_execution() {
+        let plan = affine_plan(&[1., 2., 3., 4., 5., 6.]);
+        let server = Server::start(Arc::clone(&plan), ServeConfig::default());
+        assert!(server.batched());
+        let mut handles = Vec::new();
+        for i in 0..16 {
+            let x = NdArray::from_slice(&[1, 2], &[i as f32, -(i as f32)]);
+            handles.push((x.clone(), server.submit(vec![x]).unwrap()));
+        }
+        for (x, rx) in handles {
+            let got = rx.recv().unwrap().unwrap();
+            let want = plan.execute_positional(&[x]).unwrap();
+            assert_eq!(got[0].dims(), want[0].dims());
+            assert_eq!(got[0].data(), want[0].data());
+        }
+        let stats = server.shutdown();
+        assert_eq!(stats.requests, 16);
+        assert_eq!(stats.rows, 16);
+        assert!(stats.batches <= 16);
+        assert_eq!(stats.errors, 0);
+    }
+
+    #[test]
+    fn non_batchable_plan_served_per_request() {
+        let net = NetworkDef {
+            name: "sum".into(),
+            inputs: vec![TensorDef { name: "x".into(), dims: vec![1, 2] }],
+            outputs: vec!["y".into()],
+            layers: vec![Layer {
+                name: "s".into(),
+                op: Op::SumAll,
+                inputs: vec!["x".into()],
+                params: vec![],
+                outputs: vec!["y".into()],
+            }],
+        };
+        let plan = Arc::new(CompiledNet::compile(&net, &HashMap::new()).unwrap());
+        let server = Server::start(Arc::clone(&plan), ServeConfig::default());
+        assert!(!server.batched());
+        let out = server.infer(vec![NdArray::from_slice(&[1, 2], &[3., 4.])]).unwrap();
+        assert_eq!(out[0].data(), &[7.]);
+    }
+
+    #[test]
+    fn bad_shapes_rejected_at_submit() {
+        let plan = affine_plan(&[1., 2., 3., 4., 5., 6.]);
+        let server = Server::start(plan, ServeConfig::default());
+        let err = server.submit(vec![NdArray::zeros(&[2])]).unwrap_err();
+        assert!(err.contains("incompatible"), "{err}");
+        let err = server.submit(vec![]).unwrap_err();
+        assert!(err.contains("expects 1 inputs"), "{err}");
+    }
+
+    #[test]
+    fn nan_logits_classify_without_panicking() {
+        // second class scores NaN for every input; prediction must fall
+        // back to the best finite logit instead of killing a worker
+        let plan = affine_plan(&[1., f32::NAN, 0., 1., f32::NAN, 0.]);
+        let server = Server::start(plan, ServeConfig::default());
+        let classes =
+            server.infer_class(vec![NdArray::from_slice(&[2, 2], &[5., 1., 0., 2.])]).unwrap();
+        assert_eq!(classes, vec![0, 0]);
+    }
+
+    #[test]
+    fn mean_batch_rows_reflects_microbatching() {
+        let plan = affine_plan(&[1., 0., 0., 0., 1., 0.]);
+        // one slow-to-fill worker forces queued requests to coalesce
+        let cfg = ServeConfig {
+            workers: 1,
+            max_batch: 8,
+            max_wait: Duration::from_millis(200),
+        };
+        let server = Server::start(plan, cfg);
+        let rxs: Vec<_> = (0..8)
+            .map(|i| {
+                server
+                    .submit(vec![NdArray::from_slice(&[1, 2], &[i as f32, 0.])])
+                    .unwrap()
+            })
+            .collect();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let out = rx.recv().unwrap().unwrap();
+            assert_eq!(out[0].dims(), &[1, 3]);
+            assert_eq!(out[0].data()[0], i as f32);
+        }
+        let stats = server.shutdown();
+        assert_eq!(stats.requests, 8);
+        // at least some coalescing must have happened with one worker
+        // and a 200 ms window
+        assert!(stats.batches < 8, "no batching occurred: {stats}");
+    }
+}

@@ -275,14 +275,10 @@ impl NdArray {
         self.data.iter().map(|v| v * v).sum::<f32>().sqrt()
     }
 
-    /// Index of max element (flat).
+    /// Index of max element (flat), NaN-safe (see
+    /// [`crate::tensor::ops::argmax`]).
     pub fn argmax_flat(&self) -> usize {
-        self.data
-            .iter()
-            .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
-            .map(|(i, _)| i)
-            .unwrap_or(0)
+        super::ops::argmax(&self.data)
     }
 
     /// Max |a - b| against another array of the same shape.

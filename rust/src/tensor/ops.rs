@@ -34,6 +34,25 @@ pub fn map(a: &NdArray, f: impl Fn(f32) -> f32) -> NdArray {
     NdArray::from_vec(a.dims(), a.data().iter().map(|&x| f(x)).collect())
 }
 
+/// NaN-safe argmax over a slice: index of the first greatest non-NaN
+/// element; NaNs sort below everything (a row of all NaNs yields 0).
+/// This is the one total ordering every prediction path shares —
+/// trainer validation, the serving classifier, `NdArray::argmax_flat` —
+/// so NaN logits can never panic an evaluation or a request.
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0usize;
+    let mut best_v = f32::NEG_INFINITY;
+    let mut found = false;
+    for (i, &v) in xs.iter().enumerate() {
+        if !v.is_nan() && (!found || v > best_v) {
+            best = i;
+            best_v = v;
+            found = true;
+        }
+    }
+    best
+}
+
 pub fn add(a: &NdArray, b: &NdArray) -> NdArray {
     zip_broadcast(a, b, |x, y| x + y)
 }
@@ -395,6 +414,17 @@ mod tests {
         // top-left patch has 5 zeros (border) + 4 ones
         let row0: f32 = c.data()[0..9].iter().sum();
         assert_eq!(row0, 4.0);
+    }
+
+    #[test]
+    fn argmax_is_nan_safe() {
+        assert_eq!(argmax(&[1.0, 3.0, 2.0]), 1);
+        // regression: partial_cmp().unwrap() panicked on NaN logits
+        assert_eq!(argmax(&[1.0, f32::NAN, 2.0]), 2);
+        assert_eq!(argmax(&[f32::NAN, f32::NAN]), 0);
+        assert_eq!(argmax(&[f32::NEG_INFINITY, f32::NAN, -1.0]), 2);
+        assert_eq!(argmax(&[2.0, 2.0, 1.0]), 0); // first max wins
+        assert_eq!(argmax(&[]), 0);
     }
 
     #[test]

@@ -204,12 +204,9 @@ pub fn evaluate_dynamic(model: &str, data: &dyn DataSource, batches: usize) -> f
         let out = logits.var.data();
         for b in 0..bs {
             let row = &out.data()[b * classes..(b + 1) * classes];
-            let pred = row
-                .iter()
-                .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                .map(|(i, _)| i)
-                .unwrap();
+            // NaN-safe total ordering (shared with the serving path):
+            // NaN logits count as a miss instead of panicking
+            let pred = crate::tensor::ops::argmax(row);
             if pred != by.data()[b] as usize {
                 wrong += 1;
             }
@@ -301,12 +298,7 @@ pub fn evaluate_static(
         let logits = &out[0];
         for b in 0..bs {
             let row = &logits.data()[b * classes..(b + 1) * classes];
-            let pred = row
-                .iter()
-                .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                .map(|(i, _)| i)
-                .unwrap();
+            let pred = crate::tensor::ops::argmax(row);
             if pred != by.data()[b] as usize {
                 wrong += 1;
             }

@@ -1,0 +1,107 @@
+//! Concurrent-serving correctness: one `CompiledNet` shared by many
+//! threads must produce outputs bit-identical to the sequential
+//! interpreter, and micro-batched serving must equal per-example
+//! execution. This is the serve smoke test CI runs explicitly.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+use nnl::models::zoo;
+use nnl::nnp::{interpreter, CompiledNet};
+use nnl::serve::{ServeConfig, Server};
+use nnl::tensor::{NdArray, Rng};
+
+#[test]
+fn shared_plan_across_threads_is_bit_identical() {
+    // lenet exercises conv / pool / affine through the plan
+    let (net, params) = zoo::export_eval("lenet", 41);
+    let plan = Arc::new(CompiledNet::compile(&net, &params).unwrap());
+    let mut rng = Rng::new(5);
+    let inputs: Vec<NdArray> = (0..6).map(|_| rng.rand(&[1, 1, 28, 28], -1.0, 1.0)).collect();
+
+    // sequential reference through the one-shot interpreter
+    let reference: Vec<NdArray> = inputs
+        .iter()
+        .map(|x| {
+            let mut m = HashMap::new();
+            m.insert("x".to_string(), x.clone());
+            interpreter::run(&net, &m, &params).unwrap().remove(0)
+        })
+        .collect();
+
+    let mut handles = Vec::new();
+    for _ in 0..4 {
+        let plan = Arc::clone(&plan);
+        let inputs = inputs.clone();
+        handles.push(std::thread::spawn(move || {
+            inputs
+                .iter()
+                .map(|x| plan.execute_positional(std::slice::from_ref(x)).unwrap().remove(0))
+                .collect::<Vec<NdArray>>()
+        }));
+    }
+    for h in handles {
+        let outs = h.join().expect("worker thread panicked");
+        assert_eq!(outs.len(), reference.len());
+        for (o, r) in outs.iter().zip(&reference) {
+            assert_eq!(o.dims(), r.dims());
+            assert_eq!(o.data(), r.data(), "thread output diverged from interpreter");
+        }
+    }
+}
+
+#[test]
+fn microbatched_serving_equals_per_example_execution() {
+    let (net, params) = zoo::export_eval("mlp", 42);
+    let plan = Arc::new(CompiledNet::compile(&net, &params).unwrap());
+    let server = Server::start(
+        Arc::clone(&plan),
+        ServeConfig { workers: 2, max_batch: 8, max_wait: Duration::from_millis(20) },
+    );
+    assert!(server.batched(), "mlp must be micro-batchable");
+
+    let mut rng = Rng::new(9);
+    let inputs: Vec<NdArray> = (0..24).map(|_| rng.rand(&[1, 64], -1.0, 1.0)).collect();
+    let rxs: Vec<_> = inputs.iter().map(|x| server.submit(vec![x.clone()]).unwrap()).collect();
+    for (x, rx) in inputs.iter().zip(rxs) {
+        let got = rx.recv().unwrap().unwrap();
+        let want = plan.execute_positional(std::slice::from_ref(x)).unwrap();
+        assert_eq!(got[0].dims(), want[0].dims());
+        assert_eq!(got[0].data(), want[0].data(), "batched row diverged from solo run");
+    }
+    let stats = server.shutdown();
+    assert_eq!(stats.requests, 24);
+    assert_eq!(stats.rows, 24);
+    assert_eq!(stats.errors, 0);
+}
+
+#[test]
+fn concurrent_clients_one_server() {
+    let (net, params) = zoo::export_eval("lenet", 43);
+    let plan = Arc::new(CompiledNet::compile(&net, &params).unwrap());
+    let server = Server::start(
+        Arc::clone(&plan),
+        ServeConfig { workers: 4, max_batch: 8, max_wait: Duration::from_millis(5) },
+    );
+    let mut handles = Vec::new();
+    for t in 0..4u64 {
+        let client = server.client();
+        let plan = Arc::clone(&plan);
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(100 + t);
+            for _ in 0..8 {
+                let x = rng.rand(&[1, 1, 28, 28], -1.0, 1.0);
+                let got = client.infer(vec![x.clone()]).unwrap();
+                let want = plan.execute_positional(&[x]).unwrap();
+                assert_eq!(got[0].data(), want[0].data());
+            }
+        }));
+    }
+    for h in handles {
+        h.join().expect("client thread panicked");
+    }
+    let stats = server.shutdown();
+    assert_eq!(stats.requests, 32);
+    assert_eq!(stats.errors, 0);
+}
