@@ -1,0 +1,14 @@
+//! Bench: the tiled, multi-threaded kernel floor vs the pre-PR naive
+//! loops — GEMM GFLOP/s (naive vs packed tiled, single- and
+//! multi-thread), the `NNL_THREADS` scaling curve, fused-conv step
+//! time, compiled-plan serving throughput and the tape train-step hot
+//! path. The harness lives in `nnl::bench_kernels` (shared with
+//! `nnl bench-kernels`); results land in `BENCH_kernels.json`.
+
+fn main() {
+    let report = nnl::bench_kernels::run(false);
+    print!("{}", report.text);
+    let path = std::path::Path::new("BENCH_kernels.json");
+    nnl::bench_kernels::write_json(path, &report.json).expect("writing BENCH_kernels.json");
+    println!("wrote {}", path.display());
+}

@@ -1,0 +1,196 @@
+//! Kernel benchmark harness — shared by `nnl bench-kernels` and
+//! `benches/kernel_gemm.rs`, emitting `BENCH_kernels.json`.
+//!
+//! Measures the tentpole numbers of the tiled-kernel work: GEMM
+//! GFLOP/s (pre-PR naive loop vs the packed tiled core, single- and
+//! multi-thread), the thread-scaling curve, conv forward/backward step
+//! time on the fused im2col-GEMM path, compiled-plan serving
+//! throughput, and a tape train-step hot-path proxy.
+
+use crate::functions as F;
+use crate::models::zoo;
+use crate::nnp::CompiledNet;
+use crate::tensor::{ops, parallel, NdArray, Rng};
+use crate::utils::bench::{bench, table, Measurement};
+use crate::utils::json::Json;
+use crate::Variable;
+
+/// Everything one run produces: the human table and the JSON payload.
+pub struct KernelBenchReport {
+    pub text: String,
+    pub json: Json,
+}
+
+fn gflops(flops: f64, m: &Measurement) -> f64 {
+    flops / m.mean_secs / 1e9
+}
+
+/// Run the suite. `quick` shrinks sizes/iterations for CI smoke use.
+pub fn run(quick: bool) -> KernelBenchReport {
+    let mut rows: Vec<Measurement> = Vec::new();
+    let mut rng = Rng::new(5);
+
+    // --- GEMM: the acceptance measurement (naive vs tiled, 256^3)
+    let mm = if quick { 128 } else { 256 };
+    let iters = if quick { 3 } else { 10 };
+    let a = rng.randn(&[mm, mm], 1.0);
+    let b = rng.randn(&[mm, mm], 1.0);
+    let flops = 2.0 * (mm as f64).powi(3);
+    let naive = bench(&format!("matmul naive (pre-PR) {mm}^3"), 1, iters, || {
+        std::hint::black_box(ops::matmul_naive(&a, &b));
+    });
+    let tiled_1t = bench(&format!("matmul tiled, 1 thread {mm}^3"), 1, iters, || {
+        parallel::with_thread_limit(1, || std::hint::black_box(ops::matmul(&a, &b)));
+    });
+    let nt = parallel::num_threads();
+    let tiled_mt = bench(&format!("matmul tiled, {nt} threads {mm}^3"), 1, iters, || {
+        std::hint::black_box(ops::matmul(&a, &b));
+    });
+    let speedup = naive.mean_secs / tiled_mt.mean_secs;
+    rows.push(naive.clone());
+    rows.push(tiled_1t.clone());
+    rows.push(tiled_mt.clone());
+
+    // --- thread-scaling curve (same GEMM, capped pool widths)
+    let mut widths: Vec<usize> = Vec::new();
+    let mut t = 1;
+    while t < nt {
+        widths.push(t);
+        t *= 2;
+    }
+    widths.push(nt);
+    let mut scaling: Vec<Json> = Vec::new();
+    for &w in &widths {
+        let m = bench(&format!("matmul tiled, limit {w}"), 1, iters, || {
+            parallel::with_thread_limit(w, || std::hint::black_box(ops::matmul(&a, &b)));
+        });
+        scaling.push(Json::obj(vec![
+            ("threads", Json::num(w as f64)),
+            ("gflops", Json::num(gflops(flops, &m))),
+        ]));
+        rows.push(m);
+    }
+
+    // --- conv fwd/bwd on the fused path (reused graph, tape hot loop)
+    let (cb, cc, chw, coc, ck) = if quick { (2, 4, 16, 8, 3) } else { (4, 8, 28, 16, 5) };
+    let xc = rng.randn(&[cb, cc, chw, chw], 1.0);
+    let wc = rng.randn(&[coc, cc, ck, ck], 1.0);
+    let xv = Variable::from_array(xc.clone(), true);
+    let wv = Variable::from_array(wc, true);
+    let pad = (ck / 2, ck / 2);
+    let loss = F::mean_all(&F::convolution(&xv, &wv, None, (1, 1), pad, (1, 1)));
+    let conv_iters = if quick { 3 } else { 8 };
+    let conv_fwd = bench("conv forward (fused im2col-GEMM)", 1, conv_iters, || {
+        xv.set_data(xc.clone());
+        loss.forward();
+    });
+    let conv_bwd = bench("conv forward+backward step", 1, conv_iters, || {
+        xv.set_data(xc.clone());
+        loss.forward();
+        xv.zero_grad();
+        wv.zero_grad();
+        loss.backward();
+    });
+    rows.push(conv_fwd.clone());
+    rows.push(conv_bwd.clone());
+
+    // --- compiled-plan serving throughput (sequential executes)
+    let (net, params) = zoo::export_eval("mlp", 11);
+    let plan = CompiledNet::compile(&net, &params).expect("mlp compiles");
+    let requests = if quick { 32 } else { 128 };
+    let reqs: Vec<Vec<NdArray>> = (0..requests)
+        .map(|_| {
+            net.inputs
+                .iter()
+                .map(|t| {
+                    let mut d = t.dims.clone();
+                    if !d.is_empty() {
+                        d[0] = 1;
+                    }
+                    rng.rand(&d, -1.0, 1.0)
+                })
+                .collect()
+        })
+        .collect();
+    let serve = bench(&format!("compiled mlp x{requests} requests"), 1, 5, || {
+        for r in &reqs {
+            plan.execute_positional(r).expect("plan execute");
+        }
+    });
+    let serve_rps = requests as f64 / serve.mean_secs;
+    rows.push(serve.clone());
+
+    // --- tape hot path proxy: 2-layer MLP train step on reused graph
+    let xt = rng.randn(&[32, 256], 1.0);
+    let xtv = Variable::from_array(xt.clone(), true);
+    let w1 = Variable::from_array(rng.randn(&[256, 128], 0.1), true);
+    let b1 = Variable::from_array(NdArray::zeros(&[128]), true);
+    let w2 = Variable::from_array(rng.randn(&[128, 10], 0.1), true);
+    let b2 = Variable::from_array(NdArray::zeros(&[10]), true);
+    let h = F::relu(&F::affine(&xtv, &w1, Some(&b1)));
+    let tloss = F::mean_all(&F::affine(&h, &w2, Some(&b2)));
+    let tape = bench("MLP train step (affine fwd+bwd)", 2, if quick { 10 } else { 30 }, || {
+        xtv.set_data(xt.clone());
+        tloss.forward();
+        for p in [&w1, &b1, &w2, &b2] {
+            p.zero_grad();
+        }
+        tloss.backward();
+    });
+    let tape_sps = 1.0 / tape.mean_secs;
+    rows.push(tape.clone());
+
+    let json = Json::obj(vec![
+        ("nnl_threads", Json::num(nt as f64)),
+        (
+            "gemm",
+            Json::obj(vec![
+                ("size", Json::num(mm as f64)),
+                ("naive_gflops", Json::num(gflops(flops, &naive))),
+                ("tiled_1thread_gflops", Json::num(gflops(flops, &tiled_1t))),
+                ("tiled_gflops", Json::num(gflops(flops, &tiled_mt))),
+                ("speedup_tiled_vs_naive", Json::num(speedup)),
+            ]),
+        ),
+        ("thread_scaling", Json::Arr(scaling)),
+        (
+            "conv",
+            Json::obj(vec![
+                ("x", Json::arr_of_usize(&[cb, cc, chw, chw])),
+                ("w", Json::arr_of_usize(&[coc, cc, ck, ck])),
+                ("fwd_ms", Json::num(conv_fwd.mean_secs * 1e3)),
+                ("fwd_bwd_ms", Json::num(conv_bwd.mean_secs * 1e3)),
+            ]),
+        ),
+        (
+            "serve_throughput",
+            Json::obj(vec![
+                ("model", Json::str("mlp")),
+                ("requests_per_sec", Json::num(serve_rps)),
+            ]),
+        ),
+        (
+            "tape_hot_path",
+            Json::obj(vec![("steps_per_sec", Json::num(tape_sps))]),
+        ),
+    ]);
+
+    let mut text = table(
+        &format!("Tiled kernels vs naive (NNL_THREADS = {nt})"),
+        &rows,
+    );
+    text.push_str(&format!(
+        "GEMM {mm}^3: naive {:.2} GF/s | tiled x1 {:.2} GF/s | tiled x{nt} {:.2} GF/s \
+         => {speedup:.2}x vs naive\n\
+         serve: {serve_rps:.0} requests/s | tape: {tape_sps:.0} steps/s\n",
+        gflops(flops, &naive),
+        gflops(flops, &tiled_1t),
+        gflops(flops, &tiled_mt),
+    ));
+    KernelBenchReport { text, json }
+}
+
+/// Write the JSON payload where the acceptance tooling expects it.
+pub fn write_json(path: &std::path::Path, json: &Json) -> std::io::Result<()> {
+    std::fs::write(path, json.to_string_pretty())
+}

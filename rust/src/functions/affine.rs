@@ -2,44 +2,37 @@
 //!
 //! This is the op of the paper's Listing 1 — and its inner matmul is
 //! exactly what the L1 Pallas kernel implements on the static path.
+//! Forward and backward run on [`crate::tensor::kernels`]'s tiled GEMM
+//! with the weight/input transposes taken as packing views (the old
+//! closures materialized `W.t()` and `x.t()` on every backward step);
+//! the bias fuses into the forward output buffer. The compiled plan's
+//! fast path calls the same [`kernels::affine_forward`], so tape and
+//! deployment outputs are bit-identical.
 
 use crate::graph::Variable;
 use crate::nnp::ir::Op;
-use crate::tensor::{ops, NdArray};
+use crate::tensor::kernels;
 
 /// `x: [B, ...] -> [B, out]` with `w: [in, out]`, optional `b: [out]`.
 /// Leading axis is the batch axis (NNabla `base_axis=1`); trailing axes
 /// are flattened into the input feature dimension.
 pub fn affine(x: &Variable, w: &Variable, b: Option<&Variable>) -> Variable {
-    let fwd_flat = |x: &NdArray| -> NdArray {
-        let batch = x.dims()[0];
-        let feat: usize = x.dims()[1..].iter().product();
-        x.reshape(&[batch, feat])
-    };
     match b {
         Some(b) => Variable::from_function(
             Op::Affine,
             &[x, w, b],
-            Box::new(move |xs| {
-                let x2 = fwd_flat(&xs[0]);
-                ops::add(&ops::matmul(&x2, &xs[1]), &xs[2])
-            }),
+            Box::new(move |xs| kernels::affine_forward(&xs[0], &xs[1], Some(&xs[2]))),
             Box::new(move |xs, _y, g| {
-                let x2 = fwd_flat(&xs[0]);
-                let gx = ops::matmul(g, &xs[1].t()).reshape(xs[0].dims());
-                let gw = ops::matmul(&x2.t(), g);
-                let gb = ops::sum_axis(g, 0, false);
-                vec![Some(gx), Some(gw), Some(gb)]
+                let (gx, gw, gb) = kernels::affine_backward(&xs[0], &xs[1], g, true);
+                vec![Some(gx), Some(gw), gb]
             }),
         ),
         None => Variable::from_function(
             Op::Affine,
             &[x, w],
-            Box::new(move |xs| ops::matmul(&fwd_flat(&xs[0]), &xs[1])),
+            Box::new(move |xs| kernels::affine_forward(&xs[0], &xs[1], None)),
             Box::new(move |xs, _y, g| {
-                let x2 = fwd_flat(&xs[0]);
-                let gx = ops::matmul(g, &xs[1].t()).reshape(xs[0].dims());
-                let gw = ops::matmul(&x2.t(), g);
+                let (gx, gw, _) = kernels::affine_backward(&xs[0], &xs[1], g, false);
                 vec![Some(gx), Some(gw)]
             }),
         ),
@@ -51,7 +44,7 @@ mod tests {
     use super::*;
     use crate::functions::gradcheck::{check_grads, rand_leaf};
     use crate::functions::mean_all;
-    use crate::tensor::Rng;
+    use crate::tensor::{NdArray, Rng};
 
     #[test]
     fn affine_known_values() {

@@ -1,69 +1,23 @@
-//! 2-D convolution / deconvolution via im2col + matmul — the same
-//! lowering the static path's Pallas kernel consumes, so the two
-//! backends agree structurally (and numerically, see integration
-//! tests).
+//! 2-D convolution / deconvolution via the fused im2col-GEMM kernels
+//! in [`crate::tensor::kernels`] — the same lowering the static path's
+//! Pallas kernel consumes, so the two backends agree structurally (and
+//! numerically, see integration tests).
+//!
+//! Forward and backward never materialize the `[n·oh·ow, c·kh·kw]`
+//! column matrix: the tiled GEMM packs im2col panels straight from the
+//! input image. This replaced the old materialize-then-cache scheme
+//! (forward built the columns and backward reused them) — fusing the
+//! columns into packing does the same index math the cache avoided,
+//! but at pack bandwidth the GEMM was paying anyway, without holding
+//! an O(n·oh·ow·c·kh·kw) buffer alive between forward and backward.
+//! These closures are exactly what the compiled plan's fast path runs,
+//! so tape, interpreter and plan outputs are bit-identical.
 
 use crate::graph::Variable;
 use crate::nnp::ir::Op;
-use crate::tensor::ops::{self, Conv2dGeom};
+use crate::tensor::kernels;
+use crate::tensor::ops::Conv2dGeom;
 use crate::tensor::NdArray;
-
-/// Shared im2col cache between a conv node's forward and backward
-/// closures (dropout-mask pattern): backward reuses the columns the
-/// last forward produced instead of recomputing them — a measured
-/// ~15-25% dynamic-path train-step win (EXPERIMENTS.md §Perf).
-type ColsCache = std::rc::Rc<std::cell::RefCell<Option<NdArray>>>;
-
-fn conv_forward(
-    x: &NdArray,
-    w: &NdArray,
-    b: Option<&NdArray>,
-    g: &Conv2dGeom,
-    cache: &ColsCache,
-) -> NdArray {
-    let (n, _c, h, wd) = (x.dims()[0], x.dims()[1], x.dims()[2], x.dims()[3]);
-    let oc = w.dims()[0];
-    let (oh, ow) = g.out_hw(h, wd);
-    let cols = ops::im2col(x, g); // [n*oh*ow, c*kh*kw]
-    let wr = w.reshape(&[oc, w.size() / oc]).t(); // [c*kh*kw, oc]
-    let mut y = ops::matmul(&cols, &wr); // [n*oh*ow, oc]
-    *cache.borrow_mut() = Some(cols);
-    if let Some(b) = b {
-        y = ops::add(&y, b);
-    }
-    // [n, oh, ow, oc] -> [n, oc, oh, ow]
-    y.reshape(&[n, oh, ow, oc]).transpose(&[0, 3, 1, 2])
-}
-
-fn conv_backward(
-    x: &NdArray,
-    w: &NdArray,
-    has_bias: bool,
-    g: &Conv2dGeom,
-    gy: &NdArray,
-    cache: &ColsCache,
-) -> (NdArray, NdArray, Option<NdArray>) {
-    let (n, _c, h, wd) = (x.dims()[0], x.dims()[1], x.dims()[2], x.dims()[3]);
-    let oc = w.dims()[0];
-    let (oh, ow) = g.out_hw(h, wd);
-    // gy: [n, oc, oh, ow] -> rows [n*oh*ow, oc]
-    let gyr = gy.transpose(&[0, 2, 3, 1]).reshape(&[n * oh * ow, oc]);
-    let wr = w.reshape(&[oc, w.size() / oc]); // [oc, ckk]
-    // dX = col2im(gyr · wr)
-    let gcols = ops::matmul(&gyr, &wr); // [n*oh*ow, ckk]
-    let gx = ops::col2im(&gcols, x.dims(), g);
-    // dW = (im2col(x)^T · gyr)^T reshaped — reuse forward's columns
-    let ckk = w.size() / oc;
-    let cached = cache.borrow();
-    let cols = match cached.as_ref() {
-        Some(c) if c.dims() == [n * oh * ow, ckk] => c.clone(),
-        _ => ops::im2col(x, g),
-    };
-    drop(cached);
-    let gw = ops::matmul(&gyr.t(), &cols).reshape(w.dims()); // [oc, ckk]
-    let gb = if has_bias { Some(ops::sum_axis(&gyr, 0, false)) } else { None };
-    (gx, gw, gb)
-}
 
 /// Convolution. `x: [N, C, H, W]`, `w: [OC, C, KH, KW]`, `b: [OC]`.
 pub fn convolution(
@@ -80,28 +34,26 @@ pub fn convolution(
         pad,
         dilation,
     };
-    let cache: ColsCache = Default::default();
-    let cache_b = cache.clone();
     match b {
         Some(b) => Variable::from_function(
             Op::Convolution { stride, pad, dilation },
             &[x, w, b],
             Box::new(move |xs| {
-                conv_forward(&xs[0], &xs[1], Some(&xs[2]), &mk_geom(&xs[1]), &cache)
+                kernels::conv2d_forward(&xs[0], &xs[1], Some(&xs[2]), &mk_geom(&xs[1]))
             }),
             Box::new(move |xs, _y, gy| {
                 let (gx, gw, gb) =
-                    conv_backward(&xs[0], &xs[1], true, &mk_geom(&xs[1]), gy, &cache_b);
+                    kernels::conv2d_backward(&xs[0], &xs[1], gy, true, &mk_geom(&xs[1]));
                 vec![Some(gx), Some(gw), gb]
             }),
         ),
         None => Variable::from_function(
             Op::Convolution { stride, pad, dilation },
             &[x, w],
-            Box::new(move |xs| conv_forward(&xs[0], &xs[1], None, &mk_geom(&xs[1]), &cache)),
+            Box::new(move |xs| kernels::conv2d_forward(&xs[0], &xs[1], None, &mk_geom(&xs[1]))),
             Box::new(move |xs, _y, gy| {
                 let (gx, gw, _) =
-                    conv_backward(&xs[0], &xs[1], false, &mk_geom(&xs[1]), gy, &cache_b);
+                    kernels::conv2d_backward(&xs[0], &xs[1], gy, false, &mk_geom(&xs[1]));
                 vec![Some(gx), Some(gw)]
             }),
         ),
@@ -118,62 +70,26 @@ pub fn deconvolution(
     stride: (usize, usize),
     pad: (usize, usize),
 ) -> Variable {
-    // output spatial size: (h-1)*s - 2p + k
-    let fwd = move |x: &NdArray, w: &NdArray, b: Option<&NdArray>| -> NdArray {
-        let (n, c, h, wd) = (x.dims()[0], x.dims()[1], x.dims()[2], x.dims()[3]);
-        let (oc, kh, kw) = (w.dims()[1], w.dims()[2], w.dims()[3]);
-        let oh = (h - 1) * stride.0 + kh - 2 * pad.0;
-        let ow = (wd - 1) * stride.1 + kw - 2 * pad.1;
-        let geom = Conv2dGeom { kernel: (kh, kw), stride, pad, dilation: (1, 1) };
-        // deconv fwd == conv bwd wrt input: x plays gy, w transposed
-        // x rows: [n*h*w, c]
-        let xr = x.transpose(&[0, 2, 3, 1]).reshape(&[n * h * wd, c]);
-        let wr = w.reshape(&[c, oc * kh * kw]); // [c, oc*kh*kw]
-        let cols = ops::matmul(&xr, &wr); // [n*h*w, oc*kh*kw]
-        let mut y = ops::col2im(&cols, &[n, oc, oh, ow], &geom);
-        if let Some(b) = b {
-            y = ops::add(&y, &b.reshape(&[1, oc, 1, 1]));
-        }
-        y
-    };
-    let bwd = move |x: &NdArray, w: &NdArray, has_bias: bool, gy: &NdArray| {
-        let (n, c, h, wd) = (x.dims()[0], x.dims()[1], x.dims()[2], x.dims()[3]);
-        let (oc, kh, kw) = (w.dims()[1], w.dims()[2], w.dims()[3]);
-        let geom = Conv2dGeom { kernel: (kh, kw), stride, pad, dilation: (1, 1) };
-        // dX = conv(gy, w): gy cols against w
-        let gycols = ops::im2col(gy, &geom); // [n*h*w, oc*kh*kw]
-        let wr = w.reshape(&[c, oc * kh * kw]);
-        let gx = ops::matmul(&gycols, &wr.t()) // [n*h*w, c]
-            .reshape(&[n, h, wd, c])
-            .transpose(&[0, 3, 1, 2]);
-        // dW = x^T · gycols
-        let xr = x.transpose(&[0, 2, 3, 1]).reshape(&[n * h * wd, c]);
-        let gw = ops::matmul(&xr.t(), &gycols).reshape(w.dims());
-        let gb = if has_bias {
-            // sum gy over n, h, w
-            let s = ops::sum_axis(&ops::sum_axis(&ops::sum_axis(gy, 3, false), 2, false), 0, false);
-            Some(s)
-        } else {
-            None
-        };
-        (gx, gw, gb)
-    };
     match b {
         Some(b) => Variable::from_function(
             Op::Deconvolution { stride, pad },
             &[x, w, b],
-            Box::new(move |xs| fwd(&xs[0], &xs[1], Some(&xs[2]))),
+            Box::new(move |xs| {
+                kernels::deconv2d_forward(&xs[0], &xs[1], Some(&xs[2]), stride, pad)
+            }),
             Box::new(move |xs, _y, gy| {
-                let (gx, gw, gb) = bwd(&xs[0], &xs[1], true, gy);
+                let (gx, gw, gb) =
+                    kernels::deconv2d_backward(&xs[0], &xs[1], gy, true, stride, pad);
                 vec![Some(gx), Some(gw), gb]
             }),
         ),
         None => Variable::from_function(
             Op::Deconvolution { stride, pad },
             &[x, w],
-            Box::new(move |xs| fwd(&xs[0], &xs[1], None)),
+            Box::new(move |xs| kernels::deconv2d_forward(&xs[0], &xs[1], None, stride, pad)),
             Box::new(move |xs, _y, gy| {
-                let (gx, gw, _) = bwd(&xs[0], &xs[1], false, gy);
+                let (gx, gw, _) =
+                    kernels::deconv2d_backward(&xs[0], &xs[1], gy, false, stride, pad);
                 vec![Some(gx), Some(gw)]
             }),
         ),

@@ -69,9 +69,30 @@
 //!
 //! ## Module map
 //!
+//! ## The compute floor: tiled, multi-threaded kernels
+//!
+//! Underneath both modes, every dense FLOP now flows through
+//! [`tensor::kernels`]: a packed, register-tiled (8×8 microkernel)
+//! GEMM whose operands are *views* — plain, transposed, NCHW-as-rows,
+//! or the im2col matrix of an image — so convolution forward/backward
+//! never materializes its column matrix; the lowering happens inside
+//! panel packing. Work is row-sharded over [`tensor::parallel`], a
+//! persistent `std::thread` pool sized by `NNL_THREADS` (default: all
+//! cores) with a hard determinism contract: chunk boundaries depend
+//! only on shapes and every output element is computed wholly inside
+//! one chunk, so results are **bit-identical at any thread count**. A
+//! per-thread scratch arena ([`tensor::kernels::Scratch`]) feeds
+//! packing buffers and plan intermediates; `CompiledNet::execute`
+//! recycles freed activation slots back into it, so steady-state
+//! serving performs no per-request heap allocation for conv columns
+//! or intermediates. Numbers: `nnl bench-kernels` /
+//! `benches/kernel_gemm.rs` → `BENCH_kernels.json`.
+//!
 //! | module | role |
 //! |---|---|
 //! | [`tensor`] | `NdArray` storage (COW), dtypes, kernels, RNG |
+//! | [`tensor::kernels`] | tiled GEMM, fused conv/affine, scratch arena |
+//! | [`tensor::parallel`] | `NNL_THREADS` worker pool (bit-identical) |
 //! | [`graph`] | define-by-run tape: `Variable`, forward/backward |
 //! | [`functions`] | operator kernels recorded on the tape (`F::*`) |
 //! | [`parametric`] | parameter registry + parametric layers (`PF::*`) |
@@ -85,6 +106,7 @@
 //! | [`converters`] | ONNX-lite, NNB, frozen graph, Rust source |
 //! | [`runtime`] | AOT HLO artifacts through PJRT (`pjrt` feature) |
 //! | [`console`] | headless Neural Network Console: trials, search |
+//! | [`bench_kernels`] | kernel bench harness (`BENCH_kernels.json`) |
 //! | [`data`] | synthetic datasets + loaders |
 //! | [`monitor`] | series/time monitors |
 //! | [`context`] | backend/precision context (Listing 2) |
@@ -110,6 +132,7 @@
 //! (naming, train/eval mode, MAC accounting) — see its module docs for
 //! the migration note.
 
+pub mod bench_kernels;
 pub mod comm;
 pub mod console;
 pub mod context;

@@ -36,6 +36,9 @@ USAGE:
   nnl bench-serve [--in model.nnp | --model NAME] [--requests N]
             [--workers N] [--max-batch B] [--max-wait-ms MS]
             # compiled-vs-interpreted and batched-vs-unbatched throughput
+  nnl bench-kernels [--quick] [--out FILE]
+            # tiled GEMM GFLOP/s vs the naive loop, thread-scaling
+            # curve, fused conv step time; writes BENCH_kernels.json
   nnl footprint [--model <name>]
   nnl search [--generations N] [--population N]
   nnl trials --dir DIR
@@ -310,6 +313,15 @@ fn main() {
             let report =
                 nnl::serve::bench_throughput(&net, &params, requests, &cfg).expect("bench-serve");
             print!("{report}");
+        }
+        "bench-kernels" => {
+            let report = nnl::bench_kernels::run(flags.contains_key("quick"));
+            print!("{}", report.text);
+            let out = PathBuf::from(
+                flags.get("out").cloned().unwrap_or_else(|| "BENCH_kernels.json".into()),
+            );
+            nnl::bench_kernels::write_json(&out, &report.json).expect("writing bench JSON");
+            println!("wrote {}", out.display());
         }
         "search" => {
             let data = SyntheticImages::new(10, 1, 8, 16, 1);

@@ -356,10 +356,12 @@ impl Op {
             }
             Op::Convolution { stride, pad, dilation } => {
                 ck(2, 3)?;
+                check_conv_geometry(&xs[0].dims(), &xs[1].dims(), *stride, *pad, *dilation)?;
                 F::convolution(xs[0], xs[1], xs.get(2).copied(), *stride, *pad, *dilation)
             }
             Op::Deconvolution { stride, pad } => {
                 ck(2, 3)?;
+                check_deconv_geometry(&xs[0].dims(), &xs[1].dims(), *stride, *pad)?;
                 F::deconvolution(xs[0], xs[1], xs.get(2).copied(), *stride, *pad)
             }
             Op::MaxPool { kernel, stride, pad } => {
@@ -597,6 +599,91 @@ fn check_pool_geometry(
     Ok(())
 }
 
+/// Validate convolution geometry against concrete shapes before the
+/// kernels' index arithmetic can underflow `usize` (`effective kernel
+/// > input + 2·pad` — the same bug class `pool_out_hw` had, reachable
+/// from untrusted NNP files). Shared by [`Op::apply`] and the compiled
+/// plan's fused fast path.
+pub(crate) fn check_conv_geometry(
+    x_dims: &[usize],
+    w_dims: &[usize],
+    stride: (usize, usize),
+    pad: (usize, usize),
+    dilation: (usize, usize),
+) -> Result<(), String> {
+    if x_dims.len() != 4 {
+        return Err(format!("Convolution: expected NCHW input, got shape {x_dims:?}"));
+    }
+    if w_dims.len() != 4 {
+        return Err(format!("Convolution: expected OIHW weights, got shape {w_dims:?}"));
+    }
+    if w_dims[1] != x_dims[1] {
+        return Err(format!(
+            "Convolution: weight in-channels {} do not match input channels {}",
+            w_dims[1], x_dims[1]
+        ));
+    }
+    let g = crate::tensor::ops::Conv2dGeom {
+        kernel: (w_dims[2], w_dims[3]),
+        stride,
+        pad,
+        dilation,
+    };
+    match g.try_out_hw(x_dims[2], x_dims[3]) {
+        Some(_) => Ok(()),
+        None => Err(format!(
+            "Convolution: kernel {:?} stride {stride:?} pad {pad:?} dilation {dilation:?} \
+             invalid for {}x{} input",
+            g.kernel, x_dims[2], x_dims[3]
+        )),
+    }
+}
+
+/// Deconvolution twin of [`check_conv_geometry`]: `w: [C, OC, KH, KW]`,
+/// output `(h-1)·stride + kernel - 2·pad` must stay positive.
+pub(crate) fn check_deconv_geometry(
+    x_dims: &[usize],
+    w_dims: &[usize],
+    stride: (usize, usize),
+    pad: (usize, usize),
+) -> Result<(), String> {
+    if x_dims.len() != 4 {
+        return Err(format!("Deconvolution: expected NCHW input, got shape {x_dims:?}"));
+    }
+    if w_dims.len() != 4 {
+        return Err(format!("Deconvolution: expected IOHW weights, got shape {w_dims:?}"));
+    }
+    if w_dims[0] != x_dims[1] {
+        return Err(format!(
+            "Deconvolution: weight in-channels {} do not match input channels {}",
+            w_dims[0], x_dims[1]
+        ));
+    }
+    if stride.0 == 0 || stride.1 == 0 {
+        return Err(format!("Deconvolution: stride {stride:?} must be non-zero"));
+    }
+    if w_dims[2] == 0 || w_dims[3] == 0 {
+        return Err(format!(
+            "Deconvolution: kernel ({}, {}) must be non-zero",
+            w_dims[2], w_dims[3]
+        ));
+    }
+    let (h, w) = (x_dims[2], x_dims[3]);
+    if h == 0 || w == 0 {
+        return Err(format!("Deconvolution: empty spatial input {h}x{w}"));
+    }
+    let oh = ((h - 1) * stride.0 + w_dims[2]).checked_sub(2 * pad.0).filter(|&v| v > 0);
+    let ow = ((w - 1) * stride.1 + w_dims[3]).checked_sub(2 * pad.1).filter(|&v| v > 0);
+    if oh.is_none() || ow.is_none() {
+        return Err(format!(
+            "Deconvolution: pad {pad:?} swallows the whole output for {h}x{w} input \
+             (kernel ({}, {}), stride {stride:?})",
+            w_dims[2], w_dims[3]
+        ));
+    }
+    Ok(())
+}
+
 /// One layer: op + tensor names. Parameter tensor names refer to the
 /// NNP parameter set; activation names are network-internal.
 #[derive(Debug, Clone, PartialEq)]
@@ -658,13 +745,36 @@ impl NetworkDef {
 
     /// Structural validation: every layer input must be produced by an
     /// earlier layer or be a network input; outputs must exist; every
-    /// layer must carry exactly one output and an input+param count
-    /// within its op's declared arity ([`Op::arity`]) — so malformed
-    /// files fail at load, not mid-request.
+    /// layer must carry exactly one output, an input+param count
+    /// within its op's declared arity ([`Op::arity`]), and sane
+    /// shape-independent attributes (non-zero strides/kernels/
+    /// dilations) — so malformed files fail at load, not mid-request.
     pub fn validate(&self) -> Result<(), String> {
+        fn check_attrs(op: &Op) -> Result<(), String> {
+            let nz = |what: &str, p: (usize, usize)| {
+                if p.0 == 0 || p.1 == 0 {
+                    Err(format!("{} {what} {p:?} must be non-zero", op.name()))
+                } else {
+                    Ok(())
+                }
+            };
+            match op {
+                Op::Convolution { stride, dilation, .. } => {
+                    nz("stride", *stride)?;
+                    nz("dilation", *dilation)
+                }
+                Op::Deconvolution { stride, .. } => nz("stride", *stride),
+                Op::MaxPool { kernel, stride, .. } | Op::AvgPool { kernel, stride, .. } => {
+                    nz("kernel", *kernel)?;
+                    nz("stride", *stride)
+                }
+                _ => Ok(()),
+            }
+        }
         let mut known: std::collections::HashSet<&str> =
             self.inputs.iter().map(|t| t.name.as_str()).collect();
         for l in &self.layers {
+            check_attrs(&l.op).map_err(|e| format!("layer '{}': {e}", l.name))?;
             for i in &l.inputs {
                 if !known.contains(i.as_str()) {
                     return Err(format!("layer '{}' reads undefined tensor '{}'", l.name, i));
@@ -909,6 +1019,58 @@ pub(crate) mod tests {
         assert!(Op::MaxPool { kernel: (2, 2), stride: (1, 1), pad: (0, 0) }
             .apply(&[&flat])
             .is_err());
+    }
+
+    #[test]
+    fn conv_geometry_is_error_not_panic() {
+        // effective kernel > input + 2·pad used to underflow usize in
+        // Conv2dGeom::out_hw (the pool_out_hw bug class)
+        let x = Variable::from_array(NdArray::zeros(&[1, 2, 3, 3]), false);
+        let w = Variable::from_array(NdArray::zeros(&[4, 2, 5, 5]), false);
+        let err = Op::Convolution { stride: (1, 1), pad: (0, 0), dilation: (1, 1) }
+            .apply(&[&x, &w])
+            .unwrap_err();
+        assert!(err.contains("kernel"), "{err}");
+        // dilation pushing the effective kernel out of range too
+        let w2 = Variable::from_array(NdArray::zeros(&[4, 2, 3, 3]), false);
+        let err = Op::Convolution { stride: (1, 1), pad: (0, 0), dilation: (4, 4) }
+            .apply(&[&x, &w2])
+            .unwrap_err();
+        assert!(err.contains("dilation"), "{err}");
+        // zero stride divides by zero downstream
+        let err = Op::Convolution { stride: (0, 1), pad: (0, 0), dilation: (1, 1) }
+            .apply(&[&x, &w2])
+            .unwrap_err();
+        assert!(err.contains("stride"), "{err}");
+        // channel mismatch is a clean error as well
+        let wbad = Variable::from_array(NdArray::zeros(&[4, 3, 2, 2]), false);
+        let err = Op::Convolution { stride: (1, 1), pad: (0, 0), dilation: (1, 1) }
+            .apply(&[&x, &wbad])
+            .unwrap_err();
+        assert!(err.contains("channels"), "{err}");
+        // deconv: pad swallowing the output
+        let dw = Variable::from_array(NdArray::zeros(&[2, 4, 2, 2]), false);
+        let err = Op::Deconvolution { stride: (1, 1), pad: (3, 3) }.apply(&[&x, &dw]).unwrap_err();
+        assert!(err.contains("pad"), "{err}");
+        // and a valid conv still applies
+        let y = Op::Convolution { stride: (1, 1), pad: (1, 1), dilation: (1, 1) }
+            .apply(&[&x, &w2])
+            .unwrap();
+        assert_eq!(y.dims(), vec![1, 4, 3, 3]);
+    }
+
+    #[test]
+    fn validate_rejects_degenerate_attrs_at_load() {
+        let mut n = tiny_net();
+        n.layers[0].op = Op::Convolution { stride: (0, 1), pad: (0, 0), dilation: (1, 1) };
+        let err = n.validate().unwrap_err();
+        assert!(err.contains("layer 'fc'"), "{err}");
+        assert!(err.contains("stride"), "{err}");
+        let mut p = tiny_net();
+        p.layers[1].op = Op::MaxPool { kernel: (0, 2), stride: (1, 1), pad: (0, 0) };
+        p.layers[1].inputs = vec!["h".into()];
+        let err = p.validate().unwrap_err();
+        assert!(err.contains("kernel"), "{err}");
     }
 
     #[test]

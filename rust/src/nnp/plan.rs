@@ -23,9 +23,10 @@
 
 use std::collections::{HashMap, HashSet};
 
-use crate::tensor::NdArray;
+use crate::tensor::ops::Conv2dGeom;
+use crate::tensor::{kernels, ops, NdArray};
 
-use super::ir::{NetworkDef, Op, TensorDef};
+use super::ir::{self, NetworkDef, Op, TensorDef};
 
 /// Where one operand of a step comes from.
 #[derive(Debug, Clone, Copy)]
@@ -239,6 +240,16 @@ impl CompiledNet {
     /// Run the plan on inputs given in declared order. `&self`: any
     /// number of threads may execute one plan concurrently; each call
     /// owns its buffer environment.
+    ///
+    /// The hot ops (Affine, Convolution, plus the trivial
+    /// ReLU/Identity/Dropout) run *fused*: the same
+    /// [`crate::tensor::kernels`] entry points the training tape
+    /// records — so outputs stay bit-identical to the live graph —
+    /// but with no tape node, no column materialization, and all
+    /// intermediates drawn from this thread's scratch arena. Freed
+    /// activation slots are recycled back into that arena, so a
+    /// long-lived serving thread reaches a steady state with no heap
+    /// allocation per request for conv columns or plan intermediates.
     pub fn execute_positional(&self, inputs: &[NdArray]) -> Result<Vec<NdArray>, String> {
         self.check_inputs(inputs)?;
         let mut env: Vec<Option<NdArray>> = vec![None; self.n_slots];
@@ -255,11 +266,13 @@ impl CompiledNet {
                     Src::Param(i) => xs.push(&self.params[*i]),
                 }
             }
-            let y = st.op.execute(&xs).map_err(|e| format!("layer '{}': {e}", st.name))?;
+            let y = execute_step(&st.op, &xs).map_err(|e| format!("layer '{}': {e}", st.name))?;
             drop(xs);
             env[st.out] = Some(y);
             for &s in &st.free_after {
-                env[s] = None;
+                if let Some(dead) = env[s].take() {
+                    kernels::recycle(dead);
+                }
             }
         }
         self.output_slots
@@ -300,6 +313,39 @@ impl CompiledNet {
             Op::Reshape { dims } => dims.len() >= 2 && dims[0] == 0,
             _ => true,
         })
+    }
+}
+
+/// One plan step. The fused arms call the very kernels the tape's
+/// `F::*` closures call (bit-identical outputs) while skipping the
+/// per-op `Variable` construction `Op::execute` pays; everything else
+/// falls through to the registry dispatch. Guards mirror `Op::apply`'s
+/// validation so malformed shapes stay clean errors.
+fn execute_step(op: &Op, xs: &[&NdArray]) -> Result<NdArray, String> {
+    match op {
+        Op::Affine if (2..=3).contains(&xs.len()) && xs[0].rank() >= 1 && xs[1].rank() == 2 => {
+            let feat: usize = xs[0].dims()[1..].iter().product();
+            if feat != xs[1].dims()[0] {
+                return Err(format!(
+                    "Affine: input features {feat} do not match weight rows {}",
+                    xs[1].dims()[0]
+                ));
+            }
+            Ok(kernels::affine_forward(xs[0], xs[1], xs.get(2).copied()))
+        }
+        Op::Convolution { stride, pad, dilation } if (2..=3).contains(&xs.len()) => {
+            ir::check_conv_geometry(xs[0].dims(), xs[1].dims(), *stride, *pad, *dilation)?;
+            let g = Conv2dGeom {
+                kernel: (xs[1].dims()[2], xs[1].dims()[3]),
+                stride: *stride,
+                pad: *pad,
+                dilation: *dilation,
+            };
+            Ok(kernels::conv2d_forward(xs[0], xs[1], xs.get(2).copied(), &g))
+        }
+        Op::ReLU if xs.len() == 1 => Ok(ops::map(xs[0], |v| v.max(0.0))),
+        Op::Identity | Op::Dropout { .. } if xs.len() == 1 => Ok(xs[0].clone()),
+        _ => op.execute(xs),
     }
 }
 

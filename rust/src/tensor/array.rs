@@ -105,6 +105,13 @@ impl NdArray {
         Arc::try_unwrap(self.data).unwrap_or_else(|shared| (*shared).clone())
     }
 
+    /// The backing buffer if this array uniquely owns it, else `None`
+    /// (never copies). The scratch arena uses this to recycle dead
+    /// intermediates without disturbing shared COW handles.
+    pub fn into_unique_vec(self) -> Option<Vec<f32>> {
+        Arc::try_unwrap(self.data).ok()
+    }
+
     /// Element access by multi-index.
     pub fn at(&self, idx: &[usize]) -> f32 {
         self.data[self.shape.flat_index(idx)]

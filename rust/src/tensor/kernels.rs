@@ -1,0 +1,959 @@
+//! Tiled, multi-threaded compute kernels + the per-thread scratch
+//! arena — the CPU answer to the paper's "speedy computation" pillar.
+//!
+//! ## One GEMM core, many operand views
+//!
+//! Every dense hot-path product in the framework (affine forward and
+//! both its gradients, conv/deconv forward and all their gradients)
+//! is a GEMM whose operands are *views*: a plain row-major matrix, a
+//! transposed one, an NCHW tensor read as `[n·h·w, c]` rows, or the
+//! im2col matrix of an image. [`Mat`] names those views and the tiled
+//! core packs panels straight out of them — so convolution never
+//! materializes its column matrix at all: im2col happens inside the
+//! pack step, one register tile at a time, and the full `[n·oh·ow,
+//! c·kh·kw]` buffer that the old lowering allocated per call simply
+//! does not exist.
+//!
+//! The core itself is the classic register-tiled shape: pack a
+//! `KC×NR` B-panel per column tile and a `KC×MR` A-panel per row
+//! tile, then an unrolled `MR×NR` (8×8) microkernel accumulates into
+//! registers — autovectorization-friendly, cache-blocked over k.
+//! Row tiles are sharded across [`crate::tensor::parallel`]'s worker
+//! pool; each output element is produced by exactly one chunk with a
+//! fixed k-ascending accumulation order, so results are bit-identical
+//! at any `NNL_THREADS` (the pool's determinism contract).
+//!
+//! ## The scratch arena
+//!
+//! [`Scratch`] is a per-thread pool of `Vec<f32>` buffers. Kernels
+//! borrow it for packed panels and intermediates, and the compiled-plan
+//! executor ([`crate::nnp::plan::CompiledNet`]) recycles freed
+//! activation slots back into it ([`recycle`]) — after the first
+//! request, a serving thread's steady state performs no heap
+//! allocation for conv columns or plan intermediates. [`with_scratch`]
+//! is reentrancy-safe: nested scopes take the arena by value and merge
+//! buffers back on exit.
+
+#![allow(clippy::too_many_arguments)]
+
+use std::cell::RefCell;
+
+use super::ops::{self, Conv2dGeom};
+use super::parallel;
+use super::NdArray;
+
+/// Microkernel rows (output tile height).
+const MR: usize = 8;
+/// Microkernel cols (output tile width).
+const NR: usize = 8;
+/// k-dimension cache block: panels of KC stay L1/L2-resident.
+const KC: usize = 256;
+/// Below this many multiply-adds the packed path costs more than it
+/// saves; run the plain blocked loop instead (serial — these are the
+/// tape's many tiny matmuls).
+const SMALL_FLOPS: usize = 32 * 32 * 32;
+/// Cap on row chunks per GEMM: bounds claim overhead while keeping the
+/// partition a pure function of the problem shape (determinism).
+const MAX_CHUNKS: usize = 64;
+
+// ------------------------------------------------------------------ scratch
+
+/// A pool of reusable `f32` buffers. One lives per thread (see
+/// [`with_scratch`]); long-lived executors return dead intermediates to
+/// it so steady-state inference allocates nothing.
+#[derive(Default)]
+pub struct Scratch {
+    bufs: Vec<Vec<f32>>,
+}
+
+impl Scratch {
+    /// Buffers kept beyond this are dropped (bounds worst-case memory).
+    const MAX_BUFS: usize = 24;
+
+    pub fn new() -> Self {
+        Scratch::default()
+    }
+
+    /// A zero-filled buffer of exactly `len` (for accumulation
+    /// targets like col2im). Reuses pooled capacity like
+    /// [`Scratch::take_uninit`].
+    pub fn take(&mut self, len: usize) -> Vec<f32> {
+        let mut v = self.take_uninit(len);
+        v.fill(0.0);
+        v
+    }
+
+    /// A buffer of exactly `len` with **unspecified contents** (reused
+    /// allocations keep stale values — no memset). For outputs whose
+    /// every element is written before being read: GEMM destinations,
+    /// pack panels, layout transposes. Picks the smallest pooled
+    /// buffer that fits, else grows the largest one.
+    pub fn take_uninit(&mut self, len: usize) -> Vec<f32> {
+        let mut best: Option<usize> = None;
+        for (i, b) in self.bufs.iter().enumerate() {
+            best = Some(match best {
+                None => i,
+                Some(j) => {
+                    let (ic, jc) = (b.capacity(), self.bufs[j].capacity());
+                    let better = if jc >= len { ic >= len && ic < jc } else { ic > jc };
+                    if better {
+                        i
+                    } else {
+                        j
+                    }
+                }
+            });
+        }
+        let mut v = match best {
+            Some(i) => self.bufs.swap_remove(i),
+            None => Vec::new(),
+        };
+        if v.len() >= len {
+            v.truncate(len);
+        } else {
+            v.resize(len, 0.0);
+        }
+        v
+    }
+
+    /// Return a buffer to the pool.
+    pub fn put(&mut self, v: Vec<f32>) {
+        if v.capacity() > 0 && self.bufs.len() < Self::MAX_BUFS {
+            self.bufs.push(v);
+        }
+    }
+
+    fn absorb(&mut self, mut other: Scratch) {
+        for b in other.bufs.drain(..) {
+            self.put(b);
+        }
+    }
+}
+
+thread_local! {
+    static SCRATCH: RefCell<Scratch> = RefCell::new(Scratch::new());
+    /// Tiny per-thread A-panel pack buffer (distinct from SCRATCH so a
+    /// pool chunk can pack while its submitter holds the main arena).
+    static PACK: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Run `f` with this thread's scratch arena. Reentrancy-safe: a nested
+/// scope sees an empty arena and its buffers merge back on exit, so no
+/// `RefCell` borrow is ever held across user code.
+pub fn with_scratch<R>(f: impl FnOnce(&mut Scratch) -> R) -> R {
+    let mut s = SCRATCH.with(|c| std::mem::take(&mut *c.borrow_mut()));
+    let r = f(&mut s);
+    SCRATCH.with(|c| c.borrow_mut().absorb(s));
+    r
+}
+
+/// Return a dead array's buffer to this thread's arena (no-op if the
+/// storage is still shared). The compiled-plan executor feeds freed
+/// activation slots through this, closing the allocate/free loop.
+pub fn recycle(a: NdArray) {
+    if let Some(v) = a.into_unique_vec() {
+        if v.capacity() > 0 {
+            SCRATCH.with(|c| c.borrow_mut().put(v));
+        }
+    }
+}
+
+// ------------------------------------------------------------ operand views
+
+/// im2col-of-an-image view: logical shape `[n·oh·ow, c·kh·kw]`.
+#[derive(Clone, Copy)]
+struct ColView<'a> {
+    x: &'a [f32],
+    c: usize,
+    h: usize,
+    w: usize,
+    oh: usize,
+    ow: usize,
+    g: Conv2dGeom,
+}
+
+impl ColView<'_> {
+    #[inline(always)]
+    fn at(&self, i: usize, j: usize) -> f32 {
+        let ohow = self.oh * self.ow;
+        let ni = i / ohow;
+        let rem = i % ohow;
+        let oy = rem / self.ow;
+        let ox = rem % self.ow;
+        let (kh, kw) = self.g.kernel;
+        let khkw = kh * kw;
+        let ci = j / khkw;
+        let r = j % khkw;
+        let ky = r / kw;
+        let kx = r % kw;
+        let iy = (oy * self.g.stride.0 + ky * self.g.dilation.0) as isize - self.g.pad.0 as isize;
+        let ix = (ox * self.g.stride.1 + kx * self.g.dilation.1) as isize - self.g.pad.1 as isize;
+        if iy >= 0 && (iy as usize) < self.h && ix >= 0 && (ix as usize) < self.w {
+            self.x[((ni * self.c + ci) * self.h + iy as usize) * self.w + ix as usize]
+        } else {
+            0.0
+        }
+    }
+}
+
+/// NCHW tensor read as rows `[n·h·w, c]` (the `transpose(0,2,3,1)`
+/// flatten, without materializing it).
+#[derive(Clone, Copy)]
+struct NhwcView<'a> {
+    x: &'a [f32],
+    c: usize,
+    hw: usize,
+}
+
+impl NhwcView<'_> {
+    fn of(x: &NdArray) -> NhwcView<'_> {
+        assert_eq!(x.rank(), 4, "NHWC view expects an NCHW tensor");
+        NhwcView { x: x.data(), c: x.dims()[1], hw: x.dims()[2] * x.dims()[3] }
+    }
+
+    #[inline(always)]
+    fn at(&self, i: usize, j: usize) -> f32 {
+        let ni = i / self.hw;
+        let rem = i % self.hw;
+        self.x[(ni * self.c + j) * self.hw + rem]
+    }
+}
+
+/// A GEMM operand: a way to read element `[i, j]` of a logical matrix.
+/// The tiled core only touches operands through panel packing, so a
+/// view costs its index math once per packed element — O(m·k + k·n)
+/// against the O(m·k·n) multiply work it feeds.
+enum Mat<'a> {
+    /// Row-major `[rows, cols]`; `ld` = cols.
+    Dense { d: &'a [f32], ld: usize },
+    /// Logical transpose of a row-major matrix; `ld` = its row length
+    /// (= logical rows).
+    DenseT { d: &'a [f32], ld: usize },
+    /// im2col of an NCHW image.
+    Im2col(ColView<'a>),
+    /// NCHW as `[n·h·w, c]` rows.
+    Nhwc(NhwcView<'a>),
+    /// Transpose of [`Mat::Nhwc`]: `[c, n·h·w]`.
+    NhwcT(NhwcView<'a>),
+}
+
+impl Mat<'_> {
+    #[inline(always)]
+    fn at(&self, i: usize, j: usize) -> f32 {
+        match self {
+            Mat::Dense { d, ld } => d[i * ld + j],
+            Mat::DenseT { d, ld } => d[j * ld + i],
+            Mat::Im2col(v) => v.at(i, j),
+            Mat::Nhwc(v) => v.at(i, j),
+            Mat::NhwcT(v) => v.at(j, i),
+        }
+    }
+
+    /// Materialize `[rows, cols]` into `buf` (small-GEMM fallback).
+    fn fill_dense(&self, buf: &mut [f32], rows: usize, cols: usize) {
+        debug_assert_eq!(buf.len(), rows * cols);
+        if let Mat::Dense { d, ld } = self {
+            if *ld == cols {
+                buf.copy_from_slice(&d[..rows * cols]);
+                return;
+            }
+        }
+        for i in 0..rows {
+            let row = &mut buf[i * cols..(i + 1) * cols];
+            for (j, slot) in row.iter_mut().enumerate() {
+                *slot = self.at(i, j);
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------------------- GEMM
+
+/// `out[m,n] = A[m,k] · B[k,n]`, any operand views. Dispatches to the
+/// serial blocked loop for small products and the packed, row-sharded
+/// tiled core otherwise; the cutoff depends only on the shape, so a
+/// given logical product always takes the same path (bit-identical
+/// results however the operands are expressed).
+fn gemm_any(out: &mut [f32], a: &Mat, b: &Mat, m: usize, k: usize, n: usize, s: &mut Scratch) {
+    assert_eq!(out.len(), m * n, "gemm output buffer size");
+    if m == 0 || n == 0 {
+        return;
+    }
+    if k == 0 {
+        out.fill(0.0);
+        return;
+    }
+    if m.saturating_mul(k).saturating_mul(n) <= SMALL_FLOPS {
+        gemm_small(out, a, b, m, k, n, s);
+    } else {
+        gemm_tiled(out, a, b, m, k, n, s);
+    }
+}
+
+/// Small-product path: the pre-tiling blocked i-k-j loop on dense
+/// slices (virtual operands are first materialized from scratch —
+/// cheap at these sizes, and it keeps the inner loop streaming).
+fn gemm_small(out: &mut [f32], a: &Mat, b: &Mat, m: usize, k: usize, n: usize, s: &mut Scratch) {
+    let mut abuf = Vec::new();
+    let ad: &[f32] = match a {
+        Mat::Dense { d, ld } if *ld == k => &d[..m * k],
+        _ => {
+            abuf = s.take_uninit(m * k);
+            a.fill_dense(&mut abuf, m, k);
+            &abuf
+        }
+    };
+    let mut bbuf = Vec::new();
+    let bd: &[f32] = match b {
+        Mat::Dense { d, ld } if *ld == n => &d[..k * n],
+        _ => {
+            bbuf = s.take_uninit(k * n);
+            b.fill_dense(&mut bbuf, k, n);
+            &bbuf
+        }
+    };
+    const KB: usize = 64;
+    for i in 0..m {
+        let arow = &ad[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        orow.fill(0.0);
+        let mut k0 = 0;
+        while k0 < k {
+            let k1 = (k0 + KB).min(k);
+            for kk in k0..k1 {
+                let av = arow[kk];
+                let brow = &bd[kk * n..(kk + 1) * n];
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += av * bv;
+                }
+            }
+            k0 = k1;
+        }
+    }
+    s.put(abuf);
+    s.put(bbuf);
+}
+
+/// Pack the `MR`-row A-panel for rows `i0..` over `k0..k0+kc`:
+/// `ap[kk·MR + r] = A[i0+r, k0+kk]`, zero-padded past `m`.
+fn pack_a_panel(a: &Mat, ap: &mut [f32], m: usize, i0: usize, k0: usize, kc: usize) {
+    let mh = MR.min(m - i0);
+    for kk in 0..kc {
+        let col = k0 + kk;
+        let dst = &mut ap[kk * MR..kk * MR + MR];
+        for (r, slot) in dst.iter_mut().enumerate().take(mh) {
+            *slot = a.at(i0 + r, col);
+        }
+        for slot in dst.iter_mut().skip(mh) {
+            *slot = 0.0;
+        }
+    }
+}
+
+/// Pack the `NR`-col B-panel for cols `j0..` over `k0..k0+kc`:
+/// `bp[kk·NR + c] = B[k0+kk, j0+c]`, zero-padded past `n`.
+fn pack_b_panel(b: &Mat, bp: &mut [f32], n: usize, j0: usize, k0: usize, kc: usize) {
+    let nw = NR.min(n - j0);
+    for kk in 0..kc {
+        let row = k0 + kk;
+        let dst = &mut bp[kk * NR..kk * NR + NR];
+        for (c, slot) in dst.iter_mut().enumerate().take(nw) {
+            *slot = b.at(row, j0 + c);
+        }
+        for slot in dst.iter_mut().skip(nw) {
+            *slot = 0.0;
+        }
+    }
+}
+
+/// The register tile: `acc[r, c] += Σ_kk ap[kk, r] · bp[kk, c]` with
+/// fixed 8×8 unrolled inner loops (LLVM vectorizes the `c` loop and
+/// keeps `acc` in registers).
+#[inline(always)]
+fn microkernel(kc: usize, ap: &[f32], bp: &[f32], acc: &mut [f32; MR * NR]) {
+    for kk in 0..kc {
+        let a = &ap[kk * MR..kk * MR + MR];
+        let b = &bp[kk * NR..kk * NR + NR];
+        for r in 0..MR {
+            let ar = a[r];
+            let row = &mut acc[r * NR..r * NR + NR];
+            for (o, &bv) in row.iter_mut().zip(b) {
+                *o += ar * bv;
+            }
+        }
+    }
+}
+
+/// Packed, k-blocked, row-sharded tiled GEMM. Per k-block: B-panels are
+/// packed once (shared, read-only), then row-tile chunks run on the
+/// pool, each packing its own A-panels into the per-thread [`PACK`]
+/// buffer. The first k-block overwrites `out`, later ones accumulate.
+fn gemm_tiled(out: &mut [f32], a: &Mat, b: &Mat, m: usize, k: usize, n: usize, s: &mut Scratch) {
+    let n_itiles = m.div_ceil(MR);
+    let n_jtiles = n.div_ceil(NR);
+    let chunk_tiles = n_itiles.div_ceil(MAX_CHUNKS).max(1);
+    let chunk_elems = chunk_tiles * MR * n;
+    let mut k0 = 0;
+    while k0 < k {
+        let kc = KC.min(k - k0);
+        let mut bp_all = s.take_uninit(n_jtiles * kc * NR);
+        for jt in 0..n_jtiles {
+            pack_b_panel(b, &mut bp_all[jt * kc * NR..(jt + 1) * kc * NR], n, jt * NR, k0, kc);
+        }
+        let first = k0 == 0;
+        let bp_all_ref = &bp_all;
+        parallel::for_each_chunk_mut(out, chunk_elems, |ci, chunk| {
+            PACK.with(|p| {
+                let mut ap = p.borrow_mut();
+                if ap.len() != kc * MR {
+                    ap.resize(kc * MR, 0.0);
+                }
+                debug_assert_eq!(chunk.len() % n, 0);
+                let rows_here = chunk.len() / n;
+                let row_base = ci * chunk_tiles * MR;
+                let mut local0 = 0;
+                while local0 < rows_here {
+                    let i0 = row_base + local0;
+                    let mh = MR.min(rows_here - local0);
+                    pack_a_panel(a, &mut ap, m, i0, k0, kc);
+                    for jt in 0..n_jtiles {
+                        let j0 = jt * NR;
+                        let nw = NR.min(n - j0);
+                        let bp = &bp_all_ref[jt * kc * NR..(jt + 1) * kc * NR];
+                        let mut acc = [0.0f32; MR * NR];
+                        microkernel(kc, &ap, bp, &mut acc);
+                        for r in 0..mh {
+                            let dst = &mut chunk[(local0 + r) * n + j0..(local0 + r) * n + j0 + nw];
+                            let src = &acc[r * NR..r * NR + nw];
+                            if first {
+                                dst.copy_from_slice(src);
+                            } else {
+                                for (d, &v) in dst.iter_mut().zip(src) {
+                                    *d += v;
+                                }
+                            }
+                        }
+                    }
+                    local0 += MR;
+                }
+            });
+        });
+        s.put(bp_all);
+        k0 += kc;
+    }
+}
+
+/// Dense row-major `out[m,n] = a[m,k] · b[k,n]` — the public entry the
+/// tensor-level [`ops::matmul`] rides on.
+pub fn matmul_into(
+    out: &mut [f32],
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    s: &mut Scratch,
+) {
+    assert_eq!(a.len(), m * k, "gemm lhs size");
+    assert_eq!(b.len(), k * n, "gemm rhs size");
+    gemm_any(out, &Mat::Dense { d: a, ld: k }, &Mat::Dense { d: b, ld: n }, m, k, n, s);
+}
+
+// ----------------------------------------------------------------- affine
+
+/// `y = flatten(x) · W (+ b)` — shared by the tape's `F::affine`
+/// forward and the compiled plan's fast path, so the two are
+/// bit-identical by construction.
+pub fn affine_forward(x: &NdArray, w: &NdArray, bias: Option<&NdArray>) -> NdArray {
+    assert!(x.rank() >= 1, "affine input must have a batch axis");
+    assert_eq!(w.rank(), 2, "affine weight must be rank 2");
+    let batch = x.dims()[0];
+    let feat: usize = x.dims()[1..].iter().product();
+    let (inf, outf) = (w.dims()[0], w.dims()[1]);
+    assert_eq!(feat, inf, "affine input features {feat} vs weight rows {inf}");
+    with_scratch(|s| {
+        let mut out = s.take_uninit(batch * outf);
+        gemm_any(
+            &mut out,
+            &Mat::Dense { d: x.data(), ld: feat },
+            &Mat::Dense { d: w.data(), ld: outf },
+            batch,
+            inf,
+            outf,
+            s,
+        );
+        if let Some(bv) = bias {
+            add_bias_rows(&mut out, bv.data(), outf);
+        }
+        NdArray::from_vec(&[batch, outf], out)
+    })
+}
+
+/// Affine gradients `(gx, gw, gb)` — `gx = gy·Wᵀ`, `gw = xᵀ·gy`,
+/// `gb = Σ_batch gy` — with both transposes taken as views (nothing is
+/// materialized).
+pub fn affine_backward(
+    x: &NdArray,
+    w: &NdArray,
+    gy: &NdArray,
+    has_bias: bool,
+) -> (NdArray, NdArray, Option<NdArray>) {
+    let batch = x.dims()[0];
+    let feat: usize = x.dims()[1..].iter().product();
+    let outf = w.dims()[1];
+    assert_eq!(gy.size(), batch * outf, "affine grad shape");
+    with_scratch(|s| {
+        let mut gx = s.take_uninit(batch * feat);
+        gemm_any(
+            &mut gx,
+            &Mat::Dense { d: gy.data(), ld: outf },
+            &Mat::DenseT { d: w.data(), ld: outf },
+            batch,
+            outf,
+            feat,
+            s,
+        );
+        let mut gw = s.take_uninit(feat * outf);
+        gemm_any(
+            &mut gw,
+            &Mat::DenseT { d: x.data(), ld: feat },
+            &Mat::Dense { d: gy.data(), ld: outf },
+            feat,
+            batch,
+            outf,
+            s,
+        );
+        let gb = has_bias.then(|| ops::sum_axis(gy, 0, false));
+        (
+            NdArray::from_vec(x.dims(), gx),
+            NdArray::from_vec(w.dims(), gw),
+            gb,
+        )
+    })
+}
+
+// ------------------------------------------------------------- convolution
+
+fn conv_dims(x: &NdArray, w: &NdArray, g: &Conv2dGeom) -> (usize, usize, usize, usize, usize) {
+    assert_eq!(x.rank(), 4, "conv2d expects NCHW input");
+    assert_eq!(w.rank(), 4, "conv2d expects OIHW weights");
+    assert_eq!(
+        w.dims()[1],
+        x.dims()[1],
+        "conv2d weight in-channels {} vs input channels {}",
+        w.dims()[1],
+        x.dims()[1]
+    );
+    assert_eq!(g.kernel, (w.dims()[2], w.dims()[3]), "conv2d geometry kernel vs weight shape");
+    let (n, h, wd) = (x.dims()[0], x.dims()[2], x.dims()[3]);
+    let (oh, ow) = g.out_hw(h, wd);
+    (n, w.dims()[0], oh, ow, x.dims()[1] * w.dims()[2] * w.dims()[3])
+}
+
+/// Fused conv forward `y = conv(x, W) (+ b)`, NCHW out. The im2col
+/// matrix is only ever realized as transient `KC×8` pack panels.
+pub fn conv2d_forward(
+    x: &NdArray,
+    w: &NdArray,
+    bias: Option<&NdArray>,
+    g: &Conv2dGeom,
+) -> NdArray {
+    let (n, oc, oh, ow, ckk) = conv_dims(x, w, g);
+    let rows = n * oh * ow;
+    with_scratch(|s| {
+        let cols = ColView {
+            x: x.data(),
+            c: x.dims()[1],
+            h: x.dims()[2],
+            w: x.dims()[3],
+            oh,
+            ow,
+            g: *g,
+        };
+        let mut yrows = s.take_uninit(rows * oc);
+        // cols [rows, ckk] · Wᵀ [ckk, oc]
+        gemm_any(
+            &mut yrows,
+            &Mat::Im2col(cols),
+            &Mat::DenseT { d: w.data(), ld: ckk },
+            rows,
+            ckk,
+            oc,
+            s,
+        );
+        if let Some(bv) = bias {
+            assert_eq!(bv.size(), oc, "conv bias size");
+            add_bias_rows(&mut yrows, bv.data(), oc);
+        }
+        let mut out = s.take_uninit(rows * oc);
+        nhwc_to_nchw(&mut out, &yrows, n, oc, oh, ow);
+        s.put(yrows);
+        NdArray::from_vec(&[n, oc, oh, ow], out)
+    })
+}
+
+/// Conv gradients `(gx, gw, gb)`: `gx = col2im(gy_rows · W)`,
+/// `gw = gy_rowsᵀ · im2col(x)`, `gb` = per-channel sums — all operands
+/// taken as views, nothing materialized but the outputs.
+pub fn conv2d_backward(
+    x: &NdArray,
+    w: &NdArray,
+    gy: &NdArray,
+    has_bias: bool,
+    g: &Conv2dGeom,
+) -> (NdArray, NdArray, Option<NdArray>) {
+    let (n, oc, oh, ow, ckk) = conv_dims(x, w, g);
+    assert_eq!(gy.dims(), &[n, oc, oh, ow], "conv grad shape");
+    let rows = n * oh * ow;
+    with_scratch(|s| {
+        let gyr = NhwcView::of(gy); // [rows, oc]
+        let mut gcols = s.take_uninit(rows * ckk);
+        gemm_any(
+            &mut gcols,
+            &Mat::Nhwc(gyr),
+            &Mat::Dense { d: w.data(), ld: ckk },
+            rows,
+            oc,
+            ckk,
+            s,
+        );
+        let mut gx = s.take(x.size());
+        ops::col2im_slice(&mut gx, &gcols, x.dims(), g);
+        s.put(gcols);
+        let cols = ColView {
+            x: x.data(),
+            c: x.dims()[1],
+            h: x.dims()[2],
+            w: x.dims()[3],
+            oh,
+            ow,
+            g: *g,
+        };
+        let mut gw = s.take_uninit(oc * ckk);
+        gemm_any(&mut gw, &Mat::NhwcT(gyr), &Mat::Im2col(cols), oc, rows, ckk, s);
+        let gb = has_bias.then(|| channel_sums(gy));
+        (
+            NdArray::from_vec(x.dims(), gx),
+            NdArray::from_vec(w.dims(), gw),
+            gb,
+        )
+    })
+}
+
+// ----------------------------------------------------------- deconvolution
+
+fn deconv_out_hw(
+    h: usize,
+    w: usize,
+    kernel: (usize, usize),
+    stride: (usize, usize),
+    pad: (usize, usize),
+) -> (usize, usize) {
+    let oh = ((h - 1) * stride.0 + kernel.0)
+        .checked_sub(2 * pad.0)
+        .filter(|&v| v > 0)
+        .unwrap_or_else(|| panic!("deconvolution geometry invalid: pad {pad:?} swallows output"));
+    let ow = ((w - 1) * stride.1 + kernel.1)
+        .checked_sub(2 * pad.1)
+        .filter(|&v| v > 0)
+        .unwrap_or_else(|| panic!("deconvolution geometry invalid: pad {pad:?} swallows output"));
+    (oh, ow)
+}
+
+/// Deconv forward: `y = col2im(x_rows · W)` — conv's adjoint spatial
+/// map. `x: [N,C,H,W]`, `w: [C,OC,KH,KW]`.
+pub fn deconv2d_forward(
+    x: &NdArray,
+    w: &NdArray,
+    bias: Option<&NdArray>,
+    stride: (usize, usize),
+    pad: (usize, usize),
+) -> NdArray {
+    assert_eq!(x.rank(), 4, "deconv expects NCHW input");
+    assert_eq!(w.rank(), 4, "deconv expects IOHW weights");
+    let (n, c, h, wd) = (x.dims()[0], x.dims()[1], x.dims()[2], x.dims()[3]);
+    assert_eq!(w.dims()[0], c, "deconv weight in-channels");
+    let (oc, kh, kw) = (w.dims()[1], w.dims()[2], w.dims()[3]);
+    let (oh, ow) = deconv_out_hw(h, wd, (kh, kw), stride, pad);
+    let geom = Conv2dGeom { kernel: (kh, kw), stride, pad, dilation: (1, 1) };
+    let rows = n * h * wd;
+    let ockk = oc * kh * kw;
+    with_scratch(|s| {
+        let mut cols = s.take_uninit(rows * ockk);
+        // x_rows [rows, c] · W [c, oc·kh·kw]
+        gemm_any(
+            &mut cols,
+            &Mat::Nhwc(NhwcView::of(x)),
+            &Mat::Dense { d: w.data(), ld: ockk },
+            rows,
+            c,
+            ockk,
+            s,
+        );
+        let out_dims = [n, oc, oh, ow];
+        let mut out = s.take(n * oc * oh * ow);
+        ops::col2im_slice(&mut out, &cols, &out_dims, &geom);
+        s.put(cols);
+        if let Some(bv) = bias {
+            assert_eq!(bv.size(), oc, "deconv bias size");
+            add_bias_planes(&mut out, bv.data(), n, oc, oh * ow);
+        }
+        NdArray::from_vec(&out_dims, out)
+    })
+}
+
+/// Deconv gradients `(gx, gw, gb)`: `gx = im2col(gy) · Wᵀ` back to
+/// NCHW, `gw = x_rowsᵀ · im2col(gy)`, `gb` = per-channel sums.
+pub fn deconv2d_backward(
+    x: &NdArray,
+    w: &NdArray,
+    gy: &NdArray,
+    has_bias: bool,
+    stride: (usize, usize),
+    pad: (usize, usize),
+) -> (NdArray, NdArray, Option<NdArray>) {
+    let (n, c, h, wd) = (x.dims()[0], x.dims()[1], x.dims()[2], x.dims()[3]);
+    let (oc, kh, kw) = (w.dims()[1], w.dims()[2], w.dims()[3]);
+    let (oh, ow) = deconv_out_hw(h, wd, (kh, kw), stride, pad);
+    assert_eq!(gy.dims(), &[n, oc, oh, ow], "deconv grad shape");
+    let geom = Conv2dGeom { kernel: (kh, kw), stride, pad, dilation: (1, 1) };
+    let rows = n * h * wd;
+    let ockk = oc * kh * kw;
+    with_scratch(|s| {
+        // im2col(gy) has geometry output (h, wd) by adjointness
+        let gycols = ColView { x: gy.data(), c: oc, h: oh, w: ow, oh: h, ow: wd, g: geom };
+        let mut gxrows = s.take_uninit(rows * c);
+        gemm_any(
+            &mut gxrows,
+            &Mat::Im2col(gycols),
+            &Mat::DenseT { d: w.data(), ld: ockk },
+            rows,
+            ockk,
+            c,
+            s,
+        );
+        let mut gx = s.take_uninit(x.size());
+        nhwc_to_nchw(&mut gx, &gxrows, n, c, h, wd);
+        s.put(gxrows);
+        let mut gw = s.take_uninit(c * ockk);
+        gemm_any(&mut gw, &Mat::NhwcT(NhwcView::of(x)), &Mat::Im2col(gycols), c, rows, ockk, s);
+        let gb = has_bias.then(|| channel_sums(gy));
+        (
+            NdArray::from_vec(x.dims(), gx),
+            NdArray::from_vec(w.dims(), gw),
+            gb,
+        )
+    })
+}
+
+// ---------------------------------------------------------------- helpers
+
+/// `rows[r, c] += bias[c]` over a `[rows, c]` buffer.
+fn add_bias_rows(buf: &mut [f32], bias: &[f32], cols: usize) {
+    for row in buf.chunks_exact_mut(cols) {
+        for (v, &b) in row.iter_mut().zip(bias) {
+            *v += b;
+        }
+    }
+}
+
+/// `t[ni, c, …] += bias[c]` over an NCHW buffer with `plane` = h·w.
+fn add_bias_planes(buf: &mut [f32], bias: &[f32], n: usize, c: usize, plane: usize) {
+    for ni in 0..n {
+        for (cc, &b) in bias.iter().enumerate() {
+            for v in &mut buf[(ni * c + cc) * plane..(ni * c + cc + 1) * plane] {
+                *v += b;
+            }
+        }
+    }
+}
+
+/// `[n, h, w, c]`-rows buffer → NCHW.
+fn nhwc_to_nchw(dst: &mut [f32], src: &[f32], n: usize, c: usize, h: usize, w: usize) {
+    let hw = h * w;
+    debug_assert_eq!(dst.len(), n * c * hw);
+    for ni in 0..n {
+        for cc in 0..c {
+            let dplane = &mut dst[(ni * c + cc) * hw..(ni * c + cc + 1) * hw];
+            let sbase = ni * hw * c + cc;
+            for (p, d) in dplane.iter_mut().enumerate() {
+                *d = src[sbase + p * c];
+            }
+        }
+    }
+}
+
+/// Per-channel sums of an NCHW tensor (bias gradients), accumulated in
+/// the same `(n, spatial)`-ascending order the row-matrix reduction
+/// used, so values are unchanged.
+fn channel_sums(t: &NdArray) -> NdArray {
+    let (n, c) = (t.dims()[0], t.dims()[1]);
+    let hw: usize = t.dims()[2..].iter().product();
+    let d = t.data();
+    let mut out = vec![0.0f32; c];
+    for (cc, o) in out.iter_mut().enumerate() {
+        for ni in 0..n {
+            for &v in &d[(ni * c + cc) * hw..(ni * c + cc + 1) * hw] {
+                *o += v;
+            }
+        }
+    }
+    NdArray::from_vec(&[c], out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    fn tiled(a: &NdArray, b: &NdArray) -> NdArray {
+        let (m, k) = (a.dims()[0], a.dims()[1]);
+        let n = b.dims()[1];
+        let mut out = vec![0.0f32; m * n];
+        with_scratch(|s| matmul_into(&mut out, a.data(), b.data(), m, k, n, s));
+        NdArray::from_vec(&[m, n], out)
+    }
+
+    #[test]
+    fn tiled_gemm_matches_naive_large() {
+        let mut rng = Rng::new(7);
+        // forced past SMALL_FLOPS, with edge tiles on every dimension
+        let a = rng.randn(&[61, 83], 1.0);
+        let b = rng.randn(&[83, 45], 1.0);
+        let got = tiled(&a, &b);
+        let want = ops::matmul_naive(&a, &b);
+        assert!(
+            got.allclose(&want, 1e-4, 1e-4),
+            "max diff {}",
+            got.max_abs_diff(&want)
+        );
+    }
+
+    #[test]
+    fn tiled_gemm_spans_k_blocks() {
+        let mut rng = Rng::new(8);
+        // k > KC exercises the multi-block accumulate path
+        let a = rng.randn(&[9, 2 * KC + 3], 1.0);
+        let b = rng.randn(&[2 * KC + 3, 17], 1.0);
+        let got = tiled(&a, &b);
+        let want = ops::matmul_naive(&a, &b);
+        assert!(got.allclose(&want, 1e-3, 1e-3), "max diff {}", got.max_abs_diff(&want));
+    }
+
+    #[test]
+    fn small_gemm_is_exact_vs_naive() {
+        let a = NdArray::arange(&[5, 4]);
+        let b = NdArray::arange(&[4, 3]);
+        assert_eq!(tiled(&a, &b), ops::matmul_naive(&a, &b));
+    }
+
+    #[test]
+    fn fused_conv_matches_materialized_lowering() {
+        let mut rng = Rng::new(9);
+        let x = rng.randn(&[2, 3, 9, 8], 1.0);
+        let w = rng.randn(&[5, 3, 3, 2], 1.0);
+        let bias = rng.randn(&[5], 1.0);
+        let g = Conv2dGeom { kernel: (3, 2), stride: (2, 1), pad: (1, 1), dilation: (1, 2) };
+        let y = conv2d_forward(&x, &w, Some(&bias), &g);
+        // reference: materialized im2col + naive matmul + bias + layout
+        let cols = ops::im2col(&x, &g);
+        let wr = w.reshape(&[5, 18]).t();
+        let mut yr = ops::matmul_naive(&cols, &wr);
+        yr = ops::add(&yr, &bias);
+        let (oh, ow) = g.out_hw(9, 8);
+        let want = yr.reshape(&[2, oh, ow, 5]).transpose(&[0, 3, 1, 2]);
+        assert_eq!(y.dims(), want.dims());
+        assert!(y.allclose(&want, 1e-4, 1e-4), "max diff {}", y.max_abs_diff(&want));
+    }
+
+    #[test]
+    fn fused_conv_matches_lowering_on_the_tiled_path() {
+        let mut rng = Rng::new(10);
+        // rows·ckk·oc = 512·36·8 ≫ SMALL_FLOPS: exercises the im2col
+        // panel packer inside the tiled core, with edge tiles
+        let x = rng.randn(&[2, 4, 16, 16], 1.0);
+        let w = rng.randn(&[8, 4, 3, 3], 1.0);
+        let g = Conv2dGeom { kernel: (3, 3), stride: (1, 1), pad: (1, 1), dilation: (1, 1) };
+        let y = conv2d_forward(&x, &w, None, &g);
+        let cols = ops::im2col(&x, &g);
+        let wr = w.reshape(&[8, 36]).t();
+        let want =
+            ops::matmul_naive(&cols, &wr).reshape(&[2, 16, 16, 8]).transpose(&[0, 3, 1, 2]);
+        assert_eq!(y.dims(), want.dims());
+        assert!(y.allclose(&want, 1e-4, 1e-4), "max diff {}", y.max_abs_diff(&want));
+    }
+
+    #[test]
+    fn conv_backward_matches_materialized_formulas() {
+        let mut rng = Rng::new(11);
+        let x = rng.randn(&[2, 3, 8, 8], 1.0);
+        let w = rng.randn(&[4, 3, 3, 3], 1.0);
+        let g = Conv2dGeom { kernel: (3, 3), stride: (1, 1), pad: (1, 1), dilation: (1, 1) };
+        let gy = rng.randn(&[2, 4, 8, 8], 1.0);
+        let (gx, gw, gb) = conv2d_backward(&x, &w, &gy, true, &g);
+        // naive reference: materialized rows + naive matmuls
+        let gyr = gy.transpose(&[0, 2, 3, 1]).reshape(&[2 * 8 * 8, 4]);
+        let wr = w.reshape(&[4, 27]);
+        let want_gx = ops::col2im(&ops::matmul_naive(&gyr, &wr), x.dims(), &g);
+        let want_gw = ops::matmul_naive(&gyr.t(), &ops::im2col(&x, &g)).reshape(w.dims());
+        let want_gb = ops::sum_axis(&gyr, 0, false);
+        assert!(gx.allclose(&want_gx, 1e-4, 1e-4), "gx diff {}", gx.max_abs_diff(&want_gx));
+        assert!(gw.allclose(&want_gw, 1e-3, 1e-3), "gw diff {}", gw.max_abs_diff(&want_gw));
+        let gb = gb.unwrap();
+        assert!(gb.allclose(&want_gb, 1e-3, 1e-3), "gb diff {}", gb.max_abs_diff(&want_gb));
+    }
+
+    #[test]
+    fn scratch_reuses_capacity() {
+        let mut s = Scratch::new();
+        let mut v = s.take(100);
+        v[0] = 5.0;
+        let cap = v.capacity();
+        s.put(v);
+        let v2 = s.take(80);
+        assert_eq!(v2.capacity(), cap); // same buffer back
+        assert!(v2.iter().all(|&x| x == 0.0)); // zeroed
+        assert_eq!(v2.len(), 80);
+    }
+
+    #[test]
+    fn take_uninit_skips_the_memset() {
+        let mut s = Scratch::new();
+        let mut v = s.take(64);
+        v.iter_mut().for_each(|x| *x = 3.0);
+        s.put(v);
+        // contents unspecified (stale values allowed), length exact
+        let v2 = s.take_uninit(32);
+        assert_eq!(v2.len(), 32);
+        s.put(v2);
+        // take() on the same pooled buffer re-zeroes
+        let v3 = s.take(48);
+        assert_eq!(v3.len(), 48);
+        assert!(v3.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn with_scratch_is_reentrant() {
+        with_scratch(|outer| {
+            let v = outer.take(16);
+            let inner_len = with_scratch(|inner| inner.take(8).len());
+            assert_eq!(inner_len, 8);
+            outer.put(v);
+        });
+    }
+
+    #[test]
+    fn recycle_feeds_the_arena() {
+        // prime: recycle a uniquely-owned array...
+        recycle(NdArray::zeros(&[64]));
+        // ...and a shared one (must be a no-op, not a panic)
+        let a = NdArray::zeros(&[32]);
+        let b = a.clone();
+        recycle(a);
+        drop(b);
+        with_scratch(|s| {
+            let v = s.take(10);
+            assert_eq!(v.len(), 10);
+        });
+    }
+}

@@ -7,10 +7,19 @@
 //! value on every write, faithfully simulating half-precision storage
 //! (the paper §3.3) while computing in f32 — the same "compute in f32,
 //! store in half" contract the MXU/TensorCore path uses.
+//!
+//! Compute splits across three submodules: [`ops`] holds the
+//! tensor-level kernels (elementwise, reductions, matmul, the
+//! im2col/col2im lowering), [`kernels`] the packed register-tiled GEMM
+//! core, fused conv/affine kernels and the per-thread scratch arena,
+//! and [`parallel`] the persistent `NNL_THREADS` worker pool with a
+//! determinism contract: results are bit-identical at any thread count.
 
 pub mod array;
 pub mod dtype;
+pub mod kernels;
 pub mod ops;
+pub mod parallel;
 pub mod random;
 pub mod shape;
 

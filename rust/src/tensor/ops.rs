@@ -2,17 +2,50 @@
 //! axis reductions, matmul (the dynamic-mode hot path), and
 //! im2col/col2im (convolution lowering — the same lowering the L1
 //! Pallas kernel path uses, so dynamic and static modes agree).
+//!
+//! Large maps, reductions, matmul and the im2col/col2im lowering are
+//! sharded over [`crate::tensor::parallel`]'s worker pool; matmul
+//! additionally routes through [`crate::tensor::kernels`]'s packed
+//! tiled GEMM. Every parallel split here follows the pool's
+//! determinism contract (each output element computed wholly inside
+//! one shape-derived chunk), so results are bit-identical at any
+//! `NNL_THREADS`. [`matmul_naive`] keeps the pre-tiling single-thread
+//! loop as the oracle for property tests and the kernel bench.
 
-use super::{NdArray, Shape};
+use super::{kernels, parallel, NdArray, Shape};
+
+/// Below this many scalar ops, parallel fan-out costs more than it
+/// saves; kernels fall back to the identical serial loop.
+const PAR_MIN: usize = 16 * 1024;
+
+/// Elementwise chunk length: a pure function of `n` (determinism), at
+/// most 64 chunks, each at least 4k elements.
+fn par_chunk_len(n: usize) -> usize {
+    n.div_ceil(64).max(4096)
+}
 
 // ------------------------------------------------------------------ zip/map
 
 /// Elementwise binary op with NumPy broadcasting.
-pub fn zip_broadcast(a: &NdArray, b: &NdArray, f: impl Fn(f32, f32) -> f32) -> NdArray {
+pub fn zip_broadcast(a: &NdArray, b: &NdArray, f: impl Fn(f32, f32) -> f32 + Sync) -> NdArray {
     if a.shape() == b.shape() {
         // fast path: same shape, no index math
-        let data: Vec<f32> =
-            a.data().iter().zip(b.data()).map(|(&x, &y)| f(x, y)).collect();
+        let (ad, bd) = (a.data(), b.data());
+        let n = ad.len();
+        let mut data = vec![0.0f32; n];
+        if n < PAR_MIN {
+            for (slot, (&x, &y)) in data.iter_mut().zip(ad.iter().zip(bd)) {
+                *slot = f(x, y);
+            }
+        } else {
+            let chunk = par_chunk_len(n);
+            parallel::for_each_chunk_mut(&mut data, chunk, |ci, out| {
+                let base = ci * chunk;
+                for (j, slot) in out.iter_mut().enumerate() {
+                    *slot = f(ad[base + j], bd[base + j]);
+                }
+            });
+        }
         return NdArray::from_vec(a.dims(), data);
     }
     let target = a
@@ -21,17 +54,43 @@ pub fn zip_broadcast(a: &NdArray, b: &NdArray, f: impl Fn(f32, f32) -> f32) -> N
         .unwrap_or_else(|| panic!("cannot broadcast {} with {}", a.shape(), b.shape()));
     let n = target.size();
     let mut data = vec![0.0f32; n];
-    for (i, slot) in data.iter_mut().enumerate() {
+    let at = |i: usize| {
         let x = a.data()[a.shape().broadcast_source_index(&target, i)];
         let y = b.data()[b.shape().broadcast_source_index(&target, i)];
-        *slot = f(x, y);
+        f(x, y)
+    };
+    if n < PAR_MIN {
+        for (i, slot) in data.iter_mut().enumerate() {
+            *slot = at(i);
+        }
+    } else {
+        let chunk = par_chunk_len(n);
+        parallel::for_each_chunk_mut(&mut data, chunk, |ci, out| {
+            let base = ci * chunk;
+            for (j, slot) in out.iter_mut().enumerate() {
+                *slot = at(base + j);
+            }
+        });
     }
     NdArray::from_vec(target.dims(), data)
 }
 
 /// Elementwise unary map.
-pub fn map(a: &NdArray, f: impl Fn(f32) -> f32) -> NdArray {
-    NdArray::from_vec(a.dims(), a.data().iter().map(|&x| f(x)).collect())
+pub fn map(a: &NdArray, f: impl Fn(f32) -> f32 + Sync) -> NdArray {
+    let ad = a.data();
+    let n = ad.len();
+    if n < PAR_MIN {
+        return NdArray::from_vec(a.dims(), ad.iter().map(|&x| f(x)).collect());
+    }
+    let mut data = vec![0.0f32; n];
+    let chunk = par_chunk_len(n);
+    parallel::for_each_chunk_mut(&mut data, chunk, |ci, out| {
+        let base = ci * chunk;
+        for (j, slot) in out.iter_mut().enumerate() {
+            *slot = f(ad[base + j]);
+        }
+    });
+    NdArray::from_vec(a.dims(), data)
 }
 
 /// NaN-safe argmax over a slice: index of the first greatest non-NaN
@@ -85,6 +144,8 @@ pub fn reduce_to_shape(grad: &NdArray, src: &Shape) -> NdArray {
 // --------------------------------------------------------------- reductions
 
 /// Sum along `axis`, optionally keeping the reduced dim as size 1.
+/// Parallel over output rows: each output element accumulates its
+/// whole k-run inside one chunk, so the float order never changes.
 pub fn sum_axis(a: &NdArray, axis: usize, keepdims: bool) -> NdArray {
     assert!(axis < a.rank());
     let dims = a.dims();
@@ -92,13 +153,30 @@ pub fn sum_axis(a: &NdArray, axis: usize, keepdims: bool) -> NdArray {
     let ax = dims[axis];
     let inner: usize = dims[axis + 1..].iter().product();
     let mut out = vec![0.0f32; outer * inner];
-    for o in 0..outer {
-        for k in 0..ax {
-            let base = (o * ax + k) * inner;
-            for i in 0..inner {
-                out[o * inner + i] += a.data()[base + i];
+    let ad = a.data();
+    if outer * ax * inner < PAR_MIN {
+        for o in 0..outer {
+            for k in 0..ax {
+                let base = (o * ax + k) * inner;
+                for i in 0..inner {
+                    out[o * inner + i] += ad[base + i];
+                }
             }
         }
+    } else {
+        let chunk_outer = outer.div_ceil(64).max(1);
+        parallel::for_each_chunk_mut(&mut out, chunk_outer * inner, |ci, chunk| {
+            let o0 = ci * chunk_outer;
+            for (r, orow) in chunk.chunks_exact_mut(inner).enumerate() {
+                let o = o0 + r;
+                for k in 0..ax {
+                    let base = (o * ax + k) * inner;
+                    for (i, slot) in orow.iter_mut().enumerate() {
+                        *slot += ad[base + i];
+                    }
+                }
+            }
+        });
     }
     let mut out_dims: Vec<usize> = dims.to_vec();
     if keepdims {
@@ -147,13 +225,26 @@ pub fn max_axis(a: &NdArray, axis: usize, keepdims: bool) -> (NdArray, Vec<usize
 
 // ------------------------------------------------------------------ matmul
 
-/// 2-D matrix multiply `[m,k]·[k,n] -> [m,n]`.
-///
-/// Blocked i-k-j loop with a transposed-B-free inner loop: the k-major
-/// ordering keeps both `b` row and `out` row streaming, which is the
-/// standard cache-friendly form (this is the dynamic-mode hot path; the
-/// static mode runs the Pallas/XLA kernel instead).
+/// 2-D matrix multiply `[m,k]·[k,n] -> [m,n]` through the packed,
+/// register-tiled, row-sharded GEMM in [`crate::tensor::kernels`]
+/// (this is the dynamic-mode hot path; the static mode runs the
+/// Pallas/XLA kernel instead). Small products take the same serial
+/// blocked loop as [`matmul_naive`].
 pub fn matmul(a: &NdArray, b: &NdArray) -> NdArray {
+    assert_eq!(a.rank(), 2, "matmul lhs must be rank 2");
+    assert_eq!(b.rank(), 2, "matmul rhs must be rank 2");
+    let (m, k) = (a.dims()[0], a.dims()[1]);
+    let (k2, n) = (b.dims()[0], b.dims()[1]);
+    assert_eq!(k, k2, "matmul inner dims {k} vs {k2}");
+    let mut out = vec![0.0f32; m * n];
+    kernels::with_scratch(|s| kernels::matmul_into(&mut out, a.data(), b.data(), m, k, n, s));
+    NdArray::from_vec(&[m, n], out)
+}
+
+/// The pre-tiling matmul: single-thread blocked i-k-j loop. Kept as
+/// the oracle for the kernel property tests and as the baseline the
+/// `kernel_gemm` bench measures speedups against.
+pub fn matmul_naive(a: &NdArray, b: &NdArray) -> NdArray {
     assert_eq!(a.rank(), 2, "matmul lhs must be rank 2");
     assert_eq!(b.rank(), 2, "matmul rhs must be rank 2");
     let (m, k) = (a.dims()[0], a.dims()[1]);
@@ -184,7 +275,10 @@ pub fn matmul(a: &NdArray, b: &NdArray) -> NdArray {
     NdArray::from_vec(&[m, n], out)
 }
 
-/// Batched matmul: `[b,m,k]·[b,k,n] -> [b,m,n]`.
+/// Batched matmul: `[b,m,k]·[b,k,n] -> [b,m,n]`. Operates on the batch
+/// sub-slices directly (no per-slice `NdArray` copies — this sits on
+/// the serve micro-batch path) and shards whole batches across the
+/// pool; each batch's GEMM writes its own disjoint output block.
 pub fn batch_matmul(a: &NdArray, b: &NdArray) -> NdArray {
     assert_eq!(a.rank(), 3);
     assert_eq!(b.rank(), 3);
@@ -192,11 +286,41 @@ pub fn batch_matmul(a: &NdArray, b: &NdArray) -> NdArray {
     let (bs2, k2, n) = (b.dims()[0], b.dims()[1], b.dims()[2]);
     assert_eq!(bs, bs2);
     assert_eq!(k, k2);
-    let mut out = Vec::with_capacity(bs * m * n);
-    for i in 0..bs {
-        let ai = NdArray::from_slice(&[m, k], &a.data()[i * m * k..(i + 1) * m * k]);
-        let bi = NdArray::from_slice(&[k, n], &b.data()[i * k * n..(i + 1) * k * n]);
-        out.extend_from_slice(matmul(&ai, &bi).data());
+    let mut out = vec![0.0f32; bs * m * n];
+    let ad = a.data();
+    let bd = b.data();
+    if m * n > 0 {
+        if bs == 1 || bs * m * k * n < PAR_MIN {
+            // tiny batches: don't occupy the pool's job slot — the
+            // per-batch GEMM (run inline) may still parallelize itself
+            for (i, oi) in out.chunks_exact_mut(m * n).enumerate() {
+                kernels::with_scratch(|s| {
+                    kernels::matmul_into(
+                        oi,
+                        &ad[i * m * k..(i + 1) * m * k],
+                        &bd[i * k * n..(i + 1) * k * n],
+                        m,
+                        k,
+                        n,
+                        s,
+                    );
+                });
+            }
+        } else {
+            parallel::for_each_chunk_mut(&mut out, m * n, |i, oi| {
+                kernels::with_scratch(|s| {
+                    kernels::matmul_into(
+                        oi,
+                        &ad[i * m * k..(i + 1) * m * k],
+                        &bd[i * k * n..(i + 1) * k * n],
+                        m,
+                        k,
+                        n,
+                        s,
+                    );
+                });
+            });
+        }
     }
     NdArray::from_vec(&[bs, m, n], out)
 }
@@ -217,82 +341,148 @@ impl Conv2dGeom {
         Conv2dGeom { kernel: (kh, kw), stride: (1, 1), pad: (0, 0), dilation: (1, 1) }
     }
 
-    /// Output spatial size for an input of `(h, w)`.
+    /// Output spatial size for an input of `(h, w)`, or `None` when
+    /// the geometry is degenerate: zero kernel/stride/dilation, or an
+    /// effective kernel larger than the padded input (the latter used
+    /// to underflow `usize` — same bug class as `pool_out_hw`,
+    /// reachable from untrusted NNP attributes). [`crate::nnp::Op`]
+    /// validation calls this so malformed files fail at load.
+    pub fn try_out_hw(&self, h: usize, w: usize) -> Option<(usize, usize)> {
+        let (kh, kw) = self.kernel;
+        let (sh, sw) = self.stride;
+        let (dh, dw) = self.dilation;
+        if kh == 0 || kw == 0 || sh == 0 || sw == 0 || dh == 0 || dw == 0 {
+            return None;
+        }
+        let eff_kh = dh.checked_mul(kh - 1)?.checked_add(1)?;
+        let eff_kw = dw.checked_mul(kw - 1)?.checked_add(1)?;
+        let oh = (h + 2 * self.pad.0).checked_sub(eff_kh)? / sh + 1;
+        let ow = (w + 2 * self.pad.1).checked_sub(eff_kw)? / sw + 1;
+        Some((oh, ow))
+    }
+
+    /// Output spatial size for an input of `(h, w)`; panics on
+    /// degenerate geometry (validated callers use [`Self::try_out_hw`]
+    /// first and turn `None` into a load-time error).
     pub fn out_hw(&self, h: usize, w: usize) -> (usize, usize) {
-        let eff_kh = self.dilation.0 * (self.kernel.0 - 1) + 1;
-        let eff_kw = self.dilation.1 * (self.kernel.1 - 1) + 1;
-        let oh = (h + 2 * self.pad.0 - eff_kh) / self.stride.0 + 1;
-        let ow = (w + 2 * self.pad.1 - eff_kw) / self.stride.1 + 1;
-        (oh, ow)
+        self.try_out_hw(h, w).unwrap_or_else(|| {
+            panic!(
+                "convolution geometry invalid on {h}x{w} input: kernel {:?} stride {:?} \
+                 pad {:?} dilation {:?}",
+                self.kernel, self.stride, self.pad, self.dilation
+            )
+        })
     }
 }
 
 /// im2col: `[n,c,h,w] -> [n*oh*ow, c*kh*kw]`. Convolution then reduces
 /// to a matmul against reshaped weights `[c*kh*kw, oc]` — the same
-/// lowering `python/compile/kernels/matmul.py` feeds.
+/// lowering `python/compile/kernels/matmul.py` feeds. (The fused conv
+/// kernels never materialize this matrix; this entry remains for the
+/// oracle tests and any caller that wants the columns themselves.)
+/// Rows are sharded across the pool; each row is written by one chunk.
 pub fn im2col(x: &NdArray, g: &Conv2dGeom) -> NdArray {
     assert_eq!(x.rank(), 4, "im2col expects NCHW");
     let (n, c, h, w) = (x.dims()[0], x.dims()[1], x.dims()[2], x.dims()[3]);
     let (kh, kw) = g.kernel;
     let (oh, ow) = g.out_hw(h, w);
     let cols = c * kh * kw;
-    let mut out = vec![0.0f32; n * oh * ow * cols];
+    let rows = n * oh * ow;
+    let mut out = vec![0.0f32; rows * cols];
     let xd = x.data();
-    for ni in 0..n {
-        for oy in 0..oh {
-            for ox in 0..ow {
-                let row = ((ni * oh + oy) * ow + ox) * cols;
+    if !out.is_empty() {
+        // below the parallel threshold a single chunk runs inline
+        // (no pool job), with the identical per-row loop
+        let chunk_rows =
+            if rows * cols < PAR_MIN { rows } else { rows.div_ceil(64).max(1) };
+        parallel::for_each_chunk_mut(&mut out, chunk_rows * cols, |chunk_i, chunk| {
+            let r0 = chunk_i * chunk_rows;
+            for (lr, orow) in chunk.chunks_exact_mut(cols).enumerate() {
+                let row = r0 + lr;
+                let ni = row / (oh * ow);
+                let rem = row % (oh * ow);
+                let oy = rem / ow;
+                let ox = rem % ow;
                 for ci in 0..c {
                     for ky in 0..kh {
                         let iy = (oy * g.stride.0 + ky * g.dilation.0) as isize - g.pad.0 as isize;
                         for kx in 0..kw {
                             let ix =
                                 (ox * g.stride.1 + kx * g.dilation.1) as isize - g.pad.1 as isize;
-                            let col = (ci * kh + ky) * kw + kx;
                             if iy >= 0 && (iy as usize) < h && ix >= 0 && (ix as usize) < w {
-                                out[row + col] = xd
-                                    [((ni * c + ci) * h + iy as usize) * w + ix as usize];
+                                orow[(ci * kh + ky) * kw + kx] =
+                                    xd[((ni * c + ci) * h + iy as usize) * w + ix as usize];
                             }
                         }
                     }
                 }
             }
-        }
+        });
     }
-    NdArray::from_vec(&[n * oh * ow, cols], out)
+    NdArray::from_vec(&[rows, cols], out)
+}
+
+/// col2im scatter-accumulate into a caller-provided **zeroed** buffer
+/// (shared with the fused conv/deconv backward kernels, whose column
+/// gradients live in the scratch arena; every caller hands a
+/// fresh-zeroed allocation, so this never re-clears). Parallel over
+/// `(n, c)` output-plane groups: every output pixel accumulates its
+/// overlapping patches in the same `(oy, ox, ky, kx)` order the serial
+/// loop used, inside one chunk — bit-identical at any thread count.
+/// Below the parallel threshold a single chunk runs inline (no pool
+/// job).
+pub(crate) fn col2im_slice(out: &mut [f32], cols: &[f32], x_dims: &[usize], g: &Conv2dGeom) {
+    let (n, c, h, w) = (x_dims[0], x_dims[1], x_dims[2], x_dims[3]);
+    let (kh, kw) = g.kernel;
+    let (oh, ow) = g.out_hw(h, w);
+    let ncols = c * kh * kw;
+    assert_eq!(out.len(), n * c * h * w, "col2im output size");
+    assert_eq!(cols.len(), n * oh * ow * ncols, "col2im column size");
+    let hw = h * w;
+    let n_planes = n * c;
+    let planes_per_chunk = if cols.len() < PAR_MIN {
+        n_planes.max(1)
+    } else {
+        n_planes.div_ceil(64).max(1)
+    };
+    parallel::for_each_chunk_mut(out, (planes_per_chunk * hw).max(1), |gi, group| {
+        for (lp, plane) in group.chunks_exact_mut(hw).enumerate() {
+            let pi = gi * planes_per_chunk + lp;
+            let ni = pi / c;
+            let ch = pi % c;
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let row = ((ni * oh + oy) * ow + ox) * ncols;
+                    for ky in 0..kh {
+                        let iy = (oy * g.stride.0 + ky * g.dilation.0) as isize - g.pad.0 as isize;
+                        if iy < 0 || (iy as usize) >= h {
+                            continue;
+                        }
+                        for kx in 0..kw {
+                            let ix =
+                                (ox * g.stride.1 + kx * g.dilation.1) as isize - g.pad.1 as isize;
+                            if ix < 0 || (ix as usize) >= w {
+                                continue;
+                            }
+                            plane[iy as usize * w + ix as usize] +=
+                                cols[row + (ch * kh + ky) * kw + kx];
+                        }
+                    }
+                }
+            }
+        }
+    });
 }
 
 /// col2im: adjoint of [`im2col`] — scatters column gradients back to
 /// the input layout (accumulating where patches overlap).
 pub fn col2im(cols: &NdArray, x_dims: &[usize], g: &Conv2dGeom) -> NdArray {
-    let (n, c, h, w) = (x_dims[0], x_dims[1], x_dims[2], x_dims[3]);
+    let (n, c) = (x_dims[0], x_dims[1]);
     let (kh, kw) = g.kernel;
-    let (oh, ow) = g.out_hw(h, w);
-    let ncols = c * kh * kw;
-    assert_eq!(cols.dims(), &[n * oh * ow, ncols]);
-    let mut out = vec![0.0f32; n * c * h * w];
-    let cd = cols.data();
-    for ni in 0..n {
-        for oy in 0..oh {
-            for ox in 0..ow {
-                let row = ((ni * oh + oy) * ow + ox) * ncols;
-                for ci in 0..c {
-                    for ky in 0..kh {
-                        let iy = (oy * g.stride.0 + ky * g.dilation.0) as isize - g.pad.0 as isize;
-                        for kx in 0..kw {
-                            let ix =
-                                (ox * g.stride.1 + kx * g.dilation.1) as isize - g.pad.1 as isize;
-                            if iy >= 0 && (iy as usize) < h && ix >= 0 && (ix as usize) < w {
-                                let col = (ci * kh + ky) * kw + kx;
-                                out[((ni * c + ci) * h + iy as usize) * w + ix as usize] +=
-                                    cd[row + col];
-                            }
-                        }
-                    }
-                }
-            }
-        }
-    }
+    let (oh, ow) = g.out_hw(x_dims[2], x_dims[3]);
+    assert_eq!(cols.dims(), &[n * oh * ow, c * kh * kw]);
+    let mut out = vec![0.0f32; x_dims.iter().product()];
+    col2im_slice(&mut out, cols.data(), x_dims, g);
     NdArray::from_vec(x_dims, out)
 }
 
@@ -371,6 +561,40 @@ mod tests {
             let ci = c.slice_axis(0, i, i + 1).reshape(&[2, 2]);
             assert_eq!(matmul(&ai, &bi), ci);
         }
+    }
+
+    #[test]
+    fn matmul_matches_naive_past_the_tiled_cutoff() {
+        let mut rng = crate::tensor::Rng::new(77);
+        let a = rng.randn(&[70, 50], 1.0);
+        let b = rng.randn(&[50, 60], 1.0);
+        let got = matmul(&a, &b);
+        let want = matmul_naive(&a, &b);
+        assert_eq!(got.dims(), want.dims());
+        assert!(got.allclose(&want, 1e-4, 1e-4), "max diff {}", got.max_abs_diff(&want));
+    }
+
+    #[test]
+    fn try_out_hw_rejects_degenerate_geometry() {
+        // kernel larger than padded input: used to underflow usize
+        let g = Conv2dGeom::simple(7, 7);
+        assert_eq!(g.try_out_hw(4, 4), None);
+        let ok = Conv2dGeom { kernel: (7, 7), stride: (1, 1), pad: (2, 2), dilation: (1, 1) };
+        assert_eq!(ok.try_out_hw(4, 4), Some((2, 2)));
+        // zero stride / dilation / kernel are degenerate, not panics
+        let z = Conv2dGeom { kernel: (2, 2), stride: (0, 1), pad: (0, 0), dilation: (1, 1) };
+        assert_eq!(z.try_out_hw(8, 8), None);
+        let d = Conv2dGeom { kernel: (2, 2), stride: (1, 1), pad: (0, 0), dilation: (0, 1) };
+        assert_eq!(d.try_out_hw(8, 8), None);
+        // dilation pushes the effective kernel past the input
+        let far = Conv2dGeom { kernel: (3, 3), stride: (1, 1), pad: (0, 0), dilation: (4, 4) };
+        assert_eq!(far.try_out_hw(8, 8), None);
+    }
+
+    #[test]
+    #[should_panic(expected = "convolution geometry invalid")]
+    fn out_hw_panics_with_context_on_degenerate_geometry() {
+        Conv2dGeom::simple(9, 9).out_hw(2, 2);
     }
 
     #[test]

@@ -1,0 +1,329 @@
+//! Persistent worker pool for the compute kernels — `std::thread` only
+//! (rayon cannot resolve offline), sized by `NNL_THREADS` (default:
+//! available cores; `1` disables the pool entirely).
+//!
+//! ## Determinism contract
+//!
+//! Every parallel kernel in this crate shards its *output*: work is cut
+//! into chunks whose boundaries depend only on the problem shape (never
+//! on the thread count), and each output element is computed entirely
+//! inside one chunk with the same sequential inner loop the serial
+//! kernel runs. Threads only decide *where* a chunk executes, not what
+//! it computes — so results are bit-identical for any `NNL_THREADS`
+//! value, any [`with_thread_limit`] scope, and any scheduling order.
+//! `tests/kernel_parity.rs` enforces this.
+//!
+//! ## Shape of the pool
+//!
+//! One global job slot, claimed chunk-by-chunk: the submitting thread
+//! publishes a job, participates in draining it, and blocks until every
+//! chunk completed. Workers park on a condvar between jobs. If the slot
+//! is already busy (several serve workers running parallel kernels at
+//! once) or the caller is itself inside a pool chunk, the call simply
+//! runs serially — those callers are already parallel across requests,
+//! and nested fan-out would only fight over the same cores.
+
+use std::cell::Cell;
+use std::ops::Range;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+/// Lifetime-erased pointer to the chunk closure of an in-flight job.
+/// Only dereferenced between publication and completion of the job,
+/// while the submitting stack frame (which owns the closure) is pinned
+/// in [`for_each_chunk`] waiting on the `done` counter.
+#[derive(Clone, Copy)]
+struct RunPtr(*const (dyn Fn(usize) + Sync));
+unsafe impl Send for RunPtr {}
+unsafe impl Sync for RunPtr {}
+
+/// One published unit of pool work.
+struct Job {
+    run: RunPtr,
+    n_chunks: usize,
+    /// Max workers allowed to join (submitter always participates).
+    max_workers: usize,
+    /// Next chunk index to claim (may overshoot `n_chunks`).
+    claimed: AtomicUsize,
+    /// Workers that joined this job.
+    tickets: AtomicUsize,
+    /// Chunks fully executed.
+    done: AtomicUsize,
+    /// A chunk closure panicked (re-raised on the submitting thread).
+    panicked: AtomicBool,
+}
+
+struct Shared {
+    slot: Mutex<Option<Arc<Job>>>,
+    /// Workers wait here for a job to appear in `slot`.
+    work: Condvar,
+    /// The submitter waits here for `done == n_chunks`.
+    done: Condvar,
+}
+
+struct Pool {
+    shared: Arc<Shared>,
+    workers: usize,
+}
+
+static POOL: OnceLock<Pool> = OnceLock::new();
+
+thread_local! {
+    /// Depth of pool work on this thread (worker chunk or submitter
+    /// participation). Non-zero ⇒ nested `for_each_chunk` runs serially.
+    static BUSY: Cell<usize> = const { Cell::new(0) };
+    /// Per-thread cap on threads per job (see [`with_thread_limit`]).
+    static LIMIT: Cell<usize> = const { Cell::new(usize::MAX) };
+}
+
+fn pool() -> &'static Pool {
+    POOL.get_or_init(|| {
+        let threads = std::env::var("NNL_THREADS")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .filter(|&n| n >= 1)
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+            });
+        let shared = Arc::new(Shared {
+            slot: Mutex::new(None),
+            work: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let workers = threads - 1;
+        for i in 0..workers {
+            let sh = Arc::clone(&shared);
+            std::thread::Builder::new()
+                .name(format!("nnl-worker-{i}"))
+                .spawn(move || worker_loop(sh))
+                .expect("spawning nnl worker thread");
+        }
+        Pool { shared, workers }
+    })
+}
+
+/// Pool width: `NNL_THREADS` if set, else available cores (always ≥ 1;
+/// the submitting thread counts as one).
+pub fn num_threads() -> usize {
+    pool().workers + 1
+}
+
+/// Run `f` with parallel kernels capped at `n` threads (1 = serial).
+/// Results are bit-identical at any cap — this exists for the
+/// thread-scaling bench and the determinism tests, not for correctness.
+pub fn with_thread_limit<R>(n: usize, f: impl FnOnce() -> R) -> R {
+    struct Restore(usize);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            LIMIT.with(|l| l.set(self.0));
+        }
+    }
+    let prev = LIMIT.with(|l| l.replace(n.max(1)));
+    let _restore = Restore(prev);
+    f()
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    loop {
+        let job = {
+            let mut slot = shared.slot.lock().unwrap();
+            loop {
+                if let Some(j) = slot.as_ref() {
+                    let open = j.claimed.load(Ordering::Relaxed) < j.n_chunks;
+                    let joined = open
+                        && j.tickets
+                            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |t| {
+                                (t < j.max_workers).then_some(t + 1)
+                            })
+                            .is_ok();
+                    if joined {
+                        break Arc::clone(j);
+                    }
+                }
+                slot = shared.work.wait(slot).unwrap();
+            }
+        };
+        BUSY.with(|b| b.set(b.get() + 1));
+        drain(&job);
+        BUSY.with(|b| b.set(b.get() - 1));
+        if job.done.load(Ordering::Acquire) >= job.n_chunks {
+            let _guard = shared.slot.lock().unwrap();
+            shared.done.notify_all();
+        }
+    }
+}
+
+/// Claim and execute chunks of `job` until none remain.
+fn drain(job: &Job) {
+    loop {
+        let i = job.claimed.fetch_add(1, Ordering::Relaxed);
+        if i >= job.n_chunks {
+            return;
+        }
+        // Safe to dereference only *after* a successful claim: chunk i
+        // is now claimed-but-not-done, so `done < n_chunks` holds until
+        // we finish it — the submitter is pinned in `for_each_chunk`'s
+        // completion wait and the closure behind the pointer is alive.
+        // (Before a claim the job may already be finished and the
+        // submitter gone.)
+        let f = unsafe { &*job.run.0 };
+        let ok = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(i)));
+        if ok.is_err() {
+            job.panicked.store(true, Ordering::Relaxed);
+        }
+        job.done.fetch_add(1, Ordering::Release);
+    }
+}
+
+/// Execute `f(0), f(1), …, f(n_chunks - 1)`, spread over the pool.
+/// Chunks are claimed dynamically but each runs exactly once; the call
+/// returns only after every chunk finished. Falls back to a plain
+/// serial loop when the pool is width 1, a [`with_thread_limit`] cap
+/// says so, the job slot is already busy, or the caller is itself a
+/// pool chunk (nested parallelism).
+pub fn for_each_chunk(n_chunks: usize, f: impl Fn(usize) + Sync) {
+    if n_chunks == 0 {
+        return;
+    }
+    let limit = LIMIT.with(|l| l.get());
+    let pool = pool();
+    let nested = BUSY.with(|b| b.get()) > 0;
+    if n_chunks == 1 || limit <= 1 || pool.workers == 0 || nested {
+        for i in 0..n_chunks {
+            f(i);
+        }
+        return;
+    }
+    let obj: &(dyn Fn(usize) + Sync) = &f;
+    let job = Arc::new(Job {
+        run: RunPtr(obj as *const _),
+        n_chunks,
+        max_workers: (limit - 1).min(pool.workers),
+        claimed: AtomicUsize::new(0),
+        tickets: AtomicUsize::new(0),
+        done: AtomicUsize::new(0),
+        panicked: AtomicBool::new(false),
+    });
+    {
+        let mut slot = pool.shared.slot.lock().unwrap();
+        if slot.is_some() {
+            // another thread's job is in flight: run serially rather
+            // than queueing (callers here are already parallel)
+            drop(slot);
+            for i in 0..n_chunks {
+                f(i);
+            }
+            return;
+        }
+        *slot = Some(Arc::clone(&job));
+        pool.shared.work.notify_all();
+    }
+    BUSY.with(|b| b.set(b.get() + 1));
+    drain(&job);
+    BUSY.with(|b| b.set(b.get() - 1));
+    let mut slot = pool.shared.slot.lock().unwrap();
+    while job.done.load(Ordering::Acquire) < n_chunks {
+        slot = pool.shared.done.wait(slot).unwrap();
+    }
+    *slot = None;
+    drop(slot);
+    if job.panicked.load(Ordering::Relaxed) {
+        panic!("a parallel kernel chunk panicked (see worker backtrace above)");
+    }
+}
+
+/// Shared-to-mutable bridge for disjoint chunk writes.
+struct SendPtr<T>(*mut T);
+unsafe impl<T: Send> Send for SendPtr<T> {}
+unsafe impl<T: Send> Sync for SendPtr<T> {}
+
+/// Split `data` into consecutive chunks of `chunk_len` (last one may be
+/// shorter) and run `f(chunk_index, chunk)` for each, in parallel. The
+/// chunk layout depends only on `data.len()` and `chunk_len`, never on
+/// the thread count — the determinism contract above.
+pub fn for_each_chunk_mut<T: Send>(
+    data: &mut [T],
+    chunk_len: usize,
+    f: impl Fn(usize, &mut [T]) + Sync,
+) {
+    if data.is_empty() {
+        return;
+    }
+    assert!(chunk_len > 0, "chunk_len must be non-zero");
+    let len = data.len();
+    let n_chunks = len.div_ceil(chunk_len);
+    let base = SendPtr(data.as_mut_ptr());
+    for_each_chunk(n_chunks, |i| {
+        let start = i * chunk_len;
+        let end = (start + chunk_len).min(len);
+        // disjoint by construction: chunk i covers [i·chunk_len, …)
+        let chunk = unsafe { std::slice::from_raw_parts_mut(base.0.add(start), end - start) };
+        f(i, chunk);
+    });
+}
+
+/// The chunk range `[i * chunk_len, min((i+1) * chunk_len, n))` —
+/// the read-only twin of [`for_each_chunk_mut`]'s layout, for kernels
+/// that shard work over an index space instead of an output slice.
+pub fn chunk_range(n: usize, chunk_len: usize, i: usize) -> Range<usize> {
+    let start = i * chunk_len;
+    start..(start + chunk_len).min(n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_chunk_runs_exactly_once() {
+        let counts: Vec<AtomicUsize> = (0..97).map(|_| AtomicUsize::new(0)).collect();
+        for_each_chunk(counts.len(), |i| {
+            counts[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(counts.iter().all(|c| c.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn chunk_mut_partitions_exactly() {
+        let mut data = vec![0u32; 1003];
+        for_each_chunk_mut(&mut data, 64, |i, chunk| {
+            for v in chunk.iter_mut() {
+                *v += 1 + i as u32 % 2;
+            }
+        });
+        // every element written exactly once
+        assert!(data.iter().all(|&v| v == 1 || v == 2));
+        assert_eq!(data.iter().filter(|&&v| v > 0).count(), 1003);
+    }
+
+    #[test]
+    fn nested_calls_serialize_instead_of_deadlocking() {
+        let outer: Vec<AtomicUsize> = (0..8).map(|_| AtomicUsize::new(0)).collect();
+        for_each_chunk(outer.len(), |i| {
+            let inner: Vec<AtomicUsize> = (0..4).map(|_| AtomicUsize::new(0)).collect();
+            for_each_chunk(inner.len(), |j| {
+                inner[j].fetch_add(1, Ordering::Relaxed);
+            });
+            assert!(inner.iter().all(|c| c.load(Ordering::Relaxed) == 1));
+            outer[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(outer.iter().all(|c| c.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn thread_limit_forces_serial() {
+        with_thread_limit(1, || {
+            let on_main = std::thread::current().id();
+            for_each_chunk(32, |_| {
+                assert_eq!(std::thread::current().id(), on_main);
+            });
+        });
+        assert!(num_threads() >= 1);
+    }
+
+    #[test]
+    fn chunk_range_layout() {
+        assert_eq!(chunk_range(10, 4, 0), 0..4);
+        assert_eq!(chunk_range(10, 4, 2), 8..10);
+    }
+}

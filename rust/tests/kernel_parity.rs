@@ -1,0 +1,333 @@
+//! Kernel parity + determinism suite for the tiled, multi-threaded
+//! compute floor:
+//!
+//! - property tests pinning the packed tiled GEMM, the fused
+//!   im2col-GEMM convolution, and col2im against the pre-PR naive
+//!   implementations over randomized shapes and geometries;
+//! - bit-identity tests for the pool's determinism contract — every
+//!   parallel kernel must produce the same bits at 1, 2 and N threads
+//!   (CI also runs this whole suite under `NNL_THREADS=1`);
+//! - plan-vs-tape bit-identity for the fused Affine/Convolution fast
+//!   paths in `CompiledNet::execute`.
+
+use std::collections::HashMap;
+
+use nnl::functions as F;
+use nnl::nnp::{CompiledNet, Layer, NetworkDef, Op, TensorDef};
+use nnl::tensor::ops::{self, Conv2dGeom};
+use nnl::tensor::{parallel, NdArray, Rng};
+use nnl::utils::prop;
+use nnl::Variable;
+
+// ------------------------------------------------------------- GEMM parity
+
+#[test]
+fn gemm_matches_naive_over_random_shapes() {
+    prop::check(
+        101,
+        24,
+        |rng| {
+            // straddle the small/tiled cutoff and every edge-tile case
+            let m = 1 + rng.below(96);
+            let k = 1 + rng.below(96);
+            let n = 1 + rng.below(96);
+            let a = rng.randn(&[m, k], 1.0);
+            let b = rng.randn(&[k, n], 1.0);
+            (a, b)
+        },
+        |(a, b)| {
+            let got = ops::matmul(a, b);
+            let want = ops::matmul_naive(a, b);
+            if got.allclose(&want, 1e-4, 1e-4) {
+                Ok(())
+            } else {
+                Err(format!(
+                    "{}x{} · {}x{}: max diff {}",
+                    a.dims()[0],
+                    a.dims()[1],
+                    b.dims()[0],
+                    b.dims()[1],
+                    got.max_abs_diff(&want)
+                ))
+            }
+        },
+    );
+}
+
+#[test]
+fn batch_matmul_matches_per_slice_matmul_bitwise() {
+    let mut rng = Rng::new(102);
+    let a = rng.randn(&[3, 33, 21], 1.0);
+    let b = rng.randn(&[3, 21, 17], 1.0);
+    let c = ops::batch_matmul(&a, &b);
+    for i in 0..3 {
+        let ai = a.slice_axis(0, i, i + 1).reshape(&[33, 21]);
+        let bi = b.slice_axis(0, i, i + 1).reshape(&[21, 17]);
+        let want = ops::matmul(&ai, &bi);
+        let got = c.slice_axis(0, i, i + 1).reshape(&[33, 17]);
+        assert_eq!(got.data(), want.data(), "batch {i} differs");
+    }
+}
+
+// --------------------------------------------------------------- conv parity
+
+fn rand_geom(rng: &mut Rng) -> Conv2dGeom {
+    Conv2dGeom {
+        kernel: (1 + rng.below(3), 1 + rng.below(3)),
+        stride: (1 + rng.below(2), 1 + rng.below(2)),
+        pad: (rng.below(2), rng.below(2)),
+        dilation: (1 + rng.below(2), 1 + rng.below(2)),
+    }
+}
+
+#[test]
+fn fused_conv_forward_matches_materialized_lowering() {
+    prop::check(
+        103,
+        16,
+        |rng| {
+            let n = 1 + rng.below(2);
+            let c = 1 + rng.below(4);
+            let oc = 1 + rng.below(6);
+            let h = 6 + rng.below(8);
+            let w = 6 + rng.below(8);
+            let g = rand_geom(rng);
+            let x = rng.randn(&[n, c, h, w], 1.0);
+            let wt = rng.randn(&[oc, c, g.kernel.0, g.kernel.1], 1.0);
+            let b = rng.randn(&[oc], 1.0);
+            (x, wt, b, g)
+        },
+        |(x, wt, b, g)| {
+            let (h, w) = (x.dims()[2], x.dims()[3]);
+            let Some((oh, ow)) = g.try_out_hw(h, w) else {
+                return Ok(()); // degenerate geometry drawn: skip
+            };
+            let (n, oc) = (x.dims()[0], wt.dims()[0]);
+            let xv = Variable::from_array(x.clone(), false);
+            let wv = Variable::from_array(wt.clone(), false);
+            let bv = Variable::from_array(b.clone(), false);
+            let y = F::convolution(&xv, &wv, Some(&bv), g.stride, g.pad, g.dilation).data();
+            // pre-PR reference: materialized im2col + naive matmul
+            let cols = ops::im2col(x, g);
+            let wr = wt.reshape(&[oc, wt.size() / oc]).t();
+            let yr = ops::add(&ops::matmul_naive(&cols, &wr), b);
+            let want = yr.reshape(&[n, oh, ow, oc]).transpose(&[0, 3, 1, 2]);
+            if y.allclose(&want, 1e-4, 1e-4) {
+                Ok(())
+            } else {
+                Err(format!(
+                    "x {:?} w {:?} geom {g:?}: max diff {}",
+                    x.dims(),
+                    wt.dims(),
+                    y.max_abs_diff(&want)
+                ))
+            }
+        },
+    );
+}
+
+#[test]
+fn fused_conv_backward_matches_materialized_lowering() {
+    prop::check(
+        104,
+        10,
+        |rng| {
+            let c = 1 + rng.below(3);
+            let oc = 1 + rng.below(4);
+            let g = rand_geom(rng);
+            let x = rng.randn(&[2, c, 9, 9], 1.0);
+            let wt = rng.randn(&[oc, c, g.kernel.0, g.kernel.1], 1.0);
+            (x, wt, g)
+        },
+        |(x, wt, g)| {
+            let Some((oh, ow)) = g.try_out_hw(9, 9) else {
+                return Ok(());
+            };
+            let (n, oc) = (2, wt.dims()[0]);
+            let xv = Variable::from_array(x.clone(), true);
+            let wv = Variable::from_array(wt.clone(), true);
+            let y = F::convolution(&xv, &wv, None, g.stride, g.pad, g.dilation);
+            // seed backward with ones (sum objective): grads via tape
+            F::sum_all(&y).backward();
+            let (gx, gw) = (xv.grad(), wv.grad());
+            // reference gradients from the materialized formulas
+            let gyr = NdArray::ones(&[n * oh * ow, oc]);
+            let wr = wt.reshape(&[oc, wt.size() / oc]);
+            let want_gx = ops::col2im(&ops::matmul_naive(&gyr, &wr), x.dims(), g);
+            let want_gw =
+                ops::matmul_naive(&gyr.t(), &ops::im2col(x, g)).reshape(wt.dims());
+            if gx.allclose(&want_gx, 1e-3, 1e-3) && gw.allclose(&want_gw, 1e-3, 1e-3) {
+                Ok(())
+            } else {
+                Err(format!(
+                    "geom {g:?}: gx diff {} gw diff {}",
+                    gx.max_abs_diff(&want_gx),
+                    gw.max_abs_diff(&want_gw)
+                ))
+            }
+        },
+    );
+}
+
+// ------------------------------------------------- thread-count bit-identity
+
+/// Run `f` at pool widths 1, 2 and full; all results must be
+/// bit-identical (the parallel determinism contract).
+fn assert_thread_invariant(name: &str, f: impl Fn() -> NdArray) {
+    let full = f();
+    for limit in [1usize, 2] {
+        let capped = parallel::with_thread_limit(limit, &f);
+        assert_eq!(
+            capped.data(),
+            full.data(),
+            "{name}: {limit}-thread result differs from {}-thread",
+            parallel::num_threads()
+        );
+    }
+}
+
+#[test]
+fn parallel_kernels_are_bit_identical_at_any_thread_count() {
+    let mut rng = Rng::new(105);
+    let a = rng.randn(&[200, 170], 1.0);
+    let b = rng.randn(&[170, 130], 1.0);
+    assert_thread_invariant("matmul", || ops::matmul(&a, &b));
+
+    let ab = rng.randn(&[4, 40, 50], 1.0);
+    let bb = rng.randn(&[4, 50, 30], 1.0);
+    assert_thread_invariant("batch_matmul", || ops::batch_matmul(&ab, &bb));
+
+    let x = rng.randn(&[2, 8, 24, 24], 1.0);
+    let g = Conv2dGeom { kernel: (3, 3), stride: (1, 1), pad: (1, 1), dilation: (1, 1) };
+    assert_thread_invariant("im2col", || ops::im2col(&x, &g));
+
+    let cols = ops::im2col(&x, &g);
+    assert_thread_invariant("col2im", || ops::col2im(&cols, x.dims(), &g));
+
+    let w = rng.randn(&[12, 8, 3, 3], 1.0);
+    let xv = Variable::from_array(x.clone(), false);
+    let wv = Variable::from_array(w.clone(), false);
+    assert_thread_invariant("conv forward", || {
+        F::convolution(&xv, &wv, None, (1, 1), (1, 1), (1, 1)).data()
+    });
+
+    let big = rng.randn(&[64, 1024], 1.0);
+    assert_thread_invariant("map", || ops::map(&big, |v| (v * 1.3).tanh()));
+    assert_thread_invariant("zip", || ops::mul(&big, &big));
+    assert_thread_invariant("sum_axis", || ops::sum_axis(&big, 1, false));
+}
+
+// --------------------------------------------------------- plan fast paths
+
+fn conv_net(g: &Conv2dGeom, in_dims: &[usize]) -> NetworkDef {
+    let net = NetworkDef {
+        name: "convnet".into(),
+        inputs: vec![TensorDef { name: "x".into(), dims: in_dims.to_vec() }],
+        outputs: vec!["y".into()],
+        layers: vec![
+            Layer {
+                name: "conv".into(),
+                op: Op::Convolution { stride: g.stride, pad: g.pad, dilation: g.dilation },
+                inputs: vec!["x".into()],
+                params: vec!["W".into(), "b".into()],
+                outputs: vec!["h".into()],
+            },
+            Layer {
+                name: "act".into(),
+                op: Op::ReLU,
+                inputs: vec!["h".into()],
+                params: vec![],
+                outputs: vec!["y".into()],
+            },
+        ],
+    };
+    net.validate().expect("well-formed test net");
+    net
+}
+
+#[test]
+fn plan_fast_path_is_bit_identical_to_tape() {
+    let mut rng = Rng::new(106);
+    let g = Conv2dGeom { kernel: (3, 3), stride: (2, 2), pad: (1, 1), dilation: (1, 1) };
+    let x = rng.randn(&[2, 3, 12, 12], 1.0);
+    let w = rng.randn(&[6, 3, 3, 3], 1.0);
+    let b = rng.randn(&[6], 1.0);
+    // tape path
+    let xv = Variable::from_array(x.clone(), false);
+    let wv = Variable::from_array(w.clone(), false);
+    let bv = Variable::from_array(b.clone(), false);
+    let tape_y = F::relu(&F::convolution(&xv, &wv, Some(&bv), g.stride, g.pad, g.dilation)).data();
+    // compiled-plan path (fused fast path)
+    let net = conv_net(&g, &[2, 3, 12, 12]);
+    let mut params = HashMap::new();
+    params.insert("W".to_string(), w);
+    params.insert("b".to_string(), b);
+    let plan = CompiledNet::compile(&net, &params).unwrap();
+    let out = plan.execute_positional(&[x]).unwrap();
+    assert_eq!(out[0].dims(), tape_y.dims());
+    assert_eq!(out[0].data(), tape_y.data(), "plan conv fast path != tape");
+    // and repeated execution (arena-recycled buffers) stays identical
+    let mut named = HashMap::new();
+    named.insert("x".to_string(), rng.randn(&[2, 3, 12, 12], 1.0));
+    let r1 = plan.execute(&named).unwrap();
+    let r2 = plan.execute(&named).unwrap();
+    assert_eq!(r1[0].data(), r2[0].data());
+}
+
+#[test]
+fn plan_affine_fast_path_is_bit_identical_to_tape() {
+    let mut rng = Rng::new(107);
+    let x = rng.randn(&[4, 20], 1.0);
+    let w = rng.randn(&[20, 7], 1.0);
+    let b = rng.randn(&[7], 1.0);
+    let xv = Variable::from_array(x.clone(), false);
+    let wv = Variable::from_array(w.clone(), false);
+    let bv = Variable::from_array(b.clone(), false);
+    let tape_y = F::affine(&xv, &wv, Some(&bv)).data();
+    let net = NetworkDef {
+        name: "fc".into(),
+        inputs: vec![TensorDef { name: "x".into(), dims: vec![4, 20] }],
+        outputs: vec!["y".into()],
+        layers: vec![Layer {
+            name: "fc".into(),
+            op: Op::Affine,
+            inputs: vec!["x".into()],
+            params: vec!["W".into(), "b".into()],
+            outputs: vec!["y".into()],
+        }],
+    };
+    let mut params = HashMap::new();
+    params.insert("W".to_string(), w);
+    params.insert("b".to_string(), b);
+    let plan = CompiledNet::compile(&net, &params).unwrap();
+    let out = plan.execute_positional(&[x]).unwrap();
+    assert_eq!(out[0].data(), tape_y.data(), "plan affine fast path != tape");
+}
+
+#[test]
+fn plan_rejects_degenerate_conv_geometry_cleanly() {
+    // kernel bigger than the padded input must be an error, not a panic
+    let g = Conv2dGeom { kernel: (9, 9), stride: (1, 1), pad: (0, 0), dilation: (1, 1) };
+    let net = conv_net(&g, &[1, 3, 4, 4]);
+    let mut params = HashMap::new();
+    params.insert("W".to_string(), NdArray::zeros(&[2, 3, 9, 9]));
+    params.insert("b".to_string(), NdArray::zeros(&[2]));
+    let plan = CompiledNet::compile(&net, &params).unwrap();
+    let err = plan.execute_positional(&[NdArray::zeros(&[1, 3, 4, 4])]).unwrap_err();
+    assert!(err.contains("layer 'conv'"), "{err}");
+    assert!(err.contains("kernel"), "{err}");
+}
+
+#[test]
+fn thread_env_is_respected() {
+    // NNL_THREADS=1 in CI must force a serial pool; otherwise ≥ 1
+    let n = parallel::num_threads();
+    let declared = std::env::var("NNL_THREADS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&t| t >= 1);
+    match declared {
+        Some(want) => assert_eq!(n, want),
+        None => assert!(n >= 1),
+    }
+}
