@@ -1,0 +1,14 @@
+//! `cargo bench --bench quant_inference` — the int8 quantization
+//! suite: fp32-vs-int8 GEMM throughput at equal thread counts, zoo
+//! top-1 agreement, NNB1-vs-NNB2 artifact bytes, and per-request
+//! serving throughput. Same harness as `nnl bench-quant`; writes
+//! `BENCH_quant.json`.
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let report = nnl::bench_quant::run(quick);
+    print!("{}", report.text);
+    let out = std::path::PathBuf::from("BENCH_quant.json");
+    nnl::bench_quant::write_json(&out, &report.json).expect("writing bench JSON");
+    println!("wrote {}", out.display());
+}

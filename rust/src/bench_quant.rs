@@ -1,0 +1,200 @@
+//! Quantization benchmark harness — shared by `nnl bench-quant` and
+//! `benches/quant_inference.rs`, emitting `BENCH_quant.json`.
+//!
+//! Measures the int8 subsystem's acceptance numbers: fp32-vs-int8 GEMM
+//! throughput at equal thread counts (the int8 side runs exactly as
+//! serving does — weights prepacked at load, activations quantized per
+//! call), per-model fp32-vs-int8 top-1 agreement, NNB1-vs-NNB2
+//! artifact bytes, and per-request serving throughput on both plans.
+
+use crate::converters::nnb;
+use crate::models::zoo;
+use crate::nnp::plan::{CompiledNet, InferencePlan};
+use crate::nnp::NetworkDef;
+use crate::quant::{self, referenced_params, QTensor, QuantConfig};
+use crate::tensor::kernels::int8::{self, ActQuant, QEpilogue, QMatA, QMatB};
+use crate::tensor::{ops, parallel, NdArray, Rng};
+use crate::utils::bench::{bench, table, Measurement};
+use crate::utils::json::Json;
+
+/// Everything one run produces: the human table and the JSON payload.
+pub struct QuantBenchReport {
+    pub text: String,
+    pub json: Json,
+}
+
+fn gflops(flops: f64, m: &Measurement) -> f64 {
+    flops / m.mean_secs / 1e9
+}
+
+/// Batch-1 random positional inputs for `net` — shared by the bench,
+/// `nnl quantize`'s calibration, and the parity tests so input
+/// synthesis cannot drift between them.
+pub fn random_inputs(net: &NetworkDef, n: usize, rng: &mut Rng) -> Vec<Vec<NdArray>> {
+    (0..n)
+        .map(|_| {
+            net.inputs
+                .iter()
+                .map(|t| {
+                    let mut d = t.dims.clone();
+                    if !d.is_empty() {
+                        d[0] = 1;
+                    }
+                    rng.rand(&d, -1.0, 1.0)
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// Run the suite. `quick` shrinks sizes/iterations for CI smoke use.
+pub fn run(quick: bool) -> QuantBenchReport {
+    let mut rows: Vec<Measurement> = Vec::new();
+    let mut rng = Rng::new(13);
+    let nt = parallel::num_threads();
+
+    // --- GEMM: f32 tiled (per-call B pack, as serving runs it) vs
+    //     int8 (B prepacked at load, A quantized per call)
+    let mm = if quick { 128 } else { 256 };
+    let iters = if quick { 3 } else { 10 };
+    let a = rng.rand(&[mm, mm], -1.0, 1.0);
+    let b = rng.randn(&[mm, mm], 0.5);
+    let flops = 2.0 * (mm as f64).powi(3);
+    let f32_mt = bench(&format!("matmul f32 tiled, {nt} threads {mm}^3"), 1, iters, || {
+        std::hint::black_box(ops::matmul(&a, &b));
+    });
+    let f32_1t = bench(&format!("matmul f32 tiled, 1 thread {mm}^3"), 1, iters, || {
+        parallel::with_thread_limit(1, || std::hint::black_box(ops::matmul(&a, &b)));
+    });
+    let act = ActQuant::from_range(-1.0, 1.0);
+    let qt = QTensor::quantize(&b, 1);
+    let wq = QMatB::from_i8_kn(&qt.data, &qt.scales, mm, mm);
+    let combined: Vec<f32> = wq.scales().iter().map(|s| s * act.scale).collect();
+    let int8_call = || {
+        let mut xq = Vec::new();
+        int8::quantize_slice(&act, a.data(), &mut xq);
+        let mut out = vec![0.0f32; mm * mm];
+        int8::qgemm(
+            &mut out,
+            &QMatA::Dense { d: &xq, ld: mm },
+            act.zero_point,
+            &wq,
+            mm,
+            &QEpilogue { scales: &combined, bias: None, relu: false },
+        );
+        std::hint::black_box(&out);
+    };
+    let int8_mt = bench(&format!("matmul int8, {nt} threads {mm}^3"), 1, iters, int8_call);
+    let int8_1t = bench(&format!("matmul int8, 1 thread {mm}^3"), 1, iters, || {
+        parallel::with_thread_limit(1, int8_call);
+    });
+    rows.push(f32_mt.clone());
+    rows.push(int8_mt.clone());
+    rows.push(f32_1t.clone());
+    rows.push(int8_1t.clone());
+
+    // --- zoo models: agreement, artifact bytes, per-request throughput
+    let mut model_names = vec!["mlp", "lenet"];
+    if !quick {
+        model_names.push("resnet18");
+    }
+    let n_eval = if quick { 64 } else { 256 };
+    let mut model_rows: Vec<Json> = Vec::new();
+    let mut all_ratios_ok = true;
+    for name in model_names {
+        let (net, params) = zoo::export_eval(name, 11);
+        let calib = random_inputs(&net, 16, &mut rng);
+        // explicit pipeline (not quantize_net): agreement below must be
+        // measured against the very plan calibration ran on
+        let plan = CompiledNet::compile(&net, &params).expect("zoo model compiles");
+        let ranges = quant::calibrate(&plan, &calib, &QuantConfig::default())
+            .expect("zoo model calibrates");
+        let model = quant::quantize_model(&net, &params, &ranges).expect("zoo model quantizes");
+        let qnet = quant::QuantizedNet::compile(&model).expect("quantized plan compiles");
+        let evals = random_inputs(&net, n_eval, &mut rng);
+        let agree = evals
+            .iter()
+            .filter(|s| {
+                let f = plan.execute_positional(s.as_slice()).expect("fp32 run");
+                let q = qnet.execute_positional(s.as_slice()).expect("int8 run");
+                f[0].argmax_flat() == q[0].argmax_flat()
+            })
+            .count();
+        let agreement = agree as f64 / n_eval as f64;
+        let v1_bytes = nnb::to_nnb(&net, &referenced_params(&net, &params)).len();
+        let v2_bytes = nnb::to_nnb2(&model).len();
+        let ratio = v1_bytes as f64 / v2_bytes as f64;
+        all_ratios_ok &= ratio >= 3.0;
+        let f32_m = bench(&format!("{name} fp32 x{n_eval} requests"), 1, 3, || {
+            for s in &evals {
+                plan.execute_positional(s).expect("fp32 serve");
+            }
+        });
+        let int8_m = bench(&format!("{name} int8 x{n_eval} requests"), 1, 3, || {
+            for s in &evals {
+                qnet.execute_positional(s).expect("int8 serve");
+            }
+        });
+        let f32_rps = n_eval as f64 / f32_m.mean_secs;
+        let int8_rps = n_eval as f64 / int8_m.mean_secs;
+        rows.push(f32_m);
+        rows.push(int8_m);
+        model_rows.push(Json::obj(vec![
+            ("name", Json::str(name)),
+            ("quantized_layers", Json::num(qnet.n_quantized() as f64)),
+            ("top1_agreement", Json::num(agreement)),
+            ("nnb1_bytes", Json::num(v1_bytes as f64)),
+            ("nnb2_bytes", Json::num(v2_bytes as f64)),
+            ("size_ratio", Json::num(ratio)),
+            ("fp32_rps", Json::num(f32_rps)),
+            ("int8_rps", Json::num(int8_rps)),
+        ]));
+    }
+
+    let json = Json::obj(vec![
+        ("nnl_threads", Json::num(nt as f64)),
+        (
+            "gemm",
+            Json::obj(vec![
+                ("size", Json::num(mm as f64)),
+                ("f32_gflops", Json::num(gflops(flops, &f32_mt))),
+                ("f32_1thread_gflops", Json::num(gflops(flops, &f32_1t))),
+                ("int8_gops", Json::num(gflops(flops, &int8_mt))),
+                ("int8_1thread_gops", Json::num(gflops(flops, &int8_1t))),
+                (
+                    "speedup_int8_vs_f32",
+                    Json::num(f32_mt.mean_secs / int8_mt.mean_secs),
+                ),
+                (
+                    "speedup_int8_vs_f32_1thread",
+                    Json::num(f32_1t.mean_secs / int8_1t.mean_secs),
+                ),
+            ]),
+        ),
+        ("models", Json::Arr(model_rows)),
+        ("nnb2_smaller", Json::Bool(all_ratios_ok)),
+    ]);
+
+    let mut text = table(
+        &format!("Int8 quantized inference vs fp32 (NNL_THREADS = {nt})"),
+        &rows,
+    );
+    text.push_str(&format!(
+        "GEMM {mm}^3 x{nt} threads: f32 {:.2} GF/s | int8 {:.2} GOP/s \
+         => {:.2}x; x1 thread: f32 {:.2} | int8 {:.2} => {:.2}x\n\
+         NNB2 artifacts >=3x smaller than NNB1 across models: {}\n",
+        gflops(flops, &f32_mt),
+        gflops(flops, &int8_mt),
+        f32_mt.mean_secs / int8_mt.mean_secs,
+        gflops(flops, &f32_1t),
+        gflops(flops, &int8_1t),
+        f32_1t.mean_secs / int8_1t.mean_secs,
+        all_ratios_ok,
+    ));
+    QuantBenchReport { text, json }
+}
+
+/// Write the JSON payload where the acceptance tooling expects it.
+pub fn write_json(path: &std::path::Path, json: &Json) -> std::io::Result<()> {
+    std::fs::write(path, json.to_string_pretty())
+}

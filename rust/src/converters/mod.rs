@@ -3,7 +3,9 @@
 //!
 //! - [`onnx_lite`] — ONNX subset, bidirectional (`NNP ⇄ ONNX`);
 //! - [`nnb`] — NNB flat binary for the C-runtime analogue (`NNP → NNB`),
-//!   with an embedded-style interpreter proving the format executes;
+//!   in two versions — v1 (f32) and NNB2 (int8 weights + scales +
+//!   calibration, see [`crate::quant`]) — executed through
+//!   [`nnb::NnbEngine`] on the compiled-plan fast path;
 //! - [`frozen`] — frozen-graph single file, params inlined as constants
 //!   (`NNP → TF-frozen-graph` analogue), bidirectional;
 //! - [`rs_source`] — standalone Rust source generation

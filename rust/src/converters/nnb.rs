@@ -1,23 +1,40 @@
 //! NNP → NNB: the flat binary format for the C-runtime analogue
 //! ("NNP to NNB (Binary format for NNabla C Runtime)", §3).
 //!
-//! Layout (all little-endian):
+//! Two wire versions share one structural encoding (string table +
+//! inputs + outputs + layer records; every tensor reference is an
+//! index into the string table — the fixed-width, pointer-free
+//! encoding an embedded C runtime wants):
+//!
 //! ```text
-//! magic "NNB1" | u32 n_strings | strings (u32 len + bytes)*
-//! | u32 n_inputs  | (u32 name_idx, u32 rank, u64 dims*)*
-//! | u32 n_outputs | u32 name_idx*
-//! | u32 n_layers  | layer records
-//! | param blob (params.rs format)
+//! v1  magic "NNB1" | structure | param blob (params.rs format, f32)
+//! v2  magic "NNB2" | structure
+//!     | calib:   u32 n | (u32 name_idx, f32 lo, f32 hi)*
+//!     | qparams: u32 n | (u32 name_idx, u8 kind, ...)*
+//!         kind 0 (f32):  u32 rank, u64 dims*, f32 data
+//!         kind 1 (i8):   u8 channel_axis, u32 rank, u64 dims*,
+//!                        u32 n_scales, f32 scales*, i8 data
 //! ```
-//! Every tensor reference is an index into the string table — the
-//! fixed-width, pointer-free encoding an embedded C runtime wants.
-//! [`run_nnb`] executes the format directly, standing in for the C
-//! runtime itself.
+//!
+//! NNB2 carries int8 weight blobs plus per-channel scales and the
+//! activation calibration table — the ~4×-smaller artifact of the
+//! quantized deployment path (`crate::quant`). v1 images stay fully
+//! readable.
+//!
+//! Execution goes through [`NnbEngine`]: decode once, compile once
+//! (f32 images into a [`CompiledNet`], v2 images into a
+//! [`QuantizedNet`]), execute many — the embedded-runtime analogue
+//! rides the same fast path as the serving stack, not the
+//! per-call interpreter. Both decoders are hardened against truncated
+//! or bit-flipped images: every length is bounds-checked before any
+//! allocation, so malformed bytes fail with a clean `Err`.
 
 use std::collections::HashMap;
 
 use crate::nnp::ir::{Layer, NetworkDef, Op, TensorDef};
-use crate::nnp::{interpreter, params};
+use crate::nnp::params;
+use crate::nnp::plan::{CompiledNet, InferencePlan};
+use crate::quant::{ActRange, CalibTable, QParam, QTensor, QuantizedModel, QuantizedNet};
 use crate::tensor::NdArray;
 use crate::utils::json::Json;
 
@@ -42,47 +59,60 @@ impl StringTable {
     }
 }
 
-/// Encode a network + parameters into NNB bytes.
-pub fn to_nnb(net: &NetworkDef, param_list: &[(String, NdArray)]) -> Vec<u8> {
-    let mut st = StringTable::new();
-    // intern everything first for a stable table
-    let mut layer_recs: Vec<(u32, u32, String, Vec<u32>, Vec<u32>, Vec<u32>)> = Vec::new();
-    for l in &net.layers {
-        let name = st.intern(&l.name);
-        let op = st.intern(l.op.name());
-        let attrs = l.op.attrs_json().to_string();
-        let ins: Vec<u32> = l.inputs.iter().map(|s| st.intern(s)).collect();
-        let ps: Vec<u32> = l.params.iter().map(|s| st.intern(s)).collect();
-        let outs: Vec<u32> = l.outputs.iter().map(|s| st.intern(s)).collect();
-        layer_recs.push((name, op, attrs, ins, ps, outs));
-    }
-    let input_recs: Vec<(u32, Vec<usize>)> =
-        net.inputs.iter().map(|t| (st.intern(&t.name), t.dims.clone())).collect();
-    let output_recs: Vec<u32> = net.outputs.iter().map(|o| st.intern(o)).collect();
-    let net_name = st.intern(&net.name);
+// --------------------------------------------------------------- encoding
 
-    let mut out = Vec::new();
-    out.extend_from_slice(b"NNB1");
+/// The interned structural section, ready to serialize.
+struct StructRecs {
+    net_name: u32,
+    inputs: Vec<(u32, Vec<usize>)>,
+    outputs: Vec<u32>,
+    /// (name, op, attrs_json, inputs, params, outputs)
+    layers: Vec<(u32, u32, String, Vec<u32>, Vec<u32>, Vec<u32>)>,
+}
+
+fn intern_structure(st: &mut StringTable, net: &NetworkDef) -> StructRecs {
+    let layers = net
+        .layers
+        .iter()
+        .map(|l| {
+            let name = st.intern(&l.name);
+            let op = st.intern(l.op.name());
+            let attrs = l.op.attrs_json().to_string();
+            let ins: Vec<u32> = l.inputs.iter().map(|s| st.intern(s)).collect();
+            let ps: Vec<u32> = l.params.iter().map(|s| st.intern(s)).collect();
+            let outs: Vec<u32> = l.outputs.iter().map(|s| st.intern(s)).collect();
+            (name, op, attrs, ins, ps, outs)
+        })
+        .collect();
+    let inputs = net.inputs.iter().map(|t| (st.intern(&t.name), t.dims.clone())).collect();
+    let outputs = net.outputs.iter().map(|o| st.intern(o)).collect();
+    let net_name = st.intern(&net.name);
+    StructRecs { net_name, inputs, outputs, layers }
+}
+
+/// Serialize the string table + structural records (identical between
+/// v1 and v2). Call only after *all* interning is done.
+fn write_structure(out: &mut Vec<u8>, st: &StringTable, recs: &StructRecs) {
     out.extend_from_slice(&(st.strings.len() as u32).to_le_bytes());
     for s in &st.strings {
         out.extend_from_slice(&(s.len() as u32).to_le_bytes());
         out.extend_from_slice(s.as_bytes());
     }
-    out.extend_from_slice(&net_name.to_le_bytes());
-    out.extend_from_slice(&(input_recs.len() as u32).to_le_bytes());
-    for (n, dims) in &input_recs {
+    out.extend_from_slice(&recs.net_name.to_le_bytes());
+    out.extend_from_slice(&(recs.inputs.len() as u32).to_le_bytes());
+    for (n, dims) in &recs.inputs {
         out.extend_from_slice(&n.to_le_bytes());
         out.extend_from_slice(&(dims.len() as u32).to_le_bytes());
         for &d in dims {
             out.extend_from_slice(&(d as u64).to_le_bytes());
         }
     }
-    out.extend_from_slice(&(output_recs.len() as u32).to_le_bytes());
-    for o in &output_recs {
+    out.extend_from_slice(&(recs.outputs.len() as u32).to_le_bytes());
+    for o in &recs.outputs {
         out.extend_from_slice(&o.to_le_bytes());
     }
-    out.extend_from_slice(&(layer_recs.len() as u32).to_le_bytes());
-    for (name, op, attrs, ins, ps, outs) in &layer_recs {
+    out.extend_from_slice(&(recs.layers.len() as u32).to_le_bytes());
+    for (name, op, attrs, ins, ps, outs) in &recs.layers {
         out.extend_from_slice(&name.to_le_bytes());
         out.extend_from_slice(&op.to_le_bytes());
         out.extend_from_slice(&(attrs.len() as u32).to_le_bytes());
@@ -94,94 +124,308 @@ pub fn to_nnb(net: &NetworkDef, param_list: &[(String, NdArray)]) -> Vec<u8> {
             }
         }
     }
+}
+
+/// Encode a network + f32 parameters into NNB (v1) bytes.
+pub fn to_nnb(net: &NetworkDef, param_list: &[(String, NdArray)]) -> Vec<u8> {
+    let mut st = StringTable::new();
+    let recs = intern_structure(&mut st, net);
+    let mut out = Vec::new();
+    out.extend_from_slice(b"NNB1");
+    write_structure(&mut out, &st, &recs);
     out.extend_from_slice(&params::save_params(param_list));
     out
 }
 
-/// Decode NNB bytes back into a network + parameters.
-pub fn from_nnb(bytes: &[u8]) -> Result<(NetworkDef, Vec<(String, NdArray)>), String> {
-    if bytes.len() < 8 || &bytes[0..4] != b"NNB1" {
-        return Err("not an NNB file".into());
+/// Encode a quantized model into NNB2 bytes: structure + calibration
+/// table + mixed f32/i8 parameter blobs.
+pub fn to_nnb2(model: &QuantizedModel) -> Vec<u8> {
+    let mut st = StringTable::new();
+    let recs = intern_structure(&mut st, &model.net);
+    let calib: Vec<(u32, ActRange)> = model
+        .calib
+        .ranges
+        .iter()
+        .map(|(name, r)| (st.intern(name), *r))
+        .collect();
+    let pnames: Vec<u32> = model.params.iter().map(|(n, _)| st.intern(n)).collect();
+
+    let mut out = Vec::new();
+    out.extend_from_slice(b"NNB2");
+    write_structure(&mut out, &st, &recs);
+    out.extend_from_slice(&(calib.len() as u32).to_le_bytes());
+    for (idx, r) in &calib {
+        out.extend_from_slice(&idx.to_le_bytes());
+        out.extend_from_slice(&r.lo.to_le_bytes());
+        out.extend_from_slice(&r.hi.to_le_bytes());
     }
-    let mut pos = 4usize;
-    let take = |pos: &mut usize, n: usize| -> Result<&[u8], String> {
-        if *pos + n > bytes.len() {
-            return Err("truncated NNB".into());
+    out.extend_from_slice(&(model.params.len() as u32).to_le_bytes());
+    for (idx, (_, p)) in pnames.iter().zip(&model.params) {
+        out.extend_from_slice(&idx.to_le_bytes());
+        match p {
+            QParam::Float(a) => {
+                out.push(0u8);
+                out.extend_from_slice(&(a.rank() as u32).to_le_bytes());
+                for &d in a.dims() {
+                    out.extend_from_slice(&(d as u64).to_le_bytes());
+                }
+                for &v in a.data() {
+                    out.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+            QParam::Int8(q) => {
+                out.push(1u8);
+                out.push(q.channel_axis as u8);
+                out.extend_from_slice(&(q.dims.len() as u32).to_le_bytes());
+                for &d in &q.dims {
+                    out.extend_from_slice(&(d as u64).to_le_bytes());
+                }
+                out.extend_from_slice(&(q.scales.len() as u32).to_le_bytes());
+                for &s in &q.scales {
+                    out.extend_from_slice(&s.to_le_bytes());
+                }
+                out.extend(q.data.iter().map(|&v| v as u8));
+            }
         }
-        let s = &bytes[*pos..*pos + n];
-        *pos += n;
-        Ok(s)
-    };
-    let u32_at = |pos: &mut usize| -> Result<u32, String> {
-        Ok(u32::from_le_bytes(take(pos, 4)?.try_into().unwrap()))
-    };
-    let n_strings = u32_at(&mut pos)? as usize;
+    }
+    out
+}
+
+// --------------------------------------------------------------- decoding
+
+fn take<'a>(bytes: &'a [u8], pos: &mut usize, n: usize) -> Result<&'a [u8], String> {
+    if n > bytes.len() - *pos {
+        return Err("truncated NNB".into());
+    }
+    let s = &bytes[*pos..*pos + n];
+    *pos += n;
+    Ok(s)
+}
+
+fn read_u32(bytes: &[u8], pos: &mut usize) -> Result<u32, String> {
+    Ok(u32::from_le_bytes(take(bytes, pos, 4)?.try_into().unwrap()))
+}
+
+fn read_u64(bytes: &[u8], pos: &mut usize) -> Result<u64, String> {
+    Ok(u64::from_le_bytes(take(bytes, pos, 8)?.try_into().unwrap()))
+}
+
+fn read_f32(bytes: &[u8], pos: &mut usize) -> Result<f32, String> {
+    Ok(f32::from_le_bytes(take(bytes, pos, 4)?.try_into().unwrap()))
+}
+
+/// Read `rank` u64 dims and their (overflow-checked) element product.
+fn read_dims(bytes: &[u8], pos: &mut usize, rank: usize) -> Result<(Vec<usize>, usize), String> {
+    let mut dims = Vec::new();
+    for _ in 0..rank {
+        dims.push(read_u64(bytes, pos)? as usize);
+    }
+    let n = dims
+        .iter()
+        .try_fold(1usize, |a, &d| a.checked_mul(d))
+        .ok_or("NNB tensor size overflows")?;
+    Ok((dims, n))
+}
+
+/// Decode the structural section shared by v1/v2 (the magic has
+/// already been consumed). Returns the network and the string table
+/// (v2's trailing sections reference it).
+fn decode_structure(
+    bytes: &[u8],
+    pos: &mut usize,
+) -> Result<(NetworkDef, Vec<String>), String> {
+    let n_strings = read_u32(bytes, pos)? as usize;
+    // every string costs at least its 4-byte length prefix: reject
+    // implausible counts before allocating anything
+    if n_strings > bytes.len() / 4 {
+        return Err("truncated NNB".into());
+    }
     let mut strings = Vec::with_capacity(n_strings);
     for _ in 0..n_strings {
-        let len = u32_at(&mut pos)? as usize;
+        let len = read_u32(bytes, pos)? as usize;
         strings.push(
-            String::from_utf8(take(&mut pos, len)?.to_vec()).map_err(|_| "bad string")?,
+            String::from_utf8(take(bytes, pos, len)?.to_vec()).map_err(|_| "bad string")?,
         );
     }
     let s = |i: u32| -> Result<String, String> {
         strings.get(i as usize).cloned().ok_or("string index out of range".into())
     };
-    let net_name = s(u32_at(&mut pos)?)?;
-    let n_inputs = u32_at(&mut pos)? as usize;
-    let mut inputs = Vec::with_capacity(n_inputs);
+    let net_name = s(read_u32(bytes, pos)?)?;
+    let n_inputs = read_u32(bytes, pos)? as usize;
+    let mut inputs = Vec::new();
     for _ in 0..n_inputs {
-        let name = s(u32_at(&mut pos)?)?;
-        let rank = u32_at(&mut pos)? as usize;
-        let mut dims = Vec::with_capacity(rank);
-        for _ in 0..rank {
-            dims.push(u64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap()) as usize);
-        }
+        let name = s(read_u32(bytes, pos)?)?;
+        let rank = read_u32(bytes, pos)? as usize;
+        let (dims, _) = read_dims(bytes, pos, rank)?;
         inputs.push(TensorDef { name, dims });
     }
-    let n_outputs = u32_at(&mut pos)? as usize;
-    let mut outputs = Vec::with_capacity(n_outputs);
+    let n_outputs = read_u32(bytes, pos)? as usize;
+    let mut outputs = Vec::new();
     for _ in 0..n_outputs {
-        outputs.push(s(u32_at(&mut pos)?)?);
+        outputs.push(s(read_u32(bytes, pos)?)?);
     }
-    let n_layers = u32_at(&mut pos)? as usize;
-    let mut layers = Vec::with_capacity(n_layers);
+    let n_layers = read_u32(bytes, pos)? as usize;
+    let mut layers = Vec::new();
     for _ in 0..n_layers {
-        let name = s(u32_at(&mut pos)?)?;
-        let opname = s(u32_at(&mut pos)?)?;
-        let alen = u32_at(&mut pos)? as usize;
+        let name = s(read_u32(bytes, pos)?)?;
+        let opname = s(read_u32(bytes, pos)?)?;
+        let alen = read_u32(bytes, pos)? as usize;
         let attrs_str =
-            String::from_utf8(take(&mut pos, alen)?.to_vec()).map_err(|_| "bad attrs")?;
+            String::from_utf8(take(bytes, pos, alen)?.to_vec()).map_err(|_| "bad attrs")?;
         let attrs = Json::parse(&attrs_str)?;
         let op = Op::from_name_attrs(&opname, &attrs)
             .ok_or(format!("unsupported function '{opname}' in NNB"))?;
         let mut lists: [Vec<String>; 3] = [Vec::new(), Vec::new(), Vec::new()];
         for list in &mut lists {
-            let n = u32_at(&mut pos)? as usize;
+            let n = read_u32(bytes, pos)? as usize;
             for _ in 0..n {
-                list.push(s(u32_at(&mut pos)?)?);
+                list.push(s(read_u32(bytes, pos)?)?);
             }
         }
         let [ins, ps, outs] = lists;
         layers.push(Layer { name, op, inputs: ins, params: ps, outputs: outs });
     }
-    let param_list = params::load_params(&bytes[pos..])?;
-    Ok((NetworkDef { name: net_name, inputs, outputs, layers }, param_list))
+    Ok((NetworkDef { name: net_name, inputs, outputs, layers }, strings))
 }
 
-/// Execute an NNB image directly — the embedded C-runtime analogue.
+/// Decode NNB (v1) bytes back into a network + f32 parameters.
+pub fn from_nnb(bytes: &[u8]) -> Result<(NetworkDef, Vec<(String, NdArray)>), String> {
+    if bytes.len() < 8 || &bytes[0..4] != b"NNB1" {
+        return Err("not an NNB file".into());
+    }
+    let mut pos = 4usize;
+    let (net, _) = decode_structure(bytes, &mut pos)?;
+    let param_list = params::load_params(&bytes[pos..])?;
+    Ok((net, param_list))
+}
+
+/// Decode NNB2 bytes back into a quantized model.
+pub fn from_nnb2(bytes: &[u8]) -> Result<QuantizedModel, String> {
+    if bytes.len() < 8 || &bytes[0..4] != b"NNB2" {
+        return Err("not an NNB2 file".into());
+    }
+    let mut pos = 4usize;
+    let (net, strings) = decode_structure(bytes, &mut pos)?;
+    let s = |i: u32| -> Result<String, String> {
+        strings.get(i as usize).cloned().ok_or("string index out of range".into())
+    };
+    let n_calib = read_u32(bytes, &mut pos)? as usize;
+    let mut ranges = Vec::new();
+    for _ in 0..n_calib {
+        let name = s(read_u32(bytes, &mut pos)?)?;
+        let lo = read_f32(bytes, &mut pos)?;
+        let hi = read_f32(bytes, &mut pos)?;
+        ranges.push((name, ActRange { lo, hi }));
+    }
+    let n_params = read_u32(bytes, &mut pos)? as usize;
+    let mut qparams = Vec::new();
+    for _ in 0..n_params {
+        let name = s(read_u32(bytes, &mut pos)?)?;
+        let kind = take(bytes, &mut pos, 1)?[0];
+        let p = match kind {
+            0 => {
+                let rank = read_u32(bytes, &mut pos)? as usize;
+                let (dims, n) = read_dims(bytes, &mut pos, rank)?;
+                let byte_len = n.checked_mul(4).ok_or("NNB tensor size overflows")?;
+                let raw = take(bytes, &mut pos, byte_len)?;
+                let data: Vec<f32> = raw
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                    .collect();
+                QParam::Float(NdArray::from_vec(&dims, data))
+            }
+            1 => {
+                let channel_axis = take(bytes, &mut pos, 1)?[0] as usize;
+                let rank = read_u32(bytes, &mut pos)? as usize;
+                let (dims, n) = read_dims(bytes, &mut pos, rank)?;
+                if channel_axis >= dims.len() {
+                    return Err("NNB2 channel axis out of range".into());
+                }
+                let n_scales = read_u32(bytes, &mut pos)? as usize;
+                if n_scales != dims[channel_axis] {
+                    return Err("NNB2 scale count does not match channel dim".into());
+                }
+                let scale_bytes =
+                    n_scales.checked_mul(4).ok_or("NNB tensor size overflows")?;
+                let raw = take(bytes, &mut pos, scale_bytes)?;
+                let scales: Vec<f32> = raw
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                    .collect();
+                let data: Vec<i8> =
+                    take(bytes, &mut pos, n)?.iter().map(|&b| b as i8).collect();
+                QParam::Int8(QTensor { dims, channel_axis, data, scales })
+            }
+            k => return Err(format!("unknown NNB2 parameter kind {k}")),
+        };
+        qparams.push((name, p));
+    }
+    Ok(QuantizedModel { net, params: qparams, calib: CalibTable { ranges } })
+}
+
+/// A decoded NNB image of either version.
+pub enum NnbImage {
+    V1 { net: NetworkDef, params: Vec<(String, NdArray)> },
+    V2(QuantizedModel),
+}
+
+/// Version-dispatching decoder.
+pub fn load_nnb(bytes: &[u8]) -> Result<NnbImage, String> {
+    if bytes.len() >= 4 && &bytes[0..4] == b"NNB2" {
+        return Ok(NnbImage::V2(from_nnb2(bytes)?));
+    }
+    let (net, params) = from_nnb(bytes)?;
+    Ok(NnbImage::V1 { net, params })
+}
+
+/// A decoded-and-compiled NNB image: the embedded C-runtime analogue,
+/// now on the compiled-plan fast path. Decode + compile once
+/// ([`NnbEngine::load`]), execute many ([`NnbEngine::run`]).
+pub enum NnbEngine {
+    F32(CompiledNet),
+    Int8(QuantizedNet),
+}
+
+impl NnbEngine {
+    pub fn load(bytes: &[u8]) -> Result<NnbEngine, String> {
+        match load_nnb(bytes)? {
+            NnbImage::V1 { net, params } => {
+                let pm: HashMap<String, NdArray> = params.into_iter().collect();
+                Ok(NnbEngine::F32(CompiledNet::compile(&net, &pm)?))
+            }
+            NnbImage::V2(model) => Ok(NnbEngine::Int8(QuantizedNet::compile(&model)?)),
+        }
+    }
+
+    /// The serving-facing plan view.
+    pub fn plan(&self) -> &dyn InferencePlan {
+        match self {
+            NnbEngine::F32(p) => p,
+            NnbEngine::Int8(q) => q,
+        }
+    }
+
+    /// Execute on named inputs.
+    pub fn run(&self, inputs: &HashMap<String, NdArray>) -> Result<Vec<NdArray>, String> {
+        self.plan().execute_named(inputs)
+    }
+}
+
+/// Execute an NNB image directly (one-shot convenience): decode,
+/// compile, run — v1 through the f32 plan, v2 through the int8 plan.
 pub fn run_nnb(
     bytes: &[u8],
     inputs: &HashMap<String, NdArray>,
 ) -> Result<Vec<NdArray>, String> {
-    let (net, param_list) = from_nnb(bytes)?;
-    let pm: HashMap<String, NdArray> = param_list.into_iter().collect();
-    interpreter::run(&net, inputs, &pm)
+    NnbEngine::load(bytes)?.run(inputs)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::nnp::tests::sample_nnp;
+    use crate::quant::{quantize_net, QuantConfig};
+    use crate::tensor::Rng;
 
     #[test]
     fn nnb_roundtrip_structure_and_params() {
@@ -208,6 +452,22 @@ mod tests {
     }
 
     #[test]
+    fn nnb_engine_compiles_once_and_answers_repeatedly() {
+        let nnp = sample_nnp();
+        let bytes = to_nnb(&nnp.networks[0], &nnp.parameters);
+        let engine = NnbEngine::load(&bytes).unwrap();
+        assert_eq!(engine.plan().name(), "main");
+        for i in 0..3 {
+            let mut inputs = HashMap::new();
+            inputs
+                .insert("x".to_string(), NdArray::from_slice(&[1, 3], &[i as f32, 1., 0.]));
+            let got = engine.run(&inputs).unwrap();
+            let want = nnp.execute("main_executor", &inputs).unwrap();
+            assert_eq!(got[0].data(), want[0].data());
+        }
+    }
+
+    #[test]
     fn string_table_dedupes() {
         let nnp = sample_nnp();
         let bytes = to_nnb(&nnp.networks[0], &nnp.parameters);
@@ -220,8 +480,89 @@ mod tests {
     #[test]
     fn rejects_garbage() {
         assert!(from_nnb(b"NOPE").is_err());
+        assert!(from_nnb(b"NNB1").is_err()); // magic alone, no body
+        assert!(from_nnb2(b"NNB2").is_err());
+        assert!(load_nnb(b"NN").is_err());
         let nnp = sample_nnp();
         let bytes = to_nnb(&nnp.networks[0], &nnp.parameters);
         assert!(from_nnb(&bytes[..bytes.len() / 2]).is_err());
+    }
+
+    fn quantized_sample() -> (QuantizedModel, Vec<u8>, Vec<u8>) {
+        let nnp = sample_nnp();
+        let net = &nnp.networks[0];
+        let pm = nnp.param_map();
+        let mut rng = Rng::new(4);
+        let samples: Vec<Vec<NdArray>> =
+            (0..4).map(|_| vec![rng.rand(&[1, 3], -1.0, 1.0)]).collect();
+        let (model, _) = quantize_net(net, &pm, &samples, &QuantConfig::default()).unwrap();
+        let v1 = to_nnb(net, &nnp.parameters);
+        let v2 = to_nnb2(&model);
+        (model, v1, v2)
+    }
+
+    #[test]
+    fn nnb2_roundtrip_is_exact() {
+        let (model, _, v2) = quantized_sample();
+        let back = from_nnb2(&v2).unwrap();
+        assert_eq!(back, model);
+    }
+
+    #[test]
+    fn nnb2_executes_like_its_quantized_net() {
+        let (model, _, v2) = quantized_sample();
+        let engine = NnbEngine::load(&v2).unwrap();
+        let qnet = QuantizedNet::compile(&model).unwrap();
+        let mut inputs = HashMap::new();
+        inputs.insert("x".to_string(), NdArray::from_slice(&[1, 3], &[0.5, -0.25, 1.0]));
+        let got = engine.run(&inputs).unwrap();
+        let want = InferencePlan::execute_named(&qnet, &inputs).unwrap();
+        assert_eq!(got[0].data(), want[0].data());
+    }
+
+    #[test]
+    fn nnb2_is_smaller_than_nnb1() {
+        // a realistically-sized weight matrix (the sample net's 6
+        // weights would drown in the fixed calib/scale overhead); the
+        // ≥3x zoo-model claim is asserted in tests/quant_parity.rs
+        let net = NetworkDef {
+            name: "wide".into(),
+            inputs: vec![TensorDef { name: "x".into(), dims: vec![1, 64] }],
+            outputs: vec!["y".into()],
+            layers: vec![Layer {
+                name: "fc".into(),
+                op: Op::Affine,
+                inputs: vec!["x".into()],
+                params: vec!["fc/W".into(), "fc/b".into()],
+                outputs: vec!["y".into()],
+            }],
+        };
+        let mut rng = Rng::new(6);
+        let mut pm = HashMap::new();
+        pm.insert("fc/W".to_string(), rng.randn(&[64, 32], 1.0));
+        pm.insert("fc/b".to_string(), rng.randn(&[32], 0.1));
+        let samples: Vec<Vec<NdArray>> =
+            (0..2).map(|_| vec![rng.rand(&[1, 64], -1.0, 1.0)]).collect();
+        let (model, _) = quantize_net(&net, &pm, &samples, &QuantConfig::default()).unwrap();
+        let v1_params = vec![
+            ("fc/W".to_string(), pm["fc/W"].clone()),
+            ("fc/b".to_string(), pm["fc/b"].clone()),
+        ];
+        let v1 = to_nnb(&net, &v1_params);
+        let v2 = to_nnb2(&model);
+        assert!(
+            v2.len() * 3 <= v1.len(),
+            "NNB2 ({} B) not >=3x smaller than NNB1 ({} B)",
+            v2.len(),
+            v1.len()
+        );
+    }
+
+    #[test]
+    fn nnb2_rejects_truncation_anywhere() {
+        let (_, _, v2) = quantized_sample();
+        for cut in [4, 9, v2.len() / 3, v2.len() / 2, v2.len() - 1] {
+            assert!(from_nnb2(&v2[..cut]).is_err(), "cut at {cut} did not error");
+        }
     }
 }

@@ -67,6 +67,26 @@
 //! CLI: `nnl serve --in model.nnp` / `nnl bench-serve`; numbers in
 //! `benches/serve_throughput.rs`.
 //!
+//! ## The embedded path: int8 quantized inference (NNB2)
+//!
+//! The paper's compatibility story ends at NNP → NNB for the embedded
+//! C runtime, where compact artifacts are the whole point. [`quant`]
+//! closes that loop: calibrate activation ranges by running a
+//! `CompiledNet` over a sample set (min/max, optional percentile
+//! clipping), quantize Affine/Convolution weights to per-output-
+//! channel symmetric i8, and compile a [`quant::QuantizedNet`] whose
+//! dense layers run a register-tiled u8×i8→i32 GEMM
+//! ([`tensor::kernels::int8`]) with prepacked weight panels and a
+//! fused requantize + bias + ReLU epilogue — row-sharded over the same
+//! pool, exact integer accumulation, bit-identical at any thread
+//! count. Everything else falls back to the f32 registry dispatch.
+//! NNB2 artifacts carry the i8 blobs + scales + calibration table
+//! (~4× smaller; v1 stays readable), and both versions execute
+//! through [`converters::nnb::NnbEngine`] on the compiled fast path.
+//! [`serve::Server`] hosts either backend behind
+//! [`nnp::InferencePlan`]. CLI: `nnl quantize` / `nnl bench-quant`
+//! (→ `BENCH_quant.json`).
+//!
 //! ## Module map
 //!
 //! ## The compute floor: tiled, multi-threaded kernels
@@ -92,6 +112,7 @@
 //! |---|---|
 //! | [`tensor`] | `NdArray` storage (COW), dtypes, kernels, RNG |
 //! | [`tensor::kernels`] | tiled GEMM, fused conv/affine, scratch arena |
+//! | [`tensor::kernels::int8`] | int8 GEMM, fused requantize epilogue |
 //! | [`tensor::parallel`] | `NNL_THREADS` worker pool (bit-identical) |
 //! | [`graph`] | define-by-run tape: `Variable`, forward/backward |
 //! | [`functions`] | operator kernels recorded on the tape (`F::*`) |
@@ -102,11 +123,13 @@
 //! | [`comm`] | simulated data-parallel communicator (§3.2) |
 //! | [`trainer`] | dynamic / static / distributed training loops |
 //! | [`nnp`] | NNP format: IR, trace, archive, interpreter, **plan** |
+//! | [`quant`] | int8 calibration, `QuantizedNet`, NNB2 model |
 //! | [`serve`] | batched multi-threaded inference server |
-//! | [`converters`] | ONNX-lite, NNB, frozen graph, Rust source |
+//! | [`converters`] | ONNX-lite, NNB/NNB2, frozen graph, Rust source |
 //! | [`runtime`] | AOT HLO artifacts through PJRT (`pjrt` feature) |
 //! | [`console`] | headless Neural Network Console: trials, search |
 //! | [`bench_kernels`] | kernel bench harness (`BENCH_kernels.json`) |
+//! | [`bench_quant`] | quantization bench harness (`BENCH_quant.json`) |
 //! | [`data`] | synthetic datasets + loaders |
 //! | [`monitor`] | series/time monitors |
 //! | [`context`] | backend/precision context (Listing 2) |
@@ -133,6 +156,7 @@
 //! the migration note.
 
 pub mod bench_kernels;
+pub mod bench_quant;
 pub mod comm;
 pub mod console;
 pub mod context;
@@ -145,6 +169,7 @@ pub mod models;
 pub mod monitor;
 pub mod nnp;
 pub mod parametric;
+pub mod quant;
 pub mod runtime;
 pub mod serve;
 pub mod solvers;

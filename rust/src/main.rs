@@ -14,10 +14,11 @@ use nnl::context::Context;
 use nnl::converters::{frozen, nnb, onnx_lite, query, rs_source};
 use nnl::data::SyntheticImages;
 use nnl::models::zoo;
-use nnl::nnp::Nnp;
+use nnl::nnp::{CompiledNet, InferencePlan, Nnp};
+use nnl::quant::{self, QuantConfig};
 use nnl::runtime::Manifest;
 use nnl::serve::{ServeConfig, Server};
-use nnl::tensor::NdArray;
+use nnl::tensor::{NdArray, Rng};
 use nnl::trainer::{self, LossScalerKind, TrainConfig};
 
 const USAGE: &str = "\
@@ -29,16 +30,27 @@ USAGE:
   nnl train-static --artifact <name> [--steps N] [--lr F] [--half]
   nnl eval --model <name> [--steps N]
   nnl convert --in model.nnp --to onnx|nnb|frozen|rs --out FILE
+  nnl quantize --in model.nnp [--out model.nnb2] [--samples N]
+            [--percentile P] [--network NAME]
+            # post-training int8 quantization: calibrate on N synthetic
+            # samples, write an NNB2 artifact (int8 weights + scales),
+            # report size vs NNB1 and fp32-vs-int8 top-1 agreement
   nnl query --in model.nnp [--target onnx|nnb|frozen|rs_source]
-  nnl serve --in model.nnp [--workers N] [--max-batch B] [--max-wait-ms MS]
+  nnl serve --in model.nnp|model.nnb|model.nnb2 [--workers N]
+            [--max-batch B] [--max-wait-ms MS]
             # compile once, then serve stdin requests (one line of
-            # whitespace-separated floats per single-example request)
+            # whitespace-separated floats per single-example request);
+            # NNB2 artifacts serve on the int8 kernels
   nnl bench-serve [--in model.nnp | --model NAME] [--requests N]
             [--workers N] [--max-batch B] [--max-wait-ms MS]
             # compiled-vs-interpreted and batched-vs-unbatched throughput
   nnl bench-kernels [--quick] [--out FILE]
             # tiled GEMM GFLOP/s vs the naive loop, thread-scaling
             # curve, fused conv step time; writes BENCH_kernels.json
+  nnl bench-quant [--quick] [--out FILE]
+            # fp32 vs int8: GEMM GFLOP/s at equal thread counts, zoo
+            # top-1 agreement, NNB1-vs-NNB2 artifact bytes, serve
+            # throughput; writes BENCH_quant.json
   nnl footprint [--model <name>]
   nnl search [--generations N] [--population N]
   nnl trials --dir DIR
@@ -119,6 +131,7 @@ fn main() {
             let model = flags.get("model").cloned().unwrap_or_else(|| "resnet18".into());
             let model: &'static str = Box::leak(model.into_boxed_str());
             let cfg = train_config(&flags);
+            validate_train_flags(Some(model), &cfg);
             let workers: usize = get(&flags, "workers", 1);
             let data = if model == "lenet" {
                 SyntheticImages::new(10, 1, 28, 16, 1)
@@ -152,6 +165,7 @@ fn main() {
                 .cloned()
                 .unwrap_or_else(|| "resnet_mini_train_f32_b16".into());
             let cfg = train_config(&flags);
+            validate_train_flags(None, &cfg);
             let manifest = Manifest::load(&Manifest::default_dir())
                 .expect("artifacts missing — run `make artifacts`");
             let data = SyntheticImages::imagenet_mini(16);
@@ -169,6 +183,7 @@ fn main() {
             let model = flags.get("model").cloned().unwrap_or_else(|| "resnet18".into());
             let data = SyntheticImages::imagenet_mini(16);
             let cfg = TrainConfig { steps: get(&flags, "steps", 50), ..Default::default() };
+            validate_train_flags(Some(model.as_str()), &cfg);
             let report = trainer::train_dynamic(&model, &data, &cfg);
             println!("{model}: val error {:.3}", report.val_error);
         }
@@ -221,11 +236,9 @@ fn main() {
             }
         }
         "serve" => {
-            let input = PathBuf::from(flags.get("in").expect("--in model.nnp required"));
-            let nnp = Nnp::load(&input).expect("loading NNP");
-            let plan = Arc::new(
-                nnp.compile(flags.get("network").map(String::as_str)).expect("compiling plan"),
-            );
+            let input =
+                PathBuf::from(flags.get("in").expect("--in model.nnp|.nnb|.nnb2 required"));
+            let plan = load_plan(&input, flags.get("network").map(String::as_str));
             if plan.inputs().len() != 1 {
                 eprintln!(
                     "stdin serving supports single-input networks (this one declares {}); \
@@ -252,7 +265,7 @@ fn main() {
                 if plan.batch_invariant() { "on" } else { "off" },
             );
             eprintln!("enter {feat} whitespace-separated floats per request (EOF to stop):");
-            let server = Server::start(Arc::clone(&plan), cfg);
+            let server = Server::start_dyn(Arc::clone(&plan), cfg);
             let stdin = std::io::stdin();
             let mut line = String::new();
             // submit ahead and print replies in input order: a window of
@@ -323,6 +336,82 @@ fn main() {
             nnl::bench_kernels::write_json(&out, &report.json).expect("writing bench JSON");
             println!("wrote {}", out.display());
         }
+        "bench-quant" => {
+            let report = nnl::bench_quant::run(flags.contains_key("quick"));
+            print!("{}", report.text);
+            let out = PathBuf::from(
+                flags.get("out").cloned().unwrap_or_else(|| "BENCH_quant.json".into()),
+            );
+            nnl::bench_quant::write_json(&out, &report.json).expect("writing bench JSON");
+            println!("wrote {}", out.display());
+        }
+        "quantize" => {
+            let input = PathBuf::from(flags.get("in").expect("--in model.nnp required"));
+            let out = flags.get("out").cloned().unwrap_or_else(|| {
+                input.with_extension("nnb2").to_string_lossy().into_owned()
+            });
+            let nnp = Nnp::load(&input).unwrap_or_else(|e| {
+                eprintln!("loading NNP: {e}");
+                std::process::exit(1);
+            });
+            let net = match flags.get("network").map(String::as_str) {
+                Some(n) => nnp.network(n).unwrap_or_else(|| {
+                    eprintln!("no network '{n}' in {}", input.display());
+                    std::process::exit(1);
+                }),
+                None => nnp.networks.first().unwrap_or_else(|| {
+                    eprintln!("NNP holds no networks");
+                    std::process::exit(1);
+                }),
+            };
+            let pm = nnp.param_map();
+            // a typo'd percentile must not silently fall back to
+            // plain min/max calibration
+            let percentile = flags.get("percentile").map(|v| {
+                v.parse::<f32>().unwrap_or_else(|_| {
+                    eprintln!("--percentile expects a number in (0.5, 1], got '{v}'");
+                    std::process::exit(1);
+                })
+            });
+            let cfg = QuantConfig { percentile };
+            let n_samples: usize = get(&flags, "samples", 32);
+            let mut rng = Rng::new(get(&flags, "seed", 19));
+            let samples = nnl::bench_quant::random_inputs(net, n_samples.max(1), &mut rng);
+            // one compiled plan drives calibration AND the fp32 side of
+            // the agreement report below
+            let plan = die(CompiledNet::compile(net, &pm), "compiling fp32 plan");
+            let calib = die(quant::calibrate(&plan, &samples, &cfg), "calibration failed");
+            let model = die(quant::quantize_model(net, &pm, &calib), "quantization failed");
+            let qnet = die(quant::QuantizedNet::compile(&model), "quantized compile failed");
+            let v2 = nnb::to_nnb2(&model);
+            std::fs::write(&out, &v2).expect("writing NNB2");
+            // size the f32 counterpart over the same referenced params
+            // NNB2 carries, so the ratio measures quantization alone
+            let v1 = nnb::to_nnb(net, &quant::referenced_params(net, &pm));
+            let agree = samples
+                .iter()
+                .filter(|s| {
+                    let f = plan.execute_positional(s.as_slice()).expect("fp32 run");
+                    let q = qnet.execute_positional(s.as_slice()).expect("int8 run");
+                    f[0].argmax_flat() == q[0].argmax_flat()
+                })
+                .count();
+            println!(
+                "quantized '{}': {} of {} layers on int8 ({})",
+                plan.name(),
+                qnet.n_quantized(),
+                plan.n_steps(),
+                qnet.quantized_layers().join(", "),
+            );
+            println!(
+                "wrote {out}: {} B (NNB1 equivalent {} B, {:.2}x smaller); \
+                 top-1 agreement {agree}/{} on calibration samples",
+                v2.len(),
+                v1.len(),
+                v1.len() as f64 / v2.len() as f64,
+                samples.len(),
+            );
+        }
         "search" => {
             let data = SyntheticImages::new(10, 1, 8, 16, 1);
             let space = SearchSpace::default();
@@ -358,6 +447,56 @@ fn main() {
             print!("{USAGE}");
             std::process::exit(1);
         }
+    }
+}
+
+/// Unwrap a pipeline step or exit with a clean one-line message.
+fn die<T>(r: Result<T, String>, what: &str) -> T {
+    r.unwrap_or_else(|e| {
+        eprintln!("{what}: {e}");
+        std::process::exit(1);
+    })
+}
+
+/// Exit with a clean message on an unknown model or solver name —
+/// untrusted CLI config must never reach the panicking internals.
+fn validate_train_flags(model: Option<&str>, cfg: &TrainConfig) {
+    if let Some(m) = model {
+        if !zoo::has_model(m) {
+            eprintln!("unknown model '{m}' (available: {:?})", zoo::model_names());
+            std::process::exit(1);
+        }
+    }
+    if let Err(e) = trainer::try_make_solver(cfg) {
+        eprintln!("{e}");
+        std::process::exit(1);
+    }
+}
+
+/// Load a servable plan from an `.nnp` archive or a raw NNB/NNB2
+/// image (sniffed by magic, not extension): NNB2 artifacts come back
+/// as int8 [`nnl::quant::QuantizedNet`] plans, everything else as f32
+/// [`CompiledNet`] plans.
+fn load_plan(path: &Path, network: Option<&str>) -> Arc<dyn InferencePlan> {
+    use std::io::Read;
+    let mut magic = [0u8; 4];
+    let is_nnb = std::fs::File::open(path)
+        .and_then(|mut f| f.read_exact(&mut magic))
+        .is_ok()
+        && (&magic == b"NNB1" || &magic == b"NNB2");
+    if is_nnb {
+        let bytes = std::fs::read(path).expect("reading model file");
+        match nnb::NnbEngine::load(&bytes) {
+            Ok(nnb::NnbEngine::F32(p)) => Arc::new(p),
+            Ok(nnb::NnbEngine::Int8(q)) => Arc::new(q),
+            Err(e) => {
+                eprintln!("loading NNB image: {e}");
+                std::process::exit(1);
+            }
+        }
+    } else {
+        let nnp = Nnp::load(path).expect("loading NNP");
+        Arc::new(nnp.compile(network).expect("compiling plan"))
     }
 }
 

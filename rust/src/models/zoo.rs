@@ -206,9 +206,18 @@ pub fn model_names() -> Vec<&'static str> {
     ]
 }
 
-/// Build `name` on `g` from input `x`; returns logits.
-pub fn build_model(g: &mut Gb, name: &str, x: &T, classes: usize) -> T {
-    match name {
+/// Whether `name` is a known zoo model (cheap pre-validation for
+/// untrusted config — CLI flags, nntxt — before any graph building).
+pub fn has_model(name: &str) -> bool {
+    model_names().contains(&name)
+}
+
+/// Build `name` on `g` from input `x`; returns logits, or a clean
+/// error listing the zoo for an unknown name (untrusted-config entry;
+/// [`build_model`] is the panicking wrapper for callers that already
+/// validated).
+pub fn try_build_model(g: &mut Gb, name: &str, x: &T, classes: usize) -> Result<T, String> {
+    Ok(match name {
         "mlp" => mlp(g, x, classes),
         "lenet" => lenet(g, x, classes),
         "resnet18" => {
@@ -237,8 +246,20 @@ pub fn build_model(g: &mut Gb, name: &str, x: &T, classes: usize) -> T {
         "efficientnet_b1" => efficientnet(g, x, 1.0, 1.3, classes),
         "efficientnet_b2" => efficientnet(g, x, 1.15, 1.6, classes),
         "efficientnet_b3" => efficientnet(g, x, 1.3, 2.0, classes),
-        other => panic!("unknown model '{other}' (available: {:?})", model_names()),
-    }
+        other => {
+            return Err(format!(
+                "unknown model '{other}' (available: {:?})",
+                model_names()
+            ))
+        }
+    })
+}
+
+/// Build `name` on `g` from input `x`; returns logits. Panics on an
+/// unknown name — internal callers pass validated names; untrusted
+/// paths go through [`try_build_model`] / [`has_model`].
+pub fn build_model(g: &mut Gb, name: &str, x: &T, classes: usize) -> T {
+    try_build_model(g, name, x, classes).unwrap_or_else(|e| panic!("{e}"))
 }
 
 /// Input dims (without batch) for a zoo model.
@@ -362,5 +383,16 @@ mod tests {
         let mut g = Gb::new("x", true);
         let x = g.input("x", &[1, 3, 16, 16]);
         let _ = build_model(&mut g, "vgg999", &x, 10);
+    }
+
+    #[test]
+    fn unknown_model_errs_cleanly_on_the_try_path() {
+        let mut g = Gb::new("x", true);
+        let x = g.input("x", &[1, 3, 16, 16]);
+        let err = try_build_model(&mut g, "vgg999", &x, 10).unwrap_err();
+        assert!(err.contains("unknown model 'vgg999'"), "{err}");
+        assert!(err.contains("resnet18"), "error must list the zoo: {err}");
+        assert!(!has_model("vgg999"));
+        assert!(has_model("lenet"));
     }
 }

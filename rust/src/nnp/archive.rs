@@ -45,7 +45,12 @@ pub fn read_archive(path: &Path) -> io::Result<Vec<(String, Vec<u8>)>> {
     let mut f = fs::File::open(path)?;
     let mut all = Vec::new();
     f.read_to_end(&mut all)?;
-    if all.len() < 8 || &all[0..4] != MAGIC {
+    // the full 8-byte header (magic + CRC) must be present before any
+    // of it is indexed: a 4-7 byte file is "truncated", not a panic
+    if all.len() < 8 {
+        return Err(io::Error::new(io::ErrorKind::UnexpectedEof, "truncated NNP archive header"));
+    }
+    if &all[0..4] != MAGIC {
         return Err(io::Error::new(io::ErrorKind::InvalidData, "not an NNP archive"));
     }
     let stored_crc = u32::from_le_bytes(all[4..8].try_into().unwrap());
@@ -55,7 +60,9 @@ pub fn read_archive(path: &Path) -> io::Result<Vec<(String, Vec<u8>)>> {
     }
     let mut pos = 0usize;
     let take = |pos: &mut usize, n: usize| -> io::Result<&[u8]> {
-        if *pos + n > body.len() {
+        // untrusted length: compare against the remaining bytes (never
+        // `pos + n`, which a crafted u64 length could overflow)
+        if n > body.len() - *pos {
             return Err(io::Error::new(io::ErrorKind::UnexpectedEof, "truncated archive"));
         }
         let s = &body[*pos..*pos + n];
@@ -63,6 +70,11 @@ pub fn read_archive(path: &Path) -> io::Result<Vec<(String, Vec<u8>)>> {
         Ok(s)
     };
     let count = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
+    // every entry costs at least 12 header bytes: reject implausible
+    // counts before allocating
+    if count > body.len() / 12 {
+        return Err(io::Error::new(io::ErrorKind::InvalidData, "implausible archive entry count"));
+    }
     let mut out = Vec::with_capacity(count);
     for _ in 0..count {
         let name_len = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
@@ -120,5 +132,52 @@ mod tests {
     fn crc32_known_vector() {
         // CRC-32("123456789") = 0xCBF43926
         assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+    }
+
+    #[test]
+    fn rejects_short_headers() {
+        // regression: a 4-7 byte file reaches the CRC read; it must be
+        // a clean truncation error, not an index panic
+        for len in 0..8usize {
+            let p = tmp(&format!("short_{len}.nnp"));
+            std::fs::write(&p, &b"NNPAxxxx"[..len]).unwrap();
+            let err = read_archive(&p).unwrap_err();
+            assert!(
+                err.to_string().contains("truncated") || err.to_string().contains("not an"),
+                "len {len}: {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn every_truncation_errs_cleanly() {
+        let p = tmp("trunc.nnp");
+        let entries = vec![
+            ("net.nntxt".to_string(), b"network { }".to_vec()),
+            ("parameter.h5b".to_string(), vec![7u8; 64]),
+        ];
+        write_archive(&p, &entries).unwrap();
+        let full = std::fs::read(&p).unwrap();
+        let cut = tmp("trunc_cut.nnp");
+        for len in 0..full.len() {
+            std::fs::write(&cut, &full[..len]).unwrap();
+            assert!(read_archive(&cut).is_err(), "prefix of {len} bytes parsed");
+        }
+    }
+
+    #[test]
+    fn every_single_byte_flip_errs_cleanly() {
+        // the CRC covers the whole body, so any flip must surface as a
+        // clean error (and flips in magic/CRC fail their own checks)
+        let p = tmp("flip.nnp");
+        write_archive(&p, &[("x".into(), (0u8..200).collect())]).unwrap();
+        let full = std::fs::read(&p).unwrap();
+        let flip = tmp("flip_mut.nnp");
+        for i in 0..full.len() {
+            let mut bytes = full.clone();
+            bytes[i] ^= 0x80;
+            std::fs::write(&flip, &bytes).unwrap();
+            assert!(read_archive(&flip).is_err(), "flip at byte {i} parsed");
+        }
     }
 }

@@ -19,7 +19,7 @@ pub mod plan;
 pub mod trace;
 
 pub use ir::{Layer, NetworkDef, Op, TensorDef};
-pub use plan::CompiledNet;
+pub use plan::{CompiledNet, InferencePlan};
 pub use trace::trace;
 
 use crate::tensor::NdArray;

@@ -52,7 +52,9 @@ pub fn load_params(blob: &[u8]) -> Result<Vec<(String, NdArray)>, String> {
     }
     let mut pos = 4usize;
     let take = |pos: &mut usize, n: usize| -> Result<&[u8], String> {
-        if *pos + n > blob.len() {
+        // `n` is untrusted and may be huge: compare against the
+        // remaining length (never `pos + n`, which could overflow)
+        if n > blob.len() - *pos {
             return Err("truncated parameter blob".into());
         }
         let s = &blob[*pos..*pos + n];
@@ -60,6 +62,11 @@ pub fn load_params(blob: &[u8]) -> Result<Vec<(String, NdArray)>, String> {
         Ok(s)
     };
     let count = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
+    // every entry costs at least its 4-byte name length: reject
+    // implausible counts before allocating
+    if count > blob.len() / 4 {
+        return Err("truncated parameter blob".into());
+    }
     let mut out = Vec::with_capacity(count);
     for _ in 0..count {
         let nlen = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
@@ -70,32 +77,37 @@ pub fn load_params(blob: &[u8]) -> Result<Vec<(String, NdArray)>, String> {
             .map_err(|_| "bad dtype".to_string())?;
         let dtype = DType::from_name(&dt_name).ok_or(format!("unknown dtype '{dt_name}'"))?;
         let rank = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
-        let mut dims = Vec::with_capacity(rank);
+        // dims, size, and byte length are untrusted: bound-check every
+        // arithmetic step *before* any allocation, so bit-flipped blobs
+        // fail with a clean Err instead of an overflow panic / OOM
+        let mut dims = Vec::new();
         for _ in 0..rank {
             dims.push(u64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap()) as usize);
         }
-        let n: usize = dims.iter().product();
-        let mut data = Vec::with_capacity(n);
-        match dtype {
-            DType::F32 => {
-                let raw = take(&mut pos, n * 4)?;
-                for c in raw.chunks_exact(4) {
-                    data.push(f32::from_le_bytes(c.try_into().unwrap()));
-                }
-            }
-            DType::BF16 => {
-                let raw = take(&mut pos, n * 2)?;
-                for c in raw.chunks_exact(2) {
-                    data.push(half::bf16_bits_to_f32(u16::from_le_bytes(c.try_into().unwrap())));
-                }
-            }
-            DType::F16 => {
-                let raw = take(&mut pos, n * 2)?;
-                for c in raw.chunks_exact(2) {
-                    data.push(half::f16_bits_to_f32(u16::from_le_bytes(c.try_into().unwrap())));
-                }
-            }
-        }
+        let n = dims
+            .iter()
+            .try_fold(1usize, |a, &d| a.checked_mul(d))
+            .ok_or("parameter size overflows")?;
+        let width = match dtype {
+            DType::F32 => 4usize,
+            DType::BF16 | DType::F16 => 2,
+        };
+        let byte_len = n.checked_mul(width).ok_or("parameter size overflows")?;
+        let raw = take(&mut pos, byte_len)?;
+        let data: Vec<f32> = match dtype {
+            DType::F32 => raw
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                .collect(),
+            DType::BF16 => raw
+                .chunks_exact(2)
+                .map(|c| half::bf16_bits_to_f32(u16::from_le_bytes(c.try_into().unwrap())))
+                .collect(),
+            DType::F16 => raw
+                .chunks_exact(2)
+                .map(|c| half::f16_bits_to_f32(u16::from_le_bytes(c.try_into().unwrap())))
+                .collect(),
+        };
         let mut arr = NdArray::from_vec(&dims, data);
         arr.set_dtype(dtype);
         out.push((name, arr));

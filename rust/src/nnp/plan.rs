@@ -28,9 +28,10 @@ use crate::tensor::{kernels, ops, NdArray};
 
 use super::ir::{self, NetworkDef, Op, TensorDef};
 
-/// Where one operand of a step comes from.
+/// Where one operand of a step comes from. `pub(crate)` so the int8
+/// quantizer ([`crate::quant`]) can walk a compiled plan's dataflow.
 #[derive(Debug, Clone, Copy)]
-enum Src {
+pub(crate) enum Src {
     /// Activation slot in the per-call environment.
     Act(usize),
     /// Parameter index, bound once at compile time.
@@ -39,18 +40,18 @@ enum Src {
 
 /// One executable step of the plan.
 #[derive(Debug, Clone)]
-struct Step {
+pub(crate) struct Step {
     /// Layer name, kept for error reporting only.
-    name: String,
-    op: Op,
+    pub(crate) name: String,
+    pub(crate) op: Op,
     /// Activations first, then parameters — the order [`Op::apply`]
     /// defines.
-    args: Vec<Src>,
+    pub(crate) args: Vec<Src>,
     /// Output activation slot (fresh per layer).
-    out: usize,
+    pub(crate) out: usize,
     /// Activation slots whose last read is this step; dropped eagerly
     /// after it runs.
-    free_after: Vec<usize>,
+    pub(crate) free_after: Vec<usize>,
 }
 
 /// A network compiled against a fixed parameter set, ready for
@@ -66,6 +67,10 @@ pub struct CompiledNet {
     output_slots: Vec<usize>,
     steps: Vec<Step>,
     n_slots: usize,
+    /// Tensor name of each slot (inputs first, then each layer's
+    /// output in step order; shadowed names repeat). Calibration and
+    /// quantization key activation statistics by these names.
+    slot_names: Vec<String>,
     /// Parameters bound at compile time (COW handles — O(1) to hold,
     /// never copied per request).
     params: Vec<NdArray>,
@@ -83,9 +88,11 @@ impl CompiledNet {
         net.validate()?;
         let n_inputs = net.inputs.len();
         let mut slot_of: HashMap<String, usize> = HashMap::new();
+        let mut slot_names: Vec<String> = Vec::new();
         let mut n_slots = 0usize;
         for t in &net.inputs {
             slot_of.insert(t.name.clone(), n_slots);
+            slot_names.push(t.name.clone());
             n_slots += 1;
         }
 
@@ -120,6 +127,7 @@ impl CompiledNet {
             let out = n_slots;
             n_slots += 1;
             slot_of.insert(l.outputs[0].clone(), out);
+            slot_names.push(l.outputs[0].clone());
             steps.push(Step {
                 name: l.name.clone(),
                 op: l.op.clone(),
@@ -172,8 +180,31 @@ impl CompiledNet {
             output_slots,
             steps,
             n_slots,
+            slot_names,
             params: bound,
         })
+    }
+
+    // ------------------------------------------------ quantizer access
+
+    /// The compiled steps, in execution order (one per source layer).
+    pub(crate) fn steps(&self) -> &[Step] {
+        &self.steps
+    }
+
+    /// A bound parameter by compile-time index.
+    pub(crate) fn param(&self, i: usize) -> &NdArray {
+        &self.params[i]
+    }
+
+    /// Number of activation slots a call environment needs.
+    pub(crate) fn n_slots(&self) -> usize {
+        self.n_slots
+    }
+
+    /// Slots holding the declared outputs, in output order.
+    pub(crate) fn output_slots(&self) -> &[usize] {
+        &self.output_slots
     }
 
     /// Network name.
@@ -251,9 +282,33 @@ impl CompiledNet {
     /// long-lived serving thread reaches a steady state with no heap
     /// allocation per request for conv columns or plan intermediates.
     pub fn execute_positional(&self, inputs: &[NdArray]) -> Result<Vec<NdArray>, String> {
+        self.execute_inner(inputs, None)
+    }
+
+    /// [`CompiledNet::execute_positional`] plus a hook: `observe` is
+    /// called with `(tensor_name, value)` for every declared input and
+    /// every layer output, in execution order. This is the calibration
+    /// entry the int8 quantizer ([`crate::quant::calibrate`]) runs its
+    /// sample set through.
+    pub fn execute_observed(
+        &self,
+        inputs: &[NdArray],
+        observe: &mut dyn FnMut(&str, &NdArray),
+    ) -> Result<Vec<NdArray>, String> {
+        self.execute_inner(inputs, Some(observe))
+    }
+
+    fn execute_inner(
+        &self,
+        inputs: &[NdArray],
+        mut observe: Option<&mut dyn FnMut(&str, &NdArray)>,
+    ) -> Result<Vec<NdArray>, String> {
         self.check_inputs(inputs)?;
         let mut env: Vec<Option<NdArray>> = vec![None; self.n_slots];
         for (i, a) in inputs.iter().enumerate() {
+            if let Some(obs) = observe.as_deref_mut() {
+                obs(&self.slot_names[i], a);
+            }
             env[i] = Some(a.clone());
         }
         for st in &self.steps {
@@ -268,6 +323,9 @@ impl CompiledNet {
             }
             let y = execute_step(&st.op, &xs).map_err(|e| format!("layer '{}': {e}", st.name))?;
             drop(xs);
+            if let Some(obs) = observe.as_deref_mut() {
+                obs(&self.slot_names[st.out], &y);
+            }
             env[st.out] = Some(y);
             for &s in &st.free_after {
                 if let Some(dead) = env[s].take() {
@@ -316,12 +374,77 @@ impl CompiledNet {
     }
 }
 
+/// The contract a serving plan exposes, whatever executes underneath —
+/// the f32 [`CompiledNet`] or the int8 [`crate::quant::QuantizedNet`].
+/// Object-safe: [`crate::serve::Server`] hosts an
+/// `Arc<dyn InferencePlan>` so one worker pool serves either backend.
+pub trait InferencePlan: Send + Sync {
+    /// Network name.
+    fn name(&self) -> &str;
+    /// Declared inputs, in positional order.
+    fn inputs(&self) -> &[TensorDef];
+    /// Declared output names, in order.
+    fn outputs(&self) -> &[String];
+    /// Number of executable steps (layers).
+    fn n_steps(&self) -> usize;
+    /// Validate positional inputs; returns the batch-row count.
+    fn check_inputs(&self, inputs: &[NdArray]) -> Result<usize, String>;
+    /// Run on inputs given in declared order (`&self`: thread-shared).
+    fn execute_positional(&self, inputs: &[NdArray]) -> Result<Vec<NdArray>, String>;
+    /// Whether rows are provably independent (micro-batching safety).
+    fn batch_invariant(&self) -> bool;
+
+    /// Run on named inputs (declared-order resolution).
+    fn execute_named(&self, inputs: &HashMap<String, NdArray>) -> Result<Vec<NdArray>, String> {
+        let mut positional = Vec::with_capacity(self.inputs().len());
+        for t in self.inputs() {
+            positional.push(
+                inputs
+                    .get(&t.name)
+                    .ok_or_else(|| format!("missing input '{}'", t.name))?
+                    .clone(),
+            );
+        }
+        self.execute_positional(&positional)
+    }
+}
+
+impl InferencePlan for CompiledNet {
+    fn name(&self) -> &str {
+        CompiledNet::name(self)
+    }
+
+    fn inputs(&self) -> &[TensorDef] {
+        CompiledNet::inputs(self)
+    }
+
+    fn outputs(&self) -> &[String] {
+        CompiledNet::outputs(self)
+    }
+
+    fn n_steps(&self) -> usize {
+        CompiledNet::n_steps(self)
+    }
+
+    fn check_inputs(&self, inputs: &[NdArray]) -> Result<usize, String> {
+        CompiledNet::check_inputs(self, inputs)
+    }
+
+    fn execute_positional(&self, inputs: &[NdArray]) -> Result<Vec<NdArray>, String> {
+        CompiledNet::execute_positional(self, inputs)
+    }
+
+    fn batch_invariant(&self) -> bool {
+        CompiledNet::batch_invariant(self)
+    }
+}
+
 /// One plan step. The fused arms call the very kernels the tape's
 /// `F::*` closures call (bit-identical outputs) while skipping the
 /// per-op `Variable` construction `Op::execute` pays; everything else
 /// falls through to the registry dispatch. Guards mirror `Op::apply`'s
 /// validation so malformed shapes stay clean errors.
-fn execute_step(op: &Op, xs: &[&NdArray]) -> Result<NdArray, String> {
+pub(crate) fn execute_step(op: &Op, xs: &[&NdArray]) -> Result<NdArray, String> {
     match op {
         Op::Affine if (2..=3).contains(&xs.len()) && xs[0].rank() >= 1 && xs[1].rank() == 2 => {
             let feat: usize = xs[0].dims()[1..].iter().product();
@@ -581,5 +704,26 @@ mod tests {
     fn compiled_net_is_send_and_sync() {
         fn assert_ss<T: Send + Sync>() {}
         assert_ss::<CompiledNet>();
+    }
+
+    #[test]
+    fn execute_observed_sees_every_tensor_once_and_matches_execute() {
+        let (net, params) = affine_relu_net();
+        let plan = CompiledNet::compile(&net, &params).unwrap();
+        let x = NdArray::from_slice(&[2, 2], &[1., -1., 3., 4.]);
+        let mut seen: Vec<(String, usize)> = Vec::new();
+        let got = plan
+            .execute_observed(&[x.clone()], &mut |name, a| {
+                seen.push((name.to_string(), a.size()));
+            })
+            .unwrap();
+        // input + both layer outputs, in execution order
+        assert_eq!(
+            seen.iter().map(|(n, _)| n.as_str()).collect::<Vec<_>>(),
+            vec!["x", "h", "y"]
+        );
+        assert!(seen.iter().all(|&(_, sz)| sz == 4));
+        let want = plan.execute_positional(&[x]).unwrap();
+        assert_eq!(got[0].data(), want[0].data());
     }
 }

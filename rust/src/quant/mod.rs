@@ -1,0 +1,939 @@
+//! Post-training int8 quantization — the compact-artifact half of the
+//! paper's embedded-deployment story (§3: NNP → NNB for the C
+//! runtime), built on the int8 kernels in
+//! [`crate::tensor::kernels::int8`].
+//!
+//! The pipeline:
+//!
+//! 1. **Calibrate** ([`calibrate`]): run a [`CompiledNet`] over a
+//!    small sample set and record per-tensor activation min/max
+//!    (optionally percentile-clipped) through
+//!    [`CompiledNet::execute_observed`].
+//! 2. **Quantize** ([`quantize_model`]): every Affine/Convolution
+//!    weight whose input range was observed becomes a per-output-
+//!    channel symmetric i8 [`QTensor`] (~4× smaller); biases and every
+//!    other parameter stay f32. The result is a [`QuantizedModel`] —
+//!    the unit NNB2 serializes ([`crate::converters::nnb::to_nnb2`]).
+//! 3. **Compile** ([`QuantizedNet::compile`]): dense layers become
+//!    int8 GEMM steps with a fused requantize + bias (+ ReLU, when the
+//!    layer's unique reader is a ReLU) epilogue; every other op runs
+//!    the same f32 registry dispatch the base plan uses, with the
+//!    dequantize/quantize boundary folded into the dense steps
+//!    themselves (they consume and produce f32 tensors).
+//!
+//! [`QuantizedNet`] implements [`InferencePlan`], so
+//! [`crate::serve::Server`] hosts it exactly like an f32 plan.
+//! Quantized execution is bit-identical at any `NNL_THREADS` (exact
+//! i32 accumulation + fixed per-element epilogue); `nnl bench-quant`
+//! measures the fp32-vs-int8 throughput, artifact size, and top-1
+//! agreement numbers (`BENCH_quant.json`).
+
+use std::collections::{HashMap, HashSet};
+
+use crate::nnp::ir::{NetworkDef, Op, TensorDef};
+use crate::nnp::plan::{execute_step, CompiledNet, InferencePlan, Src};
+use crate::tensor::kernels;
+use crate::tensor::kernels::int8::{self, ActQuant, QMatB};
+use crate::tensor::ops::Conv2dGeom;
+use crate::tensor::NdArray;
+
+// ------------------------------------------------------------ calibration
+
+/// Observed activation range of one tensor.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ActRange {
+    pub lo: f32,
+    pub hi: f32,
+}
+
+/// Calibration result: tensor name → observed range, name-sorted so
+/// serialized artifacts are byte-stable.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct CalibTable {
+    pub ranges: Vec<(String, ActRange)>,
+}
+
+impl CalibTable {
+    pub fn get(&self, name: &str) -> Option<ActRange> {
+        self.ranges.iter().find(|(n, _)| n == name).map(|&(_, r)| r)
+    }
+}
+
+/// Quantization knobs.
+#[derive(Debug, Clone, Default)]
+pub struct QuantConfig {
+    /// `None`: plain min/max ranges. `Some(p)` with `0.5 < p ≤ 1`:
+    /// clip each range to the `[1−p, p]` quantiles of the observed
+    /// values (outlier-robust at the cost of saturating the tails).
+    pub percentile: Option<f32>,
+}
+
+/// Per-tensor streaming statistics gathered during calibration.
+struct Observed {
+    lo: f32,
+    hi: f32,
+    /// Deterministic value subsample for quantile clipping (strided,
+    /// never random — calibration must be reproducible).
+    sample: Vec<f32>,
+}
+
+/// Run `plan` over `samples` (each a positional input set) and record
+/// activation ranges for every network input and layer output.
+pub fn calibrate(
+    plan: &CompiledNet,
+    samples: &[Vec<NdArray>],
+    cfg: &QuantConfig,
+) -> Result<CalibTable, String> {
+    if samples.is_empty() {
+        return Err("calibration requires at least one sample".into());
+    }
+    if let Some(p) = cfg.percentile {
+        if !(p > 0.5 && p <= 1.0) {
+            return Err(format!("percentile must be in (0.5, 1], got {p}"));
+        }
+    }
+    let mut obs: HashMap<String, Observed> = HashMap::new();
+    for inputs in samples {
+        plan.execute_observed(inputs, &mut |name, a| {
+            let e = obs.entry(name.to_string()).or_insert(Observed {
+                lo: f32::INFINITY,
+                hi: f32::NEG_INFINITY,
+                sample: Vec::new(),
+            });
+            for &v in a.data() {
+                if v.is_finite() {
+                    e.lo = e.lo.min(v);
+                    e.hi = e.hi.max(v);
+                }
+            }
+            if cfg.percentile.is_some() {
+                let stride = (a.size() / 512).max(1);
+                e.sample.extend(a.data().iter().step_by(stride).filter(|v| v.is_finite()));
+            }
+        })?;
+    }
+    let mut ranges: Vec<(String, ActRange)> = obs
+        .into_iter()
+        .map(|(name, mut o)| {
+            let (mut lo, mut hi) = if o.lo <= o.hi { (o.lo, o.hi) } else { (0.0, 0.0) };
+            if let Some(p) = cfg.percentile {
+                if !o.sample.is_empty() {
+                    o.sample.sort_by(f32::total_cmp);
+                    let q = |frac: f32| {
+                        let i = ((o.sample.len() - 1) as f32 * frac).round() as usize;
+                        o.sample[i]
+                    };
+                    lo = lo.max(q(1.0 - p));
+                    hi = hi.min(q(p));
+                    if lo > hi {
+                        (lo, hi) = (hi, lo);
+                    }
+                }
+            }
+            (name, ActRange { lo, hi })
+        })
+        .collect();
+    ranges.sort_by(|a, b| a.0.cmp(&b.0));
+    Ok(CalibTable { ranges })
+}
+
+// ------------------------------------------------------- quantized params
+
+/// A per-channel symmetric int8 tensor: the on-disk / in-memory form
+/// of a quantized weight. `data` keeps the source layout (OIHW for
+/// conv, `[in, out]` for Affine); `scales[c]` applies to the slice at
+/// index `c` of `channel_axis`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QTensor {
+    pub dims: Vec<usize>,
+    pub channel_axis: usize,
+    pub data: Vec<i8>,
+    pub scales: Vec<f32>,
+}
+
+impl QTensor {
+    /// Symmetric per-channel quantization of `w` along `channel_axis`.
+    pub fn quantize(w: &NdArray, channel_axis: usize) -> QTensor {
+        assert!(channel_axis < w.rank(), "channel axis out of range");
+        let dims = w.dims().to_vec();
+        let outer: usize = dims[..channel_axis].iter().product();
+        let ch = dims[channel_axis];
+        let inner: usize = dims[channel_axis + 1..].iter().product();
+        let d = w.data();
+        let mut scales = vec![0.0f32; ch];
+        for o in 0..outer {
+            for (c, sc) in scales.iter_mut().enumerate() {
+                let base = (o * ch + c) * inner;
+                for &v in &d[base..base + inner] {
+                    *sc = sc.max(v.abs());
+                }
+            }
+        }
+        for sc in &mut scales {
+            *sc = if *sc > 0.0 { *sc / 127.0 } else { 1.0 };
+        }
+        let mut data = Vec::with_capacity(d.len());
+        for o in 0..outer {
+            for (c, sc) in scales.iter().enumerate() {
+                let base = (o * ch + c) * inner;
+                data.extend(
+                    d[base..base + inner]
+                        .iter()
+                        .map(|&v| (v / sc).round().clamp(-127.0, 127.0) as i8),
+                );
+            }
+        }
+        QTensor { dims, channel_axis, data, scales }
+    }
+
+    /// Back to f32 (the fallback boundary, and the base-plan binding).
+    pub fn dequantize(&self) -> NdArray {
+        if self.data.is_empty() {
+            // zero-element tensor: skip the outer/channel walk (a
+            // crafted artifact can pair a zero dim with huge siblings)
+            return NdArray::from_vec(&self.dims, Vec::new());
+        }
+        let outer: usize = self.dims[..self.channel_axis].iter().product();
+        let ch = self.dims[self.channel_axis];
+        let inner: usize = self.dims[self.channel_axis + 1..].iter().product();
+        let mut out = Vec::with_capacity(self.data.len());
+        for o in 0..outer {
+            for (c, sc) in self.scales.iter().enumerate() {
+                let base = (o * ch + c) * inner;
+                out.extend(self.data[base..base + inner].iter().map(|&q| q as f32 * sc));
+            }
+        }
+        NdArray::from_vec(&self.dims, out)
+    }
+}
+
+/// One named parameter of a quantized model.
+#[derive(Debug, Clone, PartialEq)]
+pub enum QParam {
+    Float(NdArray),
+    Int8(QTensor),
+}
+
+impl QParam {
+    /// The f32 view (dequantizing if needed).
+    pub fn to_f32(&self) -> NdArray {
+        match self {
+            QParam::Float(a) => a.clone(),
+            QParam::Int8(q) => q.dequantize(),
+        }
+    }
+}
+
+/// A quantized network: structure + mixed f32/i8 parameters +
+/// calibration table. Serializable as NNB2, compilable into a
+/// [`QuantizedNet`]. Parameters appear in layer binding order;
+/// parameters no layer references are dropped (dead for inference).
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuantizedModel {
+    pub net: NetworkDef,
+    pub params: Vec<(String, QParam)>,
+    pub calib: CalibTable,
+}
+
+/// Whether layer `l` is a dense layer whose weight (first param) can
+/// take the int8 path, given the calibrated ranges.
+fn dense_weight_axis(l: &crate::nnp::ir::Layer, calib: &CalibTable) -> Option<usize> {
+    if l.inputs.len() != 1 || l.params.is_empty() || calib.get(&l.inputs[0]).is_none() {
+        return None;
+    }
+    match l.op {
+        Op::Affine => Some(1),
+        Op::Convolution { .. } => Some(0),
+        _ => None,
+    }
+}
+
+/// Quantize `net`'s dense weights per output channel. A parameter is
+/// stored as i8 only if *every* layer referencing it uses it as the
+/// weight of a quantizable dense layer (shared or oddly-wired params
+/// conservatively stay f32).
+pub fn quantize_model(
+    net: &NetworkDef,
+    params: &HashMap<String, NdArray>,
+    calib: &CalibTable,
+) -> Result<QuantizedModel, String> {
+    net.validate()?;
+    // (quantize?, channel_axis) per param name, ANDed over all uses
+    let mut plan_for: HashMap<&str, Option<usize>> = HashMap::new();
+    for l in &net.layers {
+        let axis = dense_weight_axis(l, calib);
+        for (pi, pname) in l.params.iter().enumerate() {
+            let this = if pi == 0 { axis } else { None };
+            plan_for
+                .entry(pname.as_str())
+                .and_modify(|e| {
+                    if *e != this {
+                        *e = None;
+                    }
+                })
+                .or_insert(this);
+        }
+    }
+    let mut out: Vec<(String, QParam)> = Vec::new();
+    let mut seen: HashSet<&str> = HashSet::new();
+    for l in &net.layers {
+        for pname in &l.params {
+            if !seen.insert(pname.as_str()) {
+                continue;
+            }
+            let arr = params
+                .get(pname.as_str())
+                .ok_or_else(|| format!("missing parameter '{pname}'"))?;
+            let q = match plan_for.get(pname.as_str()).copied().flatten() {
+                // the GEMM reduction depth is elements / output
+                // channels; past MAX_EXACT_K the i32 accumulator could
+                // overflow, so such weights stay f32
+                Some(axis)
+                    if axis < arr.rank()
+                        && arr.dims()[axis] > 0
+                        && arr.size() / arr.dims()[axis] <= int8::MAX_EXACT_K =>
+                {
+                    QParam::Int8(QTensor::quantize(arr, axis))
+                }
+                _ => QParam::Float(arr.clone()),
+            };
+            out.push((pname.clone(), q));
+        }
+    }
+    Ok(QuantizedModel { net: net.clone(), params: out, calib: calib.clone() })
+}
+
+// ------------------------------------------------------- quantized plans
+
+/// A dense step lowered to the int8 GEMM.
+struct QDense {
+    weight: QMatB,
+    /// Source weight dims (shape validation + error messages).
+    wdims: Vec<usize>,
+    act: ActQuant,
+    /// `act.scale · weight_scale[j]` — the epilogue's per-column scale.
+    combined: Vec<f32>,
+    bias: Option<NdArray>,
+    relu: bool,
+    /// `None` = Affine; `Some(geom)` = Convolution.
+    conv: Option<Conv2dGeom>,
+}
+
+/// What the quantized plan does at one step beyond the base plan.
+enum QStep {
+    /// Run the base op unchanged (f32 registry dispatch).
+    Passthrough,
+    /// int8 dense fast path replacing the base op.
+    Dense(Box<QDense>),
+    /// A ReLU folded into the preceding dense step's epilogue: forward
+    /// the (already-rectified) input.
+    FusedRelu,
+}
+
+/// A compiled plan whose dense layers execute on the int8 GEMM —
+/// serve-ready ([`InferencePlan`]), `Send + Sync`, bit-identical at
+/// any thread count. Build with [`QuantizedNet::compile`].
+pub struct QuantizedNet {
+    plan: CompiledNet,
+    steps: Vec<QStep>,
+    quantized_layers: Vec<String>,
+}
+
+/// Index of the unique ReLU reading layer `i`'s output, if that ReLU
+/// is the *only* reader (a network output or a second reader keeps the
+/// raw value live, so the epilogue must not rectify it).
+fn unique_relu_reader(net: &NetworkDef, i: usize) -> Option<usize> {
+    let o = &net.layers[i].outputs[0];
+    let mut reader: Option<usize> = None;
+    let mut count = 0usize;
+    let mut redefined = false;
+    for (j, l) in net.layers.iter().enumerate().skip(i + 1) {
+        for inp in &l.inputs {
+            if inp == o {
+                count += 1;
+                reader = Some(j);
+            }
+        }
+        if &l.outputs[0] == o {
+            redefined = true;
+            break;
+        }
+    }
+    if !redefined && net.outputs.iter().any(|n| n == o) {
+        count += 1;
+    }
+    match (count, reader) {
+        (1, Some(j))
+            if matches!(net.layers[j].op, Op::ReLU) && net.layers[j].inputs.len() == 1 =>
+        {
+            Some(j)
+        }
+        _ => None,
+    }
+}
+
+impl QuantizedNet {
+    /// Compile a [`QuantizedModel`]: the base f32 plan is compiled
+    /// against dequantized parameters (the fallback path for every
+    /// non-dense op), then each dense layer with an i8 weight and a
+    /// calibrated input range becomes an int8 GEMM step, fusing a
+    /// uniquely-reading ReLU into its epilogue.
+    pub fn compile(model: &QuantizedModel) -> Result<QuantizedNet, String> {
+        let mut f32_params: HashMap<String, NdArray> = HashMap::new();
+        for (name, p) in &model.params {
+            f32_params.insert(name.clone(), p.to_f32());
+        }
+        let plan = CompiledNet::compile(&model.net, &f32_params)?;
+        let by_name: HashMap<&str, &QParam> =
+            model.params.iter().map(|(n, p)| (n.as_str(), p)).collect();
+
+        let n_layers = model.net.layers.len();
+        let mut steps: Vec<QStep> = (0..n_layers).map(|_| QStep::Passthrough).collect();
+        let mut quantized_layers = Vec::new();
+        for (i, l) in model.net.layers.iter().enumerate() {
+            if !matches!(steps[i], QStep::Passthrough) {
+                continue; // already claimed as a fused ReLU
+            }
+            let Some(wname) = l.params.first() else { continue };
+            let Some(QParam::Int8(qt)) = by_name.get(wname.as_str()) else { continue };
+            let Some(range) = (if l.inputs.len() == 1 {
+                model.calib.get(&l.inputs[0])
+            } else {
+                None
+            }) else {
+                return Err(format!(
+                    "layer '{}': quantized weight '{wname}' but no calibrated input range",
+                    l.name
+                ));
+            };
+            // dims come from untrusted NNB2 bytes: the decoder only
+            // checks the *total* element product, so per-axis values
+            // must be re-validated here before any k·n arithmetic or
+            // panel allocation (a zero dim would let the other axes be
+            // astronomically large)
+            let elems = qt
+                .dims
+                .iter()
+                .try_fold(1usize, |a, &d| a.checked_mul(d))
+                .filter(|&e| e == qt.data.len());
+            if qt.dims.is_empty() || qt.dims.iter().any(|&d| d == 0) || elems.is_none() {
+                return Err(format!(
+                    "layer '{}': weight '{wname}' has degenerate quantized shape {:?}",
+                    l.name, qt.dims
+                ));
+            }
+            if qt.data.len() / qt.dims[qt.channel_axis.min(qt.dims.len() - 1)]
+                > int8::MAX_EXACT_K
+            {
+                // a foreign artifact may carry i8 weights deeper than
+                // the exact-i32 bound: run that layer on the f32
+                // fallback (the base plan holds the dequantized weight)
+                continue;
+            }
+            let (weight, conv) = match &l.op {
+                Op::Affine => {
+                    if qt.dims.len() != 2 || qt.channel_axis != 1 {
+                        return Err(format!(
+                            "layer '{}': Affine weight '{wname}' quantized with shape {:?} \
+                             axis {} (want rank 2, axis 1)",
+                            l.name, qt.dims, qt.channel_axis
+                        ));
+                    }
+                    (QMatB::from_i8_kn(&qt.data, &qt.scales, qt.dims[0], qt.dims[1]), None)
+                }
+                Op::Convolution { stride, pad, dilation } => {
+                    if qt.dims.len() != 4 || qt.channel_axis != 0 {
+                        return Err(format!(
+                            "layer '{}': Convolution weight '{wname}' quantized with shape \
+                             {:?} axis {} (want rank 4, axis 0)",
+                            l.name, qt.dims, qt.channel_axis
+                        ));
+                    }
+                    let g = Conv2dGeom {
+                        kernel: (qt.dims[2], qt.dims[3]),
+                        stride: *stride,
+                        pad: *pad,
+                        dilation: *dilation,
+                    };
+                    // no overflow: the product of all four dims was
+                    // just checked against data.len()
+                    let k = qt.dims[1] * qt.dims[2] * qt.dims[3];
+                    (QMatB::from_i8_nk(&qt.data, &qt.scales, qt.dims[0], k), Some(g))
+                }
+                _ => {
+                    return Err(format!(
+                        "layer '{}': int8 weight '{wname}' on non-dense op {}",
+                        l.name,
+                        l.op.name()
+                    ))
+                }
+            };
+            let bias = match l.params.get(1) {
+                Some(bname) => Some(
+                    by_name
+                        .get(bname.as_str())
+                        .ok_or_else(|| format!("missing parameter '{bname}'"))?
+                        .to_f32(),
+                ),
+                None => None,
+            };
+            if let Some(b) = &bias {
+                if b.size() != weight.n() {
+                    return Err(format!(
+                        "layer '{}': bias size {} does not match {} output channels",
+                        l.name,
+                        b.size(),
+                        weight.n()
+                    ));
+                }
+            }
+            let act = ActQuant::from_range(range.lo, range.hi);
+            let combined: Vec<f32> = weight.scales().iter().map(|s| s * act.scale).collect();
+            let relu_at = unique_relu_reader(&model.net, i);
+            if let Some(j) = relu_at {
+                steps[j] = QStep::FusedRelu;
+            }
+            steps[i] = QStep::Dense(Box::new(QDense {
+                weight,
+                wdims: qt.dims.clone(),
+                act,
+                combined,
+                bias,
+                relu: relu_at.is_some(),
+                conv,
+            }));
+            quantized_layers.push(l.name.clone());
+        }
+        Ok(QuantizedNet { plan, steps, quantized_layers })
+    }
+
+    /// The f32 base plan (fallback path; also: shared input signature).
+    pub fn base_plan(&self) -> &CompiledNet {
+        &self.plan
+    }
+
+    /// Names of the layers running on the int8 path.
+    pub fn quantized_layers(&self) -> &[String] {
+        &self.quantized_layers
+    }
+
+    /// How many layers run on the int8 path.
+    pub fn n_quantized(&self) -> usize {
+        self.quantized_layers.len()
+    }
+
+    fn run_dense(&self, q: &QDense, x: &NdArray) -> Result<NdArray, String> {
+        match q.conv {
+            None => {
+                if x.rank() < 1 {
+                    return Err("quantized Affine input must have a batch axis".into());
+                }
+                let feat: usize = x.dims()[1..].iter().product();
+                if feat != q.weight.k() {
+                    return Err(format!(
+                        "quantized Affine: input features {feat} do not match weight rows {}",
+                        q.weight.k()
+                    ));
+                }
+                Ok(int8::qaffine_forward(
+                    x,
+                    &q.act,
+                    &q.weight,
+                    &q.combined,
+                    q.bias.as_ref(),
+                    q.relu,
+                ))
+            }
+            Some(g) => {
+                if x.rank() != 4 {
+                    return Err(format!(
+                        "quantized Convolution: expected NCHW input, got shape {:?}",
+                        x.dims()
+                    ));
+                }
+                if x.dims()[1] != q.wdims[1] {
+                    return Err(format!(
+                        "quantized Convolution: weight in-channels {} vs input channels {}",
+                        q.wdims[1],
+                        x.dims()[1]
+                    ));
+                }
+                if g.try_out_hw(x.dims()[2], x.dims()[3]).is_none() {
+                    return Err(format!(
+                        "quantized Convolution: geometry invalid on {}x{} input \
+                         (kernel {:?} stride {:?} pad {:?} dilation {:?})",
+                        x.dims()[2],
+                        x.dims()[3],
+                        g.kernel,
+                        g.stride,
+                        g.pad,
+                        g.dilation
+                    ));
+                }
+                Ok(int8::qconv2d_forward(
+                    x,
+                    &q.act,
+                    &q.weight,
+                    &q.combined,
+                    q.bias.as_ref(),
+                    q.relu,
+                    &g,
+                ))
+            }
+        }
+    }
+}
+
+impl InferencePlan for QuantizedNet {
+    fn name(&self) -> &str {
+        self.plan.name()
+    }
+
+    fn inputs(&self) -> &[TensorDef] {
+        self.plan.inputs()
+    }
+
+    fn outputs(&self) -> &[String] {
+        self.plan.outputs()
+    }
+
+    fn n_steps(&self) -> usize {
+        self.plan.n_steps()
+    }
+
+    fn check_inputs(&self, inputs: &[NdArray]) -> Result<usize, String> {
+        self.plan.check_inputs(inputs)
+    }
+
+    /// The quantized twin of `CompiledNet::execute_positional`: same
+    /// slot environment, same eager liveness (freed slots recycle into
+    /// the scratch arena), but dense steps run the int8 GEMM and fused
+    /// ReLUs forward their already-rectified input.
+    fn execute_positional(&self, inputs: &[NdArray]) -> Result<Vec<NdArray>, String> {
+        self.plan.check_inputs(inputs)?;
+        let mut env: Vec<Option<NdArray>> = vec![None; self.plan.n_slots()];
+        for (i, a) in inputs.iter().enumerate() {
+            env[i] = Some(a.clone());
+        }
+        for (st, qs) in self.plan.steps().iter().zip(&self.steps) {
+            let act = |s: usize| env[s].as_ref().expect("plan liveness invariant broken");
+            let y = match qs {
+                QStep::Dense(q) => {
+                    let x = match st.args.first() {
+                        Some(Src::Act(s)) => act(*s),
+                        _ => return Err(format!("layer '{}': malformed dense step", st.name)),
+                    };
+                    self.run_dense(q, x).map_err(|e| format!("layer '{}': {e}", st.name))?
+                }
+                QStep::FusedRelu => match st.args.first() {
+                    Some(Src::Act(s)) => act(*s).clone(),
+                    _ => return Err(format!("layer '{}': malformed fused step", st.name)),
+                },
+                QStep::Passthrough => {
+                    let mut xs: Vec<&NdArray> = Vec::with_capacity(st.args.len());
+                    for a in &st.args {
+                        match a {
+                            Src::Act(s) => xs.push(act(*s)),
+                            Src::Param(i) => xs.push(self.plan.param(*i)),
+                        }
+                    }
+                    execute_step(&st.op, &xs)
+                        .map_err(|e| format!("layer '{}': {e}", st.name))?
+                }
+            };
+            env[st.out] = Some(y);
+            for &s in &st.free_after {
+                if let Some(dead) = env[s].take() {
+                    kernels::recycle(dead);
+                }
+            }
+        }
+        self.plan
+            .output_slots()
+            .iter()
+            .map(|&s| {
+                env[s]
+                    .as_ref()
+                    .cloned()
+                    .ok_or_else(|| "plan output slot empty (liveness invariant broken)".into())
+            })
+            .collect()
+    }
+
+    fn batch_invariant(&self) -> bool {
+        // static per-tensor scales: quantized rows stay independent
+        self.plan.batch_invariant()
+    }
+}
+
+// ---------------------------------------------------------- one-stop shop
+
+/// The parameters `net` actually references, in layer binding order —
+/// the f32 (NNB1) counterpart of a quantized artifact, used wherever
+/// NNB1-vs-NNB2 sizes are compared (`nnl quantize`, `nnl bench-quant`,
+/// the parity tests) so the ratio measures quantization, not dropped
+/// dead parameters.
+pub fn referenced_params(
+    net: &NetworkDef,
+    params: &HashMap<String, NdArray>,
+) -> Vec<(String, NdArray)> {
+    let mut seen: HashSet<&str> = HashSet::new();
+    let mut out = Vec::new();
+    for l in &net.layers {
+        for p in &l.params {
+            if seen.insert(p.as_str()) {
+                if let Some(a) = params.get(p.as_str()) {
+                    out.push((p.clone(), a.clone()));
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Calibrate `net` on `samples` and quantize it: returns the
+/// serializable [`QuantizedModel`] and its compiled [`QuantizedNet`].
+pub fn quantize_net(
+    net: &NetworkDef,
+    params: &HashMap<String, NdArray>,
+    samples: &[Vec<NdArray>],
+    cfg: &QuantConfig,
+) -> Result<(QuantizedModel, QuantizedNet), String> {
+    let plan = CompiledNet::compile(net, params)?;
+    let calib = calibrate(&plan, samples, cfg)?;
+    let model = quantize_model(net, params, &calib)?;
+    let qnet = QuantizedNet::compile(&model)?;
+    Ok((model, qnet))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nnp::ir::Layer;
+    use crate::tensor::Rng;
+
+    fn affine_net(relu: bool) -> (NetworkDef, HashMap<String, NdArray>) {
+        let mut layers = vec![Layer {
+            name: "fc".into(),
+            op: Op::Affine,
+            inputs: vec!["x".into()],
+            params: vec!["W".into(), "b".into()],
+            outputs: vec!["h".into()],
+        }];
+        let mut outputs = vec!["h".to_string()];
+        if relu {
+            layers.push(Layer {
+                name: "r".into(),
+                op: Op::ReLU,
+                inputs: vec!["h".into()],
+                params: vec![],
+                outputs: vec!["y".into()],
+            });
+            outputs = vec!["y".to_string()];
+        }
+        let net = NetworkDef {
+            name: "q".into(),
+            inputs: vec![TensorDef { name: "x".into(), dims: vec![1, 4] }],
+            outputs,
+            layers,
+        };
+        let mut rng = Rng::new(3);
+        let mut params = HashMap::new();
+        params.insert("W".to_string(), rng.randn(&[4, 3], 1.0));
+        params.insert("b".to_string(), rng.randn(&[3], 0.5));
+        (net, params)
+    }
+
+    fn samples(n: usize, dims: &[usize], seed: u64) -> Vec<Vec<NdArray>> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| vec![rng.rand(dims, -1.0, 1.0)]).collect()
+    }
+
+    #[test]
+    fn qtensor_roundtrip_error_bounded_by_half_scale_per_channel() {
+        let mut rng = Rng::new(9);
+        let w = rng.randn(&[6, 5], 2.0);
+        let q = QTensor::quantize(&w, 1);
+        assert_eq!(q.scales.len(), 5);
+        let back = q.dequantize();
+        for r in 0..6 {
+            for c in 0..5 {
+                let err = (w.at(&[r, c]) - back.at(&[r, c])).abs();
+                assert!(err <= q.scales[c] * 0.5 + 1e-6, "err {err} at [{r}, {c}]");
+            }
+        }
+        // conv layout: per-dim-0 channel
+        let wc = rng.randn(&[3, 2, 2, 2], 1.0);
+        let qc = QTensor::quantize(&wc, 0);
+        assert_eq!(qc.scales.len(), 3);
+        assert!(qc.dequantize().allclose(&wc, qc.scales.iter().cloned().fold(0.0, f32::max), 0.0));
+    }
+
+    #[test]
+    fn calibrate_records_scaled_ranges() {
+        // y = 2x: the output range must be twice the input range
+        let net = NetworkDef {
+            name: "m".into(),
+            inputs: vec![TensorDef { name: "x".into(), dims: vec![1, 3] }],
+            outputs: vec!["y".into()],
+            layers: vec![Layer {
+                name: "s".into(),
+                op: Op::MulScalar { val: 2.0 },
+                inputs: vec!["x".into()],
+                params: vec![],
+                outputs: vec!["y".into()],
+            }],
+        };
+        let plan = CompiledNet::compile(&net, &HashMap::new()).unwrap();
+        let s = vec![
+            vec![NdArray::from_slice(&[1, 3], &[-0.5, 0.25, 0.1])],
+            vec![NdArray::from_slice(&[1, 3], &[0.75, -0.1, 0.0])],
+        ];
+        let calib = calibrate(&plan, &s, &QuantConfig::default()).unwrap();
+        let rx = calib.get("x").unwrap();
+        let ry = calib.get("y").unwrap();
+        assert_eq!((rx.lo, rx.hi), (-0.5, 0.75));
+        assert_eq!((ry.lo, ry.hi), (-1.0, 1.5));
+    }
+
+    #[test]
+    fn calibrate_rejects_bad_percentile_and_empty_samples() {
+        let (net, params) = affine_net(false);
+        let plan = CompiledNet::compile(&net, &params).unwrap();
+        assert!(calibrate(&plan, &[], &QuantConfig::default()).is_err());
+        let s = samples(1, &[1, 4], 1);
+        let bad = QuantConfig { percentile: Some(0.3) };
+        assert!(calibrate(&plan, &s, &bad).is_err());
+        let ok = QuantConfig { percentile: Some(0.99) };
+        assert!(calibrate(&plan, &s, &ok).is_ok());
+    }
+
+    #[test]
+    fn percentile_clipping_narrows_the_range() {
+        let (net, params) = affine_net(false);
+        let plan = CompiledNet::compile(&net, &params).unwrap();
+        // one wild outlier in otherwise small inputs
+        let mut vals = vec![0.1f32; 512];
+        vals[100] = 50.0;
+        let s = vec![vec![NdArray::from_vec(&[128, 4], vals)]];
+        let minmax = calibrate(&plan, &s, &QuantConfig::default()).unwrap();
+        let clipped = calibrate(&plan, &s, &QuantConfig { percentile: Some(0.95) }).unwrap();
+        assert_eq!(minmax.get("x").unwrap().hi, 50.0);
+        assert!(clipped.get("x").unwrap().hi < 1.0);
+    }
+
+    #[test]
+    fn quantize_model_marks_weights_int8_and_bias_f32() {
+        let (net, params) = affine_net(true);
+        let plan = CompiledNet::compile(&net, &params).unwrap();
+        let calib = calibrate(&plan, &samples(4, &[1, 4], 2), &QuantConfig::default()).unwrap();
+        let model = quantize_model(&net, &params, &calib).unwrap();
+        assert_eq!(model.params.len(), 2);
+        assert!(matches!(
+            model.params.iter().find(|(n, _)| n == "W").unwrap().1,
+            QParam::Int8(_)
+        ));
+        assert!(matches!(
+            model.params.iter().find(|(n, _)| n == "b").unwrap().1,
+            QParam::Float(_)
+        ));
+    }
+
+    #[test]
+    fn quantized_affine_close_to_f32_and_relu_fuses_exactly() {
+        let (net, params) = affine_net(true);
+        let s = samples(8, &[1, 4], 5);
+        let (model, qnet) = quantize_net(&net, &params, &s, &QuantConfig::default()).unwrap();
+        assert_eq!(qnet.n_quantized(), 1);
+        assert_eq!(qnet.quantized_layers(), &["fc".to_string()]);
+        // fused output == relu applied to the unfused dense output
+        let (net_plain, _) = affine_net(false);
+        let model_plain = quantize_model(&net_plain, &params, &model.calib).unwrap();
+        let qnet_plain = QuantizedNet::compile(&model_plain).unwrap();
+        let plan = CompiledNet::compile(&net, &params).unwrap();
+        let x = samples(1, &[2, 4], 7).pop().unwrap();
+        let fused = qnet.execute_positional(&x).unwrap();
+        let plain = qnet_plain.execute_positional(&x).unwrap();
+        for (f, p) in fused[0].data().iter().zip(plain[0].data()) {
+            assert_eq!(*f, p.max(0.0), "fused ReLU must match relu(dense)");
+        }
+        // and the int8 result tracks the f32 plan within a few steps
+        let f32_out = plan.execute_positional(&x).unwrap();
+        assert!(
+            fused[0].allclose(&f32_out[0], 0.15, 0.05),
+            "int8 drifted: max diff {}",
+            fused[0].max_abs_diff(&f32_out[0])
+        );
+    }
+
+    #[test]
+    fn relu_with_second_reader_is_not_fused() {
+        // h feeds both the ReLU and a second layer: the epilogue must
+        // not rectify h
+        let (mut net, params) = affine_net(true);
+        net.layers.push(Layer {
+            name: "neg".into(),
+            op: Op::Neg,
+            inputs: vec!["h".into()],
+            params: vec![],
+            outputs: vec!["z".into()],
+        });
+        net.outputs.push("z".into());
+        let s = samples(4, &[1, 4], 11);
+        let (_, qnet) = quantize_net(&net, &params, &s, &QuantConfig::default()).unwrap();
+        assert_eq!(qnet.n_quantized(), 1);
+        let x = samples(1, &[1, 4], 13).pop().unwrap();
+        let out = qnet.execute_positional(&x).unwrap();
+        // y = relu(h), z = -h: recover h from z and check consistency
+        for (y, z) in out[0].data().iter().zip(out[1].data()) {
+            assert_eq!(*y, (-z).max(0.0));
+        }
+    }
+
+    #[test]
+    fn compile_rejects_crafted_degenerate_artifacts() {
+        let (net, params) = affine_net(false);
+        let s = samples(2, &[1, 4], 23);
+        // zero-dim weight with a huge sibling axis: decodes cleanly
+        // (total element product is 0), must fail compile, not abort
+        let (mut model, _) = quantize_net(&net, &params, &s, &QuantConfig::default()).unwrap();
+        for (name, p) in &mut model.params {
+            if name == "W" {
+                *p = QParam::Int8(QTensor {
+                    dims: vec![usize::MAX / 8, 0],
+                    channel_axis: 1,
+                    data: Vec::new(),
+                    scales: Vec::new(),
+                });
+            }
+        }
+        let err = QuantizedNet::compile(&model).unwrap_err();
+        assert!(err.contains("degenerate"), "{err}");
+        // bias length disagreeing with the output-channel count must
+        // fail compile, not panic inside the first request's qgemm
+        let (mut model2, _) = quantize_net(&net, &params, &s, &QuantConfig::default()).unwrap();
+        for (name, p) in &mut model2.params {
+            if name == "b" {
+                *p = QParam::Float(NdArray::zeros(&[7]));
+            }
+        }
+        let err = QuantizedNet::compile(&model2).unwrap_err();
+        assert!(err.contains("bias size"), "{err}");
+    }
+
+    #[test]
+    fn quantized_net_serves_like_a_plan() {
+        let (net, params) = affine_net(true);
+        let s = samples(4, &[1, 4], 17);
+        let (_, qnet) = quantize_net(&net, &params, &s, &QuantConfig::default()).unwrap();
+        assert!(qnet.batch_invariant());
+        fn assert_ss<T: Send + Sync>() {}
+        assert_ss::<QuantizedNet>();
+        // named execution through the trait's default method
+        let mut named = HashMap::new();
+        named.insert("x".to_string(), NdArray::from_slice(&[1, 4], &[0.1, -0.2, 0.3, 0.4]));
+        let via_named = qnet.execute_named(&named).unwrap();
+        let via_pos = qnet.execute_positional(&[named.get("x").unwrap().clone()]).unwrap();
+        assert_eq!(via_named[0].data(), via_pos[0].data());
+    }
+}

@@ -2,9 +2,11 @@
 //! (ROADMAP north-star: serve heavy traffic as fast as the hardware
 //! allows; paper §3.4: one trained NNP file, many runtimes).
 //!
-//! [`Server`] owns a worker pool sharing one [`CompiledNet`] — the plan
-//! is compiled once at load time and executed `&self` from every
-//! worker. Single-example requests are **micro-batched**: a worker
+//! [`Server`] owns a worker pool sharing one plan behind the
+//! [`InferencePlan`] trait — the f32 [`CompiledNet`] or the int8
+//! [`crate::quant::QuantizedNet`], compiled once at load time and
+//! executed `&self` from every worker. Single-example requests are
+//! **micro-batched**: a worker
 //! takes the first queued request, then keeps draining the queue until
 //! `max_batch` rows are gathered or `max_wait` elapses, concatenates
 //! the inputs along axis 0, executes the plan once, and splits the
@@ -27,7 +29,7 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::nnp::ir::NetworkDef;
-use crate::nnp::plan::CompiledNet;
+use crate::nnp::plan::{CompiledNet, InferencePlan};
 use crate::tensor::{NdArray, Rng};
 
 /// Worker-pool and micro-batching knobs.
@@ -184,7 +186,7 @@ impl std::fmt::Display for ServeStats {
 /// Dropping (or [`Server::shutdown`]) closes the queue, drains pending
 /// requests, and joins the workers.
 pub struct Server {
-    plan: Arc<CompiledNet>,
+    plan: Arc<dyn InferencePlan>,
     queue: Arc<Queue>,
     workers: Vec<JoinHandle<()>>,
     stats: Arc<StatsInner>,
@@ -192,8 +194,16 @@ pub struct Server {
 }
 
 impl Server {
-    /// Start `cfg.workers` threads serving `plan`.
-    pub fn start(plan: Arc<CompiledNet>, cfg: ServeConfig) -> Server {
+    /// Start `cfg.workers` threads serving `plan` (any
+    /// [`InferencePlan`] — the f32 compiled plan or a quantized one).
+    pub fn start<P: InferencePlan + 'static>(plan: Arc<P>, cfg: ServeConfig) -> Server {
+        Server::start_dyn(plan, cfg)
+    }
+
+    /// Type-erased [`Server::start`] — the entry the CLI uses when the
+    /// plan's concrete type is only known at run time (`.nnp` vs
+    /// NNB/NNB2 artifacts).
+    pub fn start_dyn(plan: Arc<dyn InferencePlan>, cfg: ServeConfig) -> Server {
         let queue = Arc::new(Queue::new());
         let stats = Arc::new(StatsInner::default());
         // batching needs provably row-independent semantics
@@ -207,15 +217,15 @@ impl Server {
             let stats = Arc::clone(&stats);
             let cfg = cfg.clone();
             workers.push(std::thread::spawn(move || {
-                worker_loop(&plan, &queue, &stats, &cfg, batched)
+                worker_loop(plan.as_ref(), &queue, &stats, &cfg, batched)
             }));
         }
         Server { plan, queue, workers, stats, batched }
     }
 
     /// The shared plan.
-    pub fn plan(&self) -> &CompiledNet {
-        &self.plan
+    pub fn plan(&self) -> &dyn InferencePlan {
+        self.plan.as_ref()
     }
 
     /// Whether micro-batching is active for this plan/config.
@@ -242,7 +252,7 @@ impl Server {
         &self,
         inputs: Vec<NdArray>,
     ) -> Result<Receiver<Result<Vec<NdArray>, String>>, String> {
-        submit_on(&self.plan, self.batched, &self.queue, inputs)
+        submit_on(self.plan.as_ref(), self.batched, &self.queue, inputs)
     }
 
     /// Blocking convenience: submit and wait for the outputs.
@@ -312,7 +322,7 @@ impl Drop for Server {
 /// gone its submissions fail cleanly.
 #[derive(Clone)]
 pub struct Client {
-    plan: Arc<CompiledNet>,
+    plan: Arc<dyn InferencePlan>,
     queue: Arc<Queue>,
     batched: bool,
 }
@@ -323,7 +333,7 @@ impl Client {
         &self,
         inputs: Vec<NdArray>,
     ) -> Result<Receiver<Result<Vec<NdArray>, String>>, String> {
-        submit_on(&self.plan, self.batched, &self.queue, inputs)
+        submit_on(self.plan.as_ref(), self.batched, &self.queue, inputs)
     }
 
     /// Same contract as [`Server::infer`].
@@ -336,7 +346,7 @@ impl Client {
 /// Shared submit path: validate shapes, wrap with a reply channel,
 /// enqueue.
 fn submit_on(
-    plan: &CompiledNet,
+    plan: &dyn InferencePlan,
     batched: bool,
     queue: &Queue,
     inputs: Vec<NdArray>,
@@ -351,7 +361,7 @@ fn submit_on(
 }
 
 fn worker_loop(
-    plan: &CompiledNet,
+    plan: &dyn InferencePlan,
     queue: &Queue,
     stats: &StatsInner,
     cfg: &ServeConfig,
@@ -378,7 +388,7 @@ fn worker_loop(
     }
 }
 
-fn run_batch(plan: &CompiledNet, stats: &StatsInner, mut batch: Vec<Request>) {
+fn run_batch(plan: &dyn InferencePlan, stats: &StatsInner, mut batch: Vec<Request>) {
     if batch.len() == 1 {
         let req = batch.pop().expect("non-empty batch");
         run_single(plan, stats, req);
@@ -427,7 +437,7 @@ fn run_batch(plan: &CompiledNet, stats: &StatsInner, mut batch: Vec<Request>) {
     }
 }
 
-fn run_single(plan: &CompiledNet, stats: &StatsInner, req: Request) {
+fn run_single(plan: &dyn InferencePlan, stats: &StatsInner, req: Request) {
     let t0 = Instant::now();
     let out = plan.execute_positional(&req.inputs);
     stats.exec_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
@@ -612,6 +622,48 @@ mod tests {
         let classes =
             server.infer_class(vec![NdArray::from_slice(&[2, 2], &[5., 1., 0., 2.])]).unwrap();
         assert_eq!(classes, vec![0, 0]);
+    }
+
+    #[test]
+    fn server_hosts_quantized_plans() {
+        use crate::quant::{quantize_net, QuantConfig};
+        use crate::tensor::Rng;
+        let net = NetworkDef {
+            name: "q".into(),
+            inputs: vec![TensorDef { name: "x".into(), dims: vec![1, 4] }],
+            outputs: vec!["y".into()],
+            layers: vec![
+                Layer {
+                    name: "fc".into(),
+                    op: Op::Affine,
+                    inputs: vec!["x".into()],
+                    params: vec!["W".into()],
+                    outputs: vec!["h".into()],
+                },
+                Layer {
+                    name: "r".into(),
+                    op: Op::ReLU,
+                    inputs: vec!["h".into()],
+                    params: vec![],
+                    outputs: vec!["y".into()],
+                },
+            ],
+        };
+        let mut rng = Rng::new(31);
+        let mut params = HashMap::new();
+        params.insert("W".to_string(), rng.randn(&[4, 3], 1.0));
+        let samples: Vec<Vec<NdArray>> =
+            (0..4).map(|_| vec![rng.rand(&[1, 4], -1.0, 1.0)]).collect();
+        let (_, qnet) =
+            quantize_net(&net, &params, &samples, &QuantConfig::default()).unwrap();
+        let qnet = Arc::new(qnet);
+        let server = Server::start(Arc::clone(&qnet), ServeConfig::default());
+        assert!(server.batched(), "quantized affine+relu plans stay batchable");
+        let x = NdArray::from_slice(&[1, 4], &[0.2, -0.4, 0.6, -0.8]);
+        let got = server.infer(vec![x.clone()]).unwrap();
+        let want = qnet.execute_positional(&[x]).unwrap();
+        assert_eq!(got[0].data(), want[0].data());
+        assert_eq!(server.shutdown().errors, 0);
     }
 
     #[test]

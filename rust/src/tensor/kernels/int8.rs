@@ -1,0 +1,577 @@
+//! Int8 inference kernels — the quantized sibling of the f32 tiled
+//! GEMM one directory up.
+//!
+//! ## Quantization scheme
+//!
+//! - **Activations** are asymmetric per-tensor u8: `x ≈ s·(q − zp)`
+//!   with `q ∈ [0, 255]` and the zero point chosen so that `x = 0`
+//!   maps exactly onto `q = zp` (so conv zero padding quantizes to the
+//!   zero point, and the padded im2col view below stays exact).
+//! - **Weights** are symmetric per-output-channel i8: `w ≈ s_j·q`
+//!   with `q ∈ [−127, 127]` and one scale per GEMM *column* (Affine
+//!   output feature / conv output channel).
+//!
+//! The product accumulates exactly in i32 and dequantizes once per
+//! output element: with `acc = Σ_k a_q·w_q` and `colsum_j = Σ_k w_q`,
+//!
+//! ```text
+//! y[i,j] = (acc − zp·colsum_j) · s_a·s_j  (+ bias_j) (→ max(·,0))
+//! ```
+//!
+//! — the standard zero-point correction, fused with bias and ReLU in
+//! the epilogue ([`requantize_one`]) so a quantized Affine/Convolution
+//! layer is one pass over its output.
+//!
+//! ## Shape of the kernel
+//!
+//! The weight matrix is **prepacked once** ([`QMatB`]): `QNR`-wide
+//! column panels in k-major order, built at quantize/load time — a
+//! serving plan never packs its B side again (the f32 core re-packs
+//! per call). Per call only the u8 A panel is packed, one `QMR`-row
+//! tile at a time, straight out of a dense row-major buffer or a
+//! virtual im2col view of a quantized NCHW image ([`QMatA`]). Row
+//! tiles are sharded over [`crate::tensor::parallel`] with the same
+//! shape-derived chunking as the f32 core; integer accumulation is
+//! exact and the epilogue is a fixed per-element expression, so
+//! results are bit-identical at any `NNL_THREADS` by construction.
+
+use std::cell::RefCell;
+
+use crate::tensor::ops::Conv2dGeom;
+use crate::tensor::{parallel, NdArray};
+
+use super::{nhwc_to_nchw, with_scratch};
+
+/// Microkernel rows (output tile height).
+const QMR: usize = 8;
+/// Microkernel cols (output tile width).
+const QNR: usize = 8;
+/// Cap on row chunks per GEMM (same determinism rationale as the f32
+/// core: the partition is a pure function of the problem shape).
+const QMAX_CHUNKS: usize = 64;
+
+/// Largest reduction depth the i32 accumulator holds exactly:
+/// `k · 255 · 127 ≤ i32::MAX`. The quantizer refuses the int8 path for
+/// deeper GEMMs (they fall back to f32), so "exact integer
+/// accumulation" stays an invariant instead of a hope.
+pub const MAX_EXACT_K: usize = (i32::MAX as usize) / (255 * 127);
+
+thread_local! {
+    /// Per-thread u8 A-panel pack buffer (the int8 twin of the f32
+    /// core's `PACK`).
+    static QPACK: RefCell<Vec<u8>> = const { RefCell::new(Vec::new()) };
+    /// Per-thread quantized-activation buffer: the layer fronts borrow
+    /// it for the u8 copy of their input, so steady-state quantized
+    /// serving allocates nothing per request (the int8 analogue of the
+    /// scratch arena's role on the f32 path).
+    static QACT: RefCell<Vec<u8>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Run `f` with this thread's pooled activation buffer. Reentrancy-
+/// safe: the buffer is taken by value, so a nested call sees a fresh
+/// (empty) one and no `RefCell` borrow is held across user code.
+fn with_act_buffer<R>(f: impl FnOnce(&mut Vec<u8>) -> R) -> R {
+    let mut buf = QACT.with(|c| std::mem::take(&mut *c.borrow_mut()));
+    let r = f(&mut buf);
+    QACT.with(|c| *c.borrow_mut() = buf);
+    r
+}
+
+// ------------------------------------------------------- activation quant
+
+/// Asymmetric u8 quantization parameters for one activation tensor.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ActQuant {
+    pub scale: f32,
+    pub zero_point: u8,
+}
+
+impl ActQuant {
+    /// Parameters covering `[lo, hi]` (widened to include 0 so the
+    /// zero point is exact). A degenerate range quantizes everything
+    /// onto the zero point.
+    pub fn from_range(lo: f32, hi: f32) -> ActQuant {
+        let lo = lo.min(0.0);
+        let hi = hi.max(0.0);
+        let scale = (hi - lo) / 255.0;
+        if scale <= 0.0 || !scale.is_finite() {
+            return ActQuant { scale: 1.0, zero_point: 0 };
+        }
+        let zp = (-lo / scale).round().clamp(0.0, 255.0) as u8;
+        ActQuant { scale, zero_point: zp }
+    }
+
+    /// Quantize one value (round-to-nearest, saturating).
+    #[inline(always)]
+    pub fn quantize(&self, v: f32) -> u8 {
+        ((v / self.scale).round() + self.zero_point as f32).clamp(0.0, 255.0) as u8
+    }
+
+    /// Dequantize one level.
+    #[inline(always)]
+    pub fn dequantize(&self, q: u8) -> f32 {
+        (q as i32 - self.zero_point as i32) as f32 * self.scale
+    }
+}
+
+/// Quantize a full slice (the per-call activation side).
+pub fn quantize_slice(aq: &ActQuant, src: &[f32], dst: &mut Vec<u8>) {
+    dst.clear();
+    dst.reserve(src.len());
+    dst.extend(src.iter().map(|&v| aq.quantize(v)));
+}
+
+// ---------------------------------------------------------- packed weights
+
+/// A per-output-channel symmetric i8 weight matrix, prepacked into
+/// `QNR`-wide column panels for [`qgemm`]. Logical shape `[k, n]`
+/// (GEMM B operand: `k` = input features, `n` = output channels).
+#[derive(Debug, Clone, PartialEq)]
+pub struct QMatB {
+    k: usize,
+    n: usize,
+    /// Panel layout: `panels[jt·k·QNR + kk·QNR + c] = B[kk, jt·QNR+c]`
+    /// (zero past `n`).
+    panels: Vec<i8>,
+    /// Per-column weight scale, length `n`.
+    scales: Vec<f32>,
+    /// Per-column sum of quantized weights (zero-point correction).
+    colsums: Vec<i32>,
+}
+
+impl QMatB {
+    fn pack(k: usize, n: usize, q_at: impl Fn(usize, usize) -> i8, scales: Vec<f32>) -> QMatB {
+        assert_eq!(scales.len(), n, "one weight scale per output channel");
+        // n == 0 packs nothing: qgemm early-returns before touching
+        // panels, so no placeholder tile is ever needed
+        let n_jtiles = n.div_ceil(QNR);
+        let mut panels = vec![0i8; n_jtiles * k * QNR];
+        let mut colsums = vec![0i32; n];
+        for jt in 0..n_jtiles {
+            let panel = &mut panels[jt * k * QNR..(jt + 1) * k * QNR];
+            for kk in 0..k {
+                for c in 0..QNR {
+                    let j = jt * QNR + c;
+                    if j < n {
+                        let v = q_at(kk, j);
+                        panel[kk * QNR + c] = v;
+                        colsums[j] += v as i32;
+                    }
+                }
+            }
+        }
+        QMatB { k, n, panels, scales, colsums }
+    }
+
+    /// Build from quantized values laid out row-major `[k, n]` with
+    /// per-column scales (Affine weights `[in, out]`, channel axis 1).
+    pub fn from_i8_kn(q: &[i8], scales: &[f32], k: usize, n: usize) -> QMatB {
+        assert_eq!(q.len(), k * n, "quantized weight size");
+        QMatB::pack(k, n, |kk, j| q[kk * n + j], scales.to_vec())
+    }
+
+    /// Build from quantized values laid out row-major `[n, k]` with
+    /// per-row scales (conv weights `[oc, c·kh·kw]`, channel axis 0):
+    /// the GEMM consumes the logical transpose.
+    pub fn from_i8_nk(q: &[i8], scales: &[f32], n: usize, k: usize) -> QMatB {
+        assert_eq!(q.len(), n * k, "quantized weight size");
+        QMatB::pack(k, n, |kk, j| q[j * k + kk], scales.to_vec())
+    }
+
+    /// Input features (GEMM k).
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Output channels (GEMM n).
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Per-output-channel weight scales.
+    pub fn scales(&self) -> &[f32] {
+        &self.scales
+    }
+
+    /// In-memory footprint of the packed operand (reporting).
+    pub fn bytes(&self) -> usize {
+        self.panels.len() + 4 * self.scales.len() + 4 * self.colsums.len()
+    }
+}
+
+// ------------------------------------------------------------- A operands
+
+/// im2col view over a *quantized* NCHW u8 image; out-of-bounds taps
+/// read the zero point, which is exactly what f32 zero padding
+/// quantizes to.
+#[derive(Clone, Copy)]
+pub struct QColView<'a> {
+    pub x: &'a [u8],
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+    pub oh: usize,
+    pub ow: usize,
+    pub g: Conv2dGeom,
+    pub zp: u8,
+}
+
+impl QColView<'_> {
+    #[inline(always)]
+    fn at(&self, i: usize, j: usize) -> u8 {
+        let ohow = self.oh * self.ow;
+        let ni = i / ohow;
+        let rem = i % ohow;
+        let oy = rem / self.ow;
+        let ox = rem % self.ow;
+        let (kh, kw) = self.g.kernel;
+        let khkw = kh * kw;
+        let ci = j / khkw;
+        let r = j % khkw;
+        let ky = r / kw;
+        let kx = r % kw;
+        let iy = (oy * self.g.stride.0 + ky * self.g.dilation.0) as isize - self.g.pad.0 as isize;
+        let ix = (ox * self.g.stride.1 + kx * self.g.dilation.1) as isize - self.g.pad.1 as isize;
+        if iy >= 0 && (iy as usize) < self.h && ix >= 0 && (ix as usize) < self.w {
+            self.x[((ni * self.c + ci) * self.h + iy as usize) * self.w + ix as usize]
+        } else {
+            self.zp
+        }
+    }
+}
+
+/// The u8 A-side operand of [`qgemm`].
+pub enum QMatA<'a> {
+    /// Row-major `[m, k]`; `ld` = k.
+    Dense { d: &'a [u8], ld: usize },
+    /// im2col of a quantized NCHW image.
+    Im2col(QColView<'a>),
+}
+
+impl QMatA<'_> {
+    #[inline(always)]
+    fn at(&self, i: usize, j: usize) -> u8 {
+        match self {
+            QMatA::Dense { d, ld } => d[i * ld + j],
+            QMatA::Im2col(v) => v.at(i, j),
+        }
+    }
+}
+
+// ------------------------------------------------------------------- GEMM
+
+/// The one dequantization expression every int8 output element goes
+/// through — kernel and test oracle share it, so parity tests can
+/// demand *exact* equality.
+#[inline(always)]
+pub fn requantize_one(acc: i32, zp: u8, colsum: i32, scale: f32, bias: f32, relu: bool) -> f32 {
+    let v = (acc - zp as i32 * colsum) as f32 * scale + bias;
+    if relu {
+        v.max(0.0)
+    } else {
+        v
+    }
+}
+
+/// Fused epilogue spec: per-column combined scale (`act·weight`),
+/// optional bias, optional ReLU.
+pub struct QEpilogue<'a> {
+    /// `scales[j] = act_scale · weight_scale[j]`, length `n`.
+    pub scales: &'a [f32],
+    pub bias: Option<&'a [f32]>,
+    pub relu: bool,
+}
+
+/// Pack the `QMR`-row u8 A-panel for rows `i0..` over the full k:
+/// `ap[kk·QMR + r] = A[i0+r, kk]`; rows past `m` pack as 0 and their
+/// outputs are never written.
+fn pack_a_q(a: &QMatA, ap: &mut [u8], m: usize, i0: usize, k: usize) {
+    let mh = QMR.min(m - i0);
+    for kk in 0..k {
+        let dst = &mut ap[kk * QMR..kk * QMR + QMR];
+        for (r, slot) in dst.iter_mut().enumerate() {
+            *slot = if r < mh { a.at(i0 + r, kk) } else { 0 };
+        }
+    }
+}
+
+/// The register tile: `acc[r, c] += Σ_kk ap[kk, r] · bp[kk, c]` in
+/// exact i32 (fixed 8×8 unrolled loops; LLVM vectorizes the `c` loop).
+/// Operands are widened through i16 — exact, since u8·i8 products fit
+/// i16 ranges on both sides — which is the shape LLVM's widening-
+/// multiply vectorization patterns (`pmaddwd`-class) recognize.
+#[inline(always)]
+fn qmicrokernel(k: usize, ap: &[u8], bp: &[i8], acc: &mut [i32; QMR * QNR]) {
+    for kk in 0..k {
+        let a = &ap[kk * QMR..kk * QMR + QMR];
+        let b = &bp[kk * QNR..kk * QNR + QNR];
+        for r in 0..QMR {
+            let ar = a[r] as i16 as i32;
+            let row = &mut acc[r * QNR..r * QNR + QNR];
+            for (o, &bv) in row.iter_mut().zip(b) {
+                *o += ar * (bv as i16 as i32);
+            }
+        }
+    }
+}
+
+/// `out[m, n] = dequant(A_q[m, k] · B_q[k, n])` with the fused
+/// bias/ReLU epilogue. `zp` is the A-side zero point. Row-sharded over
+/// the worker pool; bit-identical at any thread count (exact integer
+/// accumulation + per-element epilogue).
+pub fn qgemm(out: &mut [f32], a: &QMatA, zp: u8, b: &QMatB, m: usize, epi: &QEpilogue) {
+    let (k, n) = (b.k, b.n);
+    debug_assert!(k <= MAX_EXACT_K, "qgemm reduction depth {k} can overflow i32");
+    assert_eq!(out.len(), m * n, "qgemm output buffer size");
+    assert_eq!(epi.scales.len(), n, "qgemm epilogue scale count");
+    if let Some(bias) = epi.bias {
+        assert_eq!(bias.len(), n, "qgemm bias size");
+    }
+    if m == 0 || n == 0 {
+        return;
+    }
+    let n_itiles = m.div_ceil(QMR);
+    let n_jtiles = n.div_ceil(QNR);
+    let chunk_tiles = n_itiles.div_ceil(QMAX_CHUNKS).max(1);
+    let chunk_elems = chunk_tiles * QMR * n;
+    parallel::for_each_chunk_mut(out, chunk_elems, |ci, chunk| {
+        QPACK.with(|p| {
+            let mut ap = p.borrow_mut();
+            if ap.len() != k * QMR {
+                ap.resize(k * QMR, 0);
+            }
+            debug_assert_eq!(chunk.len() % n, 0);
+            let rows_here = chunk.len() / n;
+            let row_base = ci * chunk_tiles * QMR;
+            let mut local0 = 0;
+            while local0 < rows_here {
+                let i0 = row_base + local0;
+                let mh = QMR.min(rows_here - local0);
+                pack_a_q(a, &mut ap, m, i0, k);
+                for jt in 0..n_jtiles {
+                    let j0 = jt * QNR;
+                    let nw = QNR.min(n - j0);
+                    let bp = &b.panels[jt * k * QNR..(jt + 1) * k * QNR];
+                    let mut acc = [0i32; QMR * QNR];
+                    qmicrokernel(k, &ap, bp, &mut acc);
+                    for r in 0..mh {
+                        let dst =
+                            &mut chunk[(local0 + r) * n + j0..(local0 + r) * n + j0 + nw];
+                        for (c, slot) in dst.iter_mut().enumerate() {
+                            let j = j0 + c;
+                            *slot = requantize_one(
+                                acc[r * QNR + c],
+                                zp,
+                                b.colsums[j],
+                                epi.scales[j],
+                                epi.bias.map_or(0.0, |bb| bb[j]),
+                                epi.relu,
+                            );
+                        }
+                    }
+                }
+                local0 += QMR;
+            }
+        });
+    });
+}
+
+// ------------------------------------------------------------ layer fronts
+
+/// Quantized affine: quantize `flatten(x)` rows to u8, run the int8
+/// GEMM against the prepacked weights, dequantize + bias (+ ReLU) in
+/// the epilogue. `combined[j] = act.scale · weight_scale[j]`.
+pub fn qaffine_forward(
+    x: &NdArray,
+    act: &ActQuant,
+    w: &QMatB,
+    combined: &[f32],
+    bias: Option<&NdArray>,
+    relu: bool,
+) -> NdArray {
+    assert!(x.rank() >= 1, "quantized affine input must have a batch axis");
+    let batch = x.dims()[0];
+    let feat: usize = x.dims()[1..].iter().product();
+    assert_eq!(feat, w.k(), "quantized affine input features {feat} vs weight rows {}", w.k());
+    with_act_buffer(|xq| {
+        quantize_slice(act, x.data(), xq);
+        with_scratch(|s| {
+            let mut out = s.take_uninit(batch * w.n());
+            let epi = QEpilogue { scales: combined, bias: bias.map(|b| b.data()), relu };
+            qgemm(&mut out, &QMatA::Dense { d: xq, ld: feat }, act.zero_point, w, batch, &epi);
+            NdArray::from_vec(&[batch, w.n()], out)
+        })
+    })
+}
+
+/// Quantized conv: quantize the NCHW image to u8 once, read its
+/// im2col matrix virtually (padding taps yield the zero point), run
+/// the int8 GEMM, and lay the rows back out as NCHW.
+pub fn qconv2d_forward(
+    x: &NdArray,
+    act: &ActQuant,
+    w: &QMatB,
+    combined: &[f32],
+    bias: Option<&NdArray>,
+    relu: bool,
+    g: &Conv2dGeom,
+) -> NdArray {
+    assert_eq!(x.rank(), 4, "quantized conv expects NCHW input");
+    let (n, c, h, wd) = (x.dims()[0], x.dims()[1], x.dims()[2], x.dims()[3]);
+    assert_eq!(
+        c * g.kernel.0 * g.kernel.1,
+        w.k(),
+        "quantized conv input channels {c} x kernel {:?} vs weight k {}",
+        g.kernel,
+        w.k()
+    );
+    let (oh, ow) = g.out_hw(h, wd);
+    let rows = n * oh * ow;
+    let oc = w.n();
+    with_act_buffer(|xq| {
+        quantize_slice(act, x.data(), xq);
+        let cols = QColView { x: xq, c, h, w: wd, oh, ow, g: *g, zp: act.zero_point };
+        with_scratch(|s| {
+            let mut yrows = s.take_uninit(rows * oc);
+            let epi = QEpilogue { scales: combined, bias: bias.map(|b| b.data()), relu };
+            qgemm(&mut yrows, &QMatA::Im2col(cols), act.zero_point, w, rows, &epi);
+            let mut out = s.take_uninit(rows * oc);
+            nhwc_to_nchw(&mut out, &yrows, n, oc, oh, ow);
+            s.put(yrows);
+            NdArray::from_vec(&[n, oc, oh, ow], out)
+        })
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::parallel::with_thread_limit;
+    use crate::tensor::Rng;
+
+    /// Per-column symmetric i8 quantization of a row-major `[k, n]`
+    /// f32 matrix (test-local; the real path lives in `crate::quant`).
+    fn quantize_cols(w: &[f32], k: usize, n: usize) -> (Vec<i8>, Vec<f32>) {
+        let mut scales = vec![0.0f32; n];
+        for j in 0..n {
+            let mut m = 0.0f32;
+            for kk in 0..k {
+                m = m.max(w[kk * n + j].abs());
+            }
+            scales[j] = if m > 0.0 { m / 127.0 } else { 1.0 };
+        }
+        let q: Vec<i8> = w
+            .iter()
+            .enumerate()
+            .map(|(i, &v)| (v / scales[i % n]).round().clamp(-127.0, 127.0) as i8)
+            .collect();
+        (q, scales)
+    }
+
+    #[test]
+    fn act_quant_zero_maps_to_zero_point_exactly() {
+        let aq = ActQuant::from_range(-3.0, 5.0);
+        assert_eq!(aq.quantize(0.0), aq.zero_point);
+        assert_eq!(aq.dequantize(aq.zero_point), 0.0);
+        // positive-only range still includes 0
+        let pos = ActQuant::from_range(2.0, 6.0);
+        assert_eq!(pos.quantize(0.0), pos.zero_point);
+        assert_eq!(pos.zero_point, 0);
+        // degenerate range quantizes onto the zero point
+        let flat = ActQuant::from_range(0.0, 0.0);
+        assert_eq!(flat.quantize(123.0), 0);
+        assert_eq!(flat.scale, 1.0);
+    }
+
+    #[test]
+    fn act_quant_roundtrip_error_is_within_half_a_step() {
+        let aq = ActQuant::from_range(-1.0, 1.0);
+        for i in 0..100 {
+            let v = -1.0 + 0.02 * i as f32;
+            let back = aq.dequantize(aq.quantize(v));
+            assert!((back - v).abs() <= aq.scale * 0.5 + 1e-6, "{v} -> {back}");
+        }
+    }
+
+    #[test]
+    fn qgemm_matches_scalar_reference_exactly() {
+        let mut rng = Rng::new(21);
+        // sizes straddle tile boundaries on both axes
+        let (m, k, n) = (13, 37, 11);
+        let a = rng.rand(&[m, k], -1.0, 1.0);
+        let w = rng.randn(&[k, n], 0.5);
+        let bias: Vec<f32> = (0..n).map(|j| j as f32 * 0.1 - 0.3).collect();
+        let act = ActQuant::from_range(-1.0, 1.0);
+        let (q, wscales) = quantize_cols(w.data(), k, n);
+        let b = QMatB::from_i8_kn(&q, &wscales, k, n);
+        let combined: Vec<f32> = wscales.iter().map(|s| s * act.scale).collect();
+        let mut aq = Vec::new();
+        quantize_slice(&act, a.data(), &mut aq);
+        let mut got = vec![0.0f32; m * n];
+        qgemm(
+            &mut got,
+            &QMatA::Dense { d: &aq, ld: k },
+            act.zero_point,
+            &b,
+            m,
+            &QEpilogue { scales: &combined, bias: Some(&bias), relu: true },
+        );
+        // scalar oracle over the same quantized operands + epilogue
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0i32;
+                let mut colsum = 0i32;
+                for kk in 0..k {
+                    acc += aq[i * k + kk] as i32 * q[kk * n + j] as i32;
+                    colsum += q[kk * n + j] as i32;
+                }
+                let want =
+                    requantize_one(acc, act.zero_point, colsum, combined[j], bias[j], true);
+                assert_eq!(got[i * n + j], want, "mismatch at [{i}, {j}]");
+            }
+        }
+    }
+
+    #[test]
+    fn qgemm_bit_identical_at_any_thread_count() {
+        let mut rng = Rng::new(22);
+        let (m, k, n) = (530, 96, 40); // enough row tiles to shard
+        let a = rng.rand(&[m, k], -2.0, 2.0);
+        let w = rng.randn(&[k, n], 1.0);
+        let act = ActQuant::from_range(-2.0, 2.0);
+        let (q, wscales) = quantize_cols(w.data(), k, n);
+        let b = QMatB::from_i8_kn(&q, &wscales, k, n);
+        let combined: Vec<f32> = wscales.iter().map(|s| s * act.scale).collect();
+        let mut aq = Vec::new();
+        quantize_slice(&act, a.data(), &mut aq);
+        let run = || {
+            let mut out = vec![0.0f32; m * n];
+            qgemm(
+                &mut out,
+                &QMatA::Dense { d: &aq, ld: k },
+                act.zero_point,
+                &b,
+                m,
+                &QEpilogue { scales: &combined, bias: None, relu: false },
+            );
+            out
+        };
+        let serial = with_thread_limit(1, run);
+        let parallel = run();
+        assert_eq!(serial, parallel);
+    }
+
+    #[test]
+    fn qcolview_padding_reads_zero_point() {
+        // 1x1x2x2 image, 3x3 kernel, pad 1: corner patches mostly pad
+        let g = Conv2dGeom { kernel: (3, 3), stride: (1, 1), pad: (1, 1), dilation: (1, 1) };
+        let x = [10u8, 20, 30, 40];
+        let v = QColView { x: &x, c: 1, h: 2, w: 2, oh: 2, ow: 2, g, zp: 7 };
+        // row 0 = patch at (0, 0); tap (0, 0) is out of bounds
+        assert_eq!(v.at(0, 0), 7);
+        // center tap of patch (0, 0) is pixel (0, 0)
+        assert_eq!(v.at(0, 4), 10);
+        // bottom-right tap of patch (1, 1) is out of bounds
+        assert_eq!(v.at(3, 8), 7);
+    }
+}

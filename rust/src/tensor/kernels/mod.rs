@@ -36,6 +36,8 @@
 
 #![allow(clippy::too_many_arguments)]
 
+pub mod int8;
+
 use std::cell::RefCell;
 
 use super::ops::{self, Conv2dGeom};
@@ -768,8 +770,8 @@ fn add_bias_planes(buf: &mut [f32], bias: &[f32], n: usize, c: usize, plane: usi
     }
 }
 
-/// `[n, h, w, c]`-rows buffer → NCHW.
-fn nhwc_to_nchw(dst: &mut [f32], src: &[f32], n: usize, c: usize, h: usize, w: usize) {
+/// `[n, h, w, c]`-rows buffer → NCHW (shared with the int8 conv path).
+pub(crate) fn nhwc_to_nchw(dst: &mut [f32], src: &[f32], n: usize, c: usize, h: usize, w: usize) {
     let hw = h * w;
     debug_assert_eq!(dst.len(), n * c * hw);
     for ni in 0..n {

@@ -69,13 +69,25 @@ impl Default for TrainConfig {
     }
 }
 
-fn make_solver(cfg: &TrainConfig) -> Solver {
-    match cfg.solver.as_str() {
+/// Build the solver `cfg` names, or a clean error listing the options
+/// — the validation entry for untrusted config (CLI flags, nntxt
+/// Optimizer messages) so a typo surfaces as an error message, not a
+/// panic mid-run.
+pub fn try_make_solver(cfg: &TrainConfig) -> Result<Solver, String> {
+    Ok(match cfg.solver.as_str() {
         "sgd" => Solver::sgd(cfg.lr),
         "momentum" => Solver::momentum(cfg.lr, 0.9),
         "adam" => Solver::adam(cfg.lr, 0.9, 0.999, 1e-8),
-        other => panic!("unknown solver '{other}'"),
-    }
+        other => {
+            return Err(format!(
+                "unknown solver '{other}' (available: sgd, momentum, adam)"
+            ))
+        }
+    })
+}
+
+fn make_solver(cfg: &TrainConfig) -> Solver {
+    try_make_solver(cfg).unwrap_or_else(|e| panic!("{e}"))
 }
 
 /// Outcome of a training run (feeds the Console trial records and the
@@ -457,6 +469,15 @@ mod tests {
         let first = report.losses.points()[0].1;
         assert!(report.final_loss() < first, "half training diverged");
         assert_eq!(report.backend, "cpu:half");
+    }
+
+    #[test]
+    fn unknown_solver_errs_cleanly_on_the_try_path() {
+        let cfg = TrainConfig { solver: "adamw".into(), ..Default::default() };
+        let err = try_make_solver(&cfg).unwrap_err();
+        assert!(err.contains("unknown solver 'adamw'"), "{err}");
+        assert!(err.contains("momentum"), "error must list the options: {err}");
+        assert!(try_make_solver(&small_cfg(1)).is_ok());
     }
 
     #[test]

@@ -1,0 +1,179 @@
+//! Int8 quantization parity and robustness suite (CI re-runs it under
+//! `NNL_THREADS=1`): zoo-model fp32-vs-int8 agreement, thread-count
+//! bit-identity of the quantized path, NNB2 size/roundtrip guarantees,
+//! and decoder property tests over truncations and byte flips.
+
+use std::collections::HashMap;
+
+use nnl::bench_quant;
+use nnl::converters::nnb;
+use nnl::models::zoo;
+use nnl::nnp::{CompiledNet, InferencePlan, NetworkDef};
+use nnl::quant::{quantize_net, referenced_params, QuantConfig, QuantizedNet};
+use nnl::tensor::{parallel, NdArray, Rng};
+use nnl::utils::prop;
+
+/// Batch-1 random positional inputs for `net`, from a fresh seed.
+fn random_inputs(net: &NetworkDef, n: usize, seed: u64) -> Vec<Vec<NdArray>> {
+    bench_quant::random_inputs(net, n, &mut Rng::new(seed))
+}
+
+/// Quantize a zoo model on 16 calibration samples.
+fn quantized_zoo(name: &str) -> (NetworkDef, HashMap<String, NdArray>, QuantizedNet) {
+    let (net, params) = zoo::export_eval(name, 11);
+    let calib = random_inputs(&net, 16, 77);
+    let (_, qnet) =
+        quantize_net(&net, &params, &calib, &QuantConfig::default()).expect("quantizes");
+    (net, params, qnet)
+}
+
+#[test]
+fn quantized_mlp_top1_agrees_with_fp32() {
+    let (net, params, qnet) = quantized_zoo("mlp");
+    // all three affine layers take the int8 path
+    assert_eq!(qnet.n_quantized(), 3, "quantized: {:?}", qnet.quantized_layers());
+    let plan = CompiledNet::compile(&net, &params).unwrap();
+    let evals = random_inputs(&net, 64, 78);
+    let agree = evals
+        .iter()
+        .filter(|s| {
+            let f = plan.execute_positional(s.as_slice()).unwrap();
+            let q = qnet.execute_positional(s.as_slice()).unwrap();
+            assert!(!q[0].has_inf_or_nan(), "int8 produced inf/nan");
+            f[0].argmax_flat() == q[0].argmax_flat()
+        })
+        .count();
+    assert!(agree * 100 >= evals.len() * 95, "top-1 agreement {agree}/{}", evals.len());
+}
+
+#[test]
+fn quantized_lenet_conv_path_agrees_with_fp32() {
+    let (net, params, qnet) = quantized_zoo("lenet");
+    // 2 convolutions + 2 affines ride the int8 GEMM
+    assert_eq!(qnet.n_quantized(), 4, "quantized: {:?}", qnet.quantized_layers());
+    let plan = CompiledNet::compile(&net, &params).unwrap();
+    let evals = random_inputs(&net, 32, 79);
+    let agree = evals
+        .iter()
+        .filter(|s| {
+            let f = plan.execute_positional(s.as_slice()).unwrap();
+            let q = qnet.execute_positional(s.as_slice()).unwrap();
+            f[0].argmax_flat() == q[0].argmax_flat()
+        })
+        .count();
+    assert!(agree * 100 >= evals.len() * 90, "top-1 agreement {agree}/{}", evals.len());
+}
+
+#[test]
+fn quantized_path_is_bit_identical_at_any_thread_count() {
+    let (net, _, qnet) = quantized_zoo("lenet");
+    for s in random_inputs(&net, 4, 80) {
+        let full = qnet.execute_positional(&s).unwrap();
+        let serial =
+            parallel::with_thread_limit(1, || qnet.execute_positional(&s).unwrap());
+        for (a, b) in full.iter().zip(&serial) {
+            assert_eq!(a.dims(), b.dims());
+            assert_eq!(a.data(), b.data(), "thread count changed quantized output bits");
+        }
+    }
+}
+
+#[test]
+fn nnb2_zoo_artifacts_are_3x_smaller_and_roundtrip() {
+    for name in ["mlp", "lenet"] {
+        let (net, params) = zoo::export_eval(name, 11);
+        let calib = random_inputs(&net, 8, 81);
+        let (model, qnet) =
+            quantize_net(&net, &params, &calib, &QuantConfig::default()).unwrap();
+        // v1 counterpart carries the same referenced params as f32
+        let v1 = nnb::to_nnb(&net, &referenced_params(&net, &params));
+        let v2 = nnb::to_nnb2(&model);
+        assert!(
+            v2.len() * 3 <= v1.len(),
+            "{name}: NNB2 {} B vs NNB1 {} B is under 3x",
+            v2.len(),
+            v1.len()
+        );
+        // decode + compile + execute == the in-memory quantized net
+        let engine = nnb::NnbEngine::load(&v2).unwrap();
+        let x = random_inputs(&net, 1, 82).pop().unwrap();
+        let from_disk = match &engine {
+            nnb::NnbEngine::Int8(q) => q.execute_positional(&x).unwrap(),
+            nnb::NnbEngine::F32(_) => panic!("NNB2 must load as a quantized plan"),
+        };
+        let in_memory = qnet.execute_positional(&x).unwrap();
+        assert_eq!(from_disk[0].data(), in_memory[0].data(), "{name} roundtrip drifted");
+    }
+}
+
+#[test]
+fn nnb_decoder_never_panics_on_truncation() {
+    let (net, params) = zoo::export_eval("mlp", 11);
+    let calib = random_inputs(&net, 4, 83);
+    let (model, _) = quantize_net(&net, &params, &calib, &QuantConfig::default()).unwrap();
+    let v1 = nnb::to_nnb(&net, &referenced_params(&net, &params));
+    let v2 = nnb::to_nnb2(&model);
+    // every strict prefix must decode to Err — never a panic
+    prop::check(
+        84,
+        200,
+        |rng| rng.below(v1.len()),
+        |&cut| match nnb::from_nnb(&v1[..cut]) {
+            Err(_) => Ok(()),
+            Ok(_) => Err(format!("v1 prefix of {cut} bytes decoded")),
+        },
+    );
+    prop::check(
+        85,
+        200,
+        |rng| rng.below(v2.len()),
+        |&cut| match nnb::from_nnb2(&v2[..cut]) {
+            Err(_) => Ok(()),
+            Ok(_) => Err(format!("v2 prefix of {cut} bytes decoded")),
+        },
+    );
+}
+
+#[test]
+fn nnb_decoder_never_panics_on_byte_flips() {
+    let (net, params) = zoo::export_eval("mlp", 11);
+    let calib = random_inputs(&net, 4, 86);
+    let (model, _) = quantize_net(&net, &params, &calib, &QuantConfig::default()).unwrap();
+    let v2 = nnb::to_nnb2(&model);
+    let v1 = nnb::to_nnb(&net, &referenced_params(&net, &params));
+    // a flip may still decode (e.g. inside weight data) — the property
+    // is that decoding terminates with Ok or Err, never a panic/abort
+    prop::check(
+        87,
+        300,
+        |rng| (rng.below(v1.len()), 1u8 << rng.below(8)),
+        |&(pos, mask)| {
+            let mut bytes = v1.clone();
+            bytes[pos] ^= mask;
+            let _ = nnb::load_nnb(&bytes);
+            Ok(())
+        },
+    );
+    prop::check(
+        88,
+        300,
+        |rng| (rng.below(v2.len()), 1u8 << rng.below(8)),
+        |&(pos, mask)| {
+            let mut bytes = v2.clone();
+            bytes[pos] ^= mask;
+            let _ = nnb::load_nnb(&bytes);
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn quantized_plan_rejects_bad_shapes_cleanly() {
+    let (_, _, qnet) = quantized_zoo("mlp");
+    // wrong rank
+    let err = qnet.execute_positional(&[NdArray::zeros(&[64])]).unwrap_err();
+    assert!(err.contains("incompatible"), "{err}");
+    // wrong feature count
+    let err = qnet.execute_positional(&[NdArray::zeros(&[1, 63])]).unwrap_err();
+    assert!(err.contains("incompatible"), "{err}");
+}
