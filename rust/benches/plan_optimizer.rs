@@ -1,0 +1,14 @@
+//! `cargo bench --bench plan_optimizer` — the compile-time graph
+//! optimizer suite: optimized-vs-unoptimized step counts, static-plan
+//! peak arena bytes, per-pass rewrite stats, and serving throughput on
+//! both plans across zoo models. Same harness as `nnl bench-plan`;
+//! writes `BENCH_plan.json`.
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let report = nnl::bench_plan::run(quick);
+    print!("{}", report.text);
+    let out = std::path::PathBuf::from("BENCH_plan.json");
+    nnl::bench_plan::write_json(&out, &report.json).expect("writing bench JSON");
+    println!("wrote {}", out.display());
+}

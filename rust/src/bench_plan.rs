@@ -1,0 +1,113 @@
+//! Graph-optimizer benchmark harness — shared by `nnl bench-plan` and
+//! `benches/plan_optimizer.rs`, emitting `BENCH_plan.json`.
+//!
+//! Measures the compile-time pass pipeline's acceptance numbers across
+//! zoo models: optimized-vs-unoptimized step counts, static-plan peak
+//! arena bytes, per-pass rewrite counts, and sequential serving
+//! throughput on both plans. A parity check runs before any timing so
+//! the numbers can never describe a wrong plan.
+
+use crate::bench_quant::random_inputs;
+use crate::models::zoo;
+use crate::nnp::passes::OptLevel;
+use crate::nnp::plan::CompiledNet;
+use crate::tensor::{parallel, Rng};
+use crate::utils::bench::{bench, table, Measurement};
+use crate::utils::json::Json;
+
+/// Everything one run produces: the human table and the JSON payload.
+pub struct PlanBenchReport {
+    pub text: String,
+    pub json: Json,
+}
+
+/// Run the suite. `quick` shrinks sizes/iterations for CI smoke use
+/// (resnet18 stays in — CI asserts the optimizer strictly improves it).
+pub fn run(quick: bool) -> PlanBenchReport {
+    let mut rows: Vec<Measurement> = Vec::new();
+    let mut rng = Rng::new(17);
+    let nt = parallel::num_threads();
+    let model_names: Vec<&str> = if quick {
+        vec!["mlp", "lenet", "resnet18"]
+    } else {
+        vec!["mlp", "lenet", "resnet18", "resnet50", "mobilenet_v3_small"]
+    };
+    let n_eval = if quick { 16 } else { 128 };
+    let mut model_rows: Vec<Json> = Vec::new();
+    let mut no_worse = true;
+    let mut resnet_improved = false;
+    for name in model_names {
+        let (net, params) = zoo::export_eval(name, 11);
+        let p0 = CompiledNet::compile_with(&net, &params, OptLevel::O0)
+            .unwrap_or_else(|e| panic!("{name} O0 compile: {e}"));
+        let p2 = CompiledNet::compile(&net, &params)
+            .unwrap_or_else(|e| panic!("{name} O2 compile: {e}"));
+        let evals = random_inputs(&net, n_eval, &mut rng);
+        // parity sanity before timing anything
+        let a = p0.execute_positional(&evals[0]).expect("O0 run");
+        let b = p2.execute_positional(&evals[0]).expect("O2 run");
+        assert!(
+            a[0].allclose(&b[0], 1e-3, 1e-3),
+            "{name}: optimized plan drifted by {}",
+            a[0].max_abs_diff(&b[0])
+        );
+        let m0 = bench(&format!("{name} O0 ({} steps) x{n_eval}", p0.n_steps()), 1, 3, || {
+            for s in &evals {
+                p0.execute_positional(s).expect("O0 serve");
+            }
+        });
+        let m2 = bench(&format!("{name} O2 ({} steps) x{n_eval}", p2.n_steps()), 1, 3, || {
+            for s in &evals {
+                p2.execute_positional(s).expect("O2 serve");
+            }
+        });
+        let rps0 = n_eval as f64 / m0.mean_secs;
+        let rps2 = n_eval as f64 / m2.mean_secs;
+        let peak0 = p0.peak_arena_bytes().unwrap_or(0);
+        let peak2 = p2.peak_arena_bytes().unwrap_or(0);
+        no_worse &=
+            p2.n_steps() <= p0.n_steps() && peak2 <= peak0 && peak0 > 0 && peak2 > 0;
+        if name == "resnet18" {
+            resnet_improved = p2.n_steps() < p0.n_steps() && peak2 < peak0 && peak2 > 0;
+        }
+        let passes = Json::obj(
+            p2.pass_stats()
+                .iter()
+                .map(|s| (s.pass, Json::num(s.rewrites as f64)))
+                .collect(),
+        );
+        model_rows.push(Json::obj(vec![
+            ("name", Json::str(name)),
+            ("steps_unoptimized", Json::num(p0.n_steps() as f64)),
+            ("steps_optimized", Json::num(p2.n_steps() as f64)),
+            ("peak_bytes_unoptimized", Json::num(peak0 as f64)),
+            ("peak_bytes_optimized", Json::num(peak2 as f64)),
+            ("rps_unoptimized", Json::num(rps0)),
+            ("rps_optimized", Json::num(rps2)),
+            ("passes", passes),
+        ]));
+        rows.push(m0);
+        rows.push(m2);
+    }
+
+    let json = Json::obj(vec![
+        ("nnl_threads", Json::num(nt as f64)),
+        ("models", Json::Arr(model_rows)),
+        ("optimized_no_worse", Json::Bool(no_worse)),
+        ("resnet_improved", Json::Bool(resnet_improved)),
+    ]);
+    let mut text = table(
+        &format!("Compile-time graph optimizer: O0 vs O2 plans (NNL_THREADS = {nt})"),
+        &rows,
+    );
+    text.push_str(&format!(
+        "optimized plans no worse (steps & peak arena bytes) across models: {no_worse}\n\
+         resnet18 strictly improved (fewer steps, lower peak): {resnet_improved}\n",
+    ));
+    PlanBenchReport { text, json }
+}
+
+/// Write the JSON payload where the acceptance tooling expects it.
+pub fn write_json(path: &std::path::Path, json: &Json) -> std::io::Result<()> {
+    std::fs::write(path, json.to_string_pretty())
+}

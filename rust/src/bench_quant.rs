@@ -9,6 +9,7 @@
 
 use crate::converters::nnb;
 use crate::models::zoo;
+use crate::nnp::passes::{self, OptLevel};
 use crate::nnp::plan::{CompiledNet, InferencePlan};
 use crate::nnp::NetworkDef;
 use crate::quant::{self, referenced_params, QTensor, QuantConfig};
@@ -105,11 +106,15 @@ pub fn run(quick: bool) -> QuantBenchReport {
         let (net, params) = zoo::export_eval(name, 11);
         let calib = random_inputs(&net, 16, &mut rng);
         // explicit pipeline (not quantize_net): agreement below must be
-        // measured against the very plan calibration ran on
-        let plan = CompiledNet::compile(&net, &params).expect("zoo model compiles");
+        // measured against the very plan calibration ran on — the
+        // graph is optimized first, exactly as `nnl quantize` does
+        let (onet, oparams, _) = passes::optimize(&net, &params, OptLevel::default())
+            .expect("zoo model optimizes");
+        let plan = CompiledNet::compile(&onet, &oparams).expect("zoo model compiles");
         let ranges = quant::calibrate(&plan, &calib, &QuantConfig::default())
             .expect("zoo model calibrates");
-        let model = quant::quantize_model(&net, &params, &ranges).expect("zoo model quantizes");
+        let model =
+            quant::quantize_model(&onet, &oparams, &ranges).expect("zoo model quantizes");
         let qnet = quant::QuantizedNet::compile(&model).expect("quantized plan compiles");
         let evals = random_inputs(&net, n_eval, &mut rng);
         let agree = evals

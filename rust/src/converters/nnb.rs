@@ -18,8 +18,13 @@
 //!
 //! NNB2 carries int8 weight blobs plus per-channel scales and the
 //! activation calibration table — the ~4×-smaller artifact of the
-//! quantized deployment path (`crate::quant`). v1 images stay fully
-//! readable.
+//! quantized deployment path (`crate::quant`). Since the quantization
+//! pipeline runs the compile-time graph optimizer first
+//! (`nnp::passes`), NNB2 artifacts store the *optimized* definition
+//! (BatchNorm folded into dense weights, no-ops elided); artifacts
+//! written before the optimizer existed still load — their BN layers
+//! fold at compile time and the folded weights re-quantize at load.
+//! v1 images stay fully readable.
 //!
 //! Execution goes through [`NnbEngine`]: decode once, compile once
 //! (f32 images into a [`CompiledNet`], v2 images into a

@@ -67,6 +67,25 @@
 //! CLI: `nnl serve --in model.nnp` / `nnl bench-serve`; numbers in
 //! `benches/serve_throughput.rs`.
 //!
+//! ## The graph optimizer: a compile-time pass pipeline
+//!
+//! Compilation is an explicit **lower → optimize → schedule →
+//! allocate** pipeline ([`nnp::passes`]): graph-level passes over the
+//! NNP IR (Identity/Dropout elision, dead-op elimination, constant
+//! folding of parameter-only subtrees, BatchNorm folding into the
+//! preceding Conv/Affine weights) plus a step-level pass fusing
+//! Affine/Conv → ReLU chains — all driven by an [`nnp::OptLevel`]:
+//! O0 executes the graph exactly as written (the interpreter /
+//! training contract), O1 applies only bit-identical rewrites, O2
+//! (the serving default) adds the numeric folds. The executor is a
+//! dumb step loop: every step knows its kernel at compile time, and a
+//! liveness-based static memory plan (greedy interval coloring)
+//! assigns slots arena offsets and reports exact peak bytes
+//! ([`nnp::CompiledNet::peak_arena_bytes`]). Quantization rides the
+//! same pipeline, so BN-folded convolutions reach the int8 path. CLI:
+//! `nnl optimize` (pass stats, op histogram, peak bytes) and
+//! `nnl bench-plan` (→ `BENCH_plan.json`).
+//!
 //! ## The embedded path: int8 quantized inference (NNB2)
 //!
 //! The paper's compatibility story ends at NNP → NNB for the embedded
@@ -123,6 +142,7 @@
 //! | [`comm`] | simulated data-parallel communicator (§3.2) |
 //! | [`trainer`] | dynamic / static / distributed training loops |
 //! | [`nnp`] | NNP format: IR, trace, archive, interpreter, **plan** |
+//! | [`nnp::passes`] | graph optimizer: `Pass` pipeline, memory planner |
 //! | [`quant`] | int8 calibration, `QuantizedNet`, NNB2 model |
 //! | [`serve`] | batched multi-threaded inference server |
 //! | [`converters`] | ONNX-lite, NNB/NNB2, frozen graph, Rust source |
@@ -130,6 +150,7 @@
 //! | [`console`] | headless Neural Network Console: trials, search |
 //! | [`bench_kernels`] | kernel bench harness (`BENCH_kernels.json`) |
 //! | [`bench_quant`] | quantization bench harness (`BENCH_quant.json`) |
+//! | [`bench_plan`] | graph-optimizer bench harness (`BENCH_plan.json`) |
 //! | [`data`] | synthetic datasets + loaders |
 //! | [`monitor`] | series/time monitors |
 //! | [`context`] | backend/precision context (Listing 2) |
@@ -156,6 +177,7 @@
 //! the migration note.
 
 pub mod bench_kernels;
+pub mod bench_plan;
 pub mod bench_quant;
 pub mod comm;
 pub mod console;

@@ -14,7 +14,7 @@ use nnl::context::Context;
 use nnl::converters::{frozen, nnb, onnx_lite, query, rs_source};
 use nnl::data::SyntheticImages;
 use nnl::models::zoo;
-use nnl::nnp::{CompiledNet, InferencePlan, Nnp};
+use nnl::nnp::{passes, CompiledNet, InferencePlan, Nnp, OptLevel};
 use nnl::quant::{self, QuantConfig};
 use nnl::runtime::Manifest;
 use nnl::serve::{ServeConfig, Server};
@@ -36,6 +36,10 @@ USAGE:
             # samples, write an NNB2 artifact (int8 weights + scales),
             # report size vs NNB1 and fp32-vs-int8 top-1 agreement
   nnl query --in model.nnp [--target onnx|nnb|frozen|rs_source]
+  nnl optimize --in model.nnp [--network NAME] [--opt 0|1|2]
+            # inspect the compile-time graph optimizer: per-pass
+            # rewrite stats, op histogram and step count before/after,
+            # static-plan peak arena bytes before/after
   nnl serve --in model.nnp|model.nnb|model.nnb2 [--workers N]
             [--max-batch B] [--max-wait-ms MS]
             # compile once, then serve stdin requests (one line of
@@ -51,6 +55,9 @@ USAGE:
             # fp32 vs int8: GEMM GFLOP/s at equal thread counts, zoo
             # top-1 agreement, NNB1-vs-NNB2 artifact bytes, serve
             # throughput; writes BENCH_quant.json
+  nnl bench-plan [--quick] [--out FILE]
+            # graph optimizer: O0-vs-O2 step counts, peak arena bytes,
+            # per-pass rewrites, serve rps; writes BENCH_plan.json
   nnl footprint [--model <name>]
   nnl search [--generations N] [--population N]
   nnl trials --dir DIR
@@ -336,6 +343,73 @@ fn main() {
             nnl::bench_kernels::write_json(&out, &report.json).expect("writing bench JSON");
             println!("wrote {}", out.display());
         }
+        "optimize" => {
+            let input = PathBuf::from(flags.get("in").expect("--in model.nnp required"));
+            let nnp = Nnp::load(&input).unwrap_or_else(|e| {
+                eprintln!("loading NNP: {e}");
+                std::process::exit(1);
+            });
+            let net = match flags.get("network").map(String::as_str) {
+                Some(n) => nnp.network(n).unwrap_or_else(|| {
+                    eprintln!("no network '{n}' in {}", input.display());
+                    std::process::exit(1);
+                }),
+                None => nnp.networks.first().unwrap_or_else(|| {
+                    eprintln!("NNP holds no networks");
+                    std::process::exit(1);
+                }),
+            };
+            let level = match flags.get("opt") {
+                Some(v) => OptLevel::from_flag(v).unwrap_or_else(|| {
+                    eprintln!("--opt expects 0, 1 or 2, got '{v}'");
+                    std::process::exit(1);
+                }),
+                None => OptLevel::default(),
+            };
+            let pm = nnp.param_map();
+            let before = die(
+                CompiledNet::compile_with(net, &pm, OptLevel::O0),
+                "compiling O0 plan",
+            );
+            let after = die(
+                CompiledNet::compile_with(net, &pm, level),
+                "compiling optimized plan",
+            );
+            println!(
+                "network '{}': O0 -> {}",
+                after.name(),
+                level.name(),
+            );
+            println!(
+                "  steps: {} -> {}    peak arena bytes: {} -> {}",
+                before.n_steps(),
+                after.n_steps(),
+                before
+                    .peak_arena_bytes()
+                    .map_or("n/a".to_string(), |b| b.to_string()),
+                after
+                    .peak_arena_bytes()
+                    .map_or("n/a".to_string(), |b| b.to_string()),
+            );
+            println!("  passes:");
+            for s in after.pass_stats() {
+                println!("    {:<16} {} rewrites", s.pass, s.rewrites);
+            }
+            let render = |h: &[(String, usize)]| {
+                h.iter().map(|(n, c)| format!("{n} x{c}")).collect::<Vec<_>>().join(", ")
+            };
+            println!("  ops O0:           {}", render(&before.op_histogram()));
+            println!("  ops {}:           {}", level.name(), render(&after.op_histogram()));
+        }
+        "bench-plan" => {
+            let report = nnl::bench_plan::run(flags.contains_key("quick"));
+            print!("{}", report.text);
+            let out = PathBuf::from(
+                flags.get("out").cloned().unwrap_or_else(|| "BENCH_plan.json".into()),
+            );
+            nnl::bench_plan::write_json(&out, &report.json).expect("writing bench JSON");
+            println!("wrote {}", out.display());
+        }
         "bench-quant" => {
             let report = nnl::bench_quant::run(flags.contains_key("quick"));
             print!("{}", report.text);
@@ -377,11 +451,18 @@ fn main() {
             let n_samples: usize = get(&flags, "samples", 32);
             let mut rng = Rng::new(get(&flags, "seed", 19));
             let samples = nnl::bench_quant::random_inputs(net, n_samples.max(1), &mut rng);
-            // one compiled plan drives calibration AND the fp32 side of
-            // the agreement report below
-            let plan = die(CompiledNet::compile(net, &pm), "compiling fp32 plan");
+            // optimize first (O2: BN folding, elision) so folded convs
+            // quantize; the NNB2 artifact carries the optimized graph.
+            // One compiled plan then drives calibration AND the fp32
+            // side of the agreement report below.
+            let (onet, oparams, _) = die(
+                passes::optimize(net, &pm, OptLevel::default()),
+                "optimizing graph",
+            );
+            let plan = die(CompiledNet::compile(&onet, &oparams), "compiling fp32 plan");
             let calib = die(quant::calibrate(&plan, &samples, &cfg), "calibration failed");
-            let model = die(quant::quantize_model(net, &pm, &calib), "quantization failed");
+            let model =
+                die(quant::quantize_model(&onet, &oparams, &calib), "quantization failed");
             let qnet = die(quant::QuantizedNet::compile(&model), "quantized compile failed");
             let v2 = nnb::to_nnb2(&model);
             std::fs::write(&out, &v2).expect("writing NNB2");

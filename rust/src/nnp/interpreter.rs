@@ -8,11 +8,17 @@
 //! construction.
 //!
 //! [`run`] is the convenience one-shot entry point: it compiles a
-//! [`CompiledNet`] and executes it once, so it shares every validation
-//! and dispatch path with the planned runtime. Services that run the
-//! same network repeatedly should call [`CompiledNet::compile`] once
-//! and `execute` per request instead — that is the whole point of the
-//! compiled plan (see `nnp::plan`).
+//! [`CompiledNet`] at **O0** (lower + schedule + allocate only — the
+//! graph-optimizer passes are skipped) and executes it once, so it
+//! shares every validation and dispatch path with the planned runtime
+//! while executing the graph *exactly as written*. That pins the
+//! reference semantics: converter round-trips, gradcheck-style
+//! comparisons and trace tests stay bit-identical to the tape no
+//! matter what the optimizer learns to rewrite. Services that run the
+//! same network repeatedly should call [`CompiledNet::compile`] (full
+//! O2 pipeline) once and `execute` per request instead — that is the
+//! whole point of the compiled plan (see `nnp::plan` and
+//! `nnp::passes`).
 
 use std::collections::HashMap;
 
@@ -32,7 +38,7 @@ pub fn run(
     inputs: &HashMap<String, NdArray>,
     params: &HashMap<String, NdArray>,
 ) -> Result<Vec<NdArray>, String> {
-    CompiledNet::compile(net, params)?.execute(inputs)
+    CompiledNet::compile_with(net, params, crate::nnp::OptLevel::O0)?.execute(inputs)
 }
 
 #[cfg(test)]

@@ -744,11 +744,16 @@ impl NetworkDef {
     }
 
     /// Structural validation: every layer input must be produced by an
-    /// earlier layer or be a network input; outputs must exist; every
-    /// layer must carry exactly one output, an input+param count
-    /// within its op's declared arity ([`Op::arity`]), and sane
-    /// shape-independent attributes (non-zero strides/kernels/
-    /// dilations) — so malformed files fail at load, not mid-request.
+    /// earlier layer or be a network input (a read of a tensor only
+    /// produced *later* is reported as a cyclic/misordered graph, not
+    /// an opaque compile failure); tensor names must be unique —
+    /// duplicate outputs (shadowing) are rejected, which is also what
+    /// makes the optimizer's name-based rewiring sound; outputs must
+    /// exist; every layer must carry exactly one output, an
+    /// input+param count within its op's declared arity
+    /// ([`Op::arity`]), and sane shape-independent attributes
+    /// (non-zero strides/kernels/dilations) — so malformed files fail
+    /// at load, not mid-request.
     pub fn validate(&self) -> Result<(), String> {
         fn check_attrs(op: &Op) -> Result<(), String> {
             let nz = |what: &str, p: (usize, usize)| {
@@ -771,13 +776,23 @@ impl NetworkDef {
                 _ => Ok(()),
             }
         }
+        let produced: std::collections::HashSet<&str> =
+            self.layers.iter().flat_map(|l| l.outputs.iter().map(String::as_str)).collect();
         let mut known: std::collections::HashSet<&str> =
             self.inputs.iter().map(|t| t.name.as_str()).collect();
         for l in &self.layers {
             check_attrs(&l.op).map_err(|e| format!("layer '{}': {e}", l.name))?;
             for i in &l.inputs {
                 if !known.contains(i.as_str()) {
-                    return Err(format!("layer '{}' reads undefined tensor '{}'", l.name, i));
+                    return Err(if produced.contains(i.as_str()) {
+                        format!(
+                            "layer '{}' reads tensor '{}' before it is produced — \
+                             the graph is cyclic or not topologically ordered",
+                            l.name, i
+                        )
+                    } else {
+                        format!("layer '{}' reads undefined tensor '{}'", l.name, i)
+                    });
                 }
             }
             if l.outputs.len() != 1 {
@@ -807,7 +822,13 @@ impl NetworkDef {
                 });
             }
             for o in &l.outputs {
-                known.insert(o);
+                if !known.insert(o) {
+                    return Err(format!(
+                        "layer '{}': duplicate output tensor '{o}' — tensor names \
+                         must be unique (shadowing is not allowed)",
+                        l.name
+                    ));
+                }
             }
         }
         for o in &self.outputs {
@@ -965,6 +986,55 @@ pub(crate) mod tests {
         let mut m = tiny_net();
         m.outputs[0] = "ghost".into();
         assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_cyclic_graph_with_clear_error() {
+        // a reads b's output, b reads a's output: a hand-built cycle
+        let n = NetworkDef {
+            name: "cyc".into(),
+            inputs: vec![TensorDef { name: "x".into(), dims: vec![1, 4] }],
+            outputs: vec!["u".into()],
+            layers: vec![
+                Layer {
+                    name: "a".into(),
+                    op: Op::Neg,
+                    inputs: vec!["v".into()],
+                    params: vec![],
+                    outputs: vec!["u".into()],
+                },
+                Layer {
+                    name: "b".into(),
+                    op: Op::Neg,
+                    inputs: vec!["u".into()],
+                    params: vec![],
+                    outputs: vec!["v".into()],
+                },
+            ],
+        };
+        let err = n.validate().unwrap_err();
+        assert!(err.contains("layer 'a'"), "{err}");
+        assert!(err.contains("cyclic"), "{err}");
+        // a self-loop is a cycle too
+        let mut s = tiny_net();
+        s.layers[1].inputs = vec!["y".into()];
+        let err = s.validate().unwrap_err();
+        assert!(err.contains("cyclic"), "{err}");
+    }
+
+    #[test]
+    fn validate_rejects_duplicate_output_names() {
+        let mut n = tiny_net();
+        n.layers[1].outputs = vec!["h".into()]; // shadows layer 0's output
+        n.outputs = vec!["h".into()];
+        let err = n.validate().unwrap_err();
+        assert!(err.contains("duplicate output tensor 'h'"), "{err}");
+        // redefining a network input is a duplicate as well
+        let mut m = tiny_net();
+        m.layers[1].outputs = vec!["x".into()];
+        m.outputs = vec!["x".into()];
+        let err = m.validate().unwrap_err();
+        assert!(err.contains("duplicate"), "{err}");
     }
 
     #[test]

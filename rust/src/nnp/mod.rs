@@ -15,10 +15,12 @@ pub mod interpreter;
 pub mod ir;
 pub mod nntxt;
 pub mod params;
+pub mod passes;
 pub mod plan;
 pub mod trace;
 
 pub use ir::{Layer, NetworkDef, Op, TensorDef};
+pub use passes::{OptLevel, PassStat};
 pub use plan::{CompiledNet, InferencePlan};
 pub use trace::trace;
 

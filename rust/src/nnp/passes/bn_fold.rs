@@ -1,0 +1,305 @@
+//! BatchNorm folding (inference mode, running statistics).
+//!
+//! `BatchNormalization` after a Convolution/Affine computes, per
+//! output channel `c`:
+//!
+//! ```text
+//!   y = gamma[c] · (dense(x) − mean[c]) / sqrt(var[c] + eps) + beta[c]
+//! ```
+//!
+//! With `s[c] = gamma[c] / sqrt(var[c] + eps)` this is an affine
+//! rewrite of the dense layer's own parameters:
+//!
+//! ```text
+//!   W'[c] = s[c] · W[c]          b'[c] = s[c]·(b[c] − mean[c]) + beta[c]
+//! ```
+//!
+//! so the BN layer disappears entirely — the dominant layer-count and
+//! peak-memory win on every zoo CNN, and what makes BN-sandwiched
+//! convolutions *quantizable* (the int8 path only lowers plain dense
+//! layers). Float re-association makes this exact only to ≤ ~1e-4
+//! relative, which is why it lives at O2, not O1.
+//!
+//! A fold is applied only when it is provably safe:
+//! - the BN input is produced by an Affine/Convolution layer with a
+//!   single activation input and owned (unshared) W/b parameters,
+//! - the BN layer is the *only* reader of that output, which is not a
+//!   declared network output,
+//! - every parameter involved exists with per-channel sizes matching
+//!   the dense layer's output-channel count.
+
+use crate::nnp::ir::Op;
+use crate::tensor::NdArray;
+
+use super::{Module, Pass};
+
+pub struct BnFold;
+
+/// Everything one fold needs, gathered immutably before mutating.
+struct Fold {
+    dense: usize,
+    bn: usize,
+    new_w: (String, NdArray),
+    new_b: (String, NdArray),
+}
+
+fn find_fold(m: &Module) -> Option<Fold> {
+    let net = &m.net;
+    // tensor-name read counts and parameter-name reference counts
+    let mut reads = std::collections::HashMap::<&str, usize>::new();
+    let mut prefs = std::collections::HashMap::<&str, usize>::new();
+    for l in &net.layers {
+        for i in &l.inputs {
+            *reads.entry(i.as_str()).or_insert(0) += 1;
+        }
+        for p in &l.params {
+            *prefs.entry(p.as_str()).or_insert(0) += 1;
+        }
+    }
+    for (j, bn) in net.layers.iter().enumerate() {
+        let Op::BatchNorm { eps } = &bn.op else { continue };
+        if bn.inputs.len() != 1 || bn.params.len() != 4 {
+            continue;
+        }
+        let src = bn.inputs[0].as_str();
+        if net.outputs.iter().any(|o| o == src) || reads.get(src).copied() != Some(1) {
+            continue;
+        }
+        let Some(i) = net.layers.iter().position(|p| p.outputs[0] == src) else { continue };
+        let dense = &net.layers[i];
+        if dense.inputs.len() != 1 || dense.params.is_empty() || dense.params.len() > 2 {
+            continue;
+        }
+        // folding rewrites W/b in place (under new names); a weight
+        // shared with any other layer must stay untouched
+        if dense.params.iter().any(|p| prefs.get(p.as_str()).copied() != Some(1)) {
+            continue;
+        }
+        let Some(w) = m.params.get(dense.params[0].as_str()) else { continue };
+        // output-channel count and the contiguous per-channel block
+        let (c, layout) = match &dense.op {
+            Op::Affine if w.rank() == 2 => (w.dims()[1], AffineCols),
+            Op::Convolution { .. } if w.rank() == 4 => (w.dims()[0], ConvRows),
+            _ => continue,
+        };
+        if c == 0 {
+            continue;
+        }
+        let bias = match dense.params.get(1) {
+            Some(bname) => match m.params.get(bname.as_str()) {
+                Some(b) if b.size() == c => Some(b),
+                _ => continue,
+            },
+            None => None,
+        };
+        // BN params in Op-defined order: beta, gamma, mean, var
+        let mut bnp = Vec::with_capacity(4);
+        for pname in &bn.params {
+            match m.params.get(pname.as_str()) {
+                Some(a) if a.size() == c => bnp.push(a),
+                _ => break,
+            }
+        }
+        if bnp.len() != 4 {
+            continue;
+        }
+        let (beta, gamma, mean, var) = (bnp[0], bnp[1], bnp[2], bnp[3]);
+        // s[c] = gamma / sqrt(var + eps), t[c] = beta - mean*s
+        let mut s = vec![0.0f32; c];
+        let mut t = vec![0.0f32; c];
+        for ci in 0..c {
+            let inv = 1.0 / (var.data()[ci] + eps).sqrt();
+            s[ci] = gamma.data()[ci] * inv;
+            t[ci] = beta.data()[ci] - mean.data()[ci] * s[ci];
+        }
+        if s.iter().chain(&t).any(|v| !v.is_finite()) {
+            continue; // degenerate running stats: leave the BN in place
+        }
+        let mut wd = w.data().to_vec();
+        match layout {
+            AffineCols => {
+                // W [in, out]: scale column c
+                let out = c;
+                for row in wd.chunks_mut(out) {
+                    for (ci, v) in row.iter_mut().enumerate() {
+                        *v *= s[ci];
+                    }
+                }
+            }
+            ConvRows => {
+                // W [oc, ic, kh, kw]: scale the block of channel c
+                let inner = w.size() / c;
+                for (ci, block) in wd.chunks_mut(inner).enumerate() {
+                    for v in block {
+                        *v *= s[ci];
+                    }
+                }
+            }
+        }
+        let nb: Vec<f32> = match bias {
+            Some(b) => (0..c).map(|ci| s[ci] * (b.data()[ci] - mean.data()[ci]) + beta.data()[ci]).collect(),
+            None => t,
+        };
+        let wname = m.fresh_param_name(&format!("{}.bnfold", dense.params[0]));
+        let bname = m.fresh_param_name(&format!("{}.bnfold.b", dense.params[0]));
+        return Some(Fold {
+            dense: i,
+            bn: j,
+            new_w: (wname, NdArray::from_vec(w.dims(), wd)),
+            new_b: (bname, NdArray::from_vec(&[c], nb)),
+        });
+    }
+    None
+}
+
+/// Marker for the per-channel weight layout.
+use Layout::{AffineCols, ConvRows};
+enum Layout {
+    AffineCols,
+    ConvRows,
+}
+
+impl Pass for BnFold {
+    fn name(&self) -> &'static str {
+        "bn-fold"
+    }
+
+    fn run(&self, m: &mut Module) -> Result<usize, String> {
+        let mut folded = 0usize;
+        while let Some(f) = find_fold(m) {
+            let bn_out = m.net.layers[f.bn].outputs[0].clone();
+            {
+                let dense = &mut m.net.layers[f.dense];
+                dense.params = vec![f.new_w.0.clone(), f.new_b.0.clone()];
+                dense.outputs[0] = bn_out;
+            }
+            m.params.insert(f.new_w.0, f.new_w.1);
+            m.params.insert(f.new_b.0, f.new_b.1);
+            m.net.layers.remove(f.bn);
+            folded += 1;
+        }
+        Ok(folded)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nnp::ir::{Layer, NetworkDef, TensorDef};
+    use crate::nnp::plan::CompiledNet;
+    use crate::nnp::passes::OptLevel;
+    use crate::tensor::Rng;
+    use std::collections::HashMap;
+
+    fn conv_bn_net() -> (NetworkDef, HashMap<String, NdArray>) {
+        let net = NetworkDef {
+            name: "cb".into(),
+            inputs: vec![TensorDef { name: "x".into(), dims: vec![1, 2, 5, 5] }],
+            outputs: vec!["y".into()],
+            layers: vec![
+                Layer {
+                    name: "conv".into(),
+                    op: Op::Convolution { stride: (1, 1), pad: (1, 1), dilation: (1, 1) },
+                    inputs: vec!["x".into()],
+                    params: vec!["W".into(), "b".into()],
+                    outputs: vec!["h".into()],
+                },
+                Layer {
+                    name: "bn".into(),
+                    op: Op::BatchNorm { eps: 1e-5 },
+                    inputs: vec!["h".into()],
+                    params: vec!["beta".into(), "gamma".into(), "mean".into(), "var".into()],
+                    outputs: vec!["y".into()],
+                },
+            ],
+        };
+        let mut rng = Rng::new(21);
+        let mut params = HashMap::new();
+        params.insert("W".to_string(), rng.randn(&[3, 2, 3, 3], 0.5));
+        params.insert("b".to_string(), rng.randn(&[3], 0.2));
+        params.insert("beta".to_string(), rng.randn(&[3], 0.3));
+        params.insert("gamma".to_string(), rng.rand(&[3], 0.5, 1.5));
+        params.insert("mean".to_string(), rng.randn(&[3], 0.4));
+        params.insert("var".to_string(), rng.rand(&[3], 0.2, 1.2));
+        (net, params)
+    }
+
+    #[test]
+    fn conv_bn_folds_and_matches_within_tolerance() {
+        let (net, params) = conv_bn_net();
+        let mut m = Module { net: net.clone(), params: params.clone() };
+        assert_eq!(BnFold.run(&mut m).unwrap(), 1);
+        assert_eq!(m.net.layers.len(), 1);
+        assert_eq!(m.net.layers[0].outputs, vec!["y".to_string()]);
+        assert!(m.net.validate().is_ok());
+        // folded output ≈ original output
+        let x = Rng::new(3).randn(&[2, 2, 5, 5], 1.0);
+        let p0 = CompiledNet::compile_with(&net, &params, OptLevel::O0).unwrap();
+        let pf = CompiledNet::compile_with(&m.net, &m.params, OptLevel::O0).unwrap();
+        let a = p0.execute_positional(&[x.clone()]).unwrap();
+        let b = pf.execute_positional(&[x]).unwrap();
+        assert!(
+            a[0].allclose(&b[0], 1e-4, 1e-4),
+            "fold drifted: {}",
+            a[0].max_abs_diff(&b[0])
+        );
+    }
+
+    #[test]
+    fn bn_with_second_reader_is_not_folded() {
+        let (mut net, params) = conv_bn_net();
+        net.layers.push(Layer {
+            name: "side".into(),
+            op: Op::Neg,
+            inputs: vec!["h".into()],
+            params: vec![],
+            outputs: vec!["z".into()],
+        });
+        net.outputs.push("z".into());
+        let mut m = Module { net, params };
+        assert_eq!(BnFold.run(&mut m).unwrap(), 0);
+        assert_eq!(m.net.layers.len(), 3);
+    }
+
+    #[test]
+    fn affine_bn_folds_per_output_column() {
+        let net = NetworkDef {
+            name: "ab".into(),
+            inputs: vec![TensorDef { name: "x".into(), dims: vec![1, 4] }],
+            outputs: vec!["y".into()],
+            layers: vec![
+                Layer {
+                    name: "fc".into(),
+                    op: Op::Affine,
+                    inputs: vec!["x".into()],
+                    params: vec!["W".into()],
+                    outputs: vec!["h".into()],
+                },
+                Layer {
+                    name: "bn".into(),
+                    op: Op::BatchNorm { eps: 1e-5 },
+                    inputs: vec!["h".into()],
+                    params: vec!["beta".into(), "gamma".into(), "mean".into(), "var".into()],
+                    outputs: vec!["y".into()],
+                },
+            ],
+        };
+        let mut rng = Rng::new(9);
+        let mut params = HashMap::new();
+        params.insert("W".to_string(), rng.randn(&[4, 3], 1.0));
+        params.insert("beta".to_string(), rng.randn(&[3], 0.3));
+        params.insert("gamma".to_string(), rng.rand(&[3], 0.5, 1.5));
+        params.insert("mean".to_string(), rng.randn(&[3], 0.4));
+        params.insert("var".to_string(), rng.rand(&[3], 0.2, 1.2));
+        let mut m = Module { net: net.clone(), params: params.clone() };
+        assert_eq!(BnFold.run(&mut m).unwrap(), 1);
+        // bias was absent: the fold must add one
+        assert_eq!(m.net.layers[0].params.len(), 2);
+        let x = Rng::new(5).randn(&[3, 4], 1.0);
+        let p0 = CompiledNet::compile_with(&net, &params, OptLevel::O0).unwrap();
+        let pf = CompiledNet::compile_with(&m.net, &m.params, OptLevel::O0).unwrap();
+        let a = p0.execute_positional(&[x.clone()]).unwrap();
+        let b = pf.execute_positional(&[x]).unwrap();
+        assert!(a[0].allclose(&b[0], 1e-4, 1e-4));
+    }
+}

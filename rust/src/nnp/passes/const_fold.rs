@@ -1,0 +1,340 @@
+//! Constant folding of parameter-only subtrees.
+//!
+//! A layer whose every activation input is itself constant (and whose
+//! parameters are bound) computes the same value on every request —
+//! evaluate it once at compile time through the same [`Op::execute`]
+//! dispatch the interpreter uses and bind the result as a parameter.
+//!
+//! Rewiring is order-sensitive: an operator consumes its activation
+//! inputs first, parameters second, so a constant input can only move
+//! into the parameter list when every activation *after* it moves too
+//! (the constant suffix of the input list is prepended to the params).
+//! Constants consumed mid-list keep their producing layer.
+
+use std::collections::{HashMap, HashSet};
+
+use crate::nnp::ir::Op;
+use crate::tensor::NdArray;
+
+use super::{Module, Pass};
+
+pub struct ConstFold;
+
+/// Upper bound on folded tensor elements. Graphs come from untrusted
+/// files and folding *executes* ops at load time — without a bound, a
+/// tiny param feeding a `BroadcastTo { dims: [huge] }` subtree would
+/// turn `nnl serve --in model.nnb` into an OOM at load (the same
+/// reason the memory planner's dry run refuses absurd declared shapes).
+const FOLD_LIMIT: usize = 1 << 24;
+
+/// A cheap upper bound on `op`'s output element count given its
+/// operands, or `None` when no cheap bound exists (attr-driven output
+/// geometry: conv/deconv/pool/embed) — those stay on the runtime path.
+fn output_bound(op: &Op, xs: &[&NdArray]) -> Option<usize> {
+    let max_in = xs.iter().map(|a| a.size()).max().unwrap_or(0);
+    match op {
+        // output no larger than the largest operand
+        Op::ReLU
+        | Op::LeakyReLU { .. }
+        | Op::Sigmoid
+        | Op::Tanh
+        | Op::Elu { .. }
+        | Op::Swish
+        | Op::Gelu
+        | Op::Softplus
+        | Op::Softmax
+        | Op::LogSoftmax
+        | Op::Neg
+        | Op::AddScalar { .. }
+        | Op::MulScalar { .. }
+        | Op::PowScalar { .. }
+        | Op::Exp
+        | Op::Log
+        | Op::StopGradient
+        | Op::Reshape { .. }
+        | Op::Transpose { .. }
+        | Op::Slice { .. }
+        | Op::Dropout { .. }
+        | Op::Identity
+        | Op::SumAll
+        | Op::MeanAll
+        | Op::Sum { .. }
+        | Op::Mean { .. }
+        | Op::BatchNorm { .. }
+        | Op::LayerNorm { .. } => Some(max_in),
+        // right-aligned broadcast of the two operands
+        Op::Add2
+        | Op::Sub2
+        | Op::Mul2
+        | Op::Div2
+        | Op::SquaredError
+        | Op::SigmoidCrossEntropy
+        | Op::SoftmaxCrossEntropy => {
+            broadcast_bound(xs.first()?.dims(), xs.get(1)?.dims())
+        }
+        Op::Concat { .. } => xs.iter().try_fold(0usize, |s, a| s.checked_add(a.size())),
+        Op::BroadcastTo { dims } => dims.iter().try_fold(1usize, |p, &d| p.checked_mul(d)),
+        Op::Affine => {
+            let w = xs.get(1)?;
+            if w.rank() == 2 && !xs[0].dims().is_empty() {
+                xs[0].dims()[0].checked_mul(w.dims()[1])
+            } else {
+                None
+            }
+        }
+        _ => None,
+    }
+}
+
+/// Element count of the right-aligned elementwise broadcast of two
+/// shapes (missing leading axes count as 1; mismatches overestimate).
+fn broadcast_bound(a: &[usize], b: &[usize]) -> Option<usize> {
+    let rank = a.len().max(b.len());
+    let mut p = 1usize;
+    for i in 0..rank {
+        let ad = if i + a.len() >= rank { a[i + a.len() - rank] } else { 1 };
+        let bd = if i + b.len() >= rank { b[i + b.len() - rank] } else { 1 };
+        p = p.checked_mul(ad.max(bd))?;
+    }
+    Some(p)
+}
+
+impl Pass for ConstFold {
+    fn name(&self) -> &'static str {
+        "const-fold"
+    }
+
+    fn run(&self, m: &mut Module) -> Result<usize, String> {
+        // 1. discover constant tensors, walking in topological order
+        let mut const_vals: HashMap<String, NdArray> = HashMap::new();
+        for l in &m.net.layers {
+            if m.net.outputs.iter().any(|o| o == &l.outputs[0]) {
+                continue; // declared outputs keep their producing layer
+            }
+            if !l.inputs.iter().all(|n| const_vals.contains_key(n)) {
+                continue;
+            }
+            let mut xs: Vec<&NdArray> = Vec::with_capacity(l.inputs.len() + l.params.len());
+            for n in &l.inputs {
+                xs.push(&const_vals[n]);
+            }
+            let mut bound = true;
+            for p in &l.params {
+                match m.params.get(p.as_str()) {
+                    Some(a) => xs.push(a),
+                    None => {
+                        bound = false;
+                        break;
+                    }
+                }
+            }
+            if !bound {
+                continue;
+            }
+            // refuse to instantiate absurd shapes from untrusted files
+            let safe = xs.iter().all(|a| a.size() <= FOLD_LIMIT)
+                && matches!(output_bound(&l.op, &xs), Some(n) if n <= FOLD_LIMIT);
+            if !safe {
+                continue;
+            }
+            let result = l.op.execute(&xs);
+            drop(xs);
+            if let Ok(v) = result {
+                const_vals.insert(l.outputs[0].clone(), v);
+            }
+            // evaluation errors leave the layer for the runtime path,
+            // which reports them with full layer context
+        }
+        if const_vals.is_empty() {
+            return Ok(0);
+        }
+
+        // 2. move constant input suffixes into parameter lists
+        let mut pname_of: HashMap<String, String> = HashMap::new();
+        let mut rewired = 0usize;
+        for l in &mut m.net.layers {
+            if const_vals.contains_key(&l.outputs[0]) {
+                continue; // the subtree itself; may be removed below
+            }
+            let mut cut = l.inputs.len();
+            while cut > 0 && const_vals.contains_key(&l.inputs[cut - 1]) {
+                cut -= 1;
+            }
+            if cut == l.inputs.len() {
+                continue;
+            }
+            let moved: Vec<String> = l.inputs.split_off(cut);
+            rewired += moved.len();
+            let mut new_params = Vec::with_capacity(moved.len() + l.params.len());
+            for tname in moved {
+                let pname = match pname_of.get(&tname) {
+                    Some(p) => p.clone(),
+                    None => {
+                        let p = super::fresh_name(&m.params, &format!("{tname}.const"));
+                        m.params.insert(p.clone(), const_vals[&tname].clone());
+                        pname_of.insert(tname.clone(), p.clone());
+                        p
+                    }
+                };
+                new_params.push(pname);
+            }
+            new_params.append(&mut l.params);
+            l.params = new_params;
+        }
+
+        // 3. drop constant layers nothing reads any more (in reverse,
+        //    so a chain collapses in one pass)
+        let mut removed = 0usize;
+        loop {
+            let read: HashSet<&str> = m
+                .net
+                .layers
+                .iter()
+                .flat_map(|l| l.inputs.iter().map(String::as_str))
+                .collect();
+            let dead = m.net.layers.iter().rposition(|l| {
+                const_vals.contains_key(&l.outputs[0]) && !read.contains(l.outputs[0].as_str())
+            });
+            let Some(i) = dead else { break };
+            m.net.layers.remove(i);
+            removed += 1;
+        }
+        // a rewrite is any graph change: a constant wired into a
+        // parameter list, or a subtree layer removed — counting only
+        // removals would report 0 for a compile that did rewrite
+        Ok(rewired + removed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nnp::ir::{Layer, NetworkDef, Op, TensorDef};
+    use crate::nnp::passes::OptLevel;
+    use crate::nnp::plan::CompiledNet;
+
+    #[test]
+    fn folds_param_only_chain_into_a_bound_constant() {
+        // c = exp(w); y = x + c   — the exp chain runs at compile time
+        let net = NetworkDef {
+            name: "cf".into(),
+            inputs: vec![TensorDef { name: "x".into(), dims: vec![1, 3] }],
+            outputs: vec!["y".into()],
+            layers: vec![
+                Layer {
+                    name: "e".into(),
+                    op: Op::Exp,
+                    inputs: vec![],
+                    params: vec!["w".into()],
+                    outputs: vec!["c".into()],
+                },
+                Layer {
+                    name: "add".into(),
+                    op: Op::Add2,
+                    inputs: vec!["x".into(), "c".into()],
+                    params: vec![],
+                    outputs: vec!["y".into()],
+                },
+            ],
+        };
+        let mut params = HashMap::new();
+        params.insert("w".to_string(), NdArray::from_slice(&[1, 3], &[0.0, 1.0, 2.0]));
+        let mut m = Module { net: net.clone(), params: params.clone() };
+        // one input rewired into a param + one layer removed
+        assert_eq!(ConstFold.run(&mut m).unwrap(), 2);
+        assert_eq!(m.net.layers.len(), 1);
+        assert_eq!(m.net.layers[0].inputs, vec!["x".to_string()]);
+        assert_eq!(m.net.layers[0].params.len(), 1);
+        assert!(m.net.validate().is_ok());
+        // folded == unfolded, bit-identical (same dispatch, same values)
+        let x = NdArray::from_slice(&[1, 3], &[1., 2., 3.]);
+        let a = CompiledNet::compile_with(&net, &params, OptLevel::O0)
+            .unwrap()
+            .execute_positional(&[x.clone()])
+            .unwrap();
+        let b = CompiledNet::compile_with(&m.net, &m.params, OptLevel::O0)
+            .unwrap()
+            .execute_positional(&[x])
+            .unwrap();
+        assert_eq!(a[0].data(), b[0].data());
+    }
+
+    #[test]
+    fn refuses_to_fold_absurd_output_shapes() {
+        // c = exp(w); big = broadcast(c) to 2^26 elements; t = sum(big)
+        // — the broadcast is const-reachable but must never be
+        // evaluated at compile/load time (untrusted files would turn
+        // that into an OOM); the exp still folds and rewires
+        let net = NetworkDef {
+            name: "cap".into(),
+            inputs: vec![TensorDef { name: "x".into(), dims: vec![1, 3] }],
+            outputs: vec!["t".into()],
+            layers: vec![
+                Layer {
+                    name: "e".into(),
+                    op: Op::Exp,
+                    inputs: vec![],
+                    params: vec!["w".into()],
+                    outputs: vec!["c".into()],
+                },
+                Layer {
+                    name: "bc".into(),
+                    op: Op::BroadcastTo { dims: vec![1 << 13, 1 << 13] },
+                    inputs: vec!["c".into()],
+                    params: vec![],
+                    outputs: vec!["big".into()],
+                },
+                Layer {
+                    name: "s".into(),
+                    op: Op::SumAll,
+                    inputs: vec!["big".into()],
+                    params: vec![],
+                    outputs: vec!["t".into()],
+                },
+            ],
+        };
+        let mut params = HashMap::new();
+        params.insert("w".to_string(), NdArray::from_slice(&[1, 3], &[0.0, 1.0, 2.0]));
+        let mut m = Module { net, params };
+        // exp folded into a param wired into the broadcast (+ removal)
+        assert_eq!(ConstFold.run(&mut m).unwrap(), 2);
+        assert_eq!(m.net.layers.len(), 2);
+        assert_eq!(m.net.layers[0].name, "bc");
+        assert!(m.net.layers[0].inputs.is_empty());
+        assert_eq!(m.net.layers[0].params.len(), 1);
+        assert!(m.net.validate().is_ok());
+    }
+
+    #[test]
+    fn const_consumed_mid_list_keeps_its_producer() {
+        // y = c - x: the const is input 0 with a live input after it,
+        // so moving it to params would reorder Sub2's operands
+        let net = NetworkDef {
+            name: "cf2".into(),
+            inputs: vec![TensorDef { name: "x".into(), dims: vec![1, 2] }],
+            outputs: vec!["y".into()],
+            layers: vec![
+                Layer {
+                    name: "n".into(),
+                    op: Op::Neg,
+                    inputs: vec![],
+                    params: vec!["w".into()],
+                    outputs: vec!["c".into()],
+                },
+                Layer {
+                    name: "sub".into(),
+                    op: Op::Sub2,
+                    inputs: vec!["c".into(), "x".into()],
+                    params: vec![],
+                    outputs: vec!["y".into()],
+                },
+            ],
+        };
+        let mut params = HashMap::new();
+        params.insert("w".to_string(), NdArray::from_slice(&[1, 2], &[1., -2.]));
+        let mut m = Module { net, params };
+        assert_eq!(ConstFold.run(&mut m).unwrap(), 0);
+        assert_eq!(m.net.layers.len(), 2);
+        assert!(m.net.validate().is_ok());
+    }
+}

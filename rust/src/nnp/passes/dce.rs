@@ -1,0 +1,77 @@
+//! Dead-op elimination: remove layers whose outputs nothing reads.
+//!
+//! One backward sweep marks every layer reachable from the declared
+//! network outputs; everything else is dropped. Bit-identical — dead
+//! layers cannot influence any output value.
+
+use std::collections::HashSet;
+
+use super::{Module, Pass};
+
+pub struct DeadOpElimination;
+
+impl Pass for DeadOpElimination {
+    fn name(&self) -> &'static str {
+        "dce"
+    }
+
+    fn run(&self, m: &mut Module) -> Result<usize, String> {
+        let mut live: HashSet<String> = m.net.outputs.iter().cloned().collect();
+        let mut keep = vec![false; m.net.layers.len()];
+        for (i, l) in m.net.layers.iter().enumerate().rev() {
+            if l.outputs.iter().any(|o| live.contains(o)) {
+                keep[i] = true;
+                for inp in &l.inputs {
+                    live.insert(inp.clone());
+                }
+            }
+        }
+        let before = m.net.layers.len();
+        let mut it = keep.into_iter();
+        m.net.layers.retain(|_| it.next().unwrap_or(false));
+        Ok(before - m.net.layers.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nnp::ir::{Layer, NetworkDef, Op, TensorDef};
+
+    #[test]
+    fn removes_transitively_dead_branches() {
+        // y = neg(x); dead: a = exp(x), b = log(a)
+        let net = NetworkDef {
+            name: "d".into(),
+            inputs: vec![TensorDef { name: "x".into(), dims: vec![1, 2] }],
+            outputs: vec!["y".into()],
+            layers: vec![
+                Layer {
+                    name: "dead1".into(),
+                    op: Op::Exp,
+                    inputs: vec!["x".into()],
+                    params: vec![],
+                    outputs: vec!["a".into()],
+                },
+                Layer {
+                    name: "dead2".into(),
+                    op: Op::Log,
+                    inputs: vec!["a".into()],
+                    params: vec![],
+                    outputs: vec!["b".into()],
+                },
+                Layer {
+                    name: "keep".into(),
+                    op: Op::Neg,
+                    inputs: vec!["x".into()],
+                    params: vec![],
+                    outputs: vec!["y".into()],
+                },
+            ],
+        };
+        let mut m = Module { net, params: Default::default() };
+        assert_eq!(DeadOpElimination.run(&mut m).unwrap(), 2);
+        assert_eq!(m.net.layers.len(), 1);
+        assert_eq!(m.net.layers[0].name, "keep");
+    }
+}

@@ -1,0 +1,106 @@
+//! Identity / Dropout / StopGradient elision.
+//!
+//! At inference these ops forward their input unchanged, so the layer
+//! can be removed and every later reader rewired to the producer —
+//! bit-identical by construction (the value object is literally the
+//! same). A no-op whose output is a declared network output is kept:
+//! the name is part of the serving contract.
+
+use std::collections::HashMap;
+
+use crate::nnp::ir::Op;
+
+use super::{Module, Pass};
+
+pub struct ElideNoops;
+
+fn resolve(alias: &HashMap<String, String>, name: &str) -> String {
+    // aliases always point at already-resolved names, so one hop wins;
+    // the loop only guards against pathological hand-built chains
+    let mut cur = name.to_string();
+    let mut hops = 0;
+    while let Some(next) = alias.get(&cur) {
+        cur = next.clone();
+        hops += 1;
+        if hops > alias.len() {
+            break;
+        }
+    }
+    cur
+}
+
+impl Pass for ElideNoops {
+    fn name(&self) -> &'static str {
+        "elide-noops"
+    }
+
+    fn run(&self, m: &mut Module) -> Result<usize, String> {
+        let mut alias: HashMap<String, String> = HashMap::new();
+        let mut kept = Vec::with_capacity(m.net.layers.len());
+        let mut removed = 0usize;
+        for mut l in std::mem::take(&mut m.net.layers) {
+            for i in l.inputs.iter_mut() {
+                *i = resolve(&alias, i);
+            }
+            let noop = matches!(l.op, Op::Identity | Op::Dropout { .. } | Op::StopGradient)
+                && l.inputs.len() == 1
+                && l.params.is_empty()
+                && !m.net.outputs.iter().any(|o| o == &l.outputs[0]);
+            if noop {
+                alias.insert(l.outputs[0].clone(), l.inputs[0].clone());
+                removed += 1;
+            } else {
+                kept.push(l);
+            }
+        }
+        m.net.layers = kept;
+        Ok(removed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nnp::ir::{Layer, NetworkDef, TensorDef};
+
+    #[test]
+    fn elides_chains_but_keeps_output_noops() {
+        // x -> id -> drop -> y(out via Identity kept)
+        let net = NetworkDef {
+            name: "e".into(),
+            inputs: vec![TensorDef { name: "x".into(), dims: vec![1, 2] }],
+            outputs: vec!["y".into()],
+            layers: vec![
+                Layer {
+                    name: "i1".into(),
+                    op: Op::Identity,
+                    inputs: vec!["x".into()],
+                    params: vec![],
+                    outputs: vec!["a".into()],
+                },
+                Layer {
+                    name: "d1".into(),
+                    op: Op::Dropout { p: 0.3 },
+                    inputs: vec!["a".into()],
+                    params: vec![],
+                    outputs: vec!["b".into()],
+                },
+                Layer {
+                    name: "i2".into(),
+                    op: Op::Identity,
+                    inputs: vec!["b".into()],
+                    params: vec![],
+                    outputs: vec!["y".into()],
+                },
+            ],
+        };
+        let mut m = Module { net, params: Default::default() };
+        let n = ElideNoops.run(&mut m).unwrap();
+        assert_eq!(n, 2);
+        assert_eq!(m.net.layers.len(), 1);
+        // the kept output-producing Identity reads the original input
+        assert_eq!(m.net.layers[0].name, "i2");
+        assert_eq!(m.net.layers[0].inputs, vec!["x".to_string()]);
+        assert!(m.net.validate().is_ok());
+    }
+}

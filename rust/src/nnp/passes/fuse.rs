@@ -1,0 +1,65 @@
+//! Step-level ReLU fusion.
+//!
+//! Runs after lowering (names are slots, dense ops are explicit
+//! [`StepKernel`] entries): an `Affine`/`Conv2d` step whose output is
+//! read by exactly one `Relu` step — and is not a declared network
+//! output — absorbs the rectification into its epilogue, and the ReLU
+//! step disappears. The fused step computes the same kernel output and
+//! then applies the same elementwise `max(0)`, so results are
+//! bit-identical to the unfused pair; one intermediate slot is never
+//! materialized, which is also what lets the int8 lowering fold the
+//! rectification into its requantize epilogue for free.
+
+use std::collections::{HashMap, HashSet};
+
+use crate::nnp::plan::{Src, Step, StepKernel};
+
+/// Fuse dense→ReLU chains in place; returns the number of fusions.
+pub(crate) fn fuse_relu(steps: &mut Vec<Step>, output_slots: &[usize]) -> usize {
+    let outs: HashSet<usize> = output_slots.iter().copied().collect();
+    // slot -> indices of steps reading it (one entry per read)
+    let mut readers: HashMap<usize, Vec<usize>> = HashMap::new();
+    for (i, st) in steps.iter().enumerate() {
+        for a in &st.args {
+            if let Src::Act(s) = a {
+                readers.entry(*s).or_default().push(i);
+            }
+        }
+    }
+    let mut dead = vec![false; steps.len()];
+    let mut fused = 0usize;
+    for i in 0..steps.len() {
+        if dead[i] {
+            continue;
+        }
+        if !matches!(
+            steps[i].kernel,
+            StepKernel::Affine { relu: false } | StepKernel::Conv2d { relu: false, .. }
+        ) {
+            continue;
+        }
+        let o = steps[i].out;
+        if outs.contains(&o) {
+            continue;
+        }
+        let Some(rs) = readers.get(&o) else { continue };
+        if rs.len() != 1 {
+            continue;
+        }
+        let j = rs[0];
+        if dead[j] || !matches!(steps[j].kernel, StepKernel::Relu) {
+            continue;
+        }
+        let relu_out = steps[j].out;
+        match &mut steps[i].kernel {
+            StepKernel::Affine { relu } | StepKernel::Conv2d { relu, .. } => *relu = true,
+            _ => unreachable!("fusable kernels checked above"),
+        }
+        steps[i].out = relu_out;
+        dead[j] = true;
+        fused += 1;
+    }
+    let mut it = dead.into_iter();
+    steps.retain(|_| !it.next().unwrap_or(false));
+    fused
+}

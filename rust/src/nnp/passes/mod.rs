@@ -1,0 +1,334 @@
+//! Compile-time graph optimizer: a pass pipeline over the NNP IR.
+//!
+//! The paper's "speedy computation" pillar rests on optimizing the
+//! *graph* before execution, not just on fast kernels. Until this
+//! module existed, every optimization the framework had (Affine/Conv +
+//! ReLU fusion, dropout elision) was pattern-matched at **runtime**
+//! inside the plan executor on every request, and BatchNorm — which
+//! dominates every zoo model — was never folded at all. The pass
+//! pipeline moves all of it to compile time:
+//!
+//! ```text
+//!   NetworkDef + params
+//!        │ optimize      graph-level [`Pass`]es (this module)
+//!        ▼
+//!   NetworkDef + params  (fewer layers, folded weights)
+//!        │ lower          names → slots, ops → step kernels
+//!        ▼
+//!   steps                 [`fuse_relu`] rewrites dense→ReLU chains
+//!        │ schedule       liveness → eager frees
+//!        │ allocate       static memory plan (interval coloring)
+//!        ▼
+//!   CompiledNet           a dumb step loop over `tensor::kernels`
+//! ```
+//!
+//! Graph-level passes rewrite a [`Module`] (a [`NetworkDef`] plus its
+//! parameter map) and report how many rewrites they applied. They run
+//! under a [`PassManager`] built for an [`OptLevel`]:
+//!
+//! - **O0** — no rewrites at all: lower + schedule + allocate only.
+//!   This is what [`crate::nnp::interpreter::run`] and the training /
+//!   gradcheck paths use, so tape semantics are provably untouched.
+//! - **O1** — semantics-preserving, **bit-identical** rewrites:
+//!   Identity/Dropout elision ([`ElideNoops`]), dead-op elimination
+//!   ([`DeadOpElimination`]) and the step-level ReLU fusion
+//!   ([`fuse_relu`]). The rewritten plan calls the exact same kernels
+//!   in the same order on the same values.
+//! - **O2** (default for serving) — adds numeric folds that are exact
+//!   up to float re-association (≤ 1e-4 relative in practice):
+//!   BatchNorm folding into the preceding Conv/Affine weights
+//!   ([`BnFold`], inference mode, running statistics) and constant
+//!   folding of parameter-only subtrees ([`ConstFold`]).
+//!
+//! # Authoring a new pass
+//!
+//! A pass is a unit struct implementing [`Pass`]: inspect and rewrite
+//! `m.net` / `m.params`, return how many rewrites you applied. Passes
+//! may assume the module has already passed [`NetworkDef::validate`] —
+//! in particular that tensor names are unique (no shadowing) and that
+//! layers are topologically ordered, so name-based rewiring is safe.
+//!
+//! ```ignore
+//! struct FoldMulOne; // y = x * 1.0  ->  y = x
+//! impl Pass for FoldMulOne {
+//!     fn name(&self) -> &'static str { "fold-mul-one" }
+//!     fn run(&self, m: &mut Module) -> Result<usize, String> {
+//!         let mut n = 0;
+//!         for l in &mut m.net.layers {
+//!             if matches!(l.op, Op::MulScalar { val } if val == 1.0) {
+//!                 l.op = Op::Identity; // ElideNoops removes it next
+//!                 n += 1;
+//!             }
+//!         }
+//!         Ok(n)
+//!     }
+//! }
+//! ```
+//!
+//! Then register it in [`PassManager::for_level`] at the right level:
+//! O1 if the rewrite is bit-identical, O2 if it re-associates floats.
+
+mod bn_fold;
+mod const_fold;
+mod dce;
+mod elide;
+mod fuse;
+mod memory;
+
+pub use bn_fold::BnFold;
+pub use const_fold::ConstFold;
+pub use dce::DeadOpElimination;
+pub use elide::ElideNoops;
+pub(crate) use fuse::fuse_relu;
+pub use memory::{MemoryPlan, SlotAlloc};
+pub(crate) use memory::{plan_memory, SlotInterval};
+
+use std::collections::HashMap;
+
+use crate::nnp::ir::NetworkDef;
+use crate::tensor::NdArray;
+
+/// The unit the graph-level passes rewrite: a network definition plus
+/// the parameter map it binds against. Passes may add parameters (BN
+/// folding, constant folding) or leave orphans behind — orphans are
+/// simply never bound by the plan.
+pub struct Module {
+    pub net: NetworkDef,
+    pub params: HashMap<String, NdArray>,
+}
+
+impl Module {
+    /// A parameter name not yet taken, derived from `base`.
+    pub(crate) fn fresh_param_name(&self, base: &str) -> String {
+        fresh_name(&self.params, base)
+    }
+}
+
+/// A name not yet present in `params`, derived from `base` — the free
+/// form of [`Module::fresh_param_name`] for passes that hold a
+/// conflicting borrow on the module's layers.
+pub(crate) fn fresh_name(params: &HashMap<String, NdArray>, base: &str) -> String {
+    if !params.contains_key(base) {
+        return base.to_string();
+    }
+    let mut i = 1usize;
+    loop {
+        let cand = format!("{base}.{i}");
+        if !params.contains_key(&cand) {
+            return cand;
+        }
+        i += 1;
+    }
+}
+
+/// One graph-level rewrite over a [`Module`]. See the module docs for
+/// how to author and register a new pass.
+pub trait Pass {
+    /// Stable pass name (reported in stats / `nnl optimize`).
+    fn name(&self) -> &'static str;
+    /// Apply the rewrite; returns the number of rewrites performed.
+    fn run(&self, m: &mut Module) -> Result<usize, String>;
+}
+
+/// How many rewrites one pass applied during a compile.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PassStat {
+    pub pass: &'static str,
+    pub rewrites: usize,
+}
+
+/// Optimization level of the compile pipeline (see module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Default)]
+pub enum OptLevel {
+    /// Lower + schedule + allocate only — no rewrites. The interpreter
+    /// and training/gradcheck paths run here.
+    O0,
+    /// Bit-identical rewrites only (elision, DCE, ReLU fusion).
+    O1,
+    /// All passes, including numeric folds (BN fold, const fold).
+    #[default]
+    O2,
+}
+
+impl OptLevel {
+    /// Parse a `--opt 0|1|2` CLI flag.
+    pub fn from_flag(s: &str) -> Option<OptLevel> {
+        match s.trim() {
+            "0" | "O0" | "o0" => Some(OptLevel::O0),
+            "1" | "O1" | "o1" => Some(OptLevel::O1),
+            "2" | "O2" | "o2" => Some(OptLevel::O2),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            OptLevel::O0 => "O0",
+            OptLevel::O1 => "O1",
+            OptLevel::O2 => "O2",
+        }
+    }
+}
+
+/// Runs an ordered pass list over a [`Module`], collecting per-pass
+/// rewrite stats.
+pub struct PassManager {
+    passes: Vec<Box<dyn Pass>>,
+}
+
+impl PassManager {
+    /// The standard pipeline for `level`. Elision runs first (it can
+    /// expose dense→BN adjacency hidden behind a Dropout), DCE runs
+    /// last to sweep anything the folds orphaned.
+    pub fn for_level(level: OptLevel) -> PassManager {
+        let mut passes: Vec<Box<dyn Pass>> = Vec::new();
+        if level >= OptLevel::O1 {
+            passes.push(Box::new(ElideNoops));
+            passes.push(Box::new(DeadOpElimination));
+        }
+        if level >= OptLevel::O2 {
+            passes.push(Box::new(BnFold));
+            passes.push(Box::new(ConstFold));
+            passes.push(Box::new(DeadOpElimination));
+        }
+        PassManager { passes }
+    }
+
+    /// An empty manager (O0 behaviour) — useful for custom pipelines.
+    pub fn empty() -> PassManager {
+        PassManager { passes: Vec::new() }
+    }
+
+    /// Append a custom pass to the pipeline.
+    pub fn push(&mut self, pass: Box<dyn Pass>) {
+        self.passes.push(pass);
+    }
+
+    /// Validate the module, then run every pass in order.
+    pub fn run(&self, m: &mut Module) -> Result<Vec<PassStat>, String> {
+        // passes assume unique tensor names + topological order
+        m.net.validate()?;
+        let mut stats = Vec::with_capacity(self.passes.len());
+        for p in &self.passes {
+            let rewrites = p
+                .run(m)
+                .map_err(|e| format!("pass '{}' failed: {e}", p.name()))?;
+            stats.push(PassStat { pass: p.name(), rewrites });
+        }
+        Ok(stats)
+    }
+}
+
+/// Run the standard pipeline for `level` on a copy of `net`/`params`.
+/// Returns the optimized definition, its (possibly extended) parameter
+/// map and the per-pass stats. This is the entry the quantization
+/// pipeline uses so NNB2 artifacts carry the *optimized* graph and
+/// BN-folded convolutions become quantizable dense layers.
+pub fn optimize(
+    net: &NetworkDef,
+    params: &HashMap<String, NdArray>,
+    level: OptLevel,
+) -> Result<(NetworkDef, HashMap<String, NdArray>, Vec<PassStat>), String> {
+    let mut m = Module { net: net.clone(), params: params.clone() };
+    let stats = PassManager::for_level(level).run(&mut m)?;
+    Ok((m.net, m.params, stats))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nnp::ir::{Layer, Op, TensorDef};
+
+    fn chain_net() -> (NetworkDef, HashMap<String, NdArray>) {
+        // x -> fc -> drop -> relu -> y, plus a dead Neg branch
+        let net = NetworkDef {
+            name: "p".into(),
+            inputs: vec![TensorDef { name: "x".into(), dims: vec![1, 3] }],
+            outputs: vec!["y".into()],
+            layers: vec![
+                Layer {
+                    name: "fc".into(),
+                    op: Op::Affine,
+                    inputs: vec!["x".into()],
+                    params: vec!["W".into(), "b".into()],
+                    outputs: vec!["h".into()],
+                },
+                Layer {
+                    name: "drop".into(),
+                    op: Op::Dropout { p: 0.5 },
+                    inputs: vec!["h".into()],
+                    params: vec![],
+                    outputs: vec!["hd".into()],
+                },
+                Layer {
+                    name: "act".into(),
+                    op: Op::ReLU,
+                    inputs: vec!["hd".into()],
+                    params: vec![],
+                    outputs: vec!["y".into()],
+                },
+                Layer {
+                    name: "dead".into(),
+                    op: Op::Neg,
+                    inputs: vec!["h".into()],
+                    params: vec![],
+                    outputs: vec!["unused".into()],
+                },
+            ],
+        };
+        let mut params = HashMap::new();
+        params.insert("W".to_string(), NdArray::from_slice(&[3, 2], &[1., 0., 0., 1., 1., 1.]));
+        params.insert("b".to_string(), NdArray::from_slice(&[2], &[0.5, -0.5]));
+        (net, params)
+    }
+
+    #[test]
+    fn o1_elides_noops_and_sweeps_dead_ops() {
+        let (net, params) = chain_net();
+        let (onet, _, stats) = optimize(&net, &params, OptLevel::O1).unwrap();
+        assert_eq!(onet.layers.len(), 2, "{:?}", onet.layers);
+        assert_eq!(onet.layers[0].name, "fc");
+        assert_eq!(onet.layers[1].name, "act");
+        // the relu now reads the affine output directly
+        assert_eq!(onet.layers[1].inputs, vec!["h".to_string()]);
+        let by_name: HashMap<_, _> = stats.iter().map(|s| (s.pass, s.rewrites)).collect();
+        assert_eq!(by_name["elide-noops"], 1);
+        assert_eq!(by_name["dce"], 1);
+        assert!(onet.validate().is_ok());
+    }
+
+    #[test]
+    fn o0_is_a_no_op() {
+        let (net, params) = chain_net();
+        let (onet, oparams, stats) = optimize(&net, &params, OptLevel::O0).unwrap();
+        assert_eq!(onet, net);
+        assert_eq!(oparams.len(), params.len());
+        assert!(stats.is_empty());
+    }
+
+    #[test]
+    fn optimize_rejects_invalid_graphs() {
+        let (mut net, params) = chain_net();
+        net.layers[0].inputs[0] = "ghost".into();
+        assert!(optimize(&net, &params, OptLevel::O2).is_err());
+    }
+
+    #[test]
+    fn pipeline_is_idempotent() {
+        let (net, params) = chain_net();
+        let (once, p1, _) = optimize(&net, &params, OptLevel::O2).unwrap();
+        let (twice, _, stats) = optimize(&once, &p1, OptLevel::O2).unwrap();
+        assert_eq!(once, twice);
+        assert!(stats.iter().all(|s| s.rewrites == 0), "{stats:?}");
+    }
+
+    #[test]
+    fn opt_level_flag_parses() {
+        assert_eq!(OptLevel::from_flag("0"), Some(OptLevel::O0));
+        assert_eq!(OptLevel::from_flag("O1"), Some(OptLevel::O1));
+        assert_eq!(OptLevel::from_flag("2"), Some(OptLevel::O2));
+        assert_eq!(OptLevel::from_flag("9"), None);
+        assert!(OptLevel::O0 < OptLevel::O1 && OptLevel::O1 < OptLevel::O2);
+        assert_eq!(OptLevel::default(), OptLevel::O2);
+    }
+}

@@ -2,24 +2,40 @@
 //! heavy traffic as fast as the hardware allows).
 //!
 //! [`crate::nnp::interpreter::run`] is correct but pays a per-call tax
-//! no server can afford: it re-validates the graph, re-resolves every
-//! tensor name through a `HashMap`, and re-binds every parameter on
-//! every single request. [`CompiledNet`] moves all of that to load
-//! time: compile a [`NetworkDef`] + parameter map **once** into a
-//! topologically-ordered, slot-indexed plan —
+//! no server can afford. [`CompiledNet`] moves everything to load time
+//! through an explicit four-phase pipeline (see [`crate::nnp::passes`]
+//! for the optimizer half):
 //!
-//! - parameters bound up front (missing ones fail at load);
-//! - tensor names resolved to integer slot ids (no hashing per call);
-//! - per-layer arity and pooling/slice/transpose attributes validated
-//!   at compile time (malformed files fail at load, not mid-request);
-//! - last-use liveness precomputed, so intermediate buffers are
-//!   dropped eagerly and peak memory tracks liveness, not depth.
+//! 1. **optimize** — graph-level passes over the NNP IR at the chosen
+//!    [`OptLevel`]: no-op elision, dead-op elimination, BatchNorm
+//!    folding, constant folding. O0 skips this phase entirely, which
+//!    is what the interpreter and the training/gradcheck paths use.
+//! 2. **lower** — tensor names become integer slots, parameters are
+//!    bound (missing ones fail at load), and every layer becomes a
+//!    [`Step`] with an explicit [`StepKernel`]: dense ops lower
+//!    directly onto [`crate::tensor::kernels`] entry points, everything
+//!    else onto the registry dispatch. At O1+ the ReLU-fusion pass
+//!    then rewrites Affine/Conv → ReLU chains into single fused steps.
+//! 3. **schedule** — last-use liveness is precomputed, so intermediate
+//!    buffers are released eagerly at their planned death step.
+//! 4. **allocate** — a liveness-based static memory plan (greedy
+//!    interval coloring over the slots' live ranges at the declared
+//!    input shape) assigns every slot an arena offset and reports the
+//!    exact peak arena bytes ([`CompiledNet::peak_arena_bytes`]).
+//!    Slot sizes come from a one-off dry run, so the plan is computed
+//!    lazily on first inspection — hot compile paths (interpreter
+//!    one-shots, serve loads) never pay it.
+//!
+//! The executor itself is a dumb step loop: no pattern matching, no
+//! name resolution, no revalidation per request — each step already
+//! knows its kernel. Fused steps call the very kernels the training
+//! tape records (then the same elementwise `max(0)`), so O1 plans are
+//! bit-identical to the interpreter; O2 folds are exact up to float
+//! re-association (≤ ~1e-4 relative).
 //!
 //! [`CompiledNet::execute`] is `&self` and `CompiledNet` is
 //! `Send + Sync`: one plan serves any number of threads concurrently
-//! (see `serve::Server`). Execution still flows through [`Op::execute`]
-//! — the same registry dispatch the training tape records — so compiled
-//! outputs are bit-identical to the interpreter and to the live graph.
+//! (see `serve::Server`).
 
 use std::collections::{HashMap, HashSet};
 
@@ -27,10 +43,11 @@ use crate::tensor::ops::Conv2dGeom;
 use crate::tensor::{kernels, ops, NdArray};
 
 use super::ir::{self, NetworkDef, Op, TensorDef};
+use super::passes::{self, MemoryPlan, OptLevel, PassStat, SlotInterval};
 
 /// Where one operand of a step comes from. `pub(crate)` so the int8
 /// quantizer ([`crate::quant`]) can walk a compiled plan's dataflow.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub(crate) enum Src {
     /// Activation slot in the per-call environment.
     Act(usize),
@@ -38,25 +55,59 @@ pub(crate) enum Src {
     Param(usize),
 }
 
+/// What a step executes. Decided once at compile time — the executor
+/// never pattern-matches ops or shapes per request.
+#[derive(Debug, Clone)]
+pub(crate) enum StepKernel {
+    /// Registry dispatch through [`Op::execute`] (the long tail).
+    Registry(Op),
+    /// `kernels::affine_forward`, optionally with a fused ReLU.
+    Affine { relu: bool },
+    /// `kernels::conv2d_forward`, optionally with a fused ReLU.
+    Conv2d { geom: Conv2dGeom, relu: bool },
+    /// Standalone elementwise rectification.
+    Relu,
+    /// Inference no-op (Identity / Dropout / StopGradient): O(1) COW
+    /// clone of the input.
+    Copy,
+}
+
+impl StepKernel {
+    /// Display name for op histograms and plan inspection.
+    pub(crate) fn display(&self) -> &'static str {
+        match self {
+            StepKernel::Registry(op) => op.name(),
+            StepKernel::Affine { relu: false } => "Affine",
+            StepKernel::Affine { relu: true } => "Affine+ReLU",
+            StepKernel::Conv2d { relu: false, .. } => "Convolution",
+            StepKernel::Conv2d { relu: true, .. } => "Convolution+ReLU",
+            StepKernel::Relu => "ReLU",
+            StepKernel::Copy => "Copy",
+        }
+    }
+}
+
 /// One executable step of the plan.
 #[derive(Debug, Clone)]
 pub(crate) struct Step {
-    /// Layer name, kept for error reporting only.
+    /// Originating layer name, kept for error reporting (a fused step
+    /// keeps the dense layer's name).
     pub(crate) name: String,
-    pub(crate) op: Op,
+    pub(crate) kernel: StepKernel,
     /// Activations first, then parameters — the order [`Op::apply`]
     /// defines.
     pub(crate) args: Vec<Src>,
-    /// Output activation slot (fresh per layer).
+    /// Output activation slot.
     pub(crate) out: usize,
-    /// Activation slots whose last read is this step; dropped eagerly
-    /// after it runs.
+    /// Activation slots whose planned death is this step; released
+    /// eagerly after it runs.
     pub(crate) free_after: Vec<usize>,
 }
 
 /// A network compiled against a fixed parameter set, ready for
-/// repeated, concurrent inference. Build with [`CompiledNet::compile`];
-/// run with [`CompiledNet::execute`] (named inputs) or
+/// repeated, concurrent inference. Build with [`CompiledNet::compile`]
+/// (full O2 pipeline) or [`CompiledNet::compile_with`] (explicit
+/// [`OptLevel`]); run with [`CompiledNet::execute`] (named inputs) or
 /// [`CompiledNet::execute_positional`] (declared input order, the
 /// serving hot path).
 pub struct CompiledNet {
@@ -68,126 +119,100 @@ pub struct CompiledNet {
     steps: Vec<Step>,
     n_slots: usize,
     /// Tensor name of each slot (inputs first, then each layer's
-    /// output in step order; shadowed names repeat). Calibration and
-    /// quantization key activation statistics by these names.
+    /// output in lowering order). Calibration and quantization key
+    /// activation statistics by these names; slots elided or fused
+    /// away keep their name but are never materialized or observed.
     slot_names: Vec<String>,
     /// Parameters bound at compile time (COW handles — O(1) to hold,
     /// never copied per request).
     params: Vec<NdArray>,
+    /// Registry name of each bound parameter (quantizer lookups).
+    param_names: Vec<String>,
+    opt: OptLevel,
+    pass_stats: Vec<PassStat>,
+    /// Static memory plan, computed lazily on first inspection
+    /// (requires a dry run at the declared shape; hot compile paths
+    /// never pay it). `Some(None)` caches an inference failure.
+    memory: std::sync::OnceLock<Option<MemoryPlan>>,
+}
+
+/// Output of the lowering phase, threaded through schedule/allocate.
+struct Lowered {
+    steps: Vec<Step>,
+    n_slots: usize,
+    slot_names: Vec<String>,
+    output_slots: Vec<usize>,
+    params: Vec<NdArray>,
+    param_names: Vec<String>,
 }
 
 impl CompiledNet {
-    /// Compile `net` against `params`. Validates structure, arity and
-    /// parameter availability so that a successfully compiled plan can
-    /// only fail at run time on input-shape mismatches or kernel-level
-    /// shape errors.
+    /// Compile `net` against `params` through the full (O2) pipeline —
+    /// the serving default. Validates structure, arity and parameter
+    /// availability so that a successfully compiled plan can only fail
+    /// at run time on input-shape mismatches or kernel-level shape
+    /// errors.
     pub fn compile(
         net: &NetworkDef,
         params: &HashMap<String, NdArray>,
     ) -> Result<CompiledNet, String> {
-        net.validate()?;
-        let n_inputs = net.inputs.len();
-        let mut slot_of: HashMap<String, usize> = HashMap::new();
-        let mut slot_names: Vec<String> = Vec::new();
-        let mut n_slots = 0usize;
-        for t in &net.inputs {
-            slot_of.insert(t.name.clone(), n_slots);
-            slot_names.push(t.name.clone());
-            n_slots += 1;
+        Self::compile_with(net, params, OptLevel::default())
+    }
+
+    /// Compile at an explicit optimization level. `O0` is lower +
+    /// schedule + allocate only — the graph executes exactly as
+    /// written, which is what [`crate::nnp::interpreter::run`] and the
+    /// training-side paths rely on.
+    pub fn compile_with(
+        net: &NetworkDef,
+        params: &HashMap<String, NdArray>,
+        opt: OptLevel,
+    ) -> Result<CompiledNet, String> {
+        // ---- phase 1: optimize (graph-level passes; O0 skips)
+        let (optimized, mut pass_stats) = if opt == OptLevel::O0 {
+            net.validate()?;
+            (None, Vec::new())
+        } else {
+            let (onet, oparams, stats) = passes::optimize(net, params, opt)?;
+            (Some((onet, oparams)), stats)
+        };
+        let (net_ref, params_ref): (&NetworkDef, &HashMap<String, NdArray>) = match &optimized {
+            Some((n, p)) => (n, p),
+            None => (net, params),
+        };
+
+        // ---- phase 2: lower (names -> slots, ops -> kernels)
+        let mut low = lower(net_ref, params_ref)?;
+        if opt >= OptLevel::O1 {
+            let rewrites = passes::fuse_relu(&mut low.steps, &low.output_slots);
+            pass_stats.push(PassStat { pass: "fuse-relu", rewrites });
         }
 
-        let mut bound: Vec<NdArray> = Vec::new();
-        let mut param_idx: HashMap<String, usize> = HashMap::new();
-        let mut steps: Vec<Step> = Vec::with_capacity(net.layers.len());
-        for l in &net.layers {
-            let mut args = Vec::with_capacity(l.inputs.len() + l.params.len());
-            for tname in &l.inputs {
-                let s = *slot_of
-                    .get(tname.as_str())
-                    .ok_or_else(|| format!("layer '{}' reads undefined tensor '{tname}'", l.name))?;
-                args.push(Src::Act(s));
-            }
-            for pname in &l.params {
-                let idx = match param_idx.get(pname.as_str()) {
-                    Some(&i) => i,
-                    None => {
-                        let a = params
-                            .get(pname.as_str())
-                            .ok_or_else(|| format!("missing parameter '{pname}'"))?;
-                        bound.push(a.clone());
-                        param_idx.insert(pname.clone(), bound.len() - 1);
-                        bound.len() - 1
-                    }
-                };
-                args.push(Src::Param(idx));
-            }
-            // a layer output always gets a fresh slot; re-defining an
-            // existing name shadows it for later readers, exactly like
-            // the interpreter's env overwrite
-            let out = n_slots;
-            n_slots += 1;
-            slot_of.insert(l.outputs[0].clone(), out);
-            slot_names.push(l.outputs[0].clone());
-            steps.push(Step {
-                name: l.name.clone(),
-                op: l.op.clone(),
-                args,
-                out,
-                free_after: Vec::new(),
-            });
-        }
+        // ---- phase 3: schedule (liveness -> eager frees)
+        schedule(&mut low.steps, low.n_slots, &low.output_slots);
 
-        let output_slots = net
-            .outputs
-            .iter()
-            .map(|o| {
-                slot_of
-                    .get(o.as_str())
-                    .copied()
-                    .ok_or_else(|| format!("network output '{o}' never produced"))
-            })
-            .collect::<Result<Vec<usize>, String>>()?;
-
-        // liveness: find each slot's last reader; a slot that is not a
-        // network output dies right after that step. Slots written but
-        // never read die at their producing step (slot s >= n_inputs is
-        // produced by step s - n_inputs, since each layer allocates
-        // exactly one fresh slot in order).
-        let mut last_read: Vec<Option<usize>> = vec![None; n_slots];
-        for (i, st) in steps.iter().enumerate() {
-            for a in &st.args {
-                if let Src::Act(s) = a {
-                    last_read[*s] = Some(i);
-                }
-            }
-        }
-        let keep: HashSet<usize> = output_slots.iter().copied().collect();
-        for s in 0..n_slots {
-            if keep.contains(&s) {
-                continue;
-            }
-            match last_read[s] {
-                Some(i) => steps[i].free_after.push(s),
-                None if s >= n_inputs => steps[s - n_inputs].free_after.push(s),
-                None => {} // unread network input: held by the caller anyway
-            }
-        }
+        // ---- phase 4: allocate — deferred to the first
+        // memory_plan()/peak_arena_bytes() call (needs a dry run)
 
         Ok(CompiledNet {
-            name: net.name.clone(),
-            inputs: net.inputs.clone(),
-            output_names: net.outputs.clone(),
-            output_slots,
-            steps,
-            n_slots,
-            slot_names,
-            params: bound,
+            name: net_ref.name.clone(),
+            inputs: net_ref.inputs.clone(),
+            output_names: net_ref.outputs.clone(),
+            output_slots: low.output_slots,
+            steps: low.steps,
+            n_slots: low.n_slots,
+            slot_names: low.slot_names,
+            params: low.params,
+            param_names: low.param_names,
+            opt,
+            pass_stats,
+            memory: std::sync::OnceLock::new(),
         })
     }
 
     // ------------------------------------------------ quantizer access
 
-    /// The compiled steps, in execution order (one per source layer).
+    /// The compiled steps, in execution order.
     pub(crate) fn steps(&self) -> &[Step] {
         &self.steps
     }
@@ -195,6 +220,16 @@ impl CompiledNet {
     /// A bound parameter by compile-time index.
     pub(crate) fn param(&self, i: usize) -> &NdArray {
         &self.params[i]
+    }
+
+    /// The registry name of a bound parameter.
+    pub(crate) fn param_name(&self, i: usize) -> &str {
+        &self.param_names[i]
+    }
+
+    /// The tensor name living in a slot.
+    pub(crate) fn slot_name(&self, s: usize) -> &str {
+        &self.slot_names[s]
     }
 
     /// Number of activation slots a call environment needs.
@@ -206,6 +241,8 @@ impl CompiledNet {
     pub(crate) fn output_slots(&self) -> &[usize] {
         &self.output_slots
     }
+
+    // ------------------------------------------------- plan inspection
 
     /// Network name.
     pub fn name(&self) -> &str {
@@ -222,9 +259,48 @@ impl CompiledNet {
         &self.output_names
     }
 
-    /// Number of executable steps (layers) in the plan.
+    /// Number of executable steps in the plan (≤ source layers once
+    /// the optimizer has run).
     pub fn n_steps(&self) -> usize {
         self.steps.len()
+    }
+
+    /// The optimization level this plan was compiled at.
+    pub fn opt_level(&self) -> OptLevel {
+        self.opt
+    }
+
+    /// Per-pass rewrite counts from the compile pipeline.
+    pub fn pass_stats(&self) -> &[PassStat] {
+        &self.pass_stats
+    }
+
+    /// Step-kernel histogram (`name -> count`), name-sorted — the
+    /// `nnl optimize` before/after readout.
+    pub fn op_histogram(&self) -> Vec<(String, usize)> {
+        let mut counts: std::collections::BTreeMap<&'static str, usize> =
+            std::collections::BTreeMap::new();
+        for st in &self.steps {
+            *counts.entry(st.kernel.display()).or_insert(0) += 1;
+        }
+        counts.into_iter().map(|(k, v)| (k.to_string(), v)).collect()
+    }
+
+    /// The static memory plan, if shape inference succeeds at the
+    /// declared input shape. Computed (and cached) on first call.
+    pub fn memory_plan(&self) -> Option<&MemoryPlan> {
+        self.memory
+            .get_or_init(|| {
+                allocate(&self.steps, &self.params, &self.inputs, self.n_slots, &self.output_slots)
+            })
+            .as_ref()
+    }
+
+    /// Exact arena high-water mark of one request's *intermediates* at
+    /// the declared input shape, per the static memory plan (network
+    /// inputs are caller-held and never arena-backed).
+    pub fn peak_arena_bytes(&self) -> Option<usize> {
+        self.memory_plan().map(|m| m.peak_bytes)
     }
 
     /// Validate a positional input set against the declared signature
@@ -272,24 +348,24 @@ impl CompiledNet {
     /// number of threads may execute one plan concurrently; each call
     /// owns its buffer environment.
     ///
-    /// The hot ops (Affine, Convolution, plus the trivial
-    /// ReLU/Identity/Dropout) run *fused*: the same
+    /// This is a dumb loop over precompiled steps: each step dispatches
+    /// straight to its [`StepKernel`] — the same
     /// [`crate::tensor::kernels`] entry points the training tape
-    /// records — so outputs stay bit-identical to the live graph —
-    /// but with no tape node, no column materialization, and all
-    /// intermediates drawn from this thread's scratch arena. Freed
-    /// activation slots are recycled back into that arena, so a
-    /// long-lived serving thread reaches a steady state with no heap
-    /// allocation per request for conv columns or plan intermediates.
+    /// records — and slots freed at their planned death step are
+    /// recycled into this thread's scratch arena, so a long-lived
+    /// serving thread reaches a steady state with no heap allocation
+    /// per request for conv columns or plan intermediates.
     pub fn execute_positional(&self, inputs: &[NdArray]) -> Result<Vec<NdArray>, String> {
         self.execute_inner(inputs, None)
     }
 
     /// [`CompiledNet::execute_positional`] plus a hook: `observe` is
     /// called with `(tensor_name, value)` for every declared input and
-    /// every layer output, in execution order. This is the calibration
-    /// entry the int8 quantizer ([`crate::quant::calibrate`]) runs its
-    /// sample set through.
+    /// every step output the plan actually materializes, in execution
+    /// order. Tensors the optimizer elided, folded, or fused away are
+    /// never observed — so int8 calibration
+    /// ([`crate::quant::calibrate`]) records ranges for exactly the
+    /// tensors the optimized plan produces.
     pub fn execute_observed(
         &self,
         inputs: &[NdArray],
@@ -321,7 +397,8 @@ impl CompiledNet {
                     Src::Param(i) => xs.push(&self.params[*i]),
                 }
             }
-            let y = execute_step(&st.op, &xs).map_err(|e| format!("layer '{}': {e}", st.name))?;
+            let y =
+                execute_kernel(&st.kernel, &xs).map_err(|e| format!("layer '{}': {e}", st.name))?;
             drop(xs);
             if let Some(obs) = observe.as_deref_mut() {
                 obs(&self.slot_names[st.out], &y);
@@ -356,21 +433,327 @@ impl CompiledNet {
     /// must declare rank ≥ 2 and every rank-reducing op is excluded:
     /// global reductions and `BroadcastTo` outright, axis reductions
     /// unless `keepdims` on a non-batch axis, `Reshape` unless it keeps
-    /// the batch axis and rank ≥ 2. Everything else in the registry
-    /// preserves "rank ≥ 2 with batch axis 0" — so the last axis a
-    /// normalisation sees is never the batch axis.
+    /// the batch axis and rank ≥ 2. The lowered kernels (dense, ReLU,
+    /// Copy) are row-independent by construction.
     pub fn batch_invariant(&self) -> bool {
         if self.inputs.is_empty() || self.inputs.iter().any(|t| t.dims.len() < 2) {
             return false;
         }
-        self.steps.iter().all(|st| match &st.op {
-            Op::SumAll | Op::MeanAll | Op::BroadcastTo { .. } => false,
-            Op::Sum { axis, keepdims } | Op::Mean { axis, keepdims } => *axis != 0 && *keepdims,
-            Op::Concat { axis } | Op::Slice { axis, .. } => *axis != 0,
-            Op::Transpose { axes } => axes.first() == Some(&0),
-            Op::Reshape { dims } => dims.len() >= 2 && dims[0] == 0,
-            _ => true,
+        self.steps.iter().all(|st| match &st.kernel {
+            StepKernel::Registry(op) => match op {
+                Op::SumAll | Op::MeanAll | Op::BroadcastTo { .. } => false,
+                Op::Sum { axis, keepdims } | Op::Mean { axis, keepdims } => {
+                    *axis != 0 && *keepdims
+                }
+                Op::Concat { axis } | Op::Slice { axis, .. } => *axis != 0,
+                Op::Transpose { axes } => axes.first() == Some(&0),
+                Op::Reshape { dims } => dims.len() >= 2 && dims[0] == 0,
+                _ => true,
+            },
+            StepKernel::Affine { .. }
+            | StepKernel::Conv2d { .. }
+            | StepKernel::Relu
+            | StepKernel::Copy => true,
         })
+    }
+}
+
+// --------------------------------------------------------------- phases
+
+/// Lowering: resolve names to slots, bind parameters, pick a
+/// [`StepKernel`] per layer.
+fn lower(net: &NetworkDef, params: &HashMap<String, NdArray>) -> Result<Lowered, String> {
+    let mut slot_of: HashMap<String, usize> = HashMap::new();
+    let mut slot_names: Vec<String> = Vec::new();
+    let mut n_slots = 0usize;
+    for t in &net.inputs {
+        slot_of.insert(t.name.clone(), n_slots);
+        slot_names.push(t.name.clone());
+        n_slots += 1;
+    }
+
+    let mut bound: Vec<NdArray> = Vec::new();
+    let mut bound_names: Vec<String> = Vec::new();
+    let mut param_idx: HashMap<String, usize> = HashMap::new();
+    let mut steps: Vec<Step> = Vec::with_capacity(net.layers.len());
+    for l in &net.layers {
+        let mut args = Vec::with_capacity(l.inputs.len() + l.params.len());
+        for tname in &l.inputs {
+            let s = *slot_of
+                .get(tname.as_str())
+                .ok_or_else(|| format!("layer '{}' reads undefined tensor '{tname}'", l.name))?;
+            args.push(Src::Act(s));
+        }
+        for pname in &l.params {
+            let idx = match param_idx.get(pname.as_str()) {
+                Some(&i) => i,
+                None => {
+                    let a = params
+                        .get(pname.as_str())
+                        .ok_or_else(|| format!("missing parameter '{pname}'"))?;
+                    bound.push(a.clone());
+                    bound_names.push(pname.clone());
+                    param_idx.insert(pname.clone(), bound.len() - 1);
+                    bound.len() - 1
+                }
+            };
+            args.push(Src::Param(idx));
+        }
+        let kernel = select_kernel(&l.op, &args, &bound);
+        let out = n_slots;
+        n_slots += 1;
+        slot_of.insert(l.outputs[0].clone(), out);
+        slot_names.push(l.outputs[0].clone());
+        steps.push(Step {
+            name: l.name.clone(),
+            kernel,
+            args,
+            out,
+            free_after: Vec::new(),
+        });
+    }
+
+    let output_slots = net
+        .outputs
+        .iter()
+        .map(|o| {
+            slot_of
+                .get(o.as_str())
+                .copied()
+                .ok_or_else(|| format!("network output '{o}' never produced"))
+        })
+        .collect::<Result<Vec<usize>, String>>()?;
+
+    Ok(Lowered {
+        steps,
+        n_slots,
+        slot_names,
+        output_slots,
+        params: bound,
+        param_names: bound_names,
+    })
+}
+
+/// Pick the executable form of one layer. Dense ops lower onto the
+/// tiled kernels only when their weight (and bias) are compile-time
+/// parameters with coherent shapes; anything else takes the registry
+/// dispatch, whose `Op::apply` validation produces clean errors.
+fn select_kernel(op: &Op, args: &[Src], bound: &[NdArray]) -> StepKernel {
+    let pdims = |a: Option<&Src>| match a {
+        Some(Src::Param(i)) => Some(bound[*i].dims()),
+        _ => None,
+    };
+    match op {
+        Op::Affine => {
+            if let Some(wd) = pdims(args.get(1)) {
+                if (2..=3).contains(&args.len()) && wd.len() == 2 {
+                    let bias_ok = match args.get(2) {
+                        None => true,
+                        Some(Src::Param(i)) => bound[*i].size() == wd[1],
+                        Some(Src::Act(_)) => false,
+                    };
+                    if bias_ok {
+                        return StepKernel::Affine { relu: false };
+                    }
+                }
+            }
+            StepKernel::Registry(op.clone())
+        }
+        Op::Convolution { stride, pad, dilation } => {
+            if let Some(wd) = pdims(args.get(1)) {
+                if (2..=3).contains(&args.len()) && wd.len() == 4 && wd[2] > 0 && wd[3] > 0 {
+                    let bias_ok = match args.get(2) {
+                        None => true,
+                        Some(Src::Param(i)) => bound[*i].size() == wd[0],
+                        Some(Src::Act(_)) => false,
+                    };
+                    if bias_ok {
+                        return StepKernel::Conv2d {
+                            geom: Conv2dGeom {
+                                kernel: (wd[2], wd[3]),
+                                stride: *stride,
+                                pad: *pad,
+                                dilation: *dilation,
+                            },
+                            relu: false,
+                        };
+                    }
+                }
+            }
+            StepKernel::Registry(op.clone())
+        }
+        Op::ReLU => StepKernel::Relu,
+        Op::Identity | Op::Dropout { .. } | Op::StopGradient => StepKernel::Copy,
+        other => StepKernel::Registry(other.clone()),
+    }
+}
+
+/// Scheduling: find each slot's last use; a slot that is not a network
+/// output dies right after that step (or at its producer, if written
+/// but never read).
+fn schedule(steps: &mut [Step], n_slots: usize, output_slots: &[usize]) {
+    let mut last_read: Vec<Option<usize>> = vec![None; n_slots];
+    let mut producer: Vec<Option<usize>> = vec![None; n_slots];
+    for (i, st) in steps.iter().enumerate() {
+        for a in &st.args {
+            if let Src::Act(s) = a {
+                last_read[*s] = Some(i);
+            }
+        }
+        producer[st.out] = Some(i);
+    }
+    for st in steps.iter_mut() {
+        st.free_after.clear();
+    }
+    let keep: HashSet<usize> = output_slots.iter().copied().collect();
+    for s in 0..n_slots {
+        if keep.contains(&s) {
+            continue;
+        }
+        match (last_read[s], producer[s]) {
+            (Some(i), _) => steps[i].free_after.push(s),
+            (None, Some(i)) => steps[i].free_after.push(s),
+            // unread network input (caller-held) or a slot the
+            // optimizer fused away (never materialized)
+            (None, None) => {}
+        }
+    }
+}
+
+/// Allocation: infer every materialized slot's size by a one-off dry
+/// run at the declared input shape, then color live intervals into
+/// arena offsets. Network inputs are caller-held COW handles that
+/// never draw from the arena, so only step-produced slots get
+/// intervals — `peak_bytes` is the intermediates' high-water mark.
+/// Returns `None` when inference fails (e.g. geometry errors only
+/// reachable at other batch sizes, or inputs too large to instantiate
+/// at compile time) — execution does not depend on it.
+fn allocate(
+    steps: &[Step],
+    params: &[NdArray],
+    inputs: &[TensorDef],
+    n_slots: usize,
+    output_slots: &[usize],
+) -> Option<MemoryPlan> {
+    let sizes = dry_run_sizes(steps, params, inputs, n_slots).ok()?;
+    let mut start: Vec<Option<usize>> = vec![None; n_slots];
+    let mut end: Vec<usize> = vec![0; n_slots];
+    for (i, st) in steps.iter().enumerate() {
+        for a in &st.args {
+            if let Src::Act(s) = a {
+                end[*s] = end[*s].max(i);
+            }
+        }
+        start[st.out] = Some(i);
+        end[st.out] = end[st.out].max(i);
+    }
+    for &o in output_slots {
+        if start[o].is_some() {
+            end[o] = steps.len();
+        }
+    }
+    let intervals: Vec<SlotInterval> = (0..n_slots)
+        .filter_map(|s| {
+            start[s].map(|st0| SlotInterval {
+                slot: s,
+                start: st0,
+                end: end[s],
+                bytes: sizes[s] * std::mem::size_of::<f32>(),
+            })
+        })
+        .collect();
+    Some(passes::plan_memory(&intervals, n_slots))
+}
+
+/// Execute the plan once on zeros at the declared shapes, recording
+/// each slot's element count. Compile-time only.
+fn dry_run_sizes(
+    steps: &[Step],
+    params: &[NdArray],
+    inputs: &[TensorDef],
+    n_slots: usize,
+) -> Result<Vec<usize>, String> {
+    // refuse to instantiate absurd declared shapes at load time
+    const LIMIT: usize = 1 << 24;
+    let mut sizes = vec![0usize; n_slots];
+    let mut env: Vec<Option<NdArray>> = vec![None; n_slots];
+    for (i, t) in inputs.iter().enumerate() {
+        let elems = t
+            .dims
+            .iter()
+            .try_fold(1usize, |a, &d| a.checked_mul(d))
+            .filter(|&e| e <= LIMIT)
+            .ok_or("declared input too large for compile-time shape inference")?;
+        sizes[i] = elems;
+        env[i] = Some(NdArray::zeros(&t.dims));
+    }
+    for st in steps {
+        let mut xs: Vec<&NdArray> = Vec::with_capacity(st.args.len());
+        for a in &st.args {
+            match a {
+                Src::Act(s) => xs.push(
+                    env[*s].as_ref().ok_or("dry run read an unmaterialized slot")?,
+                ),
+                Src::Param(i) => xs.push(&params[*i]),
+            }
+        }
+        let y = execute_kernel(&st.kernel, &xs)?;
+        drop(xs);
+        if y.size() > LIMIT {
+            return Err("intermediate too large for compile-time shape inference".into());
+        }
+        sizes[st.out] = y.size();
+        env[st.out] = Some(y);
+        for &s in &st.free_after {
+            env[s] = None;
+        }
+    }
+    Ok(sizes)
+}
+
+/// Execute one step kernel. The dense arms call the very kernels the
+/// tape's `F::*` closures call (bit-identical outputs) with
+/// input-dependent shape guards kept as clean errors; `Registry` is
+/// the shared [`Op::execute`] dispatch.
+pub(crate) fn execute_kernel(k: &StepKernel, xs: &[&NdArray]) -> Result<NdArray, String> {
+    match k {
+        StepKernel::Affine { relu } => {
+            if xs[0].rank() < 1 {
+                return Err("Affine: input must have a batch axis".into());
+            }
+            let feat: usize = xs[0].dims()[1..].iter().product();
+            if feat != xs[1].dims()[0] {
+                return Err(format!(
+                    "Affine: input features {feat} do not match weight rows {}",
+                    xs[1].dims()[0]
+                ));
+            }
+            let mut y = kernels::affine_forward(xs[0], xs[1], xs.get(2).copied());
+            if *relu {
+                relu_inplace(&mut y);
+            }
+            Ok(y)
+        }
+        StepKernel::Conv2d { geom, relu } => {
+            ir::check_conv_geometry(xs[0].dims(), xs[1].dims(), geom.stride, geom.pad, geom.dilation)?;
+            let mut y = kernels::conv2d_forward(xs[0], xs[1], xs.get(2).copied(), geom);
+            if *relu {
+                relu_inplace(&mut y);
+            }
+            Ok(y)
+        }
+        StepKernel::Relu => Ok(ops::map(xs[0], |v| v.max(0.0))),
+        StepKernel::Copy => Ok(xs[0].clone()),
+        StepKernel::Registry(op) => op.execute(xs),
+    }
+}
+
+/// Elementwise `max(0)` on a freshly produced (uniquely owned) array —
+/// the same function `F::relu` maps, so fused and unfused rectification
+/// are bit-identical.
+fn relu_inplace(y: &mut NdArray) {
+    for v in y.data_mut() {
+        *v = v.max(0.0);
     }
 }
 
@@ -385,7 +768,7 @@ pub trait InferencePlan: Send + Sync {
     fn inputs(&self) -> &[TensorDef];
     /// Declared output names, in order.
     fn outputs(&self) -> &[String];
-    /// Number of executable steps (layers).
+    /// Number of executable steps.
     fn n_steps(&self) -> usize;
     /// Validate positional inputs; returns the batch-row count.
     fn check_inputs(&self, inputs: &[NdArray]) -> Result<usize, String>;
@@ -439,39 +822,6 @@ impl InferencePlan for CompiledNet {
     }
 }
 
-/// One plan step. The fused arms call the very kernels the tape's
-/// `F::*` closures call (bit-identical outputs) while skipping the
-/// per-op `Variable` construction `Op::execute` pays; everything else
-/// falls through to the registry dispatch. Guards mirror `Op::apply`'s
-/// validation so malformed shapes stay clean errors.
-pub(crate) fn execute_step(op: &Op, xs: &[&NdArray]) -> Result<NdArray, String> {
-    match op {
-        Op::Affine if (2..=3).contains(&xs.len()) && xs[0].rank() >= 1 && xs[1].rank() == 2 => {
-            let feat: usize = xs[0].dims()[1..].iter().product();
-            if feat != xs[1].dims()[0] {
-                return Err(format!(
-                    "Affine: input features {feat} do not match weight rows {}",
-                    xs[1].dims()[0]
-                ));
-            }
-            Ok(kernels::affine_forward(xs[0], xs[1], xs.get(2).copied()))
-        }
-        Op::Convolution { stride, pad, dilation } if (2..=3).contains(&xs.len()) => {
-            ir::check_conv_geometry(xs[0].dims(), xs[1].dims(), *stride, *pad, *dilation)?;
-            let g = Conv2dGeom {
-                kernel: (xs[1].dims()[2], xs[1].dims()[3]),
-                stride: *stride,
-                pad: *pad,
-                dilation: *dilation,
-            };
-            Ok(kernels::conv2d_forward(xs[0], xs[1], xs.get(2).copied(), &g))
-        }
-        Op::ReLU if xs.len() == 1 => Ok(ops::map(xs[0], |v| v.max(0.0))),
-        Op::Identity | Op::Dropout { .. } if xs.len() == 1 => Ok(xs[0].clone()),
-        _ => op.execute(xs),
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -510,7 +860,8 @@ mod tests {
     fn compile_once_execute_many() {
         let (net, params) = affine_relu_net();
         let plan = CompiledNet::compile(&net, &params).unwrap();
-        assert_eq!(plan.n_steps(), 2);
+        // fused at O2: affine + relu became one step
+        assert_eq!(plan.n_steps(), 1);
         // repeated calls, varying batch size, all matching the interpreter
         for bs in [1usize, 3, 8] {
             let x = NdArray::arange(&[bs, 2]);
@@ -521,6 +872,43 @@ mod tests {
             assert_eq!(got[0].dims(), want[0].dims());
             assert_eq!(got[0].data(), want[0].data());
         }
+    }
+
+    #[test]
+    fn opt_levels_report_their_pipeline() {
+        let (net, params) = affine_relu_net();
+        let p0 = CompiledNet::compile_with(&net, &params, OptLevel::O0).unwrap();
+        assert_eq!(p0.n_steps(), 2);
+        assert_eq!(p0.opt_level(), OptLevel::O0);
+        assert!(p0.pass_stats().is_empty());
+        let p2 = CompiledNet::compile(&net, &params).unwrap();
+        assert_eq!(p2.opt_level(), OptLevel::O2);
+        let fuse = p2.pass_stats().iter().find(|s| s.pass == "fuse-relu").unwrap();
+        assert_eq!(fuse.rewrites, 1);
+        assert_eq!(
+            p2.op_histogram(),
+            vec![("Affine+ReLU".to_string(), 1)]
+        );
+        assert_eq!(
+            p0.op_histogram(),
+            vec![("Affine".to_string(), 1), ("ReLU".to_string(), 1)]
+        );
+    }
+
+    #[test]
+    fn static_memory_plan_reports_peak_bytes() {
+        let (net, params) = affine_relu_net();
+        let p0 = CompiledNet::compile_with(&net, &params, OptLevel::O0).unwrap();
+        let p2 = CompiledNet::compile(&net, &params).unwrap();
+        let m0 = p0.memory_plan().expect("O0 memory plan");
+        let m2 = p2.memory_plan().expect("O2 memory plan");
+        assert!(m0.peak_bytes <= m0.naive_bytes);
+        assert!(m2.peak_bytes <= m0.peak_bytes, "{} > {}", m2.peak_bytes, m0.peak_bytes);
+        // O0 intermediates: h [1,2] and y [1,2] are live together at
+        // the ReLU step, so the peak covers both (inputs are
+        // caller-held and never counted)
+        assert!(m0.peak_bytes >= 2 * 2 * 4);
+        assert_eq!(p2.peak_arena_bytes(), Some(m2.peak_bytes));
     }
 
     #[test]
@@ -566,7 +954,10 @@ mod tests {
                 outputs: vec!["y".into()],
             }],
         };
+        // the compile-time dry run fails too — that only disables the
+        // memory plan, never the compile
         let plan = CompiledNet::compile(&net, &HashMap::new()).unwrap();
+        assert!(plan.memory_plan().is_none());
         let mut inputs = HashMap::new();
         inputs.insert("x".to_string(), NdArray::zeros(&[1, 1, 2, 2]));
         let err = plan.execute(&inputs).unwrap_err();
@@ -577,21 +968,28 @@ mod tests {
     #[test]
     fn intermediates_freed_at_last_use() {
         let (net, params) = affine_relu_net();
-        let plan = CompiledNet::compile(&net, &params).unwrap();
+        let plan = CompiledNet::compile_with(&net, &params, OptLevel::O0).unwrap();
         // slot 0 = x (dies after fc), slot 1 = h (dies after relu),
         // slot 2 = y (network output, kept)
         assert_eq!(plan.steps[0].free_after, vec![0]);
         assert_eq!(plan.steps[1].free_after, vec![1]);
         assert_eq!(plan.output_slots, vec![2]);
+        // fused: h is never materialized, x still dies at the one step
+        let fused = CompiledNet::compile(&net, &params).unwrap();
+        assert_eq!(fused.steps.len(), 1);
+        assert_eq!(fused.steps[0].free_after, vec![0]);
+        assert_eq!(fused.steps[0].out, 2);
+        assert_eq!(fused.output_slots, vec![2]);
     }
 
     #[test]
-    fn shadowed_tensor_names_match_interpreter() {
-        // h is defined twice; later readers must see the newest value
+    fn shadowed_tensor_names_are_rejected_at_compile() {
+        // duplicate output names used to silently shadow; they now
+        // fail validation with a clear error (see NetworkDef::validate)
         let net = NetworkDef {
             name: "s".into(),
             inputs: vec![TensorDef { name: "x".into(), dims: vec![1, 3] }],
-            outputs: vec!["y".into()],
+            outputs: vec!["h".into()],
             layers: vec![
                 Layer {
                     name: "a".into(),
@@ -607,23 +1005,10 @@ mod tests {
                     params: vec![],
                     outputs: vec!["h".into()],
                 },
-                Layer {
-                    name: "c".into(),
-                    op: Op::Identity,
-                    inputs: vec!["h".into()],
-                    params: vec![],
-                    outputs: vec!["y".into()],
-                },
             ],
         };
-        let params = HashMap::new();
-        let plan = CompiledNet::compile(&net, &params).unwrap();
-        let mut inputs = HashMap::new();
-        inputs.insert("x".to_string(), NdArray::from_slice(&[1, 3], &[1., 2., 3.]));
-        let got = plan.execute(&inputs).unwrap();
-        assert_eq!(got[0].data(), &[3., 5., 7.]);
-        let want = interpreter::run(&net, &inputs, &params).unwrap();
-        assert_eq!(got[0].data(), want[0].data());
+        let err = CompiledNet::compile(&net, &HashMap::new()).unwrap_err();
+        assert!(err.contains("duplicate"), "{err}");
     }
 
     #[test]
@@ -707,23 +1092,25 @@ mod tests {
     }
 
     #[test]
-    fn execute_observed_sees_every_tensor_once_and_matches_execute() {
+    fn execute_observed_sees_only_materialized_tensors() {
         let (net, params) = affine_relu_net();
-        let plan = CompiledNet::compile(&net, &params).unwrap();
         let x = NdArray::from_slice(&[2, 2], &[1., -1., 3., 4.]);
-        let mut seen: Vec<(String, usize)> = Vec::new();
-        let got = plan
-            .execute_observed(&[x.clone()], &mut |name, a| {
-                seen.push((name.to_string(), a.size()));
-            })
+        // O0: input + both layer outputs, in execution order
+        let p0 = CompiledNet::compile_with(&net, &params, OptLevel::O0).unwrap();
+        let mut seen: Vec<String> = Vec::new();
+        let got0 = p0
+            .execute_observed(&[x.clone()], &mut |name, _| seen.push(name.to_string()))
             .unwrap();
-        // input + both layer outputs, in execution order
-        assert_eq!(
-            seen.iter().map(|(n, _)| n.as_str()).collect::<Vec<_>>(),
-            vec!["x", "h", "y"]
-        );
-        assert!(seen.iter().all(|&(_, sz)| sz == 4));
-        let want = plan.execute_positional(&[x]).unwrap();
-        assert_eq!(got[0].data(), want[0].data());
+        assert_eq!(seen, vec!["x", "h", "y"]);
+        // O2: the fused intermediate 'h' is never materialized
+        let p2 = CompiledNet::compile(&net, &params).unwrap();
+        let mut seen2: Vec<String> = Vec::new();
+        let got2 = p2
+            .execute_observed(&[x.clone()], &mut |name, _| seen2.push(name.to_string()))
+            .unwrap();
+        assert_eq!(seen2, vec!["x", "y"]);
+        let want = p2.execute_positional(&[x]).unwrap();
+        assert_eq!(got2[0].data(), want[0].data());
+        assert_eq!(got0[0].data(), want[0].data());
     }
 }

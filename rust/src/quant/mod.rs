@@ -3,23 +3,36 @@
 //! runtime), built on the int8 kernels in
 //! [`crate::tensor::kernels::int8`].
 //!
-//! The pipeline:
+//! The pipeline, which now rides the compile-time graph optimizer
+//! ([`crate::nnp::passes`]) end to end:
 //!
-//! 1. **Calibrate** ([`calibrate`]): run a [`CompiledNet`] over a
-//!    small sample set and record per-tensor activation min/max
+//! 0. **Optimize** ([`crate::nnp::passes::optimize`]): the source
+//!    graph is rewritten at O2 first — BatchNorm folds into the
+//!    preceding Conv/Affine weights, no-ops are elided — so
+//!    BN-sandwiched convolutions become plain dense layers the int8
+//!    path can actually lower. NNB2 artifacts carry this *optimized*
+//!    graph.
+//! 1. **Calibrate** ([`calibrate`]): run the optimized [`CompiledNet`]
+//!    over a small sample set and record per-tensor activation min/max
 //!    (optionally percentile-clipped) through
-//!    [`CompiledNet::execute_observed`].
+//!    [`CompiledNet::execute_observed`] — ranges exist for exactly the
+//!    tensors the optimized plan materializes (fused and folded
+//!    intermediates are excluded by construction).
 //! 2. **Quantize** ([`quantize_model`]): every Affine/Convolution
 //!    weight whose input range was observed becomes a per-output-
 //!    channel symmetric i8 [`QTensor`] (~4× smaller); biases and every
 //!    other parameter stay f32. The result is a [`QuantizedModel`] —
 //!    the unit NNB2 serializes ([`crate::converters::nnb::to_nnb2`]).
-//! 3. **Compile** ([`QuantizedNet::compile`]): dense layers become
-//!    int8 GEMM steps with a fused requantize + bias (+ ReLU, when the
-//!    layer's unique reader is a ReLU) epilogue; every other op runs
-//!    the same f32 registry dispatch the base plan uses, with the
-//!    dequantize/quantize boundary folded into the dense steps
-//!    themselves (they consume and produce f32 tensors).
+//! 3. **Compile** ([`QuantizedNet::compile`]): the model compiles
+//!    through the same pass pipeline as the f32 path; every dense plan
+//!    step with an i8 weight and a calibrated input range becomes an
+//!    int8 GEMM step with a fused requantize + bias epilogue. A ReLU
+//!    the *plan* fused into the dense step (sole-reader chains, see
+//!    `nnp::passes::fuse_relu`) folds into the int8 epilogue for free;
+//!    every other step runs the same f32 kernels the base plan uses.
+//!    Weights a compile-time fold introduced (e.g. BN-folded convs of
+//!    an artifact quantized before this optimizer existed) are
+//!    re-quantized at load.
 //!
 //! [`QuantizedNet`] implements [`InferencePlan`], so
 //! [`crate::serve::Server`] hosts it exactly like an f32 plan.
@@ -31,7 +44,8 @@
 use std::collections::{HashMap, HashSet};
 
 use crate::nnp::ir::{NetworkDef, Op, TensorDef};
-use crate::nnp::plan::{execute_step, CompiledNet, InferencePlan, Src};
+use crate::nnp::passes::{self, OptLevel};
+use crate::nnp::plan::{execute_kernel, CompiledNet, InferencePlan, Src, StepKernel};
 use crate::tensor::kernels;
 use crate::tensor::kernels::int8::{self, ActQuant, QMatB};
 use crate::tensor::ops::Conv2dGeom;
@@ -78,7 +92,10 @@ struct Observed {
 }
 
 /// Run `plan` over `samples` (each a positional input set) and record
-/// activation ranges for every network input and layer output.
+/// activation ranges for every network input and materialized step
+/// output. Tensors the optimizer fused or folded away are never
+/// observed — the table describes what the optimized plan actually
+/// computes.
 pub fn calibrate(
     plan: &CompiledNet,
     samples: &[Vec<NdArray>],
@@ -225,9 +242,11 @@ impl QParam {
 }
 
 /// A quantized network: structure + mixed f32/i8 parameters +
-/// calibration table. Serializable as NNB2, compilable into a
-/// [`QuantizedNet`]. Parameters appear in layer binding order;
-/// parameters no layer references are dropped (dead for inference).
+/// calibration table. The `net` is the *optimized* definition when
+/// produced by [`quantize_net`] / `nnl quantize`. Serializable as
+/// NNB2, compilable into a [`QuantizedNet`]. Parameters appear in
+/// layer binding order; parameters no layer references are dropped
+/// (dead for inference).
 #[derive(Debug, Clone, PartialEq)]
 pub struct QuantizedModel {
     pub net: NetworkDef,
@@ -251,7 +270,9 @@ fn dense_weight_axis(l: &crate::nnp::ir::Layer, calib: &CalibTable) -> Option<us
 /// Quantize `net`'s dense weights per output channel. A parameter is
 /// stored as i8 only if *every* layer referencing it uses it as the
 /// weight of a quantizable dense layer (shared or oddly-wired params
-/// conservatively stay f32).
+/// conservatively stay f32). Pass the *optimized* definition (see
+/// [`crate::nnp::passes::optimize`]) so BN-folded convolutions
+/// quantize too — [`quantize_net`] wires this up.
 pub fn quantize_model(
     net: &NetworkDef,
     params: &HashMap<String, NdArray>,
@@ -321,13 +342,11 @@ struct QDense {
 
 /// What the quantized plan does at one step beyond the base plan.
 enum QStep {
-    /// Run the base op unchanged (f32 registry dispatch).
+    /// Run the base step unchanged (shared kernel dispatch).
     Passthrough,
-    /// int8 dense fast path replacing the base op.
+    /// int8 dense fast path replacing the base step. A ReLU the plan
+    /// fused into the base step rides the int8 epilogue.
     Dense(Box<QDense>),
-    /// A ReLU folded into the preceding dense step's epilogue: forward
-    /// the (already-rectified) input.
-    FusedRelu,
 }
 
 /// A compiled plan whose dense layers execute on the int8 GEMM —
@@ -339,46 +358,94 @@ pub struct QuantizedNet {
     quantized_layers: Vec<String>,
 }
 
-/// Index of the unique ReLU reading layer `i`'s output, if that ReLU
-/// is the *only* reader (a network output or a second reader keeps the
-/// raw value live, so the epilogue must not rectify it).
-fn unique_relu_reader(net: &NetworkDef, i: usize) -> Option<usize> {
-    let o = &net.layers[i].outputs[0];
-    let mut reader: Option<usize> = None;
-    let mut count = 0usize;
-    let mut redefined = false;
-    for (j, l) in net.layers.iter().enumerate().skip(i + 1) {
-        for inp in &l.inputs {
-            if inp == o {
-                count += 1;
-                reader = Some(j);
+/// Reject crafted / inconsistent i8 parameters against the model's
+/// own (pre-lowering) layer structure — dims come from untrusted NNB2
+/// bytes, and the decoder only checks the *total* element product, so
+/// per-axis values must be re-validated before any k·n arithmetic or
+/// panel allocation.
+fn validate_int8_params(model: &QuantizedModel) -> Result<(), String> {
+    let by_name: HashMap<&str, &QParam> =
+        model.params.iter().map(|(n, p)| (n.as_str(), p)).collect();
+    for l in &model.net.layers {
+        let Some(wname) = l.params.first() else { continue };
+        let Some(QParam::Int8(qt)) = by_name.get(wname.as_str()) else { continue };
+        let elems = qt
+            .dims
+            .iter()
+            .try_fold(1usize, |a, &d| a.checked_mul(d))
+            .filter(|&e| e == qt.data.len());
+        if qt.dims.is_empty()
+            || qt.dims.iter().any(|&d| d == 0)
+            || elems.is_none()
+            || qt.channel_axis >= qt.dims.len()
+            || qt.scales.len() != qt.dims[qt.channel_axis]
+        {
+            return Err(format!(
+                "layer '{}': weight '{wname}' has degenerate quantized shape {:?}",
+                l.name, qt.dims
+            ));
+        }
+        let c = match &l.op {
+            Op::Affine => {
+                if qt.dims.len() != 2 || qt.channel_axis != 1 {
+                    return Err(format!(
+                        "layer '{}': Affine weight '{wname}' quantized with shape {:?} \
+                         axis {} (want rank 2, axis 1)",
+                        l.name, qt.dims, qt.channel_axis
+                    ));
+                }
+                qt.dims[1]
+            }
+            Op::Convolution { .. } => {
+                if qt.dims.len() != 4 || qt.channel_axis != 0 {
+                    return Err(format!(
+                        "layer '{}': Convolution weight '{wname}' quantized with shape \
+                         {:?} axis {} (want rank 4, axis 0)",
+                        l.name, qt.dims, qt.channel_axis
+                    ));
+                }
+                qt.dims[0]
+            }
+            other => {
+                return Err(format!(
+                    "layer '{}': int8 weight '{wname}' on non-dense op {}",
+                    l.name,
+                    other.name()
+                ))
+            }
+        };
+        if l.inputs.len() != 1 || model.calib.get(&l.inputs[0]).is_none() {
+            return Err(format!(
+                "layer '{}': quantized weight '{wname}' but no calibrated input range",
+                l.name
+            ));
+        }
+        if let Some(bname) = l.params.get(1) {
+            let b = by_name
+                .get(bname.as_str())
+                .ok_or_else(|| format!("missing parameter '{bname}'"))?
+                .to_f32();
+            if b.size() != c {
+                return Err(format!(
+                    "layer '{}': bias size {} does not match {c} output channels",
+                    l.name,
+                    b.size()
+                ));
             }
         }
-        if &l.outputs[0] == o {
-            redefined = true;
-            break;
-        }
     }
-    if !redefined && net.outputs.iter().any(|n| n == o) {
-        count += 1;
-    }
-    match (count, reader) {
-        (1, Some(j))
-            if matches!(net.layers[j].op, Op::ReLU) && net.layers[j].inputs.len() == 1 =>
-        {
-            Some(j)
-        }
-        _ => None,
-    }
+    Ok(())
 }
 
 impl QuantizedNet {
     /// Compile a [`QuantizedModel`]: the base f32 plan is compiled
-    /// against dequantized parameters (the fallback path for every
-    /// non-dense op), then each dense layer with an i8 weight and a
-    /// calibrated input range becomes an int8 GEMM step, fusing a
-    /// uniquely-reading ReLU into its epilogue.
+    /// against dequantized parameters through the full pass pipeline
+    /// (the fallback path for every non-dense step), then each dense
+    /// plan step with an i8 weight and a calibrated input range
+    /// becomes an int8 GEMM step whose epilogue carries the step's
+    /// fused ReLU, bias and requantization.
     pub fn compile(model: &QuantizedModel) -> Result<QuantizedNet, String> {
+        validate_int8_params(model)?;
         let mut f32_params: HashMap<String, NdArray> = HashMap::new();
         for (name, p) in &model.params {
             f32_params.insert(name.clone(), p.to_f32());
@@ -387,101 +454,89 @@ impl QuantizedNet {
         let by_name: HashMap<&str, &QParam> =
             model.params.iter().map(|(n, p)| (n.as_str(), p)).collect();
 
-        let n_layers = model.net.layers.len();
-        let mut steps: Vec<QStep> = (0..n_layers).map(|_| QStep::Passthrough).collect();
+        let mut steps: Vec<QStep> = Vec::with_capacity(plan.steps().len());
         let mut quantized_layers = Vec::new();
-        for (i, l) in model.net.layers.iter().enumerate() {
-            if !matches!(steps[i], QStep::Passthrough) {
-                continue; // already claimed as a fused ReLU
-            }
-            let Some(wname) = l.params.first() else { continue };
-            let Some(QParam::Int8(qt)) = by_name.get(wname.as_str()) else { continue };
-            let Some(range) = (if l.inputs.len() == 1 {
-                model.calib.get(&l.inputs[0])
-            } else {
-                None
-            }) else {
+        for st in plan.steps() {
+            let (axis, relu, geom) = match &st.kernel {
+                StepKernel::Affine { relu } => (1usize, *relu, None),
+                StepKernel::Conv2d { geom, relu } => (0usize, *relu, Some(*geom)),
+                _ => {
+                    steps.push(QStep::Passthrough);
+                    continue;
+                }
+            };
+            let (Some(&Src::Act(xslot)), Some(&Src::Param(wi))) =
+                (st.args.first(), st.args.get(1))
+            else {
+                steps.push(QStep::Passthrough);
+                continue;
+            };
+            let wname = plan.param_name(wi);
+            let range = model.calib.get(plan.slot_name(xslot));
+            let mut requantized: Option<QTensor> = None;
+            let qt: &QTensor = match by_name.get(wname) {
+                Some(QParam::Int8(q)) => {
+                    // validated above; enforce the exact-i32 bound (a
+                    // foreign artifact may carry deeper weights: that
+                    // layer stays on the f32 fallback)
+                    if q.data.len() / q.dims[axis.min(q.dims.len() - 1)] > int8::MAX_EXACT_K {
+                        steps.push(QStep::Passthrough);
+                        continue;
+                    }
+                    q
+                }
+                // quantize_model deliberately kept this weight f32
+                // (shared, or deeper than the exact-i32 bound)
+                Some(QParam::Float(_)) => {
+                    steps.push(QStep::Passthrough);
+                    continue;
+                }
+                // a weight the compile-time folds introduced (e.g. a
+                // BN fold applied to an artifact quantized before the
+                // optimizer existed): quantize the bound value at load
+                None => {
+                    if range.is_none() {
+                        steps.push(QStep::Passthrough);
+                        continue;
+                    }
+                    let w = plan.param(wi);
+                    let outch = w.dims().get(axis).copied().unwrap_or(0);
+                    if outch == 0 || w.size() == 0 || w.size() / outch > int8::MAX_EXACT_K {
+                        steps.push(QStep::Passthrough);
+                        continue;
+                    }
+                    requantized = Some(QTensor::quantize(w, axis));
+                    requantized.as_ref().expect("just set")
+                }
+            };
+            let Some(range) = range else {
                 return Err(format!(
                     "layer '{}': quantized weight '{wname}' but no calibrated input range",
-                    l.name
+                    st.name
                 ));
             };
-            // dims come from untrusted NNB2 bytes: the decoder only
-            // checks the *total* element product, so per-axis values
-            // must be re-validated here before any k·n arithmetic or
-            // panel allocation (a zero dim would let the other axes be
-            // astronomically large)
-            let elems = qt
-                .dims
-                .iter()
-                .try_fold(1usize, |a, &d| a.checked_mul(d))
-                .filter(|&e| e == qt.data.len());
-            if qt.dims.is_empty() || qt.dims.iter().any(|&d| d == 0) || elems.is_none() {
-                return Err(format!(
-                    "layer '{}': weight '{wname}' has degenerate quantized shape {:?}",
-                    l.name, qt.dims
-                ));
-            }
-            if qt.data.len() / qt.dims[qt.channel_axis.min(qt.dims.len() - 1)]
-                > int8::MAX_EXACT_K
-            {
-                // a foreign artifact may carry i8 weights deeper than
-                // the exact-i32 bound: run that layer on the f32
-                // fallback (the base plan holds the dequantized weight)
-                continue;
-            }
-            let (weight, conv) = match &l.op {
-                Op::Affine => {
-                    if qt.dims.len() != 2 || qt.channel_axis != 1 {
-                        return Err(format!(
-                            "layer '{}': Affine weight '{wname}' quantized with shape {:?} \
-                             axis {} (want rank 2, axis 1)",
-                            l.name, qt.dims, qt.channel_axis
-                        ));
-                    }
-                    (QMatB::from_i8_kn(&qt.data, &qt.scales, qt.dims[0], qt.dims[1]), None)
-                }
-                Op::Convolution { stride, pad, dilation } => {
-                    if qt.dims.len() != 4 || qt.channel_axis != 0 {
-                        return Err(format!(
-                            "layer '{}': Convolution weight '{wname}' quantized with shape \
-                             {:?} axis {} (want rank 4, axis 0)",
-                            l.name, qt.dims, qt.channel_axis
-                        ));
-                    }
-                    let g = Conv2dGeom {
-                        kernel: (qt.dims[2], qt.dims[3]),
-                        stride: *stride,
-                        pad: *pad,
-                        dilation: *dilation,
-                    };
-                    // no overflow: the product of all four dims was
-                    // just checked against data.len()
+            let weight = match geom {
+                None => QMatB::from_i8_kn(&qt.data, &qt.scales, qt.dims[0], qt.dims[1]),
+                Some(_) => {
+                    // no overflow: the dim product was checked against
+                    // data.len() during validation
                     let k = qt.dims[1] * qt.dims[2] * qt.dims[3];
-                    (QMatB::from_i8_nk(&qt.data, &qt.scales, qt.dims[0], k), Some(g))
-                }
-                _ => {
-                    return Err(format!(
-                        "layer '{}': int8 weight '{wname}' on non-dense op {}",
-                        l.name,
-                        l.op.name()
-                    ))
+                    QMatB::from_i8_nk(&qt.data, &qt.scales, qt.dims[0], k)
                 }
             };
-            let bias = match l.params.get(1) {
-                Some(bname) => Some(
-                    by_name
-                        .get(bname.as_str())
-                        .ok_or_else(|| format!("missing parameter '{bname}'"))?
-                        .to_f32(),
-                ),
+            let bias = match st.args.get(2) {
+                Some(&Src::Param(bi)) => Some(plan.param(bi).clone()),
+                Some(&Src::Act(_)) => {
+                    steps.push(QStep::Passthrough);
+                    continue;
+                }
                 None => None,
             };
             if let Some(b) = &bias {
                 if b.size() != weight.n() {
                     return Err(format!(
                         "layer '{}': bias size {} does not match {} output channels",
-                        l.name,
+                        st.name,
                         b.size(),
                         weight.n()
                     ));
@@ -489,20 +544,16 @@ impl QuantizedNet {
             }
             let act = ActQuant::from_range(range.lo, range.hi);
             let combined: Vec<f32> = weight.scales().iter().map(|s| s * act.scale).collect();
-            let relu_at = unique_relu_reader(&model.net, i);
-            if let Some(j) = relu_at {
-                steps[j] = QStep::FusedRelu;
-            }
-            steps[i] = QStep::Dense(Box::new(QDense {
+            steps.push(QStep::Dense(Box::new(QDense {
                 weight,
                 wdims: qt.dims.clone(),
                 act,
                 combined,
                 bias,
-                relu: relu_at.is_some(),
-                conv,
-            }));
-            quantized_layers.push(l.name.clone());
+                relu,
+                conv: geom,
+            })));
+            quantized_layers.push(st.name.clone());
         }
         Ok(QuantizedNet { plan, steps, quantized_layers })
     }
@@ -605,10 +656,11 @@ impl InferencePlan for QuantizedNet {
         self.plan.check_inputs(inputs)
     }
 
-    /// The quantized twin of `CompiledNet::execute_positional`: same
-    /// slot environment, same eager liveness (freed slots recycle into
-    /// the scratch arena), but dense steps run the int8 GEMM and fused
-    /// ReLUs forward their already-rectified input.
+    /// The quantized twin of `CompiledNet::execute_positional`: the
+    /// same dumb step loop, slot environment and planned liveness
+    /// (freed slots recycle into the scratch arena), but dense steps
+    /// run the int8 GEMM with ReLU/bias/requantize fused into the
+    /// epilogue.
     fn execute_positional(&self, inputs: &[NdArray]) -> Result<Vec<NdArray>, String> {
         self.plan.check_inputs(inputs)?;
         let mut env: Vec<Option<NdArray>> = vec![None; self.plan.n_slots()];
@@ -625,10 +677,6 @@ impl InferencePlan for QuantizedNet {
                     };
                     self.run_dense(q, x).map_err(|e| format!("layer '{}': {e}", st.name))?
                 }
-                QStep::FusedRelu => match st.args.first() {
-                    Some(Src::Act(s)) => act(*s).clone(),
-                    _ => return Err(format!("layer '{}': malformed fused step", st.name)),
-                },
                 QStep::Passthrough => {
                     let mut xs: Vec<&NdArray> = Vec::with_capacity(st.args.len());
                     for a in &st.args {
@@ -637,7 +685,7 @@ impl InferencePlan for QuantizedNet {
                             Src::Param(i) => xs.push(self.plan.param(*i)),
                         }
                     }
-                    execute_step(&st.op, &xs)
+                    execute_kernel(&st.kernel, &xs)
                         .map_err(|e| format!("layer '{}': {e}", st.name))?
                 }
             };
@@ -691,17 +739,20 @@ pub fn referenced_params(
     out
 }
 
-/// Calibrate `net` on `samples` and quantize it: returns the
-/// serializable [`QuantizedModel`] and its compiled [`QuantizedNet`].
+/// Optimize `net` (O2 pass pipeline), calibrate it on `samples`, and
+/// quantize the optimized graph: returns the serializable
+/// [`QuantizedModel`] (carrying the optimized definition) and its
+/// compiled [`QuantizedNet`].
 pub fn quantize_net(
     net: &NetworkDef,
     params: &HashMap<String, NdArray>,
     samples: &[Vec<NdArray>],
     cfg: &QuantConfig,
 ) -> Result<(QuantizedModel, QuantizedNet), String> {
-    let plan = CompiledNet::compile(net, params)?;
+    let (onet, oparams, _) = passes::optimize(net, params, OptLevel::default())?;
+    let plan = CompiledNet::compile(&onet, &oparams)?;
     let calib = calibrate(&plan, samples, cfg)?;
-    let model = quantize_model(net, params, &calib)?;
+    let model = quantize_model(&onet, &oparams, &calib)?;
     let qnet = QuantizedNet::compile(&model)?;
     Ok((model, qnet))
 }
@@ -845,6 +896,7 @@ mod tests {
         let s = samples(8, &[1, 4], 5);
         let (model, qnet) = quantize_net(&net, &params, &s, &QuantConfig::default()).unwrap();
         assert_eq!(qnet.n_quantized(), 1);
+        // the fused dense step keeps the dense layer's name
         assert_eq!(qnet.quantized_layers(), &["fc".to_string()]);
         // fused output == relu applied to the unfused dense output
         let (net_plain, _) = affine_net(false);
@@ -888,6 +940,63 @@ mod tests {
         for (y, z) in out[0].data().iter().zip(out[1].data()) {
             assert_eq!(*y, (-z).max(0.0));
         }
+    }
+
+    #[test]
+    fn bn_folded_conv_takes_the_int8_path() {
+        // conv -> bn -> relu: the optimizer folds the BN, fuses the
+        // ReLU, and the quantizer lowers the folded conv onto int8
+        let net = NetworkDef {
+            name: "cbr".into(),
+            inputs: vec![TensorDef { name: "x".into(), dims: vec![1, 2, 6, 6] }],
+            outputs: vec!["y".into()],
+            layers: vec![
+                Layer {
+                    name: "conv".into(),
+                    op: Op::Convolution { stride: (1, 1), pad: (1, 1), dilation: (1, 1) },
+                    inputs: vec!["x".into()],
+                    params: vec!["W".into(), "b".into()],
+                    outputs: vec!["h".into()],
+                },
+                Layer {
+                    name: "bn".into(),
+                    op: Op::BatchNorm { eps: 1e-5 },
+                    inputs: vec!["h".into()],
+                    params: vec!["beta".into(), "gamma".into(), "mean".into(), "var".into()],
+                    outputs: vec!["hb".into()],
+                },
+                Layer {
+                    name: "act".into(),
+                    op: Op::ReLU,
+                    inputs: vec!["hb".into()],
+                    params: vec![],
+                    outputs: vec!["y".into()],
+                },
+            ],
+        };
+        let mut rng = Rng::new(31);
+        let mut params = HashMap::new();
+        params.insert("W".to_string(), rng.randn(&[4, 2, 3, 3], 0.5));
+        params.insert("b".to_string(), rng.randn(&[4], 0.2));
+        params.insert("beta".to_string(), rng.randn(&[4], 0.3));
+        params.insert("gamma".to_string(), rng.rand(&[4], 0.5, 1.5));
+        params.insert("mean".to_string(), rng.randn(&[4], 0.4));
+        params.insert("var".to_string(), rng.rand(&[4], 0.2, 1.2));
+        let s = samples(8, &[1, 2, 6, 6], 33);
+        let (model, qnet) = quantize_net(&net, &params, &s, &QuantConfig::default()).unwrap();
+        // the BN is gone from the stored artifact and the conv is int8
+        assert_eq!(model.net.layers.len(), 2, "{:?}", model.net.layers);
+        assert_eq!(qnet.n_quantized(), 1, "{:?}", qnet.quantized_layers());
+        // int8 output tracks the unoptimized f32 reference
+        let plan = CompiledNet::compile(&net, &params).unwrap();
+        let x = samples(1, &[1, 2, 6, 6], 35).pop().unwrap();
+        let q = qnet.execute_positional(&x).unwrap();
+        let f = plan.execute_positional(&x).unwrap();
+        assert!(
+            q[0].allclose(&f[0], 0.35, 0.15),
+            "int8 folded conv drifted: {}",
+            q[0].max_abs_diff(&f[0])
+        );
     }
 
     #[test]

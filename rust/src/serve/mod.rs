@@ -4,7 +4,9 @@
 //!
 //! [`Server`] owns a worker pool sharing one plan behind the
 //! [`InferencePlan`] trait — the f32 [`CompiledNet`] or the int8
-//! [`crate::quant::QuantizedNet`], compiled once at load time and
+//! [`crate::quant::QuantizedNet`], compiled once at load time through
+//! the full graph-optimizer pipeline (`nnp::passes`, O2: BN folding,
+//! no-op elision, dense→ReLU fusion, static memory plan) and
 //! executed `&self` from every worker. Single-example requests are
 //! **micro-batched**: a worker
 //! takes the first queued request, then keeps draining the queue until

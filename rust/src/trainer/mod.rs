@@ -199,6 +199,15 @@ pub fn train_dynamic(model: &str, data: &dyn DataSource, cfg: &TrainConfig) -> T
 
 /// Validation error (argmax) of the current registry parameters, using
 /// an eval-mode graph (running-stat BN, inert dropout).
+///
+/// The eval graph is traced and compiled **once** through the full O2
+/// pass pipeline (`nnp::passes`: BN folded onto the running stats,
+/// dropout elided, dense→ReLU chains fused), then executed per batch —
+/// the same optimized serving path `nnl serve` runs, exercised here on
+/// every training run. Training itself never sees the optimizer: the
+/// tape records and differentiates the graph exactly as written (the
+/// O0 contract). If the trace cannot compile, evaluation falls back to
+/// forwarding the tape directly.
 pub fn evaluate_dynamic(model: &str, data: &dyn DataSource, batches: usize) -> f32 {
     let batch0 = data.val_batch(0);
     let bs = batch0.0.dims()[0];
@@ -207,13 +216,27 @@ pub fn evaluate_dynamic(model: &str, data: &dyn DataSource, batches: usize) -> f
     let x = g.input("x", &dims);
     let logits = build_model(&mut g, model, &x, data.classes());
     let classes = data.classes();
+    let def = g.finish(&[&logits]);
+    let snapshot: std::collections::HashMap<String, NdArray> =
+        PF::get_parameters().into_iter().map(|(n, v)| (n, v.data())).collect();
+    let plan = crate::nnp::CompiledNet::compile(&def, &snapshot);
     let mut wrong = 0usize;
     let mut total = 0usize;
     for i in 0..batches {
         let (bx, by) = data.val_batch(i);
-        x.var.set_data(bx);
-        logits.var.forward();
-        let out = logits.var.data();
+        let planned = plan.as_ref().ok().and_then(|p| {
+            p.execute_positional(std::slice::from_ref(&bx)).ok().map(|mut o| o.remove(0))
+        });
+        let out = match planned {
+            Some(o) => o,
+            None => {
+                // untraceable graph or a batch the plan rejects:
+                // forward the tape directly, never abort a training run
+                x.var.set_data(bx);
+                logits.var.forward();
+                logits.var.data()
+            }
+        };
         for b in 0..bs {
             let row = &out.data()[b * classes..(b + 1) * classes];
             // NaN-safe total ordering (shared with the serving path):

@@ -1,0 +1,234 @@
+//! Pass-pipeline parity suite (CI re-runs it under `NNL_THREADS=1`):
+//!
+//! - for every zoo model, the optimized plan matches the unoptimized
+//!   interpreter-semantics plan — bit-identical at O1 (elision / DCE /
+//!   fusion share the exact kernels), ≤ 1e-4 relative at O2 (BN /
+//!   const folding re-associate floats);
+//! - thread-count bit-identity is preserved under `with_thread_limit`;
+//! - the static memory plan's peak never exceeds the naive
+//!   sum-of-slot-sizes bound and never grows under optimization;
+//! - `interpreter::run` (and everything built on it: converters,
+//!   trace round-trips, training-side comparisons) stays at O0 —
+//!   provably untouched by optimizer semantics;
+//! - NNB2 calibrate → quantize → serve stays consistent under
+//!   optimization: ranges exist for exactly the tensors the optimized
+//!   plan materializes, and roundtripped artifacts agree.
+
+use std::collections::{HashMap, HashSet};
+
+use nnl::bench_quant::random_inputs;
+use nnl::converters::nnb;
+use nnl::models::zoo;
+use nnl::nnp::passes::{optimize, OptLevel};
+use nnl::nnp::{interpreter, CompiledNet, InferencePlan, Layer, NetworkDef, Op, TensorDef};
+use nnl::quant::{quantize_net, QuantConfig};
+use nnl::tensor::{parallel, NdArray, Rng};
+
+#[test]
+fn optimized_zoo_plans_match_unoptimized() {
+    for (mi, name) in zoo::model_names().into_iter().enumerate() {
+        let (net, params) = zoo::export_eval(name, 11);
+        let p0 = CompiledNet::compile_with(&net, &params, OptLevel::O0)
+            .unwrap_or_else(|e| panic!("{name} O0: {e}"));
+        let p1 = CompiledNet::compile_with(&net, &params, OptLevel::O1)
+            .unwrap_or_else(|e| panic!("{name} O1: {e}"));
+        let p2 = CompiledNet::compile(&net, &params)
+            .unwrap_or_else(|e| panic!("{name} O2: {e}"));
+        assert!(p1.n_steps() <= p0.n_steps(), "{name}: O1 grew the plan");
+        assert!(p2.n_steps() <= p1.n_steps(), "{name}: O2 grew the plan");
+        for s in random_inputs(&net, 2, &mut Rng::new(40 + mi as u64)) {
+            let o0 = p0.execute_positional(&s).unwrap();
+            let o1 = p1.execute_positional(&s).unwrap();
+            let o2 = p2.execute_positional(&s).unwrap();
+            for ((a, b), c) in o0.iter().zip(&o1).zip(&o2) {
+                assert_eq!(a.dims(), b.dims(), "{name}: O1 changed shapes");
+                assert_eq!(
+                    a.data(),
+                    b.data(),
+                    "{name}: O1 must be bit-identical (shared kernels)"
+                );
+                assert!(
+                    a.allclose(c, 1e-4, 1e-4),
+                    "{name}: O2 drifted by {}",
+                    a.max_abs_diff(c)
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn optimized_plans_are_bit_identical_at_any_thread_count() {
+    for name in ["lenet", "resnet18"] {
+        let (net, params) = zoo::export_eval(name, 11);
+        let plan = CompiledNet::compile(&net, &params).unwrap();
+        for s in random_inputs(&net, 3, &mut Rng::new(51)) {
+            let full = plan.execute_positional(&s).unwrap();
+            let serial = parallel::with_thread_limit(1, || plan.execute_positional(&s).unwrap());
+            for (a, b) in full.iter().zip(&serial) {
+                assert_eq!(a.dims(), b.dims());
+                assert_eq!(a.data(), b.data(), "{name}: thread count changed optimized bits");
+            }
+        }
+    }
+}
+
+#[test]
+fn planned_peak_bytes_are_bounded_and_never_grow_under_optimization() {
+    for name in zoo::model_names() {
+        let (net, params) = zoo::export_eval(name, 11);
+        let p0 = CompiledNet::compile_with(&net, &params, OptLevel::O0).unwrap();
+        let p2 = CompiledNet::compile(&net, &params).unwrap();
+        let m0 = p0.memory_plan().unwrap_or_else(|| panic!("{name}: no O0 memory plan"));
+        let m2 = p2.memory_plan().unwrap_or_else(|| panic!("{name}: no O2 memory plan"));
+        for m in [m0, m2] {
+            assert!(m.peak_bytes > 0, "{name}: empty arena");
+            assert!(
+                m.peak_bytes <= m.naive_bytes,
+                "{name}: peak {} exceeds naive {}",
+                m.peak_bytes,
+                m.naive_bytes
+            );
+            let largest =
+                m.slots.iter().flatten().map(|a| a.bytes).max().unwrap_or(0);
+            assert!(m.peak_bytes >= largest, "{name}: peak below largest slot");
+        }
+        assert!(
+            m2.peak_bytes <= m0.peak_bytes,
+            "{name}: optimization grew peak bytes ({} -> {})",
+            m0.peak_bytes,
+            m2.peak_bytes
+        );
+    }
+}
+
+/// A hand-built conv → BN → relu net — the shape BN folding targets.
+fn conv_bn_relu() -> (NetworkDef, HashMap<String, NdArray>) {
+    let net = NetworkDef {
+        name: "cbr".into(),
+        inputs: vec![TensorDef { name: "x".into(), dims: vec![1, 2, 6, 6] }],
+        outputs: vec!["y".into()],
+        layers: vec![
+            Layer {
+                name: "conv".into(),
+                op: Op::Convolution { stride: (1, 1), pad: (1, 1), dilation: (1, 1) },
+                inputs: vec!["x".into()],
+                params: vec!["W".into(), "b".into()],
+                outputs: vec!["h".into()],
+            },
+            Layer {
+                name: "bn".into(),
+                op: Op::BatchNorm { eps: 1e-5 },
+                inputs: vec!["h".into()],
+                params: vec!["beta".into(), "gamma".into(), "mean".into(), "var".into()],
+                outputs: vec!["hb".into()],
+            },
+            Layer {
+                name: "act".into(),
+                op: Op::ReLU,
+                inputs: vec!["hb".into()],
+                params: vec![],
+                outputs: vec!["y".into()],
+            },
+        ],
+    };
+    let mut rng = Rng::new(61);
+    let mut params = HashMap::new();
+    params.insert("W".to_string(), rng.randn(&[4, 2, 3, 3], 0.5));
+    params.insert("b".to_string(), rng.randn(&[4], 0.2));
+    params.insert("beta".to_string(), rng.randn(&[4], 0.3));
+    params.insert("gamma".to_string(), rng.rand(&[4], 0.5, 1.5));
+    params.insert("mean".to_string(), rng.randn(&[4], 0.4));
+    params.insert("var".to_string(), rng.rand(&[4], 0.2, 1.2));
+    (net, params)
+}
+
+#[test]
+fn interpreter_runs_at_o0_untouched_by_optimizer_semantics() {
+    let (net, params) = conv_bn_relu();
+    let x = Rng::new(62).randn(&[2, 2, 6, 6], 1.0);
+    let mut named = HashMap::new();
+    named.insert("x".to_string(), x.clone());
+    // the interpreter executes the graph exactly as written: its
+    // output is bit-identical to an explicit O0 plan even though the
+    // O2 pipeline would fold the BN away
+    let interp = interpreter::run(&net, &named, &params).unwrap();
+    let p0 = CompiledNet::compile_with(&net, &params, OptLevel::O0).unwrap();
+    let o0 = p0.execute_positional(&[x.clone()]).unwrap();
+    assert_eq!(interp[0].data(), o0[0].data(), "interpreter must stay at O0");
+    assert_eq!(p0.n_steps(), 3);
+    // while the default pipeline really does rewrite this graph
+    let p2 = CompiledNet::compile(&net, &params).unwrap();
+    assert_eq!(p2.n_steps(), 1, "conv+bn+relu must fold+fuse into one step");
+    let o2 = p2.execute_positional(&[x]).unwrap();
+    assert!(o0[0].allclose(&o2[0], 1e-4, 1e-4));
+}
+
+#[test]
+fn calibration_covers_exactly_the_materialized_tensors() {
+    let (net, params) = zoo::export_eval("mlp", 11);
+    let samples = random_inputs(&net, 8, &mut Rng::new(71));
+    let (model, _) = quantize_net(&net, &params, &samples, &QuantConfig::default()).unwrap();
+    // what the optimized plan actually materializes
+    let (onet, oparams, _) = optimize(&net, &params, OptLevel::default()).unwrap();
+    let plan = CompiledNet::compile(&onet, &oparams).unwrap();
+    let mut observed: HashSet<String> = HashSet::new();
+    plan.execute_observed(&samples[0], &mut |name, _| {
+        observed.insert(name.to_string());
+    })
+    .unwrap();
+    for (name, _) in &model.calib.ranges {
+        assert!(observed.contains(name), "calibrated '{name}' is not materialized");
+    }
+    assert_eq!(model.calib.ranges.len(), observed.len());
+    // and the unoptimized plan materializes strictly more (dropout +
+    // pre-ReLU affine outputs exist only at O0)
+    let p0 = CompiledNet::compile_with(&net, &params, OptLevel::O0).unwrap();
+    let mut observed0: HashSet<String> = HashSet::new();
+    p0.execute_observed(&samples[0], &mut |name, _| {
+        observed0.insert(name.to_string());
+    })
+    .unwrap();
+    assert!(
+        observed.len() < observed0.len(),
+        "optimizer materialized nothing less ({} vs {})",
+        observed.len(),
+        observed0.len()
+    );
+}
+
+#[test]
+fn nnb2_agreement_is_unchanged_by_roundtrip() {
+    for name in ["mlp", "lenet"] {
+        let (net, params) = zoo::export_eval(name, 11);
+        let samples = random_inputs(&net, 8, &mut Rng::new(73));
+        let (model, qnet) =
+            quantize_net(&net, &params, &samples, &QuantConfig::default()).unwrap();
+        let bytes = nnb::to_nnb2(&model);
+        let engine = nnb::NnbEngine::load(&bytes).unwrap();
+        let plan = CompiledNet::compile(&net, &params).unwrap();
+        let evals = random_inputs(&net, 32, &mut Rng::new(74));
+        let mut agree_mem = 0usize;
+        let mut agree_disk = 0usize;
+        for s in &evals {
+            let f = plan.execute_positional(s).unwrap();
+            let q_mem = qnet.execute_positional(s).unwrap();
+            let q_disk = engine.plan().execute_positional(s).unwrap();
+            // serve agreement is unchanged by serialization: the
+            // roundtripped plan is bit-identical to the in-memory one
+            assert_eq!(q_mem[0].data(), q_disk[0].data(), "{name}: roundtrip drifted");
+            if f[0].argmax_flat() == q_mem[0].argmax_flat() {
+                agree_mem += 1;
+            }
+            if f[0].argmax_flat() == q_disk[0].argmax_flat() {
+                agree_disk += 1;
+            }
+        }
+        assert_eq!(agree_mem, agree_disk);
+        assert!(
+            agree_mem * 100 >= evals.len() * 90,
+            "{name}: agreement {agree_mem}/{}",
+            evals.len()
+        );
+    }
+}
