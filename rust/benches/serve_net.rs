@@ -1,0 +1,16 @@
+//! Bench: the TCP serving front end under offered load — p50/p99
+//! latency vs offered rps, micro-batched vs unbatched, f32 vs int8,
+//! over a real loopback socket speaking the binary protocol.
+//!
+//! The harness lives in `nnl::bench_serve` (shared with
+//! `nnl bench-serve --net`); this binary prints the table and writes
+//! `BENCH_serve.json`. Pass `--quick` for the CI smoke sizing.
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let report = nnl::bench_serve::run(quick);
+    print!("{}", report.text);
+    std::fs::write("BENCH_serve.json", report.json.to_string_pretty())
+        .expect("writing BENCH_serve.json");
+    eprintln!("wrote BENCH_serve.json");
+}

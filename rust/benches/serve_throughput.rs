@@ -17,8 +17,12 @@ use nnl::serve::{bench_throughput, ServeConfig};
 fn main() {
     for (model, requests) in [("mlp", 256usize), ("lenet", 64usize)] {
         let (net, params) = zoo::export_eval(model, 3);
-        let cfg =
-            ServeConfig { workers: 4, max_batch: 16, max_wait: Duration::from_millis(2) };
+        let cfg = ServeConfig {
+            workers: 4,
+            max_batch: 16,
+            max_wait: Duration::from_millis(2),
+            queue_cap: 0,
+        };
         let report = bench_throughput(&net, &params, requests, &cfg)
             .unwrap_or_else(|e| panic!("{model}: {e}"));
         print!("{report}");

@@ -1,0 +1,233 @@
+//! Serving front-end benchmark harness — shared by `nnl bench-serve
+//! --net` and `benches/serve_net.rs`, emitting `BENCH_serve.json`.
+//!
+//! Measures the TCP front end under open-loop offered load: a
+//! registry hosting the same zoo model three ways (f32 micro-batched,
+//! f32 unbatched, int8 micro-batched), a real [`NetServer`] on a
+//! loopback socket, and paced client threads driving the binary
+//! protocol. Reports achieved rps and p50/p99 latency per offered
+//! rate, plus shed/error counts — the acceptance number is
+//! `batched_no_worse`: micro-batching must not lose throughput at the
+//! highest offered rate.
+
+use std::net::SocketAddr;
+use std::time::{Duration, Instant};
+
+use crate::models::zoo;
+use crate::nnp::plan::CompiledNet;
+use crate::quant::{self, QuantConfig};
+use crate::serve::net::{NetClient, NetConfig, NetServer, Registry, PROTO_VERSION};
+use crate::serve::{ServeConfig, ServeError};
+use crate::tensor::{parallel, Rng};
+use crate::utils::json::Json;
+
+/// Everything one run produces: the human table and the JSON payload.
+pub struct ServeBenchReport {
+    pub text: String,
+    pub json: Json,
+}
+
+struct RunStats {
+    model: &'static str,
+    batched: bool,
+    offered_rps: f64,
+    achieved_rps: f64,
+    p50_ms: f64,
+    p99_ms: f64,
+    ok: usize,
+    shed: usize,
+    errors: usize,
+}
+
+fn quantile(sorted_ms: &[f64], q: f64) -> f64 {
+    if sorted_ms.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted_ms.len() - 1) as f64 * q).round() as usize;
+    sorted_ms[idx.min(sorted_ms.len() - 1)]
+}
+
+/// One open-loop load run: `clients` paced connections offering
+/// `offered_rps` in aggregate for `duration`, each request a blocking
+/// binary-protocol INFER.
+fn load_run(
+    addr: SocketAddr,
+    model: &'static str,
+    batched: bool,
+    clients: usize,
+    offered_rps: f64,
+    duration: Duration,
+) -> RunStats {
+    let wall = Instant::now();
+    let handles: Vec<_> = (0..clients)
+        .map(|c| {
+            std::thread::spawn(move || {
+                let mut cli = NetClient::connect(addr).expect("bench client connect");
+                let mut rng = Rng::new(1000 + c as u64);
+                let x = rng.rand(&[1, 64], -1.0, 1.0);
+                let period = Duration::from_secs_f64(clients as f64 / offered_rps);
+                let start = Instant::now();
+                let mut next = start;
+                let (mut lat_ms, mut shed, mut errors) = (Vec::new(), 0usize, 0usize);
+                while start.elapsed() < duration {
+                    let now = Instant::now();
+                    if next > now {
+                        std::thread::sleep(next - now);
+                    }
+                    next += period;
+                    let t0 = Instant::now();
+                    match cli.infer(model, std::slice::from_ref(&x)) {
+                        Ok(_) => lat_ms.push(t0.elapsed().as_secs_f64() * 1e3),
+                        Err(ServeError::Overloaded { .. }) => shed += 1,
+                        Err(_) => errors += 1,
+                    }
+                }
+                (lat_ms, shed, errors)
+            })
+        })
+        .collect();
+    let (mut lat_ms, mut shed, mut errors) = (Vec::new(), 0usize, 0usize);
+    for h in handles {
+        let (l, s, e) = h.join().expect("bench client");
+        lat_ms.extend(l);
+        shed += s;
+        errors += e;
+    }
+    let elapsed = wall.elapsed().as_secs_f64().max(1e-9);
+    lat_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    RunStats {
+        model,
+        batched,
+        offered_rps,
+        achieved_rps: lat_ms.len() as f64 / elapsed,
+        p50_ms: quantile(&lat_ms, 0.50),
+        p99_ms: quantile(&lat_ms, 0.99),
+        ok: lat_ms.len(),
+        shed,
+        errors,
+    }
+}
+
+/// Run the suite. `quick` shrinks rates/duration for CI smoke use.
+pub fn run(quick: bool) -> ServeBenchReport {
+    // one registry, three hostings of the zoo MLP: micro-batched f32,
+    // unbatched f32, micro-batched int8 (quantized from the same net)
+    let (net, params) = zoo::export_eval("mlp", 11);
+    let plan = CompiledNet::compile(&net, &params).expect("mlp compile");
+    let mut rng = Rng::new(7);
+    let samples = crate::bench_quant::random_inputs(&net, if quick { 16 } else { 64 }, &mut rng);
+    let (_, qnet) = quant::quantize_net(&net, &params, &samples, &QuantConfig::default())
+        .expect("mlp quantize");
+
+    let base = ServeConfig {
+        workers: 4,
+        max_batch: 8,
+        max_wait: Duration::from_millis(1),
+        // deep enough that the bench measures service, not shedding
+        queue_cap: 4096,
+    };
+    let registry = std::sync::Arc::new(Registry::new(base.clone()));
+    let plan: std::sync::Arc<dyn crate::nnp::plan::InferencePlan> = std::sync::Arc::new(plan);
+    registry.deploy("mlp", std::sync::Arc::clone(&plan), "f32");
+    registry.deploy_with(
+        "mlp_unbatched",
+        plan,
+        "f32",
+        ServeConfig { max_batch: 1, ..base.clone() },
+    );
+    registry.deploy("mlp_int8", std::sync::Arc::new(qnet), "int8");
+
+    let server = NetServer::bind(
+        "127.0.0.1:0",
+        std::sync::Arc::clone(&registry),
+        NetConfig { max_conns: 256, ..NetConfig::default() },
+    )
+    .expect("bench server bind");
+    let addr = server.local_addr();
+
+    let (rates, clients, duration) = if quick {
+        (vec![500.0, 2000.0], 8, Duration::from_millis(300))
+    } else {
+        (vec![500.0, 2000.0, 8000.0], 16, Duration::from_millis(1500))
+    };
+
+    let cases: [(&'static str, bool); 3] =
+        [("mlp", true), ("mlp_unbatched", false), ("mlp_int8", true)];
+    let mut runs: Vec<RunStats> = Vec::new();
+    for &(model, batched) in &cases {
+        // warm the pools and the connection path before timing
+        let mut warm = NetClient::connect(addr).expect("warmup connect");
+        let wx = Rng::new(3).rand(&[1, 64], -1.0, 1.0);
+        for _ in 0..8 {
+            warm.infer(model, std::slice::from_ref(&wx)).expect("warmup infer");
+        }
+        for &rate in &rates {
+            runs.push(load_run(addr, model, batched, clients, rate, duration));
+        }
+    }
+
+    let top = *rates.last().expect("rates non-empty");
+    let achieved_at = |name: &str| {
+        runs.iter()
+            .find(|r| r.model == name && r.offered_rps == top)
+            .map(|r| r.achieved_rps)
+            .unwrap_or(0.0)
+    };
+    // batching must not lose throughput where it matters (0.85 slack
+    // absorbs scheduler noise on loaded CI hosts)
+    let batched_no_worse = achieved_at("mlp") >= 0.85 * achieved_at("mlp_unbatched");
+    let int8_served = runs.iter().any(|r| r.model == "mlp_int8" && r.ok > 0 && r.errors == 0);
+
+    let mut text = format!(
+        "serve_net bench: {} clients, {:?} per rate, NNL_THREADS={}\n\
+         {:<14} {:>9} {:>10} {:>9} {:>9} {:>7} {:>6} {:>6}\n",
+        clients,
+        duration,
+        parallel::num_threads(),
+        "model",
+        "offered",
+        "achieved",
+        "p50 ms",
+        "p99 ms",
+        "ok",
+        "shed",
+        "err",
+    );
+    for r in &runs {
+        text.push_str(&format!(
+            "{:<14} {:>9.0} {:>10.0} {:>9.3} {:>9.3} {:>7} {:>6} {:>6}\n",
+            r.model, r.offered_rps, r.achieved_rps, r.p50_ms, r.p99_ms, r.ok, r.shed, r.errors,
+        ));
+    }
+    text.push_str(&format!("batched_no_worse: {batched_no_worse}   int8_served: {int8_served}\n"));
+
+    let json = Json::obj(vec![
+        ("nnl_threads", Json::num(parallel::num_threads() as f64)),
+        ("protocol_version", Json::num(PROTO_VERSION as f64)),
+        ("clients", Json::num(clients as f64)),
+        (
+            "runs",
+            Json::Arr(
+                runs.iter()
+                    .map(|r| {
+                        Json::obj(vec![
+                            ("model", Json::str(r.model)),
+                            ("batched", Json::Bool(r.batched)),
+                            ("offered_rps", Json::num(r.offered_rps)),
+                            ("achieved_rps", Json::num(r.achieved_rps)),
+                            ("p50_ms", Json::num(r.p50_ms)),
+                            ("p99_ms", Json::num(r.p99_ms)),
+                            ("ok", Json::num(r.ok as f64)),
+                            ("shed", Json::num(r.shed as f64)),
+                            ("errors", Json::num(r.errors as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("batched_no_worse", Json::Bool(batched_no_worse)),
+        ("int8_served", Json::Bool(int8_served)),
+    ]);
+    drop(server);
+    ServeBenchReport { text, json }
+}

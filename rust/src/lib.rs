@@ -106,6 +106,28 @@
 //! [`nnp::InferencePlan`]. CLI: `nnl quantize` / `nnl bench-quant`
 //! (→ `BENCH_quant.json`).
 //!
+//! ## The serving front end: TCP protocol, registry, hot reload
+//!
+//! Production traffic reaches all of the above through
+//! [`serve::net`]: a TCP server speaking a length-prefixed,
+//! version-tagged binary protocol (with a line-oriented JSON fallback
+//! — telnet-able, used by tests) over a **multi-model
+//! [`serve::net::Registry`]** that hosts many NNP/NNB/NNB2 artifacts
+//! concurrently behind [`nnp::InferencePlan`]. Deploying onto a live
+//! name is an **atomic hot swap**: in-flight requests finish on the
+//! plan that admitted them, new requests land on the new plan, and the
+//! old worker pool drains and joins when its last holder lets go —
+//! zero dropped requests across a reload. Admission control is per
+//! model: bounded queues whose default capacity derives from the
+//! static memory plan's peak arena bytes
+//! ([`serve::derive_queue_cap`]), shedding with typed
+//! [`serve::ServeError::Overloaded`] replies when full. Live counters
+//! ([`monitor::metrics::ModelMetrics`]: latency histograms with
+//! p50/p99, throughput, queue depth, batch-size distribution, shed
+//! counts) survive swaps and export through the `STATS` verb. CLI:
+//! `nnl serve --listen ADDR --models name=path,...` and
+//! `nnl bench-serve --net` (→ `BENCH_serve.json`).
+//!
 //! ## Module map
 //!
 //! ## The compute floor: tiled, multi-threaded kernels
@@ -145,12 +167,15 @@
 //! | [`nnp::passes`] | graph optimizer: `Pass` pipeline, memory planner |
 //! | [`quant`] | int8 calibration, `QuantizedNet`, NNB2 model |
 //! | [`serve`] | batched multi-threaded inference server |
+//! | [`serve::net`] | TCP front end: protocol, registry, hot reload |
+//! | [`monitor::metrics`] | serving metrics: histograms, shed counts |
 //! | [`converters`] | ONNX-lite, NNB/NNB2, frozen graph, Rust source |
 //! | [`runtime`] | AOT HLO artifacts through PJRT (`pjrt` feature) |
 //! | [`console`] | headless Neural Network Console: trials, search |
 //! | [`bench_kernels`] | kernel bench harness (`BENCH_kernels.json`) |
 //! | [`bench_quant`] | quantization bench harness (`BENCH_quant.json`) |
 //! | [`bench_plan`] | graph-optimizer bench harness (`BENCH_plan.json`) |
+//! | [`bench_serve`] | serving front-end bench (`BENCH_serve.json`) |
 //! | [`data`] | synthetic datasets + loaders |
 //! | [`monitor`] | series/time monitors |
 //! | [`context`] | backend/precision context (Listing 2) |
@@ -179,6 +204,7 @@
 pub mod bench_kernels;
 pub mod bench_plan;
 pub mod bench_quant;
+pub mod bench_serve;
 pub mod comm;
 pub mod console;
 pub mod context;

@@ -17,6 +17,7 @@ use nnl::models::zoo;
 use nnl::nnp::{passes, CompiledNet, InferencePlan, Nnp, OptLevel};
 use nnl::quant::{self, QuantConfig};
 use nnl::runtime::Manifest;
+use nnl::serve::net::{NetConfig, NetServer, Registry};
 use nnl::serve::{ServeConfig, Server};
 use nnl::tensor::{NdArray, Rng};
 use nnl::trainer::{self, LossScalerKind, TrainConfig};
@@ -41,13 +42,24 @@ USAGE:
             # rewrite stats, op histogram and step count before/after,
             # static-plan peak arena bytes before/after
   nnl serve --in model.nnp|model.nnb|model.nnb2 [--workers N]
-            [--max-batch B] [--max-wait-ms MS]
+            [--max-batch B] [--max-wait-ms MS] [--queue-cap N]
             # compile once, then serve stdin requests (one line of
             # whitespace-separated floats per single-example request);
             # NNB2 artifacts serve on the int8 kernels
+  nnl serve --listen HOST:PORT --models name=path[,name=path...]
+            [--workers N] [--max-batch B] [--max-wait-ms MS]
+            [--queue-cap N] [--no-deploy]
+            # TCP serving front end: multi-model registry over the
+            # length-prefixed binary protocol (JSON-per-line fallback),
+            # wire DEPLOY/UNDEPLOY hot reload, /stats metrics;
+            # 'quit' or EOF on stdin shuts down gracefully
   nnl bench-serve [--in model.nnp | --model NAME] [--requests N]
             [--workers N] [--max-batch B] [--max-wait-ms MS]
             # compiled-vs-interpreted and batched-vs-unbatched throughput
+  nnl bench-serve --net [--quick] [--out FILE]
+            # TCP load generator against the registry server: p50/p99
+            # latency vs offered rps, batched vs unbatched, f32 vs
+            # int8; writes BENCH_serve.json
   nnl bench-kernels [--quick] [--out FILE]
             # tiled GEMM GFLOP/s vs the naive loop, thread-scaling
             # curve, fused conv step time; writes BENCH_kernels.json
@@ -243,9 +255,13 @@ fn main() {
             }
         }
         "serve" => {
+            if let Some(addr) = flags.get("listen") {
+                serve_net(addr, &flags);
+                return;
+            }
             let input =
                 PathBuf::from(flags.get("in").expect("--in model.nnp|.nnb|.nnb2 required"));
-            let plan = load_plan(&input, flags.get("network").map(String::as_str));
+            let (plan, _kind) = load_plan(&input, flags.get("network").map(String::as_str));
             if plan.inputs().len() != 1 {
                 eprintln!(
                     "stdin serving supports single-input networks (this one declares {}); \
@@ -278,7 +294,7 @@ fn main() {
             // submit ahead and print replies in input order: a window of
             // in-flight requests is what lets the worker pool and the
             // micro-batcher actually engage
-            let mut pending: VecDeque<Receiver<Result<Vec<NdArray>, String>>> = VecDeque::new();
+            let mut pending: VecDeque<Receiver<nnl::serve::ServeResult>> = VecDeque::new();
             const WINDOW: usize = 64;
             loop {
                 line.clear();
@@ -316,6 +332,16 @@ fn main() {
             eprintln!("{}", server.shutdown());
         }
         "bench-serve" => {
+            if flags.contains_key("net") {
+                let report = nnl::bench_serve::run(flags.contains_key("quick"));
+                print!("{}", report.text);
+                let out = PathBuf::from(
+                    flags.get("out").cloned().unwrap_or_else(|| "BENCH_serve.json".into()),
+                );
+                std::fs::write(&out, report.json.to_string_pretty()).expect("writing report");
+                eprintln!("wrote {}", out.display());
+                return;
+            }
             let (net, params) = match flags.get("in") {
                 Some(p) => {
                     let nnp = Nnp::load(Path::new(p)).expect("loading NNP");
@@ -558,18 +584,16 @@ fn validate_train_flags(model: Option<&str>, cfg: &TrainConfig) {
 /// image (sniffed by magic, not extension): NNB2 artifacts come back
 /// as int8 [`nnl::quant::QuantizedNet`] plans, everything else as f32
 /// [`CompiledNet`] plans.
-fn load_plan(path: &Path, network: Option<&str>) -> Arc<dyn InferencePlan> {
+fn load_plan(path: &Path, network: Option<&str>) -> (Arc<dyn InferencePlan>, &'static str) {
     use std::io::Read;
     let mut magic = [0u8; 4];
-    let is_nnb = std::fs::File::open(path)
-        .and_then(|mut f| f.read_exact(&mut magic))
-        .is_ok()
+    let is_nnb = std::fs::File::open(path).and_then(|mut f| f.read_exact(&mut magic)).is_ok()
         && (&magic == b"NNB1" || &magic == b"NNB2");
     if is_nnb {
         let bytes = std::fs::read(path).expect("reading model file");
         match nnb::NnbEngine::load(&bytes) {
-            Ok(nnb::NnbEngine::F32(p)) => Arc::new(p),
-            Ok(nnb::NnbEngine::Int8(q)) => Arc::new(q),
+            Ok(nnb::NnbEngine::F32(p)) => (Arc::new(p), "f32"),
+            Ok(nnb::NnbEngine::Int8(q)) => (Arc::new(q), "int8"),
             Err(e) => {
                 eprintln!("loading NNB image: {e}");
                 std::process::exit(1);
@@ -577,8 +601,62 @@ fn load_plan(path: &Path, network: Option<&str>) -> Arc<dyn InferencePlan> {
         }
     } else {
         let nnp = Nnp::load(path).expect("loading NNP");
-        Arc::new(nnp.compile(network).expect("compiling plan"))
+        (Arc::new(nnp.compile(network).expect("compiling plan")), "f32")
     }
+}
+
+/// `nnl serve --listen ADDR --models name=path,...` — the TCP serving
+/// front end: deploy every named artifact into one registry, listen,
+/// and shut down gracefully on stdin EOF / `quit` (no request admitted
+/// before shutdown is dropped).
+fn serve_net(addr: &str, flags: &HashMap<String, String>) {
+    let registry = Arc::new(Registry::new(serve_config(flags)));
+    let specs = flags.get("models").cloned().unwrap_or_default();
+    for spec in specs.split(',').filter(|s| !s.trim().is_empty()) {
+        let Some((name, path)) = spec.split_once('=') else {
+            eprintln!("--models expects name=path[,name=path...], got '{spec}'");
+            std::process::exit(1);
+        };
+        let (plan, kind) = load_plan(Path::new(path.trim()), None);
+        registry.deploy(name.trim(), plan, kind);
+        eprintln!("deployed '{}' ({kind}) from {}", name.trim(), path.trim());
+    }
+    if registry.is_empty() {
+        eprintln!("no models deployed (pass --models name=path,...);");
+        eprintln!("serving an empty registry — clients can still DEPLOY over the wire");
+    }
+    let net_cfg = NetConfig {
+        allow_deploy: !flags.contains_key("no-deploy"),
+        ..NetConfig::default()
+    };
+    let server = match NetServer::bind(addr, Arc::clone(&registry), net_cfg) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("binding {addr}: {e}");
+            std::process::exit(1);
+        }
+    };
+    eprintln!(
+        "listening on {} ({} models); 'quit' or EOF shuts down",
+        server.local_addr(),
+        registry.len()
+    );
+    let stdin = std::io::stdin();
+    let mut line = String::new();
+    loop {
+        line.clear();
+        match stdin.read_line(&mut line) {
+            Ok(0) | Err(_) => break,
+            Ok(_) if line.trim() == "quit" => break,
+            Ok(_) if line.trim() == "stats" => {
+                println!("{}", registry.stats_json().to_string_pretty());
+            }
+            Ok(_) => {}
+        }
+    }
+    eprintln!("draining connections...");
+    server.shutdown();
+    eprintln!("{}", registry.stats_json().to_string_pretty());
 }
 
 fn serve_config(flags: &HashMap<String, String>) -> ServeConfig {
@@ -586,19 +664,20 @@ fn serve_config(flags: &HashMap<String, String>) -> ServeConfig {
         workers: get(flags, "workers", 2),
         max_batch: get(flags, "max-batch", 8),
         max_wait: Duration::from_millis(get(flags, "max-wait-ms", 2)),
+        queue_cap: get(flags, "queue-cap", 0),
     }
 }
 
+/// One output tensor as a line of fixed-precision floats.
+fn render_row(o: &NdArray) -> String {
+    o.data().iter().map(|v| format!("{v:.6}")).collect::<Vec<_>>().join(" ")
+}
+
 /// Print one serving reply (outputs joined with " | ") in input order.
-fn print_serve_reply(rx: Receiver<Result<Vec<NdArray>, String>>) {
+fn print_serve_reply(rx: Receiver<nnl::serve::ServeResult>) {
     match rx.recv() {
         Ok(Ok(outs)) => {
-            let rendered: Vec<String> = outs
-                .iter()
-                .map(|o| {
-                    o.data().iter().map(|v| format!("{v:.6}")).collect::<Vec<_>>().join(" ")
-                })
-                .collect();
+            let rendered: Vec<String> = outs.iter().map(render_row).collect();
             println!("{}", rendered.join(" | "));
         }
         Ok(Err(e)) => eprintln!("request failed: {e}"),

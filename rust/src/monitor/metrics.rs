@@ -1,0 +1,317 @@
+//! Live serving metrics — the `monitor` layer the network server
+//! exports through its `/stats` protocol verb (ISSUE: framework
+//! comparisons judge deployed stacks by measured latency/throughput,
+//! so the numbers must come off the live path, not a benchmark rig).
+//!
+//! Everything here is lock-free on the record side: workers bump
+//! atomics and atomic histogram buckets, and a snapshot is computed
+//! only when someone asks (`/stats`, `nnl bench-serve`, shutdown
+//! logs). One [`ModelMetrics`] lives for the whole lifetime of a
+//! registry entry, *across* hot swaps, so p50/p99 and shed counts
+//! describe the model as clients experienced it, not one plan
+//! incarnation.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+use crate::utils::json::Json;
+
+/// Number of exponential (power-of-two nanosecond) latency buckets:
+/// bucket `i` holds samples in `[2^i, 2^(i+1))` ns; bucket 39 tops out
+/// above 500 s, far past any sane request.
+const LAT_BUCKETS: usize = 40;
+
+/// Linear batch-size buckets `1..=BATCH_BUCKETS`, with one overflow
+/// bucket for anything larger.
+const BATCH_BUCKETS: usize = 32;
+
+/// A fixed-bucket exponential histogram over nanosecond samples.
+/// `record` is a single relaxed fetch-add — safe from any worker —
+/// and percentiles are interpolated inside the winning bucket.
+pub struct Histogram {
+    buckets: [AtomicU64; LAT_BUCKETS],
+}
+
+// derived Default stops at 32-element arrays
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram { buckets: std::array::from_fn(|_| AtomicU64::new(0)) }
+    }
+}
+
+impl Histogram {
+    pub fn record_ns(&self, ns: u64) {
+        // log2 bucket; ns == 0 lands in bucket 0
+        let idx = (63 - ns.max(1).leading_zeros()) as usize;
+        self.buckets[idx.min(LAT_BUCKETS - 1)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Approximate `p`-quantile (0 < p <= 1) in milliseconds, linearly
+    /// interpolated within the bucket that crosses the target rank.
+    /// 0.0 on an empty histogram — the same NaN-free contract as
+    /// [`super::MonitorSeries::tail_mean`].
+    pub fn quantile_ms(&self, p: f64) -> f64 {
+        let counts: Vec<u64> = self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = (p.clamp(0.0, 1.0) * total as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, &c) in counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            if seen + c >= target {
+                let lo = (1u64 << i) as f64;
+                let hi = lo * 2.0;
+                let frac = (target - seen) as f64 / c as f64;
+                return (lo + (hi - lo) * frac) / 1e6;
+            }
+            seen += c;
+        }
+        0.0
+    }
+}
+
+/// A linear histogram of executed batch sizes (rows per plan
+/// execution) — the direct evidence of whether micro-batching engages
+/// under load.
+pub struct BatchHistogram {
+    buckets: [AtomicU64; BATCH_BUCKETS + 1],
+}
+
+impl Default for BatchHistogram {
+    fn default() -> Self {
+        BatchHistogram { buckets: std::array::from_fn(|_| AtomicU64::new(0)) }
+    }
+}
+
+impl BatchHistogram {
+    pub fn record(&self, rows: usize) {
+        let idx = if rows == 0 || rows > BATCH_BUCKETS {
+            BATCH_BUCKETS
+        } else {
+            rows - 1
+        };
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Non-empty `(batch_rows, count)` pairs; the overflow bucket
+    /// reports as `BATCH_BUCKETS + 1`.
+    pub fn nonzero(&self) -> Vec<(usize, u64)> {
+        self.buckets
+            .iter()
+            .enumerate()
+            .filter_map(|(i, b)| {
+                let c = b.load(Ordering::Relaxed);
+                (c > 0).then_some((i + 1, c))
+            })
+            .collect()
+    }
+}
+
+/// Per-model serving counters + distributions. One instance per
+/// registry entry, shared by every plan incarnation hosted under that
+/// name (hot swaps bump `swaps` and keep counting).
+pub struct ModelMetrics {
+    pub requests: AtomicU64,
+    pub rows: AtomicU64,
+    /// Plan executions (each may cover several requests).
+    pub batches: AtomicU64,
+    pub errors: AtomicU64,
+    /// Requests refused by admission control (bounded queue full).
+    pub shed: AtomicU64,
+    /// Current bounded-queue depth (gauge).
+    pub queue_depth: AtomicU64,
+    /// Hot swaps performed under this name.
+    pub swaps: AtomicU64,
+    pub exec_ns: AtomicU64,
+    pub latency_ns: AtomicU64,
+    pub latency: Histogram,
+    pub batch_rows: BatchHistogram,
+    started: Instant,
+}
+
+impl Default for ModelMetrics {
+    fn default() -> Self {
+        ModelMetrics {
+            requests: AtomicU64::new(0),
+            rows: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+            queue_depth: AtomicU64::new(0),
+            swaps: AtomicU64::new(0),
+            exec_ns: AtomicU64::new(0),
+            latency_ns: AtomicU64::new(0),
+            latency: Histogram::default(),
+            batch_rows: BatchHistogram::default(),
+            started: Instant::now(),
+        }
+    }
+}
+
+impl ModelMetrics {
+    /// Record one finished request: enqueue-to-reply latency plus the
+    /// error flag (workers call this from `finish`).
+    pub fn record_request(&self, rows: usize, latency_ns: u64, err: bool) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        self.rows.fetch_add(rows as u64, Ordering::Relaxed);
+        self.latency_ns.fetch_add(latency_ns, Ordering::Relaxed);
+        self.latency.record_ns(latency_ns);
+        if err {
+            self.errors.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Record one plan execution covering `rows` total rows.
+    pub fn record_batch(&self, rows: usize, exec_ns: u64) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.exec_ns.fetch_add(exec_ns, Ordering::Relaxed);
+        self.batch_rows.record(rows);
+    }
+
+    /// Consistent point-in-time view (individual counters are relaxed;
+    /// the snapshot is advisory, which is all monitoring needs).
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let requests = self.requests.load(Ordering::Relaxed);
+        let rows = self.rows.load(Ordering::Relaxed);
+        let batches = self.batches.load(Ordering::Relaxed);
+        let secs = self.started.elapsed().as_secs_f64().max(1e-9);
+        MetricsSnapshot {
+            requests,
+            rows,
+            batches,
+            errors: self.errors.load(Ordering::Relaxed),
+            shed: self.shed.load(Ordering::Relaxed),
+            queue_depth: self.queue_depth.load(Ordering::Relaxed),
+            swaps: self.swaps.load(Ordering::Relaxed),
+            mean_batch_rows: rows as f64 / batches.max(1) as f64,
+            mean_exec_ms: self.exec_ns.load(Ordering::Relaxed) as f64
+                / 1e6
+                / batches.max(1) as f64,
+            mean_latency_ms: self.latency_ns.load(Ordering::Relaxed) as f64
+                / 1e6
+                / requests.max(1) as f64,
+            p50_ms: self.latency.quantile_ms(0.50),
+            p99_ms: self.latency.quantile_ms(0.99),
+            rps: requests as f64 / secs,
+            uptime_secs: secs,
+            batch_dist: self.batch_rows.nonzero(),
+        }
+    }
+}
+
+/// What a `/stats` reply carries per model.
+#[derive(Debug, Clone)]
+pub struct MetricsSnapshot {
+    pub requests: u64,
+    pub rows: u64,
+    pub batches: u64,
+    pub errors: u64,
+    pub shed: u64,
+    pub queue_depth: u64,
+    pub swaps: u64,
+    pub mean_batch_rows: f64,
+    pub mean_exec_ms: f64,
+    pub mean_latency_ms: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    /// Requests per second over the metric's whole lifetime.
+    pub rps: f64,
+    pub uptime_secs: f64,
+    pub batch_dist: Vec<(usize, u64)>,
+}
+
+impl MetricsSnapshot {
+    pub fn to_json(&self) -> Json {
+        let dist = Json::Obj(
+            self.batch_dist
+                .iter()
+                .map(|&(rows, c)| (rows.to_string(), Json::num(c as f64)))
+                .collect(),
+        );
+        Json::obj(vec![
+            ("requests", Json::num(self.requests as f64)),
+            ("rows", Json::num(self.rows as f64)),
+            ("batches", Json::num(self.batches as f64)),
+            ("errors", Json::num(self.errors as f64)),
+            ("shed", Json::num(self.shed as f64)),
+            ("queue_depth", Json::num(self.queue_depth as f64)),
+            ("swaps", Json::num(self.swaps as f64)),
+            ("mean_batch_rows", Json::num(self.mean_batch_rows)),
+            ("mean_exec_ms", Json::num(self.mean_exec_ms)),
+            ("mean_latency_ms", Json::num(self.mean_latency_ms)),
+            ("p50_ms", Json::num(self.p50_ms)),
+            ("p99_ms", Json::num(self.p99_ms)),
+            ("rps", Json::num(self.rps)),
+            ("uptime_secs", Json::num(self.uptime_secs)),
+            ("batch_size_distribution", dist),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_quantiles_bracket_samples() {
+        let h = Histogram::default();
+        // 99 fast samples (~1 ms) and one slow outlier (~1 s)
+        for _ in 0..99 {
+            h.record_ns(1_000_000);
+        }
+        h.record_ns(1_000_000_000);
+        assert_eq!(h.count(), 100);
+        let p50 = h.quantile_ms(0.5);
+        let p99 = h.quantile_ms(0.99);
+        let p100 = h.quantile_ms(1.0);
+        assert!((0.5..4.0).contains(&p50), "p50 {p50}");
+        assert!(p99 <= p100, "p99 {p99} p100 {p100}");
+        assert!(p100 > 500.0, "outlier must surface at the tail: {p100}");
+    }
+
+    #[test]
+    fn empty_histogram_is_zero_not_nan() {
+        let h = Histogram::default();
+        assert_eq!(h.quantile_ms(0.5), 0.0);
+        assert_eq!(h.quantile_ms(0.99), 0.0);
+    }
+
+    #[test]
+    fn batch_histogram_buckets() {
+        let b = BatchHistogram::default();
+        b.record(1);
+        b.record(1);
+        b.record(8);
+        b.record(4096); // overflow bucket
+        assert_eq!(b.nonzero(), vec![(1, 2), (8, 1), (BATCH_BUCKETS + 1, 1)]);
+    }
+
+    #[test]
+    fn snapshot_math() {
+        let m = ModelMetrics::default();
+        m.record_batch(4, 2_000_000);
+        for _ in 0..4 {
+            m.record_request(1, 1_000_000, false);
+        }
+        m.shed.fetch_add(3, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert_eq!(s.requests, 4);
+        assert_eq!(s.shed, 3);
+        assert_eq!(s.errors, 0);
+        assert!((s.mean_batch_rows - 4.0).abs() < 1e-9);
+        assert!((s.mean_exec_ms - 2.0).abs() < 1e-9);
+        assert!((s.mean_latency_ms - 1.0).abs() < 1e-9);
+        assert!(s.p50_ms > 0.0);
+        let j = s.to_json();
+        assert_eq!(j.get("requests").as_usize(), Some(4));
+        assert!(j.get("batch_size_distribution").as_obj().is_some());
+    }
+}

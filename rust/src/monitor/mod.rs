@@ -7,6 +7,8 @@ use std::fmt::Write as _;
 use std::path::Path;
 use std::time::Instant;
 
+pub mod metrics;
+
 /// A named scalar time-series (loss, error, lr, ...).
 #[derive(Debug, Clone, Default)]
 pub struct MonitorSeries {
@@ -39,18 +41,22 @@ impl MonitorSeries {
         self.points.is_empty()
     }
 
-    /// Mean of the last `n` values (smoothed readout).
+    /// Mean of the last `n` values (smoothed readout). An empty series
+    /// reads 0.0, not NaN — dashboards and the serving `/stats` path
+    /// consume this directly, and NaN poisons any aggregate it meets.
     pub fn tail_mean(&self, n: usize) -> f32 {
-        if self.points.is_empty() {
-            return f32::NAN;
+        if self.points.is_empty() || n == 0 {
+            return 0.0;
         }
         let tail = &self.points[self.points.len().saturating_sub(n)..];
         tail.iter().map(|&(_, v)| v).sum::<f32>() / tail.len() as f32
     }
 
-    /// CSV rendering (`step,value` rows with a header).
+    /// CSV rendering (`step,value` rows with a header). Series names
+    /// are user-controlled; names containing `,`, `"`, or newlines are
+    /// quoted (with `"` doubled) so the header stays two columns.
     pub fn to_csv(&self) -> String {
-        let mut s = format!("step,{}\n", self.name);
+        let mut s = format!("step,{}\n", csv_escape(&self.name));
         for (step, v) in &self.points {
             let _ = writeln!(s, "{step},{v}");
         }
@@ -59,6 +65,19 @@ impl MonitorSeries {
 
     pub fn save_csv(&self, path: &Path) -> std::io::Result<()> {
         std::fs::write(path, self.to_csv())
+    }
+}
+
+/// Short alias used throughout the serving/metrics docs.
+pub type Series = MonitorSeries;
+
+/// RFC-4180 field escaping: quote when the value contains a comma,
+/// quote, or line break, doubling any embedded quotes.
+fn csv_escape(field: &str) -> String {
+    if field.contains([',', '"', '\n', '\r']) {
+        format!("\"{}\"", field.replace('"', "\"\""))
+    } else {
+        field.to_string()
     }
 }
 
@@ -137,9 +156,22 @@ mod tests {
     }
 
     #[test]
-    fn empty_series_tail_is_nan() {
+    fn empty_series_tail_is_zero_not_nan() {
         let m = MonitorSeries::new("x");
-        assert!(m.tail_mean(5).is_nan());
+        assert_eq!(m.tail_mean(5), 0.0);
+        assert_eq!(m.tail_mean(0), 0.0);
         assert!(m.is_empty());
+    }
+
+    #[test]
+    fn csv_escapes_hostile_series_names() {
+        let mut m = MonitorSeries::new("loss, val \"best\"");
+        m.add(1, 0.5);
+        let csv = m.to_csv();
+        let header = csv.lines().next().unwrap();
+        assert_eq!(header, "step,\"loss, val \"\"best\"\"\"");
+        assert!(csv.contains("1,0.5"));
+        // benign names stay unquoted
+        assert!(MonitorSeries::new("loss").to_csv().starts_with("step,loss\n"));
     }
 }

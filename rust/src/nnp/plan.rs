@@ -735,7 +735,13 @@ pub(crate) fn execute_kernel(k: &StepKernel, xs: &[&NdArray]) -> Result<NdArray,
             Ok(y)
         }
         StepKernel::Conv2d { geom, relu } => {
-            ir::check_conv_geometry(xs[0].dims(), xs[1].dims(), geom.stride, geom.pad, geom.dilation)?;
+            ir::check_conv_geometry(
+                xs[0].dims(),
+                xs[1].dims(),
+                geom.stride,
+                geom.pad,
+                geom.dilation,
+            )?;
             let mut y = kernels::conv2d_forward(xs[0], xs[1], xs.get(2).copied(), geom);
             if *relu {
                 relu_inplace(&mut y);
@@ -776,6 +782,13 @@ pub trait InferencePlan: Send + Sync {
     fn execute_positional(&self, inputs: &[NdArray]) -> Result<Vec<NdArray>, String>;
     /// Whether rows are provably independent (micro-batching safety).
     fn batch_invariant(&self) -> bool;
+
+    /// Peak working-set bytes per execution from the static memory
+    /// plan, when one was computed — the serving layer derives
+    /// per-model admission limits (bounded queue capacity) from it.
+    fn peak_arena_bytes(&self) -> Option<usize> {
+        None
+    }
 
     /// Run on named inputs (declared-order resolution).
     fn execute_named(&self, inputs: &HashMap<String, NdArray>) -> Result<Vec<NdArray>, String> {
@@ -819,6 +832,10 @@ impl InferencePlan for CompiledNet {
 
     fn batch_invariant(&self) -> bool {
         CompiledNet::batch_invariant(self)
+    }
+
+    fn peak_arena_bytes(&self) -> Option<usize> {
+        CompiledNet::peak_arena_bytes(self)
     }
 }
 

@@ -656,6 +656,13 @@ impl InferencePlan for QuantizedNet {
         self.plan.check_inputs(inputs)
     }
 
+    fn peak_arena_bytes(&self) -> Option<usize> {
+        // the int8 working set is never larger than the f32 plan's
+        // (i8/u8 activations, same slot liveness) — the f32 peak is a
+        // safe admission-control bound
+        self.plan.peak_arena_bytes()
+    }
+
     /// The quantized twin of `CompiledNet::execute_positional`: the
     /// same dumb step loop, slot environment and planned liveness
     /// (freed slots recycle into the scratch arena), but dense steps

@@ -18,21 +18,119 @@
 //! the batching heuristic, because batched outputs are sliced from the
 //! same kernels a solo run would use.
 //!
-//! The CLI front ends are `nnl serve` (stdin request loop) and
-//! `nnl bench-serve` (self-driving throughput benchmark); the
-//! compiled-vs-interpreted and batched-vs-unbatched numbers live in
-//! `benches/serve_throughput.rs`.
+//! **Admission control.** The request queue is *bounded*
+//! ([`ServeConfig::queue_cap`]; 0 derives a cap from the plan's static
+//! memory plan — see [`derive_queue_cap`]). A full queue sheds the
+//! request immediately with [`ServeError::Overloaded`] instead of
+//! letting a slow plan grow memory without limit and time clients out.
+//! Shutdown is graceful: closing the queue lets workers drain every
+//! queued request and flush in-flight micro-batches before the pool
+//! joins — no accepted request is ever silently dropped.
+//!
+//! All counters flow into a shared [`ModelMetrics`]
+//! ([`crate::monitor::metrics`]): latency histograms (p50/p99),
+//! batch-size distribution, shed counts, queue depth. The network
+//! front end over this core — TCP protocol, multi-model registry, hot
+//! reload — lives in [`net`].
+//!
+//! The CLI front ends are `nnl serve` (stdin request loop, or
+//! `--listen` for the TCP server) and `nnl bench-serve`
+//! (`--net` drives the TCP load generator); the numbers live in
+//! `benches/serve_throughput.rs` and `benches/serve_net.rs`.
 
 use std::collections::{HashMap, VecDeque};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::Ordering;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+use crate::monitor::metrics::ModelMetrics;
 use crate::nnp::ir::NetworkDef;
 use crate::nnp::plan::{CompiledNet, InferencePlan};
 use crate::tensor::{NdArray, Rng};
+
+pub mod net;
+
+/// What a reply channel carries.
+pub type ServeResult = Result<Vec<NdArray>, ServeError>;
+
+/// Typed serving failures — every rejection a client can observe has
+/// a distinct variant (and a stable wire code, [`ServeError::code`]),
+/// so load-shedding is a *reply*, not a timeout.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ServeError {
+    /// Admission control: the model's bounded queue is full.
+    Overloaded { model: String, depth: usize, cap: usize },
+    /// The server (or the plan incarnation hosting this request) is
+    /// shutting down and no longer accepts work.
+    ShuttingDown,
+    /// The request itself is malformed (wrong arity/shapes).
+    InvalidRequest(String),
+    /// The plan failed while executing.
+    Execution(String),
+    /// Registry lookup miss ([`net::Registry`]).
+    NoSuchModel(String),
+    /// Malformed bytes on the wire ([`net`] framing/encoding).
+    Protocol(String),
+}
+
+impl ServeError {
+    /// Stable one-byte wire code (0 is reserved for OK).
+    pub fn code(&self) -> u8 {
+        match self {
+            ServeError::Overloaded { .. } => 1,
+            ServeError::ShuttingDown => 2,
+            ServeError::InvalidRequest(_) => 3,
+            ServeError::Execution(_) => 4,
+            ServeError::NoSuchModel(_) => 5,
+            ServeError::Protocol(_) => 6,
+        }
+    }
+
+    /// Short machine-readable kind name (JSON replies, logs).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            ServeError::Overloaded { .. } => "overloaded",
+            ServeError::ShuttingDown => "shutting_down",
+            ServeError::InvalidRequest(_) => "invalid_request",
+            ServeError::Execution(_) => "execution",
+            ServeError::NoSuchModel(_) => "no_such_model",
+            ServeError::Protocol(_) => "protocol",
+        }
+    }
+
+    /// Rebuild from a wire `(code, message)` pair — the client-side
+    /// inverse of [`ServeError::code`]/`Display`.
+    pub fn from_wire(code: u8, msg: String) -> ServeError {
+        match code {
+            1 => ServeError::Overloaded { model: msg, depth: 0, cap: 0 },
+            2 => ServeError::ShuttingDown,
+            3 => ServeError::InvalidRequest(msg),
+            4 => ServeError::Execution(msg),
+            5 => ServeError::NoSuchModel(msg),
+            _ => ServeError::Protocol(msg),
+        }
+    }
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::Overloaded { model, depth, cap } => write!(
+                f,
+                "model '{model}' overloaded: bounded queue full ({depth}/{cap}); retry later"
+            ),
+            ServeError::ShuttingDown => write!(f, "server shutting down"),
+            ServeError::InvalidRequest(m) => write!(f, "invalid request: {m}"),
+            ServeError::Execution(m) => write!(f, "execution failed: {m}"),
+            ServeError::NoSuchModel(m) => write!(f, "no such model: '{m}'"),
+            ServeError::Protocol(m) => write!(f, "protocol error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
 
 /// Worker-pool and micro-batching knobs.
 #[derive(Debug, Clone)]
@@ -45,11 +143,41 @@ pub struct ServeConfig {
     pub max_batch: usize,
     /// How long a worker waits for more requests to fill a batch.
     pub max_wait: Duration,
+    /// Bounded queue capacity (admission control). 0 = derive from
+    /// the plan's static memory plan ([`derive_queue_cap`]).
+    pub queue_cap: usize,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
-        ServeConfig { workers: 2, max_batch: 8, max_wait: Duration::from_millis(2) }
+        ServeConfig {
+            workers: 2,
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+            queue_cap: 0,
+        }
+    }
+}
+
+/// Arena-byte budget the automatic queue cap spends: with a known
+/// `peak_arena_bytes` per queued request (each queued request is at
+/// worst one more plan execution's working set), the queue may hold at
+/// most `QUEUE_BYTE_BUDGET / peak` requests, clamped to
+/// `[MIN_QUEUE_CAP, MAX_QUEUE_CAP]`.
+pub const QUEUE_BYTE_BUDGET: usize = 256 << 20;
+pub const MIN_QUEUE_CAP: usize = 8;
+pub const MAX_QUEUE_CAP: usize = 512;
+
+/// Derive a bounded-queue capacity for `plan` from its static memory
+/// plan: models with a large per-execution working set admit fewer
+/// queued requests. Plans without a memory plan (interpreted /
+/// quantized fallbacks compiled at O0) get `MAX_QUEUE_CAP / 8`.
+pub fn derive_queue_cap(plan: &dyn InferencePlan) -> usize {
+    match plan.peak_arena_bytes() {
+        Some(peak) if peak > 0 => {
+            (QUEUE_BYTE_BUDGET / peak).clamp(MIN_QUEUE_CAP, MAX_QUEUE_CAP)
+        }
+        _ => MAX_QUEUE_CAP / 8,
     }
 }
 
@@ -58,17 +186,20 @@ struct Request {
     inputs: Vec<NdArray>,
     rows: usize,
     enqueued: Instant,
-    reply: Sender<Result<Vec<NdArray>, String>>,
+    reply: Sender<ServeResult>,
 }
 
-/// The shared request queue: a Condvar-guarded deque (not `mpsc`) so a
-/// worker parked waiting for work releases the lock while it sleeps —
-/// a draining worker can always make progress, and `close()` lets
-/// workers finish the backlog and exit even while `Client` handles are
-/// still alive.
+/// The shared request queue: a Condvar-guarded **bounded** deque (not
+/// `mpsc`) so a worker parked waiting for work releases the lock while
+/// it sleeps — a draining worker can always make progress, and
+/// `close()` lets workers finish the backlog and exit even while
+/// `Client` handles are still alive. A full queue rejects instead of
+/// blocking: backpressure surfaces as [`ServeError::Overloaded`] at
+/// submit time, never as an unbounded memory ramp.
 struct Queue {
     state: Mutex<QueueState>,
     cv: Condvar,
+    cap: usize,
 }
 
 struct QueueState {
@@ -77,18 +208,28 @@ struct QueueState {
 }
 
 impl Queue {
-    fn new() -> Queue {
+    fn new(cap: usize) -> Queue {
         Queue {
             state: Mutex::new(QueueState { items: VecDeque::new(), closed: false }),
             cv: Condvar::new(),
+            cap: cap.max(1),
         }
     }
 
-    /// Enqueue, failing cleanly once the server shut down.
-    fn push(&self, req: Request) -> Result<(), String> {
+    /// Enqueue, failing cleanly once the server shut down or the
+    /// bounded queue is full (the caller owns `req.reply` error
+    /// delivery via the returned error).
+    fn push(&self, model: &str, req: Request) -> Result<(), ServeError> {
         let mut st = self.state.lock().expect("queue lock");
         if st.closed {
-            return Err("server shut down".to_string());
+            return Err(ServeError::ShuttingDown);
+        }
+        if st.items.len() >= self.cap {
+            return Err(ServeError::Overloaded {
+                model: model.to_string(),
+                depth: st.items.len(),
+                cap: self.cap,
+            });
         }
         st.items.push_back(req);
         drop(st);
@@ -134,25 +275,18 @@ impl Queue {
         }
     }
 
-    /// Stop accepting work and wake every parked worker.
+    /// Stop accepting work and wake every parked worker. Queued
+    /// requests stay — workers drain them to completion before
+    /// exiting, which is what makes shutdown graceful.
     fn close(&self) {
         self.state.lock().expect("queue lock").closed = true;
         self.cv.notify_all();
     }
 }
 
-/// Lock-free counters shared by all workers.
-#[derive(Default)]
-struct StatsInner {
-    requests: AtomicU64,
-    rows: AtomicU64,
-    batches: AtomicU64,
-    errors: AtomicU64,
-    exec_ns: AtomicU64,
-    latency_ns: AtomicU64,
-}
-
-/// Snapshot of server throughput/latency counters.
+/// Snapshot of server throughput/latency counters (a rendering of
+/// [`crate::monitor::metrics::MetricsSnapshot`] kept for the CLI and
+/// benches).
 #[derive(Debug, Clone)]
 pub struct ServeStats {
     pub requests: u64,
@@ -160,11 +294,15 @@ pub struct ServeStats {
     /// Plan executions (each may cover several requests).
     pub batches: u64,
     pub errors: u64,
+    /// Requests refused by admission control.
+    pub shed: u64,
     pub mean_batch_rows: f64,
     /// Mean wall time inside `CompiledNet::execute` per batch.
     pub mean_exec_ms: f64,
     /// Mean enqueue-to-reply latency per request.
     pub mean_latency_ms: f64,
+    pub p50_latency_ms: f64,
+    pub p99_latency_ms: f64,
 }
 
 impl std::fmt::Display for ServeStats {
@@ -172,26 +310,31 @@ impl std::fmt::Display for ServeStats {
         write!(
             f,
             "{} requests ({} rows) in {} batches (mean {:.2} rows/batch), \
-             mean exec {:.3} ms/batch, mean latency {:.3} ms/request, {} errors",
+             mean exec {:.3} ms/batch, latency mean {:.3} / p50 {:.3} / p99 {:.3} ms, \
+             {} errors, {} shed",
             self.requests,
             self.rows,
             self.batches,
             self.mean_batch_rows,
             self.mean_exec_ms,
             self.mean_latency_ms,
-            self.errors
+            self.p50_latency_ms,
+            self.p99_latency_ms,
+            self.errors,
+            self.shed
         )
     }
 }
 
 /// A running inference server: worker pool + shared compiled plan.
-/// Dropping (or [`Server::shutdown`]) closes the queue, drains pending
-/// requests, and joins the workers.
+/// Dropping (or [`Server::shutdown`]) closes the queue, drains every
+/// queued request, flushes in-flight micro-batches, and joins the
+/// workers — no accepted request is silently dropped.
 pub struct Server {
     plan: Arc<dyn InferencePlan>,
     queue: Arc<Queue>,
     workers: Vec<JoinHandle<()>>,
-    stats: Arc<StatsInner>,
+    metrics: Arc<ModelMetrics>,
     batched: bool,
 }
 
@@ -206,23 +349,37 @@ impl Server {
     /// plan's concrete type is only known at run time (`.nnp` vs
     /// NNB/NNB2 artifacts).
     pub fn start_dyn(plan: Arc<dyn InferencePlan>, cfg: ServeConfig) -> Server {
-        let queue = Arc::new(Queue::new());
-        let stats = Arc::new(StatsInner::default());
+        Server::start_shared(plan, cfg, Arc::new(ModelMetrics::default()))
+    }
+
+    /// Start with an externally-owned metrics sink — how the
+    /// [`net::Registry`] keeps one [`ModelMetrics`] alive across hot
+    /// swaps of the plan under a model name.
+    pub fn start_shared(
+        plan: Arc<dyn InferencePlan>,
+        cfg: ServeConfig,
+        metrics: Arc<ModelMetrics>,
+    ) -> Server {
+        let cap = if cfg.queue_cap > 0 {
+            cfg.queue_cap
+        } else {
+            derive_queue_cap(plan.as_ref())
+        };
+        let queue = Arc::new(Queue::new(cap));
         // batching needs provably row-independent semantics
-        let batched =
-            cfg.max_batch > 1 && !plan.inputs().is_empty() && plan.batch_invariant();
+        let batched = cfg.max_batch > 1 && !plan.inputs().is_empty() && plan.batch_invariant();
         let n = cfg.workers.max(1);
         let mut workers = Vec::with_capacity(n);
         for _ in 0..n {
             let queue = Arc::clone(&queue);
             let plan = Arc::clone(&plan);
-            let stats = Arc::clone(&stats);
+            let metrics = Arc::clone(&metrics);
             let cfg = cfg.clone();
             workers.push(std::thread::spawn(move || {
-                worker_loop(plan.as_ref(), &queue, &stats, &cfg, batched)
+                worker_loop(plan.as_ref(), &queue, &metrics, &cfg, batched)
             }));
         }
-        Server { plan, queue, workers, stats, batched }
+        Server { plan, queue, workers, metrics, batched }
     }
 
     /// The shared plan.
@@ -235,45 +392,58 @@ impl Server {
         self.batched
     }
 
+    /// The bounded queue's capacity (admission-control limit).
+    pub fn queue_cap(&self) -> usize {
+        self.queue.cap
+    }
+
+    /// The live metrics sink.
+    pub fn metrics(&self) -> &Arc<ModelMetrics> {
+        &self.metrics
+    }
+
     /// A cheap cloneable handle for submitting from other threads. A
     /// `Client` does not keep the server alive: after shutdown its
     /// submissions fail cleanly (and workers exit regardless of how
-    /// many handles remain).
+    /// many handles remain). The handle shares the server's *bounded*
+    /// queue — a slow plan backs up into typed
+    /// [`ServeError::Overloaded`] replies, never unbounded memory.
     pub fn client(&self) -> Client {
         Client {
             plan: Arc::clone(&self.plan),
             queue: Arc::clone(&self.queue),
+            metrics: Arc::clone(&self.metrics),
             batched: self.batched,
         }
     }
 
     /// Enqueue a request (inputs in declared order; axis 0 free).
     /// Returns the reply channel immediately — shape errors are
-    /// rejected here, before they can poison a batch.
-    pub fn submit(
-        &self,
-        inputs: Vec<NdArray>,
-    ) -> Result<Receiver<Result<Vec<NdArray>, String>>, String> {
-        submit_on(self.plan.as_ref(), self.batched, &self.queue, inputs)
+    /// rejected here, before they can poison a batch, and a full
+    /// queue sheds with [`ServeError::Overloaded`].
+    pub fn submit(&self, inputs: Vec<NdArray>) -> Result<Receiver<ServeResult>, ServeError> {
+        submit_on(self.plan.as_ref(), self.batched, &self.queue, &self.metrics, inputs)
     }
 
     /// Blocking convenience: submit and wait for the outputs.
-    pub fn infer(&self, inputs: Vec<NdArray>) -> Result<Vec<NdArray>, String> {
+    pub fn infer(&self, inputs: Vec<NdArray>) -> ServeResult {
         let rx = self.submit(inputs)?;
-        rx.recv().map_err(|_| "server shut down before replying".to_string())?
+        rx.recv().map_err(|_| ServeError::ShuttingDown)?
     }
 
     /// Blocking classification: argmax of each row of the first output.
     /// Uses the NaN-safe total ordering shared with trainer validation
     /// ([`crate::tensor::ops::argmax`]) — NaN logits cost accuracy, not
     /// a worker thread.
-    pub fn infer_class(&self, inputs: Vec<NdArray>) -> Result<Vec<usize>, String> {
+    pub fn infer_class(&self, inputs: Vec<NdArray>) -> Result<Vec<usize>, ServeError> {
         let out = self.infer(inputs)?;
-        let first = out.first().ok_or_else(|| "network has no outputs".to_string())?;
+        let first = out
+            .first()
+            .ok_or_else(|| ServeError::Execution("network has no outputs".to_string()))?;
         let rows = first.dims().first().copied().unwrap_or(1).max(1);
         let stride = first.size() / rows;
         if stride == 0 {
-            return Err("output rows are empty".to_string());
+            return Err(ServeError::Execution("output rows are empty".to_string()));
         }
         Ok((0..rows)
             .map(|r| crate::tensor::ops::argmax(&first.data()[r * stride..(r + 1) * stride]))
@@ -282,20 +452,18 @@ impl Server {
 
     /// Current counters.
     pub fn stats(&self) -> ServeStats {
-        let requests = self.stats.requests.load(Ordering::Relaxed);
-        let rows = self.stats.rows.load(Ordering::Relaxed);
-        let batches = self.stats.batches.load(Ordering::Relaxed);
-        let errors = self.stats.errors.load(Ordering::Relaxed);
-        let exec_ns = self.stats.exec_ns.load(Ordering::Relaxed);
-        let latency_ns = self.stats.latency_ns.load(Ordering::Relaxed);
+        let s = self.metrics.snapshot();
         ServeStats {
-            requests,
-            rows,
-            batches,
-            errors,
-            mean_batch_rows: rows as f64 / batches.max(1) as f64,
-            mean_exec_ms: exec_ns as f64 / 1e6 / batches.max(1) as f64,
-            mean_latency_ms: latency_ns as f64 / 1e6 / requests.max(1) as f64,
+            requests: s.requests,
+            rows: s.rows,
+            batches: s.batches,
+            errors: s.errors,
+            shed: s.shed,
+            mean_batch_rows: s.mean_batch_rows,
+            mean_exec_ms: s.mean_exec_ms,
+            mean_latency_ms: s.mean_latency_ms,
+            p50_latency_ms: s.p50_ms,
+            p99_latency_ms: s.p99_ms,
         }
     }
 
@@ -313,6 +481,8 @@ impl Server {
 impl Drop for Server {
     fn drop(&mut self) {
         self.queue.close();
+        // graceful: workers drain the backlog (every queued request
+        // gets a reply) before the join returns
         for h in self.workers.drain(..) {
             let _ = h.join();
         }
@@ -321,57 +491,70 @@ impl Drop for Server {
 
 /// A submit-side handle to a running [`Server`]. Clone one per client
 /// thread. A `Client` never blocks server shutdown; once the server is
-/// gone its submissions fail cleanly.
+/// gone its submissions fail cleanly with
+/// [`ServeError::ShuttingDown`].
 #[derive(Clone)]
 pub struct Client {
     plan: Arc<dyn InferencePlan>,
     queue: Arc<Queue>,
+    metrics: Arc<ModelMetrics>,
     batched: bool,
 }
 
 impl Client {
     /// Same contract as [`Server::submit`].
-    pub fn submit(
-        &self,
-        inputs: Vec<NdArray>,
-    ) -> Result<Receiver<Result<Vec<NdArray>, String>>, String> {
-        submit_on(self.plan.as_ref(), self.batched, &self.queue, inputs)
+    pub fn submit(&self, inputs: Vec<NdArray>) -> Result<Receiver<ServeResult>, ServeError> {
+        submit_on(self.plan.as_ref(), self.batched, &self.queue, &self.metrics, inputs)
     }
 
     /// Same contract as [`Server::infer`].
-    pub fn infer(&self, inputs: Vec<NdArray>) -> Result<Vec<NdArray>, String> {
+    pub fn infer(&self, inputs: Vec<NdArray>) -> ServeResult {
         let rx = self.submit(inputs)?;
-        rx.recv().map_err(|_| "server shut down before replying".to_string())?
+        rx.recv().map_err(|_| ServeError::ShuttingDown)?
     }
 }
 
 /// Shared submit path: validate shapes, wrap with a reply channel,
-/// enqueue.
+/// enqueue against the bounded queue (sheds when full).
 fn submit_on(
     plan: &dyn InferencePlan,
     batched: bool,
     queue: &Queue,
+    metrics: &ModelMetrics,
     inputs: Vec<NdArray>,
-) -> Result<Receiver<Result<Vec<NdArray>, String>>, String> {
-    let rows = plan.check_inputs(&inputs)?;
+) -> Result<Receiver<ServeResult>, ServeError> {
+    let rows = plan.check_inputs(&inputs).map_err(ServeError::InvalidRequest)?;
     if batched && !inputs.iter().all(|a| a.dims().first().copied() == Some(rows)) {
-        return Err("all inputs of one request must share the batch dimension".to_string());
+        return Err(ServeError::InvalidRequest(
+            "all inputs of one request must share the batch dimension".to_string(),
+        ));
     }
     let (reply, rx) = channel();
-    queue.push(Request { inputs, rows, enqueued: Instant::now(), reply })?;
-    Ok(rx)
+    match queue.push(plan.name(), Request { inputs, rows, enqueued: Instant::now(), reply }) {
+        Ok(()) => {
+            metrics.queue_depth.fetch_add(1, Ordering::Relaxed);
+            Ok(rx)
+        }
+        Err(e) => {
+            if matches!(e, ServeError::Overloaded { .. }) {
+                metrics.shed.fetch_add(1, Ordering::Relaxed);
+            }
+            Err(e)
+        }
+    }
 }
 
 fn worker_loop(
     plan: &dyn InferencePlan,
     queue: &Queue,
-    stats: &StatsInner,
+    metrics: &ModelMetrics,
     cfg: &ServeConfig,
     batched: bool,
 ) {
     // pop() parks on the condvar with the lock released, so workers
     // never block each other while idle
     while let Some(first) = queue.pop() {
+        metrics.queue_depth.fetch_sub(1, Ordering::Relaxed);
         let mut batch = vec![first];
         if batched {
             let mut rows = batch[0].rows;
@@ -379,6 +562,7 @@ fn worker_loop(
             while rows < cfg.max_batch {
                 match queue.pop_until(deadline, cfg.max_batch - rows) {
                     Some(r) => {
+                        metrics.queue_depth.fetch_sub(1, Ordering::Relaxed);
                         rows += r.rows;
                         batch.push(r);
                     }
@@ -386,14 +570,14 @@ fn worker_loop(
                 }
             }
         }
-        run_batch(plan, stats, batch);
+        run_batch(plan, metrics, batch);
     }
 }
 
-fn run_batch(plan: &dyn InferencePlan, stats: &StatsInner, mut batch: Vec<Request>) {
+fn run_batch(plan: &dyn InferencePlan, metrics: &ModelMetrics, mut batch: Vec<Request>) {
     if batch.len() == 1 {
         let req = batch.pop().expect("non-empty batch");
-        run_single(plan, stats, req);
+        run_single(plan, metrics, req);
         return;
     }
     // concatenate each declared input across requests along axis 0
@@ -403,48 +587,51 @@ fn run_batch(plan: &dyn InferencePlan, stats: &StatsInner, mut batch: Vec<Reques
         let parts: Vec<&NdArray> = batch.iter().map(|r| &r.inputs[i]).collect();
         cat.push(NdArray::concat(&parts, 0));
     }
+    let total: usize = batch.iter().map(|r| r.rows).sum();
     let t0 = Instant::now();
     let out = plan.execute_positional(&cat);
     let exec_ns = t0.elapsed().as_nanos() as u64;
     match out {
         Err(e) => {
-            stats.exec_ns.fetch_add(exec_ns, Ordering::Relaxed);
-            stats.batches.fetch_add(1, Ordering::Relaxed);
+            metrics.record_batch(total, exec_ns);
             for req in batch {
-                finish(stats, req, Err(e.clone()));
+                finish(metrics, req, Err(ServeError::Execution(e.clone())));
             }
         }
         Ok(outs) => {
-            let total: usize = batch.iter().map(|r| r.rows).sum();
             if outs.iter().any(|o| o.dims().first().copied() != Some(total)) {
                 // batch-invariance heuristic miss: discard the batched
                 // run (it is not counted) and answer each request from
                 // its own solo execution instead
                 for req in batch {
-                    run_single(plan, stats, req);
+                    run_single(plan, metrics, req);
                 }
                 return;
             }
-            stats.exec_ns.fetch_add(exec_ns, Ordering::Relaxed);
-            stats.batches.fetch_add(1, Ordering::Relaxed);
+            metrics.record_batch(total, exec_ns);
             let mut off = 0usize;
             for req in batch {
                 let rows = req.rows;
                 let slices: Vec<NdArray> =
                     outs.iter().map(|o| o.slice_axis(0, off, off + rows)).collect();
                 off += rows;
-                finish(stats, req, Ok(slices));
+                finish(metrics, req, Ok(slices));
             }
         }
     }
 }
 
-fn run_single(plan: &dyn InferencePlan, stats: &StatsInner, req: Request) {
+fn run_single(plan: &dyn InferencePlan, metrics: &ModelMetrics, req: Request) {
     let t0 = Instant::now();
-    let out = plan.execute_positional(&req.inputs);
-    stats.exec_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
-    stats.batches.fetch_add(1, Ordering::Relaxed);
-    finish(stats, req, out);
+    let out = plan.execute_positional(&req.inputs).map_err(ServeError::Execution);
+    metrics.record_batch(req.rows, t0.elapsed().as_nanos() as u64);
+    finish(metrics, req, out);
+}
+
+fn finish(metrics: &ModelMetrics, req: Request, out: ServeResult) {
+    metrics.record_request(req.rows, req.enqueued.elapsed().as_nanos() as u64, out.is_err());
+    // the client may have hung up; that is its problem, not ours
+    let _ = req.reply.send(out);
 }
 
 /// The serving-throughput harness shared by `nnl bench-serve` and
@@ -493,23 +680,24 @@ pub fn bench_throughput(
         }
     });
     // 3./4. worker pool, request-at-a-time vs micro-batched: a load
-    // generator submits everything, then awaits every reply
+    // generator submits everything, then awaits every reply — the
+    // queue cap is lifted to the request count so the harness measures
+    // throughput, not its own shedding
     let drive = |server: &Server| {
-        let rxs: Vec<_> =
-            reqs.iter().map(|r| server.submit(r.clone()).expect("submit")).collect();
+        let rxs: Vec<_> = reqs.iter().map(|r| server.submit(r.clone()).expect("submit")).collect();
         for rx in rxs {
             rx.recv().expect("server reply").expect("inference ok");
         }
     };
     let workers = cfg.workers.max(1);
+    let open_cfg = ServeConfig { queue_cap: requests.max(1), ..cfg.clone() };
     let unbatched =
-        Server::start(Arc::clone(&plan), ServeConfig { max_batch: 1, ..cfg.clone() });
+        Server::start(Arc::clone(&plan), ServeConfig { max_batch: 1, ..open_cfg.clone() });
     let un_m = bench(&format!("server x{workers}, unbatched"), 1, 3, || drive(&unbatched));
-    let batched = Server::start(Arc::clone(&plan), cfg.clone());
-    let b_m =
-        bench(&format!("server x{workers}, max batch {}", cfg.max_batch), 1, 3, || {
-            drive(&batched)
-        });
+    let batched = Server::start(Arc::clone(&plan), open_cfg.clone());
+    let b_m = bench(&format!("server x{workers}, max batch {}", open_cfg.max_batch), 1, 3, || {
+        drive(&batched)
+    });
 
     let rows = vec![interp, compiled, un_m, b_m];
     let mut out =
@@ -526,24 +714,13 @@ pub fn bench_throughput(
     Ok(out)
 }
 
-fn finish(stats: &StatsInner, req: Request, out: Result<Vec<NdArray>, String>) {
-    if out.is_err() {
-        stats.errors.fetch_add(1, Ordering::Relaxed);
-    }
-    stats.requests.fetch_add(1, Ordering::Relaxed);
-    stats.rows.fetch_add(req.rows as u64, Ordering::Relaxed);
-    stats.latency_ns.fetch_add(req.enqueued.elapsed().as_nanos() as u64, Ordering::Relaxed);
-    // the client may have hung up; that is its problem, not ours
-    let _ = req.reply.send(out);
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::nnp::ir::{Layer, NetworkDef, Op, TensorDef};
     use std::collections::HashMap;
 
-    fn affine_plan(w: &[f32]) -> Arc<CompiledNet> {
+    pub(crate) fn affine_plan(w: &[f32]) -> Arc<CompiledNet> {
         let net = NetworkDef {
             name: "n".into(),
             inputs: vec![TensorDef { name: "x".into(), dims: vec![1, 2] }],
@@ -559,6 +736,42 @@ mod tests {
         let mut params = HashMap::new();
         params.insert("W".to_string(), NdArray::from_slice(&[2, 3], w));
         Arc::new(CompiledNet::compile(&net, &params).unwrap())
+    }
+
+    /// An [`InferencePlan`] decorator that sleeps inside every
+    /// execution — the deterministic way to make a queue back up in
+    /// admission-control and graceful-shutdown tests.
+    pub(crate) struct SlowPlan<P: InferencePlan> {
+        pub inner: P,
+        pub delay: Duration,
+    }
+
+    impl<P: InferencePlan> InferencePlan for SlowPlan<P> {
+        fn name(&self) -> &str {
+            self.inner.name()
+        }
+        fn inputs(&self) -> &[TensorDef] {
+            self.inner.inputs()
+        }
+        fn outputs(&self) -> &[String] {
+            self.inner.outputs()
+        }
+        fn n_steps(&self) -> usize {
+            self.inner.n_steps()
+        }
+        fn check_inputs(&self, inputs: &[NdArray]) -> Result<usize, String> {
+            self.inner.check_inputs(inputs)
+        }
+        fn execute_positional(&self, inputs: &[NdArray]) -> Result<Vec<NdArray>, String> {
+            std::thread::sleep(self.delay);
+            self.inner.execute_positional(inputs)
+        }
+        fn batch_invariant(&self) -> bool {
+            self.inner.batch_invariant()
+        }
+        fn peak_arena_bytes(&self) -> Option<usize> {
+            self.inner.peak_arena_bytes()
+        }
     }
 
     #[test]
@@ -582,6 +795,7 @@ mod tests {
         assert_eq!(stats.rows, 16);
         assert!(stats.batches <= 16);
         assert_eq!(stats.errors, 0);
+        assert_eq!(stats.shed, 0);
     }
 
     #[test]
@@ -610,9 +824,96 @@ mod tests {
         let plan = affine_plan(&[1., 2., 3., 4., 5., 6.]);
         let server = Server::start(plan, ServeConfig::default());
         let err = server.submit(vec![NdArray::zeros(&[2])]).unwrap_err();
-        assert!(err.contains("incompatible"), "{err}");
+        assert!(matches!(err, ServeError::InvalidRequest(_)), "{err}");
+        assert!(err.to_string().contains("incompatible"), "{err}");
         let err = server.submit(vec![]).unwrap_err();
-        assert!(err.contains("expects 1 inputs"), "{err}");
+        assert!(err.to_string().contains("expects 1 inputs"), "{err}");
+    }
+
+    #[test]
+    fn full_queue_sheds_with_typed_overload() {
+        // one worker stuck 100 ms per request + a 2-slot queue: burst
+        // submissions past (in-flight + 2) must shed, not queue forever
+        let plan = Arc::new(SlowPlan {
+            inner: Arc::try_unwrap(affine_plan(&[1., 0., 0., 0., 1., 0.]))
+                .unwrap_or_else(|_| unreachable!()),
+            delay: Duration::from_millis(100),
+        });
+        let cfg = ServeConfig { workers: 1, max_batch: 1, queue_cap: 2, ..Default::default() };
+        let server = Server::start(plan, cfg);
+        assert_eq!(server.queue_cap(), 2);
+        let client = server.client();
+        let mut oks = Vec::new();
+        let mut shed = 0usize;
+        for i in 0..12 {
+            let x = NdArray::from_slice(&[1, 2], &[i as f32, 0.]);
+            match client.submit(vec![x]) {
+                Ok(rx) => oks.push(rx),
+                Err(e @ ServeError::Overloaded { .. }) => {
+                    assert_eq!(e.code(), 1);
+                    assert!(e.to_string().contains("queue full"), "{e}");
+                    shed += 1;
+                }
+                Err(other) => panic!("unexpected rejection: {other}"),
+            }
+        }
+        assert!(shed >= 1, "burst of 12 into a 2-slot queue must shed");
+        // every admitted request still completes (graceful drain)
+        for rx in oks {
+            rx.recv().expect("admitted request must be answered").unwrap();
+        }
+        let stats = server.shutdown();
+        assert_eq!(stats.shed, shed as u64);
+        assert_eq!(stats.errors, 0);
+    }
+
+    #[test]
+    fn graceful_shutdown_answers_every_admitted_request() {
+        // the drain regression test: submit a backlog against a slow
+        // plan, then drop the server immediately — every admitted
+        // request must still receive an Ok reply (none silently
+        // dropped, none errored)
+        let plan = Arc::new(SlowPlan {
+            inner: Arc::try_unwrap(affine_plan(&[2., 0., 0., 0., 2., 0.]))
+                .unwrap_or_else(|_| unreachable!()),
+            delay: Duration::from_millis(5),
+        });
+        let cfg = ServeConfig { workers: 2, queue_cap: 64, ..Default::default() };
+        let server = Server::start(plan, cfg);
+        let rxs: Vec<_> = (0..16)
+            .map(|i| {
+                server
+                    .submit(vec![NdArray::from_slice(&[1, 2], &[i as f32, 1.])])
+                    .expect("queue has room")
+            })
+            .collect();
+        drop(server); // closes queue, drains, joins
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let out = rx
+                .recv()
+                .expect("reply channel must not disconnect during shutdown")
+                .expect("drained request must succeed");
+            assert_eq!(out[0].data()[0], 2. * i as f32);
+        }
+    }
+
+    #[test]
+    fn submissions_after_shutdown_fail_typed() {
+        let plan = affine_plan(&[1., 0., 0., 0., 1., 0.]);
+        let server = Server::start(plan, ServeConfig::default());
+        let client = server.client();
+        drop(server);
+        let err = client.submit(vec![NdArray::zeros(&[1, 2])]).unwrap_err();
+        assert_eq!(err, ServeError::ShuttingDown);
+    }
+
+    #[test]
+    fn queue_cap_derived_from_memory_plan() {
+        let plan = affine_plan(&[1., 0., 0., 0., 1., 0.]);
+        let server = Server::start(Arc::clone(&plan), ServeConfig::default());
+        // a tiny affine plan has a tiny arena -> cap clamps to the max
+        assert_eq!(server.queue_cap(), MAX_QUEUE_CAP);
+        assert_eq!(derive_queue_cap(plan.as_ref()), MAX_QUEUE_CAP);
     }
 
     #[test]
@@ -656,8 +957,7 @@ mod tests {
         params.insert("W".to_string(), rng.randn(&[4, 3], 1.0));
         let samples: Vec<Vec<NdArray>> =
             (0..4).map(|_| vec![rng.rand(&[1, 4], -1.0, 1.0)]).collect();
-        let (_, qnet) =
-            quantize_net(&net, &params, &samples, &QuantConfig::default()).unwrap();
+        let (_, qnet) = quantize_net(&net, &params, &samples, &QuantConfig::default()).unwrap();
         let qnet = Arc::new(qnet);
         let server = Server::start(Arc::clone(&qnet), ServeConfig::default());
         assert!(server.batched(), "quantized affine+relu plans stay batchable");
@@ -676,14 +976,11 @@ mod tests {
             workers: 1,
             max_batch: 8,
             max_wait: Duration::from_millis(200),
+            queue_cap: 0,
         };
         let server = Server::start(plan, cfg);
         let rxs: Vec<_> = (0..8)
-            .map(|i| {
-                server
-                    .submit(vec![NdArray::from_slice(&[1, 2], &[i as f32, 0.])])
-                    .unwrap()
-            })
+            .map(|i| server.submit(vec![NdArray::from_slice(&[1, 2], &[i as f32, 0.])]).unwrap())
             .collect();
         for (i, rx) in rxs.into_iter().enumerate() {
             let out = rx.recv().unwrap().unwrap();
@@ -695,5 +992,6 @@ mod tests {
         // at least some coalescing must have happened with one worker
         // and a 200 ms window
         assert!(stats.batches < 8, "no batching occurred: {stats}");
+        assert!(stats.p99_latency_ms >= stats.p50_latency_ms);
     }
 }

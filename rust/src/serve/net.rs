@@ -1,0 +1,1080 @@
+//! The production serving front end: a TCP protocol over a
+//! multi-model registry with atomic hot reload and live metrics —
+//! the subsystem that makes the compiled-plan / int8 / pass-pipeline
+//! stack reachable over a socket (paper §1: "from research to
+//! production servers"; ROADMAP: the millions-of-users story made
+//! measurable).
+//!
+//! ## Wire protocol
+//!
+//! Length-prefixed binary frames, version-tagged:
+//!
+//! ```text
+//! frame    := u32_le payload_len, payload          (len <= 64 MiB)
+//! request  := version:u8 verb:u8 body
+//! response := version:u8 status:u8 body            (status 0 = OK,
+//!                                                   else ServeError::code)
+//! string   := u32_le len, utf8 bytes
+//! tensor   := ndim:u8, ndim x u32_le dims, f32_le data
+//! verbs    := INFER(1)  model:string n:u8 n x tensor
+//!             STATS(2)                      -> string (JSON per-model metrics)
+//!             LIST(3)                       -> string (JSON model list)
+//!             DEPLOY(4) model:string u32_le len, NNB1/NNB2 image bytes
+//!                                           -> string (JSON {version, kind})
+//!             UNDEPLOY(5) model:string
+//!             PING(6)
+//! error    := status:u8 != 0, message:string
+//! ```
+//!
+//! A connection whose first byte is `{` speaks the **line-oriented
+//! JSON fallback** instead (one request object per line, one reply
+//! object per line) — the same verbs, telnet-able, used by tests and
+//! debugging: `{"verb":"infer","model":"m","inputs":[{"dims":[1,2],
+//! "data":[0.5,1.0]}]}`.
+//!
+//! ## Registry and hot reload
+//!
+//! [`Registry`] hosts many models concurrently, each entry a
+//! [`crate::serve::Server`] (bounded queue + worker pool) behind an
+//! `Arc` that [`Registry::deploy`] **atomically swaps**: submitting
+//! clones the current `Arc` (that clone *is* the linearization
+//! point), so in-flight requests finish on the plan they were admitted
+//! to while new requests land on the new one; the old pool drains its
+//! backlog and joins when its last in-flight holder releases it —
+//! zero requests fail across a swap. Per-model [`ModelMetrics`]
+//! survive swaps, so `/stats` describes the model as clients saw it.
+//!
+//! Admission control is per model: the bounded queue capacity defaults
+//! to a limit derived from the plan's static-memory-plan
+//! `peak_arena_bytes` ([`crate::serve::derive_queue_cap`]), and a full
+//! queue replies [`ServeError::Overloaded`] — typed, immediate, never
+//! a timeout.
+//!
+//! CLI: `nnl serve --listen ADDR --models name=path,...`; load
+//! numbers: `nnl bench-serve --net` / `benches/serve_net.rs`
+//! (`BENCH_serve.json`).
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::Receiver;
+use std::sync::{Arc, Mutex, RwLock};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::monitor::metrics::ModelMetrics;
+use crate::nnp::plan::InferencePlan;
+use crate::serve::{ServeConfig, ServeError, ServeResult, Server};
+use crate::tensor::NdArray;
+use crate::utils::json::Json;
+
+/// Protocol version carried in every frame.
+pub const PROTO_VERSION: u8 = 1;
+/// Hard cap on one frame's payload (requests and replies).
+pub const MAX_FRAME: usize = 64 << 20;
+/// Hard cap on one decoded tensor's rank.
+pub const MAX_NDIM: usize = 8;
+
+/// Request verbs.
+pub mod verb {
+    pub const INFER: u8 = 1;
+    pub const STATS: u8 = 2;
+    pub const LIST: u8 = 3;
+    pub const DEPLOY: u8 = 4;
+    pub const UNDEPLOY: u8 = 5;
+    pub const PING: u8 = 6;
+}
+
+// ---------------------------------------------------------------- registry
+
+/// One plan incarnation hosted under a model name: the worker pool
+/// plus the version stamp hot reload bumps.
+pub struct Hosted {
+    version: u64,
+    kind: &'static str,
+    server: Server,
+}
+
+impl Hosted {
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    /// `"f32"` or `"int8"`.
+    pub fn kind(&self) -> &'static str {
+        self.kind
+    }
+
+    pub fn server(&self) -> &Server {
+        &self.server
+    }
+}
+
+struct ModelSlot {
+    name: String,
+    metrics: Arc<ModelMetrics>,
+    host: RwLock<Arc<Hosted>>,
+}
+
+/// An admitted request plus the plan incarnation serving it — holding
+/// the `Arc<Hosted>` until the reply arrives is what lets a hot swap
+/// proceed while in-flight requests still finish on the old plan.
+pub struct Pending {
+    rx: Receiver<ServeResult>,
+    _host: Arc<Hosted>,
+}
+
+impl Pending {
+    /// Block for the reply.
+    pub fn wait(self) -> ServeResult {
+        self.rx.recv().map_err(|_| ServeError::ShuttingDown)?
+    }
+}
+
+/// Static description of one registry entry (the `LIST` verb's rows).
+#[derive(Debug, Clone)]
+pub struct ModelInfo {
+    pub name: String,
+    pub version: u64,
+    pub kind: String,
+    /// Declared inputs as `(name, dims)`.
+    pub inputs: Vec<(String, Vec<usize>)>,
+    pub queue_cap: usize,
+    pub batched: bool,
+}
+
+/// The multi-model registry: concurrent lookup, atomic hot swap,
+/// per-model metrics and admission control. Cheap to share
+/// (`Arc<Registry>`); every method is `&self`.
+pub struct Registry {
+    models: RwLock<HashMap<String, Arc<ModelSlot>>>,
+    default_cfg: ServeConfig,
+}
+
+impl Registry {
+    /// `default_cfg` applies to every deploy that doesn't bring its
+    /// own config (`queue_cap: 0` keeps the per-plan derived cap).
+    pub fn new(default_cfg: ServeConfig) -> Registry {
+        Registry { models: RwLock::new(HashMap::new()), default_cfg }
+    }
+
+    /// Add or hot-swap `name`. Returns the new version (1 for a fresh
+    /// entry). The swap is atomic: requests admitted before it finish
+    /// on the old plan (whose pool drains and joins once its last
+    /// in-flight holder lets go), requests after it land on the new
+    /// plan, and nobody observes a gap.
+    pub fn deploy(&self, name: &str, plan: Arc<dyn InferencePlan>, kind: &'static str) -> u64 {
+        self.deploy_with(name, plan, kind, self.default_cfg.clone())
+    }
+
+    /// [`Registry::deploy`] with a per-model [`ServeConfig`].
+    pub fn deploy_with(
+        &self,
+        name: &str,
+        plan: Arc<dyn InferencePlan>,
+        kind: &'static str,
+        cfg: ServeConfig,
+    ) -> u64 {
+        // the old incarnation must drop *outside* the locks: its Drop
+        // drains a worker pool, and that must never stall submitters
+        let mut retired: Option<Arc<Hosted>> = None;
+        let version;
+        {
+            let mut map = self.models.write().expect("registry lock");
+            match map.get(name) {
+                Some(slot) => {
+                    version = slot.host.read().expect("slot lock").version + 1;
+                    let server = Server::start_shared(plan, cfg, Arc::clone(&slot.metrics));
+                    let next = Arc::new(Hosted { version, kind, server });
+                    retired = Some(std::mem::replace(
+                        &mut *slot.host.write().expect("slot lock"),
+                        next,
+                    ));
+                    slot.metrics.swaps.fetch_add(1, Ordering::Relaxed);
+                }
+                None => {
+                    version = 1;
+                    let metrics = Arc::new(ModelMetrics::default());
+                    let server = Server::start_shared(plan, cfg, Arc::clone(&metrics));
+                    map.insert(
+                        name.to_string(),
+                        Arc::new(ModelSlot {
+                            name: name.to_string(),
+                            metrics,
+                            host: RwLock::new(Arc::new(Hosted { version, kind, server })),
+                        }),
+                    );
+                }
+            }
+        }
+        drop(retired);
+        version
+    }
+
+    /// Deploy from raw artifact bytes (magic-sniffed NNB1 → f32 plan,
+    /// NNB2 → int8 plan) — the `DEPLOY` verb's backend. NNP archives
+    /// are path-shaped (zip), so they deploy via the CLI, not the wire.
+    pub fn deploy_artifact(
+        &self,
+        name: &str,
+        bytes: &[u8],
+    ) -> Result<(u64, &'static str), ServeError> {
+        if bytes.len() < 4 || (&bytes[..4] != b"NNB1" && &bytes[..4] != b"NNB2") {
+            return Err(ServeError::Protocol(
+                "DEPLOY expects an NNB1/NNB2 image (deploy .nnp archives via the CLI)"
+                    .to_string(),
+            ));
+        }
+        let (plan, kind): (Arc<dyn InferencePlan>, &'static str) =
+            match crate::converters::nnb::NnbEngine::load(bytes)
+                .map_err(ServeError::InvalidRequest)?
+            {
+                crate::converters::nnb::NnbEngine::F32(p) => (Arc::new(p), "f32"),
+                crate::converters::nnb::NnbEngine::Int8(q) => (Arc::new(q), "int8"),
+            };
+        Ok((self.deploy(name, plan, kind), kind))
+    }
+
+    /// Drop a model. In-flight requests still finish (the slot dies
+    /// only when its last holder releases it); later lookups get
+    /// [`ServeError::NoSuchModel`].
+    pub fn remove(&self, name: &str) -> bool {
+        let slot = self.models.write().expect("registry lock").remove(name);
+        slot.is_some()
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.models.read().expect("registry lock").contains_key(name)
+    }
+
+    pub fn len(&self) -> usize {
+        self.models.read().expect("registry lock").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Admit a request to `name`'s current plan incarnation. The
+    /// returned [`Pending`] pins that incarnation until the reply.
+    pub fn submit(&self, name: &str, inputs: Vec<NdArray>) -> Result<Pending, ServeError> {
+        let slot = self
+            .models
+            .read()
+            .expect("registry lock")
+            .get(name)
+            .cloned()
+            .ok_or_else(|| ServeError::NoSuchModel(name.to_string()))?;
+        let host = Arc::clone(&slot.host.read().expect("slot lock")); // <- the swap point
+        let rx = host.server.submit(inputs)?;
+        Ok(Pending { rx, _host: host })
+    }
+
+    /// Blocking convenience: submit and wait.
+    pub fn infer(&self, name: &str, inputs: Vec<NdArray>) -> ServeResult {
+        self.submit(name, inputs)?.wait()
+    }
+
+    /// The current version under `name`, if hosted.
+    pub fn version(&self, name: &str) -> Option<u64> {
+        let slot = self.models.read().expect("registry lock").get(name).cloned()?;
+        let v = slot.host.read().expect("slot lock").version;
+        Some(v)
+    }
+
+    /// Static rows for the `LIST` verb, sorted by name.
+    pub fn list(&self) -> Vec<ModelInfo> {
+        let slots: Vec<Arc<ModelSlot>> =
+            self.models.read().expect("registry lock").values().cloned().collect();
+        let mut rows: Vec<ModelInfo> = slots
+            .iter()
+            .map(|slot| {
+                let host = Arc::clone(&slot.host.read().expect("slot lock"));
+                ModelInfo {
+                    name: slot.name.clone(),
+                    version: host.version,
+                    kind: host.kind.to_string(),
+                    inputs: host
+                        .server
+                        .plan()
+                        .inputs()
+                        .iter()
+                        .map(|t| (t.name.clone(), t.dims.clone()))
+                        .collect(),
+                    queue_cap: host.server.queue_cap(),
+                    batched: host.server.batched(),
+                }
+            })
+            .collect();
+        rows.sort_by(|a, b| a.name.cmp(&b.name));
+        rows
+    }
+
+    /// The `/stats` payload: per-model live metrics (latency
+    /// histogram percentiles, throughput, queue depth, batch-size
+    /// distribution, shed counts) plus version/kind/limits.
+    pub fn stats_json(&self) -> Json {
+        let mut out = std::collections::BTreeMap::new();
+        for info in self.list() {
+            let slot = self.models.read().expect("registry lock").get(&info.name).cloned();
+            let Some(slot) = slot else { continue };
+            let mut obj = match slot.metrics.snapshot().to_json() {
+                Json::Obj(m) => m,
+                _ => unreachable!("snapshot renders an object"),
+            };
+            obj.insert("version".to_string(), Json::num(info.version as f64));
+            obj.insert("kind".to_string(), Json::str(info.kind.clone()));
+            obj.insert("queue_cap".to_string(), Json::num(info.queue_cap as f64));
+            obj.insert("batched".to_string(), Json::Bool(info.batched));
+            out.insert(info.name, Json::Obj(obj));
+        }
+        Json::Obj(out)
+    }
+}
+
+// ------------------------------------------------------------ wire encode
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_str(buf: &mut Vec<u8>, s: &str) {
+    put_u32(buf, s.len() as u32);
+    buf.extend_from_slice(s.as_bytes());
+}
+
+fn put_tensor(buf: &mut Vec<u8>, a: &NdArray) {
+    buf.push(a.dims().len() as u8);
+    for &d in a.dims() {
+        put_u32(buf, d as u32);
+    }
+    for v in a.data() {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// The bounds-checked reader's shared truncation error.
+fn truncated() -> ServeError {
+    ServeError::Protocol("truncated frame".to_string())
+}
+
+/// Bounds-checked reader over one untrusted payload — every length
+/// and every dimension product is validated before allocation, in the
+/// same spirit as the hardened NNP/NNB decoders.
+struct Wire<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Wire<'a> {
+    fn new(b: &'a [u8]) -> Wire<'a> {
+        Wire { b, pos: 0 }
+    }
+
+    fn u8(&mut self) -> Result<u8, ServeError> {
+        let v = *self.b.get(self.pos).ok_or_else(truncated)?;
+        self.pos += 1;
+        Ok(v)
+    }
+
+    fn u32(&mut self) -> Result<u32, ServeError> {
+        let end = self.pos.checked_add(4).filter(|&e| e <= self.b.len()).ok_or_else(truncated)?;
+        let v = u32::from_le_bytes(self.b[self.pos..end].try_into().unwrap());
+        self.pos = end;
+        Ok(v)
+    }
+
+    fn bytes(&mut self, n: usize) -> Result<&'a [u8], ServeError> {
+        let end = self.pos.checked_add(n).filter(|&e| e <= self.b.len()).ok_or_else(truncated)?;
+        let s = &self.b[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn str_(&mut self) -> Result<String, ServeError> {
+        let n = self.u32()? as usize;
+        let raw = self.bytes(n)?;
+        String::from_utf8(raw.to_vec())
+            .map_err(|_| ServeError::Protocol("string is not utf-8".to_string()))
+    }
+
+    fn tensor(&mut self) -> Result<NdArray, ServeError> {
+        let ndim = self.u8()? as usize;
+        if ndim == 0 || ndim > MAX_NDIM {
+            return Err(ServeError::Protocol(format!(
+                "tensor rank {ndim} outside 1..={MAX_NDIM}"
+            )));
+        }
+        let mut dims = Vec::with_capacity(ndim);
+        let mut elems: usize = 1;
+        for _ in 0..ndim {
+            let d = self.u32()? as usize;
+            elems = elems
+                .checked_mul(d)
+                .filter(|&e| e.checked_mul(4).is_some_and(|b| b <= MAX_FRAME))
+                .ok_or_else(|| {
+                    ServeError::Protocol("tensor size overflows the frame cap".to_string())
+                })?;
+            dims.push(d);
+        }
+        let raw = self.bytes(elems * 4)?;
+        let data: Vec<f32> = raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        Ok(NdArray::from_vec(&dims, data))
+    }
+}
+
+/// Write one `[u32 len][payload]` frame.
+fn write_frame(stream: &mut TcpStream, payload: &[u8]) -> std::io::Result<()> {
+    let mut msg = Vec::with_capacity(4 + payload.len());
+    put_u32(&mut msg, payload.len() as u32);
+    msg.extend_from_slice(payload);
+    stream.write_all(&msg)
+}
+
+fn ok_header() -> Vec<u8> {
+    vec![PROTO_VERSION, 0]
+}
+
+fn err_payload(e: &ServeError) -> Vec<u8> {
+    let mut p = vec![PROTO_VERSION, e.code()];
+    put_str(&mut p, &e.to_string());
+    p
+}
+
+// ---------------------------------------------------------- request handling
+
+/// Decode and serve one binary request payload; always returns a
+/// response payload (errors become typed error frames).
+fn handle_binary(registry: &Registry, payload: &[u8], allow_deploy: bool) -> Vec<u8> {
+    match handle_binary_inner(registry, payload, allow_deploy) {
+        Ok(resp) => resp,
+        Err(e) => err_payload(&e),
+    }
+}
+
+fn handle_binary_inner(
+    registry: &Registry,
+    payload: &[u8],
+    allow_deploy: bool,
+) -> Result<Vec<u8>, ServeError> {
+    let mut w = Wire::new(payload);
+    let version = w.u8()?;
+    if version != PROTO_VERSION {
+        return Err(ServeError::Protocol(format!(
+            "unsupported protocol version {version} (this server speaks {PROTO_VERSION})"
+        )));
+    }
+    let v = w.u8()?;
+    match v {
+        verb::INFER => {
+            let model = w.str_()?;
+            let n = w.u8()? as usize;
+            let mut inputs = Vec::with_capacity(n);
+            for _ in 0..n {
+                inputs.push(w.tensor()?);
+            }
+            let outs = registry.infer(&model, inputs)?;
+            let mut resp = ok_header();
+            resp.push(outs.len() as u8);
+            for o in &outs {
+                put_tensor(&mut resp, o);
+            }
+            Ok(resp)
+        }
+        verb::STATS => {
+            let mut resp = ok_header();
+            put_str(&mut resp, &registry.stats_json().to_string());
+            Ok(resp)
+        }
+        verb::LIST => {
+            let rows: Vec<Json> = registry
+                .list()
+                .iter()
+                .map(|m| {
+                    Json::obj(vec![
+                        ("name", Json::str(m.name.clone())),
+                        ("version", Json::num(m.version as f64)),
+                        ("kind", Json::str(m.kind.clone())),
+                        (
+                            "inputs",
+                            Json::Arr(
+                                m.inputs
+                                    .iter()
+                                    .map(|(n, d)| {
+                                        Json::obj(vec![
+                                            ("name", Json::str(n.clone())),
+                                            ("dims", Json::arr_of_usize(d)),
+                                        ])
+                                    })
+                                    .collect(),
+                            ),
+                        ),
+                        ("queue_cap", Json::num(m.queue_cap as f64)),
+                        ("batched", Json::Bool(m.batched)),
+                    ])
+                })
+                .collect();
+            let mut resp = ok_header();
+            put_str(&mut resp, &Json::Arr(rows).to_string());
+            Ok(resp)
+        }
+        verb::DEPLOY => {
+            if !allow_deploy {
+                return Err(ServeError::InvalidRequest(
+                    "wire deploys are disabled on this server".to_string(),
+                ));
+            }
+            let model = w.str_()?;
+            let n = w.u32()? as usize;
+            if n > MAX_FRAME {
+                return Err(ServeError::Protocol("artifact exceeds frame cap".to_string()));
+            }
+            let image = w.bytes(n)?;
+            let (version, kind) = registry.deploy_artifact(&model, image)?;
+            let reply = Json::obj(vec![
+                ("model", Json::str(model)),
+                ("version", Json::num(version as f64)),
+                ("kind", Json::str(kind)),
+            ]);
+            let mut resp = ok_header();
+            put_str(&mut resp, &reply.to_string());
+            Ok(resp)
+        }
+        verb::UNDEPLOY => {
+            if !allow_deploy {
+                return Err(ServeError::InvalidRequest(
+                    "wire deploys are disabled on this server".to_string(),
+                ));
+            }
+            let model = w.str_()?;
+            if registry.remove(&model) {
+                Ok(ok_header())
+            } else {
+                Err(ServeError::NoSuchModel(model))
+            }
+        }
+        verb::PING => Ok(ok_header()),
+        other => Err(ServeError::Protocol(format!("unknown verb {other}"))),
+    }
+}
+
+fn json_tensor(j: &Json) -> Result<NdArray, ServeError> {
+    let dims = j
+        .get("dims")
+        .usize_arr()
+        .filter(|d| !d.is_empty() && d.len() <= MAX_NDIM)
+        .ok_or_else(|| ServeError::Protocol("tensor needs a 'dims' array".to_string()))?;
+    let data = j
+        .get("data")
+        .as_arr()
+        .ok_or_else(|| ServeError::Protocol("tensor needs a 'data' array".to_string()))?;
+    let elems = dims
+        .iter()
+        .try_fold(1usize, |a, &d| a.checked_mul(d))
+        .filter(|&e| e.checked_mul(4).is_some_and(|b| b <= MAX_FRAME))
+        .ok_or_else(|| ServeError::Protocol("tensor size overflows".to_string()))?;
+    if data.len() != elems {
+        return Err(ServeError::Protocol(format!(
+            "dims {dims:?} imply {elems} values, 'data' has {}",
+            data.len()
+        )));
+    }
+    let vals: Option<Vec<f32>> = data.iter().map(|v| v.as_f64().map(|f| f as f32)).collect();
+    let vals = vals.ok_or_else(|| ServeError::Protocol("'data' must be numbers".to_string()))?;
+    Ok(NdArray::from_vec(&dims, vals))
+}
+
+fn tensor_json(a: &NdArray) -> Json {
+    Json::obj(vec![
+        ("dims", Json::arr_of_usize(a.dims())),
+        ("data", Json::Arr(a.data().iter().map(|&v| Json::num(v as f64)).collect())),
+    ])
+}
+
+fn json_err(e: &ServeError) -> Json {
+    Json::obj(vec![
+        ("ok", Json::Bool(false)),
+        ("error", Json::str(e.kind())),
+        ("code", Json::num(e.code() as f64)),
+        ("message", Json::str(e.to_string())),
+    ])
+}
+
+/// Serve one line of the JSON fallback protocol; always returns a
+/// reply object (never panics on hostile input).
+pub fn handle_json_line(registry: &Registry, line: &str) -> Json {
+    match handle_json_inner(registry, line) {
+        Ok(j) => j,
+        Err(e) => json_err(&e),
+    }
+}
+
+fn handle_json_inner(registry: &Registry, line: &str) -> Result<Json, ServeError> {
+    let req = Json::parse(line).map_err(ServeError::Protocol)?;
+    let verb = req
+        .get("verb")
+        .as_str()
+        .ok_or_else(|| ServeError::Protocol("request needs a 'verb'".to_string()))?;
+    match verb {
+        "infer" => {
+            let model = req
+                .get("model")
+                .as_str()
+                .ok_or_else(|| ServeError::Protocol("'infer' needs a 'model'".to_string()))?;
+            let inputs = req
+                .get("inputs")
+                .as_arr()
+                .ok_or_else(|| ServeError::Protocol("'infer' needs 'inputs'".to_string()))?
+                .iter()
+                .map(json_tensor)
+                .collect::<Result<Vec<NdArray>, ServeError>>()?;
+            let outs = registry.infer(model, inputs)?;
+            Ok(Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("outputs", Json::Arr(outs.iter().map(tensor_json).collect())),
+            ]))
+        }
+        "stats" => Ok(Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("models", registry.stats_json()),
+        ])),
+        "list" => {
+            let names: Vec<Json> =
+                registry.list().into_iter().map(|m| Json::str(m.name)).collect();
+            Ok(Json::obj(vec![("ok", Json::Bool(true)), ("models", Json::Arr(names))]))
+        }
+        "ping" => Ok(Json::obj(vec![("ok", Json::Bool(true))])),
+        other => Err(ServeError::Protocol(format!("unknown verb '{other}'"))),
+    }
+}
+
+// ---------------------------------------------------------------- server
+
+/// Network front-end knobs.
+#[derive(Debug, Clone)]
+pub struct NetConfig {
+    /// Concurrent connections; the server replies `Overloaded` and
+    /// closes anything past this.
+    pub max_conns: usize,
+    /// Read timeout used to poll the shutdown flag on idle
+    /// connections.
+    pub poll_interval: Duration,
+    /// Whether the wire may DEPLOY/UNDEPLOY models.
+    pub allow_deploy: bool,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig {
+            max_conns: 64,
+            poll_interval: Duration::from_millis(25),
+            allow_deploy: true,
+        }
+    }
+}
+
+/// The TCP server: an accept loop plus one handler thread per
+/// connection, all serving one shared [`Registry`]. Dropping (or
+/// [`NetServer::shutdown`]) stops accepting, lets every handler
+/// finish its in-flight request, and joins — the registry (and its
+/// model pools) stays alive for its owner.
+pub struct NetServer {
+    local_addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+    registry: Arc<Registry>,
+}
+
+impl NetServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:7070"`; port 0 picks one — read
+    /// it back from [`NetServer::local_addr`]) and start serving
+    /// `registry`.
+    pub fn bind(
+        addr: &str,
+        registry: Arc<Registry>,
+        cfg: NetConfig,
+    ) -> std::io::Result<NetServer> {
+        let listener = TcpListener::bind(addr)?;
+        let local_addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let accept = {
+            let stop = Arc::clone(&stop);
+            let registry = Arc::clone(&registry);
+            std::thread::spawn(move || accept_loop(listener, registry, stop, cfg))
+        };
+        Ok(NetServer { local_addr, stop, accept: Some(accept), registry })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    pub fn registry(&self) -> &Arc<Registry> {
+        &self.registry
+    }
+
+    /// Stop accepting, drain in-flight connection work, join.
+    pub fn shutdown(mut self) {
+        self.stop_and_join();
+    }
+
+    fn stop_and_join(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        self.stop_and_join();
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    registry: Arc<Registry>,
+    stop: Arc<AtomicBool>,
+    cfg: NetConfig,
+) {
+    let live = Arc::new(AtomicUsize::new(0));
+    let conns: Mutex<Vec<JoinHandle<()>>> = Mutex::new(Vec::new());
+    while !stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((mut stream, _)) => {
+                let mut held = conns.lock().expect("conn list");
+                held.retain(|h| !h.is_finished());
+                if live.load(Ordering::SeqCst) >= cfg.max_conns {
+                    // typed connection-level shed, best effort
+                    let _ = write_frame(
+                        &mut stream,
+                        &err_payload(&ServeError::Overloaded {
+                            model: "<connections>".to_string(),
+                            depth: cfg.max_conns,
+                            cap: cfg.max_conns,
+                        }),
+                    );
+                    continue;
+                }
+                live.fetch_add(1, Ordering::SeqCst);
+                let registry = Arc::clone(&registry);
+                let stop = Arc::clone(&stop);
+                let live = Arc::clone(&live);
+                let cfg = cfg.clone();
+                held.push(std::thread::spawn(move || {
+                    let _ = handle_conn(stream, &registry, &stop, &cfg);
+                    live.fetch_sub(1, Ordering::SeqCst);
+                }));
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(5)),
+        }
+    }
+    for h in conns.into_inner().expect("conn list").drain(..) {
+        let _ = h.join();
+    }
+}
+
+/// One connection: sniff binary vs JSON from the first byte, then
+/// loop request → reply until EOF or server shutdown. The read
+/// timeout only exists so shutdown is observed; partial frames are
+/// reassembled across timeouts.
+fn handle_conn(
+    mut stream: TcpStream,
+    registry: &Registry,
+    stop: &AtomicBool,
+    cfg: &NetConfig,
+) -> std::io::Result<()> {
+    stream.set_read_timeout(Some(cfg.poll_interval))?;
+    stream.set_nodelay(true)?;
+    let mut buf: Vec<u8> = Vec::new();
+    let mut tmp = [0u8; 16 * 1024];
+    let mut json_mode: Option<bool> = None;
+    loop {
+        // serve everything already buffered
+        loop {
+            if json_mode.is_none() {
+                json_mode = buf.first().map(|&b| b == b'{');
+            }
+            match json_mode {
+                Some(true) => {
+                    let Some(nl) = buf.iter().position(|&b| b == b'\n') else { break };
+                    let line: Vec<u8> = buf.drain(..=nl).collect();
+                    let line = String::from_utf8_lossy(&line[..nl]);
+                    if line.trim().is_empty() {
+                        continue;
+                    }
+                    let reply = handle_json_line(registry, line.trim());
+                    stream.write_all((reply.to_string() + "\n").as_bytes())?;
+                }
+                Some(false) => {
+                    if buf.len() < 4 {
+                        break;
+                    }
+                    let len = u32::from_le_bytes(buf[..4].try_into().unwrap()) as usize;
+                    if len > MAX_FRAME {
+                        write_frame(
+                            &mut stream,
+                            &err_payload(&ServeError::Protocol(format!(
+                                "frame of {len} bytes exceeds the {MAX_FRAME} cap"
+                            ))),
+                        )?;
+                        return Ok(()); // framing is unrecoverable: close
+                    }
+                    if buf.len() < 4 + len {
+                        break;
+                    }
+                    let frame: Vec<u8> = buf.drain(..4 + len).skip(4).collect();
+                    let resp = handle_binary(registry, &frame, cfg.allow_deploy);
+                    write_frame(&mut stream, &resp)?;
+                }
+                None => break,
+            }
+        }
+        if stop.load(Ordering::SeqCst) {
+            return Ok(());
+        }
+        match stream.read(&mut tmp) {
+            Ok(0) => return Ok(()),
+            Ok(n) => buf.extend_from_slice(&tmp[..n]),
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut
+                    || e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+// ---------------------------------------------------------------- client
+
+/// A blocking client for the binary protocol — used by the load
+/// generator (`nnl bench-serve --net`), the integration tests, and as
+/// the reference implementation for other-language clients.
+pub struct NetClient {
+    stream: TcpStream,
+}
+
+impl NetClient {
+    pub fn connect<A: ToSocketAddrs>(addr: A) -> std::io::Result<NetClient> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        Ok(NetClient { stream })
+    }
+
+    fn roundtrip(&mut self, payload: &[u8]) -> Result<Vec<u8>, ServeError> {
+        let io = |e: std::io::Error| ServeError::Protocol(format!("connection: {e}"));
+        write_frame(&mut self.stream, payload).map_err(io)?;
+        let mut hdr = [0u8; 4];
+        self.stream.read_exact(&mut hdr).map_err(io)?;
+        let len = u32::from_le_bytes(hdr) as usize;
+        if len > MAX_FRAME {
+            return Err(ServeError::Protocol("oversized reply frame".to_string()));
+        }
+        let mut payload = vec![0u8; len];
+        self.stream.read_exact(&mut payload).map_err(io)?;
+        Ok(payload)
+    }
+
+    /// Issue one request and decode the response header; returns a
+    /// cursor positioned at the verb-specific body.
+    fn request(&mut self, payload: &[u8]) -> Result<Vec<u8>, ServeError> {
+        let resp = self.roundtrip(payload)?;
+        let mut w = Wire::new(&resp);
+        let _version = w.u8()?;
+        let status = w.u8()?;
+        if status != 0 {
+            let msg = w.str_().unwrap_or_else(|_| "malformed error reply".to_string());
+            return Err(ServeError::from_wire(status, msg));
+        }
+        Ok(resp[w.pos..].to_vec())
+    }
+
+    pub fn infer(&mut self, model: &str, inputs: &[NdArray]) -> ServeResult {
+        let mut p = vec![PROTO_VERSION, verb::INFER];
+        put_str(&mut p, model);
+        p.push(inputs.len() as u8);
+        for a in inputs {
+            put_tensor(&mut p, a);
+        }
+        let body = self.request(&p)?;
+        let mut w = Wire::new(&body);
+        let n = w.u8()? as usize;
+        let mut outs = Vec::with_capacity(n);
+        for _ in 0..n {
+            outs.push(w.tensor()?);
+        }
+        Ok(outs)
+    }
+
+    pub fn stats(&mut self) -> Result<Json, ServeError> {
+        let body = self.request(&[PROTO_VERSION, verb::STATS])?;
+        let s = Wire::new(&body).str_()?;
+        Json::parse(&s).map_err(ServeError::Protocol)
+    }
+
+    pub fn list(&mut self) -> Result<Json, ServeError> {
+        let body = self.request(&[PROTO_VERSION, verb::LIST])?;
+        let s = Wire::new(&body).str_()?;
+        Json::parse(&s).map_err(ServeError::Protocol)
+    }
+
+    pub fn ping(&mut self) -> Result<(), ServeError> {
+        self.request(&[PROTO_VERSION, verb::PING]).map(|_| ())
+    }
+
+    /// Push an NNB1/NNB2 image; returns `(version, kind)`.
+    pub fn deploy(&mut self, model: &str, image: &[u8]) -> Result<(u64, String), ServeError> {
+        let mut p = vec![PROTO_VERSION, verb::DEPLOY];
+        put_str(&mut p, model);
+        put_u32(&mut p, image.len() as u32);
+        p.extend_from_slice(image);
+        let body = self.request(&p)?;
+        let s = Wire::new(&body).str_()?;
+        let j = Json::parse(&s).map_err(ServeError::Protocol)?;
+        let version = j
+            .get("version")
+            .as_usize()
+            .ok_or_else(|| ServeError::Protocol("deploy reply missing version".to_string()))?;
+        let kind = j.get("kind").as_str().unwrap_or("?").to_string();
+        Ok((version as u64, kind))
+    }
+
+    pub fn undeploy(&mut self, model: &str) -> Result<(), ServeError> {
+        let mut p = vec![PROTO_VERSION, verb::UNDEPLOY];
+        put_str(&mut p, model);
+        self.request(&p).map(|_| ())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::tests::affine_plan;
+
+    fn registry_with(names: &[(&str, &[f32])]) -> Arc<Registry> {
+        let reg = Arc::new(Registry::new(ServeConfig::default()));
+        for (n, w) in names {
+            reg.deploy(n, affine_plan(w), "f32");
+        }
+        reg
+    }
+
+    #[test]
+    fn wire_tensor_roundtrip() {
+        let a = NdArray::from_slice(&[2, 3], &[1., -2., 3.5, 0., 5., -6.25]);
+        let mut buf = Vec::new();
+        put_tensor(&mut buf, &a);
+        let b = Wire::new(&buf).tensor().unwrap();
+        assert_eq!(a.dims(), b.dims());
+        assert_eq!(a.data(), b.data());
+    }
+
+    #[test]
+    fn wire_rejects_hostile_tensors() {
+        // rank 0
+        assert!(Wire::new(&[0u8]).tensor().is_err());
+        // dim product overflowing the frame cap must fail before allocating
+        let mut buf = vec![2u8];
+        put_u32(&mut buf, u32::MAX);
+        put_u32(&mut buf, u32::MAX);
+        let err = Wire::new(&buf).tensor().unwrap_err();
+        assert!(matches!(err, ServeError::Protocol(_)), "{err}");
+        // truncated data
+        let mut buf = vec![1u8];
+        put_u32(&mut buf, 4);
+        buf.extend_from_slice(&1.0f32.to_le_bytes()); // 1 of 4 values
+        assert!(Wire::new(&buf).tensor().is_err());
+    }
+
+    #[test]
+    fn registry_swap_is_versioned_and_atomic_to_observers() {
+        let reg = registry_with(&[("m", &[1., 0., 0., 0., 1., 0.])]);
+        assert_eq!(reg.version("m"), Some(1));
+        let x = NdArray::from_slice(&[1, 2], &[3., 4.]);
+        assert_eq!(reg.infer("m", vec![x.clone()]).unwrap()[0].data()[0], 3.);
+        // hot swap to a doubled weight matrix
+        let v = reg.deploy("m", affine_plan(&[2., 0., 0., 0., 2., 0.]), "f32");
+        assert_eq!(v, 2);
+        assert_eq!(reg.version("m"), Some(2));
+        assert_eq!(reg.infer("m", vec![x]).unwrap()[0].data()[0], 6.);
+        let stats = reg.stats_json();
+        assert_eq!(stats.get("m").get("swaps").as_usize(), Some(1));
+        assert_eq!(stats.get("m").get("requests").as_usize(), Some(2));
+    }
+
+    #[test]
+    fn registry_miss_is_typed() {
+        let reg = registry_with(&[]);
+        let err = reg.infer("ghost", vec![]).unwrap_err();
+        assert_eq!(err, ServeError::NoSuchModel("ghost".to_string()));
+        assert!(!reg.remove("ghost"));
+    }
+
+    #[test]
+    fn binary_frames_reject_bad_version_and_verb() {
+        let reg = registry_with(&[]);
+        let resp = handle_binary(&reg, &[9, verb::PING], true);
+        assert_eq!(resp[1], ServeError::Protocol(String::new()).code());
+        let resp = handle_binary(&reg, &[PROTO_VERSION, 200], true);
+        assert_eq!(resp[1], 6);
+        // truncated INFER must come back as a typed protocol error
+        let resp = handle_binary(&reg, &[PROTO_VERSION, verb::INFER, 1], true);
+        assert_eq!(resp[1], 6);
+    }
+
+    #[test]
+    fn json_line_protocol_infer_and_errors() {
+        let reg = registry_with(&[("m", &[1., 0., 0., 0., 1., 0.])]);
+        let ok = handle_json_line(
+            &reg,
+            r#"{"verb":"infer","model":"m","inputs":[{"dims":[1,2],"data":[7.0,-1.0]}]}"#,
+        );
+        assert_eq!(ok.get("ok").as_bool(), Some(true));
+        let out = &ok.get("outputs").as_arr().unwrap()[0];
+        assert_eq!(out.get("dims").usize_arr().unwrap(), vec![1, 3]);
+        assert_eq!(out.get("data").as_arr().unwrap()[0].as_f64(), Some(7.0));
+
+        let miss = handle_json_line(
+            &reg,
+            r#"{"verb":"infer","model":"ghost","inputs":[{"dims":[1,2],"data":[0,0]}]}"#,
+        );
+        assert_eq!(miss.get("ok").as_bool(), Some(false));
+        assert_eq!(miss.get("error").as_str(), Some("no_such_model"));
+
+        let garbage = handle_json_line(&reg, "not json at all");
+        assert_eq!(garbage.get("ok").as_bool(), Some(false));
+        assert_eq!(garbage.get("error").as_str(), Some("protocol"));
+
+        // shape mismatch between dims and data
+        let bad = handle_json_line(
+            &reg,
+            r#"{"verb":"infer","model":"m","inputs":[{"dims":[1,2],"data":[1.0]}]}"#,
+        );
+        assert_eq!(bad.get("error").as_str(), Some("protocol"));
+    }
+
+    #[test]
+    fn deploy_artifact_sniffs_and_rejects() {
+        let reg = registry_with(&[]);
+        let err = reg.deploy_artifact("m", b"definitely not an image").unwrap_err();
+        assert!(matches!(err, ServeError::Protocol(_)), "{err}");
+        // a real NNB1 image deploys as f32
+        let (net, params) = crate::models::zoo::export_eval("mlp", 3);
+        let image = crate::converters::nnb::to_nnb(&net, &params.into_iter().collect::<Vec<_>>());
+        let (v, kind) = reg.deploy_artifact("mlp", &image).unwrap();
+        assert_eq!((v, kind), (1, "f32"));
+        assert!(reg.contains("mlp"));
+    }
+}

@@ -57,7 +57,7 @@ fn microbatched_serving_equals_per_example_execution() {
     let plan = Arc::new(CompiledNet::compile(&net, &params).unwrap());
     let server = Server::start(
         Arc::clone(&plan),
-        ServeConfig { workers: 2, max_batch: 8, max_wait: Duration::from_millis(20) },
+        ServeConfig { workers: 2, max_batch: 8, max_wait: Duration::from_millis(20), queue_cap: 0 },
     );
     assert!(server.batched(), "mlp must be micro-batchable");
 
@@ -82,7 +82,7 @@ fn concurrent_clients_one_server() {
     let plan = Arc::new(CompiledNet::compile(&net, &params).unwrap());
     let server = Server::start(
         Arc::clone(&plan),
-        ServeConfig { workers: 4, max_batch: 8, max_wait: Duration::from_millis(5) },
+        ServeConfig { workers: 4, max_batch: 8, max_wait: Duration::from_millis(5), queue_cap: 0 },
     );
     let mut handles = Vec::new();
     for t in 0..4u64 {

@@ -1,0 +1,396 @@
+//! Serving front-end integration: the TCP binary protocol and JSON
+//! fallback end to end, a multi-model registry hosting f32 and int8
+//! plans in one server process, atomic hot reload under multi-threaded
+//! live load (zero failed requests across N swaps), registry
+//! add/remove/lookup races, and typed load shedding. This is the
+//! suite CI runs explicitly under `NNL_THREADS=1`.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+use nnl::models::zoo;
+use nnl::nnp::ir::{Layer, NetworkDef, Op, TensorDef};
+use nnl::nnp::{CompiledNet, InferencePlan};
+use nnl::quant::{quantize_net, QuantConfig};
+use nnl::serve::net::{NetClient, NetConfig, NetServer, Registry};
+use nnl::serve::{ServeConfig, ServeError};
+use nnl::tensor::{NdArray, Rng};
+
+/// `y = x @ W` on a `[1, 2] -> [1, 3]` affine — cheap, batchable, and
+/// with weights distinguishable per model version.
+fn affine_plan(w: &[f32]) -> Arc<CompiledNet> {
+    let net = NetworkDef {
+        name: "affine".into(),
+        inputs: vec![TensorDef { name: "x".into(), dims: vec![1, 2] }],
+        outputs: vec!["y".into()],
+        layers: vec![Layer {
+            name: "fc".into(),
+            op: Op::Affine,
+            inputs: vec!["x".into()],
+            params: vec!["W".into()],
+            outputs: vec!["y".into()],
+        }],
+    };
+    let mut params = HashMap::new();
+    params.insert("W".to_string(), NdArray::from_slice(&[2, 3], w));
+    Arc::new(CompiledNet::compile(&net, &params).unwrap())
+}
+
+/// A scaled identity-ish weight matrix: output[0] = scale * input[0],
+/// so a response identifies which deployed version served it.
+fn scaled_plan(scale: f32) -> Arc<CompiledNet> {
+    affine_plan(&[scale, 0., 0., 0., scale, 0.])
+}
+
+fn bind_test_server(registry: Arc<Registry>) -> NetServer {
+    NetServer::bind("127.0.0.1:0", registry, NetConfig::default())
+        .expect("binding an ephemeral loopback port")
+}
+
+#[test]
+fn binary_protocol_serves_f32_and_int8_models_in_one_process() {
+    // one server process, two models: the zoo MLP as f32 and the same
+    // net quantized to int8 (the ISSUE acceptance scenario)
+    let (net, params) = zoo::export_eval("mlp", 21);
+    let plan = Arc::new(CompiledNet::compile(&net, &params).unwrap());
+    let mut rng = Rng::new(4);
+    let samples: Vec<Vec<NdArray>> = (0..16).map(|_| vec![rng.rand(&[1, 64], -1.0, 1.0)]).collect();
+    let (_, qnet) = quantize_net(&net, &params, &samples, &QuantConfig::default()).unwrap();
+    let qnet = Arc::new(qnet);
+
+    let registry = Arc::new(Registry::new(ServeConfig::default()));
+    registry.deploy("mlp_f32", Arc::clone(&plan), "f32");
+    registry.deploy("mlp_int8", Arc::clone(&qnet), "int8");
+    let server = bind_test_server(Arc::clone(&registry));
+
+    let mut client = NetClient::connect(server.local_addr()).unwrap();
+    client.ping().unwrap();
+
+    // LIST sees both models with their kinds and input signatures
+    let list = client.list().unwrap();
+    let rows = list.as_arr().unwrap();
+    assert_eq!(rows.len(), 2);
+    let kinds: Vec<(&str, &str)> = rows
+        .iter()
+        .map(|r| (r.get("name").as_str().unwrap(), r.get("kind").as_str().unwrap()))
+        .collect();
+    assert_eq!(kinds, vec![("mlp_f32", "f32"), ("mlp_int8", "int8")]);
+    let dims = rows[0].get("inputs").as_arr().unwrap()[0].get("dims").usize_arr();
+    assert_eq!(dims, Some(vec![1, 64]));
+
+    // wire INFER matches direct plan execution exactly, per backend
+    let x = rng.rand(&[1, 64], -1.0, 1.0);
+    let got = client.infer("mlp_f32", std::slice::from_ref(&x)).unwrap();
+    let want = plan.execute_positional(std::slice::from_ref(&x)).unwrap();
+    assert_eq!(got[0].dims(), want[0].dims());
+    assert_eq!(got[0].data(), want[0].data());
+
+    let got_q = client.infer("mlp_int8", std::slice::from_ref(&x)).unwrap();
+    let want_q = qnet.execute_positional(std::slice::from_ref(&x)).unwrap();
+    assert_eq!(got_q[0].data(), want_q[0].data());
+
+    // STATS reports both models with live counters
+    let stats = client.stats().unwrap();
+    assert_eq!(stats.get("mlp_f32").get("requests").as_usize(), Some(1));
+    assert_eq!(stats.get("mlp_f32").get("kind").as_str(), Some("f32"));
+    assert_eq!(stats.get("mlp_int8").get("kind").as_str(), Some("int8"));
+    assert!(stats.get("mlp_f32").get("p50_ms").as_f64().unwrap() > 0.0);
+
+    // typed miss for an unknown model
+    let err = client.infer("ghost", std::slice::from_ref(&x)).unwrap_err();
+    assert!(matches!(err, ServeError::NoSuchModel(_)), "{err}");
+    server.shutdown();
+}
+
+#[test]
+fn hot_swap_under_live_load_never_fails_a_request() {
+    // 4 client threads hammer one model over TCP while the main thread
+    // hot-swaps the plan 5 times; every reply must be a correct output
+    // of SOME deployed version — never an error, never a gap
+    const SWAPS: u64 = 5;
+    const CLIENTS: usize = 4;
+    let scales: Vec<f32> = (0..=SWAPS).map(|v| (v + 1) as f32).collect();
+
+    let registry = Arc::new(Registry::new(ServeConfig {
+        workers: 2,
+        max_batch: 4,
+        max_wait: Duration::from_millis(1),
+        queue_cap: 256,
+    }));
+    registry.deploy("m", scaled_plan(scales[0]), "f32");
+    let server = bind_test_server(Arc::clone(&registry));
+    let addr = server.local_addr();
+
+    let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let valid: Arc<Vec<f32>> = Arc::new(scales.clone());
+    let clients: Vec<_> = (0..CLIENTS)
+        .map(|c| {
+            let stop = Arc::clone(&stop);
+            let valid = Arc::clone(&valid);
+            std::thread::spawn(move || {
+                let mut cli = NetClient::connect(addr).expect("client connect");
+                let mut served = 0u64;
+                let mut i = 0f32;
+                while !stop.load(std::sync::atomic::Ordering::SeqCst) {
+                    i += 1.0;
+                    let probe = i + c as f32 / 8.0;
+                    let x = NdArray::from_slice(&[1, 2], &[probe, 0.0]);
+                    let out = cli
+                        .infer("m", std::slice::from_ref(&x))
+                        .expect("no request may fail across a hot swap");
+                    let y = out[0].data()[0];
+                    assert!(
+                        valid.iter().any(|s| (y - s * probe).abs() < 1e-4),
+                        "response {y} matches no deployed version for input {probe}"
+                    );
+                    served += 1;
+                }
+                served
+            })
+        })
+        .collect();
+
+    // let traffic establish, then swap repeatedly under load
+    std::thread::sleep(Duration::from_millis(30));
+    for v in 1..=SWAPS {
+        let version = registry.deploy("m", scaled_plan(scales[v as usize]), "f32");
+        assert_eq!(version, v + 1);
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    stop.store(true, std::sync::atomic::Ordering::SeqCst);
+    let total: u64 = clients.into_iter().map(|h| h.join().expect("client thread")).sum();
+    assert!(total > 0, "load generator never got a request through");
+
+    // after the dust settles, a fresh request must see the final version
+    let mut cli = NetClient::connect(addr).unwrap();
+    let x = NdArray::from_slice(&[1, 2], &[1.0, 0.0]);
+    let y = cli.infer("m", std::slice::from_ref(&x)).unwrap()[0].data()[0];
+    let last = *scales.last().unwrap();
+    assert!((y - last).abs() < 1e-4, "fresh request saw {y}, want {last}");
+
+    let stats = cli.stats().unwrap();
+    assert_eq!(stats.get("m").get("swaps").as_usize(), Some(SWAPS as usize));
+    assert_eq!(stats.get("m").get("errors").as_usize(), Some(0));
+    assert_eq!(stats.get("m").get("version").as_usize(), Some((SWAPS + 1) as usize));
+    assert!(stats.get("m").get("requests").as_usize().unwrap() as u64 >= total);
+    server.shutdown();
+}
+
+#[test]
+fn registry_add_remove_lookup_races_stay_typed() {
+    // threads concurrently deploy, remove, and infer against the same
+    // names: every observable outcome must be a success or a typed
+    // error — no panics, no hangs
+    let registry = Arc::new(Registry::new(ServeConfig::default()));
+    registry.deploy("stable", scaled_plan(1.0), "f32");
+
+    let churn = {
+        let registry = Arc::clone(&registry);
+        std::thread::spawn(move || {
+            for round in 0..20 {
+                registry.deploy("flicker", scaled_plan(round as f32 + 1.0), "f32");
+                std::thread::sleep(Duration::from_millis(1));
+                registry.remove("flicker");
+            }
+        })
+    };
+    let readers: Vec<_> = (0..3)
+        .map(|_| {
+            let registry = Arc::clone(&registry);
+            std::thread::spawn(move || {
+                let x = NdArray::from_slice(&[1, 2], &[2.0, 0.0]);
+                let (mut hits, mut misses) = (0u32, 0u32);
+                for _ in 0..200 {
+                    match registry.infer("flicker", vec![x.clone()]) {
+                        Ok(out) => {
+                            assert_eq!(out[0].dims(), &[1, 3]);
+                            hits += 1;
+                        }
+                        Err(ServeError::NoSuchModel(name)) => {
+                            assert_eq!(name, "flicker");
+                            misses += 1;
+                        }
+                        Err(other) => panic!("unexpected error under churn: {other}"),
+                    }
+                    // the stable model must never be disturbed by churn
+                    let y = registry.infer("stable", vec![x.clone()]).unwrap();
+                    assert_eq!(y[0].data()[0], 2.0);
+                }
+                (hits, misses)
+            })
+        })
+        .collect();
+    churn.join().expect("churn thread");
+    let (mut hits, mut misses) = (0u32, 0u32);
+    for h in readers {
+        let (a, b) = h.join().expect("reader thread");
+        hits += a;
+        misses += b;
+    }
+    // every probe resolved to exactly one typed outcome
+    assert_eq!(hits + misses, 600);
+    // after the churn ends, the removal is the deterministic state
+    assert!(!registry.contains("flicker"));
+    let err = registry.infer("flicker", vec![NdArray::zeros(&[1, 2])]).unwrap_err();
+    assert_eq!(err, ServeError::NoSuchModel("flicker".to_string()));
+    assert!(registry.contains("stable"));
+}
+
+/// An [`InferencePlan`] that sleeps per request — external impls of
+/// the public trait must work (defaulted `peak_arena_bytes`), and a
+/// slow plan is how the wire-level shed path is forced
+/// deterministically.
+struct SlowPlan {
+    inner: Arc<CompiledNet>,
+    delay: Duration,
+}
+
+impl InferencePlan for SlowPlan {
+    fn name(&self) -> &str {
+        self.inner.name()
+    }
+    fn inputs(&self) -> &[TensorDef] {
+        self.inner.inputs()
+    }
+    fn outputs(&self) -> &[String] {
+        self.inner.outputs()
+    }
+    fn n_steps(&self) -> usize {
+        self.inner.n_steps()
+    }
+    fn check_inputs(&self, inputs: &[NdArray]) -> Result<usize, String> {
+        self.inner.check_inputs(inputs)
+    }
+    fn execute_positional(&self, inputs: &[NdArray]) -> Result<Vec<NdArray>, String> {
+        std::thread::sleep(self.delay);
+        self.inner.execute_positional(inputs)
+    }
+    fn batch_invariant(&self) -> bool {
+        false
+    }
+}
+
+#[test]
+fn full_queue_sheds_over_the_wire_with_typed_replies() {
+    let registry = Arc::new(Registry::new(ServeConfig {
+        workers: 1,
+        max_batch: 1,
+        max_wait: Duration::from_millis(1),
+        queue_cap: 2,
+    }));
+    let slow = SlowPlan { inner: scaled_plan(1.0), delay: Duration::from_millis(60) };
+    registry.deploy("slow", Arc::new(slow), "f32");
+    let server = bind_test_server(Arc::clone(&registry));
+    let addr = server.local_addr();
+
+    // a burst of concurrent connections: the 2-slot queue + 1 worker
+    // must shed some and answer the rest correctly
+    let handles: Vec<_> = (0..10)
+        .map(|i| {
+            std::thread::spawn(move || {
+                let mut cli = NetClient::connect(addr).expect("connect");
+                let x = NdArray::from_slice(&[1, 2], &[i as f32, 0.0]);
+                match cli.infer("slow", std::slice::from_ref(&x)) {
+                    Ok(out) => {
+                        assert_eq!(out[0].data()[0], i as f32);
+                        (1u32, 0u32)
+                    }
+                    Err(ServeError::Overloaded { .. }) => (0, 1),
+                    Err(other) => panic!("expected Overloaded, got: {other}"),
+                }
+            })
+        })
+        .collect();
+    let (mut ok, mut shed) = (0u32, 0u32);
+    for h in handles {
+        let (a, b) = h.join().expect("burst client");
+        ok += a;
+        shed += b;
+    }
+    assert_eq!(ok + shed, 10);
+    assert!(shed >= 1, "a 2-slot queue under a 10-way burst must shed");
+    assert!(ok >= 1, "admission control must not starve everything");
+
+    let mut cli = NetClient::connect(addr).unwrap();
+    let stats = cli.stats().unwrap();
+    assert_eq!(stats.get("slow").get("shed").as_usize(), Some(shed as usize));
+    assert_eq!(stats.get("slow").get("queue_cap").as_usize(), Some(2));
+    server.shutdown();
+}
+
+#[test]
+fn json_fallback_speaks_whole_sessions_over_tcp() {
+    use std::io::{BufRead, BufReader, Write};
+
+    let registry = Arc::new(Registry::new(ServeConfig::default()));
+    registry.deploy("m", scaled_plan(3.0), "f32");
+    let server = bind_test_server(Arc::clone(&registry));
+
+    // a raw socket speaking newline-delimited JSON — no NetClient
+    let stream = std::net::TcpStream::connect(server.local_addr()).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut write = stream;
+    let mut ask = |req: &str| -> String {
+        write.write_all(req.as_bytes()).unwrap();
+        write.write_all(b"\n").unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        line
+    };
+
+    let line = ask(r#"{"verb":"infer","model":"m","inputs":[{"dims":[1,2],"data":[2.0,0.0]}]}"#);
+    assert!(line.contains("\"ok\":true"), "{line}");
+    assert!(line.contains('6'), "3.0 * 2.0 must appear in {line}");
+
+    let line = ask(r#"{"verb":"list"}"#);
+    assert!(line.contains("\"m\""), "{line}");
+
+    let line = ask(r#"{"verb":"infer","model":"ghost","inputs":[]}"#);
+    assert!(line.contains("\"ok\":false"), "{line}");
+    assert!(line.contains("no_such_model"), "{line}");
+
+    // hostile garbage gets a typed protocol error, not a dropped conn
+    let line = ask(r#"{"verb":"infer","model":"m","inputs":[{"dims":[1,2],"data":[1.0]}]}"#);
+    assert!(line.contains("\"ok\":false"), "{line}");
+    assert!(line.contains("protocol"), "{line}");
+
+    // the session keeps working after errors
+    let line = ask(r#"{"verb":"ping"}"#);
+    assert!(line.contains("\"ok\":true"), "{line}");
+    server.shutdown();
+}
+
+#[test]
+fn wire_deploy_and_undeploy_roundtrip() {
+    // DEPLOY an NNB1 image over the wire, infer against it, swap it
+    // with a second DEPLOY (version bumps), then UNDEPLOY
+    let registry = Arc::new(Registry::new(ServeConfig::default()));
+    let server = bind_test_server(Arc::clone(&registry));
+    let mut client = NetClient::connect(server.local_addr()).unwrap();
+    // pin the connection to binary mode before the first DEPLOY frame:
+    // mode is sniffed from the first byte, and a DEPLOY frame's length
+    // prefix depends on the artifact size
+    client.ping().unwrap();
+
+    let (net, params) = zoo::export_eval("mlp", 33);
+    let image = nnl::converters::nnb::to_nnb(&net, &params.into_iter().collect::<Vec<_>>());
+    let (v1, kind) = client.deploy("wired", &image).unwrap();
+    assert_eq!((v1, kind.as_str()), (1, "f32"));
+
+    let mut rng = Rng::new(8);
+    let x = rng.rand(&[1, 64], -1.0, 1.0);
+    let out = client.infer("wired", std::slice::from_ref(&x)).unwrap();
+    assert_eq!(out[0].dims(), &[1, 10]);
+
+    let (v2, _) = client.deploy("wired", &image).unwrap();
+    assert_eq!(v2, 2, "re-deploy must hot-swap, not reset");
+
+    client.undeploy("wired").unwrap();
+    let err = client.infer("wired", std::slice::from_ref(&x)).unwrap_err();
+    assert!(matches!(err, ServeError::NoSuchModel(_)), "{err}");
+    // garbage images are rejected with a typed protocol error
+    let err = client.deploy("bad", b"not an artifact").unwrap_err();
+    assert!(matches!(err, ServeError::Protocol(_)), "{err}");
+    server.shutdown();
+}
