@@ -68,7 +68,7 @@ pub fn run(quick: bool) -> QuantBenchReport {
         parallel::with_thread_limit(1, || std::hint::black_box(ops::matmul(&a, &b)));
     });
     let act = ActQuant::from_range(-1.0, 1.0);
-    let qt = QTensor::quantize(&b, 1);
+    let qt = QTensor::quantize(&b, 1).expect("bench weight axis in range");
     let wq = QMatB::from_i8_kn(&qt.data, &qt.scales, mm, mm);
     let combined: Vec<f32> = wq.scales().iter().map(|s| s * act.scale).collect();
     let int8_call = || {

@@ -128,6 +128,26 @@
 //! `nnl serve --listen ADDR --models name=path,...` and
 //! `nnl bench-serve --net` (→ `BENCH_serve.json`).
 //!
+//! ## Static verification: the checker beside the compiler
+//!
+//! [`nnp::verify`] is an independent verifier for everything the
+//! compiler and server otherwise trust. It re-infers every tensor
+//! shape over a [`nnp::NetworkDef`] (separately from the compiler's
+//! own inference, so the two cross-check), emitting structured
+//! [`nnp::verify::Diagnostic`]s with stable `NNL-Exxx`/`Wxxx` codes —
+//! shape/arity errors, unreachable subgraphs, unused parameters,
+//! batch-variant and quantization-hostile ops. A second layer does
+//! **translation validation**: [`nnp::verify::verify_plan`] re-derives
+//! liveness from a compiled plan's scheduled steps and proves the
+//! static memory plan safe (`NNL-P00x` codes), running after every
+//! `CompiledNet::compile` in debug builds and after *each* pass under
+//! `PassManager::run_verified`, so a broken pass is named directly.
+//! The wire `DEPLOY` path runs the artifact checker before any hot
+//! swap; `tests/verify_static.rs` fuzzes it with bit-flipped and
+//! truncated images; `tests/loom_models.rs` model-checks the serve
+//! queue, hot-swap, and worker-pool protocols under loom. CLI:
+//! `nnl check` (`--json` for machines) and `nnl optimize --verify`.
+//!
 //! ## Module map
 //!
 //! ## The compute floor: tiled, multi-threaded kernels
@@ -165,6 +185,7 @@
 //! | [`trainer`] | dynamic / static / distributed training loops |
 //! | [`nnp`] | NNP format: IR, trace, archive, interpreter, **plan** |
 //! | [`nnp::passes`] | graph optimizer: `Pass` pipeline, memory planner |
+//! | [`nnp::verify`] | static verifier: diagnostics, translation validation |
 //! | [`quant`] | int8 calibration, `QuantizedNet`, NNB2 model |
 //! | [`serve`] | batched multi-threaded inference server |
 //! | [`serve::net`] | TCP front end: protocol, registry, hot reload |

@@ -37,10 +37,17 @@ USAGE:
             # samples, write an NNB2 artifact (int8 weights + scales),
             # report size vs NNB1 and fp32-vs-int8 top-1 agreement
   nnl query --in model.nnp [--target onnx|nnb|frozen|rs_source]
-  nnl optimize --in model.nnp [--network NAME] [--opt 0|1|2]
+  nnl check --in model.nnp|model.nnb|model.nnb2 | --model NAME [--network NAME] [--json]
+            # static verification: full shape inference + lints
+            # (NNL-Exxx errors, NNL-Wxxx warnings) and translation
+            # validation of the compiled plan at O0/O1/O2 (NNL-Pxxx);
+            # exits non-zero when any error is found
+  nnl optimize --in model.nnp [--network NAME] [--opt 0|1|2] [--verify]
             # inspect the compile-time graph optimizer: per-pass
             # rewrite stats, op histogram and step count before/after,
-            # static-plan peak arena bytes before/after
+            # static-plan peak arena bytes before/after; --verify
+            # re-checks every graph invariant after each pass and
+            # names the pass that broke one
   nnl serve --in model.nnp|model.nnb|model.nnb2 [--workers N]
             [--max-batch B] [--max-wait-ms MS] [--queue-cap N]
             # compile once, then serve stdin requests (one line of
@@ -393,6 +400,13 @@ fn main() {
                 None => OptLevel::default(),
             };
             let pm = nnp.param_map();
+            if flags.contains_key("verify") {
+                // run the pipeline under per-pass translation
+                // validation: the first invariant-breaking pass is
+                // named in the error
+                die(passes::optimize_verified(net, &pm, level), "per-pass verification");
+                println!("per-pass verification passed at {}", level.name());
+            }
             let before = die(
                 CompiledNet::compile_with(net, &pm, OptLevel::O0),
                 "compiling O0 plan",
@@ -519,6 +533,30 @@ fn main() {
                 samples.len(),
             );
         }
+        "check" => {
+            let json = flags.contains_key("json");
+            if let Some(model) = flags.get("model") {
+                // in-memory zoo check — the CI smoke path needs no
+                // artifact on disk
+                if !zoo::has_model(model) {
+                    eprintln!(
+                        "unknown model '{model}' (available: {:?})",
+                        zoo::model_names()
+                    );
+                    std::process::exit(1);
+                }
+                let (net, params) = zoo::export_eval(model, 11);
+                let report = nnl::nnp::verify::check_model(&net, &params);
+                finish_check(vec![(model.clone(), report)], json);
+            } else {
+                let input = PathBuf::from(
+                    flags
+                        .get("in")
+                        .expect("--in model.nnp|.nnb|.nnb2 or --model NAME required"),
+                );
+                check_cmd(&input, flags.get("network").map(String::as_str), json);
+            }
+        }
         "search" => {
             let data = SyntheticImages::new(10, 1, 8, 16, 1);
             let space = SearchSpace::default();
@@ -563,6 +601,69 @@ fn die<T>(r: Result<T, String>, what: &str) -> T {
         eprintln!("{what}: {e}");
         std::process::exit(1);
     })
+}
+
+/// `nnl check`: static verification of an artifact. NNB/NNB2 images
+/// (sniffed by magic) run [`nnl::nnp::verify::check_artifact`]; `.nnp`
+/// archives verify every network (or just `--network`). Exits 1 when
+/// any error-severity diagnostic is found; warnings alone exit 0.
+fn check_cmd(path: &Path, network: Option<&str>, json: bool) {
+    use nnl::nnp::verify;
+    use std::io::Read;
+
+    let mut magic = [0u8; 4];
+    let is_nnb = std::fs::File::open(path).and_then(|mut f| f.read_exact(&mut magic)).is_ok()
+        && (&magic == b"NNB1" || &magic == b"NNB2");
+
+    let mut reports: Vec<(String, verify::Report)> = Vec::new();
+    if is_nnb {
+        let bytes = std::fs::read(path).expect("reading model file");
+        let report = die(verify::check_artifact(&bytes), "decoding NNB image");
+        reports.push((path.display().to_string(), report));
+    } else {
+        let nnp = die(Nnp::load(path), "loading NNP");
+        let pm = nnp.param_map();
+        let nets: Vec<&nnl::nnp::NetworkDef> = match network {
+            Some(n) => vec![nnp.network(n).unwrap_or_else(|| {
+                eprintln!("no network '{n}' in {}", path.display());
+                std::process::exit(1);
+            })],
+            None => nnp.networks.iter().collect(),
+        };
+        if nets.is_empty() {
+            eprintln!("NNP holds no networks");
+            std::process::exit(1);
+        }
+        for net in nets {
+            reports.push((net.name.clone(), verify::check_model(net, &pm)));
+        }
+    }
+
+    finish_check(reports, json);
+}
+
+/// Print `nnl check` reports (human or `--json`) and exit 1 when any
+/// error-severity diagnostic is present; warnings alone exit 0.
+fn finish_check(reports: Vec<(String, nnl::nnp::verify::Report)>, json: bool) {
+    use nnl::utils::json::Json;
+    let any_errors = reports.iter().any(|(_, r)| r.has_errors());
+    if json {
+        let obj =
+            Json::obj(reports.iter().map(|(n, r)| (n.as_str(), r.to_json())).collect());
+        println!("{}", obj.to_string_pretty());
+    } else {
+        for (name, r) in &reports {
+            if r.is_clean() {
+                println!("'{name}': clean (0 errors, 0 warnings)");
+            } else {
+                println!("'{name}':");
+                println!("{}", r.render_human());
+            }
+        }
+    }
+    if any_errors {
+        std::process::exit(1);
+    }
 }
 
 /// Exit with a clean message on an unknown model or solver name —

@@ -591,12 +591,15 @@ fn check_pool_geometry(
         return Err(format!("{name}: stride {stride:?} must be non-zero"));
     }
     let (h, w) = (dims[2], dims[3]);
-    if kernel.0 > h + 2 * pad.0 || kernel.1 > w + 2 * pad.1 {
-        return Err(format!(
+    // checked: `input + 2·pad` can overflow on untrusted declared dims
+    let padded_h = pad.0.checked_mul(2).and_then(|p| h.checked_add(p));
+    let padded_w = pad.1.checked_mul(2).and_then(|p| w.checked_add(p));
+    match (padded_h, padded_w) {
+        (Some(ph), Some(pw)) if kernel.0 <= ph && kernel.1 <= pw => Ok(()),
+        _ => Err(format!(
             "{name}: kernel {kernel:?} larger than padded input {h}x{w} (pad {pad:?})"
-        ));
+        )),
     }
-    Ok(())
 }
 
 /// Validate convolution geometry against concrete shapes before the
@@ -672,8 +675,17 @@ pub(crate) fn check_deconv_geometry(
     if h == 0 || w == 0 {
         return Err(format!("Deconvolution: empty spatial input {h}x{w}"));
     }
-    let oh = ((h - 1) * stride.0 + w_dims[2]).checked_sub(2 * pad.0).filter(|&v| v > 0);
-    let ow = ((w - 1) * stride.1 + w_dims[3]).checked_sub(2 * pad.1).filter(|&v| v > 0);
+    // checked end to end: `(h-1)·stride + kernel - 2·pad` over
+    // untrusted declared dims must report, not overflow
+    let grown = |extent: usize, s: usize, k: usize, p: usize| {
+        (extent - 1)
+            .checked_mul(s)
+            .and_then(|v| v.checked_add(k))
+            .and_then(|v| v.checked_sub(p.checked_mul(2)?))
+            .filter(|&v| v > 0)
+    };
+    let oh = grown(h, stride.0, w_dims[2], pad.0);
+    let ow = grown(w, stride.1, w_dims[3], pad.1);
     if oh.is_none() || ow.is_none() {
         return Err(format!(
             "Deconvolution: pad {pad:?} swallows the whole output for {h}x{w} input \

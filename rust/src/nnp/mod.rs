@@ -18,11 +18,13 @@ pub mod params;
 pub mod passes;
 pub mod plan;
 pub mod trace;
+pub mod verify;
 
 pub use ir::{Layer, NetworkDef, Op, TensorDef};
 pub use passes::{OptLevel, PassStat};
 pub use plan::{CompiledNet, InferencePlan};
 pub use trace::trace;
+pub use verify::{Diagnostic, Report, Severity};
 
 use crate::tensor::NdArray;
 use std::collections::HashMap;

@@ -67,6 +67,17 @@
 //!
 //! Then register it in [`PassManager::for_level`] at the right level:
 //! O1 if the rewrite is bit-identical, O2 if it re-associates floats.
+//!
+//! While developing a pass, run the pipeline through
+//! [`PassManager::run_verified`] instead of [`PassManager::run`]: after
+//! *each* pass it re-validates the IR contract and re-runs the full
+//! static verifier ([`crate::nnp::verify::verify_network`]) over the
+//! rewritten module, so the first pass that breaks an invariant —
+//! dangling tensor reads, arity violations, shape disagreements — is
+//! named in the error instead of surfacing later as a mysterious
+//! compile or runtime failure. `nnl optimize --verify` and the debug
+//! translation-validation hook in [`crate::nnp::CompiledNet`] lean on
+//! the same machinery.
 
 mod bn_fold;
 mod const_fold;
@@ -217,6 +228,42 @@ impl PassManager {
         }
         Ok(stats)
     }
+
+    /// [`PassManager::run`] with per-pass translation validation: after
+    /// each pass the module is re-checked against the IR contract
+    /// ([`NetworkDef::validate`]) *and* the full static verifier
+    /// ([`crate::nnp::verify::verify_network`]). The first pass that
+    /// breaks an invariant is named in the error — this is the
+    /// bisection mode for debugging a new or misbehaving pass.
+    pub fn run_verified(&self, m: &mut Module) -> Result<Vec<PassStat>, String> {
+        m.net.validate()?;
+        let baseline = crate::nnp::verify::verify_network(&m.net, &m.params);
+        if baseline.has_errors() {
+            return Err(format!(
+                "module fails verification before any pass runs:\n{}",
+                baseline.render_human()
+            ));
+        }
+        let mut stats = Vec::with_capacity(self.passes.len());
+        for p in &self.passes {
+            let rewrites = p
+                .run(m)
+                .map_err(|e| format!("pass '{}' failed: {e}", p.name()))?;
+            stats.push(PassStat { pass: p.name(), rewrites });
+            if let Err(e) = m.net.validate() {
+                return Err(format!("pass '{}' broke the IR contract: {e}", p.name()));
+            }
+            let report = crate::nnp::verify::verify_network(&m.net, &m.params);
+            if report.has_errors() {
+                return Err(format!(
+                    "pass '{}' broke a graph invariant:\n{}",
+                    p.name(),
+                    report.render_human()
+                ));
+            }
+        }
+        Ok(stats)
+    }
 }
 
 /// Run the standard pipeline for `level` on a copy of `net`/`params`.
@@ -231,6 +278,20 @@ pub fn optimize(
 ) -> Result<(NetworkDef, HashMap<String, NdArray>, Vec<PassStat>), String> {
     let mut m = Module { net: net.clone(), params: params.clone() };
     let stats = PassManager::for_level(level).run(&mut m)?;
+    Ok((m.net, m.params, stats))
+}
+
+/// [`optimize`] under [`PassManager::run_verified`]: every pass is
+/// followed by a full re-verification of the rewritten module, and an
+/// invariant-breaking pass is named in the error. Slower — meant for
+/// `nnl optimize --verify` and pass development, not the serving path.
+pub fn optimize_verified(
+    net: &NetworkDef,
+    params: &HashMap<String, NdArray>,
+    level: OptLevel,
+) -> Result<(NetworkDef, HashMap<String, NdArray>, Vec<PassStat>), String> {
+    let mut m = Module { net: net.clone(), params: params.clone() };
+    let stats = PassManager::for_level(level).run_verified(&mut m)?;
     Ok((m.net, m.params, stats))
 }
 
@@ -320,6 +381,63 @@ mod tests {
         let (twice, _, stats) = optimize(&once, &p1, OptLevel::O2).unwrap();
         assert_eq!(once, twice);
         assert!(stats.iter().all(|s| s.rewrites == 0), "{stats:?}");
+    }
+
+    #[test]
+    fn run_verified_matches_run_on_sound_passes() {
+        let (net, params) = chain_net();
+        let (plain, _, _) = optimize(&net, &params, OptLevel::O2).unwrap();
+        let (checked, _, stats) = optimize_verified(&net, &params, OptLevel::O2).unwrap();
+        assert_eq!(plain, checked);
+        assert!(!stats.is_empty());
+    }
+
+    #[test]
+    fn run_verified_names_the_breaking_pass() {
+        // a pass that rewires a layer to read a tensor that no longer
+        // exists — validate() catches it right after this pass runs
+        struct BreakGraph;
+        impl Pass for BreakGraph {
+            fn name(&self) -> &'static str {
+                "break-graph"
+            }
+            fn run(&self, m: &mut Module) -> Result<usize, String> {
+                m.net.layers[0].inputs[0] = "ghost".into();
+                Ok(1)
+            }
+        }
+        let (net, params) = chain_net();
+        let mut m = Module { net, params };
+        let mut pm = PassManager::empty();
+        pm.push(Box::new(ElideNoops));
+        pm.push(Box::new(BreakGraph));
+        let err = pm.run_verified(&mut m).unwrap_err();
+        assert!(err.contains("break-graph"), "{err}");
+        // the sound pass before it is not blamed
+        assert!(!err.contains("elide-noops"), "{err}");
+    }
+
+    #[test]
+    fn run_verified_catches_shape_invariant_breaks() {
+        // validate() cannot see shapes — a pass that resizes a weight
+        // is only caught by the static verifier layer
+        struct ShrinkWeight;
+        impl Pass for ShrinkWeight {
+            fn name(&self) -> &'static str {
+                "shrink-weight"
+            }
+            fn run(&self, m: &mut Module) -> Result<usize, String> {
+                m.params.insert("W".to_string(), NdArray::zeros(&[2, 2]));
+                Ok(1)
+            }
+        }
+        let (net, params) = chain_net();
+        let mut m = Module { net, params };
+        let mut pm = PassManager::empty();
+        pm.push(Box::new(ShrinkWeight));
+        let err = pm.run_verified(&mut m).unwrap_err();
+        assert!(err.contains("shrink-weight"), "{err}");
+        assert!(err.contains("NNL-E006"), "{err}");
     }
 
     #[test]

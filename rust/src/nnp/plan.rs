@@ -194,7 +194,7 @@ impl CompiledNet {
         // ---- phase 4: allocate — deferred to the first
         // memory_plan()/peak_arena_bytes() call (needs a dry run)
 
-        Ok(CompiledNet {
+        let plan = CompiledNet {
             name: net_ref.name.clone(),
             inputs: net_ref.inputs.clone(),
             output_names: net_ref.outputs.clone(),
@@ -207,7 +207,42 @@ impl CompiledNet {
             opt,
             pass_stats,
             memory: std::sync::OnceLock::new(),
-        })
+        };
+
+        // ---- translation validation (debug builds): an independent
+        // verifier re-derives liveness from the scheduled steps and
+        // cross-checks the step order and memory plan. A failure here
+        // is a compiler bug, never a user error — release builds skip
+        // the check (and its dry run) entirely.
+        #[cfg(debug_assertions)]
+        {
+            let report = super::verify::verify_plan(&plan);
+            if report.has_errors() {
+                return Err(format!(
+                    "translation validation failed (compiler bug, not a model error):\n{}",
+                    report.render_human()
+                ));
+            }
+        }
+
+        Ok(plan)
+    }
+
+    /// Test-only: mutate the scheduled steps in place (invalidates the
+    /// cached memory plan). The mutation suite uses this to prove the
+    /// verifier rejects corrupted plans.
+    #[cfg(test)]
+    pub(crate) fn mutate_steps(&mut self, f: impl FnOnce(&mut Vec<Step>)) {
+        f(&mut self.steps);
+        self.memory = std::sync::OnceLock::new();
+    }
+
+    /// Test-only: replace the cached memory plan wholesale (seeded
+    /// arena-overlap / out-of-bounds mutants).
+    #[cfg(test)]
+    pub(crate) fn inject_memory_plan(&mut self, m: MemoryPlan) {
+        self.memory = std::sync::OnceLock::new();
+        let _ = self.memory.set(Some(m));
     }
 
     // ------------------------------------------------ quantizer access
@@ -391,9 +426,15 @@ impl CompiledNet {
             let mut xs: Vec<&NdArray> = Vec::with_capacity(st.args.len());
             for a in &st.args {
                 match a {
-                    Src::Act(s) => {
-                        xs.push(env[*s].as_ref().expect("plan liveness invariant broken"))
-                    }
+                    Src::Act(s) => match env[*s].as_ref() {
+                        Some(v) => xs.push(v),
+                        None => {
+                            return Err(format!(
+                                "layer '{}': [NNL-P002] slot '{}' read after its planned free (plan liveness invariant broken)",
+                                st.name, self.slot_names[*s]
+                            ))
+                        }
+                    },
                     Src::Param(i) => xs.push(&self.params[*i]),
                 }
             }
@@ -416,7 +457,12 @@ impl CompiledNet {
                 env[s]
                     .as_ref()
                     .cloned()
-                    .ok_or_else(|| "plan output slot empty (liveness invariant broken)".into())
+                    .ok_or_else(|| {
+                        format!(
+                            "[NNL-P003] output slot '{}' empty (plan liveness invariant broken)",
+                            self.slot_names[s]
+                        )
+                    })
             })
             .collect()
     }

@@ -1,0 +1,1503 @@
+//! Static verification — the `nnl check` analysis layer.
+//!
+//! Two independent verifiers live here:
+//!
+//! 1. **Graph verification** ([`verify_network`]): full shape inference
+//!    over a [`NetworkDef`] with *checked* arithmetic (untrusted
+//!    artifacts must never panic the checker), plus lints for
+//!    unreachable subgraphs, unused parameters, batch-variant ops that
+//!    defeat the serving micro-batcher, and quantization-hostile ops
+//!    that silently fall back to f32.
+//! 2. **Translation validation** ([`verify_plan`]): an independent
+//!    re-derivation of liveness from a compiled plan's scheduled steps
+//!    that proves the step order and the static memory plan safe —
+//!    every slot written before read, never reused while live, no
+//!    overlapping live intervals in the arena, all offsets in bounds.
+//!    It deliberately shares *no* code with the scheduler/allocator it
+//!    checks; it runs after every compile in debug builds and after
+//!    each pass under [`super::passes::PassManager::run_verified`].
+//!
+//! Every diagnostic carries a **stable error code** (asserted by tests
+//! and documented in the README):
+//!
+//! | code | meaning |
+//! |------|---------|
+//! | `NNL-E001` | arity / output-count mismatch |
+//! | `NNL-E002` | read of an undefined tensor |
+//! | `NNL-E003` | cyclic / misordered graph (tensor produced later) |
+//! | `NNL-E004` | duplicate tensor definition |
+//! | `NNL-E005` | declared network output never produced |
+//! | `NNL-E006` | shape inference failure (mismatch or overflow) |
+//! | `NNL-E007` | referenced parameter missing from the registry |
+//! | `NNL-E008` | invalid attribute (zero stride/kernel/dilation) |
+//! | `NNL-E009` | plan compilation failed |
+//! | `NNL-W101` | layer unreachable from the network outputs |
+//! | `NNL-W102` | parameter never referenced by any layer |
+//! | `NNL-W103` | batch-variant op defeats the micro-batcher |
+//! | `NNL-W104` | op will silently run in f32 under int8 serving |
+//! | `NNL-P001` | step order broken (read-before-write / double write) |
+//! | `NNL-P002` | slot read after its planned free |
+//! | `NNL-P003` | output slot freed or never produced |
+//! | `NNL-P004` | arena allocations overlap while both live |
+//! | `NNL-P005` | allocation out of arena bounds / peak above naive |
+//! | `NNL-P006` | plan metadata disagrees with derived liveness |
+//! | `NNL-P007` | invalid free (unwritten slot / double free) |
+
+use std::collections::{HashMap, HashSet};
+
+use crate::tensor::NdArray;
+use crate::utils::json::Json;
+
+use super::ir::{NetworkDef, Op};
+use super::passes::{MemoryPlan, OptLevel, SlotAlloc};
+use super::plan::{CompiledNet, Src};
+
+/// Stable diagnostic codes. Never renumber — external tooling and the
+/// serve DEPLOY rejection path match on these strings.
+pub mod codes {
+    /// Arity or output-count mismatch.
+    pub const ARITY: &str = "NNL-E001";
+    /// Read of a tensor that is neither a network input nor produced.
+    pub const UNDEFINED_TENSOR: &str = "NNL-E002";
+    /// Read of a tensor produced by a *later* layer (cycle/misorder).
+    pub const CYCLE: &str = "NNL-E003";
+    /// Two definitions of the same tensor name.
+    pub const DUPLICATE_TENSOR: &str = "NNL-E004";
+    /// Declared network output never produced.
+    pub const OUTPUT_MISSING: &str = "NNL-E005";
+    /// Shape inference failed (mismatch, bad geometry, or overflow).
+    pub const SHAPE_MISMATCH: &str = "NNL-E006";
+    /// Referenced parameter missing from the registry.
+    pub const MISSING_PARAM: &str = "NNL-E007";
+    /// Invalid attribute (zero stride / kernel / dilation).
+    pub const BAD_ATTR: &str = "NNL-E008";
+    /// Plan compilation failed outright.
+    pub const COMPILE_FAILED: &str = "NNL-E009";
+    /// Layer unreachable from the network outputs.
+    pub const UNREACHABLE_LAYER: &str = "NNL-W101";
+    /// Parameter in the registry never referenced by any layer.
+    pub const UNUSED_PARAM: &str = "NNL-W102";
+    /// Batch-variant op: serving falls back to per-request execution.
+    pub const BATCH_VARIANT: &str = "NNL-W103";
+    /// Op has no int8 kernel and silently runs in f32 when quantized.
+    pub const QUANT_HOSTILE: &str = "NNL-W104";
+    /// Step order broken: read-before-write, double write, or a write
+    /// to a freed slot.
+    pub const PLAN_ORDER: &str = "NNL-P001";
+    /// Slot read after its planned free.
+    pub const PLAN_USE_AFTER_FREE: &str = "NNL-P002";
+    /// Output slot freed, out of range, or never produced.
+    pub const PLAN_OUTPUT: &str = "NNL-P003";
+    /// Two arena allocations overlap in bytes while both live.
+    pub const PLAN_ARENA_OVERLAP: &str = "NNL-P004";
+    /// Allocation exceeds `peak_bytes`, or peak exceeds naive.
+    pub const PLAN_ARENA_BOUNDS: &str = "NNL-P005";
+    /// Plan metadata disagrees with independently derived liveness.
+    pub const PLAN_MISMATCH: &str = "NNL-P006";
+    /// Invalid free: unwritten slot, double free, or out of range.
+    pub const PLAN_BAD_FREE: &str = "NNL-P007";
+}
+
+/// Diagnostic severity. Errors block deployment; warnings are lints.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Severity {
+    Error,
+    Warning,
+}
+
+impl Severity {
+    fn label(self) -> &'static str {
+        match self {
+            Severity::Error => "error",
+            Severity::Warning => "warning",
+        }
+    }
+}
+
+/// One finding: a stable code, a severity, optional op/tensor
+/// locations, and a human message.
+#[derive(Debug, Clone)]
+pub struct Diagnostic {
+    /// Stable code from [`codes`] (e.g. `NNL-E006`).
+    pub code: &'static str,
+    pub severity: Severity,
+    /// The layer (graph verify) or step (plan verify) involved.
+    pub layer: Option<String>,
+    /// The tensor or slot involved.
+    pub tensor: Option<String>,
+    pub message: String,
+}
+
+impl Diagnostic {
+    pub fn error(code: &'static str, message: impl Into<String>) -> Self {
+        Diagnostic { code, severity: Severity::Error, layer: None, tensor: None, message: message.into() }
+    }
+
+    pub fn warning(code: &'static str, message: impl Into<String>) -> Self {
+        Diagnostic { code, severity: Severity::Warning, layer: None, tensor: None, message: message.into() }
+    }
+
+    pub fn with_layer(mut self, layer: impl Into<String>) -> Self {
+        self.layer = Some(layer.into());
+        self
+    }
+
+    pub fn with_tensor(mut self, tensor: impl Into<String>) -> Self {
+        self.tensor = Some(tensor.into());
+        self
+    }
+
+    /// One-line rendering: `error[NNL-E006] layer 'fc1' tensor 'x': …`.
+    pub fn render(&self) -> String {
+        let mut out = format!("{}[{}]", self.severity.label(), self.code);
+        if let Some(l) = &self.layer {
+            out.push_str(&format!(" layer '{l}'"));
+        }
+        if let Some(t) = &self.tensor {
+            out.push_str(&format!(" tensor '{t}'"));
+        }
+        out.push_str(": ");
+        out.push_str(&self.message);
+        out
+    }
+
+    fn to_json(&self) -> Json {
+        fn opt(s: &Option<String>) -> Json {
+            match s {
+                Some(v) => Json::str(v.clone()),
+                None => Json::Null,
+            }
+        }
+        Json::obj(vec![
+            ("code", Json::str(self.code)),
+            ("severity", Json::str(self.severity.label())),
+            ("layer", opt(&self.layer)),
+            ("tensor", opt(&self.tensor)),
+            ("message", Json::str(self.message.clone())),
+        ])
+    }
+}
+
+/// An ordered collection of diagnostics from one verification run.
+#[derive(Debug, Clone, Default)]
+pub struct Report {
+    diags: Vec<Diagnostic>,
+}
+
+impl Report {
+    pub fn new() -> Self {
+        Report::default()
+    }
+
+    pub fn push(&mut self, d: Diagnostic) {
+        self.diags.push(d);
+    }
+
+    pub fn merge(&mut self, other: Report) {
+        self.diags.extend(other.diags);
+    }
+
+    pub fn diagnostics(&self) -> &[Diagnostic] {
+        &self.diags
+    }
+
+    pub fn into_diagnostics(self) -> Vec<Diagnostic> {
+        self.diags
+    }
+
+    pub fn error_count(&self) -> usize {
+        self.diags.iter().filter(|d| d.severity == Severity::Error).count()
+    }
+
+    pub fn warning_count(&self) -> usize {
+        self.diags.iter().filter(|d| d.severity == Severity::Warning).count()
+    }
+
+    pub fn has_errors(&self) -> bool {
+        self.error_count() > 0
+    }
+
+    /// No findings at all — not even warnings.
+    pub fn is_clean(&self) -> bool {
+        self.diags.is_empty()
+    }
+
+    /// Whether any diagnostic carries `code` — how tests pin the
+    /// stable-code contract.
+    pub fn has_code(&self, code: &str) -> bool {
+        self.diags.iter().any(|d| d.code == code)
+    }
+
+    /// Multi-line human rendering, errors before warnings (insertion
+    /// order preserved within each severity).
+    pub fn render_human(&self) -> String {
+        let mut out = String::new();
+        for sev in [Severity::Error, Severity::Warning] {
+            for d in self.diags.iter().filter(|d| d.severity == sev) {
+                out.push_str(&d.render());
+                out.push('\n');
+            }
+        }
+        out.push_str(&format!(
+            "{} error{}, {} warning{}",
+            self.error_count(),
+            if self.error_count() == 1 { "" } else { "s" },
+            self.warning_count(),
+            if self.warning_count() == 1 { "" } else { "s" },
+        ));
+        out
+    }
+
+    /// Machine-readable rendering for `nnl check --json`.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("errors", Json::num(self.error_count() as f64)),
+            ("warnings", Json::num(self.warning_count() as f64)),
+            ("diagnostics", Json::Arr(self.diags.iter().map(|d| d.to_json()).collect())),
+        ])
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Checked shape inference. All arithmetic over declared dims is checked:
+// the inputs are untrusted (byte-flipped artifacts reach this code) and
+// the checker must *report* overflow, never panic on it.
+// ---------------------------------------------------------------------------
+
+fn prod(dims: &[usize]) -> Result<usize, String> {
+    dims.iter()
+        .try_fold(1usize, |a, &d| a.checked_mul(d))
+        .ok_or_else(|| format!("element count of {dims:?} overflows usize"))
+}
+
+fn ck_add(a: usize, b: usize) -> Result<usize, String> {
+    a.checked_add(b).ok_or_else(|| format!("{a} + {b} overflows usize"))
+}
+
+fn ck_mul(a: usize, b: usize) -> Result<usize, String> {
+    a.checked_mul(b).ok_or_else(|| format!("{a} * {b} overflows usize"))
+}
+
+/// Output extent of one conv/pool axis, fully checked.
+fn conv_out(h: usize, k: usize, stride: usize, pad: usize, dilation: usize) -> Result<usize, String> {
+    if k == 0 || stride == 0 || dilation == 0 {
+        return Err("zero kernel, stride or dilation".into());
+    }
+    let eff = ck_add(ck_mul(dilation, k - 1)?, 1)?;
+    let padded = ck_add(h, ck_mul(2, pad)?)?;
+    let span = padded
+        .checked_sub(eff)
+        .ok_or_else(|| format!("kernel extent {eff} larger than padded input {padded}"))?;
+    Ok(span / stride + 1)
+}
+
+/// NumPy-style right-aligned broadcast of two shapes.
+fn broadcast2(a: &[usize], b: &[usize]) -> Result<Vec<usize>, String> {
+    let rank = a.len().max(b.len());
+    let mut out = vec![0usize; rank];
+    for i in 0..rank {
+        let da = if i < rank - a.len() { 1 } else { a[i - (rank - a.len())] };
+        let db = if i < rank - b.len() { 1 } else { b[i - (rank - b.len())] };
+        out[i] = if da == db || db == 1 {
+            da
+        } else if da == 1 {
+            db
+        } else {
+            return Err(format!("shapes {a:?} and {b:?} are not broadcastable"));
+        };
+    }
+    Ok(out)
+}
+
+fn want_rank(name: &str, x: &[usize], rank: usize) -> Result<(), String> {
+    if x.len() != rank {
+        return Err(format!("{name} expects rank-{rank} input, got {x:?}"));
+    }
+    Ok(())
+}
+
+/// Infer one op's output shape. `xs` holds the activation shapes
+/// followed by the parameter shapes, in [`Op::apply`] order — exactly
+/// the order [`verify_network`] assembles. Arity is the caller's job;
+/// out-of-range accesses here are still guarded defensively.
+pub fn infer_op_shape(op: &Op, xs: &[Vec<usize>]) -> Result<Vec<usize>, String> {
+    let x = xs.first().ok_or("op has no inputs")?;
+    match op {
+        Op::Affine => {
+            if x.is_empty() {
+                return Err("Affine: input must have a batch axis".into());
+            }
+            let w = xs.get(1).ok_or("Affine: missing weight")?;
+            want_rank("Affine weight", w, 2)?;
+            let feat = prod(&x[1..])?;
+            if feat != w[0] {
+                return Err(format!("Affine: input features {feat} do not match weight rows {}", w[0]));
+            }
+            if let Some(b) = xs.get(2) {
+                if prod(b)? != w[1] {
+                    return Err(format!("Affine: bias {b:?} does not match {} output features", w[1]));
+                }
+            }
+            Ok(vec![x[0], w[1]])
+        }
+        Op::Convolution { stride, pad, dilation } => {
+            want_rank("Convolution", x, 4)?;
+            let w = xs.get(1).ok_or("Convolution: missing weight")?;
+            want_rank("Convolution weight", w, 4)?;
+            if w[1] != x[1] {
+                return Err(format!(
+                    "Convolution: weight expects {} input channels, input has {}",
+                    w[1], x[1]
+                ));
+            }
+            if let Some(b) = xs.get(2) {
+                if prod(b)? != w[0] {
+                    return Err(format!("Convolution: bias {b:?} does not match {} output channels", w[0]));
+                }
+            }
+            let oh = conv_out(x[2], w[2], stride.0, pad.0, dilation.0)?;
+            let ow = conv_out(x[3], w[3], stride.1, pad.1, dilation.1)?;
+            Ok(vec![x[0], w[0], oh, ow])
+        }
+        Op::Deconvolution { stride, pad } => {
+            want_rank("Deconvolution", x, 4)?;
+            let w = xs.get(1).ok_or("Deconvolution: missing weight")?;
+            want_rank("Deconvolution weight", w, 4)?;
+            if w[0] != x[1] {
+                return Err(format!(
+                    "Deconvolution: weight expects {} input channels, input has {}",
+                    w[0], x[1]
+                ));
+            }
+            if stride.0 == 0 || stride.1 == 0 {
+                return Err("Deconvolution: zero stride".into());
+            }
+            if let Some(b) = xs.get(2) {
+                if prod(b)? != w[1] {
+                    return Err(format!("Deconvolution: bias {b:?} does not match {} output channels", w[1]));
+                }
+            }
+            let deconv_out = |h: usize, k: usize, s: usize, p: usize| -> Result<usize, String> {
+                if h == 0 {
+                    return Err("Deconvolution: zero-sized spatial input".into());
+                }
+                let grown = ck_add(ck_mul(h - 1, s)?, k)?;
+                grown
+                    .checked_sub(ck_mul(2, p)?)
+                    .filter(|&o| o > 0)
+                    .ok_or_else(|| format!("Deconvolution: padding {p} swallows the {grown}-wide output"))
+            };
+            let oh = deconv_out(x[2], w[2], stride.0, pad.0)?;
+            let ow = deconv_out(x[3], w[3], stride.1, pad.1)?;
+            Ok(vec![x[0], w[1], oh, ow])
+        }
+        Op::MaxPool { kernel, stride, pad } | Op::AvgPool { kernel, stride, pad, .. } => {
+            want_rank(op.name(), x, 4)?;
+            let oh = conv_out(x[2], kernel.0, stride.0, pad.0, 1)?;
+            let ow = conv_out(x[3], kernel.1, stride.1, pad.1, 1)?;
+            Ok(vec![x[0], x[1], oh, ow])
+        }
+        Op::GlobalAvgPool => {
+            want_rank("GlobalAveragePooling", x, 4)?;
+            Ok(vec![x[0], x[1]])
+        }
+        Op::BatchNorm { .. } => {
+            if x.len() < 2 {
+                return Err(format!("BatchNormalization expects rank >= 2, got {x:?}"));
+            }
+            for (i, name) in ["beta", "gamma", "mean", "var"].iter().enumerate() {
+                let p = xs.get(1 + i).ok_or_else(|| format!("BatchNormalization: missing {name}"))?;
+                if prod(p)? != x[1] {
+                    return Err(format!(
+                        "BatchNormalization: {name} {p:?} does not match {} channels",
+                        x[1]
+                    ));
+                }
+            }
+            Ok(x.clone())
+        }
+        Op::LayerNorm { .. } => {
+            for (i, name) in ["beta", "gamma"].iter().enumerate() {
+                let p = xs.get(1 + i).ok_or_else(|| format!("LayerNormalization: missing {name}"))?;
+                if broadcast2(x, p)? != *x {
+                    return Err(format!(
+                        "LayerNormalization: {name} {p:?} does not broadcast into input {x:?}"
+                    ));
+                }
+            }
+            Ok(x.clone())
+        }
+        Op::Add2 | Op::Sub2 | Op::Mul2 | Op::Div2 | Op::SquaredError | Op::SigmoidCrossEntropy => {
+            let y = xs.get(1).ok_or_else(|| format!("{}: missing second input", op.name()))?;
+            broadcast2(x, y)
+        }
+        Op::Softmax | Op::LogSoftmax => {
+            if x.is_empty() {
+                return Err(format!("{} expects rank >= 1, got a scalar", op.name()));
+            }
+            Ok(x.clone())
+        }
+        Op::SoftmaxCrossEntropy => {
+            if x.len() < 2 {
+                return Err(format!("SoftmaxCrossEntropy expects rank >= 2 logits, got {x:?}"));
+            }
+            let t = xs.get(1).ok_or("SoftmaxCrossEntropy: missing labels")?;
+            if prod(t)? != x[0] {
+                return Err(format!(
+                    "SoftmaxCrossEntropy: {} labels do not match batch {}",
+                    prod(t)?,
+                    x[0]
+                ));
+            }
+            Ok(vec![x[0], 1])
+        }
+        Op::SumAll | Op::MeanAll => Ok(vec![]),
+        Op::Sum { axis, keepdims } | Op::Mean { axis, keepdims } => {
+            if *axis >= x.len() {
+                return Err(format!("{}: axis {axis} out of range for {x:?}", op.name()));
+            }
+            let mut out = x.clone();
+            if *keepdims {
+                out[*axis] = 1;
+            } else {
+                out.remove(*axis);
+            }
+            Ok(out)
+        }
+        Op::Reshape { dims } => {
+            let total = prod(x)?;
+            let mut known = 1usize;
+            let mut infer_at: Option<usize> = None;
+            let mut out = Vec::with_capacity(dims.len());
+            for (i, &d) in dims.iter().enumerate() {
+                if d > 0 {
+                    let d = d as usize;
+                    known = ck_mul(known, d)?;
+                    out.push(d);
+                } else if d == 0 {
+                    if i != 0 {
+                        return Err(format!("Reshape: 0 only keeps the batch axis (position 0), found at {i}"));
+                    }
+                    let b = *x.first().ok_or("Reshape: 0 spec needs a batched input")?;
+                    known = ck_mul(known, b)?;
+                    out.push(b);
+                } else if d == -1 {
+                    if infer_at.is_some() {
+                        return Err("Reshape: more than one -1 in spec".into());
+                    }
+                    infer_at = Some(i);
+                    out.push(0);
+                } else {
+                    return Err(format!("Reshape: invalid spec entry {d}"));
+                }
+            }
+            match infer_at {
+                Some(i) => {
+                    if known == 0 || total % known != 0 {
+                        return Err(format!(
+                            "Reshape: cannot infer -1: {total} elements not divisible by {known}"
+                        ));
+                    }
+                    out[i] = total / known;
+                }
+                None => {
+                    if known != total {
+                        return Err(format!(
+                            "Reshape: spec {dims:?} has {known} elements, input {x:?} has {total}"
+                        ));
+                    }
+                }
+            }
+            Ok(out)
+        }
+        Op::BroadcastTo { dims } => {
+            if broadcast2(x, dims)? != *dims {
+                return Err(format!("BroadcastTo: input {x:?} does not broadcast to {dims:?}"));
+            }
+            Ok(dims.clone())
+        }
+        Op::Slice { axis, start, stop } => {
+            if *axis >= x.len() {
+                return Err(format!("Slice: axis {axis} out of range for {x:?}"));
+            }
+            if start > stop || *stop > x[*axis] {
+                return Err(format!(
+                    "Slice: window [{start}, {stop}) invalid for extent {}",
+                    x[*axis]
+                ));
+            }
+            let mut out = x.clone();
+            out[*axis] = stop - start;
+            Ok(out)
+        }
+        Op::Transpose { axes } => {
+            if axes.len() != x.len() {
+                return Err(format!("Transpose: {} axes for rank-{} input", axes.len(), x.len()));
+            }
+            let mut seen = vec![false; x.len()];
+            for &a in axes {
+                if a >= x.len() || seen[a] {
+                    return Err(format!("Transpose: {axes:?} is not a permutation of 0..{}", x.len()));
+                }
+                seen[a] = true;
+            }
+            Ok(axes.iter().map(|&a| x[a]).collect())
+        }
+        Op::Concat { axis } => {
+            let rank = x.len();
+            if *axis >= rank {
+                return Err(format!("Concatenate: axis {axis} out of range for {x:?}"));
+            }
+            let mut out = x.clone();
+            for y in &xs[1..] {
+                if y.len() != rank {
+                    return Err(format!("Concatenate: rank mismatch {x:?} vs {y:?}"));
+                }
+                for i in 0..rank {
+                    if i == *axis {
+                        out[i] = ck_add(out[i], y[i])?;
+                    } else if y[i] != x[i] {
+                        return Err(format!("Concatenate: {y:?} differs from {x:?} off the concat axis"));
+                    }
+                }
+            }
+            Ok(out)
+        }
+        Op::Embed => {
+            let w = xs.get(1).ok_or("Embed: missing table")?;
+            want_rank("Embed table", w, 2)?;
+            Ok(vec![prod(x)?, w[1]])
+        }
+        // All remaining ops are elementwise / identity-shaped.
+        Op::ReLU
+        | Op::LeakyReLU { .. }
+        | Op::Sigmoid
+        | Op::Tanh
+        | Op::Elu { .. }
+        | Op::Swish
+        | Op::Gelu
+        | Op::Softplus
+        | Op::Neg
+        | Op::AddScalar { .. }
+        | Op::MulScalar { .. }
+        | Op::PowScalar { .. }
+        | Op::Exp
+        | Op::Log
+        | Op::StopGradient
+        | Op::Dropout { .. }
+        | Op::Identity => Ok(x.clone()),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Graph verification
+// ---------------------------------------------------------------------------
+
+/// Zero-stride/kernel/dilation attribute checks, mirroring (and
+/// superseding) the hard errors in `NetworkDef::validate`.
+fn check_attrs(op: &Op) -> Result<(), String> {
+    match op {
+        Op::Convolution { stride, dilation, .. } => {
+            if stride.0 == 0 || stride.1 == 0 {
+                return Err("zero stride".into());
+            }
+            if dilation.0 == 0 || dilation.1 == 0 {
+                return Err("zero dilation".into());
+            }
+        }
+        Op::Deconvolution { stride, .. } => {
+            if stride.0 == 0 || stride.1 == 0 {
+                return Err("zero stride".into());
+            }
+        }
+        Op::MaxPool { kernel, stride, .. } | Op::AvgPool { kernel, stride, .. } => {
+            if kernel.0 == 0 || kernel.1 == 0 {
+                return Err("zero kernel".into());
+            }
+            if stride.0 == 0 || stride.1 == 0 {
+                return Err("zero stride".into());
+            }
+        }
+        _ => {}
+    }
+    Ok(())
+}
+
+/// Whether serving can micro-batch through this op (mirrors
+/// `CompiledNet::batch_invariant`). `false` ⇒ the op couples rows
+/// along axis 0 and W103 fires.
+fn op_batch_invariant(op: &Op) -> bool {
+    match op {
+        Op::SumAll | Op::MeanAll | Op::BroadcastTo { .. } => false,
+        Op::Sum { axis, keepdims } | Op::Mean { axis, keepdims } => *axis != 0 && *keepdims,
+        Op::Concat { axis } | Op::Slice { axis, .. } => *axis != 0,
+        Op::Transpose { axes } => axes.first() == Some(&0),
+        Op::Reshape { dims } => dims.len() >= 2 && dims[0] == 0,
+        _ => true,
+    }
+}
+
+/// Full static verification of one network against a parameter
+/// registry: structural errors (E001–E008) plus lints (W101–W104).
+/// Never panics, whatever the inputs claim about themselves.
+pub fn verify_network(net: &NetworkDef, params: &HashMap<String, NdArray>) -> Report {
+    let mut r = Report::new();
+
+    // Tensor name -> inferred shape (None once inference broke down —
+    // downstream layers are then checked structurally only).
+    let mut shapes: HashMap<&str, Option<Vec<usize>>> = HashMap::new();
+    for t in &net.inputs {
+        if shapes.insert(&t.name, Some(t.dims.clone())).is_some() {
+            r.push(
+                Diagnostic::error(codes::DUPLICATE_TENSOR, "duplicate network input")
+                    .with_tensor(&t.name),
+            );
+        }
+    }
+
+    // Everything *some* layer produces — distinguishes a forward
+    // reference (E003, cycle/misorder) from a plain typo (E002).
+    let produced: HashSet<&str> =
+        net.layers.iter().flat_map(|l| l.outputs.iter().map(String::as_str)).collect();
+
+    let mut used_params: HashSet<&str> = HashSet::new();
+
+    for layer in &net.layers {
+        let mut layer_ok = true;
+
+        if let Err(e) = check_attrs(&layer.op) {
+            r.push(
+                Diagnostic::error(codes::BAD_ATTR, format!("{}: {e}", layer.op.name()))
+                    .with_layer(&layer.name),
+            );
+            layer_ok = false;
+        }
+
+        if layer.outputs.len() != 1 {
+            r.push(
+                Diagnostic::error(
+                    codes::ARITY,
+                    format!("{} must have exactly 1 output, has {}", layer.op.name(), layer.outputs.len()),
+                )
+                .with_layer(&layer.name),
+            );
+            layer_ok = false;
+        }
+
+        let total = layer.inputs.len() + layer.params.len();
+        let (min, max) = layer.op.arity();
+        if total < min || total > max {
+            r.push(
+                Diagnostic::error(
+                    codes::ARITY,
+                    format!(
+                        "{} takes {} inputs, got {} ({} activations + {} params)",
+                        layer.op.name(),
+                        if min == max { format!("{min}") } else { format!("{min}..={max}") },
+                        total,
+                        layer.inputs.len(),
+                        layer.params.len(),
+                    ),
+                )
+                .with_layer(&layer.name),
+            );
+            layer_ok = false;
+        }
+
+        let mut arg_shapes: Vec<Option<Vec<usize>>> = Vec::with_capacity(total);
+        for input in &layer.inputs {
+            match shapes.get(input.as_str()) {
+                Some(s) => arg_shapes.push(s.clone()),
+                None => {
+                    let (code, what) = if produced.contains(input.as_str()) {
+                        (codes::CYCLE, "produced by a later layer (cyclic or misordered graph)")
+                    } else {
+                        (codes::UNDEFINED_TENSOR, "never produced and not a network input")
+                    };
+                    r.push(
+                        Diagnostic::error(code, format!("read of tensor {what}"))
+                            .with_layer(&layer.name)
+                            .with_tensor(input),
+                    );
+                    layer_ok = false;
+                    arg_shapes.push(None);
+                }
+            }
+        }
+        for p in &layer.params {
+            used_params.insert(p);
+            match params.get(p) {
+                Some(a) => arg_shapes.push(Some(a.dims().to_vec())),
+                None => {
+                    r.push(
+                        Diagnostic::error(codes::MISSING_PARAM, "parameter missing from the registry")
+                            .with_layer(&layer.name)
+                            .with_tensor(p),
+                    );
+                    layer_ok = false;
+                    arg_shapes.push(None);
+                }
+            }
+        }
+
+        let out_shape: Option<Vec<usize>> = if layer_ok && arg_shapes.iter().all(Option::is_some) {
+            let xs: Vec<Vec<usize>> = arg_shapes.into_iter().map(Option::unwrap).collect();
+            match infer_op_shape(&layer.op, &xs) {
+                Ok(s) => Some(s),
+                Err(e) => {
+                    r.push(Diagnostic::error(codes::SHAPE_MISMATCH, e).with_layer(&layer.name));
+                    None
+                }
+            }
+        } else {
+            None
+        };
+
+        for out in &layer.outputs {
+            if shapes.insert(out, out_shape.clone()).is_some() {
+                r.push(
+                    Diagnostic::error(codes::DUPLICATE_TENSOR, "tensor defined more than once")
+                        .with_layer(&layer.name)
+                        .with_tensor(out),
+                );
+            }
+        }
+    }
+
+    for out in &net.outputs {
+        if !shapes.contains_key(out.as_str()) {
+            r.push(
+                Diagnostic::error(codes::OUTPUT_MISSING, "declared network output is never produced")
+                    .with_tensor(out),
+            );
+        }
+    }
+
+    // --- Lints ---
+
+    // W101: backward reachability from the declared outputs.
+    let mut needed: HashSet<&str> = net.outputs.iter().map(String::as_str).collect();
+    let mut reachable = vec![false; net.layers.len()];
+    for (i, layer) in net.layers.iter().enumerate().rev() {
+        if layer.outputs.iter().any(|o| needed.contains(o.as_str())) {
+            reachable[i] = true;
+            needed.extend(layer.inputs.iter().map(String::as_str));
+        }
+    }
+    for (i, layer) in net.layers.iter().enumerate() {
+        if !reachable[i] {
+            r.push(
+                Diagnostic::warning(
+                    codes::UNREACHABLE_LAYER,
+                    "layer does not contribute to any network output (dead subgraph)",
+                )
+                .with_layer(&layer.name),
+            );
+        }
+    }
+
+    // W102: registry parameters never referenced (name-sorted for
+    // deterministic output).
+    let mut unused: Vec<&str> =
+        params.keys().map(String::as_str).filter(|p| !used_params.contains(*p)).collect();
+    unused.sort_unstable();
+    for p in unused {
+        r.push(
+            Diagnostic::warning(codes::UNUSED_PARAM, "parameter is never referenced by any layer")
+                .with_tensor(p),
+        );
+    }
+
+    // W103: batch variance. A missing or sub-rank-2 input disables
+    // micro-batching for the whole network; otherwise flag the ops
+    // that couple rows along axis 0.
+    if net.inputs.is_empty() || net.inputs.iter().any(|t| t.dims.len() < 2) {
+        r.push(Diagnostic::warning(
+            codes::BATCH_VARIANT,
+            "network signature has no batch axis: serving falls back to per-request execution",
+        ));
+    } else {
+        for (i, layer) in net.layers.iter().enumerate() {
+            if reachable[i] && !op_batch_invariant(&layer.op) {
+                r.push(
+                    Diagnostic::warning(
+                        codes::BATCH_VARIANT,
+                        format!(
+                            "{} couples rows along axis 0: serving cannot micro-batch this network",
+                            layer.op.name()
+                        ),
+                    )
+                    .with_layer(&layer.name),
+                );
+            }
+        }
+    }
+
+    // W104: quantization-hostile ops (mirrors `dense_weight_axis`: only
+    // single-input Affine/Convolution with params get int8 kernels).
+    for (i, layer) in net.layers.iter().enumerate() {
+        if !reachable[i] {
+            continue;
+        }
+        match layer.op {
+            Op::Deconvolution { .. } => {
+                r.push(
+                    Diagnostic::warning(
+                        codes::QUANT_HOSTILE,
+                        "Deconvolution has no int8 kernel and will silently run in f32 when quantized",
+                    )
+                    .with_layer(&layer.name),
+                );
+            }
+            Op::Affine | Op::Convolution { .. }
+                if layer.inputs.len() != 1 || layer.params.is_empty() =>
+            {
+                r.push(
+                    Diagnostic::warning(
+                        codes::QUANT_HOSTILE,
+                        format!(
+                            "{} without a unique input and weights will not quantize (f32 fallback)",
+                            layer.op.name()
+                        ),
+                    )
+                    .with_layer(&layer.name),
+                );
+            }
+            _ => {}
+        }
+    }
+
+    r
+}
+
+// ---------------------------------------------------------------------------
+// Translation validation of a compiled plan
+// ---------------------------------------------------------------------------
+
+/// Independent verifier of a compiled plan: re-derives liveness from
+/// the scheduled steps and cross-checks the step order (P001/P002/
+/// P003/P007) and, when present, the static memory plan (P004/P005/
+/// P006). Shares no code with the scheduler or allocator it audits.
+pub fn verify_plan(plan: &CompiledNet) -> Report {
+    let mut r = Report::new();
+    let n = plan.n_slots();
+    let steps = plan.steps();
+    let outputs: HashSet<usize> = plan.output_slots().iter().copied().collect();
+
+    // Network inputs occupy the first slots and arrive pre-written.
+    let mut written = vec![false; n];
+    let mut freed = vec![false; n];
+    for w in written.iter_mut().take(plan.inputs().len().min(n)) {
+        *w = true;
+    }
+
+    for (i, st) in steps.iter().enumerate() {
+        for a in &st.args {
+            if let Src::Act(s) = a {
+                if *s >= n {
+                    r.push(
+                        Diagnostic::error(
+                            codes::PLAN_MISMATCH,
+                            format!("step {i} reads out-of-range slot {s} (plan has {n})"),
+                        )
+                        .with_layer(&st.name),
+                    );
+                } else if freed[*s] {
+                    r.push(
+                        Diagnostic::error(
+                            codes::PLAN_USE_AFTER_FREE,
+                            format!("step {i} reads a slot after its planned free"),
+                        )
+                        .with_layer(&st.name)
+                        .with_tensor(plan.slot_name(*s)),
+                    );
+                } else if !written[*s] {
+                    r.push(
+                        Diagnostic::error(
+                            codes::PLAN_ORDER,
+                            format!("step {i} reads a slot no earlier step produced"),
+                        )
+                        .with_layer(&st.name)
+                        .with_tensor(plan.slot_name(*s)),
+                    );
+                }
+            }
+        }
+
+        if st.out >= n {
+            r.push(
+                Diagnostic::error(
+                    codes::PLAN_MISMATCH,
+                    format!("step {i} writes out-of-range slot {} (plan has {n})", st.out),
+                )
+                .with_layer(&st.name),
+            );
+            continue;
+        }
+        if freed[st.out] {
+            r.push(
+                Diagnostic::error(codes::PLAN_ORDER, format!("step {i} rewrites a freed slot"))
+                    .with_layer(&st.name)
+                    .with_tensor(plan.slot_name(st.out)),
+            );
+        } else if written[st.out] {
+            r.push(
+                Diagnostic::error(
+                    codes::PLAN_ORDER,
+                    format!("step {i} writes a slot that already holds a live value"),
+                )
+                .with_layer(&st.name)
+                .with_tensor(plan.slot_name(st.out)),
+            );
+        }
+        written[st.out] = true;
+
+        for &s in &st.free_after {
+            if s >= n {
+                r.push(
+                    Diagnostic::error(
+                        codes::PLAN_BAD_FREE,
+                        format!("step {i} frees out-of-range slot {s} (plan has {n})"),
+                    )
+                    .with_layer(&st.name),
+                );
+            } else if outputs.contains(&s) {
+                r.push(
+                    Diagnostic::error(
+                        codes::PLAN_OUTPUT,
+                        format!("step {i} frees a network output slot"),
+                    )
+                    .with_layer(&st.name)
+                    .with_tensor(plan.slot_name(s)),
+                );
+            } else if !written[s] {
+                r.push(
+                    Diagnostic::error(
+                        codes::PLAN_BAD_FREE,
+                        format!("step {i} frees a slot that was never produced"),
+                    )
+                    .with_layer(&st.name)
+                    .with_tensor(plan.slot_name(s)),
+                );
+            } else if freed[s] {
+                r.push(
+                    Diagnostic::error(codes::PLAN_BAD_FREE, format!("step {i} frees a slot twice"))
+                        .with_layer(&st.name)
+                        .with_tensor(plan.slot_name(s)),
+                );
+            } else {
+                freed[s] = true;
+            }
+        }
+    }
+
+    for &o in plan.output_slots() {
+        if o >= n {
+            r.push(Diagnostic::error(
+                codes::PLAN_OUTPUT,
+                format!("output slot {o} out of range (plan has {n})"),
+            ));
+        } else if !written[o] {
+            r.push(
+                Diagnostic::error(codes::PLAN_OUTPUT, "network output slot is never produced")
+                    .with_tensor(plan.slot_name(o)),
+            );
+        }
+    }
+
+    if let Some(m) = plan.memory_plan() {
+        verify_memory(plan, m, &mut r);
+    }
+    r
+}
+
+/// Cross-check a memory plan against liveness re-derived from the
+/// steps: exact live ranges, in-bounds offsets, and pairwise
+/// no-overlap of simultaneously-live allocations.
+fn verify_memory(plan: &CompiledNet, m: &MemoryPlan, r: &mut Report) {
+    let n = plan.n_slots();
+    let steps = plan.steps();
+    if m.slots.len() != n {
+        r.push(Diagnostic::error(
+            codes::PLAN_MISMATCH,
+            format!("memory plan covers {} slots, plan has {n}", m.slots.len()),
+        ));
+        return;
+    }
+
+    // Re-derive each slot's live interval the way the allocator defines
+    // it: producer step opens the range, reads extend it, network
+    // outputs stay live past the last step. Inputs are caller-held and
+    // never arena-backed, so they get no interval.
+    let mut start: Vec<Option<usize>> = vec![None; n];
+    let mut end: Vec<usize> = vec![0; n];
+    for (i, st) in steps.iter().enumerate() {
+        for a in &st.args {
+            if let Src::Act(s) = a {
+                if *s < n {
+                    end[*s] = end[*s].max(i);
+                }
+            }
+        }
+        if st.out < n {
+            start[st.out] = Some(i);
+            end[st.out] = end[st.out].max(i);
+        }
+    }
+    for &o in plan.output_slots() {
+        if o < n && start[o].is_some() {
+            end[o] = steps.len();
+        }
+    }
+
+    let mut allocated: Vec<(usize, SlotAlloc)> = Vec::new();
+    for s in 0..n {
+        match (start[s], m.slots[s]) {
+            (Some(st0), Some(a)) => {
+                if a.start != st0 || a.end != end[s] {
+                    r.push(
+                        Diagnostic::error(
+                            codes::PLAN_MISMATCH,
+                            format!(
+                                "allocation claims live range [{}, {}], steps imply [{st0}, {}]",
+                                a.start, a.end, end[s]
+                            ),
+                        )
+                        .with_tensor(plan.slot_name(s)),
+                    );
+                }
+                match a.offset.checked_add(a.bytes) {
+                    Some(e) if e <= m.peak_bytes => {}
+                    _ => {
+                        r.push(
+                            Diagnostic::error(
+                                codes::PLAN_ARENA_BOUNDS,
+                                format!(
+                                    "allocation [{}, {} bytes) exceeds the {}-byte arena",
+                                    a.offset, a.bytes, m.peak_bytes
+                                ),
+                            )
+                            .with_tensor(plan.slot_name(s)),
+                        );
+                    }
+                }
+                allocated.push((s, a));
+            }
+            (Some(_), None) => {
+                r.push(
+                    Diagnostic::error(
+                        codes::PLAN_MISMATCH,
+                        "slot is materialized by a step but has no arena allocation",
+                    )
+                    .with_tensor(plan.slot_name(s)),
+                );
+            }
+            (None, Some(_)) => {
+                r.push(
+                    Diagnostic::error(
+                        codes::PLAN_MISMATCH,
+                        "arena allocation for a slot no step produces",
+                    )
+                    .with_tensor(plan.slot_name(s)),
+                );
+            }
+            (None, None) => {}
+        }
+    }
+
+    if m.peak_bytes > m.naive_bytes {
+        r.push(Diagnostic::error(
+            codes::PLAN_ARENA_BOUNDS,
+            format!(
+                "peak {} bytes exceeds the naive per-slot total {} bytes",
+                m.peak_bytes, m.naive_bytes
+            ),
+        ));
+    }
+
+    // Pairwise: allocations live at the same time must not share bytes.
+    // Boundary sharing counts as a time overlap (a producer may read
+    // the dying slot while writing the new one); zero-byte ranges can
+    // never collide.
+    for (i, &(sa, a)) in allocated.iter().enumerate() {
+        for &(sb, b) in allocated.iter().skip(i + 1) {
+            let time = a.start <= b.end && b.start <= a.end;
+            let bytes = a.bytes > 0
+                && b.bytes > 0
+                && a.offset < b.offset.saturating_add(b.bytes)
+                && b.offset < a.offset.saturating_add(a.bytes);
+            if time && bytes {
+                r.push(
+                    Diagnostic::error(
+                        codes::PLAN_ARENA_OVERLAP,
+                        format!(
+                            "arena ranges [{}, {}) and [{}, {}) overlap for simultaneously-live slots '{}' and '{}'",
+                            a.offset,
+                            a.offset.saturating_add(a.bytes),
+                            b.offset,
+                            b.offset.saturating_add(b.bytes),
+                            plan.slot_name(sa),
+                            plan.slot_name(sb),
+                        ),
+                    )
+                    .with_tensor(plan.slot_name(sa)),
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Front doors: whole-model and whole-artifact checks
+// ---------------------------------------------------------------------------
+
+/// Verify the graph, then — if it is structurally sound — compile at
+/// every optimization level and run translation validation on each
+/// resulting plan (diagnostics prefixed with the level, so a
+/// pass-pipeline bug names the level that exposed it).
+pub fn check_model(net: &NetworkDef, params: &HashMap<String, NdArray>) -> Report {
+    let mut report = verify_network(net, params);
+    if report.has_errors() {
+        return report;
+    }
+    for level in [OptLevel::O0, OptLevel::O1, OptLevel::O2] {
+        match CompiledNet::compile_with(net, params, level) {
+            Ok(plan) => {
+                for mut d in verify_plan(&plan).into_diagnostics() {
+                    d.message = format!("[{}] {}", level.name(), d.message);
+                    report.push(d);
+                }
+            }
+            Err(e) => {
+                report.push(Diagnostic::error(
+                    codes::COMPILE_FAILED,
+                    format!("[{}] plan compilation failed: {e}", level.name()),
+                ));
+            }
+        }
+    }
+    report
+}
+
+/// Check a serialized NNB/NNB2 artifact end to end: decode, verify the
+/// graph, compile, and validate the plan. `Err` means the bytes do not
+/// decode at all; `Ok` carries the diagnostics. Never panics, however
+/// corrupted the bytes.
+pub fn check_artifact(bytes: &[u8]) -> Result<Report, String> {
+    use crate::converters::nnb::{load_nnb, NnbImage};
+    match load_nnb(bytes)? {
+        NnbImage::V1 { net, params } => {
+            let pm: HashMap<String, NdArray> = params.into_iter().collect();
+            Ok(check_model(&net, &pm))
+        }
+        NnbImage::V2(model) => {
+            let pm: HashMap<String, NdArray> =
+                model.params.iter().map(|(n, p)| (n.clone(), p.to_f32())).collect();
+            let mut report = verify_network(&model.net, &pm);
+            if !report.has_errors() {
+                match crate::quant::QuantizedNet::compile(&model) {
+                    Ok(q) => report.merge(verify_plan(q.base_plan())),
+                    Err(e) => report.push(Diagnostic::error(
+                        codes::COMPILE_FAILED,
+                        format!("int8 plan compilation failed: {e}"),
+                    )),
+                }
+            }
+            Ok(report)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nnp::ir::{Layer, TensorDef};
+    use crate::nnp::passes::SlotAlloc;
+
+    fn layer(name: &str, op: Op, inputs: &[&str], params: &[&str], outputs: &[&str]) -> Layer {
+        Layer {
+            name: name.into(),
+            op,
+            inputs: inputs.iter().map(|s| s.to_string()).collect(),
+            params: params.iter().map(|s| s.to_string()).collect(),
+            outputs: outputs.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+
+    /// x[1,4] -> Affine(w[4,3], b[3]) -> h -> Sigmoid -> y.
+    /// (Sigmoid, not ReLU: ReLU would fuse into the Affine step and
+    /// the plan-mutation tests need two steps.)
+    fn tiny_net() -> (NetworkDef, HashMap<String, NdArray>) {
+        let net = NetworkDef {
+            name: "tiny".into(),
+            inputs: vec![TensorDef { name: "x".into(), dims: vec![1, 4] }],
+            outputs: vec!["y".into()],
+            layers: vec![
+                layer("fc", Op::Affine, &["x"], &["w", "b"], &["h"]),
+                layer("act", Op::Sigmoid, &["h"], &[], &["y"]),
+            ],
+        };
+        let mut params = HashMap::new();
+        params.insert("w".to_string(), NdArray::zeros(&[4, 3]));
+        params.insert("b".to_string(), NdArray::zeros(&[3]));
+        (net, params)
+    }
+
+    #[test]
+    fn clean_net_is_clean() {
+        let (net, params) = tiny_net();
+        let r = verify_network(&net, &params);
+        assert!(r.is_clean(), "unexpected diagnostics:\n{}", r.render_human());
+    }
+
+    #[test]
+    fn check_model_accepts_every_level() {
+        let (net, params) = tiny_net();
+        let r = check_model(&net, &params);
+        assert!(r.is_clean(), "{}", r.render_human());
+    }
+
+    #[test]
+    fn shape_mismatch_is_e006() {
+        let (net, mut params) = tiny_net();
+        params.insert("w".to_string(), NdArray::zeros(&[3, 2])); // 4 features vs 3 rows
+        let r = verify_network(&net, &params);
+        assert!(r.has_code(codes::SHAPE_MISMATCH), "{}", r.render_human());
+        assert!(r.has_errors());
+    }
+
+    #[test]
+    fn bad_arity_is_e001() {
+        let (mut net, params) = tiny_net();
+        net.layers[0].params.clear(); // Affine with just x
+        let r = verify_network(&net, &params);
+        assert!(r.has_code(codes::ARITY), "{}", r.render_human());
+    }
+
+    #[test]
+    fn undefined_tensor_is_e002_and_forward_ref_is_e003() {
+        let (mut net, params) = tiny_net();
+        net.layers[1].inputs[0] = "ghost".into();
+        let r = verify_network(&net, &params);
+        assert!(r.has_code(codes::UNDEFINED_TENSOR), "{}", r.render_human());
+
+        let (mut net, params) = tiny_net();
+        net.layers.swap(0, 1); // Sigmoid now reads 'h' before the Affine defines it
+        let r = verify_network(&net, &params);
+        assert!(r.has_code(codes::CYCLE), "{}", r.render_human());
+    }
+
+    #[test]
+    fn duplicate_definition_is_e004() {
+        let (mut net, params) = tiny_net();
+        net.layers[1].outputs[0] = "h".into();
+        net.outputs[0] = "h".into();
+        let r = verify_network(&net, &params);
+        assert!(r.has_code(codes::DUPLICATE_TENSOR), "{}", r.render_human());
+    }
+
+    #[test]
+    fn missing_output_is_e005() {
+        let (mut net, params) = tiny_net();
+        net.outputs.push("nope".into());
+        let r = verify_network(&net, &params);
+        assert!(r.has_code(codes::OUTPUT_MISSING), "{}", r.render_human());
+    }
+
+    #[test]
+    fn missing_param_is_e007() {
+        let (net, mut params) = tiny_net();
+        params.remove("w");
+        let r = verify_network(&net, &params);
+        assert!(r.has_code(codes::MISSING_PARAM), "{}", r.render_human());
+    }
+
+    #[test]
+    fn zero_stride_is_e008() {
+        let (mut net, params) = tiny_net();
+        net.layers[1].op =
+            Op::MaxPool { kernel: (2, 2), stride: (0, 0), pad: (0, 0) };
+        let r = verify_network(&net, &params);
+        assert!(r.has_code(codes::BAD_ATTR), "{}", r.render_human());
+    }
+
+    #[test]
+    fn overflowing_declared_shape_reports_instead_of_panicking() {
+        let (mut net, params) = tiny_net();
+        net.inputs[0].dims = vec![usize::MAX, usize::MAX];
+        let r = verify_network(&net, &params);
+        assert!(r.has_code(codes::SHAPE_MISMATCH), "{}", r.render_human());
+    }
+
+    #[test]
+    fn dead_layer_and_unused_param_warn() {
+        let (mut net, mut params) = tiny_net();
+        net.layers.push(layer("dead", Op::Tanh, &["h"], &[], &["z"]));
+        params.insert("orphan".to_string(), NdArray::zeros(&[1]));
+        let r = verify_network(&net, &params);
+        assert!(!r.has_errors(), "{}", r.render_human());
+        assert!(r.has_code(codes::UNREACHABLE_LAYER));
+        assert!(r.has_code(codes::UNUSED_PARAM));
+    }
+
+    #[test]
+    fn batch_variant_op_warns_w103() {
+        let (mut net, params) = tiny_net();
+        net.layers[1].op = Op::Slice { axis: 0, start: 0, stop: 1 };
+        let r = verify_network(&net, &params);
+        assert!(r.has_code(codes::BATCH_VARIANT), "{}", r.render_human());
+        // axis-1 slice is batch-invariant: no warning
+        let (mut net, params) = tiny_net();
+        net.layers[1].op = Op::Slice { axis: 1, start: 0, stop: 1 };
+        let r = verify_network(&net, &params);
+        assert!(!r.has_code(codes::BATCH_VARIANT), "{}", r.render_human());
+    }
+
+    #[test]
+    fn quant_hostile_deconv_warns_w104() {
+        let net = NetworkDef {
+            name: "up".into(),
+            inputs: vec![TensorDef { name: "x".into(), dims: vec![1, 2, 4, 4] }],
+            outputs: vec!["y".into()],
+            layers: vec![layer(
+                "up",
+                Op::Deconvolution { stride: (2, 2), pad: (0, 0) },
+                &["x"],
+                &["w"],
+                &["y"],
+            )],
+        };
+        let mut params = HashMap::new();
+        params.insert("w".to_string(), NdArray::zeros(&[2, 3, 2, 2]));
+        let r = verify_network(&net, &params);
+        assert!(!r.has_errors(), "{}", r.render_human());
+        assert!(r.has_code(codes::QUANT_HOSTILE));
+    }
+
+    #[test]
+    fn report_renders_and_serializes() {
+        let (net, mut params) = tiny_net();
+        params.insert("w".to_string(), NdArray::zeros(&[3, 2]));
+        let r = verify_network(&net, &params);
+        let human = r.render_human();
+        assert!(human.contains("error[NNL-E006]"), "{human}");
+        assert!(human.contains("1 error"), "{human}");
+        let json = r.to_json().to_string();
+        assert!(json.contains("\"NNL-E006\""), "{json}");
+        assert!(json.contains("\"errors\""), "{json}");
+    }
+
+    // --- translation validation: the verifier must reject mutants ---
+
+    fn tiny_plan() -> CompiledNet {
+        let (net, params) = tiny_net();
+        CompiledNet::compile_with(&net, &params, OptLevel::O0).expect("tiny net compiles")
+    }
+
+    #[test]
+    fn pristine_plan_verifies() {
+        let plan = tiny_plan();
+        let r = verify_plan(&plan);
+        assert!(r.is_clean(), "{}", r.render_human());
+        assert!(plan.memory_plan().is_some(), "tiny plan should have a memory plan");
+    }
+
+    #[test]
+    fn reordered_steps_are_p001() {
+        let mut plan = tiny_plan();
+        plan.mutate_steps(|steps| steps.swap(0, 1));
+        let r = verify_plan(&plan);
+        assert!(r.has_code(codes::PLAN_ORDER), "{}", r.render_human());
+    }
+
+    #[test]
+    fn freed_output_slot_is_p003() {
+        let mut plan = tiny_plan();
+        let out = plan.output_slots()[0];
+        plan.mutate_steps(|steps| steps.last_mut().unwrap().free_after.push(out));
+        let r = verify_plan(&plan);
+        assert!(r.has_code(codes::PLAN_OUTPUT), "{}", r.render_human());
+    }
+
+    #[test]
+    fn double_free_is_p007() {
+        let mut plan = tiny_plan();
+        plan.mutate_steps(|steps| {
+            let extra: Vec<usize> =
+                steps.iter().flat_map(|s| s.free_after.clone()).collect();
+            assert!(!extra.is_empty(), "tiny plan frees its intermediate");
+            steps.last_mut().unwrap().free_after.extend(extra);
+        });
+        let r = verify_plan(&plan);
+        assert!(r.has_code(codes::PLAN_BAD_FREE), "{}", r.render_human());
+    }
+
+    #[test]
+    fn seeded_arena_overlap_is_p004() {
+        let plan = tiny_plan();
+        let mut m = plan.memory_plan().expect("memory plan").clone();
+        // collapse every allocation onto offset 0: the two live-at-the-
+        // boundary slots (h and y) now share bytes
+        let n_alloc = m.slots.iter().flatten().count();
+        assert!(n_alloc >= 2, "need at least two allocations to collide");
+        for a in m.slots.iter_mut().flatten() {
+            a.offset = 0;
+        }
+        let mut plan = plan;
+        plan.inject_memory_plan(m);
+        let r = verify_plan(&plan);
+        assert!(r.has_code(codes::PLAN_ARENA_OVERLAP), "{}", r.render_human());
+    }
+
+    #[test]
+    fn shifted_live_range_is_p006() {
+        let plan = tiny_plan();
+        let mut m = plan.memory_plan().expect("memory plan").clone();
+        let a: &mut SlotAlloc =
+            m.slots.iter_mut().flatten().next().expect("an allocation");
+        a.start += 1;
+        let mut plan = plan;
+        plan.inject_memory_plan(m);
+        let r = verify_plan(&plan);
+        assert!(r.has_code(codes::PLAN_MISMATCH), "{}", r.render_human());
+    }
+
+    #[test]
+    fn out_of_bounds_offset_is_p005() {
+        let plan = tiny_plan();
+        let mut m = plan.memory_plan().expect("memory plan").clone();
+        let a: &mut SlotAlloc =
+            m.slots.iter_mut().flatten().next().expect("an allocation");
+        a.offset = m.peak_bytes; // offset + bytes now exceeds the arena
+        let mut plan = plan;
+        plan.inject_memory_plan(m);
+        let r = verify_plan(&plan);
+        assert!(r.has_code(codes::PLAN_ARENA_BOUNDS), "{}", r.render_human());
+    }
+
+    #[test]
+    fn artifact_roundtrip_checks_clean() {
+        let (net, params) = tiny_net();
+        let plist: Vec<(String, NdArray)> =
+            params.iter().map(|(k, v)| (k.clone(), v.clone())).collect();
+        let bytes = crate::converters::nnb::to_nnb(&net, &plist);
+        let r = check_artifact(&bytes).expect("valid artifact decodes");
+        assert!(r.is_clean(), "{}", r.render_human());
+    }
+
+    #[test]
+    fn corrupt_artifact_flags_e006_before_compile() {
+        let (net, params) = tiny_net();
+        let mut plist: Vec<(String, NdArray)> =
+            params.iter().map(|(k, v)| (k.clone(), v.clone())).collect();
+        for p in plist.iter_mut() {
+            if p.0 == "w" {
+                p.1 = NdArray::zeros(&[3, 2]); // wrong feature count
+            }
+        }
+        let bytes = crate::converters::nnb::to_nnb(&net, &plist);
+        let r = check_artifact(&bytes).expect("artifact still decodes");
+        assert!(r.has_code(codes::SHAPE_MISMATCH), "{}", r.render_human());
+        assert!(r.has_errors());
+    }
+}

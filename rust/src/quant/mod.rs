@@ -170,8 +170,15 @@ pub struct QTensor {
 
 impl QTensor {
     /// Symmetric per-channel quantization of `w` along `channel_axis`.
-    pub fn quantize(w: &NdArray, channel_axis: usize) -> QTensor {
-        assert!(channel_axis < w.rank(), "channel axis out of range");
+    /// Errs (rather than panicking) on an out-of-range axis: the axis
+    /// can come from an untrusted artifact's layer table.
+    pub fn quantize(w: &NdArray, channel_axis: usize) -> Result<QTensor, String> {
+        if channel_axis >= w.rank() {
+            return Err(format!(
+                "quantize: channel axis {channel_axis} out of range for rank-{} weight",
+                w.rank()
+            ));
+        }
         let dims = w.dims().to_vec();
         let outer: usize = dims[..channel_axis].iter().product();
         let ch = dims[channel_axis];
@@ -200,7 +207,7 @@ impl QTensor {
                 );
             }
         }
-        QTensor { dims, channel_axis, data, scales }
+        Ok(QTensor { dims, channel_axis, data, scales })
     }
 
     /// Back to f32 (the fallback boundary, and the base-plan binding).
@@ -314,7 +321,7 @@ pub fn quantize_model(
                         && arr.dims()[axis] > 0
                         && arr.size() / arr.dims()[axis] <= int8::MAX_EXACT_K =>
                 {
-                    QParam::Int8(QTensor::quantize(arr, axis))
+                    QParam::Int8(QTensor::quantize(arr, axis)?)
                 }
                 _ => QParam::Float(arr.clone()),
             };
@@ -505,8 +512,7 @@ impl QuantizedNet {
                         steps.push(QStep::Passthrough);
                         continue;
                     }
-                    requantized = Some(QTensor::quantize(w, axis));
-                    requantized.as_ref().expect("just set")
+                    &*requantized.insert(QTensor::quantize(w, axis)?)
                 }
             };
             let Some(range) = range else {
@@ -675,11 +681,18 @@ impl InferencePlan for QuantizedNet {
             env[i] = Some(a.clone());
         }
         for (st, qs) in self.plan.steps().iter().zip(&self.steps) {
-            let act = |s: usize| env[s].as_ref().expect("plan liveness invariant broken");
+            let act = |s: usize| {
+                env[s].as_ref().ok_or_else(|| {
+                    format!(
+                        "layer '{}': [NNL-P002] slot read after its planned free (plan liveness invariant broken)",
+                        st.name
+                    )
+                })
+            };
             let y = match qs {
                 QStep::Dense(q) => {
                     let x = match st.args.first() {
-                        Some(Src::Act(s)) => act(*s),
+                        Some(Src::Act(s)) => act(*s)?,
                         _ => return Err(format!("layer '{}': malformed dense step", st.name)),
                     };
                     self.run_dense(q, x).map_err(|e| format!("layer '{}': {e}", st.name))?
@@ -688,7 +701,7 @@ impl InferencePlan for QuantizedNet {
                     let mut xs: Vec<&NdArray> = Vec::with_capacity(st.args.len());
                     for a in &st.args {
                         match a {
-                            Src::Act(s) => xs.push(act(*s)),
+                            Src::Act(s) => xs.push(act(*s)?),
                             Src::Param(i) => xs.push(self.plan.param(*i)),
                         }
                     }
@@ -707,10 +720,10 @@ impl InferencePlan for QuantizedNet {
             .output_slots()
             .iter()
             .map(|&s| {
-                env[s]
-                    .as_ref()
-                    .cloned()
-                    .ok_or_else(|| "plan output slot empty (liveness invariant broken)".into())
+                env[s].as_ref().cloned().ok_or_else(|| {
+                    "[NNL-P003] plan output slot empty (plan liveness invariant broken)"
+                        .to_string()
+                })
             })
             .collect()
     }
@@ -811,7 +824,7 @@ mod tests {
     fn qtensor_roundtrip_error_bounded_by_half_scale_per_channel() {
         let mut rng = Rng::new(9);
         let w = rng.randn(&[6, 5], 2.0);
-        let q = QTensor::quantize(&w, 1);
+        let q = QTensor::quantize(&w, 1).unwrap();
         assert_eq!(q.scales.len(), 5);
         let back = q.dequantize();
         for r in 0..6 {
@@ -822,9 +835,15 @@ mod tests {
         }
         // conv layout: per-dim-0 channel
         let wc = rng.randn(&[3, 2, 2, 2], 1.0);
-        let qc = QTensor::quantize(&wc, 0);
+        let qc = QTensor::quantize(&wc, 0).unwrap();
         assert_eq!(qc.scales.len(), 3);
         assert!(qc.dequantize().allclose(&wc, qc.scales.iter().cloned().fold(0.0, f32::max), 0.0));
+    }
+
+    #[test]
+    fn quantize_rejects_out_of_range_axis() {
+        let w = NdArray::zeros(&[4, 3]);
+        assert!(QTensor::quantize(&w, 2).is_err());
     }
 
     #[test]

@@ -112,10 +112,11 @@ mod imp {
         }
     }
 
-    // PJRT CPU client handles are safe to move across threads (the C API
-    // is thread-safe for execution); the wrapper types just lack the
-    // auto-trait because of raw pointers. Workers each own their own
-    // executable anyway.
+    // SAFETY: PJRT CPU client handles are safe to move across threads
+    // (the C API is documented thread-safe for execution); the wrapper
+    // types only lack the auto-trait because they hold raw pointers.
+    // Each serve worker owns its own executable, so ownership transfer
+    // is the only cross-thread operation — no shared mutation occurs.
     unsafe impl Send for StaticExecutable {}
 }
 

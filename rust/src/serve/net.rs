@@ -215,6 +215,13 @@ impl Registry {
     /// Deploy from raw artifact bytes (magic-sniffed NNB1 → f32 plan,
     /// NNB2 → int8 plan) — the `DEPLOY` verb's backend. NNP archives
     /// are path-shaped (zip), so they deploy via the CLI, not the wire.
+    ///
+    /// Every artifact runs the full static verifier
+    /// ([`crate::nnp::verify`]) before the hot-swap: a graph whose
+    /// shapes do not close or whose compiled plan fails translation
+    /// validation is rejected as [`ServeError::InvalidRequest`] (the
+    /// first stable `NNL-*` code in the message) and live traffic
+    /// never sees it.
     pub fn deploy_artifact(
         &self,
         name: &str,
@@ -225,6 +232,18 @@ impl Registry {
                 "DEPLOY expects an NNB1/NNB2 image (deploy .nnp archives via the CLI)"
                     .to_string(),
             ));
+        }
+        // Static verification gate. `check_artifact` re-decodes the
+        // image; that double decode is fine on the deploy path (cold,
+        // human-paced) and keeps the verifier independent of the
+        // engine it guards.
+        let report = crate::nnp::verify::check_artifact(bytes)
+            .map_err(ServeError::InvalidRequest)?;
+        if report.has_errors() {
+            return Err(ServeError::InvalidRequest(format!(
+                "artifact failed static verification:\n{}",
+                report.render_human()
+            )));
         }
         let (plan, kind): (Arc<dyn InferencePlan>, &'static str) =
             match crate::converters::nnb::NnbEngine::load(bytes)
@@ -1076,5 +1095,28 @@ mod tests {
         let (v, kind) = reg.deploy_artifact("mlp", &image).unwrap();
         assert_eq!((v, kind), (1, "f32"));
         assert!(reg.contains("mlp"));
+    }
+
+    #[test]
+    fn deploy_rejects_artifact_failing_static_verification() {
+        // Acceptance criterion: a corrupted-but-well-formed artifact must be
+        // rejected by the DEPLOY path with a stable error code, before any
+        // model swap becomes visible to clients.
+        let reg = registry_with(&[]);
+        let (net, params) = crate::models::zoo::export_eval("mlp", 3);
+        let mut params: Vec<(String, NdArray)> = params.into_iter().collect();
+        // Grow one weight matrix by a row: the image still decodes, but shape
+        // inference over the graph no longer closes.
+        let idx = params
+            .iter()
+            .position(|(_, a)| a.dims().len() == 2)
+            .expect("mlp has a rank-2 weight");
+        let d = params[idx].1.dims().to_vec();
+        params[idx].1 = NdArray::zeros(&[d[0] + 1, d[1]]);
+        let image = crate::converters::nnb::to_nnb(&net, &params);
+        let err = reg.deploy_artifact("bad", &image).unwrap_err();
+        assert!(matches!(err, ServeError::InvalidRequest(_)), "{err}");
+        assert!(err.to_string().contains("NNL-E006"), "{err}");
+        assert!(!reg.contains("bad"), "rejected model must not be swapped in");
     }
 }

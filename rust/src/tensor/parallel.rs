@@ -34,7 +34,12 @@ use std::sync::{Arc, Condvar, Mutex, OnceLock};
 /// in [`for_each_chunk`] waiting on the `done` counter.
 #[derive(Clone, Copy)]
 struct RunPtr(*const (dyn Fn(usize) + Sync));
+// SAFETY: the pointee is `Sync` (bound in the type), so shared access
+// from any thread is fine; the pointer itself is only dereferenced
+// under the claim protocol documented at [`drain`], which guarantees
+// the pointee outlives every dereference.
 unsafe impl Send for RunPtr {}
+// SAFETY: as above — `&RunPtr` only ever yields a `&dyn Fn + Sync`.
 unsafe impl Sync for RunPtr {}
 
 /// One published unit of pool work.
@@ -160,12 +165,14 @@ fn drain(job: &Job) {
         if i >= job.n_chunks {
             return;
         }
-        // Safe to dereference only *after* a successful claim: chunk i
-        // is now claimed-but-not-done, so `done < n_chunks` holds until
-        // we finish it — the submitter is pinned in `for_each_chunk`'s
-        // completion wait and the closure behind the pointer is alive.
+        // SAFETY: the pointer may be dereferenced only *after* a
+        // successful claim: chunk i is now claimed-but-not-done, so
+        // `done < n_chunks` holds until we finish it — the submitter is
+        // pinned in `for_each_chunk`'s completion wait and the closure
+        // behind the pointer (owned by that stack frame) is alive.
         // (Before a claim the job may already be finished and the
-        // submitter gone.)
+        // submitter gone; `loom_pool_late_joiner_claims_nothing` in
+        // tests/loom_models.rs model-checks exactly this rule.)
         let f = unsafe { &*job.run.0 };
         let ok = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(i)));
         if ok.is_err() {
@@ -234,7 +241,13 @@ pub fn for_each_chunk(n_chunks: usize, f: impl Fn(usize) + Sync) {
 
 /// Shared-to-mutable bridge for disjoint chunk writes.
 struct SendPtr<T>(*mut T);
+// SAFETY: the wrapped pointer is only materialised into slices inside
+// [`for_each_chunk_mut`], whose chunk layout makes every derived slice
+// disjoint — so handing the pointer to another thread never creates
+// aliasing mutable access. `T: Send` carries the element requirement.
 unsafe impl<T: Send> Send for SendPtr<T> {}
+// SAFETY: as above — a `&SendPtr` exposes no operations at all; all
+// access goes through the disjoint-slice construction below.
 unsafe impl<T: Send> Sync for SendPtr<T> {}
 
 /// Split `data` into consecutive chunks of `chunk_len` (last one may be
@@ -256,7 +269,12 @@ pub fn for_each_chunk_mut<T: Send>(
     for_each_chunk(n_chunks, |i| {
         let start = i * chunk_len;
         let end = (start + chunk_len).min(len);
-        // disjoint by construction: chunk i covers [i·chunk_len, …)
+        // SAFETY: chunk i covers exactly [i·chunk_len, min((i+1)·chunk_len,
+        // len)) — chunks are disjoint by construction and stay inside the
+        // original `&mut [T]`, which outlives this call because
+        // `for_each_chunk` returns only after every chunk completed. Each
+        // chunk index is executed exactly once (pool claim protocol), so
+        // no two live slices ever alias.
         let chunk = unsafe { std::slice::from_raw_parts_mut(base.0.add(start), end - start) };
         f(i, chunk);
     });

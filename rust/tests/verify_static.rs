@@ -1,0 +1,122 @@
+//! Acceptance suite for the static verifier (`nnp::verify` / `nnl
+//! check`):
+//!
+//! - every zoo model passes `check_model` error-free, which internally
+//!   compiles at O0/O1/O2 and runs translation validation on each plan;
+//! - a well-formed artifact carrying an inconsistent weight is flagged
+//!   with the stable shape code `NNL-E006`;
+//! - `check_artifact` never panics on corrupted bytes: random bit
+//!   flips and truncations of real NNB1/NNB2 images (seeded via
+//!   `utils::prop`) must come back as `Err` (undecodable) or a
+//!   `Report` (decodable, possibly diagnosed) — anything else is a
+//!   crash a hostile DEPLOY payload could trigger in the server.
+
+use std::collections::HashMap;
+
+use nnl::bench_quant::random_inputs;
+use nnl::converters::nnb;
+use nnl::models::zoo;
+use nnl::nnp::verify;
+use nnl::quant::{quantize_net, QuantConfig};
+use nnl::tensor::{NdArray, Rng};
+
+#[test]
+fn every_zoo_model_checks_clean_at_all_levels() {
+    for name in zoo::model_names() {
+        let (net, params) = zoo::export_eval(name, 11);
+        let report = verify::check_model(&net, &params);
+        assert!(
+            !report.has_errors(),
+            "{name}: static verification found errors:\n{}",
+            report.render_human()
+        );
+    }
+}
+
+#[test]
+fn corrupted_weight_in_artifact_is_flagged_e006() {
+    let (net, params) = zoo::export_eval("mlp", 3);
+    let mut params: Vec<(String, NdArray)> = params.into_iter().collect();
+    let idx = params
+        .iter()
+        .position(|(_, a)| a.dims().len() == 2)
+        .expect("mlp has a rank-2 weight");
+    let d = params[idx].1.dims().to_vec();
+    params[idx].1 = NdArray::zeros(&[d[0] + 1, d[1]]);
+    let image = nnb::to_nnb(&net, &params);
+    let report = verify::check_artifact(&image).expect("image still decodes");
+    assert!(report.has_errors());
+    assert!(
+        report.has_code(verify::codes::SHAPE_MISMATCH),
+        "want NNL-E006, got:\n{}",
+        report.render_human()
+    );
+}
+
+/// Flip one bit somewhere in `image` and run the checker; the property
+/// is only that it terminates with a `Result`, never a panic. (The
+/// decoder is length-guarded throughout, so a flipped count or length
+/// field must surface as `Err("truncated NNB")`-style decode failures.)
+fn flip_and_check(image: &[u8], seed: u64, cases: usize) {
+    nnl::utils::prop::check(
+        seed,
+        cases,
+        |rng| (rng.below(image.len()), rng.below(8) as u8),
+        |&(pos, bit)| {
+            let mut bytes = image.to_vec();
+            bytes[pos] ^= 1 << bit;
+            match verify::check_artifact(&bytes) {
+                Ok(report) => {
+                    // decodable: the report must also serialize (the
+                    // CLI's --json path) without panicking
+                    let _ = report.to_json().to_string();
+                    let _ = report.render_human();
+                    Ok(())
+                }
+                Err(_) => Ok(()), // undecodable is a fine answer
+            }
+        },
+    );
+}
+
+fn truncate_and_check(image: &[u8], seed: u64, cases: usize) {
+    nnl::utils::prop::check(
+        seed,
+        cases,
+        |rng| rng.below(image.len()),
+        |&keep| {
+            match verify::check_artifact(&image[..keep]) {
+                Ok(report) => {
+                    let _ = report.render_human();
+                    Ok(())
+                }
+                Err(_) => Ok(()),
+            }
+        },
+    );
+}
+
+#[test]
+fn bit_flipped_nnb1_never_panics_the_checker() {
+    let (net, params) = zoo::export_eval("mlp", 7);
+    let image = nnb::to_nnb(&net, &params.into_iter().collect::<Vec<_>>());
+    // pristine image is clean
+    let report = verify::check_artifact(&image).expect("pristine image decodes");
+    assert!(!report.has_errors(), "{}", report.render_human());
+    flip_and_check(&image, 17, 48);
+    truncate_and_check(&image, 18, 16);
+}
+
+#[test]
+fn bit_flipped_nnb2_never_panics_the_checker() {
+    let (net, params) = zoo::export_eval("mlp", 7);
+    let params: HashMap<String, NdArray> = params.into_iter().collect();
+    let calib = random_inputs(&net, 4, &mut Rng::new(9));
+    let (model, _) =
+        quantize_net(&net, &params, &calib, &QuantConfig::default()).expect("mlp quantizes");
+    let image = nnb::to_nnb2(&model);
+    let report = verify::check_artifact(&image).expect("pristine NNB2 decodes");
+    assert!(!report.has_errors(), "{}", report.render_human());
+    flip_and_check(&image, 19, 48);
+    truncate_and_check(&image, 20, 16);
+}
