@@ -227,7 +227,30 @@ pub fn run(quick: bool) -> ServeBenchReport {
         ),
         ("batched_no_worse", Json::Bool(batched_no_worse)),
         ("int8_served", Json::Bool(int8_served)),
+        ("robustness", robustness_totals(&registry)),
     ]);
     drop(server);
     ServeBenchReport { text, json }
+}
+
+/// Aggregate the fault-tolerance counters across every hosted model —
+/// on a healthy chaos-disabled run each total is 0, which is itself
+/// the number the CI smoke wants to see.
+fn robustness_totals(registry: &Registry) -> Json {
+    let stats = registry.stats_json();
+    let keys = ["panics_caught", "worker_restarts", "deadline_expired", "retries"];
+    let mut totals = [0usize; 4];
+    if let Json::Obj(models) = &stats {
+        for model in models.values() {
+            for (i, k) in keys.iter().enumerate() {
+                totals[i] += model.get(k).as_usize().unwrap_or(0);
+            }
+        }
+    }
+    Json::obj(vec![
+        ("panics_caught", Json::num(totals[0] as f64)),
+        ("worker_restarts", Json::num(totals[1] as f64)),
+        ("deadline_expired", Json::num(totals[2] as f64)),
+        ("retries", Json::num(totals[3] as f64)),
+    ])
 }

@@ -1,0 +1,476 @@
+//! Deterministic fault injection for the serving stack.
+//!
+//! Robustness claims are only as good as the failures they were tested
+//! against, so this module makes failure a first-class, *reproducible*
+//! input: a seeded [`Schedule`] maps named injection [`Point`]s (queue
+//! admission, worker execution, pool chunk dispatch, net read/write,
+//! artifact decode) to faults — panics, delays, I/O errors, corrupt
+//! frames — fired deterministically from `hash(seed, point, hit#)`.
+//! The same seed and spec always produce the same fault sequence, so a
+//! chaos-test failure replays exactly.
+//!
+//! The whole layer is gated behind the `chaos` cargo feature. With the
+//! feature **off** (every production build), [`fired`] is an
+//! `#[inline(always)]` `None`: the helpers below constant-fold away
+//! and the injection points in `serve`, `serve::net`, and
+//! `tensor::parallel` cost literally nothing — the CI `chaos` job
+//! asserts the serve bench is unchanged. With the feature **on**, a
+//! schedule is armed either from the environment
+//! (`NNL_CHAOS_SPEC` + `NNL_CHAOS_SEED`) on first use or
+//! programmatically via [`install`]/[`clear`] in tests.
+//!
+//! Spec grammar (comma-separated rules):
+//!
+//! ```text
+//! point:kind[:rate[:param]]
+//!   point ∈ admit | exec | worker | pool | net.read | net.write | decode
+//!   kind  ∈ panic | delay | ioerr | corrupt
+//!   rate  ∈ [0.0, 1.0]   probability per hit (default 1.0)
+//!   param = delay millis (delay) or corruption salt (corrupt); default 5
+//! ```
+//!
+//! Example: `NNL_CHAOS_SPEC="exec:panic:0.1,net.write:corrupt:0.2" \
+//! NNL_CHAOS_SEED=42 cargo test --features chaos --test chaos_serve`.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Named injection points, one per fault-tolerance boundary the
+/// serving stack defends. The short names are the spec syntax.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Point {
+    /// `admit` — request admission in `serve::submit_on`, before the
+    /// bounded queue is touched.
+    QueueAdmit,
+    /// `exec` — inside a serve worker's `catch_unwind` boundary,
+    /// alongside `InferencePlan::execute_positional`. A panic here
+    /// must become a typed `ServeError::Internal` for that request.
+    WorkerExec,
+    /// `worker` — a serve worker's batch loop, *outside* the
+    /// per-request boundary. A panic here kills the worker iteration:
+    /// the reply guard must still answer every held request and
+    /// supervision must resurrect the worker.
+    WorkerLoop,
+    /// `pool` — a `tensor::parallel` pool worker between taking a job
+    /// and draining chunks. The submitter always drains remaining
+    /// chunks itself, so a dying pool worker may slow a job but never
+    /// hang it.
+    PoolDispatch,
+    /// `net.read` — the connection handler's socket read path.
+    NetRead,
+    /// `net.write` — the connection handler's binary reply path;
+    /// `corrupt` truncates the reply payload (detectably) so clients
+    /// exercise resync + retry.
+    NetWrite,
+    /// `decode` — artifact bytes entering `Registry::deploy_artifact`;
+    /// `corrupt` flips bits so the decoder/verifier rejection path is
+    /// exercised with real damage.
+    ArtifactDecode,
+}
+
+/// Number of distinct injection points (sizes per-point hit counters).
+const N_POINTS: usize = 7;
+
+impl Point {
+    /// Every injection point, in spec-name order.
+    pub const ALL: [Point; N_POINTS] = [
+        Point::QueueAdmit,
+        Point::WorkerExec,
+        Point::WorkerLoop,
+        Point::PoolDispatch,
+        Point::NetRead,
+        Point::NetWrite,
+        Point::ArtifactDecode,
+    ];
+
+    /// The spec-syntax name (`admit`, `exec`, `worker`, `pool`,
+    /// `net.read`, `net.write`, `decode`).
+    pub fn name(self) -> &'static str {
+        match self {
+            Point::QueueAdmit => "admit",
+            Point::WorkerExec => "exec",
+            Point::WorkerLoop => "worker",
+            Point::PoolDispatch => "pool",
+            Point::NetRead => "net.read",
+            Point::NetWrite => "net.write",
+            Point::ArtifactDecode => "decode",
+        }
+    }
+
+    fn from_name(s: &str) -> Option<Point> {
+        Point::ALL.iter().copied().find(|p| p.name() == s)
+    }
+
+    fn index(self) -> usize {
+        match self {
+            Point::QueueAdmit => 0,
+            Point::WorkerExec => 1,
+            Point::WorkerLoop => 2,
+            Point::PoolDispatch => 3,
+            Point::NetRead => 4,
+            Point::NetWrite => 5,
+            Point::ArtifactDecode => 6,
+        }
+    }
+}
+
+/// What a rule injects when it fires.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Unwind the current thread (`panic!`).
+    Panic,
+    /// Sleep for the rule's `param` milliseconds.
+    Delay,
+    /// Surface an `io::Error` (connection-reset flavored).
+    IoErr,
+    /// Damage bytes in flight: truncate a reply frame / flip artifact
+    /// bits, per the point's [`mangle`]/[`flip_bytes`] semantics.
+    Corrupt,
+}
+
+impl FaultKind {
+    fn from_name(s: &str) -> Option<FaultKind> {
+        match s {
+            "panic" => Some(FaultKind::Panic),
+            "delay" => Some(FaultKind::Delay),
+            "ioerr" => Some(FaultKind::IoErr),
+            "corrupt" => Some(FaultKind::Corrupt),
+            _ => None,
+        }
+    }
+}
+
+/// One parsed spec entry: fire `kind` at `point` with probability
+/// `rate` per hit; `param` is the delay in milliseconds or the
+/// corruption salt.
+#[derive(Debug, Clone)]
+pub struct Rule {
+    pub point: Point,
+    pub kind: FaultKind,
+    pub rate: f64,
+    pub param: u64,
+}
+
+/// A fault the active schedule decided to fire at some hit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Fired {
+    Panic,
+    Delay(Duration),
+    IoErr,
+    /// Carries a per-fire salt so each corruption damages different
+    /// bytes while staying reproducible.
+    Corrupt(u64),
+}
+
+/// A seeded fault schedule: per-point hit counters plus the rule list.
+/// `decide` is pure in `(seed, point, hit#)` — two schedules built
+/// from the same spec and seed fire identically.
+pub struct Schedule {
+    seed: u64,
+    rules: Vec<Rule>,
+    hits: [AtomicU64; N_POINTS],
+}
+
+impl Schedule {
+    /// Parse a spec string (see module docs for the grammar).
+    pub fn parse(spec: &str, seed: u64) -> Result<Schedule, String> {
+        let mut rules = Vec::new();
+        for entry in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            let parts: Vec<&str> = entry.split(':').collect();
+            if parts.len() < 2 || parts.len() > 4 {
+                return Err(format!(
+                    "bad chaos rule '{entry}': expected point:kind[:rate[:param]]"
+                ));
+            }
+            let point = Point::from_name(parts[0]).ok_or_else(|| {
+                let valid: Vec<&str> = Point::ALL.iter().map(|p| p.name()).collect();
+                format!(
+                    "unknown injection point '{}' in '{entry}' (valid: {})",
+                    parts[0],
+                    valid.join(", ")
+                )
+            })?;
+            let kind = FaultKind::from_name(parts[1]).ok_or_else(|| {
+                format!(
+                    "unknown fault kind '{}' in '{entry}' (valid: panic, delay, ioerr, corrupt)",
+                    parts[1]
+                )
+            })?;
+            let rate = if parts.len() > 2 {
+                parts[2]
+                    .parse::<f64>()
+                    .map_err(|_| format!("bad rate '{}' in '{entry}'", parts[2]))?
+            } else {
+                1.0
+            };
+            if !(0.0..=1.0).contains(&rate) {
+                return Err(format!("rate {rate} out of [0,1] in '{entry}'"));
+            }
+            let param = if parts.len() > 3 {
+                parts[3]
+                    .parse::<u64>()
+                    .map_err(|_| format!("bad param '{}' in '{entry}'", parts[3]))?
+            } else {
+                5
+            };
+            rules.push(Rule { point, kind, rate, param });
+        }
+        if rules.is_empty() {
+            return Err("empty chaos spec".to_string());
+        }
+        Ok(Schedule::new(rules, seed))
+    }
+
+    /// Build a schedule from already-parsed rules.
+    pub fn new(rules: Vec<Rule>, seed: u64) -> Schedule {
+        Schedule { seed, rules, hits: std::array::from_fn(|_| AtomicU64::new(0)) }
+    }
+
+    /// Record one hit at `point` and decide whether a rule fires.
+    /// First matching rule (spec order) whose hash clears its rate
+    /// wins. Deterministic in `(seed, point, hit#)`.
+    pub fn decide(&self, point: Point) -> Option<Fired> {
+        let k = self.hits[point.index()].fetch_add(1, Ordering::Relaxed);
+        for (ri, rule) in self.rules.iter().enumerate() {
+            if rule.point != point {
+                continue;
+            }
+            let h = splitmix64(
+                self.seed
+                    ^ ((point.index() as u64 + 1) << 56)
+                    ^ ((ri as u64 + 1) << 48)
+                    ^ k,
+            );
+            // Top 53 bits → uniform in [0, 1).
+            let u = (h >> 11) as f64 / (1u64 << 53) as f64;
+            if u < rule.rate {
+                return Some(match rule.kind {
+                    FaultKind::Panic => Fired::Panic,
+                    FaultKind::Delay => Fired::Delay(Duration::from_millis(rule.param)),
+                    FaultKind::IoErr => Fired::IoErr,
+                    FaultKind::Corrupt => Fired::Corrupt(splitmix64(h ^ rule.param)),
+                });
+            }
+        }
+        None
+    }
+}
+
+/// SplitMix64 — the crate's standard seedable hash for reproducible
+/// pseudo-randomness (also used for retry jitter in `serve`).
+pub fn splitmix64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Flip `1 + seed % 7` bits at seed-derived offsets. Used by the
+/// `decode` corrupt fault and available to tests that want
+/// reproducible artifact damage.
+pub fn flip_bytes(seed: u64, buf: &mut [u8]) {
+    if buf.is_empty() {
+        return;
+    }
+    let n = 1 + (seed % 7) as usize;
+    let mut h = seed;
+    for _ in 0..n {
+        h = splitmix64(h);
+        let i = (h % buf.len() as u64) as usize;
+        buf[i] ^= 1u8 << ((h >> 32) & 7);
+    }
+}
+
+#[cfg(feature = "chaos")]
+mod active {
+    use super::Schedule;
+    use std::sync::{Arc, OnceLock, RwLock};
+
+    static ACTIVE: OnceLock<RwLock<Option<Arc<Schedule>>>> = OnceLock::new();
+
+    /// The armed schedule. Initialized once from `NNL_CHAOS_SPEC` /
+    /// `NNL_CHAOS_SEED` so `--features chaos` binaries can be driven
+    /// purely from the environment; tests overwrite via
+    /// `install`/`clear`.
+    pub(super) fn cell() -> &'static RwLock<Option<Arc<Schedule>>> {
+        ACTIVE.get_or_init(|| {
+            let from_env = std::env::var("NNL_CHAOS_SPEC").ok().and_then(|spec| {
+                let seed = std::env::var("NNL_CHAOS_SEED")
+                    .ok()
+                    .and_then(|v| v.parse().ok())
+                    .unwrap_or(0);
+                match Schedule::parse(&spec, seed) {
+                    Ok(s) => Some(Arc::new(s)),
+                    Err(e) => {
+                        eprintln!("NNL_CHAOS_SPEC ignored: {e}");
+                        None
+                    }
+                }
+            });
+            RwLock::new(from_env)
+        })
+    }
+}
+
+/// Arm `schedule` globally (replacing any active one). Chaos builds
+/// only; tests sharing a process must serialize around this.
+#[cfg(feature = "chaos")]
+pub fn install(schedule: Schedule) {
+    *active::cell().write().unwrap_or_else(|e| e.into_inner()) =
+        Some(std::sync::Arc::new(schedule));
+}
+
+/// Disarm fault injection (chaos builds only).
+#[cfg(feature = "chaos")]
+pub fn clear() {
+    *active::cell().write().unwrap_or_else(|e| e.into_inner()) = None;
+}
+
+/// Record a hit at `point` against the active schedule and return the
+/// fault to inject, if any. This is THE gate: with the `chaos` feature
+/// off it is an inlined `None`, so every helper below folds to nothing
+/// and the injection points are provably free.
+#[cfg(feature = "chaos")]
+#[inline]
+pub fn fired(point: Point) -> Option<Fired> {
+    let schedule = active::cell().read().unwrap_or_else(|e| e.into_inner()).clone();
+    schedule.and_then(|s| s.decide(point))
+}
+
+/// Chaos disabled: no schedule can exist, nothing ever fires.
+#[cfg(not(feature = "chaos"))]
+#[inline(always)]
+pub fn fired(_point: Point) -> Option<Fired> {
+    None
+}
+
+/// Injection helper for compute-path points (`admit`, `exec`,
+/// `worker`, `pool`): fires panics and delays; I/O-flavored kinds are
+/// meaningless here and ignored.
+#[inline]
+pub fn disrupt(point: Point) {
+    match fired(point) {
+        Some(Fired::Panic) => panic!("chaos: injected panic at {}", point.name()),
+        Some(Fired::Delay(d)) => std::thread::sleep(d),
+        _ => {}
+    }
+}
+
+/// Injection helper for I/O-path points: may inject a connection-reset
+/// error, a delay, or a panic before the guarded operation runs.
+#[inline]
+pub fn io_gate(point: Point) -> std::io::Result<()> {
+    match fired(point) {
+        Some(Fired::Panic) => panic!("chaos: injected panic at {}", point.name()),
+        Some(Fired::Delay(d)) => {
+            std::thread::sleep(d);
+            Ok(())
+        }
+        Some(Fired::IoErr) => Err(std::io::Error::new(
+            std::io::ErrorKind::ConnectionReset,
+            format!("chaos: injected I/O error at {}", point.name()),
+        )),
+        _ => Ok(()),
+    }
+}
+
+/// Injection helper for outbound frames: `corrupt` truncates the
+/// payload to half its length — detectable damage (the receiver's
+/// bounds-checked decoder reports a truncated frame) rather than
+/// silent bit rot, so chaos tests can still assert the *values* of
+/// successful replies. Other kinds behave as in [`io_gate`].
+#[inline]
+pub fn mangle(point: Point, buf: &mut Vec<u8>) -> std::io::Result<()> {
+    match fired(point) {
+        Some(Fired::Panic) => panic!("chaos: injected panic at {}", point.name()),
+        Some(Fired::Delay(d)) => {
+            std::thread::sleep(d);
+            Ok(())
+        }
+        Some(Fired::IoErr) => Err(std::io::Error::new(
+            std::io::ErrorKind::ConnectionReset,
+            format!("chaos: injected I/O error at {}", point.name()),
+        )),
+        Some(Fired::Corrupt(_)) => {
+            let keep = buf.len() / 2;
+            buf.truncate(keep);
+            Ok(())
+        }
+        None => Ok(()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_accepts_full_grammar() {
+        let s = Schedule::parse(
+            "admit:delay:0.5:2, exec:panic:0.25, net.write:corrupt, decode:corrupt:1.0:9",
+            7,
+        )
+        .expect("valid spec");
+        assert_eq!(s.rules.len(), 4);
+        assert_eq!(s.rules[0].point, Point::QueueAdmit);
+        assert_eq!(s.rules[0].kind, FaultKind::Delay);
+        assert_eq!(s.rules[0].param, 2);
+        assert_eq!(s.rules[1].rate, 0.25);
+        assert_eq!(s.rules[2].rate, 1.0);
+        assert_eq!(s.rules[3].param, 9);
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(Schedule::parse("", 0).is_err());
+        assert!(Schedule::parse("nosuchpoint:panic", 0).is_err());
+        assert!(Schedule::parse("exec:meteor", 0).is_err());
+        assert!(Schedule::parse("exec:panic:1.5", 0).is_err());
+        assert!(Schedule::parse("exec:panic:0.5:xyz", 0).is_err());
+        assert!(Schedule::parse("exec", 0).is_err());
+    }
+
+    #[test]
+    fn same_seed_fires_identically() {
+        let mk = || Schedule::parse("exec:panic:0.3,exec:delay:0.3:1,pool:ioerr:0.5", 1234)
+            .expect("valid spec");
+        let (a, b) = (mk(), mk());
+        for _ in 0..512 {
+            assert_eq!(a.decide(Point::WorkerExec), b.decide(Point::WorkerExec));
+            assert_eq!(a.decide(Point::PoolDispatch), b.decide(Point::PoolDispatch));
+            // A point with no rules never fires and never disturbs
+            // other points' counters.
+            assert_eq!(a.decide(Point::NetRead), None);
+        }
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let a = Schedule::parse("exec:panic:0.5", 1).expect("valid spec");
+        let b = Schedule::parse("exec:panic:0.5", 2).expect("valid spec");
+        let fires = |s: &Schedule| -> Vec<bool> {
+            (0..256).map(|_| s.decide(Point::WorkerExec).is_some()).collect()
+        };
+        assert_ne!(fires(&a), fires(&b));
+    }
+
+    #[test]
+    fn rates_are_respected_roughly() {
+        let s = Schedule::parse("exec:panic:0.25", 99).expect("valid spec");
+        let n = 4096;
+        let hits = (0..n).filter(|_| s.decide(Point::WorkerExec).is_some()).count();
+        let frac = hits as f64 / n as f64;
+        assert!((0.18..0.32).contains(&frac), "rate 0.25 produced {frac}");
+    }
+
+    #[test]
+    fn flip_bytes_damages_and_reproduces() {
+        let orig: Vec<u8> = (0..64u8).collect();
+        let mut a = orig.clone();
+        let mut b = orig.clone();
+        flip_bytes(0xDEAD_BEEF, &mut a);
+        flip_bytes(0xDEAD_BEEF, &mut b);
+        assert_ne!(a, orig, "corruption must change bytes");
+        assert_eq!(a, b, "same seed must damage identically");
+    }
+}

@@ -128,6 +128,29 @@
 //! `nnl serve --listen ADDR --models name=path,...` and
 //! `nnl bench-serve --net` (→ `BENCH_serve.json`).
 //!
+//! ## Fault tolerance: isolation, supervision, deadlines, chaos
+//!
+//! The serving stack assumes requests *will* fail and proves it
+//! survives: a panicking request is caught at the worker's
+//! `catch_unwind` boundary and answered with a typed
+//! [`serve::ServeError::Internal`] (that worker's scratch arena is
+//! discarded, never reused); serve and pool workers are **supervised**
+//! — a panic that escapes per-request isolation resurrects the worker
+//! in place and bumps a `worker_restarts` counter, so no worker stays
+//! dead. Requests carry optional **deadlines**
+//! ([`serve::Client::submit_with_deadline`]): work that expires in the
+//! queue is shed *before* compute with
+//! [`serve::ServeError::DeadlineExceeded`]. Clients retry transient
+//! failures (admission shedding, transport errors — never `Internal`
+//! or verifier rejections) with seeded jittered exponential backoff
+//! ([`serve::RetryPolicy`]), and load balancers probe the `HEALTH`
+//! verb for per-model readiness. All of it is exercised by
+//! deterministic fault injection ([`faults`], `--features chaos`):
+//! seeded schedules of panics, delays, I/O errors, and corrupt frames
+//! at named injection points, compiled to zero-cost no-ops when the
+//! feature is off. `tests/chaos_serve.rs` holds the headline
+//! invariant: every admitted request gets exactly one typed reply.
+//!
 //! ## Static verification: the checker beside the compiler
 //!
 //! [`nnp::verify`] is an independent verifier for everything the
@@ -189,6 +212,7 @@
 //! | [`quant`] | int8 calibration, `QuantizedNet`, NNB2 model |
 //! | [`serve`] | batched multi-threaded inference server |
 //! | [`serve::net`] | TCP front end: protocol, registry, hot reload |
+//! | [`faults`] | deterministic fault injection (`chaos` feature) |
 //! | [`monitor::metrics`] | serving metrics: histograms, shed counts |
 //! | [`converters`] | ONNX-lite, NNB/NNB2, frozen graph, Rust source |
 //! | [`runtime`] | AOT HLO artifacts through PJRT (`pjrt` feature) |
@@ -231,6 +255,7 @@ pub mod console;
 pub mod context;
 pub mod converters;
 pub mod data;
+pub mod faults;
 pub mod functions;
 pub mod graph;
 pub mod mixed_precision;

@@ -130,6 +130,17 @@ pub struct ModelMetrics {
     pub queue_depth: AtomicU64,
     /// Hot swaps performed under this name.
     pub swaps: AtomicU64,
+    /// Request panics caught at a worker's `catch_unwind` boundary
+    /// (each one answered with a typed `Internal` error).
+    pub panics_caught: AtomicU64,
+    /// Serve workers resurrected by supervision after a panic escaped
+    /// per-request isolation.
+    pub worker_restarts: AtomicU64,
+    /// Requests shed *before* compute because their deadline expired
+    /// while queued (answered with `DeadlineExceeded`).
+    pub deadline_expired: AtomicU64,
+    /// Client-side retries recorded by in-process `infer_with_retry`.
+    pub retries: AtomicU64,
     pub exec_ns: AtomicU64,
     pub latency_ns: AtomicU64,
     pub latency: Histogram,
@@ -147,6 +158,10 @@ impl Default for ModelMetrics {
             shed: AtomicU64::new(0),
             queue_depth: AtomicU64::new(0),
             swaps: AtomicU64::new(0),
+            panics_caught: AtomicU64::new(0),
+            worker_restarts: AtomicU64::new(0),
+            deadline_expired: AtomicU64::new(0),
+            retries: AtomicU64::new(0),
             exec_ns: AtomicU64::new(0),
             latency_ns: AtomicU64::new(0),
             latency: Histogram::default(),
@@ -191,6 +206,10 @@ impl ModelMetrics {
             shed: self.shed.load(Ordering::Relaxed),
             queue_depth: self.queue_depth.load(Ordering::Relaxed),
             swaps: self.swaps.load(Ordering::Relaxed),
+            panics_caught: self.panics_caught.load(Ordering::Relaxed),
+            worker_restarts: self.worker_restarts.load(Ordering::Relaxed),
+            deadline_expired: self.deadline_expired.load(Ordering::Relaxed),
+            retries: self.retries.load(Ordering::Relaxed),
             mean_batch_rows: rows as f64 / batches.max(1) as f64,
             mean_exec_ms: self.exec_ns.load(Ordering::Relaxed) as f64
                 / 1e6
@@ -217,6 +236,10 @@ pub struct MetricsSnapshot {
     pub shed: u64,
     pub queue_depth: u64,
     pub swaps: u64,
+    pub panics_caught: u64,
+    pub worker_restarts: u64,
+    pub deadline_expired: u64,
+    pub retries: u64,
     pub mean_batch_rows: f64,
     pub mean_exec_ms: f64,
     pub mean_latency_ms: f64,
@@ -244,6 +267,10 @@ impl MetricsSnapshot {
             ("shed", Json::num(self.shed as f64)),
             ("queue_depth", Json::num(self.queue_depth as f64)),
             ("swaps", Json::num(self.swaps as f64)),
+            ("panics_caught", Json::num(self.panics_caught as f64)),
+            ("worker_restarts", Json::num(self.worker_restarts as f64)),
+            ("deadline_expired", Json::num(self.deadline_expired as f64)),
+            ("retries", Json::num(self.retries as f64)),
             ("mean_batch_rows", Json::num(self.mean_batch_rows)),
             ("mean_exec_ms", Json::num(self.mean_exec_ms)),
             ("mean_latency_ms", Json::num(self.mean_latency_ms)),
@@ -313,5 +340,24 @@ mod tests {
         let j = s.to_json();
         assert_eq!(j.get("requests").as_usize(), Some(4));
         assert!(j.get("batch_size_distribution").as_obj().is_some());
+    }
+
+    #[test]
+    fn robustness_counters_flow_through_snapshot_and_json() {
+        let m = ModelMetrics::default();
+        m.panics_caught.fetch_add(2, Ordering::Relaxed);
+        m.worker_restarts.fetch_add(1, Ordering::Relaxed);
+        m.deadline_expired.fetch_add(3, Ordering::Relaxed);
+        m.retries.fetch_add(5, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert_eq!(s.panics_caught, 2);
+        assert_eq!(s.worker_restarts, 1);
+        assert_eq!(s.deadline_expired, 3);
+        assert_eq!(s.retries, 5);
+        let j = s.to_json();
+        assert_eq!(j.get("panics_caught").as_usize(), Some(2));
+        assert_eq!(j.get("worker_restarts").as_usize(), Some(1));
+        assert_eq!(j.get("deadline_expired").as_usize(), Some(3));
+        assert_eq!(j.get("retries").as_usize(), Some(5));
     }
 }

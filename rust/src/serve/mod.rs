@@ -39,12 +39,14 @@
 //! `benches/serve_throughput.rs` and `benches/serve_net.rs`.
 
 use std::collections::{HashMap, VecDeque};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::Ordering;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+use crate::faults;
 use crate::monitor::metrics::ModelMetrics;
 use crate::nnp::ir::NetworkDef;
 use crate::nnp::plan::{CompiledNet, InferencePlan};
@@ -73,6 +75,14 @@ pub enum ServeError {
     NoSuchModel(String),
     /// Malformed bytes on the wire ([`net`] framing/encoding).
     Protocol(String),
+    /// The request panicked inside a worker. The panic was caught at
+    /// the isolation boundary, the worker's scratch arena was
+    /// discarded, and only this request failed — but the failure is
+    /// deterministic for these inputs, so clients must never retry it.
+    Internal(String),
+    /// The request's deadline expired while it waited in the queue; it
+    /// was shed *before* compute ([`Client::submit_with_deadline`]).
+    DeadlineExceeded { waited_ms: u64 },
 }
 
 impl ServeError {
@@ -85,6 +95,8 @@ impl ServeError {
             ServeError::Execution(_) => 4,
             ServeError::NoSuchModel(_) => 5,
             ServeError::Protocol(_) => 6,
+            ServeError::Internal(_) => 7,
+            ServeError::DeadlineExceeded { .. } => 8,
         }
     }
 
@@ -97,7 +109,20 @@ impl ServeError {
             ServeError::Execution(_) => "execution",
             ServeError::NoSuchModel(_) => "no_such_model",
             ServeError::Protocol(_) => "protocol",
+            ServeError::Internal(_) => "internal",
+            ServeError::DeadlineExceeded { .. } => "deadline_exceeded",
         }
+    }
+
+    /// Whether an *in-process* client may safely resubmit: only
+    /// admission shedding ([`ServeError::Overloaded`]) is transient
+    /// here. `Internal` (a panicking request), shape/verifier
+    /// rejections, and execution failures are deterministic for the
+    /// same inputs — retrying re-burns compute for the same answer.
+    /// The wire client additionally retries transport-level failures;
+    /// see [`net::NetClient::infer_with_retry`].
+    pub fn retryable(&self) -> bool {
+        matches!(self, ServeError::Overloaded { .. })
     }
 
     /// Rebuild from a wire `(code, message)` pair — the client-side
@@ -109,6 +134,13 @@ impl ServeError {
             3 => ServeError::InvalidRequest(msg),
             4 => ServeError::Execution(msg),
             5 => ServeError::NoSuchModel(msg),
+            7 => ServeError::Internal(msg),
+            8 => {
+                // Display renders "... waited N ms ..."; recover N.
+                let waited_ms =
+                    msg.split_whitespace().find_map(|t| t.parse().ok()).unwrap_or(0);
+                ServeError::DeadlineExceeded { waited_ms }
+            }
             _ => ServeError::Protocol(msg),
         }
     }
@@ -126,6 +158,11 @@ impl std::fmt::Display for ServeError {
             ServeError::Execution(m) => write!(f, "execution failed: {m}"),
             ServeError::NoSuchModel(m) => write!(f, "no such model: '{m}'"),
             ServeError::Protocol(m) => write!(f, "protocol error: {m}"),
+            ServeError::Internal(m) => write!(f, "internal error: {m}"),
+            ServeError::DeadlineExceeded { waited_ms } => write!(
+                f,
+                "deadline exceeded: waited {waited_ms} ms in queue; shed before compute"
+            ),
         }
     }
 }
@@ -181,11 +218,60 @@ pub fn derive_queue_cap(plan: &dyn InferencePlan) -> usize {
     }
 }
 
+/// Client-side retry policy: jittered exponential backoff, seeded so
+/// tests replay identically. Used by [`Client::infer_with_retry`] and
+/// [`net::NetClient::infer_with_retry`]. Retry *eligibility* is the
+/// caller's contract ([`ServeError::retryable`] in process, plus
+/// transport errors on the wire) — the policy only shapes the
+/// schedule.
+#[derive(Debug, Clone)]
+pub struct RetryPolicy {
+    /// Retries after the first attempt (0 disables retry).
+    pub max_retries: usize,
+    /// Backoff before the first retry; doubles per attempt.
+    pub base: Duration,
+    /// Ceiling for the exponential growth.
+    pub cap: Duration,
+    /// Jitter seed — same seed, same backoff schedule.
+    pub seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_retries: 3,
+            base: Duration::from_millis(2),
+            cap: Duration::from_millis(100),
+            seed: 7,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// Backoff before retry `attempt` (0-based): `base * 2^attempt`
+    /// clamped to `cap`, then half-to-full jittered — spreading
+    /// synchronized retry storms while never sleeping less than half
+    /// the deterministic schedule. `salt` decorrelates concurrent
+    /// clients sharing one policy.
+    pub fn backoff(&self, attempt: usize, salt: u64) -> Duration {
+        let exp = self.base.saturating_mul(1u32 << attempt.min(16) as u32);
+        let ceil = exp.min(self.cap).max(Duration::from_micros(100));
+        let h = faults::splitmix64(
+            self.seed ^ salt.rotate_left(17) ^ ((attempt as u64) << 32),
+        );
+        let frac = (h >> 11) as f64 / (1u64 << 53) as f64;
+        ceil.mul_f64(0.5 + 0.5 * frac)
+    }
+}
+
 /// One queued inference request: positional inputs + reply channel.
 struct Request {
     inputs: Vec<NdArray>,
     rows: usize,
     enqueued: Instant,
+    /// Shed with [`ServeError::DeadlineExceeded`] if still queued past
+    /// this instant ([`Client::submit_with_deadline`]).
+    deadline: Option<Instant>,
     reply: Sender<ServeResult>,
 }
 
@@ -216,11 +302,21 @@ impl Queue {
         }
     }
 
+    /// Poisoning-safe lock: no worker holds the queue mutex across
+    /// user code, but chaos exists to check "never" — a thread that
+    /// somehow panicked at a lock-release point must not wedge every
+    /// other worker and client forever. The state is a plain deque +
+    /// flag, consistent at every release point, so recovering the
+    /// guard is sound.
+    fn lock_state(&self) -> std::sync::MutexGuard<'_, QueueState> {
+        self.state.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
     /// Enqueue, failing cleanly once the server shut down or the
     /// bounded queue is full (the caller owns `req.reply` error
     /// delivery via the returned error).
     fn push(&self, model: &str, req: Request) -> Result<(), ServeError> {
-        let mut st = self.state.lock().expect("queue lock");
+        let mut st = self.lock_state();
         if st.closed {
             return Err(ServeError::ShuttingDown);
         }
@@ -239,7 +335,7 @@ impl Queue {
 
     /// Blocking pop; `None` once the queue is closed *and* drained.
     fn pop(&self) -> Option<Request> {
-        let mut st = self.state.lock().expect("queue lock");
+        let mut st = self.lock_state();
         loop {
             if let Some(r) = st.items.pop_front() {
                 return Some(r);
@@ -247,7 +343,7 @@ impl Queue {
             if st.closed {
                 return None;
             }
-            st = self.cv.wait(st).expect("queue lock");
+            st = self.cv.wait(st).unwrap_or_else(|e| e.into_inner());
         }
     }
 
@@ -256,7 +352,7 @@ impl Queue {
     /// order); `None` on timeout, closed-and-drained, or a head too
     /// large for this batch.
     fn pop_until(&self, deadline: Instant, row_budget: usize) -> Option<Request> {
-        let mut st = self.state.lock().expect("queue lock");
+        let mut st = self.lock_state();
         loop {
             if let Some(front) = st.items.front() {
                 if front.rows > row_budget {
@@ -271,7 +367,7 @@ impl Queue {
             if now >= deadline {
                 return None;
             }
-            st = self.cv.wait_timeout(st, deadline - now).expect("queue lock").0;
+            st = self.cv.wait_timeout(st, deadline - now).unwrap_or_else(|e| e.into_inner()).0;
         }
     }
 
@@ -279,7 +375,7 @@ impl Queue {
     /// requests stay — workers drain them to completion before
     /// exiting, which is what makes shutdown graceful.
     fn close(&self) {
-        self.state.lock().expect("queue lock").closed = true;
+        self.lock_state().closed = true;
         self.cv.notify_all();
     }
 }
@@ -296,6 +392,14 @@ pub struct ServeStats {
     pub errors: u64,
     /// Requests refused by admission control.
     pub shed: u64,
+    /// Request panics caught at the worker isolation boundary.
+    pub panics_caught: u64,
+    /// Workers resurrected by supervision.
+    pub worker_restarts: u64,
+    /// Requests shed before compute because their deadline expired.
+    pub deadline_expired: u64,
+    /// In-process client retries ([`Client::infer_with_retry`]).
+    pub retries: u64,
     pub mean_batch_rows: f64,
     /// Mean wall time inside `CompiledNet::execute` per batch.
     pub mean_exec_ms: f64,
@@ -376,7 +480,24 @@ impl Server {
             let metrics = Arc::clone(&metrics);
             let cfg = cfg.clone();
             workers.push(std::thread::spawn(move || {
-                worker_loop(plan.as_ref(), &queue, &metrics, &cfg, batched)
+                // Supervised worker: a panic that escapes the
+                // per-request isolation boundary (an injected `worker`
+                // fault, a bug outside execute) lands here. The
+                // thread discards its scratch arena — a request that
+                // unwound mid-kernel must not leak state into the
+                // next one — counts the restart, and re-enters the
+                // loop, so a worker slot never stays dead. A normal
+                // return (queue closed and drained) exits.
+                loop {
+                    let run = catch_unwind(AssertUnwindSafe(|| {
+                        worker_loop(plan.as_ref(), &queue, &metrics, &cfg, batched)
+                    }));
+                    if run.is_ok() {
+                        break;
+                    }
+                    crate::tensor::kernels::purge_scratch();
+                    metrics.worker_restarts.fetch_add(1, Ordering::Relaxed);
+                }
             }));
         }
         Server { plan, queue, workers, metrics, batched }
@@ -395,6 +516,15 @@ impl Server {
     /// The bounded queue's capacity (admission-control limit).
     pub fn queue_cap(&self) -> usize {
         self.queue.cap
+    }
+
+    /// Workers currently alive (thread not finished). Supervision
+    /// resurrects a panicked worker in place, so in steady state this
+    /// equals the configured worker count; it only drops to zero
+    /// during shutdown. Health probes use it as the "not wedged"
+    /// signal.
+    pub fn alive_workers(&self) -> usize {
+        self.workers.iter().filter(|h| !h.is_finished()).count()
     }
 
     /// The live metrics sink.
@@ -422,7 +552,29 @@ impl Server {
     /// rejected here, before they can poison a batch, and a full
     /// queue sheds with [`ServeError::Overloaded`].
     pub fn submit(&self, inputs: Vec<NdArray>) -> Result<Receiver<ServeResult>, ServeError> {
-        submit_on(self.plan.as_ref(), self.batched, &self.queue, &self.metrics, inputs)
+        submit_on(self.plan.as_ref(), self.batched, &self.queue, &self.metrics, inputs, None)
+    }
+
+    /// [`Server::submit`] with a per-request deadline: if the request
+    /// is still queued when `timeout` elapses, a worker sheds it
+    /// *before* compute with [`ServeError::DeadlineExceeded`] — a
+    /// latency-sensitive caller never pays (and never makes the
+    /// server pay) for an answer it would discard. A request already
+    /// executing when its deadline passes finishes normally: the
+    /// deadline gates queue wait, not compute.
+    pub fn submit_with_deadline(
+        &self,
+        inputs: Vec<NdArray>,
+        timeout: Duration,
+    ) -> Result<Receiver<ServeResult>, ServeError> {
+        submit_on(
+            self.plan.as_ref(),
+            self.batched,
+            &self.queue,
+            &self.metrics,
+            inputs,
+            Some(Instant::now() + timeout),
+        )
     }
 
     /// Blocking convenience: submit and wait for the outputs.
@@ -459,6 +611,10 @@ impl Server {
             batches: s.batches,
             errors: s.errors,
             shed: s.shed,
+            panics_caught: s.panics_caught,
+            worker_restarts: s.worker_restarts,
+            deadline_expired: s.deadline_expired,
+            retries: s.retries,
             mean_batch_rows: s.mean_batch_rows,
             mean_exec_ms: s.mean_exec_ms,
             mean_latency_ms: s.mean_latency_ms,
@@ -504,13 +660,50 @@ pub struct Client {
 impl Client {
     /// Same contract as [`Server::submit`].
     pub fn submit(&self, inputs: Vec<NdArray>) -> Result<Receiver<ServeResult>, ServeError> {
-        submit_on(self.plan.as_ref(), self.batched, &self.queue, &self.metrics, inputs)
+        submit_on(self.plan.as_ref(), self.batched, &self.queue, &self.metrics, inputs, None)
+    }
+
+    /// Same contract as [`Server::submit_with_deadline`].
+    pub fn submit_with_deadline(
+        &self,
+        inputs: Vec<NdArray>,
+        timeout: Duration,
+    ) -> Result<Receiver<ServeResult>, ServeError> {
+        submit_on(
+            self.plan.as_ref(),
+            self.batched,
+            &self.queue,
+            &self.metrics,
+            inputs,
+            Some(Instant::now() + timeout),
+        )
     }
 
     /// Same contract as [`Server::infer`].
     pub fn infer(&self, inputs: Vec<NdArray>) -> ServeResult {
         let rx = self.submit(inputs)?;
         rx.recv().map_err(|_| ServeError::ShuttingDown)?
+    }
+
+    /// [`Client::infer`] with retry for transient rejections
+    /// ([`ServeError::retryable`] — admission shedding only): sleeps
+    /// per `policy`'s jittered backoff, bumps the model's `retries`
+    /// counter, and returns the last error once the budget is spent.
+    /// `Internal`, shape, and execution errors return immediately —
+    /// they are deterministic, retrying them only burns compute.
+    pub fn infer_with_retry(&self, inputs: Vec<NdArray>, policy: &RetryPolicy) -> ServeResult {
+        let mut attempt = 0usize;
+        loop {
+            match self.submit(inputs.clone()) {
+                Ok(rx) => return rx.recv().map_err(|_| ServeError::ShuttingDown)?,
+                Err(e) if e.retryable() && attempt < policy.max_retries => {
+                    self.metrics.retries.fetch_add(1, Ordering::Relaxed);
+                    std::thread::sleep(policy.backoff(attempt, 0));
+                    attempt += 1;
+                }
+                Err(e) => return Err(e),
+            }
+        }
     }
 }
 
@@ -522,6 +715,7 @@ fn submit_on(
     queue: &Queue,
     metrics: &ModelMetrics,
     inputs: Vec<NdArray>,
+    deadline: Option<Instant>,
 ) -> Result<Receiver<ServeResult>, ServeError> {
     let rows = plan.check_inputs(&inputs).map_err(ServeError::InvalidRequest)?;
     if batched && !inputs.iter().all(|a| a.dims().first().copied() == Some(rows)) {
@@ -529,18 +723,62 @@ fn submit_on(
             "all inputs of one request must share the batch dimension".to_string(),
         ));
     }
+    faults::disrupt(faults::Point::QueueAdmit);
     let (reply, rx) = channel();
-    match queue.push(plan.name(), Request { inputs, rows, enqueued: Instant::now(), reply }) {
-        Ok(()) => {
-            metrics.queue_depth.fetch_add(1, Ordering::Relaxed);
-            Ok(rx)
-        }
+    // Gauge before push: a worker may pop (and decrement) the instant
+    // push releases the lock, so incrementing afterwards would let the
+    // u64 gauge transiently wrap below zero.
+    metrics.queue_depth.fetch_add(1, Ordering::Relaxed);
+    match queue
+        .push(plan.name(), Request { inputs, rows, enqueued: Instant::now(), deadline, reply })
+    {
+        Ok(()) => Ok(rx),
         Err(e) => {
+            metrics.queue_depth.fetch_sub(1, Ordering::Relaxed);
             if matches!(e, ServeError::Overloaded { .. }) {
                 metrics.shed.fetch_add(1, Ordering::Relaxed);
             }
             Err(e)
         }
+    }
+}
+
+/// Requests a worker has popped but not yet answered. If anything
+/// unwinds while requests are held here (an injected `worker` fault, a
+/// bug outside the per-request boundary), the drop still answers each
+/// one with a typed `Internal` — the exactly-one-reply invariant
+/// survives the panic, and supervision restarts the worker.
+struct InFlight<'a> {
+    metrics: &'a ModelMetrics,
+    reqs: Vec<Request>,
+}
+
+impl Drop for InFlight<'_> {
+    fn drop(&mut self) {
+        for req in self.reqs.drain(..) {
+            finish(
+                self.metrics,
+                req,
+                Err(ServeError::Internal(
+                    "worker panicked while this request was in flight".to_string(),
+                )),
+            );
+        }
+    }
+}
+
+/// Answer `req` with [`ServeError::DeadlineExceeded`] if its deadline
+/// passed while it sat in the queue — shedding *before* compute is the
+/// whole point — otherwise hand it back for execution.
+fn shed_expired(metrics: &ModelMetrics, req: Request) -> Option<Request> {
+    match req.deadline {
+        Some(d) if Instant::now() >= d => {
+            let waited_ms = req.enqueued.elapsed().as_millis() as u64;
+            metrics.deadline_expired.fetch_add(1, Ordering::Relaxed);
+            finish(metrics, req, Err(ServeError::DeadlineExceeded { waited_ms }));
+            None
+        }
+        _ => Some(req),
     }
 }
 
@@ -555,29 +793,36 @@ fn worker_loop(
     // never block each other while idle
     while let Some(first) = queue.pop() {
         metrics.queue_depth.fetch_sub(1, Ordering::Relaxed);
-        let mut batch = vec![first];
+        let Some(first) = shed_expired(metrics, first) else { continue };
+        let mut flight = InFlight { metrics, reqs: vec![first] };
         if batched {
-            let mut rows = batch[0].rows;
+            let mut rows = flight.reqs[0].rows;
             let deadline = Instant::now() + cfg.max_wait;
             while rows < cfg.max_batch {
                 match queue.pop_until(deadline, cfg.max_batch - rows) {
                     Some(r) => {
                         metrics.queue_depth.fetch_sub(1, Ordering::Relaxed);
-                        rows += r.rows;
-                        batch.push(r);
+                        // an expired request is answered and dropped
+                        // here; the rest of the batch proceeds
+                        if let Some(r) = shed_expired(metrics, r) {
+                            rows += r.rows;
+                            flight.reqs.push(r);
+                        }
                     }
                     None => break, // deadline, closed, or next one too big
                 }
             }
         }
-        run_batch(plan, metrics, batch);
+        faults::disrupt(faults::Point::WorkerLoop);
+        run_batch(plan, metrics, &mut flight.reqs);
     }
 }
 
-fn run_batch(plan: &dyn InferencePlan, metrics: &ModelMetrics, mut batch: Vec<Request>) {
-    if batch.len() == 1 {
-        let req = batch.pop().expect("non-empty batch");
-        run_single(plan, metrics, req);
+fn run_batch(plan: &dyn InferencePlan, metrics: &ModelMetrics, batch: &mut Vec<Request>) {
+    if batch.len() <= 1 {
+        if let Some(req) = batch.pop() {
+            run_single(plan, metrics, req);
+        }
         return;
     }
     // concatenate each declared input across requests along axis 0
@@ -589,13 +834,13 @@ fn run_batch(plan: &dyn InferencePlan, metrics: &ModelMetrics, mut batch: Vec<Re
     }
     let total: usize = batch.iter().map(|r| r.rows).sum();
     let t0 = Instant::now();
-    let out = plan.execute_positional(&cat);
+    let out = execute_caught(plan, metrics, &cat);
     let exec_ns = t0.elapsed().as_nanos() as u64;
     match out {
         Err(e) => {
             metrics.record_batch(total, exec_ns);
-            for req in batch {
-                finish(metrics, req, Err(ServeError::Execution(e.clone())));
+            for req in batch.drain(..) {
+                finish(metrics, req, Err(e.clone()));
             }
         }
         Ok(outs) => {
@@ -603,14 +848,14 @@ fn run_batch(plan: &dyn InferencePlan, metrics: &ModelMetrics, mut batch: Vec<Re
                 // batch-invariance heuristic miss: discard the batched
                 // run (it is not counted) and answer each request from
                 // its own solo execution instead
-                for req in batch {
+                for req in batch.drain(..) {
                     run_single(plan, metrics, req);
                 }
                 return;
             }
             metrics.record_batch(total, exec_ns);
             let mut off = 0usize;
-            for req in batch {
+            for req in batch.drain(..) {
                 let rows = req.rows;
                 let slices: Vec<NdArray> =
                     outs.iter().map(|o| o.slice_axis(0, off, off + rows)).collect();
@@ -623,9 +868,46 @@ fn run_batch(plan: &dyn InferencePlan, metrics: &ModelMetrics, mut batch: Vec<Re
 
 fn run_single(plan: &dyn InferencePlan, metrics: &ModelMetrics, req: Request) {
     let t0 = Instant::now();
-    let out = plan.execute_positional(&req.inputs).map_err(ServeError::Execution);
+    let out = execute_caught(plan, metrics, &req.inputs);
     metrics.record_batch(req.rows, t0.elapsed().as_nanos() as u64);
     finish(metrics, req, out);
+}
+
+/// Run the plan inside the per-request isolation boundary: execution
+/// errors stay typed, and a panic — injected or real — becomes
+/// [`ServeError::Internal`] after the worker's scratch arena is
+/// discarded (a request that unwound mid-kernel must never leak
+/// half-written buffers into the next request on this thread).
+fn execute_caught(
+    plan: &dyn InferencePlan,
+    metrics: &ModelMetrics,
+    inputs: &[NdArray],
+) -> Result<Vec<NdArray>, ServeError> {
+    let caught = catch_unwind(AssertUnwindSafe(|| {
+        faults::disrupt(faults::Point::WorkerExec);
+        plan.execute_positional(inputs)
+    }));
+    match caught {
+        Ok(Ok(outs)) => Ok(outs),
+        Ok(Err(e)) => Err(ServeError::Execution(e)),
+        Err(payload) => {
+            crate::tensor::kernels::purge_scratch();
+            metrics.panics_caught.fetch_add(1, Ordering::Relaxed);
+            Err(ServeError::Internal(panic_message(payload.as_ref())))
+        }
+    }
+}
+
+/// Best-effort panic payload rendering (`&str` and `String` cover
+/// every `panic!` in practice).
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
 }
 
 fn finish(metrics: &ModelMetrics, req: Request, out: ServeResult) {

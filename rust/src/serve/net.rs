@@ -23,6 +23,7 @@
 //!                                           -> string (JSON {version, kind})
 //!             UNDEPLOY(5) model:string
 //!             PING(6)
+//!             HEALTH(7)                     -> string (JSON readiness)
 //! error    := status:u8 != 0, message:string
 //! ```
 //!
@@ -50,6 +51,21 @@
 //! queue replies [`ServeError::Overloaded`] — typed, immediate, never
 //! a timeout.
 //!
+//! ## Fault tolerance
+//!
+//! Both protocols cap one message ([`MAX_FRAME`] for binary frames,
+//! [`NetConfig::max_line`] for JSON lines) and answer the violation
+//! with a typed error before closing — framing is unrecoverable, so
+//! the connection never limps on desynchronized. Connection handlers
+//! are panic-isolated (a handler that dies takes only its own
+//! connection, and the live-connection gauge is restored by a drop
+//! guard), the `HEALTH` verb reports per-model readiness for load
+//! balancers, and [`NetClient::infer_with_retry`] reconnects and
+//! retries transient transport faults with jittered backoff. The
+//! [`crate::faults`] chaos hooks (`net.read`, `net.write`, `decode`)
+//! inject resets, truncated replies, and corrupt artifacts on a
+//! deterministic schedule under `--features chaos`.
+//!
 //! CLI: `nnl serve --listen ADDR --models name=path,...`; load
 //! numbers: `nnl bench-serve --net` / `benches/serve_net.rs`
 //! (`BENCH_serve.json`).
@@ -63,9 +79,10 @@ use std::sync::{Arc, Mutex, RwLock};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
+use crate::faults;
 use crate::monitor::metrics::ModelMetrics;
 use crate::nnp::plan::InferencePlan;
-use crate::serve::{ServeConfig, ServeError, ServeResult, Server};
+use crate::serve::{RetryPolicy, ServeConfig, ServeError, ServeResult, Server};
 use crate::tensor::NdArray;
 use crate::utils::json::Json;
 
@@ -84,6 +101,7 @@ pub mod verb {
     pub const DEPLOY: u8 = 4;
     pub const UNDEPLOY: u8 = 5;
     pub const PING: u8 = 6;
+    pub const HEALTH: u8 = 7;
 }
 
 // ---------------------------------------------------------------- registry
@@ -227,6 +245,28 @@ impl Registry {
         name: &str,
         bytes: &[u8],
     ) -> Result<(u64, &'static str), ServeError> {
+        // Chaos hook: a `decode:corrupt` rule bit-flips a copy of the
+        // image so the static verifier (not live traffic) has to catch
+        // it; `ioerr` models a decode that fails outright.
+        let chaos_copy: Option<Vec<u8>> = match faults::fired(faults::Point::ArtifactDecode) {
+            Some(faults::Fired::Corrupt(seed)) => {
+                let mut c = bytes.to_vec();
+                faults::flip_bytes(seed, &mut c);
+                Some(c)
+            }
+            Some(faults::Fired::Delay(d)) => {
+                std::thread::sleep(d);
+                None
+            }
+            Some(faults::Fired::Panic) => panic!("chaos: injected panic at artifact decode"),
+            Some(faults::Fired::IoErr) => {
+                return Err(ServeError::InvalidRequest(
+                    "chaos: injected artifact decode failure".to_string(),
+                ));
+            }
+            None => None,
+        };
+        let bytes: &[u8] = chaos_copy.as_deref().unwrap_or(bytes);
         if bytes.len() < 4 || (&bytes[..4] != b"NNB1" && &bytes[..4] != b"NNB2") {
             return Err(ServeError::Protocol(
                 "DEPLOY expects an NNB1/NNB2 image (deploy .nnp archives via the CLI)"
@@ -349,6 +389,46 @@ impl Registry {
             out.insert(info.name, Json::Obj(obj));
         }
         Json::Obj(out)
+    }
+
+    /// The `HEALTH` verb's payload: per-model readiness plus the
+    /// supervision counters. A model is **ready** when at least one
+    /// worker thread is alive and its queue sits below the admission
+    /// cap; the top-level `ready` is the conjunction over all models
+    /// (an empty registry is not ready — nothing can serve).
+    pub fn health_json(&self) -> Json {
+        let slots: Vec<Arc<ModelSlot>> =
+            self.models.read().expect("registry lock").values().cloned().collect();
+        let mut models = std::collections::BTreeMap::new();
+        let mut all_ready = !slots.is_empty();
+        for slot in &slots {
+            let host = Arc::clone(&slot.host.read().expect("slot lock"));
+            let alive = host.server.alive_workers();
+            let depth = slot.metrics.queue_depth.load(Ordering::Relaxed) as usize;
+            let cap = host.server.queue_cap();
+            let ready = alive > 0 && depth < cap;
+            all_ready &= ready;
+            models.insert(
+                slot.name.clone(),
+                Json::obj(vec![
+                    ("ready", Json::Bool(ready)),
+                    ("version", Json::num(host.version as f64)),
+                    ("kind", Json::str(host.kind)),
+                    ("workers_alive", Json::num(alive as f64)),
+                    (
+                        "worker_restarts",
+                        Json::num(slot.metrics.worker_restarts.load(Ordering::Relaxed) as f64),
+                    ),
+                    ("queue_depth", Json::num(depth as f64)),
+                    ("queue_cap", Json::num(cap as f64)),
+                ]),
+            );
+        }
+        Json::obj(vec![
+            ("ready", Json::Bool(all_ready)),
+            ("pool_restarts", Json::num(crate::tensor::parallel::worker_restarts() as f64)),
+            ("models", Json::Obj(models)),
+        ])
     }
 }
 
@@ -577,6 +657,11 @@ fn handle_binary_inner(
             }
         }
         verb::PING => Ok(ok_header()),
+        verb::HEALTH => {
+            let mut resp = ok_header();
+            put_str(&mut resp, &registry.health_json().to_string());
+            Ok(resp)
+        }
         other => Err(ServeError::Protocol(format!("unknown verb {other}"))),
     }
 }
@@ -667,6 +752,10 @@ fn handle_json_inner(registry: &Registry, line: &str) -> Result<Json, ServeError
             Ok(Json::obj(vec![("ok", Json::Bool(true)), ("models", Json::Arr(names))]))
         }
         "ping" => Ok(Json::obj(vec![("ok", Json::Bool(true))])),
+        "health" => Ok(Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("health", registry.health_json()),
+        ])),
         other => Err(ServeError::Protocol(format!("unknown verb '{other}'"))),
     }
 }
@@ -684,6 +773,10 @@ pub struct NetConfig {
     pub poll_interval: Duration,
     /// Whether the wire may DEPLOY/UNDEPLOY models.
     pub allow_deploy: bool,
+    /// Cap on one JSON-fallback line in bytes (the binary protocol's
+    /// counterpart to [`MAX_FRAME`]); a connection that buffers more
+    /// than this without a newline gets a typed error and is closed.
+    pub max_line: usize,
 }
 
 impl Default for NetConfig {
@@ -692,6 +785,7 @@ impl Default for NetConfig {
             max_conns: 64,
             poll_interval: Duration::from_millis(25),
             allow_deploy: true,
+            max_line: MAX_FRAME,
         }
     }
 }
@@ -756,6 +850,17 @@ impl Drop for NetServer {
     }
 }
 
+/// Restores the live-connection gauge when a handler thread exits —
+/// by any path, including a panic mid-request. Without this, one
+/// poisoned handler would permanently eat a connection slot.
+struct LiveGuard(Arc<AtomicUsize>);
+
+impl Drop for LiveGuard {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
 fn accept_loop(
     listener: TcpListener,
     registry: Arc<Registry>,
@@ -787,8 +892,14 @@ fn accept_loop(
                 let live = Arc::clone(&live);
                 let cfg = cfg.clone();
                 held.push(std::thread::spawn(move || {
-                    let _ = handle_conn(stream, &registry, &stop, &cfg);
-                    live.fetch_sub(1, Ordering::SeqCst);
+                    let _guard = LiveGuard(live);
+                    // One connection's panic is that connection's
+                    // problem: the socket drops (the client sees a
+                    // reset), the guard restores the gauge, and the
+                    // accept loop keeps serving everyone else.
+                    let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(move || {
+                        handle_conn(stream, &registry, &stop, &cfg)
+                    }));
                 }));
             }
             Err(e)
@@ -828,7 +939,18 @@ fn handle_conn(
             }
             match json_mode {
                 Some(true) => {
-                    let Some(nl) = buf.iter().position(|&b| b == b'\n') else { break };
+                    let Some(nl) = buf.iter().position(|&b| b == b'\n') else {
+                        if buf.len() > cfg.max_line {
+                            let e = ServeError::Protocol(format!(
+                                "json line of {} bytes exceeds the {} cap",
+                                buf.len(),
+                                cfg.max_line
+                            ));
+                            stream.write_all((json_err(&e).to_string() + "\n").as_bytes())?;
+                            return Ok(()); // framing is unrecoverable: close
+                        }
+                        break;
+                    };
                     let line: Vec<u8> = buf.drain(..=nl).collect();
                     let line = String::from_utf8_lossy(&line[..nl]);
                     if line.trim().is_empty() {
@@ -855,7 +977,8 @@ fn handle_conn(
                         break;
                     }
                     let frame: Vec<u8> = buf.drain(..4 + len).skip(4).collect();
-                    let resp = handle_binary(registry, &frame, cfg.allow_deploy);
+                    let mut resp = handle_binary(registry, &frame, cfg.allow_deploy);
+                    faults::mangle(faults::Point::NetWrite, &mut resp)?;
                     write_frame(&mut stream, &resp)?;
                 }
                 None => break,
@@ -864,6 +987,7 @@ fn handle_conn(
         if stop.load(Ordering::SeqCst) {
             return Ok(());
         }
+        faults::io_gate(faults::Point::NetRead)?;
         match stream.read(&mut tmp) {
             Ok(0) => return Ok(()),
             Ok(n) => buf.extend_from_slice(&tmp[..n]),
@@ -876,20 +1000,67 @@ fn handle_conn(
     }
 }
 
+/// Decode an INFER reply body (`n:u8, n x tensor`).
+fn decode_outputs(body: &[u8]) -> Result<Vec<NdArray>, ServeError> {
+    let mut w = Wire::new(body);
+    let n = w.u8()? as usize;
+    let mut outs = Vec::with_capacity(n);
+    for _ in 0..n {
+        outs.push(w.tensor()?);
+    }
+    Ok(outs)
+}
+
 // ---------------------------------------------------------------- client
 
 /// A blocking client for the binary protocol — used by the load
 /// generator (`nnl bench-serve --net`), the integration tests, and as
 /// the reference implementation for other-language clients.
+///
+/// Transport faults (reset connections, truncated or malformed reply
+/// frames) surface as [`ServeError::Protocol`] with a recognizable
+/// prefix; [`NetClient::infer_with_retry`] reconnects and retries
+/// exactly those plus [`ServeError::Overloaded`] — never `Internal`
+/// or a verifier rejection, which retrying cannot fix.
 pub struct NetClient {
     stream: TcpStream,
+    addr: SocketAddr,
 }
 
 impl NetClient {
     pub fn connect<A: ToSocketAddrs>(addr: A) -> std::io::Result<NetClient> {
         let stream = TcpStream::connect(addr)?;
         stream.set_nodelay(true)?;
-        Ok(NetClient { stream })
+        let addr = stream.peer_addr()?;
+        Ok(NetClient { stream, addr })
+    }
+
+    /// Replace a stream that may hold half a reply with a fresh one —
+    /// the only way to recover a frame boundary after a transport
+    /// error.
+    fn reconnect(&mut self) -> bool {
+        match TcpStream::connect(self.addr) {
+            Ok(s) => {
+                let _ = s.set_nodelay(true);
+                self.stream = s;
+                true
+            }
+            Err(_) => false,
+        }
+    }
+
+    /// Transport-shaped failures: the connection itself broke or the
+    /// reply bytes cannot be a frame. These are the errors where the
+    /// stream position is unknown and a retry must reconnect first.
+    fn is_transport(e: &ServeError) -> bool {
+        matches!(e, ServeError::Protocol(m)
+            if m.starts_with("connection: ")
+                || m.starts_with("malformed reply")
+                || m.starts_with("oversized reply"))
+    }
+
+    fn wire_retryable(e: &ServeError) -> bool {
+        matches!(e, ServeError::Overloaded { .. }) || NetClient::is_transport(e)
     }
 
     fn roundtrip(&mut self, payload: &[u8]) -> Result<Vec<u8>, ServeError> {
@@ -911,8 +1082,10 @@ impl NetClient {
     fn request(&mut self, payload: &[u8]) -> Result<Vec<u8>, ServeError> {
         let resp = self.roundtrip(payload)?;
         let mut w = Wire::new(&resp);
-        let _version = w.u8()?;
-        let status = w.u8()?;
+        let status = w
+            .u8()
+            .and_then(|_version| w.u8())
+            .map_err(|_| ServeError::Protocol("malformed reply: truncated header".to_string()))?;
         if status != 0 {
             let msg = w.str_().unwrap_or_else(|_| "malformed error reply".to_string());
             return Err(ServeError::from_wire(status, msg));
@@ -928,13 +1101,37 @@ impl NetClient {
             put_tensor(&mut p, a);
         }
         let body = self.request(&p)?;
-        let mut w = Wire::new(&body);
-        let n = w.u8()? as usize;
-        let mut outs = Vec::with_capacity(n);
-        for _ in 0..n {
-            outs.push(w.tensor()?);
+        // a reply that stops decoding mid-tensor is a transport fault
+        // (truncated frame), not a server-side type error — mark it so
+        // the retry path knows to reconnect
+        decode_outputs(&body)
+            .map_err(|e| ServeError::Protocol(format!("malformed reply: {e}")))
+    }
+
+    /// [`NetClient::infer`] with reconnection and jittered backoff on
+    /// retryable failures; returns the outputs plus how many retries
+    /// it took. Non-retryable errors (`Internal`, verifier rejections,
+    /// `NoSuchModel`) return immediately — retrying cannot fix them.
+    pub fn infer_with_retry(
+        &mut self,
+        model: &str,
+        inputs: &[NdArray],
+        policy: &RetryPolicy,
+    ) -> Result<(Vec<NdArray>, usize), ServeError> {
+        let mut attempt = 0usize;
+        loop {
+            match self.infer(model, inputs) {
+                Ok(outs) => return Ok((outs, attempt)),
+                Err(e) if attempt < policy.max_retries && NetClient::wire_retryable(&e) => {
+                    std::thread::sleep(policy.backoff(attempt, attempt as u64));
+                    if NetClient::is_transport(&e) && !self.reconnect() {
+                        return Err(e);
+                    }
+                    attempt += 1;
+                }
+                Err(e) => return Err(e),
+            }
         }
-        Ok(outs)
     }
 
     pub fn stats(&mut self) -> Result<Json, ServeError> {
@@ -951,6 +1148,14 @@ impl NetClient {
 
     pub fn ping(&mut self) -> Result<(), ServeError> {
         self.request(&[PROTO_VERSION, verb::PING]).map(|_| ())
+    }
+
+    /// Readiness probe: `{"ready", "pool_restarts", "models": {name:
+    /// {"ready", "workers_alive", "worker_restarts", ...}}}`.
+    pub fn health(&mut self) -> Result<Json, ServeError> {
+        let body = self.request(&[PROTO_VERSION, verb::HEALTH])?;
+        let s = Wire::new(&body).str_()?;
+        Json::parse(&s).map_err(ServeError::Protocol)
     }
 
     /// Push an NNB1/NNB2 image; returns `(version, kind)`.
@@ -1118,5 +1323,43 @@ mod tests {
         assert!(matches!(err, ServeError::InvalidRequest(_)), "{err}");
         assert!(err.to_string().contains("NNL-E006"), "{err}");
         assert!(!reg.contains("bad"), "rejected model must not be swapped in");
+    }
+
+    #[test]
+    fn health_reports_per_model_readiness() {
+        let reg = registry_with(&[]);
+        // an empty registry is not ready — nothing can serve
+        assert_eq!(reg.health_json().get("ready").as_bool(), Some(false));
+        reg.deploy("m", affine_plan(&[1., 0., 0., 0., 1., 0.]), "f32");
+        let h = reg.health_json();
+        assert_eq!(h.get("ready").as_bool(), Some(true));
+        let m = h.get("models").get("m");
+        assert_eq!(m.get("ready").as_bool(), Some(true));
+        assert!(m.get("workers_alive").as_usize().unwrap() > 0);
+        assert_eq!(m.get("worker_restarts").as_usize(), Some(0));
+        // the HEALTH verb carries the same payload over both protocols
+        let resp = handle_binary(&reg, &[PROTO_VERSION, verb::HEALTH], false);
+        assert_eq!(resp[1], 0, "HEALTH must succeed");
+        let j = handle_json_line(&reg, r#"{"verb":"health"}"#);
+        assert_eq!(j.get("ok").as_bool(), Some(true));
+        assert_eq!(j.get("health").get("ready").as_bool(), Some(true));
+    }
+
+    #[test]
+    fn transport_errors_are_classified_for_retry() {
+        let conn = ServeError::Protocol("connection: reset by peer".to_string());
+        let malformed = ServeError::Protocol("malformed reply: truncated frame".to_string());
+        let typed = ServeError::Protocol("unknown verb 99".to_string());
+        assert!(NetClient::is_transport(&conn));
+        assert!(NetClient::is_transport(&malformed));
+        assert!(!NetClient::is_transport(&typed));
+        assert!(NetClient::wire_retryable(&conn));
+        assert!(NetClient::wire_retryable(&ServeError::Overloaded {
+            model: "m".to_string(),
+            depth: 8,
+            cap: 8,
+        }));
+        assert!(!NetClient::wire_retryable(&ServeError::Internal("boom".to_string())));
+        assert!(!NetClient::wire_retryable(&ServeError::NoSuchModel("m".to_string())));
     }
 }

@@ -149,6 +149,19 @@ pub fn with_scratch<R>(f: impl FnOnce(&mut Scratch) -> R) -> R {
     r
 }
 
+/// Drop every pooled buffer on this thread — post-panic hygiene for
+/// supervised serve workers. A request that unwound mid-kernel left
+/// `with_scratch`'s taken arena to be dropped (so those buffers are
+/// already gone); this clears what the thread-local still holds so a
+/// resurrected worker starts from a provably clean arena instead of
+/// one whose reuse story depends on where exactly the unwind happened.
+/// Safe to call any time: `with_scratch` never holds a `RefCell`
+/// borrow across user code, so no borrow can be live here.
+pub fn purge_scratch() {
+    SCRATCH.with(|c| c.borrow_mut().bufs.clear());
+    PACK.with(|p| *p.borrow_mut() = Vec::new());
+}
+
 /// Return a dead array's buffer to this thread's arena (no-op if the
 /// storage is still shared). The compiled-plan executor feeds freed
 /// activation slots through this, closing the allocate/free loop.

@@ -25,8 +25,21 @@
 
 use std::cell::Cell;
 use std::ops::Range;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+/// Pool workers resurrected after a panic escaped the per-chunk
+/// `catch_unwind` in [`drain`] (e.g. an injected `pool` chaos fault
+/// between taking a job and draining it). The pool is a process-wide
+/// singleton, so this is a process-wide counter — surfaced through the
+/// serving `HEALTH` probe.
+static RESTARTS: AtomicU64 = AtomicU64::new(0);
+
+/// How many pool workers supervision has resurrected (see
+/// [`RESTARTS`]).
+pub fn worker_restarts() -> u64 {
+    RESTARTS.load(Ordering::Relaxed)
+}
 
 /// Lifetime-erased pointer to the chunk closure of an in-flight job.
 /// Only dereferenced between publication and completion of the job,
@@ -100,7 +113,26 @@ fn pool() -> &'static Pool {
             let sh = Arc::clone(&shared);
             std::thread::Builder::new()
                 .name(format!("nnl-worker-{i}"))
-                .spawn(move || worker_loop(sh))
+                .spawn(move || {
+                    // Supervised: chunk panics are caught inside
+                    // `drain` and re-raised on the submitter, so the
+                    // only way out of `worker_loop` is a panic outside
+                    // a chunk (injected chaos, a bug in the claim
+                    // protocol). Losing the thread would silently
+                    // shrink the pool forever — resurrect it instead.
+                    // The submitter drains remaining chunks itself, so
+                    // the in-flight job still completes either way.
+                    loop {
+                        let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                            || worker_loop(&sh),
+                        ));
+                        if run.is_ok() {
+                            break;
+                        }
+                        BUSY.with(|b| b.set(0));
+                        RESTARTS.fetch_add(1, Ordering::Relaxed);
+                    }
+                })
                 .expect("spawning nnl worker thread");
         }
         Pool { shared, workers }
@@ -128,10 +160,13 @@ pub fn with_thread_limit<R>(n: usize, f: impl FnOnce() -> R) -> R {
     f()
 }
 
-fn worker_loop(shared: Arc<Shared>) {
+fn worker_loop(shared: &Shared) {
     loop {
         let job = {
-            let mut slot = shared.slot.lock().unwrap();
+            // poisoning-safe: the slot is an Option<Arc<Job>>, valid
+            // at every release point, and a panicked peer must not
+            // wedge the whole pool behind a PoisonError
+            let mut slot = shared.slot.lock().unwrap_or_else(|e| e.into_inner());
             loop {
                 if let Some(j) = slot.as_ref() {
                     let open = j.claimed.load(Ordering::Relaxed) < j.n_chunks;
@@ -145,14 +180,18 @@ fn worker_loop(shared: Arc<Shared>) {
                         break Arc::clone(j);
                     }
                 }
-                slot = shared.work.wait(slot).unwrap();
+                slot = shared.work.wait(slot).unwrap_or_else(|e| e.into_inner());
             }
         };
+        // chaos `pool` point: a panic here unwinds with a ticket taken
+        // but no chunk claimed — the job still completes (the
+        // submitter drains), and supervision resurrects this thread
+        crate::faults::disrupt(crate::faults::Point::PoolDispatch);
         BUSY.with(|b| b.set(b.get() + 1));
         drain(&job);
         BUSY.with(|b| b.set(b.get() - 1));
         if job.done.load(Ordering::Acquire) >= job.n_chunks {
-            let _guard = shared.slot.lock().unwrap();
+            let _guard = shared.slot.lock().unwrap_or_else(|e| e.into_inner());
             shared.done.notify_all();
         }
     }
@@ -212,7 +251,7 @@ pub fn for_each_chunk(n_chunks: usize, f: impl Fn(usize) + Sync) {
         panicked: AtomicBool::new(false),
     });
     {
-        let mut slot = pool.shared.slot.lock().unwrap();
+        let mut slot = pool.shared.slot.lock().unwrap_or_else(|e| e.into_inner());
         if slot.is_some() {
             // another thread's job is in flight: run serially rather
             // than queueing (callers here are already parallel)
@@ -228,9 +267,9 @@ pub fn for_each_chunk(n_chunks: usize, f: impl Fn(usize) + Sync) {
     BUSY.with(|b| b.set(b.get() + 1));
     drain(&job);
     BUSY.with(|b| b.set(b.get() - 1));
-    let mut slot = pool.shared.slot.lock().unwrap();
+    let mut slot = pool.shared.slot.lock().unwrap_or_else(|e| e.into_inner());
     while job.done.load(Ordering::Acquire) < n_chunks {
-        slot = pool.shared.done.wait(slot).unwrap();
+        slot = pool.shared.done.wait(slot).unwrap_or_else(|e| e.into_inner());
     }
     *slot = None;
     drop(slot);

@@ -1,0 +1,275 @@
+//! Deterministic chaos suite (`cargo test --features chaos --test
+//! chaos_serve`): armed fault schedules storm the serving stack and
+//! the tests assert the fault-tolerance invariants — every admitted
+//! request gets exactly one typed reply, no worker stays dead, hot
+//! swap never fails a request, shutdown drains cleanly, and corrupt
+//! artifacts never poison the registry. `NNL_CHAOS_SEED` picks the
+//! schedule; CI pins several seeds. Tests share the process-global
+//! schedule, so they serialize on a gate.
+#![cfg(feature = "chaos")]
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::Duration;
+
+use nnl::faults::{self, Schedule};
+use nnl::nnp::ir::{Layer, NetworkDef, Op, TensorDef};
+use nnl::nnp::{CompiledNet, InferencePlan};
+use nnl::serve::net::{NetClient, NetConfig, NetServer, Registry};
+use nnl::serve::{RetryPolicy, ServeConfig, ServeError, Server};
+use nnl::tensor::{NdArray, Rng};
+
+static GATE: Mutex<()> = Mutex::new(());
+
+/// One test at a time: the armed schedule is process-global.
+fn serial() -> MutexGuard<'static, ()> {
+    GATE.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn chaos_seed() -> u64 {
+    std::env::var("NNL_CHAOS_SEED").ok().and_then(|v| v.parse().ok()).unwrap_or(42)
+}
+
+/// Injected panics are the *point* of this suite — keep their default
+/// backtrace spam out of the test output, let real panics through.
+fn quiet_chaos_panics() {
+    static QUIET: std::sync::Once = std::sync::Once::new();
+    QUIET.call_once(|| {
+        let default = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            let p = info.payload();
+            let msg = p
+                .downcast_ref::<&str>()
+                .map(|s| (*s).to_string())
+                .or_else(|| p.downcast_ref::<String>().cloned())
+                .unwrap_or_default();
+            if !msg.starts_with("chaos:") {
+                default(info);
+            }
+        }));
+    });
+}
+
+fn scaled_plan(scale: f32) -> Arc<CompiledNet> {
+    let net = NetworkDef {
+        name: "affine".into(),
+        inputs: vec![TensorDef { name: "x".into(), dims: vec![1, 2] }],
+        outputs: vec!["y".into()],
+        layers: vec![Layer {
+            name: "fc".into(),
+            op: Op::Affine,
+            inputs: vec!["x".into()],
+            params: vec!["W".into()],
+            outputs: vec!["y".into()],
+        }],
+    };
+    let mut params = HashMap::new();
+    params.insert("W".to_string(), NdArray::from_slice(&[2, 3], &[scale, 0., 0., 0., scale, 0.]));
+    Arc::new(CompiledNet::compile(&net, &params).unwrap())
+}
+
+#[test]
+fn every_admitted_request_gets_exactly_one_typed_reply_under_panics() {
+    let _g = serial();
+    quiet_chaos_panics();
+    let inner = scaled_plan(2.0);
+
+    // reference outputs computed before any chaos is armed
+    let xs: Vec<NdArray> =
+        (0..200).map(|i| NdArray::from_slice(&[1, 2], &[i as f32, 1.0])).collect();
+    let want: Vec<Vec<f32>> = xs
+        .iter()
+        .map(|x| inner.execute_positional(std::slice::from_ref(x)).unwrap()[0].data().to_vec())
+        .collect();
+
+    // panics both inside the per-request boundary (exec → typed
+    // Internal for that request) and outside it (worker → reply guard
+    // answers the held batch, supervision restarts the thread)
+    faults::install(
+        Schedule::parse("exec:panic:0.12,worker:panic:0.06,admit:delay:0.05:2", chaos_seed())
+            .unwrap(),
+    );
+    let server = Server::start(
+        Arc::clone(&inner),
+        ServeConfig {
+            workers: 2,
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+            queue_cap: 256,
+        },
+    );
+    let rxs: Vec<_> = xs
+        .iter()
+        .map(|x| server.submit(vec![x.clone()]).expect("queue deep enough to admit all"))
+        .collect();
+    let (mut ok, mut internal) = (0usize, 0usize);
+    for (rx, want) in rxs.into_iter().zip(&want) {
+        match rx.recv().expect("exactly one typed reply per admitted request") {
+            Ok(outs) => {
+                assert_eq!(outs[0].data(), &want[..], "a successful reply must be exact");
+                ok += 1;
+            }
+            Err(ServeError::Internal(_)) => internal += 1,
+            Err(other) => panic!("unexpected error kind under panic chaos: {other}"),
+        }
+    }
+    assert_eq!(ok + internal, 200, "no request may vanish or be answered twice");
+
+    // disarm: the same pool serves again, bit-identical
+    faults::clear();
+    let out = server.infer(vec![xs[7].clone()]).unwrap();
+    assert_eq!(out[0].data(), &want[7][..], "post-chaos output diverged");
+    assert_eq!(server.alive_workers(), 2, "no worker stays dead");
+    let stats = server.shutdown();
+    assert!(
+        stats.panics_caught + stats.worker_restarts > 0,
+        "at these rates over 200 requests the schedule must have fired"
+    );
+    assert_eq!(stats.requests, 201);
+}
+
+#[test]
+fn tcp_requests_converge_with_retries_across_transport_chaos_and_hot_swap() {
+    let _g = serial();
+    quiet_chaos_panics();
+    let seed = chaos_seed();
+    let registry = Arc::new(Registry::new(ServeConfig {
+        workers: 2,
+        max_batch: 4,
+        max_wait: Duration::from_millis(1),
+        queue_cap: 128,
+    }));
+    registry.deploy("m", scaled_plan(3.0), "f32");
+    let server =
+        NetServer::bind("127.0.0.1:0", Arc::clone(&registry), NetConfig::default()).unwrap();
+    let addr = server.local_addr();
+
+    // transient transport damage only: truncated reply frames, reset
+    // reads, delayed writes — exactly what the client retry absorbs
+    faults::install(
+        Schedule::parse("net.write:corrupt:0.15,net.read:ioerr:0.03,net.write:delay:0.05:2", seed)
+            .unwrap(),
+    );
+    let policy = RetryPolicy {
+        max_retries: 12,
+        base: Duration::from_millis(1),
+        cap: Duration::from_millis(5),
+        seed,
+    };
+    let mut cli = NetClient::connect(addr).unwrap();
+    let mut total_retries = 0usize;
+    for i in 0..40 {
+        if i == 20 {
+            // hot swap to identical weights mid-chaos: the swap itself
+            // must never fail a request or change an answer
+            let v = registry.deploy("m", scaled_plan(3.0), "f32");
+            assert_eq!(v, 2);
+        }
+        let x = NdArray::from_slice(&[1, 2], &[i as f32, 0.0]);
+        let (outs, retries) = cli
+            .infer_with_retry("m", std::slice::from_ref(&x), &policy)
+            .expect("every request must converge to Ok under transient-only chaos");
+        assert!(
+            (outs[0].data()[0] - 3.0 * i as f32).abs() < 1e-4,
+            "request {i} got a wrong value: {}",
+            outs[0].data()[0]
+        );
+        total_retries += retries;
+    }
+    faults::clear();
+    assert!(total_retries > 0, "transport chaos at these rates must cost retries");
+
+    // the registry is healthy once the dust settles
+    let mut probe = NetClient::connect(addr).unwrap();
+    let h = probe.health().unwrap();
+    assert_eq!(h.get("ready").as_bool(), Some(true));
+    assert_eq!(h.get("models").get("m").get("version").as_usize(), Some(2));
+    server.shutdown();
+}
+
+#[test]
+fn panic_storm_shutdown_drains_every_request_then_recovers() {
+    let _g = serial();
+    quiet_chaos_panics();
+    let inner = scaled_plan(1.5);
+    let x_ref = NdArray::from_slice(&[1, 2], &[4.0, 1.0]);
+    let want = inner.execute_positional(std::slice::from_ref(&x_ref)).unwrap()[0].data().to_vec();
+
+    faults::install(
+        Schedule::parse("exec:panic:0.3,worker:panic:0.2,pool:panic:0.05", chaos_seed()).unwrap(),
+    );
+    let server = Server::start(
+        Arc::clone(&inner),
+        ServeConfig {
+            workers: 3,
+            max_batch: 2,
+            max_wait: Duration::from_millis(1),
+            queue_cap: 64,
+        },
+    );
+    let rxs: Vec<_> = (0..30)
+        .map(|i| {
+            let x = NdArray::from_slice(&[1, 2], &[i as f32, 1.0]);
+            server.submit(vec![x]).expect("admission")
+        })
+        .collect();
+    // shutdown with the storm still armed: the drain itself is under
+    // fire, and must still answer absolutely everything
+    let stats = server.shutdown();
+    for rx in rxs {
+        let reply = rx.recv().expect("clean shutdown must not drop an admitted request");
+        assert!(
+            matches!(reply, Ok(_) | Err(ServeError::Internal(_))),
+            "non-typed outcome during storm drain: {reply:?}"
+        );
+    }
+    assert_eq!(stats.requests, 30);
+
+    // a fresh pool on the same plan, chaos disarmed, is pristine
+    faults::clear();
+    let server = Server::start(inner, ServeConfig::default());
+    let out = server.infer(vec![x_ref]).unwrap();
+    assert_eq!(out[0].data(), &want[..], "recovery output diverged");
+    server.shutdown();
+}
+
+#[test]
+fn corrupt_artifacts_never_poison_the_registry() {
+    let _g = serial();
+    quiet_chaos_panics();
+    let seed = chaos_seed();
+    let registry = Registry::new(ServeConfig::default());
+    let (net, params) = nnl::models::zoo::export_eval("mlp", 3);
+    let pairs: Vec<(String, NdArray)> = params.clone().into_iter().collect();
+    let image = nnl::converters::nnb::to_nnb(&net, &pairs);
+
+    // a decode that fails outright is a typed rejection, nothing swaps
+    faults::install(Schedule::parse("decode:ioerr:1.0", seed).unwrap());
+    let err = registry.deploy_artifact("mlp", &image).unwrap_err();
+    assert!(matches!(err, ServeError::InvalidRequest(_)), "{err}");
+    assert!(!registry.contains("mlp"), "a failed deploy must leave no trace");
+
+    // a bit-flipped image: where the flip lands depends on the seed,
+    // but the outcome must be *typed* either way — a rejection that
+    // leaves the registry untouched, or a clean deploy of an image
+    // that still decodes and verifies
+    faults::install(Schedule::parse("decode:corrupt:1.0", seed).unwrap());
+    match registry.deploy_artifact("mlp", &image) {
+        Err(_) => assert!(!registry.contains("mlp")),
+        Ok((v, _)) => assert_eq!(v, 1),
+    }
+
+    // chaos off: the pristine image deploys and serves exactly what an
+    // uncontaminated registry serves
+    faults::clear();
+    let before = registry.version("mlp").unwrap_or(0);
+    let (v, kind) = registry.deploy_artifact("mlp", &image).unwrap();
+    assert_eq!(kind, "f32");
+    assert_eq!(v, before + 1);
+    let clean = Registry::new(ServeConfig::default());
+    clean.deploy_artifact("ref", &image).unwrap();
+    let x = Rng::new(5).rand(&[1, 64], -1.0, 1.0);
+    let got = registry.infer("mlp", vec![x.clone()]).unwrap();
+    let want = clean.infer("ref", vec![x]).unwrap();
+    assert_eq!(got[0].data(), want[0].data(), "post-chaos deploy must serve clean weights");
+}

@@ -1,0 +1,549 @@
+//! Fault-tolerance integration (no chaos feature required): panic
+//! isolation at the worker boundary, deadline semantics in and out of
+//! micro-batches, frame/line caps on both wire protocols, connection-
+//! drop cleanup, client retry eligibility, and the HEALTH verb. The
+//! deterministic-chaos storms live in `tests/chaos_serve.rs` behind
+//! `--features chaos`; this suite must pass in every build.
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use nnl::nnp::ir::{Layer, NetworkDef, Op, TensorDef};
+use nnl::nnp::{CompiledNet, InferencePlan};
+use nnl::serve::net::{NetClient, NetConfig, NetServer, Registry, MAX_FRAME, PROTO_VERSION};
+use nnl::serve::{RetryPolicy, ServeConfig, ServeError, Server};
+use nnl::tensor::{parallel, NdArray, Rng};
+
+/// `y = x @ W` on a `[1, 2] -> [1, 3]` affine — cheap and batchable.
+fn affine_plan(w: &[f32]) -> Arc<CompiledNet> {
+    let net = NetworkDef {
+        name: "affine".into(),
+        inputs: vec![TensorDef { name: "x".into(), dims: vec![1, 2] }],
+        outputs: vec!["y".into()],
+        layers: vec![Layer {
+            name: "fc".into(),
+            op: Op::Affine,
+            inputs: vec!["x".into()],
+            params: vec!["W".into()],
+            outputs: vec!["y".into()],
+        }],
+    };
+    let mut params = HashMap::new();
+    params.insert("W".to_string(), NdArray::from_slice(&[2, 3], w));
+    Arc::new(CompiledNet::compile(&net, &params).unwrap())
+}
+
+fn scaled_plan(scale: f32) -> Arc<CompiledNet> {
+    affine_plan(&[scale, 0., 0., 0., scale, 0.])
+}
+
+/// Delegates to a compiled plan but panics when a request's first
+/// input value crosses the sentinel — a deterministic "bug" for
+/// exercising the per-request isolation boundary.
+struct PanicPlan {
+    inner: Arc<CompiledNet>,
+    sentinel: f32,
+}
+
+impl InferencePlan for PanicPlan {
+    fn name(&self) -> &str {
+        self.inner.name()
+    }
+    fn inputs(&self) -> &[TensorDef] {
+        self.inner.inputs()
+    }
+    fn outputs(&self) -> &[String] {
+        self.inner.outputs()
+    }
+    fn n_steps(&self) -> usize {
+        self.inner.n_steps()
+    }
+    fn check_inputs(&self, inputs: &[NdArray]) -> Result<usize, String> {
+        self.inner.check_inputs(inputs)
+    }
+    fn execute_positional(&self, inputs: &[NdArray]) -> Result<Vec<NdArray>, String> {
+        if inputs[0].data()[0] >= self.sentinel {
+            panic!("poisoned request hit the sentinel");
+        }
+        self.inner.execute_positional(inputs)
+    }
+    fn batch_invariant(&self) -> bool {
+        false
+    }
+}
+
+/// Delegates to a compiled plan after a sleep, preserving
+/// batch-invariance — how a worker is kept deterministically busy.
+struct DelayPlan {
+    inner: Arc<CompiledNet>,
+    delay: Duration,
+}
+
+impl InferencePlan for DelayPlan {
+    fn name(&self) -> &str {
+        self.inner.name()
+    }
+    fn inputs(&self) -> &[TensorDef] {
+        self.inner.inputs()
+    }
+    fn outputs(&self) -> &[String] {
+        self.inner.outputs()
+    }
+    fn n_steps(&self) -> usize {
+        self.inner.n_steps()
+    }
+    fn check_inputs(&self, inputs: &[NdArray]) -> Result<usize, String> {
+        self.inner.check_inputs(inputs)
+    }
+    fn execute_positional(&self, inputs: &[NdArray]) -> Result<Vec<NdArray>, String> {
+        std::thread::sleep(self.delay);
+        self.inner.execute_positional(inputs)
+    }
+    fn batch_invariant(&self) -> bool {
+        self.inner.batch_invariant()
+    }
+}
+
+/// Poll `cond` until it holds or `timeout` elapses.
+fn eventually(timeout: Duration, mut cond: impl FnMut() -> bool) -> bool {
+    let start = Instant::now();
+    while start.elapsed() < timeout {
+        if cond() {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    cond()
+}
+
+// ------------------------------------------------------- panic isolation
+
+#[test]
+fn worker_panic_fails_only_that_request_and_survivors_are_bit_identical() {
+    let inner = scaled_plan(2.0);
+    let plan = Arc::new(PanicPlan { inner: Arc::clone(&inner), sentinel: 1000.0 });
+    let server = Server::start(
+        plan,
+        ServeConfig { workers: 1, max_batch: 1, max_wait: Duration::from_millis(1), queue_cap: 64 },
+    );
+
+    // the poisoned request gets a typed Internal, nothing else
+    let bad = NdArray::from_slice(&[1, 2], &[2000.0, 0.0]);
+    let err = server.infer(vec![bad]).unwrap_err();
+    assert!(matches!(err, ServeError::Internal(_)), "{err}");
+    assert!(err.to_string().contains("sentinel"), "{err}");
+    assert!(!err.retryable(), "a panicking request is deterministic; never retry it");
+
+    // the same worker keeps serving, and outputs stay bit-identical to
+    // a direct solo execution of the underlying plan
+    for i in 0..8 {
+        let x = NdArray::from_slice(&[1, 2], &[i as f32, 1.0]);
+        let got = server.infer(vec![x.clone()]).unwrap();
+        let want = inner.execute_positional(std::slice::from_ref(&x)).unwrap();
+        assert_eq!(got[0].dims(), want[0].dims());
+        assert_eq!(got[0].data(), want[0].data(), "post-panic output diverged");
+    }
+    assert_eq!(server.alive_workers(), 1, "isolation must not cost the worker thread");
+
+    let stats = server.shutdown();
+    assert_eq!(stats.panics_caught, 1);
+    assert_eq!(stats.worker_restarts, 0, "a caught panic needs no restart");
+    assert_eq!(stats.requests, 9);
+    assert_eq!(stats.errors, 1);
+}
+
+// ------------------------------------------------------------- deadlines
+
+#[test]
+fn deadline_expired_in_queue_is_shed_before_compute() {
+    let inner = scaled_plan(1.0);
+    let plan = Arc::new(DelayPlan { inner: Arc::clone(&inner), delay: Duration::from_millis(80) });
+    let server = Server::start(
+        plan,
+        ServeConfig { workers: 1, max_batch: 1, max_wait: Duration::from_millis(1), queue_cap: 8 },
+    );
+    let x = NdArray::from_slice(&[1, 2], &[1.0, 0.0]);
+
+    // occupy the only worker, then queue a request that cannot make it
+    let blocker = server.submit(vec![x.clone()]).unwrap();
+    let doomed = server
+        .submit_with_deadline(vec![x.clone()], Duration::from_millis(5))
+        .unwrap();
+    let got = doomed.recv().unwrap().unwrap_err();
+    match got {
+        ServeError::DeadlineExceeded { waited_ms } => {
+            assert!(waited_ms > 0, "shed request must report its queue wait");
+        }
+        other => panic!("expected DeadlineExceeded, got: {other}"),
+    }
+    blocker.recv().unwrap().unwrap();
+
+    // a generous deadline gates queue wait, not compute: the 80 ms
+    // execution still completes under a 5 s deadline
+    let out = server
+        .submit_with_deadline(vec![x.clone()], Duration::from_secs(5))
+        .unwrap()
+        .recv()
+        .unwrap()
+        .unwrap();
+    assert_eq!(out[0].data(), inner.execute_positional(&[x]).unwrap()[0].data());
+
+    let stats = server.shutdown();
+    assert_eq!(stats.deadline_expired, 1);
+}
+
+#[test]
+fn deadline_expired_mid_batch_sheds_only_the_expired_request() {
+    // batch-invariant plan, one worker: a blocker pins the worker while
+    // three requests queue behind it, one with a deadline that expires
+    // during the wait — the batch must proceed with the survivors
+    let inner = scaled_plan(1.0);
+    let plan = Arc::new(DelayPlan { inner: Arc::clone(&inner), delay: Duration::from_millis(60) });
+    let server = Server::start(
+        plan,
+        ServeConfig {
+            workers: 1,
+            max_batch: 8,
+            max_wait: Duration::from_millis(5),
+            queue_cap: 16,
+        },
+    );
+    assert!(server.batched(), "this scenario needs micro-batching");
+
+    let xs: Vec<NdArray> =
+        (0..3).map(|i| NdArray::from_slice(&[1, 2], &[i as f32 + 1.0, 2.0])).collect();
+    let blocker = server.submit(vec![NdArray::from_slice(&[1, 2], &[9.0, 9.0])]).unwrap();
+    // wait out the blocker's own batch-fill window so the followers
+    // queue behind an already-executing batch rather than joining it
+    std::thread::sleep(Duration::from_millis(20));
+    // queue order: survivor, doomed (5 ms deadline), survivor — the
+    // doomed one is mid-queue so it is answered from the batch-fill
+    // loop, not the head-of-queue pop
+    let a = server.submit(vec![xs[0].clone()]).unwrap();
+    let doomed = server
+        .submit_with_deadline(vec![xs[1].clone()], Duration::from_millis(5))
+        .unwrap();
+    let c = server.submit(vec![xs[2].clone()]).unwrap();
+
+    blocker.recv().unwrap().unwrap();
+    let err = doomed.recv().unwrap().unwrap_err();
+    assert!(matches!(err, ServeError::DeadlineExceeded { .. }), "{err}");
+    for (rx, x) in [(a, &xs[0]), (c, &xs[2])] {
+        let got = rx.recv().unwrap().expect("survivors must be served");
+        let want = inner.execute_positional(std::slice::from_ref(x)).unwrap();
+        assert_eq!(got[0].data(), want[0].data(), "survivor diverged");
+    }
+    let stats = server.shutdown();
+    assert_eq!(stats.deadline_expired, 1);
+    assert_eq!(stats.requests, 4, "every request is accounted, shed included");
+}
+
+#[test]
+fn served_outputs_are_bit_identical_to_single_threaded_execution() {
+    // the kernels are bit-deterministic across thread counts, so a
+    // server on the default pool must reproduce an NNL_THREADS=1 run
+    let (net, params) = nnl::models::zoo::export_eval("mlp", 17);
+    let plan = Arc::new(CompiledNet::compile(&net, &params).unwrap());
+    let mut rng = Rng::new(23);
+    let inputs: Vec<NdArray> = (0..6).map(|_| rng.rand(&[1, 64], -1.0, 1.0)).collect();
+    let reference: Vec<Vec<NdArray>> = inputs
+        .iter()
+        .map(|x| {
+            parallel::with_thread_limit(1, || {
+                plan.execute_positional(std::slice::from_ref(x)).unwrap()
+            })
+        })
+        .collect();
+
+    let server = Server::start(Arc::clone(&plan), ServeConfig::default());
+    for (x, want) in inputs.iter().zip(&reference) {
+        let got = server.infer(vec![x.clone()]).unwrap();
+        assert_eq!(got[0].dims(), want[0].dims());
+        assert_eq!(
+            got[0].data(),
+            want[0].data(),
+            "served output diverged from the single-threaded reference"
+        );
+    }
+    server.shutdown();
+}
+
+// ------------------------------------------------------------ frame caps
+
+/// Read one `[u32 len][payload]` reply frame from a raw socket.
+fn read_frame(stream: &mut std::net::TcpStream) -> std::io::Result<Vec<u8>> {
+    let mut hdr = [0u8; 4];
+    stream.read_exact(&mut hdr)?;
+    let len = u32::from_le_bytes(hdr) as usize;
+    let mut payload = vec![0u8; len];
+    stream.read_exact(&mut payload)?;
+    Ok(payload)
+}
+
+#[test]
+fn binary_frames_past_the_cap_get_a_typed_error_then_close() {
+    let registry = Arc::new(Registry::new(ServeConfig::default()));
+    registry.deploy("m", scaled_plan(1.0), "f32");
+    let server = NetServer::bind("127.0.0.1:0", Arc::clone(&registry), NetConfig::default())
+        .expect("bind");
+    let addr = server.local_addr();
+
+    // property: EVERY claimed length past MAX_FRAME is refused with the
+    // Protocol wire code before any payload is read, and the connection
+    // closes (a desynchronized framing layer must not limp on)
+    nnl::utils::prop::check(
+        0xF8A3E,
+        12,
+        |rng| {
+            let mut v = MAX_FRAME as u64 + 1 + rng.below(u32::MAX as usize - MAX_FRAME - 1) as u64;
+            // a low byte of b'{' would switch the sniffer to JSON mode
+            if v & 0xff == u64::from(b'{') {
+                v += 1;
+            }
+            v
+        },
+        |&claimed| {
+            let mut s = std::net::TcpStream::connect(addr).map_err(|e| e.to_string())?;
+            s.write_all(&(claimed as u32).to_le_bytes()).map_err(|e| e.to_string())?;
+            let payload = read_frame(&mut s).map_err(|e| e.to_string())?;
+            if payload.get(1) != Some(&ServeError::Protocol(String::new()).code()) {
+                return Err(format!("want wire code 6, got frame {payload:?}"));
+            }
+            // EOF follows: the server hung up after the typed reply
+            let mut rest = Vec::new();
+            s.read_to_end(&mut rest).map_err(|e| e.to_string())?;
+            if !rest.is_empty() {
+                return Err("connection stayed open past an unrecoverable framing error".into());
+            }
+            Ok(())
+        },
+    );
+    // exactly at the cap the frame is admitted by framing (it then
+    // fails decoding, typed, and the session continues)
+    let mut cli = NetClient::connect(addr).unwrap();
+    cli.ping().unwrap();
+    server.shutdown();
+}
+
+#[test]
+fn json_lines_past_the_cap_get_a_typed_error_then_close() {
+    let registry = Arc::new(Registry::new(ServeConfig::default()));
+    registry.deploy("m", scaled_plan(1.0), "f32");
+    let cfg = NetConfig { max_line: 2048, ..NetConfig::default() };
+    let server = NetServer::bind("127.0.0.1:0", Arc::clone(&registry), cfg).expect("bind");
+    let addr = server.local_addr();
+
+    nnl::utils::prop::check(
+        0xBEE5,
+        6,
+        |rng| 2049 + rng.below(8192),
+        |&n| {
+            let mut s = std::net::TcpStream::connect(addr).map_err(|e| e.to_string())?;
+            // an endless JSON "line": opener plus n filler bytes, no \n
+            s.write_all(b"{").map_err(|e| e.to_string())?;
+            s.write_all(&vec![b' '; n]).map_err(|e| e.to_string())?;
+            let mut reader = BufReader::new(s);
+            let mut line = String::new();
+            reader.read_line(&mut line).map_err(|e| e.to_string())?;
+            if !(line.contains("\"ok\":false") && line.contains("protocol")) {
+                return Err(format!("want a typed protocol error, got: {line}"));
+            }
+            if !line.contains("exceeds") {
+                return Err(format!("error must name the cap violation: {line}"));
+            }
+            let mut rest = String::new();
+            reader.read_line(&mut rest).map_err(|e| e.to_string())?;
+            if !rest.is_empty() {
+                return Err("connection stayed open past the line cap".into());
+            }
+            Ok(())
+        },
+    );
+    // a line under the cap still round-trips on a fresh connection
+    let mut s = std::net::TcpStream::connect(addr).unwrap();
+    s.write_all(b"{\"verb\":\"ping\"}\n").unwrap();
+    let mut line = String::new();
+    BufReader::new(s).read_line(&mut line).unwrap();
+    assert!(line.contains("\"ok\":true"), "{line}");
+    server.shutdown();
+}
+
+// ----------------------------------------------------- connection drops
+
+#[test]
+fn dropped_connections_release_gauges_and_never_wedge_the_server() {
+    let registry = Arc::new(Registry::new(ServeConfig {
+        workers: 2,
+        max_batch: 4,
+        max_wait: Duration::from_millis(1),
+        queue_cap: 64,
+    }));
+    registry.deploy("m", scaled_plan(2.0), "f32");
+    let cfg = NetConfig { max_conns: 4, ..NetConfig::default() };
+    let server = NetServer::bind("127.0.0.1:0", Arc::clone(&registry), cfg).expect("bind");
+    let addr = server.local_addr();
+
+    let queue_depth = || {
+        registry.stats_json().get("m").get("queue_depth").as_usize().unwrap_or(usize::MAX)
+    };
+
+    // round 1: sockets that die mid-frame (length prefix promises more
+    // bytes than ever arrive)
+    for _ in 0..6 {
+        let mut s = std::net::TcpStream::connect(addr).unwrap();
+        s.write_all(&1000u32.to_le_bytes()).unwrap();
+        s.write_all(&[PROTO_VERSION, 1, 0, 0, 0, 0]).unwrap();
+        drop(s);
+    }
+    // round 2: full requests whose client hangs up without reading the
+    // reply — the request still executes; the reply write fails; the
+    // handler must clean up, not leak its slot or a queue entry
+    for i in 0..6 {
+        let mut payload = vec![PROTO_VERSION, 1u8]; // INFER "m", one [1,2] tensor
+        payload.extend_from_slice(&1u32.to_le_bytes());
+        payload.push(b'm');
+        payload.push(1);
+        payload.push(2);
+        payload.extend_from_slice(&1u32.to_le_bytes());
+        payload.extend_from_slice(&2u32.to_le_bytes());
+        payload.extend_from_slice(&(i as f32).to_le_bytes());
+        payload.extend_from_slice(&0.0f32.to_le_bytes());
+        let mut s = std::net::TcpStream::connect(addr).unwrap();
+        s.write_all(&(payload.len() as u32).to_le_bytes()).unwrap();
+        s.write_all(&payload).unwrap();
+        drop(s);
+    }
+
+    // the gauges settle back: no permanently-incremented queue depth,
+    // and all connection slots come free again
+    assert!(
+        eventually(Duration::from_secs(5), || queue_depth() == 0),
+        "queue_depth stuck at {} after connection drops",
+        queue_depth()
+    );
+
+    // service is unharmed: fresh inference, a hot swap, and a full
+    // complement of max_conns new connections all succeed
+    let mut cli = NetClient::connect(addr).unwrap();
+    let x = NdArray::from_slice(&[1, 2], &[3.0, 0.0]);
+    assert_eq!(cli.infer("m", std::slice::from_ref(&x)).unwrap()[0].data()[0], 6.0);
+    let v = registry.deploy("m", scaled_plan(4.0), "f32");
+    assert_eq!(v, 2);
+    assert_eq!(cli.infer("m", std::slice::from_ref(&x)).unwrap()[0].data()[0], 12.0);
+    drop(cli);
+    assert!(
+        eventually(Duration::from_secs(5), || {
+            let clients: Vec<_> =
+                (0..4).filter_map(|_| NetClient::connect(addr).ok()).collect();
+            clients.len() == 4
+                && clients.into_iter().all(|mut c| c.ping().is_ok())
+        }),
+        "connection slots leaked: cannot open max_conns fresh connections"
+    );
+    server.shutdown();
+}
+
+// ------------------------------------------------------------- retries
+
+#[test]
+fn in_process_retry_recovers_overload_but_never_internal() {
+    // a 1-deep queue and a slow plan force Overloaded; retry absorbs it
+    let inner = scaled_plan(1.0);
+    let plan = Arc::new(DelayPlan { inner, delay: Duration::from_millis(40) });
+    let server = Server::start(
+        plan,
+        ServeConfig { workers: 1, max_batch: 1, max_wait: Duration::from_millis(1), queue_cap: 1 },
+    );
+    let client = server.client();
+    let x = NdArray::from_slice(&[1, 2], &[5.0, 0.0]);
+    let blocker = server.submit(vec![x.clone()]).unwrap();
+    // let the worker pop the blocker so the filler owns the whole queue
+    std::thread::sleep(Duration::from_millis(10));
+    let filler = server.submit(vec![x.clone()]).unwrap();
+    // queue is now full: a plain submit sheds, a retrying infer waits
+    // out the blocker on its jittered backoff schedule
+    assert!(matches!(
+        server.submit(vec![x.clone()]).unwrap_err(),
+        ServeError::Overloaded { .. }
+    ));
+    let policy = RetryPolicy {
+        max_retries: 50,
+        base: Duration::from_millis(10),
+        cap: Duration::from_millis(40),
+        seed: 11,
+    };
+    let out = client.infer_with_retry(vec![x.clone()], &policy).expect("retry must recover");
+    assert_eq!(out[0].data()[0], 5.0);
+    blocker.recv().unwrap().unwrap();
+    filler.recv().unwrap().unwrap();
+    let stats = server.shutdown();
+    assert!(stats.retries > 0, "the recovery above must have counted retries");
+
+    // Internal is never retried: a poisoned request fails once, fast
+    let plan = Arc::new(PanicPlan { inner: scaled_plan(1.0), sentinel: 100.0 });
+    let server = Server::start(
+        plan,
+        ServeConfig { workers: 1, max_batch: 1, max_wait: Duration::from_millis(1), queue_cap: 8 },
+    );
+    let bad = NdArray::from_slice(&[1, 2], &[500.0, 0.0]);
+    let err = server
+        .client()
+        .infer_with_retry(vec![bad], &RetryPolicy::default())
+        .unwrap_err();
+    assert!(matches!(err, ServeError::Internal(_)), "{err}");
+    let stats = server.shutdown();
+    assert_eq!(stats.retries, 0, "Internal must not burn retry budget");
+    assert_eq!(stats.panics_caught, 1);
+}
+
+#[test]
+fn retry_backoff_is_deterministic_jittered_and_capped() {
+    let p = RetryPolicy {
+        max_retries: 5,
+        base: Duration::from_millis(4),
+        cap: Duration::from_millis(20),
+        seed: 99,
+    };
+    for attempt in 0..6 {
+        let d = p.backoff(attempt, 1);
+        assert_eq!(d, p.backoff(attempt, 1), "same seed/salt must replay identically");
+        assert!(d <= Duration::from_millis(20), "cap violated at attempt {attempt}: {d:?}");
+        assert!(d >= Duration::from_micros(50), "degenerate backoff at attempt {attempt}");
+    }
+    assert_ne!(p.backoff(2, 1), p.backoff(2, 2), "salt must decorrelate clients");
+}
+
+// --------------------------------------------------------------- health
+
+#[test]
+fn health_verb_reports_readiness_over_the_wire() {
+    let registry = Arc::new(Registry::new(ServeConfig::default()));
+    registry.deploy("m", scaled_plan(1.0), "f32");
+    let server = NetServer::bind("127.0.0.1:0", Arc::clone(&registry), NetConfig::default())
+        .expect("bind");
+    let addr = server.local_addr();
+
+    // binary protocol
+    let mut cli = NetClient::connect(addr).unwrap();
+    let h = cli.health().unwrap();
+    assert_eq!(h.get("ready").as_bool(), Some(true));
+    assert_eq!(h.get("models").get("m").get("ready").as_bool(), Some(true));
+    assert!(h.get("models").get("m").get("workers_alive").as_usize().unwrap() > 0);
+    assert_eq!(h.get("models").get("m").get("worker_restarts").as_usize(), Some(0));
+
+    // JSON fallback on a raw socket
+    let mut s = std::net::TcpStream::connect(addr).unwrap();
+    s.write_all(b"{\"verb\":\"health\"}\n").unwrap();
+    let mut line = String::new();
+    BufReader::new(s).read_line(&mut line).unwrap();
+    assert!(line.contains("\"ok\":true"), "{line}");
+    assert!(line.contains("\"ready\":true"), "{line}");
+
+    // an emptied registry is not ready — there is nothing to serve
+    registry.remove("m");
+    let h = cli.health().unwrap();
+    assert_eq!(h.get("ready").as_bool(), Some(false));
+    server.shutdown();
+}
