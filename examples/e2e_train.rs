@@ -10,7 +10,7 @@
 //! Recorded in EXPERIMENTS.md §End-to-end. Run: `make artifacts &&
 //! cargo run --release --example e2e_train`
 
-use nnl::comm::CommHub;
+use nnl::comm::{Collective, CommHub};
 use nnl::data::TinyCorpus;
 use nnl::mixed_precision::LossScaler;
 use nnl::monitor::MonitorSeries;
@@ -39,7 +39,7 @@ fn main() -> anyhow::Result<()> {
     let mut hub = CommHub::new(WORLD);
     let mut handles = Vec::new();
     for rank in 0..WORLD {
-        let comm = hub.communicator(rank);
+        let mut comm = hub.communicator(rank)?;
         let manifest = manifest.clone();
         let corpus = corpus.clone();
         handles.push(std::thread::spawn(move || -> anyhow::Result<MonitorSeries> {
@@ -65,13 +65,13 @@ fn main() -> anyhow::Result<()> {
                 let out = exe.execute(&inputs)?;
                 // per-worker backward done; all-reduce grads (Listing 3)
                 let mut grads: Vec<NdArray> = out[..params.len()].to_vec();
-                comm.all_reduce(&mut grads, true);
+                comm.all_reduce(&mut grads, true)?;
                 for ((_, v), g) in params.iter().zip(grads) {
                     v.set_grad(g);
                 }
                 scaler.step(&mut solver);
                 let mean_loss =
-                    comm.all_gather_scalar(out.last().unwrap().item()).iter().sum::<f32>()
+                    comm.all_gather_scalar(out.last().unwrap().item())?.iter().sum::<f32>()
                         / comm.size() as f32;
                 losses.add(step, mean_loss);
                 if comm.rank() == 0 && step % 25 == 0 {

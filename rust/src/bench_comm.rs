@@ -1,0 +1,244 @@
+//! Distributed-training benchmark harness — shared by `nnl bench-comm`
+//! and the CI smoke, emitting `BENCH_comm.json`.
+//!
+//! Trains the same lenet job at world 1/2/4 over the in-process thread
+//! backend with backward/reduce overlap on and off, plus TCP-backend
+//! runs (f32 and fp16 wire) over loopback sockets, and reports per-run
+//! steps/s alongside the `monitor::metrics` comm counters (all-reduce
+//! calls, bytes moved, overlap time hidden, ring stalls). The
+//! acceptance number is `overlap_no_worse`: firing bucket all-reduces
+//! from the backward hook must not lose throughput against the
+//! queue-everything-after-backward baseline (0.9 slack absorbs
+//! scheduler noise on loaded CI hosts — every run computes
+//! bit-identical updates, so throughput is the only axis).
+
+use crate::comm::{NetCommunicator, NetOptions};
+use crate::data::SyntheticImages;
+use crate::monitor::metrics::{self, CommSnapshot};
+use crate::tensor::parallel;
+use crate::trainer::{
+    train_distributed_opts, train_worker, DistConfig, TrainConfig, TrainReport,
+};
+use crate::utils::json::Json;
+
+/// Everything one run produces: the human table and the JSON payload.
+pub struct CommBenchReport {
+    pub text: String,
+    pub json: Json,
+}
+
+struct RunStats {
+    label: &'static str,
+    backend: &'static str,
+    world: usize,
+    overlap: bool,
+    fp16: bool,
+    steps_per_s: f64,
+    final_loss: f32,
+    comm: CommSnapshot,
+}
+
+fn bench_cfg(quick: bool) -> TrainConfig {
+    TrainConfig {
+        steps: if quick { 4 } else { 12 },
+        val_batches: 1,
+        ..Default::default()
+    }
+}
+
+/// One TCP-backend job over loopback: rank 0 in this thread via the
+/// pre-bound listener, other ranks on worker threads dialing it —
+/// the same wiring `nnl train-dist --launch` does across processes.
+fn run_tcp(
+    data: &SyntheticImages,
+    cfg: &TrainConfig,
+    dist: &DistConfig,
+    world: usize,
+    fp16: bool,
+) -> TrainReport {
+    let listener = NetCommunicator::rendezvous_bind("127.0.0.1:0").expect("bench bind");
+    let addr = listener.local_addr().expect("listener addr").to_string();
+    let opts = NetOptions { fp16_wire: fp16, ..NetOptions::default() };
+    let mut handles = Vec::new();
+    for rank in 1..world {
+        let addr = addr.clone();
+        let opts = opts.clone();
+        let data = data.clone();
+        let cfg = cfg.clone();
+        let dist = dist.clone();
+        handles.push(std::thread::spawn(move || {
+            let comm =
+                NetCommunicator::connect(rank, world, &addr, opts).expect("bench connect");
+            train_worker("lenet", &data, &cfg, &dist, comm, "cpu:tcp").expect("bench worker");
+        }));
+    }
+    let comm =
+        NetCommunicator::connect_with_listener(listener, world, opts).expect("bench rank 0");
+    let report =
+        train_worker("lenet", data, cfg, dist, comm, "cpu:tcp").expect("bench rank 0 worker");
+    for h in handles {
+        h.join().expect("bench worker thread");
+    }
+    report
+}
+
+/// Run the suite. `quick` shrinks step counts for CI smoke use.
+pub fn run(quick: bool) -> CommBenchReport {
+    let data = SyntheticImages::new(10, 1, 28, 8, 1);
+    let cfg = bench_cfg(quick);
+    // small buckets so even lenet produces several per step — the
+    // overlap machinery is actually exercised, not bypassed
+    let bucket_bytes = 64 * 1024;
+
+    // (label, backend, world, overlap, fp16)
+    let cases: [(&'static str, &'static str, usize, bool, bool); 7] = [
+        ("threads w1", "threads", 1, true, false),
+        ("threads w2 overlap", "threads", 2, true, false),
+        ("threads w2 serial", "threads", 2, false, false),
+        ("threads w4 overlap", "threads", 4, true, false),
+        ("threads w4 serial", "threads", 4, false, false),
+        ("tcp w2 f32", "tcp", 2, true, false),
+        ("tcp w2 fp16", "tcp", 2, true, true),
+    ];
+    let mut runs: Vec<RunStats> = Vec::new();
+    for &(label, backend, world, overlap, fp16) in &cases {
+        let dist = DistConfig { bucket_bytes, overlap };
+        let before = metrics::comm().snapshot();
+        let report = if backend == "threads" {
+            train_distributed_opts("lenet", data.clone(), &cfg, world, &dist)
+                .expect("bench thread run")
+        } else {
+            run_tcp(&data, &cfg, &dist, world, fp16)
+        };
+        runs.push(RunStats {
+            label,
+            backend,
+            world,
+            overlap,
+            fp16,
+            steps_per_s: report.steps as f64 / report.wall_secs.max(1e-9),
+            final_loss: report.final_loss(),
+            comm: metrics::comm().snapshot().since(&before),
+        });
+    }
+
+    let throughput = |overlap: bool| {
+        runs.iter()
+            .filter(|r| r.backend == "threads" && r.world > 1 && r.overlap == overlap)
+            .map(|r| r.steps_per_s)
+            .sum::<f64>()
+    };
+    let overlap_no_worse = throughput(true) >= 0.9 * throughput(false);
+    let fp16_moves_fewer_bytes = {
+        let bytes = |fp16: bool| {
+            runs.iter()
+                .find(|r| r.backend == "tcp" && r.fp16 == fp16)
+                .map(|r| r.comm.bytes_sent)
+                .unwrap_or(0)
+        };
+        bytes(true) < bytes(false)
+    };
+
+    let mut text = format!(
+        "comm bench: lenet, {} steps/run, bucket {} KiB, NNL_THREADS={}\n\
+         {:<20} {:>6} {:>9} {:>10} {:>12} {:>12} {:>11} {:>7}\n",
+        cfg.steps,
+        bucket_bytes / 1024,
+        parallel::num_threads(),
+        "run",
+        "world",
+        "steps/s",
+        "loss",
+        "bytes sent",
+        "bytes recv",
+        "hidden ms",
+        "stalls",
+    );
+    for r in &runs {
+        text.push_str(&format!(
+            "{:<20} {:>6} {:>9.2} {:>10.4} {:>12} {:>12} {:>11.2} {:>7}\n",
+            r.label,
+            r.world,
+            r.steps_per_s,
+            r.final_loss,
+            r.comm.bytes_sent,
+            r.comm.bytes_recv,
+            r.comm.overlap_ms_hidden,
+            r.comm.ring_stalls,
+        ));
+    }
+    text.push_str(&format!(
+        "overlap_no_worse: {overlap_no_worse}   fp16_moves_fewer_bytes: {fp16_moves_fewer_bytes}\n"
+    ));
+
+    let totals = runs.iter().fold(
+        (0u64, 0u64, 0u64, 0.0f64, 0u64),
+        |(c, s, r0, h, st), r| {
+            (
+                c + r.comm.allreduce_calls,
+                s + r.comm.bytes_sent,
+                r0 + r.comm.bytes_recv,
+                h + r.comm.overlap_ms_hidden,
+                st + r.comm.ring_stalls,
+            )
+        },
+    );
+    let json = Json::obj(vec![
+        ("nnl_threads", Json::num(parallel::num_threads() as f64)),
+        ("model", Json::str("lenet")),
+        ("steps", Json::num(cfg.steps as f64)),
+        ("bucket_bytes", Json::num(bucket_bytes as f64)),
+        (
+            "runs",
+            Json::Arr(
+                runs.iter()
+                    .map(|r| {
+                        Json::obj(vec![
+                            ("label", Json::str(r.label)),
+                            ("backend", Json::str(r.backend)),
+                            ("world", Json::num(r.world as f64)),
+                            ("overlap", Json::Bool(r.overlap)),
+                            ("fp16_wire", Json::Bool(r.fp16)),
+                            ("steps_per_s", Json::num(r.steps_per_s)),
+                            ("final_loss", Json::num(r.final_loss as f64)),
+                            ("allreduce_calls", Json::num(r.comm.allreduce_calls as f64)),
+                            ("bytes_sent", Json::num(r.comm.bytes_sent as f64)),
+                            ("bytes_recv", Json::num(r.comm.bytes_recv as f64)),
+                            ("overlap_ms_hidden", Json::num(r.comm.overlap_ms_hidden)),
+                            ("ring_stalls", Json::num(r.comm.ring_stalls as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "totals",
+            Json::obj(vec![
+                ("allreduce_calls", Json::num(totals.0 as f64)),
+                ("bytes_sent", Json::num(totals.1 as f64)),
+                ("bytes_recv", Json::num(totals.2 as f64)),
+                ("overlap_ms_hidden", Json::num(totals.3)),
+                ("ring_stalls", Json::num(totals.4 as f64)),
+            ]),
+        ),
+        ("overlap_no_worse", Json::Bool(overlap_no_worse)),
+        ("fp16_moves_fewer_bytes", Json::Bool(fp16_moves_fewer_bytes)),
+    ]);
+    CommBenchReport { text, json }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_bench_produces_sane_report() {
+        let report = run(true);
+        assert!(report.text.contains("overlap_no_worse"));
+        let rendered = report.json.to_string_pretty();
+        assert!(rendered.contains("\"runs\""), "{rendered}");
+        assert!(rendered.contains("\"overlap_no_worse\""), "{rendered}");
+        // the TCP runs really moved bytes through the ring
+        assert!(rendered.contains("\"bytes_sent\""), "{rendered}");
+    }
+}

@@ -1,0 +1,321 @@
+//! Gradient bucketing and backward/reduce overlap — the throughput
+//! half of distributed data parallelism (paper §2.3: "speedy
+//! computation on distributed setting").
+//!
+//! Small parameters make terrible collectives: per-message latency
+//! dominates and the ring never fills. [`plan_buckets`] coalesces
+//! parameters into ~4 MiB groups, ordered so each bucket's members
+//! finish their gradients at about the same time during backward
+//! (parameters complete in roughly reverse registration order — the
+//! output layer's gradient lands first). [`Reducer`] then runs the
+//! collectives on a dedicated communication thread: the trainer
+//! enqueues a bucket the moment its last gradient lands (via the
+//! autodiff tape hook, see `trainer`) and keeps running backward
+//! while the ring moves bytes. Time the comm thread spends busy
+//! *while a backward pass is in flight* is the overlap win, and is
+//! accounted to `monitor::metrics::comm().overlap_ns_hidden`.
+//!
+//! Determinism is untouched by any of this: buckets partition the
+//! parameter list in a fixed order, each bucket's all-reduce uses the
+//! deterministic rank-order sum, and the trainer scatters results
+//! back by bucket id — so overlap-on and overlap-off produce
+//! bit-identical updates.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::time::Instant;
+
+use super::{Collective, CommError};
+use crate::monitor::metrics;
+
+/// Default bucket capacity: ~4 MiB of f32 gradients, the sweet spot
+/// between per-collective latency and overlap granularity.
+pub const DEFAULT_BUCKET_BYTES: usize = 4 << 20;
+
+/// Partition parameter indices `0..sizes.len()` into buckets of at
+/// most `cap_bytes` (4 bytes per element), walking indices in
+/// **reverse** order so bucket 0 holds the parameters whose gradients
+/// land first during backward. A parameter larger than the cap gets a
+/// bucket of its own. Every index appears in exactly one bucket; the
+/// plan depends only on `(sizes, cap_bytes)`, so all ranks agree.
+pub fn plan_buckets(sizes: &[usize], cap_bytes: usize) -> Vec<Vec<usize>> {
+    let cap_elems = (cap_bytes / 4).max(1);
+    let mut buckets: Vec<Vec<usize>> = Vec::new();
+    let mut cur: Vec<usize> = Vec::new();
+    let mut cur_elems = 0usize;
+    for idx in (0..sizes.len()).rev() {
+        let n = sizes[idx];
+        if !cur.is_empty() && cur_elems + n > cap_elems {
+            buckets.push(std::mem::take(&mut cur));
+            cur_elems = 0;
+        }
+        cur.push(idx);
+        cur_elems += n;
+    }
+    if !cur.is_empty() {
+        buckets.push(cur);
+    }
+    buckets
+}
+
+enum Cmd {
+    Reduce { id: usize, data: Vec<f32>, division: bool },
+    Bcast { data: Vec<f32> },
+    Gather { v: f32 },
+}
+
+enum Reply {
+    Reduced { id: usize, data: Vec<f32> },
+    Bcasted { data: Vec<f32> },
+    Gathered { vals: Vec<f32> },
+}
+
+/// A [`Collective`] driven from a dedicated communication thread.
+///
+/// Commands are processed strictly FIFO — both backends require every
+/// rank to issue the same collective sequence, and the trainer
+/// guarantees a deterministic enqueue order (bucket fire order is
+/// data-independent; see `trainer`). Replies arrive in the same
+/// order, tagged with the caller's bucket id.
+pub struct Reducer {
+    rank: usize,
+    size: usize,
+    tx: Option<Sender<Cmd>>,
+    rx: Receiver<Result<Reply, CommError>>,
+    in_backward: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Reducer {
+    /// Move `comm` onto a background thread and return the handle the
+    /// trainer talks to.
+    pub fn spawn<C: Collective + 'static>(comm: C) -> Reducer {
+        let (rank, size) = (comm.rank(), comm.size());
+        let (cmd_tx, cmd_rx): (Sender<Cmd>, Receiver<Cmd>) = channel();
+        let (rep_tx, rep_rx) = channel();
+        let in_backward = Arc::new(AtomicBool::new(false));
+        let flag = Arc::clone(&in_backward);
+        let handle = std::thread::Builder::new()
+            .name(format!("nnl-reducer-r{rank}"))
+            .spawn(move || {
+                let mut comm = comm;
+                for cmd in cmd_rx {
+                    let t0 = Instant::now();
+                    let overlappable = matches!(cmd, Cmd::Reduce { .. });
+                    let reply = match cmd {
+                        Cmd::Reduce { id, mut data, division } => comm
+                            .all_reduce_flat(&mut data, division)
+                            .map(|()| Reply::Reduced { id, data }),
+                        Cmd::Bcast { mut data } => {
+                            comm.bcast_flat(&mut data).map(|()| Reply::Bcasted { data })
+                        }
+                        Cmd::Gather { v } => {
+                            comm.all_gather_scalar(v).map(|vals| Reply::Gathered { vals })
+                        }
+                    };
+                    // busy time that coincided with backward is the
+                    // communication the bucketing actually hid
+                    if overlappable && flag.load(Ordering::Relaxed) {
+                        metrics::comm()
+                            .overlap_ns_hidden
+                            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                    }
+                    if rep_tx.send(reply).is_err() {
+                        return;
+                    }
+                }
+            })
+            .expect("spawn reducer thread");
+        Reducer {
+            rank,
+            size,
+            tx: Some(cmd_tx),
+            rx: rep_rx,
+            in_backward,
+            handle: Some(handle),
+        }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Mark the start of a backward pass: comm-thread busy time now
+    /// counts as hidden.
+    pub fn begin_backward(&self) {
+        self.in_backward.store(true, Ordering::Relaxed);
+    }
+
+    /// Backward finished; subsequent comm time is exposed, not hidden.
+    pub fn end_backward(&self) {
+        self.in_backward.store(false, Ordering::Relaxed);
+    }
+
+    fn tx(&self) -> &Sender<Cmd> {
+        self.tx.as_ref().expect("reducer not shut down")
+    }
+
+    fn gone() -> CommError {
+        CommError::Io("reducer comm thread gone".into())
+    }
+
+    /// Enqueue one bucket's flattened gradients for all-reduce.
+    /// Returns immediately; collect the result with [`next_reduced`].
+    ///
+    /// [`next_reduced`]: Reducer::next_reduced
+    pub fn reduce(&self, id: usize, data: Vec<f32>, division: bool) -> Result<(), CommError> {
+        self.tx().send(Cmd::Reduce { id, data, division }).map_err(|_| Self::gone())
+    }
+
+    /// Block for the next finished reduce, in enqueue order.
+    pub fn next_reduced(&self) -> Result<(usize, Vec<f32>), CommError> {
+        match self.rx.recv().map_err(|_| Self::gone())?? {
+            Reply::Reduced { id, data } => Ok((id, data)),
+            _ => Err(CommError::Protocol("reducer reply out of order".into())),
+        }
+    }
+
+    /// Synchronous broadcast of rank 0's values (initial weight sync).
+    pub fn bcast_flat(&self, data: Vec<f32>) -> Result<Vec<f32>, CommError> {
+        self.tx().send(Cmd::Bcast { data }).map_err(|_| Self::gone())?;
+        match self.rx.recv().map_err(|_| Self::gone())?? {
+            Reply::Bcasted { data } => Ok(data),
+            _ => Err(CommError::Protocol("reducer reply out of order".into())),
+        }
+    }
+
+    /// Synchronous all-gather of one scalar per rank (loss reporting).
+    pub fn gather(&self, v: f32) -> Result<Vec<f32>, CommError> {
+        self.tx().send(Cmd::Gather { v }).map_err(|_| Self::gone())?;
+        match self.rx.recv().map_err(|_| Self::gone())?? {
+            Reply::Gathered { vals } => Ok(vals),
+            _ => Err(CommError::Protocol("reducer reply out of order".into())),
+        }
+    }
+
+    /// Stop the comm thread and release the communicator.
+    pub fn shutdown(mut self) {
+        self.tx = None;
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Reducer {
+    fn drop(&mut self) {
+        self.tx = None;
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::CommHub;
+    use crate::utils::prop;
+
+    #[test]
+    fn buckets_partition_reverse_order_under_cap() {
+        let sizes = [10, 3000, 5, 5, 2000, 1];
+        let cap = 4096 * 4; // 4096 elems
+        let plan = plan_buckets(&sizes, cap);
+        // every index exactly once
+        let mut seen: Vec<usize> = plan.iter().flatten().copied().collect();
+        seen.sort_unstable();
+        assert_eq!(seen, vec![0, 1, 2, 3, 4, 5]);
+        // reverse walk: first bucket starts at the last index
+        assert_eq!(plan[0][0], 5);
+        // cap respected unless a bucket is a single oversize param
+        for b in &plan {
+            let elems: usize = b.iter().map(|&i| sizes[i]).sum();
+            assert!(elems * 4 <= cap || b.len() == 1, "bucket {b:?} breaks cap");
+        }
+    }
+
+    #[test]
+    fn oversize_param_gets_own_bucket() {
+        let sizes = [10, 9999, 10];
+        let plan = plan_buckets(&sizes, 100 * 4);
+        assert!(plan.contains(&vec![1]));
+    }
+
+    #[test]
+    fn bucket_plan_properties() {
+        prop::check(
+            0xB0C4E7,
+            200,
+            |rng: &mut crate::tensor::Rng| {
+                let n = rng.below(20);
+                let sizes: Vec<usize> = (0..n).map(|_| rng.below(5000)).collect();
+                let cap = (1 + rng.below(4000)) * 4;
+                (sizes, cap)
+            },
+            |(sizes, cap)| {
+                let plan = plan_buckets(sizes, *cap);
+                let mut seen: Vec<usize> = plan.iter().flatten().copied().collect();
+                seen.sort_unstable();
+                if seen != (0..sizes.len()).collect::<Vec<_>>() {
+                    return Err(format!("not a partition: {seen:?}"));
+                }
+                for b in &plan {
+                    if b.is_empty() {
+                        return Err("empty bucket".into());
+                    }
+                    let elems: usize = b.iter().map(|&i| sizes[i]).sum();
+                    if elems * 4 > *cap && b.len() > 1 {
+                        return Err(format!("multi-param bucket over cap: {b:?}"));
+                    }
+                }
+                // determinism: same inputs, same plan
+                if plan != plan_buckets(sizes, *cap) {
+                    return Err("plan not deterministic".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn reducer_pipelines_buckets_in_order() {
+        let world = 3;
+        let mut hub = CommHub::new(world);
+        let comms: Vec<_> =
+            (0..world).map(|r| hub.communicator(r).expect("fresh rank")).collect();
+        let handles: Vec<_> = comms
+            .into_iter()
+            .map(|comm| {
+                std::thread::spawn(move || {
+                    let rank = comm.rank();
+                    let red = Reducer::spawn(comm);
+                    red.begin_backward();
+                    // enqueue two buckets before collecting anything
+                    red.reduce(0, vec![rank as f32 + 1.0; 4], true).expect("enqueue");
+                    red.reduce(1, vec![10.0 * (rank as f32 + 1.0); 2], false).expect("enqueue");
+                    let a = red.next_reduced().expect("bucket 0");
+                    let b = red.next_reduced().expect("bucket 1");
+                    red.end_backward();
+                    let g = red.gather(rank as f32).expect("gather");
+                    red.shutdown();
+                    (a, b, g)
+                })
+            })
+            .collect();
+        for h in handles {
+            let ((id0, d0), (id1, d1), g) = h.join().expect("worker");
+            assert_eq!(id0, 0);
+            assert_eq!(id1, 1);
+            // mean of 1,2,3 = 2; sum of 10,20,30 = 60
+            assert_eq!(d0, vec![2.0; 4]);
+            assert_eq!(d1, vec![60.0; 2]);
+            assert_eq!(g, vec![0.0, 1.0, 2.0]);
+        }
+    }
+}

@@ -3,10 +3,16 @@
 //! slots **in rank order** — giving bit-deterministic results (unlike
 //! real NCCL, where ring order depends on topology; determinism here
 //! is a feature for reproducible trials, and the semantics match).
+//! This is the in-process backend of [`super::Collective`]; the fold
+//! it computes — `((0 + x_0) + x_1) + ...`, then `× 1/N` — is exactly
+//! the one `comm::ring` reproduces over TCP, so the two backends are
+//! bit-interchangeable.
 
+use std::sync::atomic::Ordering;
 use std::sync::{Arc, Barrier, Mutex};
 
-use crate::tensor::NdArray;
+use super::{Collective, CommError};
+use crate::monitor::metrics;
 
 struct Slots {
     bufs: Mutex<Vec<Option<Vec<f32>>>>,
@@ -32,12 +38,22 @@ impl CommHub {
         }
     }
 
-    /// Take the communicator endpoint for `rank` (once per rank).
-    pub fn communicator(&mut self, rank: usize) -> Communicator {
-        assert!(rank < self.n);
-        assert!(!self.taken[rank], "communicator already taken for rank {rank}");
+    /// Take the communicator endpoint for `rank` — once per rank; a
+    /// repeat or out-of-range rank is a typed error, not a panic.
+    pub fn communicator(&mut self, rank: usize) -> Result<Communicator, CommError> {
+        if rank >= self.n {
+            return Err(CommError::InvalidRank { rank, size: self.n });
+        }
+        if self.taken[rank] {
+            return Err(CommError::DuplicateRank { rank });
+        }
         self.taken[rank] = true;
-        Communicator { rank, n: self.n, barrier: self.barrier.clone(), slots: self.slots.clone() }
+        Ok(Communicator {
+            rank,
+            n: self.n,
+            barrier: self.barrier.clone(),
+            slots: self.slots.clone(),
+        })
     }
 }
 
@@ -50,19 +66,6 @@ pub struct Communicator {
 }
 
 impl Communicator {
-    pub fn rank(&self) -> usize {
-        self.rank
-    }
-
-    pub fn size(&self) -> usize {
-        self.n
-    }
-
-    /// Synchronization barrier across all workers.
-    pub fn barrier(&self) {
-        self.barrier.wait();
-    }
-
     /// Deposit `mine`, wait, then fold all contributions in rank order.
     fn exchange<R>(&self, mine: Vec<f32>, fold: impl FnOnce(&[Option<Vec<f32>>]) -> R) -> R {
         {
@@ -84,82 +87,69 @@ impl Communicator {
         self.barrier.wait(); // slots cleared for the next collective
         out
     }
+}
 
-    /// `comm.all_reduce(grads)` — sums each array elementwise across
-    /// workers (rank-order reduction: bit-deterministic); every worker
-    /// ends with identical values. `division=true` averages (NNabla's
-    /// `division` flag).
-    pub fn all_reduce(&self, arrays: &mut [NdArray], division: bool) {
+impl Collective for Communicator {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn size(&self) -> usize {
+        self.n
+    }
+
+    fn all_reduce_flat(&mut self, buf: &mut [f32], division: bool) -> Result<(), CommError> {
+        metrics::comm().allreduce_calls.fetch_add(1, Ordering::Relaxed);
         if self.n == 1 {
-            return;
+            return Ok(());
         }
-        // pack all arrays into one flat buffer: one rendezvous per call
-        let total: usize = arrays.iter().map(|a| a.size()).sum();
-        let mut flat = Vec::with_capacity(total);
-        for a in arrays.iter() {
-            flat.extend_from_slice(a.data());
-        }
-        let reduced = self.exchange(flat, |bufs| {
-            let mut acc = vec![0.0f32; total];
+        let len = buf.len();
+        let reduced = self.exchange(buf.to_vec(), |bufs| {
+            let mut acc = vec![0.0f32; len];
             for b in bufs.iter() {
                 let b = b.as_ref().expect("missing contribution");
+                if b.len() != len {
+                    return Err(CommError::SizeMismatch { expected: len, got: b.len() });
+                }
                 for (a, v) in acc.iter_mut().zip(b) {
                     *a += v;
                 }
             }
-            acc
-        });
-        let scale = if division { 1.0 / self.n as f32 } else { 1.0 };
-        let mut off = 0;
-        for a in arrays.iter_mut() {
-            let n = a.size();
-            for (dst, src) in a.data_mut().iter_mut().zip(&reduced[off..off + n]) {
+            Ok(acc)
+        })?;
+        if division {
+            let scale = 1.0 / self.n as f32;
+            for (dst, src) in buf.iter_mut().zip(&reduced) {
                 *dst = *src * scale;
             }
-            a.requantize();
-            off += n;
-        }
-    }
-
-    /// Broadcast rank 0's arrays to everyone (initial weight sync).
-    pub fn bcast(&self, arrays: &mut [NdArray]) {
-        if self.n == 1 {
-            return;
-        }
-        let mine = if self.rank == 0 {
-            let mut flat = Vec::new();
-            for a in arrays.iter() {
-                flat.extend_from_slice(a.data());
-            }
-            flat
         } else {
-            Vec::new()
-        };
-        let root = self.exchange(mine, |bufs| bufs[0].clone().expect("root contribution"));
-        let mut off = 0;
-        for a in arrays.iter_mut() {
-            let n = a.size();
-            a.data_mut().copy_from_slice(&root[off..off + n]);
-            a.requantize();
-            off += n;
+            buf.copy_from_slice(&reduced);
         }
+        Ok(())
     }
 
-    /// All-gather scalars (e.g. per-worker losses) indexed by rank.
-    pub fn all_gather_scalar(&self, v: f32) -> Vec<f32> {
+    fn bcast_flat(&mut self, buf: &mut [f32]) -> Result<(), CommError> {
         if self.n == 1 {
-            return vec![v];
+            return Ok(());
         }
-        self.exchange(vec![v], |bufs| {
-            bufs.iter().map(|b| b.as_ref().expect("contribution")[0]).collect()
-        })
+        let len = buf.len();
+        let mine = if self.rank == 0 { buf.to_vec() } else { Vec::new() };
+        let root = self.exchange(mine, |bufs| {
+            let b = bufs[0].as_ref().expect("root contribution");
+            if b.len() != len {
+                return Err(CommError::SizeMismatch { expected: len, got: b.len() });
+            }
+            Ok(b.clone())
+        })?;
+        buf.copy_from_slice(&root);
+        Ok(())
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::tensor::Rng;
+    use crate::tensor::{NdArray, Rng};
     use crate::utils::prop;
 
     fn run_workers<T: Send + 'static>(
@@ -169,7 +159,7 @@ mod tests {
         let mut hub = CommHub::new(n);
         let mut handles = Vec::new();
         for r in 0..n {
-            let comm = hub.communicator(r);
+            let comm = hub.communicator(r).expect("fresh rank");
             let f = f.clone();
             handles.push(std::thread::spawn(move || f(comm)));
         }
@@ -179,10 +169,10 @@ mod tests {
     #[test]
     fn all_reduce_equals_sequential_sum() {
         for n in [1, 2, 3, 4, 7] {
-            let results = run_workers(n, move |comm| {
+            let results = run_workers(n, move |mut comm| {
                 let r = comm.rank();
                 let mut a = NdArray::from_vec(&[3], vec![r as f32, 1.0, (r * r) as f32]);
-                comm.all_reduce(std::slice::from_mut(&mut a), false);
+                comm.all_reduce(std::slice::from_mut(&mut a), false).expect("all_reduce");
                 a
             });
             let expect_0: f32 = (0..n).map(|r| r as f32).sum();
@@ -195,9 +185,9 @@ mod tests {
 
     #[test]
     fn all_reduce_division_averages() {
-        let results = run_workers(4, |comm| {
+        let results = run_workers(4, |mut comm| {
             let mut a = NdArray::full(&[2], comm.rank() as f32);
-            comm.all_reduce(std::slice::from_mut(&mut a), true);
+            comm.all_reduce(std::slice::from_mut(&mut a), true).expect("all_reduce");
             a
         });
         for a in &results {
@@ -207,10 +197,10 @@ mod tests {
 
     #[test]
     fn all_reduce_multiple_arrays_packed() {
-        let results = run_workers(3, |comm| {
+        let results = run_workers(3, |mut comm| {
             let mut arrays =
                 vec![NdArray::full(&[2], 1.0), NdArray::full(&[3], comm.rank() as f32)];
-            comm.all_reduce(&mut arrays, false);
+            comm.all_reduce(&mut arrays, false).expect("all_reduce");
             arrays
         });
         for arrays in &results {
@@ -221,11 +211,11 @@ mod tests {
 
     #[test]
     fn repeated_collectives_do_not_cross_talk() {
-        let results = run_workers(3, |comm| {
+        let results = run_workers(3, |mut comm| {
             let mut out = Vec::new();
             for round in 0..5 {
                 let mut a = NdArray::full(&[1], (comm.rank() + round) as f32);
-                comm.all_reduce(std::slice::from_mut(&mut a), false);
+                comm.all_reduce(std::slice::from_mut(&mut a), false).expect("all_reduce");
                 out.push(a.item());
             }
             out
@@ -237,13 +227,13 @@ mod tests {
 
     #[test]
     fn bcast_syncs_initial_weights() {
-        let results = run_workers(4, |comm| {
+        let results = run_workers(4, |mut comm| {
             let mut a = if comm.rank() == 0 {
                 NdArray::from_slice(&[3], &[7., 8., 9.])
             } else {
                 NdArray::zeros(&[3])
             };
-            comm.bcast(std::slice::from_mut(&mut a));
+            comm.bcast(std::slice::from_mut(&mut a)).expect("bcast");
             a
         });
         for a in &results {
@@ -253,7 +243,9 @@ mod tests {
 
     #[test]
     fn all_gather_scalar_collects_by_rank() {
-        let results = run_workers(5, |comm| comm.all_gather_scalar((comm.rank() * 10) as f32));
+        let results = run_workers(5, |mut comm| {
+            comm.all_gather_scalar((comm.rank() * 10) as f32).expect("gather")
+        });
         for g in &results {
             assert_eq!(g, &[0., 10., 20., 30., 40.]);
         }
@@ -277,9 +269,10 @@ mod tests {
                     let data = data.clone();
                     move || {
                         let data = data.clone();
-                        run_workers(n, move |comm| {
+                        run_workers(n, move |mut comm| {
                             let mut a = NdArray::from_vec(&[len], data[comm.rank()].clone());
-                            comm.all_reduce(std::slice::from_mut(&mut a), true);
+                            comm.all_reduce(std::slice::from_mut(&mut a), true)
+                                .expect("all_reduce");
                             a
                         })
                     }
@@ -302,10 +295,18 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "already taken")]
-    fn communicator_single_use_per_rank() {
+    fn communicator_misuse_is_a_typed_error_not_a_panic() {
         let mut hub = CommHub::new(2);
-        let _a = hub.communicator(0);
-        let _b = hub.communicator(0);
+        let _a = hub.communicator(0).expect("first take");
+        match hub.communicator(0) {
+            Err(CommError::DuplicateRank { rank: 0 }) => {}
+            other => panic!("expected DuplicateRank, got {other:?}"),
+        }
+        match hub.communicator(5) {
+            Err(CommError::InvalidRank { rank: 5, size: 2 }) => {}
+            other => panic!("expected InvalidRank, got {other:?}"),
+        }
+        // rank 1 is still claimable after the failures above
+        assert!(hub.communicator(1).is_ok());
     }
 }

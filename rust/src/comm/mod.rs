@@ -1,8 +1,15 @@
 //! Data-parallel distributed training (paper §2.3, Listing 3).
 //!
-//! The paper uses NCCL/MPI across GPUs; here each *simulated device*
-//! is an OS thread with its own graph/parameters/executable, and the
-//! communicator provides the same collective surface:
+//! The paper uses NCCL/MPI across GPUs; here the same collective
+//! surface is served by two interchangeable backends behind the
+//! [`Collective`] trait:
+//!
+//! - [`collective`] — N *simulated devices* as OS threads sharing a
+//!   rendezvous (`CommHub`/`Communicator`), reducing in rank order;
+//! - [`net`] — N real OS **processes** over TCP: a rank-0 rendezvous
+//!   hands out a peer table, then a [`ring`] all-reduce moves
+//!   gradients over length-prefixed frames with a deterministic
+//!   segment reduction order.
 //!
 //! ```text
 //! comm = C.MultiProcessDataParalellCommunicator(ctx); comm.init()
@@ -11,11 +18,155 @@
 //! comm.all_reduce(params)
 //! ```
 //!
-//! Collectives are implemented ring-style over channels with a
-//! deterministic reduction order, so `all_reduce` is exactly
-//! reproducible and provably equal to the sequential sum (see the
-//! property tests).
+//! Both backends are exactly reproducible and provably equal to the
+//! sequential sum: every element is reduced as
+//! `((0 + x_0) + x_1) + ... + x_{n-1}` regardless of transport, so an
+//! N-process run is bit-identical to the thread backend and to a
+//! sequential simulation of the same data-parallel step (see the
+//! property tests and `tests/distributed.rs`). [`bucket`] adds the
+//! training-side machinery: gradient bucketing and reduce/backward
+//! overlap on a background communication thread.
 
+pub mod bucket;
 pub mod collective;
+pub mod net;
+pub mod ring;
 
+pub use bucket::{plan_buckets, Reducer};
 pub use collective::{CommHub, Communicator};
+pub use net::{NetCommunicator, NetOptions};
+
+use crate::tensor::NdArray;
+
+/// Typed communicator failure — every collective surfaces one of
+/// these instead of hanging or panicking, including under chaos
+/// injection (`comm.connect` / `comm.send` / `comm.recv` points).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CommError {
+    /// Rank outside `0..size`.
+    InvalidRank { rank: usize, size: usize },
+    /// The same rank joined (or was taken) twice.
+    DuplicateRank { rank: usize },
+    /// Rendezvous/setup failure (size disagreement, bad peer table,
+    /// refused handshake).
+    Rendezvous(String),
+    /// Transport-level I/O failure (peer died, connection reset).
+    Io(String),
+    /// A blocking step exceeded the step deadline — the "never hang"
+    /// guarantee: a dropped peer surfaces here at every live rank.
+    Timeout { what: &'static str, ms: u64 },
+    /// Frame/codec violation (bad version, hostile length claim,
+    /// truncated or out-of-order message).
+    Protocol(String),
+    /// Collective arguments disagree across call sites.
+    SizeMismatch { expected: usize, got: usize },
+}
+
+impl std::fmt::Display for CommError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CommError::InvalidRank { rank, size } => {
+                write!(f, "rank {rank} out of range for world size {size}")
+            }
+            CommError::DuplicateRank { rank } => {
+                write!(f, "communicator already taken for rank {rank}")
+            }
+            CommError::Rendezvous(m) => write!(f, "rendezvous failed: {m}"),
+            CommError::Io(m) => write!(f, "comm I/O error: {m}"),
+            CommError::Timeout { what, ms } => {
+                write!(f, "comm deadline exceeded after {ms} ms while {what}")
+            }
+            CommError::Protocol(m) => write!(f, "comm protocol violation: {m}"),
+            CommError::SizeMismatch { expected, got } => {
+                write!(f, "collective size mismatch: expected {expected} elements, got {got}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CommError {}
+
+impl From<std::io::Error> for CommError {
+    fn from(e: std::io::Error) -> Self {
+        match e.kind() {
+            std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut => {
+                CommError::Timeout { what: "socket I/O", ms: 0 }
+            }
+            _ => CommError::Io(e.to_string()),
+        }
+    }
+}
+
+/// The collective surface both backends implement — what the trainer
+/// programs against. All methods take `&mut self` so a socket-backed
+/// implementation can own its streams without interior locking.
+///
+/// Determinism contract: `all_reduce*` reduces every element in rank
+/// order starting from `+0.0` (`((0 + x_0) + x_1) + ...`), and every
+/// rank receives identical bytes. `division` additionally multiplies
+/// by `1.0 / size as f32` after the sum.
+pub trait Collective: Send {
+    fn rank(&self) -> usize;
+    fn size(&self) -> usize;
+
+    /// Element-wise sum (optionally averaged) of `buf` across ranks;
+    /// all ranks must pass equal lengths.
+    fn all_reduce_flat(&mut self, buf: &mut [f32], division: bool) -> Result<(), CommError>;
+
+    /// Broadcast rank 0's `buf` to everyone.
+    fn bcast_flat(&mut self, buf: &mut [f32]) -> Result<(), CommError>;
+
+    /// `comm.all_reduce(grads)` over whole arrays: packs into one flat
+    /// buffer (one collective per call), then writes back through
+    /// `requantize` so half-precision contexts stay on their grid.
+    fn all_reduce(&mut self, arrays: &mut [NdArray], division: bool) -> Result<(), CommError> {
+        let total: usize = arrays.iter().map(|a| a.size()).sum();
+        let mut flat = Vec::with_capacity(total);
+        for a in arrays.iter() {
+            flat.extend_from_slice(a.data());
+        }
+        self.all_reduce_flat(&mut flat, division)?;
+        let mut off = 0;
+        for a in arrays.iter_mut() {
+            let n = a.size();
+            a.data_mut().copy_from_slice(&flat[off..off + n]);
+            a.requantize();
+            off += n;
+        }
+        Ok(())
+    }
+
+    /// Broadcast rank 0's arrays to everyone (initial weight sync).
+    fn bcast(&mut self, arrays: &mut [NdArray]) -> Result<(), CommError> {
+        let total: usize = arrays.iter().map(|a| a.size()).sum();
+        let mut flat = Vec::with_capacity(total);
+        for a in arrays.iter() {
+            flat.extend_from_slice(a.data());
+        }
+        self.bcast_flat(&mut flat)?;
+        let mut off = 0;
+        for a in arrays.iter_mut() {
+            let n = a.size();
+            a.data_mut().copy_from_slice(&flat[off..off + n]);
+            a.requantize();
+            off += n;
+        }
+        Ok(())
+    }
+
+    /// All-gather scalars (e.g. per-worker losses) indexed by rank —
+    /// expressed as a one-hot all-reduce, which is exact in f32 (each
+    /// slot sums one value and zeros).
+    fn all_gather_scalar(&mut self, v: f32) -> Result<Vec<f32>, CommError> {
+        let mut buf = vec![0.0f32; self.size()];
+        buf[self.rank()] = v;
+        self.all_reduce_flat(&mut buf, false)?;
+        Ok(buf)
+    }
+
+    /// Synchronization barrier across all ranks.
+    fn barrier(&mut self) -> Result<(), CommError> {
+        let mut one = [0.0f32];
+        self.all_reduce_flat(&mut one, false)
+    }
+}

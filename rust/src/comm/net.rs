@@ -1,0 +1,997 @@
+//! Multi-process communicator over TCP — the real-world backend of
+//! the [`super::Collective`] surface (paper §2.3: multi-node
+//! data-parallel training; our Fig. 3 reproduction runs it over
+//! loopback).
+//!
+//! ## Rendezvous
+//!
+//! Rank 0 listens on the rendezvous address. Every other rank
+//! connects and sends `HELLO{rank, size, ring_addr}`; rank 0 collects
+//! all `size - 1` hellos (validating version, size agreement, rank
+//! range and duplicates), then replies to each with the full
+//! `PEERS{addrs}` table. Each rank then dials its ring **successor**
+//! `(rank + 1) % size` and accepts one connection from its
+//! **predecessor** — two sockets per rank, the only edges the
+//! [`super::ring`] collectives ever use.
+//!
+//! ## Wire format
+//!
+//! House style (`serve::net`): length-prefixed frames, a version
+//! byte, then a tag — with a bounds-checked reader on the way in, so
+//! hostile or damaged frames surface typed [`CommError`]s and no
+//! allocation ever trusts a claimed length (claims are capped by
+//! [`MAX_FRAME`] / [`ring::MAX_SEGMENT_ELEMS`] before any buffer is
+//! sized).
+//!
+//! ## Liveness
+//!
+//! Every blocking step — rendezvous accept, peer dial, frame read —
+//! runs under a deadline ([`NetOptions::connect_timeout`] during
+//! setup, [`NetOptions::step_deadline`] per collective). A dropped
+//! peer therefore surfaces as [`CommError::Timeout`] or
+//! [`CommError::Io`] at every surviving rank within the deadline,
+//! never as a hang. Outbound frames go through a per-rank writer
+//! thread, so the protocol loop never blocks on a full socket buffer
+//! (the deadlock-freedom assumption of [`ring::Link::send`]). The
+//! chaos points `comm.connect` / `comm.send` / `comm.recv`
+//! ([`crate::faults`]) inject failures on exactly these paths.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use super::ring::{self, Msg, MsgKind, Wire};
+use super::{Collective, CommError};
+use crate::faults::{self, Point};
+use crate::monitor::metrics;
+
+/// Comm wire protocol version (frame byte 0).
+pub const COMM_VERSION: u8 = 1;
+
+/// Hard cap on a comm frame: the largest legal segment
+/// (`ring::MAX_SEGMENT_ELEMS` f32s) plus headroom for headers. Length
+/// claims beyond this are rejected before any allocation.
+pub const MAX_FRAME: usize = ring::MAX_SEGMENT_ELEMS * 4 + 256;
+
+/// Cap on embedded strings (peer addresses, reject reasons).
+const MAX_STR: usize = 1024;
+
+const TAG_HELLO: u8 = 1;
+const TAG_PEERS: u8 = 2;
+const TAG_REJECT: u8 = 3;
+const TAG_RING: u8 = 4;
+const TAG_SEG: u8 = 5;
+
+/// Configuration of the TCP communicator.
+#[derive(Debug, Clone)]
+pub struct NetOptions {
+    /// Deadline for one whole collective (the "never hang" bound).
+    pub step_deadline: Duration,
+    /// Deadline for rendezvous + ring wiring at startup.
+    pub connect_timeout: Duration,
+    /// Ring segment length in f32 elements (pipelining granularity).
+    pub segment_elems: usize,
+    /// Compress gradient hops to f16 on the wire (all-reduce only;
+    /// broadcasts stay exact f32). Accumulation stays f32 and
+    /// deterministic; see `comm::ring`.
+    pub fp16_wire: bool,
+}
+
+impl Default for NetOptions {
+    fn default() -> Self {
+        NetOptions {
+            step_deadline: Duration::from_secs(30),
+            connect_timeout: Duration::from_secs(10),
+            segment_elems: ring::DEFAULT_SEGMENT_ELEMS,
+            fp16_wire: false,
+        }
+    }
+}
+
+// ------------------------------------------------------------- codec
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_u32(out, s.len() as u32);
+    out.extend_from_slice(s.as_bytes());
+}
+
+/// Bounds-checked frame reader: every accessor validates remaining
+/// length before touching bytes, and the only allocations are sized
+/// by *validated* counts.
+struct Rd<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Rd<'a> {
+    fn new(b: &'a [u8]) -> Self {
+        Rd { b, pos: 0 }
+    }
+
+    fn truncated(&self, what: &str) -> CommError {
+        CommError::Protocol(format!("truncated frame while reading {what}"))
+    }
+
+    fn u8(&mut self, what: &str) -> Result<u8, CommError> {
+        if self.pos >= self.b.len() {
+            return Err(self.truncated(what));
+        }
+        self.pos += 1;
+        Ok(self.b[self.pos - 1])
+    }
+
+    fn u32(&mut self, what: &str) -> Result<u32, CommError> {
+        if self.pos + 4 > self.b.len() {
+            return Err(self.truncated(what));
+        }
+        let v = u32::from_le_bytes(self.b[self.pos..self.pos + 4].try_into().expect("4 bytes"));
+        self.pos += 4;
+        Ok(v)
+    }
+
+    fn u64(&mut self, what: &str) -> Result<u64, CommError> {
+        if self.pos + 8 > self.b.len() {
+            return Err(self.truncated(what));
+        }
+        let v = u64::from_le_bytes(self.b[self.pos..self.pos + 8].try_into().expect("8 bytes"));
+        self.pos += 8;
+        Ok(v)
+    }
+
+    fn bytes(&mut self, n: usize, what: &str) -> Result<&'a [u8], CommError> {
+        if self.pos + n > self.b.len() {
+            return Err(self.truncated(what));
+        }
+        let s = &self.b[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn str_(&mut self, what: &str) -> Result<String, CommError> {
+        let n = self.u32(what)? as usize;
+        if n > MAX_STR {
+            return Err(CommError::Protocol(format!(
+                "string length claim {n} exceeds cap {MAX_STR} in {what}"
+            )));
+        }
+        let raw = self.bytes(n, what)?;
+        String::from_utf8(raw.to_vec())
+            .map_err(|_| CommError::Protocol(format!("non-UTF8 string in {what}")))
+    }
+
+    fn done(&self) -> Result<(), CommError> {
+        if self.pos != self.b.len() {
+            return Err(CommError::Protocol(format!(
+                "{} trailing bytes after frame payload",
+                self.b.len() - self.pos
+            )));
+        }
+        Ok(())
+    }
+}
+
+fn check_version(rd: &mut Rd, what: &str) -> Result<(), CommError> {
+    let v = rd.u8(what)?;
+    if v != COMM_VERSION {
+        return Err(CommError::Protocol(format!(
+            "unsupported comm protocol version {v} (expected {COMM_VERSION}) in {what}"
+        )));
+    }
+    Ok(())
+}
+
+/// Encode one ring segment message as a frame payload (no length
+/// prefix).
+pub fn encode_seg(m: &Msg) -> Vec<u8> {
+    let (dtype, n, data_bytes): (u8, usize, Vec<u8>) = match &m.data {
+        Wire::F32(v) => {
+            let mut b = Vec::with_capacity(v.len() * 4);
+            for x in v {
+                b.extend_from_slice(&x.to_le_bytes());
+            }
+            (0, v.len(), b)
+        }
+        Wire::F16(v) => {
+            let mut b = Vec::with_capacity(v.len() * 2);
+            for x in v {
+                b.extend_from_slice(&x.to_le_bytes());
+            }
+            (1, v.len(), b)
+        }
+    };
+    let kind = match m.kind {
+        MsgKind::Partial => 0u8,
+        MsgKind::Final => 1,
+        MsgKind::Bcast => 2,
+    };
+    let mut out = Vec::with_capacity(data_bytes.len() + 24);
+    out.push(COMM_VERSION);
+    out.push(TAG_SEG);
+    out.push(kind);
+    out.push(dtype);
+    put_u64(&mut out, m.op);
+    put_u32(&mut out, m.seg);
+    put_u32(&mut out, n as u32);
+    out.extend_from_slice(&data_bytes);
+    out
+}
+
+/// Decode one ring segment message from a frame payload. Hostile
+/// element-count claims are rejected against
+/// [`ring::MAX_SEGMENT_ELEMS`] *and* the actual payload length before
+/// any buffer is allocated.
+pub fn decode_seg(payload: &[u8]) -> Result<Msg, CommError> {
+    let mut rd = Rd::new(payload);
+    check_version(&mut rd, "segment")?;
+    let tag = rd.u8("segment tag")?;
+    if tag != TAG_SEG {
+        return Err(CommError::Protocol(format!("expected segment frame, got tag {tag}")));
+    }
+    let kind = match rd.u8("segment kind")? {
+        0 => MsgKind::Partial,
+        1 => MsgKind::Final,
+        2 => MsgKind::Bcast,
+        k => return Err(CommError::Protocol(format!("unknown segment kind {k}"))),
+    };
+    let dtype = rd.u8("segment dtype")?;
+    let op = rd.u64("segment op")?;
+    let seg = rd.u32("segment index")?;
+    let n = rd.u32("segment element count")? as usize;
+    if n > ring::MAX_SEGMENT_ELEMS {
+        return Err(CommError::Protocol(format!(
+            "segment element claim {n} exceeds cap {}",
+            ring::MAX_SEGMENT_ELEMS
+        )));
+    }
+    let data = match dtype {
+        0 => {
+            let raw = rd.bytes(n * 4, "f32 segment data")?;
+            Wire::F32(
+                raw.chunks_exact(4)
+                    .map(|c| f32::from_le_bytes(c.try_into().expect("4 bytes")))
+                    .collect(),
+            )
+        }
+        1 => {
+            let raw = rd.bytes(n * 2, "f16 segment data")?;
+            Wire::F16(
+                raw.chunks_exact(2)
+                    .map(|c| u16::from_le_bytes(c.try_into().expect("2 bytes")))
+                    .collect(),
+            )
+        }
+        d => return Err(CommError::Protocol(format!("unknown segment dtype {d}"))),
+    };
+    rd.done()?;
+    Ok(Msg { kind, op, seg, data })
+}
+
+fn encode_hello(rank: usize, size: usize, ring_addr: &str) -> Vec<u8> {
+    let mut out = vec![COMM_VERSION, TAG_HELLO];
+    put_u32(&mut out, rank as u32);
+    put_u32(&mut out, size as u32);
+    put_str(&mut out, ring_addr);
+    out
+}
+
+fn decode_hello(payload: &[u8]) -> Result<(usize, usize, String), CommError> {
+    let mut rd = Rd::new(payload);
+    check_version(&mut rd, "hello")?;
+    let tag = rd.u8("hello tag")?;
+    if tag != TAG_HELLO {
+        return Err(CommError::Protocol(format!("expected hello frame, got tag {tag}")));
+    }
+    let rank = rd.u32("hello rank")? as usize;
+    let size = rd.u32("hello size")? as usize;
+    let addr = rd.str_("hello ring address")?;
+    rd.done()?;
+    Ok((rank, size, addr))
+}
+
+fn encode_peers(addrs: &[String]) -> Vec<u8> {
+    let mut out = vec![COMM_VERSION, TAG_PEERS];
+    put_u32(&mut out, addrs.len() as u32);
+    for a in addrs {
+        put_str(&mut out, a);
+    }
+    out
+}
+
+fn encode_reject(reason: &str) -> Vec<u8> {
+    let mut out = vec![COMM_VERSION, TAG_REJECT];
+    put_str(&mut out, reason);
+    out
+}
+
+/// PEERS (the table) or REJECT (a reason) — the two legal rendezvous
+/// replies.
+fn decode_reply(payload: &[u8]) -> Result<Vec<String>, CommError> {
+    let mut rd = Rd::new(payload);
+    check_version(&mut rd, "rendezvous reply")?;
+    match rd.u8("reply tag")? {
+        TAG_PEERS => {
+            let n = rd.u32("peer count")? as usize;
+            if n > 4096 {
+                return Err(CommError::Protocol(format!("peer count claim {n} exceeds cap 4096")));
+            }
+            let mut addrs = Vec::with_capacity(n.min(64));
+            for i in 0..n {
+                addrs.push(rd.str_(&format!("peer address {i}"))?);
+            }
+            rd.done()?;
+            Ok(addrs)
+        }
+        TAG_REJECT => {
+            let reason = rd.str_("reject reason")?;
+            Err(CommError::Rendezvous(reason))
+        }
+        t => Err(CommError::Protocol(format!("unexpected rendezvous reply tag {t}"))),
+    }
+}
+
+fn encode_ring_hello(from: usize) -> Vec<u8> {
+    let mut out = vec![COMM_VERSION, TAG_RING];
+    put_u32(&mut out, from as u32);
+    out
+}
+
+fn decode_ring_hello(payload: &[u8]) -> Result<usize, CommError> {
+    let mut rd = Rd::new(payload);
+    check_version(&mut rd, "ring handshake")?;
+    let tag = rd.u8("ring tag")?;
+    if tag != TAG_RING {
+        return Err(CommError::Protocol(format!("expected ring handshake, got tag {tag}")));
+    }
+    let from = rd.u32("ring peer rank")? as usize;
+    rd.done()?;
+    Ok(from)
+}
+
+// ----------------------------------------------------------- framing
+
+fn frame(payload: Vec<u8>) -> Vec<u8> {
+    debug_assert!(payload.len() <= MAX_FRAME);
+    let mut out = Vec::with_capacity(payload.len() + 4);
+    put_u32(&mut out, payload.len() as u32);
+    out.extend_from_slice(&payload);
+    out
+}
+
+fn write_frame(stream: &mut TcpStream, payload: Vec<u8>) -> Result<(), CommError> {
+    let buf = frame(payload);
+    metrics::comm().bytes_sent.fetch_add(buf.len() as u64, std::sync::atomic::Ordering::Relaxed);
+    stream.write_all(&buf)?;
+    Ok(())
+}
+
+/// Read one frame under `deadline`. Length claims beyond
+/// [`MAX_FRAME`] are rejected before allocation; timeouts and resets
+/// surface as typed errors. Counts received bytes and ring stalls
+/// (reads that blocked > 1 ms) into the comm metrics.
+fn read_frame(
+    stream: &mut TcpStream,
+    deadline: Instant,
+    what: &'static str,
+) -> Result<Vec<u8>, CommError> {
+    faults::io_gate(Point::CommRecv)?;
+    let t0 = Instant::now();
+    let mut len_buf = [0u8; 4];
+    read_deadline(stream, &mut len_buf, deadline, what)?;
+    let len = u32::from_le_bytes(len_buf) as usize;
+    if len == 0 || len > MAX_FRAME {
+        return Err(CommError::Protocol(format!(
+            "frame length claim {len} outside (0, {MAX_FRAME}]"
+        )));
+    }
+    let mut payload = vec![0u8; len];
+    read_deadline(stream, &mut payload, deadline, what)?;
+    let c = metrics::comm();
+    c.bytes_recv.fetch_add(4 + len as u64, std::sync::atomic::Ordering::Relaxed);
+    if t0.elapsed() > Duration::from_millis(1) {
+        c.ring_stalls.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    }
+    Ok(payload)
+}
+
+/// `read_exact` bounded by `deadline` via the socket read timeout.
+fn read_deadline(
+    stream: &mut TcpStream,
+    buf: &mut [u8],
+    deadline: Instant,
+    what: &'static str,
+) -> Result<(), CommError> {
+    let now = Instant::now();
+    let Some(remaining) = deadline.checked_duration_since(now).filter(|d| !d.is_zero()) else {
+        return Err(CommError::Timeout { what, ms: 0 });
+    };
+    stream.set_read_timeout(Some(remaining)).map_err(|e| CommError::Io(e.to_string()))?;
+    stream.read_exact(buf).map_err(|e| match e.kind() {
+        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut => {
+            CommError::Timeout { what, ms: remaining.as_millis() as u64 }
+        }
+        _ => CommError::Io(format!("{what}: {e}")),
+    })
+}
+
+/// Dial `addr` with retries (the peer's listener may not be up yet)
+/// until `deadline`. The `comm.connect` chaos point gates every
+/// attempt.
+fn connect_retry(addr: &str, deadline: Instant) -> Result<TcpStream, CommError> {
+    loop {
+        let attempt = (|| -> std::io::Result<TcpStream> {
+            faults::io_gate(Point::CommConnect)?;
+            TcpStream::connect(addr)
+        })();
+        match attempt {
+            Ok(s) => return Ok(s),
+            Err(e) => {
+                if Instant::now() >= deadline {
+                    return Err(CommError::Timeout { what: "connecting to peer", ms: 0 });
+                }
+                // refused/reset while the peer boots: retry shortly
+                let _ = e;
+                std::thread::sleep(Duration::from_millis(10));
+            }
+        }
+    }
+}
+
+/// Accept one connection under `deadline` (std listeners have no
+/// accept timeout, so poll in non-blocking mode).
+fn accept_deadline(
+    listener: &TcpListener,
+    deadline: Instant,
+    what: &'static str,
+) -> Result<TcpStream, CommError> {
+    listener.set_nonblocking(true).map_err(|e| CommError::Io(e.to_string()))?;
+    loop {
+        match listener.accept() {
+            Ok((s, _)) => {
+                s.set_nonblocking(false).map_err(|e| CommError::Io(e.to_string()))?;
+                return Ok(s);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                if Instant::now() >= deadline {
+                    return Err(CommError::Timeout { what, ms: 0 });
+                }
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Err(e) => return Err(CommError::Io(e.to_string())),
+        }
+    }
+}
+
+// ----------------------------------------------------- communicator
+
+/// Socket-backed [`Collective`]: one predecessor stream (reads), one
+/// successor stream owned by a writer thread (non-blocking sends),
+/// and the deterministic ring collectives of [`super::ring`] on top.
+pub struct NetCommunicator {
+    rank: usize,
+    size: usize,
+    opts: NetOptions,
+    /// Per-communicator collective counter, embedded in every frame
+    /// and validated on receive (catches desynchronized peers).
+    op: u64,
+    pred: Option<TcpStream>,
+    out_tx: Option<Sender<Vec<u8>>>,
+    out_err: Arc<Mutex<Option<String>>>,
+    writer: Option<std::thread::JoinHandle<()>>,
+}
+
+impl NetCommunicator {
+    /// Bind the rendezvous listener up-front (launchers bind `:0`
+    /// first, learn the real port, then pass it to children).
+    pub fn rendezvous_bind(addr: &str) -> std::io::Result<TcpListener> {
+        TcpListener::bind(addr)
+    }
+
+    /// Join the world: rank 0 binds and serves the rendezvous at
+    /// `rendezvous`, every other rank dials it.
+    pub fn connect(
+        rank: usize,
+        size: usize,
+        rendezvous: &str,
+        opts: NetOptions,
+    ) -> Result<Self, CommError> {
+        if rank >= size {
+            return Err(CommError::InvalidRank { rank, size });
+        }
+        if rank == 0 {
+            let listener = Self::rendezvous_bind(rendezvous)
+                .map_err(|e| CommError::Rendezvous(format!("binding {rendezvous}: {e}")))?;
+            Self::connect_with_listener(listener, size, opts)
+        } else {
+            Self::connect_worker(rank, size, rendezvous, opts)
+        }
+    }
+
+    /// Rank 0's join path with a pre-bound rendezvous listener.
+    pub fn connect_with_listener(
+        listener: TcpListener,
+        size: usize,
+        opts: NetOptions,
+    ) -> Result<Self, CommError> {
+        if size == 1 {
+            return Ok(Self::trivial(0, opts));
+        }
+        let deadline = Instant::now() + opts.connect_timeout;
+        let ring_listener = TcpListener::bind((
+            listener.local_addr().map_err(|e| CommError::Io(e.to_string()))?.ip(),
+            0,
+        ))
+        .map_err(|e| CommError::Io(format!("binding ring listener: {e}")))?;
+        let my_ring_addr =
+            ring_listener.local_addr().map_err(|e| CommError::Io(e.to_string()))?.to_string();
+
+        // collect size-1 hellos, one per worker rank
+        let mut addrs: Vec<Option<String>> = vec![None; size];
+        addrs[0] = Some(my_ring_addr);
+        let mut conns: Vec<(usize, TcpStream)> = Vec::with_capacity(size - 1);
+        while conns.len() < size - 1 {
+            let mut s = accept_deadline(&listener, deadline, "rendezvous accept")?;
+            let payload = read_frame(&mut s, deadline, "rendezvous hello")?;
+            let (peer_rank, peer_size, ring_addr) = decode_hello(&payload)?;
+            if peer_size != size {
+                let _ = write_frame(
+                    &mut s,
+                    encode_reject(&format!("world size mismatch: rank 0 has {size}, you claim {peer_size}")),
+                );
+                return Err(CommError::Rendezvous(format!(
+                    "rank {peer_rank} joined with world size {peer_size}, expected {size}"
+                )));
+            }
+            if peer_rank == 0 || peer_rank >= size {
+                let _ = write_frame(&mut s, encode_reject("rank out of range"));
+                return Err(CommError::InvalidRank { rank: peer_rank, size });
+            }
+            if addrs[peer_rank].is_some() {
+                let _ = write_frame(&mut s, encode_reject("duplicate rank"));
+                return Err(CommError::DuplicateRank { rank: peer_rank });
+            }
+            addrs[peer_rank] = Some(ring_addr);
+            conns.push((peer_rank, s));
+        }
+        let table: Vec<String> = addrs.into_iter().map(|a| a.expect("all ranks joined")).collect();
+        for (_, mut s) in conns {
+            write_frame(&mut s, encode_peers(&table))?;
+        }
+        Self::wire_ring(0, size, &table, ring_listener, deadline, opts)
+    }
+
+    fn connect_worker(
+        rank: usize,
+        size: usize,
+        rendezvous: &str,
+        opts: NetOptions,
+    ) -> Result<Self, CommError> {
+        let deadline = Instant::now() + opts.connect_timeout;
+        let mut s = connect_retry(rendezvous, deadline)?;
+        let local_ip = s.local_addr().map_err(|e| CommError::Io(e.to_string()))?.ip();
+        let ring_listener = TcpListener::bind((local_ip, 0))
+            .map_err(|e| CommError::Io(format!("binding ring listener: {e}")))?;
+        let my_ring_addr =
+            ring_listener.local_addr().map_err(|e| CommError::Io(e.to_string()))?.to_string();
+        write_frame(&mut s, encode_hello(rank, size, &my_ring_addr))?;
+        let reply = read_frame(&mut s, deadline, "rendezvous reply")?;
+        let table = decode_reply(&reply)?;
+        if table.len() != size {
+            return Err(CommError::Rendezvous(format!(
+                "peer table has {} entries for world size {size}",
+                table.len()
+            )));
+        }
+        Self::wire_ring(rank, size, &table, ring_listener, deadline, opts)
+    }
+
+    /// Dial the successor, accept the predecessor, start the writer.
+    fn wire_ring(
+        rank: usize,
+        size: usize,
+        table: &[String],
+        ring_listener: TcpListener,
+        deadline: Instant,
+        opts: NetOptions,
+    ) -> Result<Self, CommError> {
+        let succ_addr = &table[(rank + 1) % size];
+        let mut succ = connect_retry(succ_addr, deadline)?;
+        succ.set_nodelay(true).ok();
+        write_frame(&mut succ, encode_ring_hello(rank))?;
+
+        let mut pred = accept_deadline(&ring_listener, deadline, "ring accept")?;
+        pred.set_nodelay(true).ok();
+        let payload = read_frame(&mut pred, deadline, "ring handshake")?;
+        let from = decode_ring_hello(&payload)?;
+        let expect = (rank + size - 1) % size;
+        if from != expect {
+            return Err(CommError::Rendezvous(format!(
+                "ring predecessor identified as rank {from}, expected {expect}"
+            )));
+        }
+
+        // writer thread: owns the successor stream; the protocol loop
+        // enqueues frames and never blocks on socket backpressure
+        let (tx, rx): (Sender<Vec<u8>>, Receiver<Vec<u8>>) = channel();
+        let out_err = Arc::new(Mutex::new(None::<String>));
+        let err_slot = Arc::clone(&out_err);
+        let writer = std::thread::Builder::new()
+            .name(format!("nnl-comm-w{rank}"))
+            .spawn(move || {
+                for buf in rx {
+                    if let Err(e) = succ.write_all(&buf) {
+                        *err_slot.lock().unwrap_or_else(|p| p.into_inner()) = Some(e.to_string());
+                        return;
+                    }
+                }
+            })
+            .map_err(|e| CommError::Io(format!("spawning comm writer: {e}")))?;
+
+        Ok(NetCommunicator {
+            rank,
+            size,
+            opts,
+            op: 0,
+            pred: Some(pred),
+            out_tx: Some(tx),
+            out_err,
+            writer: Some(writer),
+        })
+    }
+
+    fn trivial(rank: usize, opts: NetOptions) -> Self {
+        NetCommunicator {
+            rank,
+            size: 1,
+            opts,
+            op: 0,
+            pred: None,
+            out_tx: None,
+            out_err: Arc::new(Mutex::new(None)),
+            writer: None,
+        }
+    }
+
+    pub fn options(&self) -> &NetOptions {
+        &self.opts
+    }
+
+    fn link(&mut self, deadline: Instant) -> NetLink<'_> {
+        NetLink {
+            pred: self.pred.as_mut().expect("size > 1"),
+            out_tx: self.out_tx.as_ref().expect("size > 1"),
+            out_err: &self.out_err,
+            deadline,
+        }
+    }
+}
+
+impl Drop for NetCommunicator {
+    fn drop(&mut self) {
+        // closing the channel stops the writer; join so queued frames
+        // flush before the successor sees EOF
+        self.out_tx = None;
+        if let Some(w) = self.writer.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+/// The [`ring::Link`] over this rank's two TCP edges.
+struct NetLink<'a> {
+    pred: &'a mut TcpStream,
+    out_tx: &'a Sender<Vec<u8>>,
+    out_err: &'a Arc<Mutex<Option<String>>>,
+    deadline: Instant,
+}
+
+impl ring::Link for NetLink<'_> {
+    fn send(&mut self, msg: Msg) -> Result<(), CommError> {
+        if let Some(e) = self.out_err.lock().unwrap_or_else(|p| p.into_inner()).clone() {
+            return Err(CommError::Io(format!("successor link failed: {e}")));
+        }
+        let mut payload = encode_seg(&msg);
+        // `comm.send` chaos: may delay, error, or truncate the frame
+        // payload (the receiver's bounds-checked decoder reports it)
+        faults::mangle(Point::CommSend, &mut payload)?;
+        let buf = frame(payload);
+        metrics::comm()
+            .bytes_sent
+            .fetch_add(buf.len() as u64, std::sync::atomic::Ordering::Relaxed);
+        self.out_tx.send(buf).map_err(|_| CommError::Io("comm writer thread gone".into()))
+    }
+
+    fn recv(&mut self) -> Result<Msg, CommError> {
+        let payload = read_frame(self.pred, self.deadline, "ring segment")?;
+        decode_seg(&payload)
+    }
+}
+
+impl Collective for NetCommunicator {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn size(&self) -> usize {
+        self.size
+    }
+
+    fn all_reduce_flat(&mut self, buf: &mut [f32], division: bool) -> Result<(), CommError> {
+        metrics::comm().allreduce_calls.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        self.op += 1;
+        if self.size == 1 {
+            return Ok(());
+        }
+        let (rank, size, op) = (self.rank, self.size, self.op);
+        let (fp16, seg) = (self.opts.fp16_wire, self.opts.segment_elems);
+        let deadline = Instant::now() + self.opts.step_deadline;
+        let mut link = self.link(deadline);
+        ring::all_reduce(rank, size, op, buf, division, fp16, seg, &mut link)
+    }
+
+    fn bcast_flat(&mut self, buf: &mut [f32]) -> Result<(), CommError> {
+        self.op += 1;
+        if self.size == 1 {
+            return Ok(());
+        }
+        let (rank, size, op) = (self.rank, self.size, self.op);
+        let seg = self.opts.segment_elems;
+        let deadline = Instant::now() + self.opts.step_deadline;
+        let mut link = self.link(deadline);
+        ring::bcast(rank, size, op, buf, seg, &mut link)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::utils::prop;
+
+    fn loopback_world(
+        n: usize,
+        opts: NetOptions,
+    ) -> Vec<std::thread::JoinHandle<Result<NetCommunicator, CommError>>> {
+        let listener = NetCommunicator::rendezvous_bind("127.0.0.1:0").expect("bind");
+        let addr = listener.local_addr().expect("addr").to_string();
+        let mut handles = Vec::new();
+        {
+            let opts = opts.clone();
+            handles.push(std::thread::spawn(move || {
+                NetCommunicator::connect_with_listener(listener, n, opts)
+            }));
+        }
+        for rank in 1..n {
+            let addr = addr.clone();
+            let opts = opts.clone();
+            handles.push(std::thread::spawn(move || {
+                NetCommunicator::connect(rank, n, &addr, opts)
+            }));
+        }
+        handles
+    }
+
+    fn run_world<T: Send + 'static>(
+        n: usize,
+        opts: NetOptions,
+        f: impl Fn(NetCommunicator) -> Result<T, CommError> + Send + Sync + Clone + 'static,
+    ) -> Vec<Result<T, CommError>> {
+        let joins = loopback_world(n, opts);
+        let handles: Vec<_> = joins
+            .into_iter()
+            .map(|j| {
+                let f = f.clone();
+                std::thread::spawn(move || {
+                    let comm = j.join().expect("join thread")?;
+                    f(comm)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("worker")).collect()
+    }
+
+    #[test]
+    fn tcp_all_reduce_matches_sequential_fold() {
+        for n in [1usize, 2, 3, 4] {
+            let results = run_world(n, NetOptions::default(), move |mut comm| {
+                let r = comm.rank();
+                let mut buf: Vec<f32> = (0..130).map(|i| (i as f32 + r as f32 * 0.5).cos()).collect();
+                comm.all_reduce_flat(&mut buf, true)?;
+                Ok(buf)
+            });
+            let mut expect = vec![0.0f32; 130];
+            for r in 0..n {
+                for (i, e) in expect.iter_mut().enumerate() {
+                    *e += (i as f32 + r as f32 * 0.5).cos();
+                }
+            }
+            if n > 1 {
+                for e in expect.iter_mut() {
+                    *e *= 1.0 / n as f32;
+                }
+            }
+            for res in results {
+                let got = res.expect("all_reduce");
+                if n == 1 {
+                    // world 1 is a no-op, matching the thread backend
+                    assert_eq!(got.len(), 130);
+                    continue;
+                }
+                assert_eq!(
+                    got.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    expect.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    "n={n}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn tcp_bcast_and_gather() {
+        let results = run_world(3, NetOptions::default(), |mut comm| {
+            let mut w = if comm.rank() == 0 { vec![5.0f32, 6.0, 7.0] } else { vec![0.0; 3] };
+            comm.bcast_flat(&mut w)?;
+            let g = comm.all_gather_scalar(comm.rank() as f32 * 10.0)?;
+            comm.barrier()?;
+            Ok((w, g))
+        });
+        for res in results {
+            let (w, g) = res.expect("collectives");
+            assert_eq!(w, vec![5.0, 6.0, 7.0]);
+            assert_eq!(g, vec![0.0, 10.0, 20.0]);
+        }
+    }
+
+    #[test]
+    fn dropped_peer_times_out_with_typed_error_not_hang() {
+        let opts = NetOptions {
+            step_deadline: Duration::from_millis(300),
+            connect_timeout: Duration::from_secs(5),
+            ..NetOptions::default()
+        };
+        let results = run_world(3, opts, |mut comm| {
+            if comm.rank() == 2 {
+                // this rank dies before the collective
+                return Ok(vec![]);
+            }
+            let mut buf = vec![1.0f32; 64];
+            comm.all_reduce_flat(&mut buf, false).map(|_| buf)
+        });
+        let mut errs = 0;
+        for (rank, res) in results.into_iter().enumerate() {
+            if rank == 2 {
+                continue;
+            }
+            match res {
+                Err(CommError::Timeout { .. }) | Err(CommError::Io(_)) => errs += 1,
+                other => panic!("rank {rank}: expected timeout/io error, got {other:?}"),
+            }
+        }
+        assert_eq!(errs, 2, "every surviving rank must surface the failure");
+    }
+
+    #[test]
+    fn duplicate_rank_is_rejected() {
+        let listener = NetCommunicator::rendezvous_bind("127.0.0.1:0").expect("bind");
+        let addr = listener.local_addr().expect("addr").to_string();
+        let opts = NetOptions {
+            connect_timeout: Duration::from_secs(5),
+            ..NetOptions::default()
+        };
+        let r0 = {
+            let opts = opts.clone();
+            std::thread::spawn(move || NetCommunicator::connect_with_listener(listener, 3, opts))
+        };
+        let w = |rank: usize| {
+            let addr = addr.clone();
+            let opts = opts.clone();
+            std::thread::spawn(move || NetCommunicator::connect(rank, 3, &addr, opts))
+        };
+        let a = w(1);
+        // give rank 1 a head start so the duplicate arrives second
+        std::thread::sleep(Duration::from_millis(100));
+        let b = w(1);
+        let r0 = r0.join().expect("thread");
+        assert!(
+            matches!(r0, Err(CommError::DuplicateRank { rank: 1 })),
+            "rendezvous must reject the duplicate: {r0:?}"
+        );
+        // at least one of the two rank-1 joins must fail with a typed error
+        let (ra, rb) = (a.join().expect("thread"), b.join().expect("thread"));
+        assert!(ra.is_err() || rb.is_err());
+    }
+
+    #[test]
+    fn seg_codec_roundtrips() {
+        for fp16 in [false, true] {
+            let data = if fp16 {
+                Wire::F16(vec![0x3C00, 0x4000, 0xBC00])
+            } else {
+                Wire::F32(vec![1.0, -2.5, 3.25])
+            };
+            let m = Msg { kind: MsgKind::Final, op: 42, seg: 7, data };
+            let enc = encode_seg(&m);
+            assert_eq!(decode_seg(&enc).expect("roundtrip"), m);
+        }
+    }
+
+    #[test]
+    fn seg_decoder_survives_hostile_inputs() {
+        // truncations, bit flips and hostile length claims must all
+        // surface typed errors — never panic, never allocate from an
+        // untrusted claim (same bar as the NNB/archive decoders)
+        prop::check(
+            0xC0FFEE,
+            300,
+            |rng: &mut crate::tensor::Rng| {
+                let n = rng.below(40);
+                let vals: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+                let m = Msg {
+                    kind: if rng.below(2) == 0 { MsgKind::Partial } else { MsgKind::Final },
+                    op: rng.below(1000) as u64,
+                    seg: rng.below(100) as u32,
+                    data: if rng.below(2) == 0 {
+                        Wire::F32(vals)
+                    } else {
+                        Wire::F16(vals.iter().map(|&v| crate::utils::half::f32_to_f16_bits(v)).collect())
+                    },
+                };
+                let mut enc = encode_seg(&m);
+                match rng.below(3) {
+                    0 => {
+                        // truncate
+                        let keep = rng.below(enc.len() + 1);
+                        enc.truncate(keep);
+                    }
+                    1 => {
+                        // flip bits
+                        crate::faults::flip_bytes(rng.below(1 << 30) as u64, &mut enc);
+                    }
+                    _ => {
+                        // hostile element-count claim over real payload
+                        if enc.len() >= 20 {
+                            let claim = (u32::MAX - rng.below(1000) as u32).to_le_bytes();
+                            enc[16..20].copy_from_slice(&claim);
+                        }
+                    }
+                }
+                enc
+            },
+            |enc| {
+                // must return, not panic; any Ok must be internally sane
+                match decode_seg(enc) {
+                    Ok(m) => {
+                        if m.data.len() > ring::MAX_SEGMENT_ELEMS {
+                            return Err("decoder accepted an oversized segment".into());
+                        }
+                        Ok(())
+                    }
+                    Err(_) => Ok(()),
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn hostile_length_claim_rejected_before_allocation() {
+        let m = Msg { kind: MsgKind::Partial, op: 1, seg: 0, data: Wire::F32(vec![1.0; 4]) };
+        let mut enc = encode_seg(&m);
+        // element count field sits after ver/tag/kind/dtype (4) + op
+        // (8) + seg (4) = offset 16
+        enc[16..20].copy_from_slice(&u32::MAX.to_le_bytes());
+        match decode_seg(&enc) {
+            Err(CommError::Protocol(msg)) => {
+                assert!(msg.contains("exceeds cap"), "{msg}");
+            }
+            other => panic!("expected protocol error, got {other:?}"),
+        }
+    }
+}

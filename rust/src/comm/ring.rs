@@ -1,0 +1,425 @@
+//! Ring all-reduce with a **deterministic segment reduction order**.
+//!
+//! Classic ring all-reduce starts segment `s` at rank `s % N`, which
+//! makes the float association depend on the segment index — results
+//! differ from the sequential sum and between world sizes. Here every
+//! segment's reduce flows in increasing rank order around the ring:
+//!
+//! ```text
+//! rank 0: (0 + x_0) ──▶ rank 1: (+ x_1) ──▶ ... ──▶ rank N-1: (+ x_{N-1}, ÷N)
+//!                                                        │ finals
+//!            rank 0 ◀── rank N-1          rank 0 ──▶ 1 ──▶ ... ──▶ N-2
+//! ```
+//!
+//! so each element is reduced as `((0 + x_0) + x_1) + ... + x_{N-1}`
+//! — exactly the fold of the thread backend
+//! ([`super::collective::Communicator`]) and of a sequential
+//! simulation of the same data-parallel step. Rank `N-1` finalizes
+//! (including the `1/N` division) and the finals circulate the same
+//! ring edges back to every rank, so all ranks store *identical
+//! bytes*. Pipelining comes from cutting the buffer into segments:
+//! while segment `s` is being finalized downstream, segment `s+1` is
+//! still being reduced upstream, so the wire and the adders stay busy
+//! — and each rank moves ~2× the buffer regardless of N.
+//!
+//! Optional fp16 wire compression halves the bytes per hop: each hop
+//! decodes the incoming f16 partial to f32, adds its own f32
+//! contribution, and re-encodes — accumulation stays in f32 and the
+//! reduction order is unchanged, so the result is still deterministic
+//! and identical on every rank (rank `N-1` stores its own final
+//! *through* the f16 grid for exact agreement with the decoders).
+//!
+//! Everything here is transport-agnostic over the [`Link`] trait:
+//! `comm::net` drives it over TCP sockets, and the unit tests drive
+//! it over in-process channels.
+
+use super::CommError;
+use crate::utils::half::{f16_bits_to_f32, f32_to_f16_bits};
+
+/// Default ring segment length (f32 elements): 256 KiB frames, small
+/// enough to pipeline, large enough to amortize framing.
+pub const DEFAULT_SEGMENT_ELEMS: usize = 64 * 1024;
+
+/// Hard cap on elements per segment — bounds every frame allocation.
+pub const MAX_SEGMENT_ELEMS: usize = 1 << 21;
+
+/// Wire payload of one segment: f32 (exact) or f16 (compressed hops).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Wire {
+    F32(Vec<f32>),
+    F16(Vec<u16>),
+}
+
+impl Wire {
+    pub fn len(&self) -> usize {
+        match self {
+            Wire::F32(v) => v.len(),
+            Wire::F16(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Decode to f32 working values.
+    pub fn to_f32(&self) -> Vec<f32> {
+        match self {
+            Wire::F32(v) => v.clone(),
+            Wire::F16(v) => v.iter().map(|&h| f16_bits_to_f32(h)).collect(),
+        }
+    }
+}
+
+fn encode(vals: &[f32], fp16: bool) -> Wire {
+    if fp16 {
+        Wire::F16(vals.iter().map(|&v| f32_to_f16_bits(v)).collect())
+    } else {
+        Wire::F32(vals.to_vec())
+    }
+}
+
+/// Message kinds moving around the ring.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MsgKind {
+    /// Reduce-phase running sum, flowing rank 0 → N-1.
+    Partial,
+    /// Finalized segment, flowing N-1 → 0 → 1 → ... → N-2.
+    Final,
+    /// Broadcast chunk, flowing 0 → 1 → ... → N-1.
+    Bcast,
+}
+
+/// One framed segment. `op` is the per-communicator collective
+/// counter and `seg` the segment index — both validated on receive so
+/// a desynchronized peer surfaces a typed error, not silent
+/// corruption.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Msg {
+    pub kind: MsgKind,
+    pub op: u64,
+    pub seg: u32,
+    pub data: Wire,
+}
+
+/// A rank's pair of ring edges: `send` goes to rank `(r+1) % N`,
+/// `recv` comes from `(r-1+N) % N`. `send` must be non-blocking with
+/// respect to the protocol loop (the TCP impl queues to a writer
+/// thread) — the ring drivers below rely on that for deadlock
+/// freedom. `recv` must honor the transport's deadline and return
+/// [`CommError::Timeout`] rather than hang.
+pub trait Link {
+    fn send(&mut self, msg: Msg) -> Result<(), CommError>;
+    fn recv(&mut self) -> Result<Msg, CommError>;
+}
+
+/// Byte ranges of the `ceil(len / seg_elems)` segments.
+pub fn segments(len: usize, seg_elems: usize) -> Vec<std::ops::Range<usize>> {
+    let seg = seg_elems.clamp(1, MAX_SEGMENT_ELEMS);
+    (0..len.div_ceil(seg)).map(|i| i * seg..((i + 1) * seg).min(len)).collect()
+}
+
+fn check(m: &Msg, kind: MsgKind, op: u64, seg: usize, len: usize) -> Result<(), CommError> {
+    if m.kind != kind || m.op != op || m.seg as usize != seg {
+        return Err(CommError::Protocol(format!(
+            "out-of-order ring message: got {:?} op {} seg {}, expected {:?} op {op} seg {seg}",
+            m.kind, m.op, m.seg, kind
+        )));
+    }
+    if m.data.len() != len {
+        return Err(CommError::SizeMismatch { expected: len, got: m.data.len() });
+    }
+    Ok(())
+}
+
+/// Drive one ring all-reduce of `buf` for this rank. Every rank must
+/// call with the same `op`, buffer length, `division`, `fp16` and
+/// `seg_elems`. On success all ranks hold identical bytes equal to
+/// the rank-order sequential fold (exactly, when `fp16` is off).
+pub fn all_reduce(
+    rank: usize,
+    size: usize,
+    op: u64,
+    buf: &mut [f32],
+    division: bool,
+    fp16: bool,
+    seg_elems: usize,
+    link: &mut dyn Link,
+) -> Result<(), CommError> {
+    if size == 1 || buf.is_empty() {
+        return Ok(());
+    }
+    let segs = segments(buf.len(), seg_elems);
+    let scale = 1.0 / size as f32;
+    let succ_is_last = (rank + 1) % size == size - 1;
+
+    // Rank 0 originates every partial up-front: sends are queued, not
+    // blocking, so injecting all segments before draining finals
+    // cannot deadlock and keeps the pipeline full.
+    if rank == 0 {
+        for (s, r) in segs.iter().enumerate() {
+            // `0.0 + x` seeds the fold exactly like the thread
+            // backend's zero-initialized accumulator (it also
+            // normalizes -0.0 the same way).
+            let vals: Vec<f32> = buf[r.clone()].iter().map(|&v| 0.0 + v).collect();
+            link.send(Msg { kind: MsgKind::Partial, op, seg: s as u32, data: encode(vals.as_slice(), fp16) })?;
+        }
+    }
+
+    let need_partials = if rank == 0 { 0 } else { segs.len() };
+    let need_finals = if rank == size - 1 { 0 } else { segs.len() };
+    let (mut pdone, mut fdone) = (0usize, 0usize);
+    while pdone < need_partials || fdone < need_finals {
+        let m = link.recv()?;
+        match m.kind {
+            MsgKind::Partial if rank != 0 => {
+                let range = segs[pdone].clone();
+                check(&m, MsgKind::Partial, op, pdone, range.len())?;
+                let mut vals = m.data.to_f32();
+                for (v, mine) in vals.iter_mut().zip(&buf[range.clone()]) {
+                    *v += *mine;
+                }
+                if rank == size - 1 {
+                    if division {
+                        for v in vals.iter_mut() {
+                            *v *= scale;
+                        }
+                    }
+                    let data = encode(&vals, fp16);
+                    // store exactly what every decoder will see: on
+                    // the fp16 wire that means our own final goes
+                    // through the f16 grid too
+                    buf[range].copy_from_slice(&data.to_f32());
+                    link.send(Msg { kind: MsgKind::Final, op, seg: pdone as u32, data })?;
+                } else {
+                    link.send(Msg {
+                        kind: MsgKind::Partial,
+                        op,
+                        seg: pdone as u32,
+                        data: encode(&vals, fp16),
+                    })?;
+                }
+                pdone += 1;
+            }
+            MsgKind::Final if rank != size - 1 => {
+                let range = segs[fdone].clone();
+                check(&m, MsgKind::Final, op, fdone, range.len())?;
+                buf[range].copy_from_slice(&m.data.to_f32());
+                if !succ_is_last {
+                    link.send(m)?;
+                }
+                fdone += 1;
+            }
+            _ => {
+                return Err(CommError::Protocol(format!(
+                    "unexpected {:?} message at rank {rank}",
+                    m.kind
+                )))
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Broadcast rank 0's `buf` along the chain 0 → 1 → ... → N-1. Always
+/// f32 on the wire: weight broadcast must be exact even when gradient
+/// hops are compressed (an f16-rounded initial sync would silently
+/// diverge the replicas).
+pub fn bcast(
+    rank: usize,
+    size: usize,
+    op: u64,
+    buf: &mut [f32],
+    seg_elems: usize,
+    link: &mut dyn Link,
+) -> Result<(), CommError> {
+    if size == 1 || buf.is_empty() {
+        return Ok(());
+    }
+    let segs = segments(buf.len(), seg_elems);
+    if rank == 0 {
+        for (s, r) in segs.iter().enumerate() {
+            link.send(Msg {
+                kind: MsgKind::Bcast,
+                op,
+                seg: s as u32,
+                data: Wire::F32(buf[r.clone()].to_vec()),
+            })?;
+        }
+    } else {
+        for (s, r) in segs.iter().enumerate() {
+            let m = link.recv()?;
+            check(&m, MsgKind::Bcast, op, s, r.len())?;
+            buf[r.clone()].copy_from_slice(&m.data.to_f32());
+            if rank != size - 1 {
+                link.send(m)?;
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::{channel, Receiver, Sender};
+    use std::time::Duration;
+
+    /// In-process ring edges over channels (unit-test transport).
+    struct ChanLink {
+        tx: Sender<Msg>,
+        rx: Receiver<Msg>,
+    }
+
+    impl Link for ChanLink {
+        fn send(&mut self, msg: Msg) -> Result<(), CommError> {
+            self.tx.send(msg).map_err(|_| CommError::Io("peer gone".into()))
+        }
+        fn recv(&mut self) -> Result<Msg, CommError> {
+            self.rx
+                .recv_timeout(Duration::from_secs(10))
+                .map_err(|_| CommError::Timeout { what: "test recv", ms: 10_000 })
+        }
+    }
+
+    fn ring_links(n: usize) -> Vec<ChanLink> {
+        let chans: Vec<(Sender<Msg>, Receiver<Msg>)> = (0..n).map(|_| channel()).collect();
+        let mut txs: Vec<Option<Sender<Msg>>> = chans.iter().map(|(t, _)| Some(t.clone())).collect();
+        chans
+            .into_iter()
+            .enumerate()
+            .map(|(r, (_, rx))| ChanLink { tx: txs[(r + 1) % n].take().expect("succ tx"), rx })
+            .collect()
+    }
+
+    fn run_ring(
+        n: usize,
+        data: Vec<Vec<f32>>,
+        division: bool,
+        fp16: bool,
+        seg_elems: usize,
+    ) -> Vec<Result<Vec<f32>, CommError>> {
+        let links = ring_links(n);
+        let handles: Vec<_> = links
+            .into_iter()
+            .enumerate()
+            .map(|(r, mut link)| {
+                let mut buf = data[r].clone();
+                std::thread::spawn(move || {
+                    all_reduce(r, n, 7, &mut buf, division, fp16, seg_elems, &mut link)
+                        .map(|_| buf)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("ring worker")).collect()
+    }
+
+    fn sequential_fold(data: &[Vec<f32>], division: bool) -> Vec<f32> {
+        let n = data.len();
+        let mut acc = vec![0.0f32; data[0].len()];
+        for d in data {
+            for (a, v) in acc.iter_mut().zip(d) {
+                *a += *v;
+            }
+        }
+        if division {
+            for a in acc.iter_mut() {
+                *a *= 1.0 / n as f32;
+            }
+        }
+        acc
+    }
+
+    #[test]
+    fn ring_matches_sequential_fold_bitwise() {
+        for n in [2usize, 3, 4, 5] {
+            let data: Vec<Vec<f32>> = (0..n)
+                .map(|r| (0..37).map(|i| ((i * (r + 1)) as f32).sin() * 3.7).collect())
+                .collect();
+            let expect = sequential_fold(&data, true);
+            for seg in [4usize, 16, 64] {
+                let results = run_ring(n, data.clone(), true, false, seg);
+                for res in &results {
+                    let got = res.as_ref().expect("ring ok");
+                    let a: Vec<u32> = got.iter().map(|v| v.to_bits()).collect();
+                    let b: Vec<u32> = expect.iter().map(|v| v.to_bits()).collect();
+                    assert_eq!(a, b, "n={n} seg={seg}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fp16_wire_close_and_all_ranks_identical() {
+        let n = 4;
+        let data: Vec<Vec<f32>> =
+            (0..n).map(|r| (0..50).map(|i| (i as f32 * 0.01) + r as f32 * 0.1).collect()).collect();
+        let expect = sequential_fold(&data, true);
+        let results = run_ring(n, data, true, true, 16);
+        let first = results[0].as_ref().expect("ring ok").clone();
+        for res in &results {
+            let got = res.as_ref().expect("ring ok");
+            assert_eq!(
+                got.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                first.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "ranks must agree bitwise even on the fp16 wire"
+            );
+            for (g, e) in got.iter().zip(&expect) {
+                assert!((g - e).abs() <= 1e-3, "fp16 wire drifted: {g} vs {e}");
+            }
+        }
+    }
+
+    #[test]
+    fn bcast_chains_rank0_values() {
+        let n = 4;
+        let links = ring_links(n);
+        let handles: Vec<_> = links
+            .into_iter()
+            .enumerate()
+            .map(|(r, mut link)| {
+                std::thread::spawn(move || {
+                    let mut buf =
+                        if r == 0 { vec![1.0f32, 2.0, 3.0, 4.0, 5.0] } else { vec![0.0f32; 5] };
+                    bcast(r, n, 3, &mut buf, 2, &mut link).map(|_| buf)
+                })
+            })
+            .collect();
+        for h in handles {
+            assert_eq!(h.join().expect("worker").expect("bcast"), vec![1.0, 2.0, 3.0, 4.0, 5.0]);
+        }
+    }
+
+    #[test]
+    fn mismatched_lengths_surface_typed_error() {
+        let n = 2;
+        let links = ring_links(n);
+        let handles: Vec<_> = links
+            .into_iter()
+            .enumerate()
+            .map(|(r, mut link)| {
+                std::thread::spawn(move || {
+                    let mut buf = vec![1.0f32; if r == 0 { 8 } else { 5 }];
+                    all_reduce(r, n, 0, &mut buf, false, false, 64, &mut link)
+                })
+            })
+            .collect();
+        let results: Vec<_> = handles.into_iter().map(|h| h.join().expect("worker")).collect();
+        assert!(
+            results.iter().any(|r| matches!(
+                r,
+                Err(CommError::SizeMismatch { .. }) | Err(CommError::Timeout { .. })
+            )),
+            "length disagreement must surface typed errors: {results:?}"
+        );
+    }
+
+    #[test]
+    fn segments_cover_exactly() {
+        assert_eq!(segments(10, 4), vec![0..4, 4..8, 8..10]);
+        assert_eq!(segments(4, 4), vec![0..4]);
+        assert_eq!(segments(0, 4), Vec::<std::ops::Range<usize>>::new());
+        // zero-size request clamps instead of dividing by zero
+        assert_eq!(segments(3, 0), vec![0..1, 1..2, 2..3]);
+    }
+}

@@ -24,6 +24,7 @@
 //! ```text
 //! point:kind[:rate[:param]]
 //!   point ∈ admit | exec | worker | pool | net.read | net.write | decode
+//!         | comm.connect | comm.send | comm.recv
 //!   kind  ∈ panic | delay | ioerr | corrupt
 //!   rate  ∈ [0.0, 1.0]   probability per hit (default 1.0)
 //!   param = delay millis (delay) or corruption salt (corrupt); default 5
@@ -66,10 +67,23 @@ pub enum Point {
     /// `corrupt` flips bits so the decoder/verifier rejection path is
     /// exercised with real damage.
     ArtifactDecode,
+    /// `comm.connect` — every TCP dial/accept attempt in
+    /// `comm::net` rendezvous and ring wiring. An `ioerr` here
+    /// simulates a peer that never comes up; the joiner must surface
+    /// a typed `CommError` within its connect deadline.
+    CommConnect,
+    /// `comm.send` — a ring hop leaving a rank; `corrupt` truncates
+    /// the segment payload so the receiving rank's bounds-checked
+    /// decoder reports `CommError::Protocol`.
+    CommSend,
+    /// `comm.recv` — a ring hop arriving at a rank; `ioerr`/`delay`
+    /// model a dropped or stalled peer, which must surface as a typed
+    /// error at *every* surviving rank within the step deadline.
+    CommRecv,
 }
 
 /// Number of distinct injection points (sizes per-point hit counters).
-const N_POINTS: usize = 7;
+const N_POINTS: usize = 10;
 
 impl Point {
     /// Every injection point, in spec-name order.
@@ -81,10 +95,14 @@ impl Point {
         Point::NetRead,
         Point::NetWrite,
         Point::ArtifactDecode,
+        Point::CommConnect,
+        Point::CommSend,
+        Point::CommRecv,
     ];
 
     /// The spec-syntax name (`admit`, `exec`, `worker`, `pool`,
-    /// `net.read`, `net.write`, `decode`).
+    /// `net.read`, `net.write`, `decode`, `comm.connect`, `comm.send`,
+    /// `comm.recv`).
     pub fn name(self) -> &'static str {
         match self {
             Point::QueueAdmit => "admit",
@@ -94,6 +112,9 @@ impl Point {
             Point::NetRead => "net.read",
             Point::NetWrite => "net.write",
             Point::ArtifactDecode => "decode",
+            Point::CommConnect => "comm.connect",
+            Point::CommSend => "comm.send",
+            Point::CommRecv => "comm.recv",
         }
     }
 
@@ -110,6 +131,9 @@ impl Point {
             Point::NetRead => 4,
             Point::NetWrite => 5,
             Point::ArtifactDecode => 6,
+            Point::CommConnect => 7,
+            Point::CommSend => 8,
+            Point::CommRecv => 9,
         }
     }
 }

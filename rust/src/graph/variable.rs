@@ -9,7 +9,7 @@
 //! [`crate::nnp::NetworkDef`] with zero dual bookkeeping.
 
 use std::cell::RefCell;
-use std::collections::HashSet;
+use std::collections::{HashMap, HashSet};
 use std::rc::Rc;
 
 use crate::nnp::ir::Op;
@@ -246,7 +246,42 @@ impl Variable {
     /// 1). Gradients accumulate into `.g`; call [`Variable::zero_grad`]
     /// (or solver `zero_grad`) between iterations.
     pub fn backward_with_scale(&self, grad_seed: f32) {
+        self.backward_impl(grad_seed, None);
+    }
+
+    /// [`backward_with_scale`] plus a completion hook: `hook` fires
+    /// exactly once per `need_grad` **leaf** reachable from this
+    /// variable, at the moment that leaf's gradient is final for this
+    /// pass (its last pending contribution was processed — including
+    /// contributions that turned out to be skipped or `None`). The tape
+    /// knows completion order, so distributed training uses this to
+    /// launch a gradient bucket's all-reduce while backward is still
+    /// running on earlier layers (`comm::bucket`). Firing order depends
+    /// only on graph structure, never on gradient values.
+    ///
+    /// [`backward_with_scale`]: Variable::backward_with_scale
+    pub fn backward_with_hook(&self, grad_seed: f32, hook: &mut dyn FnMut(&Variable)) {
+        self.backward_impl(grad_seed, Some(hook));
+    }
+
+    fn backward_impl(&self, grad_seed: f32, mut hook: Option<&mut dyn FnMut(&Variable)>) {
         let order = self.topo_order();
+        // Pending gradient contributions per need_grad leaf: one per
+        // occurrence as a function input. The hook fires when a leaf's
+        // count hits zero — counts drop even when a node contributes
+        // nothing (need_grad off, no gradient flowed, bwd returned
+        // None), otherwise a dead branch would starve the hook.
+        let mut pending: HashMap<usize, (Variable, usize)> = HashMap::new();
+        if hook.is_some() {
+            for v in &order {
+                let node = v.0.borrow().creator.clone().expect("topo_order yields non-leaves");
+                for inp in node.inputs.iter() {
+                    if inp.is_leaf() && inp.need_grad() {
+                        pending.entry(inp.uid()).or_insert_with(|| (inp.clone(), 0)).1 += 1;
+                    }
+                }
+            }
+        }
         // Intermediate (non-leaf) grads are transient: clear them so
         // repeated backward calls accumulate only into leaves (PyTorch
         // / NNabla semantics).
@@ -260,49 +295,68 @@ impl Variable {
             inner.grad = Some(NdArray::full(&dims, grad_seed));
         }
         for v in order.iter().rev() {
-            if !v.need_grad() {
+            v.propagate_node();
+            if let Some(h) = hook.as_mut() {
+                let node = v.0.borrow().creator.clone().expect("topo_order yields non-leaves");
+                for inp in node.inputs.iter() {
+                    if inp.is_leaf() && inp.need_grad() {
+                        if let Some(entry) = pending.get_mut(&inp.uid()) {
+                            entry.1 -= 1;
+                            if entry.1 == 0 {
+                                h(&entry.0);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Run one function node's backward and accumulate into its inputs
+    /// (no-op when no gradient flowed here).
+    fn propagate_node(&self) {
+        if !self.need_grad() {
+            return;
+        }
+        let (node, out_data, out_grad) = {
+            let inner = self.0.borrow();
+            let g = match &inner.grad {
+                Some(g) => g.clone(),
+                None => return, // no gradient flowed here
+            };
+            (inner.creator.clone().unwrap(), inner.data.clone(), g)
+        };
+        // O(1) copy-on-write clones — the backward closures see
+        // the same buffers, never copies.
+        let in_data: Vec<NdArray> =
+            node.inputs.iter().map(|i| i.with_data(|d| d.clone())).collect();
+        let grads = (node.bwd)(&in_data, &out_data, &out_grad);
+        assert_eq!(
+            grads.len(),
+            node.inputs.len(),
+            "function '{}' returned {} grads for {} inputs",
+            node.op.name(),
+            grads.len(),
+            node.inputs.len()
+        );
+        for (inp, g) in node.inputs.iter().zip(grads) {
+            if !inp.need_grad() {
                 continue;
             }
-            let (node, out_data, out_grad) = {
-                let inner = v.0.borrow();
-                let g = match &inner.grad {
-                    Some(g) => g.clone(),
-                    None => continue, // no gradient flowed here
-                };
-                (inner.creator.clone().unwrap(), inner.data.clone(), g)
-            };
-            // O(1) copy-on-write clones — the backward closures see
-            // the same buffers, never copies.
-            let in_data: Vec<NdArray> =
-                node.inputs.iter().map(|i| i.with_data(|d| d.clone())).collect();
-            let grads = (node.bwd)(&in_data, &out_data, &out_grad);
-            assert_eq!(
-                grads.len(),
-                node.inputs.len(),
-                "function '{}' returned {} grads for {} inputs",
-                node.op.name(),
-                grads.len(),
-                node.inputs.len()
-            );
-            for (inp, g) in node.inputs.iter().zip(grads) {
-                if !inp.need_grad() {
-                    continue;
-                }
-                if let Some(g) = g {
-                    assert_eq!(
-                        g.dims(),
-                        inp.dims(),
-                        "function '{}' produced grad shape {:?} for input shape {:?}",
-                        node.op.name(),
-                        g.dims(),
-                        inp.dims()
-                    );
-                    let mut inner = inp.0.borrow_mut();
-                    inner.grad = Some(match inner.grad.take() {
-                        Some(acc) => ops::add(&acc, &g),
-                        None => g,
-                    });
-                }
+            if let Some(g) = g {
+                assert_eq!(
+                    g.dims(),
+                    inp.dims(),
+                    "function '{}' produced grad shape {:?} for input shape {:?}",
+                    node.op.name(),
+                    g.dims(),
+                    inp.dims()
+                );
+                let mut inner = inp.0.borrow_mut();
+                inner.grad = Some(match inner.grad.take() {
+                    Some(acc) => ops::add(&acc, &g),
+                    None => g,
+                });
             }
         }
     }
@@ -507,6 +561,71 @@ mod tests {
         assert_eq!(x.uid(), y.uid());
         let z = Variable::new(&[1], false);
         assert_ne!(x.uid(), z.uid());
+    }
+
+    #[test]
+    fn backward_hook_fires_once_per_leaf_when_grad_final() {
+        // two-"layer" chain: y = (x*w1)*w2 — w2's grad is final before
+        // w1's (reverse completion order), each fires exactly once
+        let x = Variable::from_array(NdArray::full(&[1], 2.0), false);
+        let w1 = Variable::from_array(NdArray::full(&[1], 3.0), true);
+        let w2 = Variable::from_array(NdArray::full(&[1], 4.0), true);
+        w1.set_name("w1");
+        w2.set_name("w2");
+        let h = mul_var(&x, &w1);
+        let y = mul_var(&h, &w2);
+        let mut fired: Vec<String> = Vec::new();
+        y.backward_with_hook(1.0, &mut |v| fired.push(v.name()));
+        assert_eq!(fired, vec!["w2".to_string(), "w1".to_string()]);
+        assert_eq!(w2.grad().item(), 6.0); // x*w1
+        assert_eq!(w1.grad().item(), 8.0); // x*w2
+    }
+
+    #[test]
+    fn backward_hook_counts_shared_leaf_uses() {
+        // w used twice: hook must wait for both contributions
+        let w = Variable::from_array(NdArray::full(&[1], 3.0), true);
+        w.set_name("w");
+        let a = mul_var(&w, &w); // w^2
+        let b = add_var(&a, &w); // hmm: w is input here too
+        let mut fired = 0usize;
+        b.backward_with_hook(1.0, &mut |v| {
+            assert_eq!(v.name(), "w");
+            fired += 1;
+            // at fire time the grad is final: d(w^2+w)/dw = 2w+1 = 7
+            assert_eq!(v.grad().item(), 7.0);
+        });
+        assert_eq!(fired, 1);
+    }
+
+    #[test]
+    fn backward_hook_fires_even_on_dead_branches() {
+        // z's producer gets no gradient flow (need_grad off upstream
+        // kills the path) but the pending count must still drain
+        let x = Variable::from_array(NdArray::full(&[1], 2.0), true);
+        x.set_name("x");
+        let dead = Variable::from_array(NdArray::full(&[1], 5.0), false);
+        let d = mul_var(&dead, &dead); // need_grad false: skipped node
+        let y = add_var(&mul_var(&x, &x), &d);
+        let mut fired: Vec<String> = Vec::new();
+        y.backward_with_hook(1.0, &mut |v| fired.push(v.name()));
+        assert_eq!(fired, vec!["x".to_string()]);
+        assert_eq!(x.grad().item(), 4.0);
+    }
+
+    #[test]
+    fn backward_with_hook_matches_plain_backward() {
+        let x = Variable::from_array(NdArray::full(&[1], 2.0), true);
+        let a = add_var(&x, &x);
+        let b = mul_var(&x, &x);
+        let c = mul_var(&a, &b);
+        c.backward();
+        let plain = x.grad().item();
+        x.zero_grad();
+        let mut n = 0usize;
+        c.backward_with_hook(1.0, &mut |_| n += 1);
+        assert_eq!(x.grad().item(), plain);
+        assert_eq!(n, 1);
     }
 
     #[test]

@@ -151,6 +151,30 @@
 //! feature is off. `tests/chaos_serve.rs` holds the headline
 //! invariant: every admitted request gets exactly one typed reply.
 //!
+//! ## Distributed training: the deterministic ring
+//!
+//! Data parallelism (§3.2) runs over one [`comm::Collective`] trait
+//! with two interchangeable backends: the in-process thread
+//! communicator ([`comm::CommHub`]) and a real multi-process TCP ring
+//! ([`comm::NetCommunicator`]: rank 0 serves the rendezvous, peers
+//! wire a ring of length-prefixed frames). Both compute the *same*
+//! fold — every element reduced as `((0 + x_0) + x_1) + …` in rank
+//! order, then multiplied by `1/N` — pipelined around the ring in
+//! segments, so results are **bit-identical across backends and world
+//! sizes** (an fp16 wire mode trades exactness for half the bytes,
+//! deterministically). The trainer layers throughput on top without
+//! touching the math: gradients coalesce into ~4 MiB buckets
+//! ([`comm::plan_buckets`]), and each bucket's all-reduce fires from
+//! the autodiff tape's completion hook the moment its last gradient
+//! lands ([`graph::Variable::backward_with_hook`]), overlapping
+//! communication with the rest of backward on a dedicated
+//! [`comm::Reducer`] thread. Dead peers surface as typed
+//! [`comm::CommError`]s at every rank within the step deadline —
+//! never a hang. CLI: `nnl train-dist` (`--launch N` forks a local
+//! world) and `nnl bench-comm` (→ `BENCH_comm.json`);
+//! `tests/distributed.rs` proves N-process runs match the sequential
+//! oracle bit-for-bit.
+//!
 //! ## Static verification: the checker beside the compiler
 //!
 //! [`nnp::verify`] is an independent verifier for everything the
@@ -204,7 +228,10 @@
 //! | [`models`] | zoo architectures + `Gb` builder |
 //! | [`solvers`] | SGD/momentum/Adam/… + schedulers |
 //! | [`mixed_precision`] | loss scaling, master weights (§3.3) |
-//! | [`comm`] | simulated data-parallel communicator (§3.2) |
+//! | [`comm`] | data-parallel collectives: thread + TCP backends (§3.2) |
+//! | [`comm::ring`] | deterministic ring all-reduce (transport-agnostic) |
+//! | [`comm::net`] | TCP rendezvous + framed ring transport |
+//! | [`comm::bucket`] | gradient bucketing, backward/reduce overlap |
 //! | [`trainer`] | dynamic / static / distributed training loops |
 //! | [`nnp`] | NNP format: IR, trace, archive, interpreter, **plan** |
 //! | [`nnp::passes`] | graph optimizer: `Pass` pipeline, memory planner |
@@ -221,6 +248,7 @@
 //! | [`bench_quant`] | quantization bench harness (`BENCH_quant.json`) |
 //! | [`bench_plan`] | graph-optimizer bench harness (`BENCH_plan.json`) |
 //! | [`bench_serve`] | serving front-end bench (`BENCH_serve.json`) |
+//! | [`bench_comm`] | distributed-training bench (`BENCH_comm.json`) |
 //! | [`data`] | synthetic datasets + loaders |
 //! | [`monitor`] | series/time monitors |
 //! | [`context`] | backend/precision context (Listing 2) |
@@ -246,6 +274,7 @@
 //! (naming, train/eval mode, MAC accounting) — see its module docs for
 //! the migration note.
 
+pub mod bench_comm;
 pub mod bench_kernels;
 pub mod bench_plan;
 pub mod bench_quant;

@@ -9,6 +9,7 @@ use std::sync::mpsc::Receiver;
 use std::sync::Arc;
 use std::time::Duration;
 
+use nnl::comm::{CommError, NetCommunicator, NetOptions};
 use nnl::console::{footprint, structure_search, SearchSpace, TrialStore};
 use nnl::context::Context;
 use nnl::converters::{frozen, nnb, onnx_lite, query, rs_source};
@@ -20,7 +21,7 @@ use nnl::runtime::Manifest;
 use nnl::serve::net::{NetConfig, NetServer, Registry};
 use nnl::serve::{ServeConfig, Server};
 use nnl::tensor::{NdArray, Rng};
-use nnl::trainer::{self, LossScalerKind, TrainConfig};
+use nnl::trainer::{self, DistConfig, LossScalerKind, TrainConfig, TrainReport};
 
 const USAGE: &str = "\
 nnl — Neural Network Libraries (Rust + JAX + Pallas reproduction)
@@ -29,6 +30,15 @@ USAGE:
   nnl train --model <name> [--steps N] [--lr F] [--solver sgd|momentum|adam]
             [--half] [--workers N] [--trials DIR]
   nnl train-static --artifact <name> [--steps N] [--lr F] [--half]
+  nnl train-dist (--launch N | --rank R --size N --rendezvous HOST:PORT)
+            [--model lenet] [--steps N] [--lr F] [--solver sgd|momentum|adam]
+            [--batch B] [--seed S] [--bucket-kb KB] [--no-overlap]
+            [--fp16-comm] [--deadline-ms MS]
+            [--dump-dir DIR | --dump-params FILE]
+            # multi-process data-parallel training over the TCP ring
+            # all-reduce (bit-deterministic across world sizes; see
+            # README); --launch N forks N local worker processes with
+            # rank 0 in-process, --rank/--size joins a rendezvous
   nnl eval --model <name> [--steps N]
   nnl convert --in model.nnp --to onnx|nnb|frozen|rs --out FILE
   nnl quantize --in model.nnp [--out model.nnb2] [--samples N]
@@ -77,6 +87,10 @@ USAGE:
   nnl bench-plan [--quick] [--out FILE]
             # graph optimizer: O0-vs-O2 step counts, peak arena bytes,
             # per-pass rewrites, serve rps; writes BENCH_plan.json
+  nnl bench-comm [--quick] [--out FILE]
+            # distributed training: steps/s and bytes moved at world
+            # 1/2/4, overlap-on vs overlap-off, fp16 wire; writes
+            # BENCH_comm.json
   nnl footprint [--model <name>]
   nnl search [--generations N] [--population N]
   nnl trials --dir DIR
@@ -159,13 +173,7 @@ fn main() {
             let cfg = train_config(&flags);
             validate_train_flags(Some(model), &cfg);
             let workers: usize = get(&flags, "workers", 1);
-            let data = if model == "lenet" {
-                SyntheticImages::new(10, 1, 28, 16, 1)
-            } else if model == "mlp" {
-                SyntheticImages::new(10, 1, 8, 16, 1)
-            } else {
-                SyntheticImages::imagenet_mini(16)
-            };
+            let data = train_data(model, 16);
             let report = if workers > 1 {
                 trainer::train_distributed(model, data, &cfg, workers)
             } else {
@@ -184,6 +192,16 @@ fn main() {
                 let id = store.record(&report).expect("record trial");
                 println!("recorded trial {id} in {dir}");
             }
+        }
+        "train-dist" => train_dist(&flags),
+        "bench-comm" => {
+            let report = nnl::bench_comm::run(flags.contains_key("quick"));
+            print!("{}", report.text);
+            let out = PathBuf::from(
+                flags.get("out").cloned().unwrap_or_else(|| "BENCH_comm.json".into()),
+            );
+            std::fs::write(&out, report.json.to_string_pretty()).expect("writing report");
+            println!("wrote {}", out.display());
         }
         "train-static" => {
             let artifact = flags
@@ -592,6 +610,162 @@ fn main() {
             print!("{USAGE}");
             std::process::exit(1);
         }
+    }
+}
+
+/// Synthetic training data for `nnl train` / `nnl train-dist`, shaped
+/// for the named model.
+fn train_data(model: &str, batch: usize) -> SyntheticImages {
+    if model == "lenet" {
+        SyntheticImages::new(10, 1, 28, batch, 1)
+    } else if model == "mlp" {
+        SyntheticImages::new(10, 1, 8, batch, 1)
+    } else {
+        SyntheticImages::imagenet_mini(batch)
+    }
+}
+
+/// `nnl train-dist` — multi-process data-parallel training over the
+/// TCP ring all-reduce. Two entry modes: `--launch N` binds the
+/// rendezvous, forks N-1 child worker processes of this same binary
+/// and runs rank 0 in-process (single-command local runs — what the
+/// integration test drives); `--rank R --size N --rendezvous ADDR`
+/// joins an existing rendezvous (one process per rank, any hosts).
+fn train_dist(flags: &HashMap<String, String>) {
+    let model = flags.get("model").cloned().unwrap_or_else(|| "lenet".into());
+    let cfg = TrainConfig {
+        steps: get(flags, "steps", 20),
+        lr: get(flags, "lr", 0.05),
+        weight_decay: get(flags, "weight-decay", 0.0),
+        solver: flags.get("solver").cloned().unwrap_or_else(|| "momentum".into()),
+        val_batches: get(flags, "val-batches", 1),
+        seed: get(flags, "seed", 313),
+        ..Default::default()
+    };
+    validate_train_flags(Some(model.as_str()), &cfg);
+    let dist = DistConfig {
+        bucket_bytes: get(flags, "bucket-kb", 4096usize) * 1024,
+        overlap: !flags.contains_key("no-overlap"),
+    };
+    let batch: usize = get(flags, "batch", 16);
+    let opts = NetOptions {
+        step_deadline: Duration::from_millis(get(flags, "deadline-ms", 30_000u64)),
+        fp16_wire: flags.contains_key("fp16-comm"),
+        ..NetOptions::default()
+    };
+    let data = train_data(&model, batch);
+
+    if flags.contains_key("launch") {
+        let size: usize = get(flags, "launch", 0);
+        if size == 0 {
+            eprintln!("--launch expects a worker count >= 1");
+            std::process::exit(1);
+        }
+        // bind before forking so every child finds a live rendezvous
+        let bind_addr =
+            flags.get("rendezvous").map(String::as_str).unwrap_or("127.0.0.1:0");
+        let listener = NetCommunicator::rendezvous_bind(bind_addr).unwrap_or_else(|e| {
+            eprintln!("binding rendezvous {bind_addr}: {e}");
+            std::process::exit(1);
+        });
+        let addr = listener.local_addr().expect("listener addr").to_string();
+        let exe = std::env::current_exe().expect("current exe");
+        let mut children = Vec::new();
+        for rank in 1..size {
+            let mut c = std::process::Command::new(&exe);
+            c.arg("train-dist")
+                .args(["--rank", &rank.to_string()])
+                .args(["--size", &size.to_string()])
+                .args(["--rendezvous", &addr])
+                .args(["--model", &model])
+                .args(["--steps", &cfg.steps.to_string()])
+                .args(["--lr", &cfg.lr.to_string()])
+                .args(["--solver", &cfg.solver])
+                .args(["--batch", &batch.to_string()])
+                .args(["--seed", &cfg.seed.to_string()])
+                .args(["--bucket-kb", &(dist.bucket_bytes / 1024).to_string()])
+                .args(["--deadline-ms", &opts.step_deadline.as_millis().to_string()]);
+            if !dist.overlap {
+                c.arg("--no-overlap");
+            }
+            if opts.fp16_wire {
+                c.arg("--fp16-comm");
+            }
+            if let Some(dir) = flags.get("dump-dir") {
+                c.args(["--dump-dir", dir]);
+            }
+            let child = c.spawn().unwrap_or_else(|e| {
+                eprintln!("spawning rank {rank}: {e}");
+                std::process::exit(1);
+            });
+            children.push((rank, child));
+        }
+        let result = NetCommunicator::connect_with_listener(listener, size, opts)
+            .and_then(|comm| trainer::train_worker(&model, &data, &cfg, &dist, comm, "cpu:tcp"));
+        let mut child_failed = false;
+        for (rank, mut child) in children {
+            match child.wait() {
+                Ok(st) if st.success() => {}
+                Ok(st) => {
+                    eprintln!("rank {rank} exited with {st}");
+                    child_failed = true;
+                }
+                Err(e) => {
+                    eprintln!("waiting on rank {rank}: {e}");
+                    child_failed = true;
+                }
+            }
+        }
+        finish_dist(result, 0, flags, child_failed);
+    } else {
+        let rank: usize = get(flags, "rank", 0);
+        let size: usize = get(flags, "size", 1);
+        let rendezvous =
+            flags.get("rendezvous").cloned().unwrap_or_else(|| "127.0.0.1:29500".into());
+        let result = NetCommunicator::connect(rank, size, &rendezvous, opts)
+            .and_then(|comm| trainer::train_worker(&model, &data, &cfg, &dist, comm, "cpu:tcp"));
+        finish_dist(result, rank, flags, false);
+    }
+}
+
+/// Finish one `train-dist` rank: dump parameters if asked, print the
+/// rank-0 summary, exit non-zero on any comm error or failed child.
+fn finish_dist(
+    result: Result<TrainReport, CommError>,
+    rank: usize,
+    flags: &HashMap<String, String>,
+    child_failed: bool,
+) {
+    let report = match result {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("rank {rank}: {e}");
+            std::process::exit(1);
+        }
+    };
+    let dump = flags
+        .get("dump-params")
+        .cloned()
+        .or_else(|| flags.get("dump-dir").map(|d| format!("{d}/params_rank{rank}.bin")));
+    if let Some(path) = dump {
+        trainer::dump_registry_params(&path).unwrap_or_else(|e| {
+            eprintln!("rank {rank}: writing {path}: {e}");
+            std::process::exit(1);
+        });
+    }
+    if rank == 0 {
+        println!(
+            "{}: {} steps in {:.2}s ({:.1} steps/s), final loss {:.4}, val error {:.3}",
+            report.model,
+            report.steps,
+            report.wall_secs,
+            report.steps as f64 / report.wall_secs,
+            report.final_loss(),
+            report.val_error
+        );
+    }
+    if child_failed {
+        std::process::exit(1);
     }
 }
 

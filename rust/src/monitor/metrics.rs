@@ -283,6 +283,87 @@ impl MetricsSnapshot {
     }
 }
 
+/// Process-global distributed-training counters, bumped from the
+/// `comm::net` hot path (frame reads/writes, collective calls) and
+/// the bucketed reducer (overlap accounting). Global rather than
+/// per-communicator because the transport layer — frame I/O, writer
+/// threads — has no communicator handy, and one process hosts exactly
+/// one training rank.
+#[derive(Default)]
+pub struct CommCounters {
+    /// Collective all-reduce invocations (one per bucket per step).
+    pub allreduce_calls: AtomicU64,
+    /// Framed bytes handed to the transport (headers included).
+    pub bytes_sent: AtomicU64,
+    /// Framed bytes read off the predecessor link.
+    pub bytes_recv: AtomicU64,
+    /// Communication-thread busy nanoseconds that overlapped a
+    /// backward pass — the time bucketing actually hid.
+    pub overlap_ns_hidden: AtomicU64,
+    /// Ring receives that blocked > 1 ms waiting on a peer.
+    pub ring_stalls: AtomicU64,
+}
+
+impl CommCounters {
+    pub fn snapshot(&self) -> CommSnapshot {
+        CommSnapshot {
+            allreduce_calls: self.allreduce_calls.load(Ordering::Relaxed),
+            bytes_sent: self.bytes_sent.load(Ordering::Relaxed),
+            bytes_recv: self.bytes_recv.load(Ordering::Relaxed),
+            overlap_ms_hidden: self.overlap_ns_hidden.load(Ordering::Relaxed) as f64 / 1e6,
+            ring_stalls: self.ring_stalls.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Point-in-time view of [`CommCounters`]; subtract two to get the
+/// traffic of one benchmark run.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CommSnapshot {
+    pub allreduce_calls: u64,
+    pub bytes_sent: u64,
+    pub bytes_recv: u64,
+    pub overlap_ms_hidden: f64,
+    pub ring_stalls: u64,
+}
+
+impl CommSnapshot {
+    /// Counter deltas `self - earlier` (saturating, so a torn read
+    /// never yields a bogus huge delta).
+    pub fn since(&self, earlier: &CommSnapshot) -> CommSnapshot {
+        CommSnapshot {
+            allreduce_calls: self.allreduce_calls.saturating_sub(earlier.allreduce_calls),
+            bytes_sent: self.bytes_sent.saturating_sub(earlier.bytes_sent),
+            bytes_recv: self.bytes_recv.saturating_sub(earlier.bytes_recv),
+            overlap_ms_hidden: (self.overlap_ms_hidden - earlier.overlap_ms_hidden).max(0.0),
+            ring_stalls: self.ring_stalls.saturating_sub(earlier.ring_stalls),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("allreduce_calls", Json::num(self.allreduce_calls as f64)),
+            ("bytes_sent", Json::num(self.bytes_sent as f64)),
+            ("bytes_recv", Json::num(self.bytes_recv as f64)),
+            ("overlap_ms_hidden", Json::num(self.overlap_ms_hidden)),
+            ("ring_stalls", Json::num(self.ring_stalls as f64)),
+        ])
+    }
+}
+
+static COMM: CommCounters = CommCounters {
+    allreduce_calls: AtomicU64::new(0),
+    bytes_sent: AtomicU64::new(0),
+    bytes_recv: AtomicU64::new(0),
+    overlap_ns_hidden: AtomicU64::new(0),
+    ring_stalls: AtomicU64::new(0),
+};
+
+/// The process-global comm counters.
+pub fn comm() -> &'static CommCounters {
+    &COMM
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -340,6 +421,28 @@ mod tests {
         let j = s.to_json();
         assert_eq!(j.get("requests").as_usize(), Some(4));
         assert!(j.get("batch_size_distribution").as_obj().is_some());
+    }
+
+    #[test]
+    fn comm_snapshot_deltas_and_json() {
+        let c = CommCounters::default();
+        c.allreduce_calls.fetch_add(2, Ordering::Relaxed);
+        c.bytes_sent.fetch_add(1000, Ordering::Relaxed);
+        let before = c.snapshot();
+        c.allreduce_calls.fetch_add(3, Ordering::Relaxed);
+        c.bytes_sent.fetch_add(500, Ordering::Relaxed);
+        c.bytes_recv.fetch_add(400, Ordering::Relaxed);
+        c.overlap_ns_hidden.fetch_add(2_000_000, Ordering::Relaxed);
+        c.ring_stalls.fetch_add(1, Ordering::Relaxed);
+        let d = c.snapshot().since(&before);
+        assert_eq!(d.allreduce_calls, 3);
+        assert_eq!(d.bytes_sent, 500);
+        assert_eq!(d.bytes_recv, 400);
+        assert_eq!(d.ring_stalls, 1);
+        assert!((d.overlap_ms_hidden - 2.0).abs() < 1e-9);
+        let j = d.to_json();
+        assert_eq!(j.get("bytes_sent").as_usize(), Some(500));
+        assert_eq!(j.get("allreduce_calls").as_usize(), Some(3));
     }
 
     #[test]

@@ -8,9 +8,10 @@
 //! - [`train_distributed`] — N simulated devices, per-worker backward +
 //!   `all_reduce` (Listing 3 / Figure 3).
 
+use std::collections::HashMap;
 use std::time::Instant;
 
-use crate::comm::CommHub;
+use crate::comm::{plan_buckets, Collective, CommError, CommHub, Reducer};
 use crate::context::{Backend, Context, TypeConfig};
 use crate::data::DataSource;
 use crate::functions as F;
@@ -345,6 +346,197 @@ pub fn evaluate_static(
 
 // --------------------------------------------------------- distributed
 
+/// Distributed-training knobs on top of [`TrainConfig`]: gradient
+/// bucket size and backward/reduce overlap. Every rank of a job must
+/// use identical values (a mismatch desynchronizes the collective
+/// sequence and surfaces as a typed `CommError::Protocol`, not silent
+/// corruption). Overlap on/off changes only *when* collectives are
+/// issued, never their contents — updates are bit-identical either
+/// way.
+#[derive(Debug, Clone)]
+pub struct DistConfig {
+    /// Gradient bucket capacity in bytes (`comm::bucket`).
+    pub bucket_bytes: usize,
+    /// Fire each bucket's all-reduce from the backward-pass hook the
+    /// moment its last gradient lands (true), or queue everything
+    /// after backward completes (false — the baseline the bench
+    /// compares against).
+    pub overlap: bool,
+}
+
+impl Default for DistConfig {
+    fn default() -> Self {
+        DistConfig { bucket_bytes: crate::comm::bucket::DEFAULT_BUCKET_BYTES, overlap: true }
+    }
+}
+
+/// Pack one bucket's gradients into a flat buffer, members in plan
+/// order.
+fn pack_bucket(members: &[usize], trainable: &[(String, Variable)]) -> Vec<f32> {
+    let total: usize = members.iter().map(|&i| trainable[i].1.size()).sum();
+    let mut out = Vec::with_capacity(total);
+    for &i in members {
+        let g = trainable[i].1.grad();
+        out.extend_from_slice(g.data());
+    }
+    out
+}
+
+/// One rank's data-parallel training loop over any [`Collective`]
+/// backend — threads ([`CommHub`]) or TCP processes
+/// (`comm::NetCommunicator`). Listing 3's pattern, plus gradient
+/// bucketing and (optionally) reduce/backward overlap driven by the
+/// tape's completion hook. Every comm failure propagates as a typed
+/// [`CommError`]; nothing in here panics on a dead peer.
+pub fn train_worker<C, D>(
+    model: &str,
+    data: &D,
+    cfg: &TrainConfig,
+    dist: &DistConfig,
+    comm: C,
+    backend: &'static str,
+) -> Result<TrainReport, CommError>
+where
+    C: Collective + 'static,
+    D: DataSource + ?Sized,
+{
+    let rank = comm.rank();
+    let world = comm.size();
+    PF::clear_parameters();
+    PF::seed_parameter_rng(cfg.seed); // same init everywhere
+    F::dropout::seed_dropout(cfg.seed ^ rank as u64);
+
+    let batch0 = data.batch(0, rank, world);
+    let bs = batch0.0.dims()[0];
+    let dims: Vec<usize> = std::iter::once(bs).chain(data.input_dims()).collect();
+    let mut g = Gb::new(model, true);
+    let x = g.input("x", &dims);
+    let logits = build_model(&mut g, model, &x, data.classes());
+    let macs = g.macs();
+    let y = Variable::new(&[bs, 1], false);
+    let loss = F::mean_all(&F::softmax_cross_entropy(&logits.var, &y));
+
+    let params = PF::get_parameters();
+    let n_params: usize = params.iter().map(|(_, v)| v.size()).sum();
+
+    // the communicator lives on a background thread from here on
+    let red = Reducer::spawn(comm);
+
+    // belt-and-braces weight sync (same seed should already agree) —
+    // always exact f32 on the wire, even when gradients ride fp16
+    {
+        let mut flat: Vec<f32> = Vec::with_capacity(n_params);
+        for (_, v) in &params {
+            flat.extend_from_slice(v.data().data());
+        }
+        let synced = red.bcast_flat(flat)?;
+        let mut off = 0;
+        for (_, v) in &params {
+            let n = v.size();
+            v.set_data(NdArray::from_vec(&v.dims(), synced[off..off + n].to_vec()));
+            off += n;
+        }
+    }
+
+    let mut solver = make_solver(cfg);
+    solver.set_parameters(&params);
+    let trainable: Vec<(String, Variable)> = solver.parameters().to_vec();
+
+    // bucket plan: identical on every rank (derived from sizes only)
+    let sizes: Vec<usize> = trainable.iter().map(|(_, v)| v.size()).collect();
+    let plan = plan_buckets(&sizes, dist.bucket_bytes);
+    let mut bucket_of = vec![0usize; sizes.len()];
+    for (b, members) in plan.iter().enumerate() {
+        for &i in members {
+            bucket_of[i] = b;
+        }
+    }
+    let uid_to_idx: HashMap<usize, usize> =
+        trainable.iter().enumerate().map(|(i, (_, v))| (v.uid(), i)).collect();
+
+    let mut losses = MonitorSeries::new("loss");
+    let timer = MonitorTimeElapsed::new();
+    for step in 0..cfg.steps {
+        let (bx, by) = data.batch(step, rank, world);
+        x.var.set_data(bx);
+        y.set_data(by.reshape(&[bs, 1]));
+        loss.forward();
+        solver.zero_grad();
+
+        // bucketed backward: the hook fires when a parameter's grad is
+        // final; a full bucket launches its all-reduce immediately
+        // (overlap on) while backward keeps running. Fire order is
+        // graph-determined — identical on every rank — so the
+        // collective sequences line up.
+        let mut remaining: Vec<usize> = plan.iter().map(|m| m.len()).collect();
+        let mut fired = vec![false; plan.len()];
+        let mut inflight = 0usize;
+        let mut hook_err: Option<CommError> = None;
+        red.begin_backward();
+        loss.backward_with_hook(1.0, &mut |v| {
+            if hook_err.is_some() {
+                return;
+            }
+            if let Some(&i) = uid_to_idx.get(&v.uid()) {
+                let b = bucket_of[i];
+                remaining[b] -= 1;
+                if remaining[b] == 0 && dist.overlap {
+                    match red.reduce(b, pack_bucket(&plan[b], &trainable), true) {
+                        Ok(()) => {
+                            fired[b] = true;
+                            inflight += 1;
+                        }
+                        Err(e) => hook_err = Some(e),
+                    }
+                }
+            }
+        });
+        red.end_backward();
+        if let Some(e) = hook_err {
+            return Err(e);
+        }
+        // overlap off queues everything here; overlap on only flushes
+        // buckets whose parameters never completed (e.g. unused in
+        // this graph). Same buckets, same math, either way.
+        for b in 0..plan.len() {
+            if !fired[b] {
+                red.reduce(b, pack_bucket(&plan[b], &trainable), true)?;
+                inflight += 1;
+            }
+        }
+        // drain results (FIFO) and scatter averaged grads back
+        for _ in 0..inflight {
+            let (b, vals) = red.next_reduced()?;
+            let mut off = 0;
+            for &i in &plan[b] {
+                let (_, v) = &trainable[i];
+                let n = v.size();
+                v.set_grad(NdArray::from_vec(&v.dims(), vals[off..off + n].to_vec()));
+                off += n;
+            }
+        }
+
+        solver.weight_decay(cfg.weight_decay);
+        solver.update();
+        // step loss averaged across workers (Figure 3 curve)
+        let mean_loss = red.gather(loss.item())?.iter().sum::<f32>() / world as f32;
+        losses.add(step, mean_loss);
+    }
+    red.shutdown();
+    let val_error = if rank == 0 { evaluate_dynamic(model, data, cfg.val_batches) } else { 0.0 };
+    Ok(TrainReport {
+        model: model.to_string(),
+        losses,
+        val_error,
+        wall_secs: timer.total_secs(),
+        steps: cfg.steps,
+        n_params,
+        macs,
+        backend,
+        overflow_skips: 0,
+    })
+}
+
 /// Data-parallel training over `world` simulated devices (threads),
 /// dynamic engine. Listing 3's pattern verbatim: per-worker backward,
 /// `all_reduce` of gradients, identical updates everywhere. Returns
@@ -358,80 +550,210 @@ pub fn train_distributed<D>(
 where
     D: DataSource + Clone + Send + 'static,
 {
+    train_distributed_opts(model, data, cfg, world, &DistConfig::default())
+        .unwrap_or_else(|e| panic!("distributed training failed: {e}"))
+}
+
+/// [`train_distributed`] with explicit [`DistConfig`] and typed
+/// errors (the bench toggles overlap through this).
+pub fn train_distributed_opts<D>(
+    model: &'static str,
+    data: D,
+    cfg: &TrainConfig,
+    world: usize,
+    dist: &DistConfig,
+) -> Result<TrainReport, CommError>
+where
+    D: DataSource + Clone + Send + 'static,
+{
     let mut hub = CommHub::new(world);
     let mut handles = Vec::new();
     for rank in 0..world {
-        let comm = hub.communicator(rank);
+        let comm = hub.communicator(rank)?;
         let data = data.clone();
         let cfg = cfg.clone();
+        let dist = dist.clone();
         handles.push(std::thread::spawn(move || {
             Context::set_default(Context::new(Backend::Cpu, TypeConfig::Float).with_device(rank));
-            PF::clear_parameters();
-            PF::seed_parameter_rng(cfg.seed); // same init everywhere
-            F::dropout::seed_dropout(cfg.seed ^ rank as u64);
-
-            let batch0 = data.batch(0, rank, world);
-            let bs = batch0.0.dims()[0];
-            let dims: Vec<usize> = std::iter::once(bs).chain(data.input_dims()).collect();
-            let mut g = Gb::new(model, true);
-            let x = g.input("x", &dims);
-            let logits = build_model(&mut g, model, &x, data.classes());
-            let macs = g.macs();
-            let y = Variable::new(&[bs, 1], false);
-            let loss = F::mean_all(&F::softmax_cross_entropy(&logits.var, &y));
-
-            let params = PF::get_parameters();
-            let n_params: usize = params.iter().map(|(_, v)| v.size()).sum();
-            // belt-and-braces weight sync (same seed should already agree)
-            let mut weights: Vec<NdArray> = params.iter().map(|(_, v)| v.data()).collect();
-            comm.bcast(&mut weights);
-            for ((_, v), w) in params.iter().zip(weights) {
-                v.set_data(w);
-            }
-
-            let mut solver = make_solver(&cfg);
-            solver.set_parameters(&params);
-            let mut losses = MonitorSeries::new("loss");
-            let timer = MonitorTimeElapsed::new();
-            for step in 0..cfg.steps {
-                let (bx, by) = data.batch(step, rank, world);
-                x.var.set_data(bx);
-                y.set_data(by.reshape(&[bs, 1]));
-                loss.forward();
-                solver.zero_grad();
-                loss.backward(); // Listing 3: loss.backward(clear_buffer=True)
-                let trainable: Vec<(String, Variable)> = solver.parameters().to_vec();
-                let mut grads: Vec<NdArray> =
-                    trainable.iter().map(|(_, v)| v.grad()).collect();
-                comm.all_reduce(&mut grads, true); // comm.all_reduce(params)
-                for ((_, v), gr) in trainable.iter().zip(grads) {
-                    v.set_grad(gr);
-                }
-                solver.weight_decay(cfg.weight_decay);
-                solver.update();
-                // step loss averaged across workers (Figure 3 curve)
-                let mean_loss = comm.all_gather_scalar(loss.item()).iter().sum::<f32>()
-                    / world as f32;
-                losses.add(step, mean_loss);
-            }
-            let val_error =
-                if rank == 0 { evaluate_dynamic(model, &data, cfg.val_batches) } else { 0.0 };
-            TrainReport {
-                model: model.to_string(),
-                losses,
-                val_error,
-                wall_secs: timer.total_secs(),
-                steps: cfg.steps,
-                n_params,
-                macs,
-                backend: "cpu:distributed",
-                overflow_skips: 0,
-            }
+            train_worker(model, &data, &cfg, &dist, comm, "cpu:distributed")
         }));
     }
-    let mut reports: Vec<TrainReport> =
+    let reports: Result<Vec<TrainReport>, CommError> =
         handles.into_iter().map(|h| h.join().expect("worker panicked")).collect();
-    reports.remove(0)
+    let mut reports = reports?;
+    Ok(reports.remove(0))
+}
+
+/// Sequential simulation of the same `world`-way data-parallel step —
+/// the *oracle* the multi-process integration tests compare against
+/// bit-for-bit. One graph, one registry: each step forwards/backwards
+/// every rank's shard in rank order, accumulates gradients into a
+/// zero-initialized buffer in that same order, multiplies by
+/// `1/world` and applies one update — exactly the fold both comm
+/// backends implement, so an N-process TCP run must match this to the
+/// bit (for models without per-rank randomness; dropout models
+/// diverge by design since each rank draws its own masks).
+pub fn train_distributed_reference<D>(
+    model: &str,
+    data: &D,
+    cfg: &TrainConfig,
+    world: usize,
+) -> TrainReport
+where
+    D: DataSource + ?Sized,
+{
+    PF::clear_parameters();
+    PF::seed_parameter_rng(cfg.seed);
+    F::dropout::seed_dropout(cfg.seed);
+
+    let batch0 = data.batch(0, 0, world);
+    let bs = batch0.0.dims()[0];
+    let dims: Vec<usize> = std::iter::once(bs).chain(data.input_dims()).collect();
+    let mut g = Gb::new(model, true);
+    let x = g.input("x", &dims);
+    let logits = build_model(&mut g, model, &x, data.classes());
+    let macs = g.macs();
+    let y = Variable::new(&[bs, 1], false);
+    let loss = F::mean_all(&F::softmax_cross_entropy(&logits.var, &y));
+
+    let params = PF::get_parameters();
+    let n_params: usize = params.iter().map(|(_, v)| v.size()).sum();
+    let mut solver = make_solver(cfg);
+    solver.set_parameters(&params);
+    let trainable: Vec<(String, Variable)> = solver.parameters().to_vec();
+
+    let scale = 1.0 / world as f32;
+    let mut losses = MonitorSeries::new("loss");
+    let timer = MonitorTimeElapsed::new();
+    for step in 0..cfg.steps {
+        let mut acc: Vec<Vec<f32>> =
+            trainable.iter().map(|(_, v)| vec![0.0f32; v.size()]).collect();
+        let mut loss_sum = 0.0f32;
+        for rank in 0..world {
+            let (bx, by) = data.batch(step, rank, world);
+            x.var.set_data(bx);
+            y.set_data(by.reshape(&[bs, 1]));
+            loss.forward();
+            solver.zero_grad();
+            loss.backward();
+            for (j, (_, v)) in trainable.iter().enumerate() {
+                let grad = v.grad();
+                for (a, gv) in acc[j].iter_mut().zip(grad.data()) {
+                    *a += *gv;
+                }
+            }
+            loss_sum += loss.item();
+        }
+        for (j, (_, v)) in trainable.iter().enumerate() {
+            let vals: Vec<f32> = acc[j].iter().map(|&a| a * scale).collect();
+            v.set_grad(NdArray::from_vec(&v.dims(), vals));
+        }
+        solver.weight_decay(cfg.weight_decay);
+        solver.update();
+        losses.add(step, loss_sum / world as f32);
+    }
+    let val_error = evaluate_dynamic(model, data, cfg.val_batches);
+    TrainReport {
+        model: model.to_string(),
+        losses,
+        val_error,
+        wall_secs: timer.total_secs(),
+        steps: cfg.steps,
+        n_params,
+        macs,
+        backend: "cpu:reference",
+        overflow_skips: 0,
+    }
+}
+
+// ------------------------------------------------------- param dumps
+
+/// Serialize this thread's registry parameters (name-sorted, f32 bit
+/// patterns) — the artifact the multi-process integration test
+/// compares across ranks and against the sequential reference.
+pub fn dump_registry_params(path: &str) -> std::io::Result<()> {
+    let mut params = PF::get_parameters();
+    params.sort_by(|a, b| a.0.cmp(&b.0));
+    let mut out: Vec<u8> = Vec::new();
+    out.extend_from_slice(b"NNLP");
+    out.push(1); // version
+    out.extend_from_slice(&(params.len() as u32).to_le_bytes());
+    for (name, v) in &params {
+        out.extend_from_slice(&(name.len() as u32).to_le_bytes());
+        out.extend_from_slice(name.as_bytes());
+        let dims = v.dims();
+        out.extend_from_slice(&(dims.len() as u32).to_le_bytes());
+        for d in &dims {
+            out.extend_from_slice(&(*d as u32).to_le_bytes());
+        }
+        let data = v.data();
+        out.extend_from_slice(&(data.size() as u32).to_le_bytes());
+        for val in data.data() {
+            out.extend_from_slice(&val.to_bits().to_le_bytes());
+        }
+    }
+    std::fs::write(path, out)
+}
+
+/// Parse a [`dump_registry_params`] file back into
+/// `(name, dims, f32 bit patterns)` triples — bit patterns, so equality
+/// really is bit-for-bit.
+pub fn read_params_dump(path: &str) -> std::io::Result<Vec<(String, Vec<usize>, Vec<u32>)>> {
+    let bytes = std::fs::read(path)?;
+    let bad = |m: &str| std::io::Error::new(std::io::ErrorKind::InvalidData, m.to_string());
+    let mut pos = 0usize;
+    let mut take = |n: usize| -> std::io::Result<std::ops::Range<usize>> {
+        if pos + n > bytes.len() {
+            return Err(bad("truncated params dump"));
+        }
+        pos += n;
+        Ok(pos - n..pos)
+    };
+    let u32_at = |r: std::ops::Range<usize>| {
+        u32::from_le_bytes(bytes[r].try_into().expect("4 bytes")) as usize
+    };
+    if &bytes[take(4)?] != b"NNLP" || bytes[take(1)?.start] != 1 {
+        return Err(bad("bad params dump header"));
+    }
+    let count = {
+        let r = take(4)?;
+        u32_at(r)
+    };
+    let mut out = Vec::with_capacity(count.min(4096));
+    for _ in 0..count {
+        let name_len = {
+            let r = take(4)?;
+            u32_at(r)
+        };
+        if name_len > 4096 {
+            return Err(bad("params dump name too long"));
+        }
+        let name = String::from_utf8(bytes[take(name_len)?].to_vec())
+            .map_err(|_| bad("non-UTF8 name in params dump"))?;
+        let ndim = {
+            let r = take(4)?;
+            u32_at(r)
+        };
+        if ndim > 16 {
+            return Err(bad("params dump rank too large"));
+        }
+        let mut dims = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            let r = take(4)?;
+            dims.push(u32_at(r));
+        }
+        let elems = {
+            let r = take(4)?;
+            u32_at(r)
+        };
+        let r = take(elems * 4)?;
+        let bits: Vec<u32> = bytes[r]
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes(c.try_into().expect("4 bytes")))
+            .collect();
+        out.push((name, dims, bits));
+    }
+    Ok(out)
 }
 
 /// Quantize current registry parameters for a half-precision run.
@@ -513,5 +835,100 @@ mod tests {
         let first = report.losses.points()[0].1;
         assert!(report.final_loss() < first, "distributed diverged");
         assert_eq!(report.backend, "cpu:distributed");
+    }
+
+    /// Run `world` thread-backend workers with the given overlap
+    /// setting and dump each rank's final registry to a file; returns
+    /// the dump paths.
+    fn run_workers_and_dump(
+        data: &SyntheticImages,
+        cfg: &TrainConfig,
+        world: usize,
+        overlap: bool,
+        tag: &str,
+    ) -> Vec<std::path::PathBuf> {
+        let dist = DistConfig { overlap, ..Default::default() };
+        let mut hub = CommHub::new(world);
+        let mut handles = Vec::new();
+        for rank in 0..world {
+            let comm = hub.communicator(rank).expect("fresh rank");
+            let data = data.clone();
+            let cfg = cfg.clone();
+            let dist = dist.clone();
+            let path = std::env::temp_dir().join(format!("nnl_dist_test_{tag}_r{rank}.bin"));
+            handles.push(std::thread::spawn(move || {
+                train_worker("lenet", &data, &cfg, &dist, comm, "cpu:distributed")
+                    .expect("train_worker");
+                dump_registry_params(path.to_str().expect("utf8 path")).expect("dump worker");
+                path
+            }));
+        }
+        handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
+    }
+
+    #[test]
+    fn distributed_lenet_is_bit_identical_to_sequential_reference() {
+        // lenet: no dropout, no BN — the oracle model. The 2-worker
+        // thread-backend run must reproduce the sequential simulation
+        // of the same fold to the bit, with overlap on AND off.
+        let cfg = TrainConfig { steps: 4, val_batches: 1, ..small_cfg(4) };
+        let world = 2;
+        let data = SyntheticImages::new(10, 1, 28, 8, 1);
+        train_distributed_reference("lenet", &data, &cfg, world);
+        let ref_path = std::env::temp_dir().join("nnl_dist_test_ref.bin");
+        dump_registry_params(ref_path.to_str().expect("utf8 path")).expect("dump reference");
+        let reference = read_params_dump(ref_path.to_str().unwrap()).expect("read reference");
+        assert!(!reference.is_empty(), "reference dump has no parameters");
+
+        for overlap in [true, false] {
+            let tag = if overlap { "on" } else { "off" };
+            for path in run_workers_and_dump(&data, &cfg, world, overlap, tag) {
+                let got = read_params_dump(path.to_str().unwrap()).expect("read worker dump");
+                assert_eq!(
+                    got.len(),
+                    reference.len(),
+                    "param count mismatch (overlap={overlap})"
+                );
+                for ((gn, gd, gb), (rn, rd, rb)) in got.iter().zip(&reference) {
+                    assert_eq!(gn, rn, "param order (overlap={overlap})");
+                    assert_eq!(gd, rd, "dims of {gn} (overlap={overlap})");
+                    assert_eq!(gb, rb, "{gn} not bit-identical (overlap={overlap})");
+                }
+                let _ = std::fs::remove_file(&path);
+            }
+        }
+        let _ = std::fs::remove_file(&ref_path);
+    }
+
+    #[test]
+    fn params_dump_rejects_truncation_and_garbage() {
+        let dir = std::env::temp_dir();
+        let good = dir.join("nnl_dump_roundtrip.bin");
+        PF::clear_parameters();
+        PF::seed_parameter_rng(5);
+        let _ =
+            PF::get_or_create_parameter("w", &[3, 2], |_| NdArray::full(&[3, 2], 1.5), true);
+        dump_registry_params(good.to_str().unwrap()).expect("dump");
+        let parsed = read_params_dump(good.to_str().unwrap()).expect("roundtrip");
+        assert_eq!(parsed.len(), 1);
+        assert_eq!(parsed[0].0, "w");
+        assert_eq!(parsed[0].1, vec![3, 2]);
+        assert_eq!(parsed[0].2, vec![1.5f32.to_bits(); 6]);
+
+        let bytes = std::fs::read(&good).expect("read dump");
+        for cut in [0, 3, 5, 9, bytes.len() - 1] {
+            let bad = dir.join(format!("nnl_dump_cut_{cut}.bin"));
+            std::fs::write(&bad, &bytes[..cut]).expect("write truncated");
+            assert!(
+                read_params_dump(bad.to_str().unwrap()).is_err(),
+                "truncation at {cut} must be a typed error"
+            );
+            let _ = std::fs::remove_file(&bad);
+        }
+        let garbage = dir.join("nnl_dump_garbage.bin");
+        std::fs::write(&garbage, b"not a params dump at all").expect("write garbage");
+        assert!(read_params_dump(garbage.to_str().unwrap()).is_err());
+        let _ = std::fs::remove_file(&garbage);
+        let _ = std::fs::remove_file(&good);
     }
 }
