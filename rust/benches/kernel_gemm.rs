@@ -1,9 +1,12 @@
 //! Bench: the tiled, multi-threaded kernel floor vs the pre-PR naive
 //! loops — GEMM GFLOP/s (naive vs packed tiled, single- and
-//! multi-thread), the `NNL_THREADS` scaling curve, fused-conv step
-//! time, compiled-plan serving throughput and the tape train-step hot
-//! path. The harness lives in `nnl::bench_kernels` (shared with
-//! `nnl bench-kernels`); results land in `BENCH_kernels.json`.
+//! multi-thread), the `NNL_THREADS` scaling curve, per-ISA f32/int8
+//! microkernel tiers (scalar vs the dispatched SIMD tier at equal
+//! threads, with detected CPU features and the `simd_no_worse`
+//! acceptance bit), fused-conv step time, compiled-plan serving
+//! throughput and the tape train-step hot path. The harness lives in
+//! `nnl::bench_kernels` (shared with `nnl bench-kernels`); results
+//! land in `BENCH_kernels.json`.
 
 fn main() {
     let report = nnl::bench_kernels::run(false);

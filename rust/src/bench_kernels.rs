@@ -3,13 +3,19 @@
 //!
 //! Measures the tentpole numbers of the tiled-kernel work: GEMM
 //! GFLOP/s (pre-PR naive loop vs the packed tiled core, single- and
-//! multi-thread), the thread-scaling curve, conv forward/backward step
-//! time on the fused im2col-GEMM path, compiled-plan serving
-//! throughput, and a tape train-step hot-path proxy.
+//! multi-thread), the thread-scaling curve, per-ISA microkernel tiers
+//! (scalar vs avx2/neon, f32 and int8, at equal threads — with the
+//! `simd_no_worse` acceptance bit CI greps for), conv forward/backward
+//! step time on the fused im2col-GEMM path, compiled-plan serving
+//! throughput, and a tape train-step hot-path proxy. Every report
+//! records the detected CPU features and the dispatched ISA so the
+//! numbers are attributable to the silicon they ran on.
 
 use crate::functions as F;
 use crate::models::zoo;
 use crate::nnp::CompiledNet;
+use crate::tensor::kernels::dispatch::{self, Isa};
+use crate::tensor::kernels::int8::{qgemm, QEpilogue, QMatA, QMatB};
 use crate::tensor::{ops, parallel, NdArray, Rng};
 use crate::utils::bench::{bench, table, Measurement};
 use crate::utils::json::Json;
@@ -70,6 +76,43 @@ pub fn run(quick: bool) -> KernelBenchReport {
         ]));
         rows.push(m);
     }
+
+    // --- per-ISA microkernel tiers: f32 + int8 at one thread each, so
+    //     the scalar-vs-vector comparison is pure kernel (no pool noise)
+    let dispatched = dispatch::isa();
+    let qa: Vec<u8> = (0..mm * mm).map(|_| rng.below(256) as u8).collect();
+    let qw: Vec<i8> = (0..mm * mm).map(|_| (rng.below(255) as i32 - 127) as i8).collect();
+    let qscales = vec![1.0f32 / 1024.0; mm];
+    let qb = QMatB::from_i8_kn(&qw, &qscales, mm, mm);
+    let qepi = QEpilogue { scales: &qscales, bias: None, relu: false };
+    let mut qout = vec![0.0f32; mm * mm];
+    let mut tier_stats: Vec<(Isa, f64, f64)> = Vec::new();
+    for isa in dispatch::available_isas() {
+        let tag = isa.name();
+        let mf = bench(&format!("gemm f32 [{tag}] {mm}^3, 1 thread"), 1, iters, || {
+            dispatch::with_isa(isa, || {
+                parallel::with_thread_limit(1, || std::hint::black_box(ops::matmul(&a, &b)));
+            });
+        });
+        let mq = bench(&format!("gemm int8 [{tag}] {mm}^3, 1 thread"), 1, iters, || {
+            dispatch::with_isa(isa, || {
+                parallel::with_thread_limit(1, || {
+                    qgemm(&mut qout, &QMatA::Dense { d: &qa, ld: mm }, 3, &qb, mm, &qepi);
+                    std::hint::black_box(&qout);
+                });
+            });
+        });
+        tier_stats.push((isa, gflops(flops, &mf), gflops(flops, &mq)));
+        rows.push(mf);
+        rows.push(mq);
+    }
+    let scalar_tier = tier_stats.iter().find(|t| t.0 == Isa::Scalar).expect("scalar always runs");
+    let disp_tier =
+        tier_stats.iter().find(|t| t.0 == dispatched).expect("dispatched tier measured");
+    // trivially true when dispatch resolves to scalar (pinned or no
+    // vector unit): there is no SIMD tier whose regression could hide
+    let simd_no_worse =
+        dispatched == Isa::Scalar || (disp_tier.1 > scalar_tier.1 && disp_tier.2 > scalar_tier.2);
 
     // --- conv fwd/bwd on the fused path (reused graph, tape hot loop)
     let (cb, cc, chw, coc, ck) = if quick { (2, 4, 16, 8, 3) } else { (4, 8, 28, 16, 5) };
@@ -142,6 +185,29 @@ pub fn run(quick: bool) -> KernelBenchReport {
 
     let json = Json::obj(vec![
         ("nnl_threads", Json::num(nt as f64)),
+        ("isa", Json::str(dispatched.name())),
+        (
+            "cpu_features",
+            Json::Arr(dispatch::cpu_features().into_iter().map(Json::str).collect()),
+        ),
+        (
+            "isa_tiers",
+            Json::Arr(
+                tier_stats
+                    .iter()
+                    .map(|(isa, f32_gflops, int8_gops)| {
+                        Json::obj(vec![
+                            ("isa", Json::str(isa.name())),
+                            ("dispatched", Json::Bool(*isa == dispatched)),
+                            ("threads", Json::num(1.0)),
+                            ("f32_gflops", Json::num(*f32_gflops)),
+                            ("int8_gops", Json::num(*int8_gops)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("simd_no_worse", Json::Bool(simd_no_worse)),
         (
             "gemm",
             Json::obj(vec![
@@ -186,6 +252,16 @@ pub fn run(quick: bool) -> KernelBenchReport {
         gflops(flops, &naive),
         gflops(flops, &tiled_1t),
         gflops(flops, &tiled_mt),
+    ));
+    text.push_str(&format!(
+        "ISA: dispatched {} (features: {}) | f32 {:.2} GF/s vs scalar {:.2} | \
+         int8 {:.2} GOP/s vs scalar {:.2} | simd_no_worse: {simd_no_worse}\n",
+        dispatched.name(),
+        dispatch::cpu_features().join("+"),
+        disp_tier.1,
+        scalar_tier.1,
+        disp_tier.2,
+        scalar_tier.2,
     ));
     KernelBenchReport { text, json }
 }

@@ -208,7 +208,12 @@
 //! persistent `std::thread` pool sized by `NNL_THREADS` (default: all
 //! cores) with a hard determinism contract: chunk boundaries depend
 //! only on shapes and every output element is computed wholly inside
-//! one chunk, so results are **bit-identical at any thread count**. A
+//! one chunk, so results are **bit-identical at any thread count**.
+//! The innermost register tile runs on hand-written SIMD microkernels
+//! (AVX2+FMA on x86-64, NEON on aarch64, a scalar oracle everywhere)
+//! behind one-time runtime dispatch ([`tensor::kernels::dispatch`],
+//! overridable via `NNL_ISA`); the int8 tiers reproduce the scalar
+//! bits exactly, the f32 tiers stay within 1e-5 relative. A
 //! per-thread scratch arena ([`tensor::kernels::Scratch`]) feeds
 //! packing buffers and plan intermediates; `CompiledNet::execute`
 //! recycles freed activation slots back into it, so steady-state
@@ -220,6 +225,7 @@
 //! |---|---|
 //! | [`tensor`] | `NdArray` storage (COW), dtypes, kernels, RNG |
 //! | [`tensor::kernels`] | tiled GEMM, fused conv/affine, scratch arena |
+//! | [`tensor::kernels::dispatch`] | runtime ISA dispatch (`NNL_ISA`) |
 //! | [`tensor::kernels::int8`] | int8 GEMM, fused requantize epilogue |
 //! | [`tensor::parallel`] | `NNL_THREADS` worker pool (bit-identical) |
 //! | [`graph`] | define-by-run tape: `Variable`, forward/backward |

@@ -800,13 +800,15 @@ pub(crate) fn execute_kernel(k: &StepKernel, xs: &[&NdArray]) -> Result<NdArray,
     }
 }
 
-/// Elementwise `max(0)` on a freshly produced (uniquely owned) array —
-/// the same function `F::relu` maps, so fused and unfused rectification
-/// are bit-identical.
+/// Elementwise `max(0)` on a freshly produced (uniquely owned) array,
+/// via the SIMD-dispatched kernel. Still bit-identical to the
+/// `f32::max` map that `F::relu` and the unfused `Relu` step apply:
+/// the vector max matches `f32::max` on NaN, and the only other
+/// divergent input (`-0.0`) cannot occur in a fresh GEMM/bias output
+/// (see [`kernels::relu_slice_inplace`]) — so O1's fused plans remain
+/// bit-identical to the O0 interpreter.
 fn relu_inplace(y: &mut NdArray) {
-    for v in y.data_mut() {
-        *v = v.max(0.0);
-    }
+    kernels::relu_slice_inplace(y.data_mut());
 }
 
 /// The contract a serving plan exposes, whatever executes underneath —

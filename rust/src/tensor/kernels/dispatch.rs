@@ -1,0 +1,252 @@
+//! One-time runtime CPU-feature dispatch for the SIMD microkernels.
+//!
+//! The GEMM cores ship hand-written `std::arch` microkernel variants
+//! (AVX2+FMA on x86_64, NEON on aarch64) next to the scalar parity
+//! oracle. Which tier runs is decided **once per process**: the
+//! `NNL_ISA` env var (`scalar|avx2|neon|auto`) wins if set and
+//! executable, otherwise CPU features are detected with
+//! `is_x86_feature_detected!`. Kernels resolve [`isa`] once at entry
+//! on the submitting thread and carry the answer into worker-pool
+//! chunks as plain data, so a single GEMM never mixes tiers and the
+//! bit-identical-across-`NNL_THREADS` contract holds per ISA.
+//!
+//! ## Safety backbone
+//!
+//! Every `unsafe` call into a feature-gated microkernel justifies
+//! itself by "this [`Isa`] value came from `dispatch`". That argument
+//! is airtight because all three producers of a non-scalar tier check
+//! executability first: [`detect`] only returns what
+//! `is_x86_feature_detected!` (or the aarch64 NEON baseline) proves,
+//! the `NNL_ISA` parser falls back to scalar when the request can't
+//! run here, and [`with_isa`] asserts [`available`] before installing
+//! its thread-local override.
+//!
+//! ## Numeric contract per tier
+//!
+//! - int8: bit-identical to scalar at every ISA (exact i32
+//!   accumulation in all variants).
+//! - f32: bit-identical across thread counts at any fixed ISA;
+//!   ≤ 1e-5 relative of the scalar oracle across ISAs (the FMA
+//!   variants keep products unrounded).
+
+use std::cell::Cell;
+use std::sync::OnceLock;
+
+/// A microkernel tier the dispatcher can select.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Isa {
+    /// Portable scalar kernels — the parity oracle, always available.
+    Scalar,
+    /// x86_64 AVX2 + FMA (8-lane f32, `madd`-widened int8).
+    Avx2,
+    /// aarch64 NEON (2×4-lane f32, `mlal`-widened int8).
+    Neon,
+}
+
+impl Isa {
+    /// The `NNL_ISA` spelling of this tier.
+    pub fn name(self) -> &'static str {
+        match self {
+            Isa::Scalar => "scalar",
+            Isa::Avx2 => "avx2",
+            Isa::Neon => "neon",
+        }
+    }
+}
+
+static DISPATCHED: OnceLock<Isa> = OnceLock::new();
+
+thread_local! {
+    /// Per-thread override installed by [`with_isa`]. Thread-local on
+    /// purpose: kernels resolve their ISA once at entry on the
+    /// submitting thread and carry it into pool chunks as plain data,
+    /// so a pin scoped to one bench/test thread can never leak into a
+    /// kernel running concurrently on another.
+    static OVERRIDE: Cell<Option<Isa>> = const { Cell::new(None) };
+}
+
+/// Can this machine execute `isa`?
+pub fn available(isa: Isa) -> bool {
+    match isa {
+        Isa::Scalar => true,
+        Isa::Avx2 => {
+            #[cfg(target_arch = "x86_64")]
+            {
+                std::arch::is_x86_feature_detected!("avx2")
+                    && std::arch::is_x86_feature_detected!("fma")
+            }
+            #[cfg(not(target_arch = "x86_64"))]
+            {
+                false
+            }
+        }
+        // NEON is an architectural baseline of aarch64.
+        Isa::Neon => cfg!(target_arch = "aarch64"),
+    }
+}
+
+/// Every tier this machine can execute, scalar first — the iteration
+/// order benches and parity suites use.
+pub fn available_isas() -> Vec<Isa> {
+    [Isa::Scalar, Isa::Avx2, Isa::Neon].into_iter().filter(|&i| available(i)).collect()
+}
+
+/// The best tier the CPU supports (ignoring `NNL_ISA`).
+fn detect() -> Isa {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2")
+            && std::arch::is_x86_feature_detected!("fma")
+        {
+            Isa::Avx2
+        } else {
+            Isa::Scalar
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        Isa::Neon
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    {
+        Isa::Scalar
+    }
+}
+
+/// `NNL_ISA` + detection → the process-wide tier. An unknown spelling
+/// auto-detects; a known tier this machine can't run degrades to
+/// scalar (never to a different vector tier — a pin must stay
+/// predictable). Both misses warn once on stderr.
+fn resolve() -> Isa {
+    let Ok(raw) = std::env::var("NNL_ISA") else {
+        return detect();
+    };
+    let want = match raw.trim().to_ascii_lowercase().as_str() {
+        "" | "auto" => return detect(),
+        "scalar" => Isa::Scalar,
+        "avx2" => Isa::Avx2,
+        "neon" => Isa::Neon,
+        other => {
+            eprintln!("NNL_ISA={other:?} is not one of scalar|avx2|neon|auto; auto-detecting");
+            return detect();
+        }
+    };
+    if available(want) {
+        want
+    } else {
+        eprintln!(
+            "NNL_ISA={} requested but this CPU/arch cannot execute it; falling back to scalar",
+            want.name()
+        );
+        Isa::Scalar
+    }
+}
+
+/// The tier kernels should run right now on this thread: the
+/// [`with_isa`] override if one is installed, else the process-wide
+/// decision (made once, from `NNL_ISA` + CPU detection).
+pub fn isa() -> Isa {
+    if let Some(pinned) = OVERRIDE.with(|c| c.get()) {
+        return pinned;
+    }
+    *DISPATCHED.get_or_init(resolve)
+}
+
+/// [`isa`], spelled for logs and bench JSON.
+pub fn isa_name() -> &'static str {
+    isa().name()
+}
+
+/// Run `f` with kernels pinned to `pin` on this thread — the handle
+/// parity suites and benches use to compare tiers in-process. Panics
+/// if this machine can't execute `pin`: a pin that silently changed
+/// what it measures would be worse than no pin. Nests; always
+/// restores the previous override, even on unwind.
+pub fn with_isa<R>(pin: Isa, f: impl FnOnce() -> R) -> R {
+    assert!(
+        available(pin),
+        "with_isa({}): this machine cannot execute that ISA tier",
+        pin.name()
+    );
+    struct Restore(Option<Isa>);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            OVERRIDE.with(|c| c.set(self.0));
+        }
+    }
+    let prev = OVERRIDE.with(|c| c.replace(Some(pin)));
+    let _restore = Restore(prev);
+    f()
+}
+
+/// CPU features relevant to the kernel tiers, as detected at runtime —
+/// recorded into `BENCH_kernels.json` so every measurement names the
+/// silicon it ran on.
+pub fn cpu_features() -> Vec<&'static str> {
+    #[cfg(target_arch = "x86_64")]
+    {
+        let mut f = vec!["sse2"];
+        if std::arch::is_x86_feature_detected!("avx") {
+            f.push("avx");
+        }
+        if std::arch::is_x86_feature_detected!("avx2") {
+            f.push("avx2");
+        }
+        if std::arch::is_x86_feature_detected!("fma") {
+            f.push("fma");
+        }
+        if std::arch::is_x86_feature_detected!("avx512f") {
+            f.push("avx512f");
+        }
+        f
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        vec!["neon"]
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    {
+        Vec::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_is_always_available_and_dispatch_is_executable() {
+        assert!(available(Isa::Scalar));
+        let tiers = available_isas();
+        assert_eq!(tiers[0], Isa::Scalar);
+        assert!(tiers.contains(&isa()), "dispatched tier {:?} must be executable", isa());
+    }
+
+    #[test]
+    fn with_isa_pins_nests_and_restores() {
+        let base = isa();
+        with_isa(Isa::Scalar, || {
+            assert_eq!(isa(), Isa::Scalar);
+            with_isa(Isa::Scalar, || assert_eq!(isa(), Isa::Scalar));
+            assert_eq!(isa(), Isa::Scalar);
+        });
+        assert_eq!(isa(), base);
+    }
+
+    #[test]
+    fn with_isa_restores_on_unwind() {
+        let base = isa();
+        let r = std::panic::catch_unwind(|| {
+            with_isa(Isa::Scalar, || panic!("boom"));
+        });
+        assert!(r.is_err());
+        assert_eq!(isa(), base);
+    }
+
+    #[test]
+    fn names_match_the_env_spellings() {
+        assert_eq!(Isa::Scalar.name(), "scalar");
+        assert_eq!(Isa::Avx2.name(), "avx2");
+        assert_eq!(Isa::Neon.name(), "neon");
+    }
+}

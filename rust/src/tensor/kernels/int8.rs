@@ -34,18 +34,35 @@
 //! shape-derived chunking as the f32 core; integer accumulation is
 //! exact and the epilogue is a fixed per-element expression, so
 //! results are bit-identical at any `NNL_THREADS` by construction.
+//!
+//! ## SIMD tiers
+//!
+//! Like the f32 core, the int8 tile and its requantize epilogue have
+//! hand-written AVX2/NEON variants behind [`super::dispatch`] — but
+//! with a stronger contract: every tier is **bit-identical** to the
+//! scalar oracle, not just close. The vector tiles widen through i16
+//! and multiply-accumulate into exact i32 (`_mm256_madd_epi16` /
+//! `vmlal_s16`); the raw `_mm256_maddubs_epi16` shape is deliberately
+//! avoided because its i16 pairwise sums *saturate* for this operand
+//! range (see `x86.rs`). The epilogue keeps its multiply and add
+//! separate so it computes the exact expression [`requantize_one`]
+//! spells. Parity suites therefore assert `==`, never tolerance.
 
 use std::cell::RefCell;
 
 use crate::tensor::ops::Conv2dGeom;
 use crate::tensor::{parallel, NdArray};
 
-use super::{nhwc_to_nchw, with_scratch};
+#[cfg(target_arch = "aarch64")]
+use super::neon;
+#[cfg(target_arch = "x86_64")]
+use super::x86;
+use super::{dispatch, dispatch::Isa, nhwc_to_nchw, with_scratch};
 
 /// Microkernel rows (output tile height).
-const QMR: usize = 8;
+pub(crate) const QMR: usize = 8;
 /// Microkernel cols (output tile width).
-const QNR: usize = 8;
+pub(crate) const QNR: usize = 8;
 /// Cap on row chunks per GEMM (same determinism rationale as the f32
 /// core: the partition is a pure function of the problem shape).
 const QMAX_CHUNKS: usize = 64;
@@ -315,10 +332,80 @@ fn qmicrokernel(k: usize, ap: &[u8], bp: &[i8], acc: &mut [i32; QMR * QNR]) {
     }
 }
 
+/// Run the int8 register tile on the given tier. Every tier
+/// accumulates in exact i32, so the choice is invisible in the output
+/// bits — the scalar tile stays the oracle the others are tested
+/// against with `==`.
+#[inline]
+fn run_qmicrokernel(isa: Isa, k: usize, ap: &[u8], bp: &[i8], acc: &mut [i32; QMR * QNR]) {
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `Isa::Avx2` is only ever produced by `dispatch` after
+        // runtime detection proves avx2 (+fma) executable; slice
+        // lengths follow the scalar kernel's own contract.
+        Isa::Avx2 => unsafe { x86::qmicrokernel(k, ap, bp, acc) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: `Isa::Neon` only exists on aarch64, where NEON is an
+        // architectural baseline; slice lengths per the shared contract.
+        Isa::Neon => unsafe { neon::qmicrokernel(k, ap, bp, acc) },
+        _ => qmicrokernel(k, ap, bp, acc),
+    }
+}
+
+/// Dequantize one tile row: `dst[c] =` [`requantize_one`] of
+/// `acc[c]` against column `j0+c`'s metadata. Full-width (`QNR`) rows
+/// take the vector epilogue when the tier has one — bit-identical to
+/// the scalar loop (see the variants' docs) — and partial tail rows
+/// always take the scalar loop.
+#[inline]
+fn requantize_row(
+    isa: Isa,
+    dst: &mut [f32],
+    acc: &[i32],
+    zp: u8,
+    colsums: &[i32],
+    scales: &[f32],
+    bias: Option<&[f32]>,
+    relu: bool,
+) {
+    if dst.len() == QNR {
+        match isa {
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: `Isa::Avx2` is only ever produced by `dispatch`
+            // after runtime detection; all slices hold ≥ QNR = 8
+            // elements here (full-width row).
+            Isa::Avx2 => {
+                unsafe { x86::requantize8(dst, acc, zp, colsums, scales, bias, relu) };
+                return;
+            }
+            #[cfg(target_arch = "aarch64")]
+            // SAFETY: `Isa::Neon` only exists on aarch64 (NEON
+            // baseline); all slices hold ≥ QNR = 8 elements here.
+            Isa::Neon => {
+                unsafe { neon::requantize8(dst, acc, zp, colsums, scales, bias, relu) };
+                return;
+            }
+            _ => {}
+        }
+    }
+    for (c, slot) in dst.iter_mut().enumerate() {
+        *slot = requantize_one(
+            acc[c],
+            zp,
+            colsums[c],
+            scales[c],
+            bias.map_or(0.0, |bb| bb[c]),
+            relu,
+        );
+    }
+}
+
 /// `out[m, n] = dequant(A_q[m, k] · B_q[k, n])` with the fused
 /// bias/ReLU epilogue. `zp` is the A-side zero point. Row-sharded over
-/// the worker pool; bit-identical at any thread count (exact integer
-/// accumulation + per-element epilogue).
+/// the worker pool; bit-identical at any thread count **and at any
+/// ISA tier** (exact integer accumulation + an epilogue that computes
+/// the exact [`requantize_one`] expression). The tier is resolved once
+/// here on the submitting thread and carried into every chunk.
 pub fn qgemm(out: &mut [f32], a: &QMatA, zp: u8, b: &QMatB, m: usize, epi: &QEpilogue) {
     let (k, n) = (b.k, b.n);
     debug_assert!(k <= MAX_EXACT_K, "qgemm reduction depth {k} can overflow i32");
@@ -330,6 +417,7 @@ pub fn qgemm(out: &mut [f32], a: &QMatA, zp: u8, b: &QMatB, m: usize, epi: &QEpi
     if m == 0 || n == 0 {
         return;
     }
+    let isa = dispatch::isa();
     let n_itiles = m.div_ceil(QMR);
     let n_jtiles = n.div_ceil(QNR);
     let chunk_tiles = n_itiles.div_ceil(QMAX_CHUNKS).max(1);
@@ -353,21 +441,20 @@ pub fn qgemm(out: &mut [f32], a: &QMatA, zp: u8, b: &QMatB, m: usize, epi: &QEpi
                     let nw = QNR.min(n - j0);
                     let bp = &b.panels[jt * k * QNR..(jt + 1) * k * QNR];
                     let mut acc = [0i32; QMR * QNR];
-                    qmicrokernel(k, &ap, bp, &mut acc);
+                    run_qmicrokernel(isa, k, &ap, bp, &mut acc);
                     for r in 0..mh {
                         let dst =
                             &mut chunk[(local0 + r) * n + j0..(local0 + r) * n + j0 + nw];
-                        for (c, slot) in dst.iter_mut().enumerate() {
-                            let j = j0 + c;
-                            *slot = requantize_one(
-                                acc[r * QNR + c],
-                                zp,
-                                b.colsums[j],
-                                epi.scales[j],
-                                epi.bias.map_or(0.0, |bb| bb[j]),
-                                epi.relu,
-                            );
-                        }
+                        requantize_row(
+                            isa,
+                            dst,
+                            &acc[r * QNR..r * QNR + nw],
+                            zp,
+                            &b.colsums[j0..j0 + nw],
+                            &epi.scales[j0..j0 + nw],
+                            epi.bias.map(|bb| &bb[j0..j0 + nw]),
+                            epi.relu,
+                        );
                     }
                 }
                 local0 += QMR;
@@ -559,6 +646,49 @@ mod tests {
         let serial = with_thread_limit(1, run);
         let parallel = run();
         assert_eq!(serial, parallel);
+    }
+
+    #[test]
+    fn qgemm_simd_tiers_match_scalar_bit_for_bit() {
+        let mut rng = Rng::new(23);
+        // odd k exercises the AVX2 pair-tail; m/n tails exercise the
+        // partial-row scalar epilogue next to the vector one; k = 1
+        // and single rows/cols are the degenerate floors
+        for (m, k, n) in [(13, 37, 11), (8, 1, 8), (1, 2, 9), (16, 64, 24), (5, 255, 3)] {
+            let a = rng.rand(&[m, k], -2.0, 2.0);
+            let w = rng.randn(&[k, n], 1.0);
+            let bias: Vec<f32> = (0..n).map(|j| j as f32 * 0.05 - 0.2).collect();
+            let act = ActQuant::from_range(-2.0, 2.0);
+            let (q, wscales) = quantize_cols(w.data(), k, n);
+            let b = QMatB::from_i8_kn(&q, &wscales, k, n);
+            let combined: Vec<f32> = wscales.iter().map(|s| s * act.scale).collect();
+            let mut aq = Vec::new();
+            quantize_slice(&act, a.data(), &mut aq);
+            let run = |bias: Option<&[f32]>, relu: bool| {
+                let mut out = vec![0.0f32; m * n];
+                qgemm(
+                    &mut out,
+                    &QMatA::Dense { d: &aq, ld: k },
+                    act.zero_point,
+                    &b,
+                    m,
+                    &QEpilogue { scales: &combined, bias, relu },
+                );
+                out
+            };
+            for (bias, relu) in [(None, false), (Some(&bias[..]), true)] {
+                let want = dispatch::with_isa(Isa::Scalar, || run(bias, relu));
+                for isa in dispatch::available_isas() {
+                    let got = dispatch::with_isa(isa, || run(bias, relu));
+                    assert_eq!(
+                        got,
+                        want,
+                        "[{}] {m}x{k}x{n} relu={relu} must be bit-identical to scalar",
+                        isa.name()
+                    );
+                }
+            }
+        }
     }
 
     #[test]

@@ -17,11 +17,25 @@
 //! The core itself is the classic register-tiled shape: pack a
 //! `KC×NR` B-panel per column tile and a `KC×MR` A-panel per row
 //! tile, then an unrolled `MR×NR` (8×8) microkernel accumulates into
-//! registers — autovectorization-friendly, cache-blocked over k.
-//! Row tiles are sharded across [`crate::tensor::parallel`]'s worker
-//! pool; each output element is produced by exactly one chunk with a
-//! fixed k-ascending accumulation order, so results are bit-identical
-//! at any `NNL_THREADS` (the pool's determinism contract).
+//! registers — cache-blocked over k. Row tiles are sharded across
+//! [`crate::tensor::parallel`]'s worker pool; each output element is
+//! produced by exactly one chunk with a fixed k-ascending accumulation
+//! order, so results are bit-identical at any `NNL_THREADS` (the
+//! pool's determinism contract).
+//!
+//! ## SIMD tiers
+//!
+//! The microkernel (and the fused bias/ReLU/requantize epilogues) come
+//! in hand-written `std::arch` variants — AVX2+FMA on x86_64, NEON on
+//! aarch64 — selected once per process by [`dispatch`]
+//! (`is_x86_feature_detected!`, overridable via `NNL_ISA`). The scalar
+//! kernels stay as the always-available parity oracle. A GEMM resolves
+//! its tier once at entry and carries it into every pool chunk, so
+//! per-ISA bit-identity across thread counts is preserved; products
+//! below the small-GEMM cutoff run the same scalar loop at every tier.
+//! Panel buffers are carved 32-byte-aligned out of the scratch arena
+//! ([`Scratch::take_panel`]) so vector loads hit full-speed paths —
+//! alignment is perf-only, the kernels use unaligned intrinsics.
 //!
 //! ## The scratch arena
 //!
@@ -36,9 +50,16 @@
 
 #![allow(clippy::too_many_arguments)]
 
+pub mod dispatch;
 pub mod int8;
+#[cfg(target_arch = "aarch64")]
+mod neon;
+#[cfg(target_arch = "x86_64")]
+mod x86;
 
 use std::cell::RefCell;
+
+use dispatch::Isa;
 
 use super::ops::{self, Conv2dGeom};
 use super::parallel;
@@ -59,6 +80,48 @@ const SMALL_FLOPS: usize = 32 * 32 * 32;
 const MAX_CHUNKS: usize = 64;
 
 // ------------------------------------------------------------------ scratch
+
+/// Extra f32 lanes that guarantee a 32-byte-aligned window of any
+/// requested length can be carved out of a `Vec<f32>` allocation
+/// (worst case the vec starts 4 bytes past a boundary: 7 lanes skip).
+const ALIGN_PAD: usize = 7;
+
+/// Lanes to skip so `p.add(offset)` sits on a 32-byte boundary.
+/// Computed from the address bits directly — `<*const T>::align_offset`
+/// is documented as allowed to spuriously return `usize::MAX`, which
+/// would turn a perf nicety into a panic.
+fn align32_offset(p: *const f32) -> usize {
+    let mis = p as usize & 31;
+    if mis == 0 {
+        0
+    } else {
+        // Vec<f32> is at least 4-aligned, so `mis` is a multiple of 4
+        (32 - mis) / 4
+    }
+}
+
+/// A scratch buffer whose live window starts on a 32-byte boundary —
+/// what the AVX2/NEON panel loads want. Alignment here is purely a
+/// performance property: the SIMD microkernels use unaligned
+/// load/store intrinsics throughout, so a hostile offset could at
+/// worst be slow, never unsound.
+pub struct Panel {
+    buf: Vec<f32>,
+    off: usize,
+    len: usize,
+}
+
+impl Panel {
+    /// The aligned window (contents unspecified until written).
+    pub fn slice(&self) -> &[f32] {
+        &self.buf[self.off..self.off + self.len]
+    }
+
+    /// The aligned window, mutably.
+    pub fn slice_mut(&mut self) -> &mut [f32] {
+        &mut self.buf[self.off..self.off + self.len]
+    }
+}
 
 /// A pool of reusable `f32` buffers. One lives per thread (see
 /// [`with_scratch`]); long-lived executors return dead intermediates to
@@ -118,6 +181,21 @@ impl Scratch {
         v
     }
 
+    /// A [`Panel`]: `len` f32 of unspecified contents whose window is
+    /// 32-byte aligned (over-allocates by [`ALIGN_PAD`] and skips to
+    /// the first boundary). For packed GEMM panels the vector kernels
+    /// stream through.
+    pub fn take_panel(&mut self, len: usize) -> Panel {
+        let buf = self.take_uninit(len + ALIGN_PAD);
+        let off = align32_offset(buf.as_ptr());
+        Panel { buf, off, len }
+    }
+
+    /// Return a panel's buffer to the pool.
+    pub fn put_panel(&mut self, p: Panel) {
+        self.put(p.buf);
+    }
+
     /// Return a buffer to the pool.
     pub fn put(&mut self, v: Vec<f32>) {
         if v.capacity() > 0 && self.bufs.len() < Self::MAX_BUFS {
@@ -137,6 +215,18 @@ thread_local! {
     /// Tiny per-thread A-panel pack buffer (distinct from SCRATCH so a
     /// pool chunk can pack while its submitter holds the main arena).
     static PACK: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
+}
+
+/// A 32-byte-aligned `len`-f32 window into a pack buffer, growing it
+/// as needed — the thread-local twin of [`Scratch::take_panel`] (same
+/// perf-only alignment story).
+fn aligned_pack(v: &mut Vec<f32>, len: usize) -> &mut [f32] {
+    let need = len + ALIGN_PAD;
+    if v.len() < need {
+        v.resize(need, 0.0);
+    }
+    let off = align32_offset(v.as_ptr());
+    &mut v[off..off + len]
 }
 
 /// Run `f` with this thread's scratch arena. Reentrancy-safe: a nested
@@ -399,11 +489,35 @@ fn microkernel(kc: usize, ap: &[f32], bp: &[f32], acc: &mut [f32; MR * NR]) {
     }
 }
 
+/// Run the `MR×NR` register tile on the given tier. The scalar kernel
+/// is the shared parity oracle; the vector variants only ever run for
+/// an [`Isa`] that [`dispatch`] proved executable.
+#[inline]
+fn run_microkernel(isa: Isa, kc: usize, ap: &[f32], bp: &[f32], acc: &mut [f32; MR * NR]) {
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `Isa::Avx2` is only ever produced by `dispatch` after
+        // `is_x86_feature_detected!` proves avx2+fma (env override and
+        // `with_isa` both validate through the same check), and the
+        // slice-length contract is the scalar kernel's own.
+        Isa::Avx2 => unsafe { x86::microkernel_f32(kc, ap, bp, acc) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: `Isa::Neon` only exists on aarch64, where NEON is an
+        // architectural baseline; slice lengths per the shared contract.
+        Isa::Neon => unsafe { neon::microkernel_f32(kc, ap, bp, acc) },
+        _ => microkernel(kc, ap, bp, acc),
+    }
+}
+
 /// Packed, k-blocked, row-sharded tiled GEMM. Per k-block: B-panels are
-/// packed once (shared, read-only), then row-tile chunks run on the
-/// pool, each packing its own A-panels into the per-thread [`PACK`]
-/// buffer. The first k-block overwrites `out`, later ones accumulate.
+/// packed once (shared, read-only, 32-byte aligned), then row-tile
+/// chunks run on the pool, each packing its own A-panels into the
+/// per-thread [`PACK`] buffer. The first k-block overwrites `out`,
+/// later ones accumulate. The ISA tier is resolved once here on the
+/// submitting thread and carried into every chunk as plain data — one
+/// GEMM never mixes tiers, whatever threads it lands on.
 fn gemm_tiled(out: &mut [f32], a: &Mat, b: &Mat, m: usize, k: usize, n: usize, s: &mut Scratch) {
+    let isa = dispatch::isa();
     let n_itiles = m.div_ceil(MR);
     let n_jtiles = n.div_ceil(NR);
     let chunk_tiles = n_itiles.div_ceil(MAX_CHUNKS).max(1);
@@ -411,18 +525,19 @@ fn gemm_tiled(out: &mut [f32], a: &Mat, b: &Mat, m: usize, k: usize, n: usize, s
     let mut k0 = 0;
     while k0 < k {
         let kc = KC.min(k - k0);
-        let mut bp_all = s.take_uninit(n_jtiles * kc * NR);
-        for jt in 0..n_jtiles {
-            pack_b_panel(b, &mut bp_all[jt * kc * NR..(jt + 1) * kc * NR], n, jt * NR, k0, kc);
+        let mut bp_panel = s.take_panel(n_jtiles * kc * NR);
+        {
+            let bp_all = bp_panel.slice_mut();
+            for jt in 0..n_jtiles {
+                pack_b_panel(b, &mut bp_all[jt * kc * NR..(jt + 1) * kc * NR], n, jt * NR, k0, kc);
+            }
         }
         let first = k0 == 0;
-        let bp_all_ref = &bp_all;
+        let bp_all_ref = bp_panel.slice();
         parallel::for_each_chunk_mut(out, chunk_elems, |ci, chunk| {
             PACK.with(|p| {
-                let mut ap = p.borrow_mut();
-                if ap.len() != kc * MR {
-                    ap.resize(kc * MR, 0.0);
-                }
+                let mut pack = p.borrow_mut();
+                let ap = aligned_pack(&mut pack, kc * MR);
                 debug_assert_eq!(chunk.len() % n, 0);
                 let rows_here = chunk.len() / n;
                 let row_base = ci * chunk_tiles * MR;
@@ -430,13 +545,13 @@ fn gemm_tiled(out: &mut [f32], a: &Mat, b: &Mat, m: usize, k: usize, n: usize, s
                 while local0 < rows_here {
                     let i0 = row_base + local0;
                     let mh = MR.min(rows_here - local0);
-                    pack_a_panel(a, &mut ap, m, i0, k0, kc);
+                    pack_a_panel(a, ap, m, i0, k0, kc);
                     for jt in 0..n_jtiles {
                         let j0 = jt * NR;
                         let nw = NR.min(n - j0);
                         let bp = &bp_all_ref[jt * kc * NR..(jt + 1) * kc * NR];
                         let mut acc = [0.0f32; MR * NR];
-                        microkernel(kc, &ap, bp, &mut acc);
+                        run_microkernel(isa, kc, ap, bp, &mut acc);
                         for r in 0..mh {
                             let dst = &mut chunk[(local0 + r) * n + j0..(local0 + r) * n + j0 + nw];
                             let src = &acc[r * NR..r * NR + nw];
@@ -453,7 +568,7 @@ fn gemm_tiled(out: &mut [f32], a: &Mat, b: &Mat, m: usize, k: usize, n: usize, s
                 }
             });
         });
-        s.put(bp_all);
+        s.put_panel(bp_panel);
         k0 += kc;
     }
 }
@@ -763,11 +878,51 @@ pub fn deconv2d_backward(
 
 // ---------------------------------------------------------------- helpers
 
-/// `rows[r, c] += bias[c]` over a `[rows, c]` buffer.
+/// `rows[r, c] += bias[c]` over a `[rows, c]` buffer, SIMD-dispatched.
+/// All tiers are bit-identical (lane-parallel IEEE adds are the same
+/// adds), so this carries no numeric caveat.
 fn add_bias_rows(buf: &mut [f32], bias: &[f32], cols: usize) {
+    let isa = dispatch::isa();
     for row in buf.chunks_exact_mut(cols) {
-        for (v, &b) in row.iter_mut().zip(bias) {
-            *v += b;
+        match isa {
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: `Isa::Avx2` is only produced by `dispatch` after
+            // runtime detection proves avx2+fma executable.
+            Isa::Avx2 => unsafe { x86::add_bias_row(row, bias) },
+            #[cfg(target_arch = "aarch64")]
+            // SAFETY: `Isa::Neon` only exists on aarch64, where NEON
+            // is an architectural baseline.
+            Isa::Neon => unsafe { neon::add_bias_row(row, bias) },
+            _ => {
+                for (v, &b) in row.iter_mut().zip(bias) {
+                    *v += b;
+                }
+            }
+        }
+    }
+}
+
+/// Elementwise `v = max(v, 0)` over a slice, SIMD-dispatched — the
+/// fused-ReLU store of the compiled plan's Affine/Conv fast paths.
+/// Bit-identical at every tier to mapping `f32::max(·, 0.0)` (the
+/// vector max instructions match its NaN handling, and `-0.0` — the
+/// one value where they could differ — cannot reach a fused-ReLU
+/// input: those are fresh GEMM/bias outputs, whose round-to-nearest
+/// accumulation from a `+0.0` start never yields negative zero).
+pub fn relu_slice_inplace(y: &mut [f32]) {
+    match dispatch::isa() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `Isa::Avx2` is only produced by `dispatch` after
+        // runtime detection proves avx2+fma executable.
+        Isa::Avx2 => unsafe { x86::relu_slice(y) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: `Isa::Neon` only exists on aarch64, where NEON is an
+        // architectural baseline.
+        Isa::Neon => unsafe { neon::relu_slice(y) },
+        _ => {
+            for v in y.iter_mut() {
+                *v = v.max(0.0);
+            }
         }
     }
 }
@@ -955,6 +1110,71 @@ mod tests {
             assert_eq!(inner_len, 8);
             outer.put(v);
         });
+    }
+
+    #[test]
+    fn panels_are_32_byte_aligned() {
+        let mut s = Scratch::new();
+        for len in [1usize, 8, 64, 1000] {
+            let p = s.take_panel(len);
+            assert_eq!(p.slice().len(), len);
+            assert_eq!(p.slice().as_ptr() as usize % 32, 0, "panel window must be aligned");
+            s.put_panel(p);
+        }
+        PACK.with(|c| {
+            let mut v = c.borrow_mut();
+            let w = aligned_pack(&mut v, 40);
+            assert_eq!(w.len(), 40);
+            assert_eq!(w.as_ptr() as usize % 32, 0, "pack window must be aligned");
+        });
+    }
+
+    #[test]
+    fn microkernel_tiers_agree_on_tails_and_k_blocks() {
+        let mut rng = Rng::new(12);
+        // every dimension off the 8-grid, k spanning two KC blocks —
+        // the shapes where a vector tile could misread its padding
+        for (m, k, n) in [(9, 70, 65), (61, KC + 5, 13), (64, 64, 64), (1, 300, 130)] {
+            let a = rng.randn(&[m, k], 1.0);
+            let b = rng.randn(&[k, n], 1.0);
+            let want = dispatch::with_isa(Isa::Scalar, || tiled(&a, &b));
+            for isa in dispatch::available_isas() {
+                let got = dispatch::with_isa(isa, || tiled(&a, &b));
+                assert!(
+                    got.allclose(&want, 1e-5, 1e-6),
+                    "[{}] {m}x{k}x{n}: max diff {} vs scalar oracle",
+                    isa.name(),
+                    got.max_abs_diff(&want)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn relu_and_bias_epilogues_match_scalar_at_every_tier() {
+        let mut rng = Rng::new(13);
+        let src = rng.randn(&[1037], 1.0); // odd length: vector body + tail
+        let bias = rng.randn(&[61], 1.0);
+        let mut want_relu = src.data().to_vec();
+        for v in &mut want_relu {
+            *v = v.max(0.0);
+        }
+        let mut want_bias = src.data()[..61 * 17].to_vec();
+        for row in want_bias.chunks_exact_mut(61) {
+            for (v, &b) in row.iter_mut().zip(bias.data()) {
+                *v += b;
+            }
+        }
+        for isa in dispatch::available_isas() {
+            dispatch::with_isa(isa, || {
+                let mut got = src.data().to_vec();
+                relu_slice_inplace(&mut got);
+                assert_eq!(got, want_relu, "[{}] relu epilogue", isa.name());
+                let mut got = src.data()[..61 * 17].to_vec();
+                add_bias_rows(&mut got, bias.data(), 61);
+                assert_eq!(got, want_bias, "[{}] bias epilogue", isa.name());
+            });
+        }
     }
 
     #[test]

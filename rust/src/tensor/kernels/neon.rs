@@ -1,0 +1,204 @@
+//! aarch64 NEON microkernels — the vector twins of the scalar kernels
+//! in `mod.rs` / `int8.rs`, mirroring `x86.rs` kernel for kernel.
+//!
+//! NEON is an architectural baseline of aarch64, so
+//! [`super::dispatch::Isa::Neon`] is always executable when this
+//! module compiles at all; the functions still follow the crate-wide
+//! discipline of `unsafe fn` + one SAFETY-documented block, because
+//! their bodies are raw-pointer loads and stores. All accesses use
+//! the unaligned `vld1`/`vst1` family — panel alignment is a
+//! performance property, never a safety precondition.
+//!
+//! Numeric contracts match `x86.rs`: the f32 tile uses fused
+//! multiply-add (`vfmaq_f32`, ≤ 1e-5 relative of the scalar oracle,
+//! bit-stable per ISA); the int8 tile and all epilogues are
+//! bit-identical to their scalar expressions.
+
+use std::arch::aarch64::*;
+
+use super::int8::{QMR, QNR};
+use super::{MR, NR};
+
+/// NEON register tile: `acc[r, c] += Σ_kk ap[kk, r] · bp[kk, c]`.
+/// Sixteen q-register accumulators (8 rows × two 4-lane halves); per
+/// k step two B loads plus a broadcast-FMA pair per row. Same loop
+/// order as the scalar [`super::microkernel`]; the only difference is
+/// the unrounded FMA products.
+///
+/// # Safety
+/// Caller must ensure `ap` holds at least `kc·MR` and `bp` at least
+/// `kc·NR` elements.
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn microkernel_f32(kc: usize, ap: &[f32], bp: &[f32], acc: &mut [f32; MR * NR]) {
+    debug_assert!(ap.len() >= kc * MR && bp.len() >= kc * NR);
+    // SAFETY: `ap`/`bp` hold kc·MR / kc·NR elements (caller contract,
+    // debug-asserted above), so every A read at `kk·MR + r` and both
+    // 4-lane B loads at `kk·NR (+4)` are in bounds; `acc` is exactly
+    // MR·NR = 64 f32 = 8 rows × two 4-lane halves, matching the
+    // sixteen loads/stores. `vld1`/`vst1` have no alignment demands.
+    unsafe {
+        let mut acc0 = [vdupq_n_f32(0.0); MR];
+        let mut acc1 = [vdupq_n_f32(0.0); MR];
+        for r in 0..MR {
+            acc0[r] = vld1q_f32(acc.as_ptr().add(r * NR));
+            acc1[r] = vld1q_f32(acc.as_ptr().add(r * NR + 4));
+        }
+        for kk in 0..kc {
+            let b0 = vld1q_f32(bp.as_ptr().add(kk * NR));
+            let b1 = vld1q_f32(bp.as_ptr().add(kk * NR + 4));
+            let arow = ap.as_ptr().add(kk * MR);
+            for r in 0..MR {
+                let av = vdupq_n_f32(*arow.add(r));
+                acc0[r] = vfmaq_f32(acc0[r], av, b0);
+                acc1[r] = vfmaq_f32(acc1[r], av, b1);
+            }
+        }
+        for r in 0..MR {
+            vst1q_f32(acc.as_mut_ptr().add(r * NR), acc0[r]);
+            vst1q_f32(acc.as_mut_ptr().add(r * NR + 4), acc1[r]);
+        }
+    }
+}
+
+/// NEON int8 register tile: `acc[r, c] += Σ_kk ap[kk, r] · bp[kk, c]`
+/// in **exact** i32, bit-identical to the scalar
+/// [`super::int8::qmicrokernel`]: both sides widen to i16 (lossless
+/// for u8 and i8) and `vmlal_s16` does i16×i16 → i32 multiply-
+/// accumulate, exact for this operand range. Same k-ascending order
+/// as the scalar tile — no reassociation at all.
+///
+/// # Safety
+/// Caller must ensure `ap` holds at least `k·QMR` and `bp` at least
+/// `k·QNR` elements.
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn qmicrokernel(k: usize, ap: &[u8], bp: &[i8], acc: &mut [i32; QMR * QNR]) {
+    debug_assert!(ap.len() >= k * QMR && bp.len() >= k * QNR);
+    // SAFETY: `ap`/`bp` hold k·QMR / k·QNR elements (caller contract,
+    // debug-asserted above): each 8-byte B-row load at `kk·QNR` and
+    // each A read at `kk·QMR + r` is in bounds. `acc` is exactly
+    // QMR·QNR = 64 i32 = 8 rows × two 4-lane halves, matching the
+    // sixteen loads/stores. `vld1`/`vst1` have no alignment demands.
+    unsafe {
+        let mut acc0 = [vdupq_n_s32(0); QMR];
+        let mut acc1 = [vdupq_n_s32(0); QMR];
+        for r in 0..QMR {
+            acc0[r] = vld1q_s32(acc.as_ptr().add(r * QNR));
+            acc1[r] = vld1q_s32(acc.as_ptr().add(r * QNR + 4));
+        }
+        for kk in 0..k {
+            let bw = vmovl_s8(vld1_s8(bp.as_ptr().add(kk * QNR)));
+            let blo = vget_low_s16(bw);
+            let bhi = vget_high_s16(bw);
+            let arow = ap.as_ptr().add(kk * QMR);
+            for r in 0..QMR {
+                let av = vdup_n_s16(*arow.add(r) as i16);
+                acc0[r] = vmlal_s16(acc0[r], av, blo);
+                acc1[r] = vmlal_s16(acc1[r], av, bhi);
+            }
+        }
+        for r in 0..QMR {
+            vst1q_s32(acc.as_mut_ptr().add(r * QNR), acc0[r]);
+            vst1q_s32(acc.as_mut_ptr().add(r * QNR + 4), acc1[r]);
+        }
+    }
+}
+
+/// Vectorized int8 epilogue for one full-width (`QNR` = 8) tile row —
+/// eight [`super::int8::requantize_one`] evaluations, bit-identical
+/// for the same reasons as the AVX2 variant (exact integer
+/// correction, `vcvtq_f32_s32` rounds like `as f32`, separate
+/// mul/add, `+0.0` for a `None` bias) with one NEON-specific choice:
+/// the ReLU uses `vmaxnmq_f32` (IEEE maxNum), whose NaN-suppressing
+/// semantics match `f32::max` — plain `vmaxq_f32` would propagate
+/// NaN instead.
+///
+/// # Safety
+/// Caller must ensure `dst`, `acc`, `colsums`, `scales` (and `bias`
+/// when present) each hold at least 8 elements.
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn requantize8(
+    dst: &mut [f32],
+    acc: &[i32],
+    zp: u8,
+    colsums: &[i32],
+    scales: &[f32],
+    bias: Option<&[f32]>,
+    relu: bool,
+) {
+    debug_assert!(dst.len() >= 8 && acc.len() >= 8 && colsums.len() >= 8 && scales.len() >= 8);
+    debug_assert!(bias.is_none_or(|b| b.len() >= 8));
+    // SAFETY: every slice holds ≥ 8 elements (caller contract, debug-
+    // asserted above), so the two 4-lane halves at offsets 0 and 4
+    // stay inside each live slice.
+    unsafe {
+        let zpv = vdupq_n_s32(zp as i32);
+        for half in 0..2 {
+            let o = half * 4;
+            let accv = vld1q_s32(acc.as_ptr().add(o));
+            let colv = vld1q_s32(colsums.as_ptr().add(o));
+            let corr = vsubq_s32(accv, vmulq_s32(zpv, colv));
+            let prod = vmulq_f32(vcvtq_f32_s32(corr), vld1q_f32(scales.as_ptr().add(o)));
+            let biasv = match bias {
+                Some(b) => vld1q_f32(b.as_ptr().add(o)),
+                None => vdupq_n_f32(0.0),
+            };
+            let mut v = vaddq_f32(prod, biasv);
+            if relu {
+                v = vmaxnmq_f32(v, vdupq_n_f32(0.0));
+            }
+            vst1q_f32(dst.as_mut_ptr().add(o), v);
+        }
+    }
+}
+
+/// Vectorized `v = max(v, 0)` over a slice — bit-identical to mapping
+/// `f32::max(·, 0.0)`: `vmaxnmq_f32` (IEEE maxNum) suppresses NaN to
+/// the other operand like `f32::max`, and the `-0.0` vs `+0.0`
+/// distinction is unreachable on fused-ReLU inputs (see the AVX2
+/// variant's note).
+///
+/// # Safety
+/// No preconditions beyond NEON being executable (aarch64 baseline).
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn relu_slice(y: &mut [f32]) {
+    // SAFETY: `i + 4 <= y.len()` bounds every 4-lane load/store inside
+    // the live slice; the scalar tail indexes `i..len` directly.
+    unsafe {
+        let n = y.len();
+        let p = y.as_mut_ptr();
+        let zero = vdupq_n_f32(0.0);
+        let mut i = 0;
+        while i + 4 <= n {
+            vst1q_f32(p.add(i), vmaxnmq_f32(vld1q_f32(p.add(i)), zero));
+            i += 4;
+        }
+        for j in i..n {
+            let v = *p.add(j);
+            *p.add(j) = v.max(0.0);
+        }
+    }
+}
+
+/// Vectorized `row[c] += bias[c]` over `min(row, bias)` elements —
+/// bit-identical to the scalar zip.
+///
+/// # Safety
+/// No preconditions beyond NEON being executable (aarch64 baseline).
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn add_bias_row(row: &mut [f32], bias: &[f32]) {
+    // SAFETY: `i + 4 <= n ≤ len(row), len(bias)` bounds every 4-lane
+    // load/store inside both live slices; the tail indexes `i..n`.
+    unsafe {
+        let n = row.len().min(bias.len());
+        let p = row.as_mut_ptr();
+        let b = bias.as_ptr();
+        let mut i = 0;
+        while i + 4 <= n {
+            vst1q_f32(p.add(i), vaddq_f32(vld1q_f32(p.add(i)), vld1q_f32(b.add(i))));
+            i += 4;
+        }
+        for j in i..n {
+            *p.add(j) += *b.add(j);
+        }
+    }
+}

@@ -1,0 +1,240 @@
+//! x86_64 AVX2+FMA microkernels — the vector twins of the scalar
+//! kernels in `mod.rs` / `int8.rs`.
+//!
+//! Every function here is an `unsafe fn` gated on `target_feature`;
+//! the only sanctioned route to calling one is a [`super::dispatch`]
+//! verdict of [`super::dispatch::Isa::Avx2`], which is never produced
+//! without `is_x86_feature_detected!("avx2")` + `("fma")` passing (see
+//! that module's safety notes). All loads and stores use the
+//! unaligned intrinsics, so panel alignment is a performance property
+//! — a misaligned buffer is slow, never UB.
+//!
+//! Numeric contracts, per kernel:
+//! - [`microkernel_f32`]: same k-ascending accumulation order as the
+//!   scalar tile but FMA keeps products unrounded — results are within
+//!   ≤ 1e-5 relative of the scalar oracle, and bit-stable for a fixed
+//!   ISA (dispatch never mixes tiers inside a GEMM).
+//! - [`qmicrokernel`]: exact i32 accumulation, bit-identical to the
+//!   scalar int8 tile.
+//! - [`requantize8`], [`relu_slice`], [`add_bias_row`]: bit-identical
+//!   to their scalar expressions (see each doc).
+
+use std::arch::x86_64::*;
+
+use super::int8::{QMR, QNR};
+use super::{MR, NR};
+
+/// AVX2+FMA register tile: `acc[r, c] += Σ_kk ap[kk, r] · bp[kk, c]`.
+/// Eight ymm accumulators (one 8-lane row each); per k step one B-row
+/// load plus eight broadcast-FMAs. Same loop order as the scalar
+/// [`super::microkernel`], so the only difference is the unrounded
+/// FMA products.
+///
+/// # Safety
+/// Caller must ensure avx2+fma are executable (dispatch does) and that
+/// `ap` holds at least `kc·MR` and `bp` at least `kc·NR` elements.
+#[target_feature(enable = "avx2", enable = "fma")]
+pub(crate) unsafe fn microkernel_f32(kc: usize, ap: &[f32], bp: &[f32], acc: &mut [f32; MR * NR]) {
+    debug_assert!(ap.len() >= kc * MR && bp.len() >= kc * NR);
+    // SAFETY: `ap`/`bp` hold kc·MR / kc·NR elements (caller contract,
+    // debug-asserted above), so every `a.add(r)` / B-row load below
+    // stays in bounds; `acc` is exactly MR·NR = 8 rows of 8 lanes,
+    // matching the eight 8-lane loads/stores. Unaligned intrinsics
+    // throughout — no alignment precondition.
+    unsafe {
+        let mut accv = [_mm256_setzero_ps(); MR];
+        for (r, v) in accv.iter_mut().enumerate() {
+            *v = _mm256_loadu_ps(acc.as_ptr().add(r * NR));
+        }
+        let mut a = ap.as_ptr();
+        let mut b = bp.as_ptr();
+        for _ in 0..kc {
+            let bv = _mm256_loadu_ps(b);
+            for (r, v) in accv.iter_mut().enumerate() {
+                let av = _mm256_broadcast_ss(&*a.add(r));
+                *v = _mm256_fmadd_ps(av, bv, *v);
+            }
+            a = a.add(MR);
+            b = b.add(NR);
+        }
+        for (r, v) in accv.iter().enumerate() {
+            _mm256_storeu_ps(acc.as_mut_ptr().add(r * NR), *v);
+        }
+    }
+}
+
+/// AVX2 int8 register tile: `acc[r, c] += Σ_kk ap[kk, r] · bp[kk, c]`
+/// in **exact** i32, bit-identical to the scalar
+/// [`super::int8::qmicrokernel`].
+///
+/// This is the `maddubs`-class pairwise widening multiply-accumulate,
+/// but in its saturation-free form: `_mm256_maddubs_epi16` sums u8·i8
+/// pair products into i16 with *saturation*, and this operand range
+/// reaches ±(255·127·2) = ±64770 > i16::MAX — using it would silently
+/// clamp and break the exact-accumulation contract the quantizer
+/// depends on. Instead, k is consumed two steps at a time with both
+/// sides widened to i16 lanes first, then `_mm256_madd_epi16` does the
+/// pairwise i16×i16 → i32 multiply-add, which is exact here
+/// (2 · 32767² < i32::MAX). The pair interleave only reorders the two
+/// addends of each pairwise sum — integer addition commutes, so the
+/// result equals the scalar k-ascending accumulation bit for bit.
+///
+/// # Safety
+/// Caller must ensure avx2 is executable (dispatch does) and that `ap`
+/// holds at least `k·QMR` and `bp` at least `k·QNR` elements.
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn qmicrokernel(k: usize, ap: &[u8], bp: &[i8], acc: &mut [i32; QMR * QNR]) {
+    debug_assert!(ap.len() >= k * QMR && bp.len() >= k * QNR);
+    // SAFETY: `ap`/`bp` hold k·QMR / k·QNR elements (caller contract,
+    // debug-asserted above): every 8-byte B-row load at `kk·QNR` and
+    // every A read at `kk·QMR + r` is in bounds for kk < k, r < 8.
+    // `acc` is exactly QMR·QNR = 64 i32 = 8 ymm rows, matching the
+    // eight 256-bit loads/stores. Unaligned intrinsics throughout.
+    unsafe {
+        let mut accv = [_mm256_setzero_si256(); QMR];
+        for (r, v) in accv.iter_mut().enumerate() {
+            *v = _mm256_loadu_si256(acc.as_ptr().add(r * QNR) as *const __m256i);
+        }
+        let mut kk = 0;
+        while kk + 1 < k {
+            // interleave B rows kk and kk+1 bytewise, widen to i16:
+            // lanes [b0c0, b1c0, b0c1, b1c1, …] — madd's pairwise sum
+            // then yields b0c·a0 + b1c·a1 per output column c.
+            let b0 = _mm_loadl_epi64(bp.as_ptr().add(kk * QNR) as *const __m128i);
+            let b1 = _mm_loadl_epi64(bp.as_ptr().add((kk + 1) * QNR) as *const __m128i);
+            let bw = _mm256_cvtepi8_epi16(_mm_unpacklo_epi8(b0, b1));
+            let a0 = ap.as_ptr().add(kk * QMR);
+            let a1 = ap.as_ptr().add((kk + 1) * QMR);
+            for (r, v) in accv.iter_mut().enumerate() {
+                // the matching [a0r, a1r] pair in every i32 lane
+                let pair = *a0.add(r) as u32 | ((*a1.add(r) as u32) << 16);
+                let aw = _mm256_set1_epi32(pair as i32);
+                *v = _mm256_add_epi32(*v, _mm256_madd_epi16(aw, bw));
+            }
+            kk += 2;
+        }
+        if kk < k {
+            // odd-k tail: zero partner row, pairwise sum degenerates
+            // to the single product
+            let b0 = _mm_loadl_epi64(bp.as_ptr().add(kk * QNR) as *const __m128i);
+            let bw = _mm256_cvtepi8_epi16(_mm_unpacklo_epi8(b0, _mm_setzero_si128()));
+            let a0 = ap.as_ptr().add(kk * QMR);
+            for (r, v) in accv.iter_mut().enumerate() {
+                let aw = _mm256_set1_epi32(*a0.add(r) as i32);
+                *v = _mm256_add_epi32(*v, _mm256_madd_epi16(aw, bw));
+            }
+        }
+        for (r, v) in accv.iter().enumerate() {
+            _mm256_storeu_si256(acc.as_mut_ptr().add(r * QNR) as *mut __m256i, *v);
+        }
+    }
+}
+
+/// Vectorized int8 epilogue for one full-width (`QNR` = 8) tile row:
+/// eight [`super::int8::requantize_one`] evaluations, bit-identical.
+/// Why the bits match the scalar expression
+/// `(acc − zp·colsum) as f32 * scale + bias` (then `max(·, 0)`):
+/// - the integer correction is exact (no overflow by the
+///   `MAX_EXACT_K` bound, which caps `zp·colsum` too);
+/// - `_mm256_cvtepi32_ps` rounds to nearest-even, exactly like
+///   `as f32`;
+/// - multiply and add stay **separate** (no FMA — contracting them
+///   would change the bits);
+/// - a `None` bias adds `+0.0` like the scalar's `map_or(0.0, …)`;
+/// - `_mm256_max_ps(v, 0)` returns its second operand for NaN, same
+///   as `f32::max(v, 0.0)` → `0.0`, and `-0.0` vs `+0.0` cannot
+///   differ here: `v = -0.0` needs `corr = 0` (exact product `+0.0`)
+///   plus a negative-zero–producing add, and `+0.0 + ±bias` follows
+///   the same IEEE zero-sign rules in both forms.
+///
+/// # Safety
+/// Caller must ensure avx2 is executable (dispatch does) and that
+/// `dst`, `acc`, `colsums`, `scales` (and `bias` when present) each
+/// hold at least 8 elements.
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn requantize8(
+    dst: &mut [f32],
+    acc: &[i32],
+    zp: u8,
+    colsums: &[i32],
+    scales: &[f32],
+    bias: Option<&[f32]>,
+    relu: bool,
+) {
+    debug_assert!(dst.len() >= 8 && acc.len() >= 8 && colsums.len() >= 8 && scales.len() >= 8);
+    debug_assert!(bias.is_none_or(|b| b.len() >= 8));
+    // SAFETY: every slice holds ≥ 8 elements (caller contract, debug-
+    // asserted above), so each 256-bit unaligned load/store touches
+    // exactly the first 8 lanes of a live slice.
+    unsafe {
+        let accv = _mm256_loadu_si256(acc.as_ptr() as *const __m256i);
+        let colv = _mm256_loadu_si256(colsums.as_ptr() as *const __m256i);
+        let corr = _mm256_sub_epi32(accv, _mm256_mullo_epi32(_mm256_set1_epi32(zp as i32), colv));
+        let prod = _mm256_mul_ps(_mm256_cvtepi32_ps(corr), _mm256_loadu_ps(scales.as_ptr()));
+        let biasv = match bias {
+            Some(b) => _mm256_loadu_ps(b.as_ptr()),
+            None => _mm256_setzero_ps(),
+        };
+        let mut v = _mm256_add_ps(prod, biasv);
+        if relu {
+            v = _mm256_max_ps(v, _mm256_setzero_ps());
+        }
+        _mm256_storeu_ps(dst.as_mut_ptr(), v);
+    }
+}
+
+/// Vectorized `v = max(v, 0)` over a slice — the fused-ReLU store of
+/// the compiled plan. Bit-identical to mapping `f32::max(·, 0.0)`:
+/// `max_ps` returns the second operand (0.0) for NaN like `f32::max`,
+/// and its `-0.0 → +0.0` preference only differs on `-0.0` inputs,
+/// which fused-ReLU feeds (fresh GEMM/bias outputs) cannot produce —
+/// accumulators start at `+0.0` and round-to-nearest addition never
+/// turns a `+0.0` running sum negative-zero.
+///
+/// # Safety
+/// Caller must ensure avx2 is executable (dispatch does).
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn relu_slice(y: &mut [f32]) {
+    // SAFETY: `i + 8 <= y.len()` bounds every 8-lane load/store inside
+    // the live slice; the scalar tail indexes `i..len` directly.
+    unsafe {
+        let n = y.len();
+        let p = y.as_mut_ptr();
+        let zero = _mm256_setzero_ps();
+        let mut i = 0;
+        while i + 8 <= n {
+            _mm256_storeu_ps(p.add(i), _mm256_max_ps(_mm256_loadu_ps(p.add(i)), zero));
+            i += 8;
+        }
+        for j in i..n {
+            let v = *p.add(j);
+            *p.add(j) = v.max(0.0);
+        }
+    }
+}
+
+/// Vectorized `row[c] += bias[c]` over `min(row, bias)` elements —
+/// bit-identical to the scalar zip (IEEE addition is what it is,
+/// lane-parallel or not).
+///
+/// # Safety
+/// Caller must ensure avx2 is executable (dispatch does).
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn add_bias_row(row: &mut [f32], bias: &[f32]) {
+    // SAFETY: `i + 8 <= n ≤ len(row), len(bias)` bounds every 8-lane
+    // load/store inside both live slices; the tail indexes `i..n`.
+    unsafe {
+        let n = row.len().min(bias.len());
+        let p = row.as_mut_ptr();
+        let b = bias.as_ptr();
+        let mut i = 0;
+        while i + 8 <= n {
+            let v = _mm256_add_ps(_mm256_loadu_ps(p.add(i)), _mm256_loadu_ps(b.add(i)));
+            _mm256_storeu_ps(p.add(i), v);
+            i += 8;
+        }
+        for j in i..n {
+            *p.add(j) += *b.add(j);
+        }
+    }
+}

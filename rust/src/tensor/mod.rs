@@ -11,9 +11,13 @@
 //! Compute splits across three submodules: [`ops`] holds the
 //! tensor-level kernels (elementwise, reductions, matmul, the
 //! im2col/col2im lowering), [`kernels`] the packed register-tiled GEMM
-//! core, fused conv/affine kernels and the per-thread scratch arena,
-//! and [`parallel`] the persistent `NNL_THREADS` worker pool with a
-//! determinism contract: results are bit-identical at any thread count.
+//! core, fused conv/affine kernels, the per-thread scratch arena, and
+//! the runtime-dispatched SIMD microkernel tiers
+//! ([`kernels::dispatch`]: scalar / AVX2+FMA / NEON, pinnable via
+//! `NNL_ISA`), and [`parallel`] the persistent `NNL_THREADS` worker
+//! pool with a determinism contract: results are bit-identical at any
+//! thread count (per ISA tier; int8 is bit-identical to scalar at
+//! every tier).
 
 pub mod array;
 pub mod dtype;

@@ -8,12 +8,19 @@
 //!   parallel kernel must produce the same bits at 1, 2 and N threads
 //!   (CI also runs this whole suite under `NNL_THREADS=1`);
 //! - plan-vs-tape bit-identity for the fused Affine/Convolution fast
-//!   paths in `CompiledNet::execute`.
+//!   paths in `CompiledNet::execute`;
+//! - SIMD-tier coverage for the dispatched microkernels: degenerate
+//!   shapes (k=0, m/n=1, off-grid tails) at every executable ISA,
+//!   scalar-vs-dispatched agreement within the ≤ 1e-5 relative
+//!   contract, per-ISA thread-count bit-identity, and `NNL_ISA`
+//!   pinning (CI runs this suite under both `NNL_ISA=scalar` and
+//!   `NNL_ISA=auto`).
 
 use std::collections::HashMap;
 
 use nnl::functions as F;
 use nnl::nnp::{CompiledNet, Layer, NetworkDef, Op, TensorDef};
+use nnl::tensor::kernels::dispatch::{self, Isa};
 use nnl::tensor::ops::{self, Conv2dGeom};
 use nnl::tensor::{parallel, NdArray, Rng};
 use nnl::utils::prop;
@@ -316,6 +323,136 @@ fn plan_rejects_degenerate_conv_geometry_cleanly() {
     let err = plan.execute_positional(&[NdArray::zeros(&[1, 3, 4, 4])]).unwrap_err();
     assert!(err.contains("layer 'conv'"), "{err}");
     assert!(err.contains("kernel"), "{err}");
+}
+
+// ------------------------------------------------------------- SIMD tiers
+
+/// Degenerate and off-grid shapes at every executable ISA: `k = 0`
+/// (must be exact zeros — the accumulator never runs), `m = 1` /
+/// `n = 1` (single-row/column panels), and shapes whose m/n/k are not
+/// multiples of MR/NR/KC so every tail path in the vector kernels is
+/// forced. All tiers are checked against the naive oracle.
+#[test]
+fn gemm_degenerate_shapes_match_naive_at_every_isa() {
+    let mut rng = Rng::new(108);
+    let shapes: [(usize, usize, usize); 9] = [
+        (1, 0, 1),     // k = 0: empty reduction
+        (3, 0, 5),     // k = 0 with a wider output
+        (1, 1, 1),     // scalar product
+        (1, 300, 130), // single row, big k/n (tiled path, n tail)
+        (65, 600, 1),  // single column (tiled path, m tail)
+        (9, 70, 65),   // m, n both off the 8-grid
+        (65, 129, 33), // spans k blocks with tails everywhere
+        (7, 1000, 9),  // sub-tile m/n, long k
+        (64, 64, 64),  // exact-grid control
+    ];
+    for &(m, k, n) in &shapes {
+        let a = if k == 0 { NdArray::zeros(&[m, k]) } else { rng.randn(&[m, k], 1.0) };
+        let b = if k == 0 { NdArray::zeros(&[k, n]) } else { rng.randn(&[k, n], 1.0) };
+        let want = ops::matmul_naive(&a, &b);
+        for isa in dispatch::available_isas() {
+            let got = dispatch::with_isa(isa, || ops::matmul(&a, &b));
+            assert_eq!(got.dims(), want.dims());
+            if k == 0 {
+                assert!(
+                    got.data().iter().all(|&v| v == 0.0),
+                    "[{}] {m}x{k}·{k}x{n}: k=0 must give exact zeros",
+                    isa.name()
+                );
+            } else {
+                assert!(
+                    got.allclose(&want, 1e-4, 1e-4),
+                    "[{}] {m}x{k}·{k}x{n}: max diff {}",
+                    isa.name(),
+                    got.max_abs_diff(&want)
+                );
+            }
+        }
+    }
+}
+
+/// The numeric contract of the dispatched f32 tier: within 1e-5
+/// relative of the scalar oracle over randomized shapes that straddle
+/// the small/tiled cutoff. (FMA contracts rounding steps, so exact
+/// equality is only promised per-ISA, not across tiers.)
+#[test]
+fn dispatched_gemm_stays_within_contract_of_scalar_oracle() {
+    prop::check(
+        109,
+        16,
+        |rng| {
+            let m = 1 + rng.below(80);
+            let k = 1 + rng.below(200);
+            let n = 1 + rng.below(80);
+            let a = rng.randn(&[m, k], 1.0);
+            let b = rng.randn(&[k, n], 1.0);
+            (a, b)
+        },
+        |(a, b)| {
+            let oracle = dispatch::with_isa(Isa::Scalar, || ops::matmul(a, b));
+            let got = ops::matmul(a, b); // dispatched tier
+            if got.allclose(&oracle, 1e-5, 1e-6) {
+                Ok(())
+            } else {
+                Err(format!(
+                    "[{}] {}x{} · {}x{}: max diff {} vs scalar",
+                    dispatch::isa().name(),
+                    a.dims()[0],
+                    a.dims()[1],
+                    b.dims()[0],
+                    b.dims()[1],
+                    got.max_abs_diff(&oracle)
+                ))
+            }
+        },
+    );
+}
+
+/// The determinism contract holds per tier: at any fixed ISA, results
+/// are bit-identical across pool widths (row shards never change the
+/// per-element reduction order, vectorized or not).
+#[test]
+fn every_isa_is_bit_identical_across_thread_counts() {
+    let mut rng = Rng::new(110);
+    let a = rng.randn(&[67, 190], 1.0);
+    let b = rng.randn(&[190, 61], 1.0);
+    for isa in dispatch::available_isas() {
+        dispatch::with_isa(isa, || {
+            assert_thread_invariant(&format!("matmul[{}]", isa.name()), || ops::matmul(&a, &b));
+        });
+    }
+}
+
+#[test]
+fn isa_env_is_respected() {
+    // CI pins NNL_ISA=scalar / NNL_ISA=auto; the process-wide dispatch
+    // decision must honor the pin (falling back to scalar only when
+    // the pinned tier is not executable on this machine).
+    let dispatched = dispatch::isa();
+    assert!(dispatch::available(dispatched), "dispatched ISA must be executable");
+    let declared = std::env::var("NNL_ISA")
+        .map(|v| v.trim().to_ascii_lowercase())
+        .unwrap_or_default();
+    match declared.as_str() {
+        "scalar" => assert_eq!(dispatched, Isa::Scalar),
+        "avx2" => {
+            if dispatch::available(Isa::Avx2) {
+                assert_eq!(dispatched, Isa::Avx2);
+            } else {
+                assert_eq!(dispatched, Isa::Scalar);
+            }
+        }
+        "neon" => {
+            if dispatch::available(Isa::Neon) {
+                assert_eq!(dispatched, Isa::Neon);
+            } else {
+                assert_eq!(dispatched, Isa::Scalar);
+            }
+        }
+        // unset / auto / unknown spelling: auto-detect, which always
+        // lands on some executable tier (asserted above)
+        _ => {}
+    }
 }
 
 #[test]

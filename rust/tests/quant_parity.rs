@@ -1,7 +1,10 @@
 //! Int8 quantization parity and robustness suite (CI re-runs it under
-//! `NNL_THREADS=1`): zoo-model fp32-vs-int8 agreement, thread-count
-//! bit-identity of the quantized path, NNB2 size/roundtrip guarantees,
-//! and decoder property tests over truncations and byte flips.
+//! `NNL_THREADS=1` and under both `NNL_ISA=scalar` / `NNL_ISA=auto`):
+//! zoo-model fp32-vs-int8 agreement, thread-count bit-identity of the
+//! quantized path, SIMD-tier bit-identity (the int8 kernels promise
+//! the exact scalar bits at every ISA), NNB2 size/roundtrip
+//! guarantees, and decoder property tests over truncations and byte
+//! flips.
 
 use std::collections::HashMap;
 
@@ -10,6 +13,7 @@ use nnl::converters::nnb;
 use nnl::models::zoo;
 use nnl::nnp::{CompiledNet, InferencePlan, NetworkDef};
 use nnl::quant::{quantize_net, referenced_params, QuantConfig, QuantizedNet};
+use nnl::tensor::kernels::dispatch;
 use nnl::tensor::{parallel, NdArray, Rng};
 use nnl::utils::prop;
 
@@ -74,6 +78,37 @@ fn quantized_path_is_bit_identical_at_any_thread_count() {
         for (a, b) in full.iter().zip(&serial) {
             assert_eq!(a.dims(), b.dims());
             assert_eq!(a.data(), b.data(), "thread count changed quantized output bits");
+        }
+    }
+}
+
+/// The int8 path's SIMD contract is *exact*: the vectorized u8×i8
+/// kernels accumulate the same i32 sums (integer addition commutes)
+/// and requantize with the same mul-then-add rounding as the scalar
+/// loop, so every ISA tier must reproduce the scalar bits across the
+/// whole zoo — at the default pool width and at one thread.
+#[test]
+fn quantized_zoo_is_bit_identical_to_scalar_at_every_isa() {
+    for name in ["mlp", "lenet"] {
+        let (net, _, qnet) = quantized_zoo(name);
+        for s in random_inputs(&net, 3, 89) {
+            let scalar =
+                dispatch::with_isa(dispatch::Isa::Scalar, || qnet.execute_positional(&s).unwrap());
+            for isa in dispatch::available_isas() {
+                let full = dispatch::with_isa(isa, || qnet.execute_positional(&s).unwrap());
+                let serial = dispatch::with_isa(isa, || {
+                    parallel::with_thread_limit(1, || qnet.execute_positional(&s).unwrap())
+                });
+                for (got, want) in full.iter().chain(serial.iter()).zip(scalar.iter().cycle()) {
+                    assert_eq!(got.dims(), want.dims());
+                    assert_eq!(
+                        got.data(),
+                        want.data(),
+                        "{name} [{}]: int8 output bits differ from scalar",
+                        isa.name()
+                    );
+                }
+            }
         }
     }
 }
